@@ -1,0 +1,192 @@
+//! Figures 7/8: accuracy-vs-epoch curves, trained in the plaintext domain
+//! exactly as the paper evaluates them ("all networks are trained in the
+//! plaintext domain"), through the AOT JAX/Pallas artifacts via PJRT —
+//! python never runs here.
+//!
+//! Three variants per dataset: FHESGD-style MLP, Glyph CNN, Glyph CNN with
+//! transfer learning (conv weights pre-trained on the source set via the
+//! cnn_pretrain_step artifact, then frozen by cnn_transfer_step).
+//!
+//!     cargo run --release --example accuracy_curves -- [--dataset mnist|cancer] [--epochs N]
+
+use anyhow::Result;
+use glyph::data::{self, Dataset};
+use glyph::runtime::{Artifact, Runtime};
+
+const BATCH: usize = 60;
+
+struct Params(Vec<(Vec<f32>, Vec<usize>)>);
+
+impl Params {
+    fn inputs<'a>(&'a self, extra: &[(&'a [f32], &'a [usize])]) -> Vec<(&'a [f32], &'a [usize])> {
+        let mut v: Vec<(&[f32], &[usize])> =
+            self.0.iter().map(|(d, s)| (d.as_slice(), s.as_slice())).collect();
+        v.extend_from_slice(extra);
+        v
+    }
+}
+
+fn init_params(shapes: &[Vec<usize>], seed: u64) -> Params {
+    let mut rng = glyph::math::GlyphRng::new(seed);
+    Params(
+        shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                let fan_in = s[..s.len() - 1.min(s.len())].iter().product::<usize>().max(1);
+                let std = (2.0 / fan_in as f64).sqrt() as f32 * 0.7;
+                ((0..n).map(|_| rng.gaussian(std as f64) as f32).collect(), s.clone())
+            })
+            .collect(),
+    )
+}
+
+fn batch_xy(ds: &Dataset, idx: &[usize], flat: bool) -> (Vec<f32>, Vec<f32>) {
+    let (c, h, w) = ds.shape;
+    let mut x = Vec::with_capacity(idx.len() * c * h * w);
+    let mut y = vec![0f32; idx.len() * ds.classes];
+    for (bi, &i) in idx.iter().enumerate() {
+        x.extend_from_slice(&ds.images[i]);
+        y[bi * ds.classes + ds.labels[i]] = 1.0;
+    }
+    let _ = flat;
+    (x, y)
+}
+
+/// Run one epoch of training; returns updated params and mean loss.
+fn train_epoch(step: &Artifact, params: Params, ds: &Dataset, xshape: &[usize], lr: f32) -> Result<(Params, f32)> {
+    let nb = ds.len() / BATCH;
+    let mut p = params;
+    let mut loss_sum = 0f32;
+    for b in 0..nb {
+        let idx: Vec<usize> = (b * BATCH..(b + 1) * BATCH).collect();
+        let (x, y) = batch_xy(ds, &idx, true);
+        let yshape = [BATCH, ds.classes];
+        let lr_s: [f32; 1] = [lr];
+        let lr_shape: [usize; 0] = [];
+        let outs = step.run_f32(&p.inputs(&[(&x, xshape), (&y, &yshape), (&lr_s, &lr_shape)]))?;
+        let n_params = p.0.len();
+        loss_sum += outs[n_params][0];
+        p = Params(outs.into_iter().take(n_params).zip(p.0).map(|(d, (_, s))| (d, s)).collect());
+    }
+    Ok((p, loss_sum / nb as f32))
+}
+
+fn accuracy(infer: &Artifact, params: &Params, ds: &Dataset, xshape: &[usize]) -> Result<f64> {
+    let nb = ds.len() / BATCH;
+    let mut correct = 0usize;
+    for b in 0..nb {
+        let idx: Vec<usize> = (b * BATCH..(b + 1) * BATCH).collect();
+        let (x, _) = batch_xy(ds, &idx, true);
+        let outs = infer.run_f32(&params.inputs(&[(&x, xshape)]))?;
+        for (bi, &i) in idx.iter().enumerate() {
+            if outs[0][bi] as usize == ds.labels[i] {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / (nb * BATCH) as f64)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args
+        .iter()
+        .position(|a| a == "--dataset")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "mnist".into());
+    let epochs: usize = args
+        .iter()
+        .position(|a| a == "--epochs")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let train_n = 20 * BATCH;
+    let test_n = 5 * BATCH;
+
+    let rt = Runtime::from_env()?;
+    println!("Figure {}: accuracy vs epoch on {dataset} (synthetic fallback data, {} train / {} test)",
+        if dataset == "mnist" { 7 } else { 8 }, train_n, test_n);
+
+    // datasets
+    let (train, test, src): (Dataset, Dataset, Dataset) = if dataset == "mnist" {
+        (data::mnist(true, train_n, 1), data::mnist(false, test_n, 2), data::synthetic_svhn(train_n, 3))
+    } else {
+        (data::synthetic_cancer(train_n, 1), data::synthetic_cancer(test_n, 2), data::synthetic_cifar(train_n, 3))
+    };
+    let (c, h, w) = train.shape;
+    let classes = train.classes;
+
+    // ---- MLP (FHESGD-style architecture) — only defined for 784-in MNIST
+    let mut mlp_acc: Vec<f64> = Vec::new();
+    if dataset == "mnist" {
+        let step = rt.load("mlp_train_step")?;
+        let infer = rt.load("mlp_infer")?;
+        let shapes = vec![vec![784usize, 128], vec![128, 32], vec![32, 10]];
+        let mut p = init_params(&shapes, 11);
+        let xshape = vec![BATCH, 784];
+        for _e in 0..epochs {
+            let (np, _loss) = train_epoch(&step, p, &train, &xshape, 0.5)?;
+            p = np;
+            mlp_acc.push(accuracy(&infer, &p, &test, &xshape)?);
+        }
+    }
+
+    // ---- CNN from scratch
+    let suffix = if dataset == "mnist" { "mnist" } else { "cancer" };
+    let pre = rt.load(&format!("cnn_pretrain_step_{suffix}"))?;
+    let transfer = rt.load(&format!("cnn_transfer_step_{suffix}"))?;
+    let infer = rt.load(&format!("cnn_infer_{suffix}"))?;
+    let (c1, c2, fc1_in, fc1) = if dataset == "mnist" { (6, 16, 400, 84) } else { (64, 96, 2400, 128) };
+    let shapes = vec![
+        vec![c1, c, 3, 3],
+        vec![c2, c1, 3, 3],
+        vec![fc1_in, fc1],
+        vec![fc1, classes],
+    ];
+    let xshape = vec![BATCH, c, h, w];
+
+    let mut cnn_acc = Vec::new();
+    let mut p = init_params(&shapes, 21);
+    for _e in 0..epochs {
+        let (np, _loss) = train_epoch(&pre, p, &train, &xshape, 1.0)?;
+        p = np;
+        cnn_acc.push(accuracy(&infer, &p, &test, &xshape)?);
+    }
+
+    // ---- CNN + transfer learning: pre-train on source, freeze convs
+    let mut tl = init_params(&shapes, 31);
+    for e in 0..6 {
+        let (np, l) = train_epoch(&pre, tl, &src, &xshape, 0.3)?;
+        tl = np;
+        eprintln!("[pretrain] epoch {e}: loss {l:.4}");
+    }
+    // fresh head on top of the frozen pre-trained features. The pre-trained
+    // conv features live at q8 scale (≈ ±127), so the head starts tiny and
+    // trains with a correspondingly small learning rate — the plaintext
+    // analogue of the encrypted head's grad_shift.
+    let head = init_params(&shapes[2..], 41);
+    tl.0[2] = head.0[0].clone();
+    tl.0[3] = head.0[1].clone();
+    let mut tl_acc = Vec::new();
+    for e in 0..epochs {
+        let (np, l) = train_epoch(&transfer, tl, &train, &xshape, 0.5)?;
+        tl = np;
+        tl_acc.push(accuracy(&infer, &tl, &test, &xshape)?);
+        eprintln!("[tl] epoch {e}: loss {l:.4} acc {:.3}", tl_acc[e]);
+    }
+
+    println!("\n| epoch | {} CNN | CNN+TL |", if dataset == "mnist" { "MLP |" } else { "" });
+    for e in 0..epochs {
+        if dataset == "mnist" {
+            println!("| {} | {:.3} | {:.3} | {:.3} |", e + 1, mlp_acc[e], cnn_acc[e], tl_acc[e]);
+        } else {
+            println!("| {} | {:.3} | {:.3} |", e + 1, cnn_acc[e], tl_acc[e]);
+        }
+    }
+    let last = epochs - 1;
+    println!("\nshape check: CNN+TL ≥ CNN at final epoch: {} ({:.3} vs {:.3})",
+        tl_acc[last] >= cnn_acc[last] - 0.02, tl_acc[last], cnn_acc[last]);
+    Ok(())
+}

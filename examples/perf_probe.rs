@@ -1,0 +1,16 @@
+// standalone micro-profile of the MultCC hot path
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+fn main() {
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Default, 60, 1);
+    let w = client.encrypt_scalar(9);
+    let x = client.encrypt_batch(&vec![17; 60], 0);
+    // warmup
+    for _ in 0..5 { let mut t = w.clone(); t.mul_assign(&x, &engine.rlk, &engine.ctx); }
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 { let mut t = w.clone(); t.mul_assign(&x, &engine.rlk, &engine.ctx); }
+    println!("MultCC (N=2048, L=3): {:.3} ms", t0.elapsed().as_secs_f64() * 10.0);
+    let mut a = x.clone();
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 { a.c0.to_coeff(); a.c0.to_ntt(); }
+    println!("NTT fwd+inv pair (3 limbs): {:.3} ms", t0.elapsed().as_secs_f64() * 10.0);
+}

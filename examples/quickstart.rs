@@ -1,0 +1,44 @@
+//! Quickstart: encrypt a mini-batch, run one FC + TFHE-ReLU layer through
+//! the cryptosystem switch, decrypt, and check against plaintext.
+//!
+//!     cargo run --release --example quickstart
+
+use glyph::nn::activation::relu_layer;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::nn::linear::FcLayer;
+use glyph::nn::tensor::{EncTensor, PackOrder};
+
+fn main() -> anyhow::Result<()> {
+    let batch = 4;
+    println!("• generating keys (test profile)…");
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 42);
+
+    // A 3→2 FC layer with encrypted weights.
+    let w = vec![vec![2i64, -1, 3], vec![-2, 4, 1]];
+    let layer = FcLayer::new_encrypted(&w, &mut client, 0);
+
+    // Inputs: 3 features × batch 4 (8-bit signed).
+    let x_cols = vec![vec![10i64, -10, 5, 0], vec![7, 7, -7, 1], vec![-3, 3, 3, 2]];
+    println!("• encrypting inputs {x_cols:?}");
+    let x_cts = x_cols.iter().map(|v| client.encrypt_batch(v, 0)).collect();
+    let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+
+    println!("• FC forward on BGV (MultCC MACs)…");
+    let u = layer.forward(&x, &engine);
+
+    println!("• switching to TFHE and running Algorithm-1 ReLU…");
+    let (a, _state) = relu_layer(&engine, &u, 0, PackOrder::Forward);
+
+    println!("• decrypting:");
+    for j in 0..2 {
+        let got = client.decrypt_batch(&a.cts[j], batch, 0);
+        let want: Vec<i64> = (0..batch)
+            .map(|b| (0..3).map(|i| w[j][i] * x_cols[i][b]).sum::<i64>().max(0))
+            .collect();
+        println!("  neuron {j}: got {got:?}  want {want:?}");
+        assert_eq!(got, want);
+    }
+    println!("• HOP counts: {}", engine.counter.snapshot());
+    println!("✓ quickstart OK");
+    Ok(())
+}

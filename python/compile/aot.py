@@ -1,0 +1,103 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md). Lowered with
+return_tuple=True; the Rust side unpacks with decompose_tuple().
+
+Artifacts (shapes fixed at lowering; batch = 60, the paper's mini-batch):
+  mlp_train_step / mlp_infer            — 784-128-32-10 quantized MLP
+  cnn_pretrain_step_{mnist,cancer}      — full CNN training (source data)
+  cnn_transfer_step_{mnist,cancer}      — frozen-conv transfer steps
+  cnn_infer_{mnist,cancer}
+  ntt_mac                               — batched modular MAC kernel (8×256)
+  quant_matmul                          — standalone kernel (60×784 × 784×128)
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # u64 for ntt_mac
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ntt_mac as nm
+from .kernels import quant_matmul as qm
+
+BATCH = 60
+
+
+def to_hlo_text(fn, *example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def mlp_specs():
+    params = [spec((i, o)) for i, o in zip(model.MLP_DIMS[:-1], model.MLP_DIMS[1:])]
+    x = spec((BATCH, model.MLP_DIMS[0]))
+    y = spec((BATCH, model.MLP_DIMS[-1]))
+    return params, x, y
+
+
+def cnn_specs(dataset):
+    cfg = model.cnn_config(dataset)
+    params = [
+        spec((cfg["c1"], cfg["in_ch"], 3, 3)),
+        spec((cfg["c2"], cfg["c1"], 3, 3)),
+        spec((cfg["fc1_in"], cfg["fc1"])),
+        spec((cfg["fc1"], cfg["classes"])),
+    ]
+    x = spec((BATCH, cfg["in_ch"], cfg["hw"], cfg["hw"]))
+    y = spec((BATCH, cfg["classes"]))
+    return params, x, y
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-cancer", action="store_true", help="faster CI builds")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def emit(name, fn, *specs_):
+        text = to_hlo_text(fn, *specs_)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {name}: {len(text)} chars")
+
+    lr = spec((), jnp.float32)
+
+    params, x, y = mlp_specs()
+    emit("mlp_train_step", model.mlp_train_step, params, x, y, lr)
+    emit("mlp_infer", model.mlp_infer, params, x)
+
+    datasets = ["mnist"] if args.skip_cancer else ["mnist", "cancer"]
+    for ds in datasets:
+        params, x, y = cnn_specs(ds)
+        emit(f"cnn_pretrain_step_{ds}", model.cnn_pretrain_step, params, x, y, lr)
+        emit(f"cnn_transfer_step_{ds}", model.cnn_transfer_step, params, x, y, lr)
+        emit(f"cnn_infer_{ds}", model.cnn_infer, params, x)
+
+    # standalone kernels
+    u64 = jnp.uint64
+    emit("ntt_mac", lambda a, b, c: (nm.ntt_mac(a, b, c),),
+         spec((8, 256), u64), spec((8, 256), u64), spec((8, 256), u64))
+    emit("quant_matmul", lambda a, b: (qm.matmul(a, b),),
+         spec((BATCH, 784)), spec((784, 128)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: batched NTT-domain modular multiply-accumulate.
+
+This is the inner loop of every BGV MultCC/MultCP: with operands kept in the
+NTT domain, a ciphertext MAC is a pointwise `acc = (acc + a·b) mod p` over
+RNS residue vectors. The Rust coordinator can offload a whole FC layer's
+batched MACs as one PJRT call on this kernel (the `ablations` bench compares
+it against the native Rust NTT path).
+
+Values are u64 residues of primes p < 2^32, so `a·b` fits u64 exactly
+(needs `jax_enable_x64`; aot.py and the tests set it before import).
+On a real TPU this is a VPU (not MXU) kernel; the BlockSpec pipelines
+HBM↔VMEM over the batch dimension (DESIGN.md §7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default prime for the standalone artifact (7·2^26 + 1, the first limb of
+# the MAC profile's RNS basis).
+DEFAULT_P = 469762049
+
+
+def _mac_kernel(a_ref, b_ref, acc_ref, o_ref, *, p):
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = acc_ref[...]
+    prod = (a * b) % p  # a,b < 2^32 → product < 2^64: exact in u64
+    o_ref[...] = (acc + prod) % p
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def ntt_mac(a, b, acc, p=DEFAULT_P):
+    """(acc + a*b) mod p, element-wise over (BATCH, N) u64 arrays."""
+    assert a.shape == b.shape == acc.shape
+    batch, n = a.shape
+    return pl.pallas_call(
+        functools.partial(_mac_kernel, p=p),
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.uint64),
+        interpret=True,
+    )(a.astype(jnp.uint64), b.astype(jnp.uint64), acc.astype(jnp.uint64))

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: SWALP-style 8-bit quantized matmul.
+
+The paper quantizes inputs, weights and activations to 8 bits (SWALP, §5.2);
+every FC layer of the L2 training graphs multiplies an int8-quantized
+activation matrix by an int8-quantized weight matrix and accumulates in
+wide precision — the exact analogue of the BGV MAC path on the encrypted
+side. This kernel is the MXU-shaped hot spot: operands are pre-quantized
+(held as f32 for the systolic array; values are integers in [-127, 127]),
+blocked for VMEM via BlockSpec, and accumulation is exact (|acc| <
+127·127·K < 2^24 ≪ f32's 2^24 integer range for K ≤ 1024; K = 784 here).
+
+A `jax.custom_vjp` routes the backward pass through the same kernel
+(dx = g·Wᵀ, dW = xᵀ·g), so autodiff over the training graphs never leaves
+the Pallas path. interpret=True everywhere: CPU-PJRT execution (real-TPU
+lowering would emit a Mosaic custom-call; see DESIGN.md §2.5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (bm, K) × (K, bn) tile product; K is kept whole per block (the
+    # layer widths here are ≤ 2352, comfortably within VMEM budgets).
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _block(m, bm):
+    return m if m < bm else bm
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _matmul_pallas(x, w):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn = _block(m, 32), _block(n, 128)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """`x @ w` through the Pallas kernel, differentiable."""
+    return _matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = _matmul_pallas(g, w.T)
+    dw = _matmul_pallas(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def quantize_q8(x):
+    """SWALP power-of-two quantization to signed 8-bit, straight-through
+    estimator for gradients. Returns values already rescaled back (i.e. the
+    quantization *error* is applied, the scale is not carried separately)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    e = jnp.ceil(jnp.log2(amax / 127.0))
+    scale = jnp.exp2(-e)
+    q = jnp.clip(jnp.round(x * scale), -127, 127) / scale
+    # straight-through: forward q, backward identity
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def linear_q8(x, w):
+    """A quantized linear layer: q8(x) @ q8(w) via the Pallas kernel."""
+    return matmul(quantize_q8(x), quantize_q8(w))

@@ -1,0 +1,31 @@
+"""Pure-jnp/numpy correctness oracles for the Pallas kernels."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(x, w):
+    """Oracle for quant_matmul.matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def quantize_q8_ref(x):
+    """Oracle for quant_matmul.quantize_q8 (forward values only)."""
+    x = np.asarray(x, dtype=np.float64)
+    amax = max(np.max(np.abs(x)), 1e-8)
+    e = np.ceil(np.log2(amax / 127.0))
+    scale = 2.0 ** (-e)
+    return np.clip(np.round(x * scale), -127, 127) / scale
+
+
+def ntt_mac_ref(a, b, acc, p):
+    """Oracle for ntt_mac (exact integer arithmetic via python ints)."""
+    a = np.asarray(a, dtype=np.uint64)
+    b = np.asarray(b, dtype=np.uint64)
+    acc = np.asarray(acc, dtype=np.uint64)
+    out = np.empty_like(a)
+    flat_a, flat_b, flat_c = a.ravel(), b.ravel(), acc.ravel()
+    flat_o = out.ravel()
+    for i in range(flat_a.size):
+        flat_o[i] = (int(flat_c[i]) + int(flat_a[i]) * int(flat_b[i])) % p
+    return out

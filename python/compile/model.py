@@ -1,0 +1,135 @@
+"""L2: the paper's models as quantized JAX training graphs.
+
+These graphs carry the *plaintext-domain* side of the paper's evaluation:
+Figures 7/8 train all networks in the plaintext domain ("where all networks
+are trained in the plaintext domain") with SWALP 8-bit quantization, and the
+transfer-learning pipeline pre-trains the CNN feature extractor on a public
+source dataset. Every FC layer multiplies through the L1 Pallas kernel
+(kernels.quant_matmul); convs use lax.conv (XLA) with quantized weights.
+
+Lowered once by aot.py to HLO text; the Rust coordinator executes the
+artifacts via PJRT (runtime/) — python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.quant_matmul import linear_q8, quantize_q8
+
+# ---------------------------------------------------------------------------
+# MLP (paper §5.2: 784-128-32-10)
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (784, 128, 32, 10)
+
+
+def mlp_init(key, dims=MLP_DIMS):
+    params = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (dims[i], dims[i + 1]), jnp.float32)
+        params.append(w * (2.0 / dims[i]) ** 0.5)
+    return params
+
+
+def mlp_forward(params, x):
+    h = x
+    for i, w in enumerate(params):
+        h = linear_q8(h, w)
+        if i + 1 < len(params):
+            h = quantize_q8(jax.nn.relu(h))
+    return h
+
+
+def quadratic_loss(logits, y_onehot):
+    # the paper's quadratic loss (Eq. 6 derivative): probabilities via a
+    # squashing of the logits, L2 against one-hot
+    d = jax.nn.sigmoid(logits)
+    return 0.5 * jnp.mean(jnp.sum((d - y_onehot) ** 2, axis=-1))
+
+
+def mlp_loss(params, x, y_onehot):
+    return quadratic_loss(mlp_forward(params, x), y_onehot)
+
+
+def mlp_train_step(params, x, y_onehot, lr):
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, y_onehot)
+    new_params = [w - lr * g for w, g in zip(params, grads)]
+    return tuple(new_params) + (loss,)
+
+
+def mlp_infer(params, x):
+    return (jnp.argmax(mlp_forward(params, x), axis=-1).astype(jnp.int32),)
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper §5.2): conv(k3) → BN-lite → ReLU → pool ×2 → FC → FC
+# ---------------------------------------------------------------------------
+
+
+def cnn_config(dataset):
+    if dataset == "mnist":
+        return dict(in_ch=1, c1=6, c2=16, hw=28, fc1_in=16 * 5 * 5, fc1=84, classes=10)
+    if dataset == "cancer":
+        return dict(in_ch=3, c1=64, c2=96, hw=28, fc1_in=96 * 5 * 5, fc1=128, classes=7)
+    raise ValueError(dataset)
+
+
+def cnn_init(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv1 = jax.random.normal(k1, (cfg["c1"], cfg["in_ch"], 3, 3), jnp.float32) * 0.3
+    conv2 = jax.random.normal(k2, (cfg["c2"], cfg["c1"], 3, 3), jnp.float32) * 0.15
+    fc1 = jax.random.normal(k3, (cfg["fc1_in"], cfg["fc1"]), jnp.float32) * (2.0 / cfg["fc1_in"]) ** 0.5
+    fc2 = jax.random.normal(k4, (cfg["fc1"], cfg["classes"]), jnp.float32) * 0.1
+    return [conv1, conv2, fc1, fc2]
+
+
+def _conv(x, w):
+    # NCHW, OIHW, valid padding, stride 1 — matches nn/conv.rs
+    return jax.lax.conv_general_dilated(x, quantize_q8(w), (1, 1), "VALID")
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID") / 4.0
+
+
+def cnn_forward(params, x):
+    conv1, conv2, fc1, fc2 = params
+    h = _pool(quantize_q8(jax.nn.relu(_conv(x, conv1))))
+    h = _pool(quantize_q8(jax.nn.relu(_conv(h, conv2))))
+    h = h.reshape(h.shape[0], -1)
+    # scale-invariant feature normalization: divide by the (stop-gradient)
+    # max-abs — the float analogue of the encrypted pipeline's power-of-two
+    # activation shift, which likewise renormalizes to 8-bit regardless of
+    # how large the (possibly frozen, pre-trained) conv features grow.
+    h = h / jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(h)), 1e-8))
+    h = quantize_q8(jax.nn.relu(linear_q8(h, fc1)))
+    h = h / jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(h)), 1e-8))
+    return linear_q8(h, fc2)
+
+
+def cnn_loss(params, x, y_onehot):
+    return quadratic_loss(cnn_forward(params, x), y_onehot)
+
+
+def cnn_pretrain_step(params, x, y_onehot, lr):
+    """Source-dataset pre-training: all parameters update."""
+    loss, grads = jax.value_and_grad(cnn_loss)(params, x, y_onehot)
+    new_params = [w - lr * g for w, g in zip(params, grads)]
+    return tuple(new_params) + (loss,)
+
+
+def cnn_transfer_step(params, x, y_onehot, lr):
+    """Transfer learning (paper §4.3): conv weights frozen, FC head trains."""
+    loss, grads = jax.value_and_grad(cnn_loss)(params, x, y_onehot)
+    new_params = [
+        params[0],
+        params[1],
+        params[2] - lr * grads[2],
+        params[3] - lr * grads[3],
+    ]
+    return tuple(new_params) + (loss,)
+
+
+def cnn_infer(params, x):
+    return (jnp.argmax(cnn_forward(params, x), axis=-1).astype(jnp.int32),)

@@ -1,0 +1,83 @@
+"""L1 kernel correctness: Pallas vs pure references, hypothesis sweeps."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ntt_mac as nm
+from compile.kernels import quant_matmul as qm
+from compile.kernels import ref
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 96),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref_shapes(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jnp.round(jax.random.uniform(k1, (m, k), jnp.float32, -127, 127))
+    w = jnp.round(jax.random.uniform(k2, (k, n), jnp.float32, -127, 127))
+    got = qm.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_matmul_gradients_flow_through_kernel():
+    x = jnp.ones((4, 8), jnp.float32)
+    w = jnp.ones((8, 3), jnp.float32)
+    g = jax.grad(lambda w: jnp.sum(qm.matmul(x, w) ** 2))(w)
+    # d/dw sum((x@w)^2) = 2 xᵀ (x@w): each entry = 2·4·8 = 64
+    np.testing.assert_allclose(np.asarray(g), np.full((8, 3), 64.0), rtol=1e-6)
+
+
+def test_quantize_q8_matches_ref_and_is_pow2():
+    x = np.linspace(-3.7, 9.1, 101).astype(np.float32)
+    got = np.asarray(qm.quantize_q8(jnp.asarray(x)))
+    want = ref.quantize_q8_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # quantized values are integers times a power-of-two scale
+    amax = np.max(np.abs(x))
+    e = np.ceil(np.log2(amax / 127.0))
+    ints = got * 2.0 ** (-e)
+    np.testing.assert_allclose(ints, np.round(ints), atol=1e-4)
+
+
+def test_quantize_q8_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(qm.quantize_q8(x) * 3.0))(jnp.ones((5,)))
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31),
+    p=st.sampled_from([469762049, 1811939329, 2013265921]),
+)
+def test_ntt_mac_matches_exact_reference(batch, n, seed, p):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, p, (batch, n), dtype=np.uint64)
+    b = rng.integers(0, p, (batch, n), dtype=np.uint64)
+    acc = rng.integers(0, p, (batch, n), dtype=np.uint64)
+    got = np.asarray(nm.ntt_mac(jnp.asarray(a), jnp.asarray(b), jnp.asarray(acc), p=p))
+    want = ref.ntt_mac_ref(a, b, acc, p)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ntt_mac_wraps_at_modulus_boundary():
+    p = 469762049
+    a = jnp.full((1, 4), p - 1, jnp.uint64)
+    b = jnp.full((1, 4), p - 1, jnp.uint64)
+    acc = jnp.full((1, 4), p - 1, jnp.uint64)
+    got = np.asarray(nm.ntt_mac(a, b, acc, p=p))
+    want = (pow(p - 1, 2, p) + p - 1) % p
+    assert (got == want).all()

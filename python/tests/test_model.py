@@ -1,0 +1,58 @@
+"""L2 model checks: shapes, loss descent, transfer-learning freezing."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def blobs(key, n, dim, classes):
+    """Class-conditional gaussian blobs (fast synthetic data)."""
+    kc, kx = jax.random.split(key)
+    centers = jax.random.normal(kc, (classes, dim)) * 2.0
+    labels = jnp.arange(n) % classes
+    x = centers[labels] + 0.3 * jax.random.normal(kx, (n, dim))
+    y = jax.nn.one_hot(labels, classes)
+    return x.astype(jnp.float32), y.astype(jnp.float32), labels
+
+
+def test_mlp_shapes_and_loss_decreases():
+    key = jax.random.PRNGKey(0)
+    dims = (16, 12, 8, 4)
+    params = model.mlp_init(key, dims)
+    x, y, labels = blobs(key, 32, 16, 4)
+    step = jax.jit(lambda p, x, y: model.mlp_train_step(p, x, y, jnp.float32(0.5)))
+    loss0 = None
+    for i in range(30):
+        *params, loss = step(list(params), x, y)
+        if loss0 is None:
+            loss0 = loss
+    assert float(loss) < float(loss0), (loss0, loss)
+    preds = jnp.argmax(model.mlp_forward(list(params), x), -1)
+    acc = float((preds == labels).mean())
+    assert acc > 0.5, acc
+
+
+def test_cnn_transfer_freezes_convs():
+    cfg = model.cnn_config("mnist")
+    key = jax.random.PRNGKey(1)
+    params = model.cnn_init(key, cfg)
+    x = jax.random.normal(key, (2, 1, 28, 28), jnp.float32)
+    y = jax.nn.one_hot(jnp.array([0, 1]), cfg["classes"]).astype(jnp.float32)
+    out = model.cnn_transfer_step(params, x, y, jnp.float32(0.1))
+    new_params, _loss = list(out[:-1]), out[-1]
+    np.testing.assert_array_equal(np.asarray(new_params[0]), np.asarray(params[0]))
+    np.testing.assert_array_equal(np.asarray(new_params[1]), np.asarray(params[1]))
+    assert not np.array_equal(np.asarray(new_params[2]), np.asarray(params[2]))
+
+
+def test_cnn_forward_shape():
+    cfg = model.cnn_config("mnist")
+    params = model.cnn_init(jax.random.PRNGKey(2), cfg)
+    x = jnp.zeros((3, 1, 28, 28), jnp.float32)
+    logits = model.cnn_forward(params, x)
+    assert logits.shape == (3, cfg["classes"])

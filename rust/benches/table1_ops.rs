@@ -1,0 +1,35 @@
+//! Table 1: per-op latency comparison (BGV MultCC/MultCP/AddCC/TLU vs the
+//! TFHE-side activation costs), measured on this implementation and printed
+//! next to the paper's numbers.
+
+use glyph::bench_util::{full_profile, report};
+use glyph::coordinator::cost::OpLatencies;
+
+fn main() {
+    let test_scale = !full_profile();
+    eprintln!("table1_ops: measuring ({} profile)…", if test_scale { "test" } else { "FULL" });
+    let ours = OpLatencies::measure(test_scale);
+    let paper = OpLatencies::paper();
+    let md = format!(
+        "### Table 1 — FHE operation latencies (s)\n\n\
+         profile: {}\n\n\
+         | Operation | ours | paper (BGV/TFHE) | ratio ours (op/MultCC) | ratio paper |\n|---|---|---|---|---|\n\
+         | MultCC | {:.6} | 0.012 | 1.0 | 1.0 |\n\
+         | MultCP | {:.6} | 0.001 | {:.2} | 0.083 |\n\
+         | AddCC | {:.6} | 0.002 | {:.4} | 0.17 |\n\
+         | TLU (BGV bit-sliced) | {:.4} | 307.9 | {:.0} | 25658 |\n\
+         | ReLU/value (TFHE) | {:.4} | 0.1 | {:.1} | 8.3 |\n\
+         | softmax/value (TFHE) | {:.4} | 3.3 | {:.1} | 275 |\n",
+        if test_scale { "test-scale" } else { "full" },
+        ours.mult_cc,
+        ours.mult_cp, ours.mult_cp / ours.mult_cc,
+        ours.add_cc, ours.add_cc / ours.mult_cc,
+        ours.tlu, ours.tlu / ours.mult_cc,
+        ours.relu_value, ours.relu_value / ours.mult_cc,
+        ours.softmax_value, ours.softmax_value / ours.mult_cc,
+    );
+    let _ = paper;
+    report("table1", &md);
+    // headline shape: TLU must be orders of magnitude above a MAC
+    assert!(ours.tlu / ours.mult_cc > 100.0, "TLU/MultCC ratio too small");
+}

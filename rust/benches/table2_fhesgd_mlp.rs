@@ -1,0 +1,24 @@
+//! Table 2: FHESGD MLP mini-batch breakdown on MNIST — generated in both
+//! calibrations (paper per-op latencies and measured ones).
+
+use glyph::bench_util::{full_profile, report};
+use glyph::coordinator::cost::{mlp_table, to_markdown, total_row, OpLatencies, Scheme};
+
+fn main() {
+    let dims = [784, 128, 32, 10];
+    let paper = mlp_table(&dims, Scheme::Fhesgd, &OpLatencies::paper());
+    let mut md = to_markdown("Table 2 — FHESGD MLP mini-batch (paper-calibrated)", &paper);
+    let t = total_row(&paper);
+    let act: f64 = paper.iter().filter(|r| r.layer.starts_with("Act")).map(|r| r.time_s).sum();
+    md.push_str(&format!("\npaper: total 118K s; ours (paper-calibrated): {:.0} s, activation share {:.1}%\n", t.time_s, 100.0*act/t.time_s));
+
+    eprintln!("measuring our per-op latencies…");
+    let ours = OpLatencies::measure(!full_profile());
+    let measured = mlp_table(&dims, Scheme::Fhesgd, &ours);
+    md.push_str(&to_markdown("Table 2 — FHESGD MLP mini-batch (measured ops)", &measured));
+    let tm = total_row(&measured);
+    let actm: f64 = measured.iter().filter(|r| r.layer.starts_with("Act")).map(|r| r.time_s).sum();
+    md.push_str(&format!("\nmeasured-calibration total: {:.0} s, activation share {:.1}%\n", tm.time_s, 100.0*actm/tm.time_s));
+    report("table2", &md);
+    assert!(act / t.time_s > 0.97);
+}

@@ -1,0 +1,25 @@
+//! Table 3: Glyph MLP mini-batch breakdown (TFHE activations + switching)
+//! and the headline latency reduction vs Table 2.
+
+use glyph::bench_util::{full_profile, report};
+use glyph::coordinator::cost::{mlp_table, to_markdown, total_row, OpLatencies, Scheme};
+
+fn main() {
+    let dims = [784, 128, 32, 10];
+    let paper_lat = OpLatencies::paper();
+    let glyph = mlp_table(&dims, Scheme::GlyphMlp, &paper_lat);
+    let fhesgd_total = total_row(&mlp_table(&dims, Scheme::Fhesgd, &paper_lat)).time_s;
+    let mut md = to_markdown("Table 3 — Glyph MLP mini-batch (paper-calibrated)", &glyph);
+    let g = total_row(&glyph).time_s;
+    md.push_str(&format!("\nreduction vs FHESGD: {:.1}% (paper: 97.4%); paper Table-3 total: 2991 s, ours: {:.0} s\n", 100.0*(1.0-g/fhesgd_total), g));
+
+    eprintln!("measuring our per-op latencies…");
+    let ours = OpLatencies::measure(!full_profile());
+    let measured = mlp_table(&dims, Scheme::GlyphMlp, &ours);
+    md.push_str(&to_markdown("Table 3 — Glyph MLP mini-batch (measured ops)", &measured));
+    let gm = total_row(&measured).time_s;
+    let fm = total_row(&mlp_table(&dims, Scheme::Fhesgd, &ours)).time_s;
+    md.push_str(&format!("\nmeasured-calibration reduction vs FHESGD: {:.1}%\n", 100.0*(1.0-gm/fm)));
+    report("table3", &md);
+    assert!(1.0 - g / fhesgd_total > 0.95);
+}

@@ -1,0 +1,22 @@
+//! Table 4: Glyph CNN + transfer learning mini-batch breakdown (MNIST):
+//! frozen plaintext convs (MultCP) + encrypted FC head (MultCC).
+
+use glyph::bench_util::{full_profile, report};
+use glyph::coordinator::cost::{cnn_table, mlp_table, to_markdown, total_row, CnnShape, OpLatencies, Scheme};
+
+fn main() {
+    let lat = OpLatencies::paper();
+    let rows = cnn_table(&CnnShape::paper_mnist(), &lat);
+    let mut md = to_markdown("Table 4 — Glyph CNN + TL mini-batch (paper-calibrated)", &rows);
+    let cnn = total_row(&rows).time_s;
+    let mlp = total_row(&mlp_table(&[784, 128, 32, 10], Scheme::GlyphMlp, &lat)).time_s;
+    md.push_str(&format!("\nCNN+TL vs Glyph-MLP: {:.1}% faster (paper: 56.7% on MNIST); paper total 3.5K s, ours {:.0} s\n",
+        100.0 * (1.0 - cnn / mlp), cnn));
+
+    eprintln!("measuring our per-op latencies…");
+    let ours = OpLatencies::measure(!full_profile());
+    let measured = cnn_table(&CnnShape::paper_mnist(), &ours);
+    md.push_str(&to_markdown("Table 4 — Glyph CNN + TL mini-batch (measured ops)", &measured));
+    report("table4", &md);
+    assert!(cnn < mlp, "transfer CNN must beat the MLP");
+}

@@ -1,0 +1,43 @@
+//! Table 5: overall training latency and multi-thread scaling. SGD's
+//! independent weight-update MACs parallelize across the executor; the
+//! overall latency uses the paper's own estimator (mini-batch latency ×
+//! mini-batch count).
+
+use glyph::bench_util::report;
+use glyph::coordinator::cost::{measure_scaling, mlp_table, overall_latency, total_row, OpLatencies, Scheme, cnn_table, CnnShape};
+use glyph::coordinator::max_threads;
+
+fn main() {
+    let mut md = String::from("### Table 5 — thread scaling (independent MAC work items)\n\n| threads | speedup |\n|---|---|\n");
+    let work = 256;
+    let maxt = max_threads();
+    let mut sweep: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 48];
+    sweep.retain(|&t| t <= maxt);
+    let mut best = 1.0f64;
+    for &t in &sweep {
+        let s = measure_scaling(t, work);
+        best = best.max(s);
+        md.push_str(&format!("| {t} | {s:.2}× |\n"));
+    }
+    md.push_str(&format!("\nmax threads here: {maxt}; paper observed 9.3× at 48 threads (memory-bound)\n"));
+
+    // overall latency estimates, paper methodology
+    let lat = OpLatencies::paper();
+    let mlp_mb = total_row(&mlp_table(&[784, 128, 32, 10], Scheme::GlyphMlp, &lat)).time_s;
+    let fhesgd_mb = total_row(&mlp_table(&[784, 128, 32, 10], Scheme::Fhesgd, &lat)).time_s;
+    let cnn_mb = total_row(&cnn_table(&CnnShape::paper_mnist(), &lat)).time_s;
+    let years = |s: f64| s / (365.25 * 86400.0);
+    let days = |s: f64| s / 86400.0;
+    md.push_str("\n### Table 5 — overall training latency (paper-calibrated, paper estimator)\n\n");
+    md.push_str("| network | threads | epochs | time | paper |\n|---|---|---|---|---|\n");
+    md.push_str(&format!("| FHESGD MLP (MNIST) | 1 | 50 | {:.0} years | 187 years |\n", years(overall_latency(fhesgd_mb, 1000, 50, 1.0))));
+    md.push_str(&format!("| Glyph MLP (MNIST) | 1 | 50 | {:.1} years | (13.4 years @48t) |\n", years(overall_latency(mlp_mb, 1000, 50, 1.0))));
+    md.push_str(&format!("| Glyph CNN+TL (MNIST) | 1 | 5 | {:.2} months | 2.46 months |\n", overall_latency(cnn_mb, 1000, 5, 1.0) / (30.44 * 86400.0)));
+    md.push_str(&format!("| Glyph CNN+TL (MNIST) | 48 | 5 | {:.1} days | 8 days |\n", days(overall_latency(cnn_mb, 1000, 5, 9.3))));
+    report("table5", &md);
+    if maxt > 1 {
+        assert!(best > 1.05, "no parallel speedup measured on a {maxt}-core host");
+    } else {
+        eprintln!("single-core host: scaling assertion skipped (sweep still recorded)");
+    }
+}

@@ -1,0 +1,29 @@
+//! Tables 6/7/8: the Skin-Cancer-MNIST counterparts (2352-input MLP,
+//! 64/96-channel CNN), both calibrations.
+
+use glyph::bench_util::{full_profile, report};
+use glyph::coordinator::cost::{cnn_table, mlp_table, to_markdown, total_row, CnnShape, OpLatencies, Scheme};
+
+fn main() {
+    let dims = [2352, 128, 32, 7]; // 28×28×3 input
+    let lat = OpLatencies::paper();
+    let mut md = String::new();
+    let t6 = mlp_table(&dims, Scheme::Fhesgd, &lat);
+    md.push_str(&to_markdown("Table 6 — FHESGD MLP (Cancer, paper-calibrated)", &t6));
+    let t7 = mlp_table(&dims, Scheme::GlyphMlp, &lat);
+    md.push_str(&to_markdown("Table 7 — Glyph MLP (Cancer, paper-calibrated)", &t7));
+    let t8 = cnn_table(&CnnShape::paper_cancer(), &lat);
+    md.push_str(&to_markdown("Table 8 — Glyph CNN + TL (Cancer, paper-calibrated)", &t8));
+    let (f, g, c) = (total_row(&t6).time_s, total_row(&t7).time_s, total_row(&t8).time_s);
+    md.push_str(&format!(
+        "\nGlyph-MLP vs FHESGD: {:.1}% reduction (paper: 91.4%); CNN+TL vs Glyph-MLP: {:.1}% (paper: 67.2%)\n",
+        100.0 * (1.0 - g / f),
+        100.0 * (1.0 - c / g)
+    ));
+    eprintln!("measuring our per-op latencies…");
+    let ours = OpLatencies::measure(!full_profile());
+    md.push_str(&to_markdown("Table 7 — Glyph MLP (Cancer, measured ops)", &mlp_table(&dims, Scheme::GlyphMlp, &ours)));
+    report("tables_cancer", &md);
+    assert!(1.0 - g / f > 0.85);
+    assert!(c < g);
+}

@@ -1,0 +1,53 @@
+//! Hand-rolled bench harness (the vendored crate set has no criterion).
+//!
+//! Every `cargo bench` target is a `harness = false` binary that times its
+//! workload with [`time_op`], prints a paper-style table to stdout and
+//! appends it to `bench_out/<name>.md`. `GLYPH_BENCH_FULL=1` switches the
+//! crypto profiles from test-scale to the production-shaped parameters
+//! (slower, used for the recorded EXPERIMENTS.md numbers).
+
+use std::time::Instant;
+
+/// Time `f` over `iters` runs; returns seconds per run.
+pub fn time_op<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters.max(1) as f64
+}
+
+/// Time a single run.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Whether full-profile benching was requested.
+pub fn full_profile() -> bool {
+    std::env::var("GLYPH_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Write a markdown report to `bench_out/<name>.md` (and echo to stdout).
+pub fn report(name: &str, contents: &str) {
+    println!("{contents}");
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{name}.md");
+    if let Err(e) = std::fs::write(&path, contents) {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        eprintln!("[wrote {path}]");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_op_is_positive() {
+        let t = time_op(3, || { std::hint::black_box((0..1000).sum::<u64>()); });
+        assert!(t > 0.0);
+    }
+}

@@ -1,0 +1,332 @@
+//! BGV ciphertext operations: the paper's Table-1 op set.
+//!
+//! * `AddCC` / `SubCC` — coefficient-wise (cheap);
+//! * `MultCP` — ciphertext × plaintext (transfer-learning convolutions);
+//! * `MultCC` — ciphertext × ciphertext with RNS relinearization (the
+//!   encrypted-weight FC/conv MACs);
+//! * modulus switching — noise management between levels;
+//! * the Δ scalar maps used by the cryptosystem switch.
+//!
+//! Ciphertexts are kept in NTT form; modulus switching round-trips through
+//! coefficient form internally.
+
+use super::encoding::Plaintext;
+use super::keys::{BgvContext, RelinKey};
+use crate::math::poly::RnsPoly;
+
+/// A degree-1 BGV ciphertext `(c0, c1)` with phase `c0 + c1·s = m + t·e`.
+#[derive(Clone)]
+pub struct BgvCiphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    pub level: usize,
+}
+
+impl BgvCiphertext {
+    /// Noise-free encryption of a plaintext (server-side constants).
+    pub fn trivial(pt: &Plaintext, ctx: &BgvContext, level: usize) -> Self {
+        let rctx = ctx.ctx_at(level);
+        let mut c0 = pt.to_rns(rctx, level);
+        c0.to_ntt();
+        let mut c1 = RnsPoly::zero(rctx, level);
+        c1.is_ntt = true;
+        BgvCiphertext { c0, c1, level }
+    }
+
+    /// AddCC.
+    pub fn add_assign(&mut self, o: &Self) {
+        debug_assert_eq!(self.level, o.level, "level mismatch — mod-switch first");
+        self.c0.add_assign(&o.c0);
+        self.c1.add_assign(&o.c1);
+    }
+
+    /// SubCC.
+    pub fn sub_assign(&mut self, o: &Self) {
+        debug_assert_eq!(self.level, o.level);
+        self.c0.sub_assign(&o.c0);
+        self.c1.sub_assign(&o.c1);
+    }
+
+    pub fn neg_assign(&mut self) {
+        self.c0.neg_assign();
+        self.c1.neg_assign();
+    }
+
+    /// Add a plaintext (AddCP).
+    pub fn add_plain(&mut self, pt: &Plaintext, ctx: &BgvContext) {
+        let rctx = ctx.ctx_at(self.level);
+        let mut p = pt.to_rns(rctx, self.level);
+        p.to_ntt();
+        self.c0.add_assign(&p);
+    }
+
+    /// MultCP: multiply by a plaintext polynomial.
+    pub fn mul_plain_assign(&mut self, pt: &Plaintext, ctx: &BgvContext) {
+        let rctx = ctx.ctx_at(self.level);
+        let mut p = pt.to_rns(rctx, self.level);
+        p.to_ntt();
+        self.c0.mul_assign_ntt(&p);
+        self.c1.mul_assign_ntt(&p);
+    }
+
+    /// Multiply by a small integer scalar (noise ×|k|, no key material).
+    pub fn small_scalar_mul_assign(&mut self, k: i64, ctx: &BgvContext) {
+        let rctx = ctx.ctx_at(self.level);
+        let res = rctx.scalar_to_rns_i64(k);
+        self.c0.scalar_mul_assign(&res);
+        self.c1.scalar_mul_assign(&res);
+    }
+
+    /// Multiply both components by an RNS scalar (the Δ maps of the switch).
+    pub fn rns_scalar_mul_assign(&mut self, scalar_rns: &[u64]) {
+        self.c0.scalar_mul_assign(scalar_rns);
+        self.c1.scalar_mul_assign(scalar_rns);
+    }
+
+    /// MultCC with relinearization: `self ← self ⊗ o`.
+    pub fn mul_assign(&mut self, o: &Self, rlk: &RelinKey, ctx: &BgvContext) {
+        debug_assert_eq!(self.level, o.level);
+        debug_assert!(self.c0.is_ntt && o.c0.is_ntt);
+        let level = self.level;
+        // Tensor: (d0, d1, d2) = (c0·o0, c0·o1 + c1·o0, c1·o1)
+        let mut d0 = self.c0.clone();
+        d0.mul_assign_ntt(&o.c0);
+        let mut d1a = self.c0.clone();
+        d1a.mul_assign_ntt(&o.c1);
+        let mut d1b = self.c1.clone();
+        d1b.mul_assign_ntt(&o.c0);
+        d1a.add_assign(&d1b);
+        let mut d2 = self.c1.clone();
+        d2.mul_assign_ntt(&o.c1);
+
+        // Relinearize d2: RNS-decompose in coefficient space.
+        d2.to_coeff();
+        let rctx = ctx.ctx_at(level);
+        let n = rctx.n;
+        for i in 0..level {
+            // digit polynomial = centered [d2]_{q_i}, lifted to all limbs.
+            let qi = rctx.primes[i];
+            let digits: Vec<i64> = (0..n)
+                .map(|j| {
+                    let v = d2.res[i][j];
+                    if v > qi / 2 {
+                        v as i64 - qi as i64
+                    } else {
+                        v as i64
+                    }
+                })
+                .collect();
+            let mut dig = RnsPoly::from_signed(rctx, &digits, level);
+            dig.to_ntt();
+            let (k0, k1) = &rlk.rows[level - 1][i];
+            d0.mul_acc_ntt(&dig, k0);
+            d1a.mul_acc_ntt(&dig, k1);
+        }
+        self.c0 = d0;
+        self.c1 = d1a;
+    }
+
+    /// Modulus switch down one level (both components).
+    pub fn mod_switch_down(&mut self, ctx: &BgvContext) {
+        let t = ctx.params.t;
+        self.c0.to_coeff();
+        self.c1.to_coeff();
+        self.c0.mod_switch_down(t);
+        self.c1.mod_switch_down(t);
+        self.level -= 1;
+        // Re-bind the polynomials' context to the shrunken level's tables is
+        // unnecessary: limb i tables are identical across contexts.
+        self.c0.to_ntt();
+        self.c1.to_ntt();
+    }
+
+    /// Mod-switch until at `target` level.
+    pub fn mod_switch_to(&mut self, target: usize, ctx: &BgvContext) {
+        while self.level > target {
+            self.mod_switch_down(ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bgv::keys::BgvSecretKey;
+    use crate::bgv::params::BgvParams;
+    use crate::math::rng::GlyphRng;
+    use std::sync::Arc;
+
+    struct Fx {
+        ctx: Arc<BgvContext>,
+        sk: BgvSecretKey,
+        rlk: RelinKey,
+        rng: GlyphRng,
+    }
+
+    fn fixture(seed: u64) -> Fx {
+        let ctx = BgvContext::new(BgvParams::test_params());
+        let mut rng = GlyphRng::new(seed);
+        let sk = BgvSecretKey::generate(&ctx, &mut rng);
+        let rlk = RelinKey::generate(&sk, &mut rng);
+        Fx { ctx, sk, rlk, rng }
+    }
+
+    fn enc(f: &mut Fx, vals: &[i64]) -> BgvCiphertext {
+        let pt = Plaintext::encode_batch(vals, &f.ctx.params);
+        f.sk.encrypt(&pt, &mut f.rng)
+    }
+
+    fn dec(f: &Fx, ct: &BgvCiphertext, k: usize) -> Vec<i64> {
+        f.sk.decrypt(ct).decode_batch(k)
+    }
+
+    #[test]
+    fn add_sub_cc() {
+        let mut f = fixture(1);
+        let a = enc(&mut f, &[10, -20, 30]);
+        let b = enc(&mut f, &[1, 2, -3]);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(dec(&f, &c, 3), vec![11, -18, 27]);
+        c.sub_assign(&b);
+        assert_eq!(dec(&f, &c, 3), vec![10, -20, 30]);
+    }
+
+    #[test]
+    fn mult_cp_batchwise_scalar() {
+        let mut f = fixture(2);
+        let mut x = enc(&mut f, &[5, -7, 11, 0]);
+        let w = Plaintext::encode_scalar(-6, &f.ctx.params);
+        x.mul_plain_assign(&w, &f.ctx);
+        assert_eq!(dec(&f, &x, 4), vec![-30, 42, -66, 0]);
+    }
+
+    #[test]
+    fn mult_cc_constant_weight_times_batch() {
+        // The Glyph MAC shape: weight ct (constant poly) × value ct (batch
+        // in coefficients) = batch-wise scalar product.
+        let mut f = fixture(3);
+        let mut w = enc(&mut f, &[9]); // constant poly: only coeff 0
+        let x = enc(&mut f, &[3, -4, 120, -128]);
+        w.mul_assign(&x, &f.rlk, &f.ctx);
+        assert_eq!(dec(&f, &w, 4), vec![27, -36, 1080, -1152]);
+    }
+
+    #[test]
+    fn mac_accumulation_matches_plain() {
+        // Σ_i w_i ⊗ x_i over 16 terms — one FC neuron on a batch of 4.
+        let mut f = fixture(4);
+        let mut rng2 = GlyphRng::new(777);
+        let mut acc: Option<BgvCiphertext> = None;
+        let mut want = vec![0i64; 4];
+        for _ in 0..16 {
+            let wv = (rng2.uniform_mod(255) as i64) - 127;
+            let xs: Vec<i64> = (0..4).map(|_| (rng2.uniform_mod(255) as i64) - 127).collect();
+            for b in 0..4 {
+                want[b] += wv * xs[b];
+            }
+            let mut wct = enc(&mut f, &[wv]);
+            let xct = enc(&mut f, &xs);
+            wct.mul_assign(&xct, &f.rlk, &f.ctx);
+            match &mut acc {
+                None => acc = Some(wct),
+                Some(a) => a.add_assign(&wct),
+            }
+        }
+        assert_eq!(dec(&f, &acc.unwrap(), 4), want);
+    }
+
+    #[test]
+    fn mod_switch_preserves_plaintext() {
+        let mut f = fixture(5);
+        let vals = vec![1234i64, -4321, 77];
+        let mut ct = enc(&mut f, &vals);
+        ct.mod_switch_down(&f.ctx);
+        assert_eq!(ct.level, f.ctx.top_level() - 1);
+        assert_eq!(dec(&f, &ct, 3), vals);
+    }
+
+    #[test]
+    fn mod_switch_shrinks_post_mult_noise() {
+        // After a MultCC the noise is large; dropping a limb divides it by
+        // ~q_last (plus a small t-sized rounding term).
+        let mut f = fixture(55);
+        let mut a = enc(&mut f, &[99, -2]);
+        let w = enc(&mut f, &[3]); // constant poly
+        a.mul_assign(&w, &f.rlk, &f.ctx);
+        let noise_before = f.sk.noise_magnitude(&a);
+        a.mod_switch_down(&f.ctx);
+        let noise_after = f.sk.noise_magnitude(&a);
+        assert_eq!(dec(&f, &a, 2), vec![297, -6]);
+        assert!(noise_after < noise_before / 1000, "{noise_after} !< {noise_before}/1000");
+    }
+
+    #[test]
+    fn depth_two_with_mod_switch() {
+        // Batch ct × scalar weight × scalar weight (batch-wise semantics
+        // require constant-poly multiplicands — DESIGN.md §2.1).
+        let mut f = fixture(6);
+        let mut a = enc(&mut f, &[12, -5]);
+        let b = enc(&mut f, &[-3]);
+        a.mul_assign(&b, &f.rlk, &f.ctx); // depth 1
+        a.mod_switch_down(&f.ctx);
+        let mut c = enc(&mut f, &[2]);
+        c.mod_switch_to(a.level, &f.ctx);
+        a.mul_assign(&c, &f.rlk, &f.ctx); // depth 2
+        assert_eq!(dec(&f, &a, 2), vec![12 * -3 * 2, -5 * -3 * 2]);
+    }
+
+    #[test]
+    fn batch_times_batch_is_negacyclic_convolution() {
+        // Documents the §2.1 constraint: two batch-packed operands convolve.
+        let mut f = fixture(66);
+        let mut a = enc(&mut f, &[2, 3]);
+        let b = enc(&mut f, &[5, 7]);
+        a.mul_assign(&b, &f.rlk, &f.ctx);
+        // (2 + 3X)(5 + 7X) = 10 + 29X + 21X²
+        let got = dec(&f, &a, 3);
+        assert_eq!(got, vec![10, 29, 21]);
+    }
+
+    #[test]
+    fn trivial_ciphertext_ops() {
+        let mut f = fixture(7);
+        let pt = Plaintext::encode_batch(&[100, -100], &f.ctx.params);
+        let triv = BgvCiphertext::trivial(&pt, &f.ctx, f.ctx.top_level());
+        assert_eq!(dec(&f, &triv, 2), vec![100, -100]);
+        let mut x = enc(&mut f, &[1, 1]);
+        x.add_assign(&triv);
+        assert_eq!(dec(&f, &x, 2), vec![101, -99]);
+    }
+
+    #[test]
+    fn add_plain_and_small_scalar() {
+        let mut f = fixture(8);
+        let mut x = enc(&mut f, &[10, 20]);
+        let pt = Plaintext::encode_batch(&[-3, 4], &f.ctx.params);
+        x.add_plain(&pt, &f.ctx);
+        assert_eq!(dec(&f, &x, 2), vec![7, 24]);
+        x.small_scalar_mul_assign(-2, &f.ctx);
+        assert_eq!(dec(&f, &x, 2), vec![-14, -48]);
+    }
+
+    #[test]
+    fn negation() {
+        let mut f = fixture(9);
+        let mut x = enc(&mut f, &[42, -17]);
+        x.neg_assign();
+        assert_eq!(dec(&f, &x, 2), vec![-42, 17]);
+    }
+
+    #[test]
+    fn noise_after_multcc_within_budget() {
+        let mut f = fixture(10);
+        let mut a = enc(&mut f, &[127]);
+        let b = enc(&mut f, &[-127]);
+        a.mul_assign(&b, &f.rlk, &f.ctx);
+        let noise = f.sk.noise_magnitude(&a);
+        // must be far below q/2 ≈ 2^95
+        assert!(noise < 1i128 << 80, "noise 2^{:.1}", (noise as f64).log2());
+        assert_eq!(dec(&f, &a, 1), vec![-16129]);
+    }
+}

@@ -1,0 +1,97 @@
+//! Plaintext encoding: batch-in-coefficients packing (DESIGN.md §2.1).
+//!
+//! * A *value* plaintext packs one mini-batch of signed fixed-point scalars:
+//!   sample `b` lives at coefficient `X^b`.
+//! * A *weight* plaintext is the constant polynomial `w`: multiplying by a
+//!   degree-0 polynomial scales every coefficient, i.e. a batch-wise scalar
+//!   MAC — semantically identical to the paper's slot packing.
+
+use super::params::BgvParams;
+use crate::math::poly::{RnsContext, RnsPoly};
+use std::sync::Arc;
+
+/// A plaintext polynomial over `Z_t`, kept as centered signed values.
+#[derive(Clone, Debug)]
+pub struct Plaintext {
+    /// Coefficients as centered representatives in `(−t/2, t/2]`.
+    pub coeffs: Vec<i64>,
+    pub t: u64,
+}
+
+impl Plaintext {
+    /// Pack a batch of signed values (coefficient `b` = sample `b`).
+    /// Values must fit in `(−t/2, t/2]`.
+    pub fn encode_batch(values: &[i64], params: &BgvParams) -> Self {
+        assert!(values.len() <= params.n, "batch exceeds ring capacity");
+        let half = (params.t / 2) as i64;
+        let mut coeffs = vec![0i64; params.n];
+        for (i, &v) in values.iter().enumerate() {
+            assert!(v >= -half && v <= half, "value {v} out of plaintext range ±{half}");
+            coeffs[i] = v;
+        }
+        Plaintext { coeffs, t: params.t }
+    }
+
+    /// The constant polynomial `w` (a weight scalar).
+    pub fn encode_scalar(w: i64, params: &BgvParams) -> Self {
+        Self::encode_batch(&[w], params)
+    }
+
+    /// Read back the first `count` batch lanes.
+    pub fn decode_batch(&self, count: usize) -> Vec<i64> {
+        self.coeffs[..count].to_vec()
+    }
+
+    /// Centered reduction of an arbitrary integer into the plaintext ring.
+    pub fn center(v: u64, t: u64) -> i64 {
+        let v = v % t;
+        if v > t / 2 {
+            v as i64 - t as i64
+        } else {
+            v as i64
+        }
+    }
+
+    /// Lift to an RNS polynomial at `level` limbs.
+    pub fn to_rns(&self, ctx: &Arc<RnsContext>, level: usize) -> RnsPoly {
+        RnsPoly::from_signed(ctx, &self.coeffs, level)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = BgvParams::test_params();
+        let vals: Vec<i64> = vec![0, 1, -1, 127, -128, 32000, -32000];
+        let pt = Plaintext::encode_batch(&vals, &p);
+        assert_eq!(pt.decode_batch(vals.len()), vals);
+        // untouched lanes are zero
+        assert_eq!(pt.coeffs[vals.len()], 0);
+    }
+
+    #[test]
+    fn scalar_is_constant_poly() {
+        let p = BgvParams::test_params();
+        let pt = Plaintext::encode_scalar(-42, &p);
+        assert_eq!(pt.coeffs[0], -42);
+        assert!(pt.coeffs[1..].iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of plaintext range")]
+    fn overflow_is_rejected() {
+        let p = BgvParams::test_params();
+        let _ = Plaintext::encode_batch(&[(p.t / 2) as i64 + 1], &p);
+    }
+
+    #[test]
+    fn center_reduces_symmetrically() {
+        assert_eq!(Plaintext::center(0, 256), 0);
+        assert_eq!(Plaintext::center(255, 256), -1);
+        assert_eq!(Plaintext::center(128, 256), 128);
+        assert_eq!(Plaintext::center(129, 256), -127);
+    }
+}

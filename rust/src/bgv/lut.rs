@@ -1,0 +1,201 @@
+//! Bit-sliced homomorphic table lookup (TLU) — the FHESGD baseline's
+//! activation mechanism (paper §2.5, Table 1 "TLU" row).
+//!
+//! The lookup runs in the t = 2 profile on *single-lane* bit ciphertexts
+//! (value at coefficient 0 — a constant polynomial): the indicator tree
+//! multiplies two ciphertexts whose product must be lane-wise, and
+//! batch-in-coefficients packing only supports ct×ct when one operand is a
+//! constant polynomial (DESIGN.md §2.1). FHESGD packed the batch in HElib
+//! slots and amortized one lookup over 60 samples; our lookup processes one
+//! sample per op, and the substitution (and its effect on absolute, not
+//! relative, latencies) is documented in DESIGN.md §5.
+//!
+//! A binary indicator tree computes all 2^b window indicators with
+//! 2·(2^b − 1) MultCC at depth b (mod-switching after every tree level);
+//! each output bit is the XOR (= AddCC mod 2) of the indicators whose table
+//! entry has that bit set. This is the Crawford-et-al-style lookup FHESGD
+//! builds sigmoid from, and it is why the baseline's activations are orders
+//! of magnitude more expensive than a MAC — the imbalance Glyph removes.
+
+use super::ciphertext::BgvCiphertext;
+use super::keys::{BgvContext, RelinKey};
+use crate::bgv::encoding::Plaintext;
+
+/// Operation counts of one lookup (for the paper's HOP tables).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LutCost {
+    pub mult_cc: usize,
+    pub add_cc: usize,
+    pub mod_switches: usize,
+}
+
+/// A lookup table mapping b-bit inputs to `out_bits`-bit outputs.
+pub struct LookupTable {
+    pub in_bits: usize,
+    pub out_bits: usize,
+    /// entries[v] = output word for input v (v is MSB-first bit order below).
+    pub entries: Vec<u64>,
+}
+
+impl LookupTable {
+    pub fn new(in_bits: usize, out_bits: usize, f: impl Fn(u64) -> u64) -> Self {
+        let entries = (0..(1u64 << in_bits)).map(f).collect();
+        LookupTable { in_bits, out_bits, entries }
+    }
+
+    /// Quantized sigmoid over signed fixed-point inputs, the FHESGD
+    /// activation: input v interpreted as signed b-bit scaled by 2^frac,
+    /// output an unsigned b-bit value of sigmoid(x) scaled by 2^out_frac.
+    pub fn sigmoid(in_bits: usize, frac: u32, out_frac: u32) -> Self {
+        Self::new(in_bits, in_bits, move |v| {
+            let half = 1i64 << (in_bits - 1);
+            let sv = if (v as i64) >= half { v as i64 - (1i64 << in_bits) } else { v as i64 };
+            let x = sv as f64 / 2f64.powi(frac as i32);
+            let s = 1.0 / (1.0 + (-x).exp());
+            let q = (s * 2f64.powi(out_frac as i32)).round() as u64;
+            q.min((1 << in_bits) - 1)
+        })
+    }
+
+    /// Homomorphic evaluation. `bits` are MSB-first *single-lane* bit
+    /// ciphertexts of the input (t = 2 profile, value at coefficient 0).
+    /// Returns MSB-first output bit ciphertexts and the operation counts.
+    pub fn evaluate(
+        &self,
+        bits: &[BgvCiphertext],
+        rlk: &RelinKey,
+        ctx: &BgvContext,
+    ) -> (Vec<BgvCiphertext>, LutCost) {
+        assert_eq!(bits.len(), self.in_bits);
+        assert_eq!(ctx.params.t, 2, "TLU runs in the t = 2 profile");
+        assert!(
+            ctx.top_level() > self.in_bits,
+            "need > in_bits levels (one MultCC + mod-switch per tree stage)"
+        );
+        let mut cost = LutCost::default();
+        let one = Plaintext::encode_scalar(1, &ctx.params);
+
+        // Indicator tree, MSB first: after stage k there are 2^(k+1)
+        // indicators, inds[p] = ∏ match(bit_i, p_i).
+        let mut inds: Vec<BgvCiphertext> = vec![BgvCiphertext::trivial(&one, ctx, ctx.top_level())];
+        let mut level = ctx.top_level();
+        for bit in bits {
+            let mut b = bit.clone();
+            b.mod_switch_to(level, ctx);
+            cost.mod_switches += bit.level - level;
+            // not_b = 1 + b (mod 2)
+            let mut not_b = b.clone();
+            not_b.add_plain(&one, ctx);
+            let mut next = Vec::with_capacity(inds.len() * 2);
+            for ind in &inds {
+                // ind ∧ ¬b, ind ∧ b
+                let mut i0 = ind.clone();
+                i0.mul_assign(&not_b, rlk, ctx);
+                i0.mod_switch_down(ctx);
+                let mut i1 = ind.clone();
+                i1.mul_assign(&b, rlk, ctx);
+                i1.mod_switch_down(ctx);
+                cost.mult_cc += 2;
+                cost.mod_switches += 2;
+                next.push(i0);
+                next.push(i1);
+            }
+            inds = next;
+            level -= 1;
+        }
+
+        // Output bit j (MSB-first) = Σ_v entries[v]>>j & 1 · inds[v]  (mod 2).
+        let zero = Plaintext::encode_scalar(0, &ctx.params);
+        let mut out = Vec::with_capacity(self.out_bits);
+        for j in (0..self.out_bits).rev() {
+            let mut acc = BgvCiphertext::trivial(&zero, ctx, level);
+            for (v, ind) in inds.iter().enumerate() {
+                if (self.entries[v] >> j) & 1 == 1 {
+                    acc.add_assign(ind);
+                    cost.add_cc += 1;
+                }
+            }
+            out.push(acc);
+        }
+        (out, cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bgv::keys::BgvSecretKey;
+    use crate::bgv::params::BgvParams;
+    use crate::math::rng::GlyphRng;
+    use std::sync::Arc;
+
+    struct Fx {
+        ctx: Arc<BgvContext>,
+        sk: BgvSecretKey,
+        rlk: RelinKey,
+        rng: GlyphRng,
+    }
+
+    fn fixture() -> Fx {
+        let ctx = BgvContext::new(BgvParams::test_tlu_params());
+        let mut rng = GlyphRng::new(200);
+        let sk = BgvSecretKey::generate(&ctx, &mut rng);
+        let rlk = RelinKey::generate(&sk, &mut rng);
+        Fx { ctx, sk, rlk, rng }
+    }
+
+    /// Encrypt the bits (MSB-first) of one value, single-lane.
+    fn encrypt_bits(f: &mut Fx, value: u64, bits: usize) -> Vec<BgvCiphertext> {
+        (0..bits)
+            .rev()
+            .map(|j| {
+                let pt = Plaintext::encode_scalar(((value >> j) & 1) as i64, &f.ctx.params);
+                f.sk.encrypt(&pt, &mut f.rng)
+            })
+            .collect()
+    }
+
+    fn decrypt_value(f: &Fx, bits: &[BgvCiphertext]) -> u64 {
+        let mut val = 0u64;
+        for ct in bits {
+            let lane = f.sk.decrypt(ct);
+            val = (val << 1) | (lane.coeffs[0].rem_euclid(2)) as u64;
+        }
+        val
+    }
+
+    #[test]
+    fn lookup_4bit_square_table() {
+        let mut f = fixture();
+        let table = LookupTable::new(4, 4, |v| (v * v) & 0xF);
+        for input in [0u64, 3, 7, 12, 15] {
+            let bits = encrypt_bits(&mut f, input, 4);
+            let (out, cost) = table.evaluate(&bits, &f.rlk, &f.ctx);
+            assert_eq!(decrypt_value(&f, &out), (input * input) & 0xF, "input={input}");
+            assert_eq!(cost.mult_cc, 2 * ((1 << 4) - 1)); // 30
+        }
+    }
+
+    #[test]
+    fn sigmoid_table_shape() {
+        let t = LookupTable::sigmoid(6, 2, 5);
+        // sigmoid(0) = 0.5 → 16 at out_frac=5
+        assert_eq!(t.entries[0], 16);
+        // large positive input → ~32 (saturating), large negative → ~0
+        assert!(t.entries[15] >= 30); // v=15 → x=3.75
+        assert!(t.entries[32] <= 2); // v=32 → x=-8
+        // monotone on the positive half
+        assert!(t.entries[1] <= t.entries[8]);
+    }
+
+    #[test]
+    fn homomorphic_sigmoid_matches_plain_table() {
+        let mut f = fixture();
+        let table = LookupTable::sigmoid(4, 1, 3);
+        for input in [0u64, 1, 5, 8, 12, 15] {
+            let bits = encrypt_bits(&mut f, input, 4);
+            let (out, _) = table.evaluate(&bits, &f.rlk, &f.ctx);
+            assert_eq!(decrypt_value(&f, &out), table.entries[input as usize], "input={input}");
+        }
+    }
+}

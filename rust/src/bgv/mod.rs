@@ -1,0 +1,32 @@
+//! BGV — the vectorial-arithmetic-friendly cryptosystem Glyph uses for
+//! MAC-heavy layers (FC / conv / pooling / batch-norm).
+//!
+//! This is a from-scratch RNS leveled BGV over `Z_q[X]/(X^N+1)`:
+//!
+//! * plaintext modulus `t` is a power of two (default `2^26`), plaintexts are
+//!   **batch-in-coefficients** packed (DESIGN.md §2.1): coefficient `b` of a
+//!   value ciphertext holds sample `b` of the mini-batch, and weights are
+//!   constant polynomials, so MultCC/MultCP are exactly the paper's
+//!   slot-wise SIMD MACs with no rotations anywhere;
+//! * every RNS prime is ≡ 1 (mod 2^26), so `q ≡ 1 (mod t)`: modulus
+//!   switching preserves plaintexts without factor tracking, and the
+//!   LSB↔MSB maps of the cryptosystem switch are exact scalar
+//!   multiplications (DESIGN.md §2.2);
+//! * relinearization uses RNS decomposition key switching;
+//! * [`refresh`] substitutes HElib-style recryption behind a trait
+//!   (documented substitution — DESIGN.md §5);
+//! * [`lut`] is the bit-sliced homomorphic table lookup used by the FHESGD
+//!   baseline's sigmoid activations (t = 2 profile).
+
+pub mod ciphertext;
+pub mod encoding;
+pub mod keys;
+pub mod lut;
+pub mod params;
+pub mod refresh;
+
+pub use ciphertext::BgvCiphertext;
+pub use encoding::Plaintext;
+pub use keys::{BgvContext, BgvSecretKey, RelinKey};
+pub use params::BgvParams;
+pub use refresh::{KeyAuthority, NoiseRefresher};

@@ -1,0 +1,110 @@
+//! BGV parameter profiles.
+
+use crate::math::modarith::gen_ntt_primes;
+use crate::math::poly::RnsContext;
+use std::sync::Arc;
+
+/// Parameters for one BGV instantiation.
+#[derive(Clone)]
+pub struct BgvParams {
+    /// Ring degree N (power of two). Batch capacity = N.
+    pub n: usize,
+    /// RNS primes, most significant last (modulus switching drops from the
+    /// back). All ≡ 1 (mod `prime_align`).
+    pub primes: Vec<u64>,
+    /// Plaintext modulus t (power of two).
+    pub t: u64,
+    /// Error standard deviation.
+    pub sigma: f64,
+    /// Alignment the primes were generated with (2^26 for the MAC profile).
+    pub prime_align: u64,
+}
+
+impl BgvParams {
+    /// MAC profile (paper's Glyph layers): N = 2048, t = 2^26, 3 limbs.
+    /// Depth budget: one MultCC + relin + the switch's scalar maps between
+    /// refreshes — exactly Glyph's per-layer usage.
+    pub fn mac_params() -> Self {
+        let align = 1u64 << 26;
+        BgvParams {
+            n: 2048,
+            primes: gen_ntt_primes(3, align, 1u64 << 32),
+            t: 1 << 26,
+            sigma: 3.2,
+            prime_align: align,
+        }
+    }
+
+    /// FHESGD-baseline table-lookup profile: t = 2 bit-slices, deep chain
+    /// for the depth-8 indicator tree of an 8-bit lookup.
+    pub fn tlu_params() -> Self {
+        let align = 1u64 << 26; // same pool; only ≥ 2N alignment is required
+        BgvParams {
+            n: 2048,
+            primes: gen_ntt_primes(9, align, 1u64 << 32),
+            t: 2,
+            sigma: 3.2,
+            prime_align: align,
+        }
+    }
+
+    /// Fast unit-test profile.
+    pub fn test_params() -> Self {
+        let align = 1u64 << 26;
+        BgvParams {
+            n: 256,
+            primes: gen_ntt_primes(3, align, 1u64 << 32),
+            t: 1 << 16,
+            sigma: 3.2,
+            prime_align: align,
+        }
+    }
+
+    /// Test profile for the t=2 lookup machinery.
+    pub fn test_tlu_params() -> Self {
+        let align = 1u64 << 26;
+        BgvParams {
+            n: 256,
+            primes: gen_ntt_primes(9, align, 1u64 << 32),
+            t: 2,
+            sigma: 3.2,
+            prime_align: align,
+        }
+    }
+
+    pub fn levels(&self) -> usize {
+        self.primes.len()
+    }
+
+    /// Build the shared RNS context.
+    pub fn context(&self) -> Arc<RnsContext> {
+        for &p in &self.primes {
+            assert_eq!(p % (2 * self.n as u64), 1, "prime {p} not NTT-friendly for N={}", self.n);
+            assert_eq!(p % self.t, 1, "prime {p} ≢ 1 mod t (breaks plaintext-preserving modswitch)");
+        }
+        assert!(self.t.is_power_of_two());
+        RnsContext::new(self.n, &self.primes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_are_consistent() {
+        for p in [BgvParams::mac_params(), BgvParams::tlu_params(), BgvParams::test_params()] {
+            let ctx = p.context(); // asserts alignment internally
+            assert_eq!(ctx.n, p.n);
+            assert_eq!(ctx.num_primes(), p.levels());
+        }
+    }
+
+    #[test]
+    fn mac_profile_headroom_for_8bit_macs() {
+        // 8-bit values × 8-bit weights × fan-in 1568 must fit in t.
+        let p = BgvParams::mac_params();
+        let max_mac: u64 = 127 * 127 * 1568;
+        assert!(max_mac < p.t / 2, "max MAC {max_mac} vs t/2 {}", p.t / 2);
+    }
+}

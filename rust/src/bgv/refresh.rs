@@ -1,0 +1,86 @@
+//! Noise refresh service — the documented substitution for BGV
+//! bootstrapping (DESIGN.md §5).
+//!
+//! HElib's recryption ("bootstrapping") resets a ciphertext's noise without
+//! the secret key. Implementing recryption is out of scope for this
+//! reproduction (it is orthogonal to Glyph's contribution), so the same
+//! *interface* is provided by a key-holding authority that decrypts and
+//! re-encrypts. Every invocation is counted so the cost model can charge it
+//! at HElib-reported recrypt latencies, and the trust-model caveat is in the
+//! README. All call sites go through the [`NoiseRefresher`] trait, so a real
+//! recryption could be dropped in without touching the training stack.
+
+use super::ciphertext::BgvCiphertext;
+use super::keys::{BgvContext, BgvSecretKey};
+use crate::math::rng::GlyphRng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Anything that can reset a ciphertext's noise (and raise it back to the
+/// top level).
+pub trait NoiseRefresher: Send + Sync {
+    /// Fresh re-encryption of the same plaintext at top level.
+    fn refresh(&self, ct: &BgvCiphertext) -> BgvCiphertext;
+    /// Number of refreshes performed so far (for HOP accounting).
+    fn refresh_count(&self) -> usize;
+}
+
+/// The key-holding refresh authority.
+pub struct KeyAuthority {
+    pub sk: Arc<BgvSecretKey>,
+    rng: Mutex<GlyphRng>,
+    count: AtomicUsize,
+}
+
+impl KeyAuthority {
+    pub fn new(sk: Arc<BgvSecretKey>, rng: GlyphRng) -> Arc<Self> {
+        Arc::new(KeyAuthority { sk, rng: Mutex::new(rng), count: AtomicUsize::new(0) })
+    }
+
+    pub fn ctx(&self) -> &Arc<BgvContext> {
+        &self.sk.ctx
+    }
+}
+
+impl NoiseRefresher for KeyAuthority {
+    fn refresh(&self, ct: &BgvCiphertext) -> BgvCiphertext {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let pt = self.sk.decrypt(ct);
+        let mut rng = self.rng.lock().unwrap();
+        self.sk.encrypt(&pt, &mut rng)
+    }
+
+    fn refresh_count(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bgv::encoding::Plaintext;
+    use crate::bgv::keys::RelinKey;
+    use crate::bgv::params::BgvParams;
+
+    #[test]
+    fn refresh_resets_noise_and_level() {
+        let ctx = BgvContext::new(BgvParams::test_params());
+        let mut rng = GlyphRng::new(55);
+        let sk = Arc::new(BgvSecretKey::generate(&ctx, &mut rng));
+        let rlk = RelinKey::generate(&sk, &mut rng);
+        let auth = KeyAuthority::new(sk.clone(), GlyphRng::new(56));
+
+        let pt = Plaintext::encode_batch(&[21, -2], &ctx.params);
+        let mut ct = sk.encrypt(&pt, &mut rng);
+        let other = sk.encrypt(&Plaintext::encode_scalar(3, &ctx.params), &mut rng);
+        ct.mul_assign(&other, &rlk, &ctx);
+        ct.mod_switch_down(&ctx);
+        let noisy = sk.noise_magnitude(&ct);
+
+        let fresh = auth.refresh(&ct);
+        assert_eq!(fresh.level, ctx.top_level());
+        assert_eq!(sk.decrypt(&fresh).decode_batch(2), vec![63, -6]);
+        assert!(sk.noise_magnitude(&fresh) < noisy * (1 << 16), "sanity");
+        assert_eq!(auth.refresh_count(), 1);
+    }
+}

@@ -1,0 +1,465 @@
+//! The calibrated cost model that regenerates the paper's Tables 2–8.
+//!
+//! The paper reports mini-batch latency = Σ (op count × per-op latency),
+//! with the batch amortized inside each op (60 slots there, up to N
+//! coefficients here). We measure per-op latencies of *our* implementation
+//! ([`OpLatencies::measure`]) and also carry the paper's own Table-1 /
+//! §4.1 numbers ([`OpLatencies::paper`]) so every generated table can be
+//! printed in both calibrations side by side — shape comparisons stay
+//! honest even where absolute constants differ (DESIGN.md §5).
+
+use super::executor::parallel_map;
+use crate::bgv::lut::LookupTable;
+use crate::nn::engine::{EngineProfile, GlyphEngine};
+use crate::nn::tensor::PackOrder;
+use crate::nn::{activation, EncTensor};
+use std::time::Instant;
+
+/// Per-op latencies in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct OpLatencies {
+    pub mult_cc: f64,
+    pub mult_cp: f64,
+    pub add_cc: f64,
+    /// One full 8-bit table lookup (FHESGD sigmoid).
+    pub tlu: f64,
+    /// One value through the TFHE ReLU (extraction PBS + Alg-1 gates).
+    pub relu_value: f64,
+    /// One value through the Figure-4 softmax unit.
+    pub softmax_value: f64,
+    /// BGV→TFHE per-ciphertext fixed cost (Δ map + extract + key switch),
+    /// amortized per value.
+    pub switch_b2t_value: f64,
+    /// TFHE→BGV per-ciphertext cost (pack + raise), amortized per value.
+    pub switch_t2b_value: f64,
+}
+
+impl OpLatencies {
+    /// The paper's own numbers (Table 1 + §4.1): the "paper-calibrated"
+    /// mode used for side-by-side table reproduction.
+    pub fn paper() -> Self {
+        OpLatencies {
+            mult_cc: 0.012,
+            mult_cp: 0.001,
+            add_cc: 0.002,
+            tlu: 307.9,
+            relu_value: 0.1,       // §4.1: "takes only 0.1 second"
+            softmax_value: 3.3,    // §4.1: "from 307.9 seconds to only 3.3"
+            switch_b2t_value: 0.0013, // FC1-forward +0.96% over 1357s / 100K values
+            switch_t2b_value: 0.0013,
+        }
+    }
+
+    /// Measure this implementation. `test_scale` uses the reduced profiles
+    /// (CI); production tables use the default profiles.
+    pub fn measure(test_scale: bool) -> Self {
+        let profile = if test_scale { EngineProfile::Test } else { EngineProfile::Default };
+        let batch = if test_scale { 4 } else { 60 };
+        let (engine, mut client) = GlyphEngine::setup(profile, batch, 20260710);
+
+        // MultCC / MultCP / AddCC on realistic operands.
+        let w = client.encrypt_scalar(9);
+        let x = client.encrypt_batch(&vec![17; batch], 0);
+        let wp = crate::bgv::Plaintext::encode_scalar(9, &engine.ctx.params);
+        let iters = if test_scale { 20 } else { 50 };
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let mut t = w.clone();
+            t.mul_assign(&x, &engine.rlk, &engine.ctx);
+        }
+        let mult_cc = t0.elapsed().as_secs_f64() / iters as f64;
+
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let mut t = x.clone();
+            t.mul_plain_assign(&wp, &engine.ctx);
+        }
+        let mult_cp = t0.elapsed().as_secs_f64() / iters as f64;
+
+        let t0 = Instant::now();
+        for _ in 0..(iters * 10) {
+            let mut t = x.clone();
+            t.add_assign(&w);
+        }
+        let add_cc = t0.elapsed().as_secs_f64() / (iters * 10) as f64;
+
+        // ReLU per value: run one ciphertext through the full pipeline.
+        let u = EncTensor::new(vec![client.encrypt_batch(&vec![33; batch], 0)], vec![1], PackOrder::Forward, 0);
+        let t0 = Instant::now();
+        let (_a, _st) = activation::relu_layer(&engine, &u, 0, PackOrder::Forward);
+        let relu_total = t0.elapsed().as_secs_f64();
+        let relu_value = relu_total / batch as f64;
+
+        // Switch costs per value: extraction only (Δ + extract + ksk).
+        let positions: Vec<usize> = (0..batch).collect();
+        let t0 = Instant::now();
+        let _l = engine.fwd_switch.to_torus_lanes(&u.cts[0], batch);
+        let switch_b2t_value = t0.elapsed().as_secs_f64() / batch as f64;
+        let lwes: Vec<crate::tfhe::LweCiphertext> = (0..batch)
+            .map(|i| crate::tfhe::LweCiphertext::trivial((i as u32) << 24, engine.gate_ext_dim()))
+            .collect();
+        let t0 = Instant::now();
+        let _p = engine.bwd_switch.pack_at_and_raise(&lwes, &positions, &engine.auth);
+        let switch_t2b_value = t0.elapsed().as_secs_f64() / batch as f64;
+
+        // Softmax per value (Figure-4 MUX tree at the configured width; use
+        // 4 bits in test scale to keep CI fast, 8 in production).
+        let sm_bits = if test_scale { 3 } else { 8 };
+        let unit = activation::SoftmaxUnit::logistic(sm_bits, 4);
+        let bits = engine.switch_to_bits(&u.cts[0], &[0], 0);
+        let t0 = Instant::now();
+        let _o = unit.evaluate_mux(&engine, &bits[0][..sm_bits]);
+        let softmax_value = t0.elapsed().as_secs_f64();
+
+        // TLU: one real bit-sliced lookup in the t=2 profile.
+        let tlu_domain = crate::train::fhesgd::TluDomain::new(test_scale, 7);
+        let tlu_bits = if test_scale { 4 } else { 8 };
+        let table = LookupTable::sigmoid(tlu_bits, 2, (tlu_bits - 1) as u32);
+        let enc_bits = tlu_domain.encrypt_bits(5, tlu_bits);
+        let t0 = Instant::now();
+        let (_out, _c) = table.evaluate(&enc_bits, &tlu_domain.rlk, &tlu_domain.ctx);
+        let tlu = t0.elapsed().as_secs_f64();
+
+        OpLatencies {
+            mult_cc,
+            mult_cp,
+            add_cc,
+            tlu,
+            relu_value,
+            softmax_value,
+            switch_b2t_value,
+            switch_t2b_value,
+        }
+    }
+}
+
+/// One row of a paper-style mini-batch table.
+#[derive(Clone, Debug, Default)]
+pub struct TableRow {
+    pub layer: String,
+    pub time_s: f64,
+    pub mult_cp: u64,
+    pub mult_cc: u64,
+    pub add_cc: u64,
+    pub tlu: u64,
+    pub act: u64,
+    pub switch: &'static str,
+}
+
+impl TableRow {
+    pub fn hop(&self) -> u64 {
+        self.mult_cp + self.mult_cc + self.add_cc + self.tlu + self.act
+    }
+}
+
+/// Which training scheme a table models.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    Fhesgd,
+    GlyphMlp,
+}
+
+/// Generate the FHESGD (Table 2/6) or Glyph (Table 3/7) MLP mini-batch
+/// breakdown for `dims` (e.g. [784,128,32,10]).
+pub fn mlp_table(dims: &[usize], scheme: Scheme, lat: &OpLatencies) -> Vec<TableRow> {
+    let l = dims.len() - 1; // number of FC layers
+    let mut rows = Vec::new();
+    let fc_macs = |i: usize| (dims[i] * dims[i + 1]) as u64;
+
+    let fc_row = |name: String, macs: u64, switch: &'static str| -> TableRow {
+        let mut time = macs as f64 * (lat.mult_cc + lat.add_cc);
+        if switch != "-" {
+            // the Δ/extract part of the switch rides on the FC output
+            time *= 1.0096; // paper: +0.96% on FC1-forward
+        }
+        TableRow {
+            layer: name,
+            time_s: time,
+            mult_cc: macs,
+            add_cc: macs,
+            switch,
+            ..Default::default()
+        }
+    };
+    let act_row = |name: String, neurons: u64, last: bool| -> TableRow {
+        match scheme {
+            Scheme::Fhesgd => TableRow {
+                layer: name,
+                time_s: neurons as f64 * lat.tlu,
+                tlu: neurons,
+                switch: "-",
+                ..Default::default()
+            },
+            Scheme::GlyphMlp => TableRow {
+                layer: name,
+                time_s: neurons as f64
+                    * (if last { lat.softmax_value } else { lat.relu_value }
+                        + lat.switch_b2t_value
+                        + lat.switch_t2b_value),
+                act: neurons,
+                switch: "TFHE-BGV",
+                ..Default::default()
+            },
+        }
+    };
+    let sw = |on: bool| if on { "BGV-TFHE" } else { "-" };
+
+    // forward
+    for i in 0..l {
+        rows.push(fc_row(format!("FC{}-forward", i + 1), fc_macs(i), sw(scheme == Scheme::GlyphMlp)));
+        rows.push(act_row(format!("Act{}-forward", i + 1), dims[i + 1] as u64, i == l - 1));
+    }
+    // backward
+    rows.push(TableRow {
+        layer: format!("Act{l}-error"),
+        time_s: dims[l] as u64 as f64 * lat.add_cc,
+        add_cc: dims[l] as u64,
+        switch: "-",
+        ..Default::default()
+    });
+    for i in (0..l).rev() {
+        if i > 0 {
+            rows.push(fc_row(format!("FC{}-error", i + 1), fc_macs(i), "-"));
+        }
+        rows.push(fc_row(
+            format!("FC{}-gradient", i + 1),
+            fc_macs(i),
+            sw(scheme == Scheme::GlyphMlp),
+        ));
+        if i > 0 {
+            rows.push(act_row(format!("Act{i}-error"), dims[i] as u64, false));
+        }
+    }
+    rows
+}
+
+/// CNN shape description for the Table 4/8 generator (paper counting:
+/// conv ops = out_ch · oh · ow · k²; see DESIGN.md §5 on the per-channel
+/// convention).
+pub struct CnnShape {
+    pub conv1: (u64, u64, u64), // (values = oc·oh·ow, k2, _)
+    pub conv2: (u64, u64, u64),
+    /// Activation-layer value counts (the paper's Act columns; for the
+    /// Cancer tables these follow the paper's own Table-8 rows).
+    pub act1: u64,
+    pub act2: u64,
+    pub pool1_out: u64,
+    pub pool2_out: u64,
+    pub fc1: (u64, u64), // in, out
+    pub fc2: (u64, u64),
+    pub classes: u64,
+}
+
+impl CnnShape {
+    pub fn paper_mnist() -> Self {
+        CnnShape {
+            conv1: (6 * 26 * 26, 9, 0),
+            conv2: (16 * 11 * 11, 9, 0),
+            act1: 6 * 26 * 26,  // paper: 4.1K
+            act2: 16 * 11 * 11, // paper: 1.9K
+            pool1_out: 6 * 13 * 13,
+            pool2_out: 16 * 5 * 5,
+            fc1: (400, 84),
+            fc2: (84, 10),
+            classes: 10,
+        }
+    }
+
+    pub fn paper_cancer() -> Self {
+        // Row counts follow the paper's own Table 8 (notably FC1 = 51K MACs,
+        // i.e. a 400-wide feature input, and per-output-channel conv
+        // counting — see DESIGN.md §5 on the paper's conv conventions).
+        CnnShape {
+            conv1: (64 * 26 * 26, 9, 0),
+            conv2: (96 * 11 * 11, 9, 0),
+            act1: 10_800, // paper Table 8 Act1-forward
+            act2: 11_616, // 96·11² (paper lists 29K; see DESIGN.md §5)
+            pool1_out: 64 * 13 * 13,
+            pool2_out: 96 * 5 * 5,
+            fc1: (400, 128),
+            fc2: (128, 7),
+            classes: 7,
+        }
+    }
+}
+
+/// Generate the Glyph CNN + transfer-learning breakdown (Tables 4/8).
+pub fn cnn_table(s: &CnnShape, lat: &OpLatencies) -> Vec<TableRow> {
+    let mut rows = Vec::new();
+    let plain_row = |name: &str, count: u64, switch: &'static str| TableRow {
+        layer: name.into(),
+        time_s: count as f64 * (lat.mult_cp + lat.add_cc),
+        mult_cp: count,
+        add_cc: count,
+        switch,
+        ..Default::default()
+    };
+    let act_row = |name: &str, values: u64, softmax: bool| TableRow {
+        layer: name.into(),
+        time_s: values as f64
+            * (if softmax { lat.softmax_value } else { lat.relu_value }
+                + lat.switch_b2t_value
+                + lat.switch_t2b_value),
+        act: values,
+        switch: "TFHE-BGV",
+        ..Default::default()
+    };
+    let fc_row = |name: &str, macs: u64, switch: &'static str| TableRow {
+        layer: name.into(),
+        time_s: macs as f64 * (lat.mult_cc + lat.add_cc) * 1.0096,
+        mult_cc: macs,
+        add_cc: macs,
+        switch,
+        ..Default::default()
+    };
+
+    rows.push(plain_row("Conv1-forward", s.conv1.0 * s.conv1.1, "-"));
+    rows.push(plain_row("BN1-forward", s.conv1.0 * 2, "BGV-TFHE"));
+    rows.push(act_row("Act1-forward", s.act1, false));
+    rows.push(plain_row("Pool1-forward", s.pool1_out * 4, "-"));
+    rows.push(plain_row("Conv2-forward", s.conv2.0 * s.conv2.1, "-"));
+    rows.push(plain_row("BN2-forward", s.conv2.0 * 2, "BGV-TFHE"));
+    rows.push(act_row("Act2-forward", s.act2, false));
+    rows.push(plain_row("Pool2-forward", s.pool2_out * 4, "-"));
+    rows.push(fc_row("FC1-forward", s.fc1.0 * s.fc1.1, "BGV-TFHE"));
+    rows.push(act_row("Act3-forward", s.fc1.1, false));
+    rows.push(fc_row("FC2-forward", s.fc2.0 * s.fc2.1, "BGV-TFHE"));
+    rows.push(act_row("Act4-forward", s.classes, true));
+    rows.push(TableRow {
+        layer: "Act4-error".into(),
+        time_s: s.classes as f64 * lat.add_cc,
+        add_cc: s.classes,
+        switch: "-",
+        ..Default::default()
+    });
+    rows.push(fc_row("FC2-error", s.fc2.0 * s.fc2.1, "-"));
+    rows.push(fc_row("FC2-gradient", s.fc2.0 * s.fc2.1, "BGV-TFHE"));
+    rows.push(act_row("Act3-error", s.fc1.1, false));
+    rows.push(fc_row("FC1-gradient", s.fc1.0 * s.fc1.1, "-"));
+    rows
+}
+
+/// Sum a table into a Total row.
+pub fn total_row(rows: &[TableRow]) -> TableRow {
+    let mut t = TableRow { layer: "Total".into(), switch: "-", ..Default::default() };
+    for r in rows {
+        t.time_s += r.time_s;
+        t.mult_cp += r.mult_cp;
+        t.mult_cc += r.mult_cc;
+        t.add_cc += r.add_cc;
+        t.tlu += r.tlu;
+        t.act += r.act;
+    }
+    t
+}
+
+/// Render rows as a markdown table (what the benches write to bench_out/).
+pub fn to_markdown(title: &str, rows: &[TableRow]) -> String {
+    let mut s = format!("### {title}\n\n| Layer | Time(s) | HOP | MultCP | MultCC | AddCC | TLU | Act | Switch |\n|---|---|---|---|---|---|---|---|---|\n");
+    let mut all = rows.to_vec();
+    all.push(total_row(rows));
+    for r in &all {
+        s.push_str(&format!(
+            "| {} | {:.4} | {} | {} | {} | {} | {} | {} | {} |\n",
+            r.layer,
+            r.time_s,
+            r.hop(),
+            r.mult_cp,
+            r.mult_cc,
+            r.add_cc,
+            r.tlu,
+            r.act,
+            r.switch
+        ));
+    }
+    s
+}
+
+/// Overall-training estimator (Table 5 methodology: mini-batch latency ×
+/// mini-batches × epochs, with measured thread-scaling efficiency).
+pub fn overall_latency(minibatch_s: f64, batches_per_epoch: u64, epochs: u64, speedup: f64) -> f64 {
+    minibatch_s * batches_per_epoch as f64 * epochs as f64 / speedup
+}
+
+/// Measure the thread-scaling speedup of a bundle of independent MACs
+/// (Table 5's parallel SGD argument).
+pub fn measure_scaling(threads: usize, work_items: usize) -> f64 {
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 4, 777);
+    let items: Vec<(crate::bgv::BgvCiphertext, crate::bgv::BgvCiphertext)> = (0..work_items)
+        .map(|i| (client.encrypt_scalar(i as i64 % 100), client.encrypt_batch(&[1, 2, 3, 4], 0)))
+        .collect();
+    let t0 = Instant::now();
+    let _r = parallel_map(items.clone(), 1, |(mut w, x)| {
+        w.mul_assign(&x, &engine.rlk, &engine.ctx);
+        w
+    });
+    let t1 = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let _r = parallel_map(items, threads, |(mut w, x)| {
+        w.mul_assign(&x, &engine.rlk, &engine.ctx);
+        w
+    });
+    let tn = t0.elapsed().as_secs_f64();
+    t1 / tn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_calibrated_fhesgd_table_reproduces_headlines() {
+        // Using the paper's own per-op latencies, the generated Table 2 must
+        // show ≈118K s total with activations ≥ 97% of the time.
+        let lat = OpLatencies::paper();
+        let rows = mlp_table(&[784, 128, 32, 10], Scheme::Fhesgd, &lat);
+        let total = total_row(&rows);
+        // paper reports 118K s; its own per-row numbers imply ≈350 s/TLU vs
+        // Table 1's 307.9 s — with the Table-1 figure the total is ≈105K.
+        assert!((95_000.0..130_000.0).contains(&total.time_s), "total {}", total.time_s);
+        let act_time: f64 = rows.iter().filter(|r| r.layer.starts_with("Act")).map(|r| r.time_s).sum();
+        assert!(act_time / total.time_s > 0.95, "act share {}", act_time / total.time_s);
+        assert_eq!(total.tlu, 330);
+        // paper reports ≈213K MultCC; exact count from the layer dims:
+        // fwd 3 FCs + FC2/FC3 errors + 3 gradients = 213,952
+        assert_eq!(total.mult_cc, 213_952);
+    }
+
+    #[test]
+    fn paper_calibrated_glyph_table_reduces_latency_97pct() {
+        let lat = OpLatencies::paper();
+        let fhesgd = total_row(&mlp_table(&[784, 128, 32, 10], Scheme::Fhesgd, &lat));
+        let glyph = total_row(&mlp_table(&[784, 128, 32, 10], Scheme::GlyphMlp, &lat));
+        let reduction = 1.0 - glyph.time_s / fhesgd.time_s;
+        assert!(reduction > 0.95, "reduction {reduction}");
+        // the paper's Table-3 total is 2991 s
+        assert!((glyph.time_s - 2991.0).abs() / 2991.0 < 0.5, "glyph total {}", glyph.time_s);
+    }
+
+    #[test]
+    fn cnn_transfer_reduces_vs_glyph_mlp() {
+        let lat = OpLatencies::paper();
+        let mlp = total_row(&mlp_table(&[784, 128, 32, 10], Scheme::GlyphMlp, &lat));
+        let cnn = total_row(&cnn_table(&CnnShape::paper_mnist(), &lat));
+        assert!(cnn.time_s < mlp.time_s, "cnn {} vs mlp {}", cnn.time_s, mlp.time_s);
+        // FC rows: FC1-forward, FC1-gradient (2×400·84) + FC2-forward/-error/-gradient (3×84·10)
+        assert_eq!(cnn.mult_cc, 2 * 400 * 84 + 3 * 84 * 10);
+        assert!(cnn.mult_cp > 0);
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let lat = OpLatencies::paper();
+        let rows = mlp_table(&[4, 3, 2], Scheme::GlyphMlp, &lat);
+        let md = to_markdown("test", &rows);
+        assert!(md.contains("FC1-forward"));
+        assert!(md.contains("Total"));
+    }
+
+    #[test]
+    fn overall_estimator() {
+        // paper: 2991 s × 1000 batches × 50 epochs ≈ 4.74 years single-thread
+        let secs = overall_latency(2991.0, 1000, 50, 1.0);
+        assert!((secs / (365.25 * 86400.0) - 4.74).abs() < 0.1);
+    }
+}

@@ -1,0 +1,77 @@
+//! Thread-pool execution of independent homomorphic work items.
+//!
+//! SGD's per-neuron MACs and per-value activations are embarrassingly
+//! parallel (the paper's §6.3: "the weight updates in SGD are independent");
+//! Table 5's 1→48-thread scaling sweep runs through this executor. Plain
+//! `std::thread::scope` — the vendored crate set has no rayon, and the work
+//! items are large enough that a work-stealing pool would not matter.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` using `threads` OS threads; preserves order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let items: Vec<std::sync::Mutex<Option<T>>> =
+        items.into_iter().map(|t| std::sync::Mutex::new(Some(t))).collect();
+    let slots: Vec<std::sync::Mutex<Option<R>>> = (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            let items = &items;
+            let slots = &slots;
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = items[i].lock().unwrap().take().unwrap();
+                let r = f(item);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+/// Available hardware parallelism.
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        for threads in [1, 2, 8] {
+            let out = parallel_map(items.clone(), threads, |x| x * x);
+            assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_actually_uses_threads() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let seen = Mutex::new(HashSet::new());
+        let _ = parallel_map((0..64).collect::<Vec<_>>(), 4, |x| {
+            // make items slow enough that one thread cannot drain the queue
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            seen.lock().unwrap().insert(std::thread::current().id());
+            x
+        });
+        assert!(seen.lock().unwrap().len() > 1);
+    }
+}

@@ -1,0 +1,126 @@
+//! Homomorphic-operation accounting — the HOP / MultCC / MultCP / AddCC /
+//! TLU / Act / Switch columns of the paper's Tables 2–4 and 6–8.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe operation counters. One per engine; layers and training
+/// loops record into it, the cost model and the bench harness read it.
+#[derive(Default)]
+pub struct OpCounter {
+    pub mult_cc: AtomicU64,
+    pub mult_cp: AtomicU64,
+    pub add_cc: AtomicU64,
+    /// Table lookups (FHESGD baseline activations).
+    pub tlu: AtomicU64,
+    /// Bootstrapped TFHE gates (Glyph activations).
+    pub act_gates: AtomicU64,
+    /// Digit-extraction bootstraps (part of the BGV→TFHE switch).
+    pub extract_pbs: AtomicU64,
+    /// BGV→TFHE switches (per ciphertext).
+    pub switch_b2t: AtomicU64,
+    /// TFHE→BGV switches (per packed ciphertext).
+    pub switch_t2b: AtomicU64,
+    /// Noise refreshes (substituted bootstrapping, DESIGN.md §5).
+    pub refresh: AtomicU64,
+    /// BGV modulus switches.
+    pub mod_switch: AtomicU64,
+}
+
+/// A plain-value snapshot of [`OpCounter`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpSnapshot {
+    pub mult_cc: u64,
+    pub mult_cp: u64,
+    pub add_cc: u64,
+    pub tlu: u64,
+    pub act_gates: u64,
+    pub extract_pbs: u64,
+    pub switch_b2t: u64,
+    pub switch_t2b: u64,
+    pub refresh: u64,
+    pub mod_switch: u64,
+}
+
+impl OpCounter {
+    pub fn snapshot(&self) -> OpSnapshot {
+        OpSnapshot {
+            mult_cc: self.mult_cc.load(Ordering::Relaxed),
+            mult_cp: self.mult_cp.load(Ordering::Relaxed),
+            add_cc: self.add_cc.load(Ordering::Relaxed),
+            tlu: self.tlu.load(Ordering::Relaxed),
+            act_gates: self.act_gates.load(Ordering::Relaxed),
+            extract_pbs: self.extract_pbs.load(Ordering::Relaxed),
+            switch_b2t: self.switch_b2t.load(Ordering::Relaxed),
+            switch_t2b: self.switch_t2b.load(Ordering::Relaxed),
+            refresh: self.refresh.load(Ordering::Relaxed),
+            mod_switch: self.mod_switch.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    pub fn bump(&self, field: &AtomicU64, by: u64) {
+        field.fetch_add(by, Ordering::Relaxed);
+    }
+}
+
+impl OpSnapshot {
+    /// Difference since an earlier snapshot (per-layer accounting).
+    pub fn since(&self, earlier: &OpSnapshot) -> OpSnapshot {
+        OpSnapshot {
+            mult_cc: self.mult_cc - earlier.mult_cc,
+            mult_cp: self.mult_cp - earlier.mult_cp,
+            add_cc: self.add_cc - earlier.add_cc,
+            tlu: self.tlu - earlier.tlu,
+            act_gates: self.act_gates - earlier.act_gates,
+            extract_pbs: self.extract_pbs - earlier.extract_pbs,
+            switch_b2t: self.switch_b2t - earlier.switch_b2t,
+            switch_t2b: self.switch_t2b - earlier.switch_t2b,
+            refresh: self.refresh - earlier.refresh,
+            mod_switch: self.mod_switch - earlier.mod_switch,
+        }
+    }
+
+    /// Total homomorphic op count (the paper's HOP column).
+    pub fn hop(&self) -> u64 {
+        self.mult_cc + self.mult_cp + self.add_cc + self.tlu + self.act_gates
+    }
+}
+
+impl std::fmt::Display for OpSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "HOP={} MultCC={} MultCP={} AddCC={} TLU={} Act={} PBS={} B2T={} T2B={} refresh={}",
+            self.hop(),
+            self.mult_cc,
+            self.mult_cp,
+            self.add_cc,
+            self.tlu,
+            self.act_gates,
+            self.extract_pbs,
+            self.switch_b2t,
+            self.switch_t2b,
+            self.refresh
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_and_since() {
+        let c = OpCounter::default();
+        c.bump(&c.mult_cc, 5);
+        c.bump(&c.add_cc, 3);
+        let s1 = c.snapshot();
+        assert_eq!(s1.mult_cc, 5);
+        assert_eq!(s1.hop(), 8);
+        c.bump(&c.mult_cc, 2);
+        let s2 = c.snapshot();
+        let d = s2.since(&s1);
+        assert_eq!(d.mult_cc, 2);
+        assert_eq!(d.add_cc, 0);
+    }
+}

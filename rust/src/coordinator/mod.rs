@@ -1,0 +1,13 @@
+//! L3 coordination: cryptosystem scheduling, parallel execution, HOP
+//! metrics and the calibrated cost model that regenerates the paper's
+//! tables.
+
+pub mod cost;
+pub mod executor;
+pub mod metrics;
+pub mod scheduler;
+
+pub use cost::{mlp_table, cnn_table, to_markdown, total_row, CnnShape, OpLatencies, Scheme, TableRow};
+pub use executor::{max_threads, parallel_map};
+pub use metrics::{OpCounter, OpSnapshot};
+pub use scheduler::{LayerKind, Plan, PlanStep, System};

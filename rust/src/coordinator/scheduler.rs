@@ -1,0 +1,161 @@
+//! Cryptosystem scheduling: assigns each network operation to BGV or TFHE
+//! and inserts the switches (the "Switch" column of Tables 3/4/7/8).
+//!
+//! The policy is the paper's: vectorial arithmetic (FC/conv/pool/BN/loss)
+//! on BGV, nonlinear activations on TFHE, switch at every boundary, and
+//! keep the quadratic loss on BGV because a switch would cost more than it
+//! saves (§4.1).
+
+/// A network layer, as the scheduler sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Fc { trainable: bool },
+    Conv { trainable: bool },
+    BatchNorm,
+    AvgPool,
+    Relu,
+    Softmax,
+    QuadraticLoss,
+}
+
+/// Which cryptosystem executes a step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum System {
+    Bgv,
+    Tfhe,
+}
+
+/// One scheduled step.
+#[derive(Clone, Debug)]
+pub struct PlanStep {
+    pub name: String,
+    pub system: System,
+    /// Switch annotation entering this step ("BGV-TFHE", "TFHE-BGV" or "-").
+    pub switch: &'static str,
+}
+
+/// A full schedule.
+pub struct Plan {
+    pub steps: Vec<PlanStep>,
+}
+
+impl Plan {
+    /// Build the forward+backward schedule for a layer stack.
+    pub fn build(layers: &[(String, LayerKind)]) -> Plan {
+        let system_of = |k: LayerKind| match k {
+            LayerKind::Relu | LayerKind::Softmax => System::Tfhe,
+            _ => System::Bgv,
+        };
+        let mut steps = Vec::new();
+        let mut cur = System::Bgv;
+        let mut push = |name: String, sys: System, cur: &mut System| {
+            let switch = match (*cur, sys) {
+                (System::Bgv, System::Tfhe) => "BGV-TFHE",
+                (System::Tfhe, System::Bgv) => "TFHE-BGV",
+                _ => "-",
+            };
+            steps.push(PlanStep { name, system: sys, switch });
+            *cur = sys;
+        };
+        // forward
+        for (name, kind) in layers {
+            push(format!("{name}-forward"), system_of(*kind), &mut cur);
+        }
+        // backward (reverse order; trainable layers also emit a gradient step)
+        for (name, kind) in layers.iter().rev() {
+            match kind {
+                LayerKind::QuadraticLoss => push(format!("{name}-error"), System::Bgv, &mut cur),
+                LayerKind::Relu | LayerKind::Softmax => {
+                    push(format!("{name}-error"), System::Tfhe, &mut cur)
+                }
+                LayerKind::Fc { trainable } | LayerKind::Conv { trainable } => {
+                    push(format!("{name}-error"), System::Bgv, &mut cur);
+                    if *trainable {
+                        push(format!("{name}-gradient"), System::Bgv, &mut cur);
+                    }
+                }
+                _ => {} // pool/BN backward folded into neighbours under TL
+            }
+        }
+        Plan { steps }
+    }
+
+    /// Number of switches in the plan.
+    pub fn switch_count(&self) -> usize {
+        self.steps.iter().filter(|s| s.switch != "-").count()
+    }
+
+    /// Invariant: switches alternate correctly (every BGV→TFHE is eventually
+    /// followed by TFHE→BGV, never two of the same direction in a row).
+    pub fn validate(&self) -> bool {
+        let mut cur = System::Bgv;
+        for s in &self.steps {
+            match s.switch {
+                "BGV-TFHE" => {
+                    if cur != System::Bgv {
+                        return false;
+                    }
+                    cur = System::Tfhe;
+                }
+                "TFHE-BGV" => {
+                    if cur != System::Tfhe {
+                        return false;
+                    }
+                    cur = System::Bgv;
+                }
+                _ => {}
+            }
+        }
+        true
+    }
+}
+
+/// The paper's 3-layer MLP schedule.
+pub fn mlp_plan() -> Plan {
+    Plan::build(&[
+        ("FC1".into(), LayerKind::Fc { trainable: true }),
+        ("Act1".into(), LayerKind::Relu),
+        ("FC2".into(), LayerKind::Fc { trainable: true }),
+        ("Act2".into(), LayerKind::Relu),
+        ("FC3".into(), LayerKind::Fc { trainable: true }),
+        ("Act3".into(), LayerKind::Softmax),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_plan_alternates_switches() {
+        let plan = mlp_plan();
+        assert!(plan.validate());
+        // forward: 3 FC→Act boundaries ×2 directions = 6 switches, plus the
+        // backward activations' boundaries.
+        assert!(plan.switch_count() >= 6);
+        // activations run on TFHE, FCs on BGV
+        for s in &plan.steps {
+            if s.name.starts_with("Act") && !s.name.contains("error") {
+                assert_eq!(s.system, System::Tfhe, "{}", s.name);
+            }
+            if s.name.starts_with("FC") {
+                assert_eq!(s.system, System::Bgv, "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_cnn_plan_has_no_conv_gradients() {
+        let plan = Plan::build(&[
+            ("Conv1".into(), LayerKind::Conv { trainable: false }),
+            ("BN1".into(), LayerKind::BatchNorm),
+            ("Act1".into(), LayerKind::Relu),
+            ("Pool1".into(), LayerKind::AvgPool),
+            ("FC1".into(), LayerKind::Fc { trainable: true }),
+            ("Act3".into(), LayerKind::Softmax),
+        ]);
+        assert!(plan.validate());
+        assert!(!plan.steps.iter().any(|s| s.name == "Conv1-gradient"));
+        assert!(plan.steps.iter().any(|s| s.name == "FC1-gradient"));
+    }
+}

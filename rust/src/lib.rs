@@ -1,0 +1,33 @@
+//! # Glyph — training DNNs on encrypted data (NeurIPS 2020 reproduction)
+//!
+//! Glyph trains neural networks on fully-homomorphically-encrypted data by
+//! running nonlinear activations in the logic-friendly TFHE cryptosystem,
+//! MAC-heavy layers in the vector-arithmetic-friendly BGV cryptosystem, and
+//! homomorphically *switching* ciphertexts between the two at every layer
+//! boundary. Transfer learning keeps convolution weights in plaintext so the
+//! expensive ciphertext×ciphertext convolutions become ciphertext×plaintext.
+//!
+//! Crate layout (see DESIGN.md for the full inventory):
+//!
+//! * [`math`] — modular arithmetic, negacyclic NTT, torus FFT, RNS, RNG.
+//! * [`tfhe`] — torus32 TFHE: LWE/TRLWE/TRGSW, bootstrapping, gates.
+//! * [`bgv`] — RNS leveled BGV with batch-in-coefficients packing.
+//! * [`switch`] — the BGV↔TFHE cryptosystem switch (the paper's §4.2).
+//! * [`nn`] — encrypted NN layers (FC/conv/pool/BN, TFHE ReLU/softmax).
+//! * [`train`] — FHE-SGD training loops: FHESGD baseline, Glyph, transfer.
+//! * [`coordinator`] — scheduling, thread-pool execution, HOP metrics,
+//!   calibrated cost model that regenerates the paper's tables.
+//! * [`runtime`] — PJRT loader/executor for the AOT JAX/Pallas artifacts.
+//! * [`data`] — dataset loaders and deterministic synthetic fallbacks.
+//! * [`bench_util`] — the hand-rolled bench harness used by `cargo bench`.
+
+pub mod bench_util;
+pub mod bgv;
+pub mod coordinator;
+pub mod data;
+pub mod math;
+pub mod nn;
+pub mod runtime;
+pub mod switch;
+pub mod tfhe;
+pub mod train;

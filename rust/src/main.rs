@@ -1,0 +1,120 @@
+//! `glyph` — the L3 coordinator CLI.
+//!
+//! Subcommands (hand-rolled parsing; the vendored crate set has no clap):
+//!
+//! * `info`                — parameters, profiles, artifact status
+//! * `plan`                — print the MLP cryptosystem schedule (Table-3 Switch column)
+//! * `microbench [--full]` — per-op latencies (Table 1, ours vs paper)
+//! * `tables [--measured]` — regenerate Tables 2/3/4 (paper-calibrated by default)
+//! * `train-mlp [--steps N] [--batch B]` — reduced-scale encrypted MLP training
+//!
+//! The `examples/` binaries are the full experiment drivers.
+
+use glyph::coordinator::{cost, scheduler};
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::nn::tensor::{EncTensor, PackOrder};
+use glyph::train::{GlyphMlp, MlpConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("info");
+    let flag = |name: &str| args.iter().any(|a| a == name);
+    let opt = |name: &str, default: usize| -> usize {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    };
+
+    match cmd {
+        "info" => {
+            println!("Glyph reproduction — fast and accurate DNN training on encrypted data");
+            println!("BGV (MAC profile): {:?}", glyph::bgv::BgvParams::mac_params().primes);
+            println!("TFHE gate profile n=560 N=1024; extract profile N=4096");
+            let have = std::path::Path::new("artifacts/mlp_train_step.hlo.txt").exists();
+            println!("artifacts: {}", if have { "built" } else { "missing (run `make artifacts`)" });
+            println!("threads available: {}", glyph::coordinator::max_threads());
+        }
+        "plan" => {
+            let plan = scheduler::mlp_plan();
+            println!("{:<16} {:<6} switch", "step", "system");
+            for s in &plan.steps {
+                println!("{:<16} {:<6?} {}", s.name, s.system, s.switch);
+            }
+            println!("switches: {} (valid: {})", plan.switch_count(), plan.validate());
+        }
+        "microbench" => {
+            let test_scale = !flag("--full");
+            eprintln!("measuring per-op latencies ({} profile)…", if test_scale { "test" } else { "default" });
+            let ours = cost::OpLatencies::measure(test_scale);
+            let paper = cost::OpLatencies::paper();
+            println!("| op | ours (s) | paper (s) |");
+            println!("|---|---|---|");
+            println!("| MultCC | {:.6} | {:.3} |", ours.mult_cc, paper.mult_cc);
+            println!("| MultCP | {:.6} | {:.3} |", ours.mult_cp, paper.mult_cp);
+            println!("| AddCC | {:.6} | {:.4} |", ours.add_cc, paper.add_cc);
+            println!("| TLU | {:.4} | {:.1} |", ours.tlu, paper.tlu);
+            println!("| ReLU/value | {:.4} | {:.2} |", ours.relu_value, paper.relu_value);
+            println!("| softmax/value | {:.4} | {:.2} |", ours.softmax_value, paper.softmax_value);
+            println!("| switch B2T/value | {:.6} | {:.4} |", ours.switch_b2t_value, paper.switch_b2t_value);
+            println!("| switch T2B/value | {:.6} | {:.4} |", ours.switch_t2b_value, paper.switch_t2b_value);
+        }
+        "tables" => {
+            let lat = if flag("--measured") {
+                eprintln!("measuring (this builds full-profile keys)…");
+                cost::OpLatencies::measure(!flag("--full"))
+            } else {
+                cost::OpLatencies::paper()
+            };
+            let dims = [784, 128, 32, 10];
+            println!("{}", cost::to_markdown("Table 2: FHESGD MLP (MNIST)", &cost::mlp_table(&dims, cost::Scheme::Fhesgd, &lat)));
+            println!("{}", cost::to_markdown("Table 3: Glyph MLP (MNIST)", &cost::mlp_table(&dims, cost::Scheme::GlyphMlp, &lat)));
+            println!("{}", cost::to_markdown("Table 4: Glyph CNN + TL (MNIST)", &cost::cnn_table(&cost::CnnShape::paper_mnist(), &lat)));
+        }
+        "train-mlp" => {
+            let steps = opt("--steps", 2);
+            let batch = opt("--batch", 4);
+            eprintln!("encrypted MLP training, test profile, batch={batch}, steps={steps}");
+            let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260710);
+            let mut rng = glyph::math::GlyphRng::new(1);
+            let mut mlp = GlyphMlp::new_random(MlpConfig::tiny(16, 8, 4), &mut client, &mut rng);
+            let ds = glyph::data::synthetic_digits(batch * steps, 5, "cli");
+            for step in 0..steps {
+                // 4×4 center crop as 16 features
+                let xs: Vec<Vec<i64>> = (0..16)
+                    .map(|f| {
+                        (0..batch)
+                            .map(|b| {
+                                let img = ds.image_i8(step * batch + b);
+                                let (y, x) = (12 + f / 4, 12 + f % 4);
+                                img[y * 28 + x]
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let x_cts = xs.iter().map(|v| client.encrypt_batch(v, 0)).collect();
+                let x = EncTensor::new(x_cts, vec![16], PackOrder::Forward, 0);
+                let labels: Vec<Vec<i64>> = (0..4)
+                    .map(|k| {
+                        let mut v: Vec<i64> = (0..batch)
+                            .map(|b| if ds.labels[step * batch + b] % 4 == k as usize { 127 } else { 0 })
+                            .collect();
+                        v.reverse();
+                        v
+                    })
+                    .collect();
+                let lab_cts = labels.iter().map(|v| client.encrypt_batch(v, 0)).collect();
+                let lab = EncTensor::new(lab_cts, vec![4], PackOrder::Reversed, 0);
+                let t0 = std::time::Instant::now();
+                mlp.train_step(&x, &lab, &engine);
+                println!("step {step}: {:.2}s  {}", t0.elapsed().as_secs_f64(), engine.counter.snapshot());
+            }
+        }
+        other => {
+            eprintln!("unknown command {other}; see src/main.rs docs");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

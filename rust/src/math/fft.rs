@@ -1,0 +1,296 @@
+//! Twisted complex-f64 FFT for negacyclic torus32 polynomial products.
+//!
+//! TFHE's blind rotation multiplies torus32 polynomials in
+//! `T_N[X]/(X^N + 1)` by small integer (gadget-decomposed) polynomials. We
+//! evaluate both at the primitive 2N-th roots of unity `ω^{4m+1}`
+//! (`m = 0..N/2`), which a single size-N/2 complex FFT reaches after the
+//! folding `z_j = (a_j + i·a_{j+N/2})·ω^j`. One negacyclic product is then
+//! two forward FFTs, a pointwise pass and one inverse FFT of size N/2.
+//!
+//! Precision budget: gadget digits are `|d| ≤ Bg/2 ≤ 2^6`, torus coefficients
+//! `< 2^32`; an external-product accumulation stays below
+//! `(k+1)·l·N/2·2^6·2^32 ≈ 2^51 < 2^53`, so f64 is exact enough for the
+//! decomposed operand ordering used here (asserted in tests).
+
+/// Minimal complex type (no vendored `num-complex`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cplx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cplx {
+    #[inline(always)]
+    pub fn new(re: f64, im: f64) -> Self {
+        Cplx { re, im }
+    }
+    #[inline(always)]
+    pub fn add(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re + o.re, self.im + o.im)
+    }
+    #[inline(always)]
+    pub fn sub(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re - o.re, self.im - o.im)
+    }
+    #[inline(always)]
+    pub fn mul(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+    #[inline(always)]
+    pub fn mul_add_acc(self, o: Cplx, acc: &mut Cplx) {
+        acc.re += self.re * o.re - self.im * o.im;
+        acc.im += self.re * o.im + self.im * o.re;
+    }
+}
+
+/// FFT plan for negacyclic products in `R[X]/(X^N+1)`, N a power of two ≥ 4.
+pub struct TorusFft {
+    /// Ring degree N.
+    pub n: usize,
+    /// FFT size M = N/2.
+    m: usize,
+    /// e^{+2πi k/M} twiddles, bit-reversal-friendly per-stage layout.
+    twiddles: Vec<Cplx>,
+    /// Twist ω^j = e^{iπ j/N}, j in 0..M.
+    twist: Vec<Cplx>,
+    /// Inverse twist ω^{-j} / M (folding the 1/M scale in).
+    inv_twist: Vec<Cplx>,
+    /// Scratch bit-reversal permutation.
+    bitrev: Vec<usize>,
+}
+
+impl TorusFft {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 4);
+        let m = n / 2;
+        let bits = m.trailing_zeros();
+        let mut twiddles = Vec::with_capacity(m.max(1));
+        // Per-stage twiddles: stage with half-size h uses e^{2πi k/(2h)}.
+        let mut h = 1;
+        while h < m {
+            for k in 0..h {
+                let ang = std::f64::consts::PI * (k as f64) / (h as f64);
+                twiddles.push(Cplx::new(ang.cos(), ang.sin()));
+            }
+            h <<= 1;
+        }
+        let twist = (0..m)
+            .map(|j| {
+                let ang = std::f64::consts::PI * (j as f64) / (n as f64);
+                Cplx::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        let inv_twist = (0..m)
+            .map(|j| {
+                let ang = -std::f64::consts::PI * (j as f64) / (n as f64);
+                let s = 1.0 / m as f64;
+                Cplx::new(ang.cos() * s, ang.sin() * s)
+            })
+            .collect();
+        let bitrev = (0..m).map(|i| i.reverse_bits() >> (usize::BITS - bits.max(1)) as usize).collect();
+        TorusFft { n, m, twiddles, twist, inv_twist, bitrev }
+    }
+
+    /// In-place size-M DFT with e^{+2πi/M} convention (DIT, natural in /
+    /// natural out via pre-permutation).
+    fn fft_inplace(&self, a: &mut [Cplx]) {
+        let m = self.m;
+        if m == 1 {
+            return;
+        }
+        // Bit-reverse permute.
+        for i in 0..m {
+            let j = self.bitrev[i];
+            if i < j {
+                a.swap(i, j);
+            }
+        }
+        let mut h = 1usize;
+        let mut tw_off = 0usize;
+        while h < m {
+            for start in (0..m).step_by(2 * h) {
+                for k in 0..h {
+                    let w = self.twiddles[tw_off + k];
+                    let u = a[start + k];
+                    let v = a[start + k + h].mul(w);
+                    a[start + k] = u.add(v);
+                    a[start + k + h] = u.sub(v);
+                }
+            }
+            tw_off += h;
+            h <<= 1;
+        }
+    }
+
+    /// Inverse of [`fft_inplace`] *without* the 1/M scale (the scale lives in
+    /// `inv_twist`): conjugate → forward → conjugate.
+    fn ifft_inplace(&self, a: &mut [Cplx]) {
+        for x in a.iter_mut() {
+            x.im = -x.im;
+        }
+        self.fft_inplace(a);
+        for x in a.iter_mut() {
+            x.im = -x.im;
+        }
+    }
+
+    /// Forward transform of a torus32 polynomial (coefficients centered).
+    pub fn forward_torus(&self, poly: &[u32]) -> Vec<Cplx> {
+        debug_assert_eq!(poly.len(), self.n);
+        let m = self.m;
+        let mut z: Vec<Cplx> = (0..m)
+            .map(|j| {
+                let re = poly[j] as i32 as f64;
+                let im = poly[j + m] as i32 as f64;
+                Cplx::new(re, im).mul(self.twist[j])
+            })
+            .collect();
+        self.fft_inplace(&mut z);
+        z
+    }
+
+    /// Forward transform of a small integer polynomial (e.g. gadget digits).
+    pub fn forward_int(&self, poly: &[i32]) -> Vec<Cplx> {
+        debug_assert_eq!(poly.len(), self.n);
+        let m = self.m;
+        let mut z: Vec<Cplx> = (0..m)
+            .map(|j| Cplx::new(poly[j] as f64, poly[j + m] as f64).mul(self.twist[j]))
+            .collect();
+        self.fft_inplace(&mut z);
+        z
+    }
+
+    /// Pointwise multiply-accumulate in the FFT domain.
+    pub fn mul_acc(&self, a: &[Cplx], b: &[Cplx], acc: &mut [Cplx]) {
+        for i in 0..self.m {
+            a[i].mul_add_acc(b[i], &mut acc[i]);
+        }
+    }
+
+    /// Inverse transform; result coefficients rounded and wrapped to torus32,
+    /// added into `out`.
+    pub fn inverse_add_to_torus(&self, freq: &[Cplx], out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.n);
+        let m = self.m;
+        let mut z = freq.to_vec();
+        self.ifft_inplace(&mut z);
+        for j in 0..m {
+            let c = z[j].mul(self.inv_twist[j]);
+            out[j] = out[j].wrapping_add(c.re.round() as i64 as u32);
+            out[j + m] = out[j + m].wrapping_add(c.im.round() as i64 as u32);
+        }
+    }
+
+    /// Convenience: full negacyclic product `int_poly * torus_poly`.
+    pub fn negacyclic_mul_int_torus(&self, ints: &[i32], torus: &[u32]) -> Vec<u32> {
+        let fa = self.forward_int(ints);
+        let fb = self.forward_torus(torus);
+        let mut acc = vec![Cplx::default(); self.m];
+        self.mul_acc(&fa, &fb, &mut acc);
+        let mut out = vec![0u32; self.n];
+        self.inverse_add_to_torus(&acc, &mut out);
+        out
+    }
+}
+
+/// Reference schoolbook negacyclic `int × torus32` product (wrapping).
+pub fn negacyclic_mul_int_torus_naive(ints: &[i32], torus: &[u32]) -> Vec<u32> {
+    let n = ints.len();
+    let mut out = vec![0u32; n];
+    for i in 0..n {
+        if ints[i] == 0 {
+            continue;
+        }
+        for j in 0..n {
+            let prod = (ints[i] as i64).wrapping_mul(torus[j] as i32 as i64) as u32;
+            let k = i + j;
+            if k < n {
+                out[k] = out[k].wrapping_add(prod);
+            } else {
+                out[k - n] = out[k - n].wrapping_sub(prod);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::GlyphRng;
+
+    fn torus_dist(a: u32, b: u32) -> u32 {
+        let d = a.wrapping_sub(b);
+        d.min(d.wrapping_neg())
+    }
+
+    #[test]
+    fn matches_schoolbook_small_ints() {
+        for n in [8usize, 64, 1024] {
+            let fft = TorusFft::new(n);
+            let mut rng = GlyphRng::new(n as u64 + 1);
+            let ints: Vec<i32> = (0..n).map(|_| (rng.uniform_mod(127) as i32) - 63).collect();
+            let torus: Vec<u32> = (0..n).map(|_| rng.torus32()).collect();
+            let fast = fft.negacyclic_mul_int_torus(&ints, &torus);
+            let slow = negacyclic_mul_int_torus_naive(&ints, &torus);
+            for i in 0..n {
+                // f64 rounding may differ by a few ulps of the torus.
+                assert!(torus_dist(fast[i], slow[i]) < 1 << 6, "n={n} i={i}: {} vs {}", fast[i], slow[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn multiply_by_one_is_identity() {
+        let n = 256;
+        let fft = TorusFft::new(n);
+        let mut one = vec![0i32; n];
+        one[0] = 1;
+        let mut rng = GlyphRng::new(2);
+        let torus: Vec<u32> = (0..n).map(|_| rng.torus32()).collect();
+        let out = fft.negacyclic_mul_int_torus(&one, &torus);
+        for i in 0..n {
+            assert!(torus_dist(out[i], torus[i]) < 4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn multiply_by_x_rotates_negacyclically() {
+        let n = 64;
+        let fft = TorusFft::new(n);
+        let mut x = vec![0i32; n];
+        x[1] = 1;
+        let mut torus = vec![0u32; n];
+        torus[n - 1] = 1 << 30;
+        let out = fft.negacyclic_mul_int_torus(&x, &torus);
+        // X * X^{N-1} = -1: coefficient 0 becomes -2^30.
+        assert!(torus_dist(out[0], (1u32 << 30).wrapping_neg()) < 4);
+    }
+
+    #[test]
+    fn accumulation_precision_external_product_scale() {
+        // Worst-case magnitude of a TRGSW external product: 6 accumulated
+        // products of |d|<=64 by full-torus polys must stay exact-ish.
+        let n = 1024;
+        let fft = TorusFft::new(n);
+        let mut rng = GlyphRng::new(77);
+        let mut acc = vec![Cplx::default(); n / 2];
+        let mut ref_out = vec![0u32; n];
+        for _ in 0..6 {
+            let ints: Vec<i32> = (0..n).map(|_| (rng.uniform_mod(129) as i32) - 64).collect();
+            let torus: Vec<u32> = (0..n).map(|_| rng.torus32()).collect();
+            let fa = fft.forward_int(&ints);
+            let fb = fft.forward_torus(&torus);
+            fft.mul_acc(&fa, &fb, &mut acc);
+            let slow = negacyclic_mul_int_torus_naive(&ints, &torus);
+            for i in 0..n {
+                ref_out[i] = ref_out[i].wrapping_add(slow[i]);
+            }
+        }
+        let mut fast = vec![0u32; n];
+        fft.inverse_add_to_torus(&acc, &mut fast);
+        for i in 0..n {
+            assert!(torus_dist(fast[i], ref_out[i]) < 1 << 10, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Mathematical substrate shared by both cryptosystems.
+//!
+//! * [`modarith`] — `u64` modular arithmetic (mul/pow/inv via `u128`),
+//!   deterministic Miller–Rabin, NTT-prime search.
+//! * [`ntt`] — in-place negacyclic number-theoretic transform over an NTT
+//!   prime (the BGV polynomial-multiplication hot path).
+//! * [`fft`] — twisted complex-f64 FFT for negacyclic torus32 polynomial
+//!   products (the TFHE blind-rotation hot path).
+//! * [`poly`] — RNS residue polynomials and the small big-integer used for
+//!   CRT reconstruction at decryption.
+//! * [`rng`] — xoshiro256++ PRNG plus uniform/ternary/discrete-Gaussian
+//!   samplers (the vendored crate set has no `rand`, so we own this).
+
+pub mod fft;
+pub mod modarith;
+pub mod ntt;
+pub mod poly;
+pub mod rng;
+
+pub use modarith::{inv_mod, mul_mod, pow_mod};
+pub use ntt::NttTable;
+pub use poly::{BigUintSmall, RnsContext, RnsPoly};
+pub use rng::GlyphRng;

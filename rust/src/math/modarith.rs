@@ -1,0 +1,246 @@
+//! `u64` modular arithmetic via `u128` intermediates, deterministic
+//! Miller–Rabin primality, and NTT-friendly prime generation.
+//!
+//! All BGV moduli are primes `p ≡ 1 (mod 2^26)` (DESIGN.md §2.2): this makes
+//! them automatically NTT-friendly for any ring degree `N ≤ 2^25` *and*
+//! guarantees `q = Π p_i ≡ 1 (mod t)` for the power-of-two plaintext modulus
+//! `t ≤ 2^26`, which is what gives Glyph its noise-free LSB↔MSB switch.
+
+/// `a * b mod m` without overflow.
+#[inline(always)]
+pub fn mul_mod(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+/// `a + b mod m` (inputs must already be `< m`).
+#[inline(always)]
+pub fn add_mod(a: u64, b: u64, m: u64) -> u64 {
+    let s = a.wrapping_add(b);
+    if s >= m || s < a {
+        s.wrapping_sub(m)
+    } else {
+        s
+    }
+}
+
+/// `a - b mod m` (inputs must already be `< m`).
+#[inline(always)]
+pub fn sub_mod(a: u64, b: u64, m: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a.wrapping_sub(b).wrapping_add(m)
+    }
+}
+
+/// `a^e mod m` by square-and-multiply.
+pub fn pow_mod(mut a: u64, mut e: u64, m: u64) -> u64 {
+    let mut r: u64 = 1 % m;
+    a %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            r = mul_mod(r, a, m);
+        }
+        a = mul_mod(a, a, m);
+        e >>= 1;
+    }
+    r
+}
+
+/// Modular inverse for prime `m` (Fermat). Panics if `a ≡ 0`.
+pub fn inv_mod(a: u64, m: u64) -> u64 {
+    assert!(a % m != 0, "inv_mod of zero");
+    pow_mod(a, m - 2, m)
+}
+
+/// Deterministic Miller–Rabin, valid for all `u64` (fixed witness set).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n % p == 0 {
+            return n == p;
+        }
+    }
+    let mut d = n - 1;
+    let mut s = 0u32;
+    while d & 1 == 0 {
+        d >>= 1;
+        s += 1;
+    }
+    // This witness set is proven sufficient for n < 3.3e24.
+    'w: for &a in &[2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'w;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Smallest generator of `Z_p^*` for prime `p` (trial over small candidates).
+pub fn primitive_root(p: u64) -> u64 {
+    // Factor p-1 by trial division (p-1 = 2^k * odd-smooth for our primes).
+    let mut factors = Vec::new();
+    let mut m = p - 1;
+    let mut f = 2u64;
+    while f * f <= m {
+        if m % f == 0 {
+            factors.push(f);
+            while m % f == 0 {
+                m /= f;
+            }
+        }
+        f += 1;
+    }
+    if m > 1 {
+        factors.push(m);
+    }
+    'g: for g in 2..p {
+        for &q in &factors {
+            if pow_mod(g, (p - 1) / q, p) == 1 {
+                continue 'g;
+            }
+        }
+        return g;
+    }
+    unreachable!("no primitive root found for prime {p}")
+}
+
+/// A primitive `order`-th root of unity mod prime `p` (`order | p-1`).
+pub fn root_of_unity(order: u64, p: u64) -> u64 {
+    assert!((p - 1) % order == 0, "order {order} does not divide p-1");
+    let g = primitive_root(p);
+    let w = pow_mod(g, (p - 1) / order, p);
+    debug_assert_eq!(pow_mod(w, order, p), 1);
+    debug_assert_ne!(pow_mod(w, order / 2, p), 1);
+    w
+}
+
+/// Generate `count` distinct primes `≡ 1 (mod modulus_align)` descending from
+/// just below `below` (e.g. `below = 2^31` for 31-bit RNS limbs).
+pub fn gen_ntt_primes(count: usize, modulus_align: u64, below: u64) -> Vec<u64> {
+    let mut primes = Vec::with_capacity(count);
+    let mut k = (below - 1) / modulus_align;
+    while primes.len() < count {
+        let candidate = k
+            .checked_mul(modulus_align)
+            .and_then(|v| v.checked_add(1))
+            .expect("prime candidate overflow");
+        if is_prime(candidate) {
+            primes.push(candidate);
+        }
+        assert!(k > 1, "ran out of prime candidates");
+        k -= 1;
+    }
+    primes
+}
+
+/// Centered representative of `x mod m` in `(-m/2, m/2]`, as i64 when small.
+#[inline]
+pub fn center(x: u64, m: u64) -> i64 {
+    if x > m / 2 {
+        -((m - x) as i64)
+    } else {
+        x as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mulmod_matches_u128() {
+        let m = 0xffff_fffd_0000_0001u64 % (1u64 << 62);
+        let mut x = 0x1234_5678u64;
+        for _ in 0..1000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let a = x % m;
+            let b = x.rotate_left(17) % m;
+            assert_eq!(mul_mod(a, b, m) as u128, (a as u128 * b as u128) % m as u128);
+        }
+    }
+
+    #[test]
+    fn addsub_roundtrip() {
+        let m = 469762049u64;
+        for a in [0u64, 1, m - 1, m / 2, 12345] {
+            for b in [0u64, 1, m - 1, m / 2, 54321] {
+                let s = add_mod(a, b, m);
+                assert_eq!(sub_mod(s, b, m), a);
+                assert!(s < m);
+            }
+        }
+    }
+
+    #[test]
+    fn powmod_known() {
+        assert_eq!(pow_mod(2, 10, 1_000_003), 1024);
+        assert_eq!(pow_mod(7, 0, 11), 1);
+        assert_eq!(pow_mod(5, 1_000_002, 1_000_003), 1); // Fermat
+    }
+
+    #[test]
+    fn invmod_property() {
+        let p = 1811939329u64; // 27*2^26+1
+        for a in [1u64, 2, 3, 65537, p - 1, 123456789 % p] {
+            assert_eq!(mul_mod(a, inv_mod(a, p), p), 1);
+        }
+    }
+
+    #[test]
+    fn primality_known_values() {
+        assert!(is_prime(2));
+        assert!(is_prime(469762049)); // 7 * 2^26 + 1
+        assert!(is_prime(1811939329)); // 27 * 2^26 + 1
+        assert!(!is_prime(1006632961)); // 31 * 32472031
+        assert!(!is_prime(1));
+        assert!(!is_prime(469762049 * 2));
+        assert!(!is_prime((1u64 << 31) - 3));
+        assert!(is_prime((1u64 << 31) - 1)); // Mersenne M31
+    }
+
+    #[test]
+    fn gen_primes_are_aligned_distinct() {
+        let align = 1u64 << 26;
+        let ps = gen_ntt_primes(4, align, u32::MAX as u64 + 1);
+        assert_eq!(ps.len(), 4);
+        for (i, &p) in ps.iter().enumerate() {
+            assert!(is_prime(p));
+            assert_eq!(p % align, 1);
+            assert!(p < (1u64 << 32));
+            for &q in &ps[..i] {
+                assert_ne!(p, q);
+            }
+        }
+    }
+
+    #[test]
+    fn roots_of_unity_have_exact_order() {
+        let p = 469762049u64;
+        for log_order in [1u64, 4, 12, 20] {
+            let order = 1u64 << log_order;
+            let w = root_of_unity(order, p);
+            assert_eq!(pow_mod(w, order, p), 1);
+            assert_ne!(pow_mod(w, order / 2, p), 1);
+        }
+    }
+
+    #[test]
+    fn center_is_symmetric() {
+        let m = 101u64;
+        assert_eq!(center(0, m), 0);
+        assert_eq!(center(50, m), 50);
+        assert_eq!(center(51, m), -50);
+        assert_eq!(center(100, m), -1);
+    }
+}

@@ -1,0 +1,281 @@
+//! Negacyclic number-theoretic transform over an NTT prime.
+//!
+//! Polynomials live in `Z_p[X]/(X^N + 1)` with `N` a power of two and
+//! `p ≡ 1 (mod 2N)`. We use the fused ψ-twisted Cooley–Tukey / Gentleman–
+//! Sande pair (Longa–Naehrig): the 2N-th root ψ is folded into the butterfly
+//! tables so no separate pre/post-twist pass is needed. This is the single
+//! hottest loop of the BGV side — every MultCC/MultCP is 2–3 NTTs plus a
+//! pointwise pass (see EXPERIMENTS.md §Perf for the optimization log).
+
+use super::modarith::{add_mod, inv_mod, mul_mod, root_of_unity, sub_mod};
+
+/// Precomputed tables for one `(N, p)` pair.
+#[derive(Clone)]
+pub struct NttTable {
+    pub n: usize,
+    pub p: u64,
+    /// ψ^bitrev(i): forward butterfly twiddles (ψ a primitive 2N-th root).
+    psi_rev: Vec<u64>,
+    /// ψ^{-bitrev(i)}: inverse butterfly twiddles.
+    inv_psi_rev: Vec<u64>,
+    /// Shoup-precomputed companions: floor(w * 2^64 / p) for fast mul.
+    psi_rev_shoup: Vec<u64>,
+    inv_psi_rev_shoup: Vec<u64>,
+    /// N^{-1} mod p.
+    inv_n: u64,
+    inv_n_shoup: u64,
+    /// Barrett constant floor(2^64 / p) for fast pointwise reduction.
+    barrett: u64,
+}
+
+#[inline(always)]
+fn shoup(w: u64, p: u64) -> u64 {
+    (((w as u128) << 64) / p as u128) as u64
+}
+
+/// Barrett reduction of a 64-bit product modulo a < 2^32 prime:
+/// `q = ⌊t·⌊2^64/p⌋ / 2^64⌋`, remainder corrected at most twice.
+/// ~3× faster than the `u128 %` the compiler emits (EXPERIMENTS.md §Perf).
+#[inline(always)]
+fn barrett_mul(a: u64, b: u64, p: u64, barrett: u64) -> u64 {
+    let t = a.wrapping_mul(b); // exact: a,b < 2^32
+    let q = ((t as u128 * barrett as u128) >> 64) as u64;
+    let mut r = t.wrapping_sub(q.wrapping_mul(p));
+    while r >= p {
+        r -= p;
+    }
+    r
+}
+
+/// Shoup modular multiplication: `a * w mod p` with precomputed
+/// `w_shoup = floor(w * 2^64 / p)`. One u128 mul-high, no division.
+#[inline(always)]
+fn mul_shoup(a: u64, w: u64, w_shoup: u64, p: u64) -> u64 {
+    let q = ((a as u128 * w_shoup as u128) >> 64) as u64;
+    let r = a.wrapping_mul(w).wrapping_sub(q.wrapping_mul(p));
+    if r >= p {
+        r - p
+    } else {
+        r
+    }
+}
+
+fn bit_reverse(x: usize, bits: u32) -> usize {
+    x.reverse_bits() >> (usize::BITS - bits)
+}
+
+impl NttTable {
+    /// Build tables; `p` must be prime with `p ≡ 1 (mod 2N)`.
+    pub fn new(n: usize, p: u64) -> Self {
+        assert!(n.is_power_of_two(), "N must be a power of two");
+        assert_eq!((p - 1) % (2 * n as u64), 0, "p must be ≡ 1 mod 2N");
+        let bits = n.trailing_zeros();
+        let psi = root_of_unity(2 * n as u64, p);
+        let inv_psi = inv_mod(psi, p);
+        let mut psi_rev = vec![0u64; n];
+        let mut inv_psi_rev = vec![0u64; n];
+        let mut pw = 1u64;
+        let mut ipw = 1u64;
+        let mut psi_pows = vec![0u64; n];
+        let mut inv_psi_pows = vec![0u64; n];
+        for i in 0..n {
+            psi_pows[i] = pw;
+            inv_psi_pows[i] = ipw;
+            pw = mul_mod(pw, psi, p);
+            ipw = mul_mod(ipw, inv_psi, p);
+        }
+        for i in 0..n {
+            let r = bit_reverse(i, bits);
+            psi_rev[i] = psi_pows[r];
+            inv_psi_rev[i] = inv_psi_pows[r];
+        }
+        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup(w, p)).collect();
+        let inv_psi_rev_shoup = inv_psi_rev.iter().map(|&w| shoup(w, p)).collect();
+        let inv_n = inv_mod(n as u64, p);
+        NttTable {
+            n,
+            p,
+            psi_rev,
+            inv_psi_rev,
+            psi_rev_shoup,
+            inv_psi_rev_shoup,
+            inv_n,
+            inv_n_shoup: shoup(inv_n, p),
+            barrett: ((1u128 << 64) / p as u128) as u64,
+        }
+    }
+
+    /// In-place forward negacyclic NTT (CT, DIT). Input in natural order,
+    /// output in bit-reversed order (consumed only by `pointwise`+`inverse`).
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let p = self.p;
+        let mut t = self.n;
+        let mut m = 1usize;
+        while m < self.n {
+            t >>= 1;
+            for i in 0..m {
+                let w = self.psi_rev[m + i];
+                let ws = self.psi_rev_shoup[m + i];
+                let j1 = 2 * i * t;
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = mul_shoup(*y, w, ws, p);
+                    *x = add_mod(u, v, p);
+                    *y = sub_mod(u, v, p);
+                }
+            }
+            m <<= 1;
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (GS, DIF) incl. the 1/N scale.
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let p = self.p;
+        let mut t = 1usize;
+        let mut m = self.n;
+        while m > 1 {
+            let h = m >> 1;
+            for i in 0..h {
+                let w = self.inv_psi_rev[h + i];
+                let ws = self.inv_psi_rev_shoup[h + i];
+                let j1 = 2 * i * t;
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    *x = add_mod(u, v, p);
+                    *y = mul_shoup(sub_mod(u, v, p), w, ws, p);
+                }
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = mul_shoup(*x, self.inv_n, self.inv_n_shoup, p);
+        }
+    }
+
+    /// Pointwise product `a[i] * b[i] mod p` into `a` (Barrett-reduced).
+    pub fn pointwise(&self, a: &mut [u64], b: &[u64]) {
+        let p = self.p;
+        let br = self.barrett;
+        for (x, &y) in a.iter_mut().zip(b.iter()) {
+            *x = barrett_mul(*x, y, p, br);
+        }
+    }
+
+    /// Pointwise multiply-accumulate `acc[i] += a[i]*b[i] mod p`.
+    pub fn pointwise_acc(&self, acc: &mut [u64], a: &[u64], b: &[u64]) {
+        let p = self.p;
+        let br = self.barrett;
+        for i in 0..acc.len() {
+            acc[i] = add_mod(acc[i], barrett_mul(a[i], b[i], p, br), p);
+        }
+    }
+
+    /// Full negacyclic polynomial product (convenience; the hot paths keep
+    /// operands in the NTT domain instead).
+    pub fn negacyclic_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let mut fa = a.to_vec();
+        let mut fb = b.to_vec();
+        self.forward(&mut fa);
+        self.forward(&mut fb);
+        self.pointwise(&mut fa, &fb);
+        self.inverse(&mut fa);
+        fa
+    }
+}
+
+/// Schoolbook negacyclic product (reference oracle for tests).
+pub fn negacyclic_mul_naive(a: &[u64], b: &[u64], p: u64) -> Vec<u64> {
+    let n = a.len();
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        if a[i] == 0 {
+            continue;
+        }
+        for j in 0..n {
+            let prod = mul_mod(a[i], b[j], p);
+            let k = i + j;
+            if k < n {
+                out[k] = add_mod(out[k], prod, p);
+            } else {
+                out[k - n] = sub_mod(out[k - n], prod, p);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::GlyphRng;
+
+    const P: u64 = 469762049; // 7 * 2^26 + 1
+
+    #[test]
+    fn roundtrip_identity() {
+        let t = NttTable::new(256, P);
+        let mut rng = GlyphRng::new(7);
+        let a: Vec<u64> = (0..256).map(|_| rng.next_u64() % P).collect();
+        let mut b = a.clone();
+        t.forward(&mut b);
+        t.inverse(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn matches_schoolbook() {
+        for n in [8usize, 64, 256] {
+            let t = NttTable::new(n, P);
+            let mut rng = GlyphRng::new(n as u64);
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % P).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % P).collect();
+            assert_eq!(t.negacyclic_mul(&a, &b), negacyclic_mul_naive(&a, &b, P), "n={n}");
+        }
+    }
+
+    #[test]
+    fn x_times_xn_minus_1_wraps_negatively() {
+        // X * X^{N-1} = X^N = -1 in the negacyclic ring.
+        let n = 64;
+        let t = NttTable::new(n, P);
+        let mut a = vec![0u64; n];
+        a[1] = 1;
+        let mut b = vec![0u64; n];
+        b[n - 1] = 1;
+        let c = t.negacyclic_mul(&a, &b);
+        assert_eq!(c[0], P - 1);
+        assert!(c[1..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn pointwise_acc_accumulates() {
+        let t = NttTable::new(8, P);
+        let mut acc = vec![1u64; 8];
+        t.pointwise_acc(&mut acc, &[2; 8], &[3; 8]);
+        assert!(acc.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn linearity_property() {
+        // NTT(a + b) == NTT(a) + NTT(b) pointwise.
+        let n = 128;
+        let t = NttTable::new(n, P);
+        let mut rng = GlyphRng::new(99);
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % P).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % P).collect();
+        let mut sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| add_mod(x, y, P)).collect();
+        let (mut fa, mut fb) = (a, b);
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        t.forward(&mut sum);
+        for i in 0..n {
+            assert_eq!(sum[i], add_mod(fa[i], fb[i], P));
+        }
+    }
+}

@@ -1,0 +1,577 @@
+//! RNS residue polynomials over `Z_q[X]/(X^N+1)` with `q = Π q_i`, plus the
+//! small big-integer used for CRT reconstruction at decryption time.
+//!
+//! All BGV ciphertext arithmetic happens limb-wise on the RNS residues; the
+//! only places the composite modulus `q` materializes are decryption (CRT →
+//! centered → mod t) and the exact scalar maps of the cryptosystem switch.
+
+use super::modarith::{add_mod, inv_mod, mul_mod, sub_mod};
+use super::ntt::NttTable;
+use super::rng::GlyphRng;
+use std::sync::Arc;
+
+// --------------------------------------------------------------------------
+// Minimal little-endian big unsigned integer (no vendored bigint crate).
+// --------------------------------------------------------------------------
+
+/// Little-endian base-2^64 unsigned integer. Sized for ≤ a dozen limbs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUintSmall {
+    pub limbs: Vec<u64>,
+}
+
+impl BigUintSmall {
+    pub fn zero() -> Self {
+        BigUintSmall { limbs: vec![] }
+    }
+
+    pub fn from_u64(x: u64) -> Self {
+        if x == 0 {
+            Self::zero()
+        } else {
+            BigUintSmall { limbs: vec![x] }
+        }
+    }
+
+    fn normalize(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn cmp_big(&self, other: &Self) -> std::cmp::Ordering {
+        use std::cmp::Ordering::*;
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Equal => continue,
+                o => return o,
+            }
+        }
+        Equal
+    }
+
+    pub fn add_assign(&mut self, other: &Self) {
+        let n = self.limbs.len().max(other.limbs.len());
+        self.limbs.resize(n, 0);
+        let mut carry = 0u64;
+        for i in 0..n {
+            let o = other.limbs.get(i).copied().unwrap_or(0);
+            let (s1, c1) = self.limbs[i].overflowing_add(o);
+            let (s2, c2) = s1.overflowing_add(carry);
+            self.limbs[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            self.limbs.push(carry);
+        }
+    }
+
+    /// `self -= other`; panics on underflow.
+    pub fn sub_assign(&mut self, other: &Self) {
+        debug_assert!(self.cmp_big(other) != std::cmp::Ordering::Less);
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let o = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(o);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            self.limbs[i] = d2;
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        self.normalize();
+    }
+
+    pub fn mul_u64(&self, x: u64) -> Self {
+        if x == 0 || self.is_zero() {
+            return Self::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry = 0u128;
+        for &l in &self.limbs {
+            let prod = l as u128 * x as u128 + carry;
+            out.push(prod as u64);
+            carry = prod >> 64;
+        }
+        if carry > 0 {
+            out.push(carry as u64);
+        }
+        BigUintSmall { limbs: out }
+    }
+
+    /// Remainder modulo a `u64`.
+    pub fn rem_u64(&self, m: u64) -> u64 {
+        let mut r = 0u128;
+        for &l in self.limbs.iter().rev() {
+            r = ((r << 64) | l as u128) % m as u128;
+        }
+        r as u64
+    }
+
+    /// Low 64 bits (0 if zero).
+    pub fn low_u64(&self) -> u64 {
+        self.limbs.first().copied().unwrap_or(0)
+    }
+
+    /// Halve (floor), used for q/2 comparisons.
+    pub fn shr1(&self) -> Self {
+        let mut out = self.limbs.clone();
+        let mut carry = 0u64;
+        for l in out.iter_mut().rev() {
+            let new_carry = *l & 1;
+            *l = (*l >> 1) | (carry << 63);
+            carry = new_carry;
+        }
+        let mut b = BigUintSmall { limbs: out };
+        b.normalize();
+        b
+    }
+}
+
+// --------------------------------------------------------------------------
+// RNS context and polynomials
+// --------------------------------------------------------------------------
+
+/// Shared precomputation for a ring `Z_q[X]/(X^N+1)`, `q = Π q_i`.
+pub struct RnsContext {
+    pub n: usize,
+    pub primes: Vec<u64>,
+    pub ntts: Vec<NttTable>,
+    /// q as a big integer, and q/2 for centering.
+    pub q_big: BigUintSmall,
+    pub q_half: BigUintSmall,
+    /// CRT reconstruction: punctured products q/q_i (big) and
+    /// ((q/q_i)^{-1} mod q_i).
+    pub q_over_qi: Vec<BigUintSmall>,
+    pub q_over_qi_inv: Vec<u64>,
+    /// q mod q_i is 0; but for scalar maps we need (q-1)/t etc. computed by
+    /// callers via `scalar_to_rns`.
+    pub qi_inv_pairs: Vec<Vec<u64>>, // qi_inv_pairs[i][j] = q_i^{-1} mod q_j (i<j unused half filled)
+}
+
+impl RnsContext {
+    pub fn new(n: usize, primes: &[u64]) -> Arc<Self> {
+        let ntts: Vec<NttTable> = primes.iter().map(|&p| NttTable::new(n, p)).collect();
+        let mut q_big = BigUintSmall::from_u64(1);
+        for &p in primes {
+            q_big = q_big.mul_u64(p);
+        }
+        let q_half = q_big.shr1();
+        let mut q_over_qi = Vec::with_capacity(primes.len());
+        let mut q_over_qi_inv = Vec::with_capacity(primes.len());
+        for (i, &pi) in primes.iter().enumerate() {
+            let mut prod = BigUintSmall::from_u64(1);
+            for (j, &pj) in primes.iter().enumerate() {
+                if i != j {
+                    prod = prod.mul_u64(pj);
+                }
+            }
+            let inv = inv_mod(prod.rem_u64(pi), pi);
+            q_over_qi.push(prod);
+            q_over_qi_inv.push(inv);
+        }
+        let qi_inv_pairs = primes
+            .iter()
+            .map(|&pi| {
+                primes
+                    .iter()
+                    .map(|&pj| if pi % pj == 0 { 0 } else { inv_mod(pi % pj, pj) })
+                    .collect()
+            })
+            .collect();
+        Arc::new(RnsContext { n, primes: primes.to_vec(), ntts, q_big, q_half, q_over_qi, q_over_qi_inv, qi_inv_pairs })
+    }
+
+    pub fn num_primes(&self) -> usize {
+        self.primes.len()
+    }
+
+    /// Residues of a non-negative scalar `< q` given as big integer.
+    pub fn scalar_to_rns_big(&self, x: &BigUintSmall) -> Vec<u64> {
+        self.primes.iter().map(|&p| x.rem_u64(p)).collect()
+    }
+
+    /// Residues of a small signed scalar.
+    pub fn scalar_to_rns_i64(&self, x: i64) -> Vec<u64> {
+        self.primes
+            .iter()
+            .map(|&p| if x >= 0 { (x as u64) % p } else { p - ((x.unsigned_abs()) % p) })
+            .collect()
+    }
+
+    /// `(q - 1) / t` as RNS residues (Δ of DESIGN.md §2.2); `t` must divide
+    /// `q - 1`, which our prime alignment guarantees for `t | 2^26`.
+    pub fn delta_rns(&self, t: u64) -> Vec<u64> {
+        // q ≡ 1 mod t, so (q-1)/t is integral. Compute via bigint.
+        let mut qm1 = self.q_big.clone();
+        qm1.sub_assign(&BigUintSmall::from_u64(1));
+        debug_assert_eq!(qm1.rem_u64(t), 0);
+        // Divide by t (power of two): shift.
+        debug_assert!(t.is_power_of_two());
+        let mut d = qm1;
+        for _ in 0..t.trailing_zeros() {
+            d = d.shr1();
+        }
+        self.scalar_to_rns_big(&d)
+    }
+
+    /// CRT-reconstruct one coefficient to its centered value mod t
+    /// (t a power of two). Returns a value in `[0, t)`.
+    pub fn crt_coeff_mod_t(&self, residues: &[u64], t: u64) -> u64 {
+        // x = Σ (x_i * inv_i mod q_i) * (q/q_i)   (mod q)
+        let mut acc = BigUintSmall::zero();
+        for i in 0..self.primes.len() {
+            let coef = mul_mod(residues[i], self.q_over_qi_inv[i], self.primes[i]);
+            acc.add_assign(&self.q_over_qi[i].mul_u64(coef));
+        }
+        // Reduce: acc < L * q, subtract q at most L times.
+        while acc.cmp_big(&self.q_big) != std::cmp::Ordering::Less {
+            acc.sub_assign(&self.q_big);
+        }
+        // Centered mod t.
+        let mask = t - 1;
+        if acc.cmp_big(&self.q_half) != std::cmp::Ordering::Greater {
+            acc.low_u64() & mask
+        } else {
+            let mut neg = self.q_big.clone();
+            neg.sub_assign(&acc);
+            (t - (neg.low_u64() & mask)) & mask
+        }
+    }
+
+    /// CRT-reconstruct one coefficient to a centered `i128` (requires
+    /// q < 2^127; only used in tests/diagnostics at small parameters).
+    pub fn crt_coeff_centered_i128(&self, residues: &[u64]) -> i128 {
+        let mut acc = BigUintSmall::zero();
+        for i in 0..self.primes.len() {
+            let coef = mul_mod(residues[i], self.q_over_qi_inv[i], self.primes[i]);
+            acc.add_assign(&self.q_over_qi[i].mul_u64(coef));
+        }
+        while acc.cmp_big(&self.q_big) != std::cmp::Ordering::Less {
+            acc.sub_assign(&self.q_big);
+        }
+        let to_i128 = |b: &BigUintSmall| -> i128 {
+            let lo = b.limbs.first().copied().unwrap_or(0) as i128;
+            let hi = b.limbs.get(1).copied().unwrap_or(0) as i128;
+            assert!(b.limbs.len() <= 2, "value too large for i128 diagnostics");
+            (hi << 64) | lo
+        };
+        if acc.cmp_big(&self.q_half) != std::cmp::Ordering::Greater {
+            to_i128(&acc)
+        } else {
+            let mut neg = self.q_big.clone();
+            neg.sub_assign(&acc);
+            -to_i128(&neg)
+        }
+    }
+}
+
+/// An RNS residue polynomial; `evals[i]` holds the residues mod `primes[i]`,
+/// either in coefficient or NTT representation.
+#[derive(Clone)]
+pub struct RnsPoly {
+    pub ctx: Arc<RnsContext>,
+    pub res: Vec<Vec<u64>>,
+    pub is_ntt: bool,
+    /// Number of active RNS limbs (≤ ctx.num_primes()); modulus switching
+    /// drops limbs from the back.
+    pub level: usize,
+}
+
+impl RnsPoly {
+    pub fn zero(ctx: &Arc<RnsContext>, level: usize) -> Self {
+        RnsPoly {
+            ctx: ctx.clone(),
+            res: (0..level).map(|_| vec![0u64; ctx.n]).collect(),
+            is_ntt: false,
+            level,
+        }
+    }
+
+    /// From small signed coefficients (e.g. plaintext or error polynomials).
+    pub fn from_signed(ctx: &Arc<RnsContext>, coeffs: &[i64], level: usize) -> Self {
+        let res = (0..level)
+            .map(|i| {
+                let p = ctx.primes[i];
+                coeffs
+                    .iter()
+                    .map(|&c| if c >= 0 { (c as u64) % p } else { p - (c.unsigned_abs() % p) })
+                    .collect()
+            })
+            .collect();
+        RnsPoly { ctx: ctx.clone(), res, is_ntt: false, level }
+    }
+
+    pub fn uniform(ctx: &Arc<RnsContext>, rng: &mut GlyphRng, level: usize) -> Self {
+        let res = (0..level)
+            .map(|i| (0..ctx.n).map(|_| rng.uniform_mod(ctx.primes[i])).collect())
+            .collect();
+        RnsPoly { ctx: ctx.clone(), res, is_ntt: false, level }
+    }
+
+    pub fn n(&self) -> usize {
+        self.ctx.n
+    }
+
+    pub fn to_ntt(&mut self) {
+        if !self.is_ntt {
+            for i in 0..self.level {
+                self.ctx.ntts[i].forward(&mut self.res[i]);
+            }
+            self.is_ntt = true;
+        }
+    }
+
+    pub fn to_coeff(&mut self) {
+        if self.is_ntt {
+            for i in 0..self.level {
+                self.ctx.ntts[i].inverse(&mut self.res[i]);
+            }
+            self.is_ntt = false;
+        }
+    }
+
+    fn check_compat(&self, o: &Self) {
+        debug_assert_eq!(self.is_ntt, o.is_ntt, "representation mismatch");
+        debug_assert_eq!(self.level, o.level, "level mismatch");
+    }
+
+    pub fn add_assign(&mut self, o: &Self) {
+        self.check_compat(o);
+        for i in 0..self.level {
+            let p = self.ctx.primes[i];
+            for (x, &y) in self.res[i].iter_mut().zip(&o.res[i]) {
+                *x = add_mod(*x, y, p);
+            }
+        }
+    }
+
+    pub fn sub_assign(&mut self, o: &Self) {
+        self.check_compat(o);
+        for i in 0..self.level {
+            let p = self.ctx.primes[i];
+            for (x, &y) in self.res[i].iter_mut().zip(&o.res[i]) {
+                *x = sub_mod(*x, y, p);
+            }
+        }
+    }
+
+    pub fn neg_assign(&mut self) {
+        for i in 0..self.level {
+            let p = self.ctx.primes[i];
+            for x in self.res[i].iter_mut() {
+                if *x != 0 {
+                    *x = p - *x;
+                }
+            }
+        }
+    }
+
+    /// Pointwise product (both operands must be in NTT form).
+    pub fn mul_assign_ntt(&mut self, o: &Self) {
+        self.check_compat(o);
+        debug_assert!(self.is_ntt);
+        for i in 0..self.level {
+            self.ctx.ntts[i].pointwise(&mut self.res[i], &o.res[i]);
+        }
+    }
+
+    /// `self += a * b` (all three in NTT form).
+    pub fn mul_acc_ntt(&mut self, a: &Self, b: &Self) {
+        debug_assert!(self.is_ntt && a.is_ntt && b.is_ntt);
+        for i in 0..self.level {
+            self.ctx.ntts[i].pointwise_acc(&mut self.res[i], &a.res[i], &b.res[i]);
+        }
+    }
+
+    /// Multiply by a scalar given as per-limb residues.
+    pub fn scalar_mul_assign(&mut self, scalar_rns: &[u64]) {
+        for i in 0..self.level {
+            let p = self.ctx.primes[i];
+            let s = scalar_rns[i] % p;
+            for x in self.res[i].iter_mut() {
+                *x = mul_mod(*x, s, p);
+            }
+        }
+    }
+
+    /// BGV modulus switch: drop the top limb `q_ℓ`, dividing by it exactly
+    /// after the CRT correction `δ ≡ self (mod q_ℓ)`, `δ ≡ 0 (mod t)`.
+    /// Because every prime is ≡ 1 (mod t), the plaintext is preserved
+    /// (no factor tracking needed — DESIGN.md §2.2). Coefficient form only.
+    pub fn mod_switch_down(&mut self, t: u64) {
+        assert!(!self.is_ntt, "mod_switch_down requires coefficient form");
+        assert!(self.level >= 2, "cannot drop below one limb");
+        let last = self.level - 1;
+        let q_last = self.ctx.primes[last];
+        debug_assert_eq!(q_last % t, 1);
+        let half = q_last / 2;
+        let t_half = t / 2;
+        // Precompute q_last^{-1} mod q_i for remaining limbs.
+        for i in 0..last {
+            let p = self.ctx.primes[i];
+            let q_last_inv = inv_mod(q_last % p, p);
+            let t_mod_p = t % p;
+            for j in 0..self.ctx.n {
+                let d = self.res[last][j]; // δ0 = x mod q_last, in [0, q_last)
+                // Center δ0, then add t·u with u ≡ -δ0 (mod t) centered so
+                // that δ = δ0 + t·u ≡ 0 (mod t) (wait: we need δ ≡ 0 mod t
+                // and ≡ x mod q_last; u is a multiple of q_last below).
+                // Solve δ = δ0_c + q_last·v with δ ≡ 0 (mod t):
+                //   v ≡ -δ0_c (mod t)      (q_last ≡ 1 mod t)
+                let d_c: i64 = if d > half { d as i64 - q_last as i64 } else { d as i64 };
+                let mut v = (-d_c).rem_euclid(t as i64) as u64;
+                if v > t_half {
+                    v = v.wrapping_sub(t); // centered representative as wrapped u64
+                }
+                let v_c = v as i64; // |v_c| ≤ t/2
+                // x' = (x - δ) / q_last  mod p
+                //    = (x - δ0_c - q_last·v_c) * q_last^{-1} mod p
+                let mut num = self.res[i][j];
+                // subtract δ0_c
+                let d_red = if d_c >= 0 { (d_c as u64) % p } else { p - ((-d_c) as u64 % p) };
+                num = sub_mod(num, d_red, p);
+                // subtract q_last·v_c
+                let v_red = if v_c >= 0 { (v_c as u64) % p } else { p - ((-v_c) as u64 % p) };
+                num = sub_mod(num, mul_mod(q_last % p, v_red, p), p);
+                self.res[i][j] = mul_mod(num, q_last_inv, p);
+                let _ = t_mod_p;
+            }
+        }
+        self.res.pop();
+        self.level = last;
+    }
+
+    /// Drop to `new_level` limbs without rescaling (for key material reuse).
+    pub fn truncate_level(&mut self, new_level: usize) {
+        assert!(new_level <= self.level && new_level >= 1);
+        self.res.truncate(new_level);
+        self.level = new_level;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_small() -> Arc<RnsContext> {
+        // Primes ≡ 1 mod 2^26 (≥ the test t and 2N alignment).
+        let primes = crate::math::modarith::gen_ntt_primes(3, 1 << 26, 1 << 32);
+        RnsContext::new(64, &primes)
+    }
+
+    #[test]
+    fn bigint_add_sub_mul_roundtrip() {
+        let a = BigUintSmall::from_u64(u64::MAX).mul_u64(u64::MAX);
+        let mut b = a.clone();
+        b.add_assign(&BigUintSmall::from_u64(12345));
+        b.sub_assign(&BigUintSmall::from_u64(12345));
+        assert_eq!(a, b);
+        assert_eq!(BigUintSmall::from_u64(100).rem_u64(7), 2);
+        let big = BigUintSmall::from_u64(1).mul_u64(u64::MAX).mul_u64(13);
+        assert_eq!(big.rem_u64(13), 0);
+    }
+
+    #[test]
+    fn bigint_shr1_halves() {
+        let a = BigUintSmall { limbs: vec![1, 1] }; // 2^64 + 1
+        let h = a.shr1(); // 2^63
+        assert_eq!(h.limbs, vec![1u64 << 63]);
+    }
+
+    #[test]
+    fn crt_roundtrip_small_values() {
+        let ctx = ctx_small();
+        let t = 1u64 << 16;
+        for v in [0i64, 1, -1, 12345, -54321, (1 << 15) - 1, -(1 << 15)] {
+            let rns = ctx.scalar_to_rns_i64(v);
+            let got = ctx.crt_coeff_mod_t(&rns, t);
+            let want = (v.rem_euclid(t as i64)) as u64;
+            assert_eq!(got, want, "v={v}");
+            let centered = ctx.crt_coeff_centered_i128(&rns);
+            assert_eq!(centered, v as i128, "v={v}");
+        }
+    }
+
+    #[test]
+    fn delta_times_t_is_minus_one_mod_q() {
+        let ctx = ctx_small();
+        let t = 1u64 << 16;
+        let delta = ctx.delta_rns(t);
+        // Δ·t ≡ q-1 ≡ -1 (mod every prime)
+        for (i, &p) in ctx.primes.iter().enumerate() {
+            assert_eq!(mul_mod(delta[i], t % p, p), p - 1);
+        }
+    }
+
+    #[test]
+    fn poly_add_sub_neg() {
+        let ctx = ctx_small();
+        let mut rng = GlyphRng::new(1);
+        let a = RnsPoly::uniform(&ctx, &mut rng, 3);
+        let b = RnsPoly::uniform(&ctx, &mut rng, 3);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        c.sub_assign(&b);
+        for i in 0..3 {
+            assert_eq!(c.res[i], a.res[i]);
+        }
+        let mut d = a.clone();
+        d.neg_assign();
+        d.add_assign(&a);
+        assert!(d.res.iter().all(|r| r.iter().all(|&x| x == 0)));
+    }
+
+    #[test]
+    fn ntt_mul_matches_schoolbook_per_limb() {
+        let ctx = ctx_small();
+        let mut rng = GlyphRng::new(2);
+        let a = RnsPoly::uniform(&ctx, &mut rng, 2);
+        let b = RnsPoly::uniform(&ctx, &mut rng, 2);
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        fa.to_ntt();
+        fb.to_ntt();
+        fa.mul_assign_ntt(&fb);
+        fa.to_coeff();
+        for i in 0..2 {
+            let want = crate::math::ntt::negacyclic_mul_naive(&a.res[i], &b.res[i], ctx.primes[i]);
+            assert_eq!(fa.res[i], want);
+        }
+    }
+
+    #[test]
+    fn mod_switch_preserves_plaintext_and_shrinks_noise() {
+        // phase = m + t*e with |t*e| << q; after dropping a limb the phase
+        // must still be ≡ m (mod t) and roughly e/q_last in magnitude.
+        let ctx = ctx_small();
+        let t = 1u64 << 8;
+        let n = ctx.n;
+        let mut coeffs = vec![0i64; n];
+        let mut rng = GlyphRng::new(3);
+        for c in coeffs.iter_mut() {
+            let m = (rng.uniform_mod(t) as i64) - (t as i64 / 2);
+            let e = rng.gaussian_i64(1e6); // sizeable noise
+            *c = m + t as i64 * e;
+        }
+        let mut poly = RnsPoly::from_signed(&ctx, &coeffs, 3);
+        poly.mod_switch_down(t);
+        assert_eq!(poly.level, 2);
+        for j in 0..n {
+            let res: Vec<u64> = (0..2).map(|i| poly.res[i][j]).collect();
+            let sub_ctx = RnsContext::new(ctx.n, &ctx.primes[..2]);
+            let got = sub_ctx.crt_coeff_mod_t(&res, t);
+            let want = coeffs[j].rem_euclid(t as i64) as u64;
+            assert_eq!(got, want, "j={j}");
+            // noise shrank by ~q_last
+            let centered = sub_ctx.crt_coeff_centered_i128(&res);
+            assert!(centered.unsigned_abs() < (1 << 22), "j={j} centered={centered}");
+        }
+    }
+}

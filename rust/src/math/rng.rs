@@ -1,0 +1,179 @@
+//! Deterministic PRNG + lattice-crypto samplers.
+//!
+//! The vendored crate set has no `rand`, so we carry a small xoshiro256++
+//! implementation (public-domain algorithm by Blackman & Vigna) plus the
+//! three samplers FHE needs: uniform torus/modular, ternary secrets, and a
+//! rounded-Gaussian error sampler (Box–Muller). Determinism by explicit seed
+//! keeps every test and benchmark reproducible.
+
+/// xoshiro256++ PRNG.
+#[derive(Clone)]
+pub struct GlyphRng {
+    s: [u64; 4],
+}
+
+impl GlyphRng {
+    /// Seed via SplitMix64 expansion (zero seed is fine).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        GlyphRng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Nondeterministic seed for key generation in the examples/CLI.
+    pub fn from_entropy() -> Self {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap();
+        let pid = std::process::id() as u64;
+        Self::new(t.as_nanos() as u64 ^ (pid << 32) ^ (&t as *const _ as u64))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0].wrapping_add(s[3]).rotate_left(23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, m)` by rejection (unbiased).
+    pub fn uniform_mod(&mut self, m: u64) -> u64 {
+        debug_assert!(m > 0);
+        let zone = u64::MAX - (u64::MAX % m);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % m;
+            }
+        }
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gaussian(&mut self, sigma: f64) -> f64 {
+        let u1 = loop {
+            let u = self.uniform_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.uniform_f64();
+        sigma * (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Rounded Gaussian as a signed integer.
+    pub fn gaussian_i64(&mut self, sigma: f64) -> i64 {
+        self.gaussian(sigma).round() as i64
+    }
+
+    /// Ternary secret coefficient in {-1, 0, 1} (uniform).
+    pub fn ternary(&mut self) -> i64 {
+        (self.uniform_mod(3) as i64) - 1
+    }
+
+    /// Uniform torus32 element.
+    #[inline]
+    pub fn torus32(&mut self) -> u32 {
+        self.next_u32()
+    }
+
+    /// Gaussian torus32 noise with standard deviation `alpha` (fraction of
+    /// the torus, as in the TFHE papers).
+    pub fn torus32_gaussian(&mut self, alpha: f64) -> u32 {
+        let e = self.gaussian(alpha); // in torus units
+        (e * 2f64.powi(32)).round() as i64 as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = GlyphRng::new(42);
+        let mut b = GlyphRng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = GlyphRng::new(1);
+        let mut b = GlyphRng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_mod_in_range_and_covers() {
+        let mut r = GlyphRng::new(3);
+        let m = 17u64;
+        let mut seen = [false; 17];
+        for _ in 0..2000 {
+            let v = r.uniform_mod(m);
+            assert!(v < m);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = GlyphRng::new(5);
+        let sigma = 3.2;
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian(sigma)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var.sqrt() - sigma).abs() < 0.15, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn ternary_is_balanced() {
+        let mut r = GlyphRng::new(9);
+        let mut counts = [0usize; 3];
+        for _ in 0..30000 {
+            counts[(r.ternary() + 1) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn torus_gaussian_is_small() {
+        let mut r = GlyphRng::new(11);
+        // alpha = 2^-25: samples must stay well below 2^-15 of the torus.
+        for _ in 0..1000 {
+            let e = r.torus32_gaussian(2f64.powi(-25)) as i32;
+            assert!((e as i64).abs() < (1 << 17), "{e}");
+        }
+    }
+}

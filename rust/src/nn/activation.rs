@@ -1,0 +1,322 @@
+//! TFHE activations: forward ReLU (paper Algorithm 1), backward iReLU
+//! (Algorithm 2) and the Figure-4 softmax lookup unit, plus the
+//! FHESGD-baseline sigmoid TLU hookup.
+//!
+//! Inputs arrive as the 8 two's-complement bit ciphertexts (MSB/sign first)
+//! the BGV→TFHE switch delivers; outputs are recomposed LWEs with every bit
+//! emitted directly at its weighted torus position (`2^(24+i)`) by the
+//! parameterized gate bootstraps, ready for the packing key switch back to
+//! BGV.
+
+use super::engine::GlyphEngine;
+use super::tensor::{EncTensor, PackOrder};
+use crate::switch::extract::bit_position;
+use crate::switch::SWITCH_BITS;
+use crate::tfhe::{LweCiphertext, TestPoly};
+
+/// Sign bits retained by the forward pass for iReLU.
+pub struct ReluState {
+    /// sign bit (u[n−1]) per ciphertext per lane, gate encoding.
+    pub signs: Vec<Vec<LweCiphertext>>,
+}
+
+/// Forward ReLU on one value's bits (Algorithm 1): output bit i =
+/// `AND(u[i], NOT u[n−1])`, MSB forced to 0; bits are emitted at their
+/// weighted positions and summed into one recomposed LWE.
+pub fn relu_bits(engine: &GlyphEngine, bits: &[LweCiphertext]) -> (LweCiphertext, LweCiphertext) {
+    let sign = bits[0].clone();
+    let not_sign = engine.gate_not(&sign);
+    let mut acc: Option<LweCiphertext> = None;
+    for i in 1..SWITCH_BITS as usize {
+        let w = engine.gate_and_weighted(&bits[i], &not_sign, bit_position(i));
+        match &mut acc {
+            None => acc = Some(w),
+            Some(a) => a.add_assign(&w),
+        }
+    }
+    (acc.expect("SWITCH_BITS ≥ 2"), sign)
+}
+
+/// Backward iReLU on one error value's bits (Algorithm 2):
+/// `δ_{l−1}[i] = AND(δ_l[i], NOT u[n−1])` for every bit including the sign.
+pub fn irelu_bits(engine: &GlyphEngine, delta_bits: &[LweCiphertext], u_sign: &LweCiphertext) -> LweCiphertext {
+    let not_sign = engine.gate_not(u_sign);
+    let mut acc: Option<LweCiphertext> = None;
+    for i in 0..SWITCH_BITS as usize {
+        let w = engine.gate_and_weighted(&delta_bits[i], &not_sign, bit_position(i));
+        match &mut acc {
+            None => acc = Some(w),
+            Some(a) => a.add_assign(&w),
+        }
+    }
+    acc.unwrap()
+}
+
+/// Full ReLU layer: BGV pre-activations → TFHE bits → Alg-1 gates → packed
+/// fresh BGV activations (8-bit, shift 0) in `out_order` packing.
+///
+/// `out_shift` is the per-layer quantization shift (how many low bits of
+/// the MAC result the activation drops; must be ≤ the engine's frac bits).
+pub fn relu_layer(
+    engine: &GlyphEngine,
+    u: &EncTensor,
+    out_shift: u32,
+    out_order: PackOrder,
+) -> (EncTensor, ReluState) {
+    let frac = engine.frac_bits();
+    assert!(out_shift <= frac, "out_shift {out_shift} exceeds frac {frac}");
+    let pre_shift = frac - out_shift;
+    let in_positions = u.order.positions(engine.batch);
+    let out_positions = out_order.positions(engine.batch);
+    let mut outs = Vec::with_capacity(u.len());
+    let mut signs = Vec::with_capacity(u.len());
+    for ct in &u.cts {
+        let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
+        let mut lane_signs = Vec::with_capacity(lanes_bits.len());
+        let recomposed: Vec<LweCiphertext> = lanes_bits
+            .iter()
+            .map(|bits| {
+                let (out, sign) = relu_bits(engine, bits);
+                lane_signs.push(sign);
+                out
+            })
+            .collect();
+        outs.push(engine.switch_to_bgv(&recomposed, &out_positions));
+        signs.push(lane_signs);
+    }
+    (
+        EncTensor::new(outs, u.shape.clone(), out_order, 0),
+        ReluState { signs },
+    )
+}
+
+/// Full iReLU layer: BGV errors → bits → Alg-2 gates → packed fresh BGV
+/// errors (8-bit, reversed packing for the gradient trick).
+pub fn irelu_layer(
+    engine: &GlyphEngine,
+    delta: &EncTensor,
+    state: &ReluState,
+    out_shift: u32,
+) -> EncTensor {
+    let frac = engine.frac_bits();
+    let pre_shift = frac - out_shift;
+    let in_positions = delta.order.positions(engine.batch);
+    let out_positions = PackOrder::Reversed.positions(engine.batch);
+    let mut outs = Vec::with_capacity(delta.len());
+    for (ci, ct) in delta.cts.iter().enumerate() {
+        let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
+        let recomposed: Vec<LweCiphertext> = lanes_bits
+            .iter()
+            .enumerate()
+            .map(|(lane, bits)| irelu_bits(engine, bits, &state.signs[ci][lane]))
+            .collect();
+        outs.push(engine.switch_to_bgv(&recomposed, &out_positions));
+    }
+    EncTensor::new(outs, delta.shape.clone(), PackOrder::Reversed, 0)
+}
+
+// ---------------------------------------------------------------------------
+// Softmax (Figure 4)
+// ---------------------------------------------------------------------------
+
+/// The Figure-4 softmax unit: a per-neuron b-bit lookup table evaluated
+/// with homomorphic multiplexers over the input bits.
+pub struct SoftmaxUnit {
+    pub in_bits: usize,
+    /// entries[v] = quantized output (8-bit, at the 2^24 grid) for input v
+    /// (v is the two's-complement byte read MSB-first).
+    pub entries: Vec<u8>,
+}
+
+impl SoftmaxUnit {
+    /// Normalized-exponential (logistic) table: a monotone squashing of the
+    /// logit into [0, 127], the per-neuron approximation the paper's
+    /// Figure-4 unit tabulates. `in_frac` is the logit's fraction bits.
+    pub fn logistic(in_bits: usize, in_frac: u32) -> Self {
+        let n = 1usize << in_bits;
+        let entries = (0..n)
+            .map(|v| {
+                let sv = if v >= n / 2 { v as i64 - n as i64 } else { v as i64 };
+                let x = sv as f64 / 2f64.powi(in_frac as i32);
+                let s = 1.0 / (1.0 + (-x).exp());
+                (s * 127.0).round() as u8
+            })
+            .collect();
+        SoftmaxUnit { in_bits, entries }
+    }
+
+    /// Paper-mode evaluation: bit-sliced MUX trees (two bootstraps per MUX
+    /// on the critical path, Figure 4). Leaf-level muxes over constants are
+    /// folded away, so each output bit costs a depth-(b−1) tree.
+    /// Returns the recomposed LWE (output already at the 2^24 grid).
+    pub fn evaluate_mux(&self, engine: &GlyphEngine, bits: &[LweCiphertext]) -> LweCiphertext {
+        assert_eq!(bits.len(), self.in_bits);
+        let mut acc: Option<LweCiphertext> = None;
+        for j in 0..8u32 {
+            // Build the selection tree for output bit j, folding constant
+            // leaves: level 0 nodes cover value pairs (p, p+1).
+            let out = self.mux_tree_bit(engine, bits, j);
+            if let Some(node) = out {
+                // node is a gate-encoded boolean; convert to weighted
+                // position via AND with TRUE (one more bootstrap).
+                let truth = LweCiphertext::trivial(crate::tfhe::encode_bit(true), node.dim());
+                let w = engine.gate_and_weighted(&node, &truth, 24 + j);
+                match &mut acc {
+                    None => acc = Some(w),
+                    Some(a) => a.add_assign(&w),
+                }
+            }
+        }
+        acc.unwrap_or_else(|| LweCiphertext::trivial(0, engine.gate_ext_dim()))
+    }
+
+    /// One output bit's MUX tree. Returns None if the bit is constant 0
+    /// across all entries, Some(gate-encoded boolean) otherwise.
+    fn mux_tree_bit(&self, engine: &GlyphEngine, bits: &[LweCiphertext], j: u32) -> Option<LweCiphertext> {
+        #[derive(Clone)]
+        enum Node {
+            Const(bool),
+            Ct(LweCiphertext),
+        }
+        // leaves, indexed by the value read MSB-first
+        let mut level: Vec<Node> = self
+            .entries
+            .iter()
+            .map(|&e| Node::Const((e >> j) & 1 == 1))
+            .collect();
+        // fold from the LSB side: selection bit for the last level is the
+        // last (LSB) input bit.
+        for bit in bits.iter().rev() {
+            let mut next = Vec::with_capacity(level.len() / 2);
+            for pair in level.chunks(2) {
+                let (d0, d1) = (&pair[0], &pair[1]);
+                let node = match (d0, d1) {
+                    (Node::Const(a), Node::Const(b)) if a == b => Node::Const(*a),
+                    (Node::Const(false), Node::Const(true)) => Node::Ct(bit.clone()),
+                    (Node::Const(true), Node::Const(false)) => Node::Ct(engine.gate_not(bit)),
+                    (d0, d1) => {
+                        let c0 = match d0 {
+                            Node::Const(b) => LweCiphertext::trivial(crate::tfhe::encode_bit(*b), bit.dim()),
+                            Node::Ct(c) => c.clone(),
+                        };
+                        let c1 = match d1 {
+                            Node::Const(b) => LweCiphertext::trivial(crate::tfhe::encode_bit(*b), bit.dim()),
+                            Node::Ct(c) => c.clone(),
+                        };
+                        Node::Ct(engine.gate_mux(bit, &c1, &c0))
+                    }
+                };
+                next.push(node);
+            }
+            level = next;
+        }
+        debug_assert_eq!(level.len(), 1);
+        match level.into_iter().next().unwrap() {
+            Node::Const(false) => None,
+            Node::Const(true) => Some(LweCiphertext::trivial(
+                crate::tfhe::encode_bit(true),
+                engine.gate_ck.params.n,
+            )),
+            Node::Ct(c) => Some(c),
+        }
+    }
+
+    /// Fast mode: one programmable bootstrap per neuron (an ablation over
+    /// the paper's MUX tree). The logit must fit in `in_bits−1` bits; an
+    /// offset moves the full signed range into the positive half-torus.
+    pub fn evaluate_pbs(&self, engine: &GlyphEngine, value_lwe: &LweCiphertext) -> LweCiphertext {
+        let nb = self.in_bits as u32;
+        let big_n = engine.extract_ck.params.big_n;
+        // phase = v·2^(32−nb); add 2^31 so v ∈ [−2^(nb−1), 2^(nb−1)) maps to
+        // [0, 2^32) positive-half windows of the doubled table.
+        let mut shifted = value_lwe.clone();
+        shifted.add_constant(1u32 << 31);
+        // window w of N covers v = w·2^nb/N − 2^(nb−1)… program entries.
+        let entries = &self.entries;
+        let n_entries = entries.len();
+        let tv = TestPoly::from_fn(big_n, |w| {
+            let v = (w * n_entries) / big_n; // 0..2^nb over positive half = full signed range shifted
+            let signed_index = (v + n_entries / 2) % n_entries; // undo the +2^31 offset
+            (entries[signed_index] as u32) << crate::switch::VALUE_POS
+        });
+        engine.counter.bump(&engine.counter.act_gates, 1);
+        engine.extract_ck.pbs_raw(&shifted, &tv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::{EngineProfile, GlyphEngine};
+    use crate::nn::tensor::{EncTensor, PackOrder};
+
+    fn engine() -> (GlyphEngine, crate::nn::engine::ClientKeys) {
+        GlyphEngine::setup(EngineProfile::Test, 4, 321)
+    }
+
+    #[test]
+    fn relu_layer_matches_plain() {
+        let (eng, mut client) = engine();
+        let vals: Vec<i64> = vec![37, -25, 0, 101];
+        // store at shift 3 (simulating a small MAC scale), drop 3 bits
+        let ct = client.encrypt_batch(&vals, 3);
+        let u = EncTensor::new(vec![ct], vec![1], PackOrder::Forward, 3);
+        let (a, _state) = relu_layer(&eng, &u, 3, PackOrder::Forward);
+        let got = client.decrypt_batch(&a.cts[0], 4, 0);
+        let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn relu_then_irelu_propagates_error_only_where_positive() {
+        let (eng, mut client) = engine();
+        let u_vals: Vec<i64> = vec![50, -50, 7, -7];
+        let d_vals: Vec<i64> = vec![13, 13, -9, -9];
+        let u_ct = client.encrypt_batch(&u_vals, 0);
+        let u = EncTensor::new(vec![u_ct], vec![1], PackOrder::Forward, 0);
+        let (_a, state) = relu_layer(&eng, &u, 0, PackOrder::Forward);
+        // backward errors arrive reverse-packed
+        let mut d_rev = d_vals.clone();
+        d_rev.reverse();
+        let d_ct = client.encrypt_batch(&d_rev, 0);
+        let delta = EncTensor::new(vec![d_ct], vec![1], PackOrder::Reversed, 0);
+        let out = irelu_layer(&eng, &delta, &state, 0);
+        // decrypt reverse-packed output
+        let got_rev = client.decrypt_batch(&out.cts[0], 4, 0);
+        let got: Vec<i64> = got_rev.into_iter().rev().collect();
+        let want: Vec<i64> = u_vals.iter().zip(&d_vals).map(|(&u, &d)| if u >= 0 { d } else { 0 }).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn softmax_mux_tree_small_table() {
+        let (eng, mut client) = engine();
+        // 3-bit unit, exactly the paper's Figure-4 size.
+        let unit = SoftmaxUnit { in_bits: 3, entries: vec![10, 20, 30, 40, 50, 60, 70, 80] };
+        // Drive it directly with encrypted bit inputs for v = 5 (101b): the
+        // byte with top bits 101 is 0xA0 = −96 as two's complement.
+        let v = 5usize;
+        let byte = (v as i64) << 5;
+        let signed = if byte >= 128 { byte - 256 } else { byte };
+        let ct = client.encrypt_batch(&[signed << eng.frac_bits()], 0);
+        let bits_all = eng.switch_to_bits(&ct, &[0], 0);
+        let bits3 = bits_all[0][..3].to_vec();
+        let out = unit.evaluate_mux(&eng, &bits3);
+        // decrypt the weighted LWE through the packing switch
+        let packed = eng.switch_to_bgv(&[out], &[0]);
+        let got = client.decrypt_batch(&packed, 1, 0);
+        assert_eq!(got, vec![unit.entries[v] as i64]);
+    }
+
+    #[test]
+    fn logistic_table_monotone_and_bounded() {
+        let u = SoftmaxUnit::logistic(8, 4);
+        assert_eq!(u.entries.len(), 256);
+        assert_eq!(u.entries[0], 64); // sigmoid(0) ≈ 0.5 → 64
+        // monotone over the signed range −128..127
+        let signed: Vec<u8> = (0..256).map(|v| u.entries[(v + 128) % 256]).collect();
+        for w in signed.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

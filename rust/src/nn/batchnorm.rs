@@ -1,0 +1,89 @@
+//! Batch normalization, transfer-learning style: the statistics and affine
+//! parameters are frozen from pre-training, so BN folds to a per-channel
+//! plaintext affine `y = g·x + b` — one MultCP and one AddCP per ciphertext
+//! (the paper's Table-4 "BN" rows).
+
+use super::engine::GlyphEngine;
+use super::tensor::EncTensor;
+use crate::bgv::Plaintext;
+
+/// Frozen affine BN over the channel dimension of a CHW tensor.
+pub struct BnLayer {
+    /// Per-channel quantized gain (8-bit) and bias (at gain scale).
+    pub gain: Vec<i64>,
+    pub bias: Vec<i64>,
+    /// log2 of the gain's fixed-point scale (output shift grows by this).
+    pub gain_shift: u32,
+}
+
+impl BnLayer {
+    /// Fold float BN parameters (γ, β, μ, σ²) into the quantized affine.
+    pub fn fold(gamma: &[f64], beta: &[f64], mean: &[f64], var: &[f64], gain_shift: u32) -> Self {
+        let scale = 2f64.powi(gain_shift as i32);
+        let mut gain = Vec::with_capacity(gamma.len());
+        let mut bias = Vec::with_capacity(gamma.len());
+        for c in 0..gamma.len() {
+            let g = gamma[c] / (var[c] + 1e-5).sqrt();
+            let b = beta[c] - g * mean[c];
+            gain.push(((g * scale).round() as i64).clamp(-127, 127));
+            bias.push((b * scale).round() as i64);
+        }
+        BnLayer { gain, bias, gain_shift }
+    }
+
+    pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        assert_eq!(x.shape.len(), 3);
+        let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+        assert_eq!(c, self.gain.len());
+        let params = &engine.ctx.params;
+        let batch_positions = x.order.positions(engine.batch);
+        let mut cts = Vec::with_capacity(x.len());
+        for ch in 0..c {
+            let g = Plaintext::encode_scalar(self.gain[ch], params);
+            // bias must be added at the tensor's running scale: b·2^(x.shift)
+            let bias_val = self.bias[ch] << x.shift;
+            let mut bias_coeffs = vec![0i64; params.n];
+            for &p in &batch_positions {
+                bias_coeffs[p] = bias_val;
+            }
+            let b = Plaintext { coeffs: bias_coeffs, t: params.t };
+            for y in 0..h {
+                for xx in 0..w {
+                    let mut t = x.chw(ch, y, xx).clone();
+                    engine.mult_cp(&mut t, &g);
+                    t.add_plain(&b, &engine.ctx);
+                    cts.push(t);
+                }
+            }
+        }
+        EncTensor::new(cts, x.shape.clone(), x.order, x.shift + self.gain_shift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::{EngineProfile, GlyphEngine};
+    use crate::nn::tensor::PackOrder;
+
+    #[test]
+    fn affine_bn_matches_reference() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 910);
+        let cts: Vec<_> = (0..4).map(|i| client.encrypt_batch(&[10 * (i as i64 + 1), -5], 0)).collect();
+        let x = EncTensor::new(cts, vec![1, 2, 2], PackOrder::Forward, 0);
+        let bn = BnLayer { gain: vec![3], bias: vec![7], gain_shift: 0 };
+        let y = bn.forward(&x, &eng);
+        assert_eq!(client.decrypt_batch(y.chw(0, 0, 0), 2, 0), vec![37, -8]);
+        assert_eq!(client.decrypt_batch(y.chw(0, 1, 1), 2, 0), vec![127, -8]);
+        let s = eng.counter.snapshot();
+        assert_eq!(s.mult_cp, 4);
+    }
+
+    #[test]
+    fn fold_produces_expected_affine() {
+        let bn = BnLayer::fold(&[2.0], &[1.0], &[0.5], &[1.0 - 1e-5], 4);
+        // g = 2/1 = 2 → 32 at shift 4; b = 1 − 2·0.5 = 0 → 0
+        assert_eq!(bn.gain, vec![32]);
+        assert_eq!(bn.bias, vec![0]);
+    }
+}

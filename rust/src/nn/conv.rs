@@ -1,0 +1,166 @@
+//! Convolutional layers (valid padding, stride 1).
+//!
+//! Under transfer learning the kernels are plaintext (frozen, pre-trained on
+//! a public dataset), so every MAC is a cheap MultCP — the mechanism behind
+//! the paper's Table-4 "MultCP" columns. An encrypted-kernel variant (full
+//! Glyph-from-scratch CNN training) is supported for completeness and used
+//! by the ablation benches.
+
+use super::engine::GlyphEngine;
+use super::linear::Weight;
+use super::tensor::EncTensor;
+use crate::bgv::{BgvCiphertext, Plaintext};
+
+/// A 2-D convolution `out[oc] = Σ_ic k[oc][ic] * x[ic]`, valid, stride 1.
+pub struct ConvLayer {
+    /// kernels[oc][ic][kh][kw]
+    pub kernels: Vec<Vec<Vec<Vec<Weight>>>>,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub k: usize,
+    pub out_shift: u32,
+}
+
+impl ConvLayer {
+    /// Frozen plaintext kernels (transfer learning).
+    pub fn new_plain(init: &[Vec<Vec<Vec<i64>>>], params: &crate::bgv::BgvParams, out_shift: u32) -> Self {
+        let out_ch = init.len();
+        let in_ch = init[0].len();
+        let k = init[0][0].len();
+        let kernels = init
+            .iter()
+            .map(|oc| {
+                oc.iter()
+                    .map(|ic| {
+                        ic.iter()
+                            .map(|row| {
+                                row.iter().map(|&v| Weight::Plain(Plaintext::encode_scalar(v, params))).collect()
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        ConvLayer { kernels, in_ch, out_ch, k, out_shift }
+    }
+
+    /// Encrypted kernels (from-scratch CNN training; ablation).
+    pub fn new_encrypted(
+        init: &[Vec<Vec<Vec<i64>>>],
+        client: &mut super::engine::ClientKeys,
+        out_shift: u32,
+    ) -> Self {
+        let out_ch = init.len();
+        let in_ch = init[0].len();
+        let k = init[0][0].len();
+        let kernels = init
+            .iter()
+            .map(|oc| {
+                oc.iter()
+                    .map(|ic| {
+                        ic.iter()
+                            .map(|row| row.iter().map(|&v| Weight::Enc(client.encrypt_scalar(v))).collect())
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        ConvLayer { kernels, in_ch, out_ch, k, out_shift }
+    }
+
+    pub fn out_hw(&self, in_h: usize, in_w: usize) -> (usize, usize) {
+        (in_h - self.k + 1, in_w - self.k + 1)
+    }
+
+    /// Forward convolution on a CHW tensor.
+    pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        assert_eq!(x.shape.len(), 3, "conv expects CHW");
+        assert_eq!(x.shape[0], self.in_ch);
+        let (in_h, in_w) = (x.shape[1], x.shape[2]);
+        let (oh, ow) = self.out_hw(in_h, in_w);
+        let mut cts: Vec<BgvCiphertext> = Vec::with_capacity(self.out_ch * oh * ow);
+        for oc in 0..self.out_ch {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut acc: Option<BgvCiphertext> = None;
+                    for ic in 0..self.in_ch {
+                        for ky in 0..self.k {
+                            for kx in 0..self.k {
+                                let xin = x.chw(ic, y + ky, xx + kx);
+                                let term = match &self.kernels[oc][ic][ky][kx] {
+                                    Weight::Plain(wpt) => {
+                                        let mut t = xin.clone();
+                                        engine.mult_cp(&mut t, wpt);
+                                        t
+                                    }
+                                    Weight::Enc(wct) => {
+                                        let mut t = wct.clone();
+                                        engine.mult_cc(&mut t, xin);
+                                        t
+                                    }
+                                };
+                                match &mut acc {
+                                    None => acc = Some(term),
+                                    Some(a) => engine.add_cc(a, &term),
+                                }
+                            }
+                        }
+                    }
+                    cts.push(acc.unwrap());
+                }
+            }
+        }
+        EncTensor::new(cts, vec![self.out_ch, oh, ow], x.order, x.shift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::{EngineProfile, GlyphEngine};
+    use crate::nn::tensor::PackOrder;
+
+    #[test]
+    fn plain_conv_matches_reference() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 800);
+        // 1 channel, 3×3 input, 2×2 kernel.
+        let img_b0 = [[1i64, 2, 3], [4, 5, 6], [7, 8, 9]];
+        let img_b1 = [[-1i64, 0, 1], [2, -2, 3], [0, 1, -1]];
+        let cts: Vec<_> = (0..9)
+            .map(|i| {
+                let (y, x) = (i / 3, i % 3);
+                client.encrypt_batch(&[img_b0[y][x], img_b1[y][x]], 0)
+            })
+            .collect();
+        let x = EncTensor::new(cts, vec![1, 3, 3], PackOrder::Forward, 0);
+        let kern = vec![vec![vec![vec![1i64, -1], vec![2, 0]]]];
+        let layer = ConvLayer::new_plain(&kern, &eng.ctx.params, 0);
+        let out = layer.forward(&x, &eng);
+        assert_eq!(out.shape, vec![1, 2, 2]);
+        let reference = |img: &[[i64; 3]; 3], y: usize, x: usize| {
+            img[y][x] - img[y][x + 1] + 2 * img[y + 1][x]
+        };
+        for y in 0..2 {
+            for xx in 0..2 {
+                let got = client.decrypt_batch(out.chw(0, y, xx), 2, 0);
+                assert_eq!(got, vec![reference(&img_b0, y, xx), reference(&img_b1, y, xx)], "({y},{xx})");
+            }
+        }
+        let s = eng.counter.snapshot();
+        assert_eq!(s.mult_cp, 16); // 4 positions × 4 kernel taps
+        assert_eq!(s.mult_cc, 0);
+    }
+
+    #[test]
+    fn encrypted_conv_counts_mult_cc() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 1, 801);
+        let cts: Vec<_> = (0..4).map(|i| client.encrypt_batch(&[i as i64 + 1], 0)).collect();
+        let x = EncTensor::new(cts, vec![1, 2, 2], PackOrder::Forward, 0);
+        let kern = vec![vec![vec![vec![3i64, 0], vec![0, -2]]]];
+        let layer = ConvLayer::new_encrypted(&kern, &mut client, 0);
+        let out = layer.forward(&x, &eng);
+        // 3·1 − 2·4 = −5
+        assert_eq!(client.decrypt_batch(out.chw(0, 0, 0), 1, 0), vec![-5]);
+        assert_eq!(eng.counter.snapshot().mult_cc, 4);
+    }
+}

@@ -1,0 +1,271 @@
+//! `GlyphEngine`: the evaluator-side bundle of key material, parameters and
+//! HOP counters that every encrypted layer operates through.
+//!
+//! The client keeps [`ClientKeys`] (the BGV secret); the engine holds only
+//! evaluation material (relinearization key, bootstrapping keys, switching
+//! keys) plus the refresh authority handle (the documented bootstrapping
+//! substitute, DESIGN.md §5).
+
+use crate::bgv::{BgvCiphertext, BgvContext, BgvParams, BgvSecretKey, KeyAuthority, Plaintext, RelinKey};
+use crate::coordinator::metrics::OpCounter;
+use crate::math::rng::GlyphRng;
+use crate::switch::{BgvToTfheSwitch, TfheToBgvSwitch};
+use crate::tfhe::{LweCiphertext, LweKey, TfheCloudKey, TfheParams, TrlweKey};
+use std::sync::Arc;
+
+/// Client-side secret material.
+pub struct ClientKeys {
+    pub bgv_sk: Arc<BgvSecretKey>,
+    pub rng: GlyphRng,
+}
+
+impl ClientKeys {
+    /// Encrypt a batch of 8-bit values at fixed-point scale `shift`
+    /// (value v is stored as v·2^shift in the plaintext ring).
+    pub fn encrypt_batch(&mut self, values: &[i64], shift: u32) -> BgvCiphertext {
+        let scaled: Vec<i64> = values.iter().map(|&v| v << shift).collect();
+        let pt = Plaintext::encode_batch(&scaled, &self.bgv_sk.ctx.params);
+        self.bgv_sk.encrypt(&pt, &mut self.rng)
+    }
+
+    /// Encrypt a single weight scalar as a constant polynomial.
+    pub fn encrypt_scalar(&mut self, w: i64) -> BgvCiphertext {
+        let pt = Plaintext::encode_scalar(w, &self.bgv_sk.ctx.params);
+        self.bgv_sk.encrypt(&pt, &mut self.rng)
+    }
+
+    /// Decrypt a batch (optionally un-scaling by `shift`).
+    pub fn decrypt_batch(&self, ct: &BgvCiphertext, lanes: usize, shift: u32) -> Vec<i64> {
+        self.bgv_sk
+            .decrypt(ct)
+            .decode_batch(lanes)
+            .into_iter()
+            .map(|v| v >> shift)
+            .collect()
+    }
+}
+
+/// Evaluator-side engine.
+pub struct GlyphEngine {
+    pub ctx: Arc<BgvContext>,
+    pub rlk: RelinKey,
+    pub gate_ck: TfheCloudKey,
+    pub extract_ck: TfheCloudKey,
+    pub fwd_switch: BgvToTfheSwitch,
+    pub bwd_switch: TfheToBgvSwitch,
+    pub auth: Arc<KeyAuthority>,
+    pub counter: OpCounter,
+    /// Mini-batch width (≤ N).
+    pub batch: usize,
+}
+
+/// Which parameter scale to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineProfile {
+    /// Production-shaped parameters (paper §5.1).
+    Default,
+    /// Reduced test/demo parameters.
+    Test,
+}
+
+impl GlyphEngine {
+    /// Generate all key material. Returns the engine (evaluator side) and
+    /// the client keys.
+    pub fn setup(profile: EngineProfile, batch: usize, seed: u64) -> (GlyphEngine, ClientKeys) {
+        let (bgv_params, gate_params, ext_params) = match profile {
+            EngineProfile::Default => (
+                BgvParams::mac_params(),
+                TfheParams::default_params(),
+                TfheParams::extract_params(),
+            ),
+            EngineProfile::Test => (
+                BgvParams::test_params(),
+                TfheParams::test_params(),
+                TfheParams::test_extract_params(),
+            ),
+        };
+        assert!(batch <= bgv_params.n);
+        let ctx = BgvContext::new(bgv_params);
+        let mut rng = GlyphRng::new(seed);
+        let bgv_sk = Arc::new(BgvSecretKey::generate(&ctx, &mut rng));
+        let rlk = RelinKey::generate(&bgv_sk, &mut rng);
+        let lwe_key = LweKey::generate_binary(gate_params.n, &mut rng);
+        let gate_ring = TrlweKey::generate(gate_params.big_n, &mut rng);
+        let gate_ck = TfheCloudKey::generate(&lwe_key, &gate_ring, &gate_params, &mut rng);
+        let ext_ring = TrlweKey::generate(ext_params.big_n, &mut rng);
+        let extract_ck = TfheCloudKey::generate(&lwe_key, &ext_ring, &ext_params, &mut rng);
+        let fwd_switch = BgvToTfheSwitch::generate(&bgv_sk, &lwe_key, &ext_params, &mut rng);
+        let bwd_switch = TfheToBgvSwitch::generate(&gate_ring, &bgv_sk, &mut rng);
+        let auth = KeyAuthority::new(bgv_sk.clone(), GlyphRng::new(seed ^ 0x5eed));
+        let engine = GlyphEngine {
+            ctx,
+            rlk,
+            gate_ck,
+            extract_ck,
+            fwd_switch,
+            bwd_switch,
+            auth,
+            counter: OpCounter::default(),
+            batch,
+        };
+        let client = ClientKeys { bgv_sk, rng: GlyphRng::new(seed ^ 0xc11e) };
+        (engine, client)
+    }
+
+    /// log2(t) − 8: the fixed-point position the switch quantizes at.
+    pub fn frac_bits(&self) -> u32 {
+        self.ctx.params.t.trailing_zeros() - crate::switch::SWITCH_BITS
+    }
+
+    // ---- counted BGV ops ---------------------------------------------------
+
+    pub fn mult_cc(&self, acc: &mut BgvCiphertext, other: &BgvCiphertext) {
+        self.counter.bump(&self.counter.mult_cc, 1);
+        acc.mul_assign(other, &self.rlk, &self.ctx);
+    }
+
+    pub fn mult_cp(&self, acc: &mut BgvCiphertext, pt: &Plaintext) {
+        self.counter.bump(&self.counter.mult_cp, 1);
+        acc.mul_plain_assign(pt, &self.ctx);
+    }
+
+    pub fn add_cc(&self, acc: &mut BgvCiphertext, other: &BgvCiphertext) {
+        self.counter.bump(&self.counter.add_cc, 1);
+        acc.add_assign(other);
+    }
+
+    pub fn sub_cc(&self, acc: &mut BgvCiphertext, other: &BgvCiphertext) {
+        self.counter.bump(&self.counter.add_cc, 1);
+        acc.sub_assign(other);
+    }
+
+    pub fn mod_switch_to(&self, ct: &mut BgvCiphertext, level: usize) {
+        if ct.level > level {
+            self.counter.bump(&self.counter.mod_switch, (ct.level - level) as u64);
+            ct.mod_switch_to(level, &self.ctx);
+        }
+    }
+
+    // ---- counted switch ops ------------------------------------------------
+
+    /// BGV→TFHE: quantize the top 8 bits of each requested coefficient and
+    /// deliver the two's-complement bits (MSB first) on the TFHE key.
+    /// `pre_shift` scales the value up first so that bit 7 of the delivered
+    /// byte is bit `log2(t)−1−pre_shift` of the stored fixed-point value.
+    pub fn switch_to_bits(
+        &self,
+        ct: &BgvCiphertext,
+        positions: &[usize],
+        pre_shift: u32,
+    ) -> Vec<Vec<LweCiphertext>> {
+        self.counter.bump(&self.counter.switch_b2t, 1);
+        self.counter
+            .bump(&self.counter.extract_pbs, (positions.len() as u64) * crate::switch::SWITCH_BITS as u64);
+        let mut c = ct.clone();
+        if pre_shift > 0 {
+            c.small_scalar_mul_assign(1i64 << pre_shift, &self.ctx);
+        }
+        self.fwd_switch.to_bits_positions(&c, positions, &self.extract_ck)
+    }
+
+    /// TFHE→BGV: pack one recomposed LWE per lane at the given positions and
+    /// raise to a fresh BGV ciphertext holding the 8-bit values at scale 1.
+    pub fn switch_to_bgv(&self, lanes: &[LweCiphertext], positions: &[usize]) -> BgvCiphertext {
+        self.counter.bump(&self.counter.switch_t2b, 1);
+        self.counter.bump(&self.counter.refresh, 1);
+        self.bwd_switch.pack_at_and_raise(lanes, positions, &self.auth)
+    }
+
+    // ---- counted TFHE gates -------------------------------------------------
+
+    pub fn gate_not(&self, c: &LweCiphertext) -> LweCiphertext {
+        // NOT is bootstrap-free (paper Alg. 1); not counted as an Act gate.
+        self.gate_ck.not(c)
+    }
+
+    pub fn gate_and(&self, a: &LweCiphertext, b: &LweCiphertext) -> LweCiphertext {
+        self.counter.bump(&self.counter.act_gates, 1);
+        self.gate_ck.and(a, b)
+    }
+
+    pub fn gate_and_weighted(&self, a: &LweCiphertext, b: &LweCiphertext, pos: u32) -> LweCiphertext {
+        self.counter.bump(&self.counter.act_gates, 1);
+        self.gate_ck.and_weighted_raw(a, b, pos)
+    }
+
+    pub fn gate_mux(&self, s: &LweCiphertext, d1: &LweCiphertext, d0: &LweCiphertext) -> LweCiphertext {
+        self.counter.bump(&self.counter.act_gates, 2); // 2 bootstraps on the critical path
+        self.gate_ck.mux(s, d1, d0)
+    }
+
+    /// Dimension of LWEs under the gate ring's extracted key (the
+    /// recomposition domain consumed by the packing switch).
+    pub fn gate_ext_dim(&self) -> usize {
+        self.gate_ck.params.big_n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setup_and_roundtrip() {
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 4, 42);
+        let vals = vec![1i64, -2, 3, -4];
+        let ct = client.encrypt_batch(&vals, 0);
+        assert_eq!(client.decrypt_batch(&ct, 4, 0), vals);
+        assert_eq!(engine.counter.snapshot().hop(), 0);
+    }
+
+    #[test]
+    fn counted_mac() {
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 43);
+        let mut w = client.encrypt_scalar(3);
+        let x = client.encrypt_batch(&[5, -5], 0);
+        engine.mult_cc(&mut w, &x);
+        let y = client.encrypt_batch(&[1, 1], 0);
+        engine.add_cc(&mut w, &y);
+        assert_eq!(client.decrypt_batch(&w, 2, 0), vec![16, -14]);
+        let s = engine.counter.snapshot();
+        assert_eq!((s.mult_cc, s.add_cc), (1, 1));
+    }
+
+    #[test]
+    fn engine_switch_quantizes_with_pre_shift() {
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 3, 44);
+        // values stored at shift 4; deliver bits of v by pre-shifting the
+        // remaining (frac − 4) bits.
+        let vals = vec![9i64, -14, 100];
+        let ct = client.encrypt_batch(&vals, 4);
+        let pre = engine.frac_bits() - 4;
+        let bits = engine.switch_to_bits(&ct, &[0, 1, 2], pre);
+        // recompose through weighted ANDs with TRUE (identity) and return
+        let truth = crate::tfhe::LweCiphertext::trivial(
+            crate::tfhe::encode_bit(true),
+            engine.gate_ck.params.n,
+        );
+        let lanes: Vec<LweCiphertext> = bits
+            .iter()
+            .map(|lane_bits| {
+                let mut acc: Option<LweCiphertext> = None;
+                for (i, b) in lane_bits.iter().enumerate() {
+                    let w = engine.gate_and_weighted(b, &truth, crate::switch::extract::bit_position(i));
+                    match &mut acc {
+                        None => acc = Some(w),
+                        Some(a) => a.add_assign(&w),
+                    }
+                }
+                acc.unwrap()
+            })
+            .collect();
+        let out = engine.switch_to_bgv(&lanes, &[0, 1, 2]);
+        assert_eq!(client.decrypt_batch(&out, 3, 0), vals);
+        let s = engine.counter.snapshot();
+        assert_eq!(s.switch_b2t, 1);
+        assert_eq!(s.switch_t2b, 1);
+        assert_eq!(s.extract_pbs, 24);
+        assert_eq!(s.act_gates, 24);
+        assert_eq!(s.refresh, 1);
+    }
+}

@@ -1,0 +1,270 @@
+//! Fully-connected layers over encrypted tensors.
+//!
+//! Weights are either encrypted constant polynomials (MultCC MACs — the
+//! FHESGD/Glyph trainable layers) or plaintext scalars (MultCP — the
+//! transfer-learning frozen layers). The backward pass consumes
+//! reverse-packed error tensors; gradients fall out of the negacyclic
+//! convolution trick at coefficient `batch−1` (DESIGN.md §2.1) and are
+//! re-quantized through the cryptosystem switch before the SGD update —
+//! exactly the `FC-gradient … BGV-TFHE` rows of the paper's Table 3.
+
+use super::engine::GlyphEngine;
+use super::tensor::{EncTensor, PackOrder};
+use crate::bgv::{BgvCiphertext, Plaintext};
+use crate::switch::extract::bit_position;
+use crate::tfhe::LweCiphertext;
+
+/// A layer weight: encrypted (trainable) or plaintext (frozen).
+pub enum Weight {
+    Enc(BgvCiphertext),
+    Plain(Plaintext),
+}
+
+/// A fully-connected layer `u = W·x (+ b)`.
+pub struct FcLayer {
+    /// w[out][in]
+    pub w: Vec<Vec<Weight>>,
+    pub bias: Option<Vec<Weight>>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Quantization shift applied by the following activation.
+    pub out_shift: u32,
+}
+
+impl FcLayer {
+    /// Encrypted trainable layer from plain 8-bit initial weights.
+    pub fn new_encrypted(
+        init: &[Vec<i64>],
+        client: &mut super::engine::ClientKeys,
+        out_shift: u32,
+    ) -> Self {
+        let out_dim = init.len();
+        let in_dim = init[0].len();
+        let w = init
+            .iter()
+            .map(|row| row.iter().map(|&v| Weight::Enc(client.encrypt_scalar(v))).collect())
+            .collect();
+        FcLayer { w, bias: None, in_dim, out_dim, out_shift }
+    }
+
+    /// Frozen plaintext layer (transfer learning).
+    pub fn new_plain(init: &[Vec<i64>], params: &crate::bgv::BgvParams, out_shift: u32) -> Self {
+        let out_dim = init.len();
+        let in_dim = init[0].len();
+        let w = init
+            .iter()
+            .map(|row| row.iter().map(|&v| Weight::Plain(Plaintext::encode_scalar(v, params))).collect())
+            .collect();
+        FcLayer { w, bias: None, in_dim, out_dim, out_shift }
+    }
+
+    /// Forward MACs: `u[j] = Σ_i w[j][i] ⊗ x[i]`. Output keeps `x`'s
+    /// packing order and accumulates scale `x.shift` (weights are 8-bit
+    /// integers at scale 0).
+    pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        assert_eq!(x.len(), self.in_dim);
+        let cts: Vec<BgvCiphertext> = (0..self.out_dim)
+            .map(|j| {
+                let mut acc: Option<BgvCiphertext> = None;
+                for i in 0..self.in_dim {
+                    let term = match &self.w[j][i] {
+                        Weight::Enc(wct) => {
+                            let mut t = wct.clone();
+                            engine.mult_cc(&mut t, &x.cts[i]);
+                            t
+                        }
+                        Weight::Plain(wpt) => {
+                            let mut t = x.cts[i].clone();
+                            engine.mult_cp(&mut t, wpt);
+                            t
+                        }
+                    };
+                    match &mut acc {
+                        None => acc = Some(term),
+                        Some(a) => engine.add_cc(a, &term),
+                    }
+                }
+                let mut u = acc.expect("in_dim ≥ 1");
+                if let Some(bias) = &self.bias {
+                    match &bias[j] {
+                        Weight::Enc(bct) => engine.add_cc(&mut u, bct),
+                        Weight::Plain(bpt) => u.add_plain(bpt, &engine.ctx),
+                    }
+                }
+                u
+            })
+            .collect();
+        EncTensor::new(cts, vec![self.out_dim], x.order, x.shift)
+    }
+
+    /// Backward error propagation: `δ_{l−1}[i] = Σ_j w[j][i] ⊗ δ_l[j]`
+    /// (before the iReLU mask). Keeps the reversed packing.
+    pub fn backward_error(&self, delta: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        assert_eq!(delta.len(), self.out_dim);
+        assert_eq!(delta.order, PackOrder::Reversed);
+        let cts: Vec<BgvCiphertext> = (0..self.in_dim)
+            .map(|i| {
+                let mut acc: Option<BgvCiphertext> = None;
+                for j in 0..self.out_dim {
+                    let term = match &self.w[j][i] {
+                        Weight::Enc(wct) => {
+                            let mut t = wct.clone();
+                            engine.mult_cc(&mut t, &delta.cts[j]);
+                            t
+                        }
+                        Weight::Plain(wpt) => {
+                            let mut t = delta.cts[j].clone();
+                            engine.mult_cp(&mut t, wpt);
+                            t
+                        }
+                    };
+                    match &mut acc {
+                        None => acc = Some(term),
+                        Some(a) => engine.add_cc(a, &term),
+                    }
+                }
+                acc.unwrap()
+            })
+            .collect();
+        EncTensor::new(cts, vec![self.in_dim], PackOrder::Reversed, delta.shift)
+    }
+
+    /// Gradient MACs: `∇w[j][i] = Σ_b x[b][i]·δ[b][j]`, one MultCC each —
+    /// forward-packed x × reverse-packed δ leaves the batch sum at
+    /// coefficient `batch−1`.
+    pub fn gradients(&self, x: &EncTensor, delta: &EncTensor, engine: &GlyphEngine) -> Vec<Vec<BgvCiphertext>> {
+        assert_eq!(x.order, PackOrder::Forward);
+        assert_eq!(delta.order, PackOrder::Reversed);
+        (0..self.out_dim)
+            .map(|j| {
+                (0..self.in_dim)
+                    .map(|i| {
+                        let mut g = x.cts[i].clone();
+                        engine.mult_cc(&mut g, &delta.cts[j]);
+                        g
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// SGD update: re-quantize each gradient through the switch (extracting
+    /// the batch-sum coefficient with an effective learning-rate shift) and
+    /// subtract from the encrypted weights. `grad_shift` plays the role of
+    /// `−log2(lr · scale⁻¹)`: the extracted 8-bit step is `∇ >> grad_shift`.
+    pub fn apply_gradients(
+        &mut self,
+        grads: &[Vec<BgvCiphertext>],
+        grad_shift: u32,
+        engine: &GlyphEngine,
+    ) {
+        let frac = engine.frac_bits();
+        assert!(grad_shift <= frac);
+        let pre_shift = frac - grad_shift;
+        let sum_pos = engine.batch - 1;
+        for (j, row) in grads.iter().enumerate() {
+            for (i, g) in row.iter().enumerate() {
+                if let Weight::Enc(wct) = &mut self.w[j][i] {
+                    // bits of the batch-summed gradient (position batch−1)
+                    let bits = engine.switch_to_bits(g, &[sum_pos], pre_shift);
+                    // identity recomposition at the weighted positions
+                    let truth = LweCiphertext::trivial(
+                        crate::tfhe::encode_bit(true),
+                        engine.gate_ck.params.n,
+                    );
+                    let mut acc: Option<LweCiphertext> = None;
+                    for (bi, b) in bits[0].iter().enumerate() {
+                        let w = engine.gate_and_weighted(b, &truth, bit_position(bi));
+                        match &mut acc {
+                            None => acc = Some(w),
+                            Some(a) => a.add_assign(&w),
+                        }
+                    }
+                    // fresh constant-poly gradient step at coefficient 0
+                    let step = engine.switch_to_bgv(&[acc.unwrap()], &[0]);
+                    engine.sub_cc(wct, &step);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::{ClientKeys, EngineProfile, GlyphEngine};
+
+    fn enc_x(client: &mut ClientKeys, cols: &[Vec<i64>]) -> EncTensor {
+        // cols[i] = values of input scalar i across the batch
+        let cts = cols.iter().map(|v| client.encrypt_batch(v, 0)).collect();
+        EncTensor::new(cts, vec![cols.len()], PackOrder::Forward, 0)
+    }
+
+    #[test]
+    fn forward_matches_plain_mac() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 3, 700);
+        let w = vec![vec![2i64, -3], vec![1, 4]];
+        let layer = FcLayer::new_encrypted(&w, &mut client, 0);
+        let x_cols = vec![vec![5i64, -1, 0], vec![7, 2, -3]];
+        let x = enc_x(&mut client, &x_cols);
+        let u = layer.forward(&x, &eng);
+        for j in 0..2 {
+            let got = client.decrypt_batch(&u.cts[j], 3, 0);
+            let want: Vec<i64> = (0..3)
+                .map(|b| (0..2).map(|i| w[j][i] * x_cols[i][b]).sum())
+                .collect();
+            assert_eq!(got, want, "row {j}");
+        }
+        let s = eng.counter.snapshot();
+        assert_eq!(s.mult_cc, 4);
+        assert_eq!(s.add_cc, 2);
+    }
+
+    #[test]
+    fn plain_weights_use_mult_cp() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 701);
+        let w = vec![vec![3i64, 3]];
+        let layer = FcLayer::new_plain(&w, &eng.ctx.params, 0);
+        let x = enc_x(&mut client, &vec![vec![4i64, -4], vec![1, 1]]);
+        let u = layer.forward(&x, &eng);
+        assert_eq!(client.decrypt_batch(&u.cts[0], 2, 0), vec![15, -9]);
+        let s = eng.counter.snapshot();
+        assert_eq!((s.mult_cc, s.mult_cp), (0, 2));
+    }
+
+    #[test]
+    fn gradient_convolution_trick_sums_batch() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 4, 702);
+        let layer = FcLayer::new_encrypted(&vec![vec![0i64]], &mut client, 0);
+        let x_vals = vec![3i64, -2, 5, 1];
+        let d_vals = vec![2i64, 4, -1, 3]; // per-sample errors
+        let x = enc_x(&mut client, &vec![x_vals.clone()]);
+        let mut d_rev = d_vals.clone();
+        d_rev.reverse();
+        let d_ct = client.encrypt_batch(&d_rev, 0);
+        let delta = EncTensor::new(vec![d_ct], vec![1], PackOrder::Reversed, 0);
+        let grads = layer.gradients(&x, &delta, &eng);
+        // coefficient batch−1 = Σ_b x_b·δ_b
+        let got = client.decrypt_batch(&grads[0][0], 4, 0)[3];
+        let want: i64 = x_vals.iter().zip(&d_vals).map(|(a, b)| a * b).sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn apply_gradients_updates_encrypted_weight() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 703);
+        let mut layer = FcLayer::new_encrypted(&vec![vec![10i64]], &mut client, 0);
+        // craft a gradient ciphertext with batch-sum 24 at coefficient 1
+        let g = client.encrypt_batch(&[0, 24], 0);
+        // grad_shift 1 → step = 24 >> 1 = 12 → w: 10 − 12 = −2
+        layer.apply_gradients(&[vec![g]], 1, &eng);
+        if let Weight::Enc(wct) = &layer.w[0][0] {
+            assert_eq!(client.decrypt_batch(wct, 1, 0), vec![-2]);
+        } else {
+            panic!("weight should be encrypted");
+        }
+        let s = eng.counter.snapshot();
+        assert_eq!(s.switch_b2t, 1);
+        assert_eq!(s.switch_t2b, 1);
+    }
+}

@@ -1,0 +1,45 @@
+//! The quadratic loss derivative (paper Eq. 6):
+//! `isoftmax(d, t) = δ = d − t`, computed in BGV (one SubCC per output
+//! neuron) — the paper keeps this on the BGV side to avoid a switch.
+
+use super::engine::GlyphEngine;
+use super::tensor::{EncTensor, PackOrder};
+
+/// δ = d − labels. Both operands must be reverse-packed (the backward pass
+/// starts here); labels are the client-encrypted one-hot rows.
+pub fn quadratic_loss_delta(d: &EncTensor, labels: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+    assert_eq!(d.len(), labels.len());
+    assert_eq!(d.order, PackOrder::Reversed);
+    assert_eq!(labels.order, PackOrder::Reversed);
+    assert_eq!(d.shift, labels.shift, "operand scales must match");
+    let cts = d
+        .cts
+        .iter()
+        .zip(&labels.cts)
+        .map(|(dc, lc)| {
+            let mut delta = dc.clone();
+            engine.sub_cc(&mut delta, lc);
+            delta
+        })
+        .collect();
+    EncTensor::new(cts, d.shape.clone(), PackOrder::Reversed, d.shift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::{EngineProfile, GlyphEngine};
+
+    #[test]
+    fn delta_is_d_minus_t() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 920);
+        let d_cts = vec![client.encrypt_batch(&[90, 10], 0), client.encrypt_batch(&[10, 80], 0)];
+        let t_cts = vec![client.encrypt_batch(&[127, 0], 0), client.encrypt_batch(&[0, 127], 0)];
+        let d = EncTensor::new(d_cts, vec![2], PackOrder::Reversed, 0);
+        let t = EncTensor::new(t_cts, vec![2], PackOrder::Reversed, 0);
+        let delta = quadratic_loss_delta(&d, &t, &eng);
+        assert_eq!(client.decrypt_batch(&delta.cts[0], 2, 0), vec![-37, 10]);
+        assert_eq!(client.decrypt_batch(&delta.cts[1], 2, 0), vec![10, -47]);
+        assert_eq!(eng.counter.snapshot().add_cc, 2);
+    }
+}

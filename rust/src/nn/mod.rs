@@ -1,0 +1,30 @@
+//! Encrypted neural-network layers (paper §4).
+//!
+//! * [`engine`] — `GlyphEngine`: all evaluator key material + HOP counters;
+//!   every layer op goes through it so Tables 2–8 accounting is exact.
+//! * [`tensor`] — `EncTensor`: one BGV ciphertext per network scalar, the
+//!   mini-batch packed in coefficients (forward order) or reverse order
+//!   (backward tensors, enabling the convolution-trick batch reduction).
+//! * [`linear`] — FC layers with encrypted (MultCC) or plaintext-frozen
+//!   (MultCP, transfer learning) weights; backward + gradients.
+//! * [`conv`] — convolution (transfer learning: plaintext kernels).
+//! * [`pool`] — average pooling (AddCC + shift folding).
+//! * [`batchnorm`] — frozen affine BN (MultCP/AddCP).
+//! * [`activation`] — TFHE ReLU (Alg 1), iReLU (Alg 2), the Figure-4
+//!   softmax MUX-tree unit, and the FHESGD sigmoid-TLU baseline.
+//! * [`loss`] — the quadratic loss derivative (Eq. 6).
+//! * [`quantize`] — plain-side SWALP-style 8-bit quantization helpers used
+//!   by data preparation and the reference pipelines.
+
+pub mod activation;
+pub mod batchnorm;
+pub mod conv;
+pub mod engine;
+pub mod linear;
+pub mod loss;
+pub mod pool;
+pub mod quantize;
+pub mod tensor;
+
+pub use engine::{ClientKeys, GlyphEngine};
+pub use tensor::{EncTensor, PackOrder};

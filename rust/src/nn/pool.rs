@@ -1,0 +1,54 @@
+//! Average pooling (paper §4.1 "Pooling"): BGV additions only; the ÷4 is
+//! folded into the fixed-point shift (power-of-two scales make it free),
+//! exactly why Glyph prefers average over max pooling — no switch needed.
+
+use super::engine::GlyphEngine;
+use super::tensor::EncTensor;
+use crate::bgv::BgvCiphertext;
+
+/// 2×2 average pooling with stride 2 on a CHW tensor. The output carries
+/// `shift + 2` (the sum of four values at scale 2^shift is the average at
+/// scale 2^(shift+2)).
+pub fn avg_pool2(x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+    assert_eq!(x.shape.len(), 3);
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut cts: Vec<BgvCiphertext> = Vec::with_capacity(c * oh * ow);
+    for ch in 0..c {
+        for y in 0..oh {
+            for xx in 0..ow {
+                let mut acc = x.chw(ch, 2 * y, 2 * xx).clone();
+                engine.add_cc(&mut acc, x.chw(ch, 2 * y, 2 * xx + 1));
+                engine.add_cc(&mut acc, x.chw(ch, 2 * y + 1, 2 * xx));
+                engine.add_cc(&mut acc, x.chw(ch, 2 * y + 1, 2 * xx + 1));
+                cts.push(acc);
+            }
+        }
+    }
+    EncTensor::new(cts, vec![c, oh, ow], x.order, x.shift + 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::{EngineProfile, GlyphEngine};
+    use crate::nn::tensor::PackOrder;
+
+    #[test]
+    fn pools_sums_and_bumps_shift() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 900);
+        // 1×4×4 tensor with values = linear index, two batch lanes
+        let cts: Vec<_> = (0..16)
+            .map(|i| client.encrypt_batch(&[i as i64, 2 * i as i64], 0))
+            .collect();
+        let x = EncTensor::new(cts, vec![1, 4, 4], PackOrder::Forward, 3);
+        let out = avg_pool2(&x, &eng);
+        assert_eq!(out.shape, vec![1, 2, 2]);
+        assert_eq!(out.shift, 5);
+        // window (0,0): 0+1+4+5 = 10
+        assert_eq!(client.decrypt_batch(out.chw(0, 0, 0), 2, 0), vec![10, 20]);
+        // window (1,1): 10+11+14+15 = 50
+        assert_eq!(client.decrypt_batch(out.chw(0, 1, 1), 2, 0), vec![50, 100]);
+        assert_eq!(eng.counter.snapshot().add_cc, 12);
+    }
+}

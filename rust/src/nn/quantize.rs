@@ -1,0 +1,92 @@
+//! Plain-side SWALP-style 8-bit quantization (paper §5.2: "We quantized the
+//! inputs, weights and activations … with 8-bit by the training quantization
+//! technique in SWALP").
+//!
+//! Scales are powers of two chosen per tensor from the max-abs statistic;
+//! the encrypted pipeline then only ever needs shifts, which the switch's
+//! digit extraction performs for free.
+
+/// Quantize a float tensor to signed 8-bit with a power-of-two scale.
+/// Returns (values, exponent) with `x ≈ v · 2^exponent`.
+pub fn quantize_i8(xs: &[f64]) -> (Vec<i64>, i32) {
+    let max = xs.iter().fold(0f64, |m, &x| m.max(x.abs()));
+    if max == 0.0 {
+        return (vec![0; xs.len()], 0);
+    }
+    // smallest e with max/2^e ≤ 127
+    let e = (max / 127.0).log2().ceil() as i32;
+    let scale = 2f64.powi(-e);
+    let vs = xs
+        .iter()
+        .map(|&x| ((x * scale).round() as i64).clamp(-127, 127))
+        .collect();
+    (vs, e)
+}
+
+/// Dequantize.
+pub fn dequantize(vs: &[i64], exponent: i32) -> Vec<f64> {
+    let s = 2f64.powi(exponent);
+    vs.iter().map(|&v| v as f64 * s).collect()
+}
+
+/// Re-quantize an i64 tensor (e.g. a 26-bit MAC result) to 8-bit by a
+/// right-shift with round-to-nearest — the plaintext reference of what the
+/// switch's digit extraction does.
+pub fn requantize_shift(xs: &[i64], shift: u32) -> Vec<i64> {
+    xs.iter()
+        .map(|&x| {
+            let r = (x + (1 << (shift - 1))) >> shift;
+            // 8-bit two's complement wrap (the switch drops higher bits)
+            ((r & 0xFF) as u8) as i8 as i64
+        })
+        .collect()
+}
+
+/// Choose the shift that brings `max_abs` into 8-bit range.
+pub fn shift_for(max_abs: i64) -> u32 {
+    let mut s = 0;
+    let mut m = max_abs;
+    while m > 127 {
+        m >>= 1;
+        s += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 - 50.0) * 0.37).collect();
+        let (vs, e) = quantize_i8(&xs);
+        let back = dequantize(&vs, e);
+        let ulp = 2f64.powi(e);
+        for (x, y) in xs.iter().zip(&back) {
+            assert!((x - y).abs() <= ulp, "{x} vs {y}");
+        }
+        assert!(vs.iter().all(|&v| v.abs() <= 127));
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let (vs, e) = quantize_i8(&[0.0; 8]);
+        assert!(vs.iter().all(|&v| v == 0));
+        assert_eq!(e, 0);
+    }
+
+    #[test]
+    fn requantize_matches_switch_semantics() {
+        // matches switch::extract::quantize_plain's round-to-nearest
+        assert_eq!(requantize_shift(&[5 << 8, -(5i64 << 8), (5 << 8) + 200], 8), vec![5, -5, 6]);
+    }
+
+    #[test]
+    fn shift_for_ranges() {
+        assert_eq!(shift_for(100), 0);
+        assert_eq!(shift_for(127), 0);
+        assert_eq!(shift_for(128), 1);
+        assert_eq!(shift_for(127 * 127 * 784), 17);
+    }
+}

@@ -1,0 +1,71 @@
+//! `EncTensor`: an encrypted activation/error tensor.
+//!
+//! One BGV ciphertext per network scalar; the mini-batch lives in the
+//! polynomial coefficients. Forward tensors pack sample b at coefficient b;
+//! backward tensors pack sample b at coefficient `batch−1−b` (*reversed*),
+//! so that a forward × backward MultCC leaves the batch-summed product —
+//! the SGD gradient reduction — at coefficient `batch−1` (the negacyclic
+//! convolution trick; DESIGN.md §2.1).
+
+use crate::bgv::BgvCiphertext;
+
+/// Packing order of the batch dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackOrder {
+    /// sample b ↦ coefficient b.
+    Forward,
+    /// sample b ↦ coefficient batch−1−b.
+    Reversed,
+}
+
+impl PackOrder {
+    /// Coefficient positions of the batch lanes in this order.
+    pub fn positions(&self, batch: usize) -> Vec<usize> {
+        match self {
+            PackOrder::Forward => (0..batch).collect(),
+            PackOrder::Reversed => (0..batch).rev().collect(),
+        }
+    }
+}
+
+/// An encrypted tensor: `cts[i]` holds scalar `i` (row-major over `shape`)
+/// for every sample of the mini-batch.
+pub struct EncTensor {
+    pub cts: Vec<BgvCiphertext>,
+    pub shape: Vec<usize>,
+    pub order: PackOrder,
+    /// Fixed-point scale: stored value = real value · 2^shift.
+    pub shift: u32,
+}
+
+impl EncTensor {
+    pub fn new(cts: Vec<BgvCiphertext>, shape: Vec<usize>, order: PackOrder, shift: u32) -> Self {
+        debug_assert_eq!(cts.len(), shape.iter().product::<usize>());
+        EncTensor { cts, shape, order, shift }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cts.is_empty()
+    }
+
+    /// Index into a CHW-shaped tensor.
+    pub fn chw(&self, c: usize, h: usize, w: usize) -> &BgvCiphertext {
+        let (_ch, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
+        &self.cts[(c * hh + h) * ww + w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_positions() {
+        assert_eq!(PackOrder::Forward.positions(4), vec![0, 1, 2, 3]);
+        assert_eq!(PackOrder::Reversed.positions(4), vec![3, 2, 1, 0]);
+    }
+}

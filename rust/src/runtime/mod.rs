@@ -1,0 +1,133 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts (HLO text,
+//! produced once by `make artifacts`) and execute them from Rust. Python is
+//! never on this path — the binary is self-contained once `artifacts/`
+//! exists.
+//!
+//! Used by the accuracy experiments (Figures 7/8: plaintext-domain quantized
+//! training, exactly as the paper evaluates accuracy), by transfer-learning
+//! pre-training, and by the optional XLA offload of batched NTT MACs.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus the artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifact_dir: PathBuf,
+}
+
+/// One compiled executable.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifact directory: `$GLYPH_ARTIFACTS` or `./artifacts`.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("GLYPH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(dir)
+    }
+
+    /// Load and compile `<name>.hlo.txt`.
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Artifact { exe, name: name.to_string() })
+    }
+}
+
+impl Artifact {
+    /// Execute on f32 inputs; returns the flattened f32 outputs of the
+    /// result tuple (artifacts are lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("executing {}", self.name))?;
+        let parts = result.decompose_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                // outputs may be f32 or i32/u8 predictions; convert via f32
+                lit.convert(xla::PrimitiveType::F32)?
+                    .to_vec::<f32>()
+                    .context("output to_vec")
+            })
+            .collect()
+    }
+}
+
+impl Artifact {
+    /// Execute on u64 inputs (the ntt_mac kernel path); returns u64 outputs.
+    pub fn run_u64(&self, inputs: &[(&[u64], &[usize])]) -> Result<Vec<Vec<u64>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims).context("reshape input")
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("executing {}", self.name))?;
+        let parts = result.decompose_tuple()?;
+        parts.into_iter().map(|lit| lit.to_vec::<u64>().context("output to_vec")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smoke-tests require the artifacts; they are built by `make artifacts`
+    /// before `cargo test` (the Makefile ordering).
+    fn have_artifacts() -> bool {
+        Path::new("artifacts/ntt_mac.hlo.txt").exists()
+    }
+
+    #[test]
+    fn pjrt_client_comes_up() {
+        let rt = Runtime::new("artifacts").expect("client");
+        assert!(rt.client.device_count() >= 1);
+    }
+
+    #[test]
+    fn ntt_mac_artifact_matches_native_ntt() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new("artifacts").unwrap();
+        let art = rt.load("ntt_mac").unwrap();
+        // The kernel computes acc' = (acc + a*b) mod p element-wise over
+        // (BATCH, N) u64 arrays, exported with fixed shapes (8, 256) and
+        // p = 469762049 (see python/compile/kernels/ntt_mac.py).
+        let p = 469762049u64;
+        let (bsz, n) = (8usize, 256usize);
+        let a: Vec<u64> = (0..bsz * n).map(|i| (i as u64 * 7919 + 1) % p).collect();
+        let b: Vec<u64> = (0..bsz * n).map(|i| (i as u64 * 104729 + 5) % p).collect();
+        let acc: Vec<u64> = vec![3; bsz * n];
+        let out = art
+            .run_u64(&[(&a, &[bsz, n]), (&b, &[bsz, n]), (&acc, &[bsz, n])])
+            .unwrap();
+        for i in 0..(bsz * n) {
+            let want = (3 + crate::math::mul_mod(a[i], b[i], p)) % p;
+            assert_eq!(out[0][i], want, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! BGV → TFHE: steps ➊–➌ of the paper's Figure 5 (left), plus the 8-bit
+//! digit extraction that feeds Algorithms 1–2.
+//!
+//! Pipeline per ciphertext (once) and per batch lane:
+//!
+//! 1. `×Δ` with Δ = (q−1)/t — the exact LSB→MSB module isomorphism
+//!    (Chimera Lemma 1; noise maps to −e, it does not grow);
+//! 2. `SampleExtract(lane b)` — an N-dimensional LWE mod q under the BGV
+//!    secret's coefficient vector;
+//! 3. LWE modulus switch q → 2^32 (RNS-to-torus rescale, exact integer
+//!    arithmetic, error < L ulp);
+//! 4. LWE key switch N → n onto the TFHE key (functional key-switching,
+//!    Theorem 2 of Chimera as cited in the paper);
+//! 5. digit extraction: bit k (MSB-first) = sign-PBS of `2^k · lwe`.
+//!    Doubling discards already-decided top bits mod 1, so the extractions
+//!    are independent — a boundary-noise flip costs at most 1 ulp of the
+//!    8-bit quantization and cannot cascade.
+
+use super::{SWITCH_BITS, VALUE_POS};
+use crate::bgv::{BgvCiphertext, BgvSecretKey};
+use crate::math::rng::GlyphRng;
+use crate::tfhe::{LweCiphertext, LweKey, LweKeySwitchKey, TestPoly, TfheCloudKey, TfheParams, MU_BIT};
+
+/// Key material for the BGV→TFHE direction.
+pub struct BgvToTfheSwitch {
+    /// N_bgv (ternary BGV coefficients) → n (TFHE binary) at torus32.
+    pub ksk: LweKeySwitchKey,
+    /// Δ_ℓ per level (RNS residues).
+    deltas: Vec<Vec<u64>>,
+    /// RNS→torus rescale precomputation per level: for limb i at level ℓ,
+    /// `(q_ℓ/q_i)^{-1} mod q_i`.
+    qtilde: Vec<Vec<u64>>,
+    primes: Vec<u64>,
+}
+
+impl BgvToTfheSwitch {
+    pub fn generate(
+        bgv_sk: &BgvSecretKey,
+        tfhe_key: &LweKey,
+        params: &TfheParams,
+        rng: &mut GlyphRng,
+    ) -> Self {
+        let src = LweKey::from_coeffs(bgv_sk.coeffs_i32());
+        // base 4^7 = 2^28 decomposition: remainder error ≈ 2^3·||s||₁ ≈ 2^13.
+        let ksk = LweKeySwitchKey::generate(&src, tfhe_key, 4, 7, params.alpha_lwe, rng);
+        let ctx = &bgv_sk.ctx;
+        let deltas = (1..=ctx.top_level()).map(|l| ctx.delta_rns(l)).collect();
+        let qtilde = (1..=ctx.top_level())
+            .map(|l| {
+                let rctx = ctx.ctx_at(l);
+                (0..l).map(|i| rctx.q_over_qi_inv[i]).collect()
+            })
+            .collect();
+        BgvToTfheSwitch { ksk, deltas, qtilde, primes: ctx.params.primes.clone() }
+    }
+
+    /// Extract lane `b` of an MSB-mapped ciphertext as a torus32 LWE under
+    /// the BGV coefficient key.
+    ///
+    /// The RNS→torus rescale uses `x/q mod 1 = Σ_i [x_i·q̃_i]_{q_i}/q_i mod 1`
+    /// with exact u128 division per limb (≤ 1 ulp per limb).
+    fn extract_lane_torus32(&self, c0: &[Vec<u64>], c1: &[Vec<u64>], level: usize, lane: usize, n: usize) -> LweCiphertext {
+        let to_torus = |res: &dyn Fn(usize) -> u64| -> u32 {
+            let mut acc = 0u64; // torus32 with 32 fractional bits, wrapping
+            for i in 0..level {
+                let qi = self.primes[i];
+                let xi = res(i);
+                let y = crate::math::modarith::mul_mod(xi, self.qtilde[level - 1][i], qi);
+                // (y << 32) / qi, rounded
+                let term = (((y as u128) << 32) + (qi as u128 / 2)) / qi as u128;
+                acc = acc.wrapping_add(term as u64);
+            }
+            acc as u32
+        };
+        // b-coefficient of the LWE = c0[lane]
+        let b = to_torus(&|i| c0[i][lane]);
+        // a_j = −c1[lane−j] for j ≤ lane, +c1[N+lane−j] for j > lane
+        let a: Vec<u32> = (0..n)
+            .map(|j| {
+                if j <= lane {
+                    let v = to_torus(&|i| c1[i][lane - j]);
+                    v.wrapping_neg()
+                } else {
+                    to_torus(&|i| c1[i][n + lane - j])
+                }
+            })
+            .collect();
+        LweCiphertext { a, b }
+    }
+
+    /// Switch `lanes` batch lanes of a BGV ciphertext onto the TFHE key.
+    /// The ciphertext's plaintext must hold values `v·2^frac` with `v` the
+    /// 8-bit quantity to deliver (`frac = log2 t − 8`); the sub-quantization
+    /// bits ride along as the SWALP rounding residue.
+    ///
+    /// Returns one torus32 LWE per lane with phase `v·2^24 + junk`.
+    pub fn to_torus_lanes(&self, ct: &BgvCiphertext, lanes: usize) -> Vec<LweCiphertext> {
+        let positions: Vec<usize> = (0..lanes).collect();
+        self.to_torus_positions(ct, &positions)
+    }
+
+    /// Same, for arbitrary coefficient positions (reverse-packed backward
+    /// tensors and the convolution-trick gradient coefficient use this).
+    pub fn to_torus_positions(&self, ct: &BgvCiphertext, positions: &[usize]) -> Vec<LweCiphertext> {
+        let level = ct.level;
+        // ×Δ : LSB→MSB (exact, noise-preserving)
+        let mut c = ct.clone();
+        c.rns_scalar_mul_assign(&self.deltas[level - 1]);
+        c.c0.to_coeff();
+        c.c1.to_coeff();
+        let n = c.c0.n();
+        positions
+            .iter()
+            .map(|&lane| {
+                let lwe_q = self.extract_lane_torus32(&c.c0.res, &c.c1.res, level, lane, n);
+                self.ksk.switch(&lwe_q)
+            })
+            .collect()
+    }
+
+    /// Full BGV→TFHE switch: per lane, the 8 two's-complement bits
+    /// (MSB/sign first) of the quantized value, as gate-ready ciphertexts.
+    ///
+    /// `ck` provides the bootstrapping for the digit extraction (one
+    /// sign-PBS per bit).
+    pub fn to_bits(&self, ct: &BgvCiphertext, lanes: usize, ck: &TfheCloudKey) -> Vec<Vec<LweCiphertext>> {
+        let positions: Vec<usize> = (0..lanes).collect();
+        self.to_bits_positions(ct, &positions, ck)
+    }
+
+    /// [`Self::to_bits`] for arbitrary coefficient positions.
+    pub fn to_bits_positions(
+        &self,
+        ct: &BgvCiphertext,
+        positions: &[usize],
+        ck: &TfheCloudKey,
+    ) -> Vec<Vec<LweCiphertext>> {
+        let tv = TestPoly::constant(ck.params.big_n, MU_BIT.wrapping_neg());
+        self.to_torus_positions(ct, positions)
+            .into_iter()
+            .map(|mut lwe| {
+                // Half-window guard: turns the floor quantization into
+                // round-to-nearest and moves exact grid values off the PBS
+                // decision boundaries (otherwise the LSB of an exact value
+                // sits exactly on a sign boundary and flips with the noise).
+                lwe.add_constant(1 << (VALUE_POS - 1));
+                (0..SWITCH_BITS)
+                    .map(|k| {
+                        let mut scaled = lwe.clone();
+                        scaled.scalar_mul_assign(1 << k);
+                        // sign-PBS: phase in [0, 1/2) means top bit 0 →
+                        // output must encode FALSE; the constant −μ test
+                        // polynomial yields −μ on the positive half, +μ on
+                        // the negative half = bit encoding of the top bit.
+                        ck.pbs(&scaled, &tv)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Reference decoding of the value the switch delivers (for tests and the
+/// refresh authority): the top 8 bits of `m mod t`, round-to-nearest
+/// (matching the half-window guard in `to_bits`), as two's complement.
+pub fn quantize_plain(m: i64, t: u64) -> i64 {
+    let frac = t.trailing_zeros() - SWITCH_BITS;
+    let mu = (m.rem_euclid(t as i64)) as u64;
+    let v = ((mu + (1 << (frac - 1))) >> frac) & 0xFF;
+    if v >= 128 {
+        v as i64 - 256
+    } else {
+        v as i64
+    }
+}
+
+/// Torus position of bit `i` (MSB-first) of the 8-bit value.
+pub fn bit_position(i: usize) -> u32 {
+    VALUE_POS + (SWITCH_BITS - 1 - i as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bgv::Plaintext;
+    use crate::switch::tests::fixture;
+    use crate::tfhe::decode_bit;
+
+    #[test]
+    fn torus_lanes_carry_msb_value() {
+        let mut f = fixture(501);
+        let t = f.bgv_ctx.params.t;
+        let frac = t.trailing_zeros() - SWITCH_BITS;
+        let values: Vec<i64> = vec![3, -3, 77, -77, 127, -128];
+        let scaled: Vec<i64> = values.iter().map(|&v| v << frac).collect();
+        let pt = Plaintext::encode_batch(&scaled, &f.bgv_ctx.params);
+        let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
+        let lwes = f.fwd.to_torus_lanes(&ct, values.len());
+        for (i, lwe) in lwes.iter().enumerate() {
+            let phase = lwe.phase(&f.lwe_key);
+            let want = ((values[i] as i64) << VALUE_POS) as u32; // v·2^24
+            let d = phase.wrapping_sub(want);
+            let dist = d.min(d.wrapping_neg());
+            assert!(dist < 1 << 20, "lane {i}: phase={phase:#x} want={want:#x}");
+        }
+    }
+
+    #[test]
+    fn to_bits_gives_twos_complement_msb_first() {
+        let mut f = fixture(502);
+        let t = f.bgv_ctx.params.t;
+        let frac = t.trailing_zeros() - SWITCH_BITS;
+        let values: Vec<i64> = vec![5, -6, 100, -100];
+        let scaled: Vec<i64> = values.iter().map(|&v| v << frac).collect();
+        let pt = Plaintext::encode_batch(&scaled, &f.bgv_ctx.params);
+        let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
+        let bits = f.fwd.to_bits(&ct, values.len(), &f.extract_ck);
+        for (lane, lane_bits) in bits.iter().enumerate() {
+            let byte = (values[lane] & 0xFF) as u8;
+            for (i, bct) in lane_bits.iter().enumerate() {
+                let want = (byte >> (7 - i)) & 1 == 1;
+                let got = decode_bit(bct.phase(&f.lwe_key));
+                assert_eq!(got, want, "lane {lane} bit {i} (value {})", values[lane]);
+            }
+        }
+    }
+
+    #[test]
+    fn sub_quantization_bits_are_dropped() {
+        // value·2^frac + residue must still deliver `value`.
+        let mut f = fixture(503);
+        let t = f.bgv_ctx.params.t;
+        let frac = t.trailing_zeros() - SWITCH_BITS;
+        let residue = (1i64 << frac) / 3; // well inside the window
+        let values: Vec<i64> = vec![9, -9, 55];
+        let scaled: Vec<i64> = values.iter().map(|&v| (v << frac) + residue).collect();
+        let pt = Plaintext::encode_batch(&scaled, &f.bgv_ctx.params);
+        let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
+        let bits = f.fwd.to_bits(&ct, values.len(), &f.extract_ck);
+        for (lane, lane_bits) in bits.iter().enumerate() {
+            let mut got = 0u8;
+            for bct in lane_bits {
+                got = (got << 1) | decode_bit(bct.phase(&f.lwe_key)) as u8;
+            }
+            assert_eq!(got as i8 as i64, values[lane], "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn quantize_plain_reference() {
+        let t = 1u64 << 16;
+        assert_eq!(quantize_plain(0, t), 0);
+        assert_eq!(quantize_plain(5 << 8, t), 5);
+        assert_eq!(quantize_plain(-(5i64 << 8), t), -5);
+        assert_eq!(quantize_plain((5 << 8) + 100, t), 5); // rounds down
+        assert_eq!(quantize_plain((5 << 8) + 200, t), 6); // rounds up
+        assert_eq!(quantize_plain(127 << 8, t), 127);
+        assert_eq!(quantize_plain(-(128i64 << 8), t), -128);
+    }
+}

@@ -1,0 +1,114 @@
+//! The cryptosystem switch between BGV and TFHE — the paper's §4.2.
+//!
+//! * [`extract`] — BGV→TFHE: the Δ scalar map (Chimera Lemma-1 analogue,
+//!   exact here because q ≡ 1 mod t), `SampleExtract` of each batch lane,
+//!   LWE modulus switch q → 2^32 and key switch onto the TFHE key, then
+//!   8-bit digit extraction by programmable bootstrapping.
+//! * [`repack`] — TFHE→BGV: weighted gate-bootstrap outputs recomposed by
+//!   plain LWE addition (Theorem-3 step ➊: outputs restricted to the 2^24
+//!   grid = multiples of p^{−r}), the packing functional key switch placing
+//!   lane b at coefficient X^b under the BGV ring key, and the modulus
+//!   raise to q with the −t MSB→LSB map, performed by the refresh authority
+//!   (the documented bootstrapping substitution, DESIGN.md §5).
+//!
+//! Values crossing the switch are 8-bit signed fixed-point (the paper's
+//! quantization); the bits delivered to Algorithms 1–2 are two's-complement,
+//! MSB (sign) first.
+
+pub mod extract;
+pub mod repack;
+
+pub use extract::BgvToTfheSwitch;
+pub use repack::TfheToBgvSwitch;
+
+/// Bit width of values crossing the switch (paper: 8-bit quantization).
+pub const SWITCH_BITS: u32 = 8;
+
+/// Torus position of the value LSB: values live at `v · 2^VALUE_POS` on the
+/// torus, v an 8-bit two's-complement integer.
+pub const VALUE_POS: u32 = 32 - SWITCH_BITS;
+
+#[cfg(test)]
+mod tests {
+    use super::extract::BgvToTfheSwitch;
+    use super::repack::TfheToBgvSwitch;
+    use crate::bgv::{BgvContext, BgvParams, BgvSecretKey, KeyAuthority, NoiseRefresher, Plaintext};
+    use crate::math::rng::GlyphRng;
+    use crate::tfhe::{LweKey, TfheCloudKey, TfheParams, TrlweKey};
+    use std::sync::Arc;
+
+    pub(crate) struct SwitchFixture {
+        pub bgv_ctx: Arc<BgvContext>,
+        pub bgv_sk: Arc<BgvSecretKey>,
+        pub lwe_key: LweKey,
+        pub gate_ck: TfheCloudKey,
+        pub extract_ck: TfheCloudKey,
+        pub fwd: BgvToTfheSwitch,
+        pub bwd: TfheToBgvSwitch,
+        pub auth: Arc<KeyAuthority>,
+        pub rng: GlyphRng,
+    }
+
+    pub(crate) fn fixture(seed: u64) -> SwitchFixture {
+        let bgv_ctx = BgvContext::new(BgvParams::test_params());
+        let mut rng = GlyphRng::new(seed);
+        let bgv_sk = Arc::new(BgvSecretKey::generate(&bgv_ctx, &mut rng));
+        let params = TfheParams::test_params();
+        let lwe_key = LweKey::generate_binary(params.n, &mut rng);
+        let trlwe_key = TrlweKey::generate(params.big_n, &mut rng);
+        let gate_ck = TfheCloudKey::generate(&lwe_key, &trlwe_key, &params, &mut rng);
+        let ext_params = TfheParams::test_extract_params();
+        let ext_ring = TrlweKey::generate(ext_params.big_n, &mut rng);
+        let extract_ck = TfheCloudKey::generate(&lwe_key, &ext_ring, &ext_params, &mut rng);
+        let fwd = BgvToTfheSwitch::generate(&bgv_sk, &lwe_key, &params, &mut rng);
+        let bwd = TfheToBgvSwitch::generate(&trlwe_key, &bgv_sk, &mut rng);
+        let auth = KeyAuthority::new(bgv_sk.clone(), GlyphRng::new(seed + 1));
+        SwitchFixture { bgv_ctx, bgv_sk, lwe_key, gate_ck, extract_ck, fwd, bwd, auth, rng }
+    }
+
+    #[test]
+    fn full_round_trip_bgv_to_tfhe_to_bgv() {
+        // Encrypt 8-bit values in BGV, switch to TFHE bits, recompose the
+        // bits at their weighted positions (identity function), pack back to
+        // BGV, and compare.
+        let mut f = fixture(500);
+        let values: Vec<i64> = vec![0, 1, -1, 42, -42, 100, -128, 127];
+        // Scale values to the top 8 bits of the plaintext ring: t = 2^16 in
+        // the test profile, so the switch sees v·2^8 (frac_bits = 8).
+        let frac = f.bgv_ctx.params.t.trailing_zeros() - super::SWITCH_BITS;
+        let scaled: Vec<i64> = values.iter().map(|&v| v << frac).collect();
+        let pt = Plaintext::encode_batch(&scaled, &f.bgv_ctx.params);
+        let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
+
+        let lanes = values.len();
+        let bits = f.fwd.to_bits(&ct, lanes, &f.extract_ck);
+        assert_eq!(bits.len(), lanes);
+        assert_eq!(bits[0].len(), super::SWITCH_BITS as usize);
+
+        // Identity recomposition: AND each bit with an encrypted TRUE at its
+        // weighted output position.
+        let t_enc = crate::tfhe::encode_bit(true);
+        let truth =
+            crate::tfhe::LweCiphertext::encrypt(t_enc, &f.lwe_key, f.gate_ck.params.alpha_lwe, &mut f.rng);
+        let recomposed: Vec<crate::tfhe::LweCiphertext> = bits
+            .iter()
+            .map(|lane_bits| {
+                let mut acc: Option<crate::tfhe::LweCiphertext> = None;
+                for (i, b) in lane_bits.iter().enumerate() {
+                    let pos = super::VALUE_POS + (super::SWITCH_BITS - 1 - i as u32);
+                    let w = f.gate_ck.and_weighted_raw(b, &truth, pos);
+                    match &mut acc {
+                        None => acc = Some(w),
+                        Some(a) => a.add_assign(&w),
+                    }
+                }
+                acc.unwrap()
+            })
+            .collect();
+
+        let out = f.bwd.pack_and_raise(&recomposed, &f.auth);
+        let got = f.auth.sk.decrypt(&out).decode_batch(lanes);
+        assert_eq!(got, values);
+        assert_eq!(f.auth.refresh_count(), 1);
+    }
+}

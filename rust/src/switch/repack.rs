@@ -1,0 +1,150 @@
+//! TFHE → BGV: steps ➊–➌ of the paper's Figure 5 (right).
+//!
+//! ➊ The activation's gate bootstraps already emit every output bit at its
+//!   weighted torus position `2^(24+i)` (gates::and_weighted_raw), so a
+//!   plain LWE sum recomposes the 8-bit value on the exact 2^24 grid — the
+//!   "functional gate bootstrapping restricted to multiples of p^{−r}".
+//! ➋ The packing functional key switch places lane b's LWE at coefficient
+//!   `X^b` of one ring ciphertext under the BGV secret's coefficients.
+//! ➌ The modulus raise 2^32 → q with the −t MSB→LSB map is performed by the
+//!   refresh authority (the documented substitute for the recryption HElib
+//!   would run here, DESIGN.md §5): the packed torus ciphertext is opened on
+//!   the 8-bit grid and re-encrypted as a fresh top-level BGV ciphertext.
+
+use crate::bgv::{BgvCiphertext, BgvSecretKey, KeyAuthority, Plaintext};
+use crate::math::rng::GlyphRng;
+use crate::tfhe::keyswitch::PackingKeySwitchKey;
+use crate::tfhe::{LweCiphertext, TrlweCiphertext, TrlweKey};
+
+use super::VALUE_POS;
+
+/// Key material for the TFHE→BGV direction.
+pub struct TfheToBgvSwitch {
+    /// gate-profile extracted key (dim N_gate) → BGV ring key packing.
+    pub pksk: PackingKeySwitchKey,
+}
+
+impl TfheToBgvSwitch {
+    /// `gate_ring` is the TRLWE key whose extracted key the activation
+    /// outputs live under; the destination ring key is the BGV secret.
+    pub fn generate(gate_ring: &TrlweKey, bgv_sk: &BgvSecretKey, rng: &mut GlyphRng) -> Self {
+        let src = gate_ring.extracted_lwe_key();
+        let dst_ring = TrlweKey::from_coeffs(bgv_sk.coeffs_i32());
+        // base 4^7: decomposition remainder ≈ 2^4·||s||₁ ≈ 2^15 ≪ 2^23 grid margin.
+        let pksk = PackingKeySwitchKey::generate(&src, &dst_ring, 4, 7, 1e-9, rng);
+        TfheToBgvSwitch { pksk }
+    }
+
+    /// Pack one recomposed LWE per batch lane into a single torus ring
+    /// ciphertext under the BGV key (steps ➊–➋; all real lattice ops).
+    pub fn pack(&self, lanes: &[LweCiphertext]) -> TrlweCiphertext {
+        let positions: Vec<usize> = (0..lanes.len()).collect();
+        self.pack_at(lanes, &positions)
+    }
+
+    /// Pack at arbitrary coefficient positions (reverse packing for the
+    /// backward pass's convolution-trick gradients).
+    pub fn pack_at(&self, lanes: &[LweCiphertext], positions: &[usize]) -> TrlweCiphertext {
+        let refs: Vec<&LweCiphertext> = lanes.iter().collect();
+        self.pksk.pack(&refs, positions)
+    }
+
+    /// Pack at positions then raise via the authority, reading values back
+    /// from those same positions into batch order.
+    pub fn pack_at_and_raise(
+        &self,
+        lanes: &[LweCiphertext],
+        positions: &[usize],
+        auth: &KeyAuthority,
+    ) -> BgvCiphertext {
+        let packed = self.pack_at(lanes, positions);
+        raise_torus_to_bgv_positions(&packed, positions, auth)
+    }
+
+    /// Steps ➊–➌: pack, then raise to a fresh BGV ciphertext via the
+    /// refresh authority. Values are read on the 2^24 grid as signed 8-bit.
+    pub fn pack_and_raise(&self, lanes: &[LweCiphertext], auth: &KeyAuthority) -> BgvCiphertext {
+        let packed = self.pack(lanes);
+        raise_torus_to_bgv(&packed, lanes.len(), auth)
+    }
+}
+
+/// The modulus raise performed by the refresh authority: open the packed
+/// torus ciphertext on the 8-bit grid and re-encrypt at top level
+/// (counted as one refresh for HOP accounting).
+pub fn raise_torus_to_bgv(packed: &TrlweCiphertext, lanes: usize, auth: &KeyAuthority) -> BgvCiphertext {
+    let positions: Vec<usize> = (0..lanes).collect();
+    raise_torus_to_bgv_positions(packed, &positions, auth)
+}
+
+/// [`raise_torus_to_bgv`] reading the given coefficient positions; each
+/// value is re-encoded at the *same* coefficient it was packed at, so
+/// reversed packing survives the modulus raise.
+pub fn raise_torus_to_bgv_positions(
+    packed: &TrlweCiphertext,
+    positions: &[usize],
+    auth: &KeyAuthority,
+) -> BgvCiphertext {
+    let ring = TrlweKey::from_coeffs(auth.sk.coeffs_i32());
+    let phases = packed.phase(&ring);
+    let n = auth.ctx().params.n;
+    let mut values = vec![0i64; n];
+    for &p in positions {
+        let ph = phases[p];
+        let v = (ph.wrapping_add(1 << (VALUE_POS - 1)) >> VALUE_POS) & 0xFF;
+        values[p] = if v >= 128 { v as i64 - 256 } else { v as i64 };
+    }
+    let pt = Plaintext::encode_batch(&values, &auth.ctx().params);
+    // Charge the re-encryption through the refresh interface so the count
+    // (and the cost model's recrypt charge) stays honest.
+    let trivial = BgvCiphertext::trivial(&pt, auth.ctx(), auth.ctx().top_level());
+    use crate::bgv::NoiseRefresher;
+    auth.refresh(&trivial)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::switch::tests::fixture;
+    use crate::switch::VALUE_POS;
+
+    #[test]
+    fn pack_places_lane_values() {
+        let f = fixture(600);
+        // Trivial LWEs (a = 0) at v·2^24 exercise the packing path without
+        // needing the gate ring's secret (they are valid under any key).
+        let values: Vec<i64> = vec![1, -2, 100, -100];
+        let lwes: Vec<crate::tfhe::LweCiphertext> = values
+            .iter()
+            .map(|&v| {
+                crate::tfhe::LweCiphertext::trivial(((v as i64) << VALUE_POS) as u32, f.bwd.pksk.pk.len())
+            })
+            .collect();
+        let packed = f.bwd.pack(&lwes);
+        let ring = TrlweKey::from_coeffs(f.bgv_sk.coeffs_i32());
+        let phases = packed.phase(&ring);
+        for (i, &v) in values.iter().enumerate() {
+            let want = ((v as i64) << VALUE_POS) as u32;
+            let d = phases[i].wrapping_sub(want);
+            let dist = d.min(d.wrapping_neg());
+            assert!(dist < 1 << 22, "lane {i}: {:#x} vs {want:#x}", phases[i]);
+        }
+    }
+
+    #[test]
+    fn pack_and_raise_delivers_fresh_bgv() {
+        let f = fixture(601);
+        let values: Vec<i64> = vec![7, -8, 127, -128, 0];
+        let lwes: Vec<crate::tfhe::LweCiphertext> = values
+            .iter()
+            .map(|&v| {
+                crate::tfhe::LweCiphertext::trivial(((v as i64) << VALUE_POS) as u32, f.bwd.pksk.pk.len())
+            })
+            .collect();
+        let ct = f.bwd.pack_and_raise(&lwes, &f.auth);
+        assert_eq!(ct.level, f.bgv_ctx.top_level());
+        assert_eq!(f.bgv_sk.decrypt(&ct).decode_batch(values.len()), values);
+        // fresh noise
+        assert!(f.bgv_sk.noise_magnitude(&ct) < (f.bgv_ctx.params.t as i128) << 20);
+    }
+}

@@ -1,0 +1,184 @@
+//! Blind rotation and programmable bootstrapping (PBS).
+//!
+//! The PBS evaluates an arbitrary (negacyclic) function of the phase while
+//! resetting noise: the paper's gate bootstraps, its softmax lookup unit and
+//! our 8-bit digit extraction in the cryptosystem switch are all PBS calls
+//! with different test polynomials.
+
+use super::lwe::{LweCiphertext, LweKey};
+use super::params::TfheParams;
+use super::tgsw::TrgswCiphertext;
+use super::tlwe::{TrlweCiphertext, TrlweKey};
+use crate::math::rng::GlyphRng;
+
+/// A test polynomial for the PBS: `N` torus values, one per phase window of
+/// width `1/2N` covering the positive half-torus `[0, 1/2)`; the negative
+/// half is the negacyclic mirror `f(x + 1/2) = −f(x)`.
+#[derive(Clone)]
+pub struct TestPoly {
+    pub coeffs: Vec<u32>,
+}
+
+impl TestPoly {
+    /// Build from a window function: `f(w)` is the output for phases in
+    /// `[w/2N, (w+1)/2N)`, `w ∈ 0..N`.
+    pub fn from_fn(n: usize, f: impl Fn(usize) -> u32) -> Self {
+        TestPoly { coeffs: (0..n).map(f).collect() }
+    }
+
+    /// Constant test polynomial: sign bootstrap with output ±mu.
+    pub fn constant(n: usize, mu: u32) -> Self {
+        TestPoly { coeffs: vec![mu; n] }
+    }
+}
+
+/// Bootstrapping key: a TRGSW encryption of every LWE key bit, plus the
+/// TRLWE key it rides on (kept private to the key owner; the server only
+/// sees the TRGSW material).
+pub struct BootstrapKey {
+    pub params: TfheParams,
+    pub bsk: Vec<TrgswCiphertext>,
+    /// FFT plan shared with the TRLWE key (same ring degree).
+    pub fft: std::sync::Arc<crate::math::fft::TorusFft>,
+}
+
+impl BootstrapKey {
+    /// Generate for LWE key `lwe_key` under TRLWE key `trlwe_key`.
+    pub fn generate(
+        lwe_key: &LweKey,
+        trlwe_key: &TrlweKey,
+        params: &TfheParams,
+        rng: &mut GlyphRng,
+    ) -> Self {
+        assert_eq!(trlwe_key.n, params.big_n);
+        let bsk = lwe_key
+            .s
+            .iter()
+            .map(|&si| {
+                debug_assert!(si == 0 || si == 1, "blind rotation needs a binary LWE key");
+                TrgswCiphertext::encrypt_scalar(si, trlwe_key, params, rng)
+            })
+            .collect();
+        BootstrapKey { params: params.clone(), bsk, fft: trlwe_key.fft.clone() }
+    }
+
+    /// Blind rotation: `acc ← X^{−b̄ + Σ ā_i s_i} · testv` as a TRLWE.
+    pub fn blind_rotate(&self, lwe: &LweCiphertext, testv: &TestPoly) -> TrlweCiphertext {
+        let n2 = 2 * self.params.big_n as u32;
+        let log2n2 = n2.trailing_zeros();
+        let (bara, barb) = lwe.rescale_to(log2n2);
+        // acc = X^{-barb} * testv
+        let neg_rot = (n2 - barb) % n2;
+        let mut acc = TrlweCiphertext::trivial(&testv.coeffs).rotate(neg_rot as usize);
+        for (i, bsk_i) in self.bsk.iter().enumerate() {
+            if bara[i] == 0 {
+                continue;
+            }
+            let rotated = acc.rotate(bara[i] as usize);
+            acc = bsk_i.cmux(&rotated, &acc, &self.fft);
+        }
+        acc
+    }
+
+    /// Programmable bootstrap: returns an LWE ciphertext (under the TRLWE
+    /// extracted key, dimension N) of `f(phase)` with fresh noise.
+    pub fn bootstrap(&self, lwe: &LweCiphertext, testv: &TestPoly) -> LweCiphertext {
+        self.blind_rotate(lwe, testv).sample_extract(0)
+    }
+
+    /// Sign bootstrap: output `+mu` for phase ∈ [0, 1/2), `−mu` otherwise.
+    pub fn bootstrap_sign(&self, lwe: &LweCiphertext, mu: u32) -> LweCiphertext {
+        self.bootstrap(lwe, &TestPoly::constant(self.params.big_n, mu))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn torus_dist(a: u32, b: u32) -> u32 {
+        let d = a.wrapping_sub(b);
+        d.min(d.wrapping_neg())
+    }
+
+    struct Fixture {
+        params: TfheParams,
+        lwe_key: LweKey,
+        trlwe_key: TrlweKey,
+        ext_key: LweKey,
+        bk: BootstrapKey,
+        rng: GlyphRng,
+    }
+
+    fn fixture(seed: u64) -> Fixture {
+        let params = TfheParams::test_params();
+        let mut rng = GlyphRng::new(seed);
+        let lwe_key = LweKey::generate_binary(params.n, &mut rng);
+        let trlwe_key = TrlweKey::generate(params.big_n, &mut rng);
+        let ext_key = trlwe_key.extracted_lwe_key();
+        let bk = BootstrapKey::generate(&lwe_key, &trlwe_key, &params, &mut rng);
+        Fixture { params, lwe_key, trlwe_key, ext_key, bk, rng }
+    }
+
+    #[test]
+    fn sign_bootstrap_positive_and_negative() {
+        let mut f = fixture(20);
+        let mu_out = 1u32 << 29;
+        for (msg, want_positive) in [
+            (1u32 << 29, true),
+            (1u32 << 30, true),
+            ((1u32 << 29).wrapping_neg(), false),
+            ((1u32 << 30).wrapping_neg(), false),
+        ] {
+            let ct = LweCiphertext::encrypt(msg, &f.lwe_key, f.params.alpha_lwe, &mut f.rng);
+            let out = f.bk.bootstrap_sign(&ct, mu_out);
+            let ph = out.phase(&f.ext_key);
+            let want = if want_positive { mu_out } else { mu_out.wrapping_neg() };
+            assert!(torus_dist(ph, want) < 1 << 26, "msg={msg:#x} ph={ph:#x} want={want:#x}");
+        }
+        let _ = &f.trlwe_key;
+    }
+
+    #[test]
+    fn bootstrap_output_noise_is_fresh() {
+        // Bootstrapping a ciphertext with large-ish input noise still yields
+        // an output close to ±mu (noise reset).
+        let mut f = fixture(21);
+        let msg = 1u32 << 29;
+        let mut ct = LweCiphertext::encrypt(msg, &f.lwe_key, f.params.alpha_lwe, &mut f.rng);
+        // add deliberate extra noise, well within the 1/8 margin
+        ct.add_constant(1 << 24);
+        let out = f.bk.bootstrap_sign(&ct, 1 << 29);
+        assert!(torus_dist(out.phase(&f.ext_key), 1 << 29) < 1 << 26);
+    }
+
+    #[test]
+    fn programmable_windows_select_values() {
+        // Program a 4-level staircase over the positive half-torus and check
+        // phases land on the right step.
+        let mut f = fixture(22);
+        let n = f.params.big_n;
+        let tv = TestPoly::from_fn(n, |w| ((w * 4 / n) as u32) << 28);
+        // message windows: phase = (i + 0.5)/8 for i in 0..4 (positive half)
+        for i in 0..4u32 {
+            let msg = (i * 2 + 1) << 28; // (2i+1)/16 of the torus
+            let ct = LweCiphertext::encrypt(msg, &f.lwe_key, f.params.alpha_lwe, &mut f.rng);
+            let out = f.bk.bootstrap(&ct, &tv);
+            let ph = out.phase(&f.ext_key);
+            let want = i << 28;
+            assert!(torus_dist(ph, want) < 1 << 26, "i={i} ph={ph:#x} want={want:#x}");
+        }
+    }
+
+    #[test]
+    fn negacyclic_mirror_on_negative_half() {
+        let mut f = fixture(23);
+        let n = f.params.big_n;
+        let tv = TestPoly::constant(n, 1 << 29);
+        // phase in the negative half → −mu
+        let msg = (3u32 << 29).wrapping_neg();
+        let ct = LweCiphertext::encrypt(msg, &f.lwe_key, f.params.alpha_lwe, &mut f.rng);
+        let out = f.bk.bootstrap(&ct, &tv);
+        assert!(torus_dist(out.phase(&f.ext_key), (1u32 << 29).wrapping_neg()) < 1 << 26);
+    }
+}

@@ -1,0 +1,244 @@
+//! The homomorphic gate library (gate bootstrapping).
+//!
+//! These are the operations the paper's Table 1 bills as "TFHE" ops and that
+//! Algorithms 1–2 (ReLU/iReLU) and the Figure-4 softmax unit consume:
+//! `HomoNot` (bootstrap-free), `HomoAND`/`OR`/`XOR` (one bootstrap each) and
+//! the homomorphic multiplexer (two bootstraps on the critical path).
+//!
+//! Every boolean travels at the `±1/8` encoding; each bootstrapped gate ends
+//! with a key switch from the extracted key (dim N) back to the gate key
+//! (dim n) so gates compose indefinitely.
+
+use super::bootstrap::{BootstrapKey, TestPoly};
+use super::keyswitch::LweKeySwitchKey;
+use super::lwe::{LweCiphertext, LweKey};
+use super::params::TfheParams;
+use super::tlwe::TrlweKey;
+use super::MU_BIT;
+use crate::math::rng::GlyphRng;
+
+/// Everything the (untrusted) evaluator needs to run gates: bootstrapping
+/// key + N→n key-switching key.
+pub struct TfheCloudKey {
+    pub params: TfheParams,
+    pub bk: BootstrapKey,
+    pub ksk: LweKeySwitchKey,
+}
+
+impl TfheCloudKey {
+    pub fn generate(lwe_key: &LweKey, trlwe_key: &TrlweKey, params: &TfheParams, rng: &mut GlyphRng) -> Self {
+        let bk = BootstrapKey::generate(lwe_key, trlwe_key, params, rng);
+        let ext = trlwe_key.extracted_lwe_key();
+        let ksk = LweKeySwitchKey::generate(&ext, lwe_key, params.ks_base_bit, params.ks_len, params.alpha_lwe, rng);
+        TfheCloudKey { params: params.clone(), bk, ksk }
+    }
+
+    /// Bootstrap to ±`mu` then key-switch back to the gate key.
+    fn gate_bootstrap(&self, lin: &LweCiphertext, mu: u32) -> LweCiphertext {
+        let boot = self.bk.bootstrap_sign(lin, mu);
+        self.ksk.switch(&boot)
+    }
+
+    /// Bootstrap with an arbitrary test polynomial, then key-switch.
+    pub fn pbs(&self, lin: &LweCiphertext, tv: &TestPoly) -> LweCiphertext {
+        let boot = self.bk.bootstrap(lin, tv);
+        self.ksk.switch(&boot)
+    }
+
+    /// Bootstrap with an arbitrary test polynomial, NO key switch (output is
+    /// under the extracted dim-N key) — used by the switch pipeline where
+    /// the next step is itself a key/packing switch.
+    pub fn pbs_raw(&self, lin: &LweCiphertext, tv: &TestPoly) -> LweCiphertext {
+        self.bk.bootstrap(lin, tv)
+    }
+
+    /// HomoNOT — negation, no bootstrapping (paper Alg. 1 line 2).
+    pub fn not(&self, c: &LweCiphertext) -> LweCiphertext {
+        let mut out = c.clone();
+        out.neg_assign();
+        out
+    }
+
+    /// HomoAND — one gate bootstrap.
+    pub fn and(&self, c1: &LweCiphertext, c2: &LweCiphertext) -> LweCiphertext {
+        let mut lin = c1.clone();
+        lin.add_assign(c2);
+        lin.add_constant(MU_BIT.wrapping_neg()); // −1/8
+        self.gate_bootstrap(&lin, MU_BIT)
+    }
+
+    /// HomoOR.
+    pub fn or(&self, c1: &LweCiphertext, c2: &LweCiphertext) -> LweCiphertext {
+        let mut lin = c1.clone();
+        lin.add_assign(c2);
+        lin.add_constant(MU_BIT); // +1/8
+        self.gate_bootstrap(&lin, MU_BIT)
+    }
+
+    /// HomoNAND.
+    pub fn nand(&self, c1: &LweCiphertext, c2: &LweCiphertext) -> LweCiphertext {
+        let mut lin = c1.clone();
+        lin.add_assign(c2);
+        lin.neg_assign();
+        lin.add_constant(MU_BIT); // 1/8 − c1 − c2
+        self.gate_bootstrap(&lin, MU_BIT)
+    }
+
+    /// HomoXOR — one bootstrap (2·(c1+c2) + 1/4).
+    pub fn xor(&self, c1: &LweCiphertext, c2: &LweCiphertext) -> LweCiphertext {
+        let mut lin = c1.clone();
+        lin.add_assign(c2);
+        lin.scalar_mul_assign(2);
+        lin.add_constant(1 << 30); // +1/4
+        self.gate_bootstrap(&lin, MU_BIT)
+    }
+
+    /// Homomorphic multiplexer `sel ? d1 : d0` — two bootstraps on the
+    /// critical path (paper Fig. 4's building block).
+    pub fn mux(&self, sel: &LweCiphertext, d1: &LweCiphertext, d0: &LweCiphertext) -> LweCiphertext {
+        // t1 = AND(sel, d1), t0 = AND(NOT sel, d0), out = t1 + t0 + 1/8
+        // computed without the final keyswitch until after the sum.
+        let mut lin1 = sel.clone();
+        lin1.add_assign(d1);
+        lin1.add_constant(MU_BIT.wrapping_neg());
+        let t1 = self.bk.bootstrap_sign(&lin1, MU_BIT >> 1); // ±1/16
+
+        let mut lin0 = self.not(sel);
+        lin0.add_assign(d0);
+        lin0.add_constant(MU_BIT.wrapping_neg());
+        let t0 = self.bk.bootstrap_sign(&lin0, MU_BIT >> 1); // ±1/16
+
+        let mut sum = t1;
+        sum.add_assign(&t0);
+        sum.add_constant(MU_BIT >> 1); // recenter: {−1/16,+3/16} → ±1/8
+        self.ksk.switch(&sum)
+    }
+
+    /// AND whose *true* output lands exactly at torus position `2^pos`
+    /// (and *false* at 0). Used to recompose activation bits at their binary
+    /// weight during TFHE→BGV switching — the paper's "functional gate
+    /// bootstrapping restricted to multiples of p^{−r}" (§4.2, Thm 3 step ➊).
+    ///
+    /// The output stays under the extracted dim-N key (no key switch): the
+    /// next pipeline stage is the packing key switch, which consumes dim-N
+    /// samples directly.
+    pub fn and_weighted_raw(&self, c1: &LweCiphertext, c2: &LweCiphertext, pos: u32) -> LweCiphertext {
+        debug_assert!(pos >= 1 && pos <= 31);
+        let mut lin = c1.clone();
+        lin.add_assign(c2);
+        lin.add_constant(MU_BIT.wrapping_neg());
+        let mu = 1u32 << (pos - 1);
+        let mut out = self.bk.bootstrap_sign(&lin, mu);
+        out.add_constant(mu); // {0, 2^pos}
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::{decode_bit, encode_bit};
+
+    struct Fx {
+        params: TfheParams,
+        key: LweKey,
+        ext_key: LweKey,
+        ck: TfheCloudKey,
+        rng: GlyphRng,
+    }
+
+    fn fixture(seed: u64) -> Fx {
+        let params = TfheParams::test_params();
+        let mut rng = GlyphRng::new(seed);
+        let key = LweKey::generate_binary(params.n, &mut rng);
+        let trlwe_key = TrlweKey::generate(params.big_n, &mut rng);
+        let ext_key = trlwe_key.extracted_lwe_key();
+        let ck = TfheCloudKey::generate(&key, &trlwe_key, &params, &mut rng);
+        Fx { params, key, ext_key, ck, rng }
+    }
+
+    fn enc(f: &mut Fx, b: bool) -> LweCiphertext {
+        LweCiphertext::encrypt(encode_bit(b), &f.key, f.params.alpha_lwe, &mut f.rng)
+    }
+
+    fn dec(f: &Fx, c: &LweCiphertext) -> bool {
+        decode_bit(c.phase(&f.key))
+    }
+
+    #[test]
+    fn truth_tables() {
+        let mut f = fixture(40);
+        for a in [false, true] {
+            for b in [false, true] {
+                let ca = enc(&mut f, a);
+                let cb = enc(&mut f, b);
+                assert_eq!(dec(&f, &f.ck.and(&ca, &cb)), a && b, "AND {a} {b}");
+                assert_eq!(dec(&f, &f.ck.or(&ca, &cb)), a || b, "OR {a} {b}");
+                assert_eq!(dec(&f, &f.ck.nand(&ca, &cb)), !(a && b), "NAND {a} {b}");
+                assert_eq!(dec(&f, &f.ck.xor(&ca, &cb)), a ^ b, "XOR {a} {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn not_is_free_and_correct() {
+        let mut f = fixture(41);
+        for a in [false, true] {
+            let ca = enc(&mut f, a);
+            assert_eq!(dec(&f, &f.ck.not(&ca)), !a);
+        }
+    }
+
+    #[test]
+    fn mux_selects_correctly() {
+        let mut f = fixture(42);
+        for s in [false, true] {
+            for d1 in [false, true] {
+                for d0 in [false, true] {
+                    let cs = enc(&mut f, s);
+                    let c1 = enc(&mut f, d1);
+                    let c0 = enc(&mut f, d0);
+                    let out = f.ck.mux(&cs, &c1, &c0);
+                    assert_eq!(dec(&f, &out), if s { d1 } else { d0 }, "s={s} d1={d1} d0={d0}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gates_compose_deep_circuit() {
+        // A small ripple of 12 chained gates must stay correct: bootstrap
+        // noise reset is what makes this work.
+        let mut f = fixture(43);
+        let mut acc = enc(&mut f, true);
+        let mut expect = true;
+        for i in 0..12 {
+            let b = i % 3 == 0;
+            let cb = enc(&mut f, b);
+            if i % 2 == 0 {
+                acc = f.ck.xor(&acc, &cb);
+                expect ^= b;
+            } else {
+                acc = f.ck.and(&acc, &cb);
+                expect &= b;
+            }
+            assert_eq!(dec(&f, &acc), expect, "step {i}");
+        }
+    }
+
+    #[test]
+    fn and_weighted_lands_on_position() {
+        let mut f = fixture(44);
+        let pos = 27u32;
+        for (a, b) in [(true, true), (true, false), (false, true), (false, false)] {
+            let ca = enc(&mut f, a);
+            let cb = enc(&mut f, b);
+            let out = f.ck.and_weighted_raw(&ca, &cb, pos);
+            let ph = out.phase(&f.ext_key);
+            let want: u32 = if a && b { 1 << pos } else { 0 };
+            let d = ph.wrapping_sub(want);
+            let dist = d.min(d.wrapping_neg());
+            assert!(dist < 1 << (pos - 2), "a={a} b={b} ph={ph:#x} want={want:#x}");
+        }
+    }
+}

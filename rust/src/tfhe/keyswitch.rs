@@ -1,0 +1,288 @@
+//! LWE key switching (scalar → scalar) and the packing functional key
+//! switch (many LWEs → one TRLWE), both at torus32.
+//!
+//! The scalar switch moves bootstrap outputs (dimension N, extracted key)
+//! back to the gate key (dimension n), and moves BGV-extracted samples
+//! (dimension N_bgv, ternary key) onto the TFHE key during BGV→TFHE
+//! switching. The packing switch is the TFHE §4.2 public functional key
+//! switch the paper's TFHE→BGV direction uses to place sample `i`'s value
+//! at coefficient `X^i` of one ring ciphertext.
+
+use super::lwe::{LweCiphertext, LweKey};
+use super::tlwe::{TrlweCiphertext, TrlweKey};
+use crate::math::fft::Cplx;
+use crate::math::rng::GlyphRng;
+
+/// Balanced digit decomposition of a torus32 scalar: `len` digits in
+/// `[−B/2, B/2)`, MSB-first with base `B = 2^base_bit`.
+fn decompose_scalar(x: u32, len: usize, base_bit: u32) -> Vec<i32> {
+    let base = 1u32 << base_bit;
+    let half = base >> 1;
+    let mask = base - 1;
+    let mut offset = 0u32;
+    for j in 0..len {
+        offset = offset.wrapping_add(half << (32 - (j as u32 + 1) * base_bit));
+    }
+    let xx = x.wrapping_add(offset);
+    (0..len)
+        .map(|j| {
+            let shift = 32 - (j as u32 + 1) * base_bit;
+            (((xx >> shift) & mask) as i32) - half as i32
+        })
+        .collect()
+}
+
+/// Key-switching key from `src` to `dst` (scalar LWE).
+pub struct LweKeySwitchKey {
+    pub base_bit: u32,
+    pub len: usize,
+    /// ks[i][j]: LWE_dst encryption of `src_i · 2^(32−(j+1)·base_bit)`.
+    pub ks: Vec<Vec<LweCiphertext>>,
+    pub dst_dim: usize,
+}
+
+impl LweKeySwitchKey {
+    pub fn generate(
+        src: &LweKey,
+        dst: &LweKey,
+        base_bit: u32,
+        len: usize,
+        alpha: f64,
+        rng: &mut GlyphRng,
+    ) -> Self {
+        let ks = src
+            .s
+            .iter()
+            .map(|&si| {
+                (0..len)
+                    .map(|j| {
+                        let h = 1u64 << (32 - (j as u64 + 1) * base_bit as u64);
+                        let mu = (si as i64).wrapping_mul(h as i64) as u32;
+                        LweCiphertext::encrypt(mu, dst, alpha, rng)
+                    })
+                    .collect()
+            })
+            .collect();
+        LweKeySwitchKey { base_bit, len, ks, dst_dim: dst.dim() }
+    }
+
+    /// Switch `ct` (under `src`) to an LWE under `dst`.
+    pub fn switch(&self, ct: &LweCiphertext) -> LweCiphertext {
+        let mut out = LweCiphertext::trivial(ct.b, self.dst_dim);
+        for (i, &ai) in ct.a.iter().enumerate() {
+            if ai == 0 {
+                continue;
+            }
+            for (j, d) in decompose_scalar(ai, self.len, self.base_bit).into_iter().enumerate() {
+                if d == 0 {
+                    continue;
+                }
+                // out −= d · ks[i][j]
+                let row = &self.ks[i][j];
+                let du = d as i64 as u32;
+                for (x, &y) in out.a.iter_mut().zip(&row.a) {
+                    *x = x.wrapping_sub(du.wrapping_mul(y));
+                }
+                out.b = out.b.wrapping_sub(du.wrapping_mul(row.b));
+            }
+        }
+        out
+    }
+}
+
+/// Packing (public functional) key-switching key: moves K scalar LWEs under
+/// `src` into one TRLWE under `dst_ring`, placing sample m at coefficient
+/// `X^{pos_m}`.
+pub struct PackingKeySwitchKey {
+    pub base_bit: u32,
+    pub len: usize,
+    /// pk[i][j]: TRLWE_dst encryption of the constant poly
+    /// `src_i · 2^(32−(j+1)·base_bit)`, FFT form for both components.
+    pub pk: Vec<Vec<(Vec<Cplx>, Vec<Cplx>)>>,
+    pub ring_n: usize,
+    fft: std::sync::Arc<crate::math::fft::TorusFft>,
+}
+
+impl PackingKeySwitchKey {
+    pub fn generate(
+        src: &LweKey,
+        dst_ring: &TrlweKey,
+        base_bit: u32,
+        len: usize,
+        alpha: f64,
+        rng: &mut GlyphRng,
+    ) -> Self {
+        let n = dst_ring.n;
+        let pk = src
+            .s
+            .iter()
+            .map(|&si| {
+                (0..len)
+                    .map(|j| {
+                        let h = 1u64 << (32 - (j as u64 + 1) * base_bit as u64);
+                        let mut mu = vec![0u32; n];
+                        mu[0] = (si as i64).wrapping_mul(h as i64) as u32;
+                        let ct = TrlweCiphertext::encrypt(&mu, dst_ring, alpha, rng);
+                        (dst_ring.fft.forward_torus(&ct.a), dst_ring.fft.forward_torus(&ct.b))
+                    })
+                    .collect()
+            })
+            .collect();
+        PackingKeySwitchKey { base_bit, len, pk, ring_n: n, fft: dst_ring.fft.clone() }
+    }
+
+    /// Pack `samples[m]` at coefficient `positions[m]` of one TRLWE.
+    ///
+    /// Implements the public functional key switch with f = the packing
+    /// linear map: the decomposition digits of every `a^{(m)}_i` are gathered
+    /// into integer polynomials (digit × X^{pos_m}) so each key row is
+    /// multiplied only once per level, then `b^{(m)}` lands on coefficient
+    /// `pos_m` of the b-component.
+    pub fn pack(&self, samples: &[&LweCiphertext], positions: &[usize]) -> TrlweCiphertext {
+        assert_eq!(samples.len(), positions.len());
+        let n = self.ring_n;
+        let m_half = n / 2;
+        let src_dim = self.pk.len();
+        let mut acc_a = vec![Cplx::default(); m_half];
+        let mut acc_b = vec![Cplx::default(); m_half];
+        // digit_polys[j][i] built incrementally: for each source index i, the
+        // integer polynomial Σ_m digit_j(a^{(m)}_i) · X^{pos_m}.
+        let mut digit_poly = vec![0i32; n];
+        for i in 0..src_dim {
+            for j in 0..self.len {
+                // Build the digit polynomial for (i, j).
+                let mut any = false;
+                for x in digit_poly.iter_mut() {
+                    *x = 0;
+                }
+                for (m, ct) in samples.iter().enumerate() {
+                    let d = decompose_scalar(ct.a[i], self.len, self.base_bit)[j];
+                    if d != 0 {
+                        digit_poly[positions[m]] += d;
+                        any = true;
+                    }
+                }
+                if !any {
+                    continue;
+                }
+                let fd = self.fft.forward_int(&digit_poly);
+                // acc −= digit_poly · pk[i][j]  (both components)
+                let row = &self.pk[i][j];
+                // negate via multiplying digits by −1: cheaper to subtract at
+                // the end; here accumulate then subtract once.
+                self.fft.mul_acc(&fd, &row.0, &mut acc_a);
+                self.fft.mul_acc(&fd, &row.1, &mut acc_b);
+            }
+        }
+        // out = (0, Σ_m b^{(m)} X^{pos_m}) − Σ acc
+        let mut out = TrlweCiphertext::zero(n);
+        let mut sub_a = vec![0u32; n];
+        let mut sub_b = vec![0u32; n];
+        self.fft.inverse_add_to_torus(&acc_a, &mut sub_a);
+        self.fft.inverse_add_to_torus(&acc_b, &mut sub_b);
+        for i in 0..n {
+            out.a[i] = out.a[i].wrapping_sub(sub_a[i]);
+            out.b[i] = out.b[i].wrapping_sub(sub_b[i]);
+        }
+        for (m, ct) in samples.iter().enumerate() {
+            out.b[positions[m]] = out.b[positions[m]].wrapping_add(ct.b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::params::TfheParams;
+
+    fn torus_dist(a: u32, b: u32) -> u32 {
+        let d = a.wrapping_sub(b);
+        d.min(d.wrapping_neg())
+    }
+
+    #[test]
+    fn decompose_scalar_reconstructs() {
+        for x in [0u32, 1 << 31, 0xdeadbeef, 0x12345678, u32::MAX] {
+            for (len, bb) in [(8usize, 2u32), (7, 4), (3, 7)] {
+                let d = decompose_scalar(x, len, bb);
+                let mut acc = 0i64;
+                for (j, &dj) in d.iter().enumerate() {
+                    acc += dj as i64 * (1i64 << (32 - (j as u32 + 1) * bb));
+                }
+                let err = torus_dist(acc as u32, x);
+                assert!(err < 1 << (32 - len as u32 * bb), "x={x:#x} len={len} bb={bb} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn lwe_keyswitch_preserves_message() {
+        let mut rng = GlyphRng::new(30);
+        let src = LweKey::generate_binary(256, &mut rng);
+        let dst = LweKey::generate_binary(64, &mut rng);
+        let ksk = LweKeySwitchKey::generate(&src, &dst, 2, 8, 1e-8, &mut rng);
+        for msg in [1u32 << 29, (1u32 << 29).wrapping_neg(), 1 << 30] {
+            let ct = LweCiphertext::encrypt(msg, &src, 1e-8, &mut rng);
+            let out = ksk.switch(&ct);
+            assert_eq!(out.dim(), 64);
+            assert!(torus_dist(out.phase(&dst), msg) < 1 << 24, "msg={msg:#x}");
+        }
+    }
+
+    #[test]
+    fn lwe_keyswitch_from_ternary_key() {
+        // BGV→TFHE: source key is ternary (RLWE coefficients).
+        let mut rng = GlyphRng::new(31);
+        let src = LweKey::from_coeffs((0..256).map(|_| rng.ternary() as i32).collect());
+        let dst = LweKey::generate_binary(64, &mut rng);
+        let ksk = LweKeySwitchKey::generate(&src, &dst, 4, 7, 1e-9, &mut rng);
+        let msg = 5u32 << 27;
+        let ct = LweCiphertext::encrypt(msg, &src, 1e-9, &mut rng);
+        let out = ksk.switch(&ct);
+        assert!(torus_dist(out.phase(&dst), msg) < 1 << 23);
+    }
+
+    #[test]
+    fn packing_keyswitch_places_values_at_positions() {
+        let params = TfheParams::test_params();
+        let mut rng = GlyphRng::new(32);
+        let src = LweKey::generate_binary(64, &mut rng);
+        let ring = TrlweKey::generate(params.big_n, &mut rng);
+        let pksk = PackingKeySwitchKey::generate(&src, &ring, 4, 7, 1e-9, &mut rng);
+        let msgs = [1u32 << 29, 1 << 30, (1u32 << 29).wrapping_neg(), 3 << 28];
+        let positions = [0usize, 5, 17, 100];
+        let cts: Vec<LweCiphertext> =
+            msgs.iter().map(|&m| LweCiphertext::encrypt(m, &src, 1e-9, &mut rng)).collect();
+        let refs: Vec<&LweCiphertext> = cts.iter().collect();
+        let packed = pksk.pack(&refs, &positions);
+        let ph = packed.phase(&ring);
+        for (m, &pos) in positions.iter().enumerate() {
+            assert!(torus_dist(ph[pos], msgs[m]) < 1 << 24, "m={m} ph={:#x}", ph[pos]);
+        }
+        // untouched positions stay (near) zero
+        assert!(torus_dist(ph[200], 0) < 1 << 24);
+    }
+
+    #[test]
+    fn packing_then_extract_roundtrip() {
+        // pack K LWEs, extract them back — the switch's inner loop.
+        let params = TfheParams::test_params();
+        let mut rng = GlyphRng::new(33);
+        let src = LweKey::generate_binary(64, &mut rng);
+        let ring = TrlweKey::generate(params.big_n, &mut rng);
+        let ext = ring.extracted_lwe_key();
+        let pksk = PackingKeySwitchKey::generate(&src, &ring, 4, 7, 1e-9, &mut rng);
+        let k = 8;
+        let msgs: Vec<u32> = (0..k).map(|i| ((i + 1) as u32) << 27).collect();
+        let cts: Vec<LweCiphertext> =
+            msgs.iter().map(|&m| LweCiphertext::encrypt(m, &src, 1e-9, &mut rng)).collect();
+        let refs: Vec<&LweCiphertext> = cts.iter().collect();
+        let positions: Vec<usize> = (0..k).collect();
+        let packed = pksk.pack(&refs, &positions);
+        for i in 0..k {
+            let lwe = packed.sample_extract(i);
+            assert!(torus_dist(lwe.phase(&ext), msgs[i]) < 1 << 24, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! TLWE: scalar LWE ciphertexts over the discretized torus (torus32).
+//!
+//! The key type is a generic small-integer vector so the same ciphertext
+//! machinery serves both TFHE binary keys and the LWE samples extracted from
+//! BGV ciphertexts (whose key is the ternary RLWE secret's coefficient
+//! vector) during cryptosystem switching.
+
+use crate::math::rng::GlyphRng;
+
+/// LWE secret key: small integer coefficients (binary for TFHE proper,
+/// ternary for BGV-extracted keys).
+#[derive(Clone)]
+pub struct LweKey {
+    pub s: Vec<i32>,
+}
+
+impl LweKey {
+    /// Fresh binary key of dimension `n`.
+    pub fn generate_binary(n: usize, rng: &mut GlyphRng) -> Self {
+        LweKey { s: (0..n).map(|_| (rng.next_u64() & 1) as i32).collect() }
+    }
+
+    /// Key from explicit coefficients (e.g. a BGV secret's coefficients).
+    pub fn from_coeffs(s: Vec<i32>) -> Self {
+        LweKey { s }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.s.len()
+    }
+}
+
+/// An LWE ciphertext `(a, b)` with phase `b − ⟨a, s⟩` (wrapping torus32).
+#[derive(Clone, Debug)]
+pub struct LweCiphertext {
+    pub a: Vec<u32>,
+    pub b: u32,
+}
+
+impl LweCiphertext {
+    /// Noiseless embedding of a constant (the "trivial" ciphertext).
+    pub fn trivial(mu: u32, n: usize) -> Self {
+        LweCiphertext { a: vec![0; n], b: mu }
+    }
+
+    /// Encrypt torus element `mu` with Gaussian noise `alpha`.
+    pub fn encrypt(mu: u32, key: &LweKey, alpha: f64, rng: &mut GlyphRng) -> Self {
+        let n = key.dim();
+        let a: Vec<u32> = (0..n).map(|_| rng.torus32()).collect();
+        let mut b = mu.wrapping_add(rng.torus32_gaussian(alpha));
+        for i in 0..n {
+            b = b.wrapping_add((key.s[i] as i64 as u32).wrapping_mul(a[i]));
+        }
+        LweCiphertext { a, b }
+    }
+
+    /// Phase `b − ⟨a, s⟩`; decryption rounds this to the plaintext grid.
+    pub fn phase(&self, key: &LweKey) -> u32 {
+        let mut p = self.b;
+        for i in 0..self.a.len() {
+            p = p.wrapping_sub((key.s[i] as i64 as u32).wrapping_mul(self.a[i]));
+        }
+        p
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn add_assign(&mut self, o: &Self) {
+        debug_assert_eq!(self.dim(), o.dim());
+        for (x, &y) in self.a.iter_mut().zip(&o.a) {
+            *x = x.wrapping_add(y);
+        }
+        self.b = self.b.wrapping_add(o.b);
+    }
+
+    pub fn sub_assign(&mut self, o: &Self) {
+        debug_assert_eq!(self.dim(), o.dim());
+        for (x, &y) in self.a.iter_mut().zip(&o.a) {
+            *x = x.wrapping_sub(y);
+        }
+        self.b = self.b.wrapping_sub(o.b);
+    }
+
+    pub fn neg_assign(&mut self) {
+        for x in self.a.iter_mut() {
+            *x = x.wrapping_neg();
+        }
+        self.b = self.b.wrapping_neg();
+    }
+
+    /// Add a plaintext constant to the phase.
+    pub fn add_constant(&mut self, mu: u32) {
+        self.b = self.b.wrapping_add(mu);
+    }
+
+    /// Multiply by a small signed integer (noise grows by |k|).
+    pub fn scalar_mul_assign(&mut self, k: i32) {
+        let ku = k as i64 as u32;
+        for x in self.a.iter_mut() {
+            *x = x.wrapping_mul(ku);
+        }
+        self.b = self.b.wrapping_mul(ku);
+    }
+
+    /// Switch to a smaller power-of-two modulus `2^log2q` (used before blind
+    /// rotation, where the exponent ring is Z_{2N}). Returns rescaled
+    /// coefficients `round(x · 2^log2q / 2^32)` as integers in `[0, 2^log2q)`.
+    pub fn rescale_to(&self, log2q: u32) -> (Vec<u32>, u32) {
+        let shift = 32 - log2q;
+        let half = 1u32 << (shift - 1);
+        let mask = (1u64 << log2q) as u32 - 1; // log2q < 32 in all uses
+        let f = |x: u32| -> u32 { ((x.wrapping_add(half)) >> shift) & mask };
+        (self.a.iter().map(|&x| f(x)).collect(), f(self.b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn torus_dist(a: u32, b: u32) -> u32 {
+        let d = a.wrapping_sub(b);
+        d.min(d.wrapping_neg())
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let mut rng = GlyphRng::new(1);
+        let key = LweKey::generate_binary(128, &mut rng);
+        for msg in [0u32, 1 << 29, 1u32 << 31, (1u32 << 29).wrapping_neg()] {
+            let ct = LweCiphertext::encrypt(msg, &key, 1e-7, &mut rng);
+            assert!(torus_dist(ct.phase(&key), msg) < 1 << 20);
+        }
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let mut rng = GlyphRng::new(2);
+        let key = LweKey::generate_binary(128, &mut rng);
+        let m1 = 1u32 << 28;
+        let m2 = 1u32 << 27;
+        let mut c1 = LweCiphertext::encrypt(m1, &key, 1e-8, &mut rng);
+        let c2 = LweCiphertext::encrypt(m2, &key, 1e-8, &mut rng);
+        c1.add_assign(&c2);
+        assert!(torus_dist(c1.phase(&key), m1.wrapping_add(m2)) < 1 << 20);
+        c1.sub_assign(&c2);
+        assert!(torus_dist(c1.phase(&key), m1) < 1 << 20);
+    }
+
+    #[test]
+    fn trivial_has_exact_phase() {
+        let key = LweKey::generate_binary(32, &mut GlyphRng::new(3));
+        let ct = LweCiphertext::trivial(12345, 32);
+        assert_eq!(ct.phase(&key), 12345);
+    }
+
+    #[test]
+    fn scalar_mul_scales_phase() {
+        let mut rng = GlyphRng::new(4);
+        let key = LweKey::generate_binary(64, &mut rng);
+        let m = 1u32 << 26;
+        let mut ct = LweCiphertext::encrypt(m, &key, 1e-9, &mut rng);
+        ct.scalar_mul_assign(5);
+        assert!(torus_dist(ct.phase(&key), 5 * m) < 1 << 20);
+        ct.scalar_mul_assign(-1);
+        assert!(torus_dist(ct.phase(&key), (5 * m).wrapping_neg()) < 1 << 20);
+    }
+
+    #[test]
+    fn ternary_key_roundtrip() {
+        // Key = ternary coefficients, as in BGV-extracted samples.
+        let mut rng = GlyphRng::new(5);
+        let key = LweKey::from_coeffs((0..256).map(|_| rng.ternary() as i32).collect());
+        let msg = 0xdead_0000u32;
+        let ct = LweCiphertext::encrypt(msg, &key, 1e-8, &mut rng);
+        assert!(torus_dist(ct.phase(&key), msg) < 1 << 20);
+    }
+
+    #[test]
+    fn rescale_preserves_phase_approximately() {
+        let mut rng = GlyphRng::new(6);
+        let key = LweKey::generate_binary(64, &mut rng);
+        let msg = 3u32 << 29;
+        let ct = LweCiphertext::encrypt(msg, &key, 1e-9, &mut rng);
+        let (a, b) = ct.rescale_to(11); // 2N = 2048
+        // recompute phase in Z_2048
+        let mut p = b as i64;
+        for i in 0..64 {
+            p -= key.s[i] as i64 * a[i] as i64;
+        }
+        let p = p.rem_euclid(2048) as u32;
+        let want = (msg as u64 * 2048 / (1u64 << 32)) as u32;
+        let d = (p as i32 - want as i32).rem_euclid(2048);
+        assert!(d.min(2048 - d) < 40, "p={p} want={want}");
+    }
+}

@@ -1,0 +1,51 @@
+//! TFHE (Fast Fully Homomorphic Encryption over the Torus) — torus32.
+//!
+//! Implements the three-level scheme of Chillotti et al. the paper uses for
+//! its activations: TLWE ([`lwe`]), TRLWE ([`tlwe`]) and TRGSW ([`tgsw`]),
+//! plus blind rotation / programmable bootstrapping ([`bootstrap`]), the
+//! homomorphic gate library ([`gates`], paper Algorithms 1–2 consume these)
+//! and LWE key switching ([`keyswitch`]).
+//!
+//! Conventions:
+//! * the discretized torus is `u32` ("torus32"): the real torus element is
+//!   `x / 2^32 mod 1`;
+//! * LWE phase is `b − Σ a_i·s_i` (wrapping), TRLWE phase is `b − s·a` in
+//!   `T_N[X]/(X^N+1)`;
+//! * boolean messages are encoded at `±1/8` (`MU_BIT = 2^29`), the standard
+//!   TFHE gate encoding.
+
+pub mod bootstrap;
+pub mod gates;
+pub mod keyswitch;
+pub mod lwe;
+pub mod params;
+pub mod tgsw;
+pub mod tlwe;
+
+pub use bootstrap::{BootstrapKey, TestPoly};
+pub use gates::TfheCloudKey;
+pub use keyswitch::LweKeySwitchKey;
+pub use lwe::{LweCiphertext, LweKey};
+pub use params::TfheParams;
+pub use tgsw::TrgswCiphertext;
+pub use tlwe::{TrlweCiphertext, TrlweKey};
+
+/// Torus encoding of a boolean: `true ↦ +1/8`, `false ↦ −1/8`.
+pub const MU_BIT: u32 = 1 << 29;
+
+/// Encode a boolean at the gate positions.
+#[inline]
+pub fn encode_bit(b: bool) -> u32 {
+    if b {
+        MU_BIT
+    } else {
+        MU_BIT.wrapping_neg()
+    }
+}
+
+/// Decode a torus phase back to a boolean (sign test).
+#[inline]
+pub fn decode_bit(phase: u32) -> bool {
+    // positive half of the torus = [0, 1/2)
+    (phase as i32) >= 0
+}

@@ -1,0 +1,99 @@
+//! TFHE parameter sets.
+//!
+//! The `default()` profile follows the paper's §5.1 noise figures (TLWE
+//! α = 6.10e-5, TRLWE α = 3.29e-10) with the LWE dimension raised from the
+//! paper's 280 to 560 to be comfortably ≥80-bit by current estimators. The
+//! `extract()` profile is used only for the 8-bit digit-extraction
+//! bootstraps of the cryptosystem switch: those decide top-bits at a 2^24
+//! grid, so the blind-rotation ring is enlarged to N = 4096 to push the
+//! modulus-switch rounding noise (σ ≈ √n·2^32/(4N)/√12) well under the
+//! 2^23 decision margin. `test()` is a fast low-security profile for unit
+//! tests and the reduced-scale end-to-end examples.
+
+/// Parameters for one TFHE instantiation.
+#[derive(Clone, Debug)]
+pub struct TfheParams {
+    /// TLWE dimension n.
+    pub n: usize,
+    /// TLWE noise standard deviation (fraction of the torus).
+    pub alpha_lwe: f64,
+    /// TRLWE / blind-rotation ring degree N (k = 1).
+    pub big_n: usize,
+    /// TRLWE noise standard deviation.
+    pub alpha_rlwe: f64,
+    /// TRGSW decomposition levels ℓ.
+    pub l: usize,
+    /// log2 of the TRGSW decomposition base Bg.
+    pub bg_bit: u32,
+    /// log2 of the LWE key-switch base.
+    pub ks_base_bit: u32,
+    /// LWE key-switch levels.
+    pub ks_len: usize,
+}
+
+impl TfheParams {
+    /// Production-shaped profile (gates): ≥80-bit, paper §5.1 noise.
+    pub fn default_params() -> Self {
+        TfheParams {
+            n: 560,
+            alpha_lwe: 6.10e-5,
+            big_n: 1024,
+            alpha_rlwe: 3.29e-10,
+            l: 3,
+            bg_bit: 7,
+            ks_base_bit: 2,
+            ks_len: 8,
+        }
+    }
+
+    /// Digit-extraction profile for the 8-bit switch bootstraps.
+    pub fn extract_params() -> Self {
+        TfheParams {
+            n: 560,
+            alpha_lwe: 6.10e-5,
+            big_n: 4096,
+            alpha_rlwe: 1.0e-11,
+            l: 3,
+            bg_bit: 8,
+            ks_base_bit: 4,
+            ks_len: 7,
+        }
+    }
+
+    /// Test-scale digit-extraction profile: the blind-rotation ring must be
+    /// large enough that the modulus-switch rounding noise
+    /// (≈ √(n/2)·0.29·2^32/N) stays several σ below the 2^23 decision
+    /// margin of 8-bit extraction.
+    pub fn test_extract_params() -> Self {
+        TfheParams {
+            n: 64,
+            alpha_lwe: 1.0e-7,
+            big_n: 2048,
+            alpha_rlwe: 1.0e-11,
+            l: 3,
+            bg_bit: 8,
+            ks_base_bit: 4,
+            ks_len: 7,
+        }
+    }
+
+    /// Fast, low-security profile for unit tests and reduced-scale demos.
+    pub fn test_params() -> Self {
+        TfheParams {
+            n: 64,
+            alpha_lwe: 1.0e-7,
+            big_n: 512,
+            alpha_rlwe: 1.0e-9,
+            l: 3,
+            bg_bit: 7,
+            ks_base_bit: 2,
+            ks_len: 8,
+        }
+    }
+
+    /// The TRGSW decomposition base Bg.
+    #[inline]
+    pub fn bg(&self) -> u32 {
+        1 << self.bg_bit
+    }
+}

@@ -1,0 +1,200 @@
+//! TRGSW ciphertexts, the gadget decomposition, the external product and
+//! CMUX — the multiplexer at the heart of blind rotation (and of the paper's
+//! softmax lookup unit, Figure 4).
+
+use super::params::TfheParams;
+use super::tlwe::{TrlweCiphertext, TrlweKey};
+use crate::math::fft::{Cplx, TorusFft};
+use crate::math::rng::GlyphRng;
+
+/// TRGSW ciphertext of a small integer polynomial μ: 2ℓ TRLWE rows
+/// `Z + μ·G`, stored directly in the FFT domain for the external product.
+pub struct TrgswCiphertext {
+    pub l: usize,
+    pub bg_bit: u32,
+    /// rows[u][j] for u ∈ {0 = a-component, 1 = b-component}, j ∈ 0..ℓ;
+    /// each row is a TRLWE (a, b) with both polys in FFT form.
+    pub rows: Vec<Vec<(Vec<Cplx>, Vec<Cplx>)>>,
+}
+
+impl TrgswCiphertext {
+    /// Encrypt the constant integer polynomial `mu` (usually a key bit).
+    pub fn encrypt_scalar(
+        mu: i32,
+        key: &TrlweKey,
+        params: &TfheParams,
+        rng: &mut GlyphRng,
+    ) -> Self {
+        let n = key.n;
+        let fft = &key.fft;
+        let mut rows = vec![Vec::with_capacity(params.l), Vec::with_capacity(params.l)];
+        for u in 0..2 {
+            for j in 0..params.l {
+                // Fresh TRLWE encryption of zero…
+                let mut z = TrlweCiphertext::encrypt(&vec![0u32; n], key, params.alpha_rlwe, rng);
+                // …plus μ·H_j on component u, H_j = 2^(32−(j+1)·bg_bit).
+                let h = 1u64 << (32 - (j as u32 + 1) * params.bg_bit);
+                let add = (mu as i64).wrapping_mul(h as i64) as u32;
+                if u == 0 {
+                    z.a[0] = z.a[0].wrapping_add(add);
+                } else {
+                    z.b[0] = z.b[0].wrapping_add(add);
+                }
+                rows[u].push((fft.forward_torus(&z.a), fft.forward_torus(&z.b)));
+            }
+        }
+        TrgswCiphertext { l: params.l, bg_bit: params.bg_bit, rows }
+    }
+
+    /// External product `self ⊡ c`: a TRLWE whose phase is ≈ μ · phase(c).
+    pub fn external_product(&self, c: &TrlweCiphertext, fft: &TorusFft) -> TrlweCiphertext {
+        let n = c.a.len();
+        let m = n / 2;
+        let dec_a = decompose(&c.a, self.l, self.bg_bit);
+        let dec_b = decompose(&c.b, self.l, self.bg_bit);
+        let mut acc_a = vec![Cplx::default(); m];
+        let mut acc_b = vec![Cplx::default(); m];
+        for j in 0..self.l {
+            let fa = fft.forward_int(&dec_a[j]);
+            let fb = fft.forward_int(&dec_b[j]);
+            fft.mul_acc(&fa, &self.rows[0][j].0, &mut acc_a);
+            fft.mul_acc(&fa, &self.rows[0][j].1, &mut acc_b);
+            fft.mul_acc(&fb, &self.rows[1][j].0, &mut acc_a);
+            fft.mul_acc(&fb, &self.rows[1][j].1, &mut acc_b);
+        }
+        let mut out = TrlweCiphertext::zero(n);
+        fft.inverse_add_to_torus(&acc_a, &mut out.a);
+        fft.inverse_add_to_torus(&acc_b, &mut out.b);
+        out
+    }
+
+    /// CMUX: returns an encryption of `d1` if μ = 1, `d0` if μ = 0:
+    /// `d0 + self ⊡ (d1 − d0)`.
+    pub fn cmux(&self, d1: &TrlweCiphertext, d0: &TrlweCiphertext, fft: &TorusFft) -> TrlweCiphertext {
+        let mut diff = d1.clone();
+        diff.sub_assign(d0);
+        let mut out = self.external_product(&diff, fft);
+        out.add_assign(d0);
+        out
+    }
+}
+
+/// Balanced base-2^bg_bit digit decomposition of a torus polynomial:
+/// digits in `[−Bg/2, Bg/2)` with `Σ_j d_j·H_j ≈ x` (error < H_{ℓ-1}/2).
+pub fn decompose(poly: &[u32], l: usize, bg_bit: u32) -> Vec<Vec<i32>> {
+    let n = poly.len();
+    let bg = 1u32 << bg_bit;
+    let half_bg = bg >> 1;
+    let mask = bg - 1;
+    // offset: round instead of truncate, and center every digit.
+    let mut offset = 0u32;
+    for j in 0..l {
+        offset = offset.wrapping_add(half_bg << (32 - (j as u32 + 1) * bg_bit));
+    }
+    let mut out = vec![vec![0i32; n]; l];
+    for i in 0..n {
+        let x = poly[i].wrapping_add(offset);
+        for j in 0..l {
+            let shift = 32 - (j as u32 + 1) * bg_bit;
+            let d = ((x >> shift) & mask) as i32 - half_bg as i32;
+            out[j][i] = d;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn torus_dist(a: u32, b: u32) -> u32 {
+        let d = a.wrapping_sub(b);
+        d.min(d.wrapping_neg())
+    }
+
+    #[test]
+    fn decomposition_reconstructs() {
+        let l = 3;
+        let bg_bit = 7;
+        let poly: Vec<u32> = vec![0, 1 << 31, 0x12345678, 0xdeadbeef, 0xffffffff, 42, 1 << 11, 1 << 10];
+        let dec = decompose(&poly, l, bg_bit);
+        for i in 0..poly.len() {
+            let mut acc = 0i64;
+            for j in 0..l {
+                let h = 1i64 << (32 - (j as u32 + 1) * bg_bit);
+                acc += dec[j][i] as i64 * h;
+            }
+            let err = torus_dist(acc as u32, poly[i]);
+            // max reconstruction error < 2^(32 − l·bg_bit) = 2^11
+            assert!(err < 1 << 11, "i={i} err={err}");
+            for j in 0..l {
+                assert!(dec[j][i] >= -(1 << (bg_bit - 1)) && dec[j][i] < (1 << (bg_bit - 1)));
+            }
+        }
+    }
+
+    #[test]
+    fn external_product_scales_phase() {
+        let params = TfheParams::test_params();
+        let mut rng = GlyphRng::new(10);
+        let key = TrlweKey::generate(params.big_n, &mut rng);
+        let mu_msg: Vec<u32> = (0..params.big_n).map(|i| ((i % 8) as u32) << 28).collect();
+        let c = TrlweCiphertext::encrypt(&mu_msg, &key, params.alpha_rlwe, &mut rng);
+        for bit in [0i32, 1] {
+            let g = TrgswCiphertext::encrypt_scalar(bit, &key, &params, &mut rng);
+            let prod = g.external_product(&c, &key.fft);
+            let ph = prod.phase(&key);
+            for i in 0..params.big_n {
+                let want = if bit == 1 { mu_msg[i] } else { 0 };
+                assert!(torus_dist(ph[i], want) < 1 << 22, "bit={bit} i={i} got={} want={want}", ph[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn cmux_selects() {
+        let params = TfheParams::test_params();
+        let mut rng = GlyphRng::new(11);
+        let key = TrlweKey::generate(params.big_n, &mut rng);
+        let n = params.big_n;
+        let m1: Vec<u32> = vec![1u32 << 30; n];
+        let m0: Vec<u32> = vec![3u32 << 29; n];
+        let d1 = TrlweCiphertext::encrypt(&m1, &key, params.alpha_rlwe, &mut rng);
+        let d0 = TrlweCiphertext::encrypt(&m0, &key, params.alpha_rlwe, &mut rng);
+        for bit in [0i32, 1] {
+            let g = TrgswCiphertext::encrypt_scalar(bit, &key, &params, &mut rng);
+            let sel = g.cmux(&d1, &d0, &key.fft);
+            let ph = sel.phase(&key);
+            let want = if bit == 1 { &m1 } else { &m0 };
+            for i in 0..n {
+                assert!(torus_dist(ph[i], want[i]) < 1 << 22, "bit={bit} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cmux_chain_noise_stays_bounded() {
+        // 16 chained CMUXes (a mini blind rotation) must keep the message
+        // decodable at the 1/8 grid.
+        let params = TfheParams::test_params();
+        let mut rng = GlyphRng::new(12);
+        let key = TrlweKey::generate(params.big_n, &mut rng);
+        let n = params.big_n;
+        let msg: Vec<u32> = vec![1u32 << 29; n];
+        let mut acc = TrlweCiphertext::trivial(&msg);
+        for step in 0..16 {
+            let bit = (step % 2) as i32;
+            let g = TrgswCiphertext::encrypt_scalar(bit, &key, &params, &mut rng);
+            let rotated = acc.rotate(step + 1);
+            acc = g.cmux(&rotated, &acc, &key.fft);
+        }
+        // We don't track the exact rotation here; just verify noise: decrypt
+        // then re-encode each coefficient to the nearest multiple of 1/8 and
+        // check the distance.
+        let ph = acc.phase(&key);
+        for i in 0..n {
+            let nearest = ((ph[i] as u64 + (1 << 28)) >> 29) << 29;
+            assert!(torus_dist(ph[i], nearest as u32) < 1 << 26, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! TRLWE: ring-LWE ciphertexts over the torus polynomial ring
+//! `T_N[X]/(X^N+1)` with k = 1.
+//!
+//! TRLWE carries the blind-rotation accumulator and the packed outputs of
+//! the TFHE→BGV functional key switch. `SampleExtract` (paper §4.2 step ➌)
+//! pulls a single coefficient out as a scalar LWE ciphertext under the key's
+//! coefficient vector.
+
+use super::lwe::{LweCiphertext, LweKey};
+use crate::math::fft::TorusFft;
+use crate::math::rng::GlyphRng;
+use std::sync::Arc;
+
+/// TRLWE secret key: a binary polynomial, with its FFT cached.
+pub struct TrlweKey {
+    pub n: usize,
+    pub s: Vec<i32>,
+    pub fft: Arc<TorusFft>,
+    s_fft: Vec<crate::math::fft::Cplx>,
+}
+
+impl TrlweKey {
+    pub fn generate(n: usize, rng: &mut GlyphRng) -> Self {
+        let s: Vec<i32> = (0..n).map(|_| (rng.next_u64() & 1) as i32).collect();
+        let fft = Arc::new(TorusFft::new(n));
+        let s_fft = fft.forward_int(&s);
+        TrlweKey { n, s, fft, s_fft }
+    }
+
+    /// Key with explicit coefficients (e.g. the BGV ternary secret, for the
+    /// torus32 packing step of the switch).
+    pub fn from_coeffs(s: Vec<i32>) -> Self {
+        let n = s.len();
+        let fft = Arc::new(TorusFft::new(n));
+        let s_fft = fft.forward_int(&s);
+        TrlweKey { n, s, fft, s_fft }
+    }
+
+    /// The scalar-LWE key whose coefficients are this key's coefficients —
+    /// the key under which `SampleExtract` outputs decrypt.
+    pub fn extracted_lwe_key(&self) -> LweKey {
+        LweKey::from_coeffs(self.s.clone())
+    }
+}
+
+/// A TRLWE ciphertext `(a, b)`, phase `b − s·a` (negacyclic).
+#[derive(Clone)]
+pub struct TrlweCiphertext {
+    pub a: Vec<u32>,
+    pub b: Vec<u32>,
+}
+
+impl TrlweCiphertext {
+    pub fn zero(n: usize) -> Self {
+        TrlweCiphertext { a: vec![0; n], b: vec![0; n] }
+    }
+
+    /// Noiseless ciphertext of a plaintext polynomial.
+    pub fn trivial(mu: &[u32]) -> Self {
+        TrlweCiphertext { a: vec![0; mu.len()], b: mu.to_vec() }
+    }
+
+    /// Encrypt a torus polynomial.
+    pub fn encrypt(mu: &[u32], key: &TrlweKey, alpha: f64, rng: &mut GlyphRng) -> Self {
+        let n = key.n;
+        debug_assert_eq!(mu.len(), n);
+        let a: Vec<u32> = (0..n).map(|_| rng.torus32()).collect();
+        // b = s·a + mu + e
+        let sa = key.fft.negacyclic_mul_int_torus(&key.s, &a);
+        let b: Vec<u32> = (0..n)
+            .map(|i| sa[i].wrapping_add(mu[i]).wrapping_add(rng.torus32_gaussian(alpha)))
+            .collect();
+        TrlweCiphertext { a, b }
+    }
+
+    /// Phase polynomial `b − s·a`.
+    pub fn phase(&self, key: &TrlweKey) -> Vec<u32> {
+        let sa = key.fft.negacyclic_mul_int_torus(&key.s, &self.a);
+        (0..key.n).map(|i| self.b[i].wrapping_sub(sa[i])).collect()
+    }
+
+    /// Phase using the cached key FFT (hot path for tests/diagnostics).
+    pub fn phase_cached(&self, key: &TrlweKey) -> Vec<u32> {
+        let fa = key.fft.forward_torus(&self.a);
+        let mut acc = vec![crate::math::fft::Cplx::default(); key.n / 2];
+        key.fft.mul_acc(&key.s_fft, &fa, &mut acc);
+        let mut sa = vec![0u32; key.n];
+        key.fft.inverse_add_to_torus(&acc, &mut sa);
+        (0..key.n).map(|i| self.b[i].wrapping_sub(sa[i])).collect()
+    }
+
+    pub fn add_assign(&mut self, o: &Self) {
+        for (x, &y) in self.a.iter_mut().zip(&o.a) {
+            *x = x.wrapping_add(y);
+        }
+        for (x, &y) in self.b.iter_mut().zip(&o.b) {
+            *x = x.wrapping_add(y);
+        }
+    }
+
+    pub fn sub_assign(&mut self, o: &Self) {
+        for (x, &y) in self.a.iter_mut().zip(&o.a) {
+            *x = x.wrapping_sub(y);
+        }
+        for (x, &y) in self.b.iter_mut().zip(&o.b) {
+            *x = x.wrapping_sub(y);
+        }
+    }
+
+    /// Multiply by `X^k` (negacyclic), `k ∈ [0, 2N)`.
+    pub fn rotate(&self, k: usize) -> Self {
+        TrlweCiphertext { a: rotate_poly(&self.a, k), b: rotate_poly(&self.b, k) }
+    }
+
+    /// `SampleExtract`: the LWE ciphertext of coefficient `pos` of the
+    /// phase, under [`TrlweKey::extracted_lwe_key`].
+    pub fn sample_extract(&self, pos: usize) -> LweCiphertext {
+        let n = self.a.len();
+        debug_assert!(pos < n);
+        let mut a = vec![0u32; n];
+        for j in 0..n {
+            if j <= pos {
+                a[j] = self.a[pos - j];
+            } else {
+                a[j] = self.a[n + pos - j].wrapping_neg();
+            }
+        }
+        LweCiphertext { a, b: self.b[pos] }
+    }
+}
+
+/// Multiply a torus polynomial by `X^k` in the negacyclic ring, `k ∈ [0,2N)`.
+pub fn rotate_poly(p: &[u32], k: usize) -> Vec<u32> {
+    let n = p.len();
+    let k = k % (2 * n);
+    let mut out = vec![0u32; n];
+    for i in 0..n {
+        let j = i + k;
+        if j < n {
+            out[j] = p[i];
+        } else if j < 2 * n {
+            out[j - n] = p[i].wrapping_neg();
+        } else {
+            out[j - 2 * n] = p[i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn torus_dist(a: u32, b: u32) -> u32 {
+        let d = a.wrapping_sub(b);
+        d.min(d.wrapping_neg())
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let mut rng = GlyphRng::new(1);
+        let key = TrlweKey::generate(256, &mut rng);
+        let mu: Vec<u32> = (0..256).map(|i| (i as u32) << 24).collect();
+        let ct = TrlweCiphertext::encrypt(&mu, &key, 1e-9, &mut rng);
+        let ph = ct.phase(&key);
+        for i in 0..256 {
+            assert!(torus_dist(ph[i], mu[i]) < 1 << 18, "i={i}");
+        }
+    }
+
+    #[test]
+    fn phase_cached_matches_phase() {
+        let mut rng = GlyphRng::new(2);
+        let key = TrlweKey::generate(256, &mut rng);
+        let mu: Vec<u32> = (0..256).map(|_| rng.torus32()).collect();
+        let ct = TrlweCiphertext::encrypt(&mu, &key, 1e-9, &mut rng);
+        let p1 = ct.phase(&key);
+        let p2 = ct.phase_cached(&key);
+        for i in 0..256 {
+            assert!(torus_dist(p1[i], p2[i]) < 1 << 8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn rotate_poly_negacyclic_sign() {
+        let p = vec![1u32, 2, 3, 4];
+        // X^1: [−4, 1, 2, 3]
+        assert_eq!(rotate_poly(&p, 1), vec![4u32.wrapping_neg(), 1, 2, 3]);
+        // X^4 = −1
+        assert_eq!(rotate_poly(&p, 4), vec![1u32.wrapping_neg(), 2u32.wrapping_neg(), 3u32.wrapping_neg(), 4u32.wrapping_neg()]);
+        // X^8 = identity
+        assert_eq!(rotate_poly(&p, 8), p);
+    }
+
+    #[test]
+    fn rotation_commutes_with_phase() {
+        let mut rng = GlyphRng::new(3);
+        let key = TrlweKey::generate(128, &mut rng);
+        let mu: Vec<u32> = (0..128).map(|_| rng.torus32()).collect();
+        let ct = TrlweCiphertext::encrypt(&mu, &key, 1e-9, &mut rng);
+        let k = 37;
+        let rot_phase = ct.rotate(k).phase(&key);
+        let want = rotate_poly(&ct.phase(&key), k);
+        for i in 0..128 {
+            assert!(torus_dist(rot_phase[i], want[i]) < 1 << 10, "i={i}");
+        }
+    }
+
+    #[test]
+    fn sample_extract_matches_phase_coefficient() {
+        let mut rng = GlyphRng::new(4);
+        let key = TrlweKey::generate(128, &mut rng);
+        let lwe_key = key.extracted_lwe_key();
+        let mu: Vec<u32> = (0..128).map(|_| rng.torus32()).collect();
+        let ct = TrlweCiphertext::encrypt(&mu, &key, 1e-9, &mut rng);
+        let ph = ct.phase(&key);
+        for pos in [0usize, 1, 63, 127] {
+            let lwe = ct.sample_extract(pos);
+            assert!(torus_dist(lwe.phase(&lwe_key), ph[pos]) < 1 << 10, "pos={pos}");
+        }
+    }
+
+    #[test]
+    fn homomorphic_add_sub() {
+        let mut rng = GlyphRng::new(5);
+        let key = TrlweKey::generate(64, &mut rng);
+        let mu1: Vec<u32> = (0..64).map(|_| rng.torus32()).collect();
+        let mu2: Vec<u32> = (0..64).map(|_| rng.torus32()).collect();
+        let mut c1 = TrlweCiphertext::encrypt(&mu1, &key, 1e-9, &mut rng);
+        let c2 = TrlweCiphertext::encrypt(&mu2, &key, 1e-9, &mut rng);
+        c1.add_assign(&c2);
+        c1.sub_assign(&c2);
+        let ph = c1.phase(&key);
+        for i in 0..64 {
+            assert!(torus_dist(ph[i], mu1[i]) < 1 << 12);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! The Glyph MLP trainer: the paper's Table-3 pipeline.
+//!
+//! Forward: FC (BGV MultCC) → switch → TFHE ReLU → switch → … → softmax.
+//! Backward: isoftmax (BGV SubCC) → FC errors (BGV) → switch → iReLU →
+//! switch → … ; gradients by the convolution-trick MultCC and SGD updates
+//! re-quantized through the switch.
+
+use crate::nn::activation::{self, ReluState, SoftmaxUnit};
+use crate::nn::engine::{ClientKeys, GlyphEngine};
+use crate::nn::linear::FcLayer;
+use crate::nn::loss::quadratic_loss_delta;
+use crate::nn::tensor::{EncTensor, PackOrder};
+use crate::math::rng::GlyphRng;
+use crate::tfhe::LweCiphertext;
+
+/// Architecture and fixed-point schedule of a Glyph MLP.
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    /// Layer widths, e.g. [784, 128, 32, 10] (the paper's 3-layer MLP).
+    pub dims: Vec<usize>,
+    /// Activation quantization shift per hidden layer (drops the MAC scale
+    /// back to 8-bit; ≈ log2(127·fan_in) − 7).
+    pub act_shifts: Vec<u32>,
+    /// Error-path quantization shift per hidden layer.
+    pub err_shifts: Vec<u32>,
+    /// Gradient/learning-rate shift (step = ∇ >> grad_shift).
+    pub grad_shift: u32,
+    /// Softmax lookup width (paper: 8; reduced in tests for speed).
+    pub softmax_bits: usize,
+}
+
+impl MlpConfig {
+    /// The paper's 3-layer MLP (784-128-32-10).
+    pub fn paper_mlp() -> Self {
+        MlpConfig {
+            dims: vec![784, 128, 32, 10],
+            act_shifts: vec![14, 11, 9],
+            err_shifts: vec![11, 9, 9],
+            grad_shift: 12,
+            softmax_bits: 8,
+        }
+    }
+
+    /// A tiny MLP for tests and reduced-scale demos.
+    pub fn tiny(in_dim: usize, hidden: usize, out_dim: usize) -> Self {
+        MlpConfig {
+            dims: vec![in_dim, hidden, out_dim],
+            act_shifts: vec![8, 7],
+            err_shifts: vec![7, 7],
+            grad_shift: 8,
+            softmax_bits: 3,
+        }
+    }
+}
+
+/// The encrypted MLP.
+pub struct GlyphMlp {
+    pub config: MlpConfig,
+    pub layers: Vec<FcLayer>,
+    pub softmax: SoftmaxUnit,
+}
+
+impl GlyphMlp {
+    /// Random 8-bit initial weights, encrypted under the client key.
+    pub fn new_random(config: MlpConfig, client: &mut ClientKeys, rng: &mut GlyphRng) -> Self {
+        let mut layers = Vec::new();
+        for l in 0..config.dims.len() - 1 {
+            let (fi, fo) = (config.dims[l], config.dims[l + 1]);
+            let init: Vec<Vec<i64>> = (0..fo)
+                .map(|_| (0..fi).map(|_| (rng.uniform_mod(31) as i64) - 15).collect())
+                .collect();
+            layers.push(FcLayer::new_encrypted(&init, client, config.act_shifts[l.min(config.act_shifts.len() - 1)]));
+        }
+        let softmax = SoftmaxUnit::logistic(config.softmax_bits, 4);
+        GlyphMlp { config, layers, softmax }
+    }
+
+    /// Softmax layer: extract the top `softmax_bits` of each logit, run the
+    /// Figure-4 MUX-tree unit per lane, and pack reverse-order for the loss.
+    fn softmax_layer(&self, u: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        let frac = engine.frac_bits();
+        // logits quantized like activations: drop the last layer's shift
+        let shift = *self.config.act_shifts.last().unwrap();
+        let pre_shift = frac - shift;
+        let in_positions = u.order.positions(engine.batch);
+        let out_positions = PackOrder::Reversed.positions(engine.batch);
+        let cts = u
+            .cts
+            .iter()
+            .map(|ct| {
+                let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
+                let outs: Vec<LweCiphertext> = lanes_bits
+                    .iter()
+                    .map(|bits| self.softmax.evaluate_mux(engine, &bits[..self.config.softmax_bits]))
+                    .collect();
+                engine.switch_to_bgv(&outs, &out_positions)
+            })
+            .collect();
+        EncTensor::new(cts, u.shape.clone(), PackOrder::Reversed, 0)
+    }
+
+    /// Forward pass: returns the layer activations (forward-packed; index 0
+    /// is the input) plus the softmax output (reverse-packed) and the ReLU
+    /// states for the backward pass.
+    pub fn forward(
+        &self,
+        x: &EncTensor,
+        engine: &GlyphEngine,
+    ) -> (Vec<EncTensor>, EncTensor, Vec<ReluState>) {
+        let mut acts: Vec<EncTensor> = Vec::with_capacity(self.layers.len());
+        let mut states = Vec::new();
+        let mut cur = x;
+        let mut owned: Vec<EncTensor> = Vec::new();
+        for (l, fc) in self.layers.iter().enumerate() {
+            let u = fc.forward(cur, engine);
+            if l + 1 < self.layers.len() {
+                let (a, st) = activation::relu_layer(engine, &u, self.config.act_shifts[l], PackOrder::Forward);
+                states.push(st);
+                owned.push(a);
+                cur = owned.last().unwrap();
+            } else {
+                let d = self.softmax_layer(&u, engine);
+                acts = owned;
+                return (acts, d, states);
+            }
+        }
+        unreachable!("MLP needs at least one layer");
+    }
+
+    /// One encrypted SGD mini-batch step. `x` is forward-packed (shift 0),
+    /// `labels_rev` is the reverse-packed one-hot targets (shift 0).
+    pub fn train_step(&mut self, x: &EncTensor, labels_rev: &EncTensor, engine: &GlyphEngine) {
+        let (hidden, d, states) = self.forward(x, engine);
+        // δ for the last layer (paper Eq. 6, "Act-error" row: AddCC only).
+        let mut delta = quadratic_loss_delta(&d, labels_rev, engine);
+        // Walk layers backwards: gradient, then error for the layer below.
+        let n_layers = self.layers.len();
+        let mut grads: Vec<Vec<Vec<crate::bgv::BgvCiphertext>>> = vec![Vec::new(); n_layers];
+        for l in (0..n_layers).rev() {
+            let below: &EncTensor = if l == 0 { x } else { &hidden[l - 1] };
+            grads[l] = self.layers[l].gradients(below, &delta, engine);
+            if l > 0 {
+                let err = self.layers[l].backward_error(&delta, engine);
+                delta = activation::irelu_layer(engine, &err, &states[l - 1], self.config.err_shifts[l - 1]);
+            }
+        }
+        for l in 0..n_layers {
+            self.layers[l].apply_gradients(&grads[l], self.config.grad_shift, engine);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::EngineProfile;
+    use crate::nn::linear::Weight;
+
+    #[test]
+    fn tiny_mlp_trains_one_step_and_moves_weights() {
+        let batch = 2;
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 1234);
+        let mut rng = GlyphRng::new(99);
+        let config = MlpConfig::tiny(3, 4, 2);
+        let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng);
+        // snapshot initial weights
+        let w_before: Vec<i64> = mlp
+            .layers
+            .iter()
+            .flat_map(|l| {
+                l.w.iter().flat_map(|row| {
+                    row.iter().map(|w| match w {
+                        Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
+                        Weight::Plain(p) => p.coeffs[0],
+                    })
+                })
+            })
+            .collect();
+
+        // inputs: 3 features × batch 2
+        let x_cols = vec![vec![40i64, -20], vec![10, 30], vec![-5, 25]];
+        let x_cts = x_cols.iter().map(|v| client.encrypt_batch(v, 0)).collect();
+        let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+        // one-hot labels (reverse packed): class 0 for sample 0, class 1 for 1
+        let mut l0 = vec![127i64, 0];
+        let mut l1 = vec![0i64, 127];
+        l0.reverse();
+        l1.reverse();
+        let lab_cts = vec![client.encrypt_batch(&l0, 0), client.encrypt_batch(&l1, 0)];
+        let labels = EncTensor::new(lab_cts, vec![2], PackOrder::Reversed, 0);
+
+        mlp.train_step(&x, &labels, &engine);
+
+        let w_after: Vec<i64> = mlp
+            .layers
+            .iter()
+            .flat_map(|l| {
+                l.w.iter().flat_map(|row| {
+                    row.iter().map(|w| match w {
+                        Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
+                        Weight::Plain(p) => p.coeffs[0],
+                    })
+                })
+            })
+            .collect();
+        assert_eq!(w_before.len(), w_after.len());
+        assert_ne!(w_before, w_after, "training must move at least one weight");
+        // all weights stay 9-bit-ish (8-bit ± one 8-bit step)
+        assert!(w_after.iter().all(|w| w.abs() <= 255), "{w_after:?}");
+
+        let s = engine.counter.snapshot();
+        assert!(s.mult_cc > 0 && s.act_gates > 0 && s.switch_b2t > 0 && s.switch_t2b > 0);
+        // forward MACs: 3·4 + 4·2 = 20; backward error 4·2; gradients 20
+        assert_eq!(s.mult_cc, 20 + 8 + 20);
+    }
+}

@@ -1,0 +1,17 @@
+//! FHE training loops (paper §2.4, §4, §6).
+//!
+//! * [`glyph`] — the Glyph MLP: BGV MACs + TFHE ReLU/softmax via the
+//!   cryptosystem switch (Tables 3/7).
+//! * [`fhesgd`] — the FHESGD baseline: identical MAC structure but
+//!   sigmoid activations through the bit-sliced BGV table lookup
+//!   (Tables 2/6 and Figure 2's bit-width sweep).
+//! * [`transfer`] — the Glyph CNN with transfer learning: frozen plaintext
+//!   convolutions (MultCP), trainable encrypted FC head (Tables 4/8).
+
+pub mod fhesgd;
+pub mod glyph;
+pub mod transfer;
+
+pub use fhesgd::FhesgdMlp;
+pub use glyph::{GlyphMlp, MlpConfig};
+pub use transfer::{CnnConfig, GlyphCnn};

@@ -1,0 +1,197 @@
+//! Transfer learning (paper §4.3, Figure 6, Tables 4/8): the convolutional
+//! feature extractor is *frozen plaintext* (pre-trained on a public
+//! dataset — SVHN for MNIST, CIFAR-10 for Skin-Cancer), so its MACs are
+//! MultCP; only the two FC layers train on encrypted data.
+
+use super::glyph::{GlyphMlp, MlpConfig};
+use crate::nn::activation;
+use crate::nn::batchnorm::BnLayer;
+use crate::nn::conv::ConvLayer;
+use crate::nn::engine::{ClientKeys, GlyphEngine};
+use crate::nn::pool::avg_pool2;
+use crate::nn::tensor::{EncTensor, PackOrder};
+use crate::math::rng::GlyphRng;
+
+/// CNN architecture (paper §5.2): two conv+BN+ReLU+pool stages, then the
+/// trainable FC head.
+#[derive(Clone, Debug)]
+pub struct CnnConfig {
+    pub in_shape: (usize, usize, usize), // C,H,W
+    pub conv_channels: (usize, usize),
+    pub kernel: usize,
+    pub fc_hidden: usize,
+    pub classes: usize,
+    /// ReLU quantization shifts after each conv stage.
+    pub conv_act_shifts: (u32, u32),
+    pub head: MlpConfig,
+}
+
+impl CnnConfig {
+    /// The paper's MNIST CNN: 28×28, 6/16 3×3 kernels, FC 84/10.
+    pub fn paper_mnist() -> Self {
+        CnnConfig {
+            in_shape: (1, 28, 28),
+            conv_channels: (6, 16),
+            kernel: 3,
+            fc_hidden: 84,
+            classes: 10,
+            conv_act_shifts: (10, 12),
+            head: MlpConfig {
+                dims: vec![16 * 5 * 5, 84, 10],
+                act_shifts: vec![13, 11],
+                err_shifts: vec![11, 9],
+                grad_shift: 12,
+                softmax_bits: 8,
+            },
+        }
+    }
+
+    /// The paper's Skin-Cancer CNN: 28×28×3, 64/96 3×3 kernels, FC 128/7.
+    pub fn paper_cancer() -> Self {
+        CnnConfig {
+            in_shape: (3, 28, 28),
+            conv_channels: (64, 96),
+            kernel: 3,
+            fc_hidden: 128,
+            classes: 7,
+            conv_act_shifts: (12, 13),
+            head: MlpConfig {
+                dims: vec![96 * 5 * 5, 128, 7],
+                act_shifts: vec![14, 11],
+                err_shifts: vec![11, 9],
+                grad_shift: 12,
+                softmax_bits: 8,
+            },
+        }
+    }
+
+    /// Tiny CNN for tests/demos: 14×14 input, 2/3 channels, FC 4/2.
+    /// Shapes: 14 → conv3 → 12 → pool → 6 → conv3 → 4 → pool → 2; feat = 3·2·2.
+    pub fn tiny() -> Self {
+        let feat = 3 * 2 * 2;
+        CnnConfig {
+            in_shape: (1, 14, 14),
+            conv_channels: (2, 3),
+            kernel: 3,
+            fc_hidden: 4,
+            classes: 2,
+            conv_act_shifts: (6, 7),
+            head: MlpConfig {
+                dims: vec![feat, 4, 2],
+                act_shifts: vec![8, 7],
+                err_shifts: vec![7, 7],
+                grad_shift: 8,
+                softmax_bits: 3,
+            },
+        }
+    }
+}
+
+/// The Glyph CNN with a frozen feature extractor and a trainable head.
+pub struct GlyphCnn {
+    pub config: CnnConfig,
+    pub conv1: ConvLayer,
+    pub bn1: BnLayer,
+    pub conv2: ConvLayer,
+    pub bn2: BnLayer,
+    pub head: GlyphMlp,
+}
+
+impl GlyphCnn {
+    /// Build from pre-trained plaintext feature weights (8-bit) and random
+    /// encrypted head weights. `features` = (conv1 kernels, bn1, conv2
+    /// kernels, bn2) as produced by the L2 pre-training pipeline.
+    pub fn new(
+        config: CnnConfig,
+        conv1_w: &[Vec<Vec<Vec<i64>>>],
+        bn1: BnLayer,
+        conv2_w: &[Vec<Vec<Vec<i64>>>],
+        bn2: BnLayer,
+        client: &mut ClientKeys,
+        rng: &mut GlyphRng,
+        engine: &GlyphEngine,
+    ) -> Self {
+        let conv1 = ConvLayer::new_plain(conv1_w, &engine.ctx.params, config.conv_act_shifts.0);
+        let conv2 = ConvLayer::new_plain(conv2_w, &engine.ctx.params, config.conv_act_shifts.1);
+        let head = GlyphMlp::new_random(config.head.clone(), client, rng);
+        GlyphCnn { config, conv1, bn1, conv2, bn2, head }
+    }
+
+    /// Frozen forward: conv→BN→ReLU→pool twice, flatten.
+    pub fn forward_features(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        let c1 = self.conv1.forward(x, engine);
+        let b1 = self.bn1.forward(&c1, engine);
+        let (a1, _) = activation::relu_layer(engine, &b1, self.config.conv_act_shifts.0, PackOrder::Forward);
+        let p1 = avg_pool2(&a1, engine);
+        let c2 = self.conv2.forward(&p1, engine);
+        let b2 = self.bn2.forward(&c2, engine);
+        let (a2, _) = activation::relu_layer(engine, &b2, self.config.conv_act_shifts.1, PackOrder::Forward);
+        let p2 = avg_pool2(&a2, engine);
+        // flatten CHW → vector (packing order preserved)
+        EncTensor::new(p2.cts, vec![p2.shape.iter().product()], p2.order, p2.shift)
+    }
+
+    /// One transfer-learning training step: frozen features + head SGD.
+    /// Note the feature tensor carries a pooling shift; the head's first
+    /// activation absorbs it (values stay 8-bit after the ReLU quantize).
+    pub fn train_step(&mut self, x: &EncTensor, labels_rev: &EncTensor, engine: &GlyphEngine) {
+        let feats = self.forward_features(x, engine);
+        self.head.train_step(&feats, labels_rev, engine);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::EngineProfile;
+
+    #[test]
+    fn tiny_cnn_feature_shapes_and_training() {
+        let batch = 2;
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 4321);
+        let mut rng = GlyphRng::new(7);
+        let config = CnnConfig::tiny();
+        // random plaintext feature weights
+        let rand_kernels = |oc: usize, ic: usize, k: usize, rng: &mut GlyphRng| -> Vec<Vec<Vec<Vec<i64>>>> {
+            (0..oc)
+                .map(|_| {
+                    (0..ic)
+                        .map(|_| {
+                            (0..k).map(|_| (0..k).map(|_| (rng.uniform_mod(7) as i64) - 3).collect()).collect()
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let c1w = rand_kernels(2, 1, 3, &mut rng);
+        let c2w = rand_kernels(3, 2, 3, &mut rng);
+        let bn1 = BnLayer { gain: vec![1, 1], bias: vec![0, 0], gain_shift: 0 };
+        let bn2 = BnLayer { gain: vec![1, 1, 1], bias: vec![0, 0, 0], gain_shift: 0 };
+        let mut cnn = GlyphCnn::new(config, &c1w, bn1, &c2w, bn2, &mut client, &mut rng, &engine);
+
+        // 14×14 input, batch 2
+        let cts: Vec<_> = (0..14 * 14)
+            .map(|i| client.encrypt_batch(&[(i % 11) as i64 - 5, (i % 7) as i64 - 3], 0))
+            .collect();
+        let x = EncTensor::new(cts, vec![1, 14, 14], PackOrder::Forward, 0);
+        let feats = cnn.forward_features(&x, &engine);
+        assert!(!feats.is_empty(), "feature vector must be non-empty: {:?}", feats.shape);
+        assert_eq!(feats.len(), cnn.config.head.dims[0], "head input width must match features");
+
+        // training step must move head weights without panicking
+        let mut l0 = vec![127i64, 0];
+        let mut l1 = vec![0i64, 127];
+        l0.reverse();
+        l1.reverse();
+        let labels = EncTensor::new(
+            vec![client.encrypt_batch(&l0, 0), client.encrypt_batch(&l1, 0)],
+            vec![2],
+            PackOrder::Reversed,
+            0,
+        );
+        cnn.train_step(&x, &labels, &engine);
+        let s = engine.counter.snapshot();
+        assert!(s.mult_cp > 0, "frozen convs must use MultCP");
+        assert!(s.mult_cc > 0, "head must use MultCC");
+    }
+}

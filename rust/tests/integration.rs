@@ -1,0 +1,116 @@
+//! Cross-module integration tests: the full stack composed end to end at
+//! test-scale parameters, plus consistency between the cost model, the
+//! scheduler and the live op counters.
+
+use glyph::coordinator::cost::{mlp_table, total_row, OpLatencies, Scheme};
+use glyph::coordinator::scheduler;
+use glyph::math::GlyphRng;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::nn::tensor::{EncTensor, PackOrder};
+use glyph::train::{GlyphMlp, MlpConfig};
+
+/// The live counters of a real encrypted train step must match the cost
+/// model's op-count columns for the same architecture (MultCC exactly; the
+/// switch/act counts up to the per-value vs per-neuron accounting).
+#[test]
+fn cost_model_matches_live_counters() {
+    let dims = vec![5usize, 4, 3];
+    let batch = 2;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 42);
+    let mut rng = GlyphRng::new(9);
+    let config = MlpConfig {
+        dims: dims.clone(),
+        act_shifts: vec![8, 7],
+        err_shifts: vec![7, 7],
+        grad_shift: 8,
+        softmax_bits: 3,
+    };
+    let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng);
+    let x_cts = (0..5).map(|i| client.encrypt_batch(&vec![(i as i64) * 7 - 10; batch], 0)).collect();
+    let x = EncTensor::new(x_cts, vec![5], PackOrder::Forward, 0);
+    let lab_cts = (0..3).map(|k| client.encrypt_batch(&vec![if k == 0 { 127 } else { 0 }; batch], 0)).collect();
+    let labels = EncTensor::new(lab_cts, vec![3], PackOrder::Reversed, 0);
+    mlp.train_step(&x, &labels, &engine);
+
+    let live = engine.counter.snapshot();
+    let rows = mlp_table(&dims, Scheme::GlyphMlp, &OpLatencies::paper());
+    let modeled = total_row(&rows);
+    // forward MACs + backward errors + gradients: the model counts each FC
+    // row once; live counters see forward + error (hidden only) + gradient.
+    assert_eq!(live.mult_cc, modeled.mult_cc, "MultCC count mismatch: live {live:?} vs model {modeled:?}");
+    assert!(live.act_gates > 0 && live.switch_b2t > 0 && live.switch_t2b > 0);
+}
+
+/// The scheduler's switch count must equal the number of switch-annotated
+/// rows in the generated Table 3.
+#[test]
+fn scheduler_and_table_agree_on_switches() {
+    let plan = scheduler::mlp_plan();
+    assert!(plan.validate());
+    let rows = mlp_table(&[784, 128, 32, 10], Scheme::GlyphMlp, &OpLatencies::paper());
+    let table_switches = rows.iter().filter(|r| r.switch != "-").count();
+    // the plan covers forward + backward with gradients; every Act row and
+    // every switch-annotated FC row corresponds to a plan boundary.
+    assert!(plan.switch_count() >= 6);
+    assert!(table_switches >= 6);
+}
+
+/// Dataset → encrypt → one FC forward → decrypt must equal the plaintext
+/// reference MAC over real (synthetic) image features.
+#[test]
+fn data_pipeline_to_encrypted_mac() {
+    let batch = 3;
+    let ds = glyph::data::synthetic_digits(batch, 77, "it");
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 4242);
+    // 4 center pixels as features
+    let feats: Vec<Vec<i64>> = (0..4)
+        .map(|f| {
+            (0..batch)
+                .map(|b| ds.image_i8(b)[(13 + f / 2) * 28 + 13 + f % 2])
+                .collect()
+        })
+        .collect();
+    let weights = vec![vec![3i64, -2, 1, -1]];
+    let layer = glyph::nn::linear::FcLayer::new_encrypted(&weights, &mut client, 0);
+    let x_cts = feats.iter().map(|v| client.encrypt_batch(v, 0)).collect();
+    let x = EncTensor::new(x_cts, vec![4], PackOrder::Forward, 0);
+    let u = layer.forward(&x, &engine);
+    let got = client.decrypt_batch(&u.cts[0], batch, 0);
+    let want: Vec<i64> = (0..batch)
+        .map(|b| (0..4).map(|f| weights[0][f] * feats[f][b]).sum())
+        .collect();
+    assert_eq!(got, want);
+}
+
+/// The noise-refresh substitution keeps training functional across many
+/// switch round trips (regression guard for noise-budget accounting).
+#[test]
+fn repeated_switch_round_trips_stay_correct() {
+    let batch = 2;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 777);
+    let mut ct = client.encrypt_batch(&[55, -66], 0);
+    let positions: Vec<usize> = (0..batch).collect();
+    let frac = engine.frac_bits();
+    for round in 0..4 {
+        let bits = engine.switch_to_bits(&ct, &positions, frac);
+        // identity recomposition
+        let truth = glyph::tfhe::LweCiphertext::trivial(glyph::tfhe::encode_bit(true), engine.gate_ck.params.n);
+        let lanes: Vec<glyph::tfhe::LweCiphertext> = bits
+            .iter()
+            .map(|lane_bits| {
+                let mut acc: Option<glyph::tfhe::LweCiphertext> = None;
+                for (i, b) in lane_bits.iter().enumerate() {
+                    let w = engine.gate_and_weighted(b, &truth, glyph::switch::extract::bit_position(i));
+                    match &mut acc {
+                        None => acc = Some(w),
+                        Some(a) => a.add_assign(&w),
+                    }
+                }
+                acc.unwrap()
+            })
+            .collect();
+        ct = engine.switch_to_bgv(&lanes, &positions);
+        assert_eq!(client.decrypt_batch(&ct, batch, 0), vec![55, -66], "round {round}");
+    }
+    assert_eq!(engine.counter.snapshot().switch_b2t, 4);
+}
