@@ -1,16 +1,76 @@
-// standalone micro-profile of the MultCC hot path
+// standalone micro-profile of the two hot paths: the BGV MultCC (NTT MAC)
+// and the TFHE gate bootstrap (PBS pipeline), sequential and pooled.
+// Appends machine-readable numbers to bench_out/BENCH_perf_probe.json.
+use glyph::bench_util::{report_json, BenchRecord};
+use glyph::coordinator::GlyphPool;
+use glyph::math::GlyphRng;
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::tfhe::{encode_bit, LweCiphertext, LweKey, TfheCloudKey, TfheParams, TrlweKey};
+
 fn main() {
+    // ---- BGV MultCC -------------------------------------------------------
     let (engine, mut client) = GlyphEngine::setup(EngineProfile::Default, 60, 1);
     let w = client.encrypt_scalar(9);
     let x = client.encrypt_batch(&vec![17; 60], 0);
     // warmup
-    for _ in 0..5 { let mut t = w.clone(); t.mul_assign(&x, &engine.rlk, &engine.ctx); }
+    for _ in 0..5 {
+        let mut t = w.clone();
+        t.mul_assign(&x, &engine.rlk, &engine.ctx);
+    }
     let t0 = std::time::Instant::now();
-    for _ in 0..100 { let mut t = w.clone(); t.mul_assign(&x, &engine.rlk, &engine.ctx); }
-    println!("MultCC (N=2048, L=3): {:.3} ms", t0.elapsed().as_secs_f64() * 10.0);
+    for _ in 0..100 {
+        let mut t = w.clone();
+        t.mul_assign(&x, &engine.rlk, &engine.ctx);
+    }
+    let t_multcc = t0.elapsed().as_secs_f64() / 100.0;
+    println!("MultCC (N=2048, L=3): {:.3} ms", t_multcc * 1000.0);
     let mut a = x.clone();
     let t0 = std::time::Instant::now();
-    for _ in 0..100 { a.c0.to_coeff(); a.c0.to_ntt(); }
+    for _ in 0..100 {
+        a.c0.to_coeff();
+        a.c0.to_ntt();
+    }
     println!("NTT fwd+inv pair (3 limbs): {:.3} ms", t0.elapsed().as_secs_f64() * 10.0);
+
+    // ---- TFHE gate bootstrap (PBS pipeline) -------------------------------
+    let params = TfheParams::test_params();
+    let mut rng = GlyphRng::new(7);
+    let key = LweKey::generate_binary(params.n, &mut rng);
+    let ring = TrlweKey::generate(params.big_n, &mut rng);
+    let ck = TfheCloudKey::generate(&key, &ring, &params, &mut rng);
+    let enc = |b: bool, rng: &mut GlyphRng| {
+        LweCiphertext::encrypt(encode_bit(b), &key, params.alpha_lwe, rng)
+    };
+    let c1 = enc(true, &mut rng);
+    let c2 = enc(false, &mut rng);
+    let k = 64usize;
+    let pairs: Vec<(&LweCiphertext, &LweCiphertext)> = (0..k).map(|_| (&c1, &c2)).collect();
+    // warm the thread-local scratch, the pool workers and their scratches
+    let _ = ck.and(&c1, &c2);
+    let _ = ck.and_many(&pairs);
+    let t0 = std::time::Instant::now();
+    for (x1, x2) in &pairs {
+        let _ = ck.and(x1, x2);
+    }
+    let t_seq = t0.elapsed().as_secs_f64() / k as f64;
+    let t0 = std::time::Instant::now();
+    let _ = ck.and_many(&pairs);
+    let t_pool = t0.elapsed().as_secs_f64() / k as f64;
+    let threads = GlyphPool::global().threads();
+    println!(
+        "gate bootstrap: {:.3} ms/op sequential ({:.1} ops/s) | {:.3} ms/op across {} threads ({:.1} ops/s)",
+        t_seq * 1000.0,
+        1.0 / t_seq,
+        t_pool * 1000.0,
+        threads,
+        1.0 / t_pool
+    );
+    report_json(
+        "perf_probe",
+        &[
+            BenchRecord::new("mult_cc", t_multcc, 1),
+            BenchRecord::new("gate_bootstrap", t_seq, 1),
+            BenchRecord::new("gate_bootstrap_pool", t_pool, threads),
+        ],
+    );
 }

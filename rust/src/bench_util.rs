@@ -2,9 +2,12 @@
 //!
 //! Every `cargo bench` target is a `harness = false` binary that times its
 //! workload with [`time_op`], prints a paper-style table to stdout and
-//! appends it to `bench_out/<name>.md`. `GLYPH_BENCH_FULL=1` switches the
-//! crypto profiles from test-scale to the production-shaped parameters
-//! (slower, used for the recorded EXPERIMENTS.md numbers).
+//! appends it to `bench_out/<name>.md`. [`report_json`] additionally emits a
+//! machine-readable `bench_out/BENCH_<name>.json` (op name, secs/op,
+//! threads, profile) so the perf trajectory can be tracked across PRs.
+//! `GLYPH_BENCH_FULL=1` switches the crypto profiles from test-scale to the
+//! production-shaped parameters (slower, used for the recorded
+//! EXPERIMENTS.md §Perf numbers).
 
 use std::time::Instant;
 
@@ -41,6 +44,61 @@ pub fn report(name: &str, contents: &str) {
     }
 }
 
+/// One machine-readable measurement for [`report_json`].
+pub struct BenchRecord {
+    /// Operation name, e.g. `"gate_bootstrap"`.
+    pub op: String,
+    /// Mean wall-clock seconds per operation.
+    pub secs_per_op: f64,
+    /// Concurrent executors used for this measurement (1 = sequential).
+    pub threads: usize,
+}
+
+impl BenchRecord {
+    pub fn new(op: &str, secs_per_op: f64, threads: usize) -> Self {
+        BenchRecord { op: op.to_string(), secs_per_op, threads }
+    }
+
+    /// Throughput view of the record.
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.secs_per_op > 0.0 {
+            1.0 / self.secs_per_op
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Emit `bench_out/BENCH_<name>.json`: `{name, profile, threads_available,
+/// ops: [{op, secs_per_op, ops_per_sec, threads}]}`. Hand-rolled JSON — the
+/// vendored crate set has no serde; op names must not need escaping.
+pub fn report_json(name: &str, records: &[BenchRecord]) {
+    let profile = if full_profile() { "full" } else { "test" };
+    let avail = crate::coordinator::executor::max_threads();
+    let mut json = String::new();
+    json.push_str(&format!(
+        "{{\n  \"name\": \"{name}\",\n  \"profile\": \"{profile}\",\n  \"threads_available\": {avail},\n  \"ops\": [\n"
+    ));
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    {{\"op\": \"{}\", \"secs_per_op\": {:.9}, \"ops_per_sec\": {:.3}, \"threads\": {}}}{sep}\n",
+            r.op,
+            r.secs_per_op,
+            r.ops_per_sec(),
+            r.threads
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/BENCH_{name}.json");
+    if let Err(e) = std::fs::write(&path, &json) {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        eprintln!("[wrote {path}]");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -49,5 +107,12 @@ mod tests {
     fn time_op_is_positive() {
         let t = time_op(3, || { std::hint::black_box((0..1000).sum::<u64>()); });
         assert!(t > 0.0);
+    }
+
+    #[test]
+    fn bench_record_throughput() {
+        let r = BenchRecord::new("gate_bootstrap", 0.25, 4);
+        assert!((r.ops_per_sec() - 4.0).abs() < 1e-9);
+        assert_eq!(r.threads, 4);
     }
 }

@@ -1,46 +1,284 @@
-//! Thread-pool execution of independent homomorphic work items.
+//! `GlyphPool`: a persistent channel-based worker pool for independent
+//! homomorphic work items.
 //!
 //! SGD's per-neuron MACs and per-value activations are embarrassingly
 //! parallel (the paper's §6.3: "the weight updates in SGD are independent");
-//! Table 5's 1→48-thread scaling sweep runs through this executor. Plain
-//! `std::thread::scope` — the vendored crate set has no rayon, and the work
-//! items are large enough that a work-stealing pool would not matter.
+//! Table 5's 1→48-thread scaling sweep runs through this executor. The old
+//! implementation spawned fresh OS threads per call and took two mutex
+//! locks per item; this one keeps the threads alive across calls, hands out
+//! items with a single atomic fetch-add, and — crucially for the PBS hot
+//! path — owns one [`PbsScratch`] per worker, so a batched bootstrap fan-out
+//! reuses warm buffers instead of re-allocating per ciphertext
+//! (EXPERIMENTS.md §Perf).
+//!
+//! Work submission is scoped: `map*` borrows its items and closure, blocks
+//! until every executor has finished, and propagates the first panic. Type
+//! erasure goes through a monomorphized `unsafe fn` + shared-state pointer
+//! (the standard scoped-pool technique), so non-`'static` borrows are fine.
 
+use crate::tfhe::scratch::PbsScratch;
+use std::cell::{Cell, UnsafeCell};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Map `f` over `items` using `threads` OS threads; preserves order.
+/// One queued unit of execution: the address of the scoped shared state
+/// (as a `usize`, so the job is trivially `Send`; validity is guaranteed by
+/// the submitter blocking until every executor signals completion) plus the
+/// monomorphized entry that knows its concrete type.
+struct RawJob {
+    data: usize,
+    call: unsafe fn(usize, &mut PbsScratch),
+}
+
+thread_local! {
+    static IS_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+fn is_pool_worker() -> bool {
+    IS_POOL_WORKER.with(|f| f.get())
+}
+
+/// Scoped state shared between the submitting thread and the executors of
+/// one `map*` call.
+struct MapShared<T, R, F> {
+    f: F,
+    items: Vec<UnsafeCell<Option<T>>>,
+    out: Vec<UnsafeCell<Option<R>>>,
+    next: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+    executors_left: Mutex<usize>,
+    done: Condvar,
+}
+
+// SAFETY: slots are only touched by the executor that claimed their index
+// via the `next` fetch-add, so access is disjoint; `f` is only shared.
+unsafe impl<T: Send, R: Send, F: Sync> Sync for MapShared<T, R, F> {}
+
+impl<T, R, F> MapShared<T, R, F>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T, &mut PbsScratch) -> R + Sync,
+{
+    /// Executor body: claim items until the queue is drained (or aborted by
+    /// a panic), then signal completion. The *last* touch of `self` is the
+    /// completion signal, which the submitter blocks on — that ordering is
+    /// what makes the scoped borrow sound.
+    fn run(&self, scratch: &mut PbsScratch) {
+        let n = self.items.len();
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            // SAFETY: index `i` was claimed exactly once (atomic fetch-add).
+            let item = unsafe { (*self.items[i].get()).take().expect("item claimed once") };
+            match catch_unwind(AssertUnwindSafe(|| (self.f)(item, scratch))) {
+                Ok(r) => unsafe {
+                    *self.out[i].get() = Some(r);
+                },
+                Err(payload) => {
+                    let mut slot = self.panic.lock().expect("panic slot");
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    drop(slot);
+                    // Abort the remaining queue: park `next` at the end
+                    // (monotonic, so no wrap-around from racing fetch-adds).
+                    self.next.store(n, Ordering::Relaxed);
+                }
+            }
+        }
+        let mut left = self.executors_left.lock().expect("executor count");
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+unsafe fn run_erased<T, R, F>(data: usize, scratch: &mut PbsScratch)
+where
+    T: Send,
+    R: Send,
+    F: Fn(T, &mut PbsScratch) -> R + Sync,
+{
+    let shared = &*(data as *const MapShared<T, R, F>);
+    shared.run(scratch);
+}
+
+/// Persistent worker pool; one [`PbsScratch`] per worker.
+pub struct GlyphPool {
+    tx: Mutex<Option<Sender<RawJob>>>,
+    threads: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl GlyphPool {
+    /// Spawn a pool with `threads` workers (at least 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<RawJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|w| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("glyph-worker-{w}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        GlyphPool { tx: Mutex::new(Some(tx)), threads, handles: Mutex::new(handles) }
+    }
+
+    /// The process-wide pool: `GLYPH_THREADS` workers if set, otherwise the
+    /// available hardware parallelism (minimum 4, so small machines still
+    /// exercise concurrency). Built on first use, lives for the process.
+    pub fn global() -> &'static GlyphPool {
+        static POOL: OnceLock<GlyphPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let threads = std::env::var("GLYPH_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&t| t >= 1)
+                .unwrap_or_else(|| max_threads().max(4));
+            GlyphPool::new(threads)
+        })
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Order-preserving parallel map with per-worker scratch; at most
+    /// `limit` concurrent executors. Runs inline (with a private scratch)
+    /// when the limit or item count makes parallelism pointless, or when
+    /// called from inside a pool worker (nested fan-out must not deadlock
+    /// the pool against itself).
+    pub fn map_limit_with<T, R, F>(&self, items: Vec<T>, limit: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T, &mut PbsScratch) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let limit = limit.min(self.threads).min(n);
+        if limit <= 1 || is_pool_worker() {
+            let mut scratch = PbsScratch::new();
+            return items.into_iter().map(|t| f(t, &mut scratch)).collect();
+        }
+        let shared = MapShared {
+            f,
+            items: items.into_iter().map(|t| UnsafeCell::new(Some(t))).collect(),
+            out: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+            next: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            executors_left: Mutex::new(limit),
+            done: Condvar::new(),
+        };
+        {
+            let data = &shared as *const MapShared<T, R, F> as usize;
+            let guard = self.tx.lock().expect("pool sender");
+            let tx = guard.as_ref().expect("pool is shut down");
+            for _ in 0..limit {
+                tx.send(RawJob { data, call: run_erased::<T, R, F> }).expect("pool workers alive");
+            }
+        }
+        // Block until every executor instance has signalled; only then may
+        // `shared` (and the borrows inside `f`) go out of scope.
+        let mut left = shared.executors_left.lock().expect("executor count");
+        while *left > 0 {
+            left = shared.done.wait(left).expect("condvar wait");
+        }
+        drop(left);
+        if let Some(payload) = shared.panic.lock().expect("panic slot").take() {
+            resume_unwind(payload);
+        }
+        shared
+            .out
+            .into_iter()
+            .map(|slot| slot.into_inner().expect("every slot filled"))
+            .collect()
+    }
+
+    /// Order-preserving parallel map with per-worker scratch across all
+    /// workers.
+    pub fn map_with<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T, &mut PbsScratch) -> R + Sync,
+    {
+        self.map_limit_with(items, usize::MAX, f)
+    }
+
+    /// Order-preserving parallel map (no scratch access).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        self.map_limit_with(items, usize::MAX, move |t, _scratch| f(t))
+    }
+}
+
+impl Drop for GlyphPool {
+    fn drop(&mut self) {
+        // Disconnect the channel so workers drain and exit, then join them.
+        if let Ok(mut tx) = self.tx.lock() {
+            *tx = None;
+        }
+        if let Ok(mut handles) = self.handles.lock() {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<RawJob>>) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    let mut scratch = PbsScratch::new();
+    loop {
+        let job = {
+            let guard = rx.lock().expect("pool receiver");
+            guard.recv()
+        };
+        match job {
+            // SAFETY: contract of `RawJob` — the shared state is alive
+            // until its submitter observes the completion signal `run`
+            // sends after its last access.
+            Ok(job) => unsafe { (job.call)(job.data, &mut scratch) },
+            Err(_) => break, // channel closed: pool dropped
+        }
+    }
+}
+
+/// Map `f` over `items` preserving order with exactly `threads` concurrent
+/// executors. Compatibility wrapper for the original spawn-per-call
+/// executor; `threads <= 1` runs inline. Requests wider than the resident
+/// pool (Table 5's thread-scaling sweep) honor the exact width via a
+/// one-off pool instead of silently clamping the measurement.
 pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
 {
-    let n = items.len();
-    if threads <= 1 || n <= 1 {
-        return items.into_iter().map(f).collect();
+    let global = GlyphPool::global();
+    if threads > global.threads() && threads > 1 && items.len() > 1 {
+        let pool = GlyphPool::new(threads);
+        return pool.map_limit_with(items, threads, move |t, _scratch| f(t));
     }
-    let items: Vec<std::sync::Mutex<Option<T>>> =
-        items.into_iter().map(|t| std::sync::Mutex::new(Some(t))).collect();
-    let slots: Vec<std::sync::Mutex<Option<R>>> = (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads.min(n) {
-            let items = &items;
-            let slots = &slots;
-            let next = &next;
-            let f = &f;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = items[i].lock().unwrap().take().unwrap();
-                let r = f(item);
-                *slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    slots.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+    global.map_limit_with(items, threads, move |t, _scratch| f(t))
 }
 
 /// Available hardware parallelism.
@@ -64,7 +302,6 @@ mod tests {
     #[test]
     fn parallel_map_actually_uses_threads() {
         use std::collections::HashSet;
-        use std::sync::Mutex;
         let seen = Mutex::new(HashSet::new());
         let _ = parallel_map((0..64).collect::<Vec<_>>(), 4, |x| {
             // make items slow enough that one thread cannot drain the queue
@@ -73,5 +310,84 @@ mod tests {
             x
         });
         assert!(seen.lock().unwrap().len() > 1);
+    }
+
+    #[test]
+    fn pool_is_reused_across_calls() {
+        use std::collections::HashSet;
+        let pool = GlyphPool::new(3);
+        let mut all_ids = HashSet::new();
+        for round in 0..4 {
+            let ids = Mutex::new(HashSet::new());
+            let out = pool.map((0..32u64).collect(), |x| {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                ids.lock().unwrap().insert(std::thread::current().id());
+                x + round
+            });
+            assert_eq!(out, (0..32u64).map(|x| x + round).collect::<Vec<_>>());
+            all_ids.extend(ids.into_inner().unwrap());
+        }
+        // persistent workers: across 4 calls we still only ever saw the
+        // pool's threads (plus possibly fewer on a slow machine), never a
+        // fresh set per call.
+        assert!(all_ids.len() <= 3, "saw {} distinct workers from a 3-thread pool", all_ids.len());
+    }
+
+    #[test]
+    fn map_with_hands_each_worker_a_scratch() {
+        let pool = GlyphPool::new(2);
+        // size the scratch inside the job; the call must succeed and return
+        // in order — and the scratch must be a real per-worker buffer.
+        let out = pool.map_with((0..8usize).collect(), |i, scratch| {
+            let ring = scratch.ring(64);
+            ring.dig[0] = i as i32;
+            (i, ring.n)
+        });
+        assert_eq!(out, (0..8usize).map(|i| (i, 64)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrowed_items_and_closures_work() {
+        // the scoped design must accept non-'static borrows
+        let data: Vec<String> = (0..16).map(|i| format!("item-{i}")).collect();
+        let refs: Vec<&String> = data.iter().collect();
+        let lens = GlyphPool::global().map(refs, |s| s.len());
+        assert_eq!(lens, data.iter().map(|s| s.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = GlyphPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..16i32).collect(), |x| {
+                if x == 7 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        assert!(result.is_err(), "panic inside a work item must propagate to the caller");
+        // the pool must still execute subsequent work
+        let out = pool.map((0..4i32).collect(), |x| x * 2);
+        assert_eq!(out, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn nested_fan_out_runs_inline_instead_of_deadlocking() {
+        let pool = GlyphPool::global();
+        let out = pool.map((0..4u32).collect(), |outer| {
+            // a nested map from inside a worker must not wait on the pool
+            let inner = GlyphPool::global().map((0..4u32).collect(), move |i| i + outer);
+            inner.into_iter().sum::<u32>()
+        });
+        assert_eq!(out, vec![6, 10, 14, 18]);
+    }
+
+    #[test]
+    fn empty_and_single_item_edge_cases() {
+        let pool = GlyphPool::new(2);
+        let empty: Vec<u8> = pool.map(Vec::new(), |x: u8| x);
+        assert!(empty.is_empty());
+        assert_eq!(pool.map(vec![41u8], |x| x + 1), vec![42]);
     }
 }

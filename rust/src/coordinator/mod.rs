@@ -8,6 +8,6 @@ pub mod metrics;
 pub mod scheduler;
 
 pub use cost::{mlp_table, cnn_table, to_markdown, total_row, CnnShape, OpLatencies, Scheme, TableRow};
-pub use executor::{max_threads, parallel_map};
+pub use executor::{max_threads, parallel_map, GlyphPool};
 pub use metrics::{OpCounter, OpSnapshot};
 pub use scheduler::{LayerKind, Plan, PlanStep, System};

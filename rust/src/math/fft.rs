@@ -134,30 +134,50 @@ impl TorusFft {
         }
     }
 
+    /// FFT lane length M = N/2 (the size of every frequency-domain buffer).
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.m
+    }
+
     /// Forward transform of a torus32 polynomial (coefficients centered).
     pub fn forward_torus(&self, poly: &[u32]) -> Vec<Cplx> {
-        debug_assert_eq!(poly.len(), self.n);
-        let m = self.m;
-        let mut z: Vec<Cplx> = (0..m)
-            .map(|j| {
-                let re = poly[j] as i32 as f64;
-                let im = poly[j + m] as i32 as f64;
-                Cplx::new(re, im).mul(self.twist[j])
-            })
-            .collect();
-        self.fft_inplace(&mut z);
+        let mut z = vec![Cplx::default(); self.m];
+        self.forward_torus_into(poly, &mut z);
         z
+    }
+
+    /// Allocation-free [`Self::forward_torus`]: writes the M frequency
+    /// coefficients into `out` (bit-identical to the allocating version).
+    pub fn forward_torus_into(&self, poly: &[u32], out: &mut [Cplx]) {
+        debug_assert_eq!(poly.len(), self.n);
+        debug_assert_eq!(out.len(), self.m);
+        let m = self.m;
+        for j in 0..m {
+            let re = poly[j] as i32 as f64;
+            let im = poly[j + m] as i32 as f64;
+            out[j] = Cplx::new(re, im).mul(self.twist[j]);
+        }
+        self.fft_inplace(out);
     }
 
     /// Forward transform of a small integer polynomial (e.g. gadget digits).
     pub fn forward_int(&self, poly: &[i32]) -> Vec<Cplx> {
-        debug_assert_eq!(poly.len(), self.n);
-        let m = self.m;
-        let mut z: Vec<Cplx> = (0..m)
-            .map(|j| Cplx::new(poly[j] as f64, poly[j + m] as f64).mul(self.twist[j]))
-            .collect();
-        self.fft_inplace(&mut z);
+        let mut z = vec![Cplx::default(); self.m];
+        self.forward_int_into(poly, &mut z);
         z
+    }
+
+    /// Allocation-free [`Self::forward_int`]: writes the M frequency
+    /// coefficients into `out` (bit-identical to the allocating version).
+    pub fn forward_int_into(&self, poly: &[i32], out: &mut [Cplx]) {
+        debug_assert_eq!(poly.len(), self.n);
+        debug_assert_eq!(out.len(), self.m);
+        let m = self.m;
+        for j in 0..m {
+            out[j] = Cplx::new(poly[j] as f64, poly[j + m] as f64).mul(self.twist[j]);
+        }
+        self.fft_inplace(out);
     }
 
     /// Pointwise multiply-accumulate in the FFT domain.
@@ -170,12 +190,19 @@ impl TorusFft {
     /// Inverse transform; result coefficients rounded and wrapped to torus32,
     /// added into `out`.
     pub fn inverse_add_to_torus(&self, freq: &[Cplx], out: &mut [u32]) {
-        debug_assert_eq!(out.len(), self.n);
-        let m = self.m;
         let mut z = freq.to_vec();
-        self.ifft_inplace(&mut z);
+        self.inverse_add_to_torus_inplace(&mut z, out);
+    }
+
+    /// Allocation-free [`Self::inverse_add_to_torus`] that consumes `freq`
+    /// in place (the caller's accumulator is clobbered — it is scratch).
+    pub fn inverse_add_to_torus_inplace(&self, freq: &mut [Cplx], out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.n);
+        debug_assert_eq!(freq.len(), self.m);
+        let m = self.m;
+        self.ifft_inplace(freq);
         for j in 0..m {
-            let c = z[j].mul(self.inv_twist[j]);
+            let c = freq[j].mul(self.inv_twist[j]);
             out[j] = out[j].wrapping_add(c.re.round() as i64 as u32);
             out[j + m] = out[j + m].wrapping_add(c.im.round() as i64 as u32);
         }

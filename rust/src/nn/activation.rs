@@ -10,6 +10,7 @@
 
 use super::engine::GlyphEngine;
 use super::tensor::{EncTensor, PackOrder};
+use crate::coordinator::executor::GlyphPool;
 use crate::switch::extract::bit_position;
 use crate::switch::SWITCH_BITS;
 use crate::tfhe::{LweCiphertext, TestPoly};
@@ -52,6 +53,60 @@ pub fn irelu_bits(engine: &GlyphEngine, delta_bits: &[LweCiphertext], u_sign: &L
     acc.unwrap()
 }
 
+/// Shared recomposition core of the batched ReLU/iReLU layers: for every
+/// lane, AND bits `start_bit..8` against the lane's NOT(sign) at their
+/// weighted positions — all lanes in one `gate_and_weighted_many` fan-out —
+/// then sum each lane's weighted bits back into one LWE (same gates and
+/// same per-lane sum order as the sequential [`relu_bits`]/[`irelu_bits`]).
+fn weighted_and_lanes(
+    engine: &GlyphEngine,
+    lanes_bits: &[Vec<LweCiphertext>],
+    not_signs: &[LweCiphertext],
+    start_bit: usize,
+) -> Vec<LweCiphertext> {
+    let per_lane = SWITCH_BITS as usize - start_bit;
+    let mut jobs = Vec::with_capacity(lanes_bits.len() * per_lane);
+    for (lane, bits) in lanes_bits.iter().enumerate() {
+        for i in start_bit..SWITCH_BITS as usize {
+            jobs.push((&bits[i], &not_signs[lane], bit_position(i)));
+        }
+    }
+    let weighted = engine.gate_and_weighted_many(&jobs);
+    weighted
+        .chunks(per_lane)
+        .map(|lane_bits| {
+            let mut acc = lane_bits[0].clone();
+            for w in &lane_bits[1..] {
+                acc.add_assign(w);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Batched Algorithm 1 over every lane of a ciphertext (lanes × 7 weighted
+/// ANDs in one fan-out; bit 0 is the sign, forced out of the output).
+fn relu_lanes(
+    engine: &GlyphEngine,
+    lanes_bits: &[Vec<LweCiphertext>],
+) -> (Vec<LweCiphertext>, Vec<LweCiphertext>) {
+    let signs: Vec<LweCiphertext> = lanes_bits.iter().map(|bits| bits[0].clone()).collect();
+    let not_signs: Vec<LweCiphertext> = signs.iter().map(|s| engine.gate_not(s)).collect();
+    let recomposed = weighted_and_lanes(engine, lanes_bits, &not_signs, 1);
+    (recomposed, signs)
+}
+
+/// Batched Algorithm 2 over every lane (lanes × 8 weighted ANDs, the sign
+/// bit included); bit-exact against a per-lane [`irelu_bits`] loop.
+fn irelu_lanes(
+    engine: &GlyphEngine,
+    lanes_bits: &[Vec<LweCiphertext>],
+    lane_signs: &[LweCiphertext],
+) -> Vec<LweCiphertext> {
+    let not_signs: Vec<LweCiphertext> = lane_signs.iter().map(|s| engine.gate_not(s)).collect();
+    weighted_and_lanes(engine, lanes_bits, &not_signs, 0)
+}
+
 /// Full ReLU layer: BGV pre-activations → TFHE bits → Alg-1 gates → packed
 /// fresh BGV activations (8-bit, shift 0) in `out_order` packing.
 ///
@@ -72,15 +127,7 @@ pub fn relu_layer(
     let mut signs = Vec::with_capacity(u.len());
     for ct in &u.cts {
         let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
-        let mut lane_signs = Vec::with_capacity(lanes_bits.len());
-        let recomposed: Vec<LweCiphertext> = lanes_bits
-            .iter()
-            .map(|bits| {
-                let (out, sign) = relu_bits(engine, bits);
-                lane_signs.push(sign);
-                out
-            })
-            .collect();
+        let (recomposed, lane_signs) = relu_lanes(engine, &lanes_bits);
         outs.push(engine.switch_to_bgv(&recomposed, &out_positions));
         signs.push(lane_signs);
     }
@@ -105,11 +152,7 @@ pub fn irelu_layer(
     let mut outs = Vec::with_capacity(delta.len());
     for (ci, ct) in delta.cts.iter().enumerate() {
         let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
-        let recomposed: Vec<LweCiphertext> = lanes_bits
-            .iter()
-            .enumerate()
-            .map(|(lane, bits)| irelu_bits(engine, bits, &state.signs[ci][lane]))
-            .collect();
+        let recomposed = irelu_lanes(engine, &lanes_bits, &state.signs[ci]);
         outs.push(engine.switch_to_bgv(&recomposed, &out_positions));
     }
     EncTensor::new(outs, delta.shape.clone(), PackOrder::Reversed, 0)
@@ -149,25 +192,53 @@ impl SoftmaxUnit {
     /// on the critical path, Figure 4). Leaf-level muxes over constants are
     /// folded away, so each output bit costs a depth-(b−1) tree.
     /// Returns the recomposed LWE (output already at the 2^24 grid).
+    ///
+    /// The 8 output-bit trees are independent — they fan across the global
+    /// `GlyphPool`, and the surviving bits are weighted in one batched gate
+    /// fan-out. Same ciphertexts as the sequential loop.
     pub fn evaluate_mux(&self, engine: &GlyphEngine, bits: &[LweCiphertext]) -> LweCiphertext {
-        assert_eq!(bits.len(), self.in_bits);
-        let mut acc: Option<LweCiphertext> = None;
-        for j in 0..8u32 {
-            // Build the selection tree for output bit j, folding constant
-            // leaves: level 0 nodes cover value pairs (p, p+1).
-            let out = self.mux_tree_bit(engine, bits, j);
-            if let Some(node) = out {
-                // node is a gate-encoded boolean; convert to weighted
-                // position via AND with TRUE (one more bootstrap).
-                let truth = LweCiphertext::trivial(crate::tfhe::encode_bit(true), node.dim());
-                let w = engine.gate_and_weighted(&node, &truth, 24 + j);
-                match &mut acc {
-                    None => acc = Some(w),
-                    Some(a) => a.add_assign(&w),
-                }
+        self.evaluate_mux_many(engine, &[bits]).pop().expect("one lane, one output")
+    }
+
+    /// Batched Figure-4 unit: every lane's 8 output-bit MUX trees fan across
+    /// the pool in ONE call (lanes × 8 independent trees), then a single
+    /// batched weighting pass recomposes each lane. Order-preserving and
+    /// bit-exact against a per-lane [`Self::evaluate_mux`] loop.
+    pub fn evaluate_mux_many(
+        &self,
+        engine: &GlyphEngine,
+        lanes_bits: &[&[LweCiphertext]],
+    ) -> Vec<LweCiphertext> {
+        let lanes = lanes_bits.len();
+        let mut tree_jobs = Vec::with_capacity(lanes * 8);
+        for lane in 0..lanes {
+            assert_eq!(lanes_bits[lane].len(), self.in_bits);
+            for j in 0..8u32 {
+                tree_jobs.push((lane, j));
             }
         }
-        acc.unwrap_or_else(|| LweCiphertext::trivial(0, engine.gate_ext_dim()))
+        let nodes = GlyphPool::global()
+            .map(tree_jobs, |(lane, j)| self.mux_tree_bit(engine, lanes_bits[lane], j));
+        let truth = LweCiphertext::trivial(crate::tfhe::encode_bit(true), engine.gate_ck.params.n);
+        let mut weight_jobs: Vec<(&LweCiphertext, &LweCiphertext, u32)> = Vec::new();
+        let mut lane_of: Vec<usize> = Vec::new();
+        for (idx, node) in nodes.iter().enumerate() {
+            if let Some(n) = node {
+                weight_jobs.push((n, &truth, 24 + (idx % 8) as u32));
+                lane_of.push(idx / 8);
+            }
+        }
+        let weighted = engine.gate_and_weighted_many(&weight_jobs);
+        let mut accs: Vec<Option<LweCiphertext>> = vec![None; lanes];
+        for (w, &lane) in weighted.iter().zip(&lane_of) {
+            match &mut accs[lane] {
+                None => accs[lane] = Some(w.clone()),
+                Some(a) => a.add_assign(w),
+            }
+        }
+        accs.into_iter()
+            .map(|a| a.unwrap_or_else(|| LweCiphertext::trivial(0, engine.gate_ext_dim())))
+            .collect()
     }
 
     /// One output bit's MUX tree. Returns None if the bit is constant 0
@@ -225,12 +296,31 @@ impl SoftmaxUnit {
     /// the paper's MUX tree). The logit must fit in `in_bits−1` bits; an
     /// offset moves the full signed range into the positive half-torus.
     pub fn evaluate_pbs(&self, engine: &GlyphEngine, value_lwe: &LweCiphertext) -> LweCiphertext {
+        self.evaluate_pbs_many(engine, std::slice::from_ref(value_lwe))
+            .pop()
+            .expect("one input, one output")
+    }
+
+    /// Batched fast mode: the lookup test polynomial is programmed once and
+    /// every lane's PBS fans across the pool.
+    pub fn evaluate_pbs_many(
+        &self,
+        engine: &GlyphEngine,
+        value_lwes: &[LweCiphertext],
+    ) -> Vec<LweCiphertext> {
         let nb = self.in_bits as u32;
+        debug_assert!(nb >= 1);
         let big_n = engine.extract_ck.params.big_n;
         // phase = v·2^(32−nb); add 2^31 so v ∈ [−2^(nb−1), 2^(nb−1)) maps to
         // [0, 2^32) positive-half windows of the doubled table.
-        let mut shifted = value_lwe.clone();
-        shifted.add_constant(1u32 << 31);
+        let shifted: Vec<LweCiphertext> = value_lwes
+            .iter()
+            .map(|lwe| {
+                let mut s = lwe.clone();
+                s.add_constant(1u32 << 31);
+                s
+            })
+            .collect();
         // window w of N covers v = w·2^nb/N − 2^(nb−1)… program entries.
         let entries = &self.entries;
         let n_entries = entries.len();
@@ -239,8 +329,8 @@ impl SoftmaxUnit {
             let signed_index = (v + n_entries / 2) % n_entries; // undo the +2^31 offset
             (entries[signed_index] as u32) << crate::switch::VALUE_POS
         });
-        engine.counter.bump(&engine.counter.act_gates, 1);
-        engine.extract_ck.pbs_raw(&shifted, &tv)
+        engine.counter.bump(&engine.counter.act_gates, value_lwes.len() as u64);
+        engine.extract_ck.pbs_raw_many(shifted, &tv)
     }
 }
 

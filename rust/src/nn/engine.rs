@@ -193,6 +193,18 @@ impl GlyphEngine {
         self.gate_ck.and_weighted_raw(a, b, pos)
     }
 
+    /// Batched [`Self::gate_and_weighted`]: every `(a, b, pos)` job is one
+    /// gate bootstrap, fanned across the global `GlyphPool` (order-
+    /// preserving, same ciphertexts as the sequential loop). The activation
+    /// layers push all lanes × bits of a tensor through this at once.
+    pub fn gate_and_weighted_many(
+        &self,
+        jobs: &[(&LweCiphertext, &LweCiphertext, u32)],
+    ) -> Vec<LweCiphertext> {
+        self.counter.bump(&self.counter.act_gates, jobs.len() as u64);
+        self.gate_ck.and_weighted_raw_many(jobs)
+    }
+
     pub fn gate_mux(&self, s: &LweCiphertext, d1: &LweCiphertext, d0: &LweCiphertext) -> LweCiphertext {
         self.counter.bump(&self.counter.act_gates, 2); // 2 bootstraps on the critical path
         self.gate_ck.mux(s, d1, d0)

@@ -101,6 +101,9 @@ impl BgvToTfheSwitch {
 
     /// Same, for arbitrary coefficient positions (reverse-packed backward
     /// tensors and the convolution-trick gradient coefficient use this).
+    ///
+    /// The per-lane extract + key switch is independent work — it fans
+    /// across the global `GlyphPool` (order-preserving).
     pub fn to_torus_positions(&self, ct: &BgvCiphertext, positions: &[usize]) -> Vec<LweCiphertext> {
         let level = ct.level;
         // ×Δ : LSB→MSB (exact, noise-preserving)
@@ -109,13 +112,12 @@ impl BgvToTfheSwitch {
         c.c0.to_coeff();
         c.c1.to_coeff();
         let n = c.c0.n();
-        positions
-            .iter()
-            .map(|&lane| {
-                let lwe_q = self.extract_lane_torus32(&c.c0.res, &c.c1.res, level, lane, n);
-                self.ksk.switch(&lwe_q)
-            })
-            .collect()
+        let c0 = &c.c0.res;
+        let c1 = &c.c1.res;
+        crate::coordinator::executor::GlyphPool::global().map(positions.to_vec(), |lane| {
+            let lwe_q = self.extract_lane_torus32(c0, c1, level, lane, n);
+            self.ksk.switch(&lwe_q)
+        })
     }
 
     /// Full BGV→TFHE switch: per lane, the 8 two's-complement bits
@@ -129,6 +131,11 @@ impl BgvToTfheSwitch {
     }
 
     /// [`Self::to_bits`] for arbitrary coefficient positions.
+    ///
+    /// All lanes × [`SWITCH_BITS`] sign-PBS extractions are independent
+    /// (doubling discards already-decided top bits — module docs step 5), so
+    /// the whole batch fans across the pool in ONE `pbs_many` call instead
+    /// of a sequential per-lane / per-bit loop.
     pub fn to_bits_positions(
         &self,
         ct: &BgvCiphertext,
@@ -136,27 +143,26 @@ impl BgvToTfheSwitch {
         ck: &TfheCloudKey,
     ) -> Vec<Vec<LweCiphertext>> {
         let tv = TestPoly::constant(ck.params.big_n, MU_BIT.wrapping_neg());
-        self.to_torus_positions(ct, positions)
-            .into_iter()
-            .map(|mut lwe| {
-                // Half-window guard: turns the floor quantization into
-                // round-to-nearest and moves exact grid values off the PBS
-                // decision boundaries (otherwise the LSB of an exact value
-                // sits exactly on a sign boundary and flips with the noise).
-                lwe.add_constant(1 << (VALUE_POS - 1));
-                (0..SWITCH_BITS)
-                    .map(|k| {
-                        let mut scaled = lwe.clone();
-                        scaled.scalar_mul_assign(1 << k);
-                        // sign-PBS: phase in [0, 1/2) means top bit 0 →
-                        // output must encode FALSE; the constant −μ test
-                        // polynomial yields −μ on the positive half, +μ on
-                        // the negative half = bit encoding of the top bit.
-                        ck.pbs(&scaled, &tv)
-                    })
-                    .collect()
-            })
-            .collect()
+        let per_lane = SWITCH_BITS as usize;
+        let mut scaled_all = Vec::with_capacity(positions.len() * per_lane);
+        for mut lwe in self.to_torus_positions(ct, positions) {
+            // Half-window guard: turns the floor quantization into
+            // round-to-nearest and moves exact grid values off the PBS
+            // decision boundaries (otherwise the LSB of an exact value
+            // sits exactly on a sign boundary and flips with the noise).
+            lwe.add_constant(1 << (VALUE_POS - 1));
+            for k in 0..SWITCH_BITS {
+                let mut scaled = lwe.clone();
+                scaled.scalar_mul_assign(1 << k);
+                scaled_all.push(scaled);
+            }
+        }
+        // sign-PBS: phase in [0, 1/2) means top bit 0 → output must encode
+        // FALSE; the constant −μ test polynomial yields −μ on the positive
+        // half, +μ on the negative half = bit encoding of the top bit.
+        let bits = ck.pbs_many(scaled_all, &tv);
+        let mut it = bits.into_iter();
+        (0..positions.len()).map(|_| (&mut it).take(per_lane).collect()).collect()
     }
 }
 

@@ -7,8 +7,9 @@
 
 use super::lwe::{LweCiphertext, LweKey};
 use super::params::TfheParams;
+use super::scratch::{with_local_scratch, PbsScratch, RingScratch};
 use super::tgsw::TrgswCiphertext;
-use super::tlwe::{TrlweCiphertext, TrlweKey};
+use super::tlwe::{rotate_poly_into, rotate_sub_into, TrlweCiphertext, TrlweKey};
 use crate::math::rng::GlyphRng;
 
 /// A test polynomial for the PBS: `N` torus values, one per phase window of
@@ -63,7 +64,17 @@ impl BootstrapKey {
     }
 
     /// Blind rotation: `acc ← X^{−b̄ + Σ ā_i s_i} · testv` as a TRLWE.
+    ///
+    /// Runs on this thread's scratch; the result is cloned out. Hot callers
+    /// should hold a [`PbsScratch`] and use [`Self::blind_rotate_scratch`].
     pub fn blind_rotate(&self, lwe: &LweCiphertext, testv: &TestPoly) -> TrlweCiphertext {
+        with_local_scratch(|s| self.blind_rotate_scratch(lwe, testv, s).clone())
+    }
+
+    /// Reference blind rotation: the original allocating rotate/CMUX chain,
+    /// kept verbatim so `tests/pbs_equivalence.rs` can assert the scratch
+    /// pipeline is bit-exact against it.
+    pub fn blind_rotate_reference(&self, lwe: &LweCiphertext, testv: &TestPoly) -> TrlweCiphertext {
         let n2 = 2 * self.params.big_n as u32;
         let log2n2 = n2.trailing_zeros();
         let (bara, barb) = lwe.rescale_to(log2n2);
@@ -80,15 +91,80 @@ impl BootstrapKey {
         acc
     }
 
+    /// Zero-allocation blind rotation: every CMUX reuses the scratch's digit
+    /// buffer, FFT lane, FFT accumulators and ping-pong TRLWE accumulators;
+    /// the rotated CMUX operand is formed by index arithmetic straight into
+    /// the spare buffer. Steady state (scratch already sized for this ring)
+    /// performs **zero** heap allocations — see `tests/zero_alloc.rs`.
+    ///
+    /// Returns a borrow of the final accumulator, valid until the scratch is
+    /// next used. Bit-exact against [`Self::blind_rotate_reference`].
+    pub fn blind_rotate_scratch<'s>(
+        &self,
+        lwe: &LweCiphertext,
+        testv: &TestPoly,
+        scratch: &'s mut PbsScratch,
+    ) -> &'s TrlweCiphertext {
+        let big_n = self.params.big_n;
+        let n2 = 2 * big_n as u32;
+        let log2n2 = n2.trailing_zeros();
+        let (ring, bara) = scratch.ring_and_bara(big_n, lwe.dim());
+        let RingScratch { dig, fft_lane, acc_a, acc_b, acc0, acc1, diff, .. } = ring;
+        let barb = lwe.rescale_to_into(log2n2, bara);
+        // acc0 = X^{−barb}·testv as a trivial ciphertext.
+        let neg_rot = (n2 - barb) % n2;
+        rotate_poly_into(&testv.coeffs, neg_rot as usize, &mut acc0.b);
+        for x in acc0.a.iter_mut() {
+            *x = 0;
+        }
+        for (i, bsk_i) in self.bsk.iter().enumerate() {
+            let k = bara[i] as usize;
+            if k == 0 {
+                continue;
+            }
+            // diff = X^k·acc − acc; acc1 = acc + bsk_i ⊡ diff; swap.
+            rotate_sub_into(&acc0.a, k, &mut diff.a);
+            rotate_sub_into(&acc0.b, k, &mut diff.b);
+            bsk_i.external_product_into(diff, &self.fft, dig, fft_lane, acc_a, acc_b, acc1);
+            acc1.add_assign(acc0);
+            std::mem::swap(&mut *acc0, &mut *acc1);
+        }
+        acc0
+    }
+
     /// Programmable bootstrap: returns an LWE ciphertext (under the TRLWE
     /// extracted key, dimension N) of `f(phase)` with fresh noise.
     pub fn bootstrap(&self, lwe: &LweCiphertext, testv: &TestPoly) -> LweCiphertext {
-        self.blind_rotate(lwe, testv).sample_extract(0)
+        with_local_scratch(|s| self.bootstrap_with(lwe, testv, s))
+    }
+
+    /// [`Self::bootstrap`] against a caller-owned scratch (the pool workers'
+    /// entry point).
+    pub fn bootstrap_with(&self, lwe: &LweCiphertext, testv: &TestPoly, scratch: &mut PbsScratch) -> LweCiphertext {
+        self.blind_rotate_scratch(lwe, testv, scratch).sample_extract(0)
     }
 
     /// Sign bootstrap: output `+mu` for phase ∈ [0, 1/2), `−mu` otherwise.
     pub fn bootstrap_sign(&self, lwe: &LweCiphertext, mu: u32) -> LweCiphertext {
         self.bootstrap(lwe, &TestPoly::constant(self.params.big_n, mu))
+    }
+
+    /// [`Self::bootstrap_sign`] against a caller-owned scratch and a
+    /// pre-built constant test polynomial (batch paths hoist the test-poly
+    /// allocation out of the per-item loop).
+    pub fn bootstrap_sign_with(&self, lwe: &LweCiphertext, tv_mu: &TestPoly, scratch: &mut PbsScratch) -> LweCiphertext {
+        self.bootstrap_with(lwe, tv_mu, scratch)
+    }
+
+    /// Batched programmable bootstrap: one blind rotation per input, all
+    /// sharing `testv`, fanned across the global [`GlyphPool`] with one
+    /// scratch per worker. Order-preserving and bit-exact against a
+    /// sequential [`Self::bootstrap`] loop.
+    ///
+    /// [`GlyphPool`]: crate::coordinator::executor::GlyphPool
+    pub fn bootstrap_many(&self, lwes: Vec<LweCiphertext>, testv: &TestPoly) -> Vec<LweCiphertext> {
+        crate::coordinator::executor::GlyphPool::global()
+            .map_with(lwes, |lwe, s| self.bootstrap_with(&lwe, testv, s))
     }
 }
 

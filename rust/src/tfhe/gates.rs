@@ -15,6 +15,7 @@ use super::lwe::{LweCiphertext, LweKey};
 use super::params::TfheParams;
 use super::tlwe::TrlweKey;
 use super::MU_BIT;
+use crate::coordinator::executor::GlyphPool;
 use crate::math::rng::GlyphRng;
 
 /// Everything the (untrusted) evaluator needs to run gates: bootstrapping
@@ -50,6 +51,65 @@ impl TfheCloudKey {
     /// the next step is itself a key/packing switch.
     pub fn pbs_raw(&self, lin: &LweCiphertext, tv: &TestPoly) -> LweCiphertext {
         self.bk.bootstrap(lin, tv)
+    }
+
+    // ---- batched fan-out (the GlyphPool pipeline) ---------------------------
+
+    /// Batched [`Self::pbs`]: one PBS + key switch per input, all sharing
+    /// `tv`, fanned across the global [`GlyphPool`]. Order-preserving and
+    /// bit-exact against the sequential loop.
+    pub fn pbs_many(&self, lins: Vec<LweCiphertext>, tv: &TestPoly) -> Vec<LweCiphertext> {
+        GlyphPool::global().map_with(lins, |lin, scratch| {
+            let boot = self.bk.bootstrap_with(&lin, tv, scratch);
+            self.ksk.switch(&boot)
+        })
+    }
+
+    /// Batched [`Self::pbs_raw`] (no key switch).
+    pub fn pbs_raw_many(&self, lins: Vec<LweCiphertext>, tv: &TestPoly) -> Vec<LweCiphertext> {
+        GlyphPool::global().map_with(lins, |lin, scratch| self.bk.bootstrap_with(&lin, tv, scratch))
+    }
+
+    /// Batched HomoAND: one gate bootstrap per `(c1, c2)` pair across the
+    /// pool (the gate-bootstraps/sec metric of `benches/fig3_tfhe_only.rs`
+    /// measures exactly this entry point).
+    pub fn and_many(&self, pairs: &[(&LweCiphertext, &LweCiphertext)]) -> Vec<LweCiphertext> {
+        let tv = TestPoly::constant(self.params.big_n, MU_BIT);
+        GlyphPool::global().map_with(pairs.to_vec(), |(c1, c2), scratch| {
+            let mut lin = c1.clone();
+            lin.add_assign(c2);
+            lin.add_constant(MU_BIT.wrapping_neg());
+            let boot = self.bk.bootstrap_sign_with(&lin, &tv, scratch);
+            self.ksk.switch(&boot)
+        })
+    }
+
+    /// Batched [`Self::and_weighted_raw`]: one `(c1, c2, pos)` job per
+    /// output bit, fanned across the pool. The activation layers fan every
+    /// lane × bit of a tensor through this in a single call; the constant
+    /// test polynomials are hoisted — one per distinct bit position, not
+    /// one ring-sized vector per job.
+    pub fn and_weighted_raw_many(
+        &self,
+        jobs: &[(&LweCiphertext, &LweCiphertext, u32)],
+    ) -> Vec<LweCiphertext> {
+        let mut tvs: Vec<(u32, TestPoly)> = Vec::new();
+        for &(_, _, pos) in jobs {
+            debug_assert!(pos >= 1 && pos <= 31);
+            if !tvs.iter().any(|(p, _)| *p == pos) {
+                tvs.push((pos, TestPoly::constant(self.params.big_n, 1u32 << (pos - 1))));
+            }
+        }
+        GlyphPool::global().map_with(jobs.to_vec(), |(c1, c2, pos), scratch| {
+            let tv = &tvs.iter().find(|(p, _)| *p == pos).expect("hoisted above").1;
+            let mut lin = c1.clone();
+            lin.add_assign(c2);
+            lin.add_constant(MU_BIT.wrapping_neg());
+            let mu = 1u32 << (pos - 1);
+            let mut out = self.bk.bootstrap_sign_with(&lin, tv, scratch);
+            out.add_constant(mu); // {0, 2^pos}
+            out
+        })
     }
 
     /// HomoNOT — negation, no bootstrapping (paper Alg. 1 line 2).

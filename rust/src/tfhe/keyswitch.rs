@@ -13,9 +13,23 @@ use super::tlwe::{TrlweCiphertext, TrlweKey};
 use crate::math::fft::Cplx;
 use crate::math::rng::GlyphRng;
 
+/// Upper bound on key-switch decomposition levels (every parameter set uses
+/// ≤ 8); lets the hot loops keep digits in a stack array instead of a
+/// heap `Vec` per coefficient (EXPERIMENTS.md §Perf).
+pub const MAX_KS_LEVELS: usize = 16;
+
 /// Balanced digit decomposition of a torus32 scalar: `len` digits in
 /// `[−B/2, B/2)`, MSB-first with base `B = 2^base_bit`.
 fn decompose_scalar(x: u32, len: usize, base_bit: u32) -> Vec<i32> {
+    let mut digits = [0i32; MAX_KS_LEVELS];
+    decompose_scalar_into(x, len, base_bit, &mut digits);
+    digits[..len].to_vec()
+}
+
+/// Allocation-free [`decompose_scalar`] into a stack buffer.
+#[inline]
+fn decompose_scalar_into(x: u32, len: usize, base_bit: u32, out: &mut [i32; MAX_KS_LEVELS]) {
+    debug_assert!(len <= MAX_KS_LEVELS);
     let base = 1u32 << base_bit;
     let half = base >> 1;
     let mask = base - 1;
@@ -24,12 +38,10 @@ fn decompose_scalar(x: u32, len: usize, base_bit: u32) -> Vec<i32> {
         offset = offset.wrapping_add(half << (32 - (j as u32 + 1) * base_bit));
     }
     let xx = x.wrapping_add(offset);
-    (0..len)
-        .map(|j| {
-            let shift = 32 - (j as u32 + 1) * base_bit;
-            (((xx >> shift) & mask) as i32) - half as i32
-        })
-        .collect()
+    for j in 0..len {
+        let shift = 32 - (j as u32 + 1) * base_bit;
+        out[j] = (((xx >> shift) & mask) as i32) - half as i32;
+    }
 }
 
 /// Key-switching key from `src` to `dst` (scalar LWE).
@@ -50,6 +62,7 @@ impl LweKeySwitchKey {
         alpha: f64,
         rng: &mut GlyphRng,
     ) -> Self {
+        assert!(len <= MAX_KS_LEVELS, "ks_len {len} exceeds MAX_KS_LEVELS");
         let ks = src
             .s
             .iter()
@@ -66,14 +79,17 @@ impl LweKeySwitchKey {
         LweKeySwitchKey { base_bit, len, ks, dst_dim: dst.dim() }
     }
 
-    /// Switch `ct` (under `src`) to an LWE under `dst`.
+    /// Switch `ct` (under `src`) to an LWE under `dst`. One output
+    /// allocation; the per-coefficient digits stay on the stack.
     pub fn switch(&self, ct: &LweCiphertext) -> LweCiphertext {
         let mut out = LweCiphertext::trivial(ct.b, self.dst_dim);
+        let mut digits = [0i32; MAX_KS_LEVELS];
         for (i, &ai) in ct.a.iter().enumerate() {
             if ai == 0 {
                 continue;
             }
-            for (j, d) in decompose_scalar(ai, self.len, self.base_bit).into_iter().enumerate() {
+            decompose_scalar_into(ai, self.len, self.base_bit, &mut digits);
+            for (j, &d) in digits[..self.len].iter().enumerate() {
                 if d == 0 {
                     continue;
                 }
@@ -112,6 +128,7 @@ impl PackingKeySwitchKey {
         alpha: f64,
         rng: &mut GlyphRng,
     ) -> Self {
+        assert!(len <= MAX_KS_LEVELS, "ks_len {len} exceeds MAX_KS_LEVELS");
         let n = dst_ring.n;
         let pk = src
             .s
@@ -145,41 +162,55 @@ impl PackingKeySwitchKey {
         let src_dim = self.pk.len();
         let mut acc_a = vec![Cplx::default(); m_half];
         let mut acc_b = vec![Cplx::default(); m_half];
-        // digit_polys[j][i] built incrementally: for each source index i, the
-        // integer polynomial Σ_m digit_j(a^{(m)}_i) · X^{pos_m}.
-        let mut digit_poly = vec![0i32; n];
+        // For each source index i: all `len` digit polynomials
+        // Σ_m digit_j(a^{(m)}_i)·X^{pos_m}, built with ONE stack
+        // decomposition per sample (the old path re-decomposed the scalar
+        // for every level and allocated a Vec each time), then one FFT +
+        // mul-acc per non-zero level in (i, j) order — the floating-point
+        // accumulation sequence is unchanged.
+        let mut digit_polys = vec![0i32; self.len * n];
+        let mut any = vec![false; self.len];
+        let mut fft_lane = vec![Cplx::default(); m_half];
+        let mut digits = [0i32; MAX_KS_LEVELS];
         for i in 0..src_dim {
-            for j in 0..self.len {
-                // Build the digit polynomial for (i, j).
-                let mut any = false;
-                for x in digit_poly.iter_mut() {
-                    *x = 0;
+            for x in digit_polys.iter_mut() {
+                *x = 0;
+            }
+            for x in any.iter_mut() {
+                *x = false;
+            }
+            for (m, ct) in samples.iter().enumerate() {
+                if ct.a[i] == 0 {
+                    continue; // zero decomposes to all-zero digits
                 }
-                for (m, ct) in samples.iter().enumerate() {
-                    let d = decompose_scalar(ct.a[i], self.len, self.base_bit)[j];
+                decompose_scalar_into(ct.a[i], self.len, self.base_bit, &mut digits);
+                for j in 0..self.len {
+                    let d = digits[j];
                     if d != 0 {
-                        digit_poly[positions[m]] += d;
-                        any = true;
+                        digit_polys[j * n + positions[m]] += d;
+                        any[j] = true;
                     }
                 }
-                if !any {
+            }
+            for j in 0..self.len {
+                if !any[j] {
                     continue;
                 }
-                let fd = self.fft.forward_int(&digit_poly);
+                self.fft.forward_int_into(&digit_polys[j * n..(j + 1) * n], &mut fft_lane);
                 // acc −= digit_poly · pk[i][j]  (both components)
                 let row = &self.pk[i][j];
                 // negate via multiplying digits by −1: cheaper to subtract at
                 // the end; here accumulate then subtract once.
-                self.fft.mul_acc(&fd, &row.0, &mut acc_a);
-                self.fft.mul_acc(&fd, &row.1, &mut acc_b);
+                self.fft.mul_acc(&fft_lane, &row.0, &mut acc_a);
+                self.fft.mul_acc(&fft_lane, &row.1, &mut acc_b);
             }
         }
         // out = (0, Σ_m b^{(m)} X^{pos_m}) − Σ acc
         let mut out = TrlweCiphertext::zero(n);
         let mut sub_a = vec![0u32; n];
         let mut sub_b = vec![0u32; n];
-        self.fft.inverse_add_to_torus(&acc_a, &mut sub_a);
-        self.fft.inverse_add_to_torus(&acc_b, &mut sub_b);
+        self.fft.inverse_add_to_torus_inplace(&mut acc_a, &mut sub_a);
+        self.fft.inverse_add_to_torus_inplace(&mut acc_b, &mut sub_b);
         for i in 0..n {
             out.a[i] = out.a[i].wrapping_sub(sub_a[i]);
             out.b[i] = out.b[i].wrapping_sub(sub_b[i]);

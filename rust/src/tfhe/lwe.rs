@@ -108,11 +108,23 @@ impl LweCiphertext {
     /// rotation, where the exponent ring is Z_{2N}). Returns rescaled
     /// coefficients `round(x · 2^log2q / 2^32)` as integers in `[0, 2^log2q)`.
     pub fn rescale_to(&self, log2q: u32) -> (Vec<u32>, u32) {
+        let mut a = vec![0u32; self.a.len()];
+        let b = self.rescale_to_into(log2q, &mut a);
+        (a, b)
+    }
+
+    /// Allocation-free [`Self::rescale_to`]: writes the rescaled mask into
+    /// `out` (length = dim) and returns the rescaled body.
+    pub fn rescale_to_into(&self, log2q: u32, out: &mut [u32]) -> u32 {
+        debug_assert_eq!(out.len(), self.a.len());
         let shift = 32 - log2q;
         let half = 1u32 << (shift - 1);
         let mask = (1u64 << log2q) as u32 - 1; // log2q < 32 in all uses
         let f = |x: u32| -> u32 { ((x.wrapping_add(half)) >> shift) & mask };
-        (self.a.iter().map(|&x| f(x)).collect(), f(self.b))
+        for (o, &x) in out.iter_mut().zip(&self.a) {
+            *o = f(x);
+        }
+        f(self.b)
     }
 }
 

@@ -19,6 +19,7 @@ pub mod gates;
 pub mod keyswitch;
 pub mod lwe;
 pub mod params;
+pub mod scratch;
 pub mod tgsw;
 pub mod tlwe;
 
@@ -27,6 +28,7 @@ pub use gates::TfheCloudKey;
 pub use keyswitch::LweKeySwitchKey;
 pub use lwe::{LweCiphertext, LweKey};
 pub use params::TfheParams;
+pub use scratch::PbsScratch;
 pub use tgsw::TrgswCiphertext;
 pub use tlwe::{TrlweCiphertext, TrlweKey};
 

@@ -1,0 +1,157 @@
+//! Reusable scratch state for the programmable-bootstrapping hot path.
+//!
+//! Every CMUX of a blind rotation used to heap-allocate its gadget digit
+//! vectors, two forward-FFT buffers, FFT-domain accumulators and a
+//! cloned/rotated TRLWE — ~10 allocations per CMUX, ~n·10 per bootstrap.
+//! [`PbsScratch`] owns all of those buffers once, so a steady-state blind
+//! rotation performs **zero** heap allocations per CMUX (asserted by
+//! `tests/zero_alloc.rs` with a counting global allocator; see
+//! EXPERIMENTS.md §Perf).
+//!
+//! A scratch is *not* thread-safe: each `GlyphPool` worker owns one, and the
+//! single-threaded entry points borrow a thread-local instance via
+//! [`with_local_scratch`]. Because the engine runs two TFHE instantiations
+//! (gate ring and extraction ring), the scratch keeps one sized buffer set
+//! per ring degree it has seen ([`RingScratch`]).
+
+use super::tlwe::TrlweCiphertext;
+use crate::math::fft::Cplx;
+use std::cell::RefCell;
+
+/// Exact-size buffers for one blind-rotation ring degree `n`.
+pub struct RingScratch {
+    /// Ring degree these buffers are sized for.
+    pub n: usize,
+    /// One gadget-digit polynomial, reused for every (component, level).
+    pub dig: Vec<i32>,
+    /// Forward-FFT lane of the current digit polynomial (N/2).
+    pub fft_lane: Vec<Cplx>,
+    /// FFT-domain accumulators for the TRLWE a/b components (N/2 each).
+    pub acc_a: Vec<Cplx>,
+    pub acc_b: Vec<Cplx>,
+    /// Ping-pong blind-rotation accumulators.
+    pub acc0: TrlweCiphertext,
+    pub acc1: TrlweCiphertext,
+    /// Rotated-difference CMUX operand (`X^k·acc − acc`).
+    pub diff: TrlweCiphertext,
+}
+
+impl RingScratch {
+    pub fn new(n: usize) -> Self {
+        RingScratch {
+            n,
+            dig: vec![0i32; n],
+            fft_lane: vec![Cplx::default(); n / 2],
+            acc_a: vec![Cplx::default(); n / 2],
+            acc_b: vec![Cplx::default(); n / 2],
+            acc0: TrlweCiphertext::zero(n),
+            acc1: TrlweCiphertext::zero(n),
+            diff: TrlweCiphertext::zero(n),
+        }
+    }
+}
+
+/// All scratch state one executor (thread) needs to run bootstraps against
+/// any number of ring degrees. Grows on first use, never shrinks; steady
+/// state is allocation-free.
+pub struct PbsScratch {
+    rings: Vec<RingScratch>,
+    /// Rescaled LWE mask ā ∈ Z_2N (blind-rotation exponents).
+    bara: Vec<u32>,
+}
+
+impl PbsScratch {
+    pub fn new() -> Self {
+        PbsScratch { rings: Vec::new(), bara: Vec::new() }
+    }
+
+    /// Number of distinct ring degrees this scratch has been sized for.
+    pub fn ring_count(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// The buffer set for ring degree `n`, created on first use.
+    pub fn ring(&mut self, n: usize) -> &mut RingScratch {
+        if let Some(i) = self.rings.iter().position(|r| r.n == n) {
+            return &mut self.rings[i];
+        }
+        self.rings.push(RingScratch::new(n));
+        self.rings.last_mut().expect("just pushed")
+    }
+
+    /// Split borrow: the ring-degree buffers *and* the ā buffer (resized to
+    /// `bara_len`) in one call, so blind rotation can use both at once.
+    pub fn ring_and_bara(&mut self, n: usize, bara_len: usize) -> (&mut RingScratch, &mut [u32]) {
+        if !self.rings.iter().any(|r| r.n == n) {
+            self.rings.push(RingScratch::new(n));
+        }
+        if self.bara.len() < bara_len {
+            self.bara.resize(bara_len, 0);
+        }
+        let idx = self.rings.iter().position(|r| r.n == n).expect("ensured above");
+        (&mut self.rings[idx], &mut self.bara[..bara_len])
+    }
+}
+
+impl Default for PbsScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    static LOCAL_SCRATCH: RefCell<PbsScratch> = RefCell::new(PbsScratch::new());
+}
+
+/// Run `f` with this thread's scratch. Only the *entry points* of the PBS
+/// pipeline may call this (never code that can run inside it), so the
+/// `RefCell` borrow is never reentrant.
+pub fn with_local_scratch<R>(f: impl FnOnce(&mut PbsScratch) -> R) -> R {
+    LOCAL_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_buffers_are_sized_and_cached() {
+        let mut s = PbsScratch::new();
+        {
+            let r = s.ring(64);
+            assert_eq!(r.dig.len(), 64);
+            assert_eq!(r.fft_lane.len(), 32);
+            assert_eq!(r.acc0.a.len(), 64);
+        }
+        let _ = s.ring(256);
+        let _ = s.ring(64);
+        assert_eq!(s.ring_count(), 2, "same degree must not re-allocate");
+    }
+
+    #[test]
+    fn ring_and_bara_split_borrow() {
+        let mut s = PbsScratch::new();
+        let (r, bara) = s.ring_and_bara(128, 65);
+        assert_eq!(r.n, 128);
+        assert_eq!(bara.len(), 65);
+        bara[0] = 7;
+        r.dig[0] = -3;
+        let (r2, bara2) = s.ring_and_bara(128, 65);
+        assert_eq!(bara2[0], 7);
+        assert_eq!(r2.dig[0], -3);
+        assert_eq!(s.ring_count(), 1);
+    }
+
+    #[test]
+    fn thread_local_scratch_is_reused() {
+        let first = with_local_scratch(|s| {
+            let _ = s.ring(32);
+            s.ring_count()
+        });
+        let second = with_local_scratch(|s| {
+            let _ = s.ring(32);
+            s.ring_count()
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -47,6 +47,9 @@ impl TrgswCiphertext {
     }
 
     /// External product `self ⊡ c`: a TRLWE whose phase is ≈ μ · phase(c).
+    ///
+    /// Reference (allocating) path, kept verbatim for the bit-exactness
+    /// tests against the scratch pipeline (`tests/pbs_equivalence.rs`).
     pub fn external_product(&self, c: &TrlweCiphertext, fft: &TorusFft) -> TrlweCiphertext {
         let n = c.a.len();
         let m = n / 2;
@@ -68,8 +71,81 @@ impl TrgswCiphertext {
         out
     }
 
+    /// Allocation-free external product into `out` using caller-owned
+    /// buffers (one digit polynomial `dig`, one FFT lane, two FFT
+    /// accumulators — the fields of a `RingScratch`, passed split so the
+    /// borrows stay disjoint). Bit-identical to
+    /// [`Self::external_product`]: digits, FFT passes and the floating-point
+    /// accumulation order are exactly the reference path's.
+    #[allow(clippy::too_many_arguments)]
+    pub fn external_product_into(
+        &self,
+        c: &TrlweCiphertext,
+        fft: &TorusFft,
+        dig: &mut [i32],
+        fft_lane: &mut [Cplx],
+        acc_a: &mut [Cplx],
+        acc_b: &mut [Cplx],
+        out: &mut TrlweCiphertext,
+    ) {
+        let n = c.a.len();
+        debug_assert_eq!(fft.n, n);
+        debug_assert_eq!(dig.len(), n);
+        debug_assert_eq!(fft_lane.len(), n / 2);
+        for x in acc_a.iter_mut() {
+            *x = Cplx::default();
+        }
+        for x in acc_b.iter_mut() {
+            *x = Cplx::default();
+        }
+        let half_bg = 1i32 << (self.bg_bit - 1);
+        let mask = (1u32 << self.bg_bit) - 1;
+        let offset = decompose_offset(self.l, self.bg_bit);
+        for j in 0..self.l {
+            let shift = 32 - (j as u32 + 1) * self.bg_bit;
+            for (d, &x) in dig.iter_mut().zip(&c.a) {
+                *d = (((x.wrapping_add(offset) >> shift) & mask) as i32) - half_bg;
+            }
+            fft.forward_int_into(dig, fft_lane);
+            fft.mul_acc(fft_lane, &self.rows[0][j].0, acc_a);
+            fft.mul_acc(fft_lane, &self.rows[0][j].1, acc_b);
+            for (d, &x) in dig.iter_mut().zip(&c.b) {
+                *d = (((x.wrapping_add(offset) >> shift) & mask) as i32) - half_bg;
+            }
+            fft.forward_int_into(dig, fft_lane);
+            fft.mul_acc(fft_lane, &self.rows[1][j].0, acc_a);
+            fft.mul_acc(fft_lane, &self.rows[1][j].1, acc_b);
+        }
+        for x in out.a.iter_mut() {
+            *x = 0;
+        }
+        for x in out.b.iter_mut() {
+            *x = 0;
+        }
+        fft.inverse_add_to_torus_inplace(acc_a, &mut out.a);
+        fft.inverse_add_to_torus_inplace(acc_b, &mut out.b);
+    }
+
+    /// [`Self::external_product_into`] driven by a [`PbsScratch`]; returns an
+    /// owned ciphertext (one allocation for the result — the internals stay
+    /// allocation-free). Convenience for tests and one-off callers.
+    pub fn external_product_scratch(
+        &self,
+        c: &TrlweCiphertext,
+        fft: &TorusFft,
+        scratch: &mut crate::tfhe::scratch::PbsScratch,
+    ) -> TrlweCiphertext {
+        let n = c.a.len();
+        let ring = scratch.ring(n);
+        let crate::tfhe::scratch::RingScratch { dig, fft_lane, acc_a, acc_b, acc0, .. } = ring;
+        self.external_product_into(c, fft, dig, fft_lane, acc_a, acc_b, acc0);
+        acc0.clone()
+    }
+
     /// CMUX: returns an encryption of `d1` if μ = 1, `d0` if μ = 0:
     /// `d0 + self ⊡ (d1 − d0)`.
+    ///
+    /// Reference (allocating) path, kept for the bit-exactness tests.
     pub fn cmux(&self, d1: &TrlweCiphertext, d0: &TrlweCiphertext, fft: &TorusFft) -> TrlweCiphertext {
         let mut diff = d1.clone();
         diff.sub_assign(d0);
@@ -77,30 +153,66 @@ impl TrgswCiphertext {
         out.add_assign(d0);
         out
     }
+
+    /// Allocation-free CMUX into `out` (`diff` is clobbered as scratch).
+    /// Bit-identical to [`Self::cmux`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn cmux_into(
+        &self,
+        d1: &TrlweCiphertext,
+        d0: &TrlweCiphertext,
+        fft: &TorusFft,
+        dig: &mut [i32],
+        fft_lane: &mut [Cplx],
+        acc_a: &mut [Cplx],
+        acc_b: &mut [Cplx],
+        diff: &mut TrlweCiphertext,
+        out: &mut TrlweCiphertext,
+    ) {
+        diff.copy_from(d1);
+        diff.sub_assign(d0);
+        self.external_product_into(diff, fft, dig, fft_lane, acc_a, acc_b, out);
+        out.add_assign(d0);
+    }
+}
+
+/// The rounding/centering offset of the balanced gadget decomposition:
+/// `Σ_j (Bg/2)·2^(32−(j+1)·bg_bit)`.
+#[inline]
+pub fn decompose_offset(l: usize, bg_bit: u32) -> u32 {
+    let half_bg = 1u32 << (bg_bit - 1);
+    let mut offset = 0u32;
+    for j in 0..l {
+        offset = offset.wrapping_add(half_bg << (32 - (j as u32 + 1) * bg_bit));
+    }
+    offset
 }
 
 /// Balanced base-2^bg_bit digit decomposition of a torus polynomial:
 /// digits in `[−Bg/2, Bg/2)` with `Σ_j d_j·H_j ≈ x` (error < H_{ℓ-1}/2).
 pub fn decompose(poly: &[u32], l: usize, bg_bit: u32) -> Vec<Vec<i32>> {
     let n = poly.len();
-    let bg = 1u32 << bg_bit;
-    let half_bg = bg >> 1;
-    let mask = bg - 1;
-    // offset: round instead of truncate, and center every digit.
-    let mut offset = 0u32;
-    for j in 0..l {
-        offset = offset.wrapping_add(half_bg << (32 - (j as u32 + 1) * bg_bit));
-    }
-    let mut out = vec![vec![0i32; n]; l];
+    let mut flat = vec![0i32; l * n];
+    decompose_into(poly, l, bg_bit, &mut flat);
+    (0..l).map(|j| flat[j * n..(j + 1) * n].to_vec()).collect()
+}
+
+/// Allocation-free balanced decomposition into a flat `l·n` digit buffer
+/// (digit `j` occupies `out[j*n..(j+1)*n]`). The offset trick rounds
+/// instead of truncating and centers every digit.
+pub fn decompose_into(poly: &[u32], l: usize, bg_bit: u32, out: &mut [i32]) {
+    let n = poly.len();
+    debug_assert_eq!(out.len(), l * n);
+    let half_bg = 1i32 << (bg_bit - 1);
+    let mask = (1u32 << bg_bit) - 1;
+    let offset = decompose_offset(l, bg_bit);
     for i in 0..n {
         let x = poly[i].wrapping_add(offset);
         for j in 0..l {
             let shift = 32 - (j as u32 + 1) * bg_bit;
-            let d = ((x >> shift) & mask) as i32 - half_bg as i32;
-            out[j][i] = d;
+            out[j * n + i] = (((x >> shift) & mask) as i32) - half_bg;
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -89,6 +89,13 @@ impl TrlweCiphertext {
         (0..key.n).map(|i| self.b[i].wrapping_sub(sa[i])).collect()
     }
 
+    /// Overwrite `self` with `o`'s coefficients (no allocation; lengths must
+    /// match — scratch buffers are sized per ring degree).
+    pub fn copy_from(&mut self, o: &Self) {
+        self.a.copy_from_slice(&o.a);
+        self.b.copy_from_slice(&o.b);
+    }
+
     pub fn add_assign(&mut self, o: &Self) {
         for (x, &y) in self.a.iter_mut().zip(&o.a) {
             *x = x.wrapping_add(y);
@@ -131,9 +138,17 @@ impl TrlweCiphertext {
 
 /// Multiply a torus polynomial by `X^k` in the negacyclic ring, `k ∈ [0,2N)`.
 pub fn rotate_poly(p: &[u32], k: usize) -> Vec<u32> {
+    let mut out = vec![0u32; p.len()];
+    rotate_poly_into(p, k, &mut out);
+    out
+}
+
+/// Allocation-free [`rotate_poly`]: writes `X^k·p` into `out` (`out` must
+/// not alias `p`). Index arithmetic only — no clone, no temporary.
+pub fn rotate_poly_into(p: &[u32], k: usize, out: &mut [u32]) {
     let n = p.len();
+    debug_assert_eq!(out.len(), n);
     let k = k % (2 * n);
-    let mut out = vec![0u32; n];
     for i in 0..n {
         let j = i + k;
         if j < n {
@@ -144,7 +159,16 @@ pub fn rotate_poly(p: &[u32], k: usize) -> Vec<u32> {
             out[j - 2 * n] = p[i];
         }
     }
-    out
+}
+
+/// Fused CMUX operand: `out = X^k·p − p` (negacyclic, wrapping), the
+/// `rotated − acc` difference blind rotation feeds the external product,
+/// computed without materialising the rotation.
+pub fn rotate_sub_into(p: &[u32], k: usize, out: &mut [u32]) {
+    rotate_poly_into(p, k, out);
+    for (o, &x) in out.iter_mut().zip(p) {
+        *o = o.wrapping_sub(x);
+    }
 }
 
 #[cfg(test)]
@@ -190,6 +214,18 @@ mod tests {
         assert_eq!(rotate_poly(&p, 4), vec![1u32.wrapping_neg(), 2u32.wrapping_neg(), 3u32.wrapping_neg(), 4u32.wrapping_neg()]);
         // X^8 = identity
         assert_eq!(rotate_poly(&p, 8), p);
+    }
+
+    #[test]
+    fn rotate_sub_into_matches_rotate_then_sub() {
+        let p: Vec<u32> = (0..32).map(|i| (i as u32).wrapping_mul(0x9e37_79b9)).collect();
+        for k in [0usize, 1, 31, 32, 33, 63] {
+            let mut fused = vec![0u32; 32];
+            rotate_sub_into(&p, k, &mut fused);
+            let rot = rotate_poly(&p, k);
+            let want: Vec<u32> = rot.iter().zip(&p).map(|(&r, &x)| r.wrapping_sub(x)).collect();
+            assert_eq!(fused, want, "k={k}");
+        }
     }
 
     #[test]

@@ -89,10 +89,12 @@ impl GlyphMlp {
             .iter()
             .map(|ct| {
                 let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
-                let outs: Vec<LweCiphertext> = lanes_bits
+                // all lanes' MUX trees fan across the pool in one call
+                let lane_slices: Vec<&[LweCiphertext]> = lanes_bits
                     .iter()
-                    .map(|bits| self.softmax.evaluate_mux(engine, &bits[..self.config.softmax_bits]))
+                    .map(|bits| &bits[..self.config.softmax_bits])
                     .collect();
+                let outs = self.softmax.evaluate_mux_many(engine, &lane_slices);
                 engine.switch_to_bgv(&outs, &out_positions)
             })
             .collect();

@@ -1,0 +1,147 @@
+//! Bit-exactness of the zero-allocation PBS pipeline against the retained
+//! reference path: for fixed RNG seeds, the scratch-based external product,
+//! CMUX chain, blind rotation, sign bootstrap and every batched fan-out
+//! must produce *identical* ciphertexts (same u32 coefficients, not merely
+//! close phases) — the scratch rewrite reorders no floating-point op.
+
+use glyph::math::GlyphRng;
+use glyph::tfhe::bootstrap::TestPoly;
+use glyph::tfhe::lwe::{LweCiphertext, LweKey};
+use glyph::tfhe::params::TfheParams;
+use glyph::tfhe::scratch::PbsScratch;
+use glyph::tfhe::tgsw::TrgswCiphertext;
+use glyph::tfhe::tlwe::{TrlweCiphertext, TrlweKey};
+use glyph::tfhe::{BootstrapKey, TfheCloudKey, MU_BIT};
+
+fn assert_trlwe_eq(a: &TrlweCiphertext, b: &TrlweCiphertext, what: &str) {
+    assert_eq!(a.a, b.a, "{what}: a-component differs");
+    assert_eq!(a.b, b.b, "{what}: b-component differs");
+}
+
+fn assert_lwe_eq(a: &LweCiphertext, b: &LweCiphertext, what: &str) {
+    assert_eq!(a.a, b.a, "{what}: mask differs");
+    assert_eq!(a.b, b.b, "{what}: body differs");
+}
+
+#[test]
+fn external_product_scratch_is_bit_exact() {
+    let params = TfheParams::test_params();
+    let mut rng = GlyphRng::new(9001);
+    let key = TrlweKey::generate(params.big_n, &mut rng);
+    let msg: Vec<u32> = (0..params.big_n).map(|_| rng.torus32()).collect();
+    let c = TrlweCiphertext::encrypt(&msg, &key, params.alpha_rlwe, &mut rng);
+    let mut scratch = PbsScratch::new();
+    for bit in [0i32, 1] {
+        let g = TrgswCiphertext::encrypt_scalar(bit, &key, &params, &mut rng);
+        let reference = g.external_product(&c, &key.fft);
+        let fast = g.external_product_scratch(&c, &key.fft, &mut scratch);
+        assert_trlwe_eq(&fast, &reference, "external product");
+    }
+}
+
+#[test]
+fn cmux_chain_is_bit_exact() {
+    // A 16-step CMUX chain (a mini blind rotation) through cmux_into must
+    // track the reference cmux exactly at every step.
+    let params = TfheParams::test_params();
+    let mut rng = GlyphRng::new(9002);
+    let key = TrlweKey::generate(params.big_n, &mut rng);
+    let n = params.big_n;
+    let msg: Vec<u32> = vec![1u32 << 29; n];
+    let mut ref_acc = TrlweCiphertext::trivial(&msg);
+    let mut fast_acc = TrlweCiphertext::trivial(&msg);
+    let mut scratch = PbsScratch::new();
+    for step in 0..16 {
+        let bit = (step % 2) as i32;
+        let g = TrgswCiphertext::encrypt_scalar(bit, &key, &params, &mut rng);
+        let rotated = ref_acc.rotate(step + 1);
+        ref_acc = g.cmux(&rotated, &ref_acc, &key.fft);
+
+        let fast_rotated = fast_acc.rotate(step + 1);
+        let ring = scratch.ring(n);
+        let mut out = TrlweCiphertext::zero(n);
+        g.cmux_into(
+            &fast_rotated,
+            &fast_acc,
+            &key.fft,
+            &mut ring.dig,
+            &mut ring.fft_lane,
+            &mut ring.acc_a,
+            &mut ring.acc_b,
+            &mut ring.diff,
+            &mut out,
+        );
+        fast_acc = out;
+        assert_trlwe_eq(&fast_acc, &ref_acc, "cmux chain step");
+    }
+}
+
+#[test]
+fn blind_rotation_and_sign_bootstrap_are_bit_exact() {
+    let params = TfheParams::test_params();
+    let mut rng = GlyphRng::new(9003);
+    let lwe_key = LweKey::generate_binary(params.n, &mut rng);
+    let trlwe_key = TrlweKey::generate(params.big_n, &mut rng);
+    let bk = BootstrapKey::generate(&lwe_key, &trlwe_key, &params, &mut rng);
+    let tv = TestPoly::constant(params.big_n, 1 << 29);
+    let mut scratch = PbsScratch::new();
+    for msg in [1u32 << 29, 1u32 << 30, (1u32 << 29).wrapping_neg(), 0x1234_5678] {
+        let ct = LweCiphertext::encrypt(msg, &lwe_key, params.alpha_lwe, &mut rng);
+        let reference = bk.blind_rotate_reference(&ct, &tv);
+        let fast = bk.blind_rotate_scratch(&ct, &tv, &mut scratch).clone();
+        assert_trlwe_eq(&fast, &reference, "blind rotation");
+        // the public bootstrap entry points ride the scratch path
+        assert_lwe_eq(&bk.bootstrap(&ct, &tv), &reference.sample_extract(0), "bootstrap");
+        assert_lwe_eq(&bk.bootstrap_sign(&ct, 1 << 29), &reference.sample_extract(0), "sign bootstrap");
+    }
+}
+
+#[test]
+fn batched_fan_outs_match_sequential_loops() {
+    let params = TfheParams::test_params();
+    let mut rng = GlyphRng::new(9004);
+    let lwe_key = LweKey::generate_binary(params.n, &mut rng);
+    let trlwe_key = TrlweKey::generate(params.big_n, &mut rng);
+    let ck = TfheCloudKey::generate(&lwe_key, &trlwe_key, &params, &mut rng);
+    let tv = TestPoly::constant(params.big_n, MU_BIT.wrapping_neg());
+    let inputs: Vec<LweCiphertext> = (0..12)
+        .map(|i| LweCiphertext::encrypt((i as u32) << 27, &lwe_key, params.alpha_lwe, &mut rng))
+        .collect();
+
+    // pbs_many == per-item pbs, in order
+    let batched = ck.pbs_many(inputs.clone(), &tv);
+    for (i, (b, lin)) in batched.iter().zip(&inputs).enumerate() {
+        assert_lwe_eq(b, &ck.pbs(lin, &tv), &format!("pbs_many[{i}]"));
+    }
+
+    // pbs_raw_many == per-item pbs_raw
+    let batched_raw = ck.pbs_raw_many(inputs.clone(), &tv);
+    for (i, (b, lin)) in batched_raw.iter().zip(&inputs).enumerate() {
+        assert_lwe_eq(b, &ck.pbs_raw(lin, &tv), &format!("pbs_raw_many[{i}]"));
+    }
+
+    // and_weighted_raw_many == per-item and_weighted_raw
+    let jobs: Vec<(&LweCiphertext, &LweCiphertext, u32)> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (c, &inputs[(i + 1) % inputs.len()], 24 + (i as u32 % 8)))
+        .collect();
+    let batched_w = ck.and_weighted_raw_many(&jobs);
+    for (i, (b, &(c1, c2, pos))) in batched_w.iter().zip(&jobs).enumerate() {
+        assert_lwe_eq(b, &ck.and_weighted_raw(c1, c2, pos), &format!("and_weighted_raw_many[{i}]"));
+    }
+
+    // and_many == per-item and
+    let pairs: Vec<(&LweCiphertext, &LweCiphertext)> =
+        inputs.iter().zip(inputs.iter().rev()).collect();
+    let batched_and = ck.and_many(&pairs);
+    for (i, (b, &(c1, c2))) in batched_and.iter().zip(&pairs).enumerate() {
+        assert_lwe_eq(b, &ck.and(c1, c2), &format!("and_many[{i}]"));
+    }
+
+    // bootstrap_many == per-item bootstrap
+    let batched_bk = ck.bk.bootstrap_many(inputs.clone(), &tv);
+    for (i, (b, lin)) in batched_bk.iter().zip(&inputs).enumerate() {
+        assert_lwe_eq(b, &ck.bk.bootstrap(lin, &tv), &format!("bootstrap_many[{i}]"));
+    }
+}

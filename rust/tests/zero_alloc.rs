@@ -1,0 +1,81 @@
+//! Proof that steady-state blind rotation performs ZERO heap allocations —
+//! per CMUX and per call (acceptance criterion of the zero-allocation PBS
+//! pipeline; the numbers are recorded in EXPERIMENTS.md §Perf).
+//!
+//! A counting global allocator wraps `System`; after one warm-up bootstrap
+//! sizes the scratch, further blind rotations must not touch the allocator
+//! at all. This file holds exactly ONE test so no concurrent test can
+//! pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_blind_rotation_is_allocation_free() {
+    use glyph::math::GlyphRng;
+    use glyph::tfhe::bootstrap::TestPoly;
+    use glyph::tfhe::lwe::{LweCiphertext, LweKey};
+    use glyph::tfhe::params::TfheParams;
+    use glyph::tfhe::scratch::PbsScratch;
+    use glyph::tfhe::{BootstrapKey, TrlweKey};
+
+    let params = TfheParams::test_params();
+    let mut rng = GlyphRng::new(31337);
+    let lwe_key = LweKey::generate_binary(params.n, &mut rng);
+    let trlwe_key = TrlweKey::generate(params.big_n, &mut rng);
+    let bk = BootstrapKey::generate(&lwe_key, &trlwe_key, &params, &mut rng);
+    let tv = TestPoly::constant(params.big_n, 1 << 29);
+    let ct = LweCiphertext::encrypt(1 << 29, &lwe_key, params.alpha_lwe, &mut rng);
+
+    let mut scratch = PbsScratch::new();
+    // Warm up twice: the first call sizes the ring buffers and the ā buffer.
+    let _ = bk.blind_rotate_scratch(&ct, &tv, &mut scratch);
+    let _ = bk.blind_rotate_scratch(&ct, &tv, &mut scratch);
+
+    let rotations = 8u64;
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..rotations {
+        let acc = bk.blind_rotate_scratch(&ct, &tv, &mut scratch);
+        // touch the result so the rotation cannot be optimized away
+        std::hint::black_box(acc.b[0]);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+
+    // `params.n` LWE coefficients ⇒ up to n CMUXes per rotation: 8 rotations
+    // at n = 64 is ~500 CMUXes. The old pipeline allocated ~10 times per
+    // CMUX; the scratch pipeline must not allocate at all.
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state blind rotation allocated {} times over {rotations} rotations",
+        after - before
+    );
+}

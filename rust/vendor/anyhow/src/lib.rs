@@ -1,0 +1,143 @@
+//! Minimal vendored stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no vendored registry, so
+//! this crate provides exactly the surface the repo uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Errors are plain message strings — good enough for the
+//! CLI / example drivers, which only ever print them.
+
+use std::fmt;
+
+/// A string-backed error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prefix the error with context (innermost cause last).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, so this
+// blanket conversion cannot overlap the identity `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/glyph")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: Result<()> = io_fail().context("loading dataset");
+        let msg = format!("{}", r.unwrap_err());
+        assert!(msg.starts_with("loading dataset: "), "{msg}");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).is_err());
+        assert!(f(200).is_err());
+    }
+}
