@@ -14,6 +14,9 @@ use glyph::nn::linear::Weight;
 use glyph::nn::tensor::{EncTensor, PackOrder};
 use glyph::train::{GlyphMlp, MlpConfig};
 
+// The MLP is built through the `NetworkBuilder` (via the `MlpConfig`
+// compatibility constructor); its execution walks the compiled plan.
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(3);
@@ -26,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = GlyphRng::new(7);
     let mut config = MlpConfig::tiny(in_dim, hidden, classes);
     config.act_shifts = vec![8, 7];
-    let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng);
+    let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng, &engine)?;
     let ds = data::mnist(true, batch * steps, 3);
     println!("dataset: {} ({} samples)", ds.name, ds.len());
 
@@ -70,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         let dt = t0.elapsed().as_secs_f64();
         let d = engine.counter.snapshot().since(&before);
         // decrypted weight-magnitude proxy: shows learning signal moving
-        let w00 = match &mlp.layers[0].w[0][0] {
+        let w00 = match &mlp.fc_layers()[0].w[0][0] {
             Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
             Weight::Plain(p) => p.coeffs[0],
         };

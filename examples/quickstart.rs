@@ -1,21 +1,34 @@
-//! Quickstart: encrypt a mini-batch, run one FC + TFHE-ReLU layer through
-//! the cryptosystem switch, decrypt, and check against plaintext.
+//! Quickstart for the plan-driven `Network` API: declare a model with the
+//! `NetworkBuilder`, inspect its compiled cryptosystem schedule, run an
+//! encrypted forward pass (BGV FC MACs → switch → TFHE Algorithm-1 ReLU),
+//! decrypt, and check against plaintext.
 //!
 //!     cargo run --release --example quickstart
 
-use glyph::nn::activation::relu_layer;
+use glyph::math::GlyphRng;
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
-use glyph::nn::linear::FcLayer;
+use glyph::nn::network::NetworkBuilder;
 use glyph::nn::tensor::{EncTensor, PackOrder};
 
 fn main() -> anyhow::Result<()> {
     let batch = 4;
     println!("• generating keys (test profile)…");
     let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 42);
+    let mut rng = GlyphRng::new(1);
 
-    // A 3→2 FC layer with encrypted weights.
+    // A 3→2 FC layer with encrypted weights, followed by a TFHE ReLU —
+    // one fluent builder chain.
     let w = vec![vec![2i64, -1, 3], vec![-2, 4, 1]];
-    let layer = FcLayer::new_encrypted(&w, &mut client, 0);
+    println!("• building network: .fc_encrypted(3→2).relu(0, 0)");
+    let net = NetworkBuilder::input_vec(3)
+        .fc_encrypted(w.clone())
+        .relu(0, 0)
+        .build(&mut client, &mut rng, &engine)?;
+
+    println!("• compiled schedule (the Switch column of the paper's tables):");
+    for s in &net.plan.steps {
+        println!("    {:<14} {:<6?} switch: {}", s.name, s.system, s.switch);
+    }
 
     // Inputs: 3 features × batch 4 (8-bit signed).
     let x_cols = vec![vec![10i64, -10, 5, 0], vec![7, 7, -7, 1], vec![-3, 3, 3, 2]];
@@ -23,11 +36,9 @@ fn main() -> anyhow::Result<()> {
     let x_cts = x_cols.iter().map(|v| client.encrypt_batch(v, 0)).collect();
     let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
 
-    println!("• FC forward on BGV (MultCC MACs)…");
-    let u = layer.forward(&x, &engine);
-
-    println!("• switching to TFHE and running Algorithm-1 ReLU…");
-    let (a, _state) = relu_layer(&engine, &u, 0, PackOrder::Forward);
+    println!("• forward pass (walks the plan: BGV MACs → switch → TFHE ReLU)…");
+    let pass = net.forward(&x, &engine);
+    let a = pass.output();
 
     println!("• decrypting:");
     for j in 0..2 {
@@ -39,6 +50,8 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(got, want);
     }
     println!("• HOP counts: {}", engine.counter.snapshot());
+    let t = net.plan.totals();
+    println!("• plan predicted: {} MultCC, {} gates, {} B2T switches", t.mult_cc, t.act_gates, t.switch_b2t);
     println!("✓ quickstart OK");
     Ok(())
 }

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let bn1 = BnLayer { gain: vec![1, 1], bias: vec![0, 0], gain_shift: 0 };
     let bn2 = BnLayer { gain: vec![1, 1, 1], bias: vec![0, 0, 0], gain_shift: 0 };
-    let mut cnn = GlyphCnn::new(config, &c1w, bn1, &c2w, bn2, &mut client, &mut rng, &engine);
+    let mut cnn = GlyphCnn::new(config, &c1w, bn1, &c2w, bn2, &mut client, &mut rng, &engine)?;
 
     let ds = data::synthetic_cancer(batch, 11);
     // take channel 0, center 14×14 crop

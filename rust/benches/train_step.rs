@@ -1,0 +1,73 @@
+//! Mini-batch `train_step` throughput through the plan-driven `Network`
+//! API: one full encrypted SGD step (FC MACs, switch round trips, TFHE
+//! ReLU/softmax gates, gradient requantization) on a reduced-scale MLP.
+//! Emits `bench_out/BENCH_train_step.json` so the per-PR perf trajectory
+//! accumulates data points (`GLYPH_BENCH_FULL=1` switches to the
+//! production-shaped crypto profile).
+
+use glyph::bench_util::{full_profile, report_json, time_op, BenchRecord};
+use glyph::coordinator::max_threads;
+use glyph::math::GlyphRng;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::nn::network::NetworkBuilder;
+use glyph::nn::tensor::{EncTensor, PackOrder};
+
+fn main() {
+    let profile = if full_profile() { EngineProfile::Default } else { EngineProfile::Test };
+    let batch = 4usize;
+    let (in_dim, hidden, classes) = (8usize, 6usize, 3usize);
+    eprintln!(
+        "train_step bench: {in_dim}-{hidden}-{classes} MLP, batch {batch}, {} profile",
+        if full_profile() { "full" } else { "test" }
+    );
+    let (engine, mut client) = GlyphEngine::setup(profile, batch, 20260728);
+    let mut rng = GlyphRng::new(3);
+    let shift = engine.frac_bits().min(8);
+    let err_shift = shift.saturating_sub(1).max(1);
+    let mut net = NetworkBuilder::input_vec(in_dim)
+        .fc(hidden)
+        .relu(shift, err_shift)
+        .fc(classes)
+        .softmax(3, err_shift)
+        .grad_shift(shift)
+        .build(&mut client, &mut rng, &engine)
+        .expect("valid bench network");
+
+    let x_cts = (0..in_dim)
+        .map(|i| {
+            let col: Vec<i64> = (0..batch).map(|b| ((i * 7 + b * 3) % 19) as i64 - 9).collect();
+            client.encrypt_batch(&col, 0)
+        })
+        .collect();
+    let x = EncTensor::new(x_cts, vec![in_dim], PackOrder::Forward, 0);
+    let lab_cts = (0..classes)
+        .map(|k| {
+            let mut v: Vec<i64> =
+                (0..batch).map(|b| if b % classes == k { 127 } else { 0 }).collect();
+            v.reverse();
+            client.encrypt_batch(&v, 0)
+        })
+        .collect();
+    let labels = EncTensor::new(lab_cts, vec![classes], PackOrder::Reversed, 0);
+
+    // warm-up (key-dependent caches, thread pool spin-up)
+    net.train_step(&x, &labels, &engine);
+    let iters = if full_profile() { 1 } else { 3 };
+    let secs = time_op(iters, || net.train_step(&x, &labels, &engine));
+
+    // values/sec: every activation value of every sample in the mini-batch
+    let act_values = (hidden + classes) * batch;
+    let threads = max_threads();
+    let records = vec![
+        BenchRecord::new("train_step", secs, threads),
+        BenchRecord::new("train_step_sample", secs / batch as f64, threads),
+        BenchRecord::new("train_step_value", secs / act_values as f64, threads),
+    ];
+    println!(
+        "train_step: {:.3}s/step  {:.2} samples/sec  {:.2} activation values/sec",
+        secs,
+        batch as f64 / secs,
+        act_values as f64 / secs
+    );
+    report_json("train_step", &records);
+}

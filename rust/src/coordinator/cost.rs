@@ -7,8 +7,17 @@
 //! §4.1 numbers ([`OpLatencies::paper`]) so every generated table can be
 //! printed in both calibrations side by side — shape comparisons stay
 //! honest even where absolute constants differ (DESIGN.md §5).
+//!
+//! Since the `Network`/`Plan` redesign, this module prices a
+//! `scheduler::Plan` — [`price_plan`] multiplies each step's [`StepOps`]
+//! by the per-op latencies. The paper tables are built by constructing
+//! paper-convention plans ([`mlp_paper_plan`], [`cnn_paper_plan`], which
+//! keep the paper's own row order, switch-column labels and op-counting
+//! conventions) and pricing them; a plan compiled from a live network can
+//! be priced by the very same function.
 
 use super::executor::parallel_map;
+use super::scheduler::{Plan, PlanStep, StepOps, StepPhase, System};
 use crate::bgv::lut::LookupTable;
 use crate::nn::engine::{EngineProfile, GlyphEngine};
 use crate::nn::tensor::PackOrder;
@@ -32,6 +41,10 @@ pub struct OpLatencies {
     pub switch_b2t_value: f64,
     /// TFHE→BGV per-ciphertext cost (pack + raise), amortized per value.
     pub switch_t2b_value: f64,
+    /// One bootstrapped TFHE gate. Used to price steps that carry raw gate
+    /// counts instead of per-activation-value costs (the compiled
+    /// FC-gradient requantization).
+    pub gate_bootstrap: f64,
 }
 
 impl OpLatencies {
@@ -47,6 +60,7 @@ impl OpLatencies {
             softmax_value: 3.3,    // §4.1: "from 307.9 seconds to only 3.3"
             switch_b2t_value: 0.0013, // FC1-forward +0.96% over 1357s / 100K values
             switch_t2b_value: 0.0013,
+            gate_bootstrap: 0.012, // §4.1 ReLU: ≈0.1 s / (7 gates + extraction)
         }
     }
 
@@ -111,6 +125,18 @@ impl OpLatencies {
         let _o = unit.evaluate_mux(&engine, &bits[0][..sm_bits]);
         let softmax_value = t0.elapsed().as_secs_f64();
 
+        // Gate bootstrap: one AND on the gate cloud key.
+        let tt = crate::tfhe::LweCiphertext::trivial(
+            crate::tfhe::encode_bit(true),
+            engine.gate_ck.params.n,
+        );
+        let gate_iters = if test_scale { 4 } else { 10 };
+        let t0 = Instant::now();
+        for _ in 0..gate_iters {
+            let _ = engine.gate_ck.and(&tt, &tt);
+        }
+        let gate_bootstrap = t0.elapsed().as_secs_f64() / gate_iters as f64;
+
         // TLU: one real bit-sliced lookup in the t=2 profile.
         let tlu_domain = crate::train::fhesgd::TluDomain::new(test_scale, 7);
         let tlu_bits = if test_scale { 4 } else { 8 };
@@ -129,6 +155,7 @@ impl OpLatencies {
             softmax_value,
             switch_b2t_value,
             switch_t2b_value,
+            gate_bootstrap,
         }
     }
 }
@@ -159,78 +186,148 @@ pub enum Scheme {
     GlyphMlp,
 }
 
-/// Generate the FHESGD (Table 2/6) or Glyph (Table 3/7) MLP mini-batch
-/// breakdown for `dims` (e.g. [784,128,32,10]).
-pub fn mlp_table(dims: &[usize], scheme: Scheme, lat: &OpLatencies) -> Vec<TableRow> {
+/// Price one plan step: Σ (op count × per-op latency), with the paper's
+/// +0.96% Δ/extract overhead applied to switch-producing FC rows.
+///
+/// Activation steps are priced per value (`relu_value`/`softmax_value`
+/// already amortize their gates, extraction and switch round trip — the
+/// paper's convention). Steps with *no* per-value activation count but raw
+/// gate/switch ops — the compiled FC-gradient requantization — are priced
+/// from those counts directly, so compiled `Network` plans lose nothing.
+pub fn price_step(step: &PlanStep, lat: &OpLatencies) -> TableRow {
+    let o = &step.ops;
+    let mut time = o.mult_cc as f64 * lat.mult_cc
+        + o.mult_cp as f64 * lat.mult_cp
+        + o.add_cc as f64 * lat.add_cc
+        + o.tlu as f64 * lat.tlu
+        + o.relu_values as f64 * (lat.relu_value + lat.switch_b2t_value + lat.switch_t2b_value)
+        + o.softmax_values as f64
+            * (lat.softmax_value + lat.switch_b2t_value + lat.switch_t2b_value);
+    if o.act_values() == 0 {
+        // not covered by a per-value activation latency: price the raw
+        // gate bootstraps and per-ciphertext switches (each B2T here
+        // extracts a single value, so the per-value switch cost applies)
+        time += o.act_gates as f64 * lat.gate_bootstrap
+            + o.switch_b2t as f64 * lat.switch_b2t_value
+            + o.switch_t2b as f64 * lat.switch_t2b_value;
+    }
+    if step.fc_switch_overhead {
+        time *= 1.0096;
+    }
+    TableRow {
+        layer: step.name.clone(),
+        time_s: time,
+        mult_cp: o.mult_cp,
+        mult_cc: o.mult_cc,
+        add_cc: o.add_cc,
+        tlu: o.tlu,
+        act: o.act_values(),
+        switch: step.switch,
+    }
+}
+
+/// Price every step of a plan — the one pricing path shared by the paper
+/// tables and compiled `Network` plans.
+pub fn price_plan(plan: &Plan, lat: &OpLatencies) -> Vec<TableRow> {
+    plan.steps.iter().map(|s| price_step(s, lat)).collect()
+}
+
+/// The paper-convention MLP plan behind Tables 2/3/6/7: the paper's own row
+/// order, switch labels and op-counting (AddCC = MAC count, act values per
+/// neuron with the batch amortized inside the op).
+pub fn mlp_paper_plan(dims: &[usize], scheme: Scheme) -> Plan {
     let l = dims.len() - 1; // number of FC layers
-    let mut rows = Vec::new();
+    let mut steps = Vec::new();
     let fc_macs = |i: usize| (dims[i] * dims[i + 1]) as u64;
 
-    let fc_row = |name: String, macs: u64, switch: &'static str| -> TableRow {
-        let mut time = macs as f64 * (lat.mult_cc + lat.add_cc);
-        if switch != "-" {
-            // the Δ/extract part of the switch rides on the FC output
-            time *= 1.0096; // paper: +0.96% on FC1-forward
-        }
-        TableRow {
-            layer: name,
-            time_s: time,
-            mult_cc: macs,
-            add_cc: macs,
-            switch,
-            ..Default::default()
-        }
+    let fc_step = |name: String, phase: StepPhase, macs: u64, switch: &'static str| PlanStep {
+        name,
+        unit: None,
+        phase,
+        system: System::Bgv,
+        switch,
+        ops: StepOps { mult_cc: macs, add_cc: macs, ..Default::default() },
+        // the Δ/extract part of the switch rides on the FC output
+        // (paper: +0.96% on FC1-forward)
+        fc_switch_overhead: switch != "-",
     };
-    let act_row = |name: String, neurons: u64, last: bool| -> TableRow {
-        match scheme {
-            Scheme::Fhesgd => TableRow {
-                layer: name,
-                time_s: neurons as f64 * lat.tlu,
-                tlu: neurons,
-                switch: "-",
+    let act_step = |name: String, phase: StepPhase, neurons: u64, last: bool| match scheme {
+        Scheme::Fhesgd => PlanStep {
+            name,
+            unit: None,
+            phase,
+            system: System::Bgv,
+            switch: "-",
+            ops: StepOps { tlu: neurons, ..Default::default() },
+            fc_switch_overhead: false,
+        },
+        Scheme::GlyphMlp => PlanStep {
+            name,
+            unit: None,
+            phase,
+            system: System::Tfhe,
+            switch: "TFHE-BGV",
+            ops: StepOps {
+                relu_values: if last { 0 } else { neurons },
+                softmax_values: if last { neurons } else { 0 },
                 ..Default::default()
             },
-            Scheme::GlyphMlp => TableRow {
-                layer: name,
-                time_s: neurons as f64
-                    * (if last { lat.softmax_value } else { lat.relu_value }
-                        + lat.switch_b2t_value
-                        + lat.switch_t2b_value),
-                act: neurons,
-                switch: "TFHE-BGV",
-                ..Default::default()
-            },
-        }
+            fc_switch_overhead: false,
+        },
     };
     let sw = |on: bool| if on { "BGV-TFHE" } else { "-" };
 
     // forward
     for i in 0..l {
-        rows.push(fc_row(format!("FC{}-forward", i + 1), fc_macs(i), sw(scheme == Scheme::GlyphMlp)));
-        rows.push(act_row(format!("Act{}-forward", i + 1), dims[i + 1] as u64, i == l - 1));
+        steps.push(fc_step(
+            format!("FC{}-forward", i + 1),
+            StepPhase::Forward,
+            fc_macs(i),
+            sw(scheme == Scheme::GlyphMlp),
+        ));
+        steps.push(act_step(
+            format!("Act{}-forward", i + 1),
+            StepPhase::Forward,
+            dims[i + 1] as u64,
+            i == l - 1,
+        ));
     }
     // backward
-    rows.push(TableRow {
-        layer: format!("Act{l}-error"),
-        time_s: dims[l] as u64 as f64 * lat.add_cc,
-        add_cc: dims[l] as u64,
+    steps.push(PlanStep {
+        name: format!("Act{l}-error"),
+        unit: None,
+        phase: StepPhase::Error,
+        system: System::Bgv,
         switch: "-",
-        ..Default::default()
+        ops: StepOps { add_cc: dims[l] as u64, ..Default::default() },
+        fc_switch_overhead: false,
     });
     for i in (0..l).rev() {
         if i > 0 {
-            rows.push(fc_row(format!("FC{}-error", i + 1), fc_macs(i), "-"));
+            steps.push(fc_step(format!("FC{}-error", i + 1), StepPhase::Error, fc_macs(i), "-"));
         }
-        rows.push(fc_row(
+        steps.push(fc_step(
             format!("FC{}-gradient", i + 1),
+            StepPhase::Gradient,
             fc_macs(i),
             sw(scheme == Scheme::GlyphMlp),
         ));
         if i > 0 {
-            rows.push(act_row(format!("Act{i}-error"), dims[i] as u64, false));
+            steps.push(act_step(
+                format!("Act{i}-error"),
+                StepPhase::Error,
+                dims[i] as u64,
+                false,
+            ));
         }
     }
-    rows
+    Plan { steps }
+}
+
+/// Generate the FHESGD (Table 2/6) or Glyph (Table 3/7) MLP mini-batch
+/// breakdown for `dims` (e.g. [784,128,32,10]).
+pub fn mlp_table(dims: &[usize], scheme: Scheme, lat: &OpLatencies) -> Vec<TableRow> {
+    price_plan(&mlp_paper_plan(dims, scheme), lat)
 }
 
 /// CNN shape description for the Table 4/8 generator (paper counting:
@@ -283,60 +380,76 @@ impl CnnShape {
     }
 }
 
-/// Generate the Glyph CNN + transfer-learning breakdown (Tables 4/8).
-pub fn cnn_table(s: &CnnShape, lat: &OpLatencies) -> Vec<TableRow> {
-    let mut rows = Vec::new();
-    let plain_row = |name: &str, count: u64, switch: &'static str| TableRow {
-        layer: name.into(),
-        time_s: count as f64 * (lat.mult_cp + lat.add_cc),
-        mult_cp: count,
-        add_cc: count,
+/// The paper-convention transfer-learning CNN plan behind Tables 4/8
+/// (frozen plaintext features, trainable FC head; paper row order and
+/// switch labels preserved).
+pub fn cnn_paper_plan(s: &CnnShape) -> Plan {
+    let mut steps = Vec::new();
+    let plain_step = |name: &str, phase: StepPhase, count: u64, switch: &'static str| PlanStep {
+        name: name.into(),
+        unit: None,
+        phase,
+        system: System::Bgv,
         switch,
-        ..Default::default()
+        ops: StepOps { mult_cp: count, add_cc: count, ..Default::default() },
+        fc_switch_overhead: false,
     };
-    let act_row = |name: &str, values: u64, softmax: bool| TableRow {
-        layer: name.into(),
-        time_s: values as f64
-            * (if softmax { lat.softmax_value } else { lat.relu_value }
-                + lat.switch_b2t_value
-                + lat.switch_t2b_value),
-        act: values,
+    let act_step = |name: &str, phase: StepPhase, values: u64, softmax: bool| PlanStep {
+        name: name.into(),
+        unit: None,
+        phase,
+        system: System::Tfhe,
         switch: "TFHE-BGV",
-        ..Default::default()
+        ops: StepOps {
+            relu_values: if softmax { 0 } else { values },
+            softmax_values: if softmax { values } else { 0 },
+            ..Default::default()
+        },
+        fc_switch_overhead: false,
     };
-    let fc_row = |name: &str, macs: u64, switch: &'static str| TableRow {
-        layer: name.into(),
-        time_s: macs as f64 * (lat.mult_cc + lat.add_cc) * 1.0096,
-        mult_cc: macs,
-        add_cc: macs,
+    let fc_step = |name: &str, phase: StepPhase, macs: u64, switch: &'static str| PlanStep {
+        name: name.into(),
+        unit: None,
+        phase,
+        system: System::Bgv,
         switch,
-        ..Default::default()
+        ops: StepOps { mult_cc: macs, add_cc: macs, ..Default::default() },
+        // paper convention: every head FC row carries the switch overhead
+        fc_switch_overhead: true,
     };
 
-    rows.push(plain_row("Conv1-forward", s.conv1.0 * s.conv1.1, "-"));
-    rows.push(plain_row("BN1-forward", s.conv1.0 * 2, "BGV-TFHE"));
-    rows.push(act_row("Act1-forward", s.act1, false));
-    rows.push(plain_row("Pool1-forward", s.pool1_out * 4, "-"));
-    rows.push(plain_row("Conv2-forward", s.conv2.0 * s.conv2.1, "-"));
-    rows.push(plain_row("BN2-forward", s.conv2.0 * 2, "BGV-TFHE"));
-    rows.push(act_row("Act2-forward", s.act2, false));
-    rows.push(plain_row("Pool2-forward", s.pool2_out * 4, "-"));
-    rows.push(fc_row("FC1-forward", s.fc1.0 * s.fc1.1, "BGV-TFHE"));
-    rows.push(act_row("Act3-forward", s.fc1.1, false));
-    rows.push(fc_row("FC2-forward", s.fc2.0 * s.fc2.1, "BGV-TFHE"));
-    rows.push(act_row("Act4-forward", s.classes, true));
-    rows.push(TableRow {
-        layer: "Act4-error".into(),
-        time_s: s.classes as f64 * lat.add_cc,
-        add_cc: s.classes,
+    use StepPhase::{Error, Forward, Gradient};
+    steps.push(plain_step("Conv1-forward", Forward, s.conv1.0 * s.conv1.1, "-"));
+    steps.push(plain_step("BN1-forward", Forward, s.conv1.0 * 2, "BGV-TFHE"));
+    steps.push(act_step("Act1-forward", Forward, s.act1, false));
+    steps.push(plain_step("Pool1-forward", Forward, s.pool1_out * 4, "-"));
+    steps.push(plain_step("Conv2-forward", Forward, s.conv2.0 * s.conv2.1, "-"));
+    steps.push(plain_step("BN2-forward", Forward, s.conv2.0 * 2, "BGV-TFHE"));
+    steps.push(act_step("Act2-forward", Forward, s.act2, false));
+    steps.push(plain_step("Pool2-forward", Forward, s.pool2_out * 4, "-"));
+    steps.push(fc_step("FC1-forward", Forward, s.fc1.0 * s.fc1.1, "BGV-TFHE"));
+    steps.push(act_step("Act3-forward", Forward, s.fc1.1, false));
+    steps.push(fc_step("FC2-forward", Forward, s.fc2.0 * s.fc2.1, "BGV-TFHE"));
+    steps.push(act_step("Act4-forward", Forward, s.classes, true));
+    steps.push(PlanStep {
+        name: "Act4-error".into(),
+        unit: None,
+        phase: Error,
+        system: System::Bgv,
         switch: "-",
-        ..Default::default()
+        ops: StepOps { add_cc: s.classes, ..Default::default() },
+        fc_switch_overhead: false,
     });
-    rows.push(fc_row("FC2-error", s.fc2.0 * s.fc2.1, "-"));
-    rows.push(fc_row("FC2-gradient", s.fc2.0 * s.fc2.1, "BGV-TFHE"));
-    rows.push(act_row("Act3-error", s.fc1.1, false));
-    rows.push(fc_row("FC1-gradient", s.fc1.0 * s.fc1.1, "-"));
-    rows
+    steps.push(fc_step("FC2-error", Error, s.fc2.0 * s.fc2.1, "-"));
+    steps.push(fc_step("FC2-gradient", Gradient, s.fc2.0 * s.fc2.1, "BGV-TFHE"));
+    steps.push(act_step("Act3-error", Error, s.fc1.1, false));
+    steps.push(fc_step("FC1-gradient", Gradient, s.fc1.0 * s.fc1.1, "-"));
+    Plan { steps }
+}
+
+/// Generate the Glyph CNN + transfer-learning breakdown (Tables 4/8).
+pub fn cnn_table(s: &CnnShape, lat: &OpLatencies) -> Vec<TableRow> {
+    price_plan(&cnn_paper_plan(s), lat)
 }
 
 /// Sum a table into a Total row.

@@ -7,7 +7,10 @@ pub mod executor;
 pub mod metrics;
 pub mod scheduler;
 
-pub use cost::{mlp_table, cnn_table, to_markdown, total_row, CnnShape, OpLatencies, Scheme, TableRow};
+pub use cost::{
+    cnn_paper_plan, cnn_table, mlp_paper_plan, mlp_table, price_plan, price_step, to_markdown,
+    total_row, CnnShape, OpLatencies, Scheme, TableRow,
+};
 pub use executor::{max_threads, parallel_map, GlyphPool};
 pub use metrics::{OpCounter, OpSnapshot};
-pub use scheduler::{LayerKind, Plan, PlanStep, System};
+pub use scheduler::{LayerKind, Plan, PlanLayer, PlanStep, StepOps, StepPhase, System};

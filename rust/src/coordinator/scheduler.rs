@@ -1,10 +1,27 @@
-//! Cryptosystem scheduling: assigns each network operation to BGV or TFHE
-//! and inserts the switches (the "Switch" column of Tables 3/4/7/8).
+//! Cryptosystem scheduling: the *executable* `Plan` that assigns every
+//! network step to BGV or TFHE and inserts the switches (the "Switch"
+//! column of Tables 3/4/7/8).
 //!
-//! The policy is the paper's: vectorial arithmetic (FC/conv/pool/BN/loss)
-//! on BGV, nonlinear activations on TFHE, switch at every boundary, and
-//! keep the quadratic loss on BGV because a switch would cost more than it
-//! saves (§4.1).
+//! A [`Plan`] is no longer a print-only artifact. It is compiled from a
+//! `nn::network::Network` (each unit contributes a [`PlanLayer`] through the
+//! `Layer::plan_entry` trait method) and is the single source of truth for
+//!
+//! * **execution** — `Network::forward`/`train_step` walk the plan's steps
+//!   in order; activation steps are exactly where `switch_to_bits` /
+//!   `switch_to_bgv` run, and gradient steps exist only where the plan says
+//!   a layer trains;
+//! * **the cost model** — `coordinator::cost::price_plan` turns a plan's
+//!   per-step [`StepOps`] into the paper's latency tables;
+//! * **the CLI** — `glyph plan [--cnn] [--dims ...]` prints the compiled
+//!   schedule.
+//!
+//! The policy is the paper's (§4.1): vectorial arithmetic (FC/conv/pool/
+//! BN/loss) on BGV, nonlinear activations on TFHE, switch at every
+//! boundary, and keep the quadratic-loss derivative on BGV because a switch
+//! would cost more than it saves. The backward walk is truncated below the
+//! lowest trainable layer (transfer learning freezes the feature extractor,
+//! so no error ever needs to reach it), and within a trainable layer the
+//! canonical order is error-then-gradient, matching Tables 3/4.
 
 /// A network layer, as the scheduler sees it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -13,8 +30,12 @@ pub enum LayerKind {
     Conv { trainable: bool },
     BatchNorm,
     AvgPool,
+    /// Shape-only CHW→vector adapter (zero homomorphic ops).
+    Flatten,
     Relu,
     Softmax,
+    /// FHESGD-baseline sigmoid via the bit-sliced BGV table lookup.
+    SigmoidTlu,
     QuadraticLoss,
 }
 
@@ -25,13 +46,101 @@ pub enum System {
     Tfhe,
 }
 
+/// Which phase of the mini-batch step a plan entry belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPhase {
+    Forward,
+    /// Error propagation (the paper's `*-error` rows).
+    Error,
+    /// Weight gradient + SGD update (the paper's `*-gradient` rows).
+    Gradient,
+}
+
+/// Exact homomorphic-op counts predicted for one plan step of one
+/// mini-batch iteration. Field meanings mirror `coordinator::metrics::
+/// OpCounter`, so a compiled plan's [`Plan::totals`] can be compared 1:1
+/// against a live counter snapshot (the plan/execution consistency test).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepOps {
+    pub mult_cc: u64,
+    pub mult_cp: u64,
+    pub add_cc: u64,
+    /// Bit-sliced BGV table lookups (FHESGD activations).
+    pub tlu: u64,
+    /// Values through the TFHE ReLU/iReLU (per-neuron, batch amortized).
+    pub relu_values: u64,
+    /// Values through the Figure-4 softmax unit (per-neuron).
+    pub softmax_values: u64,
+    /// Bootstrapped TFHE gates.
+    pub act_gates: u64,
+    /// Digit-extraction bootstraps inside BGV→TFHE switches.
+    pub extract_pbs: u64,
+    /// BGV→TFHE switches (per ciphertext).
+    pub switch_b2t: u64,
+    /// TFHE→BGV switches (per packed ciphertext).
+    pub switch_t2b: u64,
+    /// Noise refreshes (each T2B packs into a fresh ciphertext; each TLU
+    /// performs two domain conversions).
+    pub refresh: u64,
+}
+
+impl StepOps {
+    /// Values through any TFHE activation (the paper's "Act" column).
+    pub fn act_values(&self) -> u64 {
+        self.relu_values + self.softmax_values
+    }
+
+    /// Element-wise accumulate (used by [`Plan::totals`]).
+    pub fn accumulate(&mut self, o: &StepOps) {
+        self.mult_cc += o.mult_cc;
+        self.mult_cp += o.mult_cp;
+        self.add_cc += o.add_cc;
+        self.tlu += o.tlu;
+        self.relu_values += o.relu_values;
+        self.softmax_values += o.softmax_values;
+        self.act_gates += o.act_gates;
+        self.extract_pbs += o.extract_pbs;
+        self.switch_b2t += o.switch_b2t;
+        self.switch_t2b += o.switch_t2b;
+        self.refresh += o.refresh;
+    }
+}
+
 /// One scheduled step.
 #[derive(Clone, Debug)]
 pub struct PlanStep {
     pub name: String,
+    /// Index of the `Network` unit that executes this step (`None` for
+    /// paper-calibrated table plans that are not backed by a live network).
+    pub unit: Option<usize>,
+    pub phase: StepPhase,
     pub system: System,
-    /// Switch annotation entering this step ("BGV-TFHE", "TFHE-BGV" or "-").
+    /// Switch annotation ("BGV-TFHE", "TFHE-BGV" or "-"). Compiled plans
+    /// annotate the boundary *entering* the step; paper table plans carry
+    /// the paper's own column convention.
     pub switch: &'static str,
+    /// Predicted op counts for this step.
+    pub ops: StepOps,
+    /// Paper cost-model quirk: the Δ/extract half of a switch rides on the
+    /// producing FC row as a +0.96% latency overhead (§4.2).
+    pub fc_switch_overhead: bool,
+}
+
+/// Scheduler-facing description of one network unit: what `Layer::
+/// plan_entry` returns, and what [`Plan::from_layers`] consumes.
+#[derive(Clone, Debug)]
+pub struct PlanLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Index of the backing `Network` unit, if any.
+    pub unit: Option<usize>,
+    /// Forward-step op counts.
+    pub forward: StepOps,
+    /// Error-step op counts; `None` when the unit cannot (or need not)
+    /// propagate an error (frozen conv/BN/pool fold into neighbours).
+    pub error: Option<StepOps>,
+    /// Gradient-step op counts; `None` for frozen units.
+    pub gradient: Option<StepOps>,
 }
 
 /// A full schedule.
@@ -39,50 +148,137 @@ pub struct Plan {
     pub steps: Vec<PlanStep>,
 }
 
+fn forward_system(kind: LayerKind) -> System {
+    match kind {
+        LayerKind::Relu | LayerKind::Softmax => System::Tfhe,
+        _ => System::Bgv,
+    }
+}
+
+fn error_system(kind: LayerKind) -> System {
+    match kind {
+        // iReLU runs Algorithm-2 gates on TFHE; the softmax *error* is the
+        // quadratic-loss derivative, one SubCC on BGV (Eq. 6).
+        LayerKind::Relu => System::Tfhe,
+        _ => System::Bgv,
+    }
+}
+
 impl Plan {
-    /// Build the forward+backward schedule for a layer stack.
-    pub fn build(layers: &[(String, LayerKind)]) -> Plan {
-        let system_of = |k: LayerKind| match k {
-            LayerKind::Relu | LayerKind::Softmax => System::Tfhe,
-            _ => System::Bgv,
-        };
+    /// Build the forward+backward schedule from per-unit plan entries.
+    ///
+    /// Policy (matches `Network::train_step` exactly):
+    /// * forward steps in layer order;
+    /// * backward in reverse order, truncated below the lowest trainable
+    ///   layer: a unit emits its error step only if some trainable layer
+    ///   sits strictly below it;
+    /// * within a layer, error before gradient (the Tables-3/4 row order).
+    pub fn from_layers(layers: &[PlanLayer]) -> Plan {
         let mut steps = Vec::new();
         let mut cur = System::Bgv;
-        let mut push = |name: String, sys: System, cur: &mut System| {
+        let mut push = |name: String,
+                        unit: Option<usize>,
+                        phase: StepPhase,
+                        sys: System,
+                        ops: StepOps,
+                        cur: &mut System| {
             let switch = match (*cur, sys) {
                 (System::Bgv, System::Tfhe) => "BGV-TFHE",
                 (System::Tfhe, System::Bgv) => "TFHE-BGV",
                 _ => "-",
             };
-            steps.push(PlanStep { name, system: sys, switch });
+            steps.push(PlanStep {
+                name,
+                unit,
+                phase,
+                system: sys,
+                switch,
+                ops,
+                fc_switch_overhead: false,
+            });
             *cur = sys;
         };
-        // forward
-        for (name, kind) in layers {
-            push(format!("{name}-forward"), system_of(*kind), &mut cur);
+
+        for l in layers {
+            push(
+                format!("{}-forward", l.name),
+                l.unit,
+                StepPhase::Forward,
+                forward_system(l.kind),
+                l.forward,
+                &mut cur,
+            );
         }
-        // backward (reverse order; trainable layers also emit a gradient step)
-        for (name, kind) in layers.iter().rev() {
-            match kind {
-                LayerKind::QuadraticLoss => push(format!("{name}-error"), System::Bgv, &mut cur),
-                LayerKind::Relu | LayerKind::Softmax => {
-                    push(format!("{name}-error"), System::Tfhe, &mut cur)
+        for (idx, l) in layers.iter().enumerate().rev() {
+            let trainable_below = layers[..idx].iter().any(|b| b.gradient.is_some());
+            if trainable_below {
+                if let Some(ops) = l.error {
+                    push(
+                        format!("{}-error", l.name),
+                        l.unit,
+                        StepPhase::Error,
+                        error_system(l.kind),
+                        ops,
+                        &mut cur,
+                    );
                 }
-                LayerKind::Fc { trainable } | LayerKind::Conv { trainable } => {
-                    push(format!("{name}-error"), System::Bgv, &mut cur);
-                    if *trainable {
-                        push(format!("{name}-gradient"), System::Bgv, &mut cur);
-                    }
-                }
-                _ => {} // pool/BN backward folded into neighbours under TL
+            }
+            if let Some(ops) = l.gradient {
+                push(
+                    format!("{}-gradient", l.name),
+                    l.unit,
+                    StepPhase::Gradient,
+                    System::Bgv,
+                    ops,
+                    &mut cur,
+                );
             }
         }
         Plan { steps }
     }
 
+    /// Compatibility constructor: schedule a bare layer stack (no op
+    /// counts). Error/gradient presence is derived from the kind alone.
+    pub fn build(layers: &[(String, LayerKind)]) -> Plan {
+        let entries: Vec<PlanLayer> = layers
+            .iter()
+            .map(|(name, kind)| {
+                let error = match kind {
+                    LayerKind::BatchNorm | LayerKind::AvgPool | LayerKind::Flatten => None,
+                    _ => Some(StepOps::default()),
+                };
+                let gradient = match kind {
+                    LayerKind::Fc { trainable: true } | LayerKind::Conv { trainable: true } => {
+                        Some(StepOps::default())
+                    }
+                    _ => None,
+                };
+                PlanLayer {
+                    name: name.clone(),
+                    kind: *kind,
+                    unit: None,
+                    forward: StepOps::default(),
+                    error,
+                    gradient,
+                }
+            })
+            .collect();
+        Plan::from_layers(&entries)
+    }
+
     /// Number of switches in the plan.
     pub fn switch_count(&self) -> usize {
         self.steps.iter().filter(|s| s.switch != "-").count()
+    }
+
+    /// Sum of the per-step predicted op counts — directly comparable to an
+    /// `OpCounter` snapshot taken across one live `train_step`.
+    pub fn totals(&self) -> StepOps {
+        let mut t = StepOps::default();
+        for s in &self.steps {
+            t.accumulate(&s.ops);
+        }
+        t
     }
 
     /// Invariant: switches alternate correctly (every BGV→TFHE is eventually
@@ -110,7 +306,8 @@ impl Plan {
     }
 }
 
-/// The paper's 3-layer MLP schedule.
+/// The paper's 3-layer MLP schedule (shape only; for the op-counted,
+/// executable plan compile a `Network` or use `NetworkBuilder::compile`).
 pub fn mlp_plan() -> Plan {
     Plan::build(&[
         ("FC1".into(), LayerKind::Fc { trainable: true }),
@@ -145,6 +342,18 @@ mod tests {
     }
 
     #[test]
+    fn mlp_plan_orders_error_before_gradient() {
+        let plan = mlp_plan();
+        let pos = |n: &str| plan.steps.iter().position(|s| s.name == n).unwrap();
+        assert!(pos("FC3-error") < pos("FC3-gradient"));
+        assert!(pos("FC3-gradient") < pos("Act2-error"));
+        // the lowest trainable layer has no error step (nothing below it
+        // needs the signal)
+        assert!(!plan.steps.iter().any(|s| s.name == "FC1-error"));
+        assert!(plan.steps.iter().any(|s| s.name == "FC1-gradient"));
+    }
+
+    #[test]
     fn transfer_cnn_plan_has_no_conv_gradients() {
         let plan = Plan::build(&[
             ("Conv1".into(), LayerKind::Conv { trainable: false }),
@@ -157,5 +366,40 @@ mod tests {
         assert!(plan.validate());
         assert!(!plan.steps.iter().any(|s| s.name == "Conv1-gradient"));
         assert!(plan.steps.iter().any(|s| s.name == "FC1-gradient"));
+        // backward truncates below the trainable head: the frozen ReLU never
+        // propagates an error.
+        assert!(!plan.steps.iter().any(|s| s.name == "Act1-error"));
+    }
+
+    #[test]
+    fn totals_accumulate_step_ops() {
+        let fc = StepOps { mult_cc: 12, add_cc: 8, ..Default::default() };
+        let act = StepOps { switch_b2t: 4, switch_t2b: 4, act_gates: 56, refresh: 4, ..Default::default() };
+        let plan = Plan::from_layers(&[
+            PlanLayer {
+                name: "FC1".into(),
+                kind: LayerKind::Fc { trainable: true },
+                unit: Some(0),
+                forward: fc,
+                error: Some(fc),
+                gradient: Some(fc),
+            },
+            PlanLayer {
+                name: "Act1".into(),
+                kind: LayerKind::Relu,
+                unit: Some(1),
+                forward: act,
+                error: Some(act),
+                gradient: None,
+            },
+        ]);
+        // backward truncation: Act1 error needs FC1 below (trainable ✓);
+        // FC1 has no trainable below, so no FC1-error.
+        let names: Vec<&str> = plan.steps.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["FC1-forward", "Act1-forward", "Act1-error", "FC1-gradient"]);
+        let t = plan.totals();
+        assert_eq!(t.mult_cc, 24);
+        assert_eq!(t.act_gates, 112);
+        assert_eq!(t.switch_b2t, 8);
     }
 }

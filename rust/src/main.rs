@@ -3,22 +3,91 @@
 //! Subcommands (hand-rolled parsing; the vendored crate set has no clap):
 //!
 //! * `info`                — parameters, profiles, artifact status
-//! * `plan`                — print the MLP cryptosystem schedule (Table-3 Switch column)
+//! * `plan [--cnn] [--dims a,b,c] [--batch N]`
+//!                         — print the *compiled* cryptosystem schedule with
+//!                           per-step op counts (Table-3 / Table-4 Switch
+//!                           columns). `--cnn` compiles the transfer CNN;
+//!                           `--dims` any MLP topology (shape-only compile,
+//!                           no keys or weights are generated).
 //! * `microbench [--full]` — per-op latencies (Table 1, ours vs paper)
 //! * `tables [--measured]` — regenerate Tables 2/3/4 (paper-calibrated by default)
-//! * `train-mlp [--steps N] [--batch B]` — reduced-scale encrypted MLP training
+//! * `train-mlp [--steps N] [--batch B] [--dims a,b,c]`
+//!                         — reduced-scale encrypted MLP training through
+//!                           the `NetworkBuilder` (default dims 16,8,4)
 //!
 //! The `examples/` binaries are the full experiment drivers.
 
-use glyph::coordinator::{cost, scheduler};
+use glyph::coordinator::cost;
+use glyph::coordinator::scheduler::Plan;
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
 use glyph::nn::tensor::{EncTensor, PackOrder};
-use glyph::train::{GlyphMlp, MlpConfig};
+use glyph::train::{CnnConfig, GlyphMlp, MlpConfig};
+
+fn parse_dims(spec: &str) -> anyhow::Result<Vec<usize>> {
+    let dims: Vec<usize> = spec
+        .split(',')
+        .map(|p| p.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --dims {spec:?}: {e}"))?;
+    if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+        anyhow::bail!("--dims needs at least two nonzero widths, got {spec:?}");
+    }
+    Ok(dims)
+}
+
+/// Per-layer activation shift ≈ log2(127·fan_in) − 7 (paper §4.1), with an
+/// upper clamp chosen by the caller (the engine's fraction-bit budget).
+fn derived_shifts(dims: &[usize], max_shift: u32) -> (Vec<u32>, Vec<u32>) {
+    let act: Vec<u32> = dims[..dims.len() - 1]
+        .iter()
+        .map(|&fan_in| (((127 * fan_in) as f64).log2().ceil() as u32).saturating_sub(7).clamp(1, max_shift))
+        .collect();
+    // error shifts follow the activation shift of the layer above
+    let err: Vec<u32> = (0..act.len()).map(|l| act[(l + 1).min(act.len() - 1)]).collect();
+    (act, err)
+}
+
+fn mlp_config_for(dims: Vec<usize>, max_shift: u32, softmax_bits: usize) -> MlpConfig {
+    let (act_shifts, err_shifts) = derived_shifts(&dims, max_shift);
+    let grad_shift = act_shifts.iter().copied().max().unwrap_or(8).min(max_shift);
+    MlpConfig { dims, act_shifts, err_shifts, grad_shift, softmax_bits }
+}
+
+fn print_plan(plan: &Plan) {
+    println!(
+        "{:<16} {:<6} {:<9} {:>10} {:>9} {:>10} {:>6} {:>7} {:>6} {:>6}",
+        "step", "system", "switch", "MultCC", "MultCP", "AddCC", "TLU", "Gates", "B2T", "T2B"
+    );
+    for s in &plan.steps {
+        println!(
+            "{:<16} {:<6?} {:<9} {:>10} {:>9} {:>10} {:>6} {:>7} {:>6} {:>6}",
+            s.name,
+            s.system,
+            s.switch,
+            s.ops.mult_cc,
+            s.ops.mult_cp,
+            s.ops.add_cc,
+            s.ops.tlu,
+            s.ops.act_gates,
+            s.ops.switch_b2t,
+            s.ops.switch_t2b
+        );
+    }
+    let t = plan.totals();
+    println!(
+        "{:<16} {:<6} {:<9} {:>10} {:>9} {:>10} {:>6} {:>7} {:>6} {:>6}",
+        "Total", "", "", t.mult_cc, t.mult_cp, t.add_cc, t.tlu, t.act_gates, t.switch_b2t, t.switch_t2b
+    );
+    println!("switches: {} (valid: {})", plan.switch_count(), plan.validate());
+}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("info");
     let flag = |name: &str| args.iter().any(|a| a == name);
+    let opt_str = |name: &str| -> Option<String> {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+    };
     let opt = |name: &str, default: usize| -> usize {
         args.iter()
             .position(|a| a == name)
@@ -37,12 +106,41 @@ fn main() -> anyhow::Result<()> {
             println!("threads available: {}", glyph::coordinator::max_threads());
         }
         "plan" => {
-            let plan = scheduler::mlp_plan();
-            println!("{:<16} {:<6} switch", "step", "system");
-            for s in &plan.steps {
-                println!("{:<16} {:<6?} {}", s.name, s.system, s.switch);
+            // paper mini-batch width unless overridden
+            let batch = opt("--batch", 60);
+            if flag("--cnn") {
+                let config = CnnConfig::paper_mnist();
+                let (c1, c2) = config.conv_channels;
+                let bn1 = glyph::nn::batchnorm::BnLayer {
+                    gain: vec![1; c1],
+                    bias: vec![0; c1],
+                    gain_shift: 0,
+                };
+                let bn2 = glyph::nn::batchnorm::BnLayer {
+                    gain: vec![1; c2],
+                    bias: vec![0; c2],
+                    gain_shift: 0,
+                };
+                let plan = config
+                    .builder(None, bn1, None, bn2)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?
+                    .compile(batch)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!("compiled transfer-CNN schedule (paper MNIST shape, batch {batch}):");
+                print_plan(&plan);
+            } else {
+                let config = match opt_str("--dims") {
+                    Some(spec) => mlp_config_for(parse_dims(&spec)?, 18, 8),
+                    None => MlpConfig::paper_mlp(),
+                };
+                let plan = config
+                    .builder()
+                    .map_err(|e| anyhow::anyhow!("{e}"))?
+                    .compile(batch)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!("compiled MLP schedule (dims {:?}, batch {batch}):", config.dims);
+                print_plan(&plan);
             }
-            println!("switches: {} (valid: {})", plan.switch_count(), plan.validate());
         }
         "microbench" => {
             let test_scale = !flag("--full");
@@ -75,37 +173,43 @@ fn main() -> anyhow::Result<()> {
         "train-mlp" => {
             let steps = opt("--steps", 2);
             let batch = opt("--batch", 4);
-            eprintln!("encrypted MLP training, test profile, batch={batch}, steps={steps}");
+            let dims = match opt_str("--dims") {
+                Some(spec) => parse_dims(&spec)?,
+                None => vec![16, 8, 4],
+            };
+            let (in_dim, classes) = (dims[0], *dims.last().unwrap());
+            eprintln!(
+                "encrypted MLP training, test profile, dims={dims:?}, batch={batch}, steps={steps}"
+            );
             let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260710);
             let mut rng = glyph::math::GlyphRng::new(1);
-            let mut mlp = GlyphMlp::new_random(MlpConfig::tiny(16, 8, 4), &mut client, &mut rng);
+            let config = mlp_config_for(dims, engine.frac_bits(), 3);
+            let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng, &engine)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
             let ds = glyph::data::synthetic_digits(batch * steps, 5, "cli");
             for step in 0..steps {
-                // 4×4 center crop as 16 features
-                let xs: Vec<Vec<i64>> = (0..16)
+                // sample in_dim pixels evenly across the 28×28 image
+                let xs: Vec<Vec<i64>> = (0..in_dim)
                     .map(|f| {
+                        let px = if in_dim > 1 { f * 783 / (in_dim - 1) } else { 0 };
                         (0..batch)
-                            .map(|b| {
-                                let img = ds.image_i8(step * batch + b);
-                                let (y, x) = (12 + f / 4, 12 + f % 4);
-                                img[y * 28 + x]
-                            })
+                            .map(|b| ds.image_i8(step * batch + b)[px])
                             .collect()
                     })
                     .collect();
                 let x_cts = xs.iter().map(|v| client.encrypt_batch(v, 0)).collect();
-                let x = EncTensor::new(x_cts, vec![16], PackOrder::Forward, 0);
-                let labels: Vec<Vec<i64>> = (0..4)
+                let x = EncTensor::new(x_cts, vec![in_dim], PackOrder::Forward, 0);
+                let labels: Vec<Vec<i64>> = (0..classes)
                     .map(|k| {
                         let mut v: Vec<i64> = (0..batch)
-                            .map(|b| if ds.labels[step * batch + b] % 4 == k as usize { 127 } else { 0 })
+                            .map(|b| if ds.labels[step * batch + b] % classes == k { 127 } else { 0 })
                             .collect();
                         v.reverse();
                         v
                     })
                     .collect();
                 let lab_cts = labels.iter().map(|v| client.encrypt_batch(v, 0)).collect();
-                let lab = EncTensor::new(lab_cts, vec![4], PackOrder::Reversed, 0);
+                let lab = EncTensor::new(lab_cts, vec![classes], PackOrder::Reversed, 0);
                 let t0 = std::time::Instant::now();
                 mlp.train_step(&x, &lab, &engine);
                 println!("step {step}: {:.2}s  {}", t0.elapsed().as_secs_f64(), engine.counter.snapshot());

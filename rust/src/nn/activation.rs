@@ -9,8 +9,14 @@
 //! BGV.
 
 use super::engine::GlyphEngine;
+use super::layer::{
+    relu_error_ops, relu_forward_ops, softmax_error_ops, softmax_forward_ops, Layer,
+    LayerPlanEntry, LayerState,
+};
+use super::loss::quadratic_loss_delta;
 use super::tensor::{EncTensor, PackOrder};
 use crate::coordinator::executor::GlyphPool;
+use crate::coordinator::scheduler::LayerKind;
 use crate::switch::extract::bit_position;
 use crate::switch::SWITCH_BITS;
 use crate::tfhe::{LweCiphertext, TestPoly};
@@ -159,6 +165,114 @@ pub fn irelu_layer(
 }
 
 // ---------------------------------------------------------------------------
+// Network units (the `Layer` trait face of the activations)
+// ---------------------------------------------------------------------------
+
+/// TFHE ReLU as a network unit: Algorithm 1 forward, Algorithm 2 backward,
+/// with the per-layer quantization shifts carried in the unit itself.
+pub struct ReluLayer {
+    /// Bits the forward activation drops from the MAC scale.
+    pub act_shift: u32,
+    /// Bits the backward iReLU drops from the error scale.
+    pub err_shift: u32,
+}
+
+impl Layer for ReluLayer {
+    fn plan_entry(&self, in_shape: &[usize], batch: usize) -> LayerPlanEntry {
+        let cts: usize = in_shape.iter().product();
+        LayerPlanEntry {
+            kind: LayerKind::Relu,
+            out_shape: in_shape.to_vec(),
+            forward: relu_forward_ops(cts, batch),
+            error: Some(relu_error_ops(cts, batch)),
+            gradient: None,
+        }
+    }
+
+    fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        let (a, st) = relu_layer(engine, x, self.act_shift, PackOrder::Forward);
+        (a, LayerState::Relu(st))
+    }
+
+    fn backward_error(
+        &self,
+        delta: &EncTensor,
+        state: &LayerState,
+        engine: &GlyphEngine,
+    ) -> EncTensor {
+        let st = match state {
+            LayerState::Relu(s) => s,
+            _ => unreachable!("ReLU backward needs its forward sign state"),
+        };
+        irelu_layer(engine, delta, st, self.err_shift)
+    }
+}
+
+/// The Figure-4 softmax output unit: forward runs the MUX-tree lookup per
+/// lane and repacks reverse-order for the loss; backward computes the
+/// quadratic-loss derivative δ = d − t from the stored forward output
+/// (paper Eq. 6 — one SubCC per class, kept on BGV).
+pub struct SoftmaxLayer {
+    pub unit: SoftmaxUnit,
+    /// Quantization shift of the incoming logits (the producing FC layer's
+    /// activation shift).
+    pub logit_shift: u32,
+}
+
+impl Layer for SoftmaxLayer {
+    fn plan_entry(&self, in_shape: &[usize], batch: usize) -> LayerPlanEntry {
+        let cts: usize = in_shape.iter().product();
+        LayerPlanEntry {
+            kind: LayerKind::Softmax,
+            out_shape: in_shape.to_vec(),
+            forward: softmax_forward_ops(cts, batch, self.unit.plan_gates_per_lane()),
+            error: Some(softmax_error_ops(cts)),
+            gradient: None,
+        }
+    }
+
+    fn forward(&self, u: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        let frac = engine.frac_bits();
+        let pre_shift = frac - self.logit_shift;
+        let in_positions = u.order.positions(engine.batch);
+        let out_positions = PackOrder::Reversed.positions(engine.batch);
+        let cts = u
+            .cts
+            .iter()
+            .map(|ct| {
+                let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
+                // all lanes' MUX trees fan across the pool in one call
+                let lane_slices: Vec<&[LweCiphertext]> = lanes_bits
+                    .iter()
+                    .map(|bits| &bits[..self.unit.in_bits])
+                    .collect();
+                let outs = self.unit.evaluate_mux_many(engine, &lane_slices);
+                engine.switch_to_bgv(&outs, &out_positions)
+            })
+            .collect();
+        let d = EncTensor::new(cts, u.shape.to_vec(), PackOrder::Reversed, 0);
+        (d.clone(), LayerState::Output(d))
+    }
+
+    fn backward_error(
+        &self,
+        labels_rev: &EncTensor,
+        state: &LayerState,
+        engine: &GlyphEngine,
+    ) -> EncTensor {
+        let d = match state {
+            LayerState::Output(d) => d,
+            _ => unreachable!("softmax backward needs its forward output"),
+        };
+        quadratic_loss_delta(d, labels_rev, engine)
+    }
+
+    fn is_output_unit(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Softmax (Figure 4)
 // ---------------------------------------------------------------------------
 
@@ -292,6 +406,47 @@ impl SoftmaxUnit {
         }
     }
 
+    /// Exact bootstrapped-gate count of [`Self::evaluate_mux_many`] per
+    /// lane, derived at compile time by folding the (plaintext) table
+    /// constants symbolically: every surviving MUX costs 2 bootstraps, every
+    /// surviving output bit one weighted-AND recomposition, NOTs are free.
+    /// This is what `plan_entry` feeds the compiled `Plan`, so the
+    /// plan/execution consistency test can assert live counters exactly.
+    pub fn plan_gates_per_lane(&self) -> u64 {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Node {
+            Const(bool),
+            Sym,
+        }
+        let mut gates = 0u64;
+        for j in 0..8u32 {
+            let mut level: Vec<Node> =
+                self.entries.iter().map(|&e| Node::Const((e >> j) & 1 == 1)).collect();
+            for _ in 0..self.in_bits {
+                let mut next = Vec::with_capacity(level.len() / 2);
+                for pair in level.chunks(2) {
+                    let node = match (pair[0], pair[1]) {
+                        (Node::Const(a), Node::Const(b)) if a == b => Node::Const(a),
+                        // (0,1) is the selection bit itself, (1,0) its
+                        // bootstrap-free NOT — no gates either way
+                        (Node::Const(false), Node::Const(true))
+                        | (Node::Const(true), Node::Const(false)) => Node::Sym,
+                        _ => {
+                            gates += 2; // gate_mux: 2 bootstraps
+                            Node::Sym
+                        }
+                    };
+                    next.push(node);
+                }
+                level = next;
+            }
+            if level[0] != Node::Const(false) {
+                gates += 1; // weighted-AND recomposition of the live bit
+            }
+        }
+        gates
+    }
+
     /// Fast mode: one programmable bootstrap per neuron (an ablation over
     /// the paper's MUX tree). The logit must fit in `in_bits−1` bits; an
     /// offset moves the full signed range into the positive half-torus.
@@ -396,6 +551,51 @@ mod tests {
         let packed = eng.switch_to_bgv(&[out], &[0]);
         let got = client.decrypt_batch(&packed, 1, 0);
         assert_eq!(got, vec![unit.entries[v] as i64]);
+    }
+
+    #[test]
+    fn softmax_plan_gate_count_matches_live_counter() {
+        let (eng, mut client) = engine();
+        let unit = SoftmaxUnit { in_bits: 3, entries: vec![10, 20, 30, 40, 50, 60, 70, 80] };
+        let v = 3usize;
+        let byte = (v as i64) << 5;
+        let signed = if byte >= 128 { byte - 256 } else { byte };
+        let ct = client.encrypt_batch(&[signed << eng.frac_bits()], 0);
+        let bits_all = eng.switch_to_bits(&ct, &[0], 0);
+        let before = eng.counter.snapshot().act_gates;
+        let _ = unit.evaluate_mux(&eng, &bits_all[0][..3]);
+        let live = eng.counter.snapshot().act_gates - before;
+        assert_eq!(live, unit.plan_gates_per_lane());
+        // and the full logistic table used by real networks
+        let logistic = SoftmaxUnit::logistic(3, 2);
+        let before = eng.counter.snapshot().act_gates;
+        let _ = logistic.evaluate_mux(&eng, &bits_all[0][..3]);
+        let live = eng.counter.snapshot().act_gates - before;
+        assert_eq!(live, logistic.plan_gates_per_lane());
+    }
+
+    #[test]
+    fn relu_unit_layer_roundtrip() {
+        use crate::nn::layer::Layer;
+        let (eng, mut client) = engine();
+        let vals: Vec<i64> = vec![21, -4, 0, 7];
+        let ct = client.encrypt_batch(&vals, 0);
+        let u = EncTensor::new(vec![ct], vec![1], PackOrder::Forward, 0);
+        let unit = ReluLayer { act_shift: 0, err_shift: 0 };
+        let entry = unit.plan_entry(&[1], 4);
+        assert_eq!(entry.forward.switch_b2t, 1);
+        assert_eq!(entry.forward.act_gates, 4 * 7);
+        let (a, state) = Layer::forward(&unit, &u, &eng);
+        assert_eq!(
+            client.decrypt_batch(&a.cts[0], 4, 0),
+            vals.iter().map(|&v| v.max(0)).collect::<Vec<_>>()
+        );
+        let mut d_rev = vec![5i64, 5, 5, 5];
+        d_rev.reverse();
+        let delta = EncTensor::new(vec![client.encrypt_batch(&d_rev, 0)], vec![1], PackOrder::Reversed, 0);
+        let out = unit.backward_error(&delta, &state, &eng);
+        let got: Vec<i64> = client.decrypt_batch(&out.cts[0], 4, 0).into_iter().rev().collect();
+        assert_eq!(got, vec![5, 0, 5, 5]);
     }
 
     #[test]

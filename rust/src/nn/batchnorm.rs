@@ -4,8 +4,10 @@
 //! (the paper's Table-4 "BN" rows).
 
 use super::engine::GlyphEngine;
+use super::layer::{bn_forward_ops, Layer, LayerPlanEntry, LayerState};
 use super::tensor::EncTensor;
 use crate::bgv::Plaintext;
+use crate::coordinator::scheduler::LayerKind;
 
 /// Frozen affine BN over the channel dimension of a CHW tensor.
 pub struct BnLayer {
@@ -57,6 +59,24 @@ impl BnLayer {
             }
         }
         EncTensor::new(cts, x.shape.clone(), x.order, x.shift + self.gain_shift)
+    }
+}
+
+impl Layer for BnLayer {
+    fn plan_entry(&self, in_shape: &[usize], _batch: usize) -> LayerPlanEntry {
+        assert_eq!(in_shape.len(), 3, "BN expects CHW");
+        assert_eq!(in_shape[0], self.gain.len(), "BN channel mismatch");
+        LayerPlanEntry {
+            kind: LayerKind::BatchNorm,
+            out_shape: in_shape.to_vec(),
+            forward: bn_forward_ops(in_shape.iter().product()),
+            error: None, // frozen affine BN folds into neighbours under TL
+            gradient: None,
+        }
+    }
+
+    fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        (BnLayer::forward(self, x, engine), LayerState::None)
     }
 }
 

@@ -7,9 +7,11 @@
 //! by the ablation benches.
 
 use super::engine::GlyphEngine;
+use super::layer::{conv_forward_ops, Layer, LayerPlanEntry, LayerState};
 use super::linear::Weight;
 use super::tensor::EncTensor;
 use crate::bgv::{BgvCiphertext, Plaintext};
+use crate::coordinator::scheduler::LayerKind;
 
 /// A 2-D convolution `out[oc] = Σ_ic k[oc][ic] * x[ic]`, valid, stride 1.
 pub struct ConvLayer {
@@ -111,6 +113,35 @@ impl ConvLayer {
             }
         }
         EncTensor::new(cts, vec![self.out_ch, oh, ow], x.order, x.shift)
+    }
+}
+
+impl ConvLayer {
+    /// Whether the kernels are encrypted (the from-scratch ablation) or
+    /// frozen plaintext (transfer learning).
+    pub fn is_encrypted(&self) -> bool {
+        matches!(self.kernels.first().map(|oc| &oc[0][0][0]), Some(Weight::Enc(_)))
+    }
+}
+
+impl Layer for ConvLayer {
+    fn plan_entry(&self, in_shape: &[usize], _batch: usize) -> LayerPlanEntry {
+        assert_eq!(in_shape.len(), 3, "conv expects CHW");
+        assert_eq!(in_shape[0], self.in_ch, "conv channel mismatch");
+        let (oh, ow) = self.out_hw(in_shape[1], in_shape[2]);
+        LayerPlanEntry {
+            // encrypted kernels run forward-only (ablation); conv
+            // backprop is out of scope, so the plan never trains a conv
+            kind: LayerKind::Conv { trainable: false },
+            out_shape: vec![self.out_ch, oh, ow],
+            forward: conv_forward_ops(self.in_ch, self.out_ch, self.k, oh, ow, self.is_encrypted()),
+            error: None,
+            gradient: None,
+        }
+    }
+
+    fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        (ConvLayer::forward(self, x, engine), LayerState::None)
     }
 }
 

@@ -1,0 +1,291 @@
+//! The [`Layer`] trait: the uniform unit interface behind `nn::network`.
+//!
+//! Every network unit — FC, conv, batch-norm, pooling, ReLU, softmax, the
+//! FHESGD sigmoid-TLU — implements the same four-method surface
+//! (`plan_entry`, `forward`, `backward_error`, `gradients`/
+//! `apply_gradients`). `plan_entry` reports the unit's scheduler kind,
+//! output geometry and *exact* per-step homomorphic-op counts, which is how
+//! `Network::compile` produces the executable `scheduler::Plan`: the op
+//! totals of a compiled plan are asserted against live `OpCounter`
+//! snapshots by the plan/execution consistency test.
+
+use super::engine::GlyphEngine;
+use super::tensor::EncTensor;
+use crate::bgv::BgvCiphertext;
+use crate::coordinator::scheduler::{LayerKind, StepOps};
+use crate::switch::SWITCH_BITS;
+
+/// Per-layer forward state retained for the backward pass.
+pub enum LayerState {
+    /// Stateless unit.
+    None,
+    /// ReLU sign bits (the Algorithm-2 iReLU mask).
+    Relu(super::activation::ReluState),
+    /// Output-unit forward result (softmax distribution / sigmoid
+    /// activations), consumed by the loss-derivative error step and by the
+    /// sigmoid-derivative lookup.
+    Output(EncTensor),
+}
+
+/// Gradient accumulator produced by a trainable layer: `grads[out][in]`.
+pub type LayerGrads = Vec<Vec<BgvCiphertext>>;
+
+/// What a unit contributes to the compiled plan.
+#[derive(Clone, Debug)]
+pub struct LayerPlanEntry {
+    pub kind: LayerKind,
+    pub out_shape: Vec<usize>,
+    /// Forward-step op counts for one mini-batch iteration.
+    pub forward: StepOps,
+    /// Error-step op counts (`None`: the unit never propagates an error).
+    pub error: Option<StepOps>,
+    /// Gradient-step op counts (`None`: frozen unit).
+    pub gradient: Option<StepOps>,
+}
+
+/// The uniform unit interface. Implemented by `FcLayer`, `ConvLayer`,
+/// `BnLayer`, `AvgPoolLayer`, `FlattenLayer`, `ReluLayer`, `SoftmaxLayer`
+/// and the FHESGD `SigmoidTluLayer`.
+pub trait Layer {
+    /// Scheduler entry: kind, output geometry and exact op counts for a
+    /// mini-batch of `batch` samples entering with `in_shape`.
+    fn plan_entry(&self, in_shape: &[usize], batch: usize) -> LayerPlanEntry;
+
+    /// Run the unit forward, returning the output tensor and whatever state
+    /// the backward pass will need.
+    fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState);
+
+    /// Propagate the error through this unit. `delta` is the error arriving
+    /// from above — for output units (softmax / output sigmoid) it is the
+    /// reverse-packed one-hot label tensor, and the unit computes the
+    /// loss derivative from its stored forward state.
+    ///
+    /// Units whose `plan_entry` reports `error: None` never appear in a
+    /// compiled backward plan, so the default is unreachable.
+    fn backward_error(
+        &self,
+        _delta: &EncTensor,
+        _state: &LayerState,
+        _engine: &GlyphEngine,
+    ) -> EncTensor {
+        unreachable!("unit emits no error step; backward truncates below the trainable head")
+    }
+
+    /// Weight gradients (`None` for non-trainable units).
+    fn gradients(
+        &self,
+        _below: &EncTensor,
+        _delta: &EncTensor,
+        _engine: &GlyphEngine,
+    ) -> Option<LayerGrads> {
+        None
+    }
+
+    /// SGD update from a previous [`Layer::gradients`] result.
+    fn apply_gradients(&mut self, _grads: &LayerGrads, _grad_shift: u32, _engine: &GlyphEngine) {}
+
+    /// Whether this unit's error step computes a *loss derivative* from the
+    /// label tensor (softmax / output sigmoid). `Network::train_step`
+    /// refuses to train a network whose last unit is not an output unit —
+    /// otherwise raw labels would silently flow backward as if they were an
+    /// error signal.
+    fn is_output_unit(&self) -> bool {
+        false
+    }
+
+    /// Inspection downcast (weight snapshots in tests/examples).
+    fn as_fc(&self) -> Option<&super::linear::FcLayer> {
+        None
+    }
+}
+
+/// Shape-only CHW→vector adapter in front of the FC head (zero
+/// homomorphic ops; exists so compiled CNN plans stay a linear walk).
+pub struct FlattenLayer;
+
+impl Layer for FlattenLayer {
+    fn plan_entry(&self, in_shape: &[usize], _batch: usize) -> LayerPlanEntry {
+        LayerPlanEntry {
+            kind: LayerKind::Flatten,
+            out_shape: vec![in_shape.iter().product()],
+            forward: StepOps::default(),
+            error: None,
+            gradient: None,
+        }
+    }
+
+    fn forward(&self, x: &EncTensor, _engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        let flat = EncTensor::new(x.cts.clone(), vec![x.len()], x.order, x.shift);
+        (flat, LayerState::None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact per-step op counts, shared between the unit `plan_entry` impls and
+// the weight-free `NetworkBuilder::compile` path. Each formula mirrors the
+// corresponding execution code 1:1 (see the cited functions).
+// ---------------------------------------------------------------------------
+
+const BITS: u64 = SWITCH_BITS as u64;
+
+/// `FcLayer::forward`: out MACs of in terms each (acc add is `in−1`),
+/// plus one AddCC per *encrypted* bias term (`enc_bias_terms`; plaintext
+/// biases are free `add_plain`s). Both plan paths — the weight-free
+/// `LayerSpec` compile and the unit's `plan_entry` — must call this one
+/// formula so they can never drift.
+pub fn fc_forward_ops(in_dim: usize, out_dim: usize, enc: bool, enc_bias_terms: usize) -> StepOps {
+    let macs = (in_dim * out_dim) as u64;
+    StepOps {
+        mult_cc: if enc { macs } else { 0 },
+        mult_cp: if enc { 0 } else { macs },
+        add_cc: ((in_dim - 1) * out_dim) as u64 + enc_bias_terms as u64,
+        ..Default::default()
+    }
+}
+
+/// `FcLayer::backward_error`: in sums of out terms each.
+pub fn fc_error_ops(in_dim: usize, out_dim: usize, enc: bool) -> StepOps {
+    let macs = (in_dim * out_dim) as u64;
+    StepOps {
+        mult_cc: if enc { macs } else { 0 },
+        mult_cp: if enc { 0 } else { macs },
+        add_cc: ((out_dim - 1) * in_dim) as u64,
+        ..Default::default()
+    }
+}
+
+/// `FcLayer::gradients` + `apply_gradients`: one convolution-trick MultCC
+/// per weight, then the per-weight requantization round trip through the
+/// switch (1 B2T of one position, 8 weighted gates, 1 T2B, 1 SubCC).
+pub fn fc_gradient_ops(in_dim: usize, out_dim: usize) -> StepOps {
+    let w = (in_dim * out_dim) as u64;
+    StepOps {
+        mult_cc: w,
+        add_cc: w,
+        act_gates: w * BITS,
+        extract_pbs: w * BITS,
+        switch_b2t: w,
+        switch_t2b: w,
+        refresh: w,
+        ..Default::default()
+    }
+}
+
+/// `ConvLayer::forward`: `out_ch·oh·ow` outputs of `in_ch·k²` taps each.
+pub fn conv_forward_ops(in_ch: usize, out_ch: usize, k: usize, oh: usize, ow: usize, enc: bool) -> StepOps {
+    let outputs = (out_ch * oh * ow) as u64;
+    let taps = (in_ch * k * k) as u64;
+    StepOps {
+        mult_cc: if enc { outputs * taps } else { 0 },
+        mult_cp: if enc { 0 } else { outputs * taps },
+        add_cc: outputs * (taps - 1),
+        ..Default::default()
+    }
+}
+
+/// `BnLayer::forward`: one MultCP per ciphertext (the AddCP is free).
+pub fn bn_forward_ops(count: usize) -> StepOps {
+    StepOps { mult_cp: count as u64, ..Default::default() }
+}
+
+/// `avg_pool2`: three AddCC per pooled output.
+pub fn pool_forward_ops(out_count: usize) -> StepOps {
+    StepOps { add_cc: (out_count * 3) as u64, ..Default::default() }
+}
+
+/// `activation::relu_layer`: per ciphertext one B2T (8 extraction PBS per
+/// lane), 7 weighted ANDs per lane (Algorithm 1 drops the sign bit), one
+/// packed T2B.
+pub fn relu_forward_ops(cts: usize, batch: usize) -> StepOps {
+    let c = cts as u64;
+    let lanes = (cts * batch) as u64;
+    StepOps {
+        relu_values: c,
+        act_gates: lanes * (BITS - 1),
+        extract_pbs: lanes * BITS,
+        switch_b2t: c,
+        switch_t2b: c,
+        refresh: c,
+        ..Default::default()
+    }
+}
+
+/// `activation::irelu_layer`: like the forward pass but all 8 bits are
+/// masked (Algorithm 2 keeps the sign).
+pub fn relu_error_ops(cts: usize, batch: usize) -> StepOps {
+    let c = cts as u64;
+    let lanes = (cts * batch) as u64;
+    StepOps {
+        relu_values: c,
+        act_gates: lanes * BITS,
+        extract_pbs: lanes * BITS,
+        switch_b2t: c,
+        switch_t2b: c,
+        refresh: c,
+        ..Default::default()
+    }
+}
+
+/// `SoftmaxLayer::forward`: per ciphertext one B2T, `gates_per_lane`
+/// bootstraps per lane (MUX trees + weighted recomposition; computed by
+/// `SoftmaxUnit::plan_gates_per_lane` from the table constants), one T2B.
+pub fn softmax_forward_ops(cts: usize, batch: usize, gates_per_lane: u64) -> StepOps {
+    let c = cts as u64;
+    StepOps {
+        softmax_values: c,
+        act_gates: (cts * batch) as u64 * gates_per_lane,
+        extract_pbs: (cts * batch) as u64 * BITS,
+        switch_b2t: c,
+        switch_t2b: c,
+        refresh: c,
+        ..Default::default()
+    }
+}
+
+/// Softmax error step = the quadratic-loss derivative (Eq. 6): one SubCC
+/// per class.
+pub fn softmax_error_ops(cts: usize) -> StepOps {
+    StepOps { add_cc: cts as u64, ..Default::default() }
+}
+
+/// FHESGD sigmoid TLU unit: forward is one lookup (2 refresh-substituted
+/// domain conversions) per neuron; the error step is one SubCC per class
+/// for the output unit, else one derivative lookup + one MultCC per
+/// neuron. Returns `(forward, error)`.
+pub fn sigmoid_tlu_ops(cts: usize, output_unit: bool) -> (StepOps, StepOps) {
+    let c = cts as u64;
+    let forward = StepOps { tlu: c, refresh: 2 * c, ..Default::default() };
+    let error = if output_unit {
+        StepOps { add_cc: c, ..Default::default() }
+    } else {
+        StepOps { tlu: c, refresh: 2 * c, mult_cc: c, ..Default::default() }
+    };
+    (forward, error)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_ops_mirror_execution_formulas() {
+        let f = fc_forward_ops(3, 4, true, 0);
+        assert_eq!((f.mult_cc, f.add_cc), (12, 8));
+        let biased = fc_forward_ops(3, 4, true, 4);
+        assert_eq!(biased.add_cc, 12);
+        let e = fc_error_ops(4, 2, true);
+        assert_eq!((e.mult_cc, e.add_cc), (8, 4));
+        let g = fc_gradient_ops(3, 4);
+        assert_eq!((g.mult_cc, g.switch_b2t, g.act_gates), (12, 12, 96));
+        let frozen = fc_forward_ops(5, 2, false, 0);
+        assert_eq!((frozen.mult_cc, frozen.mult_cp), (0, 10));
+    }
+
+    #[test]
+    fn relu_ops_scale_with_batch() {
+        let f = relu_forward_ops(4, 2);
+        assert_eq!((f.switch_b2t, f.act_gates, f.extract_pbs), (4, 56, 64));
+        let e = relu_error_ops(4, 2);
+        assert_eq!(e.act_gates, 64);
+    }
+}

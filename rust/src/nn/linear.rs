@@ -9,8 +9,12 @@
 //! exactly the `FC-gradient … BGV-TFHE` rows of the paper's Table 3.
 
 use super::engine::GlyphEngine;
+use super::layer::{
+    fc_error_ops, fc_forward_ops, fc_gradient_ops, Layer, LayerGrads, LayerPlanEntry, LayerState,
+};
 use super::tensor::{EncTensor, PackOrder};
 use crate::bgv::{BgvCiphertext, Plaintext};
+use crate::coordinator::scheduler::LayerKind;
 use crate::switch::extract::bit_position;
 use crate::tfhe::LweCiphertext;
 
@@ -186,6 +190,63 @@ impl FcLayer {
                 }
             }
         }
+    }
+}
+
+impl FcLayer {
+    /// Whether the layer trains (encrypted weights) or is frozen plaintext.
+    pub fn is_trainable(&self) -> bool {
+        matches!(self.w.first().and_then(|row| row.first()), Some(Weight::Enc(_)))
+    }
+}
+
+impl Layer for FcLayer {
+    fn plan_entry(&self, in_shape: &[usize], _batch: usize) -> LayerPlanEntry {
+        let in_dim: usize = in_shape.iter().product();
+        assert_eq!(in_dim, self.in_dim, "FC input width mismatch");
+        let enc = self.is_trainable();
+        let enc_bias_terms = self
+            .bias
+            .as_ref()
+            .map_or(0, |b| b.iter().filter(|w| matches!(w, Weight::Enc(_))).count());
+        let forward = fc_forward_ops(self.in_dim, self.out_dim, enc, enc_bias_terms);
+        LayerPlanEntry {
+            kind: LayerKind::Fc { trainable: enc },
+            out_shape: vec![self.out_dim],
+            forward,
+            error: Some(fc_error_ops(self.in_dim, self.out_dim, enc)),
+            gradient: if enc { Some(fc_gradient_ops(self.in_dim, self.out_dim)) } else { None },
+        }
+    }
+
+    fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        (FcLayer::forward(self, x, engine), LayerState::None)
+    }
+
+    fn backward_error(
+        &self,
+        delta: &EncTensor,
+        _state: &LayerState,
+        engine: &GlyphEngine,
+    ) -> EncTensor {
+        FcLayer::backward_error(self, delta, engine)
+    }
+
+    fn gradients(
+        &self,
+        below: &EncTensor,
+        delta: &EncTensor,
+        engine: &GlyphEngine,
+    ) -> Option<LayerGrads> {
+        Some(FcLayer::gradients(self, below, delta, engine))
+    }
+
+    fn apply_gradients(&mut self, grads: &LayerGrads, grad_shift: u32, engine: &GlyphEngine) {
+        FcLayer::apply_gradients(self, grads, grad_shift, engine);
+    }
+
+    fn as_fc(&self) -> Option<&FcLayer> {
+        Some(self)
     }
 }
 

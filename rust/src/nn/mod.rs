@@ -15,16 +15,25 @@
 //! * [`loss`] — the quadratic loss derivative (Eq. 6).
 //! * [`quantize`] — plain-side SWALP-style 8-bit quantization helpers used
 //!   by data preparation and the reference pipelines.
+//! * [`layer`] — the [`layer::Layer`] trait every unit implements
+//!   (`plan_entry`/`forward`/`backward_error`/`gradients`).
+//! * [`network`] — [`network::NetworkBuilder`] → [`network::Network`]: the
+//!   fluent, validated model-construction API whose compiled
+//!   `scheduler::Plan` drives execution, the cost model and the CLI.
 
 pub mod activation;
 pub mod batchnorm;
 pub mod conv;
 pub mod engine;
+pub mod layer;
 pub mod linear;
 pub mod loss;
+pub mod network;
 pub mod pool;
 pub mod quantize;
 pub mod tensor;
 
 pub use engine::{ClientKeys, GlyphEngine};
+pub use layer::{Layer, LayerGrads, LayerPlanEntry, LayerState};
+pub use network::{ForwardPass, LayerSpec, Network, NetworkBuilder, NetworkError};
 pub use tensor::{EncTensor, PackOrder};

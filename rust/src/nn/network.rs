@@ -1,0 +1,842 @@
+//! Plan-driven model construction: [`NetworkBuilder`] → [`Network`].
+//!
+//! A network is declared as a fluent chain of [`LayerSpec`]s
+//! (`.fc(128).relu(8, 7).fc(10).softmax(3, 7)` / `.conv_frozen(..)`), with
+//! every quantization shift carried by the layer spec it belongs to —
+//! replacing the parallel `act_shifts`/`err_shifts` vectors of the old
+//! `MlpConfig`, whose silent index clamping is now a descriptive
+//! [`NetworkError`] at construction time.
+//!
+//! `build` materializes the units (encrypting trainable weights under the
+//! client key) and compiles the executable `scheduler::Plan` through each
+//! unit's `Layer::plan_entry`. Execution *walks that plan*: forward runs
+//! the plan's forward steps in order, `train_step` runs the backward steps
+//! the plan emitted (error propagation exactly where the plan says a
+//! trainable layer needs the signal, gradient steps only for trainable
+//! units), so the plan's per-step op counts are the single source of truth
+//! shared with the cost model and the CLI.
+//!
+//! [`NetworkBuilder::compile`] produces the same plan *without* key
+//! material or weights (shape-only), which is what `glyph plan` uses to
+//! print paper-scale schedules instantly.
+
+use super::activation::{ReluLayer, SoftmaxLayer, SoftmaxUnit};
+use super::batchnorm::BnLayer;
+use super::conv::ConvLayer;
+use super::engine::{ClientKeys, GlyphEngine};
+use super::layer::{
+    bn_forward_ops, conv_forward_ops, fc_error_ops, fc_forward_ops, fc_gradient_ops,
+    pool_forward_ops, relu_error_ops, relu_forward_ops, softmax_error_ops, softmax_forward_ops,
+    FlattenLayer, Layer, LayerGrads, LayerPlanEntry, LayerState,
+};
+use super::linear::FcLayer;
+use super::pool::AvgPoolLayer;
+use super::tensor::EncTensor;
+use crate::coordinator::scheduler::{LayerKind, Plan, PlanLayer, StepPhase};
+use crate::math::rng::GlyphRng;
+use crate::switch::SWITCH_BITS;
+use std::fmt;
+
+/// Construction-time validation errors (no silent clamping anywhere).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetworkError {
+    /// The builder holds no layers.
+    EmptyNetwork,
+    /// A layer's input geometry does not fit.
+    Shape { unit: String, detail: String },
+    /// A quantization-shift schedule does not match the architecture or
+    /// exceeds the engine's fixed-point budget.
+    ShiftSchedule { detail: String },
+    /// Provided weights do not match the declared geometry, or are missing.
+    Weights { unit: String, detail: String },
+    /// Structurally invalid layer ordering.
+    Topology { detail: String },
+}
+
+impl fmt::Display for NetworkError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetworkError::EmptyNetwork => write!(f, "network has no layers"),
+            NetworkError::Shape { unit, detail } => write!(f, "{unit}: {detail}"),
+            NetworkError::ShiftSchedule { detail } => write!(f, "shift schedule: {detail}"),
+            NetworkError::Weights { unit, detail } => write!(f, "{unit} weights: {detail}"),
+            NetworkError::Topology { detail } => write!(f, "topology: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for NetworkError {}
+
+/// One declared layer. Quantization shifts live on the spec that applies
+/// them (the unified schedule the builder validates as a whole).
+pub enum LayerSpec {
+    /// Fully-connected layer. `init: None` → random 8-bit weights drawn at
+    /// build time; `enc` selects encrypted-trainable vs frozen-plaintext.
+    Fc { out: usize, init: Option<Vec<Vec<i64>>>, enc: bool },
+    /// Convolution (`kernels[oc][ic][kh][kw]`). `init: None` is a
+    /// shape-only placeholder, valid for `compile` but not `build`.
+    Conv { out_ch: usize, k: usize, init: Option<Vec<Vec<Vec<Vec<i64>>>>>, enc: bool },
+    /// Frozen affine batch-norm.
+    BatchNorm { bn: BnLayer },
+    /// 2×2 stride-2 average pooling.
+    AvgPool,
+    /// CHW → vector adapter (zero homomorphic ops).
+    Flatten,
+    /// TFHE ReLU with its forward/backward quantization shifts.
+    Relu { act_shift: u32, err_shift: u32 },
+    /// Figure-4 softmax output unit (must be the last layer).
+    Softmax { bits: usize, logit_shift: u32 },
+    /// An arbitrary pre-built unit (e.g. the FHESGD sigmoid TLU).
+    Custom { unit: Box<dyn Layer> },
+}
+
+impl LayerSpec {
+    /// Weight-free plan entry: the same kinds/shapes/op counts the
+    /// materialized unit's `Layer::plan_entry` reports (shared helper
+    /// formulas guarantee it).
+    fn plan_entry(
+        &self,
+        shape: &[usize],
+        batch: usize,
+        is_last: bool,
+    ) -> Result<LayerPlanEntry, NetworkError> {
+        match self {
+            LayerSpec::Fc { out, init, enc } => {
+                if shape.len() != 1 {
+                    return Err(NetworkError::Shape {
+                        unit: "fc".into(),
+                        detail: format!(
+                            "FC needs a flat input vector, got shape {shape:?} — insert .flatten() first"
+                        ),
+                    });
+                }
+                let in_dim = shape[0];
+                if in_dim == 0 || *out == 0 {
+                    return Err(NetworkError::Shape {
+                        unit: "fc".into(),
+                        detail: format!("zero-width FC ({in_dim}→{out})"),
+                    });
+                }
+                if let Some(w) = init {
+                    if w.len() != *out || w.iter().any(|row| row.len() != in_dim) {
+                        return Err(NetworkError::Weights {
+                            unit: "fc".into(),
+                            detail: format!(
+                                "expected {out}×{in_dim} weight matrix, got {}×{}",
+                                w.len(),
+                                w.first().map_or(0, Vec::len)
+                            ),
+                        });
+                    }
+                }
+                Ok(LayerPlanEntry {
+                    kind: LayerKind::Fc { trainable: *enc },
+                    out_shape: vec![*out],
+                    // builder-made FC layers carry no bias (0 bias terms)
+                    forward: fc_forward_ops(in_dim, *out, *enc, 0),
+                    error: Some(fc_error_ops(in_dim, *out, *enc)),
+                    gradient: if *enc { Some(fc_gradient_ops(in_dim, *out)) } else { None },
+                })
+            }
+            LayerSpec::Conv { out_ch, k, init, enc } => {
+                if shape.len() != 3 {
+                    return Err(NetworkError::Shape {
+                        unit: "conv".into(),
+                        detail: format!("conv needs a CHW input, got shape {shape:?}"),
+                    });
+                }
+                let (c, h, w) = (shape[0], shape[1], shape[2]);
+                if *out_ch == 0 || *k == 0 || c == 0 {
+                    return Err(NetworkError::Shape {
+                        unit: "conv".into(),
+                        detail: format!(
+                            "zero-size convolution ({c}→{out_ch} channels, {k}×{k} kernel)"
+                        ),
+                    });
+                }
+                if h < *k || w < *k {
+                    return Err(NetworkError::Shape {
+                        unit: "conv".into(),
+                        detail: format!("{k}×{k} kernel does not fit a {h}×{w} input"),
+                    });
+                }
+                if let Some(ker) = init {
+                    let ok = ker.len() == *out_ch
+                        && ker.iter().all(|oc| {
+                            oc.len() == c
+                                && oc.iter().all(|ic| {
+                                    ic.len() == *k && ic.iter().all(|row| row.len() == *k)
+                                })
+                        });
+                    if !ok {
+                        return Err(NetworkError::Weights {
+                            unit: "conv".into(),
+                            detail: format!("expected {out_ch}×{c}×{k}×{k} kernels"),
+                        });
+                    }
+                }
+                let (oh, ow) = (h - k + 1, w - k + 1);
+                Ok(LayerPlanEntry {
+                    kind: LayerKind::Conv { trainable: false },
+                    out_shape: vec![*out_ch, oh, ow],
+                    forward: conv_forward_ops(c, *out_ch, *k, oh, ow, *enc),
+                    error: None,
+                    gradient: None,
+                })
+            }
+            LayerSpec::BatchNorm { bn } => {
+                if shape.len() != 3 {
+                    return Err(NetworkError::Shape {
+                        unit: "batchnorm".into(),
+                        detail: format!("BN needs a CHW input, got shape {shape:?}"),
+                    });
+                }
+                if bn.gain.len() != shape[0] {
+                    return Err(NetworkError::Shape {
+                        unit: "batchnorm".into(),
+                        detail: format!("{} BN channels on a {}-channel tensor", bn.gain.len(), shape[0]),
+                    });
+                }
+                Ok(LayerPlanEntry {
+                    kind: LayerKind::BatchNorm,
+                    out_shape: shape.to_vec(),
+                    forward: bn_forward_ops(shape.iter().product()),
+                    error: None,
+                    gradient: None,
+                })
+            }
+            LayerSpec::AvgPool => {
+                if shape.len() != 3 || shape[1] < 2 || shape[2] < 2 {
+                    return Err(NetworkError::Shape {
+                        unit: "avg_pool".into(),
+                        detail: format!("2×2 pooling needs a CHW input with H,W ≥ 2, got {shape:?}"),
+                    });
+                }
+                let out_shape = vec![shape[0], shape[1] / 2, shape[2] / 2];
+                Ok(LayerPlanEntry {
+                    kind: LayerKind::AvgPool,
+                    forward: pool_forward_ops(out_shape.iter().product()),
+                    out_shape,
+                    error: None,
+                    gradient: None,
+                })
+            }
+            LayerSpec::Flatten => Ok(LayerPlanEntry {
+                kind: LayerKind::Flatten,
+                out_shape: vec![shape.iter().product()],
+                forward: Default::default(),
+                error: None,
+                gradient: None,
+            }),
+            LayerSpec::Relu { .. } => {
+                let cts: usize = shape.iter().product();
+                Ok(LayerPlanEntry {
+                    kind: LayerKind::Relu,
+                    out_shape: shape.to_vec(),
+                    forward: relu_forward_ops(cts, batch),
+                    error: Some(relu_error_ops(cts, batch)),
+                    gradient: None,
+                })
+            }
+            LayerSpec::Softmax { bits, .. } => {
+                if !is_last {
+                    return Err(NetworkError::Topology {
+                        detail: "softmax must be the last layer".into(),
+                    });
+                }
+                if *bits == 0 || *bits > SWITCH_BITS as usize {
+                    return Err(NetworkError::Topology {
+                        detail: format!("softmax width {bits} outside 1..={SWITCH_BITS} bits"),
+                    });
+                }
+                if shape.len() != 1 {
+                    return Err(NetworkError::Shape {
+                        unit: "softmax".into(),
+                        detail: format!("softmax needs a flat logit vector, got shape {shape:?}"),
+                    });
+                }
+                let unit = SoftmaxUnit::logistic(*bits, 4);
+                Ok(LayerPlanEntry {
+                    kind: LayerKind::Softmax,
+                    out_shape: shape.to_vec(),
+                    forward: softmax_forward_ops(shape[0], batch, unit.plan_gates_per_lane()),
+                    error: Some(softmax_error_ops(shape[0])),
+                    gradient: None,
+                })
+            }
+            LayerSpec::Custom { unit } => Ok(unit.plan_entry(shape, batch)),
+        }
+    }
+}
+
+/// The fluent network declaration.
+pub struct NetworkBuilder {
+    in_shape: Vec<usize>,
+    specs: Vec<LayerSpec>,
+    grad_shift: u32,
+}
+
+impl NetworkBuilder {
+    /// Start from an arbitrary input shape.
+    pub fn input(shape: &[usize]) -> Self {
+        NetworkBuilder { in_shape: shape.to_vec(), specs: Vec::new(), grad_shift: 8 }
+    }
+
+    /// Start from a flat feature vector (MLPs).
+    pub fn input_vec(dim: usize) -> Self {
+        Self::input(&[dim])
+    }
+
+    /// Start from a CHW image (CNNs).
+    pub fn input_image(c: usize, h: usize, w: usize) -> Self {
+        Self::input(&[c, h, w])
+    }
+
+    /// Trainable FC layer with random 8-bit initial weights, encrypted at
+    /// build time.
+    pub fn fc(mut self, out: usize) -> Self {
+        self.specs.push(LayerSpec::Fc { out, init: None, enc: true });
+        self
+    }
+
+    /// Trainable FC layer from explicit initial weights, encrypted at
+    /// build time.
+    pub fn fc_encrypted(mut self, init: Vec<Vec<i64>>) -> Self {
+        let out = init.len();
+        self.specs.push(LayerSpec::Fc { out, init: Some(init), enc: true });
+        self
+    }
+
+    /// Frozen plaintext FC layer (transfer learning).
+    pub fn fc_frozen(mut self, init: Vec<Vec<i64>>) -> Self {
+        let out = init.len();
+        self.specs.push(LayerSpec::Fc { out, init: Some(init), enc: false });
+        self
+    }
+
+    /// Frozen plaintext convolution from pre-trained kernels.
+    pub fn conv_frozen(mut self, init: Vec<Vec<Vec<Vec<i64>>>>) -> Self {
+        let out_ch = init.len();
+        let k = init.first().and_then(|oc| oc.first()).map_or(0, Vec::len);
+        self.specs.push(LayerSpec::Conv { out_ch, k, init: Some(init), enc: false });
+        self
+    }
+
+    /// Shape-only frozen convolution: compiles to a plan but cannot be
+    /// built (used by `glyph plan --cnn` to print paper-scale schedules
+    /// without materializing weights).
+    pub fn conv_frozen_shape(mut self, out_ch: usize, k: usize) -> Self {
+        self.specs.push(LayerSpec::Conv { out_ch, k, init: None, enc: false });
+        self
+    }
+
+    /// Encrypted-kernel convolution (forward-only ablation).
+    pub fn conv_encrypted(mut self, init: Vec<Vec<Vec<Vec<i64>>>>) -> Self {
+        let out_ch = init.len();
+        let k = init.first().and_then(|oc| oc.first()).map_or(0, Vec::len);
+        self.specs.push(LayerSpec::Conv { out_ch, k, init: Some(init), enc: true });
+        self
+    }
+
+    /// Frozen affine batch-norm.
+    pub fn batchnorm(mut self, bn: BnLayer) -> Self {
+        self.specs.push(LayerSpec::BatchNorm { bn });
+        self
+    }
+
+    /// Identity batch-norm placeholder (plan printing / tests).
+    pub fn batchnorm_identity(self, channels: usize) -> Self {
+        self.batchnorm(BnLayer { gain: vec![1; channels], bias: vec![0; channels], gain_shift: 0 })
+    }
+
+    /// 2×2 stride-2 average pooling.
+    pub fn avg_pool(mut self) -> Self {
+        self.specs.push(LayerSpec::AvgPool);
+        self
+    }
+
+    /// CHW → vector adapter in front of the FC head.
+    pub fn flatten(mut self) -> Self {
+        self.specs.push(LayerSpec::Flatten);
+        self
+    }
+
+    /// TFHE ReLU; `act_shift`/`err_shift` are this layer's forward and
+    /// backward quantization shifts.
+    pub fn relu(mut self, act_shift: u32, err_shift: u32) -> Self {
+        self.specs.push(LayerSpec::Relu { act_shift, err_shift });
+        self
+    }
+
+    /// Figure-4 softmax output unit over `bits`-bit logits quantized by
+    /// `logit_shift` (the producing FC layer's activation shift).
+    pub fn softmax(mut self, bits: usize, logit_shift: u32) -> Self {
+        self.specs.push(LayerSpec::Softmax { bits, logit_shift });
+        self
+    }
+
+    /// An arbitrary pre-built unit.
+    pub fn custom(mut self, unit: Box<dyn Layer>) -> Self {
+        self.specs.push(LayerSpec::Custom { unit });
+        self
+    }
+
+    /// Gradient/learning-rate shift for every trainable layer.
+    pub fn grad_shift(mut self, shift: u32) -> Self {
+        self.grad_shift = shift;
+        self
+    }
+
+    /// Walk the specs: validate, name and compute every unit's plan entry
+    /// plus its output shape.
+    fn plan_layers(&self, batch: usize) -> Result<Vec<(PlanLayer, Vec<usize>)>, NetworkError> {
+        if self.specs.is_empty() {
+            return Err(NetworkError::EmptyNetwork);
+        }
+        let mut shape = self.in_shape.clone();
+        let mut out = Vec::with_capacity(self.specs.len());
+        let (mut n_fc, mut n_conv, mut n_bn, mut n_pool, mut n_act) = (0, 0, 0, 0, 0);
+        let last = self.specs.len() - 1;
+        for (i, spec) in self.specs.iter().enumerate() {
+            let entry = spec.plan_entry(&shape, batch, i == last)?;
+            let name = match entry.kind {
+                LayerKind::Fc { .. } => {
+                    n_fc += 1;
+                    format!("FC{n_fc}")
+                }
+                LayerKind::Conv { .. } => {
+                    n_conv += 1;
+                    format!("Conv{n_conv}")
+                }
+                LayerKind::BatchNorm => {
+                    n_bn += 1;
+                    format!("BN{n_bn}")
+                }
+                LayerKind::AvgPool => {
+                    n_pool += 1;
+                    format!("Pool{n_pool}")
+                }
+                LayerKind::Flatten => "Flatten".into(),
+                LayerKind::Relu | LayerKind::Softmax | LayerKind::SigmoidTlu => {
+                    n_act += 1;
+                    format!("Act{n_act}")
+                }
+                LayerKind::QuadraticLoss => "Loss".into(),
+            };
+            shape = entry.out_shape.clone();
+            out.push((
+                PlanLayer {
+                    name,
+                    kind: entry.kind,
+                    unit: Some(i),
+                    forward: entry.forward,
+                    error: entry.error,
+                    gradient: entry.gradient,
+                },
+                entry.out_shape,
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Compile the executable plan *without* keys or weights — shape-only,
+    /// instant even at paper scale.
+    pub fn compile(&self, batch: usize) -> Result<Plan, NetworkError> {
+        let layers: Vec<PlanLayer> =
+            self.plan_layers(batch)?.into_iter().map(|(l, _)| l).collect();
+        Ok(Plan::from_layers(&layers))
+    }
+
+    /// Validate every shift against the engine's fixed-point budget.
+    fn validate_shifts(&self, frac: u32) -> Result<(), NetworkError> {
+        if self.grad_shift > frac {
+            return Err(NetworkError::ShiftSchedule {
+                detail: format!(
+                    "grad_shift {} exceeds the engine's {frac} fraction bits",
+                    self.grad_shift
+                ),
+            });
+        }
+        for (i, spec) in self.specs.iter().enumerate() {
+            match spec {
+                LayerSpec::Relu { act_shift, err_shift } => {
+                    if *act_shift > frac || *err_shift > frac {
+                        return Err(NetworkError::ShiftSchedule {
+                            detail: format!(
+                                "layer {i}: ReLU shifts (act {act_shift}, err {err_shift}) exceed the engine's {frac} fraction bits"
+                            ),
+                        });
+                    }
+                }
+                LayerSpec::Softmax { logit_shift, .. } => {
+                    if *logit_shift > frac {
+                        return Err(NetworkError::ShiftSchedule {
+                            detail: format!(
+                                "layer {i}: softmax logit shift {logit_shift} exceeds the engine's {frac} fraction bits"
+                            ),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the network: encrypt trainable weights under the client
+    /// key, build every unit, and compile the executable plan.
+    pub fn build(
+        self,
+        client: &mut ClientKeys,
+        rng: &mut GlyphRng,
+        engine: &GlyphEngine,
+    ) -> Result<Network, NetworkError> {
+        let plan_layers = self.plan_layers(engine.batch)?;
+        self.validate_shifts(engine.frac_bits())?;
+        // the shift a following activation will apply (stored on the
+        // producing FC/conv layer for inspection)
+        let next_shift: Vec<u32> = (0..self.specs.len())
+            .map(|i| match self.specs.get(i + 1) {
+                Some(LayerSpec::Relu { act_shift, .. }) => *act_shift,
+                Some(LayerSpec::Softmax { logit_shift, .. }) => *logit_shift,
+                _ => 0,
+            })
+            .collect();
+        let in_shapes: Vec<Vec<usize>> = std::iter::once(self.in_shape.clone())
+            .chain(plan_layers.iter().map(|(_, s)| s.clone()))
+            .collect();
+        let grad_shift = self.grad_shift;
+        let in_shape = self.in_shape.clone();
+        let mut units: Vec<NamedUnit> = Vec::with_capacity(self.specs.len());
+        for (i, spec) in self.specs.into_iter().enumerate() {
+            let name = plan_layers[i].0.name.clone();
+            let layer: Box<dyn Layer> = match spec {
+                LayerSpec::Fc { out, init, enc } => {
+                    let in_dim = in_shapes[i][0];
+                    let w = init.unwrap_or_else(|| {
+                        (0..out)
+                            .map(|_| {
+                                (0..in_dim).map(|_| (rng.uniform_mod(31) as i64) - 15).collect()
+                            })
+                            .collect()
+                    });
+                    if enc {
+                        Box::new(FcLayer::new_encrypted(&w, client, next_shift[i]))
+                    } else {
+                        Box::new(FcLayer::new_plain(&w, &engine.ctx.params, next_shift[i]))
+                    }
+                }
+                LayerSpec::Conv { init, enc, .. } => {
+                    let ker = init.ok_or_else(|| NetworkError::Weights {
+                        unit: name.clone(),
+                        detail: "shape-only conv spec cannot be built — provide kernels".into(),
+                    })?;
+                    if enc {
+                        Box::new(ConvLayer::new_encrypted(&ker, client, next_shift[i]))
+                    } else {
+                        Box::new(ConvLayer::new_plain(&ker, &engine.ctx.params, next_shift[i]))
+                    }
+                }
+                LayerSpec::BatchNorm { bn } => Box::new(bn),
+                LayerSpec::AvgPool => Box::new(AvgPoolLayer),
+                LayerSpec::Flatten => Box::new(FlattenLayer),
+                LayerSpec::Relu { act_shift, err_shift } => {
+                    Box::new(ReluLayer { act_shift, err_shift })
+                }
+                LayerSpec::Softmax { bits, logit_shift } => Box::new(SoftmaxLayer {
+                    unit: SoftmaxUnit::logistic(bits, 4),
+                    logit_shift,
+                }),
+                LayerSpec::Custom { unit } => unit,
+            };
+            units.push(NamedUnit { name, layer });
+        }
+        let plan = Network::compile_units(&units, &in_shape, engine.batch);
+        Ok(Network { units, in_shape, grad_shift, plan })
+    }
+}
+
+/// A materialized unit with its table-row name (FC1, Act2, …).
+pub struct NamedUnit {
+    pub name: String,
+    pub layer: Box<dyn Layer>,
+}
+
+/// Everything one network forward pass produces: per-unit outputs and
+/// backward state. `outputs[i]` is unit `i`'s output; the input of unit
+/// `i > 0` is `outputs[i − 1]`.
+pub struct ForwardPass {
+    pub outputs: Vec<EncTensor>,
+    pub states: Vec<LayerState>,
+}
+
+impl ForwardPass {
+    /// The network output (the last unit's tensor).
+    pub fn output(&self) -> &EncTensor {
+        self.outputs.last().expect("network has at least one unit")
+    }
+}
+
+/// A compiled, executable network. Built by [`NetworkBuilder::build`];
+/// `forward`/`train_step` walk [`Network::plan`].
+pub struct Network {
+    pub units: Vec<NamedUnit>,
+    pub in_shape: Vec<usize>,
+    pub grad_shift: u32,
+    /// The compiled schedule (recompile with [`Network::compile`] after
+    /// changing the engine's batch width).
+    pub plan: Plan,
+}
+
+impl Network {
+    fn compile_units(units: &[NamedUnit], in_shape: &[usize], batch: usize) -> Plan {
+        let mut shape = in_shape.to_vec();
+        let mut layers = Vec::with_capacity(units.len());
+        for (i, u) in units.iter().enumerate() {
+            let e = u.layer.plan_entry(&shape, batch);
+            layers.push(PlanLayer {
+                name: u.name.clone(),
+                kind: e.kind,
+                unit: Some(i),
+                forward: e.forward,
+                error: e.error,
+                gradient: e.gradient,
+            });
+            shape = e.out_shape;
+        }
+        Plan::from_layers(&layers)
+    }
+
+    /// Compile the schedule for this network under `engine`'s batch width —
+    /// the one plan consumed by execution, the cost model and the CLI.
+    pub fn compile(&self, engine: &GlyphEngine) -> Plan {
+        Self::compile_units(&self.units, &self.in_shape, engine.batch)
+    }
+
+    /// Forward pass: walk the plan's forward steps in order.
+    pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> ForwardPass {
+        let mut outputs: Vec<EncTensor> = Vec::with_capacity(self.units.len());
+        let mut states: Vec<LayerState> = Vec::with_capacity(self.units.len());
+        for step in self.plan.steps.iter().filter(|s| s.phase == StepPhase::Forward) {
+            let i = step.unit.expect("compiled plans carry unit indices");
+            debug_assert_eq!(i, outputs.len(), "forward steps must cover units in order");
+            let (out, st) = {
+                let input = if i == 0 { x } else { &outputs[i - 1] };
+                self.units[i].layer.forward(input, engine)
+            };
+            outputs.push(out);
+            states.push(st);
+        }
+        ForwardPass { outputs, states }
+    }
+
+    /// One encrypted SGD mini-batch step, *driven by the compiled plan*:
+    /// the backward walk executes exactly the error/gradient steps the plan
+    /// emitted (error propagation stops below the lowest trainable layer,
+    /// the paper's transfer-learning truncation), then applies all updates.
+    /// `x` is forward-packed, `labels_rev` the reverse-packed one-hot
+    /// targets; the output unit turns them into the loss derivative.
+    pub fn train_step(&mut self, x: &EncTensor, labels_rev: &EncTensor, engine: &GlyphEngine) {
+        assert!(
+            self.units.last().is_some_and(|u| u.layer.is_output_unit()),
+            "train_step needs the network to end in an output unit (softmax or an output \
+             sigmoid) that turns the labels into a loss derivative; this network is \
+             forward-only — append .softmax(..) to train it"
+        );
+        let pass = self.forward(x, engine);
+        let backward: Vec<(usize, StepPhase)> = self
+            .plan
+            .steps
+            .iter()
+            .filter(|s| s.phase != StepPhase::Forward)
+            .map(|s| (s.unit.expect("compiled plans carry unit indices"), s.phase))
+            .collect();
+        // `delta` is the error arriving *at the current unit's output*;
+        // a unit's error step computes the propagated error (`pending`),
+        // which is committed when the walk moves on to a lower unit — so a
+        // layer's gradient step still sees the incoming delta even though
+        // the plan lists error before gradient (the Tables-3/4 row order).
+        let mut delta: Option<EncTensor> = None;
+        let mut pending: Option<EncTensor> = None;
+        let mut cur_unit: Option<usize> = None;
+        let mut grads: Vec<Option<LayerGrads>> = (0..self.units.len()).map(|_| None).collect();
+        for (i, phase) in backward {
+            if cur_unit != Some(i) {
+                if let Some(p) = pending.take() {
+                    delta = Some(p);
+                }
+                cur_unit = Some(i);
+            }
+            match phase {
+                StepPhase::Error => {
+                    let next = {
+                        // the first error step is the output unit's loss
+                        // derivative, fed by the labels
+                        let incoming = delta.as_ref().unwrap_or(labels_rev);
+                        self.units[i].layer.backward_error(incoming, &pass.states[i], engine)
+                    };
+                    pending = Some(next);
+                }
+                StepPhase::Gradient => {
+                    let below = if i == 0 { x } else { &pass.outputs[i - 1] };
+                    let d = delta.as_ref().expect(
+                        "plan emitted a gradient before any error signal — the network lacks an output unit",
+                    );
+                    grads[i] = self.units[i].layer.gradients(below, d, engine);
+                }
+                StepPhase::Forward => unreachable!(),
+            }
+        }
+        for (i, g) in grads.iter().enumerate() {
+            if let Some(g) = g {
+                self.units[i].layer.apply_gradients(g, self.grad_shift, engine);
+            }
+        }
+    }
+
+    /// The trainable/inspectable FC layers, bottom-up.
+    pub fn fc_layers(&self) -> Vec<&FcLayer> {
+        self.units.iter().filter_map(|u| u.layer.as_fc()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::EngineProfile;
+    use crate::nn::tensor::PackOrder;
+
+    fn tiny_mlp_builder() -> NetworkBuilder {
+        NetworkBuilder::input_vec(3).fc(4).relu(8, 7).fc(2).softmax(3, 7).grad_shift(8)
+    }
+
+    #[test]
+    fn builder_compile_matches_built_network_plan() {
+        let batch = 2;
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 111);
+        let mut rng = GlyphRng::new(5);
+        let spec_plan = tiny_mlp_builder().compile(batch).unwrap();
+        let net = tiny_mlp_builder().build(&mut client, &mut rng, &engine).unwrap();
+        assert_eq!(spec_plan.steps.len(), net.plan.steps.len());
+        for (a, b) in spec_plan.steps.iter().zip(&net.plan.steps) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.system, b.system);
+            assert_eq!(a.switch, b.switch);
+            assert_eq!(a.ops, b.ops, "{}", a.name);
+        }
+        assert!(net.plan.validate());
+        let names: Vec<&str> = net.plan.steps.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "FC1-forward",
+                "Act1-forward",
+                "FC2-forward",
+                "Act2-forward",
+                "Act2-error",
+                "FC2-error",
+                "FC2-gradient",
+                "Act1-error",
+                "FC1-gradient"
+            ]
+        );
+    }
+
+    #[test]
+    fn builder_rejects_bad_shift_schedule() {
+        let batch = 2;
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 112);
+        let mut rng = GlyphRng::new(6);
+        // test profile has 8 fraction bits; 20 must be rejected, not clamped
+        let err = NetworkBuilder::input_vec(3)
+            .fc(2)
+            .softmax(3, 20)
+            .build(&mut client, &mut rng, &engine)
+            .err()
+            .expect("over-budget logit shift must fail");
+        assert!(matches!(err, NetworkError::ShiftSchedule { .. }), "{err}");
+        assert!(err.to_string().contains("20"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_fc_on_image_without_flatten() {
+        let err = NetworkBuilder::input_image(1, 4, 4).fc(2).compile(2).err().unwrap();
+        assert!(matches!(err, NetworkError::Shape { .. }), "{err}");
+        assert!(err.to_string().contains("flatten"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_size_conv() {
+        let err = NetworkBuilder::input_image(1, 14, 14).conv_frozen(vec![]).compile(2).err().unwrap();
+        assert!(matches!(err, NetworkError::Shape { .. }), "{err}");
+        assert!(err.to_string().contains("zero-size"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_midstream_softmax() {
+        let err =
+            NetworkBuilder::input_vec(4).fc(3).softmax(3, 7).fc(2).compile(2).err().unwrap();
+        assert!(matches!(err, NetworkError::Topology { .. }), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "output unit")]
+    fn train_step_refuses_networks_without_an_output_unit() {
+        let batch = 2;
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 114);
+        let mut rng = GlyphRng::new(8);
+        // forward-only chain: labels must never flow backward as a fake
+        // loss derivative
+        let mut net = NetworkBuilder::input_vec(3)
+            .fc(4)
+            .relu(8, 7)
+            .build(&mut client, &mut rng, &engine)
+            .unwrap();
+        let x_cts = (0..3).map(|i| client.encrypt_batch(&[i as i64, 1], 0)).collect();
+        let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+        let lab_cts = (0..4).map(|_| client.encrypt_batch(&[0, 0], 0)).collect();
+        let labels = EncTensor::new(lab_cts, vec![4], PackOrder::Reversed, 0);
+        net.train_step(&x, &labels, &engine);
+    }
+
+    #[test]
+    fn network_train_step_moves_weights() {
+        let batch = 2;
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 113);
+        let mut rng = GlyphRng::new(7);
+        let mut net = tiny_mlp_builder().build(&mut client, &mut rng, &engine).unwrap();
+        let x_cts = (0..3).map(|i| client.encrypt_batch(&[10 * i as i64, -5], 0)).collect();
+        let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+        let lab_cts = (0..2)
+            .map(|k| client.encrypt_batch(&[if k == 0 { 127 } else { 0 }, 0], 0))
+            .collect();
+        let labels = EncTensor::new(lab_cts, vec![2], PackOrder::Reversed, 0);
+        let before: Vec<i64> = net
+            .fc_layers()
+            .iter()
+            .flat_map(|l| {
+                l.w.iter().flat_map(|row| {
+                    row.iter().map(|w| match w {
+                        crate::nn::linear::Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
+                        crate::nn::linear::Weight::Plain(p) => p.coeffs[0],
+                    })
+                })
+            })
+            .collect();
+        net.train_step(&x, &labels, &engine);
+        let after: Vec<i64> = net
+            .fc_layers()
+            .iter()
+            .flat_map(|l| {
+                l.w.iter().flat_map(|row| {
+                    row.iter().map(|w| match w {
+                        crate::nn::linear::Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
+                        crate::nn::linear::Weight::Plain(p) => p.coeffs[0],
+                    })
+                })
+            })
+            .collect();
+        assert_eq!(before.len(), 3 * 4 + 4 * 2);
+        assert_ne!(before, after, "training must move at least one weight");
+    }
+}

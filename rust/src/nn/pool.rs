@@ -3,8 +3,10 @@
 //! exactly why Glyph prefers average over max pooling — no switch needed.
 
 use super::engine::GlyphEngine;
+use super::layer::{pool_forward_ops, Layer, LayerPlanEntry, LayerState};
 use super::tensor::EncTensor;
 use crate::bgv::BgvCiphertext;
+use crate::coordinator::scheduler::LayerKind;
 
 /// 2×2 average pooling with stride 2 on a CHW tensor. The output carries
 /// `shift + 2` (the sum of four values at scale 2^shift is the average at
@@ -26,6 +28,30 @@ pub fn avg_pool2(x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
         }
     }
     EncTensor::new(cts, vec![c, oh, ow], x.order, x.shift + 2)
+}
+
+/// 2×2 stride-2 average pooling as a network unit (AddCC only — the ÷4
+/// folds into the fixed-point shift, which is why Glyph prefers average
+/// pooling: no switch needed).
+pub struct AvgPoolLayer;
+
+impl Layer for AvgPoolLayer {
+    fn plan_entry(&self, in_shape: &[usize], _batch: usize) -> LayerPlanEntry {
+        assert_eq!(in_shape.len(), 3, "pool expects CHW");
+        let (c, h, w) = (in_shape[0], in_shape[1], in_shape[2]);
+        let out_shape = vec![c, h / 2, w / 2];
+        LayerPlanEntry {
+            kind: LayerKind::AvgPool,
+            forward: pool_forward_ops(out_shape.iter().product()),
+            out_shape,
+            error: None, // pooling backward folds into neighbours under TL
+            gradient: None,
+        }
+    }
+
+    fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        (avg_pool2(x, engine), LayerState::None)
+    }
 }
 
 #[cfg(test)]

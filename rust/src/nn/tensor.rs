@@ -30,6 +30,7 @@ impl PackOrder {
 
 /// An encrypted tensor: `cts[i]` holds scalar `i` (row-major over `shape`)
 /// for every sample of the mini-batch.
+#[derive(Clone)]
 pub struct EncTensor {
     pub cts: Vec<BgvCiphertext>,
     pub shape: Vec<usize>,

@@ -1,7 +1,9 @@
-//! The FHESGD baseline (Nandakumar et al., the paper's §2.5 comparison):
-//! the same BGV MAC structure as Glyph, but every activation is a sigmoid
-//! evaluated with the bit-sliced BGV table lookup — the 3–4-orders-of-
-//! magnitude imbalance of the paper's Table 2 / Figure 2.
+//! The FHESGD baseline (Nandakumar et al., the paper's §2.5 comparison) on
+//! the plan-driven `Network` API: the same BGV MAC structure as Glyph, but
+//! every activation is a sigmoid evaluated with the bit-sliced BGV table
+//! lookup — the 3–4-orders-of-magnitude imbalance of the paper's Table 2 /
+//! Figure 2. The lookups are a [`SigmoidTluLayer`] unit (`Layer` trait), so
+//! the baseline shares `Network::train_step`'s plan walk with Glyph.
 //!
 //! The homomorphic indicator-tree lookup (the dominant cost) is real and
 //! measured; the value↔bit-slice domain conversions around it are performed
@@ -12,12 +14,17 @@
 //! substitution is charged in the cost model, not hidden).
 
 use crate::bgv::lut::{LookupTable, LutCost};
-use crate::bgv::{BgvCiphertext, BgvContext, BgvParams, BgvSecretKey, NoiseRefresher, Plaintext, RelinKey};
-use crate::nn::engine::{ClientKeys, GlyphEngine};
-use crate::nn::linear::FcLayer;
-use crate::nn::tensor::{EncTensor, PackOrder};
+use crate::bgv::{
+    BgvCiphertext, BgvContext, BgvParams, BgvSecretKey, NoiseRefresher, Plaintext, RelinKey,
+};
+use crate::coordinator::scheduler::LayerKind;
 use crate::math::rng::GlyphRng;
-use std::sync::Arc;
+use crate::nn::engine::{ClientKeys, GlyphEngine};
+use crate::nn::layer::{sigmoid_tlu_ops, Layer, LayerPlanEntry, LayerState};
+use crate::nn::linear::FcLayer;
+use crate::nn::network::{Network, NetworkBuilder, NetworkError};
+use crate::nn::tensor::{EncTensor, PackOrder};
+use std::sync::{Arc, Mutex};
 
 /// The t = 2 bit-slice domain used by the lookup tables.
 pub struct TluDomain {
@@ -59,22 +66,158 @@ impl TluDomain {
     }
 }
 
-/// The FHESGD MLP: FC layers + sigmoid TLU activations.
+/// One table lookup on a single-lane MAC-domain ciphertext: the authority
+/// converts the quantized value into the bit-slice domain (HElib
+/// digit-extraction substitute), the indicator-tree lookup runs for real,
+/// and the output bits are recomposed back.
+pub fn tlu_activate(
+    domain: &TluDomain,
+    table: &LookupTable,
+    lut_cost: &Mutex<LutCost>,
+    tlu_bits: usize,
+    ct: &BgvCiphertext,
+    shift: u32,
+    engine: &GlyphEngine,
+) -> BgvCiphertext {
+    engine.counter.bump(&engine.counter.tlu, 1);
+    engine.counter.bump(&engine.counter.refresh, 2); // the two domain conversions
+    // authority opens the quantized value (substituted digit extraction)
+    let m = engine.auth.sk.decrypt(ct).coeffs[0];
+    let v = (m >> shift) & ((1 << tlu_bits) - 1);
+    // REAL homomorphic lookup in the t=2 domain
+    let bits = domain.encrypt_bits(v, tlu_bits);
+    let (out_bits, cost) = table.evaluate(&bits, &domain.rlk, &domain.ctx);
+    {
+        let mut c = lut_cost.lock().unwrap();
+        c.mult_cc += cost.mult_cc;
+        c.add_cc += cost.add_cc;
+        c.mod_switches += cost.mod_switches;
+    }
+    let out_v = domain.decrypt_bits(&out_bits);
+    // recompose into the MAC domain (authority re-encryption)
+    let pt = Plaintext::encode_scalar(out_v, &engine.ctx.params);
+    let trivial = BgvCiphertext::trivial(&pt, &engine.ctx, engine.ctx.top_level());
+    engine.auth.refresh(&trivial)
+}
+
+/// The FHESGD sigmoid activation as a network unit: forward is one table
+/// lookup per neuron; backward multiplies the incoming error by the
+/// derivative lookup σ′ of the stored activation (the paper's `Act-error`
+/// rows). The last layer (`output_unit`) instead computes the quadratic-
+/// loss derivative δ = d − t directly.
+pub struct SigmoidTluLayer {
+    pub domain: Arc<TluDomain>,
+    pub table: Arc<LookupTable>,
+    pub deriv: Arc<LookupTable>,
+    pub tlu_bits: usize,
+    pub act_shift: u32,
+    pub output_unit: bool,
+    pub lut_cost: Arc<Mutex<LutCost>>,
+}
+
+impl Layer for SigmoidTluLayer {
+    fn plan_entry(&self, in_shape: &[usize], _batch: usize) -> LayerPlanEntry {
+        let cts: usize = in_shape.iter().product();
+        let (forward, error) = sigmoid_tlu_ops(cts, self.output_unit);
+        LayerPlanEntry {
+            kind: LayerKind::SigmoidTlu,
+            out_shape: in_shape.to_vec(),
+            forward,
+            error: Some(error),
+            gradient: None,
+        }
+    }
+
+    fn forward(&self, u: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        assert_eq!(engine.batch, 1, "FHESGD baseline runs single-lane (see module docs)");
+        let cts: Vec<BgvCiphertext> = u
+            .cts
+            .iter()
+            .map(|ct| {
+                tlu_activate(
+                    &self.domain,
+                    &self.table,
+                    &self.lut_cost,
+                    self.tlu_bits,
+                    ct,
+                    self.act_shift,
+                    engine,
+                )
+            })
+            .collect();
+        let a = EncTensor::new(cts, u.shape.to_vec(), u.order, 0);
+        (a.clone(), LayerState::Output(a))
+    }
+
+    fn backward_error(
+        &self,
+        delta: &EncTensor,
+        state: &LayerState,
+        engine: &GlyphEngine,
+    ) -> EncTensor {
+        let acts = match state {
+            LayerState::Output(a) => a,
+            _ => unreachable!("sigmoid backward needs its forward activations"),
+        };
+        let cts: Vec<BgvCiphertext> = if self.output_unit {
+            // δ = d − t at the output (batch=1: forward == reversed packing)
+            acts.cts
+                .iter()
+                .zip(&delta.cts)
+                .map(|(d, t)| {
+                    let mut e = d.clone();
+                    engine.sub_cc(&mut e, t);
+                    e
+                })
+                .collect()
+        } else {
+            // δ_u = err ⊗ σ'(u): derivative lookups then elementwise mult
+            delta
+                .cts
+                .iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let d_act = tlu_activate(
+                        &self.domain,
+                        &self.deriv,
+                        &self.lut_cost,
+                        self.tlu_bits,
+                        &acts.cts[i],
+                        0,
+                        engine,
+                    );
+                    let mut m = e.clone();
+                    engine.mult_cc(&mut m, &d_act);
+                    m
+                })
+                .collect()
+        };
+        EncTensor::new(cts, delta.shape.to_vec(), PackOrder::Reversed, 0)
+    }
+
+    fn is_output_unit(&self) -> bool {
+        self.output_unit
+    }
+}
+
+/// The FHESGD MLP: FC layers + sigmoid TLU activations, built through the
+/// `NetworkBuilder` with [`SigmoidTluLayer`] custom units.
 pub struct FhesgdMlp {
-    pub layers: Vec<FcLayer>,
+    pub net: Network,
     pub dims: Vec<usize>,
     pub act_shifts: Vec<u32>,
     pub grad_shift: u32,
     /// Lookup bit-width (Figure 2 sweeps this).
     pub tlu_bits: usize,
-    pub sigmoid: LookupTable,
-    pub sigmoid_deriv: LookupTable,
-    pub tlu: TluDomain,
+    pub sigmoid: Arc<LookupTable>,
+    pub sigmoid_deriv: Arc<LookupTable>,
+    pub tlu: Arc<TluDomain>,
     /// Accumulated real lookup costs.
-    pub lut_cost: std::sync::Mutex<LutCost>,
+    pub lut_cost: Arc<Mutex<LutCost>>,
 }
 
 impl FhesgdMlp {
+    #[allow(clippy::too_many_arguments)]
     pub fn new_random(
         dims: Vec<usize>,
         act_shifts: Vec<u32>,
@@ -82,28 +225,49 @@ impl FhesgdMlp {
         tlu_bits: usize,
         client: &mut ClientKeys,
         rng: &mut GlyphRng,
+        engine: &GlyphEngine,
         test_scale: bool,
-    ) -> Self {
-        let mut layers = Vec::new();
-        for l in 0..dims.len() - 1 {
-            let init: Vec<Vec<i64>> = (0..dims[l + 1])
-                .map(|_| (0..dims[l]).map(|_| (rng.uniform_mod(31) as i64) - 15).collect())
-                .collect();
-            layers.push(FcLayer::new_encrypted(&init, client, act_shifts[l.min(act_shifts.len() - 1)]));
+    ) -> Result<Self, NetworkError> {
+        let n_fc = dims.len() - 1;
+        if act_shifts.len() != n_fc {
+            return Err(NetworkError::ShiftSchedule {
+                detail: format!(
+                    "{} FC layers need {} act_shifts, got {}",
+                    n_fc,
+                    n_fc,
+                    act_shifts.len()
+                ),
+            });
         }
         // sigmoid over b-bit inputs with 2 fraction bits in, (b−1) out
-        let sigmoid = LookupTable::sigmoid(tlu_bits, 2, (tlu_bits - 1) as u32);
+        let sigmoid = Arc::new(LookupTable::sigmoid(tlu_bits, 2, (tlu_bits - 1) as u32));
         // derivative table: σ' = σ(1−σ), same domain
-        let sigmoid_deriv = LookupTable::new(tlu_bits, tlu_bits, move |v| {
+        let sigmoid_deriv = Arc::new(LookupTable::new(tlu_bits, tlu_bits, move |v| {
             let half = 1i64 << (tlu_bits - 1);
             let sv = if (v as i64) >= half { v as i64 - (1i64 << tlu_bits) } else { v as i64 };
             let x = sv as f64 / 4.0;
             let s = 1.0 / (1.0 + (-x).exp());
             ((s * (1.0 - s)) * 2f64.powi((tlu_bits + 1) as i32)).round() as u64
-        });
-        let tlu = TluDomain::new(test_scale, 0xf0e5);
-        FhesgdMlp {
-            layers,
+        }));
+        let tlu = Arc::new(TluDomain::new(test_scale, 0xf0e5));
+        let lut_cost = Arc::new(Mutex::new(LutCost::default()));
+
+        let mut b = NetworkBuilder::input_vec(dims[0]).grad_shift(grad_shift);
+        for l in 0..n_fc {
+            b = b.fc(dims[l + 1]);
+            b = b.custom(Box::new(SigmoidTluLayer {
+                domain: tlu.clone(),
+                table: sigmoid.clone(),
+                deriv: sigmoid_deriv.clone(),
+                tlu_bits,
+                act_shift: act_shifts[l],
+                output_unit: l + 1 == n_fc,
+                lut_cost: lut_cost.clone(),
+            }));
+        }
+        let net = b.build(client, rng, engine)?;
+        Ok(FhesgdMlp {
+            net,
             dims,
             act_shifts,
             grad_shift,
@@ -111,14 +275,11 @@ impl FhesgdMlp {
             sigmoid,
             sigmoid_deriv,
             tlu,
-            lut_cost: std::sync::Mutex::new(LutCost::default()),
-        }
+            lut_cost,
+        })
     }
 
-    /// One table lookup on a single-lane MAC-domain ciphertext: the
-    /// authority converts the quantized value into the bit-slice domain
-    /// (HElib digit-extraction substitute), the indicator-tree lookup runs
-    /// for real, and the output bits are recomposed back.
+    /// One table lookup (compatibility shim over [`tlu_activate`]).
     pub fn tlu_activate(
         &self,
         ct: &BgvCiphertext,
@@ -126,89 +287,20 @@ impl FhesgdMlp {
         shift: u32,
         engine: &GlyphEngine,
     ) -> BgvCiphertext {
-        engine.counter.bump(&engine.counter.tlu, 1);
-        engine.counter.bump(&engine.counter.refresh, 2); // the two domain conversions
-        // authority opens the quantized value (substituted digit extraction)
-        let m = engine.auth.sk.decrypt(ct).coeffs[0];
-        let v = (m >> shift) & ((1 << self.tlu_bits) - 1);
-        // REAL homomorphic lookup in the t=2 domain
-        let bits = self.tlu.encrypt_bits(v, self.tlu_bits);
-        let (out_bits, cost) = table.evaluate(&bits, &self.tlu.rlk, &self.tlu.ctx);
-        {
-            let mut c = self.lut_cost.lock().unwrap();
-            c.mult_cc += cost.mult_cc;
-            c.add_cc += cost.add_cc;
-            c.mod_switches += cost.mod_switches;
-        }
-        let out_v = self.tlu.decrypt_bits(&out_bits);
-        // recompose into the MAC domain (authority re-encryption)
-        let pt = Plaintext::encode_scalar(out_v, &engine.ctx.params);
-        let trivial = BgvCiphertext::trivial(&pt, &engine.ctx, engine.ctx.top_level());
-        engine.auth.refresh(&trivial)
+        tlu_activate(&self.tlu, table, &self.lut_cost, self.tlu_bits, ct, shift, engine)
     }
 
-    /// Forward pass (batch = 1): FC MACs + sigmoid lookups.
-    pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> Vec<EncTensor> {
-        assert_eq!(engine.batch, 1, "FHESGD baseline runs single-lane (see module docs)");
-        let mut acts = vec![];
-        let mut cur: Vec<BgvCiphertext> = x.cts.clone();
-        for (l, fc) in self.layers.iter().enumerate() {
-            let u = fc.forward(
-                &EncTensor::new(cur.clone(), vec![fc.in_dim], PackOrder::Forward, 0),
-                engine,
-            );
-            let shift = self.act_shifts[l.min(self.act_shifts.len() - 1)];
-            let a: Vec<BgvCiphertext> =
-                u.cts.iter().map(|ct| self.tlu_activate(ct, &self.sigmoid, shift, engine)).collect();
-            acts.push(EncTensor::new(a.clone(), vec![fc.out_dim], PackOrder::Forward, 0));
-            cur = a;
-        }
-        acts
+    /// The trainable FC layers, bottom-up.
+    pub fn fc_layers(&self) -> Vec<&FcLayer> {
+        self.net.fc_layers()
     }
 
-    /// One SGD step (batch = 1). Backward activations use the derivative
-    /// table (one TLU per neuron, the paper's `Act-error` rows).
+    /// One SGD step (batch = 1), walking the compiled plan. Backward
+    /// activations use the derivative table (one TLU per neuron, the
+    /// paper's `Act-error` rows).
     pub fn train_step(&mut self, x: &EncTensor, labels: &EncTensor, engine: &GlyphEngine) {
-        let acts = self.forward(x, engine);
-        let n = self.layers.len();
-        // δ = d − t at the output (batch=1: forward == reversed packing)
-        let mut delta_cts: Vec<BgvCiphertext> = acts[n - 1]
-            .cts
-            .iter()
-            .zip(&labels.cts)
-            .map(|(d, t)| {
-                let mut e = d.clone();
-                engine.sub_cc(&mut e, t);
-                e
-            })
-            .collect();
-        let mut grads: Vec<Vec<Vec<BgvCiphertext>>> = vec![Vec::new(); n];
-        for l in (0..n).rev() {
-            let below: Vec<BgvCiphertext> =
-                if l == 0 { x.cts.clone() } else { acts[l - 1].cts.clone() };
-            let delta = EncTensor::new(delta_cts.clone(), vec![self.layers[l].out_dim], PackOrder::Reversed, 0);
-            let below_t = EncTensor::new(below, vec![self.layers[l].in_dim], PackOrder::Forward, 0);
-            grads[l] = self.layers[l].gradients(&below_t, &delta, engine);
-            if l > 0 {
-                let err = self.layers[l].backward_error(&delta, engine);
-                // δ_u = err ⊗ σ'(u): derivative lookups then elementwise mult
-                delta_cts = err
-                    .cts
-                    .iter()
-                    .enumerate()
-                    .map(|(i, e)| {
-                        // σ'(u) looked up from the stored activation input
-                        let d_act = self.tlu_activate(&acts[l - 1].cts[i], &self.sigmoid_deriv, 0, engine);
-                        let mut m = e.clone();
-                        engine.mult_cc(&mut m, &d_act);
-                        m
-                    })
-                    .collect();
-            }
-        }
-        for l in 0..n {
-            self.layers[l].apply_gradients(&grads[l], self.grad_shift, engine);
-        }
+        assert_eq!(engine.batch, 1, "FHESGD baseline runs single-lane (see module docs)");
+        self.net.train_step(x, labels, engine);
     }
 }
 
@@ -221,7 +313,9 @@ mod tests {
     fn sigmoid_tlu_activation_matches_table() {
         let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 1, 5000);
         let mut rng = GlyphRng::new(3);
-        let mlp = FhesgdMlp::new_random(vec![2, 2], vec![0], 8, 4, &mut client, &mut rng, true);
+        let mlp =
+            FhesgdMlp::new_random(vec![2, 2], vec![0], 8, 4, &mut client, &mut rng, &engine, true)
+                .unwrap();
         // value 5, no shift: table input 5
         let ct = client.encrypt_batch(&[5], 0);
         let out = mlp.tlu_activate(&ct, &mlp.sigmoid, 0, &engine);
@@ -237,8 +331,17 @@ mod tests {
     fn fhesgd_step_runs_and_counts_tlus() {
         let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 1, 5001);
         let mut rng = GlyphRng::new(4);
-        let mut mlp =
-            FhesgdMlp::new_random(vec![3, 4, 2], vec![8, 7], 8, 4, &mut client, &mut rng, true);
+        let mut mlp = FhesgdMlp::new_random(
+            vec![3, 4, 2],
+            vec![8, 7],
+            8,
+            4,
+            &mut client,
+            &mut rng,
+            &engine,
+            true,
+        )
+        .unwrap();
         let x_cts = vec![
             client.encrypt_batch(&[40], 0),
             client.encrypt_batch(&[-20], 0),
@@ -258,5 +361,10 @@ mod tests {
         assert!(s.mult_cc > 0);
         // no TFHE gates in the baseline's activations
         assert_eq!(s.act_gates, 8 * (4 * 3 + 2 * 4)); // only gradient requantization uses gates
+
+        // the compiled plan predicts the TLU count exactly
+        let t = mlp.net.plan.totals();
+        assert_eq!(t.tlu, 10);
+        assert_eq!(t.act_gates, s.act_gates);
     }
 }

@@ -1,27 +1,37 @@
-//! The Glyph MLP trainer: the paper's Table-3 pipeline.
+//! The Glyph MLP (the paper's Table-3 pipeline) on the plan-driven
+//! `Network` API.
 //!
-//! Forward: FC (BGV MultCC) → switch → TFHE ReLU → switch → … → softmax.
-//! Backward: isoftmax (BGV SubCC) → FC errors (BGV) → switch → iReLU →
-//! switch → … ; gradients by the convolution-trick MultCC and SGD updates
-//! re-quantized through the switch.
+//! [`GlyphMlp`] is now a thin compatibility wrapper: [`MlpConfig`]
+//! translates into a `NetworkBuilder` chain
+//! (`.fc(128).relu(14, 11).fc(32).relu(11, 9).fc(10).softmax(8, 9)`), the
+//! builder *validates* the shift schedule against the architecture (no
+//! silent index clamping — mismatched `act_shifts`/`err_shifts` are a
+//! descriptive [`NetworkError`]), and the built network executes by
+//! walking its compiled `scheduler::Plan`: FC MACs on BGV, ReLU/softmax on
+//! TFHE behind `switch_to_bits`/`switch_to_bgv` exactly at the plan's
+//! switch boundaries, gradients re-quantized through the switch
+//! (the `FC-gradient … BGV-TFHE` rows of Table 3).
+//!
+//! New topologies (deeper MLPs, different widths) need no new module —
+//! they are one builder chain; this wrapper only preserves the historical
+//! constructor surface for the examples, benches and CLI.
 
-use crate::nn::activation::{self, ReluState, SoftmaxUnit};
+use crate::math::rng::GlyphRng;
 use crate::nn::engine::{ClientKeys, GlyphEngine};
 use crate::nn::linear::FcLayer;
-use crate::nn::loss::quadratic_loss_delta;
-use crate::nn::tensor::{EncTensor, PackOrder};
-use crate::math::rng::GlyphRng;
-use crate::tfhe::LweCiphertext;
+use crate::nn::network::{Network, NetworkBuilder, NetworkError};
+use crate::nn::tensor::EncTensor;
 
 /// Architecture and fixed-point schedule of a Glyph MLP.
 #[derive(Clone, Debug)]
 pub struct MlpConfig {
     /// Layer widths, e.g. [784, 128, 32, 10] (the paper's 3-layer MLP).
     pub dims: Vec<usize>,
-    /// Activation quantization shift per hidden layer (drops the MAC scale
-    /// back to 8-bit; ≈ log2(127·fan_in) − 7).
+    /// Activation quantization shift per FC layer (drops the MAC scale
+    /// back to 8-bit; ≈ log2(127·fan_in) − 7). The last entry quantizes
+    /// the softmax logits.
     pub act_shifts: Vec<u32>,
-    /// Error-path quantization shift per hidden layer.
+    /// Error-path quantization shift per hidden ReLU.
     pub err_shifts: Vec<u32>,
     /// Gradient/learning-rate shift (step = ∇ >> grad_shift).
     pub grad_shift: u32,
@@ -51,104 +61,98 @@ impl MlpConfig {
             softmax_bits: 3,
         }
     }
+
+    /// Validate that the shift schedules match the layer count — the
+    /// replacement for the old `act_shifts[l.min(len−1)]` clamping.
+    pub fn validate(&self) -> Result<(), NetworkError> {
+        if self.dims.len() < 2 {
+            return Err(NetworkError::Topology {
+                detail: format!("an MLP needs at least 2 dims, got {:?}", self.dims),
+            });
+        }
+        let n_fc = self.dims.len() - 1;
+        if self.act_shifts.len() != n_fc {
+            return Err(NetworkError::ShiftSchedule {
+                detail: format!(
+                    "{} FC layers need {} act_shifts (one per layer, the last quantizing the softmax logits), got {}",
+                    n_fc,
+                    n_fc,
+                    self.act_shifts.len()
+                ),
+            });
+        }
+        if self.err_shifts.len() < n_fc - 1 {
+            return Err(NetworkError::ShiftSchedule {
+                detail: format!(
+                    "{} hidden ReLUs need at least {} err_shifts, got {}",
+                    n_fc - 1,
+                    n_fc - 1,
+                    self.err_shifts.len()
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Append this config's FC/ReLU/softmax stack to an existing builder
+    /// chain (the transfer CNN reuses this for its trainable head).
+    /// Call [`Self::validate`] first.
+    pub fn append_to(&self, mut b: NetworkBuilder) -> NetworkBuilder {
+        let n_fc = self.dims.len() - 1;
+        b = b.grad_shift(self.grad_shift);
+        for l in 0..n_fc {
+            b = b.fc(self.dims[l + 1]);
+            if l + 1 < n_fc {
+                b = b.relu(self.act_shifts[l], self.err_shifts[l]);
+            } else {
+                b = b.softmax(self.softmax_bits, self.act_shifts[l]);
+            }
+        }
+        b
+    }
+
+    /// The equivalent `NetworkBuilder` chain.
+    pub fn builder(&self) -> Result<NetworkBuilder, NetworkError> {
+        self.validate()?;
+        Ok(self.append_to(NetworkBuilder::input_vec(self.dims[0])))
+    }
 }
 
-/// The encrypted MLP.
+/// The encrypted MLP: a `Network` built from an [`MlpConfig`].
 pub struct GlyphMlp {
     pub config: MlpConfig,
-    pub layers: Vec<FcLayer>,
-    pub softmax: SoftmaxUnit,
+    pub net: Network,
 }
 
 impl GlyphMlp {
-    /// Random 8-bit initial weights, encrypted under the client key.
-    pub fn new_random(config: MlpConfig, client: &mut ClientKeys, rng: &mut GlyphRng) -> Self {
-        let mut layers = Vec::new();
-        for l in 0..config.dims.len() - 1 {
-            let (fi, fo) = (config.dims[l], config.dims[l + 1]);
-            let init: Vec<Vec<i64>> = (0..fo)
-                .map(|_| (0..fi).map(|_| (rng.uniform_mod(31) as i64) - 15).collect())
-                .collect();
-            layers.push(FcLayer::new_encrypted(&init, client, config.act_shifts[l.min(config.act_shifts.len() - 1)]));
-        }
-        let softmax = SoftmaxUnit::logistic(config.softmax_bits, 4);
-        GlyphMlp { config, layers, softmax }
-    }
-
-    /// Softmax layer: extract the top `softmax_bits` of each logit, run the
-    /// Figure-4 MUX-tree unit per lane, and pack reverse-order for the loss.
-    fn softmax_layer(&self, u: &EncTensor, engine: &GlyphEngine) -> EncTensor {
-        let frac = engine.frac_bits();
-        // logits quantized like activations: drop the last layer's shift
-        let shift = *self.config.act_shifts.last().unwrap();
-        let pre_shift = frac - shift;
-        let in_positions = u.order.positions(engine.batch);
-        let out_positions = PackOrder::Reversed.positions(engine.batch);
-        let cts = u
-            .cts
-            .iter()
-            .map(|ct| {
-                let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
-                // all lanes' MUX trees fan across the pool in one call
-                let lane_slices: Vec<&[LweCiphertext]> = lanes_bits
-                    .iter()
-                    .map(|bits| &bits[..self.config.softmax_bits])
-                    .collect();
-                let outs = self.softmax.evaluate_mux_many(engine, &lane_slices);
-                engine.switch_to_bgv(&outs, &out_positions)
-            })
-            .collect();
-        EncTensor::new(cts, u.shape.clone(), PackOrder::Reversed, 0)
-    }
-
-    /// Forward pass: returns the layer activations (forward-packed; index 0
-    /// is the input) plus the softmax output (reverse-packed) and the ReLU
-    /// states for the backward pass.
-    pub fn forward(
-        &self,
-        x: &EncTensor,
+    /// Random 8-bit initial weights, encrypted under the client key. Fails
+    /// with a descriptive error when the shift schedule does not match the
+    /// layer count or exceeds the engine's fixed-point budget.
+    pub fn new_random(
+        config: MlpConfig,
+        client: &mut ClientKeys,
+        rng: &mut GlyphRng,
         engine: &GlyphEngine,
-    ) -> (Vec<EncTensor>, EncTensor, Vec<ReluState>) {
-        let mut acts: Vec<EncTensor> = Vec::with_capacity(self.layers.len());
-        let mut states = Vec::new();
-        let mut cur = x;
-        let mut owned: Vec<EncTensor> = Vec::new();
-        for (l, fc) in self.layers.iter().enumerate() {
-            let u = fc.forward(cur, engine);
-            if l + 1 < self.layers.len() {
-                let (a, st) = activation::relu_layer(engine, &u, self.config.act_shifts[l], PackOrder::Forward);
-                states.push(st);
-                owned.push(a);
-                cur = owned.last().unwrap();
-            } else {
-                let d = self.softmax_layer(&u, engine);
-                acts = owned;
-                return (acts, d, states);
-            }
-        }
-        unreachable!("MLP needs at least one layer");
+    ) -> Result<Self, NetworkError> {
+        let net = config.builder()?.build(client, rng, engine)?;
+        Ok(GlyphMlp { config, net })
     }
 
-    /// One encrypted SGD mini-batch step. `x` is forward-packed (shift 0),
-    /// `labels_rev` is the reverse-packed one-hot targets (shift 0).
+    /// The compiled schedule (Table-3 Switch column, with op counts).
+    pub fn plan(&self) -> &crate::coordinator::scheduler::Plan {
+        &self.net.plan
+    }
+
+    /// The FC layers, bottom-up (weight inspection in tests/examples).
+    pub fn fc_layers(&self) -> Vec<&FcLayer> {
+        self.net.fc_layers()
+    }
+
+    /// One encrypted SGD mini-batch step, walking the compiled plan. `x` is
+    /// forward-packed (shift 0), `labels_rev` the reverse-packed one-hot
+    /// targets (shift 0).
     pub fn train_step(&mut self, x: &EncTensor, labels_rev: &EncTensor, engine: &GlyphEngine) {
-        let (hidden, d, states) = self.forward(x, engine);
-        // δ for the last layer (paper Eq. 6, "Act-error" row: AddCC only).
-        let mut delta = quadratic_loss_delta(&d, labels_rev, engine);
-        // Walk layers backwards: gradient, then error for the layer below.
-        let n_layers = self.layers.len();
-        let mut grads: Vec<Vec<Vec<crate::bgv::BgvCiphertext>>> = vec![Vec::new(); n_layers];
-        for l in (0..n_layers).rev() {
-            let below: &EncTensor = if l == 0 { x } else { &hidden[l - 1] };
-            grads[l] = self.layers[l].gradients(below, &delta, engine);
-            if l > 0 {
-                let err = self.layers[l].backward_error(&delta, engine);
-                delta = activation::irelu_layer(engine, &err, &states[l - 1], self.config.err_shifts[l - 1]);
-            }
-        }
-        for l in 0..n_layers {
-            self.layers[l].apply_gradients(&grads[l], self.config.grad_shift, engine);
-        }
+        self.net.train_step(x, labels_rev, engine);
     }
 }
 
@@ -158,53 +162,44 @@ mod tests {
     use crate::nn::engine::EngineProfile;
     use crate::nn::linear::Weight;
 
+    fn weight_snapshot(mlp: &GlyphMlp, client: &ClientKeys) -> Vec<i64> {
+        mlp.fc_layers()
+            .iter()
+            .flat_map(|l| {
+                l.w.iter().flat_map(|row| {
+                    row.iter().map(|w| match w {
+                        Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
+                        Weight::Plain(p) => p.coeffs[0],
+                    })
+                })
+            })
+            .collect()
+    }
+
     #[test]
     fn tiny_mlp_trains_one_step_and_moves_weights() {
         let batch = 2;
         let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 1234);
         let mut rng = GlyphRng::new(99);
         let config = MlpConfig::tiny(3, 4, 2);
-        let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng);
-        // snapshot initial weights
-        let w_before: Vec<i64> = mlp
-            .layers
-            .iter()
-            .flat_map(|l| {
-                l.w.iter().flat_map(|row| {
-                    row.iter().map(|w| match w {
-                        Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                        Weight::Plain(p) => p.coeffs[0],
-                    })
-                })
-            })
-            .collect();
+        let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng, &engine).unwrap();
+        let w_before = weight_snapshot(&mlp, &client);
 
         // inputs: 3 features × batch 2
         let x_cols = vec![vec![40i64, -20], vec![10, 30], vec![-5, 25]];
         let x_cts = x_cols.iter().map(|v| client.encrypt_batch(v, 0)).collect();
-        let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+        let x = EncTensor::new(x_cts, vec![3], crate::nn::tensor::PackOrder::Forward, 0);
         // one-hot labels (reverse packed): class 0 for sample 0, class 1 for 1
         let mut l0 = vec![127i64, 0];
         let mut l1 = vec![0i64, 127];
         l0.reverse();
         l1.reverse();
         let lab_cts = vec![client.encrypt_batch(&l0, 0), client.encrypt_batch(&l1, 0)];
-        let labels = EncTensor::new(lab_cts, vec![2], PackOrder::Reversed, 0);
+        let labels = EncTensor::new(lab_cts, vec![2], crate::nn::tensor::PackOrder::Reversed, 0);
 
         mlp.train_step(&x, &labels, &engine);
 
-        let w_after: Vec<i64> = mlp
-            .layers
-            .iter()
-            .flat_map(|l| {
-                l.w.iter().flat_map(|row| {
-                    row.iter().map(|w| match w {
-                        Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                        Weight::Plain(p) => p.coeffs[0],
-                    })
-                })
-            })
-            .collect();
+        let w_after = weight_snapshot(&mlp, &client);
         assert_eq!(w_before.len(), w_after.len());
         assert_ne!(w_before, w_after, "training must move at least one weight");
         // all weights stay 9-bit-ish (8-bit ± one 8-bit step)
@@ -214,5 +209,38 @@ mod tests {
         assert!(s.mult_cc > 0 && s.act_gates > 0 && s.switch_b2t > 0 && s.switch_t2b > 0);
         // forward MACs: 3·4 + 4·2 = 20; backward error 4·2; gradients 20
         assert_eq!(s.mult_cc, 20 + 8 + 20);
+    }
+
+    #[test]
+    fn mismatched_shift_schedule_is_an_error_not_a_clamp() {
+        let batch = 2;
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 4321);
+        let mut rng = GlyphRng::new(1);
+        // 3 FC layers but only 2 act shifts: the old code clamped the index;
+        // the builder must refuse with a descriptive error.
+        let config = MlpConfig {
+            dims: vec![6, 5, 4, 3],
+            act_shifts: vec![8, 7],
+            err_shifts: vec![7, 7],
+            grad_shift: 8,
+            softmax_bits: 3,
+        };
+        let err = GlyphMlp::new_random(config, &mut client, &mut rng, &engine)
+            .err()
+            .expect("mismatched schedule must fail");
+        assert!(matches!(err, NetworkError::ShiftSchedule { .. }), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("3") && msg.contains("2"), "undiagnostic error: {msg}");
+    }
+
+    #[test]
+    fn paper_config_builds_a_valid_plan() {
+        let plan = MlpConfig::paper_mlp().builder().unwrap().compile(60).unwrap();
+        assert!(plan.validate());
+        // FC MACs of the paper MLP: forward + FC2/FC3 errors + gradients
+        let t = plan.totals();
+        let fwd = 784 * 128 + 128 * 32 + 32 * 10;
+        let err = 128 * 32 + 32 * 10;
+        assert_eq!(t.mult_cc as usize, fwd + err + fwd);
     }
 }

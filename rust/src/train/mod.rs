@@ -1,4 +1,6 @@
-//! FHE training loops (paper §2.4, §4, §6).
+//! FHE training loops (paper §2.4, §4, §6), all built on the plan-driven
+//! `nn::network` API — each model is one `NetworkBuilder` chain whose
+//! compiled `scheduler::Plan` drives execution.
 //!
 //! * [`glyph`] — the Glyph MLP: BGV MACs + TFHE ReLU/softmax via the
 //!   cryptosystem switch (Tables 3/7).
@@ -12,6 +14,6 @@ pub mod fhesgd;
 pub mod glyph;
 pub mod transfer;
 
-pub use fhesgd::FhesgdMlp;
+pub use fhesgd::{FhesgdMlp, SigmoidTluLayer, TluDomain};
 pub use glyph::{GlyphMlp, MlpConfig};
 pub use transfer::{CnnConfig, GlyphCnn};

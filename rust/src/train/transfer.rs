@@ -1,16 +1,19 @@
-//! Transfer learning (paper §4.3, Figure 6, Tables 4/8): the convolutional
-//! feature extractor is *frozen plaintext* (pre-trained on a public
-//! dataset — SVHN for MNIST, CIFAR-10 for Skin-Cancer), so its MACs are
-//! MultCP; only the two FC layers train on encrypted data.
+//! Transfer learning (paper §4.3, Figure 6, Tables 4/8) on the plan-driven
+//! `Network` API: the convolutional feature extractor is *frozen plaintext*
+//! (pre-trained on a public dataset — SVHN for MNIST, CIFAR-10 for
+//! Skin-Cancer), so its MACs are MultCP; only the FC head trains on
+//! encrypted data. The whole model is one `NetworkBuilder` chain
+//! (`.conv_frozen(..).batchnorm(..).relu(..).avg_pool()…flatten().fc(..)`),
+//! and the compiled plan's backward walk truncates at the head — exactly
+//! the paper's Table-4 row set.
 
-use super::glyph::{GlyphMlp, MlpConfig};
-use crate::nn::activation;
-use crate::nn::batchnorm::BnLayer;
-use crate::nn::conv::ConvLayer;
-use crate::nn::engine::{ClientKeys, GlyphEngine};
-use crate::nn::pool::avg_pool2;
-use crate::nn::tensor::{EncTensor, PackOrder};
+use super::glyph::MlpConfig;
 use crate::math::rng::GlyphRng;
+use crate::nn::batchnorm::BnLayer;
+use crate::nn::engine::{ClientKeys, GlyphEngine};
+use crate::nn::layer::Layer;
+use crate::nn::network::{Network, NetworkBuilder, NetworkError};
+use crate::nn::tensor::EncTensor;
 
 /// CNN architecture (paper §5.2): two conv+BN+ReLU+pool stages, then the
 /// trainable FC head.
@@ -85,22 +88,89 @@ impl CnnConfig {
             },
         }
     }
+
+    /// Flattened feature width after conv→pool→conv→pool.
+    pub fn feature_width(&self) -> Result<usize, NetworkError> {
+        let (_, h, w) = self.in_shape;
+        let k = self.kernel;
+        let step = |d: usize| -> Option<usize> {
+            let c = d.checked_sub(k - 1)?; // valid conv
+            if c < 2 {
+                return None;
+            }
+            Some(c / 2) // 2×2 pool
+        };
+        match (step(h).and_then(step), step(w).and_then(step)) {
+            (Some(fh), Some(fw)) if fh > 0 && fw > 0 => Ok(self.conv_channels.1 * fh * fw),
+            _ => Err(NetworkError::Shape {
+                unit: "cnn".into(),
+                detail: format!(
+                    "input {:?} too small for two {k}×{k} conv + 2×2 pool stages",
+                    self.in_shape
+                ),
+            }),
+        }
+    }
+
+    /// The frozen-feature chain (conv/BN/ReLU/pool ×2 + flatten) plus the
+    /// trainable head. `conv1`/`conv2` may be `None` for a *shape-only*
+    /// chain that compiles to a plan (the CLI `plan --cnn` path) but
+    /// cannot be built.
+    pub fn builder(
+        &self,
+        conv1: Option<Vec<Vec<Vec<Vec<i64>>>>>,
+        bn1: BnLayer,
+        conv2: Option<Vec<Vec<Vec<Vec<i64>>>>>,
+        bn2: BnLayer,
+    ) -> Result<NetworkBuilder, NetworkError> {
+        self.head.validate()?;
+        let feat = self.feature_width()?;
+        if feat != self.head.dims[0] {
+            return Err(NetworkError::Shape {
+                unit: "cnn head".into(),
+                detail: format!(
+                    "flattened features are {feat} wide but head.dims[0] is {}",
+                    self.head.dims[0]
+                ),
+            });
+        }
+        let (c, h, w) = self.in_shape;
+        let mut b = NetworkBuilder::input_image(c, h, w);
+        b = match conv1 {
+            Some(ker) => b.conv_frozen(ker),
+            None => b.conv_frozen_shape(self.conv_channels.0, self.kernel),
+        };
+        // frozen-stage ReLUs never run backward; reuse the act shift
+        b = b
+            .batchnorm(bn1)
+            .relu(self.conv_act_shifts.0, self.conv_act_shifts.0)
+            .avg_pool();
+        b = match conv2 {
+            Some(ker) => b.conv_frozen(ker),
+            None => b.conv_frozen_shape(self.conv_channels.1, self.kernel),
+        };
+        b = b
+            .batchnorm(bn2)
+            .relu(self.conv_act_shifts.1, self.conv_act_shifts.1)
+            .avg_pool()
+            .flatten();
+        Ok(self.head.append_to(b))
+    }
 }
 
 /// The Glyph CNN with a frozen feature extractor and a trainable head.
 pub struct GlyphCnn {
     pub config: CnnConfig,
-    pub conv1: ConvLayer,
-    pub bn1: BnLayer,
-    pub conv2: ConvLayer,
-    pub bn2: BnLayer,
-    pub head: GlyphMlp,
+    pub net: Network,
+    /// Units up to and including the flatten adapter (the frozen features).
+    feature_units: usize,
 }
 
 impl GlyphCnn {
     /// Build from pre-trained plaintext feature weights (8-bit) and random
-    /// encrypted head weights. `features` = (conv1 kernels, bn1, conv2
-    /// kernels, bn2) as produced by the L2 pre-training pipeline.
+    /// encrypted head weights. `conv1_w`/`conv2_w` are the L2 pre-training
+    /// pipeline's kernels.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         config: CnnConfig,
         conv1_w: &[Vec<Vec<Vec<i64>>>],
@@ -110,33 +180,33 @@ impl GlyphCnn {
         client: &mut ClientKeys,
         rng: &mut GlyphRng,
         engine: &GlyphEngine,
-    ) -> Self {
-        let conv1 = ConvLayer::new_plain(conv1_w, &engine.ctx.params, config.conv_act_shifts.0);
-        let conv2 = ConvLayer::new_plain(conv2_w, &engine.ctx.params, config.conv_act_shifts.1);
-        let head = GlyphMlp::new_random(config.head.clone(), client, rng);
-        GlyphCnn { config, conv1, bn1, conv2, bn2, head }
+    ) -> Result<Self, NetworkError> {
+        let builder = config.builder(Some(conv1_w.to_vec()), bn1, Some(conv2_w.to_vec()), bn2)?;
+        let net = builder.build(client, rng, engine)?;
+        let feature_units = net
+            .units
+            .iter()
+            .position(|u| u.name == "Flatten")
+            .expect("CNN chain always contains a flatten adapter")
+            + 1;
+        Ok(GlyphCnn { config, net, feature_units })
     }
 
-    /// Frozen forward: conv→BN→ReLU→pool twice, flatten.
+    /// Frozen forward: conv→BN→ReLU→pool twice, flatten (the plan's prefix
+    /// up to the trainable head).
     pub fn forward_features(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
-        let c1 = self.conv1.forward(x, engine);
-        let b1 = self.bn1.forward(&c1, engine);
-        let (a1, _) = activation::relu_layer(engine, &b1, self.config.conv_act_shifts.0, PackOrder::Forward);
-        let p1 = avg_pool2(&a1, engine);
-        let c2 = self.conv2.forward(&p1, engine);
-        let b2 = self.bn2.forward(&c2, engine);
-        let (a2, _) = activation::relu_layer(engine, &b2, self.config.conv_act_shifts.1, PackOrder::Forward);
-        let p2 = avg_pool2(&a2, engine);
-        // flatten CHW → vector (packing order preserved)
-        EncTensor::new(p2.cts, vec![p2.shape.iter().product()], p2.order, p2.shift)
+        let mut cur: Option<EncTensor> = None;
+        for u in &self.net.units[..self.feature_units] {
+            let (out, _state) = u.layer.forward(cur.as_ref().unwrap_or(x), engine);
+            cur = Some(out);
+        }
+        cur.expect("the feature extractor has at least one unit")
     }
 
-    /// One transfer-learning training step: frozen features + head SGD.
-    /// Note the feature tensor carries a pooling shift; the head's first
-    /// activation absorbs it (values stay 8-bit after the ReLU quantize).
+    /// One transfer-learning training step, walking the compiled plan:
+    /// frozen features forward-only, head SGD with backward truncation.
     pub fn train_step(&mut self, x: &EncTensor, labels_rev: &EncTensor, engine: &GlyphEngine) {
-        let feats = self.forward_features(x, engine);
-        self.head.train_step(&feats, labels_rev, engine);
+        self.net.train_step(x, labels_rev, engine);
     }
 }
 
@@ -144,6 +214,7 @@ impl GlyphCnn {
 mod tests {
     use super::*;
     use crate::nn::engine::EngineProfile;
+    use crate::nn::tensor::PackOrder;
 
     #[test]
     fn tiny_cnn_feature_shapes_and_training() {
@@ -167,7 +238,15 @@ mod tests {
         let c2w = rand_kernels(3, 2, 3, &mut rng);
         let bn1 = BnLayer { gain: vec![1, 1], bias: vec![0, 0], gain_shift: 0 };
         let bn2 = BnLayer { gain: vec![1, 1, 1], bias: vec![0, 0, 0], gain_shift: 0 };
-        let mut cnn = GlyphCnn::new(config, &c1w, bn1, &c2w, bn2, &mut client, &mut rng, &engine);
+        let mut cnn =
+            GlyphCnn::new(config, &c1w, bn1, &c2w, bn2, &mut client, &mut rng, &engine).unwrap();
+
+        // the compiled plan never trains or back-propagates into the
+        // frozen features
+        assert!(cnn.net.plan.validate());
+        assert!(!cnn.net.plan.steps.iter().any(|s| s.name.contains("Conv") && s.name.contains("gradient")));
+        assert!(!cnn.net.plan.steps.iter().any(|s| s.name == "Act1-error"));
+        assert!(cnn.net.plan.steps.iter().any(|s| s.name == "FC1-gradient"));
 
         // 14×14 input, batch 2
         let cts: Vec<_> = (0..14 * 14)
@@ -193,5 +272,16 @@ mod tests {
         let s = engine.counter.snapshot();
         assert!(s.mult_cp > 0, "frozen convs must use MultCP");
         assert!(s.mult_cc > 0, "head must use MultCC");
+    }
+
+    #[test]
+    fn mismatched_head_width_is_a_descriptive_error() {
+        let mut config = CnnConfig::tiny();
+        config.head.dims[0] = 99;
+        let bn1 = BnLayer { gain: vec![1, 1], bias: vec![0, 0], gain_shift: 0 };
+        let bn2 = BnLayer { gain: vec![1, 1, 1], bias: vec![0, 0, 0], gain_shift: 0 };
+        let err = config.builder(None, bn1, None, bn2).err().expect("must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("99") && msg.contains("12"), "undiagnostic error: {msg}");
     }
 }

@@ -25,7 +25,7 @@ fn cost_model_matches_live_counters() {
         grad_shift: 8,
         softmax_bits: 3,
     };
-    let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng);
+    let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng, &engine).unwrap();
     let x_cts = (0..5).map(|i| client.encrypt_batch(&vec![(i as i64) * 7 - 10; batch], 0)).collect();
     let x = EncTensor::new(x_cts, vec![5], PackOrder::Forward, 0);
     let lab_cts = (0..3).map(|k| client.encrypt_batch(&vec![if k == 0 { 127 } else { 0 }; batch], 0)).collect();

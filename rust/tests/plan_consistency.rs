@@ -1,0 +1,112 @@
+//! Plan/execution consistency: the regression guard for the Network/Plan
+//! redesign. A compiled `scheduler::Plan` carries exact per-step op counts;
+//! running one real encrypted `train_step` must bump the live `OpCounter`
+//! by *precisely* those totals — switches included. Any drift between what
+//! the scheduler promises and what execution does fails here.
+
+use glyph::math::GlyphRng;
+use glyph::nn::batchnorm::BnLayer;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::nn::network::NetworkBuilder;
+use glyph::nn::tensor::{EncTensor, PackOrder};
+use glyph::train::{CnnConfig, GlyphCnn};
+
+fn assert_counts_match(live: glyph::coordinator::OpSnapshot, predicted: glyph::coordinator::StepOps) {
+    assert_eq!(live.mult_cc, predicted.mult_cc, "MultCC: live {live:?} vs plan {predicted:?}");
+    assert_eq!(live.mult_cp, predicted.mult_cp, "MultCP: live {live:?} vs plan {predicted:?}");
+    assert_eq!(live.add_cc, predicted.add_cc, "AddCC: live {live:?} vs plan {predicted:?}");
+    assert_eq!(live.tlu, predicted.tlu, "TLU: live {live:?} vs plan {predicted:?}");
+    assert_eq!(live.act_gates, predicted.act_gates, "gates: live {live:?} vs plan {predicted:?}");
+    assert_eq!(
+        live.extract_pbs, predicted.extract_pbs,
+        "extract PBS: live {live:?} vs plan {predicted:?}"
+    );
+    assert_eq!(
+        live.switch_b2t, predicted.switch_b2t,
+        "B2T switches: live {live:?} vs plan {predicted:?}"
+    );
+    assert_eq!(
+        live.switch_t2b, predicted.switch_t2b,
+        "T2B switches: live {live:?} vs plan {predicted:?}"
+    );
+    assert_eq!(live.refresh, predicted.refresh, "refresh: live {live:?} vs plan {predicted:?}");
+}
+
+#[test]
+fn mlp_train_step_matches_compiled_plan_exactly() {
+    let batch = 2;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260728);
+    let mut rng = GlyphRng::new(17);
+    let mut net = NetworkBuilder::input_vec(3)
+        .fc(4)
+        .relu(8, 7)
+        .fc(2)
+        .softmax(3, 7)
+        .grad_shift(8)
+        .build(&mut client, &mut rng, &engine)
+        .unwrap();
+    assert!(net.plan.validate());
+    let predicted = net.plan.totals();
+    // the plan predicts a real switch mix, not zeros
+    assert!(predicted.switch_b2t > 0 && predicted.switch_t2b > 0 && predicted.act_gates > 0);
+
+    let x_cts = (0..3).map(|i| client.encrypt_batch(&[7 * i as i64 - 4, 9 - i as i64], 0)).collect();
+    let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+    let lab_cts = (0..2)
+        .map(|k| {
+            let mut v = vec![if k == 0 { 127i64 } else { 0 }, if k == 1 { 127 } else { 0 }];
+            v.reverse();
+            client.encrypt_batch(&v, 0)
+        })
+        .collect();
+    let labels = EncTensor::new(lab_cts, vec![2], PackOrder::Reversed, 0);
+
+    let before = engine.counter.snapshot();
+    net.train_step(&x, &labels, &engine);
+    let live = engine.counter.snapshot().since(&before);
+    assert_counts_match(live, predicted);
+}
+
+#[test]
+fn transfer_cnn_train_step_matches_compiled_plan_exactly() {
+    let batch = 2;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260729);
+    let mut rng = GlyphRng::new(23);
+    let config = CnnConfig::tiny();
+    let rand_kernels = |oc: usize, ic: usize, k: usize, rng: &mut GlyphRng| -> Vec<Vec<Vec<Vec<i64>>>> {
+        (0..oc)
+            .map(|_| {
+                (0..ic)
+                    .map(|_| {
+                        (0..k).map(|_| (0..k).map(|_| (rng.uniform_mod(7) as i64) - 3).collect()).collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let c1w = rand_kernels(2, 1, 3, &mut rng);
+    let c2w = rand_kernels(3, 2, 3, &mut rng);
+    let bn1 = BnLayer { gain: vec![1, 1], bias: vec![0, 0], gain_shift: 0 };
+    let bn2 = BnLayer { gain: vec![1, 1, 1], bias: vec![0, 0, 0], gain_shift: 0 };
+    let mut cnn =
+        GlyphCnn::new(config, &c1w, bn1, &c2w, bn2, &mut client, &mut rng, &engine).unwrap();
+    let predicted = cnn.net.plan.totals();
+    // frozen features are MultCP-dominated, head is MultCC — the plan
+    // carries the paper's transfer-learning split
+    assert!(predicted.mult_cp > predicted.mult_cc);
+
+    let cts: Vec<_> = (0..14 * 14)
+        .map(|i| client.encrypt_batch(&[(i % 9) as i64 - 4, (i % 5) as i64 - 2], 0))
+        .collect();
+    let x = EncTensor::new(cts, vec![1, 14, 14], PackOrder::Forward, 0);
+    let labels = EncTensor::new(
+        vec![client.encrypt_batch(&[0, 127], 0), client.encrypt_batch(&[127, 0], 0)],
+        vec![2],
+        PackOrder::Reversed,
+        0,
+    );
+    let before = engine.counter.snapshot();
+    cnn.train_step(&x, &labels, &engine);
+    let live = engine.counter.snapshot().since(&before);
+    assert_counts_match(live, predicted);
+}
