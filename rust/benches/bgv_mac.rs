@@ -1,0 +1,120 @@
+//! BGV MAC engine microbench: the retained per-term reference path (clone +
+//! `mul_assign` relin + `add_assign` per term) against the scratch-backed
+//! lazy-relinearization row engine (`mac_rows_many`), plus the cached vs
+//! uncached MultCP weight lift. Emits `bench_out/BENCH_bgv_mac.json` with a
+//! `counters` section recording the relinearizations-per-row accounting —
+//! the lazy path must save ≥ in_dim/2 relins per FC row (it saves
+//! `in_dim − 1`). `GLYPH_BENCH_FULL=1` runs the production-shaped profile.
+
+use glyph::bench_util::{full_profile, report_json_with_counters, time_op, BenchRecord};
+use glyph::bgv::{CachedPlaintext, MacTerm, Plaintext};
+use glyph::coordinator::max_threads;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+
+fn main() {
+    let profile = if full_profile() { EngineProfile::Default } else { EngineProfile::Test };
+    let batch = 4usize;
+    let (in_dim, out_dim) = (32usize, 8usize);
+    eprintln!(
+        "bgv_mac bench: {in_dim}-wide rows × {out_dim}, batch {batch}, {} profile",
+        if full_profile() { "full" } else { "test" }
+    );
+    let (engine, mut client) = GlyphEngine::setup(profile, batch, 20260728);
+
+    let ws: Vec<_> = (0..in_dim).map(|i| client.encrypt_scalar((i % 15) as i64 - 7)).collect();
+    let xs: Vec<_> = (0..in_dim)
+        .map(|i| {
+            let col: Vec<i64> = (0..batch).map(|b| ((i * 5 + b * 3) % 17) as i64 - 8).collect();
+            client.encrypt_batch(&col, 0)
+        })
+        .collect();
+    let iters = if full_profile() { 3 } else { 10 };
+
+    // --- reference: one relin per term --------------------------------------
+    let t_ref = time_op(iters, || {
+        let mut acc: Option<glyph::bgv::BgvCiphertext> = None;
+        for i in 0..in_dim {
+            let mut t = ws[i].clone();
+            t.mul_assign(&xs[i], &engine.rlk, &engine.ctx);
+            match &mut acc {
+                None => acc = Some(t),
+                Some(a) => a.add_assign(&t),
+            }
+        }
+        std::hint::black_box(acc.unwrap().c0.res[0][0]);
+    });
+
+    // --- lazy: one relin per row, counted -----------------------------------
+    let row: Vec<MacTerm> = ws.iter().zip(&xs).map(|(w, x)| MacTerm::Cc(w, x)).collect();
+    let single = vec![row.clone()];
+    // warm-up sizes the worker scratches
+    let _ = engine.mac_rows_many(&single);
+    let before = engine.counter.snapshot();
+    let t_lazy = time_op(iters, || {
+        let out = engine.mac_rows_many(&single);
+        std::hint::black_box(out[0].c0.res[0][0]);
+    });
+    let lazy_counts = engine.counter.snapshot().since(&before);
+    let relins_per_row_lazy = lazy_counts.relin / iters as u64;
+
+    // --- batched fan-out: out_dim rows across the pool ----------------------
+    let rows: Vec<Vec<MacTerm>> = (0..out_dim).map(|_| row.clone()).collect();
+    let t_rows = time_op(iters, || {
+        let out = engine.mac_rows_many(&rows);
+        std::hint::black_box(out[out_dim - 1].c0.res[0][0]);
+    });
+
+    // --- MultCP: per-call lift vs cached evaluation form --------------------
+    let wp_plain = Plaintext::encode_scalar(9, &engine.ctx.params);
+    let wp_cached = CachedPlaintext::new(wp_plain.clone(), &engine.ctx);
+    let cp_iters = iters * 10;
+    let t_cp_uncached = time_op(cp_iters, || {
+        let mut t = xs[0].clone();
+        t.mul_plain_assign(&wp_plain, &engine.ctx);
+        std::hint::black_box(t.c0.res[0][0]);
+    });
+    let t_cp_cached = time_op(cp_iters, || {
+        let mut t = xs[0].clone();
+        t.mul_plain_cached_assign(&wp_cached);
+        std::hint::black_box(t.c0.res[0][0]);
+    });
+
+    let relins_per_row_reference = in_dim as u64; // one relin per MultCC term
+    let threads = max_threads();
+    println!(
+        "fc_row({in_dim} terms): reference {t_ref:.4}s  lazy {t_lazy:.4}s  ({:.2}x)  \
+         {out_dim}-row fan-out {t_rows:.4}s",
+        t_ref / t_lazy
+    );
+    println!(
+        "mult_cp: uncached {:.6}s  cached {:.6}s  ({:.2}x)   relins/row: {} -> {}",
+        t_cp_uncached,
+        t_cp_cached,
+        t_cp_uncached / t_cp_cached,
+        relins_per_row_reference,
+        relins_per_row_lazy
+    );
+    assert!(
+        relins_per_row_reference - relins_per_row_lazy >= relins_per_row_reference / 2,
+        "lazy relin must save at least in_dim/2 relins per row"
+    );
+
+    let records = vec![
+        BenchRecord::new("fc_row_reference", t_ref, 1),
+        BenchRecord::new("fc_row_lazy", t_lazy, 1),
+        BenchRecord::new("fc_rows_fanout", t_rows / out_dim as f64, threads),
+        BenchRecord::new("mac_term_lazy", t_lazy / in_dim as f64, 1),
+        BenchRecord::new("mult_cp_uncached", t_cp_uncached, 1),
+        BenchRecord::new("mult_cp_cached", t_cp_cached, 1),
+    ];
+    report_json_with_counters(
+        "bgv_mac",
+        &records,
+        &[
+            ("in_dim", in_dim as u64),
+            ("relins_per_row_reference", relins_per_row_reference),
+            ("relins_per_row_lazy", relins_per_row_lazy),
+            ("relins_saved_per_row", relins_per_row_reference - relins_per_row_lazy),
+        ],
+    );
+}

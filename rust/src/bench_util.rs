@@ -73,6 +73,13 @@ impl BenchRecord {
 /// ops: [{op, secs_per_op, ops_per_sec, threads}]}`. Hand-rolled JSON — the
 /// vendored crate set has no serde; op names must not need escaping.
 pub fn report_json(name: &str, records: &[BenchRecord]) {
+    report_json_with_counters(name, records, &[]);
+}
+
+/// [`report_json`] plus a `counters` object of integer facts that are not
+/// timings — e.g. the relinearizations-per-row accounting of
+/// `benches/bgv_mac.rs`. Keys must not need JSON escaping.
+pub fn report_json_with_counters(name: &str, records: &[BenchRecord], counters: &[(&str, u64)]) {
     let profile = if full_profile() { "full" } else { "test" };
     let avail = crate::coordinator::executor::max_threads();
     let mut json = String::new();
@@ -89,7 +96,16 @@ pub fn report_json(name: &str, records: &[BenchRecord]) {
             r.threads
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ]");
+    if !counters.is_empty() {
+        json.push_str(",\n  \"counters\": {\n");
+        for (i, (k, v)) in counters.iter().enumerate() {
+            let sep = if i + 1 == counters.len() { "" } else { "," };
+            json.push_str(&format!("    \"{k}\": {v}{sep}\n"));
+        }
+        json.push_str("  }");
+    }
+    json.push_str("\n}\n");
     let _ = std::fs::create_dir_all("bench_out");
     let path = format!("bench_out/BENCH_{name}.json");
     if let Err(e) = std::fs::write(&path, &json) {

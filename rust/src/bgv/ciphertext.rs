@@ -9,10 +9,23 @@
 //!
 //! Ciphertexts are kept in NTT form; modulus switching round-trips through
 //! coefficient form internally.
+//!
+//! The per-term `mul_assign`/`mul_plain_assign` ops are retained as the
+//! reference oracle; the hot path is the scratch-backed MAC engine below
+//! ([`BgvScratch`] + [`mac_row`]): a whole `Σ_i w_i ⊗ x_i` row accumulates
+//! the raw tensor components `(d0, d1, d2)` in NTT form and relinearizes
+//! **once** at [`BgvScratch::relin_finalize`] instead of once per term —
+//! ~`in_dim`× fewer relinearizations per FC row. Every per-term accumulate
+//! and the `relin_finalize_into` finalizer are allocation-free (asserted
+//! by `tests/zero_alloc_bgv.rs`); the engine's [`mac_row`] additionally
+//! allocates the one *returned* output ciphertext per row, amortized over
+//! the row's terms. Equivalence against the reference path is locked by
+//! `tests/bgv_mac_equivalence.rs`.
 
-use super::encoding::Plaintext;
+use super::encoding::{CachedPlaintext, Plaintext};
 use super::keys::{BgvContext, RelinKey};
-use crate::math::poly::RnsPoly;
+use crate::math::poly::{RnsContext, RnsPoly};
+use std::sync::Arc;
 
 /// A degree-1 BGV ciphertext `(c0, c1)` with phase `c0 + c1·s = m + t·e`.
 #[derive(Clone)]
@@ -60,13 +73,22 @@ impl BgvCiphertext {
         self.c0.add_assign(&p);
     }
 
-    /// MultCP: multiply by a plaintext polynomial.
+    /// MultCP: multiply by a plaintext polynomial (reference path — redoes
+    /// the RNS lift + forward NTT per call; hot paths use the cached form).
     pub fn mul_plain_assign(&mut self, pt: &Plaintext, ctx: &BgvContext) {
         let rctx = ctx.ctx_at(self.level);
         let mut p = pt.to_rns(rctx, self.level);
         p.to_ntt();
         self.c0.mul_assign_ntt(&p);
         self.c1.mul_assign_ntt(&p);
+    }
+
+    /// MultCP against a precomputed evaluation-form weight: a pure
+    /// pointwise pass, no per-call `to_rns`/`to_ntt`.
+    pub fn mul_plain_cached_assign(&mut self, w: &CachedPlaintext) {
+        let p = w.ntt_at(self.level);
+        self.c0.mul_assign_ntt(p);
+        self.c1.mul_assign_ntt(p);
     }
 
     /// Multiply by a small integer scalar (noise ×|k|, no key material).
@@ -146,6 +168,204 @@ impl BgvCiphertext {
             self.mod_switch_down(ctx);
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// The scratch-backed, lazy-relinearization MAC engine (the BGV hot path).
+// ---------------------------------------------------------------------------
+
+/// One term of a deferred-relinearization MAC row.
+///
+/// A *row* is one output neuron's accumulation `Σ_i term_i`; all terms must
+/// share one level. `Cc` terms contribute to the degree-2 tensor
+/// accumulator (relinearized once at finalize), `Cp` terms are degree-1 and
+/// relin-free.
+#[derive(Clone, Copy)]
+pub enum MacTerm<'a> {
+    /// Encrypted weight ⊗ encrypted value (MultCC, lazy relin).
+    Cc(&'a BgvCiphertext, &'a BgvCiphertext),
+    /// Encrypted value × cached plaintext weight (MultCP).
+    Cp(&'a BgvCiphertext, &'a CachedPlaintext),
+}
+
+impl MacTerm<'_> {
+    /// The level the term's ciphertext operands live at.
+    pub fn level(&self) -> usize {
+        match self {
+            MacTerm::Cc(a, _) => a.level,
+            MacTerm::Cp(x, _) => x.level,
+        }
+    }
+}
+
+/// Reusable accumulation state for one worker's MAC rows.
+///
+/// Holds the NTT-domain tensor accumulators `(d0, d1, d2)` plus the digit
+/// polynomial of the relinearization, all sized on first use and reused
+/// across rows (`begin` re-zeros in place when the ring/level matches), so
+/// a steady-state MAC performs **zero** heap allocations.
+pub struct BgvScratch {
+    d0: Option<RnsPoly>,
+    d1: Option<RnsPoly>,
+    d2: Option<RnsPoly>,
+    /// Relinearization digit polynomial, reused across rows and limbs.
+    dig: Option<RnsPoly>,
+    /// Whether any `Cc` term touched `d2` (pure-`Cp` rows skip relin).
+    has_d2: bool,
+    level: usize,
+}
+
+impl BgvScratch {
+    pub fn new() -> Self {
+        BgvScratch { d0: None, d1: None, d2: None, dig: None, has_d2: false, level: 0 }
+    }
+
+    /// Whether a warm buffer can be reused for `(rctx, level)`: same ring
+    /// degree and the same prime-chain prefix (NTT tables are per-prime, so
+    /// matching primes ⇒ matching tables even across context instances).
+    fn fits(p: &Option<RnsPoly>, rctx: &Arc<RnsContext>, level: usize) -> bool {
+        match p {
+            Some(q) => {
+                q.level == level
+                    && q.n() == rctx.n
+                    && q.ctx.primes[..level] == rctx.primes[..level]
+            }
+            None => false,
+        }
+    }
+
+    /// Start a fresh accumulation at `level`. Steady state (same ring and
+    /// level as the previous row) re-zeros the warm buffers in place —
+    /// except `dig`, which every relinearization fully overwrites before
+    /// reading, and `d2` when the previous row never dirtied it (pure-`Cp`
+    /// rows — the dominant transfer-learning path — skip both).
+    pub fn begin(&mut self, rctx: &Arc<RnsContext>, level: usize) {
+        let d2_dirty = self.has_d2;
+        for (slot, clear) in [
+            (&mut self.d0, true),
+            (&mut self.d1, true),
+            (&mut self.d2, d2_dirty),
+            (&mut self.dig, false),
+        ] {
+            if Self::fits(slot, rctx, level) {
+                let p = slot.as_mut().expect("fits() checked Some");
+                if clear {
+                    p.clear();
+                }
+                p.is_ntt = true;
+            } else {
+                let mut p = RnsPoly::zero(rctx, level);
+                p.is_ntt = true;
+                *slot = Some(p);
+            }
+        }
+        self.has_d2 = false;
+        self.level = level;
+    }
+
+    /// MultCC accumulate without relinearization:
+    /// `(d0, d1, d2) += (a0·b0, a0·b1 + a1·b0, a1·b1)`.
+    pub fn mac_cc_tensor_into(&mut self, a: &BgvCiphertext, b: &BgvCiphertext) {
+        debug_assert_eq!(a.level, b.level, "level mismatch — mod-switch first");
+        debug_assert_eq!(a.level, self.level, "begin() at the operand level first");
+        debug_assert!(a.c0.is_ntt && b.c0.is_ntt);
+        self.d0.as_mut().expect("begin() first").mul_acc_ntt(&a.c0, &b.c0);
+        self.d1.as_mut().expect("begin() first").mul_acc2_ntt(&a.c0, &b.c1, &a.c1, &b.c0);
+        self.d2.as_mut().expect("begin() first").mul_acc_ntt(&a.c1, &b.c1);
+        self.has_d2 = true;
+    }
+
+    /// MultCP accumulate: `(d0, d1) += (x0·w, x1·w)` against the cached
+    /// evaluation-form weight (degree-1, relin-free).
+    pub fn mac_cp_into(&mut self, x: &BgvCiphertext, w: &CachedPlaintext) {
+        debug_assert_eq!(x.level, self.level, "begin() at the operand level first");
+        debug_assert!(x.c0.is_ntt);
+        let p = w.ntt_at(self.level);
+        self.d0.as_mut().expect("begin() first").mul_acc_ntt(&x.c0, p);
+        self.d1.as_mut().expect("begin() first").mul_acc_ntt(&x.c1, p);
+    }
+
+    /// Finalize the accumulated row into `out`: relinearize the degree-2
+    /// component **once** (the lazy-relin win: one relin per row instead of
+    /// one per `Cc` term), writing into `out`'s existing buffers — no heap
+    /// allocation. `out` must be a warm ciphertext at this row's level.
+    pub fn relin_finalize_into(&mut self, out: &mut BgvCiphertext, rlk: &RelinKey, ctx: &BgvContext) {
+        let level = self.level;
+        let d0 = self.d0.as_mut().expect("begin() first");
+        let d1 = self.d1.as_mut().expect("begin() first");
+        if self.has_d2 {
+            let d2 = self.d2.as_mut().expect("begin() first");
+            let dig = self.dig.as_mut().expect("begin() first");
+            d2.to_coeff();
+            let rctx = ctx.ctx_at(level);
+            let n = rctx.n;
+            for i in 0..level {
+                // digit polynomial = centered [d2]_{q_i}, lifted to all limbs
+                // (same decomposition as the reference `mul_assign`, built
+                // into the reusable `dig` buffer instead of fresh Vecs).
+                let qi = rctx.primes[i];
+                let half = qi / 2;
+                dig.is_ntt = false;
+                for l in 0..level {
+                    let p = rctx.primes[l];
+                    for j in 0..n {
+                        let v = d2.res[i][j];
+                        let c: i64 = if v > half { v as i64 - qi as i64 } else { v as i64 };
+                        dig.res[l][j] =
+                            if c >= 0 { (c as u64) % p } else { p - ((-c) as u64 % p) };
+                    }
+                }
+                dig.to_ntt();
+                let (k0, k1) = &rlk.rows[level - 1][i];
+                d0.mul_acc_ntt(dig, k0);
+                d1.mul_acc_ntt(dig, k1);
+            }
+        }
+        debug_assert_eq!(out.c0.level, level, "warm output at the row level required");
+        out.c0.copy_from(d0);
+        out.c1.copy_from(d1);
+        out.level = level;
+    }
+
+    /// Allocating convenience wrapper around [`Self::relin_finalize_into`].
+    pub fn relin_finalize(&mut self, rlk: &RelinKey, ctx: &BgvContext) -> BgvCiphertext {
+        let rctx = ctx.ctx_at(self.level);
+        let mut out = BgvCiphertext {
+            c0: RnsPoly::zero(rctx, self.level),
+            c1: RnsPoly::zero(rctx, self.level),
+            level: self.level,
+        };
+        self.relin_finalize_into(&mut out, rlk, ctx);
+        out
+    }
+}
+
+impl Default for BgvScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run one whole MAC row through `scratch`: accumulate every term, then
+/// relinearize once. The lazy-relin replacement for the per-term
+/// `mul_assign` + `add_assign` reference loop; bit-identical decryption is
+/// asserted by `tests/bgv_mac_equivalence.rs`.
+pub fn mac_row(
+    scratch: &mut BgvScratch,
+    terms: &[MacTerm],
+    rlk: &RelinKey,
+    ctx: &BgvContext,
+) -> BgvCiphertext {
+    assert!(!terms.is_empty(), "a MAC row needs at least one term");
+    let level = terms[0].level();
+    scratch.begin(ctx.ctx_at(level), level);
+    for t in terms {
+        match *t {
+            MacTerm::Cc(a, b) => scratch.mac_cc_tensor_into(a, b),
+            MacTerm::Cp(x, w) => scratch.mac_cp_into(x, w),
+        }
+    }
+    scratch.relin_finalize(rlk, ctx)
 }
 
 #[cfg(test)]
@@ -316,6 +536,133 @@ mod tests {
         let mut x = enc(&mut f, &[42, -17]);
         x.neg_assign();
         assert_eq!(dec(&f, &x, 2), vec![-42, 17]);
+    }
+
+    #[test]
+    fn cached_mult_cp_matches_reference() {
+        let mut f = fixture(11);
+        let x = enc(&mut f, &[5, -7, 11, 0]);
+        let w = Plaintext::encode_scalar(-6, &f.ctx.params);
+        let cached = CachedPlaintext::new(w.clone(), &f.ctx);
+        let mut a = x.clone();
+        a.mul_plain_assign(&w, &f.ctx);
+        let mut b = x.clone();
+        b.mul_plain_cached_assign(&cached);
+        // identical ciphertexts, not merely identical decryptions: the
+        // cached lift is the same polynomial the reference path computes
+        for i in 0..a.level {
+            assert_eq!(a.c0.res[i], b.c0.res[i], "limb {i}");
+            assert_eq!(a.c1.res[i], b.c1.res[i], "limb {i}");
+        }
+        assert_eq!(dec(&f, &b, 4), vec![-30, 42, -66, 0]);
+    }
+
+    #[test]
+    fn scratch_mac_row_decrypts_like_reference_loop() {
+        // 12 Cc terms + 4 Cp terms through the lazy-relin row vs the
+        // per-term reference accumulation.
+        let mut f = fixture(12);
+        let mut rng2 = GlyphRng::new(4096);
+        let mut terms_w = Vec::new();
+        let mut terms_x = Vec::new();
+        let mut plain_w = Vec::new();
+        let mut want = vec![0i64; 4];
+        for k in 0..16 {
+            let wv = (rng2.uniform_mod(31) as i64) - 15;
+            let xs: Vec<i64> = (0..4).map(|_| (rng2.uniform_mod(255) as i64) - 127).collect();
+            for b in 0..4 {
+                want[b] += wv * xs[b];
+            }
+            terms_x.push(enc(&mut f, &xs));
+            if k % 4 == 3 {
+                plain_w.push(Some(CachedPlaintext::scalar(wv, &f.ctx)));
+                terms_w.push(None);
+            } else {
+                plain_w.push(None);
+                terms_w.push(Some(enc(&mut f, &[wv])));
+            }
+        }
+        // reference: per-term relin + add
+        let mut reference: Option<BgvCiphertext> = None;
+        for k in 0..16 {
+            let term = match (&terms_w[k], &plain_w[k]) {
+                (Some(wct), None) => {
+                    let mut t = wct.clone();
+                    t.mul_assign(&terms_x[k], &f.rlk, &f.ctx);
+                    t
+                }
+                (None, Some(wpt)) => {
+                    let mut t = terms_x[k].clone();
+                    t.mul_plain_cached_assign(wpt);
+                    t
+                }
+                _ => unreachable!(),
+            };
+            match &mut reference {
+                None => reference = Some(term),
+                Some(a) => a.add_assign(&term),
+            }
+        }
+        // lazy: one scratch row, one relin
+        let row: Vec<MacTerm> = (0..16)
+            .map(|k| match (&terms_w[k], &plain_w[k]) {
+                (Some(wct), None) => MacTerm::Cc(wct, &terms_x[k]),
+                (None, Some(wpt)) => MacTerm::Cp(&terms_x[k], wpt),
+                _ => unreachable!(),
+            })
+            .collect();
+        let mut scratch = BgvScratch::new();
+        let fast = mac_row(&mut scratch, &row, &f.rlk, &f.ctx);
+        assert_eq!(dec(&f, &fast, 4), want);
+        assert_eq!(dec(&f, &reference.unwrap(), 4), want);
+    }
+
+    #[test]
+    fn scratch_reuse_across_rows_is_consistent() {
+        // The same scratch must produce correct rows back to back (warm
+        // buffers fully re-zeroed by begin()).
+        let mut f = fixture(13);
+        let mut scratch = BgvScratch::new();
+        for round in 0..3i64 {
+            let w = enc(&mut f, &[round + 2]);
+            let x = enc(&mut f, &[10, -20]);
+            let row = [MacTerm::Cc(&w, &x)];
+            let out = mac_row(&mut scratch, &row, &f.rlk, &f.ctx);
+            assert_eq!(dec(&f, &out, 2), vec![10 * (round + 2), -20 * (round + 2)], "round {round}");
+        }
+    }
+
+    #[test]
+    fn relin_finalize_into_reuses_warm_output() {
+        let mut f = fixture(14);
+        let w = enc(&mut f, &[3]);
+        let x = enc(&mut f, &[7, -9]);
+        let mut scratch = BgvScratch::new();
+        let mut out = mac_row(&mut scratch, &[MacTerm::Cc(&w, &x)], &f.rlk, &f.ctx);
+        // rerun with different operands into the warm output
+        let w2 = enc(&mut f, &[-5]);
+        scratch.begin(f.ctx.ctx_at(w2.level), w2.level);
+        scratch.mac_cc_tensor_into(&w2, &x);
+        scratch.relin_finalize_into(&mut out, &f.rlk, &f.ctx);
+        assert_eq!(dec(&f, &out, 2), vec![-35, 45]);
+    }
+
+    #[test]
+    fn pure_cp_row_skips_relin_and_matches() {
+        let mut f = fixture(15);
+        let x1 = enc(&mut f, &[4, -3]);
+        let x2 = enc(&mut f, &[1, 9]);
+        let w1 = CachedPlaintext::scalar(5, &f.ctx);
+        let w2 = CachedPlaintext::scalar(-2, &f.ctx);
+        let mut scratch = BgvScratch::new();
+        let out = mac_row(
+            &mut scratch,
+            &[MacTerm::Cp(&x1, &w1), MacTerm::Cp(&x2, &w2)],
+            &f.rlk,
+            &f.ctx,
+        );
+        // (4·5 + 1·−2, −3·5 + 9·−2)
+        assert_eq!(dec(&f, &out, 2), vec![18, -33]);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!   degree-0 polynomial scales every coefficient, i.e. a batch-wise scalar
 //!   MAC — semantically identical to the paper's slot packing.
 
+use super::keys::BgvContext;
 use super::params::BgvParams;
 use crate::math::poly::{RnsContext, RnsPoly};
 use std::sync::Arc;
@@ -58,6 +59,42 @@ impl Plaintext {
     }
 }
 
+/// A plaintext with its per-level NTT-domain RNS lifts precomputed once at
+/// construction — the evaluation-form weight cache behind MultCP. The old
+/// hot path redid `to_rns` + a full forward NTT on *every* ciphertext ×
+/// plaintext product; with the cache a MultCP is a pure pointwise pass
+/// (EXPERIMENTS.md §BGV MAC perf log).
+pub struct CachedPlaintext {
+    /// The underlying plaintext (kept for inspection / re-encoding).
+    pub pt: Plaintext,
+    /// `ntt[ℓ−1]` = the NTT-form lift at level ℓ (ℓ active limbs).
+    ntt: Vec<RnsPoly>,
+}
+
+impl CachedPlaintext {
+    /// Build the evaluation-form cache for every level of the chain.
+    pub fn new(pt: Plaintext, ctx: &BgvContext) -> Self {
+        let ntt = (1..=ctx.top_level())
+            .map(|level| {
+                let mut p = pt.to_rns(ctx.ctx_at(level), level);
+                p.to_ntt();
+                p
+            })
+            .collect();
+        CachedPlaintext { pt, ntt }
+    }
+
+    /// Encode-and-cache a weight scalar (the constant polynomial `w`).
+    pub fn scalar(w: i64, ctx: &BgvContext) -> Self {
+        Self::new(Plaintext::encode_scalar(w, &ctx.params), ctx)
+    }
+
+    /// The cached NTT-form lift at `level` active limbs.
+    pub fn ntt_at(&self, level: usize) -> &RnsPoly {
+        &self.ntt[level - 1]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +122,23 @@ mod tests {
     fn overflow_is_rejected() {
         let p = BgvParams::test_params();
         let _ = Plaintext::encode_batch(&[(p.t / 2) as i64 + 1], &p);
+    }
+
+    #[test]
+    fn cached_plaintext_matches_fresh_lift_at_every_level() {
+        let ctx = BgvContext::new(BgvParams::test_params());
+        let pt = Plaintext::encode_batch(&[5, -6, 7], &ctx.params);
+        let cached = CachedPlaintext::new(pt.clone(), &ctx);
+        for level in 1..=ctx.top_level() {
+            let mut fresh = pt.to_rns(ctx.ctx_at(level), level);
+            fresh.to_ntt();
+            let c = cached.ntt_at(level);
+            assert!(c.is_ntt);
+            assert_eq!(c.level, level);
+            for i in 0..level {
+                assert_eq!(c.res[i], fresh.res[i], "level {level} limb {i}");
+            }
+        }
     }
 
     #[test]

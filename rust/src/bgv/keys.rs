@@ -126,6 +126,17 @@ impl BgvSecretKey {
         Plaintext { coeffs, t }
     }
 
+    /// Remaining noise budget in bits: `log2(q_ℓ/2) − log2(max |t·e|)`.
+    /// The decryption margin the noise-budget regression test guards —
+    /// lazy relinearization must not silently eat it. Same small-parameter
+    /// restriction as [`Self::noise_magnitude`].
+    pub fn noise_margin_bits(&self, ct: &super::BgvCiphertext) -> f64 {
+        let noise = self.noise_magnitude(ct).max(1) as f64;
+        let rctx = self.ctx.ctx_at(ct.level);
+        let q_bits: f64 = rctx.primes[..ct.level].iter().map(|&p| (p as f64).log2()).sum();
+        (q_bits - 1.0) - noise.log2()
+    }
+
     /// Max |t·e| over coefficients (diagnostics; requires q_ℓ < 2^127, i.e.
     /// ≤ 3 limbs of 32-bit primes).
     pub fn noise_magnitude(&self, ct: &super::BgvCiphertext) -> i128 {
@@ -242,6 +253,10 @@ mod tests {
         // fresh noise ≈ t·(σ + convolution) — far below q/2
         assert!(noise < (ctx.params.t as i128) << 20, "noise={noise}");
         assert!(noise > 0);
+        // margin view of the same fact: ~96-bit q vs ~2^20·t noise
+        let margin = sk.noise_margin_bits(&ct);
+        assert!(margin > 40.0, "margin={margin}");
+        assert!(margin < 96.0, "margin={margin}");
     }
 
     #[test]

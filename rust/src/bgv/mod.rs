@@ -25,8 +25,8 @@ pub mod lut;
 pub mod params;
 pub mod refresh;
 
-pub use ciphertext::BgvCiphertext;
-pub use encoding::Plaintext;
+pub use ciphertext::{mac_row, BgvCiphertext, BgvScratch, MacTerm};
+pub use encoding::{CachedPlaintext, Plaintext};
 pub use keys::{BgvContext, BgvSecretKey, RelinKey};
 pub use params::BgvParams;
 pub use refresh::{KeyAuthority, NoiseRefresher};

@@ -16,7 +16,6 @@
 //! conventions) and pricing them; a plan compiled from a live network can
 //! be priced by the very same function.
 
-use super::executor::parallel_map;
 use super::scheduler::{Plan, PlanStep, StepOps, StepPhase, System};
 use crate::bgv::lut::LookupTable;
 use crate::nn::engine::{EngineProfile, GlyphEngine};
@@ -71,10 +70,12 @@ impl OpLatencies {
         let batch = if test_scale { 4 } else { 60 };
         let (engine, mut client) = GlyphEngine::setup(profile, batch, 20260710);
 
-        // MultCC / MultCP / AddCC on realistic operands.
+        // MultCC / MultCP / AddCC on realistic operands. MultCP is timed on
+        // the cached evaluation-form path — the one the layers actually run
+        // since the weight-cache redesign (pointwise only, no per-call NTT).
         let w = client.encrypt_scalar(9);
         let x = client.encrypt_batch(&vec![17; batch], 0);
-        let wp = crate::bgv::Plaintext::encode_scalar(9, &engine.ctx.params);
+        let wp = crate::bgv::CachedPlaintext::scalar(9, &engine.ctx);
         let iters = if test_scale { 20 } else { 50 };
         let t0 = Instant::now();
         for _ in 0..iters {
@@ -86,7 +87,7 @@ impl OpLatencies {
         let t0 = Instant::now();
         for _ in 0..iters {
             let mut t = x.clone();
-            t.mul_plain_assign(&wp, &engine.ctx);
+            t.mul_plain_cached_assign(&wp);
         }
         let mult_cp = t0.elapsed().as_secs_f64() / iters as f64;
 
@@ -495,23 +496,31 @@ pub fn overall_latency(minibatch_s: f64, batches_per_epoch: u64, epochs: u64, sp
 }
 
 /// Measure the thread-scaling speedup of a bundle of independent MACs
-/// (Table 5's parallel SGD argument).
+/// (Table 5's parallel SGD argument) — through the scratch-backed MAC
+/// engine, i.e. the path SGD actually runs since the lazy-relin redesign.
 pub fn measure_scaling(threads: usize, work_items: usize) -> f64 {
+    use crate::bgv::MacTerm;
+    use crate::coordinator::executor::GlyphPool;
     let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 4, 777);
-    let items: Vec<(crate::bgv::BgvCiphertext, crate::bgv::BgvCiphertext)> = (0..work_items)
-        .map(|i| (client.encrypt_scalar(i as i64 % 100), client.encrypt_batch(&[1, 2, 3, 4], 0)))
-        .collect();
+    let ws: Vec<crate::bgv::BgvCiphertext> =
+        (0..work_items).map(|i| client.encrypt_scalar(i as i64 % 100)).collect();
+    let xs: Vec<crate::bgv::BgvCiphertext> =
+        (0..work_items).map(|_| client.encrypt_batch(&[1, 2, 3, 4], 0)).collect();
+    let rows: Vec<Vec<MacTerm>> =
+        (0..work_items).map(|i| vec![MacTerm::Cc(&ws[i], &xs[i])]).collect();
     let t0 = Instant::now();
-    let _r = parallel_map(items.clone(), 1, |(mut w, x)| {
-        w.mul_assign(&x, &engine.rlk, &engine.ctx);
-        w
-    });
+    let _r = engine.mac_rows_limit(&rows, 1);
     let t1 = t0.elapsed().as_secs_f64();
+    // honor widths beyond the resident pool via a one-off pool (Table 5
+    // sweeps past the machine's core count) — spawned OUTSIDE the timed
+    // region so thread startup/join does not deflate the speedup
+    let wide_pool =
+        if threads > GlyphPool::global().threads() { Some(GlyphPool::new(threads)) } else { None };
     let t0 = Instant::now();
-    let _r = parallel_map(items, threads, |(mut w, x)| {
-        w.mul_assign(&x, &engine.rlk, &engine.ctx);
-        w
-    });
+    let _r = match &wide_pool {
+        Some(pool) => engine.mac_rows_on(pool, &rows),
+        None => engine.mac_rows_limit(&rows, threads),
+    };
     let tn = t0.elapsed().as_secs_f64();
     t1 / tn
 }

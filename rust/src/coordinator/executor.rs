@@ -6,9 +6,10 @@
 //! Table 5's 1→48-thread scaling sweep runs through this executor. The old
 //! implementation spawned fresh OS threads per call and took two mutex
 //! locks per item; this one keeps the threads alive across calls, hands out
-//! items with a single atomic fetch-add, and — crucially for the PBS hot
-//! path — owns one [`PbsScratch`] per worker, so a batched bootstrap fan-out
-//! reuses warm buffers instead of re-allocating per ciphertext
+//! items with a single atomic fetch-add, and — crucially for the PBS and
+//! BGV MAC hot paths — owns one [`WorkerScratch`] (PBS buffers + BGV MAC
+//! accumulators) per worker, so a batched bootstrap or MAC fan-out reuses
+//! warm buffers instead of re-allocating per ciphertext
 //! (EXPERIMENTS.md §Perf).
 //!
 //! Work submission is scoped: `map*` borrows its items and closure, blocks
@@ -16,6 +17,7 @@
 //! erasure goes through a monomorphized `unsafe fn` + shared-state pointer
 //! (the standard scoped-pool technique), so non-`'static` borrows are fine.
 
+use crate::bgv::BgvScratch;
 use crate::tfhe::scratch::PbsScratch;
 use std::cell::{Cell, UnsafeCell};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -23,13 +25,34 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+/// Per-worker scratch bundle: the TFHE PBS buffers *and* the BGV MAC
+/// accumulators — one of each per pool worker, so both hot paths (blind
+/// rotations and lazy-relin MAC rows) reuse warm buffers across batched
+/// fan-outs.
+pub struct WorkerScratch {
+    pub pbs: PbsScratch,
+    pub bgv: BgvScratch,
+}
+
+impl WorkerScratch {
+    pub fn new() -> Self {
+        WorkerScratch { pbs: PbsScratch::new(), bgv: BgvScratch::new() }
+    }
+}
+
+impl Default for WorkerScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// One queued unit of execution: the address of the scoped shared state
 /// (as a `usize`, so the job is trivially `Send`; validity is guaranteed by
 /// the submitter blocking until every executor signals completion) plus the
 /// monomorphized entry that knows its concrete type.
 struct RawJob {
     data: usize,
-    call: unsafe fn(usize, &mut PbsScratch),
+    call: unsafe fn(usize, &mut WorkerScratch),
 }
 
 thread_local! {
@@ -60,13 +83,13 @@ impl<T, R, F> MapShared<T, R, F>
 where
     T: Send,
     R: Send,
-    F: Fn(T, &mut PbsScratch) -> R + Sync,
+    F: Fn(T, &mut WorkerScratch) -> R + Sync,
 {
     /// Executor body: claim items until the queue is drained (or aborted by
     /// a panic), then signal completion. The *last* touch of `self` is the
     /// completion signal, which the submitter blocks on — that ordering is
     /// what makes the scoped borrow sound.
-    fn run(&self, scratch: &mut PbsScratch) {
+    fn run(&self, scratch: &mut WorkerScratch) {
         let n = self.items.len();
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
@@ -99,17 +122,17 @@ where
     }
 }
 
-unsafe fn run_erased<T, R, F>(data: usize, scratch: &mut PbsScratch)
+unsafe fn run_erased<T, R, F>(data: usize, scratch: &mut WorkerScratch)
 where
     T: Send,
     R: Send,
-    F: Fn(T, &mut PbsScratch) -> R + Sync,
+    F: Fn(T, &mut WorkerScratch) -> R + Sync,
 {
     let shared = &*(data as *const MapShared<T, R, F>);
     shared.run(scratch);
 }
 
-/// Persistent worker pool; one [`PbsScratch`] per worker.
+/// Persistent worker pool; one [`WorkerScratch`] per worker.
 pub struct GlyphPool {
     tx: Mutex<Option<Sender<RawJob>>>,
     threads: usize,
@@ -163,7 +186,7 @@ impl GlyphPool {
     where
         T: Send,
         R: Send,
-        F: Fn(T, &mut PbsScratch) -> R + Sync,
+        F: Fn(T, &mut WorkerScratch) -> R + Sync,
     {
         let n = items.len();
         if n == 0 {
@@ -171,7 +194,7 @@ impl GlyphPool {
         }
         let limit = limit.min(self.threads).min(n);
         if limit <= 1 || is_pool_worker() {
-            let mut scratch = PbsScratch::new();
+            let mut scratch = WorkerScratch::new();
             return items.into_iter().map(|t| f(t, &mut scratch)).collect();
         }
         let shared = MapShared {
@@ -214,7 +237,7 @@ impl GlyphPool {
     where
         T: Send,
         R: Send,
-        F: Fn(T, &mut PbsScratch) -> R + Sync,
+        F: Fn(T, &mut WorkerScratch) -> R + Sync,
     {
         self.map_limit_with(items, usize::MAX, f)
     }
@@ -246,7 +269,7 @@ impl Drop for GlyphPool {
 
 fn worker_loop(rx: &Mutex<Receiver<RawJob>>) {
     IS_POOL_WORKER.with(|f| f.set(true));
-    let mut scratch = PbsScratch::new();
+    let mut scratch = WorkerScratch::new();
     loop {
         let job = {
             let guard = rx.lock().expect("pool receiver");
@@ -339,7 +362,7 @@ mod tests {
         // size the scratch inside the job; the call must succeed and return
         // in order — and the scratch must be a real per-worker buffer.
         let out = pool.map_with((0..8usize).collect(), |i, scratch| {
-            let ring = scratch.ring(64);
+            let ring = scratch.pbs.ring(64);
             ring.dig[0] = i as i32;
             (i, ring.n)
         });

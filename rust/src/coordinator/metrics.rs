@@ -24,6 +24,9 @@ pub struct OpCounter {
     pub refresh: AtomicU64,
     /// BGV modulus switches.
     pub mod_switch: AtomicU64,
+    /// BGV relinearizations (one per reference MultCC; one per *row* on the
+    /// lazy-relin MAC engine — the saving `benches/bgv_mac.rs` reports).
+    pub relin: AtomicU64,
 }
 
 /// A plain-value snapshot of [`OpCounter`].
@@ -39,6 +42,7 @@ pub struct OpSnapshot {
     pub switch_t2b: u64,
     pub refresh: u64,
     pub mod_switch: u64,
+    pub relin: u64,
 }
 
 impl OpCounter {
@@ -54,6 +58,7 @@ impl OpCounter {
             switch_t2b: self.switch_t2b.load(Ordering::Relaxed),
             refresh: self.refresh.load(Ordering::Relaxed),
             mod_switch: self.mod_switch.load(Ordering::Relaxed),
+            relin: self.relin.load(Ordering::Relaxed),
         }
     }
 
@@ -77,6 +82,7 @@ impl OpSnapshot {
             switch_t2b: self.switch_t2b - earlier.switch_t2b,
             refresh: self.refresh - earlier.refresh,
             mod_switch: self.mod_switch - earlier.mod_switch,
+            relin: self.relin - earlier.relin,
         }
     }
 
@@ -90,7 +96,7 @@ impl std::fmt::Display for OpSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "HOP={} MultCC={} MultCP={} AddCC={} TLU={} Act={} PBS={} B2T={} T2B={} refresh={}",
+            "HOP={} MultCC={} MultCP={} AddCC={} TLU={} Act={} PBS={} B2T={} T2B={} refresh={} relin={}",
             self.hop(),
             self.mult_cc,
             self.mult_cp,
@@ -100,7 +106,8 @@ impl std::fmt::Display for OpSnapshot {
             self.extract_pbs,
             self.switch_b2t,
             self.switch_t2b,
-            self.refresh
+            self.refresh,
+            self.relin
         )
     }
 }

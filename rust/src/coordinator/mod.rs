@@ -11,6 +11,6 @@ pub use cost::{
     cnn_paper_plan, cnn_table, mlp_paper_plan, mlp_table, price_plan, price_step, to_markdown,
     total_row, CnnShape, OpLatencies, Scheme, TableRow,
 };
-pub use executor::{max_threads, parallel_map, GlyphPool};
+pub use executor::{max_threads, parallel_map, GlyphPool, WorkerScratch};
 pub use metrics::{OpCounter, OpSnapshot};
 pub use scheduler::{LayerKind, Plan, PlanLayer, PlanStep, StepOps, StepPhase, System};

@@ -176,6 +176,18 @@ impl NttTable {
         }
     }
 
+    /// Fused double multiply-accumulate `acc[i] += a[i]*b[i] + c[i]*d[i]
+    /// mod p` — the cross-term `c0·o1 + c1·o0` of a BGV tensor MAC in one
+    /// traversal instead of two `pointwise_acc` passes.
+    pub fn pointwise_acc2(&self, acc: &mut [u64], a: &[u64], b: &[u64], c: &[u64], d: &[u64]) {
+        let p = self.p;
+        let br = self.barrett;
+        for i in 0..acc.len() {
+            let cross = add_mod(barrett_mul(a[i], b[i], p, br), barrett_mul(c[i], d[i], p, br), p);
+            acc[i] = add_mod(acc[i], cross, p);
+        }
+    }
+
     /// Full negacyclic polynomial product (convenience; the hot paths keep
     /// operands in the NTT domain instead).
     pub fn negacyclic_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
@@ -259,6 +271,21 @@ mod tests {
         let mut acc = vec![1u64; 8];
         t.pointwise_acc(&mut acc, &[2; 8], &[3; 8]);
         assert!(acc.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn pointwise_acc2_matches_two_single_accs() {
+        let n = 64;
+        let t = NttTable::new(n, P);
+        let mut rng = GlyphRng::new(4242);
+        let mk = |rng: &mut GlyphRng| (0..n).map(|_| rng.next_u64() % P).collect::<Vec<u64>>();
+        let (a, b, c, d) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let mut fused = mk(&mut rng);
+        let mut split = fused.clone();
+        t.pointwise_acc2(&mut fused, &a, &b, &c, &d);
+        t.pointwise_acc(&mut split, &a, &b);
+        t.pointwise_acc(&mut split, &c, &d);
+        assert_eq!(fused, split);
     }
 
     #[test]

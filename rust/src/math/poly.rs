@@ -390,6 +390,32 @@ impl RnsPoly {
         }
     }
 
+    /// `self += a·b + c·d` (all in NTT form): the fused cross-term pass of
+    /// a tensor MAC — one limb traversal instead of two `mul_acc_ntt`s.
+    pub fn mul_acc2_ntt(&mut self, a: &Self, b: &Self, c: &Self, d: &Self) {
+        debug_assert!(self.is_ntt && a.is_ntt && b.is_ntt && c.is_ntt && d.is_ntt);
+        for i in 0..self.level {
+            self.ctx.ntts[i].pointwise_acc2(&mut self.res[i], &a.res[i], &b.res[i], &c.res[i], &d.res[i]);
+        }
+    }
+
+    /// Zero every residue in place (buffer reuse; no allocation).
+    pub fn clear(&mut self) {
+        for limb in self.res.iter_mut() {
+            limb.fill(0);
+        }
+    }
+
+    /// Copy residues and representation from `o` into this poly's existing
+    /// buffers (shapes must match; no allocation).
+    pub fn copy_from(&mut self, o: &Self) {
+        debug_assert_eq!(self.level, o.level, "level mismatch in copy_from");
+        for i in 0..self.level {
+            self.res[i].copy_from_slice(&o.res[i]);
+        }
+        self.is_ntt = o.is_ntt;
+    }
+
     /// Multiply by a scalar given as per-limb residues.
     pub fn scalar_mul_assign(&mut self, scalar_rns: &[u64]) {
         for i in 0..self.level {

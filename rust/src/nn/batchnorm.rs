@@ -6,7 +6,7 @@
 use super::engine::GlyphEngine;
 use super::layer::{bn_forward_ops, Layer, LayerPlanEntry, LayerState};
 use super::tensor::EncTensor;
-use crate::bgv::Plaintext;
+use crate::bgv::{CachedPlaintext, Plaintext};
 use crate::coordinator::scheduler::LayerKind;
 
 /// Frozen affine BN over the channel dimension of a CHW tensor.
@@ -41,7 +41,9 @@ impl BnLayer {
         let batch_positions = x.order.positions(engine.batch);
         let mut cts = Vec::with_capacity(x.len());
         for ch in 0..c {
-            let g = Plaintext::encode_scalar(self.gain[ch], params);
+            // one evaluation-form lift per channel, amortized over the h·w
+            // positions (the per-position MultCP is a pure pointwise pass)
+            let g = CachedPlaintext::scalar(self.gain[ch], &engine.ctx);
             // bias must be added at the tensor's running scale: b·2^(x.shift)
             let bias_val = self.bias[ch] << x.shift;
             let mut bias_coeffs = vec![0i64; params.n];
@@ -52,7 +54,7 @@ impl BnLayer {
             for y in 0..h {
                 for xx in 0..w {
                     let mut t = x.chw(ch, y, xx).clone();
-                    engine.mult_cp(&mut t, &g);
+                    engine.mult_cp_cached(&mut t, &g);
                     t.add_plain(&b, &engine.ctx);
                     cts.push(t);
                 }

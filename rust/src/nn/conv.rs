@@ -8,10 +8,11 @@
 
 use super::engine::GlyphEngine;
 use super::layer::{conv_forward_ops, Layer, LayerPlanEntry, LayerState};
-use super::linear::Weight;
+use super::linear::{shared_plain, Weight};
 use super::tensor::EncTensor;
-use crate::bgv::{BgvCiphertext, Plaintext};
+use crate::bgv::{BgvContext, MacTerm};
 use crate::coordinator::scheduler::LayerKind;
+use std::collections::HashMap;
 
 /// A 2-D convolution `out[oc] = Σ_ic k[oc][ic] * x[ic]`, valid, stride 1.
 pub struct ConvLayer {
@@ -24,11 +25,14 @@ pub struct ConvLayer {
 }
 
 impl ConvLayer {
-    /// Frozen plaintext kernels (transfer learning).
-    pub fn new_plain(init: &[Vec<Vec<Vec<i64>>>], params: &crate::bgv::BgvParams, out_shift: u32) -> Self {
+    /// Frozen plaintext kernels (transfer learning); one evaluation-form
+    /// lift per distinct tap value, cached at construction and shared
+    /// across the kernel bank.
+    pub fn new_plain(init: &[Vec<Vec<Vec<i64>>>], ctx: &BgvContext, out_shift: u32) -> Self {
         let out_ch = init.len();
         let in_ch = init[0].len();
         let k = init[0][0].len();
+        let mut cache = HashMap::new();
         let kernels = init
             .iter()
             .map(|oc| {
@@ -36,7 +40,9 @@ impl ConvLayer {
                     .map(|ic| {
                         ic.iter()
                             .map(|row| {
-                                row.iter().map(|&v| Weight::Plain(Plaintext::encode_scalar(v, params))).collect()
+                                row.iter()
+                                    .map(|&v| Weight::Plain(shared_plain(&mut cache, v, ctx)))
+                                    .collect()
                             })
                             .collect()
                     })
@@ -74,44 +80,32 @@ impl ConvLayer {
         (in_h - self.k + 1, in_w - self.k + 1)
     }
 
-    /// Forward convolution on a CHW tensor.
+    /// Forward convolution on a CHW tensor: one MAC row per output
+    /// position (`in_ch·k²` taps each), fanned across the pool through the
+    /// lazy-relin engine.
     pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
         assert_eq!(x.shape.len(), 3, "conv expects CHW");
         assert_eq!(x.shape[0], self.in_ch);
         let (in_h, in_w) = (x.shape[1], x.shape[2]);
         let (oh, ow) = self.out_hw(in_h, in_w);
-        let mut cts: Vec<BgvCiphertext> = Vec::with_capacity(self.out_ch * oh * ow);
+        let mut rows: Vec<Vec<MacTerm>> = Vec::with_capacity(self.out_ch * oh * ow);
         for oc in 0..self.out_ch {
             for y in 0..oh {
                 for xx in 0..ow {
-                    let mut acc: Option<BgvCiphertext> = None;
+                    let mut row = Vec::with_capacity(self.in_ch * self.k * self.k);
                     for ic in 0..self.in_ch {
                         for ky in 0..self.k {
                             for kx in 0..self.k {
                                 let xin = x.chw(ic, y + ky, xx + kx);
-                                let term = match &self.kernels[oc][ic][ky][kx] {
-                                    Weight::Plain(wpt) => {
-                                        let mut t = xin.clone();
-                                        engine.mult_cp(&mut t, wpt);
-                                        t
-                                    }
-                                    Weight::Enc(wct) => {
-                                        let mut t = wct.clone();
-                                        engine.mult_cc(&mut t, xin);
-                                        t
-                                    }
-                                };
-                                match &mut acc {
-                                    None => acc = Some(term),
-                                    Some(a) => engine.add_cc(a, &term),
-                                }
+                                row.push(self.kernels[oc][ic][ky][kx].term(xin));
                             }
                         }
                     }
-                    cts.push(acc.unwrap());
+                    rows.push(row);
                 }
             }
         }
+        let cts = engine.mac_rows_many(&rows);
         EncTensor::new(cts, vec![self.out_ch, oh, ow], x.order, x.shift)
     }
 }
@@ -165,7 +159,7 @@ mod tests {
             .collect();
         let x = EncTensor::new(cts, vec![1, 3, 3], PackOrder::Forward, 0);
         let kern = vec![vec![vec![vec![1i64, -1], vec![2, 0]]]];
-        let layer = ConvLayer::new_plain(&kern, &eng.ctx.params, 0);
+        let layer = ConvLayer::new_plain(&kern, &eng.ctx, 0);
         let out = layer.forward(&x, &eng);
         assert_eq!(out.shape, vec![1, 2, 2]);
         let reference = |img: &[[i64; 3]; 3], y: usize, x: usize| {

@@ -6,7 +6,11 @@
 //! keys) plus the refresh authority handle (the documented bootstrapping
 //! substitute, DESIGN.md §5).
 
-use crate::bgv::{BgvCiphertext, BgvContext, BgvParams, BgvSecretKey, KeyAuthority, Plaintext, RelinKey};
+use crate::bgv::{
+    mac_row, BgvCiphertext, BgvContext, BgvParams, BgvSecretKey, CachedPlaintext, KeyAuthority,
+    MacTerm, Plaintext, RelinKey,
+};
+use crate::coordinator::executor::GlyphPool;
 use crate::coordinator::metrics::OpCounter;
 use crate::math::rng::GlyphRng;
 use crate::switch::{BgvToTfheSwitch, TfheToBgvSwitch};
@@ -121,12 +125,73 @@ impl GlyphEngine {
 
     pub fn mult_cc(&self, acc: &mut BgvCiphertext, other: &BgvCiphertext) {
         self.counter.bump(&self.counter.mult_cc, 1);
+        self.counter.bump(&self.counter.relin, 1);
         acc.mul_assign(other, &self.rlk, &self.ctx);
+    }
+
+    // ---- the batched MAC engine --------------------------------------------
+
+    /// Run a batch of MAC rows (`rows[j]` = output neuron `j`'s
+    /// `Σ_i term_i`) through the lazy-relinearization scratch engine,
+    /// fanned across `pool` with one warm [`crate::bgv::BgvScratch`] per
+    /// worker. Order-preserving: `out[j]` is row `j`'s accumulation, and a
+    /// panicking row propagates to the caller.
+    ///
+    /// Op accounting is identical to the per-term reference loop (one
+    /// MultCC/MultCP per term, `len−1` AddCC per row), plus one `relin` per
+    /// row containing a `Cc` term — versus one per `Cc` term on the
+    /// reference path, the `≥ in_dim/2` saving `benches/bgv_mac.rs` records.
+    pub fn mac_rows_on(&self, pool: &GlyphPool, rows: &[Vec<MacTerm>]) -> Vec<BgvCiphertext> {
+        self.mac_rows_inner(pool, rows, usize::MAX)
+    }
+
+    /// [`Self::mac_rows_on`] across the global pool.
+    pub fn mac_rows_many(&self, rows: &[Vec<MacTerm>]) -> Vec<BgvCiphertext> {
+        self.mac_rows_inner(GlyphPool::global(), rows, usize::MAX)
+    }
+
+    /// [`Self::mac_rows_many`] with at most `limit` concurrent executors
+    /// (the Table-5 thread-scaling sweep).
+    pub fn mac_rows_limit(&self, rows: &[Vec<MacTerm>], limit: usize) -> Vec<BgvCiphertext> {
+        self.mac_rows_inner(GlyphPool::global(), rows, limit)
+    }
+
+    fn mac_rows_inner(
+        &self,
+        pool: &GlyphPool,
+        rows: &[Vec<MacTerm>],
+        limit: usize,
+    ) -> Vec<BgvCiphertext> {
+        let (mut cc, mut cp, mut adds, mut relins) = (0u64, 0u64, 0u64, 0u64);
+        for row in rows {
+            let c = row.iter().filter(|t| matches!(t, MacTerm::Cc(..))).count() as u64;
+            cc += c;
+            cp += row.len() as u64 - c;
+            adds += row.len().saturating_sub(1) as u64;
+            relins += u64::from(c > 0);
+        }
+        self.counter.bump(&self.counter.mult_cc, cc);
+        self.counter.bump(&self.counter.mult_cp, cp);
+        self.counter.bump(&self.counter.add_cc, adds);
+        self.counter.bump(&self.counter.relin, relins);
+        // the closure captures only Sync pieces (key material + rows)
+        let rlk = &self.rlk;
+        let ctx: &BgvContext = &self.ctx;
+        pool.map_limit_with((0..rows.len()).collect(), limit, |j, ws| {
+            mac_row(&mut ws.bgv, &rows[j], rlk, ctx)
+        })
     }
 
     pub fn mult_cp(&self, acc: &mut BgvCiphertext, pt: &Plaintext) {
         self.counter.bump(&self.counter.mult_cp, 1);
         acc.mul_plain_assign(pt, &self.ctx);
+    }
+
+    /// MultCP against a cached evaluation-form weight (counted identically
+    /// to [`Self::mult_cp`]; pure pointwise, no per-call NTT).
+    pub fn mult_cp_cached(&self, acc: &mut BgvCiphertext, w: &CachedPlaintext) {
+        self.counter.bump(&self.counter.mult_cp, 1);
+        acc.mul_plain_cached_assign(w);
     }
 
     pub fn add_cc(&self, acc: &mut BgvCiphertext, other: &BgvCiphertext) {
@@ -241,6 +306,75 @@ mod tests {
         assert_eq!(client.decrypt_batch(&w, 2, 0), vec![16, -14]);
         let s = engine.counter.snapshot();
         assert_eq!((s.mult_cc, s.add_cc), (1, 1));
+    }
+
+    #[test]
+    fn mac_rows_on_a_small_pool_preserves_submission_order() {
+        // More rows than pool workers: results must come back in
+        // submission order regardless of which worker ran which row.
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 45);
+        let n_rows = 9usize;
+        let ws: Vec<_> = (0..n_rows).map(|i| client.encrypt_scalar(i as i64 - 4)).collect();
+        let xs: Vec<_> =
+            (0..n_rows).map(|i| client.encrypt_batch(&[i as i64 + 1, -(i as i64)], 0)).collect();
+        let rows: Vec<Vec<MacTerm>> =
+            (0..n_rows).map(|i| vec![MacTerm::Cc(&ws[i], &xs[i])]).collect();
+        let pool = GlyphPool::new(2);
+        let out = engine.mac_rows_on(&pool, &rows);
+        assert_eq!(out.len(), n_rows);
+        for i in 0..n_rows {
+            let w = i as i64 - 4;
+            let want = vec![w * (i as i64 + 1), w * -(i as i64)];
+            assert_eq!(client.decrypt_batch(&out[i], 2, 0), want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn mac_rows_propagates_worker_panics_and_pool_survives() {
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 46);
+        let good_w = client.encrypt_scalar(2);
+        let good_x = client.encrypt_batch(&[1, 2], 0);
+        let mut low = client.encrypt_batch(&[3, 4], 0);
+        // level-mismatched operand: the bad row panics (in release mode via
+        // the limb index, in debug via the level assert)
+        low.mod_switch_down(&engine.ctx);
+        let pool = GlyphPool::new(2);
+        let rows: Vec<Vec<MacTerm>> = (0..6)
+            .map(|i| {
+                if i == 3 {
+                    vec![MacTerm::Cc(&good_w, &low)]
+                } else {
+                    vec![MacTerm::Cc(&good_w, &good_x)]
+                }
+            })
+            .collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.mac_rows_on(&pool, &rows)
+        }));
+        assert!(result.is_err(), "a level-mismatched row must panic through the pool");
+        // the pool must still serve subsequent batches
+        let out = engine.mac_rows_on(&pool, &rows[..1]);
+        assert_eq!(client.decrypt_batch(&out[0], 2, 0), vec![2, 4]);
+    }
+
+    #[test]
+    fn lazy_rows_count_one_relin_per_row() {
+        let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 47);
+        let ws: Vec<_> = (0..5).map(|i| client.encrypt_scalar(i as i64)).collect();
+        let x = client.encrypt_batch(&[1, -1], 0);
+        let row: Vec<MacTerm> = ws.iter().map(|w| MacTerm::Cc(w, &x)).collect();
+        let before = engine.counter.snapshot();
+        let _ = engine.mac_rows_many(&[row]);
+        let lazy = engine.counter.snapshot().since(&before);
+        assert_eq!((lazy.mult_cc, lazy.add_cc, lazy.relin), (5, 4, 1));
+        // the per-term reference path pays one relin per MultCC
+        let before = engine.counter.snapshot();
+        for w in &ws {
+            let mut t = w.clone();
+            engine.mult_cc(&mut t, &x);
+        }
+        let reference = engine.counter.snapshot().since(&before);
+        assert_eq!((reference.mult_cc, reference.relin), (5, 5));
     }
 
     #[test]

@@ -13,15 +13,42 @@ use super::layer::{
     fc_error_ops, fc_forward_ops, fc_gradient_ops, Layer, LayerGrads, LayerPlanEntry, LayerState,
 };
 use super::tensor::{EncTensor, PackOrder};
-use crate::bgv::{BgvCiphertext, Plaintext};
+use crate::bgv::{BgvCiphertext, BgvContext, CachedPlaintext, MacTerm};
 use crate::coordinator::scheduler::LayerKind;
 use crate::switch::extract::bit_position;
 use crate::tfhe::LweCiphertext;
+use std::collections::HashMap;
+use std::sync::Arc;
 
-/// A layer weight: encrypted (trainable) or plaintext (frozen).
+/// A layer weight: encrypted (trainable) or plaintext (frozen). Plaintext
+/// weights carry their per-level NTT-domain lifts ([`CachedPlaintext`],
+/// built once at construction and shared across equal weight values), so
+/// every MultCP against them is a pure pointwise pass.
 pub enum Weight {
     Enc(BgvCiphertext),
-    Plain(Plaintext),
+    Plain(Arc<CachedPlaintext>),
+}
+
+impl Weight {
+    /// The MAC-row term multiplying this weight with `x`.
+    pub fn term<'a>(&'a self, x: &'a BgvCiphertext) -> MacTerm<'a> {
+        match self {
+            Weight::Enc(wct) => MacTerm::Cc(wct, x),
+            Weight::Plain(wpt) => MacTerm::Cp(x, wpt.as_ref()),
+        }
+    }
+}
+
+/// One cached lift per *distinct* weight value, shared within a layer:
+/// frozen weights are 8-bit integers, so the cache is bounded at ≤256
+/// multi-level lifts per layer instead of one per weight (a paper-scale
+/// frozen layer would otherwise pay ~100KB + a full NTT set per weight).
+pub(crate) fn shared_plain(
+    cache: &mut HashMap<i64, Arc<CachedPlaintext>>,
+    v: i64,
+    ctx: &BgvContext,
+) -> Arc<CachedPlaintext> {
+    cache.entry(v).or_insert_with(|| Arc::new(CachedPlaintext::scalar(v, ctx))).clone()
 }
 
 /// A fully-connected layer `u = W·x (+ b)`.
@@ -51,104 +78,71 @@ impl FcLayer {
         FcLayer { w, bias: None, in_dim, out_dim, out_shift }
     }
 
-    /// Frozen plaintext layer (transfer learning).
-    pub fn new_plain(init: &[Vec<i64>], params: &crate::bgv::BgvParams, out_shift: u32) -> Self {
+    /// Frozen plaintext layer (transfer learning); caches one
+    /// evaluation-form lift per distinct weight value, shared across the
+    /// matrix.
+    pub fn new_plain(init: &[Vec<i64>], ctx: &BgvContext, out_shift: u32) -> Self {
         let out_dim = init.len();
         let in_dim = init[0].len();
+        let mut cache = HashMap::new();
         let w = init
             .iter()
-            .map(|row| row.iter().map(|&v| Weight::Plain(Plaintext::encode_scalar(v, params))).collect())
+            .map(|row| {
+                row.iter().map(|&v| Weight::Plain(shared_plain(&mut cache, v, ctx))).collect()
+            })
             .collect();
         FcLayer { w, bias: None, in_dim, out_dim, out_shift }
     }
 
-    /// Forward MACs: `u[j] = Σ_i w[j][i] ⊗ x[i]`. Output keeps `x`'s
-    /// packing order and accumulates scale `x.shift` (weights are 8-bit
-    /// integers at scale 0).
+    /// Forward MACs: `u[j] = Σ_i w[j][i] ⊗ x[i]`, one lazy-relin MAC row
+    /// per output neuron fanned across the pool (`mac_rows_many`). Output
+    /// keeps `x`'s packing order and accumulates scale `x.shift` (weights
+    /// are 8-bit integers at scale 0).
     pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
         assert_eq!(x.len(), self.in_dim);
-        let cts: Vec<BgvCiphertext> = (0..self.out_dim)
-            .map(|j| {
-                let mut acc: Option<BgvCiphertext> = None;
-                for i in 0..self.in_dim {
-                    let term = match &self.w[j][i] {
-                        Weight::Enc(wct) => {
-                            let mut t = wct.clone();
-                            engine.mult_cc(&mut t, &x.cts[i]);
-                            t
-                        }
-                        Weight::Plain(wpt) => {
-                            let mut t = x.cts[i].clone();
-                            engine.mult_cp(&mut t, wpt);
-                            t
-                        }
-                    };
-                    match &mut acc {
-                        None => acc = Some(term),
-                        Some(a) => engine.add_cc(a, &term),
-                    }
-                }
-                let mut u = acc.expect("in_dim ≥ 1");
-                if let Some(bias) = &self.bias {
-                    match &bias[j] {
-                        Weight::Enc(bct) => engine.add_cc(&mut u, bct),
-                        Weight::Plain(bpt) => u.add_plain(bpt, &engine.ctx),
-                    }
-                }
-                u
-            })
+        let rows: Vec<Vec<MacTerm>> = (0..self.out_dim)
+            .map(|j| (0..self.in_dim).map(|i| self.w[j][i].term(&x.cts[i])).collect())
             .collect();
+        let mut cts = engine.mac_rows_many(&rows);
+        if let Some(bias) = &self.bias {
+            for (j, u) in cts.iter_mut().enumerate() {
+                match &bias[j] {
+                    Weight::Enc(bct) => engine.add_cc(u, bct),
+                    Weight::Plain(bpt) => u.add_plain(&bpt.pt, &engine.ctx),
+                }
+            }
+        }
         EncTensor::new(cts, vec![self.out_dim], x.order, x.shift)
     }
 
     /// Backward error propagation: `δ_{l−1}[i] = Σ_j w[j][i] ⊗ δ_l[j]`
-    /// (before the iReLU mask). Keeps the reversed packing.
+    /// (before the iReLU mask), one MAC row per input neuron. Keeps the
+    /// reversed packing.
     pub fn backward_error(&self, delta: &EncTensor, engine: &GlyphEngine) -> EncTensor {
         assert_eq!(delta.len(), self.out_dim);
         assert_eq!(delta.order, PackOrder::Reversed);
-        let cts: Vec<BgvCiphertext> = (0..self.in_dim)
-            .map(|i| {
-                let mut acc: Option<BgvCiphertext> = None;
-                for j in 0..self.out_dim {
-                    let term = match &self.w[j][i] {
-                        Weight::Enc(wct) => {
-                            let mut t = wct.clone();
-                            engine.mult_cc(&mut t, &delta.cts[j]);
-                            t
-                        }
-                        Weight::Plain(wpt) => {
-                            let mut t = delta.cts[j].clone();
-                            engine.mult_cp(&mut t, wpt);
-                            t
-                        }
-                    };
-                    match &mut acc {
-                        None => acc = Some(term),
-                        Some(a) => engine.add_cc(a, &term),
-                    }
-                }
-                acc.unwrap()
-            })
+        let rows: Vec<Vec<MacTerm>> = (0..self.in_dim)
+            .map(|i| (0..self.out_dim).map(|j| self.w[j][i].term(&delta.cts[j])).collect())
             .collect();
+        let cts = engine.mac_rows_many(&rows);
         EncTensor::new(cts, vec![self.in_dim], PackOrder::Reversed, delta.shift)
     }
 
     /// Gradient MACs: `∇w[j][i] = Σ_b x[b][i]·δ[b][j]`, one MultCC each —
     /// forward-packed x × reverse-packed δ leaves the batch sum at
-    /// coefficient `batch−1`.
+    /// coefficient `batch−1`. All `out·in` products fan across the pool as
+    /// single-term rows.
     pub fn gradients(&self, x: &EncTensor, delta: &EncTensor, engine: &GlyphEngine) -> Vec<Vec<BgvCiphertext>> {
         assert_eq!(x.order, PackOrder::Forward);
         assert_eq!(delta.order, PackOrder::Reversed);
-        (0..self.out_dim)
-            .map(|j| {
-                (0..self.in_dim)
-                    .map(|i| {
-                        let mut g = x.cts[i].clone();
-                        engine.mult_cc(&mut g, &delta.cts[j]);
-                        g
-                    })
-                    .collect()
+        let rows: Vec<Vec<MacTerm>> = (0..self.out_dim)
+            .flat_map(|j| {
+                (0..self.in_dim).map(move |i| vec![MacTerm::Cc(&x.cts[i], &delta.cts[j])])
             })
+            .collect();
+        let mut flat = engine.mac_rows_many(&rows).into_iter();
+        (0..self.out_dim)
+            .map(|_| (0..self.in_dim).map(|_| flat.next().expect("out·in rows")).collect())
             .collect()
     }
 
@@ -156,6 +150,11 @@ impl FcLayer {
     /// the batch-sum coefficient with an effective learning-rate shift) and
     /// subtract from the encrypted weights. `grad_shift` plays the role of
     /// `−log2(lr · scale⁻¹)`: the extracted 8-bit step is `∇ >> grad_shift`.
+    ///
+    /// The switch-side repack is batched: all weights' recomposition gates
+    /// (8 bits × every trainable weight) go through one
+    /// `gate_and_weighted_many` fan-out across the pool instead of a serial
+    /// per-weight loop — same ciphertexts, same op counts.
     pub fn apply_gradients(
         &mut self,
         grads: &[Vec<BgvCiphertext>],
@@ -166,28 +165,43 @@ impl FcLayer {
         assert!(grad_shift <= frac);
         let pre_shift = frac - grad_shift;
         let sum_pos = engine.batch - 1;
+        // 1. bits of every batch-summed gradient (position batch−1)
+        let mut targets: Vec<(usize, usize)> = Vec::new();
+        let mut all_bits: Vec<Vec<LweCiphertext>> = Vec::new();
         for (j, row) in grads.iter().enumerate() {
             for (i, g) in row.iter().enumerate() {
-                if let Weight::Enc(wct) = &mut self.w[j][i] {
-                    // bits of the batch-summed gradient (position batch−1)
-                    let bits = engine.switch_to_bits(g, &[sum_pos], pre_shift);
-                    // identity recomposition at the weighted positions
-                    let truth = LweCiphertext::trivial(
-                        crate::tfhe::encode_bit(true),
-                        engine.gate_ck.params.n,
-                    );
-                    let mut acc: Option<LweCiphertext> = None;
-                    for (bi, b) in bits[0].iter().enumerate() {
-                        let w = engine.gate_and_weighted(b, &truth, bit_position(bi));
-                        match &mut acc {
-                            None => acc = Some(w),
-                            Some(a) => a.add_assign(&w),
-                        }
-                    }
-                    // fresh constant-poly gradient step at coefficient 0
-                    let step = engine.switch_to_bgv(&[acc.unwrap()], &[0]);
-                    engine.sub_cc(wct, &step);
+                if matches!(self.w[j][i], Weight::Enc(_)) {
+                    let mut bits = engine.switch_to_bits(g, &[sum_pos], pre_shift);
+                    all_bits.push(bits.swap_remove(0));
+                    targets.push((j, i));
                 }
+            }
+        }
+        if targets.is_empty() {
+            return;
+        }
+        // 2. identity recomposition at the weighted positions — one pooled
+        //    fan-out over all weights × bits
+        let truth = LweCiphertext::trivial(crate::tfhe::encode_bit(true), engine.gate_ck.params.n);
+        let jobs: Vec<(&LweCiphertext, &LweCiphertext, u32)> = all_bits
+            .iter()
+            .flat_map(|bits| {
+                bits.iter().enumerate().map(|(bi, b)| (b, &truth, bit_position(bi)))
+            })
+            .collect();
+        let weighted = engine.gate_and_weighted_many(&jobs);
+        // 3. per weight: sum its bit contributions, raise, subtract
+        let bits_per = all_bits[0].len();
+        for (t, chunk) in weighted.chunks(bits_per).enumerate() {
+            let mut acc = chunk[0].clone();
+            for w in &chunk[1..] {
+                acc.add_assign(w);
+            }
+            // fresh constant-poly gradient step at coefficient 0
+            let step = engine.switch_to_bgv(&[acc], &[0]);
+            let (j, i) = targets[t];
+            if let Weight::Enc(wct) = &mut self.w[j][i] {
+                engine.sub_cc(wct, &step);
             }
         }
     }
@@ -285,7 +299,7 @@ mod tests {
     fn plain_weights_use_mult_cp() {
         let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 701);
         let w = vec![vec![3i64, 3]];
-        let layer = FcLayer::new_plain(&w, &eng.ctx.params, 0);
+        let layer = FcLayer::new_plain(&w, &eng.ctx, 0);
         let x = enc_x(&mut client, &vec![vec![4i64, -4], vec![1, 1]]);
         let u = layer.forward(&x, &eng);
         assert_eq!(client.decrypt_batch(&u.cts[0], 2, 0), vec![15, -9]);

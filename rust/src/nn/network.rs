@@ -523,7 +523,7 @@ impl NetworkBuilder {
                     if enc {
                         Box::new(FcLayer::new_encrypted(&w, client, next_shift[i]))
                     } else {
-                        Box::new(FcLayer::new_plain(&w, &engine.ctx.params, next_shift[i]))
+                        Box::new(FcLayer::new_plain(&w, &engine.ctx, next_shift[i]))
                     }
                 }
                 LayerSpec::Conv { init, enc, .. } => {
@@ -534,7 +534,7 @@ impl NetworkBuilder {
                     if enc {
                         Box::new(ConvLayer::new_encrypted(&ker, client, next_shift[i]))
                     } else {
-                        Box::new(ConvLayer::new_plain(&ker, &engine.ctx.params, next_shift[i]))
+                        Box::new(ConvLayer::new_plain(&ker, &engine.ctx, next_shift[i]))
                     }
                 }
                 LayerSpec::BatchNorm { bn } => Box::new(bn),
@@ -818,7 +818,7 @@ mod tests {
                 l.w.iter().flat_map(|row| {
                     row.iter().map(|w| match w {
                         crate::nn::linear::Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                        crate::nn::linear::Weight::Plain(p) => p.coeffs[0],
+                        crate::nn::linear::Weight::Plain(p) => p.pt.coeffs[0],
                     })
                 })
             })
@@ -831,7 +831,7 @@ mod tests {
                 l.w.iter().flat_map(|row| {
                     row.iter().map(|w| match w {
                         crate::nn::linear::Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                        crate::nn::linear::Weight::Plain(p) => p.coeffs[0],
+                        crate::nn::linear::Weight::Plain(p) => p.pt.coeffs[0],
                     })
                 })
             })

@@ -164,7 +164,7 @@ impl BootstrapKey {
     /// [`GlyphPool`]: crate::coordinator::executor::GlyphPool
     pub fn bootstrap_many(&self, lwes: Vec<LweCiphertext>, testv: &TestPoly) -> Vec<LweCiphertext> {
         crate::coordinator::executor::GlyphPool::global()
-            .map_with(lwes, |lwe, s| self.bootstrap_with(&lwe, testv, s))
+            .map_with(lwes, |lwe, s| self.bootstrap_with(&lwe, testv, &mut s.pbs))
     }
 }
 

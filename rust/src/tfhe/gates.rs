@@ -60,14 +60,14 @@ impl TfheCloudKey {
     /// bit-exact against the sequential loop.
     pub fn pbs_many(&self, lins: Vec<LweCiphertext>, tv: &TestPoly) -> Vec<LweCiphertext> {
         GlyphPool::global().map_with(lins, |lin, scratch| {
-            let boot = self.bk.bootstrap_with(&lin, tv, scratch);
+            let boot = self.bk.bootstrap_with(&lin, tv, &mut scratch.pbs);
             self.ksk.switch(&boot)
         })
     }
 
     /// Batched [`Self::pbs_raw`] (no key switch).
     pub fn pbs_raw_many(&self, lins: Vec<LweCiphertext>, tv: &TestPoly) -> Vec<LweCiphertext> {
-        GlyphPool::global().map_with(lins, |lin, scratch| self.bk.bootstrap_with(&lin, tv, scratch))
+        GlyphPool::global().map_with(lins, |lin, scratch| self.bk.bootstrap_with(&lin, tv, &mut scratch.pbs))
     }
 
     /// Batched HomoAND: one gate bootstrap per `(c1, c2)` pair across the
@@ -79,7 +79,7 @@ impl TfheCloudKey {
             let mut lin = c1.clone();
             lin.add_assign(c2);
             lin.add_constant(MU_BIT.wrapping_neg());
-            let boot = self.bk.bootstrap_sign_with(&lin, &tv, scratch);
+            let boot = self.bk.bootstrap_sign_with(&lin, &tv, &mut scratch.pbs);
             self.ksk.switch(&boot)
         })
     }
@@ -106,7 +106,7 @@ impl TfheCloudKey {
             lin.add_assign(c2);
             lin.add_constant(MU_BIT.wrapping_neg());
             let mu = 1u32 << (pos - 1);
-            let mut out = self.bk.bootstrap_sign_with(&lin, tv, scratch);
+            let mut out = self.bk.bootstrap_sign_with(&lin, tv, &mut scratch.pbs);
             out.add_constant(mu); // {0, 2^pos}
             out
         })

@@ -169,7 +169,7 @@ mod tests {
                 l.w.iter().flat_map(|row| {
                     row.iter().map(|w| match w {
                         Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                        Weight::Plain(p) => p.coeffs[0],
+                        Weight::Plain(p) => p.pt.coeffs[0],
                     })
                 })
             })

@@ -1,0 +1,273 @@
+//! Equivalence of the scratch/lazy-relinearization BGV MAC path against the
+//! retained per-term reference path (`mul_assign`/`mul_plain_assign` +
+//! `add_assign`), mirroring `pbs_equivalence.rs` on the BGV side: for fixed
+//! RNG seeds, both paths must *decrypt bit-identically* — same plaintext
+//! coefficients over the whole ring, not merely close values — for MultCP
+//! and MultCC weights, across forward/backward/gradient MAC shapes and
+//! across the levels of the modulus chain.
+//!
+//! (The ciphertext *phases* legitimately differ: the reference path adds
+//! one relinearization error per `Cc` term, the lazy path exactly one per
+//! row — that is the point of the optimization. Equality of every decoded
+//! plaintext coefficient is the correctness contract.)
+
+use glyph::bgv::{
+    mac_row, BgvCiphertext, BgvContext, BgvScratch, BgvSecretKey, CachedPlaintext, MacTerm,
+    Plaintext, RelinKey,
+};
+use glyph::math::GlyphRng;
+use glyph::nn::engine::{ClientKeys, EngineProfile, GlyphEngine};
+use glyph::nn::linear::FcLayer;
+use glyph::nn::tensor::{EncTensor, PackOrder};
+use std::sync::Arc;
+
+struct Fx {
+    ctx: Arc<BgvContext>,
+    sk: BgvSecretKey,
+    rlk: RelinKey,
+    rng: GlyphRng,
+}
+
+fn fixture(seed: u64) -> Fx {
+    let ctx = BgvContext::new(glyph::bgv::BgvParams::test_params());
+    let mut rng = GlyphRng::new(seed);
+    let sk = BgvSecretKey::generate(&ctx, &mut rng);
+    let rlk = RelinKey::generate(&sk, &mut rng);
+    Fx { ctx, sk, rlk, rng }
+}
+
+fn enc_at(f: &mut Fx, vals: &[i64], level: usize) -> BgvCiphertext {
+    let pt = Plaintext::encode_batch(vals, &f.ctx.params);
+    f.sk.encrypt_at(&pt, level, &mut f.rng)
+}
+
+/// Whole-ring decryption (every coefficient, not just the batch lanes).
+fn dec_full(f: &Fx, ct: &BgvCiphertext) -> Vec<i64> {
+    f.sk.decrypt(ct).coeffs
+}
+
+/// Reference accumulation: per-term relinearization + AddCC.
+fn reference_row(f: &Fx, terms: &[MacTerm]) -> BgvCiphertext {
+    let mut acc: Option<BgvCiphertext> = None;
+    for t in terms {
+        let product = match *t {
+            MacTerm::Cc(a, b) => {
+                let mut p = a.clone();
+                p.mul_assign(b, &f.rlk, &f.ctx);
+                p
+            }
+            MacTerm::Cp(x, w) => {
+                let mut p = x.clone();
+                p.mul_plain_cached_assign(w);
+                p
+            }
+        };
+        match &mut acc {
+            None => acc = Some(product),
+            Some(a) => a.add_assign(&product),
+        }
+    }
+    acc.expect("row has terms")
+}
+
+#[test]
+fn mult_cc_rows_decrypt_identically_across_levels() {
+    // MultCC + relinearization needs at least two limbs of headroom (the
+    // digit × key-error convolution is ~2^58 at test scale, vs q_1/2 ≈
+    // 2^31), matching real engine usage: relin never runs at the bottom
+    // level. Levels 2..=top are the chain the MAC engine actually serves.
+    let mut f = fixture(20260728);
+    let mut scratch = BgvScratch::new();
+    for level in 2..=f.ctx.top_level() {
+        for in_dim in [1usize, 2, 7, 16] {
+            let mut ws = Vec::new();
+            let mut xs = Vec::new();
+            let mut rng = GlyphRng::new(level as u64 * 1000 + in_dim as u64);
+            for _ in 0..in_dim {
+                let wv = (rng.uniform_mod(31) as i64) - 15;
+                let xv: Vec<i64> =
+                    (0..4).map(|_| (rng.uniform_mod(255) as i64) - 127).collect();
+                ws.push(enc_at(&mut f, &[wv], level));
+                xs.push(enc_at(&mut f, &xv, level));
+            }
+            let row: Vec<MacTerm> =
+                ws.iter().zip(&xs).map(|(w, x)| MacTerm::Cc(w, x)).collect();
+            let fast = mac_row(&mut scratch, &row, &f.rlk, &f.ctx);
+            let reference = reference_row(&f, &row);
+            assert_eq!(fast.level, level);
+            assert_eq!(
+                dec_full(&f, &fast),
+                dec_full(&f, &reference),
+                "level {level}, in_dim {in_dim}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mult_cp_rows_decrypt_identically_across_every_level() {
+    // MultCP is relin-free, so it runs clean at *every* level including the
+    // bottom limb (small weights keep the noise inside q_1/2).
+    let mut f = fixture(20260729);
+    let mut scratch = BgvScratch::new();
+    for level in 1..=f.ctx.top_level() {
+        for in_dim in [1usize, 3, 9] {
+            let mut rng = GlyphRng::new(level as u64 * 77 + in_dim as u64);
+            let mut xs = Vec::new();
+            let mut wps = Vec::new();
+            for _ in 0..in_dim {
+                let wv = (rng.uniform_mod(15) as i64) - 7;
+                let xv: Vec<i64> = (0..4).map(|_| (rng.uniform_mod(31) as i64) - 15).collect();
+                xs.push(enc_at(&mut f, &xv, level));
+                wps.push(CachedPlaintext::scalar(wv, &f.ctx));
+            }
+            let row: Vec<MacTerm> =
+                xs.iter().zip(&wps).map(|(x, w)| MacTerm::Cp(x, w)).collect();
+            let fast = mac_row(&mut scratch, &row, &f.rlk, &f.ctx);
+            let reference = reference_row(&f, &row);
+            assert_eq!(
+                dec_full(&f, &fast),
+                dec_full(&f, &reference),
+                "level {level}, in_dim {in_dim}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_cc_cp_rows_decrypt_identically() {
+    let mut f = fixture(20260730);
+    let mut scratch = BgvScratch::new();
+    let level = f.ctx.top_level();
+    let mut rng = GlyphRng::new(99);
+    let mut ws = Vec::new();
+    let mut xs = Vec::new();
+    let mut wps = Vec::new();
+    for _ in 0..6 {
+        let wv = (rng.uniform_mod(31) as i64) - 15;
+        let xv: Vec<i64> = (0..4).map(|_| (rng.uniform_mod(255) as i64) - 127).collect();
+        ws.push(enc_at(&mut f, &[wv], level));
+        xs.push(enc_at(&mut f, &xv, level));
+        wps.push(CachedPlaintext::scalar(wv - 1, &f.ctx));
+    }
+    let row: Vec<MacTerm> = (0..6)
+        .map(|i| {
+            if i % 2 == 0 {
+                MacTerm::Cc(&ws[i], &xs[i])
+            } else {
+                MacTerm::Cp(&xs[i], &wps[i])
+            }
+        })
+        .collect();
+    let fast = mac_row(&mut scratch, &row, &f.rlk, &f.ctx);
+    let reference = reference_row(&f, &row);
+    assert_eq!(dec_full(&f, &fast), dec_full(&f, &reference));
+}
+
+#[test]
+fn gradient_shape_reverse_packed_convolution_matches() {
+    // The backward gradient MAC: forward-packed x ⊗ reverse-packed δ, batch
+    // sum at coefficient batch−1 — the lazy path must leave the identical
+    // coefficient everywhere (the switch later reads position batch−1).
+    let mut f = fixture(20260731);
+    let mut scratch = BgvScratch::new();
+    let level = f.ctx.top_level();
+    let batch = 4usize;
+    let x_vals = vec![3i64, -2, 5, 1];
+    let d_vals = vec![2i64, 4, -1, 3];
+    let mut d_rev = d_vals.clone();
+    d_rev.reverse();
+    let x = enc_at(&mut f, &x_vals, level);
+    let d = enc_at(&mut f, &d_rev, level);
+    let row = [MacTerm::Cc(&x, &d)];
+    let fast = mac_row(&mut scratch, &row, &f.rlk, &f.ctx);
+    let reference = reference_row(&f, &row);
+    let fast_pt = dec_full(&f, &fast);
+    assert_eq!(fast_pt, dec_full(&f, &reference));
+    let want: i64 = x_vals.iter().zip(&d_vals).map(|(a, b)| a * b).sum();
+    assert_eq!(fast_pt[batch - 1], want);
+}
+
+#[test]
+fn fc_layer_paths_match_naive_engine_oracle() {
+    // Forward / backward_error / gradients through the pooled FcLayer (the
+    // mac_rows_many path) against a hand-rolled naive loop over the counted
+    // reference ops — the layer-level mirror of the row tests above.
+    let batch = 3usize;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 4096);
+    let w_init = vec![vec![2i64, -3, 4], vec![1, 0, -5]];
+    let layer = FcLayer::new_encrypted(&w_init, &mut client, 0);
+    let enc_cols = |client: &mut ClientKeys, cols: &[Vec<i64>], order: PackOrder| {
+        let cts = cols.iter().map(|v| client.encrypt_batch(v, 0)).collect();
+        EncTensor::new(cts, vec![cols.len()], order, 0)
+    };
+    let x_cols = vec![vec![5i64, -1, 0], vec![7, 2, -3], vec![-2, 6, 1]];
+    let x = enc_cols(&mut client, &x_cols, PackOrder::Forward);
+
+    // forward
+    let u = layer.forward(&x, &engine);
+    let naive_forward: Vec<BgvCiphertext> = (0..2)
+        .map(|j| {
+            let mut acc: Option<BgvCiphertext> = None;
+            for i in 0..3 {
+                let wct = match &layer.w[j][i] {
+                    glyph::nn::linear::Weight::Enc(ct) => ct,
+                    _ => unreachable!("encrypted layer"),
+                };
+                let mut t = wct.clone();
+                t.mul_assign(&x.cts[i], &engine.rlk, &engine.ctx);
+                match &mut acc {
+                    None => acc = Some(t),
+                    Some(a) => a.add_assign(&t),
+                }
+            }
+            acc.unwrap()
+        })
+        .collect();
+    for j in 0..2 {
+        assert_eq!(
+            client.bgv_sk.decrypt(&u.cts[j]).coeffs,
+            client.bgv_sk.decrypt(&naive_forward[j]).coeffs,
+            "forward row {j}"
+        );
+    }
+
+    // backward error (reverse-packed delta)
+    let d_cols = vec![vec![4i64, -2, 1], vec![-3, 5, 2]];
+    let delta = enc_cols(&mut client, &d_cols, PackOrder::Reversed);
+    let back = layer.backward_error(&delta, &engine);
+    for i in 0..3 {
+        let mut acc: Option<BgvCiphertext> = None;
+        for j in 0..2 {
+            let wct = match &layer.w[j][i] {
+                glyph::nn::linear::Weight::Enc(ct) => ct,
+                _ => unreachable!(),
+            };
+            let mut t = wct.clone();
+            t.mul_assign(&delta.cts[j], &engine.rlk, &engine.ctx);
+            match &mut acc {
+                None => acc = Some(t),
+                Some(a) => a.add_assign(&t),
+            }
+        }
+        assert_eq!(
+            client.bgv_sk.decrypt(&back.cts[i]).coeffs,
+            client.bgv_sk.decrypt(&acc.unwrap()).coeffs,
+            "backward col {i}"
+        );
+    }
+
+    // gradients
+    let grads = layer.gradients(&x, &delta, &engine);
+    for j in 0..2 {
+        for i in 0..3 {
+            let mut g = x.cts[i].clone();
+            g.mul_assign(&delta.cts[j], &engine.rlk, &engine.ctx);
+            assert_eq!(
+                client.bgv_sk.decrypt(&grads[j][i]).coeffs,
+                client.bgv_sk.decrypt(&g).coeffs,
+                "gradient ({j},{i})"
+            );
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Noise-budget regression guard for the lazy-relinearization MAC engine:
+//! after one full encrypted `train_step` (MLP and transfer-CNN plans), the
+//! decryption noise margin of every live ciphertext — layer outputs of a
+//! post-update forward pass and the updated encrypted weights — must stay
+//! above a recorded floor.
+//!
+//! Why: deferring relinearization lets the degree-2 tensor component grow
+//! across a whole row before the single relin. That is *less* total relin
+//! noise than the per-term reference (one key-switch error per row instead
+//! of one per term), but any future change that silently eats the budget —
+//! more pre-relin depth, a wrong digit decomposition, a dropped mod-switch
+//! — lands here before it corrupts decryption in production profiles.
+//!
+//! Floors (test profile, q ≈ 2^96, t = 2^16): fresh encryptions sit at a
+//! ≈70-bit margin; one lazy-relin MAC row costs ≈2^56 of relin noise,
+//! leaving ≈35 bits. The floors below leave slack for RNG tails while
+//! still catching any structural regression (a second uncompensated relin
+//! or a skipped rescale burns >10 bits at once).
+
+use glyph::math::GlyphRng;
+use glyph::nn::batchnorm::BnLayer;
+use glyph::nn::engine::{ClientKeys, EngineProfile, GlyphEngine};
+use glyph::nn::linear::Weight;
+use glyph::nn::network::{Network, NetworkBuilder};
+use glyph::nn::tensor::{EncTensor, PackOrder};
+use glyph::train::{CnnConfig, GlyphCnn};
+
+/// Minimum post-train-step margin (bits) for any forward-pass ciphertext.
+const OUTPUT_FLOOR_BITS: f64 = 18.0;
+/// Minimum margin for the updated encrypted weights (fresh − fresh).
+const WEIGHT_FLOOR_BITS: f64 = 40.0;
+
+fn min_forward_margin(net: &Network, x: &EncTensor, client: &ClientKeys, engine: &GlyphEngine) -> f64 {
+    let pass = net.forward(x, engine);
+    pass.outputs
+        .iter()
+        .flat_map(|t| t.cts.iter())
+        .map(|ct| client.bgv_sk.noise_margin_bits(ct))
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn min_weight_margin(net: &Network, client: &ClientKeys) -> f64 {
+    net.fc_layers()
+        .iter()
+        .flat_map(|l| l.w.iter().flatten())
+        .filter_map(|w| match w {
+            Weight::Enc(ct) => Some(client.bgv_sk.noise_margin_bits(ct)),
+            Weight::Plain(_) => None,
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[test]
+fn mlp_train_step_keeps_noise_margin_above_floor() {
+    let batch = 2;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260801);
+    let mut rng = GlyphRng::new(51);
+    let mut net = NetworkBuilder::input_vec(3)
+        .fc(4)
+        .relu(8, 7)
+        .fc(2)
+        .softmax(3, 7)
+        .grad_shift(8)
+        .build(&mut client, &mut rng, &engine)
+        .unwrap();
+    let x_cts = (0..3).map(|i| client.encrypt_batch(&[5 - 3 * i as i64, 2 * i as i64], 0)).collect();
+    let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+    let lab_cts = (0..2)
+        .map(|k| {
+            let mut v = vec![if k == 0 { 127i64 } else { 0 }, if k == 1 { 127 } else { 0 }];
+            v.reverse();
+            client.encrypt_batch(&v, 0)
+        })
+        .collect();
+    let labels = EncTensor::new(lab_cts, vec![2], PackOrder::Reversed, 0);
+
+    net.train_step(&x, &labels, &engine);
+
+    let out_margin = min_forward_margin(&net, &x, &client, &engine);
+    assert!(
+        out_margin > OUTPUT_FLOOR_BITS,
+        "MLP forward margin {out_margin:.1} bits under floor {OUTPUT_FLOOR_BITS}"
+    );
+    let w_margin = min_weight_margin(&net, &client);
+    assert!(
+        w_margin > WEIGHT_FLOOR_BITS,
+        "MLP weight margin {w_margin:.1} bits under floor {WEIGHT_FLOOR_BITS}"
+    );
+}
+
+#[test]
+fn transfer_cnn_train_step_keeps_noise_margin_above_floor() {
+    let batch = 2;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260802);
+    let mut rng = GlyphRng::new(53);
+    let config = CnnConfig::tiny();
+    let rand_kernels = |oc: usize, ic: usize, k: usize, rng: &mut GlyphRng| -> Vec<Vec<Vec<Vec<i64>>>> {
+        (0..oc)
+            .map(|_| {
+                (0..ic)
+                    .map(|_| {
+                        (0..k).map(|_| (0..k).map(|_| (rng.uniform_mod(7) as i64) - 3).collect()).collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let c1w = rand_kernels(2, 1, 3, &mut rng);
+    let c2w = rand_kernels(3, 2, 3, &mut rng);
+    let bn1 = BnLayer { gain: vec![1, 1], bias: vec![0, 0], gain_shift: 0 };
+    let bn2 = BnLayer { gain: vec![1, 1, 1], bias: vec![0, 0, 0], gain_shift: 0 };
+    let mut cnn =
+        GlyphCnn::new(config, &c1w, bn1, &c2w, bn2, &mut client, &mut rng, &engine).unwrap();
+
+    let cts: Vec<_> = (0..14 * 14)
+        .map(|i| client.encrypt_batch(&[(i % 9) as i64 - 4, (i % 5) as i64 - 2], 0))
+        .collect();
+    let x = EncTensor::new(cts, vec![1, 14, 14], PackOrder::Forward, 0);
+    let labels = EncTensor::new(
+        vec![client.encrypt_batch(&[0, 127], 0), client.encrypt_batch(&[127, 0], 0)],
+        vec![2],
+        PackOrder::Reversed,
+        0,
+    );
+
+    cnn.train_step(&x, &labels, &engine);
+
+    let out_margin = min_forward_margin(&cnn.net, &x, &client, &engine);
+    assert!(
+        out_margin > OUTPUT_FLOOR_BITS,
+        "CNN forward margin {out_margin:.1} bits under floor {OUTPUT_FLOOR_BITS}"
+    );
+    let w_margin = min_weight_margin(&cnn.net, &client);
+    assert!(
+        w_margin > WEIGHT_FLOOR_BITS,
+        "CNN weight margin {w_margin:.1} bits under floor {WEIGHT_FLOOR_BITS}"
+    );
+}

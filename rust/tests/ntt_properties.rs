@@ -1,0 +1,139 @@
+//! Seeded randomized property tests for the NTT/RNS layer under the BGV
+//! MAC engine: NTT∘iNTT identity, fast vs schoolbook negacyclic products,
+//! `pointwise_acc`/`pointwise_acc2` linearity, and `mod_switch_down`
+//! plaintext preservation — ≥100 random cases per prime of the test chain.
+//! Every assertion carries the failing case's seed so a red run is
+//! reproducible: set `GLYPH_PROP_SEED` to replay a base seed.
+
+use glyph::math::modarith::{add_mod, gen_ntt_primes, mul_mod};
+use glyph::math::ntt::negacyclic_mul_naive;
+use glyph::math::{GlyphRng, NttTable, RnsContext, RnsPoly};
+
+const CASES: u64 = 100;
+const N: usize = 256;
+
+fn base_seed() -> u64 {
+    std::env::var("GLYPH_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x9e37_79b9_7f4a_7c15)
+}
+
+fn chain() -> Vec<u64> {
+    // the same generator the BGV test profile uses (3 limbs, ≡1 mod 2^26)
+    gen_ntt_primes(3, 1 << 26, 1 << 32)
+}
+
+fn rand_poly(n: usize, p: u64, rng: &mut GlyphRng) -> Vec<u64> {
+    (0..n).map(|_| rng.next_u64() % p).collect()
+}
+
+#[test]
+fn ntt_roundtrip_identity_randomized() {
+    for &p in &chain() {
+        let table = NttTable::new(N, p);
+        for case in 0..CASES {
+            let seed = base_seed() ^ (p.wrapping_mul(31)) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let a = rand_poly(N, p, &mut rng);
+            let mut b = a.clone();
+            table.forward(&mut b);
+            table.inverse(&mut b);
+            assert_eq!(a, b, "NTT∘iNTT identity failed: prime {p}, case {case}, seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn negacyclic_mul_matches_schoolbook_randomized() {
+    // n = 64 keeps the O(n²) oracle affordable at 100 cases × 3 primes.
+    let n = 64;
+    for &p in &chain() {
+        let table = NttTable::new(n, p);
+        for case in 0..CASES {
+            let seed = base_seed() ^ (p.wrapping_mul(131)) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let a = rand_poly(n, p, &mut rng);
+            let b = rand_poly(n, p, &mut rng);
+            assert_eq!(
+                table.negacyclic_mul(&a, &b),
+                negacyclic_mul_naive(&a, &b, p),
+                "negacyclic product mismatch: prime {p}, case {case}, seed {seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pointwise_acc_is_linear_and_acc2_fuses_exactly() {
+    let n = 128;
+    for &p in &chain() {
+        let table = NttTable::new(n, p);
+        for case in 0..CASES {
+            let seed = base_seed() ^ (p.wrapping_mul(257)) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let a = rand_poly(n, p, &mut rng);
+            let b = rand_poly(n, p, &mut rng);
+            let c = rand_poly(n, p, &mut rng);
+            let d = rand_poly(n, p, &mut rng);
+            let acc0 = rand_poly(n, p, &mut rng);
+
+            // linearity: acc + a·b + c·b == acc + (a+c)·b
+            let mut lhs = acc0.clone();
+            table.pointwise_acc(&mut lhs, &a, &b);
+            table.pointwise_acc(&mut lhs, &c, &b);
+            let apc: Vec<u64> = a.iter().zip(&c).map(|(&x, &y)| add_mod(x, y, p)).collect();
+            let mut rhs = acc0.clone();
+            table.pointwise_acc(&mut rhs, &apc, &b);
+            assert_eq!(lhs, rhs, "pointwise_acc linearity: prime {p}, case {case}, seed {seed}");
+
+            // the fused cross-term pass == two single passes
+            let mut fused = acc0.clone();
+            table.pointwise_acc2(&mut fused, &a, &b, &c, &d);
+            let mut split = acc0.clone();
+            table.pointwise_acc(&mut split, &a, &b);
+            table.pointwise_acc(&mut split, &c, &d);
+            assert_eq!(fused, split, "pointwise_acc2 fusion: prime {p}, case {case}, seed {seed}");
+
+            // reference semantics at a spot coefficient
+            let j = (rng.next_u64() % n as u64) as usize;
+            let want = add_mod(
+                acc0[j],
+                add_mod(mul_mod(a[j], b[j], p), mul_mod(c[j], d[j], p), p),
+                p,
+            );
+            assert_eq!(fused[j], want, "pointwise_acc2 value: prime {p}, case {case}, seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn mod_switch_down_preserves_plaintext_randomized() {
+    // phase = m + t·e with random m and sizeable e; after dropping the top
+    // limb the phase must still be ≡ m (mod t) at every coefficient.
+    let primes = chain();
+    let ctx = RnsContext::new(N, &primes);
+    let t = 1u64 << 16;
+    for case in 0..CASES {
+        let seed = base_seed() ^ 0xfeed ^ case;
+        let mut rng = GlyphRng::new(seed);
+        let coeffs: Vec<i64> = (0..N)
+            .map(|_| {
+                let m = (rng.uniform_mod(t) as i64) - (t as i64 / 2);
+                let e = rng.gaussian_i64(1e6);
+                m + t as i64 * e
+            })
+            .collect();
+        let levels = 2 + (case % 2) as usize; // start from 2 or 3 limbs
+        let mut poly = RnsPoly::from_signed(&ctx, &coeffs, levels);
+        poly.mod_switch_down(t);
+        assert_eq!(poly.level, levels - 1);
+        let sub_ctx = RnsContext::new(N, &primes[..levels - 1]);
+        for j in 0..N {
+            let res: Vec<u64> = (0..levels - 1).map(|i| poly.res[i][j]).collect();
+            let got = sub_ctx.crt_coeff_mod_t(&res, t);
+            let want = coeffs[j].rem_euclid(t as i64) as u64;
+            assert_eq!(got, want, "mod-switch drift: case {case}, seed {seed}, coeff {j}");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Proof that steady-state BGV MACs perform ZERO heap allocations — per
+//! `Cc`/`Cp` accumulate *and* per `relin_finalize_into` (the acceptance
+//! criterion of the lazy-relin MAC engine, extending the counting-allocator
+//! harness of `zero_alloc.rs` to the BGV side; numbers in EXPERIMENTS.md
+//! §BGV MAC perf log).
+//!
+//! A counting global allocator wraps `System`; after one warm-up row sizes
+//! the scratch (and the cached weights are built), further full MAC rows —
+//! at the paper MLP's fan-ins 784/128/32 — must not touch the allocator at
+//! all. This file holds exactly ONE test so no concurrent test can pollute
+//! the counter (each integration-test file is its own process).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_bgv_mac_rows_are_allocation_free() {
+    use glyph::bgv::{BgvContext, BgvParams, BgvScratch, BgvSecretKey, CachedPlaintext, Plaintext, RelinKey};
+    use glyph::math::GlyphRng;
+
+    let ctx = BgvContext::new(BgvParams::test_params());
+    let mut rng = GlyphRng::new(31338);
+    let sk = BgvSecretKey::generate(&ctx, &mut rng);
+    let rlk = RelinKey::generate(&sk, &mut rng);
+    let level = ctx.top_level();
+    let rctx = ctx.ctx_at(level).clone();
+
+    // The paper MLP's layer fan-ins (784-128-32-10): one MAC row per layer
+    // at the widest width, reusing the same operand pool.
+    let fan_ins = [784usize, 128, 32];
+    let widest = fan_ins[0];
+    let enc = |sk: &BgvSecretKey, vals: &[i64], rng: &mut GlyphRng| {
+        sk.encrypt(&Plaintext::encode_batch(vals, &ctx.params), rng)
+    };
+    let ws: Vec<_> = (0..widest)
+        .map(|i| enc(&sk, &[(i % 15) as i64 - 7], &mut rng))
+        .collect();
+    let xs: Vec<_> = (0..widest)
+        .map(|i| enc(&sk, &[(i % 9) as i64 - 4, ((i * 3) % 11) as i64 - 5], &mut rng))
+        .collect();
+    let wp: Vec<_> = (0..widest)
+        .map(|i| CachedPlaintext::scalar((i % 13) as i64 - 6, &ctx))
+        .collect();
+
+    let mut scratch = BgvScratch::new();
+    // Warm up: size the scratch buffers and the reusable output ciphertext.
+    scratch.begin(&rctx, level);
+    for i in 0..widest {
+        scratch.mac_cc_tensor_into(&ws[i], &xs[i]);
+    }
+    let mut out = scratch.relin_finalize(&rlk, &ctx);
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for &fan_in in &fan_ins {
+        // encrypted-weight row (MultCC tensor accumulate + one lazy relin)
+        scratch.begin(&rctx, level);
+        for i in 0..fan_in {
+            scratch.mac_cc_tensor_into(&ws[i], &xs[i]);
+        }
+        scratch.relin_finalize_into(&mut out, &rlk, &ctx);
+        std::hint::black_box(out.c0.res[0][0]);
+
+        // frozen-weight row (cached MultCP accumulate, relin-free)
+        scratch.begin(&rctx, level);
+        for i in 0..fan_in {
+            scratch.mac_cp_into(&xs[i], &wp[i]);
+        }
+        scratch.relin_finalize_into(&mut out, &rlk, &ctx);
+        std::hint::black_box(out.c0.res[0][0]);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+
+    let macs: usize = fan_ins.iter().map(|f| 2 * f).sum();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state BGV MAC allocated {} times over {macs} MACs + {} finalizes",
+        after - before,
+        2 * fan_ins.len()
+    );
+}
