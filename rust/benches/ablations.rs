@@ -62,7 +62,7 @@ fn main() {
     let t_tree = time_once(|| {
         let _ = unit.evaluate_mux(&engine, &bits[0][..3]);
     });
-    let lwes = engine.fwd_switch.to_torus_lanes(&ct, 1);
+    let lwes = engine.fwd_switch.to_torus_lanes(&ct, 1).expect("lane 0 fits the ring");
     let t_pbs = time_once(|| {
         let _ = unit.evaluate_pbs(&engine, &lwes[0]);
     });

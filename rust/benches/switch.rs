@@ -1,0 +1,121 @@
+//! Scheme-switch engine microbench: the retained serial per-lane reference
+//! path against the batch-parallel scratch engine, both directions.
+//!
+//! * down-switch (BGV→TFHE): `switch_down_many` over a layer boundary's
+//!   worth of ciphertexts — serial = per-ciphertext / per-lane / per-bit
+//!   loop, pooled = one extract fan-out + one `pbs_many` digit extraction;
+//! * up-switch (TFHE→BGV): `switch_up_many` over the same boundary —
+//!   serial = per-group pack + raise loop, pooled = packing key switches
+//!   fanned across the pool with warm `RepackScratch` buffers.
+//!
+//! Emits `bench_out/BENCH_switch.json` with lanes/sec per direction and a
+//! `counters` section carrying the pooled-vs-serial speedups (×100) plus
+//! the lane counts — the EXPERIMENTS.md §Scheme switch numbers.
+//! `GLYPH_BENCH_FULL=1` runs the production-shaped profile.
+
+use glyph::bench_util::{full_profile, report_json_with_counters, time_op, BenchRecord};
+use glyph::bgv::BgvCiphertext;
+use glyph::coordinator::max_threads;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::switch::VALUE_POS;
+use glyph::tfhe::LweCiphertext;
+
+fn main() {
+    let profile = if full_profile() { EngineProfile::Default } else { EngineProfile::Test };
+    let (lanes, n_cts, iters) = if full_profile() { (16usize, 3usize, 1) } else { (8, 3, 2) };
+    eprintln!(
+        "switch bench: {n_cts} cts × {lanes} lanes, {} profile, {} threads",
+        if full_profile() { "full" } else { "test" },
+        max_threads()
+    );
+    let (mut engine, mut client) = GlyphEngine::setup(profile, lanes, 20260728);
+
+    let cts: Vec<BgvCiphertext> = (0..n_cts)
+        .map(|c| {
+            let vals: Vec<i64> = (0..lanes).map(|b| ((c * 37 + b * 11) % 200) as i64 - 100).collect();
+            client.encrypt_batch(&vals, 0)
+        })
+        .collect();
+    let ct_refs: Vec<&BgvCiphertext> = cts.iter().collect();
+    let positions: Vec<usize> = (0..lanes).collect();
+    let total_lanes = (n_cts * lanes) as f64;
+    let pre = engine.frac_bits();
+
+    // ---- down-switch: serial reference vs pooled engine --------------------
+    engine.serial_switch = true;
+    let t_down_serial = time_op(iters, || {
+        let bits = engine.switch_down_many(&ct_refs, &positions, pre);
+        std::hint::black_box(bits[0][0][0].b);
+    });
+    engine.serial_switch = false;
+    // warm the worker scratches before timing
+    let _ = engine.switch_down_many(&ct_refs, &positions, pre);
+    let t_down_pooled = time_op(iters, || {
+        let bits = engine.switch_down_many(&ct_refs, &positions, pre);
+        std::hint::black_box(bits[0][0][0].b);
+    });
+
+    // ---- up-switch: serial reference vs pooled engine ----------------------
+    let gate_dim = engine.gate_ext_dim();
+    let groups_owned: Vec<Vec<LweCiphertext>> = (0..n_cts)
+        .map(|c| {
+            (0..lanes)
+                .map(|b| {
+                    let v = ((c * 13 + b * 7) % 200) as i64 - 100;
+                    LweCiphertext::trivial((v << VALUE_POS) as u32, gate_dim)
+                })
+                .collect()
+        })
+        .collect();
+    let groups: Vec<(&[LweCiphertext], &[usize])> =
+        groups_owned.iter().map(|g| (g.as_slice(), positions.as_slice())).collect();
+    engine.serial_switch = true;
+    let t_up_serial = time_op(iters, || {
+        let out = engine.switch_up_many(&groups);
+        std::hint::black_box(out[0].level);
+    });
+    engine.serial_switch = false;
+    let _ = engine.switch_up_many(&groups);
+    let t_up_pooled = time_op(iters, || {
+        let out = engine.switch_up_many(&groups);
+        std::hint::black_box(out[0].level);
+    });
+
+    let down_speedup = t_down_serial / t_down_pooled;
+    let up_speedup = t_up_serial / t_up_pooled;
+    println!(
+        "down-switch: serial {:.4}s ({:.1} lanes/s)  pooled {:.4}s ({:.1} lanes/s)  {:.2}x",
+        t_down_serial,
+        total_lanes / t_down_serial,
+        t_down_pooled,
+        total_lanes / t_down_pooled,
+        down_speedup
+    );
+    println!(
+        "up-switch:   serial {:.4}s ({:.1} lanes/s)  pooled {:.4}s ({:.1} lanes/s)  {:.2}x",
+        t_up_serial,
+        total_lanes / t_up_serial,
+        t_up_pooled,
+        total_lanes / t_up_pooled,
+        up_speedup
+    );
+
+    let per_lane = total_lanes;
+    let threads = max_threads();
+    let records = vec![
+        BenchRecord::new("down_switch_lane_serial", t_down_serial / per_lane, 1),
+        BenchRecord::new("down_switch_lane_pooled", t_down_pooled / per_lane, threads),
+        BenchRecord::new("up_switch_lane_serial", t_up_serial / per_lane, 1),
+        BenchRecord::new("up_switch_lane_pooled", t_up_pooled / per_lane, threads),
+    ];
+    report_json_with_counters(
+        "switch",
+        &records,
+        &[
+            ("cts", n_cts as u64),
+            ("lanes_per_ct", lanes as u64),
+            ("down_speedup_x100", (down_speedup * 100.0) as u64),
+            ("up_speedup_x100", (up_speedup * 100.0) as u64),
+        ],
+    );
+}

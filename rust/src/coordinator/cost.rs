@@ -108,7 +108,7 @@ impl OpLatencies {
         // Switch costs per value: extraction only (Δ + extract + ksk).
         let positions: Vec<usize> = (0..batch).collect();
         let t0 = Instant::now();
-        let _l = engine.fwd_switch.to_torus_lanes(&u.cts[0], batch);
+        let _l = engine.fwd_switch.to_torus_lanes(&u.cts[0], batch).expect("lanes fit the ring");
         let switch_b2t_value = t0.elapsed().as_secs_f64() / batch as f64;
         let lwes: Vec<crate::tfhe::LweCiphertext> = (0..batch)
             .map(|i| crate::tfhe::LweCiphertext::trivial((i as u32) << 24, engine.gate_ext_dim()))

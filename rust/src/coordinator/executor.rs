@@ -18,6 +18,7 @@
 //! (the standard scoped-pool technique), so non-`'static` borrows are fine.
 
 use crate::bgv::BgvScratch;
+use crate::switch::SwitchScratch;
 use crate::tfhe::scratch::PbsScratch;
 use std::cell::{Cell, UnsafeCell};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -25,18 +26,19 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Per-worker scratch bundle: the TFHE PBS buffers *and* the BGV MAC
-/// accumulators — one of each per pool worker, so both hot paths (blind
-/// rotations and lazy-relin MAC rows) reuse warm buffers across batched
-/// fan-outs.
+/// Per-worker scratch bundle: the TFHE PBS buffers, the BGV MAC
+/// accumulators *and* the scheme-switch workspaces — one of each per pool
+/// worker, so all three hot paths (blind rotations, lazy-relin MAC rows,
+/// lane extraction / repacking) reuse warm buffers across batched fan-outs.
 pub struct WorkerScratch {
     pub pbs: PbsScratch,
     pub bgv: BgvScratch,
+    pub switch: SwitchScratch,
 }
 
 impl WorkerScratch {
     pub fn new() -> Self {
-        WorkerScratch { pbs: PbsScratch::new(), bgv: BgvScratch::new() }
+        WorkerScratch { pbs: PbsScratch::new(), bgv: BgvScratch::new(), switch: SwitchScratch::new() }
     }
 }
 

@@ -27,6 +27,12 @@ pub struct OpCounter {
     /// BGV relinearizations (one per reference MultCC; one per *row* on the
     /// lazy-relin MAC engine — the saving `benches/bgv_mac.rs` reports).
     pub relin: AtomicU64,
+    /// Lane extractions inside BGV→TFHE switches (SampleExtract + rescale +
+    /// LWE key switch, one per requested coefficient position).
+    pub extract_lanes: AtomicU64,
+    /// Lanes packed inside TFHE→BGV switches (one per LWE entering a
+    /// packing key switch).
+    pub repack_lanes: AtomicU64,
 }
 
 /// A plain-value snapshot of [`OpCounter`].
@@ -43,6 +49,8 @@ pub struct OpSnapshot {
     pub refresh: u64,
     pub mod_switch: u64,
     pub relin: u64,
+    pub extract_lanes: u64,
+    pub repack_lanes: u64,
 }
 
 impl OpCounter {
@@ -59,6 +67,8 @@ impl OpCounter {
             refresh: self.refresh.load(Ordering::Relaxed),
             mod_switch: self.mod_switch.load(Ordering::Relaxed),
             relin: self.relin.load(Ordering::Relaxed),
+            extract_lanes: self.extract_lanes.load(Ordering::Relaxed),
+            repack_lanes: self.repack_lanes.load(Ordering::Relaxed),
         }
     }
 
@@ -83,6 +93,8 @@ impl OpSnapshot {
             refresh: self.refresh - earlier.refresh,
             mod_switch: self.mod_switch - earlier.mod_switch,
             relin: self.relin - earlier.relin,
+            extract_lanes: self.extract_lanes - earlier.extract_lanes,
+            repack_lanes: self.repack_lanes - earlier.repack_lanes,
         }
     }
 
@@ -96,7 +108,8 @@ impl std::fmt::Display for OpSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "HOP={} MultCC={} MultCP={} AddCC={} TLU={} Act={} PBS={} B2T={} T2B={} refresh={} relin={}",
+            "HOP={} MultCC={} MultCP={} AddCC={} TLU={} Act={} PBS={} B2T={} T2B={} refresh={} \
+             relin={} extract={} repack={}",
             self.hop(),
             self.mult_cc,
             self.mult_cp,
@@ -107,7 +120,9 @@ impl std::fmt::Display for OpSnapshot {
             self.switch_b2t,
             self.switch_t2b,
             self.refresh,
-            self.relin
+            self.relin,
+            self.extract_lanes,
+            self.repack_lanes
         )
     }
 }

@@ -82,6 +82,11 @@ pub struct StepOps {
     /// Noise refreshes (each T2B packs into a fresh ciphertext; each TLU
     /// performs two domain conversions).
     pub refresh: u64,
+    /// Lane extractions inside B2T switches (one per coefficient position).
+    pub extract_lanes: u64,
+    /// Lanes packed inside T2B switches (one per LWE entering the packing
+    /// key switch).
+    pub repack_lanes: u64,
 }
 
 impl StepOps {
@@ -103,6 +108,8 @@ impl StepOps {
         self.switch_b2t += o.switch_b2t;
         self.switch_t2b += o.switch_t2b;
         self.refresh += o.refresh;
+        self.extract_lanes += o.extract_lanes;
+        self.repack_lanes += o.repack_lanes;
     }
 }
 

@@ -103,14 +103,43 @@ fn relu_lanes(
 }
 
 /// Batched Algorithm 2 over every lane (lanes × 8 weighted ANDs, the sign
-/// bit included); bit-exact against a per-lane [`irelu_bits`] loop.
+/// bit included); bit-exact against a per-lane [`irelu_bits`] loop. Takes
+/// sign *references* so the caller can flatten its per-ciphertext state
+/// without cloning the LWEs.
 fn irelu_lanes(
     engine: &GlyphEngine,
     lanes_bits: &[Vec<LweCiphertext>],
-    lane_signs: &[LweCiphertext],
+    lane_signs: &[&LweCiphertext],
 ) -> Vec<LweCiphertext> {
     let not_signs: Vec<LweCiphertext> = lane_signs.iter().map(|s| engine.gate_not(s)).collect();
     weighted_and_lanes(engine, lanes_bits, &not_signs, 0)
+}
+
+/// Shared boundary plumbing of every TFHE unit: ONE batched down-switch of
+/// all ciphertexts × lanes, the unit's gate stage over the flattened
+/// lane-bit matrix, ONE batched up-switch packing each ciphertext's lanes
+/// back at `out_positions`. The gate stage receives `[ct-major lane][bit]`
+/// and must return one recomposed LWE per lane in the same order.
+fn cross_boundary<F>(
+    engine: &GlyphEngine,
+    cts: &[crate::bgv::BgvCiphertext],
+    in_positions: &[usize],
+    out_positions: &[usize],
+    pre_shift: u32,
+    gates: F,
+) -> Vec<crate::bgv::BgvCiphertext>
+where
+    F: FnOnce(Vec<Vec<LweCiphertext>>) -> Vec<LweCiphertext>,
+{
+    let ct_refs: Vec<&crate::bgv::BgvCiphertext> = cts.iter().collect();
+    let all_bits = engine.switch_down_many(&ct_refs, in_positions, pre_shift);
+    let flat_bits: Vec<Vec<LweCiphertext>> = all_bits.into_iter().flatten().collect();
+    let recomposed = gates(flat_bits);
+    let lanes_per_ct = in_positions.len();
+    debug_assert_eq!(recomposed.len(), cts.len() * lanes_per_ct);
+    let groups: Vec<(&[LweCiphertext], &[usize])> =
+        recomposed.chunks(lanes_per_ct).map(|chunk| (chunk, out_positions)).collect();
+    engine.switch_up_many(&groups)
 }
 
 /// Full ReLU layer: BGV pre-activations → TFHE bits → Alg-1 gates → packed
@@ -118,6 +147,13 @@ fn irelu_lanes(
 ///
 /// `out_shift` is the per-layer quantization shift (how many low bits of
 /// the MAC result the activation drops; must be ≤ the engine's frac bits).
+///
+/// The whole tensor crosses each boundary at once: ONE `switch_down_many`
+/// extracts every ciphertext × lane × bit (this is where a conv layer's
+/// forward exit — hundreds of CHW ciphertexts — fans out in a single call),
+/// one pooled gate fan-out runs Algorithm 1 over all lanes, and ONE
+/// `switch_up_many` packs every ciphertext back. Bit-identical to the
+/// per-ciphertext serial walk (`engine.serial_switch` replays it).
 pub fn relu_layer(
     engine: &GlyphEngine,
     u: &EncTensor,
@@ -129,14 +165,20 @@ pub fn relu_layer(
     let pre_shift = frac - out_shift;
     let in_positions = u.order.positions(engine.batch);
     let out_positions = out_order.positions(engine.batch);
-    let mut outs = Vec::with_capacity(u.len());
-    let mut signs = Vec::with_capacity(u.len());
-    for ct in &u.cts {
-        let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
-        let (recomposed, lane_signs) = relu_lanes(engine, &lanes_bits);
-        outs.push(engine.switch_to_bgv(&recomposed, &out_positions));
-        signs.push(lane_signs);
-    }
+    // Algorithm 1 on every lane of the tensor in one pooled gate fan-out
+    // (same per-lane jobs and sums as the per-ciphertext loop); the sign
+    // bits ride out through the closure for the backward pass
+    let mut flat_signs: Vec<LweCiphertext> = Vec::new();
+    let outs = cross_boundary(engine, &u.cts, &in_positions, &out_positions, pre_shift, |flat| {
+        let (recomposed, signs) = relu_lanes(engine, &flat);
+        flat_signs = signs;
+        recomposed
+    });
+    // regroup the flat signs per ciphertext by moving, not cloning
+    let lanes_per_ct = in_positions.len();
+    let mut it = flat_signs.into_iter();
+    let signs: Vec<Vec<LweCiphertext>> =
+        (0..u.cts.len()).map(|_| (&mut it).take(lanes_per_ct).collect()).collect();
     (
         EncTensor::new(outs, u.shape.clone(), out_order, 0),
         ReluState { signs },
@@ -144,7 +186,9 @@ pub fn relu_layer(
 }
 
 /// Full iReLU layer: BGV errors → bits → Alg-2 gates → packed fresh BGV
-/// errors (8-bit, reversed packing for the gradient trick).
+/// errors (8-bit, reversed packing for the gradient trick). Batched like
+/// [`relu_layer`]: one down-switch, one gate fan-out and one up-switch for
+/// the whole tensor.
 pub fn irelu_layer(
     engine: &GlyphEngine,
     delta: &EncTensor,
@@ -155,12 +199,11 @@ pub fn irelu_layer(
     let pre_shift = frac - out_shift;
     let in_positions = delta.order.positions(engine.batch);
     let out_positions = PackOrder::Reversed.positions(engine.batch);
-    let mut outs = Vec::with_capacity(delta.len());
-    for (ci, ct) in delta.cts.iter().enumerate() {
-        let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
-        let recomposed = irelu_lanes(engine, &lanes_bits, &state.signs[ci]);
-        outs.push(engine.switch_to_bgv(&recomposed, &out_positions));
-    }
+    let flat_signs: Vec<&LweCiphertext> = state.signs.iter().flatten().collect();
+    let outs =
+        cross_boundary(engine, &delta.cts, &in_positions, &out_positions, pre_shift, |flat| {
+            irelu_lanes(engine, &flat, &flat_signs)
+        });
     EncTensor::new(outs, delta.shape.clone(), PackOrder::Reversed, 0)
 }
 
@@ -236,20 +279,14 @@ impl Layer for SoftmaxLayer {
         let pre_shift = frac - self.logit_shift;
         let in_positions = u.order.positions(engine.batch);
         let out_positions = PackOrder::Reversed.positions(engine.batch);
-        let cts = u
-            .cts
-            .iter()
-            .map(|ct| {
-                let lanes_bits = engine.switch_to_bits(ct, &in_positions, pre_shift);
-                // all lanes' MUX trees fan across the pool in one call
-                let lane_slices: Vec<&[LweCiphertext]> = lanes_bits
-                    .iter()
-                    .map(|bits| &bits[..self.unit.in_bits])
-                    .collect();
-                let outs = self.unit.evaluate_mux_many(engine, &lane_slices);
-                engine.switch_to_bgv(&outs, &out_positions)
-            })
-            .collect();
+        // the whole logit tensor down-switches in one fan-out, every
+        // class × lane MUX tree fans in one call, and one batched
+        // up-switch packs all classes back
+        let cts = cross_boundary(engine, &u.cts, &in_positions, &out_positions, pre_shift, |flat| {
+            let lane_slices: Vec<&[LweCiphertext]> =
+                flat.iter().map(|bits| &bits[..self.unit.in_bits]).collect();
+            self.unit.evaluate_mux_many(engine, &lane_slices)
+        });
         let d = EncTensor::new(cts, u.shape.to_vec(), PackOrder::Reversed, 0);
         (d.clone(), LayerState::Output(d))
     }

@@ -82,7 +82,11 @@ impl ConvLayer {
 
     /// Forward convolution on a CHW tensor: one MAC row per output
     /// position (`in_ch·k²` taps each), fanned across the pool through the
-    /// lazy-relin engine.
+    /// lazy-relin engine. The layer's *exit* conversion — all
+    /// `out_ch·oh·ow` output ciphertexts crossing to TFHE for the following
+    /// activation — rides the batched switch engine: the downstream
+    /// `relu_layer` hands the whole tensor to `switch_down_many` in one
+    /// fan-out instead of per-ciphertext calls.
     pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
         assert_eq!(x.shape.len(), 3, "conv expects CHW");
         assert_eq!(x.shape[0], self.in_ch);

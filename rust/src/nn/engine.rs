@@ -13,7 +13,7 @@ use crate::bgv::{
 use crate::coordinator::executor::GlyphPool;
 use crate::coordinator::metrics::OpCounter;
 use crate::math::rng::GlyphRng;
-use crate::switch::{BgvToTfheSwitch, TfheToBgvSwitch};
+use crate::switch::{LweExtractor, Repacker};
 use crate::tfhe::{LweCiphertext, LweKey, TfheCloudKey, TfheParams, TrlweKey};
 use std::sync::Arc;
 
@@ -55,12 +55,16 @@ pub struct GlyphEngine {
     pub rlk: RelinKey,
     pub gate_ck: TfheCloudKey,
     pub extract_ck: TfheCloudKey,
-    pub fwd_switch: BgvToTfheSwitch,
-    pub bwd_switch: TfheToBgvSwitch,
+    pub fwd_switch: LweExtractor,
+    pub bwd_switch: Repacker,
     pub auth: Arc<KeyAuthority>,
     pub counter: OpCounter,
     /// Mini-batch width (≤ N).
     pub batch: usize,
+    /// Run the scheme switch on the retained per-lane serial reference path
+    /// instead of the batched scratch engine (bit-identical results — the
+    /// contract `tests/train_step_golden.rs` locks). Default: batched.
+    pub serial_switch: bool,
 }
 
 /// Which parameter scale to build.
@@ -98,8 +102,8 @@ impl GlyphEngine {
         let gate_ck = TfheCloudKey::generate(&lwe_key, &gate_ring, &gate_params, &mut rng);
         let ext_ring = TrlweKey::generate(ext_params.big_n, &mut rng);
         let extract_ck = TfheCloudKey::generate(&lwe_key, &ext_ring, &ext_params, &mut rng);
-        let fwd_switch = BgvToTfheSwitch::generate(&bgv_sk, &lwe_key, &ext_params, &mut rng);
-        let bwd_switch = TfheToBgvSwitch::generate(&gate_ring, &bgv_sk, &mut rng);
+        let fwd_switch = LweExtractor::generate(&bgv_sk, &lwe_key, &ext_params, &mut rng);
+        let bwd_switch = Repacker::generate(&gate_ring, &bgv_sk, &mut rng);
         let auth = KeyAuthority::new(bgv_sk.clone(), GlyphRng::new(seed ^ 0x5eed));
         let engine = GlyphEngine {
             ctx,
@@ -111,6 +115,7 @@ impl GlyphEngine {
             auth,
             counter: OpCounter::default(),
             batch,
+            serial_switch: false,
         };
         let client = ClientKeys { bgv_sk, rng: GlyphRng::new(seed ^ 0xc11e) };
         (engine, client)
@@ -223,22 +228,77 @@ impl GlyphEngine {
         positions: &[usize],
         pre_shift: u32,
     ) -> Vec<Vec<LweCiphertext>> {
-        self.counter.bump(&self.counter.switch_b2t, 1);
-        self.counter
-            .bump(&self.counter.extract_pbs, (positions.len() as u64) * crate::switch::SWITCH_BITS as u64);
-        let mut c = ct.clone();
-        if pre_shift > 0 {
-            c.small_scalar_mul_assign(1i64 << pre_shift, &self.ctx);
+        self.switch_down_many(&[ct], positions, pre_shift)
+            .pop()
+            .expect("one ciphertext in, one out")
+    }
+
+    /// Batched BGV→TFHE: every ciphertext's lanes × bits of a whole layer
+    /// boundary cross in ONE pool fan-out (the per-worker `SwitchScratch`
+    /// extract path + one `pbs_many` digit extraction). Result is
+    /// `[ct][lane][bit]`, bit-identical to per-ciphertext
+    /// [`Self::switch_to_bits`] calls and to the retained serial reference
+    /// (`serial_switch = true`). Op accounting is identical on every path:
+    /// one `switch_b2t` per ciphertext, one `extract_lanes` per position,
+    /// [`crate::switch::SWITCH_BITS`] `extract_pbs` per lane.
+    pub fn switch_down_many(
+        &self,
+        cts: &[&BgvCiphertext],
+        positions: &[usize],
+        pre_shift: u32,
+    ) -> Vec<Vec<Vec<LweCiphertext>>> {
+        let lanes = (cts.len() * positions.len()) as u64;
+        self.counter.bump(&self.counter.switch_b2t, cts.len() as u64);
+        self.counter.bump(&self.counter.extract_lanes, lanes);
+        self.counter.bump(&self.counter.extract_pbs, lanes * crate::switch::SWITCH_BITS as u64);
+        // the pre-shift rides inside the extractor's prepare pass (one clone
+        // per ciphertext; exact RNS scalar products, so bit-identical to
+        // scaling a separate copy first)
+        if self.serial_switch {
+            cts.iter()
+                .map(|ct| {
+                    self.fwd_switch
+                        .to_bits_serial(ct, positions, &self.extract_ck, pre_shift)
+                        .unwrap_or_else(|e| panic!("BGV→TFHE switch rejected its positions: {e}"))
+                })
+                .collect()
+        } else {
+            self.fwd_switch
+                .to_bits_many(cts, positions, &self.extract_ck, pre_shift)
+                .unwrap_or_else(|e| panic!("BGV→TFHE switch rejected its positions: {e}"))
         }
-        self.fwd_switch.to_bits_positions(&c, positions, &self.extract_ck)
     }
 
     /// TFHE→BGV: pack one recomposed LWE per lane at the given positions and
     /// raise to a fresh BGV ciphertext holding the 8-bit values at scale 1.
     pub fn switch_to_bgv(&self, lanes: &[LweCiphertext], positions: &[usize]) -> BgvCiphertext {
-        self.counter.bump(&self.counter.switch_t2b, 1);
-        self.counter.bump(&self.counter.refresh, 1);
-        self.bwd_switch.pack_at_and_raise(lanes, positions, &self.auth)
+        self.switch_up_many(&[(lanes, positions)]).pop().expect("one group in, one out")
+    }
+
+    /// Batched TFHE→BGV: every lane group's packing key switch fans across
+    /// the pool (per-worker `RepackScratch`), the modulus raises run
+    /// serially in submission order (deterministic authority RNG draws).
+    /// Bit-identical to per-group [`Self::switch_to_bgv`] calls; op
+    /// accounting is one `switch_t2b` + one `refresh` per group and one
+    /// `repack_lanes` per packed LWE on every path.
+    pub fn switch_up_many(
+        &self,
+        groups: &[(&[LweCiphertext], &[usize])],
+    ) -> Vec<BgvCiphertext> {
+        let lanes: u64 = groups.iter().map(|(l, _)| l.len() as u64).sum();
+        self.counter.bump(&self.counter.switch_t2b, groups.len() as u64);
+        self.counter.bump(&self.counter.refresh, groups.len() as u64);
+        self.counter.bump(&self.counter.repack_lanes, lanes);
+        if self.serial_switch {
+            groups
+                .iter()
+                .map(|(lanes, positions)| {
+                    self.bwd_switch.pack_at_and_raise(lanes, positions, &self.auth)
+                })
+                .collect()
+        } else {
+            self.bwd_switch.pack_and_raise_many(groups, &self.auth)
+        }
     }
 
     // ---- counted TFHE gates -------------------------------------------------
@@ -413,5 +473,39 @@ mod tests {
         assert_eq!(s.extract_pbs, 24);
         assert_eq!(s.act_gates, 24);
         assert_eq!(s.refresh, 1);
+        assert_eq!(s.extract_lanes, 3);
+        assert_eq!(s.repack_lanes, 3);
+    }
+
+    #[test]
+    fn batched_switch_counts_like_the_serial_reference() {
+        // switch_down_many/switch_up_many must account exactly like the
+        // equivalent per-ciphertext serial calls, on both execution paths.
+        let (mut engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 48);
+        let a = client.encrypt_batch(&[1, -1], 0);
+        let b = client.encrypt_batch(&[2, -2], 0);
+        for serial in [false, true] {
+            engine.serial_switch = serial;
+            let before = engine.counter.snapshot();
+            let bits = engine.switch_down_many(&[&a, &b], &[0, 1], engine.frac_bits());
+            assert_eq!(bits.len(), 2);
+            assert_eq!(bits[0].len(), 2);
+            assert_eq!(bits[0][0].len(), 8);
+            let d = engine.counter.snapshot().since(&before);
+            assert_eq!(
+                (d.switch_b2t, d.extract_lanes, d.extract_pbs),
+                (2, 4, 32),
+                "serial={serial}"
+            );
+            let lanes0 = vec![LweCiphertext::trivial(0, engine.gate_ext_dim()); 2];
+            let lanes1 = vec![LweCiphertext::trivial(0, engine.gate_ext_dim()); 3];
+            let p0 = [0usize, 1];
+            let p1 = [0usize, 1, 2];
+            let before = engine.counter.snapshot();
+            let out = engine.switch_up_many(&[(&lanes0[..], &p0[..]), (&lanes1[..], &p1[..])]);
+            assert_eq!(out.len(), 2);
+            let d = engine.counter.snapshot().since(&before);
+            assert_eq!((d.switch_t2b, d.refresh, d.repack_lanes), (2, 2, 5), "serial={serial}");
+        }
     }
 }

@@ -156,7 +156,8 @@ pub fn fc_error_ops(in_dim: usize, out_dim: usize, enc: bool) -> StepOps {
 
 /// `FcLayer::gradients` + `apply_gradients`: one convolution-trick MultCC
 /// per weight, then the per-weight requantization round trip through the
-/// switch (1 B2T of one position, 8 weighted gates, 1 T2B, 1 SubCC).
+/// switch (1 B2T of one position = 1 lane extract + 8 extraction PBS,
+/// 8 weighted gates, 1 T2B packing 1 lane, 1 SubCC).
 pub fn fc_gradient_ops(in_dim: usize, out_dim: usize) -> StepOps {
     let w = (in_dim * out_dim) as u64;
     StepOps {
@@ -167,6 +168,8 @@ pub fn fc_gradient_ops(in_dim: usize, out_dim: usize) -> StepOps {
         switch_b2t: w,
         switch_t2b: w,
         refresh: w,
+        extract_lanes: w,
+        repack_lanes: w,
         ..Default::default()
     }
 }
@@ -193,9 +196,9 @@ pub fn pool_forward_ops(out_count: usize) -> StepOps {
     StepOps { add_cc: (out_count * 3) as u64, ..Default::default() }
 }
 
-/// `activation::relu_layer`: per ciphertext one B2T (8 extraction PBS per
-/// lane), 7 weighted ANDs per lane (Algorithm 1 drops the sign bit), one
-/// packed T2B.
+/// `activation::relu_layer`: per ciphertext one B2T (one lane extract and
+/// 8 extraction PBS per lane), 7 weighted ANDs per lane (Algorithm 1 drops
+/// the sign bit), one T2B packing every lane.
 pub fn relu_forward_ops(cts: usize, batch: usize) -> StepOps {
     let c = cts as u64;
     let lanes = (cts * batch) as u64;
@@ -206,6 +209,8 @@ pub fn relu_forward_ops(cts: usize, batch: usize) -> StepOps {
         switch_b2t: c,
         switch_t2b: c,
         refresh: c,
+        extract_lanes: lanes,
+        repack_lanes: lanes,
         ..Default::default()
     }
 }
@@ -222,6 +227,8 @@ pub fn relu_error_ops(cts: usize, batch: usize) -> StepOps {
         switch_b2t: c,
         switch_t2b: c,
         refresh: c,
+        extract_lanes: lanes,
+        repack_lanes: lanes,
         ..Default::default()
     }
 }
@@ -231,13 +238,16 @@ pub fn relu_error_ops(cts: usize, batch: usize) -> StepOps {
 /// `SoftmaxUnit::plan_gates_per_lane` from the table constants), one T2B.
 pub fn softmax_forward_ops(cts: usize, batch: usize, gates_per_lane: u64) -> StepOps {
     let c = cts as u64;
+    let lanes = (cts * batch) as u64;
     StepOps {
         softmax_values: c,
-        act_gates: (cts * batch) as u64 * gates_per_lane,
-        extract_pbs: (cts * batch) as u64 * BITS,
+        act_gates: lanes * gates_per_lane,
+        extract_pbs: lanes * BITS,
         switch_b2t: c,
         switch_t2b: c,
         refresh: c,
+        extract_lanes: lanes,
+        repack_lanes: lanes,
         ..Default::default()
     }
 }
@@ -277,6 +287,7 @@ mod tests {
         assert_eq!((e.mult_cc, e.add_cc), (8, 4));
         let g = fc_gradient_ops(3, 4);
         assert_eq!((g.mult_cc, g.switch_b2t, g.act_gates), (12, 12, 96));
+        assert_eq!((g.extract_lanes, g.repack_lanes), (12, 12));
         let frozen = fc_forward_ops(5, 2, false, 0);
         assert_eq!((frozen.mult_cc, frozen.mult_cp), (0, 10));
     }
@@ -285,7 +296,9 @@ mod tests {
     fn relu_ops_scale_with_batch() {
         let f = relu_forward_ops(4, 2);
         assert_eq!((f.switch_b2t, f.act_gates, f.extract_pbs), (4, 56, 64));
+        assert_eq!((f.extract_lanes, f.repack_lanes), (8, 8));
         let e = relu_error_ops(4, 2);
         assert_eq!(e.act_gates, 64);
+        assert_eq!((e.extract_lanes, e.repack_lanes), (8, 8));
     }
 }

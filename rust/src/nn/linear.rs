@@ -151,10 +151,11 @@ impl FcLayer {
     /// subtract from the encrypted weights. `grad_shift` plays the role of
     /// `−log2(lr · scale⁻¹)`: the extracted 8-bit step is `∇ >> grad_shift`.
     ///
-    /// The switch-side repack is batched: all weights' recomposition gates
-    /// (8 bits × every trainable weight) go through one
-    /// `gate_and_weighted_many` fan-out across the pool instead of a serial
-    /// per-weight loop — same ciphertexts, same op counts.
+    /// The whole update crosses the switch in three batched fan-outs: ONE
+    /// `switch_down_many` extracts every trainable weight's batch-sum bits,
+    /// one `gate_and_weighted_many` recomposes all weights × 8 bits, and ONE
+    /// `switch_up_many` packs/raises every weight's gradient step — same
+    /// ciphertexts and op counts as the per-weight serial loop.
     pub fn apply_gradients(
         &mut self,
         grads: &[Vec<BgvCiphertext>],
@@ -164,15 +165,15 @@ impl FcLayer {
         let frac = engine.frac_bits();
         assert!(grad_shift <= frac);
         let pre_shift = frac - grad_shift;
-        let sum_pos = engine.batch - 1;
-        // 1. bits of every batch-summed gradient (position batch−1)
+        let sum_pos = [engine.batch - 1];
+        // 1. bits of every batch-summed gradient (position batch−1), one
+        //    pooled down-switch over all trainable weights
         let mut targets: Vec<(usize, usize)> = Vec::new();
-        let mut all_bits: Vec<Vec<LweCiphertext>> = Vec::new();
+        let mut g_refs: Vec<&BgvCiphertext> = Vec::new();
         for (j, row) in grads.iter().enumerate() {
             for (i, g) in row.iter().enumerate() {
                 if matches!(self.w[j][i], Weight::Enc(_)) {
-                    let mut bits = engine.switch_to_bits(g, &[sum_pos], pre_shift);
-                    all_bits.push(bits.swap_remove(0));
+                    g_refs.push(g);
                     targets.push((j, i));
                 }
             }
@@ -180,6 +181,11 @@ impl FcLayer {
         if targets.is_empty() {
             return;
         }
+        let all_bits: Vec<Vec<LweCiphertext>> = engine
+            .switch_down_many(&g_refs, &sum_pos, pre_shift)
+            .into_iter()
+            .map(|mut lanes| lanes.swap_remove(0))
+            .collect();
         // 2. identity recomposition at the weighted positions — one pooled
         //    fan-out over all weights × bits
         let truth = LweCiphertext::trivial(crate::tfhe::encode_bit(true), engine.gate_ck.params.n);
@@ -190,18 +196,28 @@ impl FcLayer {
             })
             .collect();
         let weighted = engine.gate_and_weighted_many(&jobs);
-        // 3. per weight: sum its bit contributions, raise, subtract
+        // 3. per weight: sum its bit contributions into one recomposed LWE,
+        //    then raise every step in one batched up-switch and subtract
         let bits_per = all_bits[0].len();
-        for (t, chunk) in weighted.chunks(bits_per).enumerate() {
-            let mut acc = chunk[0].clone();
-            for w in &chunk[1..] {
-                acc.add_assign(w);
-            }
-            // fresh constant-poly gradient step at coefficient 0
-            let step = engine.switch_to_bgv(&[acc], &[0]);
+        let accs: Vec<LweCiphertext> = weighted
+            .chunks(bits_per)
+            .map(|chunk| {
+                let mut acc = chunk[0].clone();
+                for w in &chunk[1..] {
+                    acc.add_assign(w);
+                }
+                acc
+            })
+            .collect();
+        // fresh constant-poly gradient steps at coefficient 0
+        let zero_pos = [0usize];
+        let groups: Vec<(&[LweCiphertext], &[usize])> =
+            accs.iter().map(|a| (std::slice::from_ref(a), &zero_pos[..])).collect();
+        let steps = engine.switch_up_many(&groups);
+        for (t, step) in steps.iter().enumerate() {
             let (j, i) = targets[t];
             if let Weight::Enc(wct) = &mut self.w[j][i] {
-                engine.sub_cc(wct, &step);
+                engine.sub_cc(wct, step);
             }
         }
     }

@@ -15,14 +15,27 @@
 //!    Doubling discards already-decided top bits mod 1, so the extractions
 //!    are independent — a boundary-noise flip costs at most 1 ulp of the
 //!    8-bit quantization and cannot cascade.
+//!
+//! Since PR 4 the extractor is a batch-parallel engine in the PR 1/PR 3
+//! mould: steps 2–4 are the allocation-free [`LweExtractor::extract_lane_into`]
+//! (dim-N workspace and dim-n output come from the caller — the `GlyphPool`
+//! workers hand in their warm [`crate::switch::SwitchScratch`] buffers), and
+//! [`LweExtractor::to_bits_many_into`] fans *all* ciphertexts × lanes × bits
+//! of a layer boundary across the pool in one `pbs_many` call. Every public
+//! entry point validates its positions against the ring's slot count and
+//! returns a [`SwitchError`] instead of panicking. The per-lane serial
+//! reference ([`LweExtractor::to_bits_serial`]) is retained as the
+//! bit-exactness oracle (`tests/switch_roundtrip.rs`,
+//! `tests/train_step_golden.rs`).
 
-use super::{SWITCH_BITS, VALUE_POS};
+use super::{SwitchError, SWITCH_BITS, VALUE_POS};
 use crate::bgv::{BgvCiphertext, BgvSecretKey};
+use crate::coordinator::executor::GlyphPool;
 use crate::math::rng::GlyphRng;
 use crate::tfhe::{LweCiphertext, LweKey, LweKeySwitchKey, TestPoly, TfheCloudKey, TfheParams, MU_BIT};
 
-/// Key material for the BGV→TFHE direction.
-pub struct BgvToTfheSwitch {
+/// The BGV→TFHE extraction engine (key material + rescale precomputation).
+pub struct LweExtractor {
     /// N_bgv (ternary BGV coefficients) → n (TFHE binary) at torus32.
     pub ksk: LweKeySwitchKey,
     /// Δ_ℓ per level (RNS residues).
@@ -33,7 +46,7 @@ pub struct BgvToTfheSwitch {
     primes: Vec<u64>,
 }
 
-impl BgvToTfheSwitch {
+impl LweExtractor {
     pub fn generate(
         bgv_sk: &BgvSecretKey,
         tfhe_key: &LweKey,
@@ -51,15 +64,53 @@ impl BgvToTfheSwitch {
                 (0..l).map(|i| rctx.q_over_qi_inv[i]).collect()
             })
             .collect();
-        BgvToTfheSwitch { ksk, deltas, qtilde, primes: ctx.params.primes.clone() }
+        LweExtractor { ksk, deltas, qtilde, primes: ctx.params.primes.clone() }
     }
 
-    /// Extract lane `b` of an MSB-mapped ciphertext as a torus32 LWE under
-    /// the BGV coefficient key.
+    /// Step 1, once per ciphertext: `×Δ` (LSB→MSB, exact, noise-preserving)
+    /// and conversion to coefficient form, ready for per-lane extraction.
+    pub fn prepare_msb(&self, ct: &BgvCiphertext) -> BgvCiphertext {
+        self.prepare_msb_shifted(ct, 0)
+    }
+
+    /// [`Self::prepare_msb`] with the engine's quantization pre-shift folded
+    /// into the same pass: ONE clone of the ciphertext per boundary crossing
+    /// (the scalar multiplications are exact RNS residue products, so
+    /// shift-then-Δ is bit-identical to scaling a separate copy first).
+    pub fn prepare_msb_shifted(&self, ct: &BgvCiphertext, pre_shift: u32) -> BgvCiphertext {
+        let mut c = ct.clone();
+        if pre_shift > 0 {
+            let res = c.c0.ctx.scalar_to_rns_i64(1i64 << pre_shift);
+            c.rns_scalar_mul_assign(&res);
+        }
+        c.rns_scalar_mul_assign(&self.deltas[c.level - 1]);
+        c.c0.to_coeff();
+        c.c1.to_coeff();
+        c
+    }
+
+    /// Steps 2–4 for one lane of a [`Self::prepare_msb`]'d ciphertext,
+    /// allocation-free: `SampleExtract(lane)` into the warm dim-N workspace
+    /// `lwe_n`, RNS→torus rescale, then the LWE key switch into the warm
+    /// dim-n output `out` (`out.a.len()` must equal the TFHE key dimension).
+    /// Bit-identical to the allocating reference path; zero heap traffic
+    /// per lane (`tests/zero_alloc_switch.rs`).
     ///
     /// The RNS→torus rescale uses `x/q mod 1 = Σ_i [x_i·q̃_i]_{q_i}/q_i mod 1`
     /// with exact u128 division per limb (≤ 1 ulp per limb).
-    fn extract_lane_torus32(&self, c0: &[Vec<u64>], c1: &[Vec<u64>], level: usize, lane: usize, n: usize) -> LweCiphertext {
+    pub fn extract_lane_into(
+        &self,
+        prepared: &BgvCiphertext,
+        lane: usize,
+        lwe_n: &mut LweCiphertext,
+        out: &mut LweCiphertext,
+    ) {
+        let level = prepared.level;
+        let n = prepared.c0.n();
+        debug_assert!(lane < n, "validated by the public entry points");
+        debug_assert_eq!(lwe_n.a.len(), n, "warm dim-N workspace required");
+        let c0 = &prepared.c0.res;
+        let c1 = &prepared.c1.res;
         let to_torus = |res: &dyn Fn(usize) -> u64| -> u32 {
             let mut acc = 0u64; // torus32 with 32 fractional bits, wrapping
             for i in 0..level {
@@ -73,19 +124,16 @@ impl BgvToTfheSwitch {
             acc as u32
         };
         // b-coefficient of the LWE = c0[lane]
-        let b = to_torus(&|i| c0[i][lane]);
+        lwe_n.b = to_torus(&|i| c0[i][lane]);
         // a_j = −c1[lane−j] for j ≤ lane, +c1[N+lane−j] for j > lane
-        let a: Vec<u32> = (0..n)
-            .map(|j| {
-                if j <= lane {
-                    let v = to_torus(&|i| c1[i][lane - j]);
-                    v.wrapping_neg()
-                } else {
-                    to_torus(&|i| c1[i][n + lane - j])
-                }
-            })
-            .collect();
-        LweCiphertext { a, b }
+        for j in 0..n {
+            lwe_n.a[j] = if j <= lane {
+                to_torus(&|i| c1[i][lane - j]).wrapping_neg()
+            } else {
+                to_torus(&|i| c1[i][n + lane - j])
+            };
+        }
+        self.ksk.switch_into(lwe_n, out);
     }
 
     /// Switch `lanes` batch lanes of a BGV ciphertext onto the TFHE key.
@@ -94,30 +142,78 @@ impl BgvToTfheSwitch {
     /// bits ride along as the SWALP rounding residue.
     ///
     /// Returns one torus32 LWE per lane with phase `v·2^24 + junk`.
-    pub fn to_torus_lanes(&self, ct: &BgvCiphertext, lanes: usize) -> Vec<LweCiphertext> {
+    pub fn to_torus_lanes(
+        &self,
+        ct: &BgvCiphertext,
+        lanes: usize,
+    ) -> Result<Vec<LweCiphertext>, SwitchError> {
         let positions: Vec<usize> = (0..lanes).collect();
         self.to_torus_positions(ct, &positions)
     }
 
     /// Same, for arbitrary coefficient positions (reverse-packed backward
     /// tensors and the convolution-trick gradient coefficient use this).
-    ///
-    /// The per-lane extract + key switch is independent work — it fans
-    /// across the global `GlyphPool` (order-preserving).
-    pub fn to_torus_positions(&self, ct: &BgvCiphertext, positions: &[usize]) -> Vec<LweCiphertext> {
-        let level = ct.level;
-        // ×Δ : LSB→MSB (exact, noise-preserving)
-        let mut c = ct.clone();
-        c.rns_scalar_mul_assign(&self.deltas[level - 1]);
-        c.c0.to_coeff();
-        c.c1.to_coeff();
-        let n = c.c0.n();
-        let c0 = &c.c0.res;
-        let c1 = &c.c1.res;
-        crate::coordinator::executor::GlyphPool::global().map(positions.to_vec(), |lane| {
-            let lwe_q = self.extract_lane_torus32(c0, c1, level, lane, n);
-            self.ksk.switch(&lwe_q)
-        })
+    pub fn to_torus_positions(
+        &self,
+        ct: &BgvCiphertext,
+        positions: &[usize],
+    ) -> Result<Vec<LweCiphertext>, SwitchError> {
+        self.to_torus_many(&[ct], positions)
+    }
+
+    /// Batched lane extraction: every `(ciphertext, position)` pair is
+    /// independent work — the whole batch fans across the global
+    /// [`GlyphPool`] in ONE call (ct-major, then position order), each
+    /// worker extracting through its warm `SwitchScratch` buffers. The Δ
+    /// map runs once per ciphertext, amortized over its lanes.
+    pub fn to_torus_many(
+        &self,
+        cts: &[&BgvCiphertext],
+        positions: &[usize],
+    ) -> Result<Vec<LweCiphertext>, SwitchError> {
+        self.to_torus_many_shifted(cts, positions, 0)
+    }
+
+    /// [`Self::to_torus_many`] with the quantization pre-shift folded into
+    /// the per-ciphertext prepare pass (one clone per ciphertext total).
+    pub fn to_torus_many_shifted(
+        &self,
+        cts: &[&BgvCiphertext],
+        positions: &[usize],
+        pre_shift: u32,
+    ) -> Result<Vec<LweCiphertext>, SwitchError> {
+        let prepared: Vec<BgvCiphertext> = cts
+            .iter()
+            .map(|ct| {
+                self.validate_positions(ct, positions)?;
+                Ok(self.prepare_msb_shifted(ct, pre_shift))
+            })
+            .collect::<Result<_, SwitchError>>()?;
+        let dst = self.ksk.dst_dim;
+        let jobs: Vec<(usize, usize)> = (0..prepared.len())
+            .flat_map(|c| positions.iter().map(move |&p| (c, p)))
+            .collect();
+        Ok(GlyphPool::global().map_with(jobs, |(c, lane), ws| {
+            let mut out = LweCiphertext::trivial(0, dst);
+            let n = prepared[c].c0.n();
+            // split borrow: the workspace comes from the worker scratch,
+            // only the returned ciphertext is allocated per lane
+            let scratch = ws.switch.lwe_n(n);
+            self.extract_lane_into(&prepared[c], lane, scratch, &mut out);
+            out
+        }))
+    }
+
+    fn validate_positions(
+        &self,
+        ct: &BgvCiphertext,
+        positions: &[usize],
+    ) -> Result<(), SwitchError> {
+        let slots = ct.c0.n();
+        match positions.iter().find(|&&p| p >= slots) {
+            Some(&position) => Err(SwitchError::PositionOutOfRange { position, slots }),
+            None => Ok(()),
+        }
     }
 
     /// Full BGV→TFHE switch: per lane, the 8 two's-complement bits
@@ -125,27 +221,69 @@ impl BgvToTfheSwitch {
     ///
     /// `ck` provides the bootstrapping for the digit extraction (one
     /// sign-PBS per bit).
-    pub fn to_bits(&self, ct: &BgvCiphertext, lanes: usize, ck: &TfheCloudKey) -> Vec<Vec<LweCiphertext>> {
+    pub fn to_bits(
+        &self,
+        ct: &BgvCiphertext,
+        lanes: usize,
+        ck: &TfheCloudKey,
+    ) -> Result<Vec<Vec<LweCiphertext>>, SwitchError> {
         let positions: Vec<usize> = (0..lanes).collect();
         self.to_bits_positions(ct, &positions, ck)
     }
 
     /// [`Self::to_bits`] for arbitrary coefficient positions.
-    ///
-    /// All lanes × [`SWITCH_BITS`] sign-PBS extractions are independent
-    /// (doubling discards already-decided top bits — module docs step 5), so
-    /// the whole batch fans across the pool in ONE `pbs_many` call instead
-    /// of a sequential per-lane / per-bit loop.
     pub fn to_bits_positions(
         &self,
         ct: &BgvCiphertext,
         positions: &[usize],
         ck: &TfheCloudKey,
-    ) -> Vec<Vec<LweCiphertext>> {
-        let tv = TestPoly::constant(ck.params.big_n, MU_BIT.wrapping_neg());
+    ) -> Result<Vec<Vec<LweCiphertext>>, SwitchError> {
+        Ok(self.to_bits_many(&[ct], positions, ck, 0)?.pop().expect("one ciphertext in, one out"))
+    }
+
+    /// Batched digit extraction over many ciphertexts: result is
+    /// `[ct][lane][bit]` (MSB first). All cts × lanes × [`SWITCH_BITS`]
+    /// sign-PBS extractions are independent (doubling discards
+    /// already-decided top bits — module docs step 5), so the whole layer
+    /// boundary fans across the pool in ONE `pbs_many` call instead of a
+    /// per-ciphertext / per-lane / per-bit loop.
+    pub fn to_bits_many(
+        &self,
+        cts: &[&BgvCiphertext],
+        positions: &[usize],
+        ck: &TfheCloudKey,
+        pre_shift: u32,
+    ) -> Result<Vec<Vec<Vec<LweCiphertext>>>, SwitchError> {
+        let mut flat = Vec::new();
+        self.to_bits_many_into(cts, positions, ck, pre_shift, &mut flat)?;
         let per_lane = SWITCH_BITS as usize;
-        let mut scaled_all = Vec::with_capacity(positions.len() * per_lane);
-        for mut lwe in self.to_torus_positions(ct, positions) {
+        let mut it = flat.into_iter();
+        Ok((0..cts.len())
+            .map(|_| {
+                (0..positions.len()).map(|_| (&mut it).take(per_lane).collect()).collect()
+            })
+            .collect())
+    }
+
+    /// Flat-output core of [`Self::to_bits_many`]: `out` is cleared and
+    /// refilled in ct-major, then lane, then bit (MSB-first) order. A caller
+    /// that holds its buffer across calls reuses the flat `Vec`'s capacity;
+    /// `to_bits_many` itself passes a fresh buffer and regroups, so use this
+    /// entry point directly when the allocation profile matters.
+    pub fn to_bits_many_into(
+        &self,
+        cts: &[&BgvCiphertext],
+        positions: &[usize],
+        ck: &TfheCloudKey,
+        pre_shift: u32,
+        out: &mut Vec<LweCiphertext>,
+    ) -> Result<(), SwitchError> {
+        out.clear();
+        let tv = TestPoly::constant(ck.params.big_n, MU_BIT.wrapping_neg());
+        let lwes = self.to_torus_many_shifted(cts, positions, pre_shift)?;
+        let per_lane = SWITCH_BITS as usize;
+        let mut scaled_all = Vec::with_capacity(lwes.len() * per_lane);
+        for mut lwe in lwes {
             // Half-window guard: turns the floor quantization into
             // round-to-nearest and moves exact grid values off the PBS
             // decision boundaries (otherwise the LSB of an exact value
@@ -160,9 +298,43 @@ impl BgvToTfheSwitch {
         // sign-PBS: phase in [0, 1/2) means top bit 0 → output must encode
         // FALSE; the constant −μ test polynomial yields −μ on the positive
         // half, +μ on the negative half = bit encoding of the top bit.
-        let bits = ck.pbs_many(scaled_all, &tv);
-        let mut it = bits.into_iter();
-        (0..positions.len()).map(|_| (&mut it).take(per_lane).collect()).collect()
+        out.extend(ck.pbs_many(scaled_all, &tv));
+        Ok(())
+    }
+
+    /// Retained per-lane serial reference of [`Self::to_bits_positions`]:
+    /// the same Δ map, extraction, key switch and sign-PBS sequence run
+    /// one lane and one bit at a time with no pool fan-out. Bit-identical
+    /// to the batched engine (every job is deterministic and independent) —
+    /// the oracle `tests/train_step_golden.rs` and `benches/switch.rs`
+    /// measure against.
+    pub fn to_bits_serial(
+        &self,
+        ct: &BgvCiphertext,
+        positions: &[usize],
+        ck: &TfheCloudKey,
+        pre_shift: u32,
+    ) -> Result<Vec<Vec<LweCiphertext>>, SwitchError> {
+        self.validate_positions(ct, positions)?;
+        let prepared = self.prepare_msb_shifted(ct, pre_shift);
+        let n = prepared.c0.n();
+        let tv = TestPoly::constant(ck.params.big_n, MU_BIT.wrapping_neg());
+        let mut lwe_n = LweCiphertext::trivial(0, n);
+        Ok(positions
+            .iter()
+            .map(|&lane| {
+                let mut lwe = LweCiphertext::trivial(0, self.ksk.dst_dim);
+                self.extract_lane_into(&prepared, lane, &mut lwe_n, &mut lwe);
+                lwe.add_constant(1 << (VALUE_POS - 1));
+                (0..SWITCH_BITS)
+                    .map(|k| {
+                        let mut scaled = lwe.clone();
+                        scaled.scalar_mul_assign(1 << k);
+                        ck.pbs(&scaled, &tv)
+                    })
+                    .collect()
+            })
+            .collect())
     }
 }
 
@@ -201,7 +373,7 @@ mod tests {
         let scaled: Vec<i64> = values.iter().map(|&v| v << frac).collect();
         let pt = Plaintext::encode_batch(&scaled, &f.bgv_ctx.params);
         let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
-        let lwes = f.fwd.to_torus_lanes(&ct, values.len());
+        let lwes = f.fwd.to_torus_lanes(&ct, values.len()).unwrap();
         for (i, lwe) in lwes.iter().enumerate() {
             let phase = lwe.phase(&f.lwe_key);
             let want = ((values[i] as i64) << VALUE_POS) as u32; // v·2^24
@@ -220,7 +392,7 @@ mod tests {
         let scaled: Vec<i64> = values.iter().map(|&v| v << frac).collect();
         let pt = Plaintext::encode_batch(&scaled, &f.bgv_ctx.params);
         let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
-        let bits = f.fwd.to_bits(&ct, values.len(), &f.extract_ck);
+        let bits = f.fwd.to_bits(&ct, values.len(), &f.extract_ck).unwrap();
         for (lane, lane_bits) in bits.iter().enumerate() {
             let byte = (values[lane] & 0xFF) as u8;
             for (i, bct) in lane_bits.iter().enumerate() {
@@ -242,13 +414,51 @@ mod tests {
         let scaled: Vec<i64> = values.iter().map(|&v| (v << frac) + residue).collect();
         let pt = Plaintext::encode_batch(&scaled, &f.bgv_ctx.params);
         let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
-        let bits = f.fwd.to_bits(&ct, values.len(), &f.extract_ck);
+        let bits = f.fwd.to_bits(&ct, values.len(), &f.extract_ck).unwrap();
         for (lane, lane_bits) in bits.iter().enumerate() {
             let mut got = 0u8;
             for bct in lane_bits {
                 got = (got << 1) | decode_bit(bct.phase(&f.lwe_key)) as u8;
             }
             assert_eq!(got as i8 as i64, values[lane], "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_position_is_a_descriptive_error() {
+        let mut f = fixture(504);
+        let pt = Plaintext::encode_batch(&[1, 2], &f.bgv_ctx.params);
+        let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
+        let slots = f.bgv_ctx.params.n;
+        let err = f.fwd.to_torus_positions(&ct, &[0, slots + 7]).err().expect("must reject");
+        assert_eq!(err, SwitchError::PositionOutOfRange { position: slots + 7, slots });
+        let msg = err.to_string();
+        assert!(msg.contains(&(slots + 7).to_string()) && msg.contains(&slots.to_string()), "{msg}");
+        // the bits entry point propagates the same error
+        assert!(f.fwd.to_bits_positions(&ct, &[slots], &f.extract_ck).is_err());
+        // serial reference agrees
+        assert!(f.fwd.to_bits_serial(&ct, &[slots], &f.extract_ck, 0).is_err());
+    }
+
+    #[test]
+    fn batched_bits_match_serial_reference_exactly() {
+        // The pooled extract engine must produce the same *ciphertexts* as
+        // the retained serial path — not merely the same decryptions.
+        let mut f = fixture(505);
+        let t = f.bgv_ctx.params.t;
+        let frac = t.trailing_zeros() - SWITCH_BITS;
+        let values: Vec<i64> = vec![12, -3, 90];
+        let scaled: Vec<i64> = values.iter().map(|&v| v << frac).collect();
+        let pt = Plaintext::encode_batch(&scaled, &f.bgv_ctx.params);
+        let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
+        let positions = [0usize, 1, 2];
+        let batched = f.fwd.to_bits_positions(&ct, &positions, &f.extract_ck).unwrap();
+        let serial = f.fwd.to_bits_serial(&ct, &positions, &f.extract_ck, 0).unwrap();
+        for (lane, (b, s)) in batched.iter().zip(&serial).enumerate() {
+            for (bit, (cb, cs)) in b.iter().zip(s).enumerate() {
+                assert_eq!(cb.a, cs.a, "lane {lane} bit {bit} mask");
+                assert_eq!(cb.b, cs.b, "lane {lane} bit {bit} body");
+            }
         }
     }
 

@@ -18,8 +18,12 @@
 pub mod extract;
 pub mod repack;
 
-pub use extract::BgvToTfheSwitch;
-pub use repack::TfheToBgvSwitch;
+pub use extract::LweExtractor;
+pub use repack::Repacker;
+
+/// Historical names of the switch engines (PR ≤ 3 call sites / examples).
+pub type BgvToTfheSwitch = LweExtractor;
+pub type TfheToBgvSwitch = Repacker;
 
 /// Bit width of values crossing the switch (paper: 8-bit quantization).
 pub const SWITCH_BITS: u32 = 8;
@@ -28,10 +32,75 @@ pub const SWITCH_BITS: u32 = 8;
 /// torus, v an 8-bit two's-complement integer.
 pub const VALUE_POS: u32 = 32 - SWITCH_BITS;
 
+/// Switch-layer validation failure: every public extract entry point checks
+/// its coefficient positions against the ciphertext's slot count up front
+/// and reports *which* index overflowed instead of panicking deep inside the
+/// lane-extraction arithmetic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SwitchError {
+    /// A requested coefficient position does not exist in the ring.
+    PositionOutOfRange {
+        /// The offending coefficient index.
+        position: usize,
+        /// The ciphertext's slot (ring-degree) count.
+        slots: usize,
+    },
+}
+
+impl std::fmt::Display for SwitchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SwitchError::PositionOutOfRange { position, slots } => write!(
+                f,
+                "switch position {position} out of range: the ciphertext has {slots} \
+                 coefficient slots (valid positions are 0..{slots})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SwitchError {}
+
+/// Per-worker scratch for the scheme-switch hot paths, mirroring the PR 1
+/// `PbsScratch` / PR 3 `BgvScratch` design: one of these lives in every
+/// `GlyphPool` [`crate::coordinator::executor::WorkerScratch`], so batched
+/// switch fan-outs reuse warm buffers instead of allocating per lane
+/// (`tests/zero_alloc_switch.rs`).
+pub struct SwitchScratch {
+    /// Dim-N_bgv extracted-sample workspace (`SampleExtract` output before
+    /// the LWE key switch), grown on first use per dimension.
+    pub lwe_n: crate::tfhe::LweCiphertext,
+    /// Packing-key-switch accumulators (TFHE→BGV repack).
+    pub repack: crate::tfhe::RepackScratch,
+}
+
+impl SwitchScratch {
+    pub fn new() -> Self {
+        SwitchScratch {
+            lwe_n: crate::tfhe::LweCiphertext { a: Vec::new(), b: 0 },
+            repack: crate::tfhe::RepackScratch::new(),
+        }
+    }
+
+    /// The dim-`n` extraction workspace, resized on first use.
+    pub fn lwe_n(&mut self, n: usize) -> &mut crate::tfhe::LweCiphertext {
+        if self.lwe_n.a.len() != n {
+            self.lwe_n.a.resize(n, 0);
+        }
+        &mut self.lwe_n
+    }
+}
+
+impl Default for SwitchScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::extract::BgvToTfheSwitch;
-    use super::repack::TfheToBgvSwitch;
+    use super::extract::LweExtractor as BgvToTfheSwitch;
+    use super::repack::Repacker as TfheToBgvSwitch;
     use crate::bgv::{BgvContext, BgvParams, BgvSecretKey, KeyAuthority, NoiseRefresher, Plaintext};
     use crate::math::rng::GlyphRng;
     use crate::tfhe::{LweKey, TfheCloudKey, TfheParams, TrlweKey};
@@ -81,7 +150,7 @@ mod tests {
         let ct = f.bgv_sk.encrypt(&pt, &mut f.rng);
 
         let lanes = values.len();
-        let bits = f.fwd.to_bits(&ct, lanes, &f.extract_ck);
+        let bits = f.fwd.to_bits(&ct, lanes, &f.extract_ck).unwrap();
         assert_eq!(bits.len(), lanes);
         assert_eq!(bits[0].len(), super::SWITCH_BITS as usize);
 

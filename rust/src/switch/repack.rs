@@ -10,21 +10,35 @@
 //!   refresh authority (the documented substitute for the recryption HElib
 //!   would run here, DESIGN.md §5): the packed torus ciphertext is opened on
 //!   the 8-bit grid and re-encrypted as a fresh top-level BGV ciphertext.
+//!
+//! Since PR 4 the repacker is batch-parallel: [`Repacker::pack_and_raise_many`]
+//! fans the packing key switches of a whole layer boundary across the
+//! `GlyphPool` (each worker packing through its warm
+//! [`crate::tfhe::RepackScratch`], zero allocations per lane in the scratch
+//! path — `tests/zero_alloc_switch.rs`), then performs the modulus raises
+//! *serially in submission order* so the refresh authority's RNG draws stay
+//! deterministic — batched results are bit-identical to a per-group serial
+//! loop. The raise's ring key is derived once at key generation instead of
+//! per call.
 
 use crate::bgv::{BgvCiphertext, BgvSecretKey, KeyAuthority, Plaintext};
+use crate::coordinator::executor::GlyphPool;
 use crate::math::rng::GlyphRng;
 use crate::tfhe::keyswitch::PackingKeySwitchKey;
 use crate::tfhe::{LweCiphertext, TrlweCiphertext, TrlweKey};
 
 use super::VALUE_POS;
 
-/// Key material for the TFHE→BGV direction.
-pub struct TfheToBgvSwitch {
+/// The TFHE→BGV repacking engine (key material for both steps).
+pub struct Repacker {
     /// gate-profile extracted key (dim N_gate) → BGV ring key packing.
     pub pksk: PackingKeySwitchKey,
+    /// The BGV secret's coefficient ring key, cached for the authority's
+    /// modulus raise (built once here instead of per raised ciphertext).
+    raise_ring: TrlweKey,
 }
 
-impl TfheToBgvSwitch {
+impl Repacker {
     /// `gate_ring` is the TRLWE key whose extracted key the activation
     /// outputs live under; the destination ring key is the BGV secret.
     pub fn generate(gate_ring: &TrlweKey, bgv_sk: &BgvSecretKey, rng: &mut GlyphRng) -> Self {
@@ -32,7 +46,7 @@ impl TfheToBgvSwitch {
         let dst_ring = TrlweKey::from_coeffs(bgv_sk.coeffs_i32());
         // base 4^7: decomposition remainder ≈ 2^4·||s||₁ ≈ 2^15 ≪ 2^23 grid margin.
         let pksk = PackingKeySwitchKey::generate(&src, &dst_ring, 4, 7, 1e-9, rng);
-        TfheToBgvSwitch { pksk }
+        Repacker { pksk, raise_ring: dst_ring }
     }
 
     /// Pack one recomposed LWE per batch lane into a single torus ring
@@ -45,8 +59,7 @@ impl TfheToBgvSwitch {
     /// Pack at arbitrary coefficient positions (reverse packing for the
     /// backward pass's convolution-trick gradients).
     pub fn pack_at(&self, lanes: &[LweCiphertext], positions: &[usize]) -> TrlweCiphertext {
-        let refs: Vec<&LweCiphertext> = lanes.iter().collect();
-        self.pksk.pack(&refs, positions)
+        self.pksk.pack(lanes, positions)
     }
 
     /// Pack at positions then raise via the authority, reading values back
@@ -58,35 +71,68 @@ impl TfheToBgvSwitch {
         auth: &KeyAuthority,
     ) -> BgvCiphertext {
         let packed = self.pack_at(lanes, positions);
-        raise_torus_to_bgv_positions(&packed, positions, auth)
+        self.raise(&packed, positions, auth)
     }
 
     /// Steps ➊–➌: pack, then raise to a fresh BGV ciphertext via the
     /// refresh authority. Values are read on the 2^24 grid as signed 8-bit.
     pub fn pack_and_raise(&self, lanes: &[LweCiphertext], auth: &KeyAuthority) -> BgvCiphertext {
-        let packed = self.pack(lanes);
-        raise_torus_to_bgv(&packed, lanes.len(), auth)
+        let positions: Vec<usize> = (0..lanes.len()).collect();
+        self.pack_at_and_raise(lanes, &positions, auth)
+    }
+
+    /// Batched steps ➊–➌ over many lane groups (one packed ring ciphertext
+    /// each): the packing key switches — the expensive lattice work — fan
+    /// across the global [`GlyphPool`] with one warm
+    /// [`crate::tfhe::RepackScratch`] per worker, then the modulus raises
+    /// run serially in submission order (the authority's RNG draw order is
+    /// part of the deterministic contract). Result `out[g]` is bit-identical
+    /// to `pack_at_and_raise(groups[g].0, groups[g].1, auth)` run in a loop.
+    pub fn pack_and_raise_many(
+        &self,
+        groups: &[(&[LweCiphertext], &[usize])],
+        auth: &KeyAuthority,
+    ) -> Vec<BgvCiphertext> {
+        let n = self.pksk.ring_n;
+        let packed: Vec<TrlweCiphertext> =
+            GlyphPool::global().map_with((0..groups.len()).collect(), |g, ws| {
+                let (lanes, positions) = groups[g];
+                let mut out = TrlweCiphertext::zero(n);
+                self.pksk.pack_into(lanes, positions, &mut ws.switch.repack, &mut out);
+                out
+            });
+        packed
+            .iter()
+            .zip(groups)
+            .map(|(p, (_, positions))| self.raise(p, positions, auth))
+            .collect()
+    }
+
+    /// The modulus raise performed by the refresh authority, reading the
+    /// given coefficient positions against the cached ring key: each value
+    /// is re-encoded at the *same* coefficient it was packed at, so
+    /// reversed packing survives the raise.
+    pub fn raise(
+        &self,
+        packed: &TrlweCiphertext,
+        positions: &[usize],
+        auth: &KeyAuthority,
+    ) -> BgvCiphertext {
+        raise_with_ring(packed, positions, &self.raise_ring, auth)
     }
 }
 
-/// The modulus raise performed by the refresh authority: open the packed
-/// torus ciphertext on the 8-bit grid and re-encrypt at top level
-/// (counted as one refresh for HOP accounting).
-pub fn raise_torus_to_bgv(packed: &TrlweCiphertext, lanes: usize, auth: &KeyAuthority) -> BgvCiphertext {
-    let positions: Vec<usize> = (0..lanes).collect();
-    raise_torus_to_bgv_positions(packed, &positions, auth)
-}
-
-/// [`raise_torus_to_bgv`] reading the given coefficient positions; each
-/// value is re-encoded at the *same* coefficient it was packed at, so
-/// reversed packing survives the modulus raise.
-pub fn raise_torus_to_bgv_positions(
+/// The modulus raise: open the packed torus ciphertext on the 8-bit grid at
+/// the given positions and re-encrypt at top level (counted as one refresh
+/// for HOP accounting). [`Repacker::raise`] supplies the ring key cached at
+/// key generation.
+fn raise_with_ring(
     packed: &TrlweCiphertext,
     positions: &[usize],
+    ring: &TrlweKey,
     auth: &KeyAuthority,
 ) -> BgvCiphertext {
-    let ring = TrlweKey::from_coeffs(auth.sk.coeffs_i32());
-    let phases = packed.phase(&ring);
+    let phases = packed.phase(ring);
     let n = auth.ctx().params.n;
     let mut values = vec![0i64; n];
     for &p in positions {
@@ -146,5 +192,33 @@ mod tests {
         assert_eq!(f.bgv_sk.decrypt(&ct).decode_batch(values.len()), values);
         // fresh noise
         assert!(f.bgv_sk.noise_magnitude(&ct) < (f.bgv_ctx.params.t as i128) << 20);
+    }
+
+    #[test]
+    fn pack_and_raise_many_matches_per_group_loop() {
+        let f = fixture(602);
+        let dim = f.bwd.pksk.pk.len();
+        let mk = |vals: &[i64]| -> Vec<crate::tfhe::LweCiphertext> {
+            vals.iter()
+                .map(|&v| crate::tfhe::LweCiphertext::trivial(((v as i64) << VALUE_POS) as u32, dim))
+                .collect()
+        };
+        let g0 = mk(&[3, -4, 55]);
+        let g1 = mk(&[-100, 100]);
+        let g2 = mk(&[0, 1, -1, 127]);
+        let p0: Vec<usize> = vec![0, 1, 2];
+        let p1: Vec<usize> = vec![5, 9];
+        let p2: Vec<usize> = vec![3, 2, 1, 0];
+        let groups: Vec<(&[crate::tfhe::LweCiphertext], &[usize])> =
+            vec![(&g0[..], &p0[..]), (&g1[..], &p1[..]), (&g2[..], &p2[..])];
+        let batched = f.bwd.pack_and_raise_many(&groups, &f.auth);
+        assert_eq!(batched.len(), 3);
+        // decryptions match a per-group serial loop (the raise re-encrypts,
+        // so compare plaintexts, which the raise fixes exactly)
+        let wants = [vec![3i64, -4, 55], vec![0, 0, 0, 0, 0, -100, 0, 0, 0, 100], vec![127, -1, 1, 0]];
+        for (g, want) in batched.iter().zip(&wants) {
+            assert_eq!(&f.bgv_sk.decrypt(g).decode_batch(want.len()), want);
+        }
+        assert_eq!(f.auth.refresh_count(), 3);
     }
 }

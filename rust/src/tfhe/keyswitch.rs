@@ -83,6 +83,18 @@ impl LweKeySwitchKey {
     /// allocation; the per-coefficient digits stay on the stack.
     pub fn switch(&self, ct: &LweCiphertext) -> LweCiphertext {
         let mut out = LweCiphertext::trivial(ct.b, self.dst_dim);
+        self.switch_into(ct, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Self::switch`] into a warm output ciphertext
+    /// (`out.a.len()` must already be `dst_dim`): same integer arithmetic,
+    /// bit-identical result, zero heap traffic — the scratch-backed half of
+    /// the BGV→TFHE switch asserted by `tests/zero_alloc_switch.rs`.
+    pub fn switch_into(&self, ct: &LweCiphertext, out: &mut LweCiphertext) {
+        debug_assert_eq!(out.a.len(), self.dst_dim, "warm output at dst_dim required");
+        out.a.fill(0);
+        out.b = ct.b;
         let mut digits = [0i32; MAX_KS_LEVELS];
         for (i, &ai) in ct.a.iter().enumerate() {
             if ai == 0 {
@@ -102,7 +114,62 @@ impl LweKeySwitchKey {
                 out.b = out.b.wrapping_sub(du.wrapping_mul(row.b));
             }
         }
-        out
+    }
+}
+
+/// Reusable buffers for one worker's packing key switches: everything
+/// [`PackingKeySwitchKey::pack`] used to allocate per call (digit
+/// polynomials, FFT lanes, FFT-domain accumulators, inverse-FFT outputs).
+/// Sized on first use per ring degree / level count, reused across packs —
+/// steady state is allocation-free (`tests/zero_alloc_switch.rs`).
+pub struct RepackScratch {
+    digit_polys: Vec<i32>,
+    any: Vec<bool>,
+    fft_lane: Vec<Cplx>,
+    acc_a: Vec<Cplx>,
+    acc_b: Vec<Cplx>,
+    sub_a: Vec<u32>,
+    sub_b: Vec<u32>,
+    n: usize,
+    len: usize,
+}
+
+impl RepackScratch {
+    pub fn new() -> Self {
+        RepackScratch {
+            digit_polys: Vec::new(),
+            any: Vec::new(),
+            fft_lane: Vec::new(),
+            acc_a: Vec::new(),
+            acc_b: Vec::new(),
+            sub_a: Vec::new(),
+            sub_b: Vec::new(),
+            n: 0,
+            len: 0,
+        }
+    }
+
+    /// Size every buffer for ring degree `n` and `len` decomposition levels
+    /// (no-op when already warm for these dimensions).
+    fn ensure(&mut self, n: usize, len: usize) {
+        if self.n == n && self.len == len {
+            return;
+        }
+        self.digit_polys = vec![0i32; len * n];
+        self.any = vec![false; len];
+        self.fft_lane = vec![Cplx::default(); n / 2];
+        self.acc_a = vec![Cplx::default(); n / 2];
+        self.acc_b = vec![Cplx::default(); n / 2];
+        self.sub_a = vec![0u32; n];
+        self.sub_b = vec![0u32; n];
+        self.n = n;
+        self.len = len;
+    }
+}
+
+impl Default for RepackScratch {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -150,36 +217,59 @@ impl PackingKeySwitchKey {
 
     /// Pack `samples[m]` at coefficient `positions[m]` of one TRLWE.
     ///
+    /// Allocating convenience wrapper over [`Self::pack_into`] (fresh
+    /// scratch and output per call — the retained reference shape).
+    pub fn pack<S: std::borrow::Borrow<LweCiphertext>>(
+        &self,
+        samples: &[S],
+        positions: &[usize],
+    ) -> TrlweCiphertext {
+        let mut out = TrlweCiphertext::zero(self.ring_n);
+        let mut scratch = RepackScratch::new();
+        self.pack_into(samples, positions, &mut scratch, &mut out);
+        out
+    }
+
+    /// Scratch-backed [`Self::pack`] into a warm output ciphertext:
+    /// bit-identical to the reference (same floating-point accumulation
+    /// sequence), zero heap allocations once `scratch` and `out` are sized
+    /// (`tests/zero_alloc_switch.rs`). Generic over owned (`&[LweCiphertext]`)
+    /// and borrowed (`&[&LweCiphertext]`) sample slices so batch callers
+    /// need no per-group reference `Vec`.
+    ///
     /// Implements the public functional key switch with f = the packing
     /// linear map: the decomposition digits of every `a^{(m)}_i` are gathered
     /// into integer polynomials (digit × X^{pos_m}) so each key row is
     /// multiplied only once per level, then `b^{(m)}` lands on coefficient
     /// `pos_m` of the b-component.
-    pub fn pack(&self, samples: &[&LweCiphertext], positions: &[usize]) -> TrlweCiphertext {
+    pub fn pack_into<S: std::borrow::Borrow<LweCiphertext>>(
+        &self,
+        samples: &[S],
+        positions: &[usize],
+        scratch: &mut RepackScratch,
+        out: &mut TrlweCiphertext,
+    ) {
         assert_eq!(samples.len(), positions.len());
         let n = self.ring_n;
-        let m_half = n / 2;
+        debug_assert!(out.a.len() == n && out.b.len() == n, "warm output at ring_n required");
+        for &p in positions {
+            assert!(p < n, "pack position {p} outside the {n}-coefficient ring");
+        }
         let src_dim = self.pk.len();
-        let mut acc_a = vec![Cplx::default(); m_half];
-        let mut acc_b = vec![Cplx::default(); m_half];
+        scratch.ensure(n, self.len);
+        scratch.acc_a.fill(Cplx::default());
+        scratch.acc_b.fill(Cplx::default());
         // For each source index i: all `len` digit polynomials
         // Σ_m digit_j(a^{(m)}_i)·X^{pos_m}, built with ONE stack
-        // decomposition per sample (the old path re-decomposed the scalar
-        // for every level and allocated a Vec each time), then one FFT +
-        // mul-acc per non-zero level in (i, j) order — the floating-point
-        // accumulation sequence is unchanged.
-        let mut digit_polys = vec![0i32; self.len * n];
-        let mut any = vec![false; self.len];
-        let mut fft_lane = vec![Cplx::default(); m_half];
+        // decomposition per sample, then one FFT + mul-acc per non-zero
+        // level in (i, j) order — the floating-point accumulation sequence
+        // matches the reference exactly.
         let mut digits = [0i32; MAX_KS_LEVELS];
         for i in 0..src_dim {
-            for x in digit_polys.iter_mut() {
-                *x = 0;
-            }
-            for x in any.iter_mut() {
-                *x = false;
-            }
+            scratch.digit_polys.fill(0);
+            scratch.any.fill(false);
             for (m, ct) in samples.iter().enumerate() {
+                let ct = ct.borrow();
                 if ct.a[i] == 0 {
                     continue; // zero decomposes to all-zero digits
                 }
@@ -187,38 +277,39 @@ impl PackingKeySwitchKey {
                 for j in 0..self.len {
                     let d = digits[j];
                     if d != 0 {
-                        digit_polys[j * n + positions[m]] += d;
-                        any[j] = true;
+                        scratch.digit_polys[j * n + positions[m]] += d;
+                        scratch.any[j] = true;
                     }
                 }
             }
             for j in 0..self.len {
-                if !any[j] {
+                if !scratch.any[j] {
                     continue;
                 }
-                self.fft.forward_int_into(&digit_polys[j * n..(j + 1) * n], &mut fft_lane);
+                self.fft
+                    .forward_int_into(&scratch.digit_polys[j * n..(j + 1) * n], &mut scratch.fft_lane);
                 // acc −= digit_poly · pk[i][j]  (both components)
                 let row = &self.pk[i][j];
                 // negate via multiplying digits by −1: cheaper to subtract at
                 // the end; here accumulate then subtract once.
-                self.fft.mul_acc(&fft_lane, &row.0, &mut acc_a);
-                self.fft.mul_acc(&fft_lane, &row.1, &mut acc_b);
+                self.fft.mul_acc(&scratch.fft_lane, &row.0, &mut scratch.acc_a);
+                self.fft.mul_acc(&scratch.fft_lane, &row.1, &mut scratch.acc_b);
             }
         }
         // out = (0, Σ_m b^{(m)} X^{pos_m}) − Σ acc
-        let mut out = TrlweCiphertext::zero(n);
-        let mut sub_a = vec![0u32; n];
-        let mut sub_b = vec![0u32; n];
-        self.fft.inverse_add_to_torus_inplace(&mut acc_a, &mut sub_a);
-        self.fft.inverse_add_to_torus_inplace(&mut acc_b, &mut sub_b);
+        out.a.fill(0);
+        out.b.fill(0);
+        scratch.sub_a.fill(0);
+        scratch.sub_b.fill(0);
+        self.fft.inverse_add_to_torus_inplace(&mut scratch.acc_a, &mut scratch.sub_a);
+        self.fft.inverse_add_to_torus_inplace(&mut scratch.acc_b, &mut scratch.sub_b);
         for i in 0..n {
-            out.a[i] = out.a[i].wrapping_sub(sub_a[i]);
-            out.b[i] = out.b[i].wrapping_sub(sub_b[i]);
+            out.a[i] = out.a[i].wrapping_sub(scratch.sub_a[i]);
+            out.b[i] = out.b[i].wrapping_sub(scratch.sub_b[i]);
         }
         for (m, ct) in samples.iter().enumerate() {
-            out.b[positions[m]] = out.b[positions[m]].wrapping_add(ct.b);
+            out.b[positions[m]] = out.b[positions[m]].wrapping_add(ct.borrow().b);
         }
-        out
     }
 }
 

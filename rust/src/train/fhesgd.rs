@@ -105,6 +105,14 @@ pub fn tlu_activate(
 /// derivative lookup σ′ of the stored activation (the paper's `Act-error`
 /// rows). The last layer (`output_unit`) instead computes the quadratic-
 /// loss derivative δ = d − t directly.
+///
+/// Layer-boundary note for the PR 4 switch engine: unlike the Glyph
+/// ReLU/softmax units, the FHESGD baseline never crosses into TFHE — its
+/// entry conversion is the refresh-substituted domain hop inside
+/// `tlu_activate` (2 refreshes per lookup, counted as `tlu`/`refresh`), so
+/// there is no extract/repack traffic to batch here; the engine's
+/// `switch_down_many`/`switch_up_many` lanes counters stay zero on this
+/// path by design (asserted transitively by `plan_consistency.rs`).
 pub struct SigmoidTluLayer {
     pub domain: Arc<TluDomain>,
     pub table: Arc<LookupTable>,

@@ -30,6 +30,17 @@ fn assert_counts_match(live: glyph::coordinator::OpSnapshot, predicted: glyph::c
         "T2B switches: live {live:?} vs plan {predicted:?}"
     );
     assert_eq!(live.refresh, predicted.refresh, "refresh: live {live:?} vs plan {predicted:?}");
+    // PR 4: the switch engine's lane-level counters (one extract per
+    // requested coefficient, one repack per packed LWE) are predicted by the
+    // plan and must match the live engine exactly, like `relin` in PR 3.
+    assert_eq!(
+        live.extract_lanes, predicted.extract_lanes,
+        "extract lanes: live {live:?} vs plan {predicted:?}"
+    );
+    assert_eq!(
+        live.repack_lanes, predicted.repack_lanes,
+        "repack lanes: live {live:?} vs plan {predicted:?}"
+    );
 }
 
 #[test]
@@ -47,8 +58,10 @@ fn mlp_train_step_matches_compiled_plan_exactly() {
         .unwrap();
     assert!(net.plan.validate());
     let predicted = net.plan.totals();
-    // the plan predicts a real switch mix, not zeros
+    // the plan predicts a real switch mix, not zeros — including the
+    // lane-level extract/repack accounting of the batched switch engine
     assert!(predicted.switch_b2t > 0 && predicted.switch_t2b > 0 && predicted.act_gates > 0);
+    assert!(predicted.extract_lanes > 0 && predicted.repack_lanes > 0);
 
     let x_cts = (0..3).map(|i| client.encrypt_batch(&[7 * i as i64 - 4, 9 - i as i64], 0)).collect();
     let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);

@@ -1,0 +1,201 @@
+//! Switch conformance harness, part 1: seeded randomized round-trip
+//! property tests for the batch-parallel scheme-switch engine.
+//!
+//! The property: `to_bits_positions` ∘ (weighted-gate recomposition) ∘
+//! `pack_at_and_raise` is the IDENTITY on quantized plaintexts — for every
+//! supported value bit width (1..=8), across BGV levels, lane counts,
+//! sparse coefficient-position sets and plaintext moduli. The recomposition
+//! runs the real `and_weighted_raw` gate bootstraps against an encrypted
+//! TRUE, so every lattice stage of the switch is exercised: Δ map, sample
+//! extraction, LWE key switch, PBS digit extraction, weighted gates,
+//! packing key switch, modulus raise.
+//!
+//! Every assertion carries the failing case's seed so a red run is
+//! reproducible: set `GLYPH_PROP_SEED` to replay a base seed (the
+//! `ntt_properties.rs` convention).
+
+use glyph::bgv::{BgvContext, BgvParams, BgvSecretKey, KeyAuthority, Plaintext};
+use glyph::math::modarith::gen_ntt_primes;
+use glyph::math::GlyphRng;
+use glyph::switch::extract::bit_position;
+use glyph::switch::{LweExtractor, Repacker, SwitchError, SWITCH_BITS};
+use glyph::tfhe::{encode_bit, LweCiphertext, LweKey, TfheCloudKey, TfheParams, TrlweKey};
+use std::sync::Arc;
+
+fn base_seed() -> u64 {
+    std::env::var("GLYPH_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x5317_c45e_ed00_4242)
+}
+
+struct Fixture {
+    ctx: Arc<BgvContext>,
+    sk: Arc<BgvSecretKey>,
+    gate_lwe_key: LweKey,
+    gate_ck: TfheCloudKey,
+    extract_ck: TfheCloudKey,
+    fwd: LweExtractor,
+    bwd: Repacker,
+    auth: Arc<KeyAuthority>,
+    rng: GlyphRng,
+}
+
+/// Full switch fixture over a *custom* plaintext modulus `t` (the test
+/// primes are ≡ 1 mod 2^26, so any power-of-two `t` up to 2^26 keeps the
+/// Δ maps exact — the modulus sweep below relies on this).
+fn fixture_with_t(t: u64, seed: u64) -> Fixture {
+    let align = 1u64 << 26;
+    let params = BgvParams {
+        n: 256,
+        primes: gen_ntt_primes(3, align, 1u64 << 32),
+        t,
+        sigma: 3.2,
+        prime_align: align,
+    };
+    let ctx = BgvContext::new(params);
+    let mut rng = GlyphRng::new(seed);
+    let sk = Arc::new(BgvSecretKey::generate(&ctx, &mut rng));
+    let tfhe = TfheParams::test_params();
+    let lwe_key = LweKey::generate_binary(tfhe.n, &mut rng);
+    let gate_ring = TrlweKey::generate(tfhe.big_n, &mut rng);
+    let gate_ck = TfheCloudKey::generate(&lwe_key, &gate_ring, &tfhe, &mut rng);
+    let ext = TfheParams::test_extract_params();
+    let ext_ring = TrlweKey::generate(ext.big_n, &mut rng);
+    let extract_ck = TfheCloudKey::generate(&lwe_key, &ext_ring, &ext, &mut rng);
+    let fwd = LweExtractor::generate(&sk, &lwe_key, &ext, &mut rng);
+    let bwd = Repacker::generate(&gate_ring, &sk, &mut rng);
+    let auth = KeyAuthority::new(sk.clone(), GlyphRng::new(seed ^ 0xa77));
+    Fixture { ctx, sk, gate_lwe_key: lwe_key, gate_ck, extract_ck, fwd, bwd, auth, rng }
+}
+
+impl Fixture {
+    /// Homomorphic identity recomposition: AND every delivered bit with an
+    /// encrypted TRUE at its weighted torus position (`2^(24+i)` grid) and
+    /// sum — the exact contract the activation gates satisfy.
+    fn recompose(&mut self, lane_bits: &[LweCiphertext]) -> LweCiphertext {
+        let truth = LweCiphertext::encrypt(
+            encode_bit(true),
+            &self.gate_lwe_key,
+            self.gate_ck.params.alpha_lwe,
+            &mut self.rng,
+        );
+        let mut acc: Option<LweCiphertext> = None;
+        for (i, b) in lane_bits.iter().enumerate() {
+            let w = self.gate_ck.and_weighted_raw(b, &truth, bit_position(i));
+            match &mut acc {
+                None => acc = Some(w),
+                Some(a) => a.add_assign(&w),
+            }
+        }
+        acc.expect("SWITCH_BITS ≥ 1")
+    }
+}
+
+/// One round trip at `level`: encrypt `values` (pre-quantized to the top 8
+/// bits of `t`) at sparse `positions`, switch down to two's-complement
+/// bits, recompose through the weighted gates, pack back at the SAME
+/// positions and raise; the decryption must equal `values` identically.
+fn assert_round_trip(
+    f: &mut Fixture,
+    values: &[i64],
+    positions: &[usize],
+    level: usize,
+    seed: u64,
+) {
+    let t = f.ctx.params.t;
+    let frac = t.trailing_zeros() - SWITCH_BITS;
+    let n = f.ctx.params.n;
+    let mut coeffs = vec![0i64; n];
+    for (v, &p) in values.iter().zip(positions) {
+        coeffs[p] = v << frac;
+    }
+    let pt = Plaintext::encode_batch(&coeffs, &f.ctx.params);
+    let mut ct = f.sk.encrypt(&pt, &mut f.rng);
+    ct.mod_switch_to(level, &f.ctx);
+    let bits = f
+        .fwd
+        .to_bits_positions(&ct, positions, &f.extract_ck)
+        .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    assert_eq!(bits.len(), positions.len(), "seed {seed}");
+    assert!(bits.iter().all(|b| b.len() == SWITCH_BITS as usize), "seed {seed}");
+    let recomposed: Vec<LweCiphertext> = bits.iter().map(|b| f.recompose(b)).collect();
+    let out = f.bwd.pack_at_and_raise(&recomposed, positions, &f.auth);
+    let got = f.sk.decrypt(&out);
+    for (v, &p) in values.iter().zip(positions) {
+        assert_eq!(
+            got.coeffs[p], *v,
+            "seed {seed}: position {p}, level {level}, t=2^{}",
+            t.trailing_zeros()
+        );
+    }
+    // positions that were never packed come back exactly zero
+    if let Some(free) = (0..n).find(|p| !positions.contains(p)) {
+        assert_eq!(got.coeffs[free], 0, "seed {seed}: untouched position {free}");
+    }
+}
+
+/// Random signed value fitting in `width` bits (two's complement).
+fn rand_value(rng: &mut GlyphRng, width: u32) -> i64 {
+    let span = 1u64 << width; // [−2^(w−1), 2^(w−1))
+    (rng.uniform_mod(span) as i64) - (span as i64 / 2)
+}
+
+#[test]
+fn round_trip_is_identity_for_every_bit_width() {
+    let seed = base_seed();
+    let mut f = fixture_with_t(1 << 16, seed);
+    for width in 1..=SWITCH_BITS {
+        let case_seed = seed ^ (u64::from(width) << 32);
+        let mut vr = GlyphRng::new(case_seed);
+        let values: Vec<i64> = (0..3).map(|_| rand_value(&mut vr, width)).collect();
+        let positions: Vec<usize> = vec![0, 1, 2];
+        assert_round_trip(&mut f, &values, &positions, f.ctx.top_level(), case_seed);
+    }
+}
+
+#[test]
+fn round_trip_survives_sparse_positions_levels_and_lane_counts() {
+    let seed = base_seed() ^ 0x10c4;
+    let mut f = fixture_with_t(1 << 16, seed);
+    let top = f.ctx.top_level();
+    // (level, lane count) sweep with randomized sparse position sets
+    for (case, &(level, lanes)) in [(top, 1usize), (top, 5), (top - 1, 3)].iter().enumerate() {
+        let case_seed = seed ^ ((case as u64 + 1) << 40);
+        let mut vr = GlyphRng::new(case_seed);
+        let mut positions: Vec<usize> = Vec::new();
+        while positions.len() < lanes {
+            let p = vr.uniform_mod(f.ctx.params.n as u64) as usize;
+            if !positions.contains(&p) {
+                positions.push(p);
+            }
+        }
+        let values: Vec<i64> = (0..lanes).map(|_| rand_value(&mut vr, SWITCH_BITS)).collect();
+        assert_round_trip(&mut f, &values, &positions, level, case_seed);
+    }
+}
+
+#[test]
+fn round_trip_is_identity_across_plaintext_moduli() {
+    // the switch quantizes at the top 8 bits of t — sweep t itself
+    let seed = base_seed() ^ 0x7a11;
+    for (case, log_t) in [12u32, 20].into_iter().enumerate() {
+        let case_seed = seed ^ ((case as u64 + 1) << 48);
+        let mut f = fixture_with_t(1u64 << log_t, case_seed);
+        let mut vr = GlyphRng::new(case_seed ^ 1);
+        let values: Vec<i64> = (0..2).map(|_| rand_value(&mut vr, SWITCH_BITS)).collect();
+        let positions: Vec<usize> = vec![0, 7];
+        assert_round_trip(&mut f, &values, &positions, f.ctx.top_level(), case_seed);
+    }
+}
+
+#[test]
+fn out_of_range_positions_error_instead_of_panicking_end_to_end() {
+    let seed = base_seed() ^ 0x0bad;
+    let mut f = fixture_with_t(1 << 16, seed);
+    let pt = Plaintext::encode_batch(&[1], &f.ctx.params);
+    let ct = f.sk.encrypt(&pt, &mut f.rng);
+    let slots = f.ctx.params.n;
+    let err = f.fwd.to_bits_positions(&ct, &[slots + 3], &f.extract_ck).err().expect("reject");
+    assert_eq!(err, SwitchError::PositionOutOfRange { position: slots + 3, slots });
+}

@@ -1,0 +1,121 @@
+//! Switch conformance harness, part 2: proof that the scratch-backed
+//! scheme-switch paths perform ZERO heap allocations per switched lane —
+//! the extract side (`SampleExtract` + RNS→torus rescale + LWE key switch
+//! via `extract_lane_into`/`switch_into`) and the repack side (the packing
+//! functional key switch via `pack_into`) — at the paper's lane counts
+//! (mini-batch 60 for the MLP, 32-lane groups for the CNN-shaped sweep).
+//!
+//! Counting-allocator harness in the `zero_alloc.rs` / `zero_alloc_bgv.rs`
+//! mould: warm the scratch once, then every further lane must not touch the
+//! allocator at all. This file holds exactly ONE test so no concurrent test
+//! can pollute the counter (each integration-test file is its own process).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_switch_extract_and_repack_are_allocation_free() {
+    use glyph::bgv::{BgvContext, BgvParams, BgvSecretKey, Plaintext};
+    use glyph::math::GlyphRng;
+    use glyph::switch::{LweExtractor, Repacker, SwitchScratch, VALUE_POS};
+    use glyph::tfhe::{LweCiphertext, LweKey, TfheParams, TrlweCiphertext, TrlweKey};
+
+    let ctx = BgvContext::new(BgvParams::test_params());
+    let mut rng = GlyphRng::new(31339);
+    let sk = BgvSecretKey::generate(&ctx, &mut rng);
+    let ext_params = TfheParams::test_extract_params();
+    let lwe_key = LweKey::generate_binary(ext_params.n, &mut rng);
+    let gate_ring = TrlweKey::generate(TfheParams::test_params().big_n, &mut rng);
+    let extractor = LweExtractor::generate(&sk, &lwe_key, &ext_params, &mut rng);
+    let repacker = Repacker::generate(&gate_ring, &sk, &mut rng);
+
+    // Paper lane counts: the MLP trains on mini-batches of 60 (so a value
+    // ciphertext crosses with 60 lanes); the CNN sweep packs 32-lane groups.
+    let mlp_lanes = 60usize;
+    let cnn_lanes = 32usize;
+
+    // ---- extract side -------------------------------------------------------
+    let vals: Vec<i64> = (0..mlp_lanes as i64).map(|i| (i % 200) - 100).collect();
+    let pt = Plaintext::encode_batch(&vals, &ctx.params);
+    let ct = sk.encrypt(&pt, &mut rng);
+    let prepared = extractor.prepare_msb(&ct);
+    let n = ctx.params.n;
+    let mut scratch = SwitchScratch::new();
+    let mut out_lwe = LweCiphertext::trivial(0, ext_params.n);
+    // warm-up sizes the dim-N workspace
+    extractor.extract_lane_into(&prepared, 0, scratch.lwe_n(n), &mut out_lwe);
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for lane in 0..mlp_lanes {
+        extractor.extract_lane_into(&prepared, lane, scratch.lwe_n(n), &mut out_lwe);
+        std::hint::black_box(out_lwe.b);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state lane extraction allocated {} times over {mlp_lanes} lanes",
+        after - before
+    );
+
+    // ---- repack side --------------------------------------------------------
+    // real encryptions under the gate ring's extracted key, so every
+    // decomposition digit is live and the full FFT accumulate path runs
+    let ext_key = gate_ring.extracted_lwe_key();
+    let mut mk_lanes = |count: usize| -> Vec<LweCiphertext> {
+        (0..count)
+            .map(|i| {
+                LweCiphertext::encrypt(((i as i64 - 8) << VALUE_POS) as u32, &ext_key, 1e-9, &mut rng)
+            })
+            .collect()
+    };
+    let mlp_group = mk_lanes(mlp_lanes);
+    let cnn_group = mk_lanes(cnn_lanes);
+    let mlp_positions: Vec<usize> = (0..mlp_lanes).collect();
+    let cnn_positions: Vec<usize> = (0..cnn_lanes).rev().collect(); // reversed packing
+    let mut packed = TrlweCiphertext::zero(ctx.params.n);
+    // warm-up sizes the repack accumulators
+    repacker.pksk.pack_into(&mlp_group, &mlp_positions, &mut scratch.repack, &mut packed);
+
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    repacker.pksk.pack_into(&mlp_group, &mlp_positions, &mut scratch.repack, &mut packed);
+    std::hint::black_box(packed.b[0]);
+    repacker.pksk.pack_into(&cnn_group, &cnn_positions, &mut scratch.repack, &mut packed);
+    std::hint::black_box(packed.b[0]);
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state repack allocated {} times over {} packed lanes",
+        after - before,
+        mlp_lanes + cnn_lanes
+    );
+}
