@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         // decrypted weight-magnitude proxy: shows learning signal moving
         let w00 = match &mlp.fc_layers()[0].w[0][0] {
             Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-            Weight::Plain(p) => p.pt.coeffs[0],
+            Weight::Plain(p) => p.value(),
         };
         println!("step {step}: {dt:.1}s  {d}  w[0][0][0]={w00}");
     }

@@ -10,21 +10,22 @@ use glyph::tfhe::{encode_bit, LweCiphertext, LweKey, TfheCloudKey, TfheParams, T
 fn main() {
     // ---- BGV MultCC -------------------------------------------------------
     let (engine, mut client) = GlyphEngine::setup(EngineProfile::Default, 60, 1);
+    let fhe = engine.fhe();
     let w = client.encrypt_scalar(9);
     let x = client.encrypt_batch(&vec![17; 60], 0);
     // warmup
     for _ in 0..5 {
-        let mut t = w.clone();
-        t.mul_assign(&x, &engine.rlk, &engine.ctx);
+        let mut t = w.fhe().clone();
+        t.mul_assign(x.fhe(), &fhe.rlk, &fhe.ctx);
     }
     let t0 = std::time::Instant::now();
     for _ in 0..100 {
-        let mut t = w.clone();
-        t.mul_assign(&x, &engine.rlk, &engine.ctx);
+        let mut t = w.fhe().clone();
+        t.mul_assign(x.fhe(), &fhe.rlk, &fhe.ctx);
     }
     let t_multcc = t0.elapsed().as_secs_f64() / 100.0;
     println!("MultCC (N=2048, L=3): {:.3} ms", t_multcc * 1000.0);
-    let mut a = x.clone();
+    let mut a = x.fhe().clone();
     let t0 = std::time::Instant::now();
     for _ in 0..100 {
         a.c0.to_coeff();

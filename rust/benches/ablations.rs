@@ -62,9 +62,10 @@ fn main() {
     let t_tree = time_once(|| {
         let _ = unit.evaluate_mux(&engine, &bits[0][..3]);
     });
-    let lwes = engine.fwd_switch.to_torus_lanes(&ct, 1).expect("lane 0 fits the ring");
+    let lwes = engine.fhe().fwd_switch.to_torus_lanes(ct.fhe(), 1).expect("lane 0 fits the ring");
+    let value_bit = glyph::nn::backend::Bit::Fhe(lwes[0].clone());
     let t_pbs = time_once(|| {
-        let _ = unit.evaluate_pbs(&engine, &lwes[0]);
+        let _ = unit.evaluate_pbs(&engine, &value_bit);
     });
     md.push_str(&format!(
         "(c) 3-bit softmax unit: MUX tree {:.4} s vs single-PBS {:.4} s ({}× faster; the tree is the paper-faithful 2^n-gate unit)\n",

@@ -7,7 +7,8 @@
 //! `in_dim − 1`). `GLYPH_BENCH_FULL=1` runs the production-shaped profile.
 
 use glyph::bench_util::{full_profile, report_json_with_counters, time_op, BenchRecord};
-use glyph::bgv::{CachedPlaintext, MacTerm, Plaintext};
+use glyph::bgv::{CachedPlaintext, Plaintext};
+use glyph::nn::backend::Term;
 use glyph::coordinator::max_threads;
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
 
@@ -31,11 +32,12 @@ fn main() {
     let iters = if full_profile() { 3 } else { 10 };
 
     // --- reference: one relin per term --------------------------------------
+    let fhe = engine.fhe();
     let t_ref = time_op(iters, || {
         let mut acc: Option<glyph::bgv::BgvCiphertext> = None;
         for i in 0..in_dim {
-            let mut t = ws[i].clone();
-            t.mul_assign(&xs[i], &engine.rlk, &engine.ctx);
+            let mut t = ws[i].fhe().clone();
+            t.mul_assign(xs[i].fhe(), &fhe.rlk, &fhe.ctx);
             match &mut acc {
                 None => acc = Some(t),
                 Some(a) => a.add_assign(&t),
@@ -45,36 +47,38 @@ fn main() {
     });
 
     // --- lazy: one relin per row, counted -----------------------------------
-    let row: Vec<MacTerm> = ws.iter().zip(&xs).map(|(w, x)| MacTerm::Cc(w, x)).collect();
-    let single = vec![row.clone()];
+    let row: Vec<Term> = ws.iter().zip(&xs).map(|(w, x)| Term::Cc(w, x)).collect();
+    let single = [row];
     // warm-up sizes the worker scratches
     let _ = engine.mac_rows_many(&single);
     let before = engine.counter.snapshot();
     let t_lazy = time_op(iters, || {
         let out = engine.mac_rows_many(&single);
-        std::hint::black_box(out[0].c0.res[0][0]);
+        std::hint::black_box(out[0].fhe().c0.res[0][0]);
     });
     let lazy_counts = engine.counter.snapshot().since(&before);
     let relins_per_row_lazy = lazy_counts.relin / iters as u64;
 
     // --- batched fan-out: out_dim rows across the pool ----------------------
-    let rows: Vec<Vec<MacTerm>> = (0..out_dim).map(|_| row.clone()).collect();
+    let rows: Vec<Vec<Term>> = (0..out_dim)
+        .map(|_| ws.iter().zip(&xs).map(|(w, x)| Term::Cc(w, x)).collect())
+        .collect();
     let t_rows = time_op(iters, || {
         let out = engine.mac_rows_many(&rows);
-        std::hint::black_box(out[out_dim - 1].c0.res[0][0]);
+        std::hint::black_box(out[out_dim - 1].fhe().c0.res[0][0]);
     });
 
     // --- MultCP: per-call lift vs cached evaluation form --------------------
-    let wp_plain = Plaintext::encode_scalar(9, &engine.ctx.params);
-    let wp_cached = CachedPlaintext::new(wp_plain.clone(), &engine.ctx);
+    let wp_plain = Plaintext::encode_scalar(9, &fhe.ctx.params);
+    let wp_cached = CachedPlaintext::new(wp_plain.clone(), &fhe.ctx);
     let cp_iters = iters * 10;
     let t_cp_uncached = time_op(cp_iters, || {
-        let mut t = xs[0].clone();
-        t.mul_plain_assign(&wp_plain, &engine.ctx);
+        let mut t = xs[0].fhe().clone();
+        t.mul_plain_assign(&wp_plain, &fhe.ctx);
         std::hint::black_box(t.c0.res[0][0]);
     });
     let t_cp_cached = time_op(cp_iters, || {
-        let mut t = xs[0].clone();
+        let mut t = xs[0].fhe().clone();
         t.mul_plain_cached_assign(&wp_cached);
         std::hint::black_box(t.c0.res[0][0]);
     });

@@ -1,0 +1,98 @@
+//! Clear-backend epoch throughput: samples/sec of full `Trainer` epochs per
+//! dataset (the four paper datasets' synthetic stand-ins), plus the
+//! backend-parity counters — one identical `train_step` executed on both
+//! backends must bump every homomorphic-op counter by exactly the same
+//! amount (the pricing/accounting contract `tests/backend_equivalence.rs`
+//! locks; recorded here so the artifact trail shows it per PR). Emits
+//! `bench_out/BENCH_clear_train.json`.
+
+use glyph::bench_util::{report_json_with_counters, BenchRecord};
+use glyph::data::Dataset;
+use glyph::math::GlyphRng;
+use glyph::nn::backend::Codec;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::nn::network::NetworkBuilder;
+use glyph::nn::tensor::{EncTensor, PackOrder};
+use glyph::train::{GlyphMlp, MlpConfig, Trainer};
+
+fn epoch_rate(ds: &Dataset, classes: usize) -> (f64, usize) {
+    let batch = 8;
+    let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Default, batch);
+    let mut rng = GlyphRng::new(7);
+    let config = MlpConfig {
+        dims: vec![196, 64, classes],
+        act_shifts: vec![8, 8],
+        err_shifts: vec![8, 8],
+        grad_shift: 12,
+        softmax_bits: 8,
+    };
+    let mlp = GlyphMlp::new_random(config, &mut codec, &mut rng, &engine).expect("builds");
+    let mut trainer = Trainer::new(mlp.net, classes);
+    let stats = trainer.train_epoch(ds, &engine, &mut codec).expect("epoch runs");
+    (stats.seconds / stats.samples.max(1) as f64, stats.samples)
+}
+
+/// One tiny train_step on each backend; returns (fhe HOP, clear HOP) —
+/// equal by the engine's shared accounting.
+fn parity_step(engine: &GlyphEngine, codec: &mut dyn Codec) -> u64 {
+    let mut rng = GlyphRng::new(3);
+    let mut net = NetworkBuilder::input_vec(3)
+        .fc(4)
+        .relu(0, 0)
+        .fc(2)
+        .softmax(3, 0)
+        .grad_shift(0)
+        .build(codec, &mut rng, engine)
+        .expect("builds");
+    let x_cts = (0..3).map(|i| codec.encrypt_batch(&[7 * i as i64 - 4, 9 - i as i64], 0)).collect();
+    let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+    let lab_cts = (0..2)
+        .map(|k| codec.encrypt_batch(&if k == 0 { vec![0, 127] } else { vec![127, 0] }, 0))
+        .collect();
+    let labels = EncTensor::new(lab_cts, vec![2], PackOrder::Reversed, 0);
+    let before = engine.counter.snapshot();
+    net.train_step(&x, &labels, engine);
+    engine.counter.snapshot().since(&before).hop()
+}
+
+fn parity_hops() -> (u64, u64) {
+    let batch = 2;
+    let (fhe, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260729);
+    let (clear, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, batch);
+    (parity_step(&fhe, &mut client), parity_step(&clear, &mut codec))
+}
+
+fn main() {
+    let samples = 256usize;
+    eprintln!("clear_train bench: {samples}-sample epochs, 196-64-c MLP, batch 8");
+    let datasets: Vec<(&str, Dataset, usize)> = vec![
+        ("mnist_synth", glyph::data::mnist(true, samples, 5), 10),
+        ("cancer_synth", glyph::data::synthetic_cancer(samples, 5), 7),
+        ("svhn_synth", glyph::data::synthetic_svhn(samples, 5), 10),
+        ("cifar_synth", glyph::data::synthetic_cifar(samples, 5), 10),
+    ];
+    let mut records = Vec::new();
+    let mut total_samples = 0usize;
+    for (name, ds, classes) in &datasets {
+        let (secs_per_sample, n) = epoch_rate(ds, *classes);
+        total_samples += n;
+        println!(
+            "{name}: {n} samples, {:.1} samples/s ({:.3} ms/sample)",
+            1.0 / secs_per_sample,
+            secs_per_sample * 1e3
+        );
+        records.push(BenchRecord::new(&format!("epoch_sample_{name}"), secs_per_sample, 1));
+    }
+    let (fhe_hop, clear_hop) = parity_hops();
+    assert_eq!(fhe_hop, clear_hop, "backends must count HOPs identically");
+    println!("parity: fhe HOP {fhe_hop} == clear HOP {clear_hop}");
+    report_json_with_counters(
+        "clear_train",
+        &records,
+        &[
+            ("epoch_samples_total", total_samples as u64),
+            ("parity_hop_fhe", fhe_hop),
+            ("parity_hop_clear", clear_hop),
+        ],
+    );
+}

@@ -14,8 +14,8 @@
 //! `GLYPH_BENCH_FULL=1` runs the production-shaped profile.
 
 use glyph::bench_util::{full_profile, report_json_with_counters, time_op, BenchRecord};
-use glyph::bgv::BgvCiphertext;
 use glyph::coordinator::max_threads;
+use glyph::nn::backend::{Bit, Ct};
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
 use glyph::switch::VALUE_POS;
 use glyph::tfhe::LweCiphertext;
@@ -30,13 +30,13 @@ fn main() {
     );
     let (mut engine, mut client) = GlyphEngine::setup(profile, lanes, 20260728);
 
-    let cts: Vec<BgvCiphertext> = (0..n_cts)
+    let cts: Vec<Ct> = (0..n_cts)
         .map(|c| {
             let vals: Vec<i64> = (0..lanes).map(|b| ((c * 37 + b * 11) % 200) as i64 - 100).collect();
             client.encrypt_batch(&vals, 0)
         })
         .collect();
-    let ct_refs: Vec<&BgvCiphertext> = cts.iter().collect();
+    let ct_refs: Vec<&Ct> = cts.iter().collect();
     let positions: Vec<usize> = (0..lanes).collect();
     let total_lanes = (n_cts * lanes) as f64;
     let pre = engine.frac_bits();
@@ -45,40 +45,40 @@ fn main() {
     engine.serial_switch = true;
     let t_down_serial = time_op(iters, || {
         let bits = engine.switch_down_many(&ct_refs, &positions, pre);
-        std::hint::black_box(bits[0][0][0].b);
+        std::hint::black_box(bits[0][0][0].fhe().b);
     });
     engine.serial_switch = false;
     // warm the worker scratches before timing
     let _ = engine.switch_down_many(&ct_refs, &positions, pre);
     let t_down_pooled = time_op(iters, || {
         let bits = engine.switch_down_many(&ct_refs, &positions, pre);
-        std::hint::black_box(bits[0][0][0].b);
+        std::hint::black_box(bits[0][0][0].fhe().b);
     });
 
     // ---- up-switch: serial reference vs pooled engine ----------------------
     let gate_dim = engine.gate_ext_dim();
-    let groups_owned: Vec<Vec<LweCiphertext>> = (0..n_cts)
+    let groups_owned: Vec<Vec<Bit>> = (0..n_cts)
         .map(|c| {
             (0..lanes)
                 .map(|b| {
                     let v = ((c * 13 + b * 7) % 200) as i64 - 100;
-                    LweCiphertext::trivial((v << VALUE_POS) as u32, gate_dim)
+                    Bit::Fhe(LweCiphertext::trivial((v << VALUE_POS) as u32, gate_dim))
                 })
                 .collect()
         })
         .collect();
-    let groups: Vec<(&[LweCiphertext], &[usize])> =
+    let groups: Vec<(&[Bit], &[usize])> =
         groups_owned.iter().map(|g| (g.as_slice(), positions.as_slice())).collect();
     engine.serial_switch = true;
     let t_up_serial = time_op(iters, || {
         let out = engine.switch_up_many(&groups);
-        std::hint::black_box(out[0].level);
+        std::hint::black_box(out[0].fhe().level);
     });
     engine.serial_switch = false;
     let _ = engine.switch_up_many(&groups);
     let t_up_pooled = time_op(iters, || {
         let out = engine.switch_up_many(&groups);
-        std::hint::black_box(out[0].level);
+        std::hint::black_box(out[0].fhe().level);
     });
 
     let down_speedup = t_down_serial / t_down_pooled;

@@ -9,7 +9,44 @@
 use super::keys::BgvContext;
 use super::params::BgvParams;
 use crate::math::poly::{RnsContext, RnsPoly};
+use std::fmt;
 use std::sync::Arc;
+
+/// Plaintext-encoding validation failure: every encode/decode entry point
+/// checks its inputs against the ring geometry up front and reports *what*
+/// overflowed instead of tripping a bare assert deep inside the packing
+/// loop (the `SwitchError` convention).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EncodingError {
+    /// More batch values than the ring has coefficient slots.
+    BatchTooLarge { len: usize, capacity: usize },
+    /// A value outside the centered plaintext range `[−t/2, t/2]`.
+    ValueOutOfRange { index: usize, value: i64, half: i64 },
+    /// A decode asked for more lanes than the polynomial holds.
+    DecodeTooWide { count: usize, capacity: usize },
+}
+
+impl fmt::Display for EncodingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EncodingError::BatchTooLarge { len, capacity } => write!(
+                f,
+                "batch of {len} values exceeds the ring capacity of {capacity} coefficient slots"
+            ),
+            EncodingError::ValueOutOfRange { index, value, half } => write!(
+                f,
+                "value {value} at batch index {index} outside the plaintext range ±{half} \
+                 (t/2 itself is the inclusive boundary)"
+            ),
+            EncodingError::DecodeTooWide { count, capacity } => write!(
+                f,
+                "decode of {count} lanes exceeds the {capacity} coefficients the plaintext holds"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EncodingError {}
 
 /// A plaintext polynomial over `Z_t`, kept as centered signed values.
 #[derive(Clone, Debug)]
@@ -20,17 +57,27 @@ pub struct Plaintext {
 }
 
 impl Plaintext {
-    /// Pack a batch of signed values (coefficient `b` = sample `b`).
-    /// Values must fit in `(−t/2, t/2]`.
-    pub fn encode_batch(values: &[i64], params: &BgvParams) -> Self {
-        assert!(values.len() <= params.n, "batch exceeds ring capacity");
+    /// Pack a batch of signed values (coefficient `b` = sample `b`),
+    /// validating capacity and range. Values must fit in `[−t/2, t/2]`.
+    pub fn try_encode_batch(values: &[i64], params: &BgvParams) -> Result<Self, EncodingError> {
+        if values.len() > params.n {
+            return Err(EncodingError::BatchTooLarge { len: values.len(), capacity: params.n });
+        }
         let half = (params.t / 2) as i64;
         let mut coeffs = vec![0i64; params.n];
         for (i, &v) in values.iter().enumerate() {
-            assert!(v >= -half && v <= half, "value {v} out of plaintext range ±{half}");
+            if v < -half || v > half {
+                return Err(EncodingError::ValueOutOfRange { index: i, value: v, half });
+            }
             coeffs[i] = v;
         }
-        Plaintext { coeffs, t: params.t }
+        Ok(Plaintext { coeffs, t: params.t })
+    }
+
+    /// [`Self::try_encode_batch`], panicking with the descriptive error
+    /// (the infallible-by-construction call sites' convenience form).
+    pub fn encode_batch(values: &[i64], params: &BgvParams) -> Self {
+        Self::try_encode_batch(values, params).unwrap_or_else(|e| panic!("encode_batch: {e}"))
     }
 
     /// The constant polynomial `w` (a weight scalar).
@@ -38,9 +85,18 @@ impl Plaintext {
         Self::encode_batch(&[w], params)
     }
 
-    /// Read back the first `count` batch lanes.
+    /// Read back the first `count` batch lanes, validating against the
+    /// polynomial's coefficient count.
+    pub fn try_decode_batch(&self, count: usize) -> Result<Vec<i64>, EncodingError> {
+        if count > self.coeffs.len() {
+            return Err(EncodingError::DecodeTooWide { count, capacity: self.coeffs.len() });
+        }
+        Ok(self.coeffs[..count].to_vec())
+    }
+
+    /// [`Self::try_decode_batch`], panicking with the descriptive error.
     pub fn decode_batch(&self, count: usize) -> Vec<i64> {
-        self.coeffs[..count].to_vec()
+        self.try_decode_batch(count).unwrap_or_else(|e| panic!("decode_batch: {e}"))
     }
 
     /// Centered reduction of an arbitrary integer into the plaintext ring.
@@ -118,10 +174,43 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "out of plaintext range")]
-    fn overflow_is_rejected() {
+    fn overflow_is_a_descriptive_error() {
         let p = BgvParams::test_params();
-        let _ = Plaintext::encode_batch(&[(p.t / 2) as i64 + 1], &p);
+        let half = (p.t / 2) as i64;
+        let err = Plaintext::try_encode_batch(&[0, half + 1], &p).err().expect("must reject");
+        assert_eq!(err, EncodingError::ValueOutOfRange { index: 1, value: half + 1, half });
+        let msg = err.to_string();
+        assert!(msg.contains(&(half + 1).to_string()) && msg.contains("index 1"), "{msg}");
+    }
+
+    #[test]
+    fn over_capacity_batch_is_a_descriptive_error() {
+        let p = BgvParams::test_params();
+        let too_many = vec![1i64; p.n + 3];
+        let err = Plaintext::try_encode_batch(&too_many, &p).err().expect("must reject");
+        assert_eq!(err, EncodingError::BatchTooLarge { len: p.n + 3, capacity: p.n });
+        let msg = err.to_string();
+        assert!(msg.contains(&p.n.to_string()) && msg.contains(&(p.n + 3).to_string()), "{msg}");
+    }
+
+    #[test]
+    fn half_t_boundary_values_encode_and_roundtrip() {
+        // ±t/2 are the inclusive range edges; both are accepted and decode
+        // back unchanged (they are congruent mod t — the clear backend
+        // canonicalizes, decryption centers to +t/2).
+        let p = BgvParams::test_params();
+        let half = (p.t / 2) as i64;
+        let pt = Plaintext::try_encode_batch(&[half, -half], &p).expect("boundary is in range");
+        assert_eq!(pt.try_decode_batch(2).unwrap(), vec![half, -half]);
+    }
+
+    #[test]
+    fn decode_past_capacity_is_a_descriptive_error() {
+        let p = BgvParams::test_params();
+        let pt = Plaintext::encode_batch(&[1, 2], &p);
+        let err = pt.try_decode_batch(p.n + 1).err().expect("must reject");
+        assert_eq!(err, EncodingError::DecodeTooWide { count: p.n + 1, capacity: p.n });
+        assert!(err.to_string().contains(&(p.n + 1).to_string()));
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod params;
 pub mod refresh;
 
 pub use ciphertext::{mac_row, BgvCiphertext, BgvScratch, MacTerm};
-pub use encoding::{CachedPlaintext, Plaintext};
+pub use encoding::{CachedPlaintext, EncodingError, Plaintext};
 pub use keys::{BgvContext, BgvSecretKey, RelinKey};
 pub use params::BgvParams;
 pub use refresh::{KeyAuthority, NoiseRefresher};

@@ -73,28 +73,29 @@ impl OpLatencies {
         // MultCC / MultCP / AddCC on realistic operands. MultCP is timed on
         // the cached evaluation-form path — the one the layers actually run
         // since the weight-cache redesign (pointwise only, no per-call NTT).
+        let fhe = engine.fhe();
         let w = client.encrypt_scalar(9);
         let x = client.encrypt_batch(&vec![17; batch], 0);
-        let wp = crate::bgv::CachedPlaintext::scalar(9, &engine.ctx);
+        let wp = crate::bgv::CachedPlaintext::scalar(9, &fhe.ctx);
         let iters = if test_scale { 20 } else { 50 };
         let t0 = Instant::now();
         for _ in 0..iters {
-            let mut t = w.clone();
-            t.mul_assign(&x, &engine.rlk, &engine.ctx);
+            let mut t = w.fhe().clone();
+            t.mul_assign(x.fhe(), &fhe.rlk, &fhe.ctx);
         }
         let mult_cc = t0.elapsed().as_secs_f64() / iters as f64;
 
         let t0 = Instant::now();
         for _ in 0..iters {
-            let mut t = x.clone();
+            let mut t = x.fhe().clone();
             t.mul_plain_cached_assign(&wp);
         }
         let mult_cp = t0.elapsed().as_secs_f64() / iters as f64;
 
         let t0 = Instant::now();
         for _ in 0..(iters * 10) {
-            let mut t = x.clone();
-            t.add_assign(&w);
+            let mut t = x.fhe().clone();
+            t.add_assign(w.fhe());
         }
         let add_cc = t0.elapsed().as_secs_f64() / (iters * 10) as f64;
 
@@ -108,13 +109,13 @@ impl OpLatencies {
         // Switch costs per value: extraction only (Δ + extract + ksk).
         let positions: Vec<usize> = (0..batch).collect();
         let t0 = Instant::now();
-        let _l = engine.fwd_switch.to_torus_lanes(&u.cts[0], batch).expect("lanes fit the ring");
+        let _l = fhe.fwd_switch.to_torus_lanes(u.cts[0].fhe(), batch).expect("lanes fit the ring");
         let switch_b2t_value = t0.elapsed().as_secs_f64() / batch as f64;
         let lwes: Vec<crate::tfhe::LweCiphertext> = (0..batch)
             .map(|i| crate::tfhe::LweCiphertext::trivial((i as u32) << 24, engine.gate_ext_dim()))
             .collect();
         let t0 = Instant::now();
-        let _p = engine.bwd_switch.pack_at_and_raise(&lwes, &positions, &engine.auth);
+        let _p = fhe.bwd_switch.pack_at_and_raise(&lwes, &positions, &fhe.auth);
         let switch_t2b_value = t0.elapsed().as_secs_f64() / batch as f64;
 
         // Softmax per value (Figure-4 MUX tree at the configured width; use
@@ -129,12 +130,12 @@ impl OpLatencies {
         // Gate bootstrap: one AND on the gate cloud key.
         let tt = crate::tfhe::LweCiphertext::trivial(
             crate::tfhe::encode_bit(true),
-            engine.gate_ck.params.n,
+            fhe.gate_ck.params.n,
         );
         let gate_iters = if test_scale { 4 } else { 10 };
         let t0 = Instant::now();
         for _ in 0..gate_iters {
-            let _ = engine.gate_ck.and(&tt, &tt);
+            let _ = fhe.gate_ck.and(&tt, &tt);
         }
         let gate_bootstrap = t0.elapsed().as_secs_f64() / gate_iters as f64;
 
@@ -499,15 +500,13 @@ pub fn overall_latency(minibatch_s: f64, batches_per_epoch: u64, epochs: u64, sp
 /// (Table 5's parallel SGD argument) — through the scratch-backed MAC
 /// engine, i.e. the path SGD actually runs since the lazy-relin redesign.
 pub fn measure_scaling(threads: usize, work_items: usize) -> f64 {
-    use crate::bgv::MacTerm;
     use crate::coordinator::executor::GlyphPool;
+    use crate::nn::backend::{Ct, Term};
     let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 4, 777);
-    let ws: Vec<crate::bgv::BgvCiphertext> =
-        (0..work_items).map(|i| client.encrypt_scalar(i as i64 % 100)).collect();
-    let xs: Vec<crate::bgv::BgvCiphertext> =
-        (0..work_items).map(|_| client.encrypt_batch(&[1, 2, 3, 4], 0)).collect();
-    let rows: Vec<Vec<MacTerm>> =
-        (0..work_items).map(|i| vec![MacTerm::Cc(&ws[i], &xs[i])]).collect();
+    let ws: Vec<Ct> = (0..work_items).map(|i| client.encrypt_scalar(i as i64 % 100)).collect();
+    let xs: Vec<Ct> = (0..work_items).map(|_| client.encrypt_batch(&[1, 2, 3, 4], 0)).collect();
+    let rows: Vec<Vec<Term>> =
+        (0..work_items).map(|i| vec![Term::Cc(&ws[i], &xs[i])]).collect();
     let t0 = Instant::now();
     let _r = engine.mac_rows_limit(&rows, 1);
     let t1 = t0.elapsed().as_secs_f64();

@@ -8,8 +8,41 @@
 //! target pairs so that transfer learning has real signal to reuse.
 
 use crate::math::rng::GlyphRng;
+use std::fmt;
 use std::io::Read;
 use std::path::Path;
+
+/// Dataset access failure: descriptive instead of an index panic deep in
+/// the loader (the `SwitchError`/`EncodingError` convention).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DataError {
+    /// A sample index past the dataset's length.
+    SampleOutOfRange { index: usize, len: usize },
+    /// An operation that needs at least one sample ran on an empty dataset.
+    EmptyDataset { name: String },
+    /// A requested minibatch runs past the end of the dataset.
+    BatchOutOfRange { start: usize, batch: usize, len: usize },
+}
+
+impl fmt::Display for DataError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataError::SampleOutOfRange { index, len } => {
+                write!(f, "sample index {index} out of range for a dataset of {len} images")
+            }
+            DataError::EmptyDataset { name } => {
+                write!(f, "dataset {name:?} is empty — nothing to sample")
+            }
+            DataError::BatchOutOfRange { start, batch, len } => write!(
+                f,
+                "minibatch [{start}, {}) runs past the dataset's {len} images",
+                start + batch
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DataError {}
 
 /// A dataset of images (f32 in [0,1]) with labels.
 pub struct Dataset {
@@ -30,9 +63,57 @@ impl Dataset {
         self.images.is_empty()
     }
 
-    /// Quantize image `i` to signed 8-bit (pixel·127).
+    /// Quantize image `i` to signed 8-bit (pixel·127), validating the index
+    /// (and distinguishing the empty-dataset case) instead of panicking.
+    pub fn try_image_i8(&self, i: usize) -> Result<Vec<i64>, DataError> {
+        if self.images.is_empty() {
+            return Err(DataError::EmptyDataset { name: self.name.clone() });
+        }
+        let img = self
+            .images
+            .get(i)
+            .ok_or(DataError::SampleOutOfRange { index: i, len: self.images.len() })?;
+        Ok(img.iter().map(|&p| (p * 127.0).round() as i64).collect())
+    }
+
+    /// [`Self::try_image_i8`], panicking with the descriptive error.
     pub fn image_i8(&self, i: usize) -> Vec<i64> {
-        self.images[i].iter().map(|&p| (p * 127.0).round() as i64).collect()
+        self.try_image_i8(i).unwrap_or_else(|e| panic!("image_i8: {e}"))
+    }
+
+    /// The pixel count of one image (C·H·W).
+    pub fn pixels(&self) -> usize {
+        let (c, h, w) = self.shape;
+        c * h * w
+    }
+
+    /// Quantized feature columns of one minibatch: `cols[f][b]` = feature
+    /// `f` of sample `start+b`, with `features` pixels sampled evenly
+    /// across the image when narrower than the full image (the CLI's
+    /// subsampling convention). Also returns the batch's labels.
+    pub fn minibatch(
+        &self,
+        start: usize,
+        batch: usize,
+        features: usize,
+    ) -> Result<(Vec<Vec<i64>>, Vec<usize>), DataError> {
+        if self.images.is_empty() {
+            return Err(DataError::EmptyDataset { name: self.name.clone() });
+        }
+        if start + batch > self.len() {
+            return Err(DataError::BatchOutOfRange { start, batch, len: self.len() });
+        }
+        let px = self.pixels();
+        let imgs: Vec<Vec<i64>> =
+            (0..batch).map(|b| self.try_image_i8(start + b)).collect::<Result<_, _>>()?;
+        let cols = (0..features)
+            .map(|f| {
+                let p = if features > 1 { f * (px - 1) / (features - 1) } else { 0 };
+                (0..batch).map(|b| imgs[b][p]).collect()
+            })
+            .collect();
+        let labels = self.labels[start..start + batch].to_vec();
+        Ok((cols, labels))
     }
 }
 
@@ -212,5 +293,43 @@ mod tests {
         let ds = synthetic_digits(2, 3, "t");
         let q = ds.image_i8(0);
         assert!(q.iter().all(|&v| (0..=127).contains(&v)));
+    }
+
+    #[test]
+    fn out_of_range_sample_is_a_descriptive_error() {
+        let ds = synthetic_digits(2, 3, "t");
+        let err = ds.try_image_i8(7).err().expect("must reject");
+        assert_eq!(err, DataError::SampleOutOfRange { index: 7, len: 2 });
+        let msg = err.to_string();
+        assert!(msg.contains('7') && msg.contains('2'), "{msg}");
+    }
+
+    #[test]
+    fn empty_dataset_is_its_own_error() {
+        let ds = Dataset {
+            shape: (1, 28, 28),
+            images: vec![],
+            labels: vec![],
+            classes: 10,
+            name: "empty".into(),
+        };
+        assert_eq!(ds.try_image_i8(0), Err(DataError::EmptyDataset { name: "empty".into() }));
+        let err = ds.minibatch(0, 1, 4).err().expect("must reject");
+        assert!(matches!(err, DataError::EmptyDataset { .. }), "{err}");
+        assert!(err.to_string().contains("empty"));
+    }
+
+    #[test]
+    fn minibatch_columns_and_bounds() {
+        let ds = synthetic_digits(6, 3, "t");
+        let (cols, labels) = ds.minibatch(2, 2, 4).unwrap();
+        assert_eq!(cols.len(), 4);
+        assert_eq!(cols[0].len(), 2);
+        assert_eq!(labels, vec![2, 3]);
+        // the even pixel sampling hits the first and last pixel
+        assert_eq!(cols[0][0], ds.image_i8(2)[0]);
+        assert_eq!(cols[3][0], ds.image_i8(2)[783]);
+        let err = ds.minibatch(5, 2, 4).err().expect("must reject");
+        assert_eq!(err, DataError::BatchOutOfRange { start: 5, batch: 2, len: 6 });
     }
 }

@@ -11,17 +11,23 @@
 //!                           no keys or weights are generated).
 //! * `microbench [--full]` — per-op latencies (Table 1, ours vs paper)
 //! * `tables [--measured]` — regenerate Tables 2/3/4 (paper-calibrated by default)
-//! * `train-mlp [--steps N] [--batch B] [--dims a,b,c]`
-//!                         — reduced-scale encrypted MLP training through
-//!                           the `NetworkBuilder` (default dims 16,8,4)
+//! * `train-mlp [--backend clear|fhe] [--steps N] [--epochs E] [--batch B]
+//!              [--dims a,b,c] [--samples M] [--dataset digits|mnist|cancer|svhn|cifar]`
+//!                         — MLP training through the `NetworkBuilder` on the
+//!                           selected execution backend. `--backend fhe`
+//!                           (default) runs reduced-scale *encrypted* steps;
+//!                           `--backend clear` runs the bit-exact plaintext
+//!                           mirror, fast enough for full epochs + a test-
+//!                           accuracy report (EXPERIMENTS.md §Backends).
 //!
 //! The `examples/` binaries are the full experiment drivers.
 
 use glyph::coordinator::cost;
 use glyph::coordinator::scheduler::Plan;
+use glyph::data::Dataset;
+use glyph::nn::backend::Codec;
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
-use glyph::nn::tensor::{EncTensor, PackOrder};
-use glyph::train::{CnnConfig, GlyphMlp, MlpConfig};
+use glyph::train::{CnnConfig, GlyphMlp, MlpConfig, Trainer};
 
 fn parse_dims(spec: &str) -> anyhow::Result<Vec<usize>> {
     let dims: Vec<usize> = spec
@@ -171,52 +177,81 @@ fn main() -> anyhow::Result<()> {
             println!("{}", cost::to_markdown("Table 4: Glyph CNN + TL (MNIST)", &cost::cnn_table(&cost::CnnShape::paper_mnist(), &lat)));
         }
         "train-mlp" => {
-            let steps = opt("--steps", 2);
+            let backend = opt_str("--backend").unwrap_or_else(|| "fhe".into());
             let batch = opt("--batch", 4);
             let dims = match opt_str("--dims") {
                 Some(spec) => parse_dims(&spec)?,
                 None => vec![16, 8, 4],
             };
-            let (in_dim, classes) = (dims[0], *dims.last().unwrap());
+            let classes = *dims.last().unwrap();
+            // fhe defaults stay reduced-scale; clear is fast enough for epochs
+            let clear = match backend.as_str() {
+                "clear" => true,
+                "fhe" => false,
+                other => anyhow::bail!("--backend must be `clear` or `fhe`, got {other:?}"),
+            };
+            let steps = opt("--steps", if clear { usize::MAX } else { 2 });
+            let epochs = opt("--epochs", 1);
+            let samples = opt("--samples", if clear { 512 } else { batch * 2 });
+            let dataset = opt_str("--dataset").unwrap_or_else(|| "digits".into());
+            let load = |train_split: bool, count: usize, seed: u64| -> anyhow::Result<Dataset> {
+                Ok(match dataset.as_str() {
+                    "digits" => glyph::data::synthetic_digits(count, seed, "cli"),
+                    // the held-out split: real IDX files ignore the seed, so
+                    // evaluation must read t10k, not a train-set prefix
+                    "mnist" => glyph::data::mnist(train_split, count, seed),
+                    "cancer" => glyph::data::synthetic_cancer(count, seed),
+                    "svhn" => glyph::data::synthetic_svhn(count, seed),
+                    "cifar" => glyph::data::synthetic_cifar(count, seed),
+                    other => anyhow::bail!(
+                        "--dataset must be digits|mnist|cancer|svhn|cifar, got {other:?}"
+                    ),
+                })
+            };
+            let train = load(true, samples, 5)?;
+            let test = load(false, (samples / 4).max(batch), 99)?;
             eprintln!(
-                "encrypted MLP training, test profile, dims={dims:?}, batch={batch}, steps={steps}"
+                "MLP training on the {backend} backend ({} profile), dims={dims:?}, \
+                 batch={batch}, dataset={}",
+                if clear { "default-shaped, keyless" } else { "test" },
+                train.name
             );
-            let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260710);
+            // the clear mirror needs no keys, so it runs the production-
+            // shaped ring (t = 2^26) — full paper headroom for wide MACs;
+            // the fhe path stays on the fast test profile
+            let (engine, mut codec): (GlyphEngine, Box<dyn Codec>) = if clear {
+                let (e, c) = GlyphEngine::setup_clear(EngineProfile::Default, batch);
+                (e, Box::new(c))
+            } else {
+                let (e, c) = GlyphEngine::setup(EngineProfile::Test, batch, 20260710);
+                (e, Box::new(c))
+            };
             let mut rng = glyph::math::GlyphRng::new(1);
             let config = mlp_config_for(dims, engine.frac_bits(), 3);
-            let mut mlp = GlyphMlp::new_random(config, &mut client, &mut rng, &engine)
+            let mlp = GlyphMlp::new_random(config, codec.as_mut(), &mut rng, &engine)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
-            let ds = glyph::data::synthetic_digits(batch * steps, 5, "cli");
-            for step in 0..steps {
-                // sample in_dim pixels evenly across the 28×28 image
-                let xs: Vec<Vec<i64>> = (0..in_dim)
-                    .map(|f| {
-                        let px = if in_dim > 1 { f * 783 / (in_dim - 1) } else { 0 };
-                        (0..batch)
-                            .map(|b| ds.image_i8(step * batch + b)[px])
-                            .collect()
-                    })
-                    .collect();
-                let x_cts = xs.iter().map(|v| client.encrypt_batch(v, 0)).collect();
-                let x = EncTensor::new(x_cts, vec![in_dim], PackOrder::Forward, 0);
-                let labels: Vec<Vec<i64>> = (0..classes)
-                    .map(|k| {
-                        let mut v: Vec<i64> = (0..batch)
-                            .map(|b| if ds.labels[step * batch + b] % classes == k { 127 } else { 0 })
-                            .collect();
-                        v.reverse();
-                        v
-                    })
-                    .collect();
-                let lab_cts = labels.iter().map(|v| client.encrypt_batch(v, 0)).collect();
-                let lab = EncTensor::new(lab_cts, vec![classes], PackOrder::Reversed, 0);
-                let t0 = std::time::Instant::now();
-                mlp.train_step(&x, &lab, &engine);
-                println!("step {step}: {:.2}s  {}", t0.elapsed().as_secs_f64(), engine.counter.snapshot());
+            let mut trainer = Trainer::new(mlp.net, classes);
+            for epoch in 0..epochs {
+                let stats = trainer
+                    .train_steps(&train, steps, &engine, codec.as_mut())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let acc = trainer
+                    .evaluate(&test, test.len(), &engine, codec.as_mut())
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                println!(
+                    "epoch {epoch}: {} samples in {:.2}s ({:.0} samples/s), test acc {:.3}",
+                    stats.samples,
+                    stats.seconds,
+                    stats.samples_per_sec(),
+                    acc
+                );
             }
+            println!("ops: {}", engine.counter.snapshot());
         }
         other => {
-            eprintln!("unknown command {other}; see src/main.rs docs");
+            eprintln!("unknown command {other}; commands: info, plan, microbench, tables, train-mlp");
+            eprintln!("train-mlp flags: --backend clear|fhe (default fhe), --steps N, --epochs E,");
+            eprintln!("  --batch B, --dims a,b,c, --samples M, --dataset digits|mnist|cancer|svhn|cifar");
             std::process::exit(2);
         }
     }

@@ -2,12 +2,16 @@
 //! (Algorithm 2) and the Figure-4 softmax lookup unit, plus the
 //! FHESGD-baseline sigmoid TLU hookup.
 //!
-//! Inputs arrive as the 8 two's-complement bit ciphertexts (MSB/sign first)
-//! the BGV→TFHE switch delivers; outputs are recomposed LWEs with every bit
+//! Inputs arrive as the 8 two's-complement bit values (MSB/sign first) the
+//! BGV→TFHE switch delivers; outputs are recomposed values with every bit
 //! emitted directly at its weighted torus position (`2^(24+i)`) by the
 //! parameterized gate bootstraps, ready for the packing key switch back to
-//! BGV.
+//! BGV. Everything here is backend-polymorphic over [`Bit`]: on the FHE
+//! backend the gates are real bootstraps, on the clear backend they are the
+//! exact noiseless phase mirrors, so the recomposed values agree bit for
+//! bit.
 
+use super::backend::Bit;
 use super::engine::GlyphEngine;
 use super::layer::{
     relu_error_ops, relu_forward_ops, softmax_error_ops, softmax_forward_ops, Layer,
@@ -19,21 +23,21 @@ use crate::coordinator::executor::GlyphPool;
 use crate::coordinator::scheduler::LayerKind;
 use crate::switch::extract::bit_position;
 use crate::switch::SWITCH_BITS;
-use crate::tfhe::{LweCiphertext, TestPoly};
+use crate::tfhe::TestPoly;
 
 /// Sign bits retained by the forward pass for iReLU.
 pub struct ReluState {
     /// sign bit (u[n−1]) per ciphertext per lane, gate encoding.
-    pub signs: Vec<Vec<LweCiphertext>>,
+    pub signs: Vec<Vec<Bit>>,
 }
 
 /// Forward ReLU on one value's bits (Algorithm 1): output bit i =
 /// `AND(u[i], NOT u[n−1])`, MSB forced to 0; bits are emitted at their
-/// weighted positions and summed into one recomposed LWE.
-pub fn relu_bits(engine: &GlyphEngine, bits: &[LweCiphertext]) -> (LweCiphertext, LweCiphertext) {
+/// weighted positions and summed into one recomposed value.
+pub fn relu_bits(engine: &GlyphEngine, bits: &[Bit]) -> (Bit, Bit) {
     let sign = bits[0].clone();
     let not_sign = engine.gate_not(&sign);
-    let mut acc: Option<LweCiphertext> = None;
+    let mut acc: Option<Bit> = None;
     for i in 1..SWITCH_BITS as usize {
         let w = engine.gate_and_weighted(&bits[i], &not_sign, bit_position(i));
         match &mut acc {
@@ -46,9 +50,9 @@ pub fn relu_bits(engine: &GlyphEngine, bits: &[LweCiphertext]) -> (LweCiphertext
 
 /// Backward iReLU on one error value's bits (Algorithm 2):
 /// `δ_{l−1}[i] = AND(δ_l[i], NOT u[n−1])` for every bit including the sign.
-pub fn irelu_bits(engine: &GlyphEngine, delta_bits: &[LweCiphertext], u_sign: &LweCiphertext) -> LweCiphertext {
+pub fn irelu_bits(engine: &GlyphEngine, delta_bits: &[Bit], u_sign: &Bit) -> Bit {
     let not_sign = engine.gate_not(u_sign);
-    let mut acc: Option<LweCiphertext> = None;
+    let mut acc: Option<Bit> = None;
     for i in 0..SWITCH_BITS as usize {
         let w = engine.gate_and_weighted(&delta_bits[i], &not_sign, bit_position(i));
         match &mut acc {
@@ -62,14 +66,14 @@ pub fn irelu_bits(engine: &GlyphEngine, delta_bits: &[LweCiphertext], u_sign: &L
 /// Shared recomposition core of the batched ReLU/iReLU layers: for every
 /// lane, AND bits `start_bit..8` against the lane's NOT(sign) at their
 /// weighted positions — all lanes in one `gate_and_weighted_many` fan-out —
-/// then sum each lane's weighted bits back into one LWE (same gates and
+/// then sum each lane's weighted bits back into one value (same gates and
 /// same per-lane sum order as the sequential [`relu_bits`]/[`irelu_bits`]).
 fn weighted_and_lanes(
     engine: &GlyphEngine,
-    lanes_bits: &[Vec<LweCiphertext>],
-    not_signs: &[LweCiphertext],
+    lanes_bits: &[Vec<Bit>],
+    not_signs: &[Bit],
     start_bit: usize,
-) -> Vec<LweCiphertext> {
+) -> Vec<Bit> {
     let per_lane = SWITCH_BITS as usize - start_bit;
     let mut jobs = Vec::with_capacity(lanes_bits.len() * per_lane);
     for (lane, bits) in lanes_bits.iter().enumerate() {
@@ -92,12 +96,9 @@ fn weighted_and_lanes(
 
 /// Batched Algorithm 1 over every lane of a ciphertext (lanes × 7 weighted
 /// ANDs in one fan-out; bit 0 is the sign, forced out of the output).
-fn relu_lanes(
-    engine: &GlyphEngine,
-    lanes_bits: &[Vec<LweCiphertext>],
-) -> (Vec<LweCiphertext>, Vec<LweCiphertext>) {
-    let signs: Vec<LweCiphertext> = lanes_bits.iter().map(|bits| bits[0].clone()).collect();
-    let not_signs: Vec<LweCiphertext> = signs.iter().map(|s| engine.gate_not(s)).collect();
+fn relu_lanes(engine: &GlyphEngine, lanes_bits: &[Vec<Bit>]) -> (Vec<Bit>, Vec<Bit>) {
+    let signs: Vec<Bit> = lanes_bits.iter().map(|bits| bits[0].clone()).collect();
+    let not_signs: Vec<Bit> = signs.iter().map(|s| engine.gate_not(s)).collect();
     let recomposed = weighted_and_lanes(engine, lanes_bits, &not_signs, 1);
     (recomposed, signs)
 }
@@ -105,13 +106,9 @@ fn relu_lanes(
 /// Batched Algorithm 2 over every lane (lanes × 8 weighted ANDs, the sign
 /// bit included); bit-exact against a per-lane [`irelu_bits`] loop. Takes
 /// sign *references* so the caller can flatten its per-ciphertext state
-/// without cloning the LWEs.
-fn irelu_lanes(
-    engine: &GlyphEngine,
-    lanes_bits: &[Vec<LweCiphertext>],
-    lane_signs: &[&LweCiphertext],
-) -> Vec<LweCiphertext> {
-    let not_signs: Vec<LweCiphertext> = lane_signs.iter().map(|s| engine.gate_not(s)).collect();
+/// without cloning.
+fn irelu_lanes(engine: &GlyphEngine, lanes_bits: &[Vec<Bit>], lane_signs: &[&Bit]) -> Vec<Bit> {
+    let not_signs: Vec<Bit> = lane_signs.iter().map(|s| engine.gate_not(s)).collect();
     weighted_and_lanes(engine, lanes_bits, &not_signs, 0)
 }
 
@@ -119,25 +116,25 @@ fn irelu_lanes(
 /// all ciphertexts × lanes, the unit's gate stage over the flattened
 /// lane-bit matrix, ONE batched up-switch packing each ciphertext's lanes
 /// back at `out_positions`. The gate stage receives `[ct-major lane][bit]`
-/// and must return one recomposed LWE per lane in the same order.
+/// and must return one recomposed value per lane in the same order.
 fn cross_boundary<F>(
     engine: &GlyphEngine,
-    cts: &[crate::bgv::BgvCiphertext],
+    cts: &[super::backend::Ct],
     in_positions: &[usize],
     out_positions: &[usize],
     pre_shift: u32,
     gates: F,
-) -> Vec<crate::bgv::BgvCiphertext>
+) -> Vec<super::backend::Ct>
 where
-    F: FnOnce(Vec<Vec<LweCiphertext>>) -> Vec<LweCiphertext>,
+    F: FnOnce(Vec<Vec<Bit>>) -> Vec<Bit>,
 {
-    let ct_refs: Vec<&crate::bgv::BgvCiphertext> = cts.iter().collect();
+    let ct_refs: Vec<&super::backend::Ct> = cts.iter().collect();
     let all_bits = engine.switch_down_many(&ct_refs, in_positions, pre_shift);
-    let flat_bits: Vec<Vec<LweCiphertext>> = all_bits.into_iter().flatten().collect();
+    let flat_bits: Vec<Vec<Bit>> = all_bits.into_iter().flatten().collect();
     let recomposed = gates(flat_bits);
     let lanes_per_ct = in_positions.len();
     debug_assert_eq!(recomposed.len(), cts.len() * lanes_per_ct);
-    let groups: Vec<(&[LweCiphertext], &[usize])> =
+    let groups: Vec<(&[Bit], &[usize])> =
         recomposed.chunks(lanes_per_ct).map(|chunk| (chunk, out_positions)).collect();
     engine.switch_up_many(&groups)
 }
@@ -153,7 +150,8 @@ where
 /// forward exit — hundreds of CHW ciphertexts — fans out in a single call),
 /// one pooled gate fan-out runs Algorithm 1 over all lanes, and ONE
 /// `switch_up_many` packs every ciphertext back. Bit-identical to the
-/// per-ciphertext serial walk (`engine.serial_switch` replays it).
+/// per-ciphertext serial walk (`engine.serial_switch` replays it) and to
+/// the clear backend's integer mirror.
 pub fn relu_layer(
     engine: &GlyphEngine,
     u: &EncTensor,
@@ -168,7 +166,7 @@ pub fn relu_layer(
     // Algorithm 1 on every lane of the tensor in one pooled gate fan-out
     // (same per-lane jobs and sums as the per-ciphertext loop); the sign
     // bits ride out through the closure for the backward pass
-    let mut flat_signs: Vec<LweCiphertext> = Vec::new();
+    let mut flat_signs: Vec<Bit> = Vec::new();
     let outs = cross_boundary(engine, &u.cts, &in_positions, &out_positions, pre_shift, |flat| {
         let (recomposed, signs) = relu_lanes(engine, &flat);
         flat_signs = signs;
@@ -177,12 +175,9 @@ pub fn relu_layer(
     // regroup the flat signs per ciphertext by moving, not cloning
     let lanes_per_ct = in_positions.len();
     let mut it = flat_signs.into_iter();
-    let signs: Vec<Vec<LweCiphertext>> =
+    let signs: Vec<Vec<Bit>> =
         (0..u.cts.len()).map(|_| (&mut it).take(lanes_per_ct).collect()).collect();
-    (
-        EncTensor::new(outs, u.shape.clone(), out_order, 0),
-        ReluState { signs },
-    )
+    (EncTensor::new(outs, u.shape.clone(), out_order, 0), ReluState { signs })
 }
 
 /// Full iReLU layer: BGV errors → bits → Alg-2 gates → packed fresh BGV
@@ -199,7 +194,7 @@ pub fn irelu_layer(
     let pre_shift = frac - out_shift;
     let in_positions = delta.order.positions(engine.batch);
     let out_positions = PackOrder::Reversed.positions(engine.batch);
-    let flat_signs: Vec<&LweCiphertext> = state.signs.iter().flatten().collect();
+    let flat_signs: Vec<&Bit> = state.signs.iter().flatten().collect();
     let outs =
         cross_boundary(engine, &delta.cts, &in_positions, &out_positions, pre_shift, |flat| {
             irelu_lanes(engine, &flat, &flat_signs)
@@ -283,7 +278,7 @@ impl Layer for SoftmaxLayer {
         // class × lane MUX tree fans in one call, and one batched
         // up-switch packs all classes back
         let cts = cross_boundary(engine, &u.cts, &in_positions, &out_positions, pre_shift, |flat| {
-            let lane_slices: Vec<&[LweCiphertext]> =
+            let lane_slices: Vec<&[Bit]> =
                 flat.iter().map(|bits| &bits[..self.unit.in_bits]).collect();
             self.unit.evaluate_mux_many(engine, &lane_slices)
         });
@@ -342,12 +337,12 @@ impl SoftmaxUnit {
     /// Paper-mode evaluation: bit-sliced MUX trees (two bootstraps per MUX
     /// on the critical path, Figure 4). Leaf-level muxes over constants are
     /// folded away, so each output bit costs a depth-(b−1) tree.
-    /// Returns the recomposed LWE (output already at the 2^24 grid).
+    /// Returns the recomposed value (output already at the 2^24 grid).
     ///
-    /// The 8 output-bit trees are independent — they fan across the global
-    /// `GlyphPool`, and the surviving bits are weighted in one batched gate
-    /// fan-out. Same ciphertexts as the sequential loop.
-    pub fn evaluate_mux(&self, engine: &GlyphEngine, bits: &[LweCiphertext]) -> LweCiphertext {
+    /// The 8 output-bit trees are independent — on the FHE backend they fan
+    /// across the global `GlyphPool`, and the surviving bits are weighted in
+    /// one batched gate fan-out. Same values as the sequential loop.
+    pub fn evaluate_mux(&self, engine: &GlyphEngine, bits: &[Bit]) -> Bit {
         self.evaluate_mux_many(engine, &[bits]).pop().expect("one lane, one output")
     }
 
@@ -355,23 +350,28 @@ impl SoftmaxUnit {
     /// the pool in ONE call (lanes × 8 independent trees), then a single
     /// batched weighting pass recomposes each lane. Order-preserving and
     /// bit-exact against a per-lane [`Self::evaluate_mux`] loop.
-    pub fn evaluate_mux_many(
-        &self,
-        engine: &GlyphEngine,
-        lanes_bits: &[&[LweCiphertext]],
-    ) -> Vec<LweCiphertext> {
+    pub fn evaluate_mux_many(&self, engine: &GlyphEngine, lanes_bits: &[&[Bit]]) -> Vec<Bit> {
         let lanes = lanes_bits.len();
         let mut tree_jobs = Vec::with_capacity(lanes * 8);
-        for lane in 0..lanes {
-            assert_eq!(lanes_bits[lane].len(), self.in_bits);
+        for (lane, bits) in lanes_bits.iter().enumerate() {
+            assert_eq!(bits.len(), self.in_bits);
             for j in 0..8u32 {
                 tree_jobs.push((lane, j));
             }
         }
-        let nodes = GlyphPool::global()
-            .map(tree_jobs, |(lane, j)| self.mux_tree_bit(engine, lanes_bits[lane], j));
-        let truth = LweCiphertext::trivial(crate::tfhe::encode_bit(true), engine.gate_ck.params.n);
-        let mut weight_jobs: Vec<(&LweCiphertext, &LweCiphertext, u32)> = Vec::new();
+        // clear-mode trees are nanoseconds each — the pool fan-out would
+        // cost more than the work, so they evaluate inline
+        let nodes: Vec<Option<Bit>> = if engine.is_clear() {
+            tree_jobs
+                .into_iter()
+                .map(|(lane, j)| self.mux_tree_bit(engine, lanes_bits[lane], j))
+                .collect()
+        } else {
+            GlyphPool::global()
+                .map(tree_jobs, |(lane, j)| self.mux_tree_bit(engine, lanes_bits[lane], j))
+        };
+        let truth = engine.trivial_bit(true);
+        let mut weight_jobs: Vec<(&Bit, &Bit, u32)> = Vec::new();
         let mut lane_of: Vec<usize> = Vec::new();
         for (idx, node) in nodes.iter().enumerate() {
             if let Some(n) = node {
@@ -380,32 +380,27 @@ impl SoftmaxUnit {
             }
         }
         let weighted = engine.gate_and_weighted_many(&weight_jobs);
-        let mut accs: Vec<Option<LweCiphertext>> = vec![None; lanes];
+        let mut accs: Vec<Option<Bit>> = vec![None; lanes];
         for (w, &lane) in weighted.iter().zip(&lane_of) {
             match &mut accs[lane] {
                 None => accs[lane] = Some(w.clone()),
                 Some(a) => a.add_assign(w),
             }
         }
-        accs.into_iter()
-            .map(|a| a.unwrap_or_else(|| LweCiphertext::trivial(0, engine.gate_ext_dim())))
-            .collect()
+        accs.into_iter().map(|a| a.unwrap_or_else(|| engine.trivial_weighted_zero())).collect()
     }
 
     /// One output bit's MUX tree. Returns None if the bit is constant 0
     /// across all entries, Some(gate-encoded boolean) otherwise.
-    fn mux_tree_bit(&self, engine: &GlyphEngine, bits: &[LweCiphertext], j: u32) -> Option<LweCiphertext> {
+    fn mux_tree_bit(&self, engine: &GlyphEngine, bits: &[Bit], j: u32) -> Option<Bit> {
         #[derive(Clone)]
         enum Node {
             Const(bool),
-            Ct(LweCiphertext),
+            Ct(Bit),
         }
         // leaves, indexed by the value read MSB-first
-        let mut level: Vec<Node> = self
-            .entries
-            .iter()
-            .map(|&e| Node::Const((e >> j) & 1 == 1))
-            .collect();
+        let mut level: Vec<Node> =
+            self.entries.iter().map(|&e| Node::Const((e >> j) & 1 == 1)).collect();
         // fold from the LSB side: selection bit for the last level is the
         // last (LSB) input bit.
         for bit in bits.iter().rev() {
@@ -418,11 +413,11 @@ impl SoftmaxUnit {
                     (Node::Const(true), Node::Const(false)) => Node::Ct(engine.gate_not(bit)),
                     (d0, d1) => {
                         let c0 = match d0 {
-                            Node::Const(b) => LweCiphertext::trivial(crate::tfhe::encode_bit(*b), bit.dim()),
+                            Node::Const(b) => engine.trivial_bit(*b),
                             Node::Ct(c) => c.clone(),
                         };
                         let c1 = match d1 {
-                            Node::Const(b) => LweCiphertext::trivial(crate::tfhe::encode_bit(*b), bit.dim()),
+                            Node::Const(b) => engine.trivial_bit(*b),
                             Node::Ct(c) => c.clone(),
                         };
                         Node::Ct(engine.gate_mux(bit, &c1, &c0))
@@ -435,10 +430,7 @@ impl SoftmaxUnit {
         debug_assert_eq!(level.len(), 1);
         match level.into_iter().next().unwrap() {
             Node::Const(false) => None,
-            Node::Const(true) => Some(LweCiphertext::trivial(
-                crate::tfhe::encode_bit(true),
-                engine.gate_ck.params.n,
-            )),
+            Node::Const(true) => Some(engine.trivial_bit(true)),
             Node::Ct(c) => Some(c),
         }
     }
@@ -448,7 +440,8 @@ impl SoftmaxUnit {
     /// constants symbolically: every surviving MUX costs 2 bootstraps, every
     /// surviving output bit one weighted-AND recomposition, NOTs are free.
     /// This is what `plan_entry` feeds the compiled `Plan`, so the
-    /// plan/execution consistency test can assert live counters exactly.
+    /// plan/execution consistency test can assert live counters exactly —
+    /// on both backends, which count gates identically.
     pub fn plan_gates_per_lane(&self) -> u64 {
         #[derive(Clone, Copy, PartialEq)]
         enum Node {
@@ -487,32 +480,21 @@ impl SoftmaxUnit {
     /// Fast mode: one programmable bootstrap per neuron (an ablation over
     /// the paper's MUX tree). The logit must fit in `in_bits−1` bits; an
     /// offset moves the full signed range into the positive half-torus.
-    pub fn evaluate_pbs(&self, engine: &GlyphEngine, value_lwe: &LweCiphertext) -> LweCiphertext {
+    pub fn evaluate_pbs(&self, engine: &GlyphEngine, value_lwe: &Bit) -> Bit {
         self.evaluate_pbs_many(engine, std::slice::from_ref(value_lwe))
             .pop()
             .expect("one input, one output")
     }
 
     /// Batched fast mode: the lookup test polynomial is programmed once and
-    /// every lane's PBS fans across the pool.
-    pub fn evaluate_pbs_many(
-        &self,
-        engine: &GlyphEngine,
-        value_lwes: &[LweCiphertext],
-    ) -> Vec<LweCiphertext> {
+    /// every lane's PBS fans across the pool (FHE) or evaluates through the
+    /// noiseless blind-rotate model (clear).
+    pub fn evaluate_pbs_many(&self, engine: &GlyphEngine, value_lwes: &[Bit]) -> Vec<Bit> {
         let nb = self.in_bits as u32;
         debug_assert!(nb >= 1);
-        let big_n = engine.extract_ck.params.big_n;
+        let big_n = engine.ext_big_n();
         // phase = v·2^(32−nb); add 2^31 so v ∈ [−2^(nb−1), 2^(nb−1)) maps to
         // [0, 2^32) positive-half windows of the doubled table.
-        let shifted: Vec<LweCiphertext> = value_lwes
-            .iter()
-            .map(|lwe| {
-                let mut s = lwe.clone();
-                s.add_constant(1u32 << 31);
-                s
-            })
-            .collect();
         // window w of N covers v = w·2^nb/N − 2^(nb−1)… program entries.
         let entries = &self.entries;
         let n_entries = entries.len();
@@ -522,7 +504,23 @@ impl SoftmaxUnit {
             (entries[signed_index] as u32) << crate::switch::VALUE_POS
         });
         engine.counter.bump(&engine.counter.act_gates, value_lwes.len() as u64);
-        engine.extract_ck.pbs_raw_many(shifted, &tv)
+        if engine.is_clear() {
+            let cb = engine.clear();
+            value_lwes
+                .iter()
+                .map(|lwe| Bit::Clear(cb.pbs_model(lwe.phase().wrapping_add(1u32 << 31), &tv)))
+                .collect()
+        } else {
+            let shifted: Vec<crate::tfhe::LweCiphertext> = value_lwes
+                .iter()
+                .map(|lwe| {
+                    let mut s = lwe.fhe().clone();
+                    s.add_constant(1u32 << 31);
+                    s
+                })
+                .collect();
+            engine.fhe().extract_ck.pbs_raw_many(shifted, &tv).into_iter().map(Bit::Fhe).collect()
+        }
     }
 }
 
@@ -547,6 +545,27 @@ mod tests {
         let got = client.decrypt_batch(&a.cts[0], 4, 0);
         let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn clear_relu_layer_matches_plain() {
+        use crate::nn::backend::Codec;
+        let (eng, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 4);
+        let vals: Vec<i64> = vec![37, -25, 0, 101];
+        let ct = codec.encrypt_batch(&vals, 3);
+        let u = EncTensor::new(vec![ct], vec![1], PackOrder::Forward, 3);
+        let (a, state) = relu_layer(&eng, &u, 3, PackOrder::Forward);
+        let got = codec.decrypt_batch(&a.cts[0], 4, 0);
+        let want: Vec<i64> = vals.iter().map(|&v| v.max(0)).collect();
+        assert_eq!(got, want);
+        // and the backward mask mirrors Algorithm 2
+        let mut d_rev = vec![9i64, -9, 9, -9];
+        d_rev.reverse();
+        let delta =
+            EncTensor::new(vec![codec.encrypt_batch(&d_rev, 0)], vec![1], PackOrder::Reversed, 0);
+        let out = irelu_layer(&eng, &delta, &state, 0);
+        let got: Vec<i64> = codec.decrypt_batch(&out.cts[0], 4, 0).into_iter().rev().collect();
+        assert_eq!(got, vec![9, 0, 9, -9]);
     }
 
     #[test]
@@ -584,10 +603,26 @@ mod tests {
         let bits_all = eng.switch_to_bits(&ct, &[0], 0);
         let bits3 = bits_all[0][..3].to_vec();
         let out = unit.evaluate_mux(&eng, &bits3);
-        // decrypt the weighted LWE through the packing switch
+        // decrypt the weighted value through the packing switch
         let packed = eng.switch_to_bgv(&[out], &[0]);
         let got = client.decrypt_batch(&packed, 1, 0);
         assert_eq!(got, vec![unit.entries[v] as i64]);
+    }
+
+    #[test]
+    fn clear_softmax_mux_tree_matches_table() {
+        use crate::nn::backend::Codec;
+        let (eng, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 1);
+        let unit = SoftmaxUnit { in_bits: 3, entries: vec![10, 20, 30, 40, 50, 60, 70, 80] };
+        for v in 0..8usize {
+            let byte = (v as i64) << 5;
+            let signed = if byte >= 128 { byte - 256 } else { byte };
+            let ct = codec.encrypt_batch(&[signed << eng.frac_bits()], 0);
+            let bits_all = eng.switch_to_bits(&ct, &[0], 0);
+            let out = unit.evaluate_mux(&eng, &bits_all[0][..3]);
+            let packed = eng.switch_to_bgv(&[out], &[0]);
+            assert_eq!(codec.decrypt_batch(&packed, 1, 0), vec![unit.entries[v] as i64], "v={v}");
+        }
     }
 
     #[test]
@@ -605,6 +640,19 @@ mod tests {
         assert_eq!(live, unit.plan_gates_per_lane());
         // and the full logistic table used by real networks
         let logistic = SoftmaxUnit::logistic(3, 2);
+        let before = eng.counter.snapshot().act_gates;
+        let _ = logistic.evaluate_mux(&eng, &bits_all[0][..3]);
+        let live = eng.counter.snapshot().act_gates - before;
+        assert_eq!(live, logistic.plan_gates_per_lane());
+    }
+
+    #[test]
+    fn clear_softmax_gate_count_matches_plan_too() {
+        use crate::nn::backend::Codec;
+        let (eng, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 1);
+        let logistic = SoftmaxUnit::logistic(3, 2);
+        let ct = codec.encrypt_batch(&[3 << eng.frac_bits()], 0);
+        let bits_all = eng.switch_to_bits(&ct, &[0], 0);
         let before = eng.counter.snapshot().act_gates;
         let _ = logistic.evaluate_mux(&eng, &bits_all[0][..3]);
         let live = eng.counter.snapshot().act_gates - before;

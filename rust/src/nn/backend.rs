@@ -1,0 +1,570 @@
+//! Pluggable execution backends: the FHE path (`GlyphEngine`'s key
+//! material) and the bit-exact plaintext mirror ([`ClearBackend`]).
+//!
+//! The clear backend executes every homomorphic op on plain `i64`/`u64`
+//! lanes with semantics chosen so that each op's result equals
+//! `decrypt(FHE(op))` *by construction*:
+//!
+//! * **BGV side** — a [`ClearCt`] is exactly the plaintext polynomial a BGV
+//!   ciphertext encrypts, kept as canonical residues mod `t`. MultCC is the
+//!   negacyclic polynomial product (sparse: only the populated batch lanes
+//!   are convolved, so the gradient convolution trick costs `O(batch²)` per
+//!   weight instead of `O(N²)`), MultCP scales by the weight scalar, AddCC
+//!   adds coefficientwise — precisely BGV's plaintext homomorphism.
+//! * **Switch down (BGV→TFHE)** — the delivered 8-bit two's-complement
+//!   value is [`crate::switch::extract::quantize_plain`] of the pre-shifted
+//!   coefficient: the top 8 bits of `m·2^pre mod t`, round-to-nearest (the
+//!   half-window guard the real extraction adds). Because plaintexts are
+//!   integers, every phase sits on the `2^(32−log2 t)` torus grid, at least
+//!   a full grid step from any PBS decision boundary except at exact
+//!   rounding ties — the same set on which the lattice path's own noise
+//!   decides the bit, so the mirror is as faithful as the cryptography
+//!   permits (the differential suite pins seeds, `GLYPH_PROP_SEED` replays).
+//! * **TFHE side** — a [`Bit`] in clear mode carries the *exact noiseless
+//!   torus phase* (`u32`) the gate pipeline would produce: gate bootstraps
+//!   output exactly `±µ`, weighted ANDs exactly `{0, 2^pos}`, the MUX's two
+//!   half-bootstraps recombine by the same wrapping arithmetic. All
+//!   decisions mirror the sign test on phases whose margins (≥ 2^26) dwarf
+//!   gate noise, so the booleans agree with the lattice path bit for bit.
+//! * **Switch up (TFHE→BGV)** — the modulus raise reads the recomposed
+//!   phase on the 2^24 grid exactly as `switch::repack::raise` does:
+//!   `((phase + 2^23) >> 24) & 0xFF` as signed 8-bit.
+//!
+//! Gradient truncation (`∇ >> grad_shift`, via the switch round trip at the
+//! batch-sum coefficient) and the SGD weight-update subtraction therefore
+//! round identically on both backends, which is what the
+//! `tests/backend_equivalence.rs` differential suite asserts byte-for-byte.
+
+use crate::bgv::{BgvCiphertext, BgvParams, CachedPlaintext, Plaintext};
+use crate::switch::extract::quantize_plain;
+use crate::switch::{SWITCH_BITS, VALUE_POS};
+use crate::tfhe::{decode_bit, LweCiphertext, TestPoly, MU_BIT};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Clear BGV-side values
+// ---------------------------------------------------------------------------
+
+/// The plaintext polynomial a BGV ciphertext would encrypt: canonical
+/// residues in `[0, t)`, stored sparsely (`coeffs.len() ≤ n`; coefficients
+/// past the stored length are zero). Ring degree `n` and plaintext modulus
+/// `t` ride along so every op is self-contained.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClearCt {
+    pub n: usize,
+    pub t: u64,
+    pub coeffs: Vec<u64>,
+}
+
+/// Canonical residue of a signed value mod `t`.
+#[inline]
+pub fn canon(v: i64, t: u64) -> u64 {
+    v.rem_euclid(t as i64) as u64
+}
+
+impl ClearCt {
+    pub fn zero(n: usize, t: u64) -> Self {
+        ClearCt { n, t, coeffs: Vec::new() }
+    }
+
+    /// From a plaintext (the clear analogue of encryption).
+    pub fn from_plaintext(pt: &Plaintext, n: usize) -> Self {
+        let t = pt.t;
+        let mut c = ClearCt::zero(n, t);
+        for (i, &v) in pt.coeffs.iter().enumerate() {
+            if v != 0 {
+                c.set(i, canon(v, t));
+            }
+        }
+        c
+    }
+
+    /// Coefficient `i` as a canonical residue (0 past the stored length).
+    #[inline]
+    pub fn get(&self, i: usize) -> u64 {
+        debug_assert!(i < self.n, "coefficient {i} outside the {}-slot ring", self.n);
+        self.coeffs.get(i).copied().unwrap_or(0)
+    }
+
+    /// Set coefficient `i`, growing the stored prefix as needed.
+    pub fn set(&mut self, i: usize, v: u64) {
+        debug_assert!(i < self.n);
+        if self.coeffs.len() <= i {
+            self.coeffs.resize(i + 1, 0);
+        }
+        self.coeffs[i] = v % self.t;
+    }
+
+    /// Centered signed reads of the first `count` coefficients — exactly
+    /// what decrypting the corresponding BGV ciphertext returns, including
+    /// the decode-width validation (`Plaintext::try_decode_batch`'s rule).
+    pub fn decode_batch(&self, count: usize) -> Vec<i64> {
+        if count > self.n {
+            panic!(
+                "decode_batch: decode of {count} lanes exceeds the {} coefficients the ring holds",
+                self.n
+            );
+        }
+        (0..count).map(|i| Plaintext::center(self.get(i), self.t)).collect()
+    }
+
+    pub fn add_assign(&mut self, o: &ClearCt) {
+        debug_assert_eq!(self.t, o.t);
+        if self.coeffs.len() < o.coeffs.len() {
+            self.coeffs.resize(o.coeffs.len(), 0);
+        }
+        for (a, &b) in self.coeffs.iter_mut().zip(&o.coeffs) {
+            *a = (*a + b) % self.t;
+        }
+    }
+
+    pub fn sub_assign(&mut self, o: &ClearCt) {
+        debug_assert_eq!(self.t, o.t);
+        if self.coeffs.len() < o.coeffs.len() {
+            self.coeffs.resize(o.coeffs.len(), 0);
+        }
+        for (a, &b) in self.coeffs.iter_mut().zip(&o.coeffs) {
+            *a = (*a + self.t - b) % self.t;
+        }
+    }
+
+    /// Scale every coefficient by a signed scalar — multiplication by the
+    /// constant polynomial `w` (a weight).
+    pub fn scalar_mul_assign(&mut self, w: i64) {
+        let t = self.t;
+        let wu = canon(w, t) as u128;
+        for a in self.coeffs.iter_mut() {
+            *a = ((*a as u128 * wu) % t as u128) as u64;
+        }
+    }
+
+    /// Negacyclic product mod `(X^n + 1, t)`, sparse over the populated
+    /// coefficients of both operands (the gradient convolution trick only
+    /// ever multiplies batch-width supports).
+    pub fn mul_assign(&mut self, o: &ClearCt) {
+        debug_assert_eq!(self.t, o.t);
+        debug_assert_eq!(self.n, o.n);
+        let t = self.t as u128;
+        let n = self.n;
+        let a: Vec<(usize, u64)> =
+            self.coeffs.iter().enumerate().filter(|(_, &v)| v != 0).map(|(i, &v)| (i, v)).collect();
+        let b: Vec<(usize, u64)> =
+            o.coeffs.iter().enumerate().filter(|(_, &v)| v != 0).map(|(i, &v)| (i, v)).collect();
+        let top = match (a.last(), b.last()) {
+            (Some(&(ia, _)), Some(&(ib, _))) => (ia + ib).min(n - 1),
+            _ => 0,
+        };
+        let mut out = vec![0u64; if a.is_empty() || b.is_empty() { 0 } else { top + 1 }];
+        for &(i, av) in &a {
+            for &(j, bv) in &b {
+                let p = ((av as u128 * bv as u128) % t) as u64;
+                let k = i + j;
+                if k < n {
+                    out[k] = (out[k] + p) % self.t;
+                } else {
+                    // X^n = −1 wrap
+                    let k = k - n;
+                    out[k] = (out[k] + self.t - p) % self.t;
+                }
+            }
+        }
+        self.coeffs = out;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend-polymorphic values
+// ---------------------------------------------------------------------------
+
+/// A BGV-side value under either backend. Layers and tensors hold these;
+/// only `GlyphEngine`'s counted ops (and the codecs) look inside.
+#[derive(Clone)]
+pub enum Ct {
+    Fhe(BgvCiphertext),
+    Clear(ClearCt),
+}
+
+impl Ct {
+    pub fn fhe(&self) -> &BgvCiphertext {
+        match self {
+            Ct::Fhe(ct) => ct,
+            Ct::Clear(_) => panic!("expected an FHE ciphertext but found a clear-backend value"),
+        }
+    }
+
+    pub fn fhe_mut(&mut self) -> &mut BgvCiphertext {
+        match self {
+            Ct::Fhe(ct) => ct,
+            Ct::Clear(_) => panic!("expected an FHE ciphertext but found a clear-backend value"),
+        }
+    }
+
+    pub fn clear(&self) -> &ClearCt {
+        match self {
+            Ct::Clear(c) => c,
+            Ct::Fhe(_) => panic!("expected a clear-backend value but found an FHE ciphertext"),
+        }
+    }
+
+    pub fn clear_mut(&mut self) -> &mut ClearCt {
+        match self {
+            Ct::Clear(c) => c,
+            Ct::Fhe(_) => panic!("expected a clear-backend value but found an FHE ciphertext"),
+        }
+    }
+
+    pub fn is_clear(&self) -> bool {
+        matches!(self, Ct::Clear(_))
+    }
+}
+
+/// A TFHE-side value under either backend. In clear mode it carries the
+/// exact noiseless torus phase the gate pipeline would produce, so boolean
+/// decisions and the weighted 2^24-grid recomposition mirror bit for bit.
+#[derive(Clone, Debug)]
+pub enum Bit {
+    Fhe(LweCiphertext),
+    Clear(u32),
+}
+
+impl Bit {
+    pub fn fhe(&self) -> &LweCiphertext {
+        match self {
+            Bit::Fhe(c) => c,
+            Bit::Clear(_) => panic!("expected an FHE LWE but found a clear-backend phase"),
+        }
+    }
+
+    pub fn phase(&self) -> u32 {
+        match self {
+            Bit::Clear(p) => *p,
+            Bit::Fhe(_) => panic!("expected a clear-backend phase but found an FHE LWE"),
+        }
+    }
+
+    /// Plain LWE addition (recomposition sums weighted bits).
+    pub fn add_assign(&mut self, o: &Bit) {
+        match (self, o) {
+            (Bit::Fhe(a), Bit::Fhe(b)) => a.add_assign(b),
+            (Bit::Clear(a), Bit::Clear(b)) => *a = a.wrapping_add(*b),
+            _ => panic!("cannot mix FHE and clear TFHE values"),
+        }
+    }
+
+    /// Add a plaintext constant to the phase.
+    pub fn add_constant(&mut self, mu: u32) {
+        match self {
+            Bit::Fhe(c) => c.add_constant(mu),
+            Bit::Clear(p) => *p = p.wrapping_add(mu),
+        }
+    }
+}
+
+/// A frozen (plaintext) weight under either backend: the FHE path caches
+/// the per-level NTT lifts once, the clear path just keeps the scalar.
+#[derive(Clone)]
+pub enum PlainWeight {
+    Fhe(Arc<CachedPlaintext>),
+    Clear(i64),
+}
+
+impl PlainWeight {
+    /// The weight scalar (inspection / snapshots).
+    pub fn value(&self) -> i64 {
+        match self {
+            PlainWeight::Fhe(c) => c.pt.coeffs[0],
+            PlainWeight::Clear(v) => *v,
+        }
+    }
+
+    pub fn fhe_cached(&self) -> &CachedPlaintext {
+        match self {
+            PlainWeight::Fhe(c) => c,
+            PlainWeight::Clear(_) => {
+                panic!("expected an FHE weight cache but found a clear-backend scalar")
+            }
+        }
+    }
+}
+
+/// One term of a MAC row, backend-neutral: ciphertext×ciphertext or
+/// ciphertext×plaintext-weight. `GlyphEngine::mac_rows_*` consumes these
+/// and counts MultCC/MultCP per variant identically on both backends.
+pub enum Term<'a> {
+    Cc(&'a Ct, &'a Ct),
+    Cp(&'a Ct, &'a PlainWeight),
+}
+
+/// A prebuilt plaintext summand (one value at a fixed position set) for
+/// the free AddCP — built once per frozen bias/channel by
+/// `GlyphEngine::plain_at` and reused across every ciphertext it is added
+/// to, so the FHE path pays its ring-sized plaintext a single time.
+pub enum PlainVector {
+    Fhe(Plaintext),
+    Clear { value: i64, positions: Vec<usize> },
+}
+
+// ---------------------------------------------------------------------------
+// The clear backend
+// ---------------------------------------------------------------------------
+
+/// The plaintext execution backend: parameters only, no key material — setup
+/// is instant and every op is integer arithmetic, so full epochs run in
+/// seconds while remaining bit-identical to the decrypted FHE pipeline.
+pub struct ClearBackend {
+    pub params: BgvParams,
+    /// Digit-extraction blind-rotation ring degree (the PBS model for the
+    /// fast-softmax ablation mirrors the real ring's window grid).
+    pub ext_big_n: usize,
+}
+
+impl ClearBackend {
+    pub fn new(params: BgvParams, ext_big_n: usize) -> Self {
+        ClearBackend { params, ext_big_n }
+    }
+
+    /// The 8-bit two's-complement value the switch delivers for canonical
+    /// coefficient `mu` pre-shifted by `pre_shift` — `quantize_plain` of
+    /// `mu·2^pre mod t` (top 8 bits, round-to-nearest).
+    pub fn quantize(&self, mu: u64, pre_shift: u32) -> i64 {
+        let t = self.params.t;
+        let shifted = ((mu as u128) << pre_shift) % t as u128;
+        quantize_plain(shifted as i64, t)
+    }
+
+    /// The modulus raise's read of a recomposed phase: signed 8-bit on the
+    /// 2^24 grid, round-to-nearest (mirrors `switch::repack::raise`).
+    pub fn raise_value(&self, phase: u32) -> i64 {
+        let v = (phase.wrapping_add(1 << (VALUE_POS - 1)) >> VALUE_POS) & 0xFF;
+        if v >= 128 {
+            v as i64 - 256
+        } else {
+            v as i64
+        }
+    }
+
+    /// Noiseless programmable bootstrap on an exact phase: the blind-rotate
+    /// modulus switch to `Z_2N` (round-to-nearest) followed by the
+    /// negacyclic test-polynomial read — exactly what
+    /// `BootstrapKey::blind_rotate` computes on a trivial input.
+    pub fn pbs_model(&self, phase: u32, tv: &TestPoly) -> u32 {
+        let big_n = tv.coeffs.len();
+        let n2 = 2 * big_n as u32;
+        let log2n2 = n2.trailing_zeros();
+        let shift = 32 - log2n2;
+        let half = 1u32 << (shift - 1);
+        let bar = (phase.wrapping_add(half) >> shift) & (n2 - 1);
+        if (bar as usize) < big_n {
+            tv.coeffs[bar as usize]
+        } else {
+            tv.coeffs[bar as usize - big_n].wrapping_neg()
+        }
+    }
+
+    /// The two's-complement bits (MSB first) of a quantized value, as
+    /// gate-encoded clear phases — what `switch_down` delivers per lane.
+    pub fn value_bits(&self, v: i64) -> Vec<Bit> {
+        let byte = (v & 0xFF) as u8;
+        (0..SWITCH_BITS)
+            .map(|k| Bit::Clear(crate::tfhe::encode_bit((byte >> (SWITCH_BITS - 1 - k)) & 1 == 1)))
+            .collect()
+    }
+
+    // ---- exact noiseless gate mirrors --------------------------------------
+
+    /// `bootstrap_sign(a + b − 1/8, mu)`: the AND-family linear part and
+    /// sign decision on exact phases. All gate operands sit ≥ 2^26 from the
+    /// sign boundary, so this equals the lattice gate's decision.
+    pub fn and_phase(a: u32, b: u32, mu: u32) -> u32 {
+        let lin = a.wrapping_add(b).wrapping_sub(MU_BIT);
+        if decode_bit(lin) {
+            mu
+        } else {
+            mu.wrapping_neg()
+        }
+    }
+
+    /// Weighted AND: true lands exactly at `2^pos`, false at 0.
+    pub fn and_weighted_phase(a: u32, b: u32, pos: u32) -> u32 {
+        let mu = 1u32 << (pos - 1);
+        Self::and_phase(a, b, mu).wrapping_add(mu)
+    }
+
+    /// The homomorphic MUX's two half-bootstraps + recentering, on exact
+    /// phases (mirrors `TfheCloudKey::mux`).
+    pub fn mux_phase(s: u32, d1: u32, d0: u32) -> u32 {
+        let h = MU_BIT >> 1;
+        let lin1 = s.wrapping_add(d1).wrapping_sub(MU_BIT);
+        let t1 = if decode_bit(lin1) { h } else { h.wrapping_neg() };
+        let lin0 = s.wrapping_neg().wrapping_add(d0).wrapping_sub(MU_BIT);
+        let t0 = if decode_bit(lin0) { h } else { h.wrapping_neg() };
+        t1.wrapping_add(t0).wrapping_add(h)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codecs: the client-side encode/decode surface shared by both backends
+// ---------------------------------------------------------------------------
+
+/// Client-side encoding: what `ClientKeys` does with the secret key on the
+/// FHE backend, and what [`ClearCodec`] does with plain arithmetic on the
+/// clear backend. Model builders and the `Trainer` take `&mut dyn Codec` so
+/// one code path serves both.
+pub trait Codec {
+    /// Encode a batch of 8-bit values at fixed-point scale `shift`.
+    fn encrypt_batch(&mut self, values: &[i64], shift: u32) -> Ct;
+    /// Encode a single weight scalar as a constant polynomial.
+    fn encrypt_scalar(&mut self, w: i64) -> Ct;
+    /// Decode a batch (optionally un-scaling by `shift`).
+    fn decrypt_batch(&self, ct: &Ct, lanes: usize, shift: u32) -> Vec<i64>;
+}
+
+/// The clear backend's codec: no keys, just the ring parameters. Encoding
+/// validates exactly like `Plaintext::encode_batch` (descriptive errors on
+/// over-capacity batches / out-of-range values).
+pub struct ClearCodec {
+    pub params: BgvParams,
+}
+
+impl Codec for ClearCodec {
+    fn encrypt_batch(&mut self, values: &[i64], shift: u32) -> Ct {
+        let scaled: Vec<i64> = values.iter().map(|&v| v << shift).collect();
+        let pt = Plaintext::encode_batch(&scaled, &self.params);
+        Ct::Clear(ClearCt::from_plaintext(&pt, self.params.n))
+    }
+
+    fn encrypt_scalar(&mut self, w: i64) -> Ct {
+        let pt = Plaintext::encode_scalar(w, &self.params);
+        Ct::Clear(ClearCt::from_plaintext(&pt, self.params.n))
+    }
+
+    fn decrypt_batch(&self, ct: &Ct, lanes: usize, shift: u32) -> Vec<i64> {
+        ct.clear().decode_batch(lanes).into_iter().map(|v| v >> shift).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bgv::BgvParams;
+
+    fn p() -> BgvParams {
+        BgvParams::test_params()
+    }
+
+    #[test]
+    fn clear_ct_add_sub_scale_roundtrip() {
+        let params = p();
+        let mut a = ClearCt::from_plaintext(&Plaintext::encode_batch(&[5, -7, 0, 3], &params), params.n);
+        let b = ClearCt::from_plaintext(&Plaintext::encode_batch(&[1, 2, -3], &params), params.n);
+        a.add_assign(&b);
+        assert_eq!(a.decode_batch(4), vec![6, -5, -3, 3]);
+        a.sub_assign(&b);
+        assert_eq!(a.decode_batch(4), vec![5, -7, 0, 3]);
+        a.scalar_mul_assign(-4);
+        assert_eq!(a.decode_batch(4), vec![-20, 28, 0, -12]);
+    }
+
+    #[test]
+    fn negacyclic_mul_matches_convolution_trick() {
+        // forward-packed x times reverse-packed δ leaves Σ x_b·δ_b at
+        // coefficient batch−1 — the gradient reduction.
+        let params = p();
+        let x_vals = vec![3i64, -2, 5, 1];
+        let mut d_vals = vec![2i64, 4, -1, 3];
+        d_vals.reverse();
+        let mut x = ClearCt::from_plaintext(&Plaintext::encode_batch(&x_vals, &params), params.n);
+        let d = ClearCt::from_plaintext(&Plaintext::encode_batch(&d_vals, &params), params.n);
+        x.mul_assign(&d);
+        let want: i64 = [3 * 2, -2 * 4, 5 * -1, 1 * 3].iter().sum();
+        assert_eq!(x.decode_batch(4)[3], want);
+    }
+
+    #[test]
+    fn negacyclic_wrap_negates() {
+        let params = p();
+        let n = params.n;
+        let mut a = ClearCt::zero(n, params.t);
+        a.set(n - 1, 2);
+        let mut b = ClearCt::zero(n, params.t);
+        b.set(2, 3);
+        a.mul_assign(&b);
+        // X^(n−1)·3X² = 3·2·X^(n+1) = −6·X
+        assert_eq!(a.decode_batch(2), vec![0, -6]);
+    }
+
+    #[test]
+    fn quantize_matches_switch_reference() {
+        let cb = ClearBackend::new(p(), 2048);
+        let t = cb.params.t;
+        let frac = t.trailing_zeros() - SWITCH_BITS;
+        for v in [0i64, 5, -5, 127, -128] {
+            let mu = canon(v << frac, t);
+            assert_eq!(cb.quantize(mu, 0), v, "value {v}");
+        }
+        // sub-quantization residue rounds to nearest
+        let mu = canon((5 << frac) + 200, t);
+        assert_eq!(cb.quantize(mu, 0), 6);
+        // pre-shift moves lower-scale values into the window
+        let mu = canon(9 << 4, t);
+        assert_eq!(cb.quantize(mu, frac - 4), 9);
+    }
+
+    #[test]
+    fn raise_reads_the_weighted_grid() {
+        let cb = ClearBackend::new(p(), 2048);
+        for v in [0i64, 1, -1, 42, -42, 127, -128] {
+            let phase = ((v as i64) << VALUE_POS) as u32;
+            assert_eq!(cb.raise_value(phase), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn gate_phase_mirrors_are_boolean_exact() {
+        use crate::tfhe::{decode_bit, encode_bit};
+        for a in [false, true] {
+            for b in [false, true] {
+                let pa = encode_bit(a);
+                let pb = encode_bit(b);
+                assert_eq!(decode_bit(ClearBackend::and_phase(pa, pb, MU_BIT)), a && b);
+                let w = ClearBackend::and_weighted_phase(pa, pb, 27);
+                assert_eq!(w, if a && b { 1 << 27 } else { 0 });
+                for s in [false, true] {
+                    let m = ClearBackend::mux_phase(encode_bit(s), pa, pb);
+                    assert_eq!(decode_bit(m), if s { a } else { b }, "s={s} a={a} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pbs_model_reads_windows_and_mirror() {
+        let cb = ClearBackend::new(p(), 2048);
+        let n = 512;
+        let tv = TestPoly::from_fn(n, |w| ((w * 4 / n) as u32) << 28);
+        for i in 0..4u32 {
+            let phase = (i * 2 + 1) << 28; // mid-window of step i
+            assert_eq!(cb.pbs_model(phase, &tv), i << 28, "window {i}");
+        }
+        // negative half mirrors negacyclically
+        let tvc = TestPoly::constant(n, 1 << 29);
+        assert_eq!(cb.pbs_model((3u32 << 29).wrapping_neg(), &tvc), (1u32 << 29).wrapping_neg());
+    }
+
+    #[test]
+    fn clear_codec_roundtrip() {
+        let mut codec = ClearCodec { params: p() };
+        let vals = vec![1i64, -2, 3, -4];
+        let ct = codec.encrypt_batch(&vals, 3);
+        assert_eq!(codec.decrypt_batch(&ct, 4, 3), vals);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn clear_decode_past_ring_panics_like_the_fhe_path() {
+        let params = p();
+        let n = params.n;
+        let ct = ClearCt::zero(n, params.t);
+        let _ = ct.decode_batch(n + 1);
+    }
+}

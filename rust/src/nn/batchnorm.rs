@@ -6,7 +6,6 @@
 use super::engine::GlyphEngine;
 use super::layer::{bn_forward_ops, Layer, LayerPlanEntry, LayerState};
 use super::tensor::EncTensor;
-use crate::bgv::{CachedPlaintext, Plaintext};
 use crate::coordinator::scheduler::LayerKind;
 
 /// Frozen affine BN over the channel dimension of a CHW tensor.
@@ -37,25 +36,21 @@ impl BnLayer {
         assert_eq!(x.shape.len(), 3);
         let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
         assert_eq!(c, self.gain.len());
-        let params = &engine.ctx.params;
         let batch_positions = x.order.positions(engine.batch);
         let mut cts = Vec::with_capacity(x.len());
         for ch in 0..c {
-            // one evaluation-form lift per channel, amortized over the h·w
-            // positions (the per-position MultCP is a pure pointwise pass)
-            let g = CachedPlaintext::scalar(self.gain[ch], &engine.ctx);
-            // bias must be added at the tensor's running scale: b·2^(x.shift)
-            let bias_val = self.bias[ch] << x.shift;
-            let mut bias_coeffs = vec![0i64; params.n];
-            for &p in &batch_positions {
-                bias_coeffs[p] = bias_val;
-            }
-            let b = Plaintext { coeffs: bias_coeffs, t: params.t };
+            // one frozen-weight build per channel, amortized over the h·w
+            // positions (on FHE this is the evaluation-form lift; per-
+            // position MultCP is then a pure pointwise pass)
+            let g = engine.scalar_weight(self.gain[ch]);
+            // bias must be added at the tensor's running scale: b·2^(x.shift);
+            // built once per channel, reused across the h·w positions
+            let b = engine.plain_at(self.bias[ch] << x.shift, &batch_positions);
             for y in 0..h {
                 for xx in 0..w {
                     let mut t = x.chw(ch, y, xx).clone();
-                    engine.mult_cp_cached(&mut t, &g);
-                    t.add_plain(&b, &engine.ctx);
+                    engine.mult_cp_w(&mut t, &g);
+                    engine.add_plain_v(&mut t, &b);
                     cts.push(t);
                 }
             }

@@ -6,11 +6,11 @@
 //! Glyph-from-scratch CNN training) is supported for completeness and used
 //! by the ablation benches.
 
+use super::backend::{Codec, Term};
 use super::engine::GlyphEngine;
 use super::layer::{conv_forward_ops, Layer, LayerPlanEntry, LayerState};
 use super::linear::{shared_plain, Weight};
 use super::tensor::EncTensor;
-use crate::bgv::{BgvContext, MacTerm};
 use crate::coordinator::scheduler::LayerKind;
 use std::collections::HashMap;
 
@@ -28,7 +28,7 @@ impl ConvLayer {
     /// Frozen plaintext kernels (transfer learning); one evaluation-form
     /// lift per distinct tap value, cached at construction and shared
     /// across the kernel bank.
-    pub fn new_plain(init: &[Vec<Vec<Vec<i64>>>], ctx: &BgvContext, out_shift: u32) -> Self {
+    pub fn new_plain(init: &[Vec<Vec<Vec<i64>>>], engine: &GlyphEngine, out_shift: u32) -> Self {
         let out_ch = init.len();
         let in_ch = init[0].len();
         let k = init[0][0].len();
@@ -41,7 +41,7 @@ impl ConvLayer {
                         ic.iter()
                             .map(|row| {
                                 row.iter()
-                                    .map(|&v| Weight::Plain(shared_plain(&mut cache, v, ctx)))
+                                    .map(|&v| Weight::Plain(shared_plain(&mut cache, v, engine)))
                                     .collect()
                             })
                             .collect()
@@ -55,7 +55,7 @@ impl ConvLayer {
     /// Encrypted kernels (from-scratch CNN training; ablation).
     pub fn new_encrypted(
         init: &[Vec<Vec<Vec<i64>>>],
-        client: &mut super::engine::ClientKeys,
+        client: &mut dyn Codec,
         out_shift: u32,
     ) -> Self {
         let out_ch = init.len();
@@ -92,7 +92,7 @@ impl ConvLayer {
         assert_eq!(x.shape[0], self.in_ch);
         let (in_h, in_w) = (x.shape[1], x.shape[2]);
         let (oh, ow) = self.out_hw(in_h, in_w);
-        let mut rows: Vec<Vec<MacTerm>> = Vec::with_capacity(self.out_ch * oh * ow);
+        let mut rows: Vec<Vec<Term>> = Vec::with_capacity(self.out_ch * oh * ow);
         for oc in 0..self.out_ch {
             for y in 0..oh {
                 for xx in 0..ow {
@@ -163,7 +163,7 @@ mod tests {
             .collect();
         let x = EncTensor::new(cts, vec![1, 3, 3], PackOrder::Forward, 0);
         let kern = vec![vec![vec![vec![1i64, -1], vec![2, 0]]]];
-        let layer = ConvLayer::new_plain(&kern, &eng.ctx, 0);
+        let layer = ConvLayer::new_plain(&kern, &eng, 0);
         let out = layer.forward(&x, &eng);
         assert_eq!(out.shape, vec![1, 2, 2]);
         let reference = |img: &[[i64; 3]; 3], y: usize, x: usize| {

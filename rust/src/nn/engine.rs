@@ -1,11 +1,30 @@
-//! `GlyphEngine`: the evaluator-side bundle of key material, parameters and
-//! HOP counters that every encrypted layer operates through.
+//! `GlyphEngine`: the evaluator-side execution engine every encrypted layer
+//! operates through — now a *pluggable backend* front.
 //!
-//! The client keeps [`ClientKeys`] (the BGV secret); the engine holds only
-//! evaluation material (relinearization key, bootstrapping keys, switching
-//! keys) plus the refresh authority handle (the documented bootstrapping
-//! substitute, DESIGN.md §5).
+//! The engine owns the HOP counters and the counted-op API
+//! (`mac_rows_many`, `switch_down_many`, the gate library, …); the actual
+//! arithmetic is dispatched to one of two backends:
+//!
+//! * [`Backend::Fhe`] — the full lattice path: BGV key material
+//!   (relinearization key, bootstrapping keys, switching keys) plus the
+//!   refresh-authority handle (the documented bootstrapping substitute,
+//!   DESIGN.md §5). This is the pre-existing `GlyphEngine` behaviour,
+//!   semantics unchanged.
+//! * [`Backend::Clear`] — the bit-exact plaintext mirror
+//!   ([`crate::nn::backend::ClearBackend`]): no keys, instant setup, every
+//!   op on plain integer lanes with semantics equal to
+//!   `decrypt(FHE(op))` by construction. Op accounting is **identical** on
+//!   both paths — the same counters are bumped by the same formulas, so a
+//!   compiled `scheduler::Plan` prices and predicts clear executions
+//!   exactly (asserted by `tests/backend_equivalence.rs`).
+//!
+//! The client keeps [`ClientKeys`] (the BGV secret) on the FHE path and a
+//! key-less [`crate::nn::backend::ClearCodec`] on the clear path; both
+//! implement [`crate::nn::backend::Codec`].
 
+use super::backend::{
+    canon, Bit, ClearBackend, ClearCodec, ClearCt, Codec, Ct, PlainVector, PlainWeight, Term,
+};
 use crate::bgv::{
     mac_row, BgvCiphertext, BgvContext, BgvParams, BgvSecretKey, CachedPlaintext, KeyAuthority,
     MacTerm, Plaintext, RelinKey,
@@ -17,7 +36,7 @@ use crate::switch::{LweExtractor, Repacker};
 use crate::tfhe::{LweCiphertext, LweKey, TfheCloudKey, TfheParams, TrlweKey};
 use std::sync::Arc;
 
-/// Client-side secret material.
+/// Client-side secret material (the FHE backend's codec).
 pub struct ClientKeys {
     pub bgv_sk: Arc<BgvSecretKey>,
     pub rng: GlyphRng,
@@ -26,31 +45,46 @@ pub struct ClientKeys {
 impl ClientKeys {
     /// Encrypt a batch of 8-bit values at fixed-point scale `shift`
     /// (value v is stored as v·2^shift in the plaintext ring).
-    pub fn encrypt_batch(&mut self, values: &[i64], shift: u32) -> BgvCiphertext {
+    pub fn encrypt_batch(&mut self, values: &[i64], shift: u32) -> Ct {
         let scaled: Vec<i64> = values.iter().map(|&v| v << shift).collect();
         let pt = Plaintext::encode_batch(&scaled, &self.bgv_sk.ctx.params);
-        self.bgv_sk.encrypt(&pt, &mut self.rng)
+        Ct::Fhe(self.bgv_sk.encrypt(&pt, &mut self.rng))
     }
 
     /// Encrypt a single weight scalar as a constant polynomial.
-    pub fn encrypt_scalar(&mut self, w: i64) -> BgvCiphertext {
+    pub fn encrypt_scalar(&mut self, w: i64) -> Ct {
         let pt = Plaintext::encode_scalar(w, &self.bgv_sk.ctx.params);
-        self.bgv_sk.encrypt(&pt, &mut self.rng)
+        Ct::Fhe(self.bgv_sk.encrypt(&pt, &mut self.rng))
     }
 
-    /// Decrypt a batch (optionally un-scaling by `shift`).
-    pub fn decrypt_batch(&self, ct: &BgvCiphertext, lanes: usize, shift: u32) -> Vec<i64> {
-        self.bgv_sk
-            .decrypt(ct)
-            .decode_batch(lanes)
-            .into_iter()
-            .map(|v| v >> shift)
-            .collect()
+    /// Decrypt a batch (optionally un-scaling by `shift`). Also decodes
+    /// clear-backend values, so differential tests read both sides through
+    /// one call.
+    pub fn decrypt_batch(&self, ct: &Ct, lanes: usize, shift: u32) -> Vec<i64> {
+        let raw = match ct {
+            Ct::Fhe(c) => self.bgv_sk.decrypt(c).decode_batch(lanes),
+            Ct::Clear(c) => c.decode_batch(lanes),
+        };
+        raw.into_iter().map(|v| v >> shift).collect()
     }
 }
 
-/// Evaluator-side engine.
-pub struct GlyphEngine {
+impl Codec for ClientKeys {
+    fn encrypt_batch(&mut self, values: &[i64], shift: u32) -> Ct {
+        ClientKeys::encrypt_batch(self, values, shift)
+    }
+
+    fn encrypt_scalar(&mut self, w: i64) -> Ct {
+        ClientKeys::encrypt_scalar(self, w)
+    }
+
+    fn decrypt_batch(&self, ct: &Ct, lanes: usize, shift: u32) -> Vec<i64> {
+        ClientKeys::decrypt_batch(self, ct, lanes, shift)
+    }
+}
+
+/// The FHE backend's evaluator-side key material.
+pub struct FheState {
     pub ctx: Arc<BgvContext>,
     pub rlk: RelinKey,
     pub gate_ck: TfheCloudKey,
@@ -58,12 +92,24 @@ pub struct GlyphEngine {
     pub fwd_switch: LweExtractor,
     pub bwd_switch: Repacker,
     pub auth: Arc<KeyAuthority>,
+}
+
+/// Which execution backend an engine runs.
+pub enum Backend {
+    Fhe(Box<FheState>),
+    Clear(ClearBackend),
+}
+
+/// Evaluator-side engine: counted-op API + backend dispatch.
+pub struct GlyphEngine {
+    pub backend: Backend,
     pub counter: OpCounter,
     /// Mini-batch width (≤ N).
     pub batch: usize,
     /// Run the scheme switch on the retained per-lane serial reference path
     /// instead of the batched scratch engine (bit-identical results — the
-    /// contract `tests/train_step_golden.rs` locks). Default: batched.
+    /// contract `tests/train_step_golden.rs` locks). FHE backend only;
+    /// ignored on the clear path. Default: batched.
     pub serial_switch: bool,
 }
 
@@ -76,11 +122,9 @@ pub enum EngineProfile {
     Test,
 }
 
-impl GlyphEngine {
-    /// Generate all key material. Returns the engine (evaluator side) and
-    /// the client keys.
-    pub fn setup(profile: EngineProfile, batch: usize, seed: u64) -> (GlyphEngine, ClientKeys) {
-        let (bgv_params, gate_params, ext_params) = match profile {
+impl EngineProfile {
+    fn params(self) -> (BgvParams, TfheParams, TfheParams) {
+        match self {
             EngineProfile::Default => (
                 BgvParams::mac_params(),
                 TfheParams::default_params(),
@@ -91,7 +135,15 @@ impl GlyphEngine {
                 TfheParams::test_params(),
                 TfheParams::test_extract_params(),
             ),
-        };
+        }
+    }
+}
+
+impl GlyphEngine {
+    /// Generate all FHE key material. Returns the engine (evaluator side)
+    /// and the client keys.
+    pub fn setup(profile: EngineProfile, batch: usize, seed: u64) -> (GlyphEngine, ClientKeys) {
+        let (bgv_params, gate_params, ext_params) = profile.params();
         assert!(batch <= bgv_params.n);
         let ctx = BgvContext::new(bgv_params);
         let mut rng = GlyphRng::new(seed);
@@ -106,13 +158,15 @@ impl GlyphEngine {
         let bwd_switch = Repacker::generate(&gate_ring, &bgv_sk, &mut rng);
         let auth = KeyAuthority::new(bgv_sk.clone(), GlyphRng::new(seed ^ 0x5eed));
         let engine = GlyphEngine {
-            ctx,
-            rlk,
-            gate_ck,
-            extract_ck,
-            fwd_switch,
-            bwd_switch,
-            auth,
+            backend: Backend::Fhe(Box::new(FheState {
+                ctx,
+                rlk,
+                gate_ck,
+                extract_ck,
+                fwd_switch,
+                bwd_switch,
+                auth,
+            })),
             counter: OpCounter::default(),
             batch,
             serial_switch: false,
@@ -121,55 +175,222 @@ impl GlyphEngine {
         (engine, client)
     }
 
+    /// Build a clear-backend engine (no key material, instant) with the
+    /// same ring/quantization parameters as the corresponding FHE profile,
+    /// plus its key-less codec.
+    pub fn setup_clear(profile: EngineProfile, batch: usize) -> (GlyphEngine, ClearCodec) {
+        let (bgv_params, _gate, ext_params) = profile.params();
+        assert!(batch <= bgv_params.n);
+        let codec = ClearCodec { params: bgv_params.clone() };
+        let engine = GlyphEngine {
+            backend: Backend::Clear(ClearBackend::new(bgv_params, ext_params.big_n)),
+            counter: OpCounter::default(),
+            batch,
+            serial_switch: false,
+        };
+        (engine, codec)
+    }
+
+    /// The FHE backend's key material (panics on the clear backend).
+    pub fn fhe(&self) -> &FheState {
+        match &self.backend {
+            Backend::Fhe(f) => f,
+            Backend::Clear(_) => panic!(
+                "this engine runs the clear backend; the requested operation needs FHE key material"
+            ),
+        }
+    }
+
+    /// The clear backend (panics on the FHE backend).
+    pub fn clear(&self) -> &ClearBackend {
+        match &self.backend {
+            Backend::Clear(c) => c,
+            Backend::Fhe(_) => panic!("this engine runs the FHE backend, not the clear mirror"),
+        }
+    }
+
+    pub fn is_clear(&self) -> bool {
+        matches!(self.backend, Backend::Clear(_))
+    }
+
+    /// Backend name for logs/CLI (`"fhe"` / `"clear"`).
+    pub fn backend_name(&self) -> &'static str {
+        if self.is_clear() {
+            "clear"
+        } else {
+            "fhe"
+        }
+    }
+
+    /// Ring/quantization parameters (both backends).
+    pub fn params(&self) -> &BgvParams {
+        match &self.backend {
+            Backend::Fhe(f) => &f.ctx.params,
+            Backend::Clear(c) => &c.params,
+        }
+    }
+
     /// log2(t) − 8: the fixed-point position the switch quantizes at.
     pub fn frac_bits(&self) -> u32 {
-        self.ctx.params.t.trailing_zeros() - crate::switch::SWITCH_BITS
+        self.params().t.trailing_zeros() - crate::switch::SWITCH_BITS
+    }
+
+    /// Digit-extraction blind-rotation ring degree (both backends).
+    pub fn ext_big_n(&self) -> usize {
+        match &self.backend {
+            Backend::Fhe(f) => f.extract_ck.params.big_n,
+            Backend::Clear(c) => c.ext_big_n,
+        }
     }
 
     // ---- counted BGV ops ---------------------------------------------------
 
-    pub fn mult_cc(&self, acc: &mut BgvCiphertext, other: &BgvCiphertext) {
+    pub fn mult_cc(&self, acc: &mut Ct, other: &Ct) {
         self.counter.bump(&self.counter.mult_cc, 1);
         self.counter.bump(&self.counter.relin, 1);
-        acc.mul_assign(other, &self.rlk, &self.ctx);
+        match (&self.backend, acc, other) {
+            (Backend::Fhe(f), Ct::Fhe(a), Ct::Fhe(b)) => a.mul_assign(b, &f.rlk, &f.ctx),
+            (Backend::Clear(_), Ct::Clear(a), Ct::Clear(b)) => a.mul_assign(b),
+            _ => panic!("MultCC operands do not match the engine backend"),
+        }
+    }
+
+    /// MultCP against a frozen weight (cached evaluation form on the FHE
+    /// path, a scalar on the clear path). Counted identically to MultCC's
+    /// plaintext column.
+    pub fn mult_cp_w(&self, acc: &mut Ct, w: &PlainWeight) {
+        self.counter.bump(&self.counter.mult_cp, 1);
+        match (acc, w) {
+            (Ct::Fhe(a), PlainWeight::Fhe(c)) => a.mul_plain_cached_assign(c),
+            (Ct::Clear(a), PlainWeight::Clear(v)) => a.scalar_mul_assign(*v),
+            _ => panic!("MultCP operands do not match the engine backend"),
+        }
+    }
+
+    /// Build a frozen-weight scalar for this backend (the FHE path pays the
+    /// per-level NTT lifts once here).
+    pub fn scalar_weight(&self, v: i64) -> PlainWeight {
+        match &self.backend {
+            Backend::Fhe(f) => PlainWeight::Fhe(Arc::new(CachedPlaintext::scalar(v, &f.ctx))),
+            Backend::Clear(_) => PlainWeight::Clear(v),
+        }
+    }
+
+    pub fn add_cc(&self, acc: &mut Ct, other: &Ct) {
+        self.counter.bump(&self.counter.add_cc, 1);
+        match (acc, other) {
+            (Ct::Fhe(a), Ct::Fhe(b)) => a.add_assign(b),
+            (Ct::Clear(a), Ct::Clear(b)) => a.add_assign(b),
+            _ => panic!("AddCC operands do not match the engine backend"),
+        }
+    }
+
+    pub fn sub_cc(&self, acc: &mut Ct, other: &Ct) {
+        self.counter.bump(&self.counter.add_cc, 1);
+        match (acc, other) {
+            (Ct::Fhe(a), Ct::Fhe(b)) => a.sub_assign(b),
+            (Ct::Clear(a), Ct::Clear(b)) => a.sub_assign(b),
+            _ => panic!("SubCC operands do not match the engine backend"),
+        }
+    }
+
+    /// Build a reusable plaintext summand (`value` at every position) —
+    /// the FHE path pays its ring-sized plaintext once here, amortized
+    /// over every ciphertext it is added to ([`Self::add_plain_v`]).
+    pub fn plain_at(&self, value: i64, positions: &[usize]) -> PlainVector {
+        match &self.backend {
+            Backend::Fhe(f) => {
+                let params = &f.ctx.params;
+                let mut coeffs = vec![0i64; params.n];
+                for &p in positions {
+                    coeffs[p] = value;
+                }
+                PlainVector::Fhe(Plaintext { coeffs, t: params.t })
+            }
+            Backend::Clear(_) => PlainVector::Clear { value, positions: positions.to_vec() },
+        }
+    }
+
+    /// Uncounted plaintext add of a prebuilt summand (frozen biases — free
+    /// AddCP on both backends).
+    pub fn add_plain_v(&self, acc: &mut Ct, pv: &PlainVector) {
+        match (acc, pv) {
+            (Ct::Fhe(a), PlainVector::Fhe(pt)) => a.add_plain(pt, &self.fhe().ctx),
+            (Ct::Clear(a), PlainVector::Clear { value, positions }) => {
+                let t = a.t;
+                for &p in positions {
+                    let cur = a.get(p);
+                    a.set(p, (cur + canon(*value, t)) % t);
+                }
+            }
+            _ => panic!("AddCP operands do not match the engine backend"),
+        }
+    }
+
+    /// One-off [`Self::add_plain_v`] (ad-hoc plaintext summands).
+    pub fn add_plain_at(&self, acc: &mut Ct, value: i64, positions: &[usize]) {
+        self.add_plain_v(acc, &self.plain_at(value, positions));
+    }
+
+    /// Uncounted plaintext add of a frozen *weight* (constant polynomial)
+    /// — reuses the evaluation-form cache built at construction, so the
+    /// FHE path allocates nothing per call (frozen FC biases).
+    pub fn add_plain_w(&self, acc: &mut Ct, w: &PlainWeight) {
+        match (acc, w) {
+            (Ct::Fhe(a), PlainWeight::Fhe(c)) => a.add_plain(&c.pt, &self.fhe().ctx),
+            (Ct::Clear(a), PlainWeight::Clear(v)) => {
+                let t = a.t;
+                let cur = a.get(0);
+                a.set(0, (cur + canon(*v, t)) % t);
+            }
+            _ => panic!("AddCP operands do not match the engine backend"),
+        }
+    }
+
+    pub fn mod_switch_to(&self, ct: &mut Ct, level: usize) {
+        match ct {
+            Ct::Fhe(c) => {
+                if c.level > level {
+                    self.counter.bump(&self.counter.mod_switch, (c.level - level) as u64);
+                    c.mod_switch_to(level, &self.fhe().ctx);
+                }
+            }
+            // the clear mirror has no modulus chain; values are exact
+            Ct::Clear(_) => {}
+        }
     }
 
     // ---- the batched MAC engine --------------------------------------------
 
     /// Run a batch of MAC rows (`rows[j]` = output neuron `j`'s
-    /// `Σ_i term_i`) through the lazy-relinearization scratch engine,
-    /// fanned across `pool` with one warm [`crate::bgv::BgvScratch`] per
-    /// worker. Order-preserving: `out[j]` is row `j`'s accumulation, and a
-    /// panicking row propagates to the caller.
+    /// `Σ_i term_i`) through the backend. On FHE this is the
+    /// lazy-relinearization scratch engine fanned across `pool` with one
+    /// warm [`crate::bgv::BgvScratch`] per worker; on the clear backend the
+    /// rows evaluate inline (plain integer MACs need no fan-out).
+    /// Order-preserving: `out[j]` is row `j`'s accumulation.
     ///
-    /// Op accounting is identical to the per-term reference loop (one
-    /// MultCC/MultCP per term, `len−1` AddCC per row), plus one `relin` per
-    /// row containing a `Cc` term — versus one per `Cc` term on the
-    /// reference path, the `≥ in_dim/2` saving `benches/bgv_mac.rs` records.
-    pub fn mac_rows_on(&self, pool: &GlyphPool, rows: &[Vec<MacTerm>]) -> Vec<BgvCiphertext> {
-        self.mac_rows_inner(pool, rows, usize::MAX)
+    /// Op accounting is identical on both backends and to the per-term
+    /// reference loop (one MultCC/MultCP per term, `len−1` AddCC per row),
+    /// plus one `relin` per row containing a `Cc` term.
+    pub fn mac_rows_on(&self, pool: &GlyphPool, rows: &[Vec<Term>]) -> Vec<Ct> {
+        self.mac_rows_inner(Some(pool), rows, usize::MAX)
     }
 
     /// [`Self::mac_rows_on`] across the global pool.
-    pub fn mac_rows_many(&self, rows: &[Vec<MacTerm>]) -> Vec<BgvCiphertext> {
-        self.mac_rows_inner(GlyphPool::global(), rows, usize::MAX)
+    pub fn mac_rows_many(&self, rows: &[Vec<Term>]) -> Vec<Ct> {
+        self.mac_rows_inner(None, rows, usize::MAX)
     }
 
     /// [`Self::mac_rows_many`] with at most `limit` concurrent executors
     /// (the Table-5 thread-scaling sweep).
-    pub fn mac_rows_limit(&self, rows: &[Vec<MacTerm>], limit: usize) -> Vec<BgvCiphertext> {
-        self.mac_rows_inner(GlyphPool::global(), rows, limit)
+    pub fn mac_rows_limit(&self, rows: &[Vec<Term>], limit: usize) -> Vec<Ct> {
+        self.mac_rows_inner(None, rows, limit)
     }
 
-    fn mac_rows_inner(
-        &self,
-        pool: &GlyphPool,
-        rows: &[Vec<MacTerm>],
-        limit: usize,
-    ) -> Vec<BgvCiphertext> {
+    fn mac_rows_inner(&self, pool: Option<&GlyphPool>, rows: &[Vec<Term>], limit: usize) -> Vec<Ct> {
         let (mut cc, mut cp, mut adds, mut relins) = (0u64, 0u64, 0u64, 0u64);
         for row in rows {
-            let c = row.iter().filter(|t| matches!(t, MacTerm::Cc(..))).count() as u64;
+            let c = row.iter().filter(|t| matches!(t, Term::Cc(..))).count() as u64;
             cc += c;
             cp += row.len() as u64 - c;
             adds += row.len().saturating_sub(1) as u64;
@@ -179,40 +400,55 @@ impl GlyphEngine {
         self.counter.bump(&self.counter.mult_cp, cp);
         self.counter.bump(&self.counter.add_cc, adds);
         self.counter.bump(&self.counter.relin, relins);
-        // the closure captures only Sync pieces (key material + rows)
-        let rlk = &self.rlk;
-        let ctx: &BgvContext = &self.ctx;
-        pool.map_limit_with((0..rows.len()).collect(), limit, |j, ws| {
-            mac_row(&mut ws.bgv, &rows[j], rlk, ctx)
-        })
-    }
-
-    pub fn mult_cp(&self, acc: &mut BgvCiphertext, pt: &Plaintext) {
-        self.counter.bump(&self.counter.mult_cp, 1);
-        acc.mul_plain_assign(pt, &self.ctx);
-    }
-
-    /// MultCP against a cached evaluation-form weight (counted identically
-    /// to [`Self::mult_cp`]; pure pointwise, no per-call NTT).
-    pub fn mult_cp_cached(&self, acc: &mut BgvCiphertext, w: &CachedPlaintext) {
-        self.counter.bump(&self.counter.mult_cp, 1);
-        acc.mul_plain_cached_assign(w);
-    }
-
-    pub fn add_cc(&self, acc: &mut BgvCiphertext, other: &BgvCiphertext) {
-        self.counter.bump(&self.counter.add_cc, 1);
-        acc.add_assign(other);
-    }
-
-    pub fn sub_cc(&self, acc: &mut BgvCiphertext, other: &BgvCiphertext) {
-        self.counter.bump(&self.counter.add_cc, 1);
-        acc.sub_assign(other);
-    }
-
-    pub fn mod_switch_to(&self, ct: &mut BgvCiphertext, level: usize) {
-        if ct.level > level {
-            self.counter.bump(&self.counter.mod_switch, (ct.level - level) as u64);
-            ct.mod_switch_to(level, &self.ctx);
+        match &self.backend {
+            Backend::Fhe(f) => {
+                let bgv_rows: Vec<Vec<MacTerm>> = rows
+                    .iter()
+                    .map(|row| {
+                        row.iter()
+                            .map(|t| match t {
+                                Term::Cc(a, b) => MacTerm::Cc(a.fhe(), b.fhe()),
+                                Term::Cp(x, w) => MacTerm::Cp(x.fhe(), w.fhe_cached()),
+                            })
+                            .collect()
+                    })
+                    .collect();
+                // the closure captures only Sync pieces (key material + rows)
+                let rlk = &f.rlk;
+                let ctx: &BgvContext = &f.ctx;
+                let pool = pool.unwrap_or_else(GlyphPool::global);
+                pool.map_limit_with((0..rows.len()).collect(), limit, |j, ws| {
+                    mac_row(&mut ws.bgv, &bgv_rows[j], rlk, ctx)
+                })
+                .into_iter()
+                .map(Ct::Fhe)
+                .collect()
+            }
+            Backend::Clear(_) => rows
+                .iter()
+                .map(|row| {
+                    let mut acc: Option<ClearCt> = None;
+                    for term in row {
+                        let prod = match term {
+                            Term::Cc(a, b) => {
+                                let mut p = a.clear().clone();
+                                p.mul_assign(b.clear());
+                                p
+                            }
+                            Term::Cp(x, w) => {
+                                let mut p = x.clear().clone();
+                                p.scalar_mul_assign(w.value());
+                                p
+                            }
+                        };
+                        match &mut acc {
+                            None => acc = Some(prod),
+                            Some(a) => a.add_assign(&prod),
+                        }
+                    }
+                    Ct::Clear(acc.expect("MAC rows are non-empty"))
+                })
+                .collect(),
         }
     }
 
@@ -222,123 +458,221 @@ impl GlyphEngine {
     /// deliver the two's-complement bits (MSB first) on the TFHE key.
     /// `pre_shift` scales the value up first so that bit 7 of the delivered
     /// byte is bit `log2(t)−1−pre_shift` of the stored fixed-point value.
-    pub fn switch_to_bits(
-        &self,
-        ct: &BgvCiphertext,
-        positions: &[usize],
-        pre_shift: u32,
-    ) -> Vec<Vec<LweCiphertext>> {
+    pub fn switch_to_bits(&self, ct: &Ct, positions: &[usize], pre_shift: u32) -> Vec<Vec<Bit>> {
         self.switch_down_many(&[ct], positions, pre_shift)
             .pop()
             .expect("one ciphertext in, one out")
     }
 
     /// Batched BGV→TFHE: every ciphertext's lanes × bits of a whole layer
-    /// boundary cross in ONE pool fan-out (the per-worker `SwitchScratch`
-    /// extract path + one `pbs_many` digit extraction). Result is
-    /// `[ct][lane][bit]`, bit-identical to per-ciphertext
-    /// [`Self::switch_to_bits`] calls and to the retained serial reference
-    /// (`serial_switch = true`). Op accounting is identical on every path:
-    /// one `switch_b2t` per ciphertext, one `extract_lanes` per position,
+    /// boundary cross in ONE pool fan-out on the FHE path, and evaluate
+    /// inline on the clear path (`quantize_plain` of the pre-shifted
+    /// coefficient, then the two's-complement bit split). Result is
+    /// `[ct][lane][bit]`. Op accounting is identical on every path: one
+    /// `switch_b2t` per ciphertext, one `extract_lanes` per position,
     /// [`crate::switch::SWITCH_BITS`] `extract_pbs` per lane.
     pub fn switch_down_many(
         &self,
-        cts: &[&BgvCiphertext],
+        cts: &[&Ct],
         positions: &[usize],
         pre_shift: u32,
-    ) -> Vec<Vec<Vec<LweCiphertext>>> {
+    ) -> Vec<Vec<Vec<Bit>>> {
         let lanes = (cts.len() * positions.len()) as u64;
         self.counter.bump(&self.counter.switch_b2t, cts.len() as u64);
         self.counter.bump(&self.counter.extract_lanes, lanes);
         self.counter.bump(&self.counter.extract_pbs, lanes * crate::switch::SWITCH_BITS as u64);
-        // the pre-shift rides inside the extractor's prepare pass (one clone
-        // per ciphertext; exact RNS scalar products, so bit-identical to
-        // scaling a separate copy first)
-        if self.serial_switch {
-            cts.iter()
-                .map(|ct| {
-                    self.fwd_switch
-                        .to_bits_serial(ct, positions, &self.extract_ck, pre_shift)
+        match &self.backend {
+            Backend::Fhe(f) => {
+                let fhe_cts: Vec<&BgvCiphertext> = cts.iter().map(|c| c.fhe()).collect();
+                // the pre-shift rides inside the extractor's prepare pass
+                // (one clone per ciphertext; exact RNS scalar products, so
+                // bit-identical to scaling a separate copy first)
+                let raw: Vec<Vec<Vec<LweCiphertext>>> = if self.serial_switch {
+                    fhe_cts
+                        .iter()
+                        .map(|ct| {
+                            f.fwd_switch
+                                .to_bits_serial(ct, positions, &f.extract_ck, pre_shift)
+                                .unwrap_or_else(|e| {
+                                    panic!("BGV→TFHE switch rejected its positions: {e}")
+                                })
+                        })
+                        .collect()
+                } else {
+                    f.fwd_switch
+                        .to_bits_many(&fhe_cts, positions, &f.extract_ck, pre_shift)
                         .unwrap_or_else(|e| panic!("BGV→TFHE switch rejected its positions: {e}"))
+                };
+                raw.into_iter()
+                    .map(|ct| {
+                        ct.into_iter()
+                            .map(|lane| lane.into_iter().map(Bit::Fhe).collect())
+                            .collect()
+                    })
+                    .collect()
+            }
+            Backend::Clear(cb) => cts
+                .iter()
+                .map(|ct| {
+                    positions
+                        .iter()
+                        .map(|&p| {
+                            assert!(
+                                p < cb.params.n,
+                                "switch position {p} out of range: the ciphertext has {} \
+                                 coefficient slots",
+                                cb.params.n
+                            );
+                            cb.value_bits(cb.quantize(ct.clear().get(p), pre_shift))
+                        })
+                        .collect()
                 })
-                .collect()
-        } else {
-            self.fwd_switch
-                .to_bits_many(cts, positions, &self.extract_ck, pre_shift)
-                .unwrap_or_else(|e| panic!("BGV→TFHE switch rejected its positions: {e}"))
+                .collect(),
         }
     }
 
     /// TFHE→BGV: pack one recomposed LWE per lane at the given positions and
     /// raise to a fresh BGV ciphertext holding the 8-bit values at scale 1.
-    pub fn switch_to_bgv(&self, lanes: &[LweCiphertext], positions: &[usize]) -> BgvCiphertext {
+    pub fn switch_to_bgv(&self, lanes: &[Bit], positions: &[usize]) -> Ct {
         self.switch_up_many(&[(lanes, positions)]).pop().expect("one group in, one out")
     }
 
-    /// Batched TFHE→BGV: every lane group's packing key switch fans across
-    /// the pool (per-worker `RepackScratch`), the modulus raises run
-    /// serially in submission order (deterministic authority RNG draws).
-    /// Bit-identical to per-group [`Self::switch_to_bgv`] calls; op
+    /// Batched TFHE→BGV. FHE path: every lane group's packing key switch
+    /// fans across the pool, the modulus raises run serially in submission
+    /// order (deterministic authority RNG draws). Clear path: each lane's
+    /// exact phase is read on the 2^24 grid, mirroring the raise. Op
     /// accounting is one `switch_t2b` + one `refresh` per group and one
-    /// `repack_lanes` per packed LWE on every path.
-    pub fn switch_up_many(
-        &self,
-        groups: &[(&[LweCiphertext], &[usize])],
-    ) -> Vec<BgvCiphertext> {
+    /// `repack_lanes` per packed lane on every path.
+    pub fn switch_up_many(&self, groups: &[(&[Bit], &[usize])]) -> Vec<Ct> {
         let lanes: u64 = groups.iter().map(|(l, _)| l.len() as u64).sum();
         self.counter.bump(&self.counter.switch_t2b, groups.len() as u64);
         self.counter.bump(&self.counter.refresh, groups.len() as u64);
         self.counter.bump(&self.counter.repack_lanes, lanes);
-        if self.serial_switch {
-            groups
+        match &self.backend {
+            Backend::Fhe(f) => {
+                // borrow the lanes out of the Bit wrappers — no clones
+                let fhe_groups: Vec<(Vec<&LweCiphertext>, &[usize])> = groups
+                    .iter()
+                    .map(|(lanes, positions)| {
+                        (lanes.iter().map(|b| b.fhe()).collect(), *positions)
+                    })
+                    .collect();
+                if self.serial_switch {
+                    fhe_groups
+                        .iter()
+                        .map(|(lanes, positions)| {
+                            Ct::Fhe(f.bwd_switch.pack_at_and_raise(lanes, positions, &f.auth))
+                        })
+                        .collect()
+                } else {
+                    let refs: Vec<(&[&LweCiphertext], &[usize])> =
+                        fhe_groups.iter().map(|(l, p)| (l.as_slice(), *p)).collect();
+                    f.bwd_switch
+                        .pack_and_raise_many(&refs, &f.auth)
+                        .into_iter()
+                        .map(Ct::Fhe)
+                        .collect()
+                }
+            }
+            Backend::Clear(cb) => groups
                 .iter()
                 .map(|(lanes, positions)| {
-                    self.bwd_switch.pack_at_and_raise(lanes, positions, &self.auth)
+                    let t = cb.params.t;
+                    let mut out = ClearCt::zero(cb.params.n, t);
+                    for (lane, &p) in lanes.iter().zip(positions.iter()) {
+                        out.set(p, canon(cb.raise_value(lane.phase()), t));
+                    }
+                    Ct::Clear(out)
                 })
-                .collect()
-        } else {
-            self.bwd_switch.pack_and_raise_many(groups, &self.auth)
+                .collect(),
         }
     }
 
     // ---- counted TFHE gates -------------------------------------------------
 
-    pub fn gate_not(&self, c: &LweCiphertext) -> LweCiphertext {
+    pub fn gate_not(&self, c: &Bit) -> Bit {
         // NOT is bootstrap-free (paper Alg. 1); not counted as an Act gate.
-        self.gate_ck.not(c)
+        match c {
+            Bit::Fhe(c) => Bit::Fhe(self.fhe().gate_ck.not(c)),
+            Bit::Clear(p) => Bit::Clear(p.wrapping_neg()),
+        }
     }
 
-    pub fn gate_and(&self, a: &LweCiphertext, b: &LweCiphertext) -> LweCiphertext {
+    pub fn gate_and(&self, a: &Bit, b: &Bit) -> Bit {
         self.counter.bump(&self.counter.act_gates, 1);
-        self.gate_ck.and(a, b)
+        match (a, b) {
+            (Bit::Fhe(a), Bit::Fhe(b)) => Bit::Fhe(self.fhe().gate_ck.and(a, b)),
+            (Bit::Clear(a), Bit::Clear(b)) => {
+                Bit::Clear(ClearBackend::and_phase(*a, *b, crate::tfhe::MU_BIT))
+            }
+            _ => panic!("AND operands do not match the engine backend"),
+        }
     }
 
-    pub fn gate_and_weighted(&self, a: &LweCiphertext, b: &LweCiphertext, pos: u32) -> LweCiphertext {
+    pub fn gate_and_weighted(&self, a: &Bit, b: &Bit, pos: u32) -> Bit {
         self.counter.bump(&self.counter.act_gates, 1);
-        self.gate_ck.and_weighted_raw(a, b, pos)
+        match (a, b) {
+            (Bit::Fhe(a), Bit::Fhe(b)) => Bit::Fhe(self.fhe().gate_ck.and_weighted_raw(a, b, pos)),
+            (Bit::Clear(a), Bit::Clear(b)) => {
+                Bit::Clear(ClearBackend::and_weighted_phase(*a, *b, pos))
+            }
+            _ => panic!("weighted-AND operands do not match the engine backend"),
+        }
     }
 
     /// Batched [`Self::gate_and_weighted`]: every `(a, b, pos)` job is one
-    /// gate bootstrap, fanned across the global `GlyphPool` (order-
-    /// preserving, same ciphertexts as the sequential loop). The activation
-    /// layers push all lanes × bits of a tensor through this at once.
-    pub fn gate_and_weighted_many(
-        &self,
-        jobs: &[(&LweCiphertext, &LweCiphertext, u32)],
-    ) -> Vec<LweCiphertext> {
+    /// gate bootstrap. FHE fans across the global `GlyphPool`; the clear
+    /// path evaluates inline. The activation layers push all lanes × bits
+    /// of a tensor through this at once.
+    pub fn gate_and_weighted_many(&self, jobs: &[(&Bit, &Bit, u32)]) -> Vec<Bit> {
         self.counter.bump(&self.counter.act_gates, jobs.len() as u64);
-        self.gate_ck.and_weighted_raw_many(jobs)
+        match &self.backend {
+            Backend::Fhe(f) => {
+                let fhe_jobs: Vec<(&LweCiphertext, &LweCiphertext, u32)> =
+                    jobs.iter().map(|(a, b, p)| (a.fhe(), b.fhe(), *p)).collect();
+                f.gate_ck.and_weighted_raw_many(&fhe_jobs).into_iter().map(Bit::Fhe).collect()
+            }
+            Backend::Clear(_) => jobs
+                .iter()
+                .map(|(a, b, p)| Bit::Clear(ClearBackend::and_weighted_phase(a.phase(), b.phase(), *p)))
+                .collect(),
+        }
     }
 
-    pub fn gate_mux(&self, s: &LweCiphertext, d1: &LweCiphertext, d0: &LweCiphertext) -> LweCiphertext {
+    pub fn gate_mux(&self, s: &Bit, d1: &Bit, d0: &Bit) -> Bit {
         self.counter.bump(&self.counter.act_gates, 2); // 2 bootstraps on the critical path
-        self.gate_ck.mux(s, d1, d0)
+        match (s, d1, d0) {
+            (Bit::Fhe(s), Bit::Fhe(d1), Bit::Fhe(d0)) => Bit::Fhe(self.fhe().gate_ck.mux(s, d1, d0)),
+            (Bit::Clear(s), Bit::Clear(d1), Bit::Clear(d0)) => {
+                Bit::Clear(ClearBackend::mux_phase(*s, *d1, *d0))
+            }
+            _ => panic!("MUX operands do not match the engine backend"),
+        }
+    }
+
+    /// A trivial (noiseless) gate-encoded boolean on this backend — the
+    /// constant-TRUE operand of identity recompositions.
+    pub fn trivial_bit(&self, b: bool) -> Bit {
+        let mu = crate::tfhe::encode_bit(b);
+        match &self.backend {
+            Backend::Fhe(f) => Bit::Fhe(LweCiphertext::trivial(mu, f.gate_ck.params.n)),
+            Backend::Clear(_) => Bit::Clear(mu),
+        }
+    }
+
+    /// A trivial zero in the weighted (recomposed, extracted-key) domain.
+    pub fn trivial_weighted_zero(&self) -> Bit {
+        match &self.backend {
+            Backend::Fhe(f) => Bit::Fhe(LweCiphertext::trivial(0, f.gate_ck.params.big_n)),
+            Backend::Clear(_) => Bit::Clear(0),
+        }
     }
 
     /// Dimension of LWEs under the gate ring's extracted key (the
-    /// recomposition domain consumed by the packing switch).
+    /// recomposition domain consumed by the packing switch). FHE backend
+    /// only.
     pub fn gate_ext_dim(&self) -> usize {
-        self.gate_ck.params.big_n
+        self.fhe().gate_ck.params.big_n
     }
 }
 
@@ -353,6 +687,17 @@ mod tests {
         let ct = client.encrypt_batch(&vals, 0);
         assert_eq!(client.decrypt_batch(&ct, 4, 0), vals);
         assert_eq!(engine.counter.snapshot().hop(), 0);
+        assert_eq!(engine.backend_name(), "fhe");
+    }
+
+    #[test]
+    fn clear_setup_and_roundtrip() {
+        let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 4);
+        let vals = vec![1i64, -2, 3, -4];
+        let ct = codec.encrypt_batch(&vals, 2);
+        assert_eq!(codec.decrypt_batch(&ct, 4, 2), vals);
+        assert_eq!(engine.backend_name(), "clear");
+        assert_eq!(engine.frac_bits(), 8);
     }
 
     #[test]
@@ -369,6 +714,19 @@ mod tests {
     }
 
     #[test]
+    fn clear_counted_mac_mirrors_fhe() {
+        let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+        let mut w = codec.encrypt_scalar(3);
+        let x = codec.encrypt_batch(&[5, -5], 0);
+        engine.mult_cc(&mut w, &x);
+        let y = codec.encrypt_batch(&[1, 1], 0);
+        engine.add_cc(&mut w, &y);
+        assert_eq!(codec.decrypt_batch(&w, 2, 0), vec![16, -14]);
+        let s = engine.counter.snapshot();
+        assert_eq!((s.mult_cc, s.add_cc, s.relin), (1, 1, 1));
+    }
+
+    #[test]
     fn mac_rows_on_a_small_pool_preserves_submission_order() {
         // More rows than pool workers: results must come back in
         // submission order regardless of which worker ran which row.
@@ -377,8 +735,7 @@ mod tests {
         let ws: Vec<_> = (0..n_rows).map(|i| client.encrypt_scalar(i as i64 - 4)).collect();
         let xs: Vec<_> =
             (0..n_rows).map(|i| client.encrypt_batch(&[i as i64 + 1, -(i as i64)], 0)).collect();
-        let rows: Vec<Vec<MacTerm>> =
-            (0..n_rows).map(|i| vec![MacTerm::Cc(&ws[i], &xs[i])]).collect();
+        let rows: Vec<Vec<Term>> = (0..n_rows).map(|i| vec![Term::Cc(&ws[i], &xs[i])]).collect();
         let pool = GlyphPool::new(2);
         let out = engine.mac_rows_on(&pool, &rows);
         assert_eq!(out.len(), n_rows);
@@ -397,14 +754,14 @@ mod tests {
         let mut low = client.encrypt_batch(&[3, 4], 0);
         // level-mismatched operand: the bad row panics (in release mode via
         // the limb index, in debug via the level assert)
-        low.mod_switch_down(&engine.ctx);
+        low.fhe_mut().mod_switch_down(&engine.fhe().ctx);
         let pool = GlyphPool::new(2);
-        let rows: Vec<Vec<MacTerm>> = (0..6)
+        let rows: Vec<Vec<Term>> = (0..6)
             .map(|i| {
                 if i == 3 {
-                    vec![MacTerm::Cc(&good_w, &low)]
+                    vec![Term::Cc(&good_w, &low)]
                 } else {
-                    vec![MacTerm::Cc(&good_w, &good_x)]
+                    vec![Term::Cc(&good_w, &good_x)]
                 }
             })
             .collect();
@@ -422,7 +779,7 @@ mod tests {
         let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 47);
         let ws: Vec<_> = (0..5).map(|i| client.encrypt_scalar(i as i64)).collect();
         let x = client.encrypt_batch(&[1, -1], 0);
-        let row: Vec<MacTerm> = ws.iter().map(|w| MacTerm::Cc(w, &x)).collect();
+        let row: Vec<Term> = ws.iter().map(|w| Term::Cc(w, &x)).collect();
         let before = engine.counter.snapshot();
         let _ = engine.mac_rows_many(&[row]);
         let lazy = engine.counter.snapshot().since(&before);
@@ -447,14 +804,11 @@ mod tests {
         let pre = engine.frac_bits() - 4;
         let bits = engine.switch_to_bits(&ct, &[0, 1, 2], pre);
         // recompose through weighted ANDs with TRUE (identity) and return
-        let truth = crate::tfhe::LweCiphertext::trivial(
-            crate::tfhe::encode_bit(true),
-            engine.gate_ck.params.n,
-        );
-        let lanes: Vec<LweCiphertext> = bits
+        let truth = engine.trivial_bit(true);
+        let lanes: Vec<Bit> = bits
             .iter()
             .map(|lane_bits| {
-                let mut acc: Option<LweCiphertext> = None;
+                let mut acc: Option<Bit> = None;
                 for (i, b) in lane_bits.iter().enumerate() {
                     let w = engine.gate_and_weighted(b, &truth, crate::switch::extract::bit_position(i));
                     match &mut acc {
@@ -478,6 +832,40 @@ mod tests {
     }
 
     #[test]
+    fn clear_switch_round_trip_and_counters_match_fhe_shape() {
+        // the clear mirror of the test above: identical values, identical
+        // counter deltas, identical results — no key material involved.
+        let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 3);
+        let vals = vec![9i64, -14, 100];
+        let ct = codec.encrypt_batch(&vals, 4);
+        let pre = engine.frac_bits() - 4;
+        let bits = engine.switch_to_bits(&ct, &[0, 1, 2], pre);
+        let truth = engine.trivial_bit(true);
+        let lanes: Vec<Bit> = bits
+            .iter()
+            .map(|lane_bits| {
+                let mut acc: Option<Bit> = None;
+                for (i, b) in lane_bits.iter().enumerate() {
+                    let w = engine.gate_and_weighted(b, &truth, crate::switch::extract::bit_position(i));
+                    match &mut acc {
+                        None => acc = Some(w),
+                        Some(a) => a.add_assign(&w),
+                    }
+                }
+                acc.unwrap()
+            })
+            .collect();
+        let out = engine.switch_to_bgv(&lanes, &[0, 1, 2]);
+        assert_eq!(codec.decrypt_batch(&out, 3, 0), vals);
+        let s = engine.counter.snapshot();
+        assert_eq!(
+            (s.switch_b2t, s.switch_t2b, s.extract_pbs, s.act_gates, s.refresh),
+            (1, 1, 24, 24, 1)
+        );
+        assert_eq!((s.extract_lanes, s.repack_lanes), (3, 3));
+    }
+
+    #[test]
     fn batched_switch_counts_like_the_serial_reference() {
         // switch_down_many/switch_up_many must account exactly like the
         // equivalent per-ciphertext serial calls, on both execution paths.
@@ -497,8 +885,8 @@ mod tests {
                 (2, 4, 32),
                 "serial={serial}"
             );
-            let lanes0 = vec![LweCiphertext::trivial(0, engine.gate_ext_dim()); 2];
-            let lanes1 = vec![LweCiphertext::trivial(0, engine.gate_ext_dim()); 3];
+            let lanes0 = vec![engine.trivial_weighted_zero(); 2];
+            let lanes1 = vec![engine.trivial_weighted_zero(); 3];
             let p0 = [0usize, 1];
             let p1 = [0usize, 1, 2];
             let before = engine.counter.snapshot();

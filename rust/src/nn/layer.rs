@@ -9,9 +9,9 @@
 //! totals of a compiled plan are asserted against live `OpCounter`
 //! snapshots by the plan/execution consistency test.
 
+use super::backend::Ct;
 use super::engine::GlyphEngine;
 use super::tensor::EncTensor;
-use crate::bgv::BgvCiphertext;
 use crate::coordinator::scheduler::{LayerKind, StepOps};
 use crate::switch::SWITCH_BITS;
 
@@ -28,7 +28,7 @@ pub enum LayerState {
 }
 
 /// Gradient accumulator produced by a trainable layer: `grads[out][in]`.
-pub type LayerGrads = Vec<Vec<BgvCiphertext>>;
+pub type LayerGrads = Vec<Vec<Ct>>;
 
 /// What a unit contributes to the compiled plan.
 #[derive(Clone, Debug)]

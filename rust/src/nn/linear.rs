@@ -1,54 +1,56 @@
-//! Fully-connected layers over encrypted tensors.
+//! Fully-connected layers over encrypted (or clear-mirrored) tensors.
 //!
-//! Weights are either encrypted constant polynomials (MultCC MACs — the
+//! Weights are either constant-polynomial ciphertexts (MultCC MACs — the
 //! FHESGD/Glyph trainable layers) or plaintext scalars (MultCP — the
-//! transfer-learning frozen layers). The backward pass consumes
-//! reverse-packed error tensors; gradients fall out of the negacyclic
-//! convolution trick at coefficient `batch−1` (DESIGN.md §2.1) and are
-//! re-quantized through the cryptosystem switch before the SGD update —
-//! exactly the `FC-gradient … BGV-TFHE` rows of the paper's Table 3.
+//! transfer-learning frozen layers), on whichever backend the engine runs.
+//! The backward pass consumes reverse-packed error tensors; gradients fall
+//! out of the negacyclic convolution trick at coefficient `batch−1`
+//! (DESIGN.md §2.1) and are re-quantized through the cryptosystem switch
+//! before the SGD update — exactly the `FC-gradient … BGV-TFHE` rows of the
+//! paper's Table 3. The clear backend mirrors every one of those steps
+//! (including the gradient's `∇ >> grad_shift` rounding) bit for bit.
 
+use super::backend::{Bit, Codec, Ct, PlainWeight, Term};
 use super::engine::GlyphEngine;
 use super::layer::{
     fc_error_ops, fc_forward_ops, fc_gradient_ops, Layer, LayerGrads, LayerPlanEntry, LayerState,
 };
 use super::tensor::{EncTensor, PackOrder};
-use crate::bgv::{BgvCiphertext, BgvContext, CachedPlaintext, MacTerm};
 use crate::coordinator::scheduler::LayerKind;
 use crate::switch::extract::bit_position;
-use crate::tfhe::LweCiphertext;
 use std::collections::HashMap;
-use std::sync::Arc;
 
-/// A layer weight: encrypted (trainable) or plaintext (frozen). Plaintext
-/// weights carry their per-level NTT-domain lifts ([`CachedPlaintext`],
-/// built once at construction and shared across equal weight values), so
-/// every MultCP against them is a pure pointwise pass.
+/// A layer weight: trainable ciphertext or frozen plaintext. Frozen FHE
+/// weights carry their per-level NTT-domain lifts
+/// ([`crate::bgv::CachedPlaintext`], built once at construction and shared
+/// across equal weight values), so every MultCP against them is a pure
+/// pointwise pass; frozen clear weights are bare scalars.
 pub enum Weight {
-    Enc(BgvCiphertext),
-    Plain(Arc<CachedPlaintext>),
+    Enc(Ct),
+    Plain(PlainWeight),
 }
 
 impl Weight {
     /// The MAC-row term multiplying this weight with `x`.
-    pub fn term<'a>(&'a self, x: &'a BgvCiphertext) -> MacTerm<'a> {
+    pub fn term<'a>(&'a self, x: &'a Ct) -> Term<'a> {
         match self {
-            Weight::Enc(wct) => MacTerm::Cc(wct, x),
-            Weight::Plain(wpt) => MacTerm::Cp(x, wpt.as_ref()),
+            Weight::Enc(wct) => Term::Cc(wct, x),
+            Weight::Plain(wpt) => Term::Cp(x, wpt),
         }
     }
 }
 
-/// One cached lift per *distinct* weight value, shared within a layer:
-/// frozen weights are 8-bit integers, so the cache is bounded at ≤256
-/// multi-level lifts per layer instead of one per weight (a paper-scale
-/// frozen layer would otherwise pay ~100KB + a full NTT set per weight).
+/// One frozen weight per *distinct* value, shared within a layer: frozen
+/// weights are 8-bit integers, so the cache is bounded at ≤256 entries per
+/// layer instead of one per weight (on the FHE backend a paper-scale frozen
+/// layer would otherwise pay ~100KB + a full NTT set per weight; the clear
+/// backend shares the scalars for symmetry).
 pub(crate) fn shared_plain(
-    cache: &mut HashMap<i64, Arc<CachedPlaintext>>,
+    cache: &mut HashMap<i64, PlainWeight>,
     v: i64,
-    ctx: &BgvContext,
-) -> Arc<CachedPlaintext> {
-    cache.entry(v).or_insert_with(|| Arc::new(CachedPlaintext::scalar(v, ctx))).clone()
+    engine: &GlyphEngine,
+) -> PlainWeight {
+    cache.entry(v).or_insert_with(|| engine.scalar_weight(v)).clone()
 }
 
 /// A fully-connected layer `u = W·x (+ b)`.
@@ -63,12 +65,9 @@ pub struct FcLayer {
 }
 
 impl FcLayer {
-    /// Encrypted trainable layer from plain 8-bit initial weights.
-    pub fn new_encrypted(
-        init: &[Vec<i64>],
-        client: &mut super::engine::ClientKeys,
-        out_shift: u32,
-    ) -> Self {
+    /// Trainable layer from plain 8-bit initial weights, encoded under the
+    /// backend's codec (encrypted on FHE, mirrored on clear).
+    pub fn new_encrypted(init: &[Vec<i64>], client: &mut dyn Codec, out_shift: u32) -> Self {
         let out_dim = init.len();
         let in_dim = init[0].len();
         let w = init
@@ -78,17 +77,16 @@ impl FcLayer {
         FcLayer { w, bias: None, in_dim, out_dim, out_shift }
     }
 
-    /// Frozen plaintext layer (transfer learning); caches one
-    /// evaluation-form lift per distinct weight value, shared across the
-    /// matrix.
-    pub fn new_plain(init: &[Vec<i64>], ctx: &BgvContext, out_shift: u32) -> Self {
+    /// Frozen plaintext layer (transfer learning); caches one weight per
+    /// distinct value, shared across the matrix.
+    pub fn new_plain(init: &[Vec<i64>], engine: &GlyphEngine, out_shift: u32) -> Self {
         let out_dim = init.len();
         let in_dim = init[0].len();
         let mut cache = HashMap::new();
         let w = init
             .iter()
             .map(|row| {
-                row.iter().map(|&v| Weight::Plain(shared_plain(&mut cache, v, ctx))).collect()
+                row.iter().map(|&v| Weight::Plain(shared_plain(&mut cache, v, engine))).collect()
             })
             .collect();
         FcLayer { w, bias: None, in_dim, out_dim, out_shift }
@@ -100,7 +98,7 @@ impl FcLayer {
     /// are 8-bit integers at scale 0).
     pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
         assert_eq!(x.len(), self.in_dim);
-        let rows: Vec<Vec<MacTerm>> = (0..self.out_dim)
+        let rows: Vec<Vec<Term>> = (0..self.out_dim)
             .map(|j| (0..self.in_dim).map(|i| self.w[j][i].term(&x.cts[i])).collect())
             .collect();
         let mut cts = engine.mac_rows_many(&rows);
@@ -108,7 +106,7 @@ impl FcLayer {
             for (j, u) in cts.iter_mut().enumerate() {
                 match &bias[j] {
                     Weight::Enc(bct) => engine.add_cc(u, bct),
-                    Weight::Plain(bpt) => u.add_plain(&bpt.pt, &engine.ctx),
+                    Weight::Plain(bpt) => engine.add_plain_w(u, bpt),
                 }
             }
         }
@@ -121,7 +119,7 @@ impl FcLayer {
     pub fn backward_error(&self, delta: &EncTensor, engine: &GlyphEngine) -> EncTensor {
         assert_eq!(delta.len(), self.out_dim);
         assert_eq!(delta.order, PackOrder::Reversed);
-        let rows: Vec<Vec<MacTerm>> = (0..self.in_dim)
+        let rows: Vec<Vec<Term>> = (0..self.in_dim)
             .map(|i| (0..self.out_dim).map(|j| self.w[j][i].term(&delta.cts[j])).collect())
             .collect();
         let cts = engine.mac_rows_many(&rows);
@@ -132,13 +130,11 @@ impl FcLayer {
     /// forward-packed x × reverse-packed δ leaves the batch sum at
     /// coefficient `batch−1`. All `out·in` products fan across the pool as
     /// single-term rows.
-    pub fn gradients(&self, x: &EncTensor, delta: &EncTensor, engine: &GlyphEngine) -> Vec<Vec<BgvCiphertext>> {
+    pub fn gradients(&self, x: &EncTensor, delta: &EncTensor, engine: &GlyphEngine) -> LayerGrads {
         assert_eq!(x.order, PackOrder::Forward);
         assert_eq!(delta.order, PackOrder::Reversed);
-        let rows: Vec<Vec<MacTerm>> = (0..self.out_dim)
-            .flat_map(|j| {
-                (0..self.in_dim).map(move |i| vec![MacTerm::Cc(&x.cts[i], &delta.cts[j])])
-            })
+        let rows: Vec<Vec<Term>> = (0..self.out_dim)
+            .flat_map(|j| (0..self.in_dim).map(move |i| vec![Term::Cc(&x.cts[i], &delta.cts[j])]))
             .collect();
         let mut flat = engine.mac_rows_many(&rows).into_iter();
         (0..self.out_dim)
@@ -155,13 +151,8 @@ impl FcLayer {
     /// `switch_down_many` extracts every trainable weight's batch-sum bits,
     /// one `gate_and_weighted_many` recomposes all weights × 8 bits, and ONE
     /// `switch_up_many` packs/raises every weight's gradient step — same
-    /// ciphertexts and op counts as the per-weight serial loop.
-    pub fn apply_gradients(
-        &mut self,
-        grads: &[Vec<BgvCiphertext>],
-        grad_shift: u32,
-        engine: &GlyphEngine,
-    ) {
+    /// values and op counts as the per-weight serial loop, on both backends.
+    pub fn apply_gradients(&mut self, grads: &[Vec<Ct>], grad_shift: u32, engine: &GlyphEngine) {
         let frac = engine.frac_bits();
         assert!(grad_shift <= frac);
         let pre_shift = frac - grad_shift;
@@ -169,7 +160,7 @@ impl FcLayer {
         // 1. bits of every batch-summed gradient (position batch−1), one
         //    pooled down-switch over all trainable weights
         let mut targets: Vec<(usize, usize)> = Vec::new();
-        let mut g_refs: Vec<&BgvCiphertext> = Vec::new();
+        let mut g_refs: Vec<&Ct> = Vec::new();
         for (j, row) in grads.iter().enumerate() {
             for (i, g) in row.iter().enumerate() {
                 if matches!(self.w[j][i], Weight::Enc(_)) {
@@ -181,25 +172,23 @@ impl FcLayer {
         if targets.is_empty() {
             return;
         }
-        let all_bits: Vec<Vec<LweCiphertext>> = engine
+        let all_bits: Vec<Vec<Bit>> = engine
             .switch_down_many(&g_refs, &sum_pos, pre_shift)
             .into_iter()
             .map(|mut lanes| lanes.swap_remove(0))
             .collect();
         // 2. identity recomposition at the weighted positions — one pooled
         //    fan-out over all weights × bits
-        let truth = LweCiphertext::trivial(crate::tfhe::encode_bit(true), engine.gate_ck.params.n);
-        let jobs: Vec<(&LweCiphertext, &LweCiphertext, u32)> = all_bits
+        let truth = engine.trivial_bit(true);
+        let jobs: Vec<(&Bit, &Bit, u32)> = all_bits
             .iter()
-            .flat_map(|bits| {
-                bits.iter().enumerate().map(|(bi, b)| (b, &truth, bit_position(bi)))
-            })
+            .flat_map(|bits| bits.iter().enumerate().map(|(bi, b)| (b, &truth, bit_position(bi))))
             .collect();
         let weighted = engine.gate_and_weighted_many(&jobs);
         // 3. per weight: sum its bit contributions into one recomposed LWE,
         //    then raise every step in one batched up-switch and subtract
         let bits_per = all_bits[0].len();
-        let accs: Vec<LweCiphertext> = weighted
+        let accs: Vec<Bit> = weighted
             .chunks(bits_per)
             .map(|chunk| {
                 let mut acc = chunk[0].clone();
@@ -211,7 +200,7 @@ impl FcLayer {
             .collect();
         // fresh constant-poly gradient steps at coefficient 0
         let zero_pos = [0usize];
-        let groups: Vec<(&[LweCiphertext], &[usize])> =
+        let groups: Vec<(&[Bit], &[usize])> =
             accs.iter().map(|a| (std::slice::from_ref(a), &zero_pos[..])).collect();
         let steps = engine.switch_up_many(&groups);
         for (t, step) in steps.iter().enumerate() {
@@ -224,7 +213,7 @@ impl FcLayer {
 }
 
 impl FcLayer {
-    /// Whether the layer trains (encrypted weights) or is frozen plaintext.
+    /// Whether the layer trains (ciphertext weights) or is frozen plaintext.
     pub fn is_trainable(&self) -> bool {
         matches!(self.w.first().and_then(|row| row.first()), Some(Weight::Enc(_)))
     }
@@ -315,7 +304,7 @@ mod tests {
     fn plain_weights_use_mult_cp() {
         let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 701);
         let w = vec![vec![3i64, 3]];
-        let layer = FcLayer::new_plain(&w, &eng.ctx, 0);
+        let layer = FcLayer::new_plain(&w, &eng, 0);
         let x = enc_x(&mut client, &vec![vec![4i64, -4], vec![1, 1]]);
         let u = layer.forward(&x, &eng);
         assert_eq!(client.decrypt_batch(&u.cts[0], 2, 0), vec![15, -9]);
@@ -357,5 +346,21 @@ mod tests {
         let s = eng.counter.snapshot();
         assert_eq!(s.switch_b2t, 1);
         assert_eq!(s.switch_t2b, 1);
+    }
+
+    #[test]
+    fn clear_backend_mirrors_forward_gradient_and_update() {
+        use crate::nn::backend::Codec;
+        let (eng, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+        let mut layer = FcLayer::new_encrypted(&vec![vec![10i64]], &mut codec, 0);
+        let g = codec.encrypt_batch(&[0, 24], 0);
+        layer.apply_gradients(&[vec![g]], 1, &eng);
+        if let Weight::Enc(wct) = &layer.w[0][0] {
+            assert_eq!(codec.decrypt_batch(wct, 1, 0), vec![-2]);
+        } else {
+            panic!("weight should be a clear ciphertext mirror");
+        }
+        let s = eng.counter.snapshot();
+        assert_eq!((s.switch_b2t, s.switch_t2b, s.act_gates), (1, 1, 8));
     }
 }

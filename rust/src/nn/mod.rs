@@ -1,7 +1,11 @@
 //! Encrypted neural-network layers (paper §4).
 //!
-//! * [`engine`] — `GlyphEngine`: all evaluator key material + HOP counters;
-//!   every layer op goes through it so Tables 2–8 accounting is exact.
+//! * [`engine`] — `GlyphEngine`: the counted-op execution engine; every
+//!   layer op goes through it so Tables 2–8 accounting is exact. Since
+//!   PR 5 it fronts a pluggable backend: the FHE key material, or —
+//! * [`backend`] — the bit-exact clear mirror (`ClearBackend`): plain
+//!   integer lanes with `decrypt(FHE(op))` semantics, key-less setup,
+//!   epoch-scale training in seconds, identical op accounting.
 //! * [`tensor`] — `EncTensor`: one BGV ciphertext per network scalar, the
 //!   mini-batch packed in coefficients (forward order) or reverse order
 //!   (backward tensors, enabling the convolution-trick batch reduction).
@@ -22,6 +26,7 @@
 //!   `scheduler::Plan` drives execution, the cost model and the CLI.
 
 pub mod activation;
+pub mod backend;
 pub mod batchnorm;
 pub mod conv;
 pub mod engine;
@@ -33,7 +38,8 @@ pub mod pool;
 pub mod quantize;
 pub mod tensor;
 
-pub use engine::{ClientKeys, GlyphEngine};
+pub use backend::{Bit, ClearBackend, ClearCodec, ClearCt, Codec, Ct, PlainVector, PlainWeight, Term};
+pub use engine::{Backend, ClientKeys, EngineProfile, FheState, GlyphEngine};
 pub use layer::{Layer, LayerGrads, LayerPlanEntry, LayerState};
 pub use network::{ForwardPass, LayerSpec, Network, NetworkBuilder, NetworkError};
 pub use tensor::{EncTensor, PackOrder};

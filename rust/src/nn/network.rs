@@ -21,9 +21,10 @@
 //! print paper-scale schedules instantly.
 
 use super::activation::{ReluLayer, SoftmaxLayer, SoftmaxUnit};
+use super::backend::Codec;
 use super::batchnorm::BnLayer;
 use super::conv::ConvLayer;
-use super::engine::{ClientKeys, GlyphEngine};
+use super::engine::GlyphEngine;
 use super::layer::{
     bn_forward_ops, conv_forward_ops, fc_error_ops, fc_forward_ops, fc_gradient_ops,
     pool_forward_ops, relu_error_ops, relu_forward_ops, softmax_error_ops, softmax_forward_ops,
@@ -483,11 +484,12 @@ impl NetworkBuilder {
         Ok(())
     }
 
-    /// Materialize the network: encrypt trainable weights under the client
-    /// key, build every unit, and compile the executable plan.
+    /// Materialize the network: encode trainable weights through the
+    /// backend's codec (encrypting them under the client key on FHE),
+    /// build every unit, and compile the executable plan.
     pub fn build(
         self,
-        client: &mut ClientKeys,
+        client: &mut dyn Codec,
         rng: &mut GlyphRng,
         engine: &GlyphEngine,
     ) -> Result<Network, NetworkError> {
@@ -523,7 +525,7 @@ impl NetworkBuilder {
                     if enc {
                         Box::new(FcLayer::new_encrypted(&w, client, next_shift[i]))
                     } else {
-                        Box::new(FcLayer::new_plain(&w, &engine.ctx, next_shift[i]))
+                        Box::new(FcLayer::new_plain(&w, engine, next_shift[i]))
                     }
                 }
                 LayerSpec::Conv { init, enc, .. } => {
@@ -534,7 +536,7 @@ impl NetworkBuilder {
                     if enc {
                         Box::new(ConvLayer::new_encrypted(&ker, client, next_shift[i]))
                     } else {
-                        Box::new(ConvLayer::new_plain(&ker, &engine.ctx, next_shift[i]))
+                        Box::new(ConvLayer::new_plain(&ker, engine, next_shift[i]))
                     }
                 }
                 LayerSpec::BatchNorm { bn } => Box::new(bn),
@@ -818,7 +820,7 @@ mod tests {
                 l.w.iter().flat_map(|row| {
                     row.iter().map(|w| match w {
                         crate::nn::linear::Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                        crate::nn::linear::Weight::Plain(p) => p.pt.coeffs[0],
+                        crate::nn::linear::Weight::Plain(p) => p.value(),
                     })
                 })
             })
@@ -831,7 +833,7 @@ mod tests {
                 l.w.iter().flat_map(|row| {
                     row.iter().map(|w| match w {
                         crate::nn::linear::Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                        crate::nn::linear::Weight::Plain(p) => p.pt.coeffs[0],
+                        crate::nn::linear::Weight::Plain(p) => p.value(),
                     })
                 })
             })

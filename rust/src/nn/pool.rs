@@ -2,10 +2,10 @@
 //! folded into the fixed-point shift (power-of-two scales make it free),
 //! exactly why Glyph prefers average over max pooling — no switch needed.
 
+use super::backend::Ct;
 use super::engine::GlyphEngine;
 use super::layer::{pool_forward_ops, Layer, LayerPlanEntry, LayerState};
 use super::tensor::EncTensor;
-use crate::bgv::BgvCiphertext;
 use crate::coordinator::scheduler::LayerKind;
 
 /// 2×2 average pooling with stride 2 on a CHW tensor. The output carries
@@ -15,7 +15,7 @@ pub fn avg_pool2(x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
     assert_eq!(x.shape.len(), 3);
     let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
     let (oh, ow) = (h / 2, w / 2);
-    let mut cts: Vec<BgvCiphertext> = Vec::with_capacity(c * oh * ow);
+    let mut cts: Vec<Ct> = Vec::with_capacity(c * oh * ow);
     for ch in 0..c {
         for y in 0..oh {
             for xx in 0..ow {

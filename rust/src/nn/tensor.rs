@@ -1,13 +1,14 @@
-//! `EncTensor`: an encrypted activation/error tensor.
+//! `EncTensor`: an activation/error tensor under either execution backend.
 //!
-//! One BGV ciphertext per network scalar; the mini-batch lives in the
-//! polynomial coefficients. Forward tensors pack sample b at coefficient b;
-//! backward tensors pack sample b at coefficient `batch−1−b` (*reversed*),
-//! so that a forward × backward MultCC leaves the batch-summed product —
-//! the SGD gradient reduction — at coefficient `batch−1` (the negacyclic
-//! convolution trick; DESIGN.md §2.1).
+//! One [`Ct`] per network scalar; the mini-batch lives in the polynomial
+//! coefficients. Forward tensors pack sample b at coefficient b; backward
+//! tensors pack sample b at coefficient `batch−1−b` (*reversed*), so that a
+//! forward × backward MultCC leaves the batch-summed product — the SGD
+//! gradient reduction — at coefficient `batch−1` (the negacyclic
+//! convolution trick; DESIGN.md §2.1). The packing convention is
+//! backend-independent: the clear mirror keeps the same coefficient layout.
 
-use crate::bgv::BgvCiphertext;
+use super::backend::Ct;
 
 /// Packing order of the batch dimension.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,11 +29,11 @@ impl PackOrder {
     }
 }
 
-/// An encrypted tensor: `cts[i]` holds scalar `i` (row-major over `shape`)
-/// for every sample of the mini-batch.
+/// A backend-polymorphic tensor: `cts[i]` holds scalar `i` (row-major over
+/// `shape`) for every sample of the mini-batch.
 #[derive(Clone)]
 pub struct EncTensor {
-    pub cts: Vec<BgvCiphertext>,
+    pub cts: Vec<Ct>,
     pub shape: Vec<usize>,
     pub order: PackOrder,
     /// Fixed-point scale: stored value = real value · 2^shift.
@@ -40,7 +41,7 @@ pub struct EncTensor {
 }
 
 impl EncTensor {
-    pub fn new(cts: Vec<BgvCiphertext>, shape: Vec<usize>, order: PackOrder, shift: u32) -> Self {
+    pub fn new(cts: Vec<Ct>, shape: Vec<usize>, order: PackOrder, shift: u32) -> Self {
         debug_assert_eq!(cts.len(), shape.iter().product::<usize>());
         EncTensor { cts, shape, order, shift }
     }
@@ -54,7 +55,7 @@ impl EncTensor {
     }
 
     /// Index into a CHW-shaped tensor.
-    pub fn chw(&self, c: usize, h: usize, w: usize) -> &BgvCiphertext {
+    pub fn chw(&self, c: usize, h: usize, w: usize) -> &Ct {
         let (_ch, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
         &self.cts[(c * hh + h) * ww + w]
     }

@@ -51,22 +51,27 @@ impl Repacker {
 
     /// Pack one recomposed LWE per batch lane into a single torus ring
     /// ciphertext under the BGV key (steps ➊–➋; all real lattice ops).
-    pub fn pack(&self, lanes: &[LweCiphertext]) -> TrlweCiphertext {
+    pub fn pack<S: std::borrow::Borrow<LweCiphertext>>(&self, lanes: &[S]) -> TrlweCiphertext {
         let positions: Vec<usize> = (0..lanes.len()).collect();
         self.pack_at(lanes, &positions)
     }
 
     /// Pack at arbitrary coefficient positions (reverse packing for the
     /// backward pass's convolution-trick gradients).
-    pub fn pack_at(&self, lanes: &[LweCiphertext], positions: &[usize]) -> TrlweCiphertext {
+    pub fn pack_at<S: std::borrow::Borrow<LweCiphertext>>(
+        &self,
+        lanes: &[S],
+        positions: &[usize],
+    ) -> TrlweCiphertext {
         self.pksk.pack(lanes, positions)
     }
 
     /// Pack at positions then raise via the authority, reading values back
-    /// from those same positions into batch order.
-    pub fn pack_at_and_raise(
+    /// from those same positions into batch order. Generic over owned and
+    /// borrowed lane slices so backend-polymorphic callers need no clones.
+    pub fn pack_at_and_raise<S: std::borrow::Borrow<LweCiphertext>>(
         &self,
-        lanes: &[LweCiphertext],
+        lanes: &[S],
         positions: &[usize],
         auth: &KeyAuthority,
     ) -> BgvCiphertext {
@@ -76,7 +81,11 @@ impl Repacker {
 
     /// Steps ➊–➌: pack, then raise to a fresh BGV ciphertext via the
     /// refresh authority. Values are read on the 2^24 grid as signed 8-bit.
-    pub fn pack_and_raise(&self, lanes: &[LweCiphertext], auth: &KeyAuthority) -> BgvCiphertext {
+    pub fn pack_and_raise<S: std::borrow::Borrow<LweCiphertext>>(
+        &self,
+        lanes: &[S],
+        auth: &KeyAuthority,
+    ) -> BgvCiphertext {
         let positions: Vec<usize> = (0..lanes.len()).collect();
         self.pack_at_and_raise(lanes, &positions, auth)
     }
@@ -88,9 +97,9 @@ impl Repacker {
     /// run serially in submission order (the authority's RNG draw order is
     /// part of the deterministic contract). Result `out[g]` is bit-identical
     /// to `pack_at_and_raise(groups[g].0, groups[g].1, auth)` run in a loop.
-    pub fn pack_and_raise_many(
+    pub fn pack_and_raise_many<S: std::borrow::Borrow<LweCiphertext> + Sync>(
         &self,
-        groups: &[(&[LweCiphertext], &[usize])],
+        groups: &[(&[S], &[usize])],
         auth: &KeyAuthority,
     ) -> Vec<BgvCiphertext> {
         let n = self.pksk.ring_n;

@@ -19,7 +19,8 @@ use crate::bgv::{
 };
 use crate::coordinator::scheduler::LayerKind;
 use crate::math::rng::GlyphRng;
-use crate::nn::engine::{ClientKeys, GlyphEngine};
+use crate::nn::backend::{ClearCt, Codec, Ct};
+use crate::nn::engine::GlyphEngine;
 use crate::nn::layer::{sigmoid_tlu_ops, Layer, LayerPlanEntry, LayerState};
 use crate::nn::linear::FcLayer;
 use crate::nn::network::{Network, NetworkBuilder, NetworkError};
@@ -66,23 +67,36 @@ impl TluDomain {
     }
 }
 
-/// One table lookup on a single-lane MAC-domain ciphertext: the authority
-/// converts the quantized value into the bit-slice domain (HElib
-/// digit-extraction substitute), the indicator-tree lookup runs for real,
-/// and the output bits are recomposed back.
+/// One table lookup on a single-lane MAC-domain ciphertext. FHE backend:
+/// the authority converts the quantized value into the bit-slice domain
+/// (HElib digit-extraction substitute), the indicator-tree lookup runs for
+/// real, and the output bits are recomposed back. Clear backend: the same
+/// quantize → table → recompose arithmetic on the plain coefficient — the
+/// homomorphic lookup is exact, so the mirror is the table entry itself.
 pub fn tlu_activate(
     domain: &TluDomain,
     table: &LookupTable,
     lut_cost: &Mutex<LutCost>,
     tlu_bits: usize,
-    ct: &BgvCiphertext,
+    ct: &Ct,
     shift: u32,
     engine: &GlyphEngine,
-) -> BgvCiphertext {
+) -> Ct {
     engine.counter.bump(&engine.counter.tlu, 1);
     engine.counter.bump(&engine.counter.refresh, 2); // the two domain conversions
+    if engine.is_clear() {
+        let params = engine.params();
+        let m = ct.clear().decode_batch(1)[0];
+        let v = (m >> shift) & ((1 << tlu_bits) - 1);
+        // the homomorphic indicator tree computes exactly the table entry
+        // truncated to the output width — mirror that read
+        let out_v = (table.entries[v as usize] & ((1u64 << table.out_bits) - 1)) as i64;
+        let pt = Plaintext::encode_scalar(out_v, params);
+        return Ct::Clear(ClearCt::from_plaintext(&pt, params.n));
+    }
+    let fhe = engine.fhe();
     // authority opens the quantized value (substituted digit extraction)
-    let m = engine.auth.sk.decrypt(ct).coeffs[0];
+    let m = fhe.auth.sk.decrypt(ct.fhe()).coeffs[0];
     let v = (m >> shift) & ((1 << tlu_bits) - 1);
     // REAL homomorphic lookup in the t=2 domain
     let bits = domain.encrypt_bits(v, tlu_bits);
@@ -95,9 +109,9 @@ pub fn tlu_activate(
     }
     let out_v = domain.decrypt_bits(&out_bits);
     // recompose into the MAC domain (authority re-encryption)
-    let pt = Plaintext::encode_scalar(out_v, &engine.ctx.params);
-    let trivial = BgvCiphertext::trivial(&pt, &engine.ctx, engine.ctx.top_level());
-    engine.auth.refresh(&trivial)
+    let pt = Plaintext::encode_scalar(out_v, &fhe.ctx.params);
+    let trivial = BgvCiphertext::trivial(&pt, &fhe.ctx, fhe.ctx.top_level());
+    Ct::Fhe(fhe.auth.refresh(&trivial))
 }
 
 /// The FHESGD sigmoid activation as a network unit: forward is one table
@@ -138,7 +152,7 @@ impl Layer for SigmoidTluLayer {
 
     fn forward(&self, u: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
         assert_eq!(engine.batch, 1, "FHESGD baseline runs single-lane (see module docs)");
-        let cts: Vec<BgvCiphertext> = u
+        let cts: Vec<Ct> = u
             .cts
             .iter()
             .map(|ct| {
@@ -167,7 +181,7 @@ impl Layer for SigmoidTluLayer {
             LayerState::Output(a) => a,
             _ => unreachable!("sigmoid backward needs its forward activations"),
         };
-        let cts: Vec<BgvCiphertext> = if self.output_unit {
+        let cts: Vec<Ct> = if self.output_unit {
             // δ = d − t at the output (batch=1: forward == reversed packing)
             acts.cts
                 .iter()
@@ -231,7 +245,7 @@ impl FhesgdMlp {
         act_shifts: Vec<u32>,
         grad_shift: u32,
         tlu_bits: usize,
-        client: &mut ClientKeys,
+        client: &mut dyn Codec,
         rng: &mut GlyphRng,
         engine: &GlyphEngine,
         test_scale: bool,
@@ -290,11 +304,11 @@ impl FhesgdMlp {
     /// One table lookup (compatibility shim over [`tlu_activate`]).
     pub fn tlu_activate(
         &self,
-        ct: &BgvCiphertext,
+        ct: &Ct,
         table: &LookupTable,
         shift: u32,
         engine: &GlyphEngine,
-    ) -> BgvCiphertext {
+    ) -> Ct {
         tlu_activate(&self.tlu, table, &self.lut_cost, self.tlu_bits, ct, shift, engine)
     }
 

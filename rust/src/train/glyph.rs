@@ -17,7 +17,8 @@
 //! constructor surface for the examples, benches and CLI.
 
 use crate::math::rng::GlyphRng;
-use crate::nn::engine::{ClientKeys, GlyphEngine};
+use crate::nn::backend::Codec;
+use crate::nn::engine::GlyphEngine;
 use crate::nn::linear::FcLayer;
 use crate::nn::network::{Network, NetworkBuilder, NetworkError};
 use crate::nn::tensor::EncTensor;
@@ -130,7 +131,7 @@ impl GlyphMlp {
     /// layer count or exceeds the engine's fixed-point budget.
     pub fn new_random(
         config: MlpConfig,
-        client: &mut ClientKeys,
+        client: &mut dyn Codec,
         rng: &mut GlyphRng,
         engine: &GlyphEngine,
     ) -> Result<Self, NetworkError> {
@@ -162,14 +163,14 @@ mod tests {
     use crate::nn::engine::EngineProfile;
     use crate::nn::linear::Weight;
 
-    fn weight_snapshot(mlp: &GlyphMlp, client: &ClientKeys) -> Vec<i64> {
+    fn weight_snapshot(mlp: &GlyphMlp, client: &crate::nn::engine::ClientKeys) -> Vec<i64> {
         mlp.fc_layers()
             .iter()
             .flat_map(|l| {
                 l.w.iter().flat_map(|row| {
                     row.iter().map(|w| match w {
                         Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                        Weight::Plain(p) => p.pt.coeffs[0],
+                        Weight::Plain(p) => p.value(),
                     })
                 })
             })

@@ -12,8 +12,10 @@
 
 pub mod fhesgd;
 pub mod glyph;
+pub mod trainer;
 pub mod transfer;
 
 pub use fhesgd::{FhesgdMlp, SigmoidTluLayer, TluDomain};
 pub use glyph::{GlyphMlp, MlpConfig};
+pub use trainer::{EpochStats, Trainer};
 pub use transfer::{CnnConfig, GlyphCnn};

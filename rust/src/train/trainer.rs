@@ -1,0 +1,252 @@
+//! [`Trainer`]: the epoch-scale training loop over [`crate::data::Dataset`]
+//! minibatches, backend-agnostic.
+//!
+//! The trainer walks a dataset in engine-width minibatches, encodes each
+//! one through the backend's [`Codec`] (client-side encryption on FHE,
+//! plain packing on the clear mirror), runs `Network::train_step`, and can
+//! score test accuracy by decoding the output unit's distribution and
+//! taking the per-sample argmax. On the clear backend a full MNIST-scale
+//! epoch finishes in seconds, which is what makes the paper's *accuracy*
+//! claims continuously testable in CI (`tests/accuracy_floor.rs`); on the
+//! FHE backend the very same loop drives reduced-scale encrypted runs.
+//!
+//! Inputs narrower than the image are sampled evenly across the pixels
+//! (`Dataset::minibatch`'s convention, shared with the CLI); labels are
+//! one-hot rows at 127, reverse-packed for the loss derivative.
+
+use crate::coordinator::metrics::OpSnapshot;
+use crate::data::{DataError, Dataset};
+use crate::nn::backend::Codec;
+use crate::nn::engine::GlyphEngine;
+use crate::nn::network::Network;
+use crate::nn::tensor::{EncTensor, PackOrder};
+
+/// What one [`Trainer::train_epoch`] did.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    /// Full minibatch steps executed (trailing partial batches are skipped —
+    /// the engine's batch width is fixed at key generation).
+    pub steps: usize,
+    /// Samples consumed (`steps · batch`).
+    pub samples: usize,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// Live homomorphic-op counter delta across the epoch (identical on
+    /// both backends; equals plan totals × steps).
+    pub ops: OpSnapshot,
+}
+
+impl EpochStats {
+    pub fn samples_per_sec(&self) -> f64 {
+        self.samples as f64 / self.seconds.max(1e-12)
+    }
+}
+
+/// The epoch loop around a built [`Network`].
+pub struct Trainer {
+    pub net: Network,
+    /// Output-class count (the output unit's width).
+    pub classes: usize,
+    /// Input feature width (product of the network's input shape).
+    pub features: usize,
+}
+
+impl Trainer {
+    /// Wrap a built network. The input width and class count are read off
+    /// the network's own geometry (`in_shape`, last plan step's unit).
+    pub fn new(net: Network, classes: usize) -> Self {
+        let features = net.in_shape.iter().product();
+        Trainer { net, classes, features }
+    }
+
+    /// Encode one minibatch's inputs, forward-packed, through whichever
+    /// codec the backend uses (evaluation needs no labels — on FHE every
+    /// skipped label is a saved encryption).
+    pub fn encode_inputs(
+        &self,
+        ds: &Dataset,
+        start: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<EncTensor, DataError> {
+        let (cols, _labels) = ds.minibatch(start, engine.batch, self.features)?;
+        let x_cts = cols.iter().map(|v| codec.encrypt_batch(v, 0)).collect();
+        Ok(EncTensor::new(x_cts, self.net.in_shape.clone(), PackOrder::Forward, 0))
+    }
+
+    /// Encode one minibatch's reverse-packed one-hot labels (·127).
+    pub fn encode_labels(
+        &self,
+        ds: &Dataset,
+        start: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<EncTensor, DataError> {
+        let batch = engine.batch;
+        if start + batch > ds.len() {
+            return Err(DataError::BatchOutOfRange { start, batch, len: ds.len() });
+        }
+        let lab_cts = (0..self.classes)
+            .map(|k| {
+                let mut v: Vec<i64> = ds.labels[start..start + batch]
+                    .iter()
+                    .map(|&l| if l % self.classes == k { 127 } else { 0 })
+                    .collect();
+                v.reverse();
+                codec.encrypt_batch(&v, 0)
+            })
+            .collect();
+        Ok(EncTensor::new(lab_cts, vec![self.classes], PackOrder::Reversed, 0))
+    }
+
+    /// Encode one full training minibatch: inputs + labels.
+    pub fn encode_minibatch(
+        &self,
+        ds: &Dataset,
+        start: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<(EncTensor, EncTensor), DataError> {
+        let x = self.encode_inputs(ds, start, engine, codec)?;
+        let lab = self.encode_labels(ds, start, engine, codec)?;
+        Ok((x, lab))
+    }
+
+    /// One pass over the dataset in minibatch steps (trailing partial batch
+    /// skipped). Returns wall-clock and exact op accounting.
+    pub fn train_epoch(
+        &mut self,
+        ds: &Dataset,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<EpochStats, DataError> {
+        self.train_steps(ds, ds.len() / engine.batch, engine, codec)
+    }
+
+    /// The first `steps` minibatches of the dataset.
+    pub fn train_steps(
+        &mut self,
+        ds: &Dataset,
+        steps: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<EpochStats, DataError> {
+        let batch = engine.batch;
+        let steps = steps.min(ds.len() / batch);
+        let before = engine.counter.snapshot();
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let (x, lab) = self.encode_minibatch(ds, step * batch, engine, codec)?;
+            self.net.train_step(&x, &lab, engine);
+        }
+        Ok(EpochStats {
+            steps,
+            samples: steps * batch,
+            seconds: t0.elapsed().as_secs_f64(),
+            ops: engine.counter.snapshot().since(&before),
+        })
+    }
+
+    /// Test accuracy over (up to) `limit` samples: forward pass per
+    /// minibatch, decode the output unit's reverse-packed distribution,
+    /// argmax per sample.
+    pub fn evaluate(
+        &self,
+        ds: &Dataset,
+        limit: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<f64, DataError> {
+        let batch = engine.batch;
+        let steps = (limit.min(ds.len())) / batch;
+        if steps == 0 {
+            return Err(DataError::BatchOutOfRange { start: 0, batch, len: ds.len().min(limit) });
+        }
+        let mut correct = 0usize;
+        for step in 0..steps {
+            let start = step * batch;
+            let x = self.encode_inputs(ds, start, engine, codec)?;
+            let pass = self.net.forward(&x, engine);
+            let out = pass.output();
+            // scores[k] = class k's per-lane outputs. Softmax heads repack
+            // reversed (sample b at coefficient batch−1−b); the FHESGD
+            // sigmoid head keeps forward packing (batch 1 in practice).
+            let scores: Vec<Vec<i64>> =
+                out.cts.iter().map(|ct| codec.decrypt_batch(ct, batch, 0)).collect();
+            for b in 0..batch {
+                let lane = match out.order {
+                    PackOrder::Reversed => batch - 1 - b,
+                    PackOrder::Forward => b,
+                };
+                let mut best = (i64::MIN, 0usize);
+                for (k, row) in scores.iter().enumerate() {
+                    if row[lane] > best.0 {
+                        best = (row[lane], k);
+                    }
+                }
+                if best.1 == ds.labels[start + b] % self.classes {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(correct as f64 / (steps * batch) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::GlyphRng;
+    use crate::nn::engine::{EngineProfile, GlyphEngine};
+    use crate::nn::network::NetworkBuilder;
+
+    #[test]
+    fn clear_trainer_runs_an_epoch_and_scores() {
+        let batch = 4;
+        let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, batch);
+        let mut rng = GlyphRng::new(11);
+        let net = NetworkBuilder::input_vec(16)
+            .fc(8)
+            .relu(8, 7)
+            .fc(3)
+            .softmax(3, 7)
+            .grad_shift(8)
+            .build(&mut codec, &mut rng, &engine)
+            .unwrap();
+        let mut trainer = Trainer::new(net, 3);
+        assert_eq!(trainer.features, 16);
+        let ds = crate::data::synthetic_digits(24, 5, "trainer-test");
+        let stats = trainer.train_epoch(&ds, &engine, &mut codec).unwrap();
+        assert_eq!(stats.steps, 6);
+        assert_eq!(stats.samples, 24);
+        assert!(stats.ops.mult_cc > 0 && stats.ops.act_gates > 0);
+        // op accounting matches the compiled plan exactly, per step
+        let totals = trainer.net.plan.totals();
+        assert_eq!(stats.ops.mult_cc, totals.mult_cc * stats.steps as u64);
+        assert_eq!(stats.ops.act_gates, totals.act_gates * stats.steps as u64);
+        let acc = trainer.evaluate(&ds, 24, &engine, &mut codec).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn trainer_surfaces_dataset_errors() {
+        let batch = 4;
+        let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, batch);
+        let mut rng = GlyphRng::new(12);
+        let net = NetworkBuilder::input_vec(4)
+            .fc(2)
+            .softmax(3, 7)
+            .build(&mut codec, &mut rng, &engine)
+            .unwrap();
+        let trainer = Trainer::new(net, 2);
+        let empty = crate::data::Dataset {
+            shape: (1, 28, 28),
+            images: vec![],
+            labels: vec![],
+            classes: 2,
+            name: "empty".into(),
+        };
+        let err = trainer.evaluate(&empty, 8, &engine, &mut codec).err().expect("must reject");
+        assert!(err.to_string().contains("minibatch"), "{err}");
+    }
+}

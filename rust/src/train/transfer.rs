@@ -9,8 +9,9 @@
 
 use super::glyph::MlpConfig;
 use crate::math::rng::GlyphRng;
+use crate::nn::backend::Codec;
 use crate::nn::batchnorm::BnLayer;
-use crate::nn::engine::{ClientKeys, GlyphEngine};
+use crate::nn::engine::GlyphEngine;
 use crate::nn::layer::Layer;
 use crate::nn::network::{Network, NetworkBuilder, NetworkError};
 use crate::nn::tensor::EncTensor;
@@ -177,7 +178,7 @@ impl GlyphCnn {
         bn1: BnLayer,
         conv2_w: &[Vec<Vec<Vec<i64>>>],
         bn2: BnLayer,
-        client: &mut ClientKeys,
+        client: &mut dyn Codec,
         rng: &mut GlyphRng,
         engine: &GlyphEngine,
     ) -> Result<Self, NetworkError> {

@@ -1,0 +1,123 @@
+//! Epoch-scale accuracy floors on the clear backend — the paper's headline
+//! *accuracy* claims, continuously testable in CI because the clear mirror
+//! runs full epochs in seconds while computing exactly what the encrypted
+//! pipeline would decrypt to (on grid-aligned crossings, with identical
+//! quantization/rounding everywhere).
+//!
+//! Three scenarios, each fixed-seed and bounded well under 30 s:
+//!   1. `synthetic_digits`: 2 clear epochs of a Glyph MLP beat a recorded
+//!      accuracy floor and the untrained network by a wide margin;
+//!   2. an MNIST subset (the IDX loader's deterministic synthetic fallback
+//!      in this environment) through the `Trainer` epoch loop;
+//!   3. the paper's qualitative FHESGD-vs-Glyph claim: at an equal SGD-step
+//!      budget (the mirror of equal wall-time — FHESGD's per-sample cost is
+//!      orders of magnitude higher, Table 2 vs 3), the Glyph pipeline
+//!      reaches far higher test accuracy than the batch-1 sigmoid-TLU
+//!      baseline.
+//!
+//! Hyperparameters were recorded from clear-backend sweeps (EXPERIMENTS.md
+//! §Backends & accuracy reproduction); floors leave generous slack under
+//! the recorded values so dataset-generator rounding can never flake CI.
+
+use glyph::math::GlyphRng;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::train::{FhesgdMlp, GlyphMlp, MlpConfig, Trainer};
+
+/// The recorded robust configuration: 196 evenly-sampled pixels, one
+/// 64-wide ReLU hidden layer, 8-bit softmax, grad_shift 12 (≈ the paper's
+/// shift schedule scaled to the test topology).
+fn digits_config(hidden: usize) -> MlpConfig {
+    MlpConfig {
+        dims: vec![196, hidden, 10],
+        act_shifts: vec![8, 8],
+        err_shifts: vec![8, 8],
+        grad_shift: 12,
+        softmax_bits: 8,
+    }
+}
+
+fn build_trainer(config: MlpConfig, net_seed: u64, engine: &GlyphEngine, codec: &mut glyph::nn::backend::ClearCodec) -> Trainer {
+    let classes = *config.dims.last().unwrap();
+    let mut rng = GlyphRng::new(net_seed);
+    let mlp = GlyphMlp::new_random(config, codec, &mut rng, engine).expect("config builds");
+    Trainer::new(mlp.net, classes)
+}
+
+#[test]
+fn clear_training_beats_accuracy_floor_on_synthetic_digits() {
+    let batch = 8;
+    let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Default, batch);
+    let mut trainer = build_trainer(digits_config(64), 7, &engine, &mut codec);
+    let train = glyph::data::synthetic_digits(256, 5, "digits-train");
+    let test = glyph::data::synthetic_digits(128, 99, "digits-test");
+    let untrained = trainer.evaluate(&test, 128, &engine, &mut codec).unwrap();
+    for _ in 0..2 {
+        trainer.train_epoch(&train, &engine, &mut codec).unwrap();
+    }
+    let acc = trainer.evaluate(&test, 128, &engine, &mut codec).unwrap();
+    // recorded: ≈0.81 at this seed; chance is 0.10
+    assert!(acc >= 0.55, "digits accuracy {acc:.3} under the 0.55 floor");
+    assert!(
+        acc >= untrained + 0.2,
+        "training must add ≥0.2 accuracy over the untrained net ({untrained:.3} → {acc:.3})"
+    );
+}
+
+#[test]
+fn clear_training_beats_accuracy_floor_on_mnist_subset() {
+    let batch = 8;
+    let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Default, batch);
+    let mut trainer = build_trainer(digits_config(64), 7, &engine, &mut codec);
+    // loads real IDX files when present; deterministic synthetic fallback
+    // otherwise (data module docs)
+    let train = glyph::data::mnist(true, 256, 11);
+    let test = glyph::data::mnist(false, 128, 131);
+    let mut stats = None;
+    for _ in 0..2 {
+        stats = Some(trainer.train_epoch(&train, &engine, &mut codec).unwrap());
+    }
+    let stats = stats.unwrap();
+    assert_eq!(stats.samples, 256);
+    let acc = trainer.evaluate(&test, 128, &engine, &mut codec).unwrap();
+    // recorded: ≈0.83 at this seed on the synthetic fallback
+    assert!(acc >= 0.55, "MNIST-subset accuracy {acc:.3} under the 0.55 floor");
+}
+
+#[test]
+fn glyph_beats_fhesgd_at_equal_step_budget() {
+    let steps = 64usize;
+    let train = glyph::data::synthetic_digits(512, 5, "ordering-train");
+    let test = glyph::data::synthetic_digits(128, 99, "ordering-test");
+
+    // Glyph: 64 mini-batch steps at batch 8
+    let (engine_g, mut codec_g) = GlyphEngine::setup_clear(EngineProfile::Default, 8);
+    let mut glyph_trainer = build_trainer(digits_config(32), 7, &engine_g, &mut codec_g);
+    glyph_trainer.train_steps(&train, steps, &engine_g, &mut codec_g).unwrap();
+    let glyph_acc = glyph_trainer.evaluate(&test, 128, &engine_g, &mut codec_g).unwrap();
+
+    // FHESGD baseline: 64 single-sample steps (its packing is batch-1; the
+    // per-step homomorphic cost is orders of magnitude higher — Table 2)
+    let (engine_b, mut codec_b) = GlyphEngine::setup_clear(EngineProfile::Default, 1);
+    let mut rng = GlyphRng::new(7);
+    let baseline = FhesgdMlp::new_random(
+        vec![196, 32, 10],
+        vec![8, 8],
+        12,
+        8,
+        &mut codec_b,
+        &mut rng,
+        &engine_b,
+        true,
+    )
+    .expect("baseline builds");
+    let mut fhesgd_trainer = Trainer::new(baseline.net, 10);
+    fhesgd_trainer.train_steps(&train, steps, &engine_b, &mut codec_b).unwrap();
+    let fhesgd_acc = fhesgd_trainer.evaluate(&test, 128, &engine_b, &mut codec_b).unwrap();
+
+    // recorded: ≈0.62 vs ≈0.12 — the paper's qualitative ordering
+    assert!(
+        glyph_acc >= fhesgd_acc + 0.15,
+        "Glyph ({glyph_acc:.3}) must clearly beat FHESGD ({fhesgd_acc:.3}) at an equal step budget"
+    );
+    assert!(glyph_acc >= 0.40, "Glyph at 64 steps should pass 0.40, got {glyph_acc:.3}");
+}

@@ -1,0 +1,421 @@
+//! Differential backend conformance: the clear execution backend must be
+//! **byte-identical** to the FHE path — decrypt(FHE(train_step)) ==
+//! clear(train_step) for logits, per-unit forward outputs, propagated
+//! errors, gradients and post-update weights — across random shapes,
+//! shifts, softmax bit widths, and both MLP and frozen-conv transfer
+//! topologies.
+//!
+//! Alignment contract: the suite drives every switch crossing on the 8-bit
+//! quantization grid (zero activation shifts, or shift-`s` layers fed
+//! values ≡ 0 mod 2^s), which is the regime the extraction design itself
+//! guarantees deterministic — mid-window phases sit ≈2^23 from any PBS
+//! decision boundary, far beyond the modulus-switch noise. Off-grid
+//! residues land inside that noise band where even the lattice path is
+//! only accurate to ±1 ulp (module docs of `switch::extract`), so no
+//! deterministic mirror can — or should — track individual noise draws.
+//!
+//! Seeds print on failure; set `GLYPH_PROP_SEED` to replay a base seed
+//! (the `ntt_properties.rs` / `switch_roundtrip.rs` convention).
+
+use glyph::coordinator::{OpSnapshot, StepOps};
+use glyph::math::GlyphRng;
+use glyph::nn::backend::Codec;
+use glyph::nn::engine::{ClientKeys, EngineProfile, GlyphEngine};
+use glyph::nn::linear::Weight;
+use glyph::nn::network::{Network, NetworkBuilder};
+use glyph::nn::tensor::{EncTensor, PackOrder};
+
+fn base_seed() -> u64 {
+    std::env::var("GLYPH_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0xbac_4e9d_0042_7e57)
+}
+
+const BATCH: usize = 2;
+
+struct Backends {
+    fhe: GlyphEngine,
+    fhe_client: ClientKeys,
+    clear: GlyphEngine,
+    clear_codec: glyph::nn::backend::ClearCodec,
+}
+
+impl Backends {
+    fn new(seed: u64) -> Self {
+        let (fhe, fhe_client) = GlyphEngine::setup(EngineProfile::Test, BATCH, seed);
+        let (clear, clear_codec) = GlyphEngine::setup_clear(EngineProfile::Test, BATCH);
+        Backends { fhe, fhe_client, clear, clear_codec }
+    }
+}
+
+fn encode_cols(
+    codec: &mut dyn Codec,
+    cols: &[Vec<i64>],
+    shape: Vec<usize>,
+    order: PackOrder,
+) -> EncTensor {
+    let cts = cols.iter().map(|v| codec.encrypt_batch(v, 0)).collect();
+    EncTensor::new(cts, shape, order, 0)
+}
+
+fn one_hot_labels(codec: &mut dyn Codec, classes: usize, sample_classes: &[usize]) -> EncTensor {
+    let cts = (0..classes)
+        .map(|k| {
+            let mut v: Vec<i64> =
+                sample_classes.iter().map(|&l| if l == k { 127 } else { 0 }).collect();
+            v.reverse();
+            codec.encrypt_batch(&v, 0)
+        })
+        .collect();
+    EncTensor::new(cts, vec![classes], PackOrder::Reversed, 0)
+}
+
+fn weight_snapshot(net: &Network, codec: &dyn Codec) -> Vec<i64> {
+    net.fc_layers()
+        .iter()
+        .flat_map(|l| {
+            l.w.iter().flat_map(|row| {
+                row.iter().map(|w| match w {
+                    Weight::Enc(ct) => codec.decrypt_batch(ct, 1, 0)[0],
+                    Weight::Plain(p) => p.value(),
+                })
+            })
+        })
+        .collect()
+}
+
+fn decode_tensor(codec: &dyn Codec, t: &EncTensor) -> Vec<Vec<i64>> {
+    t.cts.iter().map(|ct| codec.decrypt_batch(ct, BATCH, 0)).collect()
+}
+
+/// Build the same network on both backends (same weight-draw seed), run one
+/// forward + train_step on identical inputs, and assert every decoded
+/// intermediate, the logits, the op-counter deltas and the updated weights
+/// agree byte-for-byte. Also asserts the clear path's live counters equal
+/// the compiled plan's totals exactly.
+#[allow(clippy::too_many_arguments)]
+fn assert_train_step_equivalent(
+    case: &str,
+    seed: u64,
+    be: &mut Backends,
+    build: impl Fn() -> NetworkBuilder,
+    x_cols: &[Vec<i64>],
+    in_shape: Vec<usize>,
+    classes: usize,
+    sample_classes: &[usize],
+) {
+    let mut rng_f = GlyphRng::new(seed ^ 0x11);
+    let mut rng_c = GlyphRng::new(seed ^ 0x11);
+    let mut net_f = build()
+        .build(&mut be.fhe_client, &mut rng_f, &be.fhe)
+        .unwrap_or_else(|e| panic!("case {case} seed {seed}: fhe build failed: {e}"));
+    let mut net_c = build()
+        .build(&mut be.clear_codec, &mut rng_c, &be.clear)
+        .unwrap_or_else(|e| panic!("case {case} seed {seed}: clear build failed: {e}"));
+    assert_eq!(
+        weight_snapshot(&net_f, &be.fhe_client),
+        weight_snapshot(&net_c, &be.clear_codec),
+        "case {case} seed {seed}: initial weights must encode identically"
+    );
+
+    let x_f = encode_cols(&mut be.fhe_client, x_cols, in_shape.clone(), PackOrder::Forward);
+    let x_c = encode_cols(&mut be.clear_codec, x_cols, in_shape.clone(), PackOrder::Forward);
+    let lab_f = one_hot_labels(&mut be.fhe_client, classes, sample_classes);
+    let lab_c = one_hot_labels(&mut be.clear_codec, classes, sample_classes);
+
+    // forward: every unit's output (and thus the logits/distribution) must
+    // decode identically
+    let pass_f = net_f.forward(&x_f, &be.fhe);
+    let pass_c = net_c.forward(&x_c, &be.clear);
+    assert_eq!(pass_f.outputs.len(), pass_c.outputs.len(), "case {case} seed {seed}");
+    for (u, (tf, tc)) in pass_f.outputs.iter().zip(&pass_c.outputs).enumerate() {
+        assert_eq!(
+            decode_tensor(&be.fhe_client, tf),
+            decode_tensor(&be.clear_codec, tc),
+            "case {case} seed {seed}: unit {u} forward output diverged"
+        );
+    }
+
+    // one full SGD step: identical op accounting and identical weights
+    let before_f = be.fhe.counter.snapshot();
+    let before_c = be.clear.counter.snapshot();
+    net_f.train_step(&x_f, &lab_f, &be.fhe);
+    net_c.train_step(&x_c, &lab_c, &be.clear);
+    let delta_f = be.fhe.counter.snapshot().since(&before_f);
+    let delta_c = be.clear.counter.snapshot().since(&before_c);
+    assert_eq!(
+        delta_f, delta_c,
+        "case {case} seed {seed}: backends must count ops identically"
+    );
+    assert_counts_match(case, seed, delta_c, net_c.plan.totals());
+    assert_eq!(
+        weight_snapshot(&net_f, &be.fhe_client),
+        weight_snapshot(&net_c, &be.clear_codec),
+        "case {case} seed {seed}: post-update weights diverged"
+    );
+}
+
+fn assert_counts_match(case: &str, seed: u64, live: OpSnapshot, predicted: StepOps) {
+    let pairs = [
+        ("mult_cc", live.mult_cc, predicted.mult_cc),
+        ("mult_cp", live.mult_cp, predicted.mult_cp),
+        ("add_cc", live.add_cc, predicted.add_cc),
+        ("tlu", live.tlu, predicted.tlu),
+        ("act_gates", live.act_gates, predicted.act_gates),
+        ("extract_pbs", live.extract_pbs, predicted.extract_pbs),
+        ("switch_b2t", live.switch_b2t, predicted.switch_b2t),
+        ("switch_t2b", live.switch_t2b, predicted.switch_t2b),
+        ("refresh", live.refresh, predicted.refresh),
+        ("extract_lanes", live.extract_lanes, predicted.extract_lanes),
+        ("repack_lanes", live.repack_lanes, predicted.repack_lanes),
+    ];
+    for (name, l, p) in pairs {
+        assert_eq!(l, p, "case {case} seed {seed}: clear-path {name} != plan");
+    }
+}
+
+#[test]
+fn paper_shaped_mlp_train_step_is_bit_identical() {
+    let seed = base_seed();
+    let mut be = Backends::new(seed);
+    // the paper MLP's unit mix (FC-ReLU-FC-ReLU-FC-softmax) at test widths,
+    // grid-aligned shifts
+    let build = || {
+        NetworkBuilder::input_vec(4)
+            .fc(4)
+            .relu(0, 0)
+            .fc(3)
+            .relu(0, 0)
+            .fc(2)
+            .softmax(3, 0)
+            .grad_shift(0)
+    };
+    let x_cols = vec![vec![40i64, -20], vec![10, 30], vec![-5, 25], vec![7, -13]];
+    assert_train_step_equivalent(
+        "paper-mlp",
+        seed,
+        &mut be,
+        build,
+        &x_cols,
+        vec![4],
+        2,
+        &[0, 1],
+    );
+}
+
+#[test]
+fn random_shapes_and_shifts_are_bit_identical() {
+    let seed = base_seed() ^ 0x5afe;
+    let mut be = Backends::new(seed);
+    let mut vr = GlyphRng::new(seed);
+    for case in 0..2 {
+        let case_seed = seed ^ ((case as u64 + 1) << 40);
+        let in_dim = 2 + vr.uniform_mod(3) as usize;
+        let hidden = 2 + vr.uniform_mod(3) as usize;
+        let classes = 2 + vr.uniform_mod(2) as usize;
+        let bits = 2 + vr.uniform_mod(3) as usize; // softmax width 2..=4
+        // a nonzero first-layer activation shift, exercised on the grid:
+        // inputs are multiples of 2^s, so the quantization stays aligned
+        let s = vr.uniform_mod(4) as u32;
+        let x_cols: Vec<Vec<i64>> = (0..in_dim)
+            .map(|_| {
+                (0..BATCH)
+                    .map(|_| ((vr.uniform_mod(31) as i64) - 15) << s)
+                    .collect()
+            })
+            .collect();
+        let sample_classes: Vec<usize> =
+            (0..BATCH).map(|_| vr.uniform_mod(classes as u64) as usize).collect();
+        let build = || {
+            NetworkBuilder::input_vec(in_dim)
+                .fc(hidden)
+                .relu(s, 0)
+                .fc(classes)
+                .softmax(bits, 0)
+                .grad_shift(0)
+        };
+        assert_train_step_equivalent(
+            &format!("random-{case} (in {in_dim}, hidden {hidden}, classes {classes}, bits {bits}, shift {s})"),
+            case_seed,
+            &mut be,
+            build,
+            &x_cols,
+            vec![in_dim],
+            classes,
+            &sample_classes,
+        );
+    }
+}
+
+#[test]
+fn logit_shift_and_gradient_truncation_round_identically() {
+    // single trainable FC + softmax with a nonzero logit shift and a
+    // nonzero grad_shift: the `∇ >> grad_shift` rounding through the
+    // switch round trip must agree bit for bit
+    let seed = base_seed() ^ 0x9afd;
+    let mut be = Backends::new(seed);
+    let s = 3u32;
+    let build = || NetworkBuilder::input_vec(3).fc(2).softmax(3, s).grad_shift(2);
+    let x_cols = vec![
+        vec![5i64 << s, -(3i64 << s)],
+        vec![-(7i64 << s), 1 << s],
+        vec![2 << s, 4 << s],
+    ];
+    assert_train_step_equivalent("logit-grad-shift", seed, &mut be, build, &x_cols, vec![3], 2, &[1, 0]);
+}
+
+#[test]
+fn frozen_conv_transfer_topology_is_bit_identical() {
+    let seed = base_seed() ^ 0xc22;
+    let mut be = Backends::new(seed);
+    let mut kr = GlyphRng::new(seed ^ 0x77);
+    let rand_kernels = |oc: usize, ic: usize, k: usize, rng: &mut GlyphRng| -> Vec<Vec<Vec<Vec<i64>>>> {
+        (0..oc)
+            .map(|_| {
+                (0..ic)
+                    .map(|_| {
+                        (0..k)
+                            .map(|_| (0..k).map(|_| (rng.uniform_mod(7) as i64) - 3).collect())
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let c1 = rand_kernels(2, 1, 3, &mut kr);
+    let c2 = rand_kernels(3, 2, 3, &mut kr);
+    // conv→BN→ReLU→pool ×2 → flatten → trainable FC head, all shifts on
+    // the grid (the paper's Table-4 transfer pipeline at tiny scale)
+    let build = || {
+        NetworkBuilder::input_image(1, 14, 14)
+            .conv_frozen(c1.clone())
+            .batchnorm_identity(2)
+            .relu(0, 0)
+            .avg_pool()
+            .conv_frozen(c2.clone())
+            .batchnorm_identity(3)
+            .relu(0, 0)
+            .avg_pool()
+            .flatten()
+            .fc(4)
+            .relu(0, 0)
+            .fc(2)
+            .softmax(3, 0)
+            .grad_shift(0)
+    };
+    let mut xr = GlyphRng::new(seed ^ 0x88);
+    let x_cols: Vec<Vec<i64>> = (0..14 * 14)
+        .map(|_| (0..BATCH).map(|_| (xr.uniform_mod(17) as i64) - 8).collect())
+        .collect();
+    assert_train_step_equivalent(
+        "transfer-cnn",
+        seed,
+        &mut be,
+        build,
+        &x_cols,
+        vec![1, 14, 14],
+        2,
+        &[1, 0],
+    );
+}
+
+#[test]
+fn layer_level_errors_and_gradients_match() {
+    // the Layer-API pieces in isolation: ReLU forward/iReLU error masks and
+    // the FC convolution-trick gradients decode identically across backends
+    use glyph::nn::activation::{irelu_layer, relu_layer};
+    use glyph::nn::linear::FcLayer;
+    let seed = base_seed() ^ 0x1a9e;
+    let mut be = Backends::new(seed);
+    let mut vr = GlyphRng::new(seed);
+    let u_vals: Vec<Vec<i64>> = (0..3)
+        .map(|_| (0..BATCH).map(|_| (vr.uniform_mod(255) as i64) - 127).collect())
+        .collect();
+    let d_vals: Vec<Vec<i64>> = (0..3)
+        .map(|_| {
+            let mut v: Vec<i64> = (0..BATCH).map(|_| (vr.uniform_mod(255) as i64) - 127).collect();
+            v.reverse();
+            v
+        })
+        .collect();
+    let u_f = encode_cols(&mut be.fhe_client, &u_vals, vec![3], PackOrder::Forward);
+    let u_c = encode_cols(&mut be.clear_codec, &u_vals, vec![3], PackOrder::Forward);
+    let d_f = encode_cols(&mut be.fhe_client, &d_vals, vec![3], PackOrder::Reversed);
+    let d_c = encode_cols(&mut be.clear_codec, &d_vals, vec![3], PackOrder::Reversed);
+
+    let (a_f, st_f) = relu_layer(&be.fhe, &u_f, 0, PackOrder::Forward);
+    let (a_c, st_c) = relu_layer(&be.clear, &u_c, 0, PackOrder::Forward);
+    assert_eq!(
+        decode_tensor(&be.fhe_client, &a_f),
+        decode_tensor(&be.clear_codec, &a_c),
+        "seed {seed}: ReLU activations diverged"
+    );
+    let e_f = irelu_layer(&be.fhe, &d_f, &st_f, 0);
+    let e_c = irelu_layer(&be.clear, &d_c, &st_c, 0);
+    assert_eq!(
+        decode_tensor(&be.fhe_client, &e_f),
+        decode_tensor(&be.clear_codec, &e_c),
+        "seed {seed}: iReLU errors diverged"
+    );
+
+    let w_init = vec![vec![2i64, -3, 4], vec![1, 0, -5]];
+    let fc_f = FcLayer::new_encrypted(&w_init, &mut be.fhe_client, 0);
+    let fc_c = FcLayer::new_encrypted(&w_init, &mut be.clear_codec, 0);
+    let g_f = fc_f.gradients(&u_f, &d_f, &be.fhe);
+    let g_c = fc_c.gradients(&u_c, &d_c, &be.clear);
+    for j in 0..2 {
+        for i in 0..3 {
+            // the convolution-trick batch sum lives at coefficient batch−1
+            let got_f = be.fhe_client.decrypt_batch(&g_f[j][i], BATCH, 0)[BATCH - 1];
+            let got_c = be.clear_codec.decrypt_batch(&g_c[j][i], BATCH, 0)[BATCH - 1];
+            assert_eq!(got_f, got_c, "seed {seed}: gradient ({j},{i}) diverged");
+        }
+    }
+}
+
+#[test]
+fn clear_epoch_on_mnist_subset_matches_plan_totals() {
+    // the acceptance scenario: a full clear-backend epoch over an MNIST
+    // subset completes in CI with live op counters exactly matching the
+    // compiled plan's totals × steps — every homomorphic op the plan
+    // promises is the op the clear engine counts.
+    use glyph::train::Trainer;
+    let batch = 8;
+    let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Default, batch);
+    let mut rng = GlyphRng::new(7);
+    let net = NetworkBuilder::input_vec(196)
+        .fc(32)
+        .relu(8, 8)
+        .fc(10)
+        .softmax(8, 8)
+        .grad_shift(12)
+        .build(&mut codec, &mut rng, &engine)
+        .unwrap();
+    let totals = net.plan.totals();
+    let mut trainer = Trainer::new(net, 10);
+    let ds = glyph::data::mnist(true, 128, 5);
+    let stats = trainer.train_epoch(&ds, &engine, &mut codec).expect("epoch runs");
+    assert_eq!(stats.steps, 16);
+    assert_eq!(stats.samples, 128);
+    let n = stats.steps as u64;
+    assert_counts_match("clear-epoch", 7, stats.ops, scale_ops(totals, n));
+}
+
+fn scale_ops(t: StepOps, n: u64) -> StepOps {
+    StepOps {
+        mult_cc: t.mult_cc * n,
+        mult_cp: t.mult_cp * n,
+        add_cc: t.add_cc * n,
+        tlu: t.tlu * n,
+        relu_values: t.relu_values * n,
+        softmax_values: t.softmax_values * n,
+        act_gates: t.act_gates * n,
+        extract_pbs: t.extract_pbs * n,
+        switch_b2t: t.switch_b2t * n,
+        switch_t2b: t.switch_t2b * n,
+        refresh: t.refresh * n,
+        extract_lanes: t.extract_lanes * n,
+        repack_lanes: t.repack_lanes * n,
+    }
+}

@@ -214,8 +214,8 @@ fn fc_layer_paths_match_naive_engine_oracle() {
                     glyph::nn::linear::Weight::Enc(ct) => ct,
                     _ => unreachable!("encrypted layer"),
                 };
-                let mut t = wct.clone();
-                t.mul_assign(&x.cts[i], &engine.rlk, &engine.ctx);
+                let mut t = wct.fhe().clone();
+                t.mul_assign(x.cts[i].fhe(), &engine.fhe().rlk, &engine.fhe().ctx);
                 match &mut acc {
                     None => acc = Some(t),
                     Some(a) => a.add_assign(&t),
@@ -226,7 +226,7 @@ fn fc_layer_paths_match_naive_engine_oracle() {
         .collect();
     for j in 0..2 {
         assert_eq!(
-            client.bgv_sk.decrypt(&u.cts[j]).coeffs,
+            client.bgv_sk.decrypt(u.cts[j].fhe()).coeffs,
             client.bgv_sk.decrypt(&naive_forward[j]).coeffs,
             "forward row {j}"
         );
@@ -243,15 +243,15 @@ fn fc_layer_paths_match_naive_engine_oracle() {
                 glyph::nn::linear::Weight::Enc(ct) => ct,
                 _ => unreachable!(),
             };
-            let mut t = wct.clone();
-            t.mul_assign(&delta.cts[j], &engine.rlk, &engine.ctx);
+            let mut t = wct.fhe().clone();
+            t.mul_assign(delta.cts[j].fhe(), &engine.fhe().rlk, &engine.fhe().ctx);
             match &mut acc {
                 None => acc = Some(t),
                 Some(a) => a.add_assign(&t),
             }
         }
         assert_eq!(
-            client.bgv_sk.decrypt(&back.cts[i]).coeffs,
+            client.bgv_sk.decrypt(back.cts[i].fhe()).coeffs,
             client.bgv_sk.decrypt(&acc.unwrap()).coeffs,
             "backward col {i}"
         );
@@ -261,10 +261,10 @@ fn fc_layer_paths_match_naive_engine_oracle() {
     let grads = layer.gradients(&x, &delta, &engine);
     for j in 0..2 {
         for i in 0..3 {
-            let mut g = x.cts[i].clone();
-            g.mul_assign(&delta.cts[j], &engine.rlk, &engine.ctx);
+            let mut g = x.cts[i].fhe().clone();
+            g.mul_assign(delta.cts[j].fhe(), &engine.fhe().rlk, &engine.fhe().ctx);
             assert_eq!(
-                client.bgv_sk.decrypt(&grads[j][i]).coeffs,
+                client.bgv_sk.decrypt(grads[j][i].fhe()).coeffs,
                 client.bgv_sk.decrypt(&g).coeffs,
                 "gradient ({j},{i})"
             );

@@ -94,11 +94,11 @@ fn repeated_switch_round_trips_stay_correct() {
     for round in 0..4 {
         let bits = engine.switch_to_bits(&ct, &positions, frac);
         // identity recomposition
-        let truth = glyph::tfhe::LweCiphertext::trivial(glyph::tfhe::encode_bit(true), engine.gate_ck.params.n);
-        let lanes: Vec<glyph::tfhe::LweCiphertext> = bits
+        let truth = engine.trivial_bit(true);
+        let lanes: Vec<glyph::nn::backend::Bit> = bits
             .iter()
             .map(|lane_bits| {
-                let mut acc: Option<glyph::tfhe::LweCiphertext> = None;
+                let mut acc: Option<glyph::nn::backend::Bit> = None;
                 for (i, b) in lane_bits.iter().enumerate() {
                     let w = engine.gate_and_weighted(b, &truth, glyph::switch::extract::bit_position(i));
                     match &mut acc {

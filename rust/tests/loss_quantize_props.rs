@@ -1,0 +1,169 @@
+//! Seeded randomized property tests for `nn/loss.rs` and `nn/quantize.rs`
+//! (the `ntt_properties.rs` pattern: many cases per property, failing
+//! seeds printed, `GLYPH_PROP_SEED` replays a base seed).
+//!
+//! Loss: the quadratic derivative δ = d − t is linear, sign-correct and
+//! batch-exact on both execution backends. Quantize: the SWALP helpers
+//! round-trip within one ulp, saturate at ±127, and `requantize_shift`
+//! agrees with the switch's own `quantize_plain` reference on random
+//! values and shifts.
+
+use glyph::math::GlyphRng;
+use glyph::nn::backend::Codec;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::nn::loss::quadratic_loss_delta;
+use glyph::nn::quantize::{dequantize, quantize_i8, requantize_shift, shift_for};
+use glyph::nn::tensor::{EncTensor, PackOrder};
+use glyph::switch::extract::quantize_plain;
+
+fn base_seed() -> u64 {
+    std::env::var("GLYPH_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x10_55_0b_5e_55_10_75)
+}
+
+#[test]
+fn loss_delta_is_d_minus_t_signed_and_linear() {
+    let seed = base_seed();
+    let batch = 4;
+    let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, batch);
+    let mut rng = GlyphRng::new(seed);
+    for case in 0..100 {
+        let case_seed = seed ^ ((case as u64) << 32);
+        let classes = 2 + rng.uniform_mod(4) as usize;
+        let d_vals: Vec<Vec<i64>> = (0..classes)
+            .map(|_| (0..batch).map(|_| rng.uniform_mod(128) as i64).collect())
+            .collect();
+        let t_vals: Vec<Vec<i64>> = (0..classes)
+            .map(|_| (0..batch).map(|_| if rng.uniform_mod(2) == 1 { 127 } else { 0 }).collect())
+            .collect();
+        let enc = |codec: &mut dyn Codec, cols: &[Vec<i64>]| {
+            let cts = cols.iter().map(|v| codec.encrypt_batch(v, 0)).collect();
+            EncTensor::new(cts, vec![cols.len()], PackOrder::Reversed, 0)
+        };
+        let d = enc(&mut codec, &d_vals);
+        let t = enc(&mut codec, &t_vals);
+        let delta = quadratic_loss_delta(&d, &t, &engine);
+        for k in 0..classes {
+            let got = codec.decrypt_batch(&delta.cts[k], batch, 0);
+            for b in 0..batch {
+                let want = d_vals[k][b] - t_vals[k][b];
+                assert_eq!(got[b], want, "seed {case_seed}: class {k} lane {b}");
+                // sign property: the gradient pushes the distribution
+                // toward the one-hot target
+                if t_vals[k][b] == 127 {
+                    assert!(got[b] <= 0, "seed {case_seed}: hot-class delta must be ≤ 0");
+                } else {
+                    assert!(got[b] >= 0, "seed {case_seed}: cold-class delta must be ≥ 0");
+                }
+            }
+        }
+        // scale property: doubling d − t doubles δ (linearity over the ring)
+        let d2_vals: Vec<Vec<i64>> = d_vals
+            .iter()
+            .zip(&t_vals)
+            .map(|(dr, tr)| dr.iter().zip(tr).map(|(&a, &b)| 2 * a - b).collect())
+            .collect();
+        let d2 = enc(&mut codec, &d2_vals);
+        let delta2 = quadratic_loss_delta(&d2, &t, &engine);
+        for k in 0..classes {
+            let got = codec.decrypt_batch(&delta.cts[k], batch, 0);
+            let got2 = codec.decrypt_batch(&delta2.cts[k], batch, 0);
+            for b in 0..batch {
+                assert_eq!(got2[b], 2 * got[b], "seed {case_seed}: δ must scale linearly");
+            }
+        }
+    }
+}
+
+#[test]
+fn loss_delta_identical_on_both_backends() {
+    let seed = base_seed() ^ 0xd1ff;
+    let batch = 3;
+    let (fhe, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, seed);
+    let (clear, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, batch);
+    let mut rng = GlyphRng::new(seed);
+    let d_vals: Vec<Vec<i64>> =
+        (0..3).map(|_| (0..batch).map(|_| rng.uniform_mod(128) as i64).collect()).collect();
+    let t_vals: Vec<Vec<i64>> =
+        (0..3).map(|_| (0..batch).map(|_| (rng.uniform_mod(2) as i64) * 127).collect()).collect();
+    let enc = |codec: &mut dyn Codec, cols: &[Vec<i64>]| {
+        let cts = cols.iter().map(|v| codec.encrypt_batch(v, 0)).collect();
+        EncTensor::new(cts, vec![cols.len()], PackOrder::Reversed, 0)
+    };
+    let delta_f = quadratic_loss_delta(&enc(&mut client, &d_vals), &enc(&mut client, &t_vals), &fhe);
+    let delta_c = quadratic_loss_delta(&enc(&mut codec, &d_vals), &enc(&mut codec, &t_vals), &clear);
+    for k in 0..3 {
+        assert_eq!(
+            client.decrypt_batch(&delta_f.cts[k], batch, 0),
+            codec.decrypt_batch(&delta_c.cts[k], batch, 0),
+            "seed {seed}: class {k}"
+        );
+    }
+}
+
+#[test]
+fn quantize_roundtrip_and_saturation_properties() {
+    let seed = base_seed() ^ 0x9a;
+    let mut rng = GlyphRng::new(seed);
+    for case in 0..100 {
+        let case_seed = seed ^ ((case as u64) << 32);
+        let n = 1 + rng.uniform_mod(64) as usize;
+        let scale = 2f64.powi(rng.uniform_mod(24) as i32 - 12);
+        let xs: Vec<f64> = (0..n)
+            .map(|_| (rng.uniform_mod(20001) as f64 / 10000.0 - 1.0) * scale)
+            .collect();
+        let (vs, e) = quantize_i8(&xs);
+        assert!(vs.iter().all(|&v| v.abs() <= 127), "seed {case_seed}: 8-bit range");
+        let back = dequantize(&vs, e);
+        let ulp = 2f64.powi(e);
+        for (x, y) in xs.iter().zip(&back) {
+            assert!(
+                (x - y).abs() <= ulp,
+                "seed {case_seed}: round-trip error {} > ulp {ulp}",
+                (x - y).abs()
+            );
+        }
+        // the exponent is minimal: max |x| must need more than half the range
+        let max = xs.iter().fold(0f64, |m, &x| m.max(x.abs()));
+        if max > 0.0 {
+            let used = vs.iter().map(|v| v.abs()).max().unwrap();
+            assert!(used > 63 || max <= 63.5 * ulp, "seed {case_seed}: wasted range ({used})");
+        }
+    }
+    // saturation: values past the representable range clamp to ±127
+    let (vs, _e) = quantize_i8(&[1e30, -1e30, 0.0]);
+    assert_eq!(vs[0], 127);
+    assert_eq!(vs[1], -127);
+    assert_eq!(vs[2], 0);
+}
+
+#[test]
+fn requantize_shift_matches_switch_quantization_reference() {
+    let seed = base_seed() ^ 0x5e1f;
+    let mut rng = GlyphRng::new(seed);
+    let t = 1u64 << 16; // test-profile plaintext modulus, frac = 8
+    for case in 0..100 {
+        let case_seed = seed ^ ((case as u64) << 32);
+        let shift = 1 + rng.uniform_mod(8) as u32;
+        let xs: Vec<i64> =
+            (0..8).map(|_| rng.uniform_mod(1 << (shift + 8)) as i64 - (1 << (shift + 7))).collect();
+        let got = requantize_shift(&xs, shift);
+        for (&x, &g) in xs.iter().zip(&got) {
+            // the switch's reference: pre-shift to the top of t, then take
+            // the top 8 bits round-to-nearest
+            let frac = t.trailing_zeros() - 8;
+            let want = quantize_plain((x << (frac - shift)) % (t as i64), t);
+            assert_eq!(g, want, "seed {case_seed}: x={x} shift={shift}");
+            assert!(g.abs() <= 128, "seed {case_seed}: 8-bit output");
+        }
+    }
+    // shift_for brings any magnitude into range
+    for case in 0..50 {
+        let m = rng.uniform_mod(1 << 40) as i64;
+        let s = shift_for(m);
+        assert!(m >> s <= 127, "case {case}: shift_for({m}) = {s}");
+        assert!(s == 0 || (m >> (s - 1)) > 127, "case {case}: minimal shift");
+    }
+}

@@ -35,7 +35,7 @@ fn min_forward_margin(net: &Network, x: &EncTensor, client: &ClientKeys, engine:
     pass.outputs
         .iter()
         .flat_map(|t| t.cts.iter())
-        .map(|ct| client.bgv_sk.noise_margin_bits(ct))
+        .map(|ct| client.bgv_sk.noise_margin_bits(ct.fhe()))
         .fold(f64::INFINITY, f64::min)
 }
 
@@ -44,7 +44,7 @@ fn min_weight_margin(net: &Network, client: &ClientKeys) -> f64 {
         .iter()
         .flat_map(|l| l.w.iter().flatten())
         .filter_map(|w| match w {
-            Weight::Enc(ct) => Some(client.bgv_sk.noise_margin_bits(ct)),
+            Weight::Enc(ct) => Some(client.bgv_sk.noise_margin_bits(ct.fhe())),
             Weight::Plain(_) => None,
         })
         .fold(f64::INFINITY, f64::min)

@@ -56,7 +56,7 @@ fn weight_snapshot(net: &Network, client: &ClientKeys) -> Vec<i64> {
             l.w.iter().flat_map(|row| {
                 row.iter().map(|w| match w {
                     Weight::Enc(ct) => client.decrypt_batch(ct, 1, 0)[0],
-                    Weight::Plain(p) => p.pt.coeffs[0],
+                    Weight::Plain(p) => p.value(),
                 })
             })
         })
