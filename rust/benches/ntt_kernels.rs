@@ -1,0 +1,129 @@
+//! Ring-kernel microbench: scalar vs SIMD (lazy-reduction) kernels head to
+//! head on the four hot loops they cover — negacyclic NTT forward/inverse,
+//! the fused pointwise MAC, the complex FFT pipeline and the hoisted LWE
+//! key switch. Emits `bench_out/BENCH_ntt.json` with per-degree NTTs/sec
+//! and butterflies/sec plus `*_speedup_x100` counters (simd over scalar).
+//! Build with `RUSTFLAGS="-C target-cpu=native"` to give LLVM the wide
+//! lanes the simd kernels are shaped for; `GLYPH_BENCH_FULL=1` adds the
+//! larger ring degrees.
+
+use glyph::bench_util::{full_profile, report_json_with_counters, time_op, BenchRecord};
+use glyph::math::fft::{Cplx, TorusFft};
+use glyph::math::kernels::{scalar_kernels, simd_kernels, RingKernels};
+use glyph::math::modarith::gen_ntt_primes;
+use glyph::math::{GlyphRng, NttTable};
+use glyph::tfhe::{LweCiphertext, LweKey, LweKeySwitchKey};
+
+const KERNELS: [(&str, fn() -> &'static dyn RingKernels); 2] =
+    [("scalar", scalar_kernels), ("simd", simd_kernels)];
+
+fn main() {
+    let p = gen_ntt_primes(1, 1 << 26, 1 << 32)[0];
+    let degrees: &[usize] = if full_profile() { &[256, 1024, 4096, 8192] } else { &[256, 1024, 4096] };
+    eprintln!("ntt_kernels bench: p = {p}, degrees {degrees:?}");
+    let mut records = Vec::new();
+    let mut counters: Vec<(String, u64)> = Vec::new();
+
+    // --- NTT forward/inverse + fused pointwise MAC, per degree --------------
+    for &n in degrees {
+        let iters = (1 << 22) / n; // ~4M butterffly-carrying lanes per leg
+        let log2n = n.trailing_zeros() as u64;
+        let butterflies = (n as u64 / 2) * log2n;
+        let mut secs = [[0f64; 3]; 2]; // [kernel][fwd, inv, acc2]
+        for (ki, (kname, kfn)) in KERNELS.iter().enumerate() {
+            let table = NttTable::with_kernels(n, p, kfn());
+            let mut rng = GlyphRng::new(0x6e74 ^ n as u64);
+            let mut a: Vec<u64> = (0..n).map(|_| rng.next_u64() % p).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % p).collect();
+            let c: Vec<u64> = (0..n).map(|_| rng.next_u64() % p).collect();
+            let d: Vec<u64> = (0..n).map(|_| rng.next_u64() % p).collect();
+            let mut acc: Vec<u64> = (0..n).map(|_| rng.next_u64() % p).collect();
+
+            let t_fwd = time_op(iters, || {
+                table.forward(&mut a);
+                std::hint::black_box(a[0]);
+            });
+            let t_inv = time_op(iters, || {
+                table.inverse(&mut a);
+                std::hint::black_box(a[0]);
+            });
+            let t_acc2 = time_op(iters, || {
+                table.pointwise_acc2(&mut acc, &a, &b, &c, &d);
+                std::hint::black_box(acc[0]);
+            });
+            secs[ki] = [t_fwd, t_inv, t_acc2];
+            records.push(BenchRecord::new(&format!("ntt_fwd_n{n}_{kname}"), t_fwd, 1));
+            records.push(BenchRecord::new(&format!("ntt_inv_n{n}_{kname}"), t_inv, 1));
+            records.push(BenchRecord::new(&format!("pointwise_acc2_n{n}_{kname}"), t_acc2, 1));
+            counters.push((
+                format!("ntt_fwd_n{n}_{kname}_butterflies_per_sec"),
+                (butterflies as f64 / t_fwd) as u64,
+            ));
+            counters.push((format!("ntt_fwd_n{n}_{kname}_per_sec"), (1.0 / t_fwd) as u64));
+            println!(
+                "n={n:5} {kname:6}: fwd {:9.1} NTT/s ({:.3e} bf/s)  inv {:9.1} NTT/s  acc2 {:9.1}/s",
+                1.0 / t_fwd,
+                butterflies as f64 / t_fwd,
+                1.0 / t_inv,
+                1.0 / t_acc2
+            );
+        }
+        for (op, i) in [("ntt_fwd", 0usize), ("ntt_inv", 1), ("pointwise_acc2", 2)] {
+            counters
+                .push((format!("{op}_n{n}_speedup_x100"), (100.0 * secs[0][i] / secs[1][i]) as u64));
+        }
+    }
+
+    // --- complex FFT pipeline (blind-rotation shape, N = 1024) --------------
+    let n_fft = 1024usize;
+    let iters = 2048;
+    let mut fft_secs = [0f64; 2];
+    for (ki, (kname, kfn)) in KERNELS.iter().enumerate() {
+        let fft = TorusFft::with_kernels(n_fft, kfn());
+        let mut rng = GlyphRng::new(0xfff7);
+        let ints: Vec<i32> = (0..n_fft).map(|_| (rng.uniform_mod(129) as i32) - 64).collect();
+        let torus: Vec<u32> = (0..n_fft).map(|_| rng.torus32()).collect();
+        let fb = fft.forward_torus(&torus);
+        let mut lane = vec![Cplx::default(); n_fft / 2];
+        let mut acc = vec![Cplx::default(); n_fft / 2];
+        let mut out = vec![0u32; n_fft];
+        let t = time_op(iters, || {
+            fft.forward_int_into(&ints, &mut lane);
+            fft.mul_acc(&lane, &fb, &mut acc);
+            fft.inverse_add_to_torus_inplace(&mut acc, &mut out);
+            std::hint::black_box(out[0]);
+        });
+        fft_secs[ki] = t;
+        records.push(BenchRecord::new(&format!("fft_int_mac_inv_n{n_fft}_{kname}"), t, 1));
+        println!("fft n={n_fft} {kname:6}: {:9.1} fwd+mac+inv/s", 1.0 / t);
+    }
+    counters.push((
+        format!("fft_n{n_fft}_speedup_x100"),
+        (100.0 * fft_secs[0] / fft_secs[1]) as u64,
+    ));
+
+    // --- hoisted LWE key switch (extractor shape: 256 → 64) -----------------
+    let mut rng = GlyphRng::new(0x4b53);
+    let src = LweKey::generate_binary(256, &mut rng);
+    let dst = LweKey::generate_binary(64, &mut rng);
+    let mut ksk = LweKeySwitchKey::generate(&src, &dst, 2, 8, 1e-8, &mut rng);
+    let ct = LweCiphertext::encrypt(1 << 29, &src, 1e-8, &mut rng);
+    let mut out = LweCiphertext::trivial(0, 64);
+    let ks_iters = 4096;
+    let mut ks_secs = [0f64; 2];
+    for (ki, (kname, kfn)) in KERNELS.iter().enumerate() {
+        ksk.kernels = kfn();
+        ksk.switch_into(&ct, &mut out); // warm the thread-local scratch
+        let t = time_op(ks_iters, || {
+            ksk.switch_into(&ct, &mut out);
+            std::hint::black_box(out.b);
+        });
+        ks_secs[ki] = t;
+        records.push(BenchRecord::new(&format!("lwe_keyswitch_256to64_{kname}"), t, 1));
+        println!("keyswitch 256→64 {kname:6}: {:9.1} switches/s", 1.0 / t);
+    }
+    counters.push(("keyswitch_speedup_x100".to_string(), (100.0 * ks_secs[0] / ks_secs[1]) as u64));
+
+    let counter_refs: Vec<(&str, u64)> = counters.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    report_json_with_counters("ntt", &records, &counter_refs);
+}

@@ -24,6 +24,7 @@
 
 use super::encoding::{CachedPlaintext, Plaintext};
 use super::keys::{BgvContext, RelinKey};
+use crate::math::modarith::barrett_reduce;
 use crate::math::poly::{RnsContext, RnsPoly};
 use std::sync::Arc;
 
@@ -308,11 +309,17 @@ impl BgvScratch {
                 dig.is_ntt = false;
                 for l in 0..level {
                     let p = rctx.primes[l];
+                    let br = rctx.ntts[l].barrett();
                     for j in 0..n {
+                        // Centered digit c = [d2]_{q_i} ∈ (−q_i/2, q_i/2],
+                        // lifted to Z_p with a Barrett reduction instead of
+                        // `u64 %`. Replicates the old `%`-based lift exactly,
+                        // including the p − 0 = p representative for negative
+                        // multiples of p (invisible after the forward NTT).
                         let v = d2.res[i][j];
-                        let c: i64 = if v > half { v as i64 - qi as i64 } else { v as i64 };
-                        dig.res[l][j] =
-                            if c >= 0 { (c as u64) % p } else { p - ((-c) as u64 % p) };
+                        let (c_abs, neg) = if v > half { (qi - v, true) } else { (v, false) };
+                        let r = barrett_reduce(c_abs, p, br);
+                        dig.res[l][j] = if neg { p - r } else { r };
                     }
                 }
                 dig.to_ntt();

@@ -8,11 +8,25 @@
 //! two forward FFTs, a pointwise pass and one inverse FFT of size N/2.
 //!
 //! Precision budget: gadget digits are `|d| ≤ Bg/2 ≤ 2^6`, torus coefficients
-//! `< 2^32`; an external-product accumulation stays below
-//! `(k+1)·l·N/2·2^6·2^32 ≈ 2^51 < 2^53`, so f64 is exact enough for the
-//! decomposed operand ordering used here (asserted in tests).
+//! centered `|c| ≤ 2^31`; a full TRGSW external-product accumulation of
+//! `(k+1)·l = 6` negacyclic products therefore has coefficients bounded by
+//! `6·N·2^6·2^31 ≈ 2^49.6 < 2^53` at `N = 1024`, so the f64 pipeline is
+//! exact at the integer level up to FFT rounding noise of a few torus ulps.
+//! This budget is machine-checked (extreme digits, extreme coefficients) in
+//! `tests/fft_precision.rs`, not just asserted here.
+//!
+//! The stage loop and the frequency-domain MAC dispatch through the
+//! pluggable [`RingKernels`] layer (`math/kernels.rs`). Twiddles are stored
+//! as structure-of-arrays re/im slabs so the vectorized kernel streams them
+//! as unit-stride f64 lanes; both kernel sets evaluate the identical
+//! expression tree (no FMA contraction), so results are bit-identical —
+//! enforced by `tests/kernel_equivalence.rs`.
 
-/// Minimal complex type (no vendored `num-complex`).
+use super::kernels::{default_kernels, RingKernels};
+
+/// Minimal complex type (no vendored `num-complex`). `repr(C)` pins the
+/// (re, im) layout the kernel layer's split-slab loops assume.
+#[repr(C)]
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Cplx {
     pub re: f64,
@@ -49,28 +63,43 @@ pub struct TorusFft {
     pub n: usize,
     /// FFT size M = N/2.
     m: usize,
-    /// e^{+2πi k/M} twiddles, bit-reversal-friendly per-stage layout.
-    twiddles: Vec<Cplx>,
+    /// e^{+2πi k/M} twiddles, per-stage layout, split re/im slabs
+    /// (structure-of-arrays for the vectorized stage kernel).
+    tw_re: Vec<f64>,
+    tw_im: Vec<f64>,
     /// Twist ω^j = e^{iπ j/N}, j in 0..M.
     twist: Vec<Cplx>,
     /// Inverse twist ω^{-j} / M (folding the 1/M scale in).
     inv_twist: Vec<Cplx>,
     /// Scratch bit-reversal permutation.
     bitrev: Vec<usize>,
+    /// Kernel set the stage loop and MAC dispatch through.
+    kernels: &'static dyn RingKernels,
 }
 
+/// The construction-time name the switch/bench layers use; same plan type.
+pub type FftTable = TorusFft;
+
 impl TorusFft {
+    /// Plan with the process-default kernel set.
     pub fn new(n: usize) -> Self {
+        Self::with_kernels(n, default_kernels())
+    }
+
+    /// Plan pinned to an explicit kernel set (conformance tests / benches).
+    pub fn with_kernels(n: usize, kernels: &'static dyn RingKernels) -> Self {
         assert!(n.is_power_of_two() && n >= 4);
         let m = n / 2;
         let bits = m.trailing_zeros();
-        let mut twiddles = Vec::with_capacity(m.max(1));
         // Per-stage twiddles: stage with half-size h uses e^{2πi k/(2h)}.
+        let mut tw_re = Vec::with_capacity(m.max(1));
+        let mut tw_im = Vec::with_capacity(m.max(1));
         let mut h = 1;
         while h < m {
             for k in 0..h {
                 let ang = std::f64::consts::PI * (k as f64) / (h as f64);
-                twiddles.push(Cplx::new(ang.cos(), ang.sin()));
+                tw_re.push(ang.cos());
+                tw_im.push(ang.sin());
             }
             h <<= 1;
         }
@@ -88,7 +117,13 @@ impl TorusFft {
             })
             .collect();
         let bitrev = (0..m).map(|i| i.reverse_bits() >> (usize::BITS - bits.max(1)) as usize).collect();
-        TorusFft { n, m, twiddles, twist, inv_twist, bitrev }
+        TorusFft { n, m, tw_re, tw_im, twist, inv_twist, bitrev, kernels }
+    }
+
+    /// The kernel set this plan dispatches through.
+    #[inline]
+    pub fn kernels(&self) -> &'static dyn RingKernels {
+        self.kernels
     }
 
     /// In-place size-M DFT with e^{+2πi/M} convention (DIT, natural in /
@@ -105,21 +140,7 @@ impl TorusFft {
                 a.swap(i, j);
             }
         }
-        let mut h = 1usize;
-        let mut tw_off = 0usize;
-        while h < m {
-            for start in (0..m).step_by(2 * h) {
-                for k in 0..h {
-                    let w = self.twiddles[tw_off + k];
-                    let u = a[start + k];
-                    let v = a[start + k + h].mul(w);
-                    a[start + k] = u.add(v);
-                    a[start + k + h] = u.sub(v);
-                }
-            }
-            tw_off += h;
-            h <<= 1;
-        }
+        self.kernels.fft_stages(&self.tw_re, &self.tw_im, a);
     }
 
     /// Inverse of [`fft_inplace`] *without* the 1/M scale (the scale lives in
@@ -182,9 +203,8 @@ impl TorusFft {
 
     /// Pointwise multiply-accumulate in the FFT domain.
     pub fn mul_acc(&self, a: &[Cplx], b: &[Cplx], acc: &mut [Cplx]) {
-        for i in 0..self.m {
-            a[i].mul_add_acc(b[i], &mut acc[i]);
-        }
+        debug_assert_eq!(a.len(), self.m);
+        self.kernels.fft_mul_acc(a, b, acc);
     }
 
     /// Inverse transform; result coefficients rounded and wrapped to torus32,
@@ -244,6 +264,7 @@ pub fn negacyclic_mul_int_torus_naive(ints: &[i32], torus: &[u32]) -> Vec<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::math::kernels::{scalar_kernels, simd_kernels};
     use crate::math::rng::GlyphRng;
 
     fn torus_dist(a: u32, b: u32) -> u32 {
@@ -264,6 +285,30 @@ mod tests {
                 // f64 rounding may differ by a few ulps of the torus.
                 assert!(torus_dist(fast[i], slow[i]) < 1 << 6, "n={n} i={i}: {} vs {}", fast[i], slow[i]);
             }
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_plans_are_bit_identical() {
+        for n in [8usize, 64, 512] {
+            let fs = TorusFft::with_kernels(n, scalar_kernels());
+            let fv = TorusFft::with_kernels(n, simd_kernels());
+            let mut rng = GlyphRng::new(0xfeed ^ n as u64);
+            let ints: Vec<i32> = (0..n).map(|_| (rng.uniform_mod(129) as i32) - 64).collect();
+            let torus: Vec<u32> = (0..n).map(|_| rng.torus32()).collect();
+            // frequency-domain buffers must match to the last f64 bit
+            let zs = fs.forward_torus(&torus);
+            let zv = fv.forward_torus(&torus);
+            for (a, b) in zs.iter().zip(&zv) {
+                assert_eq!(a.re.to_bits(), b.re.to_bits(), "n={n}");
+                assert_eq!(a.im.to_bits(), b.im.to_bits(), "n={n}");
+            }
+            // ...and so must the rounded torus output of a full product
+            assert_eq!(
+                fs.negacyclic_mul_int_torus(&ints, &torus),
+                fv.negacyclic_mul_int_torus(&ints, &torus),
+                "n={n}"
+            );
         }
     }
 

@@ -1,0 +1,564 @@
+//! Pluggable ring-arithmetic kernel layer: every hot inner loop of the
+//! NTT/FFT/keyswitch core behind one trait, with a scalar reference
+//! implementation and a vectorized implementation selected at table
+//! construction (`GLYPH_KERNELS=scalar|simd`, default `simd`).
+//!
+//! # The two implementations
+//!
+//! * [`ScalarKernels`] — the pre-existing loops, verbatim: branchy
+//!   `add_mod`/`sub_mod` butterflies with fully-reduced values in `[0, p)`
+//!   at every step. This is the reference semantics.
+//! * [`SimdKernels`] — Harvey lazy-reduction butterflies: values stay
+//!   redundant in `[0, 4p)` (forward) / `[0, 2p)` (inverse) through the
+//!   whole layer loop, Shoup multiplies never correct, and one branchless
+//!   min-sweep canonicalizes at the end. Every loop body is straight-line
+//!   (no data-dependent branches), so LLVM auto-vectorizes it onto
+//!   AVX2/AVX-512 (or NEON) lanes under `-C target-cpu=native` — the
+//!   portable route to SIMD on the stable toolchain CI pins
+//!   (nightly `std::simd` and unsafe `std::arch` intrinsics are both
+//!   avoided on purpose; the CI kernel matrix builds with
+//!   `RUSTFLAGS=-C target-cpu=native` to unlock the wide lanes).
+//!
+//! Both implementations compute *exact* mod-p integer arithmetic (and
+//! bit-identical f64 expressions on the FFT side — note: no FMA, which
+//! would change roundings), so every consumer is bit-identical under either
+//! kernel set. `tests/kernel_equivalence.rs` enforces this directly and the
+//! five conformance suites (`pbs_equivalence`, `bgv_mac_equivalence`,
+//! `switch_roundtrip`, `train_step_golden`, `backend_equivalence`) enforce
+//! it end-to-end under the CI matrix.
+
+use super::fft::Cplx;
+use super::modarith::{add_mod, barrett_mul, mul_shoup, mul_shoup_lazy, sub_mod};
+use std::sync::OnceLock;
+
+/// The hot inner loops of the ring-arithmetic core. One `&'static`
+/// implementation is attached to each `NttTable`/`TorusFft`/key-switch key
+/// at construction; everything downstream dispatches through it.
+///
+/// Contracts (shared by all implementations):
+/// * NTT values are canonical `[0, p)` at entry and exit of every method —
+///   lazy redundancy is an implementation detail that never escapes.
+/// * `p < 2^32` (RNS limb primes), so `4p < 2^34` leaves ample headroom
+///   in `u64` lanes.
+/// * FFT methods must evaluate the same f64 expression tree as the scalar
+///   reference (same order, no FMA contraction) to stay bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub trait RingKernels: Send + Sync {
+    /// Implementation name (`"scalar"` / `"simd"`), for logs and bench JSON.
+    fn name(&self) -> &'static str;
+
+    /// In-place forward negacyclic NTT (CT/DIT, ψ-twisted, bit-reversed
+    /// output). `psi_rev[m+i]` / its Shoup companion index exactly as built
+    /// by `NttTable::new`.
+    fn ntt_forward(&self, p: u64, psi_rev: &[u64], psi_rev_shoup: &[u64], a: &mut [u64]);
+
+    /// In-place inverse negacyclic NTT (GS/DIF) including the 1/N scale.
+    fn ntt_inverse(
+        &self,
+        p: u64,
+        inv_psi_rev: &[u64],
+        inv_psi_rev_shoup: &[u64],
+        inv_n: u64,
+        inv_n_shoup: u64,
+        a: &mut [u64],
+    );
+
+    /// `a[i] = a[i]·b[i] mod p` (Barrett).
+    fn pointwise(&self, p: u64, barrett: u64, a: &mut [u64], b: &[u64]);
+
+    /// `acc[i] += a[i]·b[i] mod p`.
+    fn pointwise_acc(&self, p: u64, barrett: u64, acc: &mut [u64], a: &[u64], b: &[u64]);
+
+    /// Fused `acc[i] += a[i]·b[i] + c[i]·d[i] mod p` (BGV cross term).
+    fn pointwise_acc2(
+        &self,
+        p: u64,
+        barrett: u64,
+        acc: &mut [u64],
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        d: &[u64],
+    );
+
+    /// `a[i] = a[i]·s mod p` with a Shoup-precomputed constant scalar.
+    fn scalar_mul(&self, p: u64, s: u64, s_shoup: u64, a: &mut [u64]);
+
+    /// The radix-2 DIT stage loop of the complex FFT, on an already
+    /// bit-reverse-permuted buffer. Twiddles arrive as structure-of-arrays
+    /// re/im slabs in the per-stage layout built by `TorusFft::new`.
+    fn fft_stages(&self, tw_re: &[f64], tw_im: &[f64], a: &mut [Cplx]);
+
+    /// Frequency-domain `acc[i] += a[i]·b[i]` (complex).
+    fn fft_mul_acc(&self, a: &[Cplx], b: &[Cplx], acc: &mut [Cplx]);
+
+    /// Balanced gadget decomposition of a whole torus32 polynomial into a
+    /// digit-major matrix: `out[j·n + i]` = digit `j` of `a[i]`, each in
+    /// `[-B/2, B/2)` with `B = 2^base_bit` (MSB-first, offset trick).
+    fn decompose_poly(&self, a: &[u32], levels: usize, base_bit: u32, out: &mut [i32]);
+
+    /// Key-switch AXPY: `out[k] -= d·row[k]` on wrapping torus32 lanes.
+    fn ks_submul(&self, out: &mut [u32], row: &[u32], d: u32);
+}
+
+/// Offset whose addition turns truncating base-2^bb digit extraction into
+/// balanced (centered) digits: `Σ_j (B/2) << (32 - (j+1)·bb)`. Shared by the
+/// TRGSW gadget decomposition and the LWE key switch.
+#[inline]
+pub fn gadget_offset(levels: usize, base_bit: u32) -> u32 {
+    let half = 1u32 << (base_bit - 1);
+    let mut offset = 0u32;
+    for j in 0..levels {
+        offset = offset.wrapping_add(half << (32 - (j as u32 + 1) * base_bit));
+    }
+    offset
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference implementation
+// ---------------------------------------------------------------------------
+
+/// Fully-reduced reference loops — the semantics both kernel sets must match.
+pub struct ScalarKernels;
+
+#[allow(clippy::too_many_arguments)]
+impl RingKernels for ScalarKernels {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn ntt_forward(&self, p: u64, psi_rev: &[u64], psi_rev_shoup: &[u64], a: &mut [u64]) {
+        let n = a.len();
+        let mut t = n;
+        let mut m = 1usize;
+        while m < n {
+            t >>= 1;
+            for i in 0..m {
+                let w = psi_rev[m + i];
+                let ws = psi_rev_shoup[m + i];
+                let j1 = 2 * i * t;
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = mul_shoup(*y, w, ws, p);
+                    *x = add_mod(u, v, p);
+                    *y = sub_mod(u, v, p);
+                }
+            }
+            m <<= 1;
+        }
+    }
+
+    fn ntt_inverse(
+        &self,
+        p: u64,
+        inv_psi_rev: &[u64],
+        inv_psi_rev_shoup: &[u64],
+        inv_n: u64,
+        inv_n_shoup: u64,
+        a: &mut [u64],
+    ) {
+        let n = a.len();
+        let mut t = 1usize;
+        let mut m = n;
+        while m > 1 {
+            let h = m >> 1;
+            for i in 0..h {
+                let w = inv_psi_rev[h + i];
+                let ws = inv_psi_rev_shoup[h + i];
+                let j1 = 2 * i * t;
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    *x = add_mod(u, v, p);
+                    *y = mul_shoup(sub_mod(u, v, p), w, ws, p);
+                }
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = mul_shoup(*x, inv_n, inv_n_shoup, p);
+        }
+    }
+
+    fn pointwise(&self, p: u64, barrett: u64, a: &mut [u64], b: &[u64]) {
+        for (x, &y) in a.iter_mut().zip(b.iter()) {
+            *x = barrett_mul(*x, y, p, barrett);
+        }
+    }
+
+    fn pointwise_acc(&self, p: u64, barrett: u64, acc: &mut [u64], a: &[u64], b: &[u64]) {
+        for ((s, &x), &y) in acc.iter_mut().zip(a).zip(b) {
+            *s = add_mod(*s, barrett_mul(x, y, p, barrett), p);
+        }
+    }
+
+    fn pointwise_acc2(
+        &self,
+        p: u64,
+        barrett: u64,
+        acc: &mut [u64],
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        d: &[u64],
+    ) {
+        for i in 0..acc.len() {
+            let cross =
+                add_mod(barrett_mul(a[i], b[i], p, barrett), barrett_mul(c[i], d[i], p, barrett), p);
+            acc[i] = add_mod(acc[i], cross, p);
+        }
+    }
+
+    fn scalar_mul(&self, p: u64, s: u64, s_shoup: u64, a: &mut [u64]) {
+        for x in a.iter_mut() {
+            *x = mul_shoup(*x, s, s_shoup, p);
+        }
+    }
+
+    fn fft_stages(&self, tw_re: &[f64], tw_im: &[f64], a: &mut [Cplx]) {
+        let m = a.len();
+        let mut h = 1usize;
+        let mut tw_off = 0usize;
+        while h < m {
+            for start in (0..m).step_by(2 * h) {
+                for k in 0..h {
+                    let w = Cplx::new(tw_re[tw_off + k], tw_im[tw_off + k]);
+                    let u = a[start + k];
+                    let v = a[start + k + h].mul(w);
+                    a[start + k] = u.add(v);
+                    a[start + k + h] = u.sub(v);
+                }
+            }
+            tw_off += h;
+            h <<= 1;
+        }
+    }
+
+    fn fft_mul_acc(&self, a: &[Cplx], b: &[Cplx], acc: &mut [Cplx]) {
+        for ((&x, &y), s) in a.iter().zip(b).zip(acc.iter_mut()) {
+            x.mul_add_acc(y, s);
+        }
+    }
+
+    fn decompose_poly(&self, a: &[u32], levels: usize, base_bit: u32, out: &mut [i32]) {
+        let n = a.len();
+        debug_assert_eq!(out.len(), levels * n);
+        let half = 1i32 << (base_bit - 1);
+        let mask = (1u32 << base_bit) - 1;
+        let offset = gadget_offset(levels, base_bit);
+        for (i, &x) in a.iter().enumerate() {
+            let xx = x.wrapping_add(offset);
+            for j in 0..levels {
+                let shift = 32 - (j as u32 + 1) * base_bit;
+                out[j * n + i] = (((xx >> shift) & mask) as i32) - half;
+            }
+        }
+    }
+
+    fn ks_submul(&self, out: &mut [u32], row: &[u32], d: u32) {
+        for (x, &y) in out.iter_mut().zip(row) {
+            *x = x.wrapping_sub(d.wrapping_mul(y));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vectorized implementation: Harvey lazy reduction, branchless sweeps
+// ---------------------------------------------------------------------------
+
+/// Branchless `min(r, r−p)` canonicalization: for `r < 2p` the subtraction
+/// wraps past 2^63 exactly when `r < p`, so `min` picks the reduced value.
+#[inline(always)]
+fn reduce_once(r: u64, p: u64) -> u64 {
+    r.min(r.wrapping_sub(p))
+}
+
+/// Lazy-reduction loops shaped for LLVM auto-vectorization (see module docs).
+pub struct SimdKernels;
+
+#[allow(clippy::too_many_arguments)]
+impl RingKernels for SimdKernels {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    /// Harvey forward butterflies: inputs to each layer are `< 4p`; the top
+    /// lane is folded to `[0, 2p)` by one min, the Shoup product lands in
+    /// `[0, 2p)` for *any* 64-bit operand, so `x' = x0 + t < 4p` and
+    /// `y' = x0 − t + 2p ∈ (0, 4p)` restore the invariant with zero
+    /// data-dependent branches. One final two-step min-sweep returns `[0, p)`.
+    fn ntt_forward(&self, p: u64, psi_rev: &[u64], psi_rev_shoup: &[u64], a: &mut [u64]) {
+        let n = a.len();
+        let two_p = 2 * p;
+        let mut t = n;
+        let mut m = 1usize;
+        while m < n {
+            t >>= 1;
+            for i in 0..m {
+                let w = psi_rev[m + i];
+                let ws = psi_rev_shoup[m + i];
+                let j1 = 2 * i * t;
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = reduce_once(*x, two_p);
+                    let v = mul_shoup_lazy(*y, w, ws, p);
+                    *x = u + v;
+                    *y = u.wrapping_sub(v).wrapping_add(two_p);
+                }
+            }
+            m <<= 1;
+        }
+        for x in a.iter_mut() {
+            *x = reduce_once(reduce_once(*x, two_p), p);
+        }
+    }
+
+    /// Lazy GS inverse: the `[0, 2p)` invariant holds into every layer
+    /// (canonical entry values trivially satisfy it); sums are folded back
+    /// once, differences are absorbed by the Shoup multiply (valid for any
+    /// 64-bit operand). The 1/N sweep canonicalizes.
+    fn ntt_inverse(
+        &self,
+        p: u64,
+        inv_psi_rev: &[u64],
+        inv_psi_rev_shoup: &[u64],
+        inv_n: u64,
+        inv_n_shoup: u64,
+        a: &mut [u64],
+    ) {
+        let n = a.len();
+        let two_p = 2 * p;
+        let mut t = 1usize;
+        let mut m = n;
+        while m > 1 {
+            let h = m >> 1;
+            for i in 0..h {
+                let w = inv_psi_rev[h + i];
+                let ws = inv_psi_rev_shoup[h + i];
+                let j1 = 2 * i * t;
+                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
+                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let u = *x;
+                    let v = *y;
+                    *x = reduce_once(u + v, two_p);
+                    let d = u.wrapping_sub(v).wrapping_add(two_p);
+                    *y = mul_shoup_lazy(d, w, ws, p);
+                }
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = reduce_once(mul_shoup_lazy(*x, inv_n, inv_n_shoup, p), p);
+        }
+    }
+
+    fn pointwise(&self, p: u64, barrett: u64, a: &mut [u64], b: &[u64]) {
+        for (x, &y) in a.iter_mut().zip(b.iter()) {
+            *x = barrett_mul(*x, y, p, barrett);
+        }
+    }
+
+    fn pointwise_acc(&self, p: u64, barrett: u64, acc: &mut [u64], a: &[u64], b: &[u64]) {
+        for ((s, &x), &y) in acc.iter_mut().zip(a).zip(b) {
+            // branchless add_mod: s + prod < 2p fits u64, one min folds back
+            *s = reduce_once(*s + barrett_mul(x, y, p, barrett), p);
+        }
+    }
+
+    fn pointwise_acc2(
+        &self,
+        p: u64,
+        barrett: u64,
+        acc: &mut [u64],
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        d: &[u64],
+    ) {
+        for i in 0..acc.len() {
+            let ab = barrett_mul(a[i], b[i], p, barrett);
+            let cd = barrett_mul(c[i], d[i], p, barrett);
+            let cross = reduce_once(ab + cd, p);
+            acc[i] = reduce_once(acc[i] + cross, p);
+        }
+    }
+
+    fn scalar_mul(&self, p: u64, s: u64, s_shoup: u64, a: &mut [u64]) {
+        for x in a.iter_mut() {
+            *x = reduce_once(mul_shoup_lazy(*x, s, s_shoup, p), p);
+        }
+    }
+
+    /// Same stage schedule as the scalar reference, but the innermost loop
+    /// runs over four zipped slices (lo/hi halves, re/im twiddle slabs) so
+    /// the compiler sees unit-stride bounds-free lanes. The arithmetic
+    /// expression per element is *identical* to the scalar path (and FMA is
+    /// never emitted for `a*b + c` written as two ops under the default
+    /// `-C fma=off`-equivalent semantics), keeping results bit-identical.
+    fn fft_stages(&self, tw_re: &[f64], tw_im: &[f64], a: &mut [Cplx]) {
+        let m = a.len();
+        let mut h = 1usize;
+        let mut tw_off = 0usize;
+        while h < m {
+            let wr = &tw_re[tw_off..tw_off + h];
+            let wi = &tw_im[tw_off..tw_off + h];
+            for start in (0..m).step_by(2 * h) {
+                let (lo, hi) = a[start..start + 2 * h].split_at_mut(h);
+                for (((x, y), &wre), &wim) in lo.iter_mut().zip(hi.iter_mut()).zip(wr).zip(wi) {
+                    let u = *x;
+                    let yv = *y;
+                    let vre = yv.re * wre - yv.im * wim;
+                    let vim = yv.re * wim + yv.im * wre;
+                    *x = Cplx::new(u.re + vre, u.im + vim);
+                    *y = Cplx::new(u.re - vre, u.im - vim);
+                }
+            }
+            tw_off += h;
+            h <<= 1;
+        }
+    }
+
+    fn fft_mul_acc(&self, a: &[Cplx], b: &[Cplx], acc: &mut [Cplx]) {
+        for ((&x, &y), s) in a.iter().zip(b).zip(acc.iter_mut()) {
+            // spelled out (not via mul_add_acc) so the slice-zip form stays
+            // the same expression tree: products, subtract/add, accumulate
+            s.re += x.re * y.re - x.im * y.im;
+            s.im += x.re * y.im + x.im * y.re;
+        }
+    }
+
+    /// Level-major passes: shift and mask are loop constants per level, so
+    /// each pass is a pure shift/and/sub sweep over u32 lanes.
+    fn decompose_poly(&self, a: &[u32], levels: usize, base_bit: u32, out: &mut [i32]) {
+        let n = a.len();
+        debug_assert_eq!(out.len(), levels * n);
+        let half = 1i32 << (base_bit - 1);
+        let mask = (1u32 << base_bit) - 1;
+        let offset = gadget_offset(levels, base_bit);
+        for j in 0..levels {
+            let shift = 32 - (j as u32 + 1) * base_bit;
+            for (d, &x) in out[j * n..(j + 1) * n].iter_mut().zip(a) {
+                *d = (((x.wrapping_add(offset) >> shift) & mask) as i32) - half;
+            }
+        }
+    }
+
+    fn ks_submul(&self, out: &mut [u32], row: &[u32], d: u32) {
+        for (x, &y) in out.iter_mut().zip(row) {
+            *x = x.wrapping_sub(d.wrapping_mul(y));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection
+// ---------------------------------------------------------------------------
+
+static SELECTED: OnceLock<&'static dyn RingKernels> = OnceLock::new();
+
+/// The scalar reference kernels.
+pub fn scalar_kernels() -> &'static dyn RingKernels {
+    &ScalarKernels
+}
+
+/// The vectorized lazy-reduction kernels.
+pub fn simd_kernels() -> &'static dyn RingKernels {
+    &SimdKernels
+}
+
+/// Process-wide default, read once from `GLYPH_KERNELS` (`scalar` | `simd`;
+/// unset defaults to `simd`). Every `NttTable::new`/`TorusFft::new`/key-switch
+/// key generation picks this up; tests and benches that need both pin them
+/// explicitly via the `with_kernels` constructors instead.
+pub fn default_kernels() -> &'static dyn RingKernels {
+    *SELECTED.get_or_init(|| match std::env::var("GLYPH_KERNELS").as_deref() {
+        Ok("scalar") => scalar_kernels(),
+        Ok("simd") | Err(_) => simd_kernels(),
+        Ok(other) => panic!("GLYPH_KERNELS must be 'scalar' or 'simd', got '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::modarith::{barrett_precompute, shoup_precompute};
+    use crate::math::rng::GlyphRng;
+
+    const P: u64 = 469762049; // 7 * 2^26 + 1
+
+    #[test]
+    fn decompose_poly_implementations_agree() {
+        let mut rng = GlyphRng::new(11);
+        let n = 64;
+        let a: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+        for (levels, bb) in [(2usize, 8u32), (3, 7), (8, 2), (4, 4)] {
+            let mut ds = vec![0i32; levels * n];
+            let mut dv = vec![0i32; levels * n];
+            ScalarKernels.decompose_poly(&a, levels, bb, &mut ds);
+            SimdKernels.decompose_poly(&a, levels, bb, &mut dv);
+            assert_eq!(ds, dv, "levels={levels} bb={bb}");
+            // reconstruction: sum_j d_j * 2^(32-(j+1)bb) ≈ a (within the
+            // truncated tail of the gadget)
+            for i in 0..n {
+                let mut acc = 0u32;
+                for j in 0..levels {
+                    let scale = 1u32 << (32 - (j as u32 + 1) * bb);
+                    acc = acc.wrapping_add((ds[j * n + i] as u32).wrapping_mul(scale));
+                }
+                let err = a[i].wrapping_sub(acc);
+                let err_centered = (err as i32 as i64).unsigned_abs();
+                assert!(
+                    err_centered <= 1u64 << (32 - levels as u32 * bb),
+                    "i={i} levels={levels} bb={bb} err={err_centered}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pointwise_kernels_agree_at_extremes() {
+        let br = barrett_precompute(P);
+        let vals = [0u64, 1, 2, P / 2, P - 2, P - 1];
+        for &x in &vals {
+            for &y in &vals {
+                let mut a1 = [x];
+                let mut a2 = [x];
+                ScalarKernels.pointwise(P, br, &mut a1, &[y]);
+                SimdKernels.pointwise(P, br, &mut a2, &[y]);
+                assert_eq!(a1, a2, "x={x} y={y}");
+                let mut s1 = [P - 1];
+                let mut s2 = [P - 1];
+                ScalarKernels.pointwise_acc(P, br, &mut s1, &[x], &[y]);
+                SimdKernels.pointwise_acc(P, br, &mut s2, &[x], &[y]);
+                assert_eq!(s1, s2, "acc x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_mul_kernels_agree() {
+        let mut rng = GlyphRng::new(5);
+        let a: Vec<u64> = (0..128).map(|_| rng.next_u64() % P).collect();
+        for s in [0u64, 1, P / 3, P - 1] {
+            let ss = shoup_precompute(s, P);
+            let mut b1 = a.clone();
+            let mut b2 = a.clone();
+            ScalarKernels.scalar_mul(P, s, ss, &mut b1);
+            SimdKernels.scalar_mul(P, s, ss, &mut b2);
+            assert_eq!(b1, b2, "s={s}");
+        }
+    }
+
+    #[test]
+    fn default_selection_is_stable() {
+        // Whatever the environment says, repeated calls agree.
+        let first = default_kernels().name();
+        let second = default_kernels().name();
+        assert_eq!(first, second);
+        assert!(first == "scalar" || first == "simd");
+    }
+}

@@ -1,7 +1,13 @@
 //! Mathematical substrate shared by both cryptosystems.
 //!
 //! * [`modarith`] — `u64` modular arithmetic (mul/pow/inv via `u128`),
-//!   deterministic Miller–Rabin, NTT-prime search.
+//!   Barrett/Shoup fast-multiply primitives, deterministic Miller–Rabin,
+//!   NTT-prime search.
+//! * [`kernels`] — the pluggable ring-arithmetic kernel layer: every hot
+//!   inner loop (NTT butterflies, pointwise passes, FFT stages, gadget
+//!   decomposition, key-switch AXPY) behind the [`RingKernels`] trait, with
+//!   a scalar reference and a vectorized lazy-reduction implementation
+//!   selected via `GLYPH_KERNELS=scalar|simd` (default `simd`).
 //! * [`ntt`] — in-place negacyclic number-theoretic transform over an NTT
 //!   prime (the BGV polynomial-multiplication hot path).
 //! * [`fft`] — twisted complex-f64 FFT for negacyclic torus32 polynomial
@@ -12,11 +18,14 @@
 //!   samplers (the vendored crate set has no `rand`, so we own this).
 
 pub mod fft;
+pub mod kernels;
 pub mod modarith;
 pub mod ntt;
 pub mod poly;
 pub mod rng;
 
+pub use fft::FftTable;
+pub use kernels::{default_kernels, scalar_kernels, simd_kernels, RingKernels};
 pub use modarith::{inv_mod, mul_mod, pow_mod};
 pub use ntt::NttTable;
 pub use poly::{BigUintSmall, RnsContext, RnsPoly};

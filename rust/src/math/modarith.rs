@@ -5,11 +5,93 @@
 //! them automatically NTT-friendly for any ring degree `N ≤ 2^25` *and*
 //! guarantees `q = Π p_i ≡ 1 (mod t)` for the power-of-two plaintext modulus
 //! `t ≤ 2^26`, which is what gives Glyph its noise-free LSB↔MSB switch.
+//!
+//! # Which multiply to use where
+//!
+//! * [`mul_mod`] — the general `u128 %` schoolbook reduction. Works for any
+//!   `u64` modulus but compiles to a hardware divide; **cold paths only**
+//!   (key generation, CRT reconstruction, Miller–Rabin on arbitrary `u64`).
+//! * [`barrett_mul`] / [`barrett_reduce`] — both operands variable, modulus
+//!   `< 2^32` with a precomputed [`barrett_precompute`] constant. One
+//!   mul-high + one mul + one conditional correction; the pointwise-pass
+//!   workhorse (`NttTable::pointwise*`, the relin digit lift).
+//! * [`mul_shoup`] — one operand is a *constant* known ahead of time with a
+//!   precomputed [`shoup_precompute`] companion (NTT twiddles, RNS scalar
+//!   maps, the extractor's rescale constants). Cheapest fully-reduced form.
+//! * [`mul_shoup_lazy`] — same, but skips the final correction and returns a
+//!   value in `[0, 2p)`. The Harvey lazy-reduction NTT butterflies
+//!   (`math/kernels.rs`) live on this; callers must track the redundancy.
+//!
+//! The seeded property suite `tests/modarith_props.rs` pits all variants
+//! against each other across edge moduli (p near 2^32, a = b = p−1).
 
-/// `a * b mod m` without overflow.
+/// `a * b mod m` without overflow. General but slow (`u128 %` emits a
+/// hardware divide) — see the module docs for the hot-path alternatives.
 #[inline(always)]
 pub fn mul_mod(a: u64, b: u64, m: u64) -> u64 {
     ((a as u128 * b as u128) % m as u128) as u64
+}
+
+/// Barrett constant `⌊2^64 / p⌋` for [`barrett_mul`]/[`barrett_reduce`].
+/// Requires `2 ≤ p < 2^64` (for `p = 1` the constant does not fit).
+#[inline]
+pub fn barrett_precompute(p: u64) -> u64 {
+    debug_assert!(p >= 2, "Barrett constant undefined for p < 2");
+    ((1u128 << 64) / p as u128) as u64
+}
+
+/// Barrett reduction of a 64-bit product modulo a `p < 2^32` prime:
+/// `q = ⌊t·⌊2^64/p⌋ / 2^64⌋`, remainder corrected once. The estimate error
+/// is provably `< 2p` for any `t < 2^64` (with β = 2^64 and ρ = β mod p:
+/// `r ≤ t·ρ/β + p < ρ + p < 2p`), so a single branchless min-correction
+/// yields the canonical representative. ~3× faster than the `u128 %` the
+/// compiler emits (EXPERIMENTS.md §Perf).
+#[inline(always)]
+pub fn barrett_mul(a: u64, b: u64, p: u64, barrett: u64) -> u64 {
+    debug_assert!(a < (1 << 32) && b < (1 << 32), "Barrett operands must fit 32 bits");
+    let t = a.wrapping_mul(b); // exact: a,b < 2^32
+    barrett_reduce(t, p, barrett)
+}
+
+/// Canonical `x mod p` via the Barrett constant, valid for **any** `u64 x`
+/// (same error bound as [`barrett_mul`]). Replaces `%` where the modulus is
+/// hot-loop constant but the value is not a product of 32-bit operands.
+#[inline(always)]
+pub fn barrett_reduce(x: u64, p: u64, barrett: u64) -> u64 {
+    let q = ((x as u128 * barrett as u128) >> 64) as u64;
+    let r = x.wrapping_sub(q.wrapping_mul(p));
+    // r < 2p: one min-correction is exact. `r - p` wraps above 2^63 when
+    // r < p, so `min` selects the canonical representative branchlessly.
+    r.min(r.wrapping_sub(p))
+}
+
+/// Shoup companion `⌊w · 2^64 / p⌋` of a constant multiplicand `w < p`.
+#[inline]
+pub fn shoup_precompute(w: u64, p: u64) -> u64 {
+    debug_assert!(w < p, "Shoup multiplicand must be reduced");
+    (((w as u128) << 64) / p as u128) as u64
+}
+
+/// Shoup modular multiplication: canonical `a · w mod p` with precomputed
+/// `w_shoup =` [`shoup_precompute`]`(w, p)`. One u128 mul-high, no division;
+/// correct for any `a < 2^64` (the lazy form below is `< 2p`, one
+/// min-correction canonicalizes).
+#[inline(always)]
+pub fn mul_shoup(a: u64, w: u64, w_shoup: u64, p: u64) -> u64 {
+    let r = mul_shoup_lazy(a, w, w_shoup, p);
+    r.min(r.wrapping_sub(p))
+}
+
+/// Lazy Shoup multiplication: `a · w mod p` up to one redundant multiple of
+/// `p` — the result lies in `[0, 2p)` for **any** `a < 2^64` (with
+/// `w_shoup = ⌊w·2^64/p⌋`: `q ≤ a·w/p` gives `r ≥ 0`, and
+/// `q > a·w/p − a/2^64 − 1` gives `r < p·(a/2^64 + 1) < 2p`). The Harvey
+/// NTT butterflies keep values redundant through the layer loop and correct
+/// once at the end (`math/kernels.rs`).
+#[inline(always)]
+pub fn mul_shoup_lazy(a: u64, w: u64, w_shoup: u64, p: u64) -> u64 {
+    let q = ((a as u128 * w_shoup as u128) >> 64) as u64;
+    a.wrapping_mul(w).wrapping_sub(q.wrapping_mul(p))
 }
 
 /// `a + b mod m` (inputs must already be `< m`).
@@ -33,16 +115,33 @@ pub fn sub_mod(a: u64, b: u64, m: u64) -> u64 {
     }
 }
 
-/// `a^e mod m` by square-and-multiply.
+/// `a^e mod m` by square-and-multiply. `m == 1` short-circuits (avoiding the
+/// old `1 % m` dance); moduli below 2^32 — every NTT limb — run the whole
+/// ladder on one hoisted Barrett constant instead of a `u128 %` divide per
+/// squaring. Larger moduli (Miller–Rabin on arbitrary `u64`) keep `mul_mod`.
 pub fn pow_mod(mut a: u64, mut e: u64, m: u64) -> u64 {
-    let mut r: u64 = 1 % m;
+    if m == 1 {
+        return 0;
+    }
     a %= m;
-    while e > 0 {
-        if e & 1 == 1 {
-            r = mul_mod(r, a, m);
+    let mut r: u64 = 1;
+    if m < (1 << 32) {
+        let br = barrett_precompute(m);
+        while e > 0 {
+            if e & 1 == 1 {
+                r = barrett_mul(r, a, m, br);
+            }
+            a = barrett_mul(a, a, m, br);
+            e >>= 1;
         }
-        a = mul_mod(a, a, m);
-        e >>= 1;
+    } else {
+        while e > 0 {
+            if e & 1 == 1 {
+                r = mul_mod(r, a, m);
+            }
+            a = mul_mod(a, a, m);
+            e >>= 1;
+        }
     }
     r
 }
@@ -187,6 +286,37 @@ mod tests {
         assert_eq!(pow_mod(2, 10, 1_000_003), 1024);
         assert_eq!(pow_mod(7, 0, 11), 1);
         assert_eq!(pow_mod(5, 1_000_002, 1_000_003), 1); // Fermat
+        assert_eq!(pow_mod(42, 0, 1), 0); // trivial modulus
+        assert_eq!(pow_mod(42, 17, 1), 0);
+        // m > 2^32 exercises the non-Barrett ladder
+        let m = 0xffff_ffff_ffff_ffc5u64; // 2^64 - 59, prime
+        assert_eq!(pow_mod(3, m - 1, m), 1);
+    }
+
+    #[test]
+    fn fast_multiplies_match_mul_mod() {
+        let p = 4294967291u64; // 2^32 - 5, the largest 32-bit prime
+        let br = barrett_precompute(p);
+        for a in [0u64, 1, 2, p / 2, p - 2, p - 1] {
+            for w in [0u64, 1, 2, p / 2, p - 2, p - 1] {
+                let want = mul_mod(a, w, p);
+                assert_eq!(barrett_mul(a, w, p, br), want, "barrett a={a} w={w}");
+                let ws = shoup_precompute(w, p);
+                assert_eq!(mul_shoup(a, w, ws, p), want, "shoup a={a} w={w}");
+                let lazy = mul_shoup_lazy(a, w, ws, p);
+                assert!(lazy < 2 * p, "lazy range a={a} w={w}");
+                assert_eq!(lazy % p, want, "lazy residue a={a} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn barrett_reduce_is_canonical_for_any_u64() {
+        let p = 469762049u64;
+        let br = barrett_precompute(p);
+        for x in [0u64, 1, p - 1, p, p + 1, 2 * p, u64::MAX, u64::MAX - 1, 1 << 63] {
+            assert_eq!(barrett_reduce(x, p, br), x % p, "x={x}");
+        }
     }
 
     #[test]

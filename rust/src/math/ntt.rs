@@ -6,8 +6,18 @@
 //! tables so no separate pre/post-twist pass is needed. This is the single
 //! hottest loop of the BGV side — every MultCC/MultCP is 2–3 NTTs plus a
 //! pointwise pass (see EXPERIMENTS.md §Perf for the optimization log).
+//!
+//! The butterfly/pointwise loops themselves live behind the pluggable
+//! [`RingKernels`] layer (`math/kernels.rs`): a scalar reference and a
+//! Harvey lazy-reduction vectorized set, selected at table construction
+//! (`GLYPH_KERNELS`, or explicitly via [`NttTable::with_kernels`]). Both are
+//! bit-identical; `tests/kernel_equivalence.rs` enforces it.
 
-use super::modarith::{add_mod, inv_mod, mul_mod, root_of_unity, sub_mod};
+use super::kernels::{default_kernels, RingKernels};
+use super::modarith::{
+    add_mod, barrett_precompute, inv_mod, mul_mod, mul_shoup, root_of_unity, shoup_precompute,
+    sub_mod,
+};
 
 /// Precomputed tables for one `(N, p)` pair.
 #[derive(Clone)]
@@ -26,38 +36,8 @@ pub struct NttTable {
     inv_n_shoup: u64,
     /// Barrett constant floor(2^64 / p) for fast pointwise reduction.
     barrett: u64,
-}
-
-#[inline(always)]
-fn shoup(w: u64, p: u64) -> u64 {
-    (((w as u128) << 64) / p as u128) as u64
-}
-
-/// Barrett reduction of a 64-bit product modulo a < 2^32 prime:
-/// `q = ⌊t·⌊2^64/p⌋ / 2^64⌋`, remainder corrected at most twice.
-/// ~3× faster than the `u128 %` the compiler emits (EXPERIMENTS.md §Perf).
-#[inline(always)]
-fn barrett_mul(a: u64, b: u64, p: u64, barrett: u64) -> u64 {
-    let t = a.wrapping_mul(b); // exact: a,b < 2^32
-    let q = ((t as u128 * barrett as u128) >> 64) as u64;
-    let mut r = t.wrapping_sub(q.wrapping_mul(p));
-    while r >= p {
-        r -= p;
-    }
-    r
-}
-
-/// Shoup modular multiplication: `a * w mod p` with precomputed
-/// `w_shoup = floor(w * 2^64 / p)`. One u128 mul-high, no division.
-#[inline(always)]
-fn mul_shoup(a: u64, w: u64, w_shoup: u64, p: u64) -> u64 {
-    let q = ((a as u128 * w_shoup as u128) >> 64) as u64;
-    let r = a.wrapping_mul(w).wrapping_sub(q.wrapping_mul(p));
-    if r >= p {
-        r - p
-    } else {
-        r
-    }
+    /// Kernel set the hot loops dispatch through.
+    kernels: &'static dyn RingKernels,
 }
 
 fn bit_reverse(x: usize, bits: u32) -> usize {
@@ -65,8 +45,15 @@ fn bit_reverse(x: usize, bits: u32) -> usize {
 }
 
 impl NttTable {
-    /// Build tables; `p` must be prime with `p ≡ 1 (mod 2N)`.
+    /// Build tables with the process-default kernel set; `p` must be prime
+    /// with `p ≡ 1 (mod 2N)`.
     pub fn new(n: usize, p: u64) -> Self {
+        Self::with_kernels(n, p, default_kernels())
+    }
+
+    /// Build tables pinned to an explicit kernel set (conformance tests and
+    /// benches compare scalar vs simd side by side this way).
+    pub fn with_kernels(n: usize, p: u64, kernels: &'static dyn RingKernels) -> Self {
         assert!(n.is_power_of_two(), "N must be a power of two");
         assert_eq!((p - 1) % (2 * n as u64), 0, "p must be ≡ 1 mod 2N");
         let bits = n.trailing_zeros();
@@ -74,6 +61,11 @@ impl NttTable {
         let inv_psi = inv_mod(psi, p);
         let mut psi_rev = vec![0u64; n];
         let mut inv_psi_rev = vec![0u64; n];
+        // ψ^i by Shoup ladder: the per-step multiplicand is the constant ψ,
+        // so table construction needs no `u128 %` divides beyond the two
+        // companion precomputations (satellite of EXPERIMENTS.md §Perf).
+        let psi_sh = shoup_precompute(psi, p);
+        let inv_psi_sh = shoup_precompute(inv_psi, p);
         let mut pw = 1u64;
         let mut ipw = 1u64;
         let mut psi_pows = vec![0u64; n];
@@ -81,16 +73,16 @@ impl NttTable {
         for i in 0..n {
             psi_pows[i] = pw;
             inv_psi_pows[i] = ipw;
-            pw = mul_mod(pw, psi, p);
-            ipw = mul_mod(ipw, inv_psi, p);
+            pw = mul_shoup(pw, psi, psi_sh, p);
+            ipw = mul_shoup(ipw, inv_psi, inv_psi_sh, p);
         }
         for i in 0..n {
             let r = bit_reverse(i, bits);
             psi_rev[i] = psi_pows[r];
             inv_psi_rev[i] = inv_psi_pows[r];
         }
-        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup(w, p)).collect();
-        let inv_psi_rev_shoup = inv_psi_rev.iter().map(|&w| shoup(w, p)).collect();
+        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup_precompute(w, p)).collect();
+        let inv_psi_rev_shoup = inv_psi_rev.iter().map(|&w| shoup_precompute(w, p)).collect();
         let inv_n = inv_mod(n as u64, p);
         NttTable {
             n,
@@ -100,92 +92,65 @@ impl NttTable {
             psi_rev_shoup,
             inv_psi_rev_shoup,
             inv_n,
-            inv_n_shoup: shoup(inv_n, p),
-            barrett: ((1u128 << 64) / p as u128) as u64,
+            inv_n_shoup: shoup_precompute(inv_n, p),
+            barrett: barrett_precompute(p),
+            kernels,
         }
+    }
+
+    /// The kernel set this table dispatches through.
+    #[inline]
+    pub fn kernels(&self) -> &'static dyn RingKernels {
+        self.kernels
+    }
+
+    /// Barrett constant `⌊2^64 / p⌋` (shared with callers that reduce by
+    /// this limb outside the table's own passes, e.g. the relin digit lift).
+    #[inline]
+    pub fn barrett(&self) -> u64 {
+        self.barrett
     }
 
     /// In-place forward negacyclic NTT (CT, DIT). Input in natural order,
     /// output in bit-reversed order (consumed only by `pointwise`+`inverse`).
     pub fn forward(&self, a: &mut [u64]) {
         debug_assert_eq!(a.len(), self.n);
-        let p = self.p;
-        let mut t = self.n;
-        let mut m = 1usize;
-        while m < self.n {
-            t >>= 1;
-            for i in 0..m {
-                let w = self.psi_rev[m + i];
-                let ws = self.psi_rev_shoup[m + i];
-                let j1 = 2 * i * t;
-                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
-                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let u = *x;
-                    let v = mul_shoup(*y, w, ws, p);
-                    *x = add_mod(u, v, p);
-                    *y = sub_mod(u, v, p);
-                }
-            }
-            m <<= 1;
-        }
+        self.kernels.ntt_forward(self.p, &self.psi_rev, &self.psi_rev_shoup, a);
     }
 
     /// In-place inverse negacyclic NTT (GS, DIF) incl. the 1/N scale.
     pub fn inverse(&self, a: &mut [u64]) {
         debug_assert_eq!(a.len(), self.n);
-        let p = self.p;
-        let mut t = 1usize;
-        let mut m = self.n;
-        while m > 1 {
-            let h = m >> 1;
-            for i in 0..h {
-                let w = self.inv_psi_rev[h + i];
-                let ws = self.inv_psi_rev_shoup[h + i];
-                let j1 = 2 * i * t;
-                let (lo, hi) = a[j1..j1 + 2 * t].split_at_mut(t);
-                for (x, y) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let u = *x;
-                    let v = *y;
-                    *x = add_mod(u, v, p);
-                    *y = mul_shoup(sub_mod(u, v, p), w, ws, p);
-                }
-            }
-            t <<= 1;
-            m = h;
-        }
-        for x in a.iter_mut() {
-            *x = mul_shoup(*x, self.inv_n, self.inv_n_shoup, p);
-        }
+        self.kernels.ntt_inverse(
+            self.p,
+            &self.inv_psi_rev,
+            &self.inv_psi_rev_shoup,
+            self.inv_n,
+            self.inv_n_shoup,
+            a,
+        );
     }
 
     /// Pointwise product `a[i] * b[i] mod p` into `a` (Barrett-reduced).
     pub fn pointwise(&self, a: &mut [u64], b: &[u64]) {
-        let p = self.p;
-        let br = self.barrett;
-        for (x, &y) in a.iter_mut().zip(b.iter()) {
-            *x = barrett_mul(*x, y, p, br);
-        }
+        self.kernels.pointwise(self.p, self.barrett, a, b);
     }
 
     /// Pointwise multiply-accumulate `acc[i] += a[i]*b[i] mod p`.
     pub fn pointwise_acc(&self, acc: &mut [u64], a: &[u64], b: &[u64]) {
-        let p = self.p;
-        let br = self.barrett;
-        for i in 0..acc.len() {
-            acc[i] = add_mod(acc[i], barrett_mul(a[i], b[i], p, br), p);
-        }
+        self.kernels.pointwise_acc(self.p, self.barrett, acc, a, b);
     }
 
     /// Fused double multiply-accumulate `acc[i] += a[i]*b[i] + c[i]*d[i]
     /// mod p` — the cross-term `c0·o1 + c1·o0` of a BGV tensor MAC in one
     /// traversal instead of two `pointwise_acc` passes.
     pub fn pointwise_acc2(&self, acc: &mut [u64], a: &[u64], b: &[u64], c: &[u64], d: &[u64]) {
-        let p = self.p;
-        let br = self.barrett;
-        for i in 0..acc.len() {
-            let cross = add_mod(barrett_mul(a[i], b[i], p, br), barrett_mul(c[i], d[i], p, br), p);
-            acc[i] = add_mod(acc[i], cross, p);
-        }
+        self.kernels.pointwise_acc2(self.p, self.barrett, acc, a, b, c, d);
+    }
+
+    /// In-place `a[i] *= s mod p` with a Shoup-precomputed constant scalar.
+    pub fn scalar_mul(&self, a: &mut [u64], s: u64, s_shoup: u64) {
+        self.kernels.scalar_mul(self.p, s, s_shoup, a);
     }
 
     /// Full negacyclic polynomial product (convenience; the hot paths keep
@@ -225,6 +190,7 @@ pub fn negacyclic_mul_naive(a: &[u64], b: &[u64], p: u64) -> Vec<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::math::kernels::{scalar_kernels, simd_kernels};
     use crate::math::rng::GlyphRng;
 
     const P: u64 = 469762049; // 7 * 2^26 + 1
@@ -248,6 +214,25 @@ mod tests {
             let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % P).collect();
             let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % P).collect();
             assert_eq!(t.negacyclic_mul(&a, &b), negacyclic_mul_naive(&a, &b, P), "n={n}");
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_tables_are_bit_identical() {
+        for n in [8usize, 64, 512] {
+            let ts = NttTable::with_kernels(n, P, scalar_kernels());
+            let tv = NttTable::with_kernels(n, P, simd_kernels());
+            let mut rng = GlyphRng::new(0xbeef ^ n as u64);
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64() % P).collect();
+            let mut fs = a.clone();
+            let mut fv = a.clone();
+            ts.forward(&mut fs);
+            tv.forward(&mut fv);
+            assert_eq!(fs, fv, "forward n={n}");
+            ts.inverse(&mut fs);
+            tv.inverse(&mut fv);
+            assert_eq!(fs, fv, "inverse n={n}");
+            assert_eq!(fs, a, "roundtrip n={n}");
         }
     }
 

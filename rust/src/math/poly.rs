@@ -5,7 +5,7 @@
 //! only places the composite modulus `q` materializes are decryption (CRT →
 //! centered → mod t) and the exact scalar maps of the cryptosystem switch.
 
-use super::modarith::{add_mod, inv_mod, mul_mod, sub_mod};
+use super::modarith::{add_mod, barrett_reduce, inv_mod, mul_mod, mul_shoup, shoup_precompute, sub_mod};
 use super::ntt::NttTable;
 use super::rng::GlyphRng;
 use std::sync::Arc;
@@ -416,14 +416,15 @@ impl RnsPoly {
         self.is_ntt = o.is_ntt;
     }
 
-    /// Multiply by a scalar given as per-limb residues.
+    /// Multiply by a scalar given as per-limb residues. The scalar is a
+    /// per-limb constant, so each limb pass is a Shoup sweep through the
+    /// kernel layer (one `u128 /` to precompute, zero divides in the loop).
     pub fn scalar_mul_assign(&mut self, scalar_rns: &[u64]) {
         for i in 0..self.level {
             let p = self.ctx.primes[i];
             let s = scalar_rns[i] % p;
-            for x in self.res[i].iter_mut() {
-                *x = mul_mod(*x, s, p);
-            }
+            let s_shoup = shoup_precompute(s, p);
+            self.ctx.ntts[i].scalar_mul(&mut self.res[i], s, s_shoup);
         }
     }
 
@@ -439,11 +440,17 @@ impl RnsPoly {
         debug_assert_eq!(q_last % t, 1);
         let half = q_last / 2;
         let t_half = t / 2;
-        // Precompute q_last^{-1} mod q_i for remaining limbs.
+        // Per remaining limb: hoist q_last mod p, q_last^{-1} mod p and
+        // their Shoup companions out of the coefficient loop — the inner
+        // body then runs divide-free (Barrett for the centered residues,
+        // Shoup for the two constant multiplies).
         for i in 0..last {
             let p = self.ctx.primes[i];
-            let q_last_inv = inv_mod(q_last % p, p);
-            let t_mod_p = t % p;
+            let br = self.ctx.ntts[i].barrett();
+            let ql_red = q_last % p;
+            let ql_red_shoup = shoup_precompute(ql_red, p);
+            let q_last_inv = inv_mod(ql_red, p);
+            let q_last_inv_shoup = shoup_precompute(q_last_inv, p);
             for j in 0..self.ctx.n {
                 let d = self.res[last][j]; // δ0 = x mod q_last, in [0, q_last)
                 // Center δ0, then add t·u with u ≡ -δ0 (mod t) centered so
@@ -461,13 +468,20 @@ impl RnsPoly {
                 //    = (x - δ0_c - q_last·v_c) * q_last^{-1} mod p
                 let mut num = self.res[i][j];
                 // subtract δ0_c
-                let d_red = if d_c >= 0 { (d_c as u64) % p } else { p - ((-d_c) as u64 % p) };
+                let d_red = if d_c >= 0 {
+                    barrett_reduce(d_c as u64, p, br)
+                } else {
+                    p - barrett_reduce((-d_c) as u64, p, br)
+                };
                 num = sub_mod(num, d_red, p);
                 // subtract q_last·v_c
-                let v_red = if v_c >= 0 { (v_c as u64) % p } else { p - ((-v_c) as u64 % p) };
-                num = sub_mod(num, mul_mod(q_last % p, v_red, p), p);
-                self.res[i][j] = mul_mod(num, q_last_inv, p);
-                let _ = t_mod_p;
+                let v_red = if v_c >= 0 {
+                    barrett_reduce(v_c as u64, p, br)
+                } else {
+                    p - barrett_reduce((-v_c) as u64, p, br)
+                };
+                num = sub_mod(num, mul_shoup(v_red, ql_red, ql_red_shoup, p), p);
+                self.res[i][j] = mul_shoup(num, q_last_inv, q_last_inv_shoup, p);
             }
         }
         self.res.pop();

@@ -43,6 +43,9 @@ pub struct LweExtractor {
     /// RNS→torus rescale precomputation per level: for limb i at level ℓ,
     /// `(q_ℓ/q_i)^{-1} mod q_i`.
     qtilde: Vec<Vec<u64>>,
+    /// Shoup companions `⌊q̃·2^64/q_i⌋` of [`Self::qtilde`] — the rescale
+    /// multiply in the per-lane hot loop is a Shoup product, not a `u128 %`.
+    qtilde_shoup: Vec<Vec<u64>>,
     primes: Vec<u64>,
 }
 
@@ -58,13 +61,22 @@ impl LweExtractor {
         let ksk = LweKeySwitchKey::generate(&src, tfhe_key, 4, 7, params.alpha_lwe, rng);
         let ctx = &bgv_sk.ctx;
         let deltas = (1..=ctx.top_level()).map(|l| ctx.delta_rns(l)).collect();
-        let qtilde = (1..=ctx.top_level())
+        let qtilde: Vec<Vec<u64>> = (1..=ctx.top_level())
             .map(|l| {
                 let rctx = ctx.ctx_at(l);
                 (0..l).map(|i| rctx.q_over_qi_inv[i]).collect()
             })
             .collect();
-        LweExtractor { ksk, deltas, qtilde, primes: ctx.params.primes.clone() }
+        let qtilde_shoup = qtilde
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .map(|(i, &qt)| crate::math::modarith::shoup_precompute(qt, ctx.params.primes[i]))
+                    .collect()
+            })
+            .collect();
+        LweExtractor { ksk, deltas, qtilde, qtilde_shoup, primes: ctx.params.primes.clone() }
     }
 
     /// Step 1, once per ciphertext: `×Δ` (LSB→MSB, exact, noise-preserving)
@@ -116,7 +128,14 @@ impl LweExtractor {
             for i in 0..level {
                 let qi = self.primes[i];
                 let xi = res(i);
-                let y = crate::math::modarith::mul_mod(xi, self.qtilde[level - 1][i], qi);
+                // Shoup product with the precomputed q̃ companion — same
+                // canonical value the old `mul_mod` (u128 %) produced.
+                let y = crate::math::modarith::mul_shoup(
+                    xi,
+                    self.qtilde[level - 1][i],
+                    self.qtilde_shoup[level - 1][i],
+                    qi,
+                );
                 // (y << 32) / qi, rounded
                 let term = (((y as u128) << 32) + (qi as u128 / 2)) / qi as u128;
                 acc = acc.wrapping_add(term as u64);

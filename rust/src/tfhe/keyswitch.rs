@@ -11,7 +11,9 @@
 use super::lwe::{LweCiphertext, LweKey};
 use super::tlwe::{TrlweCiphertext, TrlweKey};
 use crate::math::fft::Cplx;
+use crate::math::kernels::{default_kernels, gadget_offset, RingKernels};
 use crate::math::rng::GlyphRng;
+use std::cell::RefCell;
 
 /// Upper bound on key-switch decomposition levels (every parameter set uses
 /// ≤ 8); lets the hot loops keep digits in a stack array instead of a
@@ -26,22 +28,60 @@ fn decompose_scalar(x: u32, len: usize, base_bit: u32) -> Vec<i32> {
     digits[..len].to_vec()
 }
 
-/// Allocation-free [`decompose_scalar`] into a stack buffer.
+/// Allocation-free [`decompose_scalar`] into a stack buffer (the repack
+/// path's per-sample form; the scalar switch decomposes the whole mask at
+/// once through the kernel layer instead — see [`KsScratch`]).
 #[inline]
 fn decompose_scalar_into(x: u32, len: usize, base_bit: u32, out: &mut [i32; MAX_KS_LEVELS]) {
     debug_assert!(len <= MAX_KS_LEVELS);
     let base = 1u32 << base_bit;
     let half = base >> 1;
     let mask = base - 1;
-    let mut offset = 0u32;
-    for j in 0..len {
-        offset = offset.wrapping_add(half << (32 - (j as u32 + 1) * base_bit));
-    }
-    let xx = x.wrapping_add(offset);
+    let xx = x.wrapping_add(gadget_offset(len, base_bit));
     for j in 0..len {
         let shift = 32 - (j as u32 + 1) * base_bit;
         out[j] = (((xx >> shift) & mask) as i32) - half as i32;
     }
+}
+
+/// Scratch for the hoisted LWE key switch: the whole input mask is
+/// decomposed ONCE per switch into this digit-major matrix
+/// (`digits[j·n + i]` = digit `j` of `a_i`) by a branchless kernel pass,
+/// then reused across every output coefficient by the row-apply loop —
+/// instead of re-deriving digits coefficient by coefficient inside the
+/// accumulation. Sized on first use per `(n, len)`, reused across switches
+/// (steady state is allocation-free — `tests/zero_alloc_switch.rs`).
+pub struct KsScratch {
+    digits: Vec<i32>,
+    n: usize,
+    len: usize,
+}
+
+impl KsScratch {
+    pub fn new() -> Self {
+        KsScratch { digits: Vec::new(), n: 0, len: 0 }
+    }
+
+    fn ensure(&mut self, n: usize, len: usize) {
+        if self.n != n || self.len != len {
+            self.digits = vec![0i32; len * n];
+            self.n = n;
+            self.len = len;
+        }
+    }
+}
+
+impl Default for KsScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    /// Per-thread switch scratch (the `tfhe/scratch.rs` pattern): gate-level
+    /// callers (`TfheCloudKey::pbs`) and pool workers hit their own copy
+    /// with no locking and no signature changes.
+    static KS_SCRATCH: RefCell<KsScratch> = RefCell::new(KsScratch::new());
 }
 
 /// Key-switching key from `src` to `dst` (scalar LWE).
@@ -51,6 +91,9 @@ pub struct LweKeySwitchKey {
     /// ks[i][j]: LWE_dst encryption of `src_i · 2^(32−(j+1)·base_bit)`.
     pub ks: Vec<Vec<LweCiphertext>>,
     pub dst_dim: usize,
+    /// Kernel set for the decompose + AXPY hot loops (public so conformance
+    /// tests and benches can pin scalar vs simd on one key).
+    pub kernels: &'static dyn RingKernels,
 }
 
 impl LweKeySwitchKey {
@@ -76,7 +119,7 @@ impl LweKeySwitchKey {
                     .collect()
             })
             .collect();
-        LweKeySwitchKey { base_bit, len, ks, dst_dim: dst.dim() }
+        LweKeySwitchKey { base_bit, len, ks, dst_dim: dst.dim(), kernels: default_kernels() }
     }
 
     /// Switch `ct` (under `src`) to an LWE under `dst`. One output
@@ -89,28 +132,44 @@ impl LweKeySwitchKey {
 
     /// Allocation-free [`Self::switch`] into a warm output ciphertext
     /// (`out.a.len()` must already be `dst_dim`): same integer arithmetic,
-    /// bit-identical result, zero heap traffic — the scratch-backed half of
-    /// the BGV→TFHE switch asserted by `tests/zero_alloc_switch.rs`.
+    /// bit-identical result, zero steady-state heap traffic — the
+    /// scratch-backed half of the BGV→TFHE switch asserted by
+    /// `tests/zero_alloc_switch.rs`. Scratch comes from a per-thread
+    /// `KS_SCRATCH`; use [`Self::switch_into_with`] to pass your own.
     pub fn switch_into(&self, ct: &LweCiphertext, out: &mut LweCiphertext) {
+        KS_SCRATCH.with(|s| self.switch_into_with(ct, &mut s.borrow_mut(), out));
+    }
+
+    /// Two-phase hoisted key switch. Phase 1 decomposes the whole `n`-lane
+    /// mask into `scratch.digits` in one branchless level-major kernel pass.
+    /// Phase 2 walks the digit matrix in the reference `(i, j)` order and
+    /// applies non-zero digits as wrapping AXPYs over the `dst_dim` output
+    /// lanes. Wrapping u32 arithmetic is exact and order-preserving here, so
+    /// the result is bit-identical to the per-coefficient reference (a zero
+    /// `a_i` decomposes to all-zero digits, which phase 2 skips just like
+    /// the old `ai == 0` fast path did).
+    pub fn switch_into_with(
+        &self,
+        ct: &LweCiphertext,
+        scratch: &mut KsScratch,
+        out: &mut LweCiphertext,
+    ) {
         debug_assert_eq!(out.a.len(), self.dst_dim, "warm output at dst_dim required");
         out.a.fill(0);
         out.b = ct.b;
-        let mut digits = [0i32; MAX_KS_LEVELS];
-        for (i, &ai) in ct.a.iter().enumerate() {
-            if ai == 0 {
-                continue;
-            }
-            decompose_scalar_into(ai, self.len, self.base_bit, &mut digits);
-            for (j, &d) in digits[..self.len].iter().enumerate() {
+        let n = ct.a.len();
+        scratch.ensure(n, self.len);
+        self.kernels.decompose_poly(&ct.a, self.len, self.base_bit, &mut scratch.digits);
+        for i in 0..n {
+            for j in 0..self.len {
+                let d = scratch.digits[j * n + i];
                 if d == 0 {
                     continue;
                 }
                 // out −= d · ks[i][j]
                 let row = &self.ks[i][j];
-                let du = d as i64 as u32;
-                for (x, &y) in out.a.iter_mut().zip(&row.a) {
-                    *x = x.wrapping_sub(du.wrapping_mul(y));
-                }
+                let du = d as u32;
+                self.kernels.ks_submul(&mut out.a, &row.a, du);
                 out.b = out.b.wrapping_sub(du.wrapping_mul(row.b));
             }
         }

@@ -25,7 +25,7 @@ pub mod tlwe;
 
 pub use bootstrap::{BootstrapKey, TestPoly};
 pub use gates::TfheCloudKey;
-pub use keyswitch::{LweKeySwitchKey, RepackScratch};
+pub use keyswitch::{KsScratch, LweKeySwitchKey, RepackScratch};
 pub use lwe::{LweCiphertext, LweKey};
 pub use params::TfheParams;
 pub use scratch::PbsScratch;

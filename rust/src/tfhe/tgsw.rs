@@ -180,12 +180,7 @@ impl TrgswCiphertext {
 /// `Σ_j (Bg/2)·2^(32−(j+1)·bg_bit)`.
 #[inline]
 pub fn decompose_offset(l: usize, bg_bit: u32) -> u32 {
-    let half_bg = 1u32 << (bg_bit - 1);
-    let mut offset = 0u32;
-    for j in 0..l {
-        offset = offset.wrapping_add(half_bg << (32 - (j as u32 + 1) * bg_bit));
-    }
-    offset
+    crate::math::kernels::gadget_offset(l, bg_bit)
 }
 
 /// Balanced base-2^bg_bit digit decomposition of a torus polynomial:
@@ -199,20 +194,12 @@ pub fn decompose(poly: &[u32], l: usize, bg_bit: u32) -> Vec<Vec<i32>> {
 
 /// Allocation-free balanced decomposition into a flat `l·n` digit buffer
 /// (digit `j` occupies `out[j*n..(j+1)*n]`). The offset trick rounds
-/// instead of truncating and centers every digit.
+/// instead of truncating and centers every digit. Routed through the
+/// selected ring kernels (both implementations emit identical digits —
+/// the decomposition is pure integer arithmetic).
 pub fn decompose_into(poly: &[u32], l: usize, bg_bit: u32, out: &mut [i32]) {
-    let n = poly.len();
-    debug_assert_eq!(out.len(), l * n);
-    let half_bg = 1i32 << (bg_bit - 1);
-    let mask = (1u32 << bg_bit) - 1;
-    let offset = decompose_offset(l, bg_bit);
-    for i in 0..n {
-        let x = poly[i].wrapping_add(offset);
-        for j in 0..l {
-            let shift = 32 - (j as u32 + 1) * bg_bit;
-            out[j * n + i] = (((x >> shift) & mask) as i32) - half_bg;
-        }
-    }
+    debug_assert_eq!(out.len(), l * poly.len());
+    crate::math::kernels::default_kernels().decompose_poly(poly, l, bg_bit, out);
 }
 
 #[cfg(test)]

@@ -1,0 +1,147 @@
+//! Machine-checks the FFT precision budget stated in `math/fft.rs`: a full
+//! TRGSW external-product accumulation of `(k+1)·l = 6` negacyclic products
+//! with gadget digits at the documented extreme `|d| = Bg/2 = 2^6` and torus
+//! coefficients at the centered boundary `±2^31` has exact integer
+//! coefficients below 2^53 (so every one is representable in f64), and the
+//! f64 pipeline lands within a few-thousand torus ulps of the exact result —
+//! not merely for random inputs but at the adversarial corner the comment
+//! reasons about. `GLYPH_PROP_SEED` replays a base seed.
+
+use glyph::math::fft::{Cplx, TorusFft};
+use glyph::math::GlyphRng;
+
+const N: usize = 1024;
+/// (k+1)·l of the external product the budget is stated for.
+const PRODUCTS: usize = 6;
+/// Documented digit extreme Bg/2 (bg_bit = 7).
+const DMAX: i32 = 64;
+
+fn base_seed() -> u64 {
+    std::env::var("GLYPH_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x9e37_79b9_7f4a_7c15)
+}
+
+fn torus_dist(a: u32, b: u32) -> u32 {
+    let d = a.wrapping_sub(b);
+    d.min(d.wrapping_neg())
+}
+
+/// Exact negacyclic `ints × torus` product over Z (no wrapping): the i128
+/// oracle the budget is measured against. Torus coefficients are centered.
+fn exact_negacyclic_i128(ints: &[i32], torus: &[u32], acc: &mut [i128]) {
+    let n = ints.len();
+    for i in 0..n {
+        if ints[i] == 0 {
+            continue;
+        }
+        for j in 0..n {
+            let prod = ints[i] as i128 * (torus[j] as i32) as i128;
+            let k = i + j;
+            if k < n {
+                acc[k] += prod;
+            } else {
+                acc[k - n] -= prod;
+            }
+        }
+    }
+}
+
+/// Adversarial extreme polynomials: digits pinned to ±Bg/2, torus
+/// coefficients pinned to the two centered boundary values (−2^31 as
+/// 0x8000_0000 and +2^31−1 as 0x7fff_ffff), signs drawn from the seed.
+fn extreme_pair(rng: &mut GlyphRng) -> (Vec<i32>, Vec<u32>) {
+    let ints: Vec<i32> =
+        (0..N).map(|_| if rng.next_u64() & 1 == 0 { DMAX } else { -DMAX }).collect();
+    let torus: Vec<u32> =
+        (0..N).map(|_| if rng.next_u64() & 1 == 0 { 0x8000_0000 } else { 0x7fff_ffff }).collect();
+    (ints, torus)
+}
+
+#[test]
+fn budget_holds_at_documented_extremes() {
+    // One worst-case external-product accumulation: 6 products, all digits
+    // at ±Bg/2, all torus coefficients at ±2^31.
+    let fft = TorusFft::new(N);
+    let mut rng = GlyphRng::new(base_seed() ^ 0xfacade);
+    let mut acc = vec![Cplx::default(); N / 2];
+    let mut exact = vec![0i128; N];
+    for _ in 0..PRODUCTS {
+        let (ints, torus) = extreme_pair(&mut rng);
+        let fa = fft.forward_int(&ints);
+        let fb = fft.forward_torus(&torus);
+        fft.mul_acc(&fa, &fb, &mut acc);
+        exact_negacyclic_i128(&ints, &torus, &mut exact);
+    }
+
+    // The module-doc claim, machine-checked: every exact coefficient of the
+    // accumulated product is f64-representable (< 2^53)…
+    let max_mag = exact.iter().map(|c| c.unsigned_abs()).max().unwrap();
+    assert!(max_mag < 1u128 << 53, "budget exceeded: max |coeff| = 2^{:.1}", (max_mag as f64).log2());
+    // …and the test genuinely stresses the budget (analytically the bound is
+    // 6·N·2^6·2^31 ≈ 2^49.6; random signs concentrate around 2^44+):
+    assert!(max_mag > 1u128 << 42, "extremes too weak: max |coeff| = 2^{:.1}", (max_mag as f64).log2());
+
+    // The f64 pipeline must land within a few-thousand torus ulps of the
+    // exact wrapped result — invisible at the value position 2^24.
+    let mut fast = vec![0u32; N];
+    fft.inverse_add_to_torus(&acc, &mut fast);
+    for (i, (&f, &e)) in fast.iter().zip(&exact).enumerate() {
+        let want = e.rem_euclid(1i128 << 32) as u32;
+        let err = torus_dist(f, want);
+        assert!(err < 1 << 13, "i={i}: fft={f:#010x} exact={want:#010x} err={err}");
+    }
+}
+
+#[test]
+fn single_product_at_extremes_is_tight() {
+    // One negacyclic product at the extremes: exact coefficients ≤
+    // N·2^6·2^31 = 2^47, rounding error must stay well under 2^11.
+    let fft = TorusFft::new(N);
+    for case in 0..5u64 {
+        let seed = base_seed() ^ 0x51f7 ^ case;
+        let mut rng = GlyphRng::new(seed);
+        let (ints, torus) = extreme_pair(&mut rng);
+        let fast = fft.negacyclic_mul_int_torus(&ints, &torus);
+        let mut exact = vec![0i128; N];
+        exact_negacyclic_i128(&ints, &torus, &mut exact);
+        for (i, (&f, &e)) in fast.iter().zip(&exact).enumerate() {
+            let want = e.rem_euclid(1i128 << 32) as u32;
+            let err = torus_dist(f, want);
+            assert!(err < 1 << 11, "case {case} seed {seed} i={i}: err={err}");
+        }
+    }
+}
+
+#[test]
+fn randomized_accumulations_stay_within_budget() {
+    // Random digit/torus draws (the realistic regime) across seeds: the
+    // exact accumulation must stay f64-representable and the pipeline's
+    // error far below the extreme-case tolerance.
+    let fft = TorusFft::new(N);
+    for case in 0..10u64 {
+        let seed = base_seed() ^ 0xacc ^ case;
+        let mut rng = GlyphRng::new(seed);
+        let mut acc = vec![Cplx::default(); N / 2];
+        let mut exact = vec![0i128; N];
+        for _ in 0..PRODUCTS {
+            let ints: Vec<i32> =
+                (0..N).map(|_| (rng.uniform_mod(2 * DMAX as u64 + 1) as i32) - DMAX).collect();
+            let torus: Vec<u32> = (0..N).map(|_| rng.torus32()).collect();
+            let fa = fft.forward_int(&ints);
+            let fb = fft.forward_torus(&torus);
+            fft.mul_acc(&fa, &fb, &mut acc);
+            exact_negacyclic_i128(&ints, &torus, &mut exact);
+        }
+        let max_mag = exact.iter().map(|c| c.unsigned_abs()).max().unwrap();
+        assert!(max_mag < 1u128 << 53, "case {case} seed {seed}: max 2^{:.1}", (max_mag as f64).log2());
+        let mut fast = vec![0u32; N];
+        fft.inverse_add_to_torus(&acc, &mut fast);
+        for (i, (&f, &e)) in fast.iter().zip(&exact).enumerate() {
+            let want = e.rem_euclid(1i128 << 32) as u32;
+            let err = torus_dist(f, want);
+            assert!(err < 1 << 11, "case {case} seed {seed} i={i}: err={err}");
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Scalar vs SIMD kernel bit-identity, enforced directly at every dispatch
+//! point of the ring-arithmetic core (`math/kernels.rs`): NTT forward /
+//! inverse / pointwise passes, the complex FFT pipeline (to the last f64
+//! bit), the gadget decomposition and the hoisted LWE key switch, plus a
+//! whole TRGSW external product run under both kernel sets. Seeded with the
+//! `GLYPH_PROP_SEED` replay convention of `tests/ntt_properties.rs`.
+//!
+//! The five conformance suites check the same property end-to-end through
+//! the CI kernel matrix (`GLYPH_KERNELS=scalar` vs `=simd`); this suite
+//! pins both kernel sets in ONE process so a divergence fails fast with the
+//! exact operation named.
+
+use glyph::math::fft::TorusFft;
+use glyph::math::kernels::{scalar_kernels, simd_kernels};
+use glyph::math::modarith::{gen_ntt_primes, shoup_precompute};
+use glyph::math::{GlyphRng, NttTable};
+use glyph::tfhe::{
+    KsScratch, LweCiphertext, LweKey, LweKeySwitchKey, TfheParams, TrgswCiphertext,
+    TrlweCiphertext, TrlweKey,
+};
+
+const CASES: u64 = 25;
+
+fn base_seed() -> u64 {
+    std::env::var("GLYPH_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x9e37_79b9_7f4a_7c15)
+}
+
+fn chain() -> Vec<u64> {
+    gen_ntt_primes(3, 1 << 26, 1 << 32)
+}
+
+fn rand_poly(n: usize, p: u64, rng: &mut GlyphRng) -> Vec<u64> {
+    (0..n).map(|_| rng.next_u64() % p).collect()
+}
+
+#[test]
+fn ntt_transforms_are_bit_identical() {
+    for &p in &chain() {
+        for n in [64usize, 256, 1024] {
+            let ts = NttTable::with_kernels(n, p, scalar_kernels());
+            let tv = NttTable::with_kernels(n, p, simd_kernels());
+            for case in 0..CASES {
+                let seed = base_seed() ^ (p.wrapping_mul(n as u64)) ^ case;
+                let mut rng = GlyphRng::new(seed);
+                let a = rand_poly(n, p, &mut rng);
+                let mut fs = a.clone();
+                let mut fv = a.clone();
+                ts.forward(&mut fs);
+                tv.forward(&mut fv);
+                assert_eq!(fs, fv, "forward: prime {p}, n {n}, case {case}, seed {seed}");
+                ts.inverse(&mut fs);
+                tv.inverse(&mut fv);
+                assert_eq!(fs, fv, "inverse: prime {p}, n {n}, case {case}, seed {seed}");
+                assert_eq!(fs, a, "roundtrip: prime {p}, n {n}, case {case}, seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pointwise_passes_are_bit_identical() {
+    let n = 256;
+    for &p in &chain() {
+        let ts = NttTable::with_kernels(n, p, scalar_kernels());
+        let tv = NttTable::with_kernels(n, p, simd_kernels());
+        for case in 0..CASES {
+            let seed = base_seed() ^ (p.wrapping_mul(977)) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let a = rand_poly(n, p, &mut rng);
+            let b = rand_poly(n, p, &mut rng);
+            let c = rand_poly(n, p, &mut rng);
+            let d = rand_poly(n, p, &mut rng);
+            let acc0 = rand_poly(n, p, &mut rng);
+
+            let mut x1 = a.clone();
+            let mut x2 = a.clone();
+            ts.pointwise(&mut x1, &b);
+            tv.pointwise(&mut x2, &b);
+            assert_eq!(x1, x2, "pointwise: prime {p}, case {case}, seed {seed}");
+
+            let mut s1 = acc0.clone();
+            let mut s2 = acc0.clone();
+            ts.pointwise_acc(&mut s1, &a, &b);
+            tv.pointwise_acc(&mut s2, &a, &b);
+            assert_eq!(s1, s2, "pointwise_acc: prime {p}, case {case}, seed {seed}");
+
+            let mut f1 = acc0.clone();
+            let mut f2 = acc0.clone();
+            ts.pointwise_acc2(&mut f1, &a, &b, &c, &d);
+            tv.pointwise_acc2(&mut f2, &a, &b, &c, &d);
+            assert_eq!(f1, f2, "pointwise_acc2: prime {p}, case {case}, seed {seed}");
+
+            let s = rng.next_u64() % p;
+            let ss = shoup_precompute(s, p);
+            let mut m1 = a.clone();
+            let mut m2 = a.clone();
+            ts.scalar_mul(&mut m1, s, ss);
+            tv.scalar_mul(&mut m2, s, ss);
+            assert_eq!(m1, m2, "scalar_mul: prime {p}, case {case}, seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn fft_pipeline_is_bit_identical_to_the_last_f64_bit() {
+    for n in [64usize, 256, 1024] {
+        let fs = TorusFft::with_kernels(n, scalar_kernels());
+        let fv = TorusFft::with_kernels(n, simd_kernels());
+        for case in 0..CASES {
+            let seed = base_seed() ^ (n as u64).wrapping_mul(0x5bd1) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let ints: Vec<i32> = (0..n).map(|_| (rng.uniform_mod(129) as i32) - 64).collect();
+            let torus: Vec<u32> = (0..n).map(|_| rng.torus32()).collect();
+
+            let zs = fs.forward_torus(&torus);
+            let zv = fv.forward_torus(&torus);
+            let is = fs.forward_int(&ints);
+            let iv = fv.forward_int(&ints);
+            for (k, ((ts, tv), (gs, gv))) in
+                zs.iter().zip(&zv).zip(is.iter().zip(&iv)).enumerate()
+            {
+                assert_eq!(ts.re.to_bits(), tv.re.to_bits(), "fwd_torus re: n {n}, case {case}, seed {seed}, lane {k}");
+                assert_eq!(ts.im.to_bits(), tv.im.to_bits(), "fwd_torus im: n {n}, case {case}, seed {seed}, lane {k}");
+                assert_eq!(gs.re.to_bits(), gv.re.to_bits(), "fwd_int re: n {n}, case {case}, seed {seed}, lane {k}");
+                assert_eq!(gs.im.to_bits(), gv.im.to_bits(), "fwd_int im: n {n}, case {case}, seed {seed}, lane {k}");
+            }
+
+            // frequency MAC + inverse: the rounded torus output must agree
+            // exactly (it does if the f64s do)
+            assert_eq!(
+                fs.negacyclic_mul_int_torus(&ints, &torus),
+                fv.negacyclic_mul_int_torus(&ints, &torus),
+                "negacyclic int×torus: n {n}, case {case}, seed {seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gadget_decomposition_is_identical() {
+    let n = 512;
+    for (levels, bb) in [(2usize, 8u32), (3, 7), (7, 4), (8, 2)] {
+        for case in 0..CASES {
+            let seed = base_seed() ^ ((levels as u64) << 8) ^ (bb as u64) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let a: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            let mut ds = vec![0i32; levels * n];
+            let mut dv = vec![0i32; levels * n];
+            scalar_kernels().decompose_poly(&a, levels, bb, &mut ds);
+            simd_kernels().decompose_poly(&a, levels, bb, &mut dv);
+            assert_eq!(ds, dv, "decompose: levels {levels}, bb {bb}, case {case}, seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn lwe_keyswitch_is_bit_identical_under_both_kernels() {
+    let mut rng = GlyphRng::new(base_seed() ^ 0x4b53);
+    let src = LweKey::generate_binary(256, &mut rng);
+    let dst = LweKey::generate_binary(64, &mut rng);
+    let mut ksk = LweKeySwitchKey::generate(&src, &dst, 2, 8, 1e-8, &mut rng);
+    for case in 0..CASES {
+        let msg = (rng.next_u64() as u32) & 0xfff0_0000;
+        let ct = LweCiphertext::encrypt(msg, &src, 1e-8, &mut rng);
+        ksk.kernels = scalar_kernels();
+        let out_s = ksk.switch(&ct);
+        ksk.kernels = simd_kernels();
+        let out_v = ksk.switch(&ct);
+        assert_eq!(out_s.a, out_v.a, "ks mask: case {case}");
+        assert_eq!(out_s.b, out_v.b, "ks body: case {case}");
+
+        // caller-owned scratch path == thread-local path
+        let mut scratch = KsScratch::new();
+        let mut out_w = LweCiphertext::trivial(0, 64);
+        ksk.switch_into_with(&ct, &mut scratch, &mut out_w);
+        assert_eq!(out_v.a, out_w.a, "ks scratch mask: case {case}");
+        assert_eq!(out_v.b, out_w.b, "ks scratch body: case {case}");
+    }
+}
+
+#[test]
+fn trgsw_external_product_is_bit_identical() {
+    // The TRGSW rows come from ONE key (forward FFTs are themselves
+    // bit-identical across kernels, asserted above), then the external
+    // product runs once per kernel set through an explicitly-pinned plan.
+    let params = TfheParams::test_params();
+    let mut rng = GlyphRng::new(base_seed() ^ 0x7274);
+    let key = TrlweKey::generate(params.big_n, &mut rng);
+    let fft_s = TorusFft::with_kernels(params.big_n, scalar_kernels());
+    let fft_v = TorusFft::with_kernels(params.big_n, simd_kernels());
+    let msg: Vec<u32> = (0..params.big_n).map(|i| ((i % 8) as u32) << 28).collect();
+    let c = TrlweCiphertext::encrypt(&msg, &key, params.alpha_rlwe, &mut rng);
+    for bit in [0i32, 1] {
+        let g = TrgswCiphertext::encrypt_scalar(bit, &key, &params, &mut rng);
+        let prod_s = g.external_product(&c, &fft_s);
+        let prod_v = g.external_product(&c, &fft_v);
+        assert_eq!(prod_s.a, prod_v.a, "external product mask, bit {bit}");
+        assert_eq!(prod_s.b, prod_v.b, "external product body, bit {bit}");
+    }
+}

@@ -1,0 +1,148 @@
+//! Seeded property tests for the modular-multiply family: `mul_mod`
+//! (u128 `%` reference), `barrett_mul`/`barrett_reduce`, `mul_shoup` and
+//! `mul_shoup_lazy` must all agree at edge moduli (p near 2^32, tiny p) and
+//! edge operands (0, 1, p/2, p−1), and `pow_mod` must match an
+//! iterated-multiply oracle on both its Barrett (`m < 2^32`) and `mul_mod`
+//! (`m ≥ 2^32`) ladders. `GLYPH_PROP_SEED` replays a base seed.
+
+use glyph::math::modarith::{
+    barrett_mul, barrett_precompute, barrett_reduce, gen_ntt_primes, mul_mod, mul_shoup,
+    mul_shoup_lazy, pow_mod, shoup_precompute,
+};
+use glyph::math::GlyphRng;
+
+const CASES: u64 = 200;
+
+fn base_seed() -> u64 {
+    std::env::var("GLYPH_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x9e37_79b9_7f4a_7c15)
+}
+
+/// Edge moduli: the largest 32-bit prime (2^32 − 5), the top prime of the
+/// NTT chain (≡ 1 mod 2^26, just below 2^32), a mid NTT prime, and tiny
+/// primes where p−1 wraps in a single digit.
+fn edge_moduli() -> Vec<u64> {
+    let top_chain = gen_ntt_primes(1, 1 << 26, 1 << 32)[0];
+    vec![4294967291, top_chain, 469762049, 257, 3]
+}
+
+fn edge_values(m: u64) -> Vec<u64> {
+    [0u64, 1, 2, m / 2, m.saturating_sub(2), m - 1]
+        .into_iter()
+        .filter(|&v| v < m)
+        .collect()
+}
+
+#[test]
+fn multiply_family_agrees_at_edges() {
+    for &p in &edge_moduli() {
+        let br = barrett_precompute(p);
+        for &a in &edge_values(p) {
+            for &w in &edge_values(p) {
+                let want = mul_mod(a, w, p);
+                assert_eq!(barrett_mul(a, w, p, br), want, "barrett: p={p} a={a} w={w}");
+                let ws = shoup_precompute(w, p);
+                assert_eq!(mul_shoup(a, w, ws, p), want, "shoup: p={p} a={a} w={w}");
+                let lazy = mul_shoup_lazy(a, w, ws, p);
+                assert!(lazy < 2 * p, "lazy out of [0,2p): p={p} a={a} w={w} got {lazy}");
+                assert_eq!(lazy % p, want, "lazy residue: p={p} a={a} w={w}");
+            }
+        }
+    }
+}
+
+#[test]
+fn multiply_family_agrees_randomized() {
+    for &p in &edge_moduli() {
+        let br = barrett_precompute(p);
+        for case in 0..CASES {
+            let seed = base_seed() ^ p.rotate_left(17) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let a = rng.next_u64() % p;
+            let w = rng.next_u64() % p;
+            let want = mul_mod(a, w, p);
+            assert_eq!(barrett_mul(a, w, p, br), want, "barrett: p={p} case={case} seed={seed}");
+            let ws = shoup_precompute(w, p);
+            assert_eq!(mul_shoup(a, w, ws, p), want, "shoup: p={p} case={case} seed={seed}");
+            let lazy = mul_shoup_lazy(a, w, ws, p);
+            assert!(lazy < 2 * p, "lazy range: p={p} case={case} seed={seed}");
+            assert_eq!(lazy % p, want, "lazy residue: p={p} case={case} seed={seed}");
+            // barrett_reduce must be canonical for arbitrary u64 input, not
+            // just 32×32 products — feed it a raw 64-bit value
+            let x = rng.next_u64();
+            assert_eq!(barrett_reduce(x, p, br), x % p, "reduce: p={p} case={case} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn shoup_stays_correct_for_unreduced_operands() {
+    // The lazy NTT keeps the variable operand redundant in [0, 4p); the
+    // Shoup product must stay exact for ANY u64 `a`, only `w` is reduced.
+    for &p in &edge_moduli() {
+        for case in 0..CASES {
+            let seed = base_seed() ^ p.rotate_left(41) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let w = rng.next_u64() % p;
+            let ws = shoup_precompute(w, p);
+            for a in [rng.next_u64(), 4 * p - 1, u64::MAX, p, 2 * p + 1] {
+                let want = mul_mod(a % p, w, p);
+                assert_eq!(
+                    mul_shoup(a, w, ws, p) % p,
+                    want,
+                    "unreduced shoup: p={p} a={a} case={case} seed={seed}"
+                );
+                let lazy = mul_shoup_lazy(a, w, ws, p);
+                assert!(lazy < 2 * p, "unreduced lazy range: p={p} a={a} case={case} seed={seed}");
+                assert_eq!(lazy % p, want, "unreduced lazy: p={p} a={a} case={case} seed={seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pow_mod_matches_iterated_multiply_oracle() {
+    // small exponents: literal repeated multiplication
+    for &m in &edge_moduli() {
+        for case in 0..CASES / 4 {
+            let seed = base_seed() ^ m.rotate_left(29) ^ case;
+            let mut rng = GlyphRng::new(seed);
+            let a = rng.next_u64() % m;
+            let e = rng.next_u64() % 64;
+            let mut want = 1u64 % m;
+            for _ in 0..e {
+                want = mul_mod(want, a, m);
+            }
+            assert_eq!(pow_mod(a, e, m), want, "pow: m={m} a={a} e={e} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn pow_mod_edge_cases_and_fermat() {
+    // m = 1: everything is 0 (the fixed `1 % m` bootstrap)
+    assert_eq!(pow_mod(0, 0, 1), 0);
+    assert_eq!(pow_mod(12345, 678, 1), 0);
+    // e = 0 is the empty product
+    for &m in &edge_moduli() {
+        if m > 1 {
+            assert_eq!(pow_mod(98765, 0, m), 1, "m={m}");
+        }
+    }
+    // Fermat on the Barrett ladder (every edge modulus here is prime < 2^32)
+    for &p in &edge_moduli() {
+        for a in [2u64, 5, p - 1] {
+            if a % p != 0 {
+                assert_eq!(pow_mod(a, p - 1, p), 1, "fermat p={p} a={a}");
+            }
+        }
+    }
+    // m ≥ 2^32 exercises the mul_mod ladder: 2^64 − 59 is prime
+    let m = 0xffff_ffff_ffff_ffc5u64;
+    assert_eq!(pow_mod(2, m - 1, m), 1);
+    assert_eq!(pow_mod(m - 1, 2, m), 1);
+    // unreduced base must be folded before the ladder
+    assert_eq!(pow_mod(u64::MAX, 3, 469762049), pow_mod(u64::MAX % 469762049, 3, 469762049));
+}
