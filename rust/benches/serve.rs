@@ -1,0 +1,103 @@
+//! Serve-layer throughput: end-to-end jobs/sec through a real in-process
+//! server over loopback TCP (submit → worker → result), and checkpoint
+//! persistence bandwidth (capture+save / load+restore MB/s) on a
+//! paper-shaped clear MLP. Emits `bench_out/BENCH_serve.json`.
+
+use glyph::bench_util::{report_json_with_counters, time_once, BenchRecord};
+use glyph::math::GlyphRng;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::serve::job::weights_digest;
+use glyph::serve::{JobSpec, JobState, RunningServer, ServeClient, ServeConfig};
+use glyph::train::{GlyphMlp, MlpConfig};
+use glyph::wire::{write_atomic, Checkpoint, WireCodec};
+use std::time::Duration;
+
+/// Round-trip N tiny clear jobs through the server; returns secs/job.
+fn jobs_per_sec(workers: usize, jobs: usize) -> f64 {
+    let server = RunningServer::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        data_dir: None,
+        workers,
+    })
+    .expect("server starts");
+    let mut client = ServeClient::connect(server.addr()).expect("connects");
+
+    let secs = time_once(|| {
+        let ids: Vec<u64> = (0..jobs)
+            .map(|i| {
+                let mut spec = JobSpec::small_clear("bench", 1000 + i as u64);
+                spec.samples = 8; // 2 steps per job
+                spec.checkpoint_every = 0;
+                client.submit(&spec).expect("submit")
+            })
+            .collect();
+        for id in ids {
+            let st = client.wait(id, Duration::from_secs(600)).expect("job finishes");
+            assert_eq!(st.state, JobState::Completed, "{}", st.message);
+        }
+    });
+    server.shutdown();
+    server.wait();
+    secs / jobs as f64
+}
+
+/// Checkpoint save/load bandwidth on a paper-shaped (196-64-10) clear MLP.
+fn checkpoint_bandwidth() -> (f64, f64, u64) {
+    let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 8);
+    let config = || MlpConfig::for_dims(vec![196, 64, 10], EngineProfile::Test.frac_bits(), 8);
+    let mut rng = GlyphRng::new(7);
+    let mlp = GlyphMlp::new_random(config(), &mut codec, &mut rng, &engine).expect("builds");
+
+    let dir = std::env::temp_dir().join(format!("glyph-bench-serve-{}", std::process::id()));
+    let path = dir.join("checkpoint.bin");
+    let save_secs = time_once(|| {
+        let ckpt = Checkpoint::capture(&mlp.net, &engine, 7, 0, 1, 0.0, None).expect("captures");
+        write_atomic(&path, &ckpt.to_wire()).expect("writes");
+    });
+    let bytes = std::fs::metadata(&path).expect("checkpoint written").len();
+
+    let mut rng2 = GlyphRng::new(8);
+    let mut mlp2 = GlyphMlp::new_random(config(), &mut codec, &mut rng2, &engine).expect("builds");
+    let load_secs = time_once(|| {
+        let raw = std::fs::read(&path).expect("reads");
+        let ckpt = Checkpoint::from_wire(&raw, &engine).expect("decodes");
+        ckpt.restore(&mut mlp2.net, &engine).expect("restores");
+    });
+    assert_eq!(weights_digest(&mlp2.net), weights_digest(&mlp.net), "restore must be exact");
+    let _ = std::fs::remove_dir_all(&dir);
+    (save_secs, load_secs, bytes)
+}
+
+fn main() {
+    let jobs = 8;
+    eprintln!("serve bench: {jobs} clear jobs through a loopback server, then checkpoint i/o");
+
+    let secs_1w = jobs_per_sec(1, jobs);
+    let secs_2w = jobs_per_sec(2, jobs);
+    println!("jobs/sec: {:.1} (1 worker), {:.1} (2 workers)", 1.0 / secs_1w, 1.0 / secs_2w);
+
+    let (save_secs, load_secs, bytes) = checkpoint_bandwidth();
+    let mb = bytes as f64 / (1024.0 * 1024.0);
+    let save_mbps = mb / save_secs;
+    let load_mbps = mb / load_secs;
+    println!(
+        "checkpoint: {bytes} bytes, save {save_mbps:.0} MB/s, load {load_mbps:.0} MB/s \
+         (capture/restore + frame codec included)"
+    );
+
+    report_json_with_counters(
+        "serve",
+        &[
+            BenchRecord::new("job_clear_2step_1worker", secs_1w, 1),
+            BenchRecord::new("job_clear_2step_2workers", secs_2w, 2),
+            BenchRecord::new("checkpoint_save", save_secs, 1),
+            BenchRecord::new("checkpoint_load", load_secs, 1),
+        ],
+        &[
+            ("jobs_completed", (2 * jobs) as u64),
+            ("checkpoint_bytes", bytes),
+            ("checkpoint_save_mb_per_s", save_mbps as u64),
+            ("checkpoint_load_mb_per_s", load_mbps as u64),
+        ],
+    );
+}

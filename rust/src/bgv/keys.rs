@@ -68,6 +68,23 @@ impl BgvSecretKey {
         BgvSecretKey { s_coeffs, s_ntt, ctx: ctx.clone() }
     }
 
+    /// [`Self::from_coeffs`] with the structural invariants checked first —
+    /// the entry point for coefficients from an untrusted source (the wire
+    /// layer's `ClientKeys` decode): exactly `n` coefficients, all ternary.
+    pub fn try_from_coeffs(ctx: &Arc<BgvContext>, s_coeffs: Vec<i64>) -> Result<Self, String> {
+        if s_coeffs.len() != ctx.params.n {
+            return Err(format!(
+                "secret key has {} coefficients, ring degree is {}",
+                s_coeffs.len(),
+                ctx.params.n
+            ));
+        }
+        if let Some(&bad) = s_coeffs.iter().find(|&&c| !(-1..=1).contains(&c)) {
+            return Err(format!("secret-key coefficient {bad} is not ternary"));
+        }
+        Ok(Self::from_coeffs(ctx, s_coeffs))
+    }
+
     /// s in NTT form truncated to `level` limbs.
     pub fn s_ntt_at(&self, level: usize) -> RnsPoly {
         let mut s = self.s_ntt.clone();

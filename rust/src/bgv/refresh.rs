@@ -40,6 +40,22 @@ impl KeyAuthority {
     pub fn ctx(&self) -> &Arc<BgvContext> {
         &self.sk.ctx
     }
+
+    /// The authority's RNG cursor. Checkpoints persist it so that a resumed
+    /// run's re-encryption noise draws replay bit-identically.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.lock().unwrap().state()
+    }
+
+    /// Reposition the authority's RNG cursor (checkpoint restore).
+    pub fn restore_rng_state(&self, s: [u64; 4]) {
+        *self.rng.lock().unwrap() = GlyphRng::from_state(s);
+    }
+
+    /// Overwrite the refresh counter (checkpoint restore).
+    pub fn restore_count(&self, count: usize) {
+        self.count.store(count, Ordering::Relaxed);
+    }
 }
 
 impl NoiseRefresher for KeyAuthority {

@@ -76,6 +76,25 @@ impl OpCounter {
     pub fn bump(&self, field: &AtomicU64, by: u64) {
         field.fetch_add(by, Ordering::Relaxed);
     }
+
+    /// Overwrite every counter with a snapshot's values. Used when resuming
+    /// a checkpointed training run so the live counters continue exactly
+    /// where the interrupted run left off.
+    pub fn store(&self, s: &OpSnapshot) {
+        self.mult_cc.store(s.mult_cc, Ordering::Relaxed);
+        self.mult_cp.store(s.mult_cp, Ordering::Relaxed);
+        self.add_cc.store(s.add_cc, Ordering::Relaxed);
+        self.tlu.store(s.tlu, Ordering::Relaxed);
+        self.act_gates.store(s.act_gates, Ordering::Relaxed);
+        self.extract_pbs.store(s.extract_pbs, Ordering::Relaxed);
+        self.switch_b2t.store(s.switch_b2t, Ordering::Relaxed);
+        self.switch_t2b.store(s.switch_t2b, Ordering::Relaxed);
+        self.refresh.store(s.refresh, Ordering::Relaxed);
+        self.mod_switch.store(s.mod_switch, Ordering::Relaxed);
+        self.relin.store(s.relin, Ordering::Relaxed);
+        self.extract_lanes.store(s.extract_lanes, Ordering::Relaxed);
+        self.repack_lanes.store(s.repack_lanes, Ordering::Relaxed);
+    }
 }
 
 impl OpSnapshot {
@@ -101,6 +120,92 @@ impl OpSnapshot {
     /// Total homomorphic op count (the paper's HOP column).
     pub fn hop(&self) -> u64 {
         self.mult_cc + self.mult_cp + self.add_cc + self.tlu + self.act_gates
+    }
+
+    /// Every counter as a `(name, value)` pair, in declaration order. The
+    /// single source of field names for metrics exposition, the wire codec,
+    /// and diffing — new counters only need to be added here once.
+    pub fn fields(&self) -> [(&'static str, u64); 13] {
+        [
+            ("mult_cc", self.mult_cc),
+            ("mult_cp", self.mult_cp),
+            ("add_cc", self.add_cc),
+            ("tlu", self.tlu),
+            ("act_gates", self.act_gates),
+            ("extract_pbs", self.extract_pbs),
+            ("switch_b2t", self.switch_b2t),
+            ("switch_t2b", self.switch_t2b),
+            ("refresh", self.refresh),
+            ("mod_switch", self.mod_switch),
+            ("relin", self.relin),
+            ("extract_lanes", self.extract_lanes),
+            ("repack_lanes", self.repack_lanes),
+        ]
+    }
+
+    /// Rebuild a snapshot from `(name, value)` pairs ([`Self::fields`]'s
+    /// inverse). Unknown names are rejected; missing names stay zero.
+    pub fn from_fields<'a>(
+        pairs: impl IntoIterator<Item = (&'a str, u64)>,
+    ) -> Result<OpSnapshot, String> {
+        let mut s = OpSnapshot::default();
+        for (name, v) in pairs {
+            match name {
+                "mult_cc" => s.mult_cc = v,
+                "mult_cp" => s.mult_cp = v,
+                "add_cc" => s.add_cc = v,
+                "tlu" => s.tlu = v,
+                "act_gates" => s.act_gates = v,
+                "extract_pbs" => s.extract_pbs = v,
+                "switch_b2t" => s.switch_b2t = v,
+                "switch_t2b" => s.switch_t2b = v,
+                "refresh" => s.refresh = v,
+                "mod_switch" => s.mod_switch = v,
+                "relin" => s.relin = v,
+                "extract_lanes" => s.extract_lanes = v,
+                "repack_lanes" => s.repack_lanes = v,
+                other => return Err(format!("unknown op counter {other:?}")),
+            }
+        }
+        Ok(s)
+    }
+
+    /// Every counter scaled by `k` — a compiled plan's per-step totals times
+    /// a step count is the *predicted* snapshot the serve layer prices
+    /// against live counters.
+    pub fn scale(&self, k: u64) -> OpSnapshot {
+        OpSnapshot::from_fields(self.fields().iter().map(|&(n, v)| (n, v * k)))
+            .expect("fields() names are always known")
+    }
+
+    /// Field-by-field comparison: every counter whose value differs, as
+    /// `(name, self_value, other_value)`. Empty means identical.
+    pub fn diff(&self, other: &OpSnapshot) -> Vec<(&'static str, u64, u64)> {
+        self.diff_ignoring(other, &[])
+    }
+
+    /// [`Self::diff`] with some counters excluded — plan predictions carry
+    /// no relin/mod-switch terms, so consistency checks ignore those.
+    pub fn diff_ignoring(
+        &self,
+        other: &OpSnapshot,
+        ignore: &[&str],
+    ) -> Vec<(&'static str, u64, u64)> {
+        self.fields()
+            .iter()
+            .zip(other.fields().iter())
+            .filter(|((name, a), (_, b))| a != b && !ignore.contains(name))
+            .map(|(&(name, a), &(_, b))| (name, a, b))
+            .collect()
+    }
+
+    /// Render a [`Self::diff`] result for assertion messages:
+    /// `name live=.. expected=..` lines.
+    pub fn render_diff(diff: &[(&'static str, u64, u64)]) -> String {
+        diff.iter()
+            .map(|(name, a, b)| format!("{name}: live={a} expected={b}"))
+            .collect::<Vec<_>>()
+            .join(", ")
     }
 }
 
@@ -144,5 +249,39 @@ mod tests {
         let d = s2.since(&s1);
         assert_eq!(d.mult_cc, 2);
         assert_eq!(d.add_cc, 0);
+    }
+
+    #[test]
+    fn fields_roundtrip_and_diff() {
+        let c = OpCounter::default();
+        c.bump(&c.mult_cc, 7);
+        c.bump(&c.relin, 2);
+        let s = c.snapshot();
+        let back = OpSnapshot::from_fields(s.fields()).unwrap();
+        assert_eq!(s, back);
+        assert!(OpSnapshot::from_fields([("bogus", 1)]).is_err());
+
+        let mut other = s;
+        other.relin = 0;
+        other.add_cc = 9;
+        let d = s.diff(&other);
+        assert_eq!(d, vec![("add_cc", 0, 9), ("relin", 2, 0)]);
+        assert!(s.diff_ignoring(&other, &["relin", "add_cc"]).is_empty());
+        let msg = OpSnapshot::render_diff(&d);
+        assert!(msg.contains("add_cc: live=0 expected=9"), "{msg}");
+
+        assert_eq!(s.scale(3).mult_cc, 21);
+        assert_eq!(s.scale(0), OpSnapshot::default());
+    }
+
+    #[test]
+    fn store_overwrites_counters() {
+        let c = OpCounter::default();
+        c.bump(&c.mult_cc, 5);
+        let mut s = c.snapshot();
+        s.tlu = 11;
+        s.mult_cc = 1;
+        c.store(&s);
+        assert_eq!(c.snapshot(), s);
     }
 }

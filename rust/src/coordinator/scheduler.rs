@@ -95,6 +95,28 @@ impl StepOps {
         self.relu_values + self.softmax_values
     }
 
+    /// Predicted counts as a live-counter-shaped snapshot. `relin` and
+    /// `mod_switch` have no plan-level prediction (they depend on the MAC
+    /// engine's laziness) and stay zero — compare with
+    /// `OpSnapshot::diff_ignoring(.., &["relin", "mod_switch"])`.
+    pub fn to_snapshot(&self) -> crate::coordinator::metrics::OpSnapshot {
+        crate::coordinator::metrics::OpSnapshot {
+            mult_cc: self.mult_cc,
+            mult_cp: self.mult_cp,
+            add_cc: self.add_cc,
+            tlu: self.tlu,
+            act_gates: self.act_gates,
+            extract_pbs: self.extract_pbs,
+            switch_b2t: self.switch_b2t,
+            switch_t2b: self.switch_t2b,
+            refresh: self.refresh,
+            mod_switch: 0,
+            relin: 0,
+            extract_lanes: self.extract_lanes,
+            repack_lanes: self.repack_lanes,
+        }
+    }
+
     /// Element-wise accumulate (used by [`Plan::totals`]).
     pub fn accumulate(&mut self, o: &StepOps) {
         self.mult_cc += o.mult_cc;

@@ -19,6 +19,10 @@
 //!   calibrated cost model that regenerates the paper's tables.
 //! * [`runtime`] — PJRT loader/executor for the AOT JAX/Pallas artifacts.
 //! * [`data`] — dataset loaders and deterministic synthetic fallbacks.
+//! * [`wire`] — versioned std-only binary codec for all durable state
+//!   (keys, ciphertexts, plans, checkpoints).
+//! * [`serve`] — the `glyph serve` multi-tenant training job service:
+//!   TCP protocol, job queue/workers, resumable checkpoints, metrics.
 //! * [`bench_util`] — the hand-rolled bench harness used by `cargo bench`.
 
 pub mod bench_util;
@@ -28,6 +32,8 @@ pub mod data;
 pub mod math;
 pub mod nn;
 pub mod runtime;
+pub mod serve;
 pub mod switch;
 pub mod tfhe;
 pub mod train;
+pub mod wire;

@@ -19,6 +19,17 @@
 //!                           `--backend clear` runs the bit-exact plaintext
 //!                           mirror, fast enough for full epochs + a test-
 //!                           accuracy report (EXPERIMENTS.md §Backends).
+//! * `serve [--addr H:P] [--data-dir DIR] [--workers N]`
+//!                         — the multi-tenant training job server
+//!                           (EXPERIMENTS.md §Serving). With `--data-dir`,
+//!                           jobs checkpoint every K steps and resume across
+//!                           restarts.
+//! * `submit | status | cancel | fetch-result | metrics | ping | shutdown`
+//!                         — thin clients for a running server (all take
+//!                           `--addr`; `status`/`cancel`/`fetch-result` take
+//!                           `--id`). `submit` mirrors the train-mlp flags
+//!                           plus `--tenant`, `--seed`, `--checkpoint-every`,
+//!                           `--profile default|test`.
 //!
 //! The `examples/` binaries are the full experiment drivers.
 
@@ -27,7 +38,11 @@ use glyph::coordinator::scheduler::Plan;
 use glyph::data::Dataset;
 use glyph::nn::backend::Codec;
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::serve::{JobBackend, JobSpec, RunningServer, ServeClient, ServeConfig};
 use glyph::train::{CnnConfig, GlyphMlp, MlpConfig, Trainer};
+use std::path::PathBuf;
+
+const DEFAULT_ADDR: &str = "127.0.0.1:7421";
 
 fn parse_dims(spec: &str) -> anyhow::Result<Vec<usize>> {
     let dims: Vec<usize> = spec
@@ -41,22 +56,26 @@ fn parse_dims(spec: &str) -> anyhow::Result<Vec<usize>> {
     Ok(dims)
 }
 
-/// Per-layer activation shift ≈ log2(127·fan_in) − 7 (paper §4.1), with an
-/// upper clamp chosen by the caller (the engine's fraction-bit budget).
-fn derived_shifts(dims: &[usize], max_shift: u32) -> (Vec<u32>, Vec<u32>) {
-    let act: Vec<u32> = dims[..dims.len() - 1]
-        .iter()
-        .map(|&fan_in| (((127 * fan_in) as f64).log2().ceil() as u32).saturating_sub(7).clamp(1, max_shift))
-        .collect();
-    // error shifts follow the activation shift of the layer above
-    let err: Vec<u32> = (0..act.len()).map(|l| act[(l + 1).min(act.len() - 1)]).collect();
-    (act, err)
-}
-
-fn mlp_config_for(dims: Vec<usize>, max_shift: u32, softmax_bits: usize) -> MlpConfig {
-    let (act_shifts, err_shifts) = derived_shifts(&dims, max_shift);
-    let grad_shift = act_shifts.iter().copied().max().unwrap_or(8).min(max_shift);
-    MlpConfig { dims, act_shifts, err_shifts, grad_shift, softmax_bits }
+/// The value following `--name`, if the flag is present. A missing value or
+/// a value that fails to parse is an error — not silently the default
+/// (`--epochs ten` used to train for 1 epoch without a word).
+fn flag_value<T: std::str::FromStr>(args: &[String], name: &str) -> anyhow::Result<Option<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    let Some(i) = args.iter().position(|a| a == name) else {
+        return Ok(None);
+    };
+    let value = args
+        .get(i + 1)
+        .ok_or_else(|| anyhow::anyhow!("flag {name} requires a value"))?;
+    if value.starts_with("--") {
+        anyhow::bail!("flag {name} requires a value, got flag {value:?} instead");
+    }
+    value
+        .parse::<T>()
+        .map(Some)
+        .map_err(|e| anyhow::anyhow!("bad {name} value {value:?}: {e}"))
 }
 
 fn print_plan(plan: &Plan) {
@@ -87,19 +106,44 @@ fn print_plan(plan: &Plan) {
     println!("switches: {} (valid: {})", plan.switch_count(), plan.validate());
 }
 
+fn print_status(st: &glyph::serve::JobStatus) {
+    println!("job {} (tenant {}): {}", st.id, st.tenant, st.state.name());
+    if !st.message.is_empty() {
+        println!("  message: {}", st.message);
+    }
+    println!(
+        "  epoch {}, step {}/{}, checkpoints {}, resumes {}",
+        st.epoch, st.step, st.total_steps, st.checkpoints, st.resumes
+    );
+    println!("  live ops:      {}", st.live_ops);
+    println!("  predicted ops: {}", st.predicted_ops);
+    println!(
+        "  plan drift (predicted counters): {}",
+        glyph::serve::metrics::op_drift(&st.live_ops, &st.predicted_ops)
+    );
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("info");
     let flag = |name: &str| args.iter().any(|a| a == name);
-    let opt_str = |name: &str| -> Option<String> {
-        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+    let opt_str = |name: &str| -> anyhow::Result<Option<String>> { flag_value(&args, name) };
+    let opt = |name: &str, default: usize| -> anyhow::Result<usize> {
+        Ok(flag_value(&args, name)?.unwrap_or(default))
     };
-    let opt = |name: &str, default: usize| -> usize {
-        args.iter()
-            .position(|a| a == name)
-            .and_then(|i| args.get(i + 1))
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    let opt_u64 = |name: &str, default: u64| -> anyhow::Result<u64> {
+        Ok(flag_value(&args, name)?.unwrap_or(default))
+    };
+    let req_id = || -> anyhow::Result<u64> {
+        flag_value(&args, "--id")?.ok_or_else(|| anyhow::anyhow!("--id <job> is required"))
+    };
+    let addr = || -> anyhow::Result<String> {
+        Ok(flag_value(&args, "--addr")?.unwrap_or_else(|| DEFAULT_ADDR.into()))
+    };
+    let connect = || -> anyhow::Result<ServeClient> {
+        let addr = addr()?;
+        ServeClient::connect(addr.as_str())
+            .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))
     };
 
     match cmd {
@@ -113,7 +157,7 @@ fn main() -> anyhow::Result<()> {
         }
         "plan" => {
             // paper mini-batch width unless overridden
-            let batch = opt("--batch", 60);
+            let batch = opt("--batch", 60)?;
             if flag("--cnn") {
                 let config = CnnConfig::paper_mnist();
                 let (c1, c2) = config.conv_channels;
@@ -135,8 +179,8 @@ fn main() -> anyhow::Result<()> {
                 println!("compiled transfer-CNN schedule (paper MNIST shape, batch {batch}):");
                 print_plan(&plan);
             } else {
-                let config = match opt_str("--dims") {
-                    Some(spec) => mlp_config_for(parse_dims(&spec)?, 18, 8),
+                let config = match opt_str("--dims")? {
+                    Some(spec) => MlpConfig::for_dims(parse_dims(&spec)?, 18, 8),
                     None => MlpConfig::paper_mlp(),
                 };
                 let plan = config
@@ -177,23 +221,25 @@ fn main() -> anyhow::Result<()> {
             println!("{}", cost::to_markdown("Table 4: Glyph CNN + TL (MNIST)", &cost::cnn_table(&cost::CnnShape::paper_mnist(), &lat)));
         }
         "train-mlp" => {
-            let backend = opt_str("--backend").unwrap_or_else(|| "fhe".into());
-            let batch = opt("--batch", 4);
-            let dims = match opt_str("--dims") {
+            let backend = opt_str("--backend")?.unwrap_or_else(|| "fhe".into());
+            let batch = opt("--batch", 4)?;
+            let dims = match opt_str("--dims")? {
                 Some(spec) => parse_dims(&spec)?,
                 None => vec![16, 8, 4],
             };
-            let classes = *dims.last().unwrap();
+            let classes = *dims
+                .last()
+                .ok_or_else(|| anyhow::anyhow!("--dims must name at least one layer width"))?;
             // fhe defaults stay reduced-scale; clear is fast enough for epochs
             let clear = match backend.as_str() {
                 "clear" => true,
                 "fhe" => false,
                 other => anyhow::bail!("--backend must be `clear` or `fhe`, got {other:?}"),
             };
-            let steps = opt("--steps", if clear { usize::MAX } else { 2 });
-            let epochs = opt("--epochs", 1);
-            let samples = opt("--samples", if clear { 512 } else { batch * 2 });
-            let dataset = opt_str("--dataset").unwrap_or_else(|| "digits".into());
+            let steps = opt("--steps", if clear { usize::MAX } else { 2 })?;
+            let epochs = opt("--epochs", 1)?;
+            let samples = opt("--samples", if clear { 512 } else { batch * 2 })?;
+            let dataset = opt_str("--dataset")?.unwrap_or_else(|| "digits".into());
             let load = |train_split: bool, count: usize, seed: u64| -> anyhow::Result<Dataset> {
                 Ok(match dataset.as_str() {
                     "digits" => glyph::data::synthetic_digits(count, seed, "cli"),
@@ -227,7 +273,7 @@ fn main() -> anyhow::Result<()> {
                 (e, Box::new(c))
             };
             let mut rng = glyph::math::GlyphRng::new(1);
-            let config = mlp_config_for(dims, engine.frac_bits(), 3);
+            let config = MlpConfig::for_dims(dims, engine.frac_bits(), 3);
             let mlp = GlyphMlp::new_random(config, codec.as_mut(), &mut rng, &engine)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             let mut trainer = Trainer::new(mlp.net, classes);
@@ -248,10 +294,101 @@ fn main() -> anyhow::Result<()> {
             }
             println!("ops: {}", engine.counter.snapshot());
         }
+        "serve" => {
+            let config = ServeConfig {
+                addr: addr()?,
+                data_dir: opt_str("--data-dir")?.map(PathBuf::from),
+                workers: opt("--workers", 1)?,
+            };
+            let persistent = config.data_dir.is_some();
+            let server = RunningServer::start(config)
+                .map_err(|e| anyhow::anyhow!("starting server: {e}"))?;
+            // The smoke tests parse this exact line to learn the bound port.
+            println!("glyph-serve listening on {}", server.addr());
+            if !persistent {
+                eprintln!("no --data-dir: jobs are memory-only (no checkpoints, no resume)");
+            }
+            server.wait();
+            println!("glyph-serve stopped");
+        }
+        "submit" => {
+            let backend = match opt_str("--backend")?.unwrap_or_else(|| "clear".into()).as_str() {
+                "clear" => JobBackend::Clear,
+                "fhe" => JobBackend::Fhe,
+                other => anyhow::bail!("--backend must be `clear` or `fhe`, got {other:?}"),
+            };
+            let profile_default = if backend == JobBackend::Clear { "default" } else { "test" };
+            let profile = match opt_str("--profile")?
+                .unwrap_or_else(|| profile_default.into())
+                .as_str()
+            {
+                "default" => EngineProfile::Default,
+                "test" => EngineProfile::Test,
+                other => anyhow::bail!("--profile must be `default` or `test`, got {other:?}"),
+            };
+            let dims = match opt_str("--dims")? {
+                Some(spec) => parse_dims(&spec)?,
+                None => vec![16, 8, 4],
+            };
+            let spec = JobSpec {
+                tenant: opt_str("--tenant")?.unwrap_or_else(|| "cli".into()),
+                backend,
+                profile,
+                dims: dims.into_iter().map(|d| d as u64).collect(),
+                batch: opt_u64("--batch", 4)?,
+                epochs: opt_u64("--epochs", 1)?,
+                steps_per_epoch: opt_u64("--steps-per-epoch", 0)?,
+                samples: opt_u64("--samples", 32)?,
+                eval_samples: opt_u64("--eval-samples", 0)?,
+                dataset: opt_str("--dataset")?.unwrap_or_else(|| "digits".into()),
+                seed: opt_u64("--seed", 1)?,
+                checkpoint_every: opt_u64("--checkpoint-every", 8)?,
+                softmax_bits: opt_u64("--softmax-bits", 3)?,
+            };
+            spec.validate().map_err(|e| anyhow::anyhow!("bad job spec: {e}"))?;
+            let id = connect()?.submit(&spec)?;
+            println!("submitted job {id}");
+        }
+        "status" => {
+            let st = connect()?.status(req_id()?)?;
+            print_status(&st);
+        }
+        "cancel" => {
+            let id = req_id()?;
+            connect()?.cancel(id)?;
+            println!("cancel requested for job {id}");
+        }
+        "fetch-result" => {
+            let r = connect()?.fetch_result(req_id()?)?;
+            println!(
+                "job {}: {} steps in {:.2}s, test accuracy {:.3}, resumes {}",
+                r.id, r.steps, r.seconds, r.accuracy, r.resumes
+            );
+            println!("  ops: {}", r.ops);
+            println!(
+                "  weights digest {:016x}, logits digest {:016x}",
+                r.weights_digest, r.logits_digest
+            );
+        }
+        "metrics" => {
+            print!("{}", connect()?.metrics()?);
+        }
+        "ping" => {
+            connect()?.ping()?;
+            println!("pong");
+        }
+        "shutdown" => {
+            connect()?.shutdown()?;
+            println!("server shutting down");
+        }
         other => {
-            eprintln!("unknown command {other}; commands: info, plan, microbench, tables, train-mlp");
+            eprintln!("unknown command {other}; commands: info, plan, microbench, tables, train-mlp,");
+            eprintln!("  serve, submit, status, cancel, fetch-result, metrics, ping, shutdown");
             eprintln!("train-mlp flags: --backend clear|fhe (default fhe), --steps N, --epochs E,");
             eprintln!("  --batch B, --dims a,b,c, --samples M, --dataset digits|mnist|cancer|svhn|cifar");
+            eprintln!("serve flags: --addr H:P (default {DEFAULT_ADDR}), --data-dir DIR, --workers N");
+            eprintln!("submit flags: train-mlp flags plus --tenant, --seed, --checkpoint-every K,");
+            eprintln!("  --steps-per-epoch N, --eval-samples M, --softmax-bits B, --profile default|test");
             std::process::exit(2);
         }
     }

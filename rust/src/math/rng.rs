@@ -26,6 +26,17 @@ impl GlyphRng {
         GlyphRng { s: [next(), next(), next(), next()] }
     }
 
+    /// The raw generator state — the *cursor* persisted by checkpoints so a
+    /// resumed run continues the exact draw sequence ([`Self::from_state`]).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at a previously captured cursor.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        GlyphRng { s }
+    }
+
     /// Nondeterministic seed for key generation in the examples/CLI.
     pub fn from_entropy() -> Self {
         use std::time::{SystemTime, UNIX_EPOCH};

@@ -92,6 +92,43 @@ pub struct FheState {
     pub fwd_switch: LweExtractor,
     pub bwd_switch: Repacker,
     pub auth: Arc<KeyAuthority>,
+    /// Key-generation seed. Keygen is fully deterministic from it, so the
+    /// wire format for an `FheState` is (parameter triple, seed, authority
+    /// RNG cursor) and decoding *regenerates* the keys instead of shipping
+    /// FFT-domain cloud keys over the wire.
+    pub seed: u64,
+}
+
+impl FheState {
+    /// Deterministic key generation from a seed — the exact sequence
+    /// [`GlyphEngine::setup`] runs, factored out so the wire layer can
+    /// rebuild identical key material from (params, seed).
+    pub fn generate(
+        bgv_params: BgvParams,
+        gate_params: TfheParams,
+        ext_params: TfheParams,
+        seed: u64,
+    ) -> FheState {
+        let ctx = BgvContext::new(bgv_params);
+        let mut rng = GlyphRng::new(seed);
+        let bgv_sk = Arc::new(BgvSecretKey::generate(&ctx, &mut rng));
+        let rlk = RelinKey::generate(&bgv_sk, &mut rng);
+        let lwe_key = LweKey::generate_binary(gate_params.n, &mut rng);
+        let gate_ring = TrlweKey::generate(gate_params.big_n, &mut rng);
+        let gate_ck = TfheCloudKey::generate(&lwe_key, &gate_ring, &gate_params, &mut rng);
+        let ext_ring = TrlweKey::generate(ext_params.big_n, &mut rng);
+        let extract_ck = TfheCloudKey::generate(&lwe_key, &ext_ring, &ext_params, &mut rng);
+        let fwd_switch = LweExtractor::generate(&bgv_sk, &lwe_key, &ext_params, &mut rng);
+        let bwd_switch = Repacker::generate(&gate_ring, &bgv_sk, &mut rng);
+        let auth = KeyAuthority::new(bgv_sk, GlyphRng::new(seed ^ 0x5eed));
+        FheState { ctx, rlk, gate_ck, extract_ck, fwd_switch, bwd_switch, auth, seed }
+    }
+
+    /// The client keys matching this evaluator state's keygen seed, at their
+    /// initial RNG cursor (what [`GlyphEngine::setup`] hands out).
+    pub fn client_keys(&self) -> ClientKeys {
+        ClientKeys { bgv_sk: self.auth.sk.clone(), rng: GlyphRng::new(self.seed ^ 0xc11e) }
+    }
 }
 
 /// Which execution backend an engine runs.
@@ -123,6 +160,14 @@ pub enum EngineProfile {
 }
 
 impl EngineProfile {
+    /// The profile's fixed-point fraction bits (`GlyphEngine::frac_bits`
+    /// without building an engine) — shape-only plan compilation needs the
+    /// shift budget before any keys exist.
+    pub fn frac_bits(self) -> u32 {
+        let (bgv, _, _) = self.params();
+        bgv.t.trailing_zeros() - crate::switch::SWITCH_BITS
+    }
+
     fn params(self) -> (BgvParams, TfheParams, TfheParams) {
         match self {
             EngineProfile::Default => (
@@ -145,34 +190,27 @@ impl GlyphEngine {
     pub fn setup(profile: EngineProfile, batch: usize, seed: u64) -> (GlyphEngine, ClientKeys) {
         let (bgv_params, gate_params, ext_params) = profile.params();
         assert!(batch <= bgv_params.n);
-        let ctx = BgvContext::new(bgv_params);
-        let mut rng = GlyphRng::new(seed);
-        let bgv_sk = Arc::new(BgvSecretKey::generate(&ctx, &mut rng));
-        let rlk = RelinKey::generate(&bgv_sk, &mut rng);
-        let lwe_key = LweKey::generate_binary(gate_params.n, &mut rng);
-        let gate_ring = TrlweKey::generate(gate_params.big_n, &mut rng);
-        let gate_ck = TfheCloudKey::generate(&lwe_key, &gate_ring, &gate_params, &mut rng);
-        let ext_ring = TrlweKey::generate(ext_params.big_n, &mut rng);
-        let extract_ck = TfheCloudKey::generate(&lwe_key, &ext_ring, &ext_params, &mut rng);
-        let fwd_switch = LweExtractor::generate(&bgv_sk, &lwe_key, &ext_params, &mut rng);
-        let bwd_switch = Repacker::generate(&gate_ring, &bgv_sk, &mut rng);
-        let auth = KeyAuthority::new(bgv_sk.clone(), GlyphRng::new(seed ^ 0x5eed));
+        let state = FheState::generate(bgv_params, gate_params, ext_params, seed);
+        let client = state.client_keys();
         let engine = GlyphEngine {
-            backend: Backend::Fhe(Box::new(FheState {
-                ctx,
-                rlk,
-                gate_ck,
-                extract_ck,
-                fwd_switch,
-                bwd_switch,
-                auth,
-            })),
+            backend: Backend::Fhe(Box::new(state)),
             counter: OpCounter::default(),
             batch,
             serial_switch: false,
         };
-        let client = ClientKeys { bgv_sk, rng: GlyphRng::new(seed ^ 0xc11e) };
         (engine, client)
+    }
+
+    /// Wrap already-generated FHE key material (e.g. decoded off the wire)
+    /// in an engine with fresh counters.
+    pub fn from_fhe_state(state: FheState, batch: usize) -> GlyphEngine {
+        assert!(batch <= state.ctx.params.n);
+        GlyphEngine {
+            backend: Backend::Fhe(Box::new(state)),
+            counter: OpCounter::default(),
+            batch,
+            serial_switch: false,
+        }
     }
 
     /// Build a clear-backend engine (no key material, instant) with the

@@ -97,6 +97,12 @@ pub trait Layer {
     fn as_fc(&self) -> Option<&super::linear::FcLayer> {
         None
     }
+
+    /// Mutable downcast (checkpoint restore overwrites FC weights in
+    /// place).
+    fn as_fc_mut(&mut self) -> Option<&mut super::linear::FcLayer> {
+        None
+    }
 }
 
 /// Shape-only CHW→vector adapter in front of the FC head (zero

@@ -267,6 +267,10 @@ impl Layer for FcLayer {
     fn as_fc(&self) -> Option<&FcLayer> {
         Some(self)
     }
+
+    fn as_fc_mut(&mut self) -> Option<&mut FcLayer> {
+        Some(self)
+    }
 }
 
 #[cfg(test)]

@@ -700,6 +700,21 @@ impl Network {
     pub fn fc_layers(&self) -> Vec<&FcLayer> {
         self.units.iter().filter_map(|u| u.layer.as_fc()).collect()
     }
+
+    /// FC layers with their unit indices, bottom-up (checkpoint capture
+    /// keys weights by unit index).
+    pub fn fc_units(&self) -> Vec<(usize, &FcLayer)> {
+        self.units
+            .iter()
+            .enumerate()
+            .filter_map(|(i, u)| u.layer.as_fc().map(|fc| (i, fc)))
+            .collect()
+    }
+
+    /// Mutable FC access by unit index (checkpoint restore).
+    pub fn fc_unit_mut(&mut self, unit: usize) -> Option<&mut FcLayer> {
+        self.units.get_mut(unit).and_then(|u| u.layer.as_fc_mut())
+    }
 }
 
 #[cfg(test)]

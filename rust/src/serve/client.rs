@@ -1,0 +1,140 @@
+//! Blocking client for the serve protocol. Used by the CLI subcommands
+//! (`glyph submit`/`status`/...), the smoke tests and the bench.
+
+use super::protocol::{read_frame, write_frame, JobResult, JobSpec, JobStatus, Request, Response};
+use crate::wire::WireCodec;
+use std::fmt;
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub enum ClientError {
+    Io(io::Error),
+    /// Frame arrived but did not decode as a `Response`.
+    Wire(crate::wire::WireError),
+    /// Server replied `Response::Error(..)`.
+    Server(String),
+    /// Server replied, but with a variant the call does not expect.
+    Unexpected(String),
+    /// Server closed the connection without replying.
+    Disconnected,
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io error: {e}"),
+            ClientError::Wire(e) => write!(f, "bad response frame: {e}"),
+            ClientError::Server(msg) => write!(f, "server error: {msg}"),
+            ClientError::Unexpected(msg) => write!(f, "unexpected response: {msg}"),
+            ClientError::Disconnected => write!(f, "server closed the connection"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl From<crate::wire::WireError> for ClientError {
+    fn from(e: crate::wire::WireError) -> Self {
+        ClientError::Wire(e)
+    }
+}
+
+/// One TCP connection to a glyph server; requests are serialized on it.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<ServeClient> {
+        Ok(ServeClient { stream: TcpStream::connect(addr)? })
+    }
+
+    /// Send one request and read one response.
+    pub fn request(&mut self, req: &Request) -> Result<Response, ClientError> {
+        write_frame(&mut self.stream, &req.to_wire())?;
+        let frame = read_frame(&mut self.stream)?.ok_or(ClientError::Disconnected)?;
+        let resp = Response::from_wire(&frame, &())?;
+        if let Response::Error(msg) = resp {
+            return Err(ClientError::Server(msg));
+        }
+        Ok(resp)
+    }
+
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<u64, ClientError> {
+        match self.request(&Request::Submit(spec.clone()))? {
+            Response::Submitted { id } => Ok(id),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    pub fn status(&mut self, id: u64) -> Result<JobStatus, ClientError> {
+        match self.request(&Request::Status { id })? {
+            Response::Status(status) => Ok(status),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    pub fn cancel(&mut self, id: u64) -> Result<(), ClientError> {
+        match self.request(&Request::Cancel { id })? {
+            Response::Cancelled { .. } => Ok(()),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    pub fn fetch_result(&mut self, id: u64) -> Result<JobResult, ClientError> {
+        match self.request(&Request::FetchResult { id })? {
+            Response::Result(result) => Ok(result),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    pub fn metrics(&mut self) -> Result<String, ClientError> {
+        match self.request(&Request::Metrics)? {
+            Response::Metrics(text) => Ok(text),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        match self.request(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> Result<(), ClientError> {
+        match self.request(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Poll `status` until the job leaves the queued/running states or
+    /// `timeout` elapses.
+    pub fn wait(&mut self, id: u64, timeout: Duration) -> Result<JobStatus, ClientError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let status = self.status(id)?;
+            match status.state {
+                super::protocol::JobState::Queued | super::protocol::JobState::Running => {
+                    if Instant::now() >= deadline {
+                        return Err(ClientError::Unexpected(format!(
+                            "timed out waiting for job {id} (state: {})",
+                            status.state.name()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                _ => return Ok(status),
+            }
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! The job runner: one [`JobSpec`] → a deterministic, checkpoint-resumable
+//! training run.
+//!
+//! Everything the run touches derives from the spec's seed: dataset
+//! synthesis, weight initialization, key generation, encryption noise.
+//! [`run_job`] therefore *rebuilds* the engine and network from the spec on
+//! every invocation; if a checkpoint exists in the job directory it then
+//! overwrites the trained weights, reloads the op counters and repositions
+//! the RNG cursors, and re-enters the epoch loop at the recorded step. The
+//! invariant (locked by `tests/serve_resume.rs`): a run interrupted at any
+//! checkpoint boundary and resumed in a fresh process produces final
+//! weights, logits and op counters byte-identical to an uninterrupted run.
+
+use super::protocol::{JobBackend, JobResult, JobSpec, JobState, JobStatus};
+use crate::coordinator::metrics::OpSnapshot;
+use crate::coordinator::scheduler::Plan;
+use crate::data::{DataError, Dataset};
+use crate::math::GlyphRng;
+use crate::nn::backend::{ClearCodec, Codec};
+use crate::nn::engine::{ClientKeys, GlyphEngine};
+use crate::nn::linear::Weight;
+use crate::nn::network::{Network, NetworkError};
+use crate::train::{GlyphMlp, MlpConfig, Trainer};
+use crate::wire::{fnv1a64, write_atomic, Checkpoint, WireCodec, WireError, WireWriter};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Why a job could not run (worker-side; the server relays the message in
+/// the job's `Failed` status).
+#[derive(Debug)]
+pub enum JobError {
+    Spec(String),
+    Network(NetworkError),
+    Data(DataError),
+    Wire(WireError),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Spec(msg) => write!(f, "invalid job spec: {msg}"),
+            JobError::Network(e) => write!(f, "network build failed: {e}"),
+            JobError::Data(e) => write!(f, "dataset error: {e}"),
+            JobError::Wire(e) => write!(f, "checkpoint error: {e}"),
+            JobError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+impl From<NetworkError> for JobError {
+    fn from(e: NetworkError) -> Self {
+        JobError::Network(e)
+    }
+}
+
+impl From<DataError> for JobError {
+    fn from(e: DataError) -> Self {
+        JobError::Data(e)
+    }
+}
+
+impl From<WireError> for JobError {
+    fn from(e: WireError) -> Self {
+        JobError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for JobError {
+    fn from(e: std::io::Error) -> Self {
+        JobError::Io(e)
+    }
+}
+
+/// Shared server↔worker view of one job.
+pub struct JobHandle {
+    pub id: u64,
+    pub spec: JobSpec,
+    /// Set by `cancel` requests; the runner checks it between chunks.
+    pub cancel: AtomicBool,
+    status: Mutex<JobStatus>,
+}
+
+impl JobHandle {
+    pub fn new(id: u64, spec: JobSpec) -> JobHandle {
+        let total_steps = spec.epochs * planned_steps_per_epoch(&spec);
+        let status = JobStatus {
+            id,
+            tenant: spec.tenant.clone(),
+            state: JobState::Queued,
+            epoch: 0,
+            step: 0,
+            total_steps,
+            checkpoints: 0,
+            resumes: 0,
+            live_ops: OpSnapshot::default(),
+            predicted_ops: OpSnapshot::default(),
+            message: String::new(),
+        };
+        JobHandle { id, spec, cancel: AtomicBool::new(false), status: Mutex::new(status) }
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.status.lock().unwrap().clone()
+    }
+
+    pub fn update<F: FnOnce(&mut JobStatus)>(&self, f: F) {
+        f(&mut self.status.lock().unwrap());
+    }
+}
+
+/// Steps per epoch the spec implies before the dataset is loaded (the
+/// loaded dataset can only shrink this, and loaders honour `samples`).
+fn planned_steps_per_epoch(spec: &JobSpec) -> u64 {
+    let from_data = spec.samples / spec.batch.max(1);
+    if spec.steps_per_epoch > 0 {
+        spec.steps_per_epoch.min(from_data)
+    } else {
+        from_data
+    }
+}
+
+/// Worker-side run options. The default runs to completion; tests inject a
+/// halt to simulate a crash at an exact checkpoint boundary.
+#[derive(Default)]
+pub struct RunOptions {
+    /// Stop (returning [`RunOutcome::Halted`]) after this many checkpoints
+    /// have been written *by this invocation*.
+    pub halt_after_checkpoints: Option<u64>,
+}
+
+/// How a [`run_job`] invocation ended.
+#[derive(Debug)]
+pub enum RunOutcome {
+    Completed(JobResult),
+    Cancelled,
+    /// `RunOptions::halt_after_checkpoints` fired (tests only).
+    Halted,
+}
+
+enum JobCodec {
+    Clear(ClearCodec),
+    Fhe(ClientKeys),
+}
+
+impl JobCodec {
+    fn as_dyn(&mut self) -> &mut dyn Codec {
+        match self {
+            JobCodec::Clear(c) => c,
+            JobCodec::Fhe(c) => c,
+        }
+    }
+}
+
+fn load_dataset(spec: &JobSpec, train_split: bool, count: usize, seed: u64) -> Result<Dataset, JobError> {
+    Ok(match spec.dataset.as_str() {
+        "digits" => crate::data::synthetic_digits(count, seed, "serve"),
+        // real IDX files ignore the seed; evaluation must read the held-out
+        // split, not a train-set prefix
+        "mnist" => crate::data::mnist(train_split, count, seed),
+        "cancer" => crate::data::synthetic_cancer(count, seed),
+        "svhn" => crate::data::synthetic_svhn(count, seed),
+        "cifar" => crate::data::synthetic_cifar(count, seed),
+        other => return Err(JobError::Spec(format!("unknown dataset {other:?}"))),
+    })
+}
+
+/// The spec's derived MLP config (shared with plan compilation so the
+/// server prices exactly what the worker executes).
+pub fn job_config(spec: &JobSpec) -> Result<MlpConfig, JobError> {
+    spec.validate().map_err(JobError::Spec)?;
+    let dims: Vec<usize> = spec.dims.iter().map(|&d| d as usize).collect();
+    Ok(MlpConfig::for_dims(dims, spec.profile.frac_bits(), spec.softmax_bits as usize))
+}
+
+/// Shape-only plan compilation for a spec (submit-time validation + the
+/// metrics endpoint's per-step prediction; no keys are generated).
+pub fn compiled_plan(spec: &JobSpec) -> Result<Plan, JobError> {
+    job_config(spec)?.builder()?.compile(spec.batch as usize).map_err(JobError::Network)
+}
+
+/// FNV-1a over the canonical wire encoding of every trainable weight
+/// ciphertext, in layer/row/column order — the byte-identity witness two
+/// runs are compared by.
+pub fn weights_digest(net: &Network) -> u64 {
+    let mut buf = Vec::new();
+    for (_, fc) in net.fc_units() {
+        if !fc.is_trainable() {
+            continue;
+        }
+        for row in &fc.w {
+            for wt in row {
+                if let Weight::Enc(ct) = wt {
+                    buf.extend_from_slice(&ct.to_wire());
+                }
+            }
+        }
+    }
+    fnv1a64(&buf)
+}
+
+fn logits_digest(rows: &[Vec<i64>]) -> u64 {
+    let mut w = WireWriter::new();
+    w.put_len(rows.len());
+    for row in rows {
+        w.put_i64s(row);
+    }
+    fnv1a64(&w.into_bytes())
+}
+
+/// Test-support pacing knob: sleep this many milliseconds per trained step
+/// so crash-recovery tests can reliably land a `kill -9` mid-run. Unset or
+/// 0 in production.
+fn step_delay_ms() -> u64 {
+    std::env::var("GLYPH_SERVE_STEP_DELAY_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// The checkpoint file inside a job directory.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join("checkpoint.bin")
+}
+
+/// Run (or resume) a job. `dir` is the job's persistence directory — with
+/// `None` the run is purely in-memory (no checkpoints are read or
+/// written). Returns the outcome; job state transitions are published
+/// through `handle`.
+pub fn run_job(
+    handle: &JobHandle,
+    dir: Option<&Path>,
+    opts: &RunOptions,
+) -> Result<RunOutcome, JobError> {
+    let spec = &handle.spec;
+    let config = job_config(spec)?;
+    let batch = spec.batch as usize;
+    let classes = *spec.dims.last().expect("validated") as usize;
+
+    // Engine + codec. Keygen (FHE) is deterministic from the spec seed, so
+    // a resumed run regenerates the identical key material.
+    let (engine, mut codec) = match spec.backend {
+        JobBackend::Clear => {
+            let (e, c) = GlyphEngine::setup_clear(spec.profile, batch);
+            (e, JobCodec::Clear(c))
+        }
+        JobBackend::Fhe => {
+            let (e, c) = GlyphEngine::setup(spec.profile, batch, spec.seed);
+            (e, JobCodec::Fhe(c))
+        }
+    };
+
+    // Datasets: split seeds derive from the job seed.
+    let train = load_dataset(spec, true, spec.samples as usize, spec.seed ^ 0x7261)?;
+    let eval_n = if spec.eval_samples > 0 {
+        spec.eval_samples as usize
+    } else {
+        ((spec.samples / 4) as usize).max(batch)
+    };
+    let test = load_dataset(spec, false, eval_n, spec.seed ^ 0x7465)?;
+
+    // Network: initial weight draws and their encryptions replay the
+    // original build exactly (same seeds), then a checkpoint — if any —
+    // overwrites the trained state.
+    let mut rng = GlyphRng::new(spec.seed ^ 0xb11d);
+    let mlp = GlyphMlp::new_random(config, codec.as_dyn(), &mut rng, &engine)?;
+    let mut trainer = Trainer::new(mlp.net, classes);
+
+    let spe = planned_steps_per_epoch(spec).min((train.len() / batch) as u64);
+    if spe == 0 {
+        return Err(JobError::Spec(format!(
+            "dataset {} yields no full minibatch of {batch}",
+            train.name
+        )));
+    }
+    let total = spec.epochs * spe;
+    let ce = spec.checkpoint_every;
+
+    // Resume from the latest checkpoint, if the job directory holds one.
+    let ckpt_path = dir.map(checkpoint_path);
+    let mut global: u64 = 0;
+    let mut seconds: f64 = 0.0;
+    if let Some(path) = ckpt_path.as_ref().filter(|p| p.exists()) {
+        let bytes = std::fs::read(path)?;
+        let ckpt = Checkpoint::from_wire(&bytes, &engine)?;
+        if ckpt.job_seed != spec.seed {
+            return Err(JobError::Spec(format!(
+                "checkpoint in {} belongs to a job with seed {}, this job's seed is {}",
+                path.display(),
+                ckpt.job_seed,
+                spec.seed
+            )));
+        }
+        ckpt.restore(&mut trainer.net, &engine)?;
+        if let JobCodec::Fhe(ck) = &mut codec {
+            let state = ckpt.client_rng.ok_or_else(|| {
+                JobError::Spec("FHE checkpoint is missing the client RNG cursor".into())
+            })?;
+            ck.rng = GlyphRng::from_state(state);
+        }
+        global = ckpt.step.min(total);
+        seconds = ckpt.seconds;
+        handle.update(|st| st.resumes += 1);
+    }
+
+    let per_step = trainer.net.plan.totals().to_snapshot();
+    let publish = |st_global: u64, live: OpSnapshot| {
+        handle.update(|st| {
+            st.state = JobState::Running;
+            st.step = st_global;
+            st.epoch = st_global / spe;
+            st.total_steps = total;
+            st.checkpoints = if ce > 0 { st_global / ce } else { 0 };
+            st.live_ops = live;
+            st.predicted_ops = per_step.scale(st_global);
+        });
+    };
+    publish(global, engine.counter.snapshot());
+
+    let delay = step_delay_ms();
+    let mut written_this_run = 0u64;
+    while global < total {
+        if handle.cancel.load(Ordering::Relaxed) {
+            handle.update(|st| st.state = JobState::Cancelled);
+            return Ok(RunOutcome::Cancelled);
+        }
+        let idx = global % spe;
+        let mut chunk = (spe - idx).min(total - global);
+        if ce > 0 {
+            chunk = chunk.min(ce - global % ce);
+        }
+        let stats =
+            trainer.train_range(&train, idx as usize, chunk as usize, &engine, codec.as_dyn())?;
+        if stats.steps == 0 {
+            return Err(JobError::Spec("training made no progress (dataset too small?)".into()));
+        }
+        global += stats.steps as u64;
+        seconds += stats.seconds;
+        if delay > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(delay * stats.steps as u64));
+        }
+        publish(global, engine.counter.snapshot());
+
+        if ce > 0 && global % ce == 0 && global < total {
+            if let Some(path) = &ckpt_path {
+                let client_rng = match &codec {
+                    JobCodec::Fhe(ck) => Some(ck.rng.state()),
+                    JobCodec::Clear(_) => None,
+                };
+                let ckpt = Checkpoint::capture(
+                    &trainer.net,
+                    &engine,
+                    spec.seed,
+                    global / spe,
+                    global,
+                    seconds,
+                    client_rng,
+                )?;
+                write_atomic(path, &ckpt.to_wire())?;
+                written_this_run += 1;
+                if opts.halt_after_checkpoints == Some(written_this_run) {
+                    return Ok(RunOutcome::Halted);
+                }
+            }
+        }
+    }
+
+    // Training-only op totals are the SLA signal (plan totals × steps);
+    // snapshot them before evaluation adds its forward-pass ops.
+    let train_ops = engine.counter.snapshot();
+    let scores = trainer.eval_scores(&test, eval_n, &engine, codec.as_dyn())?;
+    let mut correct = 0usize;
+    for (i, row) in scores.iter().enumerate() {
+        let best = row.iter().enumerate().max_by_key(|&(k, &v)| (v, std::cmp::Reverse(k)));
+        if best.map(|(k, _)| k) == Some(test.labels[i] % classes) {
+            correct += 1;
+        }
+    }
+    let result = JobResult {
+        id: handle.id,
+        steps: total,
+        seconds,
+        accuracy: correct as f64 / scores.len() as f64,
+        ops: train_ops,
+        weights_digest: weights_digest(&trainer.net),
+        logits_digest: logits_digest(&scores),
+        resumes: handle.status().resumes,
+    };
+    handle.update(|st| {
+        st.state = JobState::Completed;
+        st.step = total;
+        st.epoch = spec.epochs;
+        st.live_ops = train_ops;
+        st.predicted_ops = per_step.scale(total);
+    });
+    Ok(RunOutcome::Completed(result))
+}

@@ -1,0 +1,128 @@
+//! Prometheus text exposition for the serve layer.
+//!
+//! The interesting series is the pair `glyph_job_ops{kind="live"}` /
+//! `glyph_job_ops{kind="predicted"}`: compiled plans price executions
+//! exactly (plan totals × steps), so live−predicted drift is an SLA and
+//! billing signal that costs nothing to produce.
+//! `relin`/`mod_switch` have no plan-level prediction (they depend on the
+//! MAC engine's laziness), so the drift gauge ignores them while both
+//! series still expose them.
+
+use super::protocol::JobStatus;
+use crate::coordinator::metrics::OpSnapshot;
+use std::fmt::Write as _;
+
+/// Counters excluded from the drift gauge (no plan-level prediction).
+pub const UNPREDICTED_OPS: [&str; 2] = ["relin", "mod_switch"];
+
+/// Sum of |live − predicted| over the predicted counters.
+pub fn op_drift(live: &OpSnapshot, predicted: &OpSnapshot) -> u64 {
+    live.diff_ignoring(predicted, &UNPREDICTED_OPS)
+        .iter()
+        .map(|&(_, a, b)| a.abs_diff(b))
+        .sum()
+}
+
+/// Render the full exposition. `statuses` should be sorted by job id for
+/// stable scrapes.
+pub fn render(uptime_seconds: f64, statuses: &[JobStatus]) -> String {
+    let mut out = String::new();
+    let w = &mut out;
+    let _ = writeln!(w, "# HELP glyph_uptime_seconds Seconds since the server started.");
+    let _ = writeln!(w, "# TYPE glyph_uptime_seconds gauge");
+    let _ = writeln!(w, "glyph_uptime_seconds {uptime_seconds:.3}");
+
+    let _ = writeln!(w, "# HELP glyph_jobs Jobs by lifecycle state.");
+    let _ = writeln!(w, "# TYPE glyph_jobs gauge");
+    for state in ["queued", "running", "completed", "failed", "cancelled"] {
+        let n = statuses.iter().filter(|s| s.state.name() == state).count();
+        let _ = writeln!(w, "glyph_jobs{{state=\"{state}\"}} {n}");
+    }
+
+    let _ = writeln!(w, "# HELP glyph_job_steps Minibatch steps completed by a job.");
+    let _ = writeln!(w, "# TYPE glyph_job_steps counter");
+    let _ = writeln!(w, "# HELP glyph_job_steps_planned Total steps the job will run.");
+    let _ = writeln!(w, "# TYPE glyph_job_steps_planned gauge");
+    let _ = writeln!(w, "# HELP glyph_job_checkpoints Checkpoints persisted for a job.");
+    let _ = writeln!(w, "# TYPE glyph_job_checkpoints counter");
+    let _ = writeln!(w, "# HELP glyph_job_resumes Times a job resumed from a checkpoint.");
+    let _ = writeln!(w, "# TYPE glyph_job_resumes counter");
+    for s in statuses {
+        let labels = format!("job=\"{}\",tenant=\"{}\"", s.id, s.tenant);
+        let _ = writeln!(w, "glyph_job_steps{{{labels}}} {}", s.step);
+        let _ = writeln!(w, "glyph_job_steps_planned{{{labels}}} {}", s.total_steps);
+        let _ = writeln!(w, "glyph_job_checkpoints{{{labels}}} {}", s.checkpoints);
+        let _ = writeln!(w, "glyph_job_resumes{{{labels}}} {}", s.resumes);
+    }
+
+    let _ = writeln!(
+        w,
+        "# HELP glyph_job_ops Homomorphic op counters per job: live execution vs. the \
+         compiled plan's prediction."
+    );
+    let _ = writeln!(w, "# TYPE glyph_job_ops counter");
+    for s in statuses {
+        for (kind, snap) in [("live", &s.live_ops), ("predicted", &s.predicted_ops)] {
+            for (op, v) in snap.fields() {
+                let _ = writeln!(
+                    w,
+                    "glyph_job_ops{{job=\"{}\",tenant=\"{}\",op=\"{op}\",kind=\"{kind}\"}} {v}",
+                    s.id, s.tenant
+                );
+            }
+        }
+    }
+
+    let _ = writeln!(
+        w,
+        "# HELP glyph_job_op_drift Sum of |live-predicted| over plan-predicted op counters \
+         (0 = execution matches the plan exactly)."
+    );
+    let _ = writeln!(w, "# TYPE glyph_job_op_drift gauge");
+    for s in statuses {
+        let _ = writeln!(
+            w,
+            "glyph_job_op_drift{{job=\"{}\",tenant=\"{}\"}} {}",
+            s.id,
+            s.tenant,
+            op_drift(&s.live_ops, &s.predicted_ops)
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::protocol::JobState;
+
+    #[test]
+    fn renders_drift_and_states() {
+        // relin is unpredicted: it must not count as drift
+        let live = OpSnapshot { mult_cc: 10, relin: 3, ..Default::default() };
+        let predicted = OpSnapshot { mult_cc: 10, ..Default::default() };
+        let status = JobStatus {
+            id: 1,
+            tenant: "acme".into(),
+            state: JobState::Running,
+            epoch: 0,
+            step: 5,
+            total_steps: 24,
+            checkpoints: 1,
+            resumes: 0,
+            live_ops: live,
+            predicted_ops: predicted,
+            message: String::new(),
+        };
+        assert_eq!(op_drift(&live, &predicted), 0);
+        let text = render(1.5, &[status]);
+        assert!(text.contains("glyph_jobs{state=\"running\"} 1"), "{text}");
+        assert!(text.contains(
+            "glyph_job_ops{job=\"1\",tenant=\"acme\",op=\"mult_cc\",kind=\"live\"} 10"
+        ));
+        assert!(text.contains("glyph_job_op_drift{job=\"1\",tenant=\"acme\"} 0"));
+        let mut drifted = live;
+        drifted.mult_cc = 12;
+        assert_eq!(op_drift(&drifted, &predicted), 2);
+    }
+}

@@ -1,0 +1,37 @@
+//! `glyph serve` — the multi-tenant training job service (ROADMAP item 2).
+//!
+//! The paper's deployment model is non-interactive outsourced training:
+//! clients upload encrypted data once, a server trains for days, the
+//! clients come back for the model. This module is that server:
+//!
+//! * [`protocol`] — the length-prefixed TCP request/response protocol
+//!   (`submit`, `status`, `cancel`, `fetch-result`, `metrics`,
+//!   `shutdown`), every message a [`crate::wire::WireCodec`] frame.
+//! * [`job`] — the job runner: builds the engine/network/dataset from a
+//!   [`protocol::JobSpec`] deterministically, drives
+//!   [`crate::train::Trainer`] epoch loops in checkpoint-bounded chunks,
+//!   persists a [`crate::wire::Checkpoint`] every K steps (atomic
+//!   write+rename), and resumes byte-identically after a crash.
+//! * [`server`] — `TcpListener` accept loop + job queue + N worker
+//!   threads, with startup recovery that re-enqueues every incomplete job
+//!   found in the data directory.
+//! * [`metrics`] — Prometheus text exposition built from the
+//!   `OpCounter`/`Plan` machinery: per-job live counters next to the
+//!   compiled plan's predictions (drift is a free SLA/billing signal —
+//!   plans price executions exactly).
+//! * [`client`] — a small blocking client used by the CLI subcommands,
+//!   the smoke tests and the bench.
+
+pub mod client;
+pub mod job;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use client::ServeClient;
+pub use job::{run_job, JobError, JobHandle, RunOptions, RunOutcome};
+pub use protocol::{
+    read_frame, write_frame, JobBackend, JobResult, JobSpec, JobState, JobStatus, Request,
+    Response, MAX_FRAME,
+};
+pub use server::{RunningServer, ServeConfig};

@@ -1,0 +1,467 @@
+//! The serve protocol: wire-framed request/response messages over a
+//! u32-length-prefixed TCP stream.
+//!
+//! Framing: every message on the socket is `len: u32 LE` followed by `len`
+//! bytes of a [`WireCodec`] frame ([`Request`] client→server, [`Response`]
+//! server→client). The wire frame carries its own magic/version/checksum,
+//! so a torn or corrupted message is rejected with a descriptive error
+//! rather than desynchronizing the stream.
+
+use crate::coordinator::metrics::OpSnapshot;
+use crate::nn::engine::EngineProfile;
+use crate::wire::{get_nested, put_nested, WireCodec, WireError, WireReader, WireWriter};
+use std::io::{Read, Write};
+
+/// Upper bound on one framed message (keys/ciphertexts never travel over
+/// this protocol — job state lives server-side — so frames stay small).
+pub const MAX_FRAME: u32 = 16 << 20;
+
+/// Write one length-prefixed message.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    let len = u32::try_from(payload.len())
+        .ok()
+        .filter(|&l| l <= MAX_FRAME)
+        .ok_or_else(|| std::io::Error::other(format!("frame of {} bytes exceeds MAX_FRAME", payload.len())))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed message. `Ok(None)` on clean EOF before the
+/// length word (peer hung up between messages).
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(std::io::Error::other(format!("peer announced a {len}-byte frame (max {MAX_FRAME})")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+/// Which execution backend a job runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobBackend {
+    /// The bit-exact plaintext mirror (epoch-scale, CI, conformance).
+    Clear,
+    /// Reduced-scale encrypted training (test-profile keys).
+    Fhe,
+}
+
+/// Everything needed to run — and deterministically *re-run* — a training
+/// job. All randomness (dataset synthesis, weight init, key generation,
+/// encryption noise) derives from `seed`, which is what makes checkpoint
+/// resume byte-identical: the runner rebuilds the exact network and
+/// repositions the RNG cursors recorded in the checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Tenant label (metrics dimension; one `FheState` session per job).
+    pub tenant: String,
+    pub backend: JobBackend,
+    /// Parameter profile: `Default` (production-shaped) or `Test`.
+    pub profile: EngineProfile,
+    /// MLP layer widths, input first.
+    pub dims: Vec<u64>,
+    /// Mini-batch width.
+    pub batch: u64,
+    pub epochs: u64,
+    /// Steps per epoch; 0 = as many full minibatches as the dataset holds.
+    pub steps_per_epoch: u64,
+    /// Training-set size to load.
+    pub samples: u64,
+    /// Held-out evaluation samples (0 = `samples/4`, min one batch).
+    pub eval_samples: u64,
+    /// Dataset name: digits|mnist|cancer|svhn|cifar.
+    pub dataset: String,
+    /// Master determinism seed (see above).
+    pub seed: u64,
+    /// Persist a checkpoint every K global steps (0 = never; the job still
+    /// recovers by restarting from step 0).
+    pub checkpoint_every: u64,
+    /// Softmax unit output bits.
+    pub softmax_bits: u64,
+}
+
+impl JobSpec {
+    /// A small clear-backend job with sane defaults (tests, bench, CLI).
+    pub fn small_clear(tenant: &str, seed: u64) -> JobSpec {
+        JobSpec {
+            tenant: tenant.into(),
+            backend: JobBackend::Clear,
+            profile: EngineProfile::Default,
+            dims: vec![16, 8, 4],
+            batch: 4,
+            epochs: 1,
+            steps_per_epoch: 0,
+            samples: 32,
+            eval_samples: 0,
+            dataset: "digits".into(),
+            seed,
+            checkpoint_every: 4,
+            softmax_bits: 3,
+        }
+    }
+
+    /// Structural validation (the server rejects bad specs at submit, the
+    /// runner re-validates before building keys).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dims.len() < 2 || self.dims.iter().any(|&d| d == 0) {
+            return Err(format!("dims needs at least two nonzero widths, got {:?}", self.dims));
+        }
+        if self.batch == 0 {
+            return Err("batch must be nonzero".into());
+        }
+        if self.epochs == 0 {
+            return Err("epochs must be nonzero".into());
+        }
+        if self.samples < self.batch {
+            return Err(format!(
+                "samples ({}) must cover at least one minibatch ({})",
+                self.samples, self.batch
+            ));
+        }
+        if !matches!(self.dataset.as_str(), "digits" | "mnist" | "cancer" | "svhn" | "cifar") {
+            return Err(format!(
+                "dataset must be digits|mnist|cancer|svhn|cifar, got {:?}",
+                self.dataset
+            ));
+        }
+        if self.softmax_bits == 0 || self.softmax_bits > 16 {
+            return Err(format!("softmax_bits {} is outside 1..=16", self.softmax_bits));
+        }
+        Ok(())
+    }
+}
+
+impl WireCodec for JobSpec {
+    const TAG: [u8; 4] = *b"JSPC";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_str(&self.tenant);
+        w.put_u8(match self.backend {
+            JobBackend::Clear => 0,
+            JobBackend::Fhe => 1,
+        });
+        w.put_u8(match self.profile {
+            EngineProfile::Default => 0,
+            EngineProfile::Test => 1,
+        });
+        w.put_u64s(&self.dims);
+        w.put_u64(self.batch);
+        w.put_u64(self.epochs);
+        w.put_u64(self.steps_per_epoch);
+        w.put_u64(self.samples);
+        w.put_u64(self.eval_samples);
+        w.put_str(&self.dataset);
+        w.put_u64(self.seed);
+        w.put_u64(self.checkpoint_every);
+        w.put_u64(self.softmax_bits);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        Ok(JobSpec {
+            tenant: r.str()?,
+            backend: match r.u8()? {
+                0 => JobBackend::Clear,
+                1 => JobBackend::Fhe,
+                other => return Err(WireError::Malformed(format!("bad backend {other}"))),
+            },
+            profile: match r.u8()? {
+                0 => EngineProfile::Default,
+                1 => EngineProfile::Test,
+                other => return Err(WireError::Malformed(format!("bad profile {other}"))),
+            },
+            dims: r.u64s()?,
+            batch: r.u64()?,
+            epochs: r.u64()?,
+            steps_per_epoch: r.u64()?,
+            samples: r.u64()?,
+            eval_samples: r.u64()?,
+            dataset: r.str()?,
+            seed: r.u64()?,
+            checkpoint_every: r.u64()?,
+            softmax_bits: r.u64()?,
+        })
+    }
+}
+
+/// Job lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Point-in-time view of a job, as returned by `status` and rendered by
+/// `metrics`.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    pub id: u64,
+    pub tenant: String,
+    pub state: JobState,
+    /// Epoch the cursor is inside.
+    pub epoch: u64,
+    /// Global minibatch steps completed.
+    pub step: u64,
+    /// Total steps the job will run (`epochs × steps_per_epoch`).
+    pub total_steps: u64,
+    /// Checkpoints persisted so far (across restarts).
+    pub checkpoints: u64,
+    /// Times this job resumed from a checkpoint after a restart.
+    pub resumes: u64,
+    /// Live op counters at the cursor.
+    pub live_ops: OpSnapshot,
+    /// Compiled-plan prediction for the cursor (per-step totals × steps).
+    pub predicted_ops: OpSnapshot,
+    /// Failure detail when `state == Failed`.
+    pub message: String,
+}
+
+impl WireCodec for JobStatus {
+    const TAG: [u8; 4] = *b"JSTA";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_u64(self.id);
+        w.put_str(&self.tenant);
+        w.put_u8(match self.state {
+            JobState::Queued => 0,
+            JobState::Running => 1,
+            JobState::Completed => 2,
+            JobState::Failed => 3,
+            JobState::Cancelled => 4,
+        });
+        w.put_u64(self.epoch);
+        w.put_u64(self.step);
+        w.put_u64(self.total_steps);
+        w.put_u64(self.checkpoints);
+        w.put_u64(self.resumes);
+        put_nested(w, &self.live_ops);
+        put_nested(w, &self.predicted_ops);
+        w.put_str(&self.message);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        Ok(JobStatus {
+            id: r.u64()?,
+            tenant: r.str()?,
+            state: match r.u8()? {
+                0 => JobState::Queued,
+                1 => JobState::Running,
+                2 => JobState::Completed,
+                3 => JobState::Failed,
+                4 => JobState::Cancelled,
+                other => return Err(WireError::Malformed(format!("bad job state {other}"))),
+            },
+            epoch: r.u64()?,
+            step: r.u64()?,
+            total_steps: r.u64()?,
+            checkpoints: r.u64()?,
+            resumes: r.u64()?,
+            live_ops: get_nested(r, &())?,
+            predicted_ops: get_nested(r, &())?,
+            message: r.str()?,
+        })
+    }
+}
+
+/// Final outcome of a completed job. Model weights stay server-side (they
+/// are ciphertexts under the tenant's key); the result carries integrity
+/// digests so conformance tests can prove two runs produced byte-identical
+/// models without moving them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobResult {
+    pub id: u64,
+    /// Steps actually trained.
+    pub steps: u64,
+    /// Training wall-clock (checkpointed across restarts).
+    pub seconds: f64,
+    /// Held-out accuracy at completion.
+    pub accuracy: f64,
+    /// Training-only op totals (evaluation excluded; equals plan totals ×
+    /// steps up to relin/mod-switch).
+    pub ops: OpSnapshot,
+    /// FNV-1a over the wire encoding of every trainable weight ciphertext.
+    pub weights_digest: u64,
+    /// FNV-1a over the decoded evaluation logits.
+    pub logits_digest: u64,
+    /// Times the job resumed from a checkpoint.
+    pub resumes: u64,
+}
+
+impl WireCodec for JobResult {
+    const TAG: [u8; 4] = *b"JRES";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_u64(self.id);
+        w.put_u64(self.steps);
+        w.put_f64(self.seconds);
+        w.put_f64(self.accuracy);
+        put_nested(w, &self.ops);
+        w.put_u64(self.weights_digest);
+        w.put_u64(self.logits_digest);
+        w.put_u64(self.resumes);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        Ok(JobResult {
+            id: r.u64()?,
+            steps: r.u64()?,
+            seconds: r.f64()?,
+            accuracy: r.f64()?,
+            ops: get_nested(r, &())?,
+            weights_digest: r.u64()?,
+            logits_digest: r.u64()?,
+            resumes: r.u64()?,
+        })
+    }
+}
+
+/// Client→server message.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Submit(JobSpec),
+    Status { id: u64 },
+    Cancel { id: u64 },
+    FetchResult { id: u64 },
+    Metrics,
+    /// Liveness probe.
+    Ping,
+    /// Graceful stop: drain workers, exit the accept loop.
+    Shutdown,
+}
+
+impl WireCodec for Request {
+    const TAG: [u8; 4] = *b"RREQ";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        match self {
+            Request::Submit(spec) => {
+                w.put_u8(0);
+                put_nested(w, spec);
+            }
+            Request::Status { id } => {
+                w.put_u8(1);
+                w.put_u64(*id);
+            }
+            Request::Cancel { id } => {
+                w.put_u8(2);
+                w.put_u64(*id);
+            }
+            Request::FetchResult { id } => {
+                w.put_u8(3);
+                w.put_u64(*id);
+            }
+            Request::Metrics => w.put_u8(4),
+            Request::Ping => w.put_u8(5),
+            Request::Shutdown => w.put_u8(6),
+        }
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => Request::Submit(get_nested(r, &())?),
+            1 => Request::Status { id: r.u64()? },
+            2 => Request::Cancel { id: r.u64()? },
+            3 => Request::FetchResult { id: r.u64()? },
+            4 => Request::Metrics,
+            5 => Request::Ping,
+            6 => Request::Shutdown,
+            other => return Err(WireError::Malformed(format!("bad request variant {other}"))),
+        })
+    }
+}
+
+/// Server→client message.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Submitted { id: u64 },
+    Status(JobStatus),
+    Cancelled { id: u64 },
+    Result(JobResult),
+    /// Prometheus text exposition.
+    Metrics(String),
+    Pong,
+    ShuttingDown,
+    /// Request-level failure (unknown job, invalid spec, …).
+    Error(String),
+}
+
+impl WireCodec for Response {
+    const TAG: [u8; 4] = *b"RRSP";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        match self {
+            Response::Submitted { id } => {
+                w.put_u8(0);
+                w.put_u64(*id);
+            }
+            Response::Status(st) => {
+                w.put_u8(1);
+                put_nested(w, st);
+            }
+            Response::Cancelled { id } => {
+                w.put_u8(2);
+                w.put_u64(*id);
+            }
+            Response::Result(res) => {
+                w.put_u8(3);
+                put_nested(w, res);
+            }
+            Response::Metrics(text) => {
+                w.put_u8(4);
+                w.put_str(text);
+            }
+            Response::Pong => w.put_u8(5),
+            Response::ShuttingDown => w.put_u8(6),
+            Response::Error(msg) => {
+                w.put_u8(7);
+                w.put_str(msg);
+            }
+        }
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => Response::Submitted { id: r.u64()? },
+            1 => Response::Status(get_nested(r, &())?),
+            2 => Response::Cancelled { id: r.u64()? },
+            3 => Response::Result(get_nested(r, &())?),
+            4 => Response::Metrics(r.str()?),
+            5 => Response::Pong,
+            6 => Response::ShuttingDown,
+            7 => Response::Error(r.str()?),
+            other => return Err(WireError::Malformed(format!("bad response variant {other}"))),
+        })
+    }
+}

@@ -1,0 +1,336 @@
+//! The `glyph serve` server: accept loop, job queue, worker pool,
+//! startup recovery.
+//!
+//! Threading model: one non-blocking accept thread (polls the shutdown
+//! flag between accepts), one short-lived thread per connection, and N
+//! worker threads popping job ids off a `Condvar`-guarded queue. Workers
+//! own the engine/session for the job they run — nothing homomorphic is
+//! shared across threads.
+//!
+//! Durability: with a data directory, every submitted spec is persisted
+//! to `jobs/<id>/spec.bin` before the submit reply, checkpoints land in
+//! the same directory every K steps, and results in `result.bin`. On
+//! startup the server scans `jobs/*`: finished jobs are loaded into the
+//! result cache, unfinished ones are re-enqueued and resume from their
+//! latest checkpoint inside [`run_job`]. `kill -9` mid-epoch therefore
+//! loses at most K steps of work and zero bytes of determinism.
+
+use super::job::{checkpoint_path, compiled_plan, run_job, JobHandle, RunOptions, RunOutcome};
+use super::metrics;
+use super::protocol::{read_frame, write_frame, JobResult, JobSpec, JobState, Request, Response};
+use crate::wire::WireCodec;
+use std::collections::{HashMap, VecDeque};
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration. `addr` may use port 0 to let the OS pick;
+/// the bound address is reported by [`RunningServer::addr`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Durable state root (`jobs/<id>/{spec,checkpoint,result}.bin`).
+    /// `None` disables persistence (jobs are memory-only, no resume).
+    pub data_dir: Option<PathBuf>,
+    /// Worker threads; clamped to at least 1.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { addr: "127.0.0.1:0".into(), data_dir: None, workers: 1 }
+    }
+}
+
+struct Shared {
+    jobs: Mutex<HashMap<u64, Arc<JobHandle>>>,
+    queue: Mutex<VecDeque<u64>>,
+    queue_cv: Condvar,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+    data_dir: Option<PathBuf>,
+    results: Mutex<HashMap<u64, JobResult>>,
+    started: Instant,
+}
+
+impl Shared {
+    fn job_dir(&self, id: u64) -> Option<PathBuf> {
+        self.data_dir.as_ref().map(|d| d.join("jobs").join(id.to_string()))
+    }
+
+    fn enqueue(&self, id: u64) {
+        self.queue.lock().unwrap().push_back(id);
+        self.queue_cv.notify_one();
+    }
+}
+
+/// A started server. Dropping it does NOT stop the threads; call
+/// [`RunningServer::shutdown`] then [`RunningServer::wait`].
+pub struct RunningServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl RunningServer {
+    /// Bind, recover durable state, and spawn the accept + worker threads.
+    pub fn start(cfg: ServeConfig) -> io::Result<RunningServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+
+        let shared = Arc::new(Shared {
+            jobs: Mutex::new(HashMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            next_id: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            data_dir: cfg.data_dir.clone(),
+            results: Mutex::new(HashMap::new()),
+            started: Instant::now(),
+        });
+
+        if let Some(dir) = &cfg.data_dir {
+            recover(&shared, dir)?;
+        }
+
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(&listener, &shared))
+        };
+
+        Ok(RunningServer { addr, shared, accept: Some(accept), workers: workers })
+    }
+
+    /// The bound listen address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask every thread to stop. Workers finish the job they are running
+    /// and skip the rest of the queue.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue_cv.notify_all();
+    }
+
+    /// Join the accept thread and all workers.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Scan `dir/jobs/*` and rebuild in-memory state: completed jobs feed the
+/// result cache, everything else goes back on the queue (and will resume
+/// from its checkpoint, if one exists).
+fn recover(shared: &Arc<Shared>, dir: &Path) -> io::Result<()> {
+    let jobs_root = dir.join("jobs");
+    if !jobs_root.is_dir() {
+        return Ok(());
+    }
+    let mut max_id = 0u64;
+    let mut pending = Vec::new();
+    for entry in std::fs::read_dir(&jobs_root)? {
+        let entry = entry?;
+        let Ok(id) = entry.file_name().to_string_lossy().parse::<u64>() else {
+            continue;
+        };
+        let spec_bytes = match std::fs::read(entry.path().join("spec.bin")) {
+            Ok(b) => b,
+            Err(_) => continue,
+        };
+        let Ok(spec) = JobSpec::from_wire(&spec_bytes, &()) else {
+            continue;
+        };
+        max_id = max_id.max(id);
+        let handle = Arc::new(JobHandle::new(id, spec));
+        let result_bytes = std::fs::read(entry.path().join("result.bin")).ok();
+        if let Some(result) =
+            result_bytes.and_then(|b| JobResult::from_wire(&b, &()).ok())
+        {
+            handle.update(|st| {
+                st.state = JobState::Completed;
+                st.step = result.steps;
+                st.resumes = result.resumes;
+                st.live_ops = result.ops;
+            });
+            shared.results.lock().unwrap().insert(id, result);
+            shared.jobs.lock().unwrap().insert(id, handle);
+        } else {
+            shared.jobs.lock().unwrap().insert(id, Arc::clone(&handle));
+            pending.push(id);
+        }
+    }
+    shared.next_id.store(max_id + 1, Ordering::SeqCst);
+    pending.sort_unstable();
+    for id in pending {
+        shared.enqueue(id);
+    }
+    Ok(())
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                let shared = Arc::clone(shared);
+                std::thread::spawn(move || handle_conn(&shared, stream));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
+    while let Ok(Some(frame)) = read_frame(&mut stream) {
+        let resp = match Request::from_wire(&frame, &()) {
+            Ok(req) => dispatch(shared, req),
+            Err(e) => Response::Error(format!("bad request frame: {e}")),
+        };
+        let closing = matches!(resp, Response::ShuttingDown);
+        if write_frame(&mut stream, &resp.to_wire()).is_err() || closing {
+            return;
+        }
+    }
+}
+
+fn dispatch(shared: &Arc<Shared>, req: Request) -> Response {
+    match req {
+        Request::Submit(spec) => match submit(shared, spec) {
+            Ok(id) => Response::Submitted { id },
+            Err(msg) => Response::Error(msg),
+        },
+        Request::Status { id } => match shared.jobs.lock().unwrap().get(&id) {
+            Some(h) => Response::Status(h.status()),
+            None => Response::Error(format!("unknown job {id}")),
+        },
+        Request::Cancel { id } => {
+            let handle = shared.jobs.lock().unwrap().get(&id).cloned();
+            match handle {
+                Some(h) => {
+                    h.cancel.store(true, Ordering::SeqCst);
+                    // A queued job never reaches its worker-side cancel
+                    // check promptly, so flip the state here.
+                    h.update(|st| {
+                        if st.state == JobState::Queued {
+                            st.state = JobState::Cancelled;
+                        }
+                    });
+                    Response::Cancelled { id }
+                }
+                None => Response::Error(format!("unknown job {id}")),
+            }
+        }
+        Request::FetchResult { id } => {
+            if let Some(r) = shared.results.lock().unwrap().get(&id) {
+                return Response::Result(r.clone());
+            }
+            match shared.jobs.lock().unwrap().get(&id) {
+                Some(h) => Response::Error(format!(
+                    "job {id} not completed (state: {})",
+                    h.status().state.name()
+                )),
+                None => Response::Error(format!("unknown job {id}")),
+            }
+        }
+        Request::Metrics => {
+            let mut statuses: Vec<_> =
+                shared.jobs.lock().unwrap().values().map(|h| h.status()).collect();
+            statuses.sort_by_key(|s| s.id);
+            Response::Metrics(metrics::render(
+                shared.started.elapsed().as_secs_f64(),
+                &statuses,
+            ))
+        }
+        Request::Ping => Response::Pong,
+        Request::Shutdown => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.queue_cv.notify_all();
+            Response::ShuttingDown
+        }
+    }
+}
+
+fn submit(shared: &Arc<Shared>, spec: JobSpec) -> Result<u64, String> {
+    // Compile the plan up front: a spec the planner rejects should fail
+    // the submit, not the job hours later.
+    compiled_plan(&spec).map_err(|e| format!("rejected spec: {e}"))?;
+    let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+    let handle = Arc::new(JobHandle::new(id, spec));
+    if let Some(dir) = shared.job_dir(id) {
+        crate::wire::write_atomic(&dir.join("spec.bin"), &handle.spec.to_wire())
+            .map_err(|e| format!("persisting spec: {e}"))?;
+    }
+    shared.jobs.lock().unwrap().insert(id, Arc::clone(&handle));
+    shared.enqueue(id);
+    Ok(id)
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    loop {
+        let id = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = queue.pop_front() {
+                    break id;
+                }
+                queue = shared.queue_cv.wait(queue).unwrap();
+            }
+        };
+        let handle = match shared.jobs.lock().unwrap().get(&id) {
+            Some(h) => Arc::clone(h),
+            None => continue,
+        };
+        if handle.cancel.load(Ordering::SeqCst) {
+            handle.update(|st| st.state = JobState::Cancelled);
+            continue;
+        }
+        let dir = shared.job_dir(id);
+        match run_job(&handle, dir.as_deref(), &RunOptions::default()) {
+            Ok(RunOutcome::Completed(result)) => {
+                if let Some(dir) = &dir {
+                    let _ = crate::wire::write_atomic(
+                        &dir.join("result.bin"),
+                        &result.to_wire(),
+                    );
+                    // The checkpoint is dead weight once the result exists.
+                    let _ = std::fs::remove_file(checkpoint_path(dir));
+                }
+                shared.results.lock().unwrap().insert(id, result);
+            }
+            Ok(RunOutcome::Cancelled) => {}
+            Ok(RunOutcome::Halted) => {} // test-only option, unused here
+            Err(e) => handle.update(|st| {
+                st.state = JobState::Failed;
+                st.message = e.to_string();
+            }),
+        }
+    }
+}

@@ -52,6 +52,27 @@ impl MlpConfig {
         }
     }
 
+    /// Derive a config for an arbitrary topology: per-layer activation
+    /// shift ≈ log2(127·fan_in) − 7 (paper §4.1) clamped to the engine's
+    /// fraction-bit budget `max_shift`; error shifts follow the activation
+    /// shift of the layer above; gradient shift is the largest activation
+    /// shift. Shared by the CLI's `--dims` path and the serve layer's job
+    /// specs so both price and execute identically.
+    pub fn for_dims(dims: Vec<usize>, max_shift: u32, softmax_bits: usize) -> Self {
+        let act_shifts: Vec<u32> = dims[..dims.len().saturating_sub(1)]
+            .iter()
+            .map(|&fan_in| {
+                (((127 * fan_in) as f64).log2().ceil() as u32)
+                    .saturating_sub(7)
+                    .clamp(1, max_shift)
+            })
+            .collect();
+        let err_shifts: Vec<u32> =
+            (0..act_shifts.len()).map(|l| act_shifts[(l + 1).min(act_shifts.len() - 1)]).collect();
+        let grad_shift = act_shifts.iter().copied().max().unwrap_or(8).min(max_shift);
+        MlpConfig { dims, act_shifts, err_shifts, grad_shift, softmax_bits }
+    }
+
     /// A tiny MLP for tests and reduced-scale demos.
     pub fn tiny(in_dim: usize, hidden: usize, out_dim: usize) -> Self {
         MlpConfig {

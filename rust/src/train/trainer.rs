@@ -131,11 +131,26 @@ impl Trainer {
         engine: &GlyphEngine,
         codec: &mut dyn Codec,
     ) -> Result<EpochStats, DataError> {
+        self.train_range(ds, 0, steps, engine, codec)
+    }
+
+    /// `steps` minibatches starting at minibatch index `first` (sample
+    /// offset `first · batch`). This is the resume entry point: a
+    /// checkpointed run re-enters the epoch at its step cursor and replays
+    /// the identical minibatch sequence.
+    pub fn train_range(
+        &mut self,
+        ds: &Dataset,
+        first: usize,
+        steps: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<EpochStats, DataError> {
         let batch = engine.batch;
-        let steps = steps.min(ds.len() / batch);
+        let steps = steps.min((ds.len() / batch).saturating_sub(first));
         let before = engine.counter.snapshot();
         let t0 = std::time::Instant::now();
-        for step in 0..steps {
+        for step in first..first + steps {
             let (x, lab) = self.encode_minibatch(ds, step * batch, engine, codec)?;
             self.net.train_step(&x, &lab, engine);
         }
@@ -147,22 +162,24 @@ impl Trainer {
         })
     }
 
-    /// Test accuracy over (up to) `limit` samples: forward pass per
-    /// minibatch, decode the output unit's reverse-packed distribution,
-    /// argmax per sample.
-    pub fn evaluate(
+    /// Decoded output scores for (up to) `limit` samples: one row of
+    /// per-class logits per sample, in dataset order (lanes
+    /// de-interleaved). The serve layer digests these rows to prove two
+    /// runs produced byte-identical models; [`Self::evaluate`] argmaxes
+    /// them.
+    pub fn eval_scores(
         &self,
         ds: &Dataset,
         limit: usize,
         engine: &GlyphEngine,
         codec: &mut dyn Codec,
-    ) -> Result<f64, DataError> {
+    ) -> Result<Vec<Vec<i64>>, DataError> {
         let batch = engine.batch;
         let steps = (limit.min(ds.len())) / batch;
         if steps == 0 {
             return Err(DataError::BatchOutOfRange { start: 0, batch, len: ds.len().min(limit) });
         }
-        let mut correct = 0usize;
+        let mut rows = Vec::with_capacity(steps * batch);
         for step in 0..steps {
             let start = step * batch;
             let x = self.encode_inputs(ds, start, engine, codec)?;
@@ -178,18 +195,36 @@ impl Trainer {
                     PackOrder::Reversed => batch - 1 - b,
                     PackOrder::Forward => b,
                 };
-                let mut best = (i64::MIN, 0usize);
-                for (k, row) in scores.iter().enumerate() {
-                    if row[lane] > best.0 {
-                        best = (row[lane], k);
-                    }
-                }
-                if best.1 == ds.labels[start + b] % self.classes {
-                    correct += 1;
-                }
+                rows.push(scores.iter().map(|row| row[lane]).collect());
             }
         }
-        Ok(correct as f64 / (steps * batch) as f64)
+        Ok(rows)
+    }
+
+    /// Test accuracy over (up to) `limit` samples: forward pass per
+    /// minibatch, decode the output unit's reverse-packed distribution,
+    /// argmax per sample.
+    pub fn evaluate(
+        &self,
+        ds: &Dataset,
+        limit: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<f64, DataError> {
+        let rows = self.eval_scores(ds, limit, engine, codec)?;
+        let mut correct = 0usize;
+        for (i, row) in rows.iter().enumerate() {
+            let mut best = (i64::MIN, 0usize);
+            for (k, &v) in row.iter().enumerate() {
+                if v > best.0 {
+                    best = (v, k);
+                }
+            }
+            if best.1 == ds.labels[i] % self.classes {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / rows.len() as f64)
     }
 }
 

@@ -1,0 +1,258 @@
+//! [`Checkpoint`] — the durable unit of a training run.
+//!
+//! Every K steps the serve layer captures the complete mutable state of a
+//! job: the trainable FC weight ciphertexts, the live op counters, the
+//! epoch/step cursor, the wall-clock already spent, and (on FHE) the
+//! client/authority RNG cursors whose draws the next minibatch encryptions
+//! and noise refreshes will consume. Everything else — datasets, network
+//! topology, frozen layers, initial weight draws — regenerates
+//! deterministically from the job spec's seed, so it is *not* stored;
+//! restore rebuilds the network from the spec and overwrites exactly the
+//! state that training mutated. A hash of the compiled [`Plan`] binds the
+//! checkpoint to its schedule: resuming under a different topology or a
+//! drifted scheduler is refused instead of silently corrupting a model.
+
+use super::{fnv1a64, get_nested, put_nested, WireCodec, WireError, WireReader, WireWriter};
+use crate::coordinator::metrics::OpSnapshot;
+use crate::coordinator::scheduler::Plan;
+use crate::nn::backend::Ct;
+use crate::nn::engine::{Backend, GlyphEngine};
+use crate::nn::linear::Weight;
+use crate::nn::network::Network;
+
+/// One trainable FC layer's weight ciphertexts, keyed by network unit
+/// index.
+#[derive(Clone)]
+pub struct LayerWeights {
+    pub unit: usize,
+    /// `rows[out][in]`, same geometry as `FcLayer::w`.
+    pub rows: Vec<Vec<Ct>>,
+}
+
+/// Resumable training-run state. See the module docs for what is stored
+/// vs. regenerated.
+#[derive(Clone)]
+pub struct Checkpoint {
+    /// The job spec's seed — a cheap identity check before the plan hash.
+    pub job_seed: u64,
+    /// FNV-1a over the compiled plan's wire encoding.
+    pub plan_hash: u64,
+    /// Epoch the run is inside (`step / steps_per_epoch`).
+    pub epoch: u64,
+    /// Global minibatch steps completed.
+    pub step: u64,
+    /// Optimizer state: the SGD learning-rate shift the network trains
+    /// with (validated against the rebuilt network on restore).
+    pub grad_shift: u32,
+    /// Training wall-clock already spent, for honest throughput reporting
+    /// across restarts.
+    pub seconds: f64,
+    /// Live op counters at the cursor.
+    pub ops: OpSnapshot,
+    pub weights: Vec<LayerWeights>,
+    /// Client codec RNG cursor (FHE: minibatch encryption draws).
+    pub client_rng: Option<[u64; 4]>,
+    /// Refresh-authority RNG cursor (FHE: re-encryption noise draws).
+    pub auth_rng: Option<[u64; 4]>,
+}
+
+/// Hash binding a checkpoint to the compiled plan it was trained under.
+pub fn plan_hash(plan: &Plan) -> u64 {
+    fnv1a64(&plan.to_wire())
+}
+
+fn put_rng_opt(w: &mut WireWriter, s: &Option<[u64; 4]>) {
+    match s {
+        None => w.put_u8(0),
+        Some(state) => {
+            w.put_u8(1);
+            for &x in state {
+                w.put_u64(x);
+            }
+        }
+    }
+}
+
+fn get_rng_opt(r: &mut WireReader<'_>) -> Result<Option<[u64; 4]>, WireError> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => {
+            let mut s = [0u64; 4];
+            for x in &mut s {
+                *x = r.u64()?;
+            }
+            Ok(Some(s))
+        }
+        other => Err(WireError::Malformed(format!("bad option discriminant {other}"))),
+    }
+}
+
+impl WireCodec for Checkpoint {
+    const TAG: [u8; 4] = *b"CKPT";
+    const VERSION: u16 = 1;
+    type Ctx = GlyphEngine;
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_u64(self.job_seed);
+        w.put_u64(self.plan_hash);
+        w.put_u64(self.epoch);
+        w.put_u64(self.step);
+        w.put_u32(self.grad_shift);
+        w.put_f64(self.seconds);
+        put_nested(w, &self.ops);
+        w.put_len(self.weights.len());
+        for lw in &self.weights {
+            w.put_len(lw.unit);
+            w.put_len(lw.rows.len());
+            for row in &lw.rows {
+                w.put_len(row.len());
+                for ct in row {
+                    put_nested(w, ct);
+                }
+            }
+        }
+        put_rng_opt(w, &self.client_rng);
+        put_rng_opt(w, &self.auth_rng);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, engine: &GlyphEngine) -> Result<Self, WireError> {
+        let job_seed = r.u64()?;
+        let plan_hash = r.u64()?;
+        let epoch = r.u64()?;
+        let step = r.u64()?;
+        let grad_shift = r.u32()?;
+        let seconds = r.f64()?;
+        let ops: OpSnapshot = get_nested(r, &())?;
+        let layers = r.len(8)?;
+        let mut weights = Vec::with_capacity(layers);
+        for _ in 0..layers {
+            let unit = r.u64()? as usize;
+            let outs = r.len(8)?;
+            let mut rows = Vec::with_capacity(outs);
+            for _ in 0..outs {
+                let ins = r.len(8)?;
+                let mut row = Vec::with_capacity(ins);
+                for _ in 0..ins {
+                    row.push(get_nested::<Ct>(r, engine)?);
+                }
+                rows.push(row);
+            }
+            weights.push(LayerWeights { unit, rows });
+        }
+        let client_rng = get_rng_opt(r)?;
+        let auth_rng = get_rng_opt(r)?;
+        Ok(Checkpoint {
+            job_seed,
+            plan_hash,
+            epoch,
+            step,
+            grad_shift,
+            seconds,
+            ops,
+            weights,
+            client_rng,
+            auth_rng,
+        })
+    }
+}
+
+impl Checkpoint {
+    /// Snapshot a live training run. `client_rng` is the job codec's RNG
+    /// cursor on FHE (None on clear); the authority cursor is read off the
+    /// engine.
+    pub fn capture(
+        net: &Network,
+        engine: &GlyphEngine,
+        job_seed: u64,
+        epoch: u64,
+        step: u64,
+        seconds: f64,
+        client_rng: Option<[u64; 4]>,
+    ) -> Result<Checkpoint, WireError> {
+        let mut weights = Vec::new();
+        for (unit, fc) in net.fc_units() {
+            if !fc.is_trainable() {
+                continue;
+            }
+            let rows: Vec<Vec<Ct>> = fc
+                .w
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|wt| match wt {
+                            Weight::Enc(ct) => Ok(ct.clone()),
+                            Weight::Plain(_) => Err(WireError::Malformed(format!(
+                                "trainable FC unit {unit} holds a plaintext weight"
+                            ))),
+                        })
+                        .collect()
+                })
+                .collect::<Result<_, _>>()?;
+            weights.push(LayerWeights { unit, rows });
+        }
+        let auth_rng = match &engine.backend {
+            Backend::Fhe(f) => Some(f.auth.rng_state()),
+            Backend::Clear(_) => None,
+        };
+        Ok(Checkpoint {
+            job_seed,
+            plan_hash: plan_hash(&net.plan),
+            epoch,
+            step,
+            grad_shift: net.grad_shift,
+            seconds,
+            ops: engine.counter.snapshot(),
+            weights,
+            client_rng,
+            auth_rng,
+        })
+    }
+
+    /// Restore this checkpoint into a freshly rebuilt network: overwrite
+    /// the trainable weights, reload the op counters, and reposition the
+    /// authority RNG. The caller repositions the client codec RNG from
+    /// [`Self::client_rng`] (the codec is not reachable through the
+    /// engine) and resumes the step loop at [`Self::step`].
+    pub fn restore(&self, net: &mut Network, engine: &GlyphEngine) -> Result<(), WireError> {
+        if self.plan_hash != plan_hash(&net.plan) {
+            return Err(WireError::Malformed(format!(
+                "checkpoint was trained under a different compiled plan \
+                 (stored {:#018x}, rebuilt {:#018x})",
+                self.plan_hash,
+                plan_hash(&net.plan)
+            )));
+        }
+        if self.grad_shift != net.grad_shift {
+            return Err(WireError::Malformed(format!(
+                "checkpoint gradient shift {} does not match the rebuilt network's {}",
+                self.grad_shift, net.grad_shift
+            )));
+        }
+        for lw in &self.weights {
+            let fc = net.fc_unit_mut(lw.unit).ok_or_else(|| {
+                WireError::Malformed(format!("checkpoint names unit {} which is not an FC", lw.unit))
+            })?;
+            if lw.rows.len() != fc.out_dim || lw.rows.iter().any(|row| row.len() != fc.in_dim) {
+                return Err(WireError::Malformed(format!(
+                    "checkpoint unit {} weights are {}×{}, layer is {}×{}",
+                    lw.unit,
+                    lw.rows.len(),
+                    lw.rows.first().map_or(0, Vec::len),
+                    fc.out_dim,
+                    fc.in_dim
+                )));
+            }
+            for (j, row) in lw.rows.iter().enumerate() {
+                for (i, ct) in row.iter().enumerate() {
+                    fc.w[j][i] = Weight::Enc(ct.clone());
+                }
+            }
+        }
+        engine.counter.store(&self.ops);
+        if let (Some(state), Backend::Fhe(f)) = (self.auth_rng, &engine.backend) {
+            f.auth.restore_rng_state(state);
+            f.auth.restore_count(self.ops.refresh as usize);
+        }
+        Ok(())
+    }
+}

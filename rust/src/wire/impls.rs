@@ -1,0 +1,460 @@
+//! [`WireCodec`] implementations for the durable core types.
+
+use super::{get_nested, put_nested, WireCodec, WireError, WireReader, WireWriter};
+use crate::bgv::ciphertext::BgvCiphertext;
+use crate::bgv::keys::{BgvContext, BgvSecretKey};
+use crate::bgv::params::BgvParams;
+use crate::bgv::refresh::NoiseRefresher;
+use crate::coordinator::metrics::OpSnapshot;
+use crate::coordinator::scheduler::{Plan, PlanStep, StepOps, StepPhase, System};
+use crate::math::poly::RnsPoly;
+use crate::math::rng::GlyphRng;
+use crate::nn::backend::{ClearCt, Ct};
+use crate::nn::engine::{Backend, ClientKeys, FheState, GlyphEngine};
+use crate::tfhe::lwe::LweCiphertext;
+use crate::tfhe::params::TfheParams;
+use std::sync::Arc;
+
+impl WireCodec for BgvParams {
+    const TAG: [u8; 4] = *b"BGVP";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_len(self.n);
+        w.put_u64s(&self.primes);
+        w.put_u64(self.t);
+        w.put_f64(self.sigma);
+        w.put_u64(self.prime_align);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let n = r.u64()? as usize;
+        let primes = r.u64s()?;
+        let t = r.u64()?;
+        let sigma = r.f64()?;
+        let prime_align = r.u64()?;
+        if n == 0 || !n.is_power_of_two() {
+            return Err(WireError::Malformed(format!("BGV ring degree {n} is not a power of two")));
+        }
+        if primes.is_empty() {
+            return Err(WireError::Malformed("BGV parameter set has no primes".into()));
+        }
+        if t < 2 {
+            return Err(WireError::Malformed(format!("BGV plaintext modulus t={t} is too small")));
+        }
+        Ok(BgvParams { n, primes, t, sigma, prime_align })
+    }
+}
+
+impl WireCodec for TfheParams {
+    const TAG: [u8; 4] = *b"TFHP";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_len(self.n);
+        w.put_f64(self.alpha_lwe);
+        w.put_len(self.big_n);
+        w.put_f64(self.alpha_rlwe);
+        w.put_len(self.l);
+        w.put_u32(self.bg_bit);
+        w.put_u32(self.ks_base_bit);
+        w.put_len(self.ks_len);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let p = TfheParams {
+            n: r.u64()? as usize,
+            alpha_lwe: r.f64()?,
+            big_n: r.u64()? as usize,
+            alpha_rlwe: r.f64()?,
+            l: r.u64()? as usize,
+            bg_bit: r.u32()?,
+            ks_base_bit: r.u32()?,
+            ks_len: r.u64()? as usize,
+        };
+        if p.n == 0 || p.big_n == 0 || !p.big_n.is_power_of_two() {
+            return Err(WireError::Malformed(format!(
+                "TFHE dimensions n={} N={} are invalid",
+                p.n, p.big_n
+            )));
+        }
+        Ok(p)
+    }
+}
+
+impl WireCodec for OpSnapshot {
+    const TAG: [u8; 4] = *b"OPSN";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        let fields = self.fields();
+        w.put_len(fields.len());
+        for (_, v) in fields {
+            w.put_u64(v);
+        }
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let names = OpSnapshot::default().fields();
+        let n = r.len(8)?;
+        if n != names.len() {
+            return Err(WireError::Malformed(format!(
+                "op snapshot has {n} counters, this build knows {}",
+                names.len()
+            )));
+        }
+        let mut pairs = Vec::with_capacity(n);
+        for (name, _) in names {
+            pairs.push((name, r.u64()?));
+        }
+        OpSnapshot::from_fields(pairs).map_err(WireError::Malformed)
+    }
+}
+
+impl WireCodec for GlyphRng {
+    const TAG: [u8; 4] = *b"XRNG";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        for x in self.state() {
+            w.put_u64(x);
+        }
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let mut s = [0u64; 4];
+        for x in &mut s {
+            *x = r.u64()?;
+        }
+        Ok(GlyphRng::from_state(s))
+    }
+}
+
+fn put_step_ops(w: &mut WireWriter, o: &StepOps) {
+    w.put_u64(o.mult_cc);
+    w.put_u64(o.mult_cp);
+    w.put_u64(o.add_cc);
+    w.put_u64(o.tlu);
+    w.put_u64(o.relu_values);
+    w.put_u64(o.softmax_values);
+    w.put_u64(o.act_gates);
+    w.put_u64(o.extract_pbs);
+    w.put_u64(o.switch_b2t);
+    w.put_u64(o.switch_t2b);
+    w.put_u64(o.refresh);
+    w.put_u64(o.extract_lanes);
+    w.put_u64(o.repack_lanes);
+}
+
+fn get_step_ops(r: &mut WireReader<'_>) -> Result<StepOps, WireError> {
+    Ok(StepOps {
+        mult_cc: r.u64()?,
+        mult_cp: r.u64()?,
+        add_cc: r.u64()?,
+        tlu: r.u64()?,
+        relu_values: r.u64()?,
+        softmax_values: r.u64()?,
+        act_gates: r.u64()?,
+        extract_pbs: r.u64()?,
+        switch_b2t: r.u64()?,
+        switch_t2b: r.u64()?,
+        refresh: r.u64()?,
+        extract_lanes: r.u64()?,
+        repack_lanes: r.u64()?,
+    })
+}
+
+impl WireCodec for Plan {
+    const TAG: [u8; 4] = *b"PLAN";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_len(self.steps.len());
+        for s in &self.steps {
+            w.put_str(&s.name);
+            match s.unit {
+                None => w.put_u8(0),
+                Some(u) => {
+                    w.put_u8(1);
+                    w.put_len(u);
+                }
+            }
+            w.put_u8(match s.phase {
+                StepPhase::Forward => 0,
+                StepPhase::Error => 1,
+                StepPhase::Gradient => 2,
+            });
+            w.put_u8(match s.system {
+                System::Bgv => 0,
+                System::Tfhe => 1,
+            });
+            w.put_u8(match s.switch {
+                "-" => 0,
+                "BGV-TFHE" => 1,
+                "TFHE-BGV" => 2,
+                other => unreachable!("unknown switch annotation {other:?}"),
+            });
+            put_step_ops(w, &s.ops);
+            w.put_bool(s.fc_switch_overhead);
+        }
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let n = r.len(1)?;
+        let mut steps = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.str()?;
+            let unit = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()? as usize),
+                other => {
+                    return Err(WireError::Malformed(format!("bad option discriminant {other}")))
+                }
+            };
+            let phase = match r.u8()? {
+                0 => StepPhase::Forward,
+                1 => StepPhase::Error,
+                2 => StepPhase::Gradient,
+                other => return Err(WireError::Malformed(format!("bad step phase {other}"))),
+            };
+            let system = match r.u8()? {
+                0 => System::Bgv,
+                1 => System::Tfhe,
+                other => return Err(WireError::Malformed(format!("bad system {other}"))),
+            };
+            let switch = match r.u8()? {
+                0 => "-",
+                1 => "BGV-TFHE",
+                2 => "TFHE-BGV",
+                other => {
+                    return Err(WireError::Malformed(format!("bad switch annotation {other}")))
+                }
+            };
+            let ops = get_step_ops(r)?;
+            let fc_switch_overhead = r.bool()?;
+            steps.push(PlanStep { name, unit, phase, system, switch, ops, fc_switch_overhead });
+        }
+        Ok(Plan { steps })
+    }
+}
+
+impl WireCodec for ClearCt {
+    const TAG: [u8; 4] = *b"CLCT";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_len(self.n);
+        w.put_u64(self.t);
+        w.put_u64s(&self.coeffs);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let n = r.u64()? as usize;
+        let t = r.u64()?;
+        let coeffs = r.u64s()?;
+        if coeffs.len() > n {
+            return Err(WireError::Malformed(format!(
+                "clear ciphertext has {} coefficients in a degree-{n} ring",
+                coeffs.len()
+            )));
+        }
+        if let Some(&bad) = coeffs.iter().find(|&&c| c >= t) {
+            return Err(WireError::Malformed(format!(
+                "clear ciphertext coefficient {bad} is outside Z_{t}"
+            )));
+        }
+        Ok(ClearCt { n, t, coeffs })
+    }
+}
+
+impl WireCodec for LweCiphertext {
+    const TAG: [u8; 4] = *b"LWEC";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_u32s(&self.a);
+        w.put_u32(self.b);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        Ok(LweCiphertext { a: r.u32s()?, b: r.u32()? })
+    }
+}
+
+fn put_rns_poly(w: &mut WireWriter, p: &RnsPoly) {
+    w.put_bool(p.is_ntt);
+    w.put_len(p.res.len());
+    for limb in &p.res {
+        w.put_u64s(limb);
+    }
+}
+
+fn get_rns_poly(
+    r: &mut WireReader<'_>,
+    ctx: &BgvContext,
+    level: usize,
+) -> Result<RnsPoly, WireError> {
+    let is_ntt = r.bool()?;
+    let limbs = r.len(8)?;
+    if limbs != level {
+        return Err(WireError::Malformed(format!(
+            "polynomial has {limbs} RNS limbs, ciphertext level is {level}"
+        )));
+    }
+    let rctx = ctx.ctx_at(level);
+    let mut res = Vec::with_capacity(limbs);
+    for i in 0..limbs {
+        let limb = r.u64s()?;
+        if limb.len() != ctx.params.n {
+            return Err(WireError::Malformed(format!(
+                "RNS limb {i} has {} coefficients, ring degree is {}",
+                limb.len(),
+                ctx.params.n
+            )));
+        }
+        let p = rctx.primes[i];
+        if let Some(&bad) = limb.iter().find(|&&c| c >= p) {
+            return Err(WireError::Malformed(format!(
+                "residue {bad} in limb {i} exceeds its prime {p}"
+            )));
+        }
+        res.push(limb);
+    }
+    Ok(RnsPoly { ctx: rctx.clone(), res, is_ntt, level })
+}
+
+impl WireCodec for BgvCiphertext {
+    const TAG: [u8; 4] = *b"BGVC";
+    const VERSION: u16 = 1;
+    type Ctx = BgvContext;
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_len(self.level);
+        put_rns_poly(w, &self.c0);
+        put_rns_poly(w, &self.c1);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, ctx: &BgvContext) -> Result<Self, WireError> {
+        let level = r.u64()? as usize;
+        if level == 0 || level > ctx.top_level() {
+            return Err(WireError::Malformed(format!(
+                "ciphertext level {level} is outside 1..={}",
+                ctx.top_level()
+            )));
+        }
+        let c0 = get_rns_poly(r, ctx, level)?;
+        let c1 = get_rns_poly(r, ctx, level)?;
+        Ok(BgvCiphertext { c0, c1, level })
+    }
+}
+
+impl WireCodec for Ct {
+    const TAG: [u8; 4] = *b"CTCT";
+    const VERSION: u16 = 1;
+    type Ctx = GlyphEngine;
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        match self {
+            Ct::Clear(c) => {
+                w.put_u8(0);
+                put_nested(w, c);
+            }
+            Ct::Fhe(c) => {
+                w.put_u8(1);
+                put_nested(w, c);
+            }
+        }
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, engine: &GlyphEngine) -> Result<Self, WireError> {
+        match r.u8()? {
+            0 => {
+                let c: ClearCt = get_nested(r, &())?;
+                if c.n != engine.params().n || c.t != engine.params().t {
+                    return Err(WireError::Malformed(format!(
+                        "clear ciphertext ring (n={}, t={}) does not match the engine \
+                         (n={}, t={})",
+                        c.n,
+                        c.t,
+                        engine.params().n,
+                        engine.params().t
+                    )));
+                }
+                Ok(Ct::Clear(c))
+            }
+            1 => match &engine.backend {
+                Backend::Fhe(f) => Ok(Ct::Fhe(get_nested(r, f.ctx.as_ref())?)),
+                Backend::Clear(_) => Err(WireError::Malformed(
+                    "FHE ciphertext cannot be decoded on a clear-backend engine".into(),
+                )),
+            },
+            other => Err(WireError::Malformed(format!("bad ciphertext variant {other}"))),
+        }
+    }
+}
+
+impl WireCodec for ClientKeys {
+    const TAG: [u8; 4] = *b"CLNK";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        put_nested(w, &self.bgv_sk.ctx.params);
+        w.put_i64s(&self.bgv_sk.s_coeffs);
+        for x in self.rng.state() {
+            w.put_u64(x);
+        }
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let params: BgvParams = get_nested(r, &())?;
+        let s_coeffs = r.i64s()?;
+        let mut state = [0u64; 4];
+        for x in &mut state {
+            *x = r.u64()?;
+        }
+        let ctx = BgvContext::new(params);
+        let sk = BgvSecretKey::try_from_coeffs(&ctx, s_coeffs).map_err(WireError::Malformed)?;
+        Ok(ClientKeys { bgv_sk: Arc::new(sk), rng: GlyphRng::from_state(state) })
+    }
+}
+
+impl WireCodec for FheState {
+    const TAG: [u8; 4] = *b"FHES";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        put_nested(w, &self.ctx.params);
+        put_nested(w, &self.gate_ck.params);
+        put_nested(w, &self.extract_ck.params);
+        w.put_u64(self.seed);
+        for x in self.auth.rng_state() {
+            w.put_u64(x);
+        }
+        w.put_len(self.auth.refresh_count());
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let bgv: BgvParams = get_nested(r, &())?;
+        let gate: TfheParams = get_nested(r, &())?;
+        let ext: TfheParams = get_nested(r, &())?;
+        let seed = r.u64()?;
+        let mut auth_rng = [0u64; 4];
+        for x in &mut auth_rng {
+            *x = r.u64()?;
+        }
+        let count = r.u64()? as usize;
+        let state = FheState::generate(bgv, gate, ext, seed);
+        state.auth.restore_rng_state(auth_rng);
+        state.auth.restore_count(count);
+        Ok(state)
+    }
+}

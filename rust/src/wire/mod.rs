@@ -1,0 +1,488 @@
+//! `wire` — versioned, std-only binary serialization for every piece of
+//! durable Glyph state (ROADMAP item 2: the serving/persistence layer).
+//!
+//! The crate is dependency-free by design (no serde), so this module
+//! carries its own little-endian writer/reader pair and a [`WireCodec`]
+//! trait. Every encoded payload is framed
+//!
+//! ```text
+//! magic "GLYW" (4) | type tag (4) | version u16 | body len u64 | body | fnv1a-64 checksum u64
+//! ```
+//!
+//! and decoding verifies each field in order, returning a descriptive
+//! [`WireError`] — never panicking — on truncated, corrupted, foreign or
+//! future-versioned bytes. The checksum covers everything before it
+//! (header + body), so a single flipped bit anywhere is caught.
+//!
+//! Key material takes two deliberately different routes:
+//!
+//! * [`crate::nn::engine::ClientKeys`] is *structural*: parameters + secret
+//!   coefficients + RNG cursor. The client must be able to move its key to
+//!   another machine that knows nothing else.
+//! * [`crate::nn::engine::FheState`] is *regenerative*: parameters + keygen
+//!   seed + authority RNG cursor. Keygen is fully deterministic from the
+//!   seed, so shipping gigabytes of FFT-domain cloud keys is pointless —
+//!   decode replays `FheState::generate` and repositions the RNG cursors.
+//!
+//! [`Checkpoint`] (in [`checkpoint`]) is the durable unit the serve layer
+//! writes every K steps: weights + op counters + step cursor + RNG cursors
+//! + a hash of the compiled plan, enough to resume a training run
+//! byte-identically in a fresh process.
+
+mod checkpoint;
+mod impls;
+
+pub use checkpoint::{plan_hash, Checkpoint, LayerWeights};
+
+/// Frame magic: every Glyph wire payload starts with these bytes.
+pub const WIRE_MAGIC: [u8; 4] = *b"GLYW";
+
+/// Bytes before the body: magic (4) + tag (4) + version (2) + body length
+/// (8).
+pub const HEADER_LEN: usize = 18;
+
+/// Trailing checksum length.
+pub const CHECKSUM_LEN: usize = 8;
+
+/// What went wrong while decoding a wire payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The payload does not start with [`WIRE_MAGIC`] — not a Glyph wire
+    /// frame at all.
+    BadMagic { found: [u8; 4] },
+    /// The frame is a Glyph payload of a different type.
+    WrongTag { expected: [u8; 4], found: [u8; 4] },
+    /// The frame's format version is not the one this build reads.
+    UnsupportedVersion { tag: [u8; 4], found: u16, supported: u16 },
+    /// Fewer bytes than the header/body length demand.
+    Truncated { needed: usize, available: usize },
+    /// More bytes than the header's body length accounts for.
+    BadLength { declared: usize, actual: usize },
+    /// Header + body do not hash to the stored checksum (bit rot or
+    /// tampering).
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// The body parsed structurally but its contents are inconsistent.
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic { found } => {
+                write!(f, "not a Glyph wire payload (magic {found:02x?}, want {WIRE_MAGIC:02x?})")
+            }
+            WireError::WrongTag { expected, found } => write!(
+                f,
+                "wire payload is a {:?} frame, expected {:?}",
+                String::from_utf8_lossy(found),
+                String::from_utf8_lossy(expected)
+            ),
+            WireError::UnsupportedVersion { tag, found, supported } => write!(
+                f,
+                "{:?} frame is format version {found}, this build reads version {supported}",
+                String::from_utf8_lossy(tag)
+            ),
+            WireError::Truncated { needed, available } => {
+                write!(f, "truncated wire payload: need {needed} bytes, have {available}")
+            }
+            WireError::BadLength { declared, actual } => {
+                write!(f, "wire frame declares {declared} bytes but {actual} are present")
+            }
+            WireError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "wire checksum mismatch (stored {stored:#018x}, computed {computed:#018x}): \
+                 payload is corrupted"
+            ),
+            WireError::Malformed(detail) => write!(f, "malformed wire payload: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// FNV-1a 64-bit — the frame checksum. Not cryptographic (the threat model
+/// is bit rot and truncation, not forgery; encrypted state is protected by
+/// the cryptosystem itself).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Little-endian append-only body writer.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        WireWriter { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// A collection length (u64 on the wire regardless of platform).
+    pub fn put_len(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_len(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_len(v.len());
+        for &x in v {
+            self.put_u64(x);
+        }
+    }
+
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_len(v.len());
+        for &x in v {
+            self.put_u32(x);
+        }
+    }
+
+    pub fn put_i64s(&mut self, v: &[i64]) {
+        self.put_len(v.len());
+        for &x in v {
+            self.put_i64(x);
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian cursor reader over a body slice. Every accessor checks
+/// bounds and returns [`WireError::Truncated`] instead of panicking.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { needed: self.pos + n, available: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(WireError::Malformed(format!("bool byte must be 0/1, got {other}"))),
+        }
+    }
+
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, WireError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A collection length, sanity-capped against the bytes actually
+    /// present so a corrupted length can't trigger a huge allocation.
+    pub fn len(&mut self, elem_size: usize) -> Result<usize, WireError> {
+        let n = self.u64()?;
+        let cap = (self.remaining() / elem_size.max(1)) as u64;
+        if n > cap {
+            return Err(WireError::Truncated {
+                needed: self.pos + (n as usize).saturating_mul(elem_size),
+                available: self.buf.len(),
+            });
+        }
+        Ok(n as usize)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], WireError> {
+        let n = self.len(1)?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let raw = self.bytes()?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|e| WireError::Malformed(format!("invalid utf-8 string: {e}")))
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.len(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn i64s(&mut self) -> Result<Vec<i64>, WireError> {
+        let n = self.len(8)?;
+        (0..n).map(|_| self.i64()).collect()
+    }
+
+    /// Assert the body was consumed exactly.
+    pub fn finish(self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed(format!(
+                "{} unread bytes after the last field",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A type with a stable binary wire format. `Ctx` is whatever shared state
+/// decoding needs (`()` for self-contained types; a `BgvContext` for
+/// ciphertexts whose RNS limbs hang off per-level contexts; a `GlyphEngine`
+/// for checkpoints).
+pub trait WireCodec: Sized {
+    /// Frame type tag (four ASCII bytes, unique per type).
+    const TAG: [u8; 4];
+    /// Current format version; bump on any body layout change.
+    const VERSION: u16;
+    /// Decode-side context.
+    type Ctx: ?Sized;
+
+    fn encode_body(&self, w: &mut WireWriter);
+    fn decode_body(r: &mut WireReader<'_>, ctx: &Self::Ctx) -> Result<Self, WireError>;
+
+    /// Full framed encoding: header + body + checksum.
+    fn to_wire(&self) -> Vec<u8> {
+        let mut body = WireWriter::new();
+        self.encode_body(&mut body);
+        let body = body.into_bytes();
+        let mut out = Vec::with_capacity(HEADER_LEN + body.len() + CHECKSUM_LEN);
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.extend_from_slice(&Self::TAG);
+        out.extend_from_slice(&Self::VERSION.to_le_bytes());
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&body);
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Verify the frame and decode. Exactly-sized input is required — a
+    /// length-prefixed transport or a whole file supplies that naturally.
+    fn from_wire(bytes: &[u8], ctx: &Self::Ctx) -> Result<Self, WireError> {
+        if bytes.len() < HEADER_LEN + CHECKSUM_LEN {
+            return Err(WireError::Truncated {
+                needed: HEADER_LEN + CHECKSUM_LEN,
+                available: bytes.len(),
+            });
+        }
+        let magic: [u8; 4] = bytes[0..4].try_into().unwrap();
+        if magic != WIRE_MAGIC {
+            return Err(WireError::BadMagic { found: magic });
+        }
+        let tag: [u8; 4] = bytes[4..8].try_into().unwrap();
+        if tag != Self::TAG {
+            return Err(WireError::WrongTag { expected: Self::TAG, found: tag });
+        }
+        let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+        if version != Self::VERSION {
+            return Err(WireError::UnsupportedVersion {
+                tag,
+                found: version,
+                supported: Self::VERSION,
+            });
+        }
+        let body_len = u64::from_le_bytes(bytes[10..18].try_into().unwrap()) as usize;
+        let framed = HEADER_LEN + body_len + CHECKSUM_LEN;
+        if bytes.len() < framed {
+            return Err(WireError::Truncated { needed: framed, available: bytes.len() });
+        }
+        if bytes.len() > framed {
+            return Err(WireError::BadLength { declared: framed, actual: bytes.len() });
+        }
+        let stored = u64::from_le_bytes(bytes[framed - CHECKSUM_LEN..].try_into().unwrap());
+        let computed = fnv1a64(&bytes[..framed - CHECKSUM_LEN]);
+        if stored != computed {
+            return Err(WireError::ChecksumMismatch { stored, computed });
+        }
+        let mut r = WireReader::new(&bytes[HEADER_LEN..framed - CHECKSUM_LEN]);
+        let value = Self::decode_body(&mut r, ctx)?;
+        r.finish()?;
+        Ok(value)
+    }
+}
+
+/// Encode a nested value as a length-prefixed sub-frame (own header +
+/// checksum, so every component is independently verifiable).
+pub fn put_nested<T: WireCodec>(w: &mut WireWriter, v: &T) {
+    w.put_bytes(&v.to_wire());
+}
+
+/// Decode a nested sub-frame written by [`put_nested`].
+pub fn get_nested<T: WireCodec>(r: &mut WireReader<'_>, ctx: &T::Ctx) -> Result<T, WireError> {
+    let blob = r.bytes()?;
+    T::from_wire(blob, ctx)
+}
+
+/// Write `bytes` to `path` atomically: a unique temp file in the same
+/// directory, then rename. A `kill -9` mid-write leaves either the old
+/// checkpoint or the new one, never a torn file.
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let dir = path.parent().unwrap_or_else(|| std::path::Path::new("."));
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!(
+        ".{}.tmp-{}",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("wire"),
+        std::process::id()
+    ));
+    std::fs::write(&tmp, bytes)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Pair {
+        a: u64,
+        s: String,
+    }
+
+    impl WireCodec for Pair {
+        const TAG: [u8; 4] = *b"TPAI";
+        const VERSION: u16 = 1;
+        type Ctx = ();
+
+        fn encode_body(&self, w: &mut WireWriter) {
+            w.put_u64(self.a);
+            w.put_str(&self.s);
+        }
+
+        fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+            Ok(Pair { a: r.u64()?, s: r.str()? })
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_header_checks() {
+        let p = Pair { a: 7, s: "hello".into() };
+        let bytes = p.to_wire();
+        let back = Pair::from_wire(&bytes, &()).unwrap();
+        assert_eq!(back.a, 7);
+        assert_eq!(back.s, "hello");
+
+        // magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(Pair::from_wire(&bad, &()), Err(WireError::BadMagic { .. })));
+        // truncation at every prefix must error, never panic
+        for cut in 0..bytes.len() {
+            assert!(Pair::from_wire(&bytes[..cut], &()).is_err(), "cut at {cut}");
+        }
+        // trailing junk
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(Pair::from_wire(&long, &()), Err(WireError::BadLength { .. })));
+        // corrupted body byte
+        let mut corrupt = bytes.clone();
+        corrupt[HEADER_LEN] ^= 1;
+        assert!(matches!(Pair::from_wire(&corrupt, &()), Err(WireError::ChecksumMismatch { .. })));
+        // future version (checksum refreshed so the version check fires)
+        let mut vbump = bytes.clone();
+        vbump[8] = 0xff;
+        let sum = fnv1a64(&vbump[..vbump.len() - CHECKSUM_LEN]);
+        let at = vbump.len() - CHECKSUM_LEN;
+        vbump[at..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(Pair::from_wire(&vbump, &()), Err(WireError::UnsupportedVersion { .. })));
+    }
+
+    #[test]
+    fn reader_rejects_oversized_lengths() {
+        // a u64 length far beyond the buffer must not allocate
+        let mut w = WireWriter::new();
+        w.put_u64(u64::MAX);
+        let body = w.into_bytes();
+        let mut r = WireReader::new(&body);
+        assert!(matches!(r.u64s(), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn atomic_write_replaces_whole_file() {
+        let dir = std::env::temp_dir().join(format!("glyph-wire-test-{}", std::process::id()));
+        let path = dir.join("state.bin");
+        write_atomic(&path, b"first").unwrap();
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -12,34 +12,15 @@ use glyph::nn::tensor::{EncTensor, PackOrder};
 use glyph::train::{CnnConfig, GlyphCnn};
 
 fn assert_counts_match(live: glyph::coordinator::OpSnapshot, predicted: glyph::coordinator::StepOps) {
-    assert_eq!(live.mult_cc, predicted.mult_cc, "MultCC: live {live:?} vs plan {predicted:?}");
-    assert_eq!(live.mult_cp, predicted.mult_cp, "MultCP: live {live:?} vs plan {predicted:?}");
-    assert_eq!(live.add_cc, predicted.add_cc, "AddCC: live {live:?} vs plan {predicted:?}");
-    assert_eq!(live.tlu, predicted.tlu, "TLU: live {live:?} vs plan {predicted:?}");
-    assert_eq!(live.act_gates, predicted.act_gates, "gates: live {live:?} vs plan {predicted:?}");
-    assert_eq!(
-        live.extract_pbs, predicted.extract_pbs,
-        "extract PBS: live {live:?} vs plan {predicted:?}"
-    );
-    assert_eq!(
-        live.switch_b2t, predicted.switch_b2t,
-        "B2T switches: live {live:?} vs plan {predicted:?}"
-    );
-    assert_eq!(
-        live.switch_t2b, predicted.switch_t2b,
-        "T2B switches: live {live:?} vs plan {predicted:?}"
-    );
-    assert_eq!(live.refresh, predicted.refresh, "refresh: live {live:?} vs plan {predicted:?}");
-    // PR 4: the switch engine's lane-level counters (one extract per
-    // requested coefficient, one repack per packed LWE) are predicted by the
-    // plan and must match the live engine exactly, like `relin` in PR 3.
-    assert_eq!(
-        live.extract_lanes, predicted.extract_lanes,
-        "extract lanes: live {live:?} vs plan {predicted:?}"
-    );
-    assert_eq!(
-        live.repack_lanes, predicted.repack_lanes,
-        "repack lanes: live {live:?} vs plan {predicted:?}"
+    // Plans carry no relin/mod-switch prediction (both depend on the MAC
+    // engine's laziness), so those two counters are excluded — the same
+    // contract the serve layer's drift gauge uses. Everything else must
+    // match exactly, lane-level switch counters included.
+    let diff = live.diff_ignoring(&predicted.to_snapshot(), &glyph::serve::metrics::UNPREDICTED_OPS);
+    assert!(
+        diff.is_empty(),
+        "live execution drifted from the compiled plan: {}",
+        glyph::coordinator::OpSnapshot::render_diff(&diff)
     );
 }
 

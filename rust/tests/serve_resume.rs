@@ -1,0 +1,133 @@
+//! Checkpoint/resume conformance (PR 7's acceptance bar): a training run
+//! interrupted at a checkpoint boundary and resumed by a *fresh* process
+//! must finish with weights, logits and op counters byte-identical to an
+//! uninterrupted run. Exercised at epoch scale on the clear backend and
+//! differentially spot-checked on FHE for one resumed train step.
+
+use glyph::serve::job::checkpoint_path;
+use glyph::serve::{run_job, JobBackend, JobHandle, JobSpec, RunOptions, RunOutcome};
+use glyph::serve::{JobResult, JobState};
+use std::path::PathBuf;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("glyph-resume-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_to_completion(handle: &JobHandle, dir: Option<&std::path::Path>) -> JobResult {
+    match run_job(handle, dir, &RunOptions::default()).unwrap() {
+        RunOutcome::Completed(result) => result,
+        other => panic!("expected completion, got {other:?}"),
+    }
+}
+
+fn halt_after(handle: &JobHandle, dir: &std::path::Path, checkpoints: u64) {
+    let opts = RunOptions { halt_after_checkpoints: Some(checkpoints) };
+    match run_job(handle, Some(dir), &opts).unwrap() {
+        RunOutcome::Halted => {}
+        other => panic!("expected a halt, got {other:?}"),
+    }
+}
+
+/// Everything two runs must agree on, byte for byte. (`seconds` is
+/// wall-clock and `resumes`/`id` are bookkeeping — excluded by design.)
+fn assert_identical(resumed: &JobResult, reference: &JobResult) {
+    assert_eq!(resumed.steps, reference.steps, "step counts differ");
+    assert_eq!(
+        resumed.weights_digest, reference.weights_digest,
+        "final weights are not byte-identical"
+    );
+    assert_eq!(
+        resumed.logits_digest, reference.logits_digest,
+        "evaluation logits are not byte-identical"
+    );
+    assert_eq!(resumed.ops, reference.ops, "op counters drifted across the resume");
+    assert_eq!(resumed.accuracy, reference.accuracy, "accuracy differs");
+}
+
+#[test]
+fn clear_run_resumes_byte_identically_across_two_interruptions() {
+    let mut spec = JobSpec::small_clear("resume", 0x5eed);
+    spec.samples = 48;
+    spec.epochs = 2;
+    spec.checkpoint_every = 5; // 24 total steps → checkpoints at 5/10/15/20
+
+    // Uninterrupted reference, no persistence at all.
+    let reference = run_to_completion(&JobHandle::new(1, spec.clone()), None);
+    assert_eq!(reference.steps, 24);
+    assert_eq!(reference.resumes, 0);
+
+    // Interrupted run: each leg uses a brand-new JobHandle, modelling a
+    // killed and restarted server process that recovered the job from disk.
+    let dir = temp_dir("clear");
+    halt_after(&JobHandle::new(2, spec.clone()), &dir, 1); // dies at step 5
+    assert!(checkpoint_path(&dir).exists(), "halt must leave a checkpoint behind");
+    halt_after(&JobHandle::new(2, spec.clone()), &dir, 1); // resumes, dies at 10
+    let handle = JobHandle::new(2, spec.clone());
+    let resumed = run_to_completion(&handle, Some(&dir)); // resumes at 10, finishes
+
+    assert_identical(&resumed, &reference);
+    assert_eq!(resumed.resumes, 1, "the final process resumed exactly once");
+    assert_eq!(handle.status().state, JobState::Completed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fhe_run_resumes_byte_identically_after_one_step() {
+    // Reduced-scale FHE: 2 steps total, checkpoint after step 1, halt,
+    // resume in a fresh handle. Keygen, encryption noise and the authority
+    // RNG all replay from the spec seed + checkpointed cursors.
+    let spec = JobSpec {
+        tenant: "fhe".into(),
+        backend: JobBackend::Fhe,
+        profile: glyph::nn::engine::EngineProfile::Test,
+        dims: vec![16, 4, 3],
+        batch: 2,
+        epochs: 1,
+        steps_per_epoch: 2,
+        samples: 4,
+        eval_samples: 2,
+        dataset: "digits".into(),
+        seed: 0xfe11,
+        checkpoint_every: 1,
+        softmax_bits: 3,
+    };
+
+    let reference = run_to_completion(&JobHandle::new(1, spec.clone()), None);
+    assert_eq!(reference.steps, 2);
+
+    let dir = temp_dir("fhe");
+    halt_after(&JobHandle::new(2, spec.clone()), &dir, 1);
+    let resumed = run_to_completion(&JobHandle::new(2, spec.clone()), Some(&dir));
+
+    assert_identical(&resumed, &reference);
+    assert_eq!(resumed.resumes, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_with_foreign_seed_is_refused() {
+    let mut spec = JobSpec::small_clear("seed-a", 100);
+    spec.checkpoint_every = 2;
+    let dir = temp_dir("foreign");
+    halt_after(&JobHandle::new(1, spec.clone()), &dir, 1);
+
+    let mut other = spec;
+    other.seed = 101; // same shape, different job identity
+    let err = run_job(&JobHandle::new(1, other), Some(&dir), &RunOptions::default()).unwrap_err();
+    assert!(err.to_string().contains("seed"), "unexpected error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cancelled_job_reports_cancelled() {
+    let handle = JobHandle::new(9, JobSpec::small_clear("cancel", 5));
+    handle.cancel.store(true, std::sync::atomic::Ordering::Relaxed);
+    match run_job(&handle, None, &RunOptions::default()).unwrap() {
+        RunOutcome::Cancelled => {}
+        other => panic!("expected cancellation, got {other:?}"),
+    }
+    assert_eq!(handle.status().state, JobState::Cancelled);
+}

@@ -1,0 +1,204 @@
+//! End-to-end `glyph serve` smoke tests against the real binary over
+//! loopback TCP: the full protocol surface, the CLI's strict flag parsing,
+//! and the PR's acceptance bar — `kill -9` the server mid-epoch, restart it
+//! on the same data directory, and the recovered job must finish with
+//! weights/logits/op counters byte-identical to an uninterrupted run.
+
+use glyph::serve::client::ClientError;
+use glyph::serve::{run_job, JobHandle, JobResult, JobSpec, JobState, RunOptions, RunOutcome};
+use glyph::serve::ServeClient;
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_glyph");
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("glyph-smoke-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Spawn `glyph serve`, parse the bound address off its stdout, keep the
+/// pipe drained so the child can never block on a full buffer.
+fn spawn_server(data_dir: &std::path::Path, step_delay_ms: u64) -> (Child, SocketAddr) {
+    let mut cmd = Command::new(BIN);
+    cmd.args(["serve", "--addr", "127.0.0.1:0", "--workers", "1"])
+        .arg("--data-dir")
+        .arg(data_dir)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null());
+    if step_delay_ms > 0 {
+        cmd.env("GLYPH_SERVE_STEP_DELAY_MS", step_delay_ms.to_string());
+    }
+    let mut child = cmd.spawn().expect("glyph binary spawns");
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("server stdout readable");
+        assert!(n > 0, "server exited before announcing its address");
+        if let Some(rest) = line.trim().strip_prefix("glyph-serve listening on ") {
+            break rest.parse::<SocketAddr>().expect("printed address parses");
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    (child, addr)
+}
+
+fn client(addr: SocketAddr) -> ServeClient {
+    ServeClient::connect(addr).expect("connects to server")
+}
+
+fn wait_completed(c: &mut ServeClient, id: u64, secs: u64) -> JobResult {
+    let status = c.wait(id, Duration::from_secs(secs)).expect("job finishes in time");
+    assert_eq!(status.state, JobState::Completed, "job failed: {}", status.message);
+    c.fetch_result(id).expect("completed job has a result")
+}
+
+/// Uninterrupted in-process reference run for `spec` (no persistence).
+fn reference_run(spec: &JobSpec) -> JobResult {
+    match run_job(&JobHandle::new(0, spec.clone()), None, &RunOptions::default()).unwrap() {
+        RunOutcome::Completed(result) => result,
+        other => panic!("reference run did not complete: {other:?}"),
+    }
+}
+
+fn assert_identical(served: &JobResult, reference: &JobResult) {
+    assert_eq!(served.steps, reference.steps);
+    assert_eq!(served.weights_digest, reference.weights_digest, "weights differ");
+    assert_eq!(served.logits_digest, reference.logits_digest, "logits differ");
+    assert_eq!(served.ops, reference.ops, "op counters differ");
+}
+
+#[test]
+fn end_to_end_protocol_over_loopback() {
+    let dir = temp_dir("e2e");
+    let (mut child, addr) = spawn_server(&dir, 0);
+    let mut c = client(addr);
+    c.ping().expect("ping");
+
+    let mut spec = JobSpec::small_clear("smoke", 7);
+    spec.samples = 16;
+    spec.checkpoint_every = 2;
+    let id = c.submit(&spec).expect("submit accepted");
+    let result = wait_completed(&mut c, id, 120);
+    assert_eq!(result.id, id);
+    assert_eq!(result.steps, 4); // 16 samples / batch 4 × 1 epoch
+    assert_identical(&result, &reference_run(&spec));
+
+    // metrics: uptime, state gauges, per-job live vs predicted counters
+    let text = c.metrics().expect("metrics");
+    assert!(text.contains("glyph_uptime_seconds"), "{text}");
+    assert!(text.contains("glyph_jobs{state=\"completed\"} 1"), "{text}");
+    assert!(
+        text.contains(&format!("glyph_job_steps{{job=\"{id}\",tenant=\"smoke\"}} 4")),
+        "{text}"
+    );
+    assert!(text.contains("kind=\"predicted\""), "{text}");
+    assert!(text.contains("glyph_job_op_drift"), "{text}");
+
+    // request-level failures come back as protocol errors, not hangups
+    assert!(matches!(c.status(9999), Err(ClientError::Server(_))));
+    let mut bad = spec.clone();
+    bad.dims = vec![16];
+    assert!(matches!(c.submit(&bad), Err(ClientError::Server(_))));
+
+    c.shutdown().expect("graceful shutdown");
+    let status = child.wait().expect("server exits");
+    assert!(status.success(), "server exit status: {status:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kill_dash_nine_mid_epoch_resumes_byte_identically() {
+    let mut spec = JobSpec::small_clear("crash", 0xc0de);
+    spec.samples = 40;
+    spec.epochs = 2; // 20 total steps
+    spec.checkpoint_every = 3;
+
+    let dir = temp_dir("kill9");
+    // Server A paces steps so the kill reliably lands mid-run.
+    let (mut a, addr_a) = spawn_server(&dir, 40);
+    let mut c = client(addr_a);
+    let id = c.submit(&spec).expect("submit accepted");
+
+    // Wait until at least one checkpoint is on disk, then SIGKILL — no
+    // drain, no flush, exactly the crash the checkpoint format is for.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = c.status(id).expect("status while running");
+        if st.checkpoints >= 1 && st.step < st.total_steps {
+            break;
+        }
+        assert!(
+            st.state == JobState::Queued || st.state == JobState::Running,
+            "job ended before the kill: {:?}",
+            st.state
+        );
+        assert!(Instant::now() < deadline, "no checkpoint within 60s");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    a.kill().expect("kill -9 server A");
+    let _ = a.wait();
+
+    // Server B on the same directory: startup recovery must find the spec,
+    // re-enqueue the job under the same id, and resume from the checkpoint.
+    let (mut b, addr_b) = spawn_server(&dir, 0);
+    let mut c = client(addr_b);
+    let result = wait_completed(&mut c, id, 120);
+    assert_eq!(result.id, id);
+    assert!(result.resumes >= 1, "recovered run must report its resume");
+    assert_identical(&result, &reference_run(&spec));
+
+    // the metrics surface records the resume
+    let text = c.metrics().expect("metrics");
+    assert!(
+        text.contains(&format!("glyph_job_resumes{{job=\"{id}\",tenant=\"crash\"}}")),
+        "{text}"
+    );
+
+    c.shutdown().expect("graceful shutdown");
+    let _ = b.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_cli_flags_error_descriptively() {
+    // `--epochs banana` used to silently fall back to the default; it must
+    // now fail fast with the offending flag and value named.
+    let out = Command::new(BIN)
+        .args(["train-mlp", "--backend", "clear", "--epochs", "banana"])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bad --epochs value \"banana\""), "stderr: {err}");
+
+    // flag present, value missing
+    let out = Command::new(BIN)
+        .args(["train-mlp", "--backend", "clear", "--samples"])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--samples requires a value"), "stderr: {err}");
+
+    // structurally bad dims are rejected before any network/keys are built
+    let out = Command::new(BIN)
+        .args(["submit", "--dims", "16,0,4"])
+        .output()
+        .expect("binary runs");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--dims"), "stderr: {err}");
+}

@@ -1,0 +1,351 @@
+//! Wire-format conformance (PR 7): every [`WireCodec`] type must round-trip
+//! bit-identically, reject truncated/corrupted/foreign/future-versioned
+//! bytes with a descriptive [`WireError`] (never a panic), and keep its
+//! byte layout pinned by the golden fixture in `tests/data/wire_golden.hex`
+//! — any unintentional format drift breaks CI loudly.
+
+use glyph::bgv::ciphertext::BgvCiphertext;
+use glyph::bgv::params::BgvParams;
+use glyph::coordinator::metrics::OpSnapshot;
+use glyph::math::GlyphRng;
+use glyph::nn::backend::{ClearCt, Codec, Ct};
+use glyph::nn::engine::{ClientKeys, EngineProfile, FheState, GlyphEngine};
+use glyph::serve::job::{compiled_plan, weights_digest};
+use glyph::serve::{JobBackend, JobResult, JobSpec, JobState, JobStatus, Request, Response};
+use glyph::tfhe::lwe::LweCiphertext;
+use glyph::tfhe::params::TfheParams;
+use glyph::train::{GlyphMlp, MlpConfig};
+use glyph::wire::{fnv1a64, Checkpoint, WireCodec, WireError, CHECKSUM_LEN, HEADER_LEN};
+
+fn to_hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+fn from_hex(s: &str) -> Vec<u8> {
+    (0..s.len() / 2).map(|i| u8::from_str_radix(&s[2 * i..2 * i + 2], 16).unwrap()).collect()
+}
+
+/// Round-trip `v` through its wire frame and require bit identity on
+/// re-encode (the strongest equality the codecs promise: decode followed by
+/// encode reproduces the exact input bytes).
+fn assert_reencode<T: WireCodec>(v: &T, ctx: &T::Ctx, what: &str) -> T {
+    let bytes = v.to_wire();
+    let back = T::from_wire(&bytes, ctx).unwrap_or_else(|e| panic!("{what}: decode failed: {e}"));
+    assert_eq!(back.to_wire(), bytes, "{what}: re-encode is not bit-identical");
+    back
+}
+
+/// Overwrite one byte and refresh the trailing checksum, so the tampered
+/// field — not the checksum — is what decode trips over.
+fn patched(mut bytes: Vec<u8>, idx: usize, val: u8) -> Vec<u8> {
+    bytes[idx] = val;
+    let at = bytes.len() - CHECKSUM_LEN;
+    let sum = fnv1a64(&bytes[..at]);
+    bytes[at..].copy_from_slice(&sum.to_le_bytes());
+    bytes
+}
+
+fn sample_spec() -> JobSpec {
+    JobSpec::small_clear("golden", 7)
+}
+
+fn sample_status() -> JobStatus {
+    JobStatus {
+        id: 3,
+        tenant: "acme".into(),
+        state: JobState::Running,
+        epoch: 1,
+        step: 9,
+        total_steps: 16,
+        checkpoints: 2,
+        resumes: 1,
+        live_ops: OpSnapshot { mult_cc: 40, add_cc: 41, relin: 5, ..Default::default() },
+        predicted_ops: OpSnapshot { mult_cc: 40, add_cc: 41, ..Default::default() },
+        message: String::new(),
+    }
+}
+
+fn sample_result() -> JobResult {
+    JobResult {
+        id: 3,
+        steps: 16,
+        seconds: 1.25,
+        accuracy: 0.5,
+        ops: OpSnapshot { mult_cc: 640, ..Default::default() },
+        weights_digest: 0xdead_beef_cafe_f00d,
+        logits_digest: 0x0123_4567_89ab_cdef,
+        resumes: 1,
+    }
+}
+
+#[test]
+fn self_contained_types_roundtrip_bit_identically() {
+    let bgv = BgvParams { n: 8, primes: vec![97, 193], t: 16, sigma: 3.2, prime_align: 2 };
+    let back = assert_reencode(&bgv, &(), "BgvParams");
+    assert_eq!((back.n, back.primes, back.t), (8, vec![97, 193], 16));
+    assert_reencode(&BgvParams::test_params(), &(), "BgvParams::test_params");
+
+    let back = assert_reencode(&TfheParams::test_params(), &(), "TfheParams");
+    assert_eq!((back.n, back.big_n), (64, 512));
+    assert_reencode(&TfheParams::default_params(), &(), "TfheParams::default_params");
+
+    let snap = OpSnapshot { mult_cc: 1, repack_lanes: 13, ..Default::default() };
+    assert_eq!(assert_reencode(&snap, &(), "OpSnapshot"), snap);
+
+    let rng = GlyphRng::from_state([1, 2, 3, u64::MAX]);
+    let back = assert_reencode(&rng, &(), "GlyphRng");
+    assert_eq!(back.state(), rng.state());
+
+    let ct = ClearCt { n: 8, t: 256, coeffs: vec![0, 1, 2, 255] };
+    assert_eq!(assert_reencode(&ct, &(), "ClearCt"), ct);
+
+    let lwe = LweCiphertext { a: vec![1, 2, 3], b: 0xdead_beef };
+    let back = assert_reencode(&lwe, &(), "LweCiphertext");
+    assert_eq!((back.a, back.b), (vec![1, 2, 3], 0xdead_beef));
+
+    assert_eq!(assert_reencode(&sample_spec(), &(), "JobSpec"), sample_spec());
+    assert_reencode(&sample_status(), &(), "JobStatus");
+    assert_eq!(assert_reencode(&sample_result(), &(), "JobResult"), sample_result());
+
+    // a compiled plan (the checkpoint binds to its hash)
+    let plan = compiled_plan(&sample_spec()).expect("spec compiles");
+    assert!(!plan.steps.is_empty());
+    assert_reencode(&plan, &(), "Plan");
+
+    // every protocol message variant
+    let requests = [
+        Request::Submit(sample_spec()),
+        Request::Status { id: 1 },
+        Request::Cancel { id: 2 },
+        Request::FetchResult { id: 3 },
+        Request::Metrics,
+        Request::Ping,
+        Request::Shutdown,
+    ];
+    for req in &requests {
+        assert_reencode(req, &(), "Request");
+    }
+    let responses = [
+        Response::Submitted { id: 1 },
+        Response::Status(sample_status()),
+        Response::Cancelled { id: 2 },
+        Response::Result(sample_result()),
+        Response::Metrics("glyph_uptime_seconds 1\n".into()),
+        Response::Pong,
+        Response::ShuttingDown,
+        Response::Error("unknown job 9".into()),
+    ];
+    for resp in &responses {
+        assert_reencode(resp, &(), "Response");
+    }
+}
+
+#[test]
+fn key_material_and_ciphertexts_roundtrip() {
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 20260807);
+
+    // ClientKeys are structural: coefficients + RNG cursor survive verbatim.
+    let ck_back = assert_reencode(&client, &(), "ClientKeys");
+    assert_eq!(ck_back.bgv_sk.s_coeffs, client.bgv_sk.s_coeffs);
+    assert_eq!(ck_back.rng.state(), client.rng.state());
+
+    // FheState is regenerative: params + seed + cursors rebuild the exact
+    // evaluator, including the derived client key.
+    let state = engine.fhe();
+    let state_back = assert_reencode(state, &(), "FheState");
+    assert_eq!(state_back.seed, state.seed);
+    assert_eq!(state_back.auth.rng_state(), state.auth.rng_state());
+    assert_eq!(state_back.auth.refresh_count(), state.auth.refresh_count());
+    assert_eq!(
+        state_back.client_keys().bgv_sk.s_coeffs,
+        state.client_keys().bgv_sk.s_coeffs,
+        "regenerated secret key must match"
+    );
+
+    // A real encrypted ciphertext survives both as a bare BgvCiphertext
+    // (BgvContext ctx) and as a Ct (GlyphEngine ctx), and still decrypts.
+    let values = [17i64, -9];
+    let ct = client.encrypt_batch(&values, 0);
+    let bgv_back = assert_reencode(ct.fhe(), engine.fhe().ctx.as_ref(), "BgvCiphertext");
+    assert_eq!(
+        client.decrypt_batch(&Ct::Fhe(bgv_back), 2, 0),
+        values.to_vec(),
+        "decoded ciphertext must decrypt to the original batch"
+    );
+    let ct_back = assert_reencode(&ct, &engine, "Ct::Fhe");
+    assert_eq!(client.decrypt_batch(&ct_back, 2, 0), values.to_vec());
+
+    // Clear-backend Ct under a clear engine.
+    let (clear_engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+    let cct = codec.encrypt_batch(&values, 0);
+    let cct_back = assert_reencode(&cct, &clear_engine, "Ct::Clear");
+    assert_eq!(codec.decrypt_batch(&cct_back, 2, 0), values.to_vec());
+
+    // An FHE ciphertext must not decode on a clear-backend engine.
+    let err = Ct::from_wire(&ct.to_wire(), &clear_engine).unwrap_err();
+    assert!(matches!(err, WireError::Malformed(_)), "got {err:?}");
+}
+
+#[test]
+fn checkpoint_roundtrip_restores_byte_identical_weights() {
+    let config = || MlpConfig::for_dims(vec![6, 5, 3], EngineProfile::Test.frac_bits(), 3);
+    let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+    let mut rng = GlyphRng::new(11);
+    let mlp = GlyphMlp::new_random(config(), &mut codec, &mut rng, &engine).unwrap();
+    engine.counter.bump(&engine.counter.mult_cc, 123);
+
+    let ckpt = Checkpoint::capture(&mlp.net, &engine, 77, 1, 9, 0.5, None).unwrap();
+    let back = assert_reencode(&ckpt, &engine, "Checkpoint");
+    assert_eq!((back.job_seed, back.epoch, back.step), (77, 1, 9));
+    assert_eq!(back.ops.mult_cc, 123);
+
+    // Restore into a *differently initialized* net of the same shape: the
+    // weights and counters must come back byte-identical to the source.
+    let (engine2, mut codec2) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+    let mut rng2 = GlyphRng::new(999);
+    let mut mlp2 = GlyphMlp::new_random(config(), &mut codec2, &mut rng2, &engine2).unwrap();
+    assert_ne!(weights_digest(&mlp2.net), weights_digest(&mlp.net));
+    back.restore(&mut mlp2.net, &engine2).unwrap();
+    assert_eq!(weights_digest(&mlp2.net), weights_digest(&mlp.net));
+    assert_eq!(engine2.counter.snapshot(), engine.counter.snapshot());
+
+    // A checkpoint refuses to restore under a different compiled plan.
+    let other = MlpConfig::for_dims(vec![6, 4, 3], EngineProfile::Test.frac_bits(), 3);
+    let mut rng3 = GlyphRng::new(11);
+    let mut mlp3 = GlyphMlp::new_random(other, &mut codec2, &mut rng3, &engine2).unwrap();
+    assert!(back.restore(&mut mlp3.net, &engine2).is_err());
+}
+
+#[test]
+fn damaged_frames_error_descriptively_never_panic() {
+    let bytes = sample_spec().to_wire();
+
+    // truncation at every prefix length
+    for cut in 0..bytes.len() {
+        assert!(JobSpec::from_wire(&bytes[..cut], &()).is_err(), "cut at {cut} must error");
+    }
+
+    // foreign magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    assert!(matches!(JobSpec::from_wire(&bad, &()), Err(WireError::BadMagic { .. })));
+
+    // a frame of another type
+    assert!(matches!(
+        JobResult::from_wire(&bytes, &()),
+        Err(WireError::WrongTag { expected: _, found: _ })
+    ));
+
+    // future format version (checksum refreshed so the version check fires)
+    let vbump = patched(bytes.clone(), 8, 0x77);
+    assert!(matches!(
+        JobSpec::from_wire(&vbump, &()),
+        Err(WireError::UnsupportedVersion { found: 0x77, .. })
+    ));
+
+    // trailing junk
+    let mut long = bytes.clone();
+    long.push(0);
+    assert!(matches!(JobSpec::from_wire(&long, &()), Err(WireError::BadLength { .. })));
+
+    // single flipped body bit → checksum catches it
+    let mut corrupt = bytes.clone();
+    corrupt[HEADER_LEN + 3] ^= 0x10;
+    assert!(matches!(JobSpec::from_wire(&corrupt, &()), Err(WireError::ChecksumMismatch { .. })));
+
+    // structurally valid frame, semantically bad contents
+    let ping = Request::Ping.to_wire();
+    let bad_variant = patched(ping, HEADER_LEN, 99);
+    assert!(matches!(Request::from_wire(&bad_variant, &()), Err(WireError::Malformed(_))));
+
+    let bad_ct = ClearCt { n: 8, t: 16, coeffs: vec![0, 300] };
+    assert!(matches!(ClearCt::from_wire(&bad_ct.to_wire(), &()), Err(WireError::Malformed(_))));
+}
+
+/// The values pinned by `tests/data/wire_golden.hex`, in file order.
+fn golden_values() -> Vec<(&'static str, Vec<u8>)> {
+    vec![
+        (
+            "bgv_params",
+            BgvParams { n: 8, primes: vec![97, 193], t: 16, sigma: 3.2, prime_align: 2 }.to_wire(),
+        ),
+        ("tfhe_params", TfheParams::test_params().to_wire()),
+        (
+            "op_snapshot",
+            OpSnapshot::from_fields(
+                OpSnapshot::default().fields().iter().zip(1u64..).map(|(&(n, _), v)| (n, v)),
+            )
+            .unwrap()
+            .to_wire(),
+        ),
+        (
+            "glyph_rng",
+            GlyphRng::from_state([
+                0x0123_4567_89ab_cdef,
+                0x1122_3344_5566_7788,
+                0xdead_beef_cafe_babe,
+                0x0f1e_2d3c_4b5a_6978,
+            ])
+            .to_wire(),
+        ),
+        ("clear_ct", ClearCt { n: 8, t: 256, coeffs: vec![0, 1, 2, 255] }.to_wire()),
+        ("lwe_ct", LweCiphertext { a: vec![1, 2, 3], b: 0xdead_beef }.to_wire()),
+        ("job_spec", sample_spec().to_wire()),
+        ("request_ping", Request::Ping.to_wire()),
+        ("response_pong", Response::Pong.to_wire()),
+    ]
+}
+
+#[test]
+fn golden_fixture_locks_the_byte_format() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/wire_golden.hex");
+    let live = golden_values();
+
+    if std::env::var("GLYPH_BLESS_GOLDEN").as_deref() == Ok("1") {
+        let mut out = String::from(
+            "# Golden wire-format fixtures: `<name> <hex of WireCodec::to_wire()>`.\n\
+             # Any byte drift here is a format break; bump the frame VERSION and\n\
+             # re-bless with GLYPH_BLESS_GOLDEN=1 cargo test --test wire_roundtrip.\n",
+        );
+        for (name, bytes) in &live {
+            out.push_str(&format!("{name} {}\n", to_hex(bytes)));
+        }
+        std::fs::write(path, out).unwrap();
+        eprintln!("[blessed {path}]");
+        return;
+    }
+
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("missing golden fixture {path}: {e}"));
+    let mut pinned = std::collections::HashMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, hex) = line.split_once(' ').expect("fixture line is `<name> <hex>`");
+        pinned.insert(name.to_string(), hex.to_string());
+    }
+    assert_eq!(pinned.len(), live.len(), "fixture entry count drifted");
+    for (name, bytes) in &live {
+        let want = pinned.get(*name).unwrap_or_else(|| panic!("fixture has no entry {name}"));
+        let got = to_hex(bytes);
+        assert_eq!(
+            &got, want,
+            "wire format of {name} drifted from the golden fixture — if intentional, \
+             bump the frame VERSION and re-bless with GLYPH_BLESS_GOLDEN=1"
+        );
+        // and the pinned bytes still decode (backward readability)
+        match *name {
+            "job_spec" => {
+                assert_eq!(JobSpec::from_wire(&from_hex(want), &()).unwrap(), sample_spec());
+            }
+            "op_snapshot" => {
+                let s = OpSnapshot::from_wire(&from_hex(want), &()).unwrap();
+                assert_eq!(s.mult_cc, 1);
+                assert_eq!(s.repack_lanes, 13);
+            }
+            _ => {}
+        }
+    }
+}
