@@ -1,0 +1,166 @@
+//! Cross-sample SIMD minibatch throughput: one encrypted `train_step` over
+//! a `PackedLayout` minibatch (batch × feature slot blocks, one MAC per
+//! weight block, one extract fan-out per value column) versus the
+//! per-sample baseline that steps the same network one sample at a time.
+//! Emits `bench_out/BENCH_packed_train.json` with samples/sec for both
+//! paths and the packed speedup, plus clear-backend epoch accuracies
+//! demonstrating the equal-accuracy floor (the packed path is
+//! byte-identical to the per-sample path — `tests/backend_equivalence.rs`
+//! — so the floors cannot differ; the bench records them anyway).
+//! `GLYPH_BENCH_FULL=1` switches to the production-shaped crypto profile.
+
+use glyph::bench_util::{full_profile, report_json_with_counters, time_op, BenchRecord};
+use glyph::coordinator::max_threads;
+use glyph::math::GlyphRng;
+use glyph::nn::backend::Codec;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::nn::network::{Network, NetworkBuilder};
+use glyph::nn::tensor::{EncTensor, PackOrder};
+use glyph::train::Trainer;
+
+const IN_DIM: usize = 8;
+const HIDDEN: usize = 6;
+const CLASSES: usize = 3;
+const BATCH: usize = 8;
+
+fn build_net(engine: &GlyphEngine, codec: &mut dyn Codec, seed: u64) -> Network {
+    let shift = engine.frac_bits().min(8);
+    let err_shift = shift.saturating_sub(1).max(1);
+    NetworkBuilder::input_vec(IN_DIM)
+        .fc(HIDDEN)
+        .relu(shift, err_shift)
+        .fc(CLASSES)
+        .softmax(3, err_shift)
+        .grad_shift(shift)
+        .build(codec, &mut GlyphRng::new(seed), engine)
+        .expect("valid bench network")
+}
+
+/// Deterministic minibatch columns: feature `i`, sample `b`.
+fn x_cols(batch: usize) -> Vec<Vec<i64>> {
+    (0..IN_DIM)
+        .map(|i| (0..batch).map(|b| ((i * 7 + b * 3) % 19) as i64 - 9).collect())
+        .collect()
+}
+
+fn labels(codec: &mut dyn Codec, batch: usize) -> EncTensor {
+    let cts = (0..CLASSES)
+        .map(|k| {
+            let mut v: Vec<i64> =
+                (0..batch).map(|b| if b % CLASSES == k { 127 } else { 0 }).collect();
+            v.reverse();
+            codec.encrypt_batch(&v, 0)
+        })
+        .collect();
+    EncTensor::new(cts, vec![CLASSES], PackOrder::Reversed, 0)
+}
+
+/// Seconds per train_step on a per-scalar (coefficient-batched) engine.
+fn time_per_scalar(profile: EngineProfile, batch: usize, iters: usize) -> f64 {
+    let (engine, mut client) = GlyphEngine::setup(profile, batch, 20260808);
+    let mut net = build_net(&engine, &mut client, 3);
+    let cts = x_cols(batch).iter().map(|v| client.encrypt_batch(v, 0)).collect();
+    let x = EncTensor::new(cts, vec![IN_DIM], PackOrder::Forward, 0);
+    let lab = labels(&mut client, batch);
+    net.train_step(&x, &lab, &engine); // warm-up
+    time_op(iters, || net.train_step(&x, &lab, &engine))
+}
+
+/// Seconds per train_step on the packed cross-sample engine.
+fn time_packed(profile: EngineProfile, batch: usize, iters: usize) -> f64 {
+    let (engine, mut client) = GlyphEngine::setup_packed(profile, batch, 20260808);
+    let layout = engine.packed_layout().expect("packed engine").clone();
+    let mut net = build_net(&engine, &mut client, 3);
+    let cts = layout
+        .pack_columns(&x_cols(batch), engine.params().n)
+        .iter()
+        .map(|coeffs| client.encrypt_coeffs(coeffs, 0))
+        .collect();
+    let x = EncTensor::packed(cts, vec![IN_DIM], PackOrder::Forward, 0, layout);
+    let lab = labels(&mut client, batch);
+    net.train_step(&x, &lab, &engine); // warm-up
+    time_op(iters, || net.train_step(&x, &lab, &engine))
+}
+
+/// Clear-backend epoch accuracy (permille) at MNIST-like scale — packed and
+/// per-scalar engines must land on the exact same floor.
+fn clear_accuracy(packed: bool) -> u64 {
+    let batch = BATCH;
+    let (engine, mut codec) = if packed {
+        GlyphEngine::setup_clear_packed(EngineProfile::Default, batch)
+    } else {
+        GlyphEngine::setup_clear(EngineProfile::Default, batch)
+    };
+    let net = NetworkBuilder::input_vec(196)
+        .fc(32)
+        .relu(8, 8)
+        .fc(10)
+        .softmax(8, 8)
+        .grad_shift(12)
+        .build(&mut codec, &mut GlyphRng::new(7), &engine)
+        .expect("accuracy net");
+    let mut trainer = Trainer::new(net, 10);
+    let train = glyph::data::synthetic_digits(240, 5, "packed-bench-train");
+    let test = glyph::data::synthetic_digits(80, 6, "packed-bench-test");
+    trainer.train_epoch(&train, &engine, &mut codec).expect("epoch runs");
+    let acc = trainer.evaluate(&test, 80, &engine, &mut codec).expect("eval runs");
+    (acc * 1000.0).round() as u64
+}
+
+fn main() {
+    let profile = if full_profile() { EngineProfile::Default } else { EngineProfile::Test };
+    let iters = if full_profile() { 1 } else { 2 };
+    eprintln!(
+        "packed_train bench: {IN_DIM}-{HIDDEN}-{CLASSES} MLP, batch {BATCH}, {} profile",
+        if full_profile() { "full" } else { "test" }
+    );
+
+    // per-sample baseline: one sample per step (batch-1 keys)
+    let secs_single = time_per_scalar(profile, 1, iters);
+    // per-scalar coefficient batching at the same width (for context)
+    let secs_coeff = time_per_scalar(profile, BATCH, iters);
+    // the packed cross-sample path
+    let secs_packed = time_packed(profile, BATCH, iters);
+
+    let sps_single = 1.0 / secs_single;
+    let sps_coeff = BATCH as f64 / secs_coeff;
+    let sps_packed = BATCH as f64 / secs_packed;
+    let speedup = sps_packed / sps_single;
+
+    let acc_base = clear_accuracy(false);
+    let acc_packed = clear_accuracy(true);
+    assert_eq!(
+        acc_packed, acc_base,
+        "packed and per-sample accuracy floors must be identical (byte-identical training)"
+    );
+
+    let threads = max_threads();
+    let records = vec![
+        // secs_per_op = seconds per SAMPLE, so ops_per_sec = samples/sec
+        BenchRecord::new("per_sample_baseline", secs_single, threads),
+        BenchRecord::new("per_scalar_coeff_batch8", secs_coeff / BATCH as f64, threads),
+        BenchRecord::new("packed_batch8", secs_packed / BATCH as f64, threads),
+        BenchRecord::new("packed_step", secs_packed, threads),
+    ];
+    println!(
+        "packed_train: baseline {:.2} samples/sec  coeff-batch {:.2}  packed {:.2}  \
+         speedup {speedup:.2}x  accuracy floor {:.1}% (both paths)",
+        sps_single,
+        sps_coeff,
+        sps_packed,
+        acc_base as f64 / 10.0
+    );
+    if speedup < 4.0 {
+        eprintln!("warning: packed speedup {speedup:.2}x below the 4x target at batch {BATCH}");
+    }
+    report_json_with_counters(
+        "packed_train",
+        &records,
+        &[
+            ("batch", BATCH as u64),
+            ("speedup_pct", (speedup * 100.0).round() as u64),
+            ("accuracy_baseline_permille", acc_base),
+            ("accuracy_packed_permille", acc_packed),
+        ],
+    );
+}

@@ -24,6 +24,12 @@ pub enum EncodingError {
     ValueOutOfRange { index: usize, value: i64, half: i64 },
     /// A decode asked for more lanes than the polynomial holds.
     DecodeTooWide { count: usize, capacity: usize },
+    /// A packed (strided) layout whose feature lanes or interleaved batch
+    /// overrun the ring. `try_encode_batch` only ever checked the *total*
+    /// slot count; a strided layout must additionally keep every feature
+    /// lane (`features · stride` slots) inside the ring and every sample
+    /// inside its feature's stride window.
+    StrideOverrun { features: usize, stride: usize, batch: usize, capacity: usize },
 }
 
 impl fmt::Display for EncodingError {
@@ -41,6 +47,13 @@ impl fmt::Display for EncodingError {
             EncodingError::DecodeTooWide { count, capacity } => write!(
                 f,
                 "decode of {count} lanes exceeds the {capacity} coefficients the plaintext holds"
+            ),
+            EncodingError::StrideOverrun { features, stride, batch, capacity } => write!(
+                f,
+                "packed layout of {features} feature lanes × {batch} samples at slot stride \
+                 {stride} overruns the ring: it needs {} of {capacity} coefficient slots and the \
+                 batch must fit within one stride window",
+                features * stride
             ),
         }
     }
@@ -97,6 +110,76 @@ impl Plaintext {
     /// [`Self::try_decode_batch`], panicking with the descriptive error.
     pub fn decode_batch(&self, count: usize) -> Vec<i64> {
         self.try_decode_batch(count).unwrap_or_else(|e| panic!("decode_batch: {e}"))
+    }
+
+    /// Pack per-feature sample columns at a fixed slot stride: feature `j`,
+    /// sample `b` lands at coefficient `j·stride + b` (the cross-sample
+    /// SIMD layout; `PackedLayout` in `nn::tensor`). Unlike
+    /// [`Self::try_encode_batch`] — which only validates against the
+    /// *total* slot count — this checks the strided geometry: every
+    /// feature lane must fit inside the ring (`features · stride ≤ n`)
+    /// and the interleaved batch inside one stride window
+    /// (`batch ≤ stride`), rejecting overruns with a descriptive
+    /// [`EncodingError::StrideOverrun`] instead of silently folding lanes
+    /// together.
+    pub fn try_encode_strided(
+        cols: &[Vec<i64>],
+        stride: usize,
+        params: &BgvParams,
+    ) -> Result<Self, EncodingError> {
+        let features = cols.len();
+        let batch = cols.first().map_or(0, Vec::len);
+        if batch > stride || features * stride > params.n {
+            return Err(EncodingError::StrideOverrun {
+                features,
+                stride,
+                batch,
+                capacity: params.n,
+            });
+        }
+        let half = (params.t / 2) as i64;
+        let mut coeffs = vec![0i64; params.n];
+        for (j, col) in cols.iter().enumerate() {
+            assert_eq!(col.len(), batch, "every feature column spans the same batch");
+            for (b, &v) in col.iter().enumerate() {
+                if v < -half || v > half {
+                    return Err(EncodingError::ValueOutOfRange {
+                        index: j * batch + b,
+                        value: v,
+                        half,
+                    });
+                }
+                coeffs[j * stride + b] = v;
+            }
+        }
+        Ok(Plaintext { coeffs, t: params.t })
+    }
+
+    /// [`Self::try_encode_strided`], panicking with the descriptive error.
+    pub fn encode_strided(cols: &[Vec<i64>], stride: usize, params: &BgvParams) -> Self {
+        Self::try_encode_strided(cols, stride, params)
+            .unwrap_or_else(|e| panic!("encode_strided: {e}"))
+    }
+
+    /// Read `features` per-feature sample columns back out of a strided
+    /// packing (the inverse of [`Self::try_encode_strided`]).
+    pub fn try_decode_strided(
+        &self,
+        stride: usize,
+        features: usize,
+        batch: usize,
+    ) -> Result<Vec<Vec<i64>>, EncodingError> {
+        if batch > stride || features * stride > self.coeffs.len() {
+            return Err(EncodingError::StrideOverrun {
+                features,
+                stride,
+                batch,
+                capacity: self.coeffs.len(),
+            });
+        }
+        Ok((0..features)
+            .map(|j| self.coeffs[j * stride..j * stride + batch].to_vec())
+            .collect())
     }
 
     /// Centered reduction of an arbitrary integer into the plaintext ring.
@@ -211,6 +294,63 @@ mod tests {
         let err = pt.try_decode_batch(p.n + 1).err().expect("must reject");
         assert_eq!(err, EncodingError::DecodeTooWide { count: p.n + 1, capacity: p.n });
         assert!(err.to_string().contains(&(p.n + 1).to_string()));
+    }
+
+    #[test]
+    fn strided_encode_decode_roundtrip() {
+        let p = BgvParams::test_params();
+        let cols = vec![vec![1, -2, 3], vec![-4, 5, -6], vec![7, 8, 9]];
+        let pt = Plaintext::encode_strided(&cols, 8, &p);
+        // feature j, sample b at coefficient j·8 + b; everything else zero
+        assert_eq!(&pt.coeffs[..3], &[1, -2, 3]);
+        assert_eq!(&pt.coeffs[8..11], &[-4, 5, -6]);
+        assert_eq!(&pt.coeffs[16..19], &[7, 8, 9]);
+        assert_eq!(pt.coeffs.iter().filter(|&&c| c != 0).count(), 9);
+        assert_eq!(pt.try_decode_strided(8, 3, 3).unwrap(), cols);
+    }
+
+    #[test]
+    fn strided_encode_boundary_exactly_full_and_one_over() {
+        let p = BgvParams::test_params();
+        let stride = 8;
+        let full = p.n / stride;
+        // exactly full: n/stride feature lanes, batch = stride — accepted
+        let cols = vec![vec![1i64; stride]; full];
+        let pt = Plaintext::try_encode_strided(&cols, stride, &p).expect("exactly full fits");
+        assert_eq!(pt.try_decode_strided(stride, full, stride).unwrap(), cols);
+
+        // one feature lane over: stride × features overruns the ring
+        let cols = vec![vec![1i64; stride]; full + 1];
+        let err = Plaintext::try_encode_strided(&cols, stride, &p).err().expect("must reject");
+        assert_eq!(
+            err,
+            EncodingError::StrideOverrun {
+                features: full + 1,
+                stride,
+                batch: stride,
+                capacity: p.n
+            }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("overruns") && msg.contains(&p.n.to_string()), "{msg}");
+
+        // one sample over the stride window: lanes would fold together
+        let cols = vec![vec![1i64; stride + 1]; 2];
+        let err = Plaintext::try_encode_strided(&cols, stride, &p).err().expect("must reject");
+        assert!(matches!(err, EncodingError::StrideOverrun { batch, .. } if batch == stride + 1));
+
+        // decode validates the same geometry
+        let pt = Plaintext::encode_batch(&[1, 2], &p);
+        assert!(pt.try_decode_strided(stride, full + 1, 1).is_err());
+    }
+
+    #[test]
+    fn strided_encode_range_check_reports_flat_index() {
+        let p = BgvParams::test_params();
+        let half = (p.t / 2) as i64;
+        let cols = vec![vec![0, 0], vec![0, half + 1]];
+        let err = Plaintext::try_encode_strided(&cols, 4, &p).err().expect("must reject");
+        assert_eq!(err, EncodingError::ValueOutOfRange { index: 3, value: half + 1, half });
     }
 
     #[test]

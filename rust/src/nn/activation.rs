@@ -14,11 +14,11 @@
 use super::backend::Bit;
 use super::engine::GlyphEngine;
 use super::layer::{
-    relu_error_ops, relu_forward_ops, softmax_error_ops, softmax_forward_ops, Layer,
-    LayerPlanEntry, LayerState,
+    relu_error_ops, relu_error_packed_ops, relu_forward_ops, relu_forward_packed_ops,
+    softmax_error_ops, softmax_forward_ops, Layer, LayerPlanEntry, LayerState,
 };
 use super::loss::quadratic_loss_delta;
-use super::tensor::{EncTensor, PackOrder};
+use super::tensor::{EncTensor, PackOrder, PackedLayout};
 use crate::coordinator::executor::GlyphPool;
 use crate::coordinator::scheduler::LayerKind;
 use crate::switch::extract::bit_position;
@@ -27,7 +27,10 @@ use crate::tfhe::TestPoly;
 
 /// Sign bits retained by the forward pass for iReLU.
 pub struct ReluState {
-    /// sign bit (u[n−1]) per ciphertext per lane, gate encoding.
+    /// sign bit (u[n−1]) per ciphertext per lane, gate encoding. Under the
+    /// per-scalar layout that is [neuron][sample]; the packed flat pass
+    /// keeps the same [neuron][sample] indexing so the backward block walk
+    /// can look a lane's sign up by its global feature index.
     pub signs: Vec<Vec<Bit>>,
 }
 
@@ -161,7 +164,10 @@ pub fn relu_layer(
     let frac = engine.frac_bits();
     assert!(out_shift <= frac, "out_shift {out_shift} exceeds frac {frac}");
     let pre_shift = frac - out_shift;
-    let in_positions = u.order.positions(engine.batch);
+    // packed MAC producers anchor their payload at `lane_base + b`
+    // (per-scalar producers keep lane_base 0, so this is the old path)
+    let in_positions: Vec<usize> =
+        u.order.positions(engine.batch).into_iter().map(|p| p + u.lane_base).collect();
     let out_positions = out_order.positions(engine.batch);
     // Algorithm 1 on every lane of the tensor in one pooled gate fan-out
     // (same per-lane jobs and sums as the per-ciphertext loop); the sign
@@ -192,13 +198,117 @@ pub fn irelu_layer(
 ) -> EncTensor {
     let frac = engine.frac_bits();
     let pre_shift = frac - out_shift;
-    let in_positions = delta.order.positions(engine.batch);
+    let in_positions: Vec<usize> =
+        delta.order.positions(engine.batch).into_iter().map(|p| p + delta.lane_base).collect();
     let out_positions = PackOrder::Reversed.positions(engine.batch);
     let flat_signs: Vec<&Bit> = state.signs.iter().flatten().collect();
     let outs =
         cross_boundary(engine, &delta.cts, &in_positions, &out_positions, pre_shift, |flat| {
             irelu_lanes(engine, &flat, &flat_signs)
         });
+    EncTensor::new(outs, delta.shape.clone(), PackOrder::Reversed, 0)
+}
+
+/// Packed flat ReLU: consumes the packed FC layer's per-neuron MAC outputs
+/// (batch at `lane_base + b`), runs the same Algorithm-1 gate pool as
+/// [`relu_layer`], then repacks the bootstrapped lanes into cross-sample
+/// SIMD blocks — ONE T2B group per [`PackedLayout`] block instead of one
+/// per neuron, which is where the batch amortization of the up-switch
+/// comes from. Counters mirror `relu_forward_packed_ops` exactly.
+pub fn relu_layer_packed(
+    engine: &GlyphEngine,
+    u: &EncTensor,
+    out_shift: u32,
+    layout: &PackedLayout,
+) -> (EncTensor, ReluState) {
+    assert!(!u.is_packed(), "packed ReLU consumes per-neuron MAC outputs, not blocks");
+    assert_eq!(u.order, PackOrder::Forward, "packed ReLU inputs pack forward");
+    let features = u.len();
+    let frac = engine.frac_bits();
+    assert!(out_shift <= frac, "out_shift {out_shift} exceeds frac {frac}");
+    let pre_shift = frac - out_shift;
+    // one down-switch fans out every neuron × sample lane
+    let in_positions = layout.lane_positions(PackOrder::Forward, u.lane_base);
+    let ct_refs: Vec<&super::backend::Ct> = u.cts.iter().collect();
+    let all_bits = engine.switch_down_many(&ct_refs, &in_positions, pre_shift);
+    let flat_bits: Vec<Vec<Bit>> = all_bits.into_iter().flatten().collect();
+    // Algorithm 1 over all lanes in one pooled fan-out; lane j·batch + b is
+    // neuron j, sample b
+    let (recomposed, flat_signs) = relu_lanes(engine, &flat_bits);
+    debug_assert_eq!(recomposed.len(), features * layout.batch);
+    // regroup the neuron-major lanes into per-block T2B groups: block B
+    // carries neurons B·F .. B·F+feats, whose lanes are contiguous in
+    // `recomposed`, at the block's forward payload grid
+    let batch = layout.batch;
+    let block_pos: Vec<Vec<usize>> = (0..layout.blocks(features))
+        .map(|block| {
+            layout.block_positions(PackOrder::Forward, layout.feats_in_block(features, block))
+        })
+        .collect();
+    let mut groups: Vec<(&[Bit], &[usize])> = Vec::with_capacity(block_pos.len());
+    let mut cursor = 0usize;
+    for pos in &block_pos {
+        groups.push((&recomposed[cursor..cursor + pos.len()], pos.as_slice()));
+        cursor += pos.len();
+    }
+    debug_assert_eq!(cursor, recomposed.len());
+    let outs = engine.switch_up_many(&groups);
+    // signs regroup per neuron ([neuron][sample]) by moving, not cloning
+    let mut it = flat_signs.into_iter();
+    let signs: Vec<Vec<Bit>> =
+        (0..features).map(|_| (&mut it).take(batch).collect()).collect();
+    (
+        EncTensor::packed(outs, u.shape.clone(), PackOrder::Forward, 0, layout.clone()),
+        ReluState { signs },
+    )
+}
+
+/// Packed flat iReLU: the FC error step delivers packed-*reversed* blocks,
+/// so one B2T per block extracts every feature × sample lane at once (two
+/// `switch_down_many` calls when the final block is partial — its payload
+/// grid differs); the Algorithm-2 masked lanes then regroup per neuron in
+/// reverse packing for the gradient convolution below. Counters mirror
+/// `relu_error_packed_ops` exactly.
+pub fn irelu_layer_packed(
+    engine: &GlyphEngine,
+    delta: &EncTensor,
+    state: &ReluState,
+    out_shift: u32,
+    layout: &PackedLayout,
+) -> EncTensor {
+    assert_eq!(delta.order, PackOrder::Reversed, "packed iReLU inputs pack reversed");
+    let features = delta.len();
+    let blocks = layout.blocks(features);
+    assert_eq!(delta.cts.len(), blocks, "block count must match the layout");
+    let batch = layout.batch;
+    let frac = engine.frac_bits();
+    let pre_shift = frac - out_shift;
+    // full blocks share one payload grid; a partial final block has its own
+    let last_feats = layout.feats_in_block(features, blocks - 1);
+    let full = if last_feats == layout.feats_per_ct { blocks } else { blocks - 1 };
+    let mut all_bits: Vec<Vec<Vec<Bit>>> = Vec::with_capacity(blocks);
+    if full > 0 {
+        let pos = layout.block_positions(PackOrder::Reversed, layout.feats_per_ct);
+        let refs: Vec<&super::backend::Ct> = delta.cts[..full].iter().collect();
+        all_bits.extend(engine.switch_down_many(&refs, &pos, pre_shift));
+    }
+    if full < blocks {
+        let pos = layout.block_positions(PackOrder::Reversed, last_feats);
+        all_bits.extend(engine.switch_down_many(&[&delta.cts[blocks - 1]], &pos, pre_shift));
+    }
+    // block B's lane k·batch + b is feature B·F + k, sample b — the same
+    // [neuron][sample] indexing the forward pass stored its signs under
+    let flat_bits: Vec<Vec<Bit>> = all_bits.into_iter().flatten().collect();
+    debug_assert_eq!(flat_bits.len(), features * batch);
+    debug_assert_eq!(state.signs.len(), features);
+    let sign_refs: Vec<&Bit> = state.signs.iter().flatten().collect();
+    let recomposed = irelu_lanes(engine, &flat_bits, &sign_refs);
+    // per-neuron reversed T2B groups: lane b of neuron j repacks at
+    // coefficient batch−1−b for the gradient trick below
+    let out_positions = PackOrder::Reversed.positions(batch);
+    let groups: Vec<(&[Bit], &[usize])> =
+        recomposed.chunks(batch).map(|chunk| (chunk, out_positions.as_slice())).collect();
+    let outs = engine.switch_up_many(&groups);
     EncTensor::new(outs, delta.shape.clone(), PackOrder::Reversed, 0)
 }
 
@@ -224,10 +334,43 @@ impl Layer for ReluLayer {
             forward: relu_forward_ops(cts, batch),
             error: Some(relu_error_ops(cts, batch)),
             gradient: None,
+            out_packed: false,
+        }
+    }
+
+    fn plan_entry_packed(
+        &self,
+        in_shape: &[usize],
+        layout: &PackedLayout,
+        in_packed: bool,
+    ) -> LayerPlanEntry {
+        assert!(!in_packed, "ReLU consumes per-neuron (or per-pixel) MAC outputs");
+        if in_shape.len() == 1 {
+            // flat head ReLU: per-neuron inputs, cross-sample SIMD blocks out
+            let f = in_shape[0];
+            LayerPlanEntry {
+                kind: LayerKind::Relu,
+                out_shape: in_shape.to_vec(),
+                forward: relu_forward_packed_ops(f, layout),
+                error: Some(relu_error_packed_ops(f, layout)),
+                gradient: None,
+                out_packed: true,
+            }
+        } else {
+            // CHW feature-extractor ReLU: per-pixel tensors on both sides;
+            // the op counts are position-independent, so the per-scalar
+            // formulas hold verbatim
+            self.plan_entry(in_shape, layout.batch)
         }
     }
 
     fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        if let Some(layout) = engine.packed_layout() {
+            if x.shape.len() == 1 {
+                let (a, st) = relu_layer_packed(engine, x, self.act_shift, layout);
+                return (a, LayerState::Relu(st));
+            }
+        }
         let (a, st) = relu_layer(engine, x, self.act_shift, PackOrder::Forward);
         (a, LayerState::Relu(st))
     }
@@ -242,6 +385,9 @@ impl Layer for ReluLayer {
             LayerState::Relu(s) => s,
             _ => unreachable!("ReLU backward needs its forward sign state"),
         };
+        if let Some(layout) = delta.layout.as_ref() {
+            return irelu_layer_packed(engine, delta, st, self.err_shift, layout);
+        }
         irelu_layer(engine, delta, st, self.err_shift)
     }
 }
@@ -266,13 +412,28 @@ impl Layer for SoftmaxLayer {
             forward: softmax_forward_ops(cts, batch, self.unit.plan_gates_per_lane()),
             error: Some(softmax_error_ops(cts)),
             gradient: None,
+            out_packed: false,
         }
+    }
+
+    fn plan_entry_packed(
+        &self,
+        in_shape: &[usize],
+        layout: &PackedLayout,
+        in_packed: bool,
+    ) -> LayerPlanEntry {
+        // the packed FC head hands the softmax per-neuron logits (batch at
+        // strided payload lanes), so the per-scalar counts hold verbatim
+        assert!(!in_packed, "softmax consumes per-neuron logits");
+        self.plan_entry(in_shape, layout.batch)
     }
 
     fn forward(&self, u: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
         let frac = engine.frac_bits();
         let pre_shift = frac - self.logit_shift;
-        let in_positions = u.order.positions(engine.batch);
+        // packed-layout FC logits anchor their payload at `lane_base + b`
+        let in_positions: Vec<usize> =
+            u.order.positions(engine.batch).into_iter().map(|p| p + u.lane_base).collect();
         let out_positions = PackOrder::Reversed.positions(engine.batch);
         // the whole logit tensor down-switches in one fan-out, every
         // class × lane MUX tree fans in one call, and one batched
@@ -681,6 +842,154 @@ mod tests {
         let out = unit.backward_error(&delta, &state, &eng);
         let got: Vec<i64> = client.decrypt_batch(&out.cts[0], 4, 0).into_iter().rev().collect();
         assert_eq!(got, vec![5, 0, 5, 5]);
+    }
+
+    /// Compact packed layout for the activation tests: 2 samples, stride 4,
+    /// 2 feature lanes per block (partial final block at 3 features).
+    fn tiny_layout() -> super::PackedLayout {
+        super::PackedLayout { batch: 2, stride: 4, feats_per_ct: 2, occupancy: None }
+    }
+
+    #[test]
+    fn clear_packed_relu_roundtrip_with_partial_block() {
+        use crate::nn::backend::Codec;
+        use crate::nn::layer::{relu_error_packed_ops, relu_forward_packed_ops};
+        let (eng, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+        let layout = tiny_layout();
+        let u_vals: [[i64; 2]; 3] = [[37, -25], [-3, 7], [100, -1]];
+        let cts = u_vals.iter().map(|v| codec.encrypt_batch(v, 0)).collect();
+        let u = EncTensor::new(cts, vec![3], PackOrder::Forward, 0);
+
+        let before = eng.counter.snapshot();
+        let (a, state) = relu_layer_packed(&eng, &u, 0, &layout);
+        let after = eng.counter.snapshot();
+        let plan = relu_forward_packed_ops(3, &layout);
+        assert_eq!(after.switch_b2t - before.switch_b2t, plan.switch_b2t);
+        assert_eq!(after.switch_t2b - before.switch_t2b, plan.switch_t2b);
+        assert_eq!(after.refresh - before.refresh, plan.refresh);
+        assert_eq!(after.act_gates - before.act_gates, plan.act_gates);
+        assert_eq!(after.extract_pbs - before.extract_pbs, plan.extract_pbs);
+        assert_eq!(after.extract_lanes - before.extract_lanes, plan.extract_lanes);
+        assert_eq!(after.repack_lanes - before.repack_lanes, plan.repack_lanes);
+
+        // blocks carry relu(u) on the forward SIMD grid
+        assert!(a.is_packed());
+        assert_eq!(a.cts.len(), 2);
+        assert_eq!(
+            eng_decrypt(&codec, &a.cts[0], &layout.block_positions(PackOrder::Forward, 2)),
+            vec![37, 0, 0, 7]
+        );
+        assert_eq!(
+            eng_decrypt(&codec, &a.cts[1], &layout.block_positions(PackOrder::Forward, 1)),
+            vec![100, 0]
+        );
+
+        // backward: packed-reversed blocks in, per-neuron reversed out
+        let d_vals: [[i64; 2]; 3] = [[5, -6], [7, 8], [-9, 10]];
+        let mut b0 = vec![0i64; 256];
+        let mut b1 = vec![0i64; 256];
+        for (j, d) in d_vals.iter().enumerate() {
+            let (block, k) = (j / 2, j % 2);
+            let anchor = (layout.feats_per_ct - 1 - k) * layout.stride;
+            let coeffs = if block == 0 { &mut b0 } else { &mut b1 };
+            for (b, &v) in d.iter().enumerate() {
+                coeffs[anchor + (layout.batch - 1 - b)] = v;
+            }
+        }
+        let delta = EncTensor::packed(
+            vec![codec.encrypt_coeffs(&b0, 0), codec.encrypt_coeffs(&b1, 0)],
+            vec![3],
+            PackOrder::Reversed,
+            0,
+            layout.clone(),
+        );
+        let before = eng.counter.snapshot();
+        let out = irelu_layer_packed(&eng, &delta, &state, 0, &layout);
+        let after = eng.counter.snapshot();
+        let plan = relu_error_packed_ops(3, &layout);
+        assert_eq!(after.switch_b2t - before.switch_b2t, plan.switch_b2t);
+        assert_eq!(after.switch_t2b - before.switch_t2b, plan.switch_t2b);
+        assert_eq!(after.refresh - before.refresh, plan.refresh);
+        assert_eq!(after.act_gates - before.act_gates, plan.act_gates);
+        assert_eq!(after.extract_pbs - before.extract_pbs, plan.extract_pbs);
+        assert_eq!(after.extract_lanes - before.extract_lanes, plan.extract_lanes);
+        assert_eq!(after.repack_lanes - before.repack_lanes, plan.repack_lanes);
+
+        assert!(!out.is_packed());
+        let want: [[i64; 2]; 3] = [[5, 0], [0, 8], [-9, 0]];
+        for j in 0..3 {
+            let got: Vec<i64> =
+                codec.decrypt_batch(&out.cts[j], 2, 0).into_iter().rev().collect();
+            assert_eq!(got, want[j], "neuron {j}");
+        }
+    }
+
+    #[test]
+    fn fhe_packed_relu_matches_the_clear_mirror() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 777);
+        let layout = tiny_layout();
+        let u_vals: [[i64; 2]; 3] = [[37, -25], [-3, 7], [100, -1]];
+        let cts = u_vals.iter().map(|v| client.encrypt_batch(v, 0)).collect();
+        let u = EncTensor::new(cts, vec![3], PackOrder::Forward, 0);
+        let (a, state) = relu_layer_packed(&eng, &u, 0, &layout);
+        assert_eq!(
+            client.decrypt_positions(&a.cts[0], &layout.block_positions(PackOrder::Forward, 2), 0),
+            vec![37, 0, 0, 7]
+        );
+        assert_eq!(
+            client.decrypt_positions(&a.cts[1], &layout.block_positions(PackOrder::Forward, 1), 0),
+            vec![100, 0]
+        );
+        // one reversed block through the backward mask
+        let mut b0 = vec![0i64; 256];
+        b0[4] = -6; // neuron 0, sample 1
+        b0[5] = 5; // neuron 0, sample 0
+        b0[0] = 8; // neuron 1, sample 1
+        b0[1] = 7; // neuron 1, sample 0
+        let mut b1 = vec![0i64; 256];
+        b1[4] = 10;
+        b1[5] = -9;
+        let delta = EncTensor::packed(
+            vec![client.encrypt_coeffs(&b0, 0), client.encrypt_coeffs(&b1, 0)],
+            vec![3],
+            PackOrder::Reversed,
+            0,
+            layout.clone(),
+        );
+        let out = irelu_layer_packed(&eng, &delta, &state, 0, &layout);
+        let want: [[i64; 2]; 3] = [[5, 0], [0, 8], [-9, 0]];
+        for j in 0..3 {
+            let got: Vec<i64> =
+                client.decrypt_batch(&out.cts[j], 2, 0).into_iter().rev().collect();
+            assert_eq!(got, want[j], "neuron {j}");
+        }
+    }
+
+    #[test]
+    fn relu_plan_entry_packed_splits_flat_and_chw() {
+        let unit = ReluLayer { act_shift: 0, err_shift: 0 };
+        let layout = tiny_layout();
+        // flat head: SIMD blocks out, amortized up-switch
+        let flat = unit.plan_entry_packed(&[3], &layout, false);
+        assert!(flat.out_packed);
+        assert_eq!(flat.forward.switch_b2t, 3);
+        assert_eq!(flat.forward.switch_t2b, 2);
+        assert_eq!(flat.error.as_ref().unwrap().switch_b2t, 2);
+        assert_eq!(flat.error.as_ref().unwrap().switch_t2b, 3);
+        // CHW extractor: per-pixel both sides, per-scalar counts verbatim
+        let chw = unit.plan_entry_packed(&[2, 2, 2], &layout, false);
+        assert!(!chw.out_packed);
+        let per_scalar = unit.plan_entry(&[2, 2, 2], layout.batch);
+        assert_eq!(chw.forward.switch_b2t, per_scalar.forward.switch_b2t);
+        assert_eq!(chw.forward.act_gates, per_scalar.forward.act_gates);
+    }
+
+    fn eng_decrypt(
+        codec: &dyn crate::nn::backend::Codec,
+        ct: &crate::nn::backend::Ct,
+        positions: &[usize],
+    ) -> Vec<i64> {
+        codec.decrypt_positions(ct, positions, 0)
     }
 
     #[test]

@@ -261,11 +261,15 @@ impl Bit {
 }
 
 /// A frozen (plaintext) weight under either backend: the FHE path caches
-/// the per-level NTT lifts once, the clear path just keeps the scalar.
+/// the per-level NTT lifts once (scalar *and* polynomial weights ride the
+/// same cache); the clear path keeps the scalar — or, for the packed
+/// layouts' per-block weight polynomials, the full coefficient mirror.
 #[derive(Clone)]
 pub enum PlainWeight {
     Fhe(Arc<CachedPlaintext>),
     Clear(i64),
+    /// Clear mirror of a polynomial plaintext weight (packed conv blocks).
+    ClearPoly(Arc<ClearCt>),
 }
 
 impl PlainWeight {
@@ -274,14 +278,17 @@ impl PlainWeight {
         match self {
             PlainWeight::Fhe(c) => c.pt.coeffs[0],
             PlainWeight::Clear(v) => *v,
+            PlainWeight::ClearPoly(_) => {
+                panic!("a polynomial weight block has no single scalar value")
+            }
         }
     }
 
     pub fn fhe_cached(&self) -> &CachedPlaintext {
         match self {
             PlainWeight::Fhe(c) => c,
-            PlainWeight::Clear(_) => {
-                panic!("expected an FHE weight cache but found a clear-backend scalar")
+            PlainWeight::Clear(_) | PlainWeight::ClearPoly(_) => {
+                panic!("expected an FHE weight cache but found a clear-backend weight")
             }
         }
     }
@@ -417,6 +424,16 @@ pub trait Codec {
     fn encrypt_scalar(&mut self, w: i64) -> Ct;
     /// Decode a batch (optionally un-scaling by `shift`).
     fn decrypt_batch(&self, ct: &Ct, lanes: usize, shift: u32) -> Vec<i64>;
+    /// Encode an explicit coefficient vector (values scaled by `shift`).
+    /// The packed (cross-sample SIMD) layouts assemble their interleaved
+    /// slot blocks — minibatch inputs via `PackedLayout::pack_columns`,
+    /// weight blocks at `PackedLayout::weight_positions` — and encrypt the
+    /// raw coefficients through this.
+    fn encrypt_coeffs(&mut self, coeffs: &[i64], shift: u32) -> Ct;
+    /// Decode arbitrary coefficient positions (un-scaling by `shift`) —
+    /// the packed layouts' read-back counterpart of
+    /// [`Codec::encrypt_coeffs`].
+    fn decrypt_positions(&self, ct: &Ct, positions: &[usize], shift: u32) -> Vec<i64>;
 }
 
 /// The clear backend's codec: no keys, just the ring parameters. Encoding
@@ -440,6 +457,17 @@ impl Codec for ClearCodec {
 
     fn decrypt_batch(&self, ct: &Ct, lanes: usize, shift: u32) -> Vec<i64> {
         ct.clear().decode_batch(lanes).into_iter().map(|v| v >> shift).collect()
+    }
+
+    fn encrypt_coeffs(&mut self, coeffs: &[i64], shift: u32) -> Ct {
+        let scaled: Vec<i64> = coeffs.iter().map(|&v| v << shift).collect();
+        let pt = Plaintext::encode_batch(&scaled, &self.params);
+        Ct::Clear(ClearCt::from_plaintext(&pt, self.params.n))
+    }
+
+    fn decrypt_positions(&self, ct: &Ct, positions: &[usize], shift: u32) -> Vec<i64> {
+        let c = ct.clear();
+        positions.iter().map(|&p| Plaintext::center(c.get(p), c.t) >> shift).collect()
     }
 }
 
@@ -557,6 +585,19 @@ mod tests {
         let vals = vec![1i64, -2, 3, -4];
         let ct = codec.encrypt_batch(&vals, 3);
         assert_eq!(codec.decrypt_batch(&ct, 4, 3), vals);
+    }
+
+    #[test]
+    fn clear_codec_coeffs_roundtrip() {
+        use crate::nn::tensor::PackedLayout;
+        let mut codec = ClearCodec { params: p() };
+        let layout = PackedLayout::for_ring(3, codec.params.n).unwrap();
+        let cols = vec![vec![1i64, -2, 3], vec![4, -5, 6]];
+        let blocks = layout.pack_columns(&cols, codec.params.n);
+        let ct = codec.encrypt_coeffs(&blocks[0], 2);
+        // feature k, sample b at k·stride + b, scaled by 2^2
+        let pos = layout.block_positions(crate::nn::tensor::PackOrder::Forward, 2);
+        assert_eq!(codec.decrypt_positions(&ct, &pos, 2), vec![1, -2, 3, 4, -5, 6]);
     }
 
     #[test]

@@ -36,7 +36,10 @@ impl BnLayer {
         assert_eq!(x.shape.len(), 3);
         let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
         assert_eq!(c, self.gain.len());
-        let batch_positions = x.order.positions(engine.batch);
+        // packed-layout conv outputs anchor their batch at `lane_base + b`,
+        // so the bias plaintext follows the payload lanes
+        let batch_positions: Vec<usize> =
+            x.order.positions(engine.batch).into_iter().map(|p| p + x.lane_base).collect();
         let mut cts = Vec::with_capacity(x.len());
         for ch in 0..c {
             // one frozen-weight build per channel, amortized over the h·w
@@ -56,6 +59,7 @@ impl BnLayer {
             }
         }
         EncTensor::new(cts, x.shape.clone(), x.order, x.shift + self.gain_shift)
+            .with_lane_base(x.lane_base)
     }
 }
 
@@ -69,7 +73,20 @@ impl Layer for BnLayer {
             forward: bn_forward_ops(in_shape.iter().product()),
             error: None, // frozen affine BN folds into neighbours under TL
             gradient: None,
+            out_packed: false,
         }
+    }
+
+    fn plan_entry_packed(
+        &self,
+        in_shape: &[usize],
+        layout: &super::tensor::PackedLayout,
+        in_packed: bool,
+    ) -> LayerPlanEntry {
+        // the packed conv hands BN per-pixel ciphertexts (batch at the
+        // payload lanes), so the per-scalar counts hold verbatim
+        assert!(!in_packed, "BN consumes per-pixel conv outputs");
+        self.plan_entry(in_shape, layout.batch)
     }
 
     fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {

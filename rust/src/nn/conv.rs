@@ -6,13 +6,15 @@
 //! Glyph-from-scratch CNN training) is supported for completeness and used
 //! by the ablation benches.
 
-use super::backend::{Codec, Term};
+use super::backend::{Codec, PlainWeight, Term};
 use super::engine::GlyphEngine;
-use super::layer::{conv_forward_ops, Layer, LayerPlanEntry, LayerState};
+use super::layer::{
+    conv_forward_ops, conv_forward_packed_ops, Layer, LayerPlanEntry, LayerState,
+};
 use super::linear::{shared_plain, Weight};
-use super::tensor::EncTensor;
+use super::tensor::{EncTensor, PackOrder, PackedLayout};
 use crate::coordinator::scheduler::LayerKind;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// A 2-D convolution `out[oc] = Σ_ic k[oc][ic] * x[ic]`, valid, stride 1.
 pub struct ConvLayer {
@@ -112,6 +114,72 @@ impl ConvLayer {
         let cts = engine.mac_rows_many(&rows);
         EncTensor::new(cts, vec![self.out_ch, oh, ow], x.order, x.shift)
     }
+
+    /// Forward convolution over a cross-sample SIMD packed image: the CHW
+    /// input arrives as [`PackedLayout`] blocks over the flattened feature
+    /// index `j = (ic·H + y)·W + x`, and each output position MACs one
+    /// anchored kernel *polynomial* per input block its taps touch — tap
+    /// `j` anchored at `(F−1 − j mod F)·stride` so every product lands on
+    /// the common payload base. One MultCP carries the whole minibatch,
+    /// which is the packed layout's amortization of the Table-4 MultCP
+    /// columns. Output: per-pixel ciphertexts with the batch at
+    /// `payload_base() + b` (frozen plaintext kernels only — the
+    /// encrypted-kernel ablation keeps the per-scalar layout).
+    pub fn forward_packed(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        let layout = x.layout.as_ref().expect("packed conv consumes packed blocks");
+        assert!(
+            !self.is_encrypted(),
+            "the packed conv path supports frozen plaintext kernels only"
+        );
+        assert_eq!(x.shape.len(), 3, "conv expects CHW");
+        assert_eq!(x.shape[0], self.in_ch);
+        assert_eq!(x.order, PackOrder::Forward, "packed conv inputs pack forward");
+        let (in_h, in_w) = (x.shape[1], x.shape[2]);
+        let (oh, ow) = self.out_hw(in_h, in_w);
+        let n = engine.params().n;
+        let f = layout.feats_per_ct;
+        // group each output position's taps by input block and bake one
+        // anchored kernel polynomial per (position, channel, block)
+        let mut weights: Vec<PlainWeight> = Vec::new();
+        // per MAC row: the (input block, index into `weights`) of each term
+        let mut row_specs: Vec<Vec<(usize, usize)>> = Vec::with_capacity(self.out_ch * oh * ow);
+        for oc in 0..self.out_ch {
+            for y in 0..oh {
+                for xx in 0..ow {
+                    let mut per_block: BTreeMap<usize, Vec<i64>> = BTreeMap::new();
+                    for ic in 0..self.in_ch {
+                        for ky in 0..self.k {
+                            for kx in 0..self.k {
+                                let j = (ic * in_h + y + ky) * in_w + xx + kx;
+                                let anchor = (f - 1 - j % f) * layout.stride;
+                                let tap = match &self.kernels[oc][ic][ky][kx] {
+                                    Weight::Plain(p) => p.value(),
+                                    Weight::Enc(_) => unreachable!("checked above"),
+                                };
+                                per_block.entry(j / f).or_insert_with(|| vec![0i64; n])
+                                    [anchor] += tap;
+                            }
+                        }
+                    }
+                    let mut spec = Vec::with_capacity(per_block.len());
+                    for (block, coeffs) in &per_block {
+                        spec.push((*block, weights.len()));
+                        weights.push(engine.poly_weight(coeffs));
+                    }
+                    row_specs.push(spec);
+                }
+            }
+        }
+        let rows: Vec<Vec<Term>> = row_specs
+            .iter()
+            .map(|spec| {
+                spec.iter().map(|&(b, w)| Term::Cp(&x.cts[b], &weights[w])).collect()
+            })
+            .collect();
+        let cts = engine.mac_rows_many(&rows);
+        EncTensor::new(cts, vec![self.out_ch, oh, ow], x.order, x.shift)
+            .with_lane_base(layout.payload_base())
+    }
 }
 
 impl ConvLayer {
@@ -135,11 +203,49 @@ impl Layer for ConvLayer {
             forward: conv_forward_ops(self.in_ch, self.out_ch, self.k, oh, ow, self.is_encrypted()),
             error: None,
             gradient: None,
+            out_packed: false,
+        }
+    }
+
+    fn plan_entry_packed(
+        &self,
+        in_shape: &[usize],
+        layout: &PackedLayout,
+        in_packed: bool,
+    ) -> LayerPlanEntry {
+        assert!(in_packed, "the packed conv front consumes the packed input image");
+        assert!(
+            !self.is_encrypted(),
+            "the packed conv path supports frozen plaintext kernels only"
+        );
+        assert_eq!(in_shape.len(), 3, "conv expects CHW");
+        assert_eq!(in_shape[0], self.in_ch, "conv channel mismatch");
+        let (oh, ow) = self.out_hw(in_shape[1], in_shape[2]);
+        LayerPlanEntry {
+            kind: LayerKind::Conv { trainable: false },
+            out_shape: vec![self.out_ch, oh, ow],
+            forward: conv_forward_packed_ops(
+                self.in_ch,
+                self.out_ch,
+                self.k,
+                in_shape[1],
+                in_shape[2],
+                layout,
+            ),
+            error: None,
+            gradient: None,
+            // per-pixel ciphertexts with the batch at the payload lanes
+            out_packed: false,
         }
     }
 
     fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
-        (ConvLayer::forward(self, x, engine), LayerState::None)
+        let out = if x.is_packed() {
+            self.forward_packed(x, engine)
+        } else {
+            ConvLayer::forward(self, x, engine)
+        };
+        (out, LayerState::None)
     }
 }
 
@@ -178,6 +284,77 @@ mod tests {
         let s = eng.counter.snapshot();
         assert_eq!(s.mult_cp, 16); // 4 positions × 4 kernel taps
         assert_eq!(s.mult_cc, 0);
+    }
+
+    #[test]
+    fn packed_conv_amortizes_mult_cp_over_blocks() {
+        let (eng, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+        let layout = PackedLayout { batch: 2, stride: 4, feats_per_ct: 2, occupancy: None };
+        let img_b0 = [[1i64, 2, 3], [4, 5, 6], [7, 8, 9]];
+        let img_b1 = [[-1i64, 0, 1], [2, -2, 3], [0, 1, -1]];
+        // flattened feature j = y·3 + x, one [sample] column each
+        let cols: Vec<Vec<i64>> =
+            (0..9).map(|j| vec![img_b0[j / 3][j % 3], img_b1[j / 3][j % 3]]).collect();
+        let cts: Vec<_> =
+            layout.pack_columns(&cols, 256).iter().map(|c| codec.encrypt_coeffs(c, 0)).collect();
+        let x = EncTensor::packed(cts, vec![1, 3, 3], PackOrder::Forward, 0, layout.clone());
+        let kern = vec![vec![vec![vec![1i64, -1], vec![2, 0]]]];
+        let layer = ConvLayer::new_plain(&kern, &eng, 0);
+        let (out, _) = Layer::forward(&layer, &x, &eng);
+        assert_eq!(out.shape, vec![1, 2, 2]);
+        assert!(!out.is_packed());
+        assert_eq!(out.lane_base, layout.payload_base());
+        let reference = |img: &[[i64; 3]; 3], y: usize, x: usize| {
+            img[y][x] - img[y][x + 1] + 2 * img[y + 1][x]
+        };
+        let lanes = layout.lane_positions(PackOrder::Forward, out.lane_base);
+        for y in 0..2 {
+            for xx in 0..2 {
+                let got = codec.decrypt_positions(&out.cts[y * 2 + xx], &lanes, 0);
+                assert_eq!(
+                    got,
+                    vec![reference(&img_b0, y, xx), reference(&img_b1, y, xx)],
+                    "({y},{xx})"
+                );
+            }
+        }
+        // live counters match the packed plan formula exactly: each of the
+        // 4 output positions touches 3 of the 5 input blocks
+        let s = eng.counter.snapshot();
+        let plan = crate::nn::layer::conv_forward_packed_ops(1, 1, 2, 3, 3, &layout);
+        assert_eq!((s.mult_cp, s.add_cc), (plan.mult_cp, plan.add_cc));
+        assert_eq!((s.mult_cp, s.add_cc), (12, 8));
+        assert_eq!(s.mult_cc, 0);
+    }
+
+    #[test]
+    fn fhe_packed_conv_matches_the_clear_mirror() {
+        let (eng, mut client) = GlyphEngine::setup(EngineProfile::Test, 2, 802);
+        let layout = PackedLayout { batch: 2, stride: 4, feats_per_ct: 2, occupancy: None };
+        let img_b0 = [[1i64, 2, 3], [4, 5, 6], [7, 8, 9]];
+        let img_b1 = [[-1i64, 0, 1], [2, -2, 3], [0, 1, -1]];
+        let cols: Vec<Vec<i64>> =
+            (0..9).map(|j| vec![img_b0[j / 3][j % 3], img_b1[j / 3][j % 3]]).collect();
+        let cts: Vec<_> =
+            layout.pack_columns(&cols, 256).iter().map(|c| client.encrypt_coeffs(c, 0)).collect();
+        let x = EncTensor::packed(cts, vec![1, 3, 3], PackOrder::Forward, 0, layout.clone());
+        let kern = vec![vec![vec![vec![1i64, -1], vec![2, 0]]]];
+        let layer = ConvLayer::new_plain(&kern, &eng, 0);
+        let out = layer.forward_packed(&x, &eng);
+        let reference = |img: &[[i64; 3]; 3], y: usize, x: usize| {
+            img[y][x] - img[y][x + 1] + 2 * img[y + 1][x]
+        };
+        let lanes = layout.lane_positions(PackOrder::Forward, out.lane_base);
+        for y in 0..2 {
+            for xx in 0..2 {
+                let got = client.decrypt_positions(&out.cts[y * 2 + xx], &lanes, 0);
+                assert_eq!(
+                    got,
+                    vec![reference(&img_b0, y, xx), reference(&img_b1, y, xx)],
+                    "({y},{xx})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@
 use super::backend::{
     canon, Bit, ClearBackend, ClearCodec, ClearCt, Codec, Ct, PlainVector, PlainWeight, Term,
 };
+use super::tensor::PackedLayout;
 use crate::bgv::{
     mac_row, BgvCiphertext, BgvContext, BgvParams, BgvSecretKey, CachedPlaintext, KeyAuthority,
     MacTerm, Plaintext, RelinKey,
@@ -67,6 +68,30 @@ impl ClientKeys {
         };
         raw.into_iter().map(|v| v >> shift).collect()
     }
+
+    /// Encrypt raw plaintext-ring coefficients at fixed-point scale `shift`
+    /// — the packed-layout entry point: `PackedLayout::pack_columns` (and
+    /// the `weight_positions` anchors) assemble interleaved slot blocks as
+    /// explicit coefficient vectors, which land here verbatim.
+    pub fn encrypt_coeffs(&mut self, coeffs: &[i64], shift: u32) -> Ct {
+        let scaled: Vec<i64> = coeffs.iter().map(|&v| v << shift).collect();
+        let pt = Plaintext::encode_batch(&scaled, &self.bgv_sk.ctx.params);
+        Ct::Fhe(self.bgv_sk.encrypt(&pt, &mut self.rng))
+    }
+
+    /// Decrypt and read individual coefficient positions (packed layouts
+    /// read payload lanes at strided slots rather than a prefix batch).
+    pub fn decrypt_positions(&self, ct: &Ct, positions: &[usize], shift: u32) -> Vec<i64> {
+        match ct {
+            Ct::Fhe(c) => {
+                let pt = self.bgv_sk.decrypt(c);
+                positions.iter().map(|&p| pt.coeffs[p] >> shift).collect()
+            }
+            Ct::Clear(c) => {
+                positions.iter().map(|&p| Plaintext::center(c.get(p), c.t) >> shift).collect()
+            }
+        }
+    }
 }
 
 impl Codec for ClientKeys {
@@ -80,6 +105,14 @@ impl Codec for ClientKeys {
 
     fn decrypt_batch(&self, ct: &Ct, lanes: usize, shift: u32) -> Vec<i64> {
         ClientKeys::decrypt_batch(self, ct, lanes, shift)
+    }
+
+    fn encrypt_coeffs(&mut self, coeffs: &[i64], shift: u32) -> Ct {
+        ClientKeys::encrypt_coeffs(self, coeffs, shift)
+    }
+
+    fn decrypt_positions(&self, ct: &Ct, positions: &[usize], shift: u32) -> Vec<i64> {
+        ClientKeys::decrypt_positions(self, ct, positions, shift)
     }
 }
 
@@ -148,6 +181,12 @@ pub struct GlyphEngine {
     /// contract `tests/train_step_golden.rs` locks). FHE backend only;
     /// ignored on the clear path. Default: batched.
     pub serial_switch: bool,
+    /// Cross-sample SIMD minibatch packing: when set, tensors carry
+    /// `batch × feature` slot blocks ([`PackedLayout`]) instead of one
+    /// network scalar per ciphertext, and the layers route through their
+    /// packed paths. `None` (the default) is the per-scalar layout of
+    /// PR ≤ 7, bit-identical to before.
+    pub packed: Option<PackedLayout>,
 }
 
 /// Which parameter scale to build.
@@ -197,7 +236,20 @@ impl GlyphEngine {
             counter: OpCounter::default(),
             batch,
             serial_switch: false,
+            packed: None,
         };
+        (engine, client)
+    }
+
+    /// [`Self::setup`] with cross-sample SIMD packing enabled: the layout is
+    /// derived from (batch, ring degree) by [`PackedLayout::for_ring`].
+    pub fn setup_packed(
+        profile: EngineProfile,
+        batch: usize,
+        seed: u64,
+    ) -> (GlyphEngine, ClientKeys) {
+        let (mut engine, client) = GlyphEngine::setup(profile, batch, seed);
+        engine.enable_packing();
         (engine, client)
     }
 
@@ -210,6 +262,7 @@ impl GlyphEngine {
             counter: OpCounter::default(),
             batch,
             serial_switch: false,
+            packed: None,
         }
     }
 
@@ -225,8 +278,33 @@ impl GlyphEngine {
             counter: OpCounter::default(),
             batch,
             serial_switch: false,
+            packed: None,
         };
         (engine, codec)
+    }
+
+    /// [`Self::setup_clear`] with cross-sample SIMD packing enabled —
+    /// the bit-exact mirror of [`Self::setup_packed`].
+    pub fn setup_clear_packed(profile: EngineProfile, batch: usize) -> (GlyphEngine, ClearCodec) {
+        let (mut engine, codec) = GlyphEngine::setup_clear(profile, batch);
+        engine.enable_packing();
+        (engine, codec)
+    }
+
+    /// Switch this engine to the packed minibatch layout (derived from the
+    /// engine's batch and ring degree). Panics if the batch does not fit —
+    /// the layout needs `(2·batch − 1).next_power_of_two() ≤ n`.
+    pub fn enable_packing(&mut self) {
+        let n = self.params().n;
+        let layout = PackedLayout::for_ring(self.batch, n)
+            .unwrap_or_else(|e| panic!("cannot enable minibatch packing: {e}"));
+        self.packed = Some(layout);
+    }
+
+    /// The active packed layout, if this engine runs the SIMD minibatch
+    /// layout (`None` = one scalar per ciphertext, the PR ≤ 7 layout).
+    pub fn packed_layout(&self) -> Option<&PackedLayout> {
+        self.packed.as_ref()
     }
 
     /// The FHE backend's key material (panics on the clear backend).
@@ -301,6 +379,7 @@ impl GlyphEngine {
         match (acc, w) {
             (Ct::Fhe(a), PlainWeight::Fhe(c)) => a.mul_plain_cached_assign(c),
             (Ct::Clear(a), PlainWeight::Clear(v)) => a.scalar_mul_assign(*v),
+            (Ct::Clear(a), PlainWeight::ClearPoly(p)) => a.mul_assign(p),
             _ => panic!("MultCP operands do not match the engine backend"),
         }
     }
@@ -312,6 +391,75 @@ impl GlyphEngine {
             Backend::Fhe(f) => PlainWeight::Fhe(Arc::new(CachedPlaintext::scalar(v, &f.ctx))),
             Backend::Clear(_) => PlainWeight::Clear(v),
         }
+    }
+
+    /// Build a frozen *polynomial* weight — the packed conv layer's
+    /// per-(pixel, block) kernel plaintext, with each tap anchored so the
+    /// block product lands on the common payload base. `coeffs` spans the
+    /// full ring.
+    pub fn poly_weight(&self, coeffs: &[i64]) -> PlainWeight {
+        match &self.backend {
+            Backend::Fhe(f) => {
+                assert_eq!(coeffs.len(), f.ctx.params.n);
+                let pt = Plaintext { coeffs: coeffs.to_vec(), t: f.ctx.params.t };
+                PlainWeight::Fhe(Arc::new(CachedPlaintext::new(pt, &f.ctx)))
+            }
+            Backend::Clear(cb) => {
+                assert_eq!(coeffs.len(), cb.params.n);
+                let mut p = ClearCt::zero(cb.params.n, cb.params.t);
+                for (i, &v) in coeffs.iter().enumerate() {
+                    if v != 0 {
+                        p.set(i, canon(v, cb.params.t));
+                    }
+                }
+                PlainWeight::ClearPoly(Arc::new(p))
+            }
+        }
+    }
+
+    /// MultCP by the monomial `X^exp` — the homomorphic lane shift that
+    /// re-packs clean per-scalar ciphertexts into SIMD blocks (pack-on-entry
+    /// at a packed FC's input seam). Counted as one MultCP, uniformly
+    /// including `exp = 0` so live counters match the packed plan formulas.
+    pub fn mult_monomial(&self, acc: &mut Ct, exp: usize) {
+        self.counter.bump(&self.counter.mult_cp, 1);
+        match (&self.backend, acc) {
+            (Backend::Fhe(f), Ct::Fhe(a)) => {
+                let params = &f.ctx.params;
+                let mut coeffs = vec![0i64; params.n];
+                coeffs[exp] = 1;
+                a.mul_plain_assign(&Plaintext { coeffs, t: params.t }, &f.ctx);
+            }
+            (Backend::Clear(cb), Ct::Clear(a)) => {
+                let mut m = ClearCt::zero(cb.params.n, cb.params.t);
+                m.set(exp, 1);
+                a.mul_assign(&m);
+            }
+            _ => panic!("monomial MultCP operand does not match the engine backend"),
+        }
+    }
+
+    /// Homomorphically interleave *clean* per-scalar ciphertexts (payload at
+    /// coefficients `0..batch`, nothing else — what the activation repack
+    /// emits) into packed feature blocks: lane `j` shifts to its feature
+    /// anchor `(j mod F)·stride` by a monomial MultCP and accumulates into
+    /// its block by AddCC. Counts `cts.len()` MultCP and
+    /// `cts.len() − blocks` AddCC — the pack-on-entry cost the packed plan
+    /// formulas charge.
+    pub fn pack_clean_blocks(&self, cts: &[&Ct], layout: &PackedLayout) -> Vec<Ct> {
+        let f = layout.feats_per_ct;
+        let mut out: Vec<Ct> = Vec::with_capacity(layout.blocks(cts.len()));
+        for (j, ct) in cts.iter().enumerate() {
+            let mut shifted = (*ct).clone();
+            self.mult_monomial(&mut shifted, (j % f) * layout.stride);
+            if j % f == 0 {
+                out.push(shifted);
+            } else {
+                let last = out.last_mut().expect("block accumulator exists");
+                self.add_cc(last, &shifted);
+            }
+        }
+        out
     }
 
     pub fn add_cc(&self, acc: &mut Ct, other: &Ct) {
@@ -475,7 +623,10 @@ impl GlyphEngine {
                             }
                             Term::Cp(x, w) => {
                                 let mut p = x.clear().clone();
-                                p.scalar_mul_assign(w.value());
+                                match w {
+                                    PlainWeight::ClearPoly(poly) => p.mul_assign(poly),
+                                    w => p.scalar_mul_assign(w.value()),
+                                }
                                 p
                             }
                         };
@@ -901,6 +1052,45 @@ mod tests {
             (1, 1, 24, 24, 1)
         );
         assert_eq!((s.extract_lanes, s.repack_lanes), (3, 3));
+    }
+
+    #[test]
+    fn clean_pack_interleaves_a_block_on_both_backends() {
+        use crate::nn::tensor::PackOrder;
+        // batch 2 → stride 4; two features share one block. Clean per-scalar
+        // cts (batch at coeffs 0..2) interleave to feature anchors 0 and 4.
+        let (engine, mut codec) = GlyphEngine::setup_clear_packed(EngineProfile::Test, 2);
+        let layout = engine.packed_layout().unwrap().clone();
+        assert_eq!(layout.stride, 4);
+        let a = codec.encrypt_batch(&[5, -6], 0);
+        let b = codec.encrypt_batch(&[7, 8], 0);
+        let blocks = engine.pack_clean_blocks(&[&a, &b], &layout);
+        assert_eq!(blocks.len(), 1);
+        let pos = layout.block_positions(PackOrder::Forward, 2);
+        assert_eq!(codec.decrypt_positions(&blocks[0], &pos, 0), vec![5, -6, 7, 8]);
+        let s = engine.counter.snapshot();
+        assert_eq!((s.mult_cp, s.add_cc), (2, 1), "in MultCP + (in − blocks) AddCC");
+
+        // FHE mirror: identical payload through real monomial MultCPs.
+        let (engine, mut client) = GlyphEngine::setup_packed(EngineProfile::Test, 2, 49);
+        let a = client.encrypt_batch(&[5, -6], 0);
+        let b = client.encrypt_batch(&[7, 8], 0);
+        let blocks = engine.pack_clean_blocks(&[&a, &b], &layout);
+        assert_eq!(client.decrypt_positions(&blocks[0], &pos, 0), vec![5, -6, 7, 8]);
+        let s = engine.counter.snapshot();
+        assert_eq!((s.mult_cp, s.add_cc), (2, 1));
+    }
+
+    #[test]
+    fn coeff_codec_roundtrips_packed_blocks() {
+        use crate::nn::tensor::PackOrder;
+        let (engine, mut client) = GlyphEngine::setup_packed(EngineProfile::Test, 3, 50);
+        let layout = engine.packed_layout().unwrap().clone();
+        let cols = vec![vec![1, -2, 3], vec![-4, 5, -6]];
+        let blocks = layout.pack_columns(&cols, engine.params().n);
+        let ct = client.encrypt_coeffs(&blocks[0], 2);
+        let pos = layout.block_positions(PackOrder::Forward, 2);
+        assert_eq!(client.decrypt_positions(&ct, &pos, 2), vec![1, -2, 3, -4, 5, -6]);
     }
 
     #[test]

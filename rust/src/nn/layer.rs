@@ -11,7 +11,7 @@
 
 use super::backend::Ct;
 use super::engine::GlyphEngine;
-use super::tensor::EncTensor;
+use super::tensor::{EncTensor, PackedLayout};
 use crate::coordinator::scheduler::{LayerKind, StepOps};
 use crate::switch::SWITCH_BITS;
 
@@ -41,6 +41,12 @@ pub struct LayerPlanEntry {
     pub error: Option<StepOps>,
     /// Gradient-step op counts (`None`: frozen unit).
     pub gradient: Option<StepOps>,
+    /// Whether the unit's *forward output* tensor is a cross-sample SIMD
+    /// block tensor (`EncTensor::is_packed`). Always `false` on the
+    /// per-scalar plan path; under a packed layout the flat ReLU emits
+    /// packed blocks while the FC/softmax stages emit per-neuron
+    /// ciphertexts with the batch at strided payload lanes.
+    pub out_packed: bool,
 }
 
 /// The uniform unit interface. Implemented by `FcLayer`, `ConvLayer`,
@@ -50,6 +56,22 @@ pub trait Layer {
     /// Scheduler entry: kind, output geometry and exact op counts for a
     /// mini-batch of `batch` samples entering with `in_shape`.
     fn plan_entry(&self, in_shape: &[usize], batch: usize) -> LayerPlanEntry;
+
+    /// Scheduler entry under the cross-sample SIMD minibatch layout:
+    /// `layout` is the engine's [`PackedLayout`] and `in_packed` says
+    /// whether the unit's forward input arrives as packed blocks (versus
+    /// per-scalar ciphertexts). Units without a packed execution path keep
+    /// the panicking default — `Network::compile_units` only calls this
+    /// when the engine runs packed, so an unsupported unit fails loudly at
+    /// compile time rather than mis-counting at run time.
+    fn plan_entry_packed(
+        &self,
+        _in_shape: &[usize],
+        _layout: &PackedLayout,
+        _in_packed: bool,
+    ) -> LayerPlanEntry {
+        panic!("this unit does not support the cross-sample packed minibatch layout")
+    }
 
     /// Run the unit forward, returning the output tensor and whatever state
     /// the backward pass will need.
@@ -103,6 +125,12 @@ pub trait Layer {
     fn as_fc_mut(&mut self) -> Option<&mut super::linear::FcLayer> {
         None
     }
+
+    /// Inspection downcast for packed-layout FC layers (weight readback in
+    /// the packing conformance tests/benches).
+    fn as_packed_fc(&self) -> Option<&super::linear::PackedFcLayer> {
+        None
+    }
 }
 
 /// Shape-only CHW→vector adapter in front of the FC head (zero
@@ -117,7 +145,20 @@ impl Layer for FlattenLayer {
             forward: StepOps::default(),
             error: None,
             gradient: None,
+            out_packed: false,
         }
+    }
+
+    fn plan_entry_packed(
+        &self,
+        in_shape: &[usize],
+        layout: &PackedLayout,
+        in_packed: bool,
+    ) -> LayerPlanEntry {
+        // Under a packed CNN the flatten input is the per-pixel clean tensor
+        // the CHW ReLU emits — shape-only either way.
+        assert!(!in_packed, "flatten consumes the per-pixel tensor, not packed blocks");
+        self.plan_entry(in_shape, layout.batch)
     }
 
     fn forward(&self, x: &EncTensor, _engine: &GlyphEngine) -> (EncTensor, LayerState) {
@@ -188,6 +229,46 @@ pub fn conv_forward_ops(in_ch: usize, out_ch: usize, k: usize, oh: usize, ow: us
         mult_cc: if enc { outputs * taps } else { 0 },
         mult_cp: if enc { 0 } else { outputs * taps },
         add_cc: outputs * (taps - 1),
+        ..Default::default()
+    }
+}
+
+/// Packed `ConvLayer::forward_packed`: the minibatch image arrives as
+/// cross-sample SIMD blocks, so each output position MACs one anchored
+/// kernel *polynomial* per distinct input block its taps touch (one MultCP
+/// each, `distinct − 1` accumulator adds) instead of one scalar MultCP per
+/// tap — the whole batch rides each product. The per-position block count
+/// is a pure function of the tap geometry and the layout, mirrored 1:1 by
+/// the execution's block grouping.
+pub fn conv_forward_packed_ops(
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    in_h: usize,
+    in_w: usize,
+    layout: &PackedLayout,
+) -> StepOps {
+    let (oh, ow) = (in_h - k + 1, in_w - k + 1);
+    let mut mult_cp = 0u64;
+    let mut add_cc = 0u64;
+    for y in 0..oh {
+        for x in 0..ow {
+            let mut blocks = std::collections::BTreeSet::new();
+            for ic in 0..in_ch {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let j = (ic * in_h + y + ky) * in_w + x + kx;
+                        blocks.insert(j / layout.feats_per_ct);
+                    }
+                }
+            }
+            mult_cp += blocks.len() as u64;
+            add_cc += (blocks.len() - 1) as u64;
+        }
+    }
+    StepOps {
+        mult_cp: mult_cp * out_ch as u64,
+        add_cc: add_cc * out_ch as u64,
         ..Default::default()
     }
 }
@@ -279,6 +360,127 @@ pub fn sigmoid_tlu_ops(cts: usize, output_unit: bool) -> (StepOps, StepOps) {
     (forward, error)
 }
 
+// ---------------------------------------------------------------------------
+// Packed-layout op formulas (cross-sample SIMD minibatch blocks). Like the
+// per-scalar formulas above, each mirrors its execution path 1:1 — the plan
+// consistency assertions hold exactly under packing too.
+// ---------------------------------------------------------------------------
+
+/// Pack-on-entry at a packed FC seam (`GlyphEngine::pack_clean_blocks`):
+/// one monomial MultCP per input lane (uniformly including the `X^0`
+/// anchors) and one AddCC folding every non-anchor lane into its block.
+pub fn pack_entry_ops(features: usize, layout: &PackedLayout) -> StepOps {
+    StepOps {
+        mult_cp: features as u64,
+        add_cc: (features - layout.blocks(features)) as u64,
+        ..Default::default()
+    }
+}
+
+/// Packed `FcLayer::forward`: one MAC row per output neuron over `B(in)`
+/// packed-block terms (`B(in)−1` accumulator adds), one AddCC per
+/// encrypted bias term, plus the pack-on-entry cost when the input arrives
+/// per-scalar (the CNN flatten seam). Packed weights are ciphertext
+/// blocks, so the MACs are MultCC.
+pub fn fc_forward_packed_ops(
+    in_dim: usize,
+    out_dim: usize,
+    layout: &PackedLayout,
+    in_packed: bool,
+    enc_bias_terms: usize,
+) -> StepOps {
+    let blocks = layout.blocks(in_dim);
+    let mut ops =
+        if in_packed { StepOps::default() } else { pack_entry_ops(in_dim, layout) };
+    ops.mult_cc += (out_dim * blocks) as u64;
+    ops.add_cc += (out_dim * (blocks - 1)) as u64 + enc_bias_terms as u64;
+    ops
+}
+
+/// Packed `FcLayer::backward_error`: one MAC row per *input block* over the
+/// `out` per-neuron reversed deltas (each term a packed weight block ×
+/// reversed δ MultCC).
+pub fn fc_error_packed_ops(in_dim: usize, out_dim: usize, layout: &PackedLayout) -> StepOps {
+    let blocks = layout.blocks(in_dim);
+    StepOps {
+        mult_cc: (blocks * out_dim) as u64,
+        add_cc: (blocks * (out_dim - 1)) as u64,
+        ..Default::default()
+    }
+}
+
+/// Packed `FcLayer::gradients` + `apply_gradients`: one convolution-trick
+/// MultCC per (neuron, input block) — each product carries the `F`
+/// batch-summed gradients of a whole weight block. Requantization extracts
+/// every weight lane (`in·out` lanes, 8 PBS + 8 weighted gates each) from
+/// the `out·B(in)` block products, repacks one T2B group per block at the
+/// weight anchors, and applies one SubCC per weight-block ciphertext. When
+/// `below` arrives per-scalar the layer re-packs it first.
+pub fn fc_gradient_packed_ops(
+    in_dim: usize,
+    out_dim: usize,
+    layout: &PackedLayout,
+    below_packed: bool,
+) -> StepOps {
+    let blocks = (out_dim * layout.blocks(in_dim)) as u64;
+    let w = (in_dim * out_dim) as u64;
+    let mut ops =
+        if below_packed { StepOps::default() } else { pack_entry_ops(in_dim, layout) };
+    ops.mult_cc += blocks;
+    ops.add_cc += blocks;
+    ops.act_gates += w * BITS;
+    ops.extract_pbs += w * BITS;
+    ops.switch_b2t += blocks;
+    ops.switch_t2b += blocks;
+    ops.refresh += blocks;
+    ops.extract_lanes += w;
+    ops.repack_lanes += w;
+    ops
+}
+
+/// Packed flat `activation::relu_layer`: the inputs are per-neuron MAC
+/// outputs (batch at strided payload lanes), so extraction matches the
+/// per-scalar pass — one B2T per neuron, 8 PBS and 7 weighted ANDs per
+/// lane. The bootstrapped lanes then regroup into SIMD blocks: one T2B
+/// group per packed *block* instead of per neuron.
+pub fn relu_forward_packed_ops(features: usize, layout: &PackedLayout) -> StepOps {
+    let f = features as u64;
+    let lanes = (features * layout.batch) as u64;
+    let out_blocks = layout.blocks(features) as u64;
+    StepOps {
+        relu_values: f,
+        act_gates: lanes * (BITS - 1),
+        extract_pbs: lanes * BITS,
+        switch_b2t: f,
+        switch_t2b: out_blocks,
+        refresh: out_blocks,
+        extract_lanes: lanes,
+        repack_lanes: lanes,
+        ..Default::default()
+    }
+}
+
+/// Packed flat iReLU: packed-*reversed* blocks arrive from the FC error
+/// step, so one B2T per block extracts every feature × sample lane at
+/// once; the masked lanes regroup per neuron (one T2B group each) for the
+/// layer below.
+pub fn relu_error_packed_ops(features: usize, layout: &PackedLayout) -> StepOps {
+    let f = features as u64;
+    let lanes = (features * layout.batch) as u64;
+    let in_blocks = layout.blocks(features) as u64;
+    StepOps {
+        relu_values: f,
+        act_gates: lanes * BITS,
+        extract_pbs: lanes * BITS,
+        switch_b2t: in_blocks,
+        switch_t2b: f,
+        refresh: f,
+        extract_lanes: lanes,
+        repack_lanes: lanes,
+        ..Default::default()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,5 +508,41 @@ mod tests {
         let e = relu_error_ops(4, 2);
         assert_eq!(e.act_gates, 64);
         assert_eq!((e.extract_lanes, e.repack_lanes), (8, 8));
+    }
+
+    #[test]
+    fn packed_fc_ops_amortize_the_macs_over_blocks() {
+        // batch 8 in n = 256: stride 16, F = 8 → a 16-wide input spans 2
+        // blocks; 8 output neurons MAC 2 block terms each.
+        let layout = PackedLayout::for_ring(8, 256).unwrap();
+        assert_eq!((layout.stride, layout.feats_per_ct), (16, 8));
+        let f = fc_forward_packed_ops(16, 8, &layout, true, 0);
+        assert_eq!((f.mult_cc, f.mult_cp, f.add_cc), (16, 0, 8));
+        // per-scalar entry (CNN flatten seam): + 16 monomial MultCP and
+        // 16 − 2 block-fold AddCC.
+        let seam = fc_forward_packed_ops(16, 8, &layout, false, 0);
+        assert_eq!((seam.mult_cc, seam.mult_cp, seam.add_cc), (16, 16, 8 + 14));
+        let e = fc_error_packed_ops(16, 8, &layout);
+        assert_eq!((e.mult_cc, e.add_cc), (16, 14));
+        // gradients: 16 block products, all 128 weight lanes extracted.
+        let g = fc_gradient_packed_ops(16, 8, &layout, true);
+        assert_eq!((g.mult_cc, g.switch_b2t, g.switch_t2b, g.refresh), (16, 16, 16, 16));
+        assert_eq!((g.extract_lanes, g.repack_lanes, g.act_gates), (128, 128, 1024));
+        assert_eq!(g.add_cc, 16);
+    }
+
+    #[test]
+    fn packed_relu_ops_regroup_into_blocks() {
+        let layout = PackedLayout::for_ring(8, 256).unwrap();
+        // 16 neurons: extraction is per neuron (16 B2T, 128 lanes), the
+        // repack groups into 2 packed blocks.
+        let f = relu_forward_packed_ops(16, &layout);
+        assert_eq!((f.switch_b2t, f.switch_t2b, f.refresh), (16, 2, 2));
+        assert_eq!((f.extract_lanes, f.repack_lanes), (128, 128));
+        assert_eq!((f.act_gates, f.extract_pbs), (896, 1024));
+        // iReLU runs the mirror image: 2 B2T, 16 T2B.
+        let e = relu_error_packed_ops(16, &layout);
+        assert_eq!((e.switch_b2t, e.switch_t2b, e.refresh), (2, 16, 16));
+        assert_eq!((e.act_gates, e.extract_pbs), (1024, 1024));
     }
 }

@@ -13,9 +13,10 @@
 use super::backend::{Bit, Codec, Ct, PlainWeight, Term};
 use super::engine::GlyphEngine;
 use super::layer::{
-    fc_error_ops, fc_forward_ops, fc_gradient_ops, Layer, LayerGrads, LayerPlanEntry, LayerState,
+    fc_error_ops, fc_error_packed_ops, fc_forward_ops, fc_forward_packed_ops, fc_gradient_ops,
+    fc_gradient_packed_ops, Layer, LayerGrads, LayerPlanEntry, LayerState,
 };
-use super::tensor::{EncTensor, PackOrder};
+use super::tensor::{EncTensor, PackOrder, PackedLayout};
 use crate::coordinator::scheduler::LayerKind;
 use crate::switch::extract::bit_position;
 use std::collections::HashMap;
@@ -235,6 +236,7 @@ impl Layer for FcLayer {
             forward,
             error: Some(fc_error_ops(self.in_dim, self.out_dim, enc)),
             gradient: if enc { Some(fc_gradient_ops(self.in_dim, self.out_dim)) } else { None },
+            out_packed: false,
         }
     }
 
@@ -269,6 +271,291 @@ impl Layer for FcLayer {
     }
 
     fn as_fc_mut(&mut self) -> Option<&mut FcLayer> {
+        Some(self)
+    }
+}
+
+/// A fully-connected layer under the cross-sample SIMD minibatch layout:
+/// the weight matrix is stored as one ciphertext per (output neuron, input
+/// block), weight `k` of block `B` anchored at coefficient `(F−1−k)·stride`
+/// ([`PackedLayout::weight_positions`] — top-anchored even in a partial
+/// final block, so every block's MAC payload lands at the common
+/// [`PackedLayout::payload_base`]). One MAC row per output neuron then
+/// serves the whole minibatch: `out·B(in)` MultCC instead of `out·in`.
+///
+/// Always trainable (the packed weight blocks are ciphertexts); frozen
+/// layers keep the per-scalar `FcLayer` MultCP path.
+pub struct PackedFcLayer {
+    /// `w_blocks[out][block]`: packed weight-block ciphertexts.
+    pub w_blocks: Vec<Vec<Ct>>,
+    pub layout: PackedLayout,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Quantization shift applied by the following activation.
+    pub out_shift: u32,
+    /// Whether the forward input arrives as packed blocks (`false` at the
+    /// CNN flatten seam, where the layer re-packs per-scalar inputs with
+    /// monomial shifts first).
+    pub in_packed: bool,
+}
+
+impl PackedFcLayer {
+    /// Trainable packed layer from plain 8-bit initial weights: row `o` of
+    /// `init` is interleaved into `B(in)` weight-block ciphertexts under
+    /// the backend's codec. `n` is the ring degree the blocks encode into.
+    pub fn new_encrypted(
+        init: &[Vec<i64>],
+        client: &mut dyn Codec,
+        out_shift: u32,
+        layout: &PackedLayout,
+        in_packed: bool,
+        n: usize,
+    ) -> Self {
+        let out_dim = init.len();
+        let in_dim = init[0].len();
+        let f = layout.feats_per_ct;
+        let w_blocks = init
+            .iter()
+            .map(|row| {
+                (0..layout.blocks(in_dim))
+                    .map(|block| {
+                        let mut coeffs = vec![0i64; n];
+                        for k in 0..layout.feats_in_block(in_dim, block) {
+                            coeffs[(f - 1 - k) * layout.stride] = row[block * f + k];
+                        }
+                        client.encrypt_coeffs(&coeffs, 0)
+                    })
+                    .collect()
+            })
+            .collect();
+        PackedFcLayer {
+            w_blocks,
+            layout: layout.clone(),
+            in_dim,
+            out_dim,
+            out_shift,
+            in_packed,
+        }
+    }
+
+    /// The forward input as packed blocks: pass-through for packed tensors,
+    /// monomial-shift pack-on-entry (counted) for per-scalar inputs.
+    fn input_blocks(&self, x: &EncTensor, engine: &GlyphEngine) -> Vec<Ct> {
+        if x.is_packed() {
+            assert_eq!(x.layout.as_ref(), Some(&self.layout), "input layout mismatch");
+            x.cts.clone()
+        } else {
+            assert_eq!(x.lane_base, 0, "pack-on-entry needs clean base-0 inputs");
+            let refs: Vec<&Ct> = x.cts.iter().collect();
+            engine.pack_clean_blocks(&refs, &self.layout)
+        }
+    }
+
+    /// Forward MACs: `u[j] = Σ_B W[j][B] ⊗ x[B]`, one MAC row per output
+    /// neuron over the input *blocks*. The output is per-neuron with the
+    /// whole batch at the payload lanes `payload_base() + b`.
+    pub fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        assert_eq!(x.len(), self.in_dim);
+        assert_eq!(x.order, PackOrder::Forward);
+        let x_blocks = self.input_blocks(x, engine);
+        let rows: Vec<Vec<Term>> = (0..self.out_dim)
+            .map(|j| x_blocks.iter().enumerate().map(|(b, xb)| Term::Cc(&self.w_blocks[j][b], xb)).collect())
+            .collect();
+        let cts = engine.mac_rows_many(&rows);
+        EncTensor::new(cts, vec![self.out_dim], x.order, x.shift)
+            .with_lane_base(self.layout.payload_base())
+    }
+
+    /// Backward error: `δ_{l−1} = Wᵀ·δ_l` as one MAC row per *input block*
+    /// over the per-neuron reversed deltas — the products land garbage-free
+    /// on the packed-reversed grid (feature `k` at `(F−1−k)·stride`, sample
+    /// `b` at `batch−1−b`), so the output is a packed-reversed block tensor.
+    pub fn backward_error(&self, delta: &EncTensor, engine: &GlyphEngine) -> EncTensor {
+        assert_eq!(delta.len(), self.out_dim);
+        assert_eq!(delta.order, PackOrder::Reversed);
+        assert!(!delta.is_packed(), "deltas stay per-neuron between packed layers");
+        let rows: Vec<Vec<Term>> = (0..self.layout.blocks(self.in_dim))
+            .map(|b| {
+                (0..self.out_dim).map(|j| Term::Cc(&self.w_blocks[j][b], &delta.cts[j])).collect()
+            })
+            .collect();
+        let cts = engine.mac_rows_many(&rows);
+        EncTensor::packed(
+            cts,
+            vec![self.in_dim],
+            PackOrder::Reversed,
+            delta.shift,
+            self.layout.clone(),
+        )
+    }
+
+    /// Gradient MACs: one convolution-trick MultCC per (neuron, input
+    /// block) — packed forward `x[B]` × reversed `δ_j` leaves the `F`
+    /// batch-summed gradients of block `B` at coefficients
+    /// `k·stride + batch−1` (the stride isolates the cross-sample spread).
+    /// `grads[j]` holds `B(in)` block products.
+    pub fn gradients(&self, x: &EncTensor, delta: &EncTensor, engine: &GlyphEngine) -> LayerGrads {
+        assert_eq!(x.order, PackOrder::Forward);
+        assert_eq!(delta.order, PackOrder::Reversed);
+        let x_blocks = self.input_blocks(x, engine);
+        let rows: Vec<Vec<Term>> = (0..self.out_dim)
+            .flat_map(|j| x_blocks.iter().map(move |xb| vec![Term::Cc(xb, &delta.cts[j])]))
+            .collect();
+        let mut flat = engine.mac_rows_many(&rows).into_iter();
+        (0..self.out_dim)
+            .map(|_| x_blocks.iter().map(|_| flat.next().expect("out·blocks rows")).collect())
+            .collect()
+    }
+
+    /// SGD update: extract every weight lane's batch-sum bits from the
+    /// block products (full blocks in one pooled down-switch, the partial
+    /// final block in a second — the counters sum identically), recompose
+    /// through weighted gates, repack one T2B group per weight block at the
+    /// weight anchors, and subtract — one SubCC per block ciphertext
+    /// instead of one per weight.
+    pub fn apply_gradients(&mut self, grads: &[Vec<Ct>], grad_shift: u32, engine: &GlyphEngine) {
+        let frac = engine.frac_bits();
+        assert!(grad_shift <= frac);
+        let pre_shift = frac - grad_shift;
+        let f = self.layout.feats_per_ct;
+        let nblocks = self.layout.blocks(self.in_dim);
+        // 1. per-lane bits of every block product, grouped by lane count so
+        //    each pooled down-switch shares one position set (full blocks
+        //    in one pass, a partial final block in a second)
+        let last_feats = self.layout.feats_in_block(self.in_dim, nblocks - 1);
+        let feat_passes: &[usize] = if last_feats == f { &[f] } else { &[f, last_feats] };
+        let mut order: Vec<(usize, usize)> = Vec::new();
+        let mut lanes_per: Vec<usize> = Vec::new();
+        let mut bit_sets: Vec<Vec<Vec<Bit>>> = Vec::new();
+        for &feats in feat_passes {
+            let mut refs: Vec<&Ct> = Vec::new();
+            for j in 0..self.out_dim {
+                for b in 0..nblocks {
+                    if self.layout.feats_in_block(self.in_dim, b) == feats {
+                        order.push((j, b));
+                        lanes_per.push(feats);
+                        refs.push(&grads[j][b]);
+                    }
+                }
+            }
+            if refs.is_empty() {
+                continue;
+            }
+            let positions = self.layout.gradient_positions(feats);
+            bit_sets.extend(engine.switch_down_many(&refs, &positions, pre_shift));
+        }
+        // 2. identity recomposition at the weighted positions — one pooled
+        //    fan-out over every weight lane × bit
+        let truth = engine.trivial_bit(true);
+        let jobs: Vec<(&Bit, &Bit, u32)> = bit_sets
+            .iter()
+            .flat_map(|lanes| lanes.iter())
+            .flat_map(|bits| bits.iter().enumerate().map(|(bi, b)| (b, &truth, bit_position(bi))))
+            .collect();
+        let weighted = engine.gate_and_weighted_many(&jobs);
+        // 3. per weight lane: fold its bit contributions, then raise one
+        //    packed group per block at the weight anchors and subtract
+        let bits_per = crate::switch::SWITCH_BITS as usize;
+        let accs: Vec<Bit> = weighted
+            .chunks(bits_per)
+            .map(|chunk| {
+                let mut acc = chunk[0].clone();
+                for w in &chunk[1..] {
+                    acc.add_assign(w);
+                }
+                acc
+            })
+            .collect();
+        let full_pos = self.layout.weight_positions(f);
+        let last_feats = self.layout.feats_in_block(self.in_dim, nblocks - 1);
+        let last_pos = self.layout.weight_positions(last_feats);
+        let mut groups: Vec<(&[Bit], &[usize])> = Vec::new();
+        let mut cursor = 0usize;
+        for (idx, _) in order.iter().enumerate() {
+            let feats = lanes_per[idx];
+            let pos: &[usize] = if feats == f { &full_pos } else { &last_pos };
+            groups.push((&accs[cursor..cursor + feats], pos));
+            cursor += feats;
+        }
+        let steps = engine.switch_up_many(&groups);
+        for (idx, step) in steps.iter().enumerate() {
+            let (j, b) = order[idx];
+            engine.sub_cc(&mut self.w_blocks[j][b], step);
+        }
+    }
+
+    /// Decrypted weight matrix (test/bench introspection): reads every
+    /// weight lane back off its block anchor through the codec.
+    pub fn decrypt_weights(&self, codec: &dyn Codec) -> Vec<Vec<i64>> {
+        (0..self.out_dim)
+            .map(|j| {
+                (0..self.layout.blocks(self.in_dim))
+                    .flat_map(|b| {
+                        let feats = self.layout.feats_in_block(self.in_dim, b);
+                        codec.decrypt_positions(
+                            &self.w_blocks[j][b],
+                            &self.layout.weight_positions(feats),
+                            0,
+                        )
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+impl Layer for PackedFcLayer {
+    fn plan_entry(&self, _in_shape: &[usize], _batch: usize) -> LayerPlanEntry {
+        panic!("PackedFcLayer only compiles under the packed layout (plan_entry_packed)")
+    }
+
+    fn plan_entry_packed(
+        &self,
+        in_shape: &[usize],
+        layout: &PackedLayout,
+        in_packed: bool,
+    ) -> LayerPlanEntry {
+        let in_dim: usize = in_shape.iter().product();
+        assert_eq!(in_dim, self.in_dim, "FC input width mismatch");
+        assert_eq!(layout, &self.layout, "engine/layer layout mismatch");
+        assert_eq!(in_packed, self.in_packed, "input packedness mismatch");
+        LayerPlanEntry {
+            kind: LayerKind::Fc { trainable: true },
+            out_shape: vec![self.out_dim],
+            forward: fc_forward_packed_ops(self.in_dim, self.out_dim, layout, in_packed, 0),
+            error: Some(fc_error_packed_ops(self.in_dim, self.out_dim, layout)),
+            gradient: Some(fc_gradient_packed_ops(self.in_dim, self.out_dim, layout, in_packed)),
+            out_packed: false,
+        }
+    }
+
+    fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {
+        (PackedFcLayer::forward(self, x, engine), LayerState::None)
+    }
+
+    fn backward_error(
+        &self,
+        delta: &EncTensor,
+        _state: &LayerState,
+        engine: &GlyphEngine,
+    ) -> EncTensor {
+        PackedFcLayer::backward_error(self, delta, engine)
+    }
+
+    fn gradients(
+        &self,
+        below: &EncTensor,
+        delta: &EncTensor,
+        engine: &GlyphEngine,
+    ) -> Option<LayerGrads> {
+        Some(PackedFcLayer::gradients(self, below, delta, engine))
+    }
+
+    fn apply_gradients(&mut self, grads: &LayerGrads, grad_shift: u32, engine: &GlyphEngine) {
+        PackedFcLayer::apply_gradients(self, grads, grad_shift, engine);
+    }
+
+    fn as_packed_fc(&self) -> Option<&PackedFcLayer> {
         Some(self)
     }
 }
@@ -366,5 +653,151 @@ mod tests {
         }
         let s = eng.counter.snapshot();
         assert_eq!((s.switch_b2t, s.switch_t2b, s.act_gates), (1, 1, 8));
+    }
+
+    // ---- cross-sample SIMD packed FC ------------------------------------
+
+    use crate::nn::backend::Codec;
+    use crate::nn::tensor::PackedLayout;
+
+    /// Packed input tensor from per-feature sample columns.
+    fn packed_x(
+        codec: &mut dyn Codec,
+        layout: &PackedLayout,
+        cols: &[Vec<i64>],
+        n: usize,
+    ) -> EncTensor {
+        let cts = layout
+            .pack_columns(cols, n)
+            .iter()
+            .map(|coeffs| codec.encrypt_coeffs(coeffs, 0))
+            .collect();
+        EncTensor::packed(cts, vec![cols.len()], PackOrder::Forward, 0, layout.clone())
+    }
+
+    #[test]
+    fn packed_forward_serves_every_sample_per_mac_row() {
+        // batch 4 → stride 8, F = 16 on the test ring; 3 inputs fit one
+        // block, so 2 neurons cost 2 MultCC total (vs 6 per-scalar).
+        let (eng, mut client) = GlyphEngine::setup_packed(EngineProfile::Test, 4, 710);
+        let layout = eng.packed_layout().unwrap().clone();
+        let n = eng.params().n;
+        let w = vec![vec![2i64, -3, 1], vec![1, 4, -2]];
+        let layer = PackedFcLayer::new_encrypted(&w, &mut client, 0, &layout, true, n);
+        let x_cols =
+            vec![vec![5i64, -1, 0, 2], vec![7, 2, -3, 1], vec![-4, 0, 6, -2]];
+        let x = packed_x(&mut client, &layout, &x_cols, n);
+        let u = layer.forward(&x, &eng);
+        assert!(!u.is_packed());
+        assert_eq!(u.lane_base, layout.payload_base());
+        let lanes = layout.lane_positions(PackOrder::Forward, layout.payload_base());
+        for j in 0..2 {
+            let got = client.decrypt_positions(&u.cts[j], &lanes, 0);
+            let want: Vec<i64> = (0..4)
+                .map(|b| (0..3).map(|i| w[j][i] * x_cols[i][b]).sum())
+                .collect();
+            assert_eq!(got, want, "row {j}");
+        }
+        let s = eng.counter.snapshot();
+        assert_eq!((s.mult_cc, s.add_cc), (2, 0));
+    }
+
+    #[test]
+    fn packed_backward_error_lands_on_the_reversed_grid() {
+        let (eng, mut client) = GlyphEngine::setup_packed(EngineProfile::Test, 3, 711);
+        let layout = eng.packed_layout().unwrap().clone();
+        let n = eng.params().n;
+        let w = vec![vec![2i64, -1], vec![3, 5]];
+        let layer = PackedFcLayer::new_encrypted(&w, &mut client, 0, &layout, true, n);
+        // per-neuron reversed deltas (what softmax error / iReLU emit)
+        let d_cols = vec![vec![1i64, -2, 4], vec![3, 0, -1]];
+        let d_cts = d_cols
+            .iter()
+            .map(|col| {
+                let mut rev = col.clone();
+                rev.reverse();
+                client.encrypt_batch(&rev, 0)
+            })
+            .collect();
+        let delta = EncTensor::new(d_cts, vec![2], PackOrder::Reversed, 0);
+        let below = layer.backward_error(&delta, &eng);
+        assert!(below.is_packed());
+        assert_eq!(below.order, PackOrder::Reversed);
+        let pos = layout.block_positions(PackOrder::Reversed, 2);
+        let got = client.decrypt_positions(&below.cts[0], &pos, 0);
+        // lane k·batch + b = Σ_j w[j][k]·δ_j[b]
+        for k in 0..2 {
+            for b in 0..3 {
+                let want: i64 = (0..2).map(|j| w[j][k] * d_cols[j][b]).sum();
+                assert_eq!(got[k * 3 + b], want, "feature {k} sample {b}");
+            }
+        }
+        let s = eng.counter.snapshot();
+        assert_eq!((s.mult_cc, s.add_cc), (2, 1));
+    }
+
+    #[test]
+    fn packed_gradients_and_update_mirror_the_per_weight_path() {
+        // batch 2: full packed SGD step — gradient block products carry the
+        // batch sums at k·stride+1, the update lands on the weight anchors.
+        let (eng, mut client) = GlyphEngine::setup_packed(EngineProfile::Test, 2, 712);
+        let layout = eng.packed_layout().unwrap().clone();
+        let n = eng.params().n;
+        let w = vec![vec![10i64, -6]];
+        let mut layer = PackedFcLayer::new_encrypted(&w, &mut client, 0, &layout, true, n);
+        let x_cols = vec![vec![3i64, -2], vec![5, 1]];
+        let x = packed_x(&mut client, &layout, &x_cols, n);
+        let d_col = vec![2i64, 4];
+        let mut d_rev = d_col.clone();
+        d_rev.reverse();
+        let delta =
+            EncTensor::new(vec![client.encrypt_batch(&d_rev, 0)], vec![1], PackOrder::Reversed, 0);
+        let grads = layer.gradients(&x, &delta, &eng);
+        assert_eq!(grads[0].len(), 1);
+        let sums = client.decrypt_positions(&grads[0][0], &layout.gradient_positions(2), 0);
+        // Σ_b x_i[b]·δ[b]: [3·2 + (−2)·4, 5·2 + 1·4] = [−2, 14]
+        assert_eq!(sums, vec![-2, 14]);
+        // grad_shift 1 → steps [−1, 7] → w = [10 − (−1), −6 − 7]
+        layer.apply_gradients(&grads, 1, &eng);
+        assert_eq!(layer.decrypt_weights(&client), vec![vec![11, -13]]);
+        let s = eng.counter.snapshot();
+        // 1 gradient MultCC, 1 B2T of 2 lanes, 16 PBS + 16 gates, 1 T2B
+        // group of 2 lanes, 1 SubCC
+        assert_eq!((s.mult_cc, s.switch_b2t, s.switch_t2b, s.refresh), (1, 1, 1, 1));
+        assert_eq!((s.extract_lanes, s.repack_lanes, s.act_gates, s.add_cc), (2, 2, 16, 1));
+    }
+
+    #[test]
+    fn packed_partial_final_block_splits_the_switch_calls() {
+        // Force F < in_dim with a partial final block: batch 32 on n=256
+        // → stride 64, F = 2; in_dim 3 → blocks [2, 1].
+        let (eng, mut codec) = GlyphEngine::setup_clear_packed(EngineProfile::Test, 32);
+        let layout = eng.packed_layout().unwrap().clone();
+        assert_eq!(layout.feats_per_ct, 2);
+        let n = eng.params().n;
+        let w = vec![vec![4i64, -2, 7]];
+        let mut layer = PackedFcLayer::new_encrypted(&w, &mut codec, 0, &layout, true, n);
+        let x_cols: Vec<Vec<i64>> =
+            (0..3).map(|i| (0..32).map(|b| ((i + b) % 5) as i64 - 2).collect()).collect();
+        let x = packed_x(&mut codec, &layout, &x_cols, n);
+        let d_col: Vec<i64> = (0..32).map(|b| (b % 3) as i64 - 1).collect();
+        let mut d_rev = d_col.clone();
+        d_rev.reverse();
+        let delta =
+            EncTensor::new(vec![codec.encrypt_batch(&d_rev, 0)], vec![1], PackOrder::Reversed, 0);
+        let grads = layer.gradients(&x, &delta, &eng);
+        layer.apply_gradients(&grads, 0, &eng);
+        let want: Vec<i64> = (0..3)
+            .map(|i| {
+                let g: i64 = (0..32).map(|b| x_cols[i][b] * d_col[b]).sum();
+                w[0][i] - g
+            })
+            .collect();
+        assert_eq!(layer.decrypt_weights(&codec), vec![want]);
+        let s = eng.counter.snapshot();
+        // 2 gradient blocks → 2 B2T / 2 T2B / 2 SubCC, but still 3 weight
+        // lanes extracted/repacked (2 + 1 across the split calls)
+        assert_eq!((s.mult_cc, s.switch_b2t, s.switch_t2b), (2, 2, 2));
+        assert_eq!((s.extract_lanes, s.repack_lanes, s.act_gates), (3, 3, 24));
     }
 }

@@ -42,4 +42,4 @@ pub use backend::{Bit, ClearBackend, ClearCodec, ClearCt, Codec, Ct, PlainVector
 pub use engine::{Backend, ClientKeys, EngineProfile, FheState, GlyphEngine};
 pub use layer::{Layer, LayerGrads, LayerPlanEntry, LayerState};
 pub use network::{ForwardPass, LayerSpec, Network, NetworkBuilder, NetworkError};
-pub use tensor::{EncTensor, PackOrder};
+pub use tensor::{EncTensor, PackOrder, PackedLayout};

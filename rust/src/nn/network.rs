@@ -30,9 +30,9 @@ use super::layer::{
     pool_forward_ops, relu_error_ops, relu_forward_ops, softmax_error_ops, softmax_forward_ops,
     FlattenLayer, Layer, LayerGrads, LayerPlanEntry, LayerState,
 };
-use super::linear::FcLayer;
+use super::linear::{FcLayer, PackedFcLayer};
 use super::pool::AvgPoolLayer;
-use super::tensor::EncTensor;
+use super::tensor::{EncTensor, PackedLayout};
 use crate::coordinator::scheduler::{LayerKind, Plan, PlanLayer, StepPhase};
 use crate::math::rng::GlyphRng;
 use crate::switch::SWITCH_BITS;
@@ -137,6 +137,7 @@ impl LayerSpec {
                     forward: fc_forward_ops(in_dim, *out, *enc, 0),
                     error: Some(fc_error_ops(in_dim, *out, *enc)),
                     gradient: if *enc { Some(fc_gradient_ops(in_dim, *out)) } else { None },
+                    out_packed: false,
                 })
             }
             LayerSpec::Conv { out_ch, k, init, enc } => {
@@ -183,6 +184,7 @@ impl LayerSpec {
                     forward: conv_forward_ops(c, *out_ch, *k, oh, ow, *enc),
                     error: None,
                     gradient: None,
+                    out_packed: false,
                 })
             }
             LayerSpec::BatchNorm { bn } => {
@@ -204,6 +206,7 @@ impl LayerSpec {
                     forward: bn_forward_ops(shape.iter().product()),
                     error: None,
                     gradient: None,
+                    out_packed: false,
                 })
             }
             LayerSpec::AvgPool => {
@@ -220,6 +223,7 @@ impl LayerSpec {
                     out_shape,
                     error: None,
                     gradient: None,
+                    out_packed: false,
                 })
             }
             LayerSpec::Flatten => Ok(LayerPlanEntry {
@@ -228,6 +232,7 @@ impl LayerSpec {
                 forward: Default::default(),
                 error: None,
                 gradient: None,
+                out_packed: false,
             }),
             LayerSpec::Relu { .. } => {
                 let cts: usize = shape.iter().product();
@@ -237,6 +242,7 @@ impl LayerSpec {
                     forward: relu_forward_ops(cts, batch),
                     error: Some(relu_error_ops(cts, batch)),
                     gradient: None,
+                    out_packed: false,
                 })
             }
             LayerSpec::Softmax { bits, .. } => {
@@ -263,6 +269,7 @@ impl LayerSpec {
                     forward: softmax_forward_ops(shape[0], batch, unit.plan_gates_per_lane()),
                     error: Some(softmax_error_ops(shape[0])),
                     gradient: None,
+                    out_packed: false,
                 })
             }
             LayerSpec::Custom { unit } => Ok(unit.plan_entry(shape, batch)),
@@ -510,8 +517,14 @@ impl NetworkBuilder {
         let grad_shift = self.grad_shift;
         let in_shape = self.in_shape.clone();
         let mut units: Vec<NamedUnit> = Vec::with_capacity(self.specs.len());
+        // under the packed engine, whether the *next* unit's forward input
+        // arrives as packed blocks: the trainer packs the network input, and
+        // the flat ReLU re-packs its per-neuron outputs; everything else
+        // hands per-scalar ciphertexts downstream
+        let mut in_packed = engine.packed_layout().is_some();
         for (i, spec) in self.specs.into_iter().enumerate() {
             let name = plan_layers[i].0.name.clone();
+            let spec_is_relu = matches!(spec, LayerSpec::Relu { .. });
             let layer: Box<dyn Layer> = match spec {
                 LayerSpec::Fc { out, init, enc } => {
                     let in_dim = in_shapes[i][0];
@@ -522,10 +535,17 @@ impl NetworkBuilder {
                             })
                             .collect()
                     });
-                    if enc {
-                        Box::new(FcLayer::new_encrypted(&w, client, next_shift[i]))
-                    } else {
-                        Box::new(FcLayer::new_plain(&w, engine, next_shift[i]))
+                    match (enc, engine.packed_layout()) {
+                        (true, Some(layout)) => Box::new(PackedFcLayer::new_encrypted(
+                            &w,
+                            client,
+                            next_shift[i],
+                            layout,
+                            in_packed,
+                            engine.params().n,
+                        )),
+                        (true, None) => Box::new(FcLayer::new_encrypted(&w, client, next_shift[i])),
+                        (false, _) => Box::new(FcLayer::new_plain(&w, engine, next_shift[i])),
                     }
                 }
                 LayerSpec::Conv { init, enc, .. } => {
@@ -551,9 +571,14 @@ impl NetworkBuilder {
                 }),
                 LayerSpec::Custom { unit } => unit,
             };
+            // only the flat (1-D input) ReLU emits packed blocks; every
+            // other unit — packed FC, conv, BN, pool, flatten, CHW ReLU —
+            // hands per-scalar ciphertexts to the unit above
+            in_packed = spec_is_relu && in_shapes[i].len() == 1;
             units.push(NamedUnit { name, layer });
         }
-        let plan = Network::compile_units(&units, &in_shape, engine.batch);
+        let plan =
+            Network::compile_units(&units, &in_shape, engine.batch, engine.packed_layout());
         Ok(Network { units, in_shape, grad_shift, plan })
     }
 }
@@ -591,11 +616,23 @@ pub struct Network {
 }
 
 impl Network {
-    fn compile_units(units: &[NamedUnit], in_shape: &[usize], batch: usize) -> Plan {
+    fn compile_units(
+        units: &[NamedUnit],
+        in_shape: &[usize],
+        batch: usize,
+        layout: Option<&PackedLayout>,
+    ) -> Plan {
         let mut shape = in_shape.to_vec();
+        // packed engines hand the network its input as packed blocks; each
+        // entry's `out_packed` feeds the next unit's `in_packed`
+        let mut in_packed = layout.is_some();
         let mut layers = Vec::with_capacity(units.len());
         for (i, u) in units.iter().enumerate() {
-            let e = u.layer.plan_entry(&shape, batch);
+            let e = match layout {
+                Some(l) => u.layer.plan_entry_packed(&shape, l, in_packed),
+                None => u.layer.plan_entry(&shape, batch),
+            };
+            in_packed = e.out_packed;
             layers.push(PlanLayer {
                 name: u.name.clone(),
                 kind: e.kind,
@@ -611,8 +648,9 @@ impl Network {
 
     /// Compile the schedule for this network under `engine`'s batch width —
     /// the one plan consumed by execution, the cost model and the CLI.
+    /// Packed engines compile the packed schedule (exact per-block counts).
     pub fn compile(&self, engine: &GlyphEngine) -> Plan {
-        Self::compile_units(&self.units, &self.in_shape, engine.batch)
+        Self::compile_units(&self.units, &self.in_shape, engine.batch, engine.packed_layout())
     }
 
     /// Forward pass: walk the plan's forward steps in order.
@@ -714,6 +752,16 @@ impl Network {
     /// Mutable FC access by unit index (checkpoint restore).
     pub fn fc_unit_mut(&mut self, unit: usize) -> Option<&mut FcLayer> {
         self.units.get_mut(unit).and_then(|u| u.layer.as_fc_mut())
+    }
+
+    /// Packed FC layers with their unit indices, bottom-up (weight readback
+    /// for packed networks goes through [`PackedFcLayer::decrypt_weights`]).
+    pub fn packed_fc_units(&self) -> Vec<(usize, &PackedFcLayer)> {
+        self.units
+            .iter()
+            .enumerate()
+            .filter_map(|(i, u)| u.layer.as_packed_fc().map(|fc| (i, fc)))
+            .collect()
     }
 }
 

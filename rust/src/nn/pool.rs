@@ -27,7 +27,7 @@ pub fn avg_pool2(x: &EncTensor, engine: &GlyphEngine) -> EncTensor {
             }
         }
     }
-    EncTensor::new(cts, vec![c, oh, ow], x.order, x.shift + 2)
+    EncTensor::new(cts, vec![c, oh, ow], x.order, x.shift + 2).with_lane_base(x.lane_base)
 }
 
 /// 2×2 stride-2 average pooling as a network unit (AddCC only — the ÷4
@@ -46,7 +46,20 @@ impl Layer for AvgPoolLayer {
             out_shape,
             error: None, // pooling backward folds into neighbours under TL
             gradient: None,
+            out_packed: false,
         }
+    }
+
+    fn plan_entry_packed(
+        &self,
+        in_shape: &[usize],
+        layout: &super::tensor::PackedLayout,
+        in_packed: bool,
+    ) -> LayerPlanEntry {
+        // pooling consumes the clean per-pixel ReLU outputs under the
+        // packed layout too — AddCC counts are position-independent
+        assert!(!in_packed, "pooling consumes per-pixel activation outputs");
+        self.plan_entry(in_shape, layout.batch)
     }
 
     fn forward(&self, x: &EncTensor, engine: &GlyphEngine) -> (EncTensor, LayerState) {

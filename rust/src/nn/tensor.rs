@@ -1,12 +1,23 @@
 //! `EncTensor`: an activation/error tensor under either execution backend.
 //!
-//! One [`Ct`] per network scalar; the mini-batch lives in the polynomial
-//! coefficients. Forward tensors pack sample b at coefficient b; backward
-//! tensors pack sample b at coefficient `batch−1−b` (*reversed*), so that a
-//! forward × backward MultCC leaves the batch-summed product — the SGD
-//! gradient reduction — at coefficient `batch−1` (the negacyclic
-//! convolution trick; DESIGN.md §2.1). The packing convention is
-//! backend-independent: the clear mirror keeps the same coefficient layout.
+//! Two coefficient layouts share the ring:
+//!
+//! * **Per-scalar** (the original layout): one [`Ct`] per network scalar;
+//!   the mini-batch lives in the polynomial coefficients. Forward tensors
+//!   pack sample b at coefficient b; backward tensors pack sample b at
+//!   coefficient `batch−1−b` (*reversed*), so that a forward × backward
+//!   MultCC leaves the batch-summed product — the SGD gradient reduction —
+//!   at coefficient `batch−1` (the negacyclic convolution trick;
+//!   DESIGN.md §2.1).
+//! * **Packed blocks** ([`PackedLayout`]): one [`Ct`] carries a
+//!   `batch × feature` slot block — feature `j` of sample `b` at
+//!   coefficient `(j mod F)·stride + b` — so MAC, switch, and bootstrap
+//!   work is amortized across the whole mini-batch. `stride` is sized so
+//!   that a packed × packed negacyclic product keeps every cross term off
+//!   the payload lanes (see the field docs below).
+//!
+//! The packing conventions are backend-independent: the clear mirror keeps
+//! the same coefficient layout bit-exactly.
 
 use super::backend::Ct;
 
@@ -29,8 +40,173 @@ impl PackOrder {
     }
 }
 
-/// A backend-polymorphic tensor: `cts[i]` holds scalar `i` (row-major over
-/// `shape`) for every sample of the mini-batch.
+/// Cross-sample SIMD packing descriptor: how a `batch × feature` slot block
+/// maps onto one ciphertext's coefficient slots.
+///
+/// Layout invariants (all enforced by [`PackedLayout::for_ring`]):
+///
+/// * `stride ≥ 2·batch − 1`, so a forward lane `b` times a reversed lane
+///   `batch−1−b'` spreads at most `±(batch−1)` coefficients around its
+///   feature's payload slot without touching a neighbouring feature.
+/// * `stride · (2·feats_per_ct − 1) ≤ n`, so the negacyclic wrap of a
+///   packed × packed product never folds garbage back onto payload lanes.
+///
+/// With `F = feats_per_ct`, feature `j` of sample `b` lives at coefficient
+/// `(j mod F)·stride + b` of block `⌊j/F⌋` (forward order), or at
+/// `(F−1−(j mod F))·stride + (batch−1−b)` (reversed order). Packed weight
+/// blocks anchor weight `k` at `(F−1−k)·stride`, so every block's MAC
+/// payload lands at the common base `(F−1)·stride + b`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedLayout {
+    /// Samples interleaved per feature lane (samples-per-ciphertext).
+    pub batch: usize,
+    /// Slot stride between consecutive feature lanes.
+    pub stride: usize,
+    /// Feature lanes per ciphertext (`F`).
+    pub feats_per_ct: usize,
+    /// Occupancy of the batch lanes: `None` = fully occupied; otherwise
+    /// `occupancy[b]` says whether sample lane `b` carries payload (partial
+    /// final mini-batches leave trailing lanes vacant, sparse masks leave
+    /// holes). Vacant lanes encode as zero and decode as zero.
+    pub occupancy: Option<Vec<bool>>,
+}
+
+impl PackedLayout {
+    /// Derive the densest legal layout for `batch` samples in a ring of
+    /// degree `n`: the smallest power-of-two stride that isolates the
+    /// cross-sample spread, then as many feature lanes as fit under the
+    /// no-wrap bound.
+    pub fn for_ring(batch: usize, n: usize) -> Result<Self, String> {
+        if batch == 0 {
+            return Err("packed layout needs at least one sample lane".into());
+        }
+        let stride = (2 * batch - 1).next_power_of_two();
+        if stride > n {
+            return Err(format!(
+                "batch {batch} needs slot stride {stride} which exceeds the ring degree {n}"
+            ));
+        }
+        let feats_per_ct = (n / stride + 1) / 2;
+        debug_assert!(feats_per_ct >= 1 && stride * (2 * feats_per_ct - 1) <= n);
+        Ok(PackedLayout { batch, stride, feats_per_ct, occupancy: None })
+    }
+
+    /// Restrict the layout to a subset of occupied sample lanes.
+    pub fn with_occupancy(mut self, mask: Vec<bool>) -> Self {
+        assert_eq!(mask.len(), self.batch, "occupancy mask must cover every sample lane");
+        self.occupancy = Some(mask);
+        self
+    }
+
+    /// Whether sample lane `b` carries payload.
+    pub fn occupied(&self, b: usize) -> bool {
+        match &self.occupancy {
+            None => true,
+            Some(m) => m[b],
+        }
+    }
+
+    /// Number of ciphertext blocks covering `features` feature lanes.
+    pub fn blocks(&self, features: usize) -> usize {
+        features.div_ceil(self.feats_per_ct)
+    }
+
+    /// Feature lanes carried by block `block` of a `features`-wide tensor
+    /// (the final block may be partial).
+    pub fn feats_in_block(&self, features: usize, block: usize) -> usize {
+        let start = block * self.feats_per_ct;
+        self.feats_per_ct.min(features - start)
+    }
+
+    /// The common payload base of a packed MAC product:
+    /// `(F−1)·stride`. Every block's output lands at `payload_base() + b`.
+    pub fn payload_base(&self) -> usize {
+        (self.feats_per_ct - 1) * self.stride
+    }
+
+    /// Batch-lane positions of a per-scalar ciphertext whose payload sits
+    /// at coefficient `base + b` (forward) — e.g. a packed MAC output at
+    /// [`Self::payload_base`], or a clean post-bootstrap value at base 0.
+    pub fn lane_positions(&self, order: PackOrder, base: usize) -> Vec<usize> {
+        order.positions(self.batch).into_iter().map(|p| base + p).collect()
+    }
+
+    /// Every payload position of a packed block carrying `feats` feature
+    /// lanes, feature-major then sample: lane `k·batch + b` of the result
+    /// is feature `k`, sample `b`. Forward blocks anchor feature `k` at
+    /// `k·stride` with the batch ascending; reversed blocks (FC
+    /// backward-error outputs) anchor it at `(F−1−k)·stride` with the
+    /// batch reversed. Built from the switch layer's position-set
+    /// primitives, so one extract/repack fan-out serves every sample.
+    pub fn block_positions(&self, order: PackOrder, feats: usize) -> Vec<usize> {
+        let anchors = match order {
+            PackOrder::Forward => crate::switch::strided_positions(0, self.stride, feats),
+            PackOrder::Reversed => self.weight_positions(feats),
+        };
+        crate::switch::interleaved_positions(&anchors, self.batch, order == PackOrder::Reversed)
+    }
+
+    /// Positions of the batch-summed gradients inside a packed
+    /// `x_block × reversed δ` product: weight lane `k` at
+    /// `k·stride + batch−1`.
+    pub fn gradient_positions(&self, feats: usize) -> Vec<usize> {
+        crate::switch::strided_positions(self.batch - 1, self.stride, feats)
+    }
+
+    /// Positions of the weight lanes of a packed weight block: weight `k`
+    /// at `(F−1−k)·stride` (top-anchored so every block MACs to the common
+    /// [`Self::payload_base`]).
+    pub fn weight_positions(&self, feats: usize) -> Vec<usize> {
+        (0..feats).map(|k| (self.feats_per_ct - 1 - k) * self.stride).collect()
+    }
+
+    /// Interleave per-feature sample columns (`cols[j][b]` = feature `j`,
+    /// sample `b`) into per-block coefficient vectors, honouring the
+    /// occupancy mask (vacant lanes stay zero). The inverse of
+    /// [`Self::unpack_columns`].
+    pub fn pack_columns(&self, cols: &[Vec<i64>], n: usize) -> Vec<Vec<i64>> {
+        (0..self.blocks(cols.len()))
+            .map(|block| {
+                let mut coeffs = vec![0i64; n];
+                for k in 0..self.feats_in_block(cols.len(), block) {
+                    let col = &cols[block * self.feats_per_ct + k];
+                    assert_eq!(col.len(), self.batch, "every feature column spans the batch");
+                    for (b, &v) in col.iter().enumerate() {
+                        if self.occupied(b) {
+                            coeffs[k * self.stride + b] = v;
+                        }
+                    }
+                }
+                coeffs
+            })
+            .collect()
+    }
+
+    /// Read `features` per-feature sample columns back out of per-block
+    /// coefficient vectors (vacant lanes decode as zero).
+    pub fn unpack_columns(&self, blocks: &[Vec<i64>], features: usize) -> Vec<Vec<i64>> {
+        assert_eq!(blocks.len(), self.blocks(features), "block count must match the layout");
+        (0..features)
+            .map(|j| {
+                let coeffs = &blocks[j / self.feats_per_ct];
+                (0..self.batch)
+                    .map(|b| {
+                        if self.occupied(b) {
+                            coeffs[(j % self.feats_per_ct) * self.stride + b]
+                        } else {
+                            0
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// A backend-polymorphic tensor. Per-scalar tensors (`layout == None`) hold
+/// one `Ct` per network scalar (row-major over `shape`) with the batch at
+/// coefficients `lane_base + b`; packed tensors (`layout == Some`) hold one
+/// `Ct` per [`PackedLayout`] block.
 #[derive(Clone)]
 pub struct EncTensor {
     pub cts: Vec<Ct>,
@@ -38,24 +214,59 @@ pub struct EncTensor {
     pub order: PackOrder,
     /// Fixed-point scale: stored value = real value · 2^shift.
     pub shift: u32,
+    /// `Some` when the cts are packed `batch × feature` blocks.
+    pub layout: Option<PackedLayout>,
+    /// Coefficient offset of sample lane 0 in a per-scalar tensor (packed
+    /// MAC outputs carry their payload at [`PackedLayout::payload_base`]
+    /// instead of coefficient 0). Always 0 for packed-block tensors.
+    pub lane_base: usize,
 }
 
 impl EncTensor {
     pub fn new(cts: Vec<Ct>, shape: Vec<usize>, order: PackOrder, shift: u32) -> Self {
         debug_assert_eq!(cts.len(), shape.iter().product::<usize>());
-        EncTensor { cts, shape, order, shift }
+        EncTensor { cts, shape, order, shift, layout: None, lane_base: 0 }
     }
 
+    /// A packed-block tensor: `cts[B]` carries feature lanes
+    /// `B·F .. B·F+feats_in_block` of the flattened shape.
+    pub fn packed(
+        cts: Vec<Ct>,
+        shape: Vec<usize>,
+        order: PackOrder,
+        shift: u32,
+        layout: PackedLayout,
+    ) -> Self {
+        debug_assert_eq!(cts.len(), layout.blocks(shape.iter().product::<usize>()));
+        EncTensor { cts, shape, order, shift, layout: Some(layout), lane_base: 0 }
+    }
+
+    /// Same tensor with its per-scalar payload anchored at `base + b`.
+    pub fn with_lane_base(mut self, base: usize) -> Self {
+        debug_assert!(self.layout.is_none(), "lane_base applies to per-scalar tensors");
+        self.lane_base = base;
+        self
+    }
+
+    /// Whether the cts are packed `batch × feature` blocks.
+    pub fn is_packed(&self) -> bool {
+        self.layout.is_some()
+    }
+
+    /// Number of *network scalars* (shape product) — equal to `cts.len()`
+    /// on per-scalar tensors, but larger than the block count on packed
+    /// tensors.
     pub fn len(&self) -> usize {
-        self.cts.len()
+        self.shape.iter().product()
     }
 
     pub fn is_empty(&self) -> bool {
         self.cts.is_empty()
     }
 
-    /// Index into a CHW-shaped tensor.
+    /// Index into a CHW-shaped tensor (per-scalar layout only).
     pub fn chw(&self, c: usize, h: usize, w: usize) -> &Ct {
+        debug_assert!(self.layout.is_none(), "chw indexes per-scalar tensors");
         let (_ch, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
         &self.cts[(c * hh + h) * ww + w]
     }
@@ -69,5 +280,53 @@ mod tests {
     fn pack_positions() {
         assert_eq!(PackOrder::Forward.positions(4), vec![0, 1, 2, 3]);
         assert_eq!(PackOrder::Reversed.positions(4), vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn layout_geometry() {
+        // n = 256, batch = 8: stride 16 (≥ 2·8−1), F = (16+1)/2 = 8.
+        let l = PackedLayout::for_ring(8, 256).unwrap();
+        assert_eq!((l.stride, l.feats_per_ct), (16, 8));
+        assert!(l.stride * (2 * l.feats_per_ct - 1) <= 256);
+        assert_eq!(l.payload_base(), 7 * 16);
+        assert_eq!(l.blocks(20), 3);
+        assert_eq!(l.feats_in_block(20, 2), 4);
+
+        // batch = 2 on the test ring: stride 4, F = 32.
+        let l = PackedLayout::for_ring(2, 256).unwrap();
+        assert_eq!((l.stride, l.feats_per_ct), (4, 32));
+
+        // a batch too wide for the ring is rejected up front
+        assert!(PackedLayout::for_ring(200, 256).is_err());
+        assert!(PackedLayout::for_ring(0, 256).is_err());
+    }
+
+    #[test]
+    fn layout_positions() {
+        let l = PackedLayout::for_ring(2, 16).unwrap(); // stride 4, F = 2
+        assert_eq!(l.block_positions(PackOrder::Forward, 2), vec![0, 1, 4, 5]);
+        // reversed: feature k anchored at (F−1−k)·stride, batch reversed
+        assert_eq!(l.block_positions(PackOrder::Reversed, 2), vec![5, 4, 1, 0]);
+        assert_eq!(l.gradient_positions(2), vec![1, 5]);
+        assert_eq!(l.weight_positions(2), vec![4, 0]);
+        assert_eq!(l.lane_positions(PackOrder::Forward, l.payload_base()), vec![4, 5]);
+        assert_eq!(l.lane_positions(PackOrder::Reversed, 0), vec![1, 0]);
+    }
+
+    #[test]
+    fn pack_unpack_columns_roundtrip() {
+        let l = PackedLayout::for_ring(2, 16).unwrap(); // stride 4, F = 2
+        let cols = vec![vec![1, 2], vec![3, 4], vec![5, 6]];
+        let blocks = l.pack_columns(&cols, 16);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(&blocks[0][..6], &[1, 2, 0, 0, 3, 4]);
+        assert_eq!(&blocks[1][..2], &[5, 6]);
+        assert_eq!(l.unpack_columns(&blocks, 3), cols);
+
+        // a sparse occupancy mask zeroes the vacant lane both ways
+        let sparse = l.clone().with_occupancy(vec![true, false]);
+        let blocks = sparse.pack_columns(&cols, 16);
+        assert_eq!(&blocks[0][..6], &[1, 0, 0, 0, 3, 0]);
+        assert_eq!(sparse.unpack_columns(&blocks, 3), vec![vec![1, 0], vec![3, 0], vec![5, 0]]);
     }
 }

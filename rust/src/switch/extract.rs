@@ -376,6 +376,15 @@ pub fn bit_position(i: usize) -> u32 {
     VALUE_POS + (SWITCH_BITS - 1 - i as u32)
 }
 
+/// Positions `base + k·stride` for `k < count` — the extraction fan-out of
+/// a packed (cross-sample SIMD) layout. One `to_bits_many` call over such a
+/// set covers a whole packed block — e.g. every batch-summed weight
+/// gradient of a `PackedLayout` block at `k·stride + batch−1` — so a single
+/// BGV→TFHE switch serves every feature lane at a layer boundary.
+pub fn strided_positions(base: usize, stride: usize, count: usize) -> Vec<usize> {
+    (0..count).map(|k| base + k * stride).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -479,6 +488,13 @@ mod tests {
                 assert_eq!(cb.b, cs.b, "lane {lane} bit {bit} body");
             }
         }
+    }
+
+    #[test]
+    fn strided_positions_cover_a_packed_block() {
+        assert_eq!(strided_positions(7, 16, 4), vec![7, 23, 39, 55]);
+        assert_eq!(strided_positions(0, 1, 3), vec![0, 1, 2]);
+        assert!(strided_positions(5, 16, 0).is_empty());
     }
 
     #[test]

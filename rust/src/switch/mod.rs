@@ -18,8 +18,8 @@
 pub mod extract;
 pub mod repack;
 
-pub use extract::LweExtractor;
-pub use repack::Repacker;
+pub use extract::{strided_positions, LweExtractor};
+pub use repack::{interleaved_positions, Repacker};
 
 /// Historical names of the switch engines (PR ≤ 3 call sites / examples).
 pub type BgvToTfheSwitch = LweExtractor;

@@ -157,11 +157,34 @@ fn raise_with_ring(
     auth.refresh(&trivial)
 }
 
+/// Interleave `batch` sample lanes under each anchor position: lane `b` of
+/// anchor `a` sits at `a + b` (ascending) or at `a + batch−1−b`
+/// (descending — reversed packing). The repacking position sets of a packed
+/// (cross-sample SIMD) layout's TFHE→BGV boundary are built from this: the
+/// anchors are the layout's feature-lane offsets, so one packing key switch
+/// re-packs every sample of the mini-batch at once.
+pub fn interleaved_positions(anchors: &[usize], batch: usize, descending: bool) -> Vec<usize> {
+    let mut out = Vec::with_capacity(anchors.len() * batch);
+    for &a in anchors {
+        for b in 0..batch {
+            out.push(if descending { a + batch - 1 - b } else { a + b });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::switch::tests::fixture;
     use crate::switch::VALUE_POS;
+
+    #[test]
+    fn interleaved_positions_fan_out_the_batch() {
+        assert_eq!(interleaved_positions(&[0, 8], 3, false), vec![0, 1, 2, 8, 9, 10]);
+        assert_eq!(interleaved_positions(&[8, 0], 3, true), vec![10, 9, 8, 2, 1, 0]);
+        assert!(interleaved_positions(&[], 4, false).is_empty());
+    }
 
     #[test]
     fn pack_places_lane_values() {

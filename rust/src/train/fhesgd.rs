@@ -147,6 +147,7 @@ impl Layer for SigmoidTluLayer {
             forward,
             error: Some(error),
             gradient: None,
+            out_packed: false,
         }
     }
 

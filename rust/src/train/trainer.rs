@@ -61,7 +61,9 @@ impl Trainer {
 
     /// Encode one minibatch's inputs, forward-packed, through whichever
     /// codec the backend uses (evaluation needs no labels — on FHE every
-    /// skipped label is a saved encryption).
+    /// skipped label is a saved encryption). Packed engines interleave the
+    /// whole minibatch into `B(features)` block ciphertexts instead of one
+    /// ciphertext per feature — the cross-sample SIMD entry point.
     pub fn encode_inputs(
         &self,
         ds: &Dataset,
@@ -70,6 +72,20 @@ impl Trainer {
         codec: &mut dyn Codec,
     ) -> Result<EncTensor, DataError> {
         let (cols, _labels) = ds.minibatch(start, engine.batch, self.features)?;
+        if let Some(layout) = engine.packed_layout() {
+            let cts = layout
+                .pack_columns(&cols, engine.params().n)
+                .iter()
+                .map(|coeffs| codec.encrypt_coeffs(coeffs, 0))
+                .collect();
+            return Ok(EncTensor::packed(
+                cts,
+                self.net.in_shape.clone(),
+                PackOrder::Forward,
+                0,
+                layout.clone(),
+            ));
+        }
         let x_cts = cols.iter().map(|v| codec.encrypt_batch(v, 0)).collect();
         Ok(EncTensor::new(x_cts, self.net.in_shape.clone(), PackOrder::Forward, 0))
     }
@@ -188,8 +204,10 @@ impl Trainer {
             // scores[k] = class k's per-lane outputs. Softmax heads repack
             // reversed (sample b at coefficient batch−1−b); the FHESGD
             // sigmoid head keeps forward packing (batch 1 in practice).
+            // Packed-layout FC outputs carry the batch at `lane_base + c`.
+            let pos: Vec<usize> = (0..batch).map(|c| c + out.lane_base).collect();
             let scores: Vec<Vec<i64>> =
-                out.cts.iter().map(|ct| codec.decrypt_batch(ct, batch, 0)).collect();
+                out.cts.iter().map(|ct| codec.decrypt_positions(ct, &pos, 0)).collect();
             for b in 0..batch {
                 let lane = match out.order {
                     PackOrder::Reversed => batch - 1 - b,
@@ -259,6 +277,37 @@ mod tests {
         let totals = trainer.net.plan.totals();
         assert_eq!(stats.ops.mult_cc, totals.mult_cc * stats.steps as u64);
         assert_eq!(stats.ops.act_gates, totals.act_gates * stats.steps as u64);
+        let acc = trainer.evaluate(&ds, 24, &engine, &mut codec).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn packed_clear_trainer_runs_an_epoch_and_scores() {
+        let batch = 4;
+        let (engine, mut codec) = GlyphEngine::setup_clear_packed(EngineProfile::Test, batch);
+        let mut rng = GlyphRng::new(11);
+        let net = NetworkBuilder::input_vec(16)
+            .fc(8)
+            .relu(8, 7)
+            .fc(3)
+            .softmax(3, 7)
+            .grad_shift(8)
+            .build(&mut codec, &mut rng, &engine)
+            .unwrap();
+        assert_eq!(net.packed_fc_units().len(), 2, "packed engines build packed FC layers");
+        let mut trainer = Trainer::new(net, 3);
+        let ds = crate::data::synthetic_digits(24, 5, "trainer-test");
+        let stats = trainer.train_epoch(&ds, &engine, &mut codec).unwrap();
+        assert_eq!(stats.steps, 6);
+        assert_eq!(stats.samples, 24);
+        // live op accounting matches the packed plan exactly, per step
+        let totals = trainer.net.plan.totals();
+        assert_eq!(stats.ops.mult_cc, totals.mult_cc * stats.steps as u64);
+        assert_eq!(stats.ops.mult_cp, totals.mult_cp * stats.steps as u64);
+        assert_eq!(stats.ops.add_cc, totals.add_cc * stats.steps as u64);
+        assert_eq!(stats.ops.act_gates, totals.act_gates * stats.steps as u64);
+        assert_eq!(stats.ops.switch_b2t, totals.switch_b2t * stats.steps as u64);
+        assert_eq!(stats.ops.switch_t2b, totals.switch_t2b * stats.steps as u64);
         let acc = trainer.evaluate(&ds, 24, &engine, &mut codec).unwrap();
         assert!((0.0..=1.0).contains(&acc));
     }

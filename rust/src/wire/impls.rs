@@ -11,6 +11,7 @@ use crate::math::poly::RnsPoly;
 use crate::math::rng::GlyphRng;
 use crate::nn::backend::{ClearCt, Ct};
 use crate::nn::engine::{Backend, ClientKeys, FheState, GlyphEngine};
+use crate::nn::tensor::PackedLayout;
 use crate::tfhe::lwe::LweCiphertext;
 use crate::tfhe::params::TfheParams;
 use std::sync::Arc;
@@ -240,6 +241,68 @@ impl WireCodec for Plan {
             steps.push(PlanStep { name, unit, phase, system, switch, ops, fc_switch_overhead });
         }
         Ok(Plan { steps })
+    }
+}
+
+impl WireCodec for PackedLayout {
+    const TAG: [u8; 4] = *b"PKLY";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_len(self.batch);
+        w.put_len(self.stride);
+        w.put_len(self.feats_per_ct);
+        match &self.occupancy {
+            None => w.put_u8(0),
+            Some(mask) => {
+                w.put_u8(1);
+                w.put_len(mask.len());
+                for &b in mask {
+                    w.put_bool(b);
+                }
+            }
+        }
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        let batch = r.u64()? as usize;
+        let stride = r.u64()? as usize;
+        let feats_per_ct = r.u64()? as usize;
+        let occupancy = match r.u8()? {
+            0 => None,
+            1 => {
+                let n = r.len(1)?;
+                let mut mask = Vec::with_capacity(n);
+                for _ in 0..n {
+                    mask.push(r.bool()?);
+                }
+                Some(mask)
+            }
+            other => {
+                return Err(WireError::Malformed(format!("bad occupancy discriminant {other}")))
+            }
+        };
+        if batch == 0 || feats_per_ct == 0 {
+            return Err(WireError::Malformed(format!(
+                "packed layout needs batch ≥ 1 and F ≥ 1 (got batch {batch}, F {feats_per_ct})"
+            )));
+        }
+        if stride < 2 * batch - 1 {
+            return Err(WireError::Malformed(format!(
+                "packed stride {stride} cannot isolate the ±{} cross-sample spread",
+                batch - 1
+            )));
+        }
+        if let Some(mask) = &occupancy {
+            if mask.len() != batch {
+                return Err(WireError::Malformed(format!(
+                    "occupancy mask covers {} lanes, layout batch is {batch}",
+                    mask.len()
+                )));
+            }
+        }
+        Ok(PackedLayout { batch, stride, feats_per_ct, occupancy })
     }
 }
 

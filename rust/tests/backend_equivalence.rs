@@ -23,7 +23,7 @@ use glyph::nn::backend::Codec;
 use glyph::nn::engine::{ClientKeys, EngineProfile, GlyphEngine};
 use glyph::nn::linear::Weight;
 use glyph::nn::network::{Network, NetworkBuilder};
-use glyph::nn::tensor::{EncTensor, PackOrder};
+use glyph::nn::tensor::{EncTensor, PackOrder, PackedLayout};
 
 fn base_seed() -> u64 {
     std::env::var("GLYPH_PROP_SEED")
@@ -315,6 +315,189 @@ fn frozen_conv_transfer_topology_is_bit_identical() {
         build,
         &x_cols,
         vec![1, 14, 14],
+        2,
+        &[1, 0],
+    );
+}
+
+/// Encrypt a minibatch in the cross-sample SIMD layout: feature columns
+/// interleaved into `PackedLayout` blocks, one ciphertext per block.
+fn pack_input(
+    codec: &mut dyn Codec,
+    layout: &PackedLayout,
+    cols: &[Vec<i64>],
+    shape: Vec<usize>,
+    n: usize,
+) -> EncTensor {
+    let cts =
+        layout.pack_columns(cols, n).iter().map(|coeffs| codec.encrypt_coeffs(coeffs, 0)).collect();
+    EncTensor::packed(cts, shape, PackOrder::Forward, 0, layout.clone())
+}
+
+/// Flattened row-major weight readback of every trainable packed FC layer
+/// (comparable to [`weight_snapshot`] of the per-sample reference net).
+fn packed_weight_snapshot(net: &Network, codec: &dyn Codec) -> Vec<i64> {
+    net.packed_fc_units()
+        .iter()
+        .flat_map(|(_, l)| l.decrypt_weights(codec).into_iter().flatten())
+        .collect()
+}
+
+/// Per-class batch readout of an output-unit tensor, honouring its
+/// `lane_base` (packed-MAC softmax inputs sit at `payload_base() + b`;
+/// per-sample tensors at base 0 — the helper covers both).
+fn decode_output(codec: &dyn Codec, t: &EncTensor) -> Vec<Vec<i64>> {
+    let pos: Vec<usize> = (0..BATCH).map(|c| c + t.lane_base).collect();
+    t.cts.iter().map(|ct| codec.decrypt_positions(ct, &pos, 0)).collect()
+}
+
+/// The packed differential contract: build the same network (same
+/// weight-draw seed) on three engines — the per-sample FHE reference, the
+/// packed FHE path, and the packed clear mirror — run one forward +
+/// train_step on the same minibatch, and assert the packed path decrypts
+/// byte-identical logits, batch-summed gradient updates and post-step
+/// weights to the per-sample reference, with the packed live op counters
+/// equal to the packed plan's totals exactly.
+fn assert_packed_matches_per_sample(
+    case: &str,
+    seed: u64,
+    build: impl Fn() -> NetworkBuilder,
+    x_cols: &[Vec<i64>],
+    in_shape: Vec<usize>,
+    classes: usize,
+    sample_classes: &[usize],
+) {
+    let (ref_e, mut ref_c) = GlyphEngine::setup(EngineProfile::Test, BATCH, seed);
+    let (pk_e, mut pk_c) = GlyphEngine::setup_packed(EngineProfile::Test, BATCH, seed ^ 0x9e37);
+    let (pc_e, mut pc_c) = GlyphEngine::setup_clear_packed(EngineProfile::Test, BATCH);
+    let layout = pk_e.packed_layout().expect("packed engine carries a layout").clone();
+
+    let mut net_ref = build()
+        .build(&mut ref_c, &mut GlyphRng::new(seed ^ 0x11), &ref_e)
+        .unwrap_or_else(|e| panic!("case {case} seed {seed}: reference build failed: {e}"));
+    let mut net_pk = build()
+        .build(&mut pk_c, &mut GlyphRng::new(seed ^ 0x11), &pk_e)
+        .unwrap_or_else(|e| panic!("case {case} seed {seed}: packed fhe build failed: {e}"));
+    let mut net_pc = build()
+        .build(&mut pc_c, &mut GlyphRng::new(seed ^ 0x11), &pc_e)
+        .unwrap_or_else(|e| panic!("case {case} seed {seed}: packed clear build failed: {e}"));
+
+    let w0 = weight_snapshot(&net_ref, &ref_c);
+    assert_eq!(
+        packed_weight_snapshot(&net_pk, &pk_c),
+        w0,
+        "case {case} seed {seed}: packed weight blocks must decode to the per-sample matrix"
+    );
+    assert_eq!(
+        packed_weight_snapshot(&net_pc, &pc_c),
+        w0,
+        "case {case} seed {seed}: packed clear weights must encode identically"
+    );
+
+    let x_ref = encode_cols(&mut ref_c, x_cols, in_shape.clone(), PackOrder::Forward);
+    let x_pk = pack_input(&mut pk_c, &layout, x_cols, in_shape.clone(), pk_e.params().n);
+    let x_pc = pack_input(&mut pc_c, &layout, x_cols, in_shape.clone(), pc_e.params().n);
+    let lab_ref = one_hot_labels(&mut ref_c, classes, sample_classes);
+    let lab_pk = one_hot_labels(&mut pk_c, classes, sample_classes);
+    let lab_pc = one_hot_labels(&mut pc_c, classes, sample_classes);
+
+    // logits: one packed forward must decrypt exactly what BATCH per-sample
+    // lanes of the reference forward produce
+    let logits_ref = decode_output(&ref_c, net_ref.forward(&x_ref, &ref_e).output());
+    let logits_pk = decode_output(&pk_c, net_pk.forward(&x_pk, &pk_e).output());
+    let logits_pc = decode_output(&pc_c, net_pc.forward(&x_pc, &pc_e).output());
+    assert_eq!(logits_pk, logits_ref, "case {case} seed {seed}: packed logits diverged");
+    assert_eq!(logits_pc, logits_ref, "case {case} seed {seed}: packed clear logits diverged");
+
+    // one SGD step: packed FHE and packed clear count identically, and the
+    // live counters equal the packed plan's totals exactly
+    let before_pk = pk_e.counter.snapshot();
+    let before_pc = pc_e.counter.snapshot();
+    net_ref.train_step(&x_ref, &lab_ref, &ref_e);
+    net_pk.train_step(&x_pk, &lab_pk, &pk_e);
+    net_pc.train_step(&x_pc, &lab_pc, &pc_e);
+    let delta_pk = pk_e.counter.snapshot().since(&before_pk);
+    let delta_pc = pc_e.counter.snapshot().since(&before_pc);
+    assert_eq!(
+        delta_pk, delta_pc,
+        "case {case} seed {seed}: packed backends must count ops identically"
+    );
+    assert_counts_match(case, seed, delta_pc, net_pc.plan.totals());
+
+    // post-update weights — and therefore the batch-summed gradients that
+    // produced them — must be byte-identical to the per-sample path
+    let w_ref = weight_snapshot(&net_ref, &ref_c);
+    let w_pk = packed_weight_snapshot(&net_pk, &pk_c);
+    let w_pc = packed_weight_snapshot(&net_pc, &pc_c);
+    let grads = |after: &[i64]| -> Vec<i64> {
+        w0.iter().zip(after).map(|(b, a)| b - a).collect::<Vec<_>>()
+    };
+    assert_eq!(
+        grads(&w_pk),
+        grads(&w_ref),
+        "case {case} seed {seed}: packed gradient updates diverged from the per-sample path"
+    );
+    assert_eq!(w_pk, w_ref, "case {case} seed {seed}: packed post-update weights diverged");
+    assert_eq!(w_pc, w_ref, "case {case} seed {seed}: packed clear post-update weights diverged");
+}
+
+#[test]
+fn packed_mlp_train_step_matches_per_sample_path() {
+    let seed = base_seed() ^ 0x9ac_ed;
+    let build = || {
+        NetworkBuilder::input_vec(4)
+            .fc(4)
+            .relu(0, 0)
+            .fc(3)
+            .relu(0, 0)
+            .fc(2)
+            .softmax(3, 0)
+            .grad_shift(0)
+    };
+    let x_cols = vec![vec![40i64, -20], vec![10, 30], vec![-5, 25], vec![7, -13]];
+    assert_packed_matches_per_sample("packed-mlp", seed, build, &x_cols, vec![4], 2, &[0, 1]);
+}
+
+#[test]
+fn packed_frozen_conv_transfer_head_matches_per_sample_path() {
+    let seed = base_seed() ^ 0xcc8;
+    let mut kr = GlyphRng::new(seed ^ 0x77);
+    let c1: Vec<Vec<Vec<Vec<i64>>>> = (0..2)
+        .map(|_| {
+            (0..1)
+                .map(|_| {
+                    (0..3)
+                        .map(|_| (0..3).map(|_| (kr.uniform_mod(7) as i64) - 3).collect())
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    // frozen conv backbone consumes the packed image; the trainable head
+    // crosses both packing seams (flatten re-pack, then packed FC→ReLU→FC)
+    let build = || {
+        NetworkBuilder::input_image(1, 10, 10)
+            .conv_frozen(c1.clone())
+            .batchnorm_identity(2)
+            .relu(0, 0)
+            .avg_pool()
+            .flatten()
+            .fc(4)
+            .relu(0, 0)
+            .fc(2)
+            .softmax(3, 0)
+            .grad_shift(0)
+    };
+    let mut xr = GlyphRng::new(seed ^ 0x88);
+    let x_cols: Vec<Vec<i64>> = (0..10 * 10)
+        .map(|_| (0..BATCH).map(|_| (xr.uniform_mod(17) as i64) - 8).collect())
+        .collect();
+    assert_packed_matches_per_sample(
+        "packed-transfer-cnn",
+        seed,
+        build,
+        &x_cols,
+        vec![1, 10, 10],
         2,
         &[1, 0],
     );

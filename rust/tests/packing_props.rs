@@ -1,0 +1,294 @@
+//! Packing conformance harness, part 1: seeded randomized property tests
+//! for the cross-sample SIMD minibatch layout.
+//!
+//! The core property: `unpack_columns ∘ pack_columns` is the IDENTITY on
+//! per-feature sample columns — across batch sizes, feature counts that
+//! leave the final block partial, sparse occupancy masks (vacant lanes
+//! stay zero in both directions), and every supported power-of-two
+//! plaintext modulus. The same geometry is checked one layer down through
+//! `Plaintext::try_encode_strided` / `try_decode_strided`, through a real
+//! BGV encrypt/decrypt, and at the capacity boundary where one extra
+//! feature lane or sample must produce `EncodingError::StrideOverrun`
+//! instead of silently folding lanes together.
+//!
+//! Every assertion carries the failing trial's seed so a red run is
+//! reproducible: set `GLYPH_PROP_SEED` to replay a base seed (the
+//! `ntt_properties.rs` convention).
+
+use glyph::bgv::{BgvContext, BgvParams, BgvSecretKey, EncodingError, Plaintext};
+use glyph::math::modarith::gen_ntt_primes;
+use glyph::math::GlyphRng;
+use glyph::nn::PackedLayout;
+
+fn base_seed() -> u64 {
+    std::env::var("GLYPH_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(0x5317_c45e_ed00_4242)
+}
+
+/// BGV parameters over a *custom* plaintext modulus `t` (the test primes
+/// are ≡ 1 mod 2^26, so any power-of-two `t` up to 2^26 keeps the Δ maps
+/// exact — the modulus sweep below relies on this).
+fn params_with_t(n: usize, t: u64) -> BgvParams {
+    let align = 1u64 << 26;
+    BgvParams { n, primes: gen_ntt_primes(3, align, 1u64 << 32), t, sigma: 3.2, prime_align: align }
+}
+
+/// Draw a legal layout for ring degree `n`: batch small enough that the
+/// derived stride fits, then a feature count that usually spans several
+/// blocks and usually leaves the last one partial.
+fn draw_layout(rng: &mut GlyphRng, n: usize) -> (PackedLayout, usize) {
+    let max_batch = n / 2; // stride = next_pow2(2·batch−1) ≤ n ⇔ batch ≤ n/2
+    let batch = 1 + rng.uniform_mod(max_batch as u64) as usize;
+    let layout = PackedLayout::for_ring(batch, n)
+        .unwrap_or_else(|e| panic!("for_ring({batch}, {n}) must fit: {e}"));
+    let features = 1 + rng.uniform_mod(3 * layout.feats_per_ct as u64) as usize;
+    (layout, features)
+}
+
+/// Random per-feature sample columns with values in `[−bound, bound]`.
+fn draw_columns(rng: &mut GlyphRng, features: usize, batch: usize, bound: i64) -> Vec<Vec<i64>> {
+    (0..features)
+        .map(|_| {
+            (0..batch).map(|_| rng.uniform_mod(2 * bound as u64 + 1) as i64 - bound).collect()
+        })
+        .collect()
+}
+
+/// The columns a decoder must see: the originals with vacant lanes zeroed.
+fn masked(cols: &[Vec<i64>], layout: &PackedLayout) -> Vec<Vec<i64>> {
+    cols.iter()
+        .map(|col| {
+            col.iter()
+                .enumerate()
+                .map(|(b, &v)| if layout.occupied(b) { v } else { 0 })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn pack_unpack_roundtrip_across_batch_sizes_and_partial_blocks() {
+    for trial in 0..64u64 {
+        let seed = base_seed().wrapping_add(trial);
+        let mut rng = GlyphRng::new(seed);
+        let n = [64usize, 256, 1024][rng.uniform_mod(3) as usize];
+        let (layout, features) = draw_layout(&mut rng, n);
+        let cols = draw_columns(&mut rng, features, layout.batch, 1 << 15);
+
+        let blocks = layout.pack_columns(&cols, n);
+        assert_eq!(
+            blocks.len(),
+            layout.blocks(features),
+            "seed {seed}: block count must match the layout ({features} features, F = {})",
+            layout.feats_per_ct
+        );
+        // Dense layout: every written coefficient is a payload coefficient,
+        // everything else stays zero (a partial final block must not carry
+        // lanes beyond its feature count).
+        for (bi, coeffs) in blocks.iter().enumerate() {
+            let feats = layout.feats_in_block(features, bi);
+            for (c, &v) in coeffs.iter().enumerate() {
+                let lane = c / layout.stride;
+                let sample = c % layout.stride;
+                let is_payload = lane < feats && sample < layout.batch;
+                if !is_payload {
+                    assert_eq!(
+                        v, 0,
+                        "seed {seed}: block {bi} coeff {c} is outside the payload and must be zero"
+                    );
+                }
+            }
+        }
+        assert_eq!(
+            layout.unpack_columns(&blocks, features),
+            cols,
+            "seed {seed}: unpack ∘ pack must be the identity (batch {}, stride {}, {features} \
+             features over n = {n})",
+            layout.batch,
+            layout.stride
+        );
+    }
+}
+
+#[test]
+fn sparse_occupancy_masks_zero_vacant_lanes_both_ways() {
+    for trial in 0..64u64 {
+        let seed = base_seed().wrapping_add(0x1000).wrapping_add(trial);
+        let mut rng = GlyphRng::new(seed);
+        let n = [64usize, 256][rng.uniform_mod(2) as usize];
+        let (dense, features) = draw_layout(&mut rng, n);
+        // Random sparse mask; a trailing-false prefix mask models the
+        // partial final minibatch of an epoch.
+        let mask: Vec<bool> = if rng.uniform_mod(2) == 0 {
+            let filled = 1 + rng.uniform_mod(dense.batch as u64) as usize;
+            (0..dense.batch).map(|b| b < filled).collect()
+        } else {
+            (0..dense.batch).map(|_| rng.uniform_mod(2) == 0).collect()
+        };
+        let layout = dense.with_occupancy(mask.clone());
+        let cols = draw_columns(&mut rng, features, layout.batch, 1 << 15);
+
+        let blocks = layout.pack_columns(&cols, n);
+        // Vacant lanes must encode as zero in every feature lane...
+        for (bi, coeffs) in blocks.iter().enumerate() {
+            for k in 0..layout.feats_in_block(features, bi) {
+                for (b, &occ) in mask.iter().enumerate() {
+                    if !occ {
+                        assert_eq!(
+                            coeffs[k * layout.stride + b],
+                            0,
+                            "seed {seed}: vacant lane {b} of block {bi} lane {k} must pack to zero"
+                        );
+                    }
+                }
+            }
+        }
+        // ...and decode as zero even if a vacant slot somehow carried data.
+        let mut dirty = blocks.clone();
+        if let Some(b) = mask.iter().position(|&occ| !occ) {
+            dirty[0][b] = 7;
+        }
+        assert_eq!(
+            layout.unpack_columns(&dirty, features),
+            masked(&cols, &layout),
+            "seed {seed}: unpack must return the occupancy-masked columns (mask {mask:?})"
+        );
+    }
+}
+
+#[test]
+fn strided_plaintext_roundtrip_across_moduli() {
+    // All supported plaintext moduli are powers of two up to the prime
+    // alignment; sweep the full range including the MAC profile's 2^26.
+    for (ti, &t) in [1u64 << 8, 1 << 12, 1 << 16, 1 << 20, 1 << 26].iter().enumerate() {
+        for trial in 0..8u64 {
+            let seed = base_seed().wrapping_add(0x2000 + (ti as u64) * 0x100).wrapping_add(trial);
+            let mut rng = GlyphRng::new(seed);
+            let n = 256;
+            let p = params_with_t(n, t);
+            let (layout, features) = draw_layout(&mut rng, n);
+            let bound = (t / 2) as i64 - 1;
+            let cols = draw_columns(&mut rng, features, layout.batch, bound);
+
+            // Per block: the strided plaintext encoding must agree with the
+            // layout's own coefficient placement and invert exactly.
+            let packed = layout.pack_columns(&cols, n);
+            for bi in 0..layout.blocks(features) {
+                let feats = layout.feats_in_block(features, bi);
+                let sub = &cols[bi * layout.feats_per_ct..bi * layout.feats_per_ct + feats];
+                let pt = Plaintext::try_encode_strided(sub, layout.stride, &p).unwrap_or_else(|e| {
+                    panic!("seed {seed}: t = 2^{}: encode must fit: {e}", t.trailing_zeros())
+                });
+                assert_eq!(
+                    pt.coeffs, packed[bi],
+                    "seed {seed}: t = 2^{}: encode_strided and pack_columns must place \
+                     coefficients identically (block {bi})",
+                    t.trailing_zeros()
+                );
+                assert_eq!(
+                    pt.try_decode_strided(layout.stride, feats, layout.batch).unwrap(),
+                    sub.to_vec(),
+                    "seed {seed}: t = 2^{}: decode ∘ encode must be the identity",
+                    t.trailing_zeros()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn strided_encoding_survives_bgv_encrypt_decrypt() {
+    for (ti, &t) in [1u64 << 8, 1 << 16, 1 << 26].iter().enumerate() {
+        for trial in 0..2u64 {
+            let seed = base_seed().wrapping_add(0x3000 + (ti as u64) * 0x100).wrapping_add(trial);
+            let mut rng = GlyphRng::new(seed);
+            let n = 256;
+            let ctx = BgvContext::new(params_with_t(n, t));
+            let sk = BgvSecretKey::generate(&ctx, &mut rng);
+            let (layout, features) = draw_layout(&mut rng, n);
+            let feats = features.min(layout.feats_per_ct); // one block end-to-end
+            let bound = ((t / 2) as i64 - 1).min(1 << 20);
+            let cols = draw_columns(&mut rng, feats, layout.batch, bound);
+
+            let pt = Plaintext::encode_strided(&cols, layout.stride, &ctx.params);
+            let ct = sk.encrypt(&pt, &mut rng);
+            let back = sk.decrypt(&ct).try_decode_strided(layout.stride, feats, layout.batch);
+            assert_eq!(
+                back.unwrap(),
+                cols,
+                "seed {seed}: t = 2^{}: a strided packing must survive BGV encrypt/decrypt \
+                 (batch {}, stride {})",
+                t.trailing_zeros(),
+                layout.batch,
+                layout.stride
+            );
+        }
+    }
+}
+
+#[test]
+fn capacity_boundaries_are_exact() {
+    for trial in 0..32u64 {
+        let seed = base_seed().wrapping_add(0x4000).wrapping_add(trial);
+        let mut rng = GlyphRng::new(seed);
+        let n = 256;
+        let p = params_with_t(n, 1 << 16);
+        // Random power-of-two stride; `full` lanes fill the ring exactly.
+        let stride = 1usize << (1 + rng.uniform_mod(8)); // 2..=256
+        let full = n / stride;
+        let batch = 1 + rng.uniform_mod(stride as u64) as usize; // ≤ stride
+        let col = |v: i64| vec![v; batch];
+
+        // Exactly full is accepted and inverts.
+        let cols: Vec<Vec<i64>> = (0..full as i64).map(col).collect();
+        let pt = Plaintext::try_encode_strided(&cols, stride, &p).unwrap_or_else(|e| {
+            panic!("seed {seed}: exactly-full ({full} lanes × stride {stride}) must fit: {e}")
+        });
+        assert_eq!(
+            pt.try_decode_strided(stride, full, batch).unwrap(),
+            cols,
+            "seed {seed}: exactly-full roundtrip"
+        );
+
+        // One feature lane over must overrun, not wrap.
+        let over: Vec<Vec<i64>> = (0..=full as i64).map(col).collect();
+        assert!(
+            matches!(
+                Plaintext::try_encode_strided(&over, stride, &p),
+                Err(EncodingError::StrideOverrun { features, .. }) if features == full + 1
+            ),
+            "seed {seed}: {} lanes × stride {stride} must be a StrideOverrun",
+            full + 1
+        );
+        assert!(
+            pt.try_decode_strided(stride, full + 1, batch).is_err(),
+            "seed {seed}: decode validates the same lane-count geometry"
+        );
+
+        // One sample over the stride window must overrun too.
+        let wide = vec![vec![1i64; stride + 1]];
+        assert!(
+            matches!(
+                Plaintext::try_encode_strided(&wide, stride, &p),
+                Err(EncodingError::StrideOverrun { batch: b, .. }) if b == stride + 1
+            ),
+            "seed {seed}: batch {} in a stride-{stride} window must be a StrideOverrun",
+            stride + 1
+        );
+        assert!(
+            pt.try_decode_strided(stride, full.max(1), stride + 1).is_err(),
+            "seed {seed}: decode validates the same batch geometry"
+        );
+    }
+
+    // The layout constructor enforces the same bound symbolically: a batch
+    // whose derived stride exceeds the ring degree is rejected up front.
+    let err = PackedLayout::for_ring(200, 256).unwrap_err();
+    assert!(err.contains("exceeds the ring degree"), "got: {err}");
+    assert!(PackedLayout::for_ring(0, 256).is_err(), "zero samples is not a layout");
+    // And the densest legal layout saturates the no-wrap bound exactly.
+    let l = PackedLayout::for_ring(128, 256).expect("batch = n/2 is the boundary");
+    assert_eq!((l.stride, l.feats_per_ct), (256, 1));
+}

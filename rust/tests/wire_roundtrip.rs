@@ -10,6 +10,7 @@ use glyph::coordinator::metrics::OpSnapshot;
 use glyph::math::GlyphRng;
 use glyph::nn::backend::{ClearCt, Codec, Ct};
 use glyph::nn::engine::{ClientKeys, EngineProfile, FheState, GlyphEngine};
+use glyph::nn::tensor::PackedLayout;
 use glyph::serve::job::{compiled_plan, weights_digest};
 use glyph::serve::{JobBackend, JobResult, JobSpec, JobState, JobStatus, Request, Response};
 use glyph::tfhe::lwe::LweCiphertext;
@@ -106,6 +107,15 @@ fn self_contained_types_roundtrip_bit_identically() {
     assert_eq!(assert_reencode(&sample_spec(), &(), "JobSpec"), sample_spec());
     assert_reencode(&sample_status(), &(), "JobStatus");
     assert_eq!(assert_reencode(&sample_result(), &(), "JobResult"), sample_result());
+
+    // packed-layout metadata: dense, sparse-occupancy and partial-batch
+    let dense = PackedLayout::for_ring(8, 256).unwrap();
+    assert_eq!(assert_reencode(&dense, &(), "PackedLayout (dense)"), dense);
+    let sparse =
+        PackedLayout::for_ring(4, 64).unwrap().with_occupancy(vec![true, false, true, false]);
+    assert_eq!(assert_reencode(&sparse, &(), "PackedLayout (sparse)"), sparse);
+    let partial = PackedLayout::for_ring(3, 32).unwrap().with_occupancy(vec![true, true, false]);
+    assert_eq!(assert_reencode(&partial, &(), "PackedLayout (partial batch)"), partial);
 
     // a compiled plan (the checkpoint binds to its hash)
     let plan = compiled_plan(&sample_spec()).expect("spec compiles");
@@ -260,6 +270,20 @@ fn damaged_frames_error_descriptively_never_panic() {
 
     let bad_ct = ClearCt { n: 8, t: 16, coeffs: vec![0, 300] };
     assert!(matches!(ClearCt::from_wire(&bad_ct.to_wire(), &()), Err(WireError::Malformed(_))));
+
+    // packed layouts with broken invariants must not decode: a stride that
+    // cannot isolate the cross-sample spread, and a mask of the wrong width
+    let understrided = PackedLayout { batch: 8, stride: 4, feats_per_ct: 2, occupancy: None };
+    assert!(matches!(
+        PackedLayout::from_wire(&understrided.to_wire(), &()),
+        Err(WireError::Malformed(_))
+    ));
+    let short_mask =
+        PackedLayout { batch: 4, stride: 8, feats_per_ct: 2, occupancy: Some(vec![true]) };
+    assert!(matches!(
+        PackedLayout::from_wire(&short_mask.to_wire(), &()),
+        Err(WireError::Malformed(_))
+    ));
 }
 
 /// The values pinned by `tests/data/wire_golden.hex`, in file order.
@@ -294,6 +318,86 @@ fn golden_values() -> Vec<(&'static str, Vec<u8>)> {
         ("request_ping", Request::Ping.to_wire()),
         ("response_pong", Response::Pong.to_wire()),
     ]
+}
+
+/// The values pinned by `tests/data/packing_golden.hex`, in file order:
+/// the PackedLayout frame (dense + sparse occupancy) and the
+/// `pack_columns` coefficient placement, frozen through ClearCt blocks.
+fn packing_golden_values() -> Vec<(&'static str, Vec<u8>)> {
+    let dense = PackedLayout::for_ring(8, 256).unwrap();
+    let small = PackedLayout::for_ring(2, 16).unwrap(); // stride 4, F = 2
+    let sparse = small.clone().with_occupancy(vec![true, false]);
+    let cols = vec![vec![1i64, 2], vec![3, 4], vec![5, 6]];
+    let blocks: Vec<Vec<u8>> = small
+        .pack_columns(&cols, 16)
+        .iter()
+        .map(|coeffs| {
+            ClearCt {
+                n: 16,
+                t: 256,
+                coeffs: coeffs.iter().map(|&v| v.rem_euclid(256) as u64).collect(),
+            }
+            .to_wire()
+        })
+        .collect();
+    vec![
+        ("packed_layout_dense", dense.to_wire()),
+        ("packed_layout_sparse", sparse.to_wire()),
+        ("packed_block0", blocks[0].clone()),
+        ("packed_block1", blocks[1].clone()),
+    ]
+}
+
+#[test]
+fn packing_golden_fixture_locks_layout_bytes_and_slot_placement() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/packing_golden.hex");
+    let live = packing_golden_values();
+
+    if std::env::var("GLYPH_BLESS_GOLDEN").as_deref() == Ok("1") {
+        let mut out = String::from(
+            "# Golden wire fixtures for the cross-sample SIMD packing layer:\n\
+             # `<name> <hex of WireCodec::to_wire()>`. Pins both the PackedLayout frame\n\
+             # format (tag PKLY) and the pack_columns coefficient placement (feature j,\n\
+             # sample b at (j mod F)\u{b7}stride + b) through a ClearCt block. Any byte drift\n\
+             # is a format break; bump the frame VERSION and re-bless with\n\
+             # GLYPH_BLESS_GOLDEN=1 cargo test --test wire_roundtrip.\n",
+        );
+        for (name, bytes) in &live {
+            out.push_str(&format!("{name} {}\n", to_hex(bytes)));
+        }
+        std::fs::write(path, out).unwrap();
+        eprintln!("[blessed {path}]");
+        return;
+    }
+
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("missing golden fixture {path}: {e}"));
+    let mut pinned = std::collections::HashMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, hex) = line.split_once(' ').expect("fixture line is `<name> <hex>`");
+        pinned.insert(name.to_string(), hex.to_string());
+    }
+    assert_eq!(pinned.len(), live.len(), "fixture entry count drifted");
+    for (name, bytes) in &live {
+        let want = pinned.get(*name).unwrap_or_else(|| panic!("fixture has no entry {name}"));
+        let got = to_hex(bytes);
+        assert_eq!(
+            &got, want,
+            "packing wire format of {name} drifted from the golden fixture — if \
+             intentional, bump the frame VERSION and re-bless with GLYPH_BLESS_GOLDEN=1"
+        );
+    }
+    // and the pinned layout bytes still decode to the live geometry
+    let dense = PackedLayout::from_wire(&from_hex(&pinned["packed_layout_dense"]), &()).unwrap();
+    assert_eq!((dense.batch, dense.stride, dense.feats_per_ct), (8, 16, 8));
+    assert_eq!(dense.occupancy, None);
+    let sparse = PackedLayout::from_wire(&from_hex(&pinned["packed_layout_sparse"]), &()).unwrap();
+    assert_eq!((sparse.batch, sparse.stride, sparse.feats_per_ct), (2, 4, 2));
+    assert_eq!(sparse.occupancy, Some(vec![true, false]));
 }
 
 #[test]
