@@ -1,0 +1,104 @@
+//! Forward-only encrypted inference throughput: scoring a frozen MLP
+//! through an [`InferenceSession`] with zero backward steps. Measures the
+//! amortized per-image latency at batch 1 (the interactive floor) against
+//! coefficient-batched and cross-sample packed batch-8 scoring (the
+//! amortization lever), and asserts the forward-only plan still prices the
+//! timed work exactly. Emits `bench_out/BENCH_infer.json`.
+//! `GLYPH_BENCH_FULL=1` switches to the production-shaped crypto profile.
+
+use glyph::bench_util::{full_profile, report_json_with_counters, time_op, BenchRecord};
+use glyph::coordinator::max_threads;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::train::{InferenceSession, MlpConfig};
+
+const IN_DIM: usize = 8;
+const HIDDEN: usize = 6;
+const CLASSES: usize = 3;
+const BATCH: usize = 8;
+const BATCHES: usize = 2;
+
+/// Deterministic 8-bit weight matrices (same model on every path).
+fn weights() -> Vec<Vec<Vec<i64>>> {
+    vec![
+        (0..HIDDEN)
+            .map(|j| (0..IN_DIM).map(|i| ((3 * i + 5 * j) % 15) as i64 - 7).collect())
+            .collect(),
+        (0..CLASSES)
+            .map(|j| (0..HIDDEN).map(|i| ((i * j + 4) % 11) as i64 - 5).collect())
+            .collect(),
+    ]
+}
+
+/// Seconds per scored image at `batch` width. Also proves the timed work
+/// is exactly what the forward-only plan predicted — a bench that drifted
+/// from the plan would be measuring the wrong thing.
+fn time_infer(profile: EngineProfile, batch: usize, packed: bool, iters: usize) -> f64 {
+    let (engine, mut client) = if packed {
+        GlyphEngine::setup_packed(profile, batch, 20260808)
+    } else {
+        GlyphEngine::setup(profile, batch, 20260808)
+    };
+    let config = MlpConfig::tiny(IN_DIM, HIDDEN, CLASSES);
+    let session = InferenceSession::from_weights(config, weights(), &mut client, &engine)
+        .expect("bench session builds");
+    let images = batch * BATCHES;
+    let ds = glyph::data::synthetic_digits(images, 9, "infer-bench");
+    session.scores(&ds, images, &engine, &mut client).expect("warm-up scoring"); // warm-up
+
+    let before = engine.counter.snapshot();
+    let secs = time_op(iters, || {
+        session.scores(&ds, images, &engine, &mut client).expect("scoring runs");
+    });
+    let live = engine.counter.snapshot().since(&before);
+    let predicted =
+        session.plan().totals().to_snapshot().scale((BATCHES * iters) as u64);
+    let diff = live.diff_ignoring(&predicted, &glyph::serve::metrics::UNPREDICTED_OPS);
+    assert!(
+        diff.is_empty(),
+        "timed scoring drifted from the forward-only plan: {}",
+        glyph::coordinator::OpSnapshot::render_diff(&diff)
+    );
+    secs / images as f64
+}
+
+fn main() {
+    let profile = if full_profile() { EngineProfile::Default } else { EngineProfile::Test };
+    let iters = if full_profile() { 1 } else { 2 };
+    eprintln!(
+        "infer bench: {IN_DIM}-{HIDDEN}-{CLASSES} MLP, batch {BATCH}, {} profile",
+        if full_profile() { "full" } else { "test" }
+    );
+
+    // interactive floor: one image per forward pass (batch-1 keys)
+    let secs_single = time_infer(profile, 1, false, iters);
+    // per-scalar coefficient batching at width 8 (for context)
+    let secs_coeff = time_infer(profile, BATCH, false, iters);
+    // the cross-sample packed path
+    let secs_packed = time_infer(profile, BATCH, true, iters);
+    let speedup = secs_single / secs_packed;
+
+    let threads = max_threads();
+    let records = vec![
+        // secs_per_op = amortized seconds per IMAGE, so ops_per_sec = images/sec
+        BenchRecord::new("per_image_batch1", secs_single, threads),
+        BenchRecord::new("per_image_coeff_batch8", secs_coeff, threads),
+        BenchRecord::new("per_image_packed_batch8", secs_packed, threads),
+    ];
+    println!(
+        "infer: batch-1 {:.2} images/sec  coeff-batch8 {:.2}  packed-batch8 {:.2}  \
+         amortization {speedup:.2}x",
+        1.0 / secs_single,
+        1.0 / secs_coeff,
+        1.0 / secs_packed,
+    );
+    if speedup < 2.0 {
+        eprintln!(
+            "warning: packed batch-{BATCH} amortization {speedup:.2}x below the 2x target"
+        );
+    }
+    report_json_with_counters(
+        "infer",
+        &records,
+        &[("batch", BATCH as u64), ("speedup_pct", (speedup * 100.0).round() as u64)],
+    );
+}

@@ -295,6 +295,29 @@ impl Plan {
         Plan::from_layers(&entries)
     }
 
+    /// The forward-only (inference) schedule: the plan with every
+    /// error/gradient step dropped.
+    ///
+    /// [`Plan::from_layers`] emits all forward steps first, in layer order,
+    /// so on a compiled plan this is exactly the forward *prefix* — the
+    /// switch annotations (computed sequentially while building) stay
+    /// valid, [`Plan::validate`] still holds, and [`Plan::totals`] prices
+    /// one batched forward pass exactly. `Network::forward` walks only
+    /// `StepPhase::Forward` steps, so live op counters across one forward
+    /// pass equal this plan's totals (up to the unpredicted relin/
+    /// mod-switch counters), which is the inference-workload half of the
+    /// plan/execution consistency contract.
+    pub fn forward_only(&self) -> Plan {
+        Plan {
+            steps: self
+                .steps
+                .iter()
+                .filter(|s| s.phase == StepPhase::Forward)
+                .cloned()
+                .collect(),
+        }
+    }
+
     /// Number of switches in the plan.
     pub fn switch_count(&self) -> usize {
         self.steps.iter().filter(|s| s.switch != "-").count()
@@ -398,6 +421,56 @@ mod tests {
         // backward truncates below the trainable head: the frozen ReLU never
         // propagates an error.
         assert!(!plan.steps.iter().any(|s| s.name == "Act1-error"));
+    }
+
+    #[test]
+    fn forward_only_drops_every_backward_step() {
+        let plan = mlp_plan();
+        let fwd = plan.forward_only();
+        assert!(fwd.validate());
+        assert!(fwd.steps.iter().all(|s| s.phase == StepPhase::Forward));
+        assert!(!fwd.steps.iter().any(|s| s.name.ends_with("-error")));
+        assert!(!fwd.steps.iter().any(|s| s.name.ends_with("-gradient")));
+        // the forward steps are the plan's prefix, switch annotations intact
+        let n = fwd.steps.len();
+        assert_eq!(n, 6);
+        for (a, b) in plan.steps.iter().zip(&fwd.steps) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.switch, b.switch);
+            assert_eq!(a.system, b.system);
+        }
+    }
+
+    #[test]
+    fn forward_only_totals_are_the_forward_op_counts() {
+        let fc = StepOps { mult_cc: 12, add_cc: 8, ..Default::default() };
+        let act = StepOps { switch_b2t: 4, switch_t2b: 4, act_gates: 56, refresh: 4, ..Default::default() };
+        let plan = Plan::from_layers(&[
+            PlanLayer {
+                name: "FC1".into(),
+                kind: LayerKind::Fc { trainable: true },
+                unit: Some(0),
+                forward: fc,
+                error: Some(fc),
+                gradient: Some(fc),
+            },
+            PlanLayer {
+                name: "Act1".into(),
+                kind: LayerKind::Relu,
+                unit: Some(1),
+                forward: act,
+                error: Some(act),
+                gradient: None,
+            },
+        ]);
+        let fwd = plan.forward_only();
+        let t = fwd.totals();
+        // exactly one FC forward + one Act forward — no backward counts
+        assert_eq!(t.mult_cc, 12);
+        assert_eq!(t.add_cc, 8);
+        assert_eq!(t.act_gates, 56);
+        assert_eq!(t.switch_b2t, 4);
+        assert_eq!(t.switch_t2b, 4);
     }
 
     #[test]

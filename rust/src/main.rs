@@ -19,27 +19,45 @@
 //!                           `--backend clear` runs the bit-exact plaintext
 //!                           mirror, fast enough for full epochs + a test-
 //!                           accuracy report (EXPERIMENTS.md §Backends).
+//! * `infer [--model PATH] [--backend clear|fhe] [--packed] [--batch B]
+//!          [--samples M] [--dims a,b,c] [--mode logits|argmax|topk] [--k K]
+//!          [--seed S]`
+//!                         — forward-only encrypted inference: a trained
+//!                           model (`train-mlp --save-model`, or random
+//!                           weights without `--model`) scores held-out
+//!                           batches under a forward-only compiled plan
+//!                           (zero backward steps), and the run fails if
+//!                           live op counters drift from the plan's totals.
+//!                           On FHE, `--seed` must be the training seed.
 //! * `serve [--addr H:P] [--data-dir DIR] [--workers N]`
 //!                         — the multi-tenant training job server
 //!                           (EXPERIMENTS.md §Serving). With `--data-dir`,
 //!                           jobs checkpoint every K steps and resume across
 //!                           restarts.
-//! * `submit | status | cancel | fetch-result | metrics | ping | shutdown`
+//! * `submit | submit-infer | status | cancel | fetch-result | metrics |
+//!    ping | shutdown`
 //!                         — thin clients for a running server (all take
 //!                           `--addr`; `status`/`cancel`/`fetch-result` take
 //!                           `--id`). `submit` mirrors the train-mlp flags
 //!                           plus `--tenant`, `--seed`, `--checkpoint-every`,
-//!                           `--profile default|test`.
+//!                           `--profile default|test`; `submit-infer` queues
+//!                           a forward-only scoring job, optionally against
+//!                           a completed training job's model (`--model-job`).
 //!
 //! The `examples/` binaries are the full experiment drivers.
 
 use glyph::coordinator::cost;
+use glyph::coordinator::metrics::OpSnapshot;
 use glyph::coordinator::scheduler::Plan;
 use glyph::data::Dataset;
 use glyph::nn::backend::Codec;
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
-use glyph::serve::{JobBackend, JobSpec, RunningServer, ServeClient, ServeConfig};
-use glyph::train::{CnnConfig, GlyphMlp, MlpConfig, Trainer};
+use glyph::serve::{
+    Fetched, InferSpec, JobBackend, JobSpec, RunningServer, ServeClient, ServeConfig,
+};
+use glyph::train::{
+    CnnConfig, GlyphMlp, InferenceSession, MlpConfig, OutputMode, Predictions, Trainer,
+};
 use std::path::PathBuf;
 
 const DEFAULT_ADDR: &str = "127.0.0.1:7421";
@@ -265,11 +283,12 @@ fn main() -> anyhow::Result<()> {
             // the clear mirror needs no keys, so it runs the production-
             // shaped ring (t = 2^26) — full paper headroom for wide MACs;
             // the fhe path stays on the fast test profile
+            let seed = opt_u64("--seed", 20260710)?;
             let (engine, mut codec): (GlyphEngine, Box<dyn Codec>) = if clear {
                 let (e, c) = GlyphEngine::setup_clear(EngineProfile::Default, batch);
                 (e, Box::new(c))
             } else {
-                let (e, c) = GlyphEngine::setup(EngineProfile::Test, batch, 20260710);
+                let (e, c) = GlyphEngine::setup(EngineProfile::Test, batch, seed);
                 (e, Box::new(c))
             };
             let mut rng = glyph::math::GlyphRng::new(1);
@@ -277,10 +296,14 @@ fn main() -> anyhow::Result<()> {
             let mlp = GlyphMlp::new_random(config, codec.as_mut(), &mut rng, &engine)
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             let mut trainer = Trainer::new(mlp.net, classes);
+            let mut total_steps = 0u64;
+            let mut total_seconds = 0.0f64;
             for epoch in 0..epochs {
                 let stats = trainer
                     .train_steps(&train, steps, &engine, codec.as_mut())
                     .map_err(|e| anyhow::anyhow!("{e}"))?;
+                total_steps += stats.steps as u64;
+                total_seconds += stats.seconds;
                 let acc = trainer
                     .evaluate(&test, test.len(), &engine, codec.as_mut())
                     .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -293,6 +316,180 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             println!("ops: {}", engine.counter.snapshot());
+            // Persist the trained model as a checkpoint frame so
+            // `glyph infer --model PATH --seed <same seed>` can serve it.
+            if let Some(path) = opt_str("--save-model")? {
+                let ckpt = glyph::wire::Checkpoint::capture(
+                    &trainer.net,
+                    &engine,
+                    seed,
+                    epochs as u64,
+                    total_steps,
+                    total_seconds,
+                    None,
+                )
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                glyph::wire::write_atomic(&PathBuf::from(&path), &ckpt.to_wire())
+                    .map_err(|e| anyhow::anyhow!("saving model to {path}: {e}"))?;
+                println!("model saved to {path}");
+            }
+        }
+        "infer" => {
+            let backend = opt_str("--backend")?.unwrap_or_else(|| "fhe".into());
+            let clear = match backend.as_str() {
+                "clear" => true,
+                "fhe" => false,
+                other => anyhow::bail!("--backend must be `clear` or `fhe`, got {other:?}"),
+            };
+            let packed = flag("--packed");
+            let batch = opt("--batch", 4)?;
+            let dims = match opt_str("--dims")? {
+                Some(spec) => parse_dims(&spec)?,
+                None => vec![16, 8, 4],
+            };
+            let classes = *dims
+                .last()
+                .ok_or_else(|| anyhow::anyhow!("--dims must name at least one layer width"))?;
+            let samples = opt("--samples", batch * 4)?;
+            let batches = samples / batch;
+            if batches == 0 {
+                anyhow::bail!("--samples {samples} yields no full minibatch of {batch}");
+            }
+            // On FHE this must be the seed the model was *trained* under —
+            // keygen derives from it, and the checkpoint's weight
+            // ciphertexts only decrypt under the training key.
+            let seed = opt_u64("--seed", 20260710)?;
+            let softmax_bits = opt("--softmax-bits", 3)?;
+            let dataset = opt_str("--dataset")?.unwrap_or_else(|| "digits".into());
+            let mode = match opt_str("--mode")?.unwrap_or_else(|| "argmax".into()).as_str() {
+                "logits" => OutputMode::Logits,
+                "argmax" => OutputMode::Argmax,
+                "topk" => OutputMode::TopK(opt("--k", 3)?),
+                other => anyhow::bail!("--mode must be logits|argmax|topk, got {other:?}"),
+            };
+            let test = {
+                let count = samples;
+                match dataset.as_str() {
+                    "digits" => glyph::data::synthetic_digits(count, 99, "cli"),
+                    "mnist" => glyph::data::mnist(false, count, 99),
+                    "cancer" => glyph::data::synthetic_cancer(count, 99),
+                    "svhn" => glyph::data::synthetic_svhn(count, 99),
+                    "cifar" => glyph::data::synthetic_cifar(count, 99),
+                    other => anyhow::bail!(
+                        "--dataset must be digits|mnist|cancer|svhn|cifar, got {other:?}"
+                    ),
+                }
+            };
+            let (engine, mut codec): (GlyphEngine, Box<dyn Codec>) = match (clear, packed) {
+                (true, false) => {
+                    let (e, c) = GlyphEngine::setup_clear(EngineProfile::Default, batch);
+                    (e, Box::new(c))
+                }
+                (true, true) => {
+                    let (e, c) = GlyphEngine::setup_clear_packed(EngineProfile::Default, batch);
+                    (e, Box::new(c))
+                }
+                (false, false) => {
+                    let (e, c) = GlyphEngine::setup(EngineProfile::Test, batch, seed);
+                    (e, Box::new(c))
+                }
+                (false, true) => {
+                    let (e, c) = GlyphEngine::setup_packed(EngineProfile::Test, batch, seed);
+                    (e, Box::new(c))
+                }
+            };
+            let config = MlpConfig::for_dims(dims.clone(), engine.frac_bits(), softmax_bits);
+            let session = match opt_str("--model")? {
+                Some(path) => {
+                    if packed {
+                        anyhow::bail!(
+                            "--packed loads explicit weight matrices; checkpoints restore the \
+                             unpacked layer path (drop --packed or --model)"
+                        );
+                    }
+                    let bytes = std::fs::read(&path)
+                        .map_err(|e| anyhow::anyhow!("reading model {path}: {e}"))?;
+                    let ckpt = glyph::wire::Checkpoint::from_wire(&bytes, &engine)
+                        .map_err(|e| anyhow::anyhow!("decoding model {path}: {e}"))?;
+                    eprintln!(
+                        "model {path}: trained {} steps ({:.2}s) under seed {}",
+                        ckpt.step, ckpt.seconds, ckpt.job_seed
+                    );
+                    InferenceSession::from_checkpoint(config, &ckpt, seed, codec.as_mut(), &engine)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?
+                }
+                None => {
+                    // no model: deterministic random weights (latency and
+                    // plan-conformance probes)
+                    let mut rng = glyph::math::GlyphRng::new(1);
+                    let mlp = GlyphMlp::new_random(config, codec.as_mut(), &mut rng, &engine)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    InferenceSession::from_network(mlp.net, classes)
+                }
+            };
+            eprintln!(
+                "forward-only inference on the {backend} backend{}: dims={dims:?}, \
+                 batch={batch}, {batches} batch(es) of {}",
+                if packed { " (packed)" } else { "" },
+                test.name
+            );
+            // The scoring contract: live counters must equal the forward-
+            // only plan totals × batches exactly. Model build/load ops are
+            // not part of it, so the counter starts clean here.
+            engine.counter.store(&OpSnapshot::default());
+            let t0 = std::time::Instant::now();
+            let preds = session
+                .predict(&test, batches * batch, mode, &engine, codec.as_mut())
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let seconds = t0.elapsed().as_secs_f64();
+            match &preds {
+                Predictions::Logits(rows) => {
+                    for (i, row) in rows.iter().enumerate().take(16) {
+                        println!("sample {i}: {row:?}");
+                    }
+                    if rows.len() > 16 {
+                        println!("… {} more rows", rows.len() - 16);
+                    }
+                }
+                Predictions::Argmax(labels) => {
+                    let correct = labels
+                        .iter()
+                        .zip(&test.labels)
+                        .filter(|&(&p, &l)| p == l % classes)
+                        .count();
+                    println!("predictions (first 16): {:?}", &labels[..labels.len().min(16)]);
+                    println!(
+                        "accuracy {:.3} over {} samples",
+                        correct as f64 / labels.len().max(1) as f64,
+                        labels.len()
+                    );
+                }
+                Predictions::TopK(rows) => {
+                    for (i, row) in rows.iter().enumerate().take(16) {
+                        println!("sample {i}: {row:?}");
+                    }
+                    if rows.len() > 16 {
+                        println!("… {} more rows", rows.len() - 16);
+                    }
+                }
+            }
+            let live = engine.counter.snapshot();
+            let predicted = session.plan().totals().to_snapshot().scale(batches as u64);
+            let drift = glyph::serve::metrics::op_drift(&live, &predicted);
+            println!(
+                "{} images in {seconds:.3}s ({:.1} images/s, {:.4}s/image amortized)",
+                batches * batch,
+                (batches * batch) as f64 / seconds.max(1e-9),
+                seconds / (batches * batch) as f64
+            );
+            println!("ops: {live}");
+            println!(
+                "plan conformance: drift {drift} over predicted counters ({})",
+                if drift == 0 { "live == forward plan totals exactly" } else { "MISMATCH" }
+            );
+            if drift != 0 {
+                anyhow::bail!("live op counters drifted from the forward-only plan by {drift}");
+            }
         }
         "serve" => {
             let config = ServeConfig {
@@ -349,6 +546,41 @@ fn main() -> anyhow::Result<()> {
             let id = connect()?.submit(&spec)?;
             println!("submitted job {id}");
         }
+        "submit-infer" => {
+            let backend = match opt_str("--backend")?.unwrap_or_else(|| "clear".into()).as_str() {
+                "clear" => JobBackend::Clear,
+                "fhe" => JobBackend::Fhe,
+                other => anyhow::bail!("--backend must be `clear` or `fhe`, got {other:?}"),
+            };
+            let profile_default = if backend == JobBackend::Clear { "default" } else { "test" };
+            let profile = match opt_str("--profile")?
+                .unwrap_or_else(|| profile_default.into())
+                .as_str()
+            {
+                "default" => EngineProfile::Default,
+                "test" => EngineProfile::Test,
+                other => anyhow::bail!("--profile must be `default` or `test`, got {other:?}"),
+            };
+            let dims = match opt_str("--dims")? {
+                Some(spec) => parse_dims(&spec)?,
+                None => vec![16, 8, 4],
+            };
+            let spec = InferSpec {
+                tenant: opt_str("--tenant")?.unwrap_or_else(|| "cli".into()),
+                backend,
+                profile,
+                dims: dims.into_iter().map(|d| d as u64).collect(),
+                batch: opt_u64("--batch", 4)?,
+                samples: opt_u64("--samples", 16)?,
+                dataset: opt_str("--dataset")?.unwrap_or_else(|| "digits".into()),
+                seed: opt_u64("--seed", 1)?,
+                softmax_bits: opt_u64("--softmax-bits", 3)?,
+                model_job: opt_u64("--model-job", 0)?,
+            };
+            spec.validate().map_err(|e| anyhow::anyhow!("bad infer spec: {e}"))?;
+            let id = connect()?.submit_infer(&spec)?;
+            println!("submitted infer job {id}");
+        }
         "status" => {
             let st = connect()?.status(req_id()?)?;
             print_status(&st);
@@ -359,16 +591,40 @@ fn main() -> anyhow::Result<()> {
             println!("cancel requested for job {id}");
         }
         "fetch-result" => {
-            let r = connect()?.fetch_result(req_id()?)?;
-            println!(
-                "job {}: {} steps in {:.2}s, test accuracy {:.3}, resumes {}",
-                r.id, r.steps, r.seconds, r.accuracy, r.resumes
-            );
-            println!("  ops: {}", r.ops);
-            println!(
-                "  weights digest {:016x}, logits digest {:016x}",
-                r.weights_digest, r.logits_digest
-            );
+            let id = req_id()?;
+            match connect()?.fetch(id)? {
+                Fetched::Train(r) => {
+                    println!(
+                        "job {}: {} steps in {:.2}s, test accuracy {:.3}, resumes {}",
+                        r.id, r.steps, r.seconds, r.accuracy, r.resumes
+                    );
+                    println!("  ops: {}", r.ops);
+                    println!(
+                        "  weights digest {:016x}, logits digest {:016x}",
+                        r.weights_digest, r.logits_digest
+                    );
+                }
+                Fetched::Infer(r) => {
+                    println!(
+                        "infer job {}: {} images in {} batches, {:.3}s \
+                         ({:.4}s/image amortized), accuracy {:.3}",
+                        r.id,
+                        r.images,
+                        r.batches,
+                        r.seconds,
+                        r.seconds / (r.images.max(1)) as f64,
+                        r.accuracy
+                    );
+                    println!("  ops: {}", r.ops);
+                    println!(
+                        "  logits digest {:016x}, predictions digest {:016x}",
+                        r.logits_digest, r.predictions_digest
+                    );
+                }
+                Fetched::Cancelled => {
+                    println!("job {id} was cancelled; no result will be produced");
+                }
+            }
         }
         "metrics" => {
             print!("{}", connect()?.metrics()?);
@@ -382,13 +638,18 @@ fn main() -> anyhow::Result<()> {
             println!("server shutting down");
         }
         other => {
-            eprintln!("unknown command {other}; commands: info, plan, microbench, tables, train-mlp,");
-            eprintln!("  serve, submit, status, cancel, fetch-result, metrics, ping, shutdown");
+            eprintln!("unknown command {other}; commands: info, plan, microbench, tables, train-mlp, infer,");
+            eprintln!("  serve, submit, submit-infer, status, cancel, fetch-result, metrics, ping, shutdown");
             eprintln!("train-mlp flags: --backend clear|fhe (default fhe), --steps N, --epochs E,");
-            eprintln!("  --batch B, --dims a,b,c, --samples M, --dataset digits|mnist|cancer|svhn|cifar");
+            eprintln!("  --batch B, --dims a,b,c, --samples M, --dataset digits|mnist|cancer|svhn|cifar,");
+            eprintln!("  --seed S, --save-model PATH (persist the trained model for `infer`)");
+            eprintln!("infer flags: --model PATH (default: random weights), --backend clear|fhe,");
+            eprintln!("  --packed, --batch B, --samples M, --dims a,b,c, --dataset ...,");
+            eprintln!("  --mode logits|argmax|topk, --k K, --seed S (FHE: the training seed)");
             eprintln!("serve flags: --addr H:P (default {DEFAULT_ADDR}), --data-dir DIR, --workers N");
             eprintln!("submit flags: train-mlp flags plus --tenant, --seed, --checkpoint-every K,");
             eprintln!("  --steps-per-epoch N, --eval-samples M, --softmax-bits B, --profile default|test");
+            eprintln!("submit-infer flags: submit flags (no epochs/checkpoints) plus --model-job ID");
             std::process::exit(2);
         }
     }

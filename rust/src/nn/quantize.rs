@@ -42,6 +42,73 @@ pub fn requantize_shift(xs: &[i64], shift: u32) -> Vec<i64> {
         .collect()
 }
 
+/// One float weight matrix requantized into the 8-bit integer pipeline.
+#[derive(Clone, Debug)]
+pub struct ImportedLayer {
+    /// `weights[out][in]`, every entry in −127..=127.
+    pub weights: Vec<Vec<i64>>,
+    /// Power-of-two scale: original ≈ quantized · 2^exponent.
+    pub exponent: i32,
+    /// The [`shift_for`]-chosen requantization shift a following activation
+    /// must apply to bring this layer's worst-case MAC accumulator back to
+    /// 8-bit range.
+    pub act_shift: u32,
+    /// Bits the worst-case signed accumulator (127·127·fan_in) occupies.
+    pub acc_bits: u32,
+}
+
+/// Import externally-trained float weight matrices into the 8-bit integer
+/// pipeline (per-layer SWALP-style power-of-two quantization), checking the
+/// worst-case MAC accumulator of every layer against the plan's bit budget
+/// — the accumulator-bit-width discipline of the TFHE inference line
+/// (arXiv 2302.10906). `layers[l]` is `[out][in]`, `in_dim` the input
+/// feature width, `acc_budget_bits` the plaintext-modulus bit budget (e.g.
+/// `log2 t` = 26 on the MAC profile). A layer whose accumulator cannot fit
+/// is refused with the layer index and required width named, instead of
+/// silently wrapping mid-inference.
+pub fn import_f64_weights(
+    layers: &[Vec<Vec<f64>>],
+    in_dim: usize,
+    acc_budget_bits: u32,
+) -> Result<Vec<ImportedLayer>, String> {
+    if layers.is_empty() {
+        return Err("no weight matrices to import".into());
+    }
+    let mut expect_in = in_dim;
+    let mut out = Vec::with_capacity(layers.len());
+    for (l, m) in layers.iter().enumerate() {
+        if m.is_empty() || m[0].is_empty() {
+            return Err(format!("layer {l}: empty weight matrix"));
+        }
+        let fan_in = m[0].len();
+        if m.iter().any(|row| row.len() != fan_in) {
+            return Err(format!("layer {l}: ragged weight matrix"));
+        }
+        if fan_in != expect_in {
+            return Err(format!(
+                "layer {l}: expects {fan_in} inputs but the layer below produces {expect_in}"
+            ));
+        }
+        // per-tensor power-of-two scale off the max-abs statistic
+        let flat: Vec<f64> = m.iter().flatten().copied().collect();
+        let (vs, exponent) = quantize_i8(&flat);
+        let weights: Vec<Vec<i64>> = vs.chunks(fan_in).map(|c| c.to_vec()).collect();
+        // worst-case signed accumulator: |x| ≤ 127, |w| ≤ 127, fan_in terms
+        let max_acc = 127i64 * 127 * fan_in as i64;
+        let acc_bits = 64 - max_acc.leading_zeros() + 1; // + sign bit
+        if acc_bits > acc_budget_bits {
+            return Err(format!(
+                "layer {l}: worst-case accumulator needs {acc_bits} bits \
+                 (fan-in {fan_in}), plan budget is {acc_budget_bits} — \
+                 the MAC would wrap mid-inference"
+            ));
+        }
+        out.push(ImportedLayer { weights, exponent, act_shift: shift_for(max_acc), acc_bits });
+        expect_in = m.len();
+    }
+    Ok(out)
+}
+
 /// Choose the shift that brings `max_abs` into 8-bit range.
 pub fn shift_for(max_abs: i64) -> u32 {
     let mut s = 0;
@@ -80,6 +147,43 @@ mod tests {
     fn requantize_matches_switch_semantics() {
         // matches switch::extract::quantize_plain's round-to-nearest
         assert_eq!(requantize_shift(&[5 << 8, -(5i64 << 8), (5 << 8) + 200], 8), vec![5, -5, 6]);
+    }
+
+    #[test]
+    fn import_quantizes_each_layer_to_8bit() {
+        // a 4-3-2 float MLP, values spread over different magnitudes
+        let l0: Vec<Vec<f64>> = (0..3)
+            .map(|j| (0..4).map(|i| (j as f64 - 1.0) * 0.8 + i as f64 * 0.13).collect())
+            .collect();
+        let l1: Vec<Vec<f64>> = (0..2).map(|j| (0..3).map(|i| (i + j) as f64 * 21.5 - 30.0).collect()).collect();
+        let imported = import_f64_weights(&[l0.clone(), l1], 4, 26).unwrap();
+        assert_eq!(imported.len(), 2);
+        assert_eq!(imported[0].weights.len(), 3);
+        assert_eq!(imported[0].weights[0].len(), 4);
+        assert!(imported.iter().all(|il| il.weights.iter().flatten().all(|&w| w.abs() <= 127)));
+        // dequantized weights approximate the originals within one ulp
+        let ulp = 2f64.powi(imported[0].exponent);
+        for (qrow, frow) in imported[0].weights.iter().zip(&l0) {
+            for (&q, &x) in qrow.iter().zip(frow) {
+                assert!((q as f64 * ulp - x).abs() <= ulp, "{q} vs {x}");
+            }
+        }
+        // act_shift brings the worst-case accumulator back under 8 bits
+        assert_eq!(imported[0].act_shift, shift_for(127 * 127 * 4));
+    }
+
+    #[test]
+    fn import_refuses_accumulator_overflow() {
+        // fan-in 784: accumulator needs ~24 magnitude bits; a 16-bit budget
+        // must refuse with the layer and widths named
+        let wide = vec![vec![0.5f64; 784]; 4];
+        let err = import_f64_weights(&[wide], 784, 16).unwrap_err();
+        assert!(err.contains("layer 0") && err.contains("16"), "{err}");
+        // geometry chain mismatches are named too
+        let l0 = vec![vec![0.1f64; 4]; 3];
+        let l1 = vec![vec![0.1f64; 5]; 2]; // expects 5, gets 3
+        let err = import_f64_weights(&[l0, l1], 4, 26).unwrap_err();
+        assert!(err.contains("layer 1"), "{err}");
     }
 
     #[test]

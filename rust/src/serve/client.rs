@@ -1,7 +1,10 @@
 //! Blocking client for the serve protocol. Used by the CLI subcommands
 //! (`glyph submit`/`status`/...), the smoke tests and the bench.
 
-use super::protocol::{read_frame, write_frame, JobResult, JobSpec, JobStatus, Request, Response};
+use super::protocol::{
+    read_frame, write_frame, InferResult, InferSpec, JobResult, JobSpec, JobStatus, Request,
+    Response,
+};
 use crate::wire::WireCodec;
 use std::fmt;
 use std::io;
@@ -47,6 +50,15 @@ impl From<crate::wire::WireError> for ClientError {
     }
 }
 
+/// What [`ServeClient::fetch`] found for a job in a terminal state.
+#[derive(Clone, Debug)]
+pub enum Fetched {
+    Train(JobResult),
+    Infer(InferResult),
+    /// The job was cancelled and will never produce a result.
+    Cancelled,
+}
+
 /// One TCP connection to a glyph server; requests are serialized on it.
 pub struct ServeClient {
     stream: TcpStream,
@@ -89,9 +101,28 @@ impl ServeClient {
         }
     }
 
+    pub fn submit_infer(&mut self, spec: &InferSpec) -> Result<u64, ClientError> {
+        match self.request(&Request::SubmitInfer(spec.clone()))? {
+            Response::Submitted { id } => Ok(id),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
     pub fn fetch_result(&mut self, id: u64) -> Result<JobResult, ClientError> {
         match self.request(&Request::FetchResult { id })? {
             Response::Result(result) => Ok(result),
+            other => Err(ClientError::Unexpected(format!("{other:?}"))),
+        }
+    }
+
+    /// Kind-agnostic result fetch: training and inference results both
+    /// land here, as does the terminal `Cancelled` answer a cancelled job
+    /// gives pollers (so they stop instead of retrying an `Error`).
+    pub fn fetch(&mut self, id: u64) -> Result<Fetched, ClientError> {
+        match self.request(&Request::FetchResult { id })? {
+            Response::Result(result) => Ok(Fetched::Train(result)),
+            Response::InferResult(result) => Ok(Fetched::Infer(result)),
+            Response::Cancelled { .. } => Ok(Fetched::Cancelled),
             other => Err(ClientError::Unexpected(format!("{other:?}"))),
         }
     }

@@ -11,7 +11,10 @@
 //! checkpoint boundary and resumed in a fresh process produces final
 //! weights, logits and op counters byte-identical to an uninterrupted run.
 
-use super::protocol::{JobBackend, JobResult, JobSpec, JobState, JobStatus};
+use super::lock_clean;
+use super::protocol::{
+    InferResult, InferSpec, JobBackend, JobKind, JobResult, JobSpec, JobState, JobStatus,
+};
 use crate::coordinator::metrics::OpSnapshot;
 use crate::coordinator::scheduler::Plan;
 use crate::data::{DataError, Dataset};
@@ -20,7 +23,8 @@ use crate::nn::backend::{ClearCodec, Codec};
 use crate::nn::engine::{ClientKeys, GlyphEngine};
 use crate::nn::linear::Weight;
 use crate::nn::network::{Network, NetworkError};
-use crate::train::{GlyphMlp, MlpConfig, Trainer};
+use crate::train::infer::argmax_rows;
+use crate::train::{GlyphMlp, InferError, InferenceSession, MlpConfig, Trainer};
 use crate::wire::{fnv1a64, write_atomic, Checkpoint, WireCodec, WireError, WireWriter};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -75,10 +79,46 @@ impl From<std::io::Error> for JobError {
     }
 }
 
+impl From<InferError> for JobError {
+    fn from(e: InferError) -> Self {
+        match e {
+            InferError::Network(e) => JobError::Network(e),
+            InferError::Wire(e) => JobError::Wire(e),
+            InferError::Data(e) => JobError::Data(e),
+            InferError::Import(msg) => JobError::Spec(msg),
+        }
+    }
+}
+
+/// What a queued job will run: a training spec or an inference spec. The
+/// queue, worker pool, persistence layout and status surface are shared;
+/// only the runner entry point differs.
+#[derive(Clone, Debug)]
+pub enum JobPayload {
+    Train(JobSpec),
+    Infer(InferSpec),
+}
+
+impl JobPayload {
+    pub fn kind(&self) -> JobKind {
+        match self {
+            JobPayload::Train(_) => JobKind::Train,
+            JobPayload::Infer(_) => JobKind::Infer,
+        }
+    }
+
+    pub fn tenant(&self) -> &str {
+        match self {
+            JobPayload::Train(s) => &s.tenant,
+            JobPayload::Infer(s) => &s.tenant,
+        }
+    }
+}
+
 /// Shared server↔worker view of one job.
 pub struct JobHandle {
     pub id: u64,
-    pub spec: JobSpec,
+    pub payload: JobPayload,
     /// Set by `cancel` requests; the runner checks it between chunks.
     pub cancel: AtomicBool,
     status: Mutex<JobStatus>,
@@ -87,9 +127,19 @@ pub struct JobHandle {
 impl JobHandle {
     pub fn new(id: u64, spec: JobSpec) -> JobHandle {
         let total_steps = spec.epochs * planned_steps_per_epoch(&spec);
+        JobHandle::with_payload(id, JobPayload::Train(spec), total_steps)
+    }
+
+    pub fn new_infer(id: u64, spec: InferSpec) -> JobHandle {
+        let total_steps = spec.samples / spec.batch.max(1);
+        JobHandle::with_payload(id, JobPayload::Infer(spec), total_steps)
+    }
+
+    fn with_payload(id: u64, payload: JobPayload, total_steps: u64) -> JobHandle {
         let status = JobStatus {
             id,
-            tenant: spec.tenant.clone(),
+            tenant: payload.tenant().to_string(),
+            kind: payload.kind(),
             state: JobState::Queued,
             epoch: 0,
             step: 0,
@@ -98,17 +148,35 @@ impl JobHandle {
             resumes: 0,
             live_ops: OpSnapshot::default(),
             predicted_ops: OpSnapshot::default(),
+            images: 0,
+            seconds: 0.0,
             message: String::new(),
         };
-        JobHandle { id, spec, cancel: AtomicBool::new(false), status: Mutex::new(status) }
+        JobHandle { id, payload, cancel: AtomicBool::new(false), status: Mutex::new(status) }
+    }
+
+    /// The training spec, if this is a training job.
+    pub fn train_spec(&self) -> Option<&JobSpec> {
+        match &self.payload {
+            JobPayload::Train(s) => Some(s),
+            JobPayload::Infer(_) => None,
+        }
+    }
+
+    /// The inference spec, if this is an inference job.
+    pub fn infer_spec(&self) -> Option<&InferSpec> {
+        match &self.payload {
+            JobPayload::Train(_) => None,
+            JobPayload::Infer(s) => Some(s),
+        }
     }
 
     pub fn status(&self) -> JobStatus {
-        self.status.lock().unwrap().clone()
+        lock_clean(&self.status).clone()
     }
 
     pub fn update<F: FnOnce(&mut JobStatus)>(&self, f: F) {
-        f(&mut self.status.lock().unwrap());
+        f(&mut lock_clean(&self.status));
     }
 }
 
@@ -155,8 +223,8 @@ impl JobCodec {
     }
 }
 
-fn load_dataset(spec: &JobSpec, train_split: bool, count: usize, seed: u64) -> Result<Dataset, JobError> {
-    Ok(match spec.dataset.as_str() {
+fn load_dataset(dataset: &str, train_split: bool, count: usize, seed: u64) -> Result<Dataset, JobError> {
+    Ok(match dataset {
         "digits" => crate::data::synthetic_digits(count, seed, "serve"),
         // real IDX files ignore the seed; evaluation must read the held-out
         // split, not a train-set prefix
@@ -176,10 +244,27 @@ pub fn job_config(spec: &JobSpec) -> Result<MlpConfig, JobError> {
     Ok(MlpConfig::for_dims(dims, spec.profile.frac_bits(), spec.softmax_bits as usize))
 }
 
+/// The inference spec's derived MLP config (same shape contract).
+pub fn infer_config(spec: &InferSpec) -> Result<MlpConfig, JobError> {
+    spec.validate().map_err(JobError::Spec)?;
+    let dims: Vec<usize> = spec.dims.iter().map(|&d| d as usize).collect();
+    Ok(MlpConfig::for_dims(dims, spec.profile.frac_bits(), spec.softmax_bits as usize))
+}
+
 /// Shape-only plan compilation for a spec (submit-time validation + the
 /// metrics endpoint's per-step prediction; no keys are generated).
 pub fn compiled_plan(spec: &JobSpec) -> Result<Plan, JobError> {
     job_config(spec)?.builder()?.compile(spec.batch as usize).map_err(JobError::Network)
+}
+
+/// Forward-only plan compilation for an inference spec: the full training
+/// plan's forward prefix, which is exactly what one scored minibatch costs.
+pub fn compiled_infer_plan(spec: &InferSpec) -> Result<Plan, JobError> {
+    Ok(infer_config(spec)?
+        .builder()?
+        .compile(spec.batch as usize)
+        .map_err(JobError::Network)?
+        .forward_only())
 }
 
 /// FNV-1a over the canonical wire encoding of every trainable weight
@@ -218,9 +303,32 @@ fn step_delay_ms() -> u64 {
     std::env::var("GLYPH_SERVE_STEP_DELAY_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
 }
 
+/// Test-support fault injection: `GLYPH_SERVE_PANIC_ONCE=<step>` makes the
+/// first job to reach that global step panic mid-run, exactly once per
+/// process. The hardening tests use it to prove a worker panic degrades one
+/// job to `Failed` while the server keeps answering. Unset in production.
+static PANIC_FIRED: AtomicBool = AtomicBool::new(false);
+
+fn maybe_panic_once(global: u64) {
+    let Some(at) = std::env::var("GLYPH_SERVE_PANIC_ONCE").ok().and_then(|v| v.parse::<u64>().ok())
+    else {
+        return;
+    };
+    if global >= at && !PANIC_FIRED.swap(true, Ordering::SeqCst) {
+        panic!("injected fault: GLYPH_SERVE_PANIC_ONCE fired at step {global}");
+    }
+}
+
 /// The checkpoint file inside a job directory.
 pub fn checkpoint_path(dir: &Path) -> PathBuf {
     dir.join("checkpoint.bin")
+}
+
+/// The persisted final model inside a completed training job's directory
+/// (a [`Checkpoint`] frame captured after the last step; what inference
+/// jobs load via `model_job`).
+pub fn model_path(dir: &Path) -> PathBuf {
+    dir.join("model.bin")
 }
 
 /// Run (or resume) a job. `dir` is the job's persistence directory — with
@@ -232,10 +340,18 @@ pub fn run_job(
     dir: Option<&Path>,
     opts: &RunOptions,
 ) -> Result<RunOutcome, JobError> {
-    let spec = &handle.spec;
+    let spec = handle
+        .train_spec()
+        .ok_or_else(|| JobError::Spec("run_job invoked on a non-training job".into()))?;
     let config = job_config(spec)?;
     let batch = spec.batch as usize;
-    let classes = *spec.dims.last().expect("validated") as usize;
+    // `job_config` validated dims above, but never panic on a malformed
+    // spec — a worker thread's panic must not be reachable from user input
+    let classes = *spec
+        .dims
+        .last()
+        .ok_or_else(|| JobError::Spec("dims is empty: no output layer width".into()))?
+        as usize;
 
     // Engine + codec. Keygen (FHE) is deterministic from the spec seed, so
     // a resumed run regenerates the identical key material.
@@ -251,13 +367,13 @@ pub fn run_job(
     };
 
     // Datasets: split seeds derive from the job seed.
-    let train = load_dataset(spec, true, spec.samples as usize, spec.seed ^ 0x7261)?;
+    let train = load_dataset(&spec.dataset, true, spec.samples as usize, spec.seed ^ 0x7261)?;
     let eval_n = if spec.eval_samples > 0 {
         spec.eval_samples as usize
     } else {
         ((spec.samples / 4) as usize).max(batch)
     };
-    let test = load_dataset(spec, false, eval_n, spec.seed ^ 0x7465)?;
+    let test = load_dataset(&spec.dataset, false, eval_n, spec.seed ^ 0x7465)?;
 
     // Network: initial weight draws and their encryptions replay the
     // original build exactly (same seeds), then a checkpoint — if any —
@@ -339,6 +455,7 @@ pub fn run_job(
         if delay > 0 {
             std::thread::sleep(std::time::Duration::from_millis(delay * stats.steps as u64));
         }
+        maybe_panic_once(global);
         publish(global, engine.counter.snapshot());
 
         if ce > 0 && global % ce == 0 && global < total {
@@ -368,6 +485,28 @@ pub fn run_job(
     // Training-only op totals are the SLA signal (plan totals × steps);
     // snapshot them before evaluation adds its forward-pass ops.
     let train_ops = engine.counter.snapshot();
+
+    // Persist the final model so inference jobs (`model_job = this id`)
+    // and `glyph infer --model` can serve it after the checkpoint below is
+    // deleted. Captured before evaluation so its op counters are the
+    // training-only totals.
+    if let Some(d) = dir {
+        let client_rng = match &codec {
+            JobCodec::Fhe(ck) => Some(ck.rng.state()),
+            JobCodec::Clear(_) => None,
+        };
+        let model = Checkpoint::capture(
+            &trainer.net,
+            &engine,
+            spec.seed,
+            spec.epochs,
+            total,
+            seconds,
+            client_rng,
+        )?;
+        write_atomic(&model_path(d), &model.to_wire())?;
+    }
+
     let scores = trainer.eval_scores(&test, eval_n, &engine, codec.as_dyn())?;
     let mut correct = 0usize;
     for (i, row) in scores.iter().enumerate() {
@@ -394,4 +533,145 @@ pub fn run_job(
         st.predicted_ops = per_step.scale(total);
     });
     Ok(RunOutcome::Completed(result))
+}
+
+/// How a [`run_infer_job`] invocation ended. Inference has no checkpoints
+/// to halt at — a cancelled or crashed job simply re-scores from scratch.
+#[derive(Debug)]
+pub enum InferOutcome {
+    Completed(InferResult),
+    Cancelled,
+}
+
+fn predictions_digest(labels: &[usize]) -> u64 {
+    let mut w = WireWriter::new();
+    let as_u64: Vec<u64> = labels.iter().map(|&l| l as u64).collect();
+    w.put_u64s(&as_u64);
+    fnv1a64(&w.into_bytes())
+}
+
+/// Run an inference job: load (or deterministically synthesize) the model,
+/// freeze it behind a forward-only plan, and score `samples` held-out
+/// inputs minibatch by minibatch, publishing progress and honouring
+/// cancellation between batches.
+///
+/// `dir` is the *job's* persistence directory; the model referenced by
+/// `spec.model_job` is read from the sibling directory `../<model_job>/
+/// model.bin` (written by [`run_job`] at training completion). With
+/// `model_job == 0` the model is fresh deterministic random init — a
+/// latency/conformance probe where only op counts and timing matter.
+pub fn run_infer_job(handle: &JobHandle, dir: Option<&Path>) -> Result<InferOutcome, JobError> {
+    let spec = handle
+        .infer_spec()
+        .ok_or_else(|| JobError::Spec("run_infer_job invoked on a non-inference job".into()))?;
+    let config = infer_config(spec)?;
+    let batch = spec.batch as usize;
+    let classes = *spec
+        .dims
+        .last()
+        .ok_or_else(|| JobError::Spec("dims is empty: no output layer width".into()))?
+        as usize;
+
+    // Engine + codec. On FHE the spec seed must be the *training* seed —
+    // the model's weight ciphertexts only decrypt under that key material.
+    let (engine, mut codec) = match spec.backend {
+        JobBackend::Clear => {
+            let (e, c) = GlyphEngine::setup_clear(spec.profile, batch);
+            (e, JobCodec::Clear(c))
+        }
+        JobBackend::Fhe => {
+            let (e, c) = GlyphEngine::setup(spec.profile, batch, spec.seed);
+            (e, JobCodec::Fhe(c))
+        }
+    };
+
+    // Held-out split, same derivation as training evaluation.
+    let ds = load_dataset(&spec.dataset, false, spec.samples as usize, spec.seed ^ 0x7465)?;
+
+    let session = if spec.model_job == 0 {
+        let mut rng = GlyphRng::new(spec.seed ^ 0xb11d);
+        let mlp = GlyphMlp::new_random(config, codec.as_dyn(), &mut rng, &engine)?;
+        InferenceSession::from_network(mlp.net, classes)
+    } else {
+        let jobs_root = dir
+            .and_then(Path::parent)
+            .ok_or_else(|| JobError::Spec("model_job requires a persistent data dir".into()))?;
+        let path = model_path(&jobs_root.join(spec.model_job.to_string()));
+        let bytes = std::fs::read(&path).map_err(|e| {
+            JobError::Spec(format!("model of job {} not found ({}): {e}", spec.model_job, path.display()))
+        })?;
+        let ckpt = Checkpoint::from_wire(&bytes, &engine)?;
+        InferenceSession::from_checkpoint(config, &ckpt, spec.seed, codec.as_dyn(), &engine)?
+    };
+
+    // Scoring is priced by the forward-only plan; model build/restore ops
+    // (weight encryption) are not part of that contract, so the counter
+    // starts clean here.
+    engine.counter.store(&OpSnapshot::default());
+
+    let batches = spec.samples / spec.batch.max(1);
+    if batches == 0 {
+        return Err(JobError::Spec(format!(
+            "samples ({}) yield no full minibatch of {batch}",
+            spec.samples
+        )));
+    }
+    let per_batch = session.plan().totals().to_snapshot();
+    let publish = |done: u64, secs: f64, live: OpSnapshot| {
+        handle.update(|st| {
+            st.state = JobState::Running;
+            st.step = done;
+            st.total_steps = batches;
+            st.images = done * spec.batch;
+            st.seconds = secs;
+            st.live_ops = live;
+            st.predicted_ops = per_batch.scale(done);
+        });
+    };
+    publish(0, 0.0, engine.counter.snapshot());
+
+    let delay = step_delay_ms();
+    let mut rows: Vec<Vec<i64>> = Vec::with_capacity((batches as usize) * batch);
+    let mut seconds = 0.0f64;
+    for b in 0..batches {
+        if handle.cancel.load(Ordering::Relaxed) {
+            handle.update(|st| st.state = JobState::Cancelled);
+            return Ok(InferOutcome::Cancelled);
+        }
+        let t0 = std::time::Instant::now();
+        rows.extend(session.scores_range(&ds, b as usize, 1, &engine, codec.as_dyn())?);
+        seconds += t0.elapsed().as_secs_f64();
+        if delay > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(delay));
+        }
+        maybe_panic_once(b + 1);
+        publish(b + 1, seconds, engine.counter.snapshot());
+    }
+
+    let ops = engine.counter.snapshot();
+    let predicted = argmax_rows(&rows);
+    let correct = predicted
+        .iter()
+        .zip(&ds.labels)
+        .filter(|&(&p, &label)| p == label % classes)
+        .count();
+    let result = InferResult {
+        id: handle.id,
+        images: batches * spec.batch,
+        batches,
+        seconds,
+        accuracy: correct as f64 / predicted.len().max(1) as f64,
+        ops,
+        logits_digest: logits_digest(&rows),
+        predictions_digest: predictions_digest(&predicted),
+    };
+    handle.update(|st| {
+        st.state = JobState::Completed;
+        st.step = batches;
+        st.images = batches * spec.batch;
+        st.seconds = seconds;
+        st.live_ops = ops;
+        st.predicted_ops = per_batch.scale(batches);
+    });
+    Ok(InferOutcome::Completed(result))
 }

@@ -8,7 +8,7 @@
 //! MAC engine's laziness), so the drift gauge ignores them while both
 //! series still expose them.
 
-use super::protocol::JobStatus;
+use super::protocol::{JobKind, JobStatus};
 use crate::coordinator::metrics::OpSnapshot;
 use std::fmt::Write as _;
 
@@ -53,6 +53,26 @@ pub fn render(uptime_seconds: f64, statuses: &[JobStatus]) -> String {
         let _ = writeln!(w, "glyph_job_steps_planned{{{labels}}} {}", s.total_steps);
         let _ = writeln!(w, "glyph_job_checkpoints{{{labels}}} {}", s.checkpoints);
         let _ = writeln!(w, "glyph_job_resumes{{{labels}}} {}", s.resumes);
+    }
+
+    let infer: Vec<&JobStatus> = statuses.iter().filter(|s| s.kind == JobKind::Infer).collect();
+    if !infer.is_empty() {
+        let _ = writeln!(w, "# HELP glyph_infer_images_total Images scored by an inference job.");
+        let _ = writeln!(w, "# TYPE glyph_infer_images_total counter");
+        let _ = writeln!(w, "# HELP glyph_infer_seconds Scoring wall-clock of an inference job.");
+        let _ = writeln!(w, "# TYPE glyph_infer_seconds counter");
+        let _ = writeln!(
+            w,
+            "# HELP glyph_infer_latency_seconds Amortized per-image scoring latency."
+        );
+        let _ = writeln!(w, "# TYPE glyph_infer_latency_seconds gauge");
+        for s in &infer {
+            let labels = format!("job=\"{}\",tenant=\"{}\"", s.id, s.tenant);
+            let _ = writeln!(w, "glyph_infer_images_total{{{labels}}} {}", s.images);
+            let _ = writeln!(w, "glyph_infer_seconds{{{labels}}} {:.6}", s.seconds);
+            let latency = if s.images > 0 { s.seconds / s.images as f64 } else { 0.0 };
+            let _ = writeln!(w, "glyph_infer_latency_seconds{{{labels}}} {latency:.6}");
+        }
     }
 
     let _ = writeln!(
@@ -104,6 +124,7 @@ mod tests {
         let status = JobStatus {
             id: 1,
             tenant: "acme".into(),
+            kind: JobKind::Train,
             state: JobState::Running,
             epoch: 0,
             step: 5,
@@ -112,17 +133,48 @@ mod tests {
             resumes: 0,
             live_ops: live,
             predicted_ops: predicted,
+            images: 0,
+            seconds: 0.0,
             message: String::new(),
         };
         assert_eq!(op_drift(&live, &predicted), 0);
-        let text = render(1.5, &[status]);
+        let text = render(1.5, &[status.clone()]);
         assert!(text.contains("glyph_jobs{state=\"running\"} 1"), "{text}");
         assert!(text.contains(
             "glyph_job_ops{job=\"1\",tenant=\"acme\",op=\"mult_cc\",kind=\"live\"} 10"
         ));
         assert!(text.contains("glyph_job_op_drift{job=\"1\",tenant=\"acme\"} 0"));
+        // train-only scrapes carry no inference series at all
+        assert!(!text.contains("glyph_infer_images_total"), "{text}");
         let mut drifted = live;
         drifted.mult_cc = 12;
         assert_eq!(op_drift(&drifted, &predicted), 2);
+    }
+
+    #[test]
+    fn renders_infer_gauges() {
+        let status = JobStatus {
+            id: 7,
+            tenant: "acme".into(),
+            kind: JobKind::Infer,
+            state: JobState::Completed,
+            epoch: 0,
+            step: 4,
+            total_steps: 4,
+            checkpoints: 0,
+            resumes: 0,
+            live_ops: OpSnapshot::default(),
+            predicted_ops: OpSnapshot::default(),
+            images: 32,
+            seconds: 1.6,
+            message: String::new(),
+        };
+        let text = render(2.0, &[status]);
+        assert!(text.contains("glyph_infer_images_total{job=\"7\",tenant=\"acme\"} 32"), "{text}");
+        assert!(text.contains("glyph_infer_seconds{job=\"7\",tenant=\"acme\"} 1.600000"), "{text}");
+        assert!(
+            text.contains("glyph_infer_latency_seconds{job=\"7\",tenant=\"acme\"} 0.050000"),
+            "{text}"
+        );
     }
 }

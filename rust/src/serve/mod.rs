@@ -28,10 +28,22 @@ pub mod metrics;
 pub mod protocol;
 pub mod server;
 
-pub use client::ServeClient;
-pub use job::{run_job, JobError, JobHandle, RunOptions, RunOutcome};
+pub use client::{Fetched, ServeClient};
+pub use job::{
+    run_infer_job, run_job, InferOutcome, JobError, JobHandle, JobPayload, RunOptions, RunOutcome,
+};
 pub use protocol::{
-    read_frame, write_frame, JobBackend, JobResult, JobSpec, JobState, JobStatus, Request,
-    Response, MAX_FRAME,
+    read_frame, write_frame, InferResult, InferSpec, JobBackend, JobKind, JobResult, JobSpec,
+    JobState, JobStatus, Request, Response, MAX_FRAME,
 };
 pub use server::{RunningServer, ServeConfig};
+
+/// Poison-recovering lock: one worker thread panicking while holding a
+/// shared mutex must degrade *that job*, never wedge every subsequent
+/// request into a panic cascade. The guarded data (job maps, queues,
+/// status structs) is always left in a consistent state by the writers —
+/// each update is a single field-assignment batch — so recovering the
+/// inner value is safe; the poison flag itself is the only casualty.
+pub(crate) fn lock_clean<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -193,6 +193,129 @@ impl WireCodec for JobSpec {
     }
 }
 
+/// Everything needed to run a forward-only inference job: score `samples`
+/// encrypted inputs through a frozen model, batched. The model comes from
+/// a completed training job's persisted final checkpoint (`model_job`), or
+/// — with `model_job == 0` — from deterministic random init (conformance
+/// and latency probes, where only op counts and timing matter).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferSpec {
+    /// Tenant label (metrics dimension).
+    pub tenant: String,
+    pub backend: JobBackend,
+    pub profile: EngineProfile,
+    /// MLP layer widths, input first (must match the model job's dims).
+    pub dims: Vec<u64>,
+    /// Mini-batch width for the forward passes (amortization lever; need
+    /// not match the training batch).
+    pub batch: u64,
+    /// Samples to score (full minibatches only).
+    pub samples: u64,
+    /// Dataset name: digits|mnist|cancer|svhn|cifar (held-out split).
+    pub dataset: String,
+    /// Determinism seed. On FHE this must equal the model job's seed —
+    /// keygen derives from it, and the model's weight ciphertexts only
+    /// decrypt under the training key.
+    pub seed: u64,
+    /// Softmax unit output bits (must match the model job's).
+    pub softmax_bits: u64,
+    /// Completed training job whose persisted model to serve (0 = fresh
+    /// deterministic random weights).
+    pub model_job: u64,
+}
+
+impl InferSpec {
+    /// A small clear-backend inference job with sane defaults.
+    pub fn small_clear(tenant: &str, seed: u64) -> InferSpec {
+        InferSpec {
+            tenant: tenant.into(),
+            backend: JobBackend::Clear,
+            profile: EngineProfile::Default,
+            dims: vec![16, 8, 4],
+            batch: 4,
+            samples: 16,
+            dataset: "digits".into(),
+            seed,
+            softmax_bits: 3,
+            model_job: 0,
+        }
+    }
+
+    /// Structural validation (submit-time; the runner re-validates).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dims.len() < 2 || self.dims.iter().any(|&d| d == 0) {
+            return Err(format!("dims needs at least two nonzero widths, got {:?}", self.dims));
+        }
+        if self.batch == 0 {
+            return Err("batch must be nonzero".into());
+        }
+        if self.samples < self.batch {
+            return Err(format!(
+                "samples ({}) must cover at least one minibatch ({})",
+                self.samples, self.batch
+            ));
+        }
+        if !matches!(self.dataset.as_str(), "digits" | "mnist" | "cancer" | "svhn" | "cifar") {
+            return Err(format!(
+                "dataset must be digits|mnist|cancer|svhn|cifar, got {:?}",
+                self.dataset
+            ));
+        }
+        if self.softmax_bits == 0 || self.softmax_bits > 16 {
+            return Err(format!("softmax_bits {} is outside 1..=16", self.softmax_bits));
+        }
+        Ok(())
+    }
+}
+
+impl WireCodec for InferSpec {
+    const TAG: [u8; 4] = *b"ISPC";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_str(&self.tenant);
+        w.put_u8(match self.backend {
+            JobBackend::Clear => 0,
+            JobBackend::Fhe => 1,
+        });
+        w.put_u8(match self.profile {
+            EngineProfile::Default => 0,
+            EngineProfile::Test => 1,
+        });
+        w.put_u64s(&self.dims);
+        w.put_u64(self.batch);
+        w.put_u64(self.samples);
+        w.put_str(&self.dataset);
+        w.put_u64(self.seed);
+        w.put_u64(self.softmax_bits);
+        w.put_u64(self.model_job);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        Ok(InferSpec {
+            tenant: r.str()?,
+            backend: match r.u8()? {
+                0 => JobBackend::Clear,
+                1 => JobBackend::Fhe,
+                other => return Err(WireError::Malformed(format!("bad backend {other}"))),
+            },
+            profile: match r.u8()? {
+                0 => EngineProfile::Default,
+                1 => EngineProfile::Test,
+                other => return Err(WireError::Malformed(format!("bad profile {other}"))),
+            },
+            dims: r.u64s()?,
+            batch: r.u64()?,
+            samples: r.u64()?,
+            dataset: r.str()?,
+            seed: r.u64()?,
+            softmax_bits: r.u64()?,
+            model_job: r.u64()?,
+        })
+    }
+}
+
 /// Job lifecycle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobState {
@@ -215,12 +338,30 @@ impl JobState {
     }
 }
 
+/// Which workload a job runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    Train,
+    Infer,
+}
+
+impl JobKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobKind::Train => "train",
+            JobKind::Infer => "infer",
+        }
+    }
+}
+
 /// Point-in-time view of a job, as returned by `status` and rendered by
 /// `metrics`.
 #[derive(Clone, Debug)]
 pub struct JobStatus {
     pub id: u64,
     pub tenant: String,
+    /// Train or infer workload (v2).
+    pub kind: JobKind,
     pub state: JobState,
     /// Epoch the cursor is inside.
     pub epoch: u64,
@@ -236,18 +377,27 @@ pub struct JobStatus {
     pub live_ops: OpSnapshot,
     /// Compiled-plan prediction for the cursor (per-step totals × steps).
     pub predicted_ops: OpSnapshot,
+    /// Images scored so far (infer jobs; `step × batch`).
+    pub images: u64,
+    /// Scoring wall-clock so far (infer jobs; drives the latency gauge).
+    pub seconds: f64,
     /// Failure detail when `state == Failed`.
     pub message: String,
 }
 
 impl WireCodec for JobStatus {
     const TAG: [u8; 4] = *b"JSTA";
-    const VERSION: u16 = 1;
+    // v2: adds kind/images/seconds (the infer workload's progress fields)
+    const VERSION: u16 = 2;
     type Ctx = ();
 
     fn encode_body(&self, w: &mut WireWriter) {
         w.put_u64(self.id);
         w.put_str(&self.tenant);
+        w.put_u8(match self.kind {
+            JobKind::Train => 0,
+            JobKind::Infer => 1,
+        });
         w.put_u8(match self.state {
             JobState::Queued => 0,
             JobState::Running => 1,
@@ -262,6 +412,8 @@ impl WireCodec for JobStatus {
         w.put_u64(self.resumes);
         put_nested(w, &self.live_ops);
         put_nested(w, &self.predicted_ops);
+        w.put_u64(self.images);
+        w.put_f64(self.seconds);
         w.put_str(&self.message);
     }
 
@@ -269,6 +421,11 @@ impl WireCodec for JobStatus {
         Ok(JobStatus {
             id: r.u64()?,
             tenant: r.str()?,
+            kind: match r.u8()? {
+                0 => JobKind::Train,
+                1 => JobKind::Infer,
+                other => return Err(WireError::Malformed(format!("bad job kind {other}"))),
+            },
             state: match r.u8()? {
                 0 => JobState::Queued,
                 1 => JobState::Running,
@@ -284,6 +441,8 @@ impl WireCodec for JobStatus {
             resumes: r.u64()?,
             live_ops: get_nested(r, &())?,
             predicted_ops: get_nested(r, &())?,
+            images: r.u64()?,
+            seconds: r.f64()?,
             message: r.str()?,
         })
     }
@@ -343,6 +502,57 @@ impl WireCodec for JobResult {
     }
 }
 
+/// Final outcome of a completed inference job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferResult {
+    pub id: u64,
+    /// Images scored.
+    pub images: u64,
+    /// Full forward-pass minibatches run.
+    pub batches: u64,
+    /// Scoring wall-clock.
+    pub seconds: f64,
+    /// Argmax accuracy against the held-out labels.
+    pub accuracy: f64,
+    /// Scoring op totals (equals forward-only plan totals × batches up to
+    /// relin/mod-switch).
+    pub ops: OpSnapshot,
+    /// FNV-1a over the decoded logit rows (byte-identity witness).
+    pub logits_digest: u64,
+    /// FNV-1a over the argmax label sequence.
+    pub predictions_digest: u64,
+}
+
+impl WireCodec for InferResult {
+    const TAG: [u8; 4] = *b"IRES";
+    const VERSION: u16 = 1;
+    type Ctx = ();
+
+    fn encode_body(&self, w: &mut WireWriter) {
+        w.put_u64(self.id);
+        w.put_u64(self.images);
+        w.put_u64(self.batches);
+        w.put_f64(self.seconds);
+        w.put_f64(self.accuracy);
+        put_nested(w, &self.ops);
+        w.put_u64(self.logits_digest);
+        w.put_u64(self.predictions_digest);
+    }
+
+    fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
+        Ok(InferResult {
+            id: r.u64()?,
+            images: r.u64()?,
+            batches: r.u64()?,
+            seconds: r.f64()?,
+            accuracy: r.f64()?,
+            ops: get_nested(r, &())?,
+            logits_digest: r.u64()?,
+            predictions_digest: r.u64()?,
+        })
+    }
+}
+
 /// Client→server message.
 #[derive(Clone, Debug)]
 pub enum Request {
@@ -355,6 +565,8 @@ pub enum Request {
     Ping,
     /// Graceful stop: drain workers, exit the accept loop.
     Shutdown,
+    /// Submit a forward-only inference job.
+    SubmitInfer(InferSpec),
 }
 
 impl WireCodec for Request {
@@ -383,6 +595,10 @@ impl WireCodec for Request {
             Request::Metrics => w.put_u8(4),
             Request::Ping => w.put_u8(5),
             Request::Shutdown => w.put_u8(6),
+            Request::SubmitInfer(spec) => {
+                w.put_u8(7);
+                put_nested(w, spec);
+            }
         }
     }
 
@@ -395,6 +611,7 @@ impl WireCodec for Request {
             4 => Request::Metrics,
             5 => Request::Ping,
             6 => Request::Shutdown,
+            7 => Request::SubmitInfer(get_nested(r, &())?),
             other => return Err(WireError::Malformed(format!("bad request variant {other}"))),
         })
     }
@@ -413,6 +630,8 @@ pub enum Response {
     ShuttingDown,
     /// Request-level failure (unknown job, invalid spec, …).
     Error(String),
+    /// Completed inference job's outcome (`fetch-result` on infer jobs).
+    InferResult(InferResult),
 }
 
 impl WireCodec for Response {
@@ -448,6 +667,10 @@ impl WireCodec for Response {
                 w.put_u8(7);
                 w.put_str(msg);
             }
+            Response::InferResult(res) => {
+                w.put_u8(8);
+                put_nested(w, res);
+            }
         }
     }
 
@@ -461,6 +684,7 @@ impl WireCodec for Response {
             5 => Response::Pong,
             6 => Response::ShuttingDown,
             7 => Response::Error(r.str()?),
+            8 => Response::InferResult(get_nested(r, &())?),
             other => return Err(WireError::Malformed(format!("bad response variant {other}"))),
         })
     }

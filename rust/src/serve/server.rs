@@ -8,20 +8,36 @@
 //! shared across threads.
 //!
 //! Durability: with a data directory, every submitted spec is persisted
-//! to `jobs/<id>/spec.bin` before the submit reply, checkpoints land in
-//! the same directory every K steps, and results in `result.bin`. On
-//! startup the server scans `jobs/*`: finished jobs are loaded into the
-//! result cache, unfinished ones are re-enqueued and resume from their
-//! latest checkpoint inside [`run_job`]. `kill -9` mid-epoch therefore
-//! loses at most K steps of work and zero bytes of determinism.
+//! to `jobs/<id>/spec.bin` (training) or `jobs/<id>/infer.bin`
+//! (inference) before the submit reply, checkpoints land in the same
+//! directory every K steps, results in `result.bin`, and a completed
+//! training job's final model in `model.bin` (what inference jobs load
+//! via `model_job`). On startup the server scans `jobs/*`: finished jobs
+//! are loaded into the result cache, unfinished ones are re-enqueued and
+//! resume from their latest checkpoint inside [`run_job`]. `kill -9`
+//! mid-epoch therefore loses at most K steps of work and zero bytes of
+//! determinism.
+//!
+//! Hardening: every shared mutex is taken through a poison-recovering
+//! lock and each job run is wrapped in `catch_unwind`, so a panic
+//! anywhere inside one job degrades that job to `Failed` while the
+//! server keeps answering submit/status/metrics.
 
-use super::job::{checkpoint_path, compiled_plan, run_job, JobHandle, RunOptions, RunOutcome};
+use super::job::{
+    checkpoint_path, compiled_infer_plan, compiled_plan, run_infer_job, run_job, InferOutcome,
+    JobHandle, JobPayload, RunOptions, RunOutcome,
+};
+use super::lock_clean;
 use super::metrics;
-use super::protocol::{read_frame, write_frame, JobResult, JobSpec, JobState, Request, Response};
+use super::protocol::{
+    read_frame, write_frame, InferResult, InferSpec, JobResult, JobSpec, JobState, Request,
+    Response,
+};
 use crate::wire::WireCodec;
 use std::collections::{HashMap, VecDeque};
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -46,6 +62,13 @@ impl Default for ServeConfig {
     }
 }
 
+/// A completed job's cached outcome (training and inference results share
+/// the `result.bin` slot; the payload kind disambiguates on recovery).
+enum StoredResult {
+    Train(JobResult),
+    Infer(InferResult),
+}
+
 struct Shared {
     jobs: Mutex<HashMap<u64, Arc<JobHandle>>>,
     queue: Mutex<VecDeque<u64>>,
@@ -53,7 +76,7 @@ struct Shared {
     next_id: AtomicU64,
     shutdown: AtomicBool,
     data_dir: Option<PathBuf>,
-    results: Mutex<HashMap<u64, JobResult>>,
+    results: Mutex<HashMap<u64, StoredResult>>,
     started: Instant,
 }
 
@@ -63,7 +86,7 @@ impl Shared {
     }
 
     fn enqueue(&self, id: u64) {
-        self.queue.lock().unwrap().push_back(id);
+        lock_clean(&self.queue).push_back(id);
         self.queue_cv.notify_one();
     }
 }
@@ -111,7 +134,7 @@ impl RunningServer {
             std::thread::spawn(move || accept_loop(&listener, &shared))
         };
 
-        Ok(RunningServer { addr, shared, accept: Some(accept), workers: workers })
+        Ok(RunningServer { addr, shared, accept: Some(accept), workers })
     }
 
     /// The bound listen address (resolves port 0).
@@ -152,29 +175,47 @@ fn recover(shared: &Arc<Shared>, dir: &Path) -> io::Result<()> {
         let Ok(id) = entry.file_name().to_string_lossy().parse::<u64>() else {
             continue;
         };
-        let spec_bytes = match std::fs::read(entry.path().join("spec.bin")) {
-            Ok(b) => b,
-            Err(_) => continue,
-        };
-        let Ok(spec) = JobSpec::from_wire(&spec_bytes, &()) else {
+        // Training jobs persist `spec.bin`, inference jobs `infer.bin`.
+        let handle = if let Ok(bytes) = std::fs::read(entry.path().join("spec.bin")) {
+            let Ok(spec) = JobSpec::from_wire(&bytes, &()) else {
+                continue;
+            };
+            Arc::new(JobHandle::new(id, spec))
+        } else if let Ok(bytes) = std::fs::read(entry.path().join("infer.bin")) {
+            let Ok(spec) = InferSpec::from_wire(&bytes, &()) else {
+                continue;
+            };
+            Arc::new(JobHandle::new_infer(id, spec))
+        } else {
             continue;
         };
         max_id = max_id.max(id);
-        let handle = Arc::new(JobHandle::new(id, spec));
         let result_bytes = std::fs::read(entry.path().join("result.bin")).ok();
-        if let Some(result) =
-            result_bytes.and_then(|b| JobResult::from_wire(&b, &()).ok())
-        {
+        let stored = result_bytes.and_then(|b| match &handle.payload {
+            JobPayload::Train(_) => JobResult::from_wire(&b, &()).ok().map(StoredResult::Train),
+            JobPayload::Infer(_) => InferResult::from_wire(&b, &()).ok().map(StoredResult::Infer),
+        });
+        if let Some(stored) = stored {
             handle.update(|st| {
                 st.state = JobState::Completed;
-                st.step = result.steps;
-                st.resumes = result.resumes;
-                st.live_ops = result.ops;
+                match &stored {
+                    StoredResult::Train(r) => {
+                        st.step = r.steps;
+                        st.resumes = r.resumes;
+                        st.live_ops = r.ops;
+                    }
+                    StoredResult::Infer(r) => {
+                        st.step = r.batches;
+                        st.images = r.images;
+                        st.seconds = r.seconds;
+                        st.live_ops = r.ops;
+                    }
+                }
             });
-            shared.results.lock().unwrap().insert(id, result);
-            shared.jobs.lock().unwrap().insert(id, handle);
+            lock_clean(&shared.results).insert(id, stored);
+            lock_clean(&shared.jobs).insert(id, handle);
         } else {
-            shared.jobs.lock().unwrap().insert(id, Arc::clone(&handle));
+            lock_clean(&shared.jobs).insert(id, Arc::clone(&handle));
             pending.push(id);
         }
     }
@@ -224,12 +265,16 @@ fn dispatch(shared: &Arc<Shared>, req: Request) -> Response {
             Ok(id) => Response::Submitted { id },
             Err(msg) => Response::Error(msg),
         },
-        Request::Status { id } => match shared.jobs.lock().unwrap().get(&id) {
+        Request::SubmitInfer(spec) => match submit_infer(shared, spec) {
+            Ok(id) => Response::Submitted { id },
+            Err(msg) => Response::Error(msg),
+        },
+        Request::Status { id } => match lock_clean(&shared.jobs).get(&id) {
             Some(h) => Response::Status(h.status()),
             None => Response::Error(format!("unknown job {id}")),
         },
         Request::Cancel { id } => {
-            let handle = shared.jobs.lock().unwrap().get(&id).cloned();
+            let handle = lock_clean(&shared.jobs).get(&id).cloned();
             match handle {
                 Some(h) => {
                     h.cancel.store(true, Ordering::SeqCst);
@@ -246,10 +291,16 @@ fn dispatch(shared: &Arc<Shared>, req: Request) -> Response {
             }
         }
         Request::FetchResult { id } => {
-            if let Some(r) = shared.results.lock().unwrap().get(&id) {
-                return Response::Result(r.clone());
+            match lock_clean(&shared.results).get(&id) {
+                Some(StoredResult::Train(r)) => return Response::Result(r.clone()),
+                Some(StoredResult::Infer(r)) => return Response::InferResult(r.clone()),
+                None => {}
             }
-            match shared.jobs.lock().unwrap().get(&id) {
+            match lock_clean(&shared.jobs).get(&id) {
+                // A cancelled job will never produce a result: answer with
+                // the terminal `Cancelled` frame so pollers stop, instead
+                // of an Error they would retry forever.
+                Some(h) if h.status().state == JobState::Cancelled => Response::Cancelled { id },
                 Some(h) => Response::Error(format!(
                     "job {id} not completed (state: {})",
                     h.status().state.name()
@@ -259,7 +310,7 @@ fn dispatch(shared: &Arc<Shared>, req: Request) -> Response {
         }
         Request::Metrics => {
             let mut statuses: Vec<_> =
-                shared.jobs.lock().unwrap().values().map(|h| h.status()).collect();
+                lock_clean(&shared.jobs).values().map(|h| h.status()).collect();
             statuses.sort_by_key(|s| s.id);
             Response::Metrics(metrics::render(
                 shared.started.elapsed().as_secs_f64(),
@@ -280,20 +331,97 @@ fn submit(shared: &Arc<Shared>, spec: JobSpec) -> Result<u64, String> {
     // the submit, not the job hours later.
     compiled_plan(&spec).map_err(|e| format!("rejected spec: {e}"))?;
     let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
-    let handle = Arc::new(JobHandle::new(id, spec));
     if let Some(dir) = shared.job_dir(id) {
-        crate::wire::write_atomic(&dir.join("spec.bin"), &handle.spec.to_wire())
+        crate::wire::write_atomic(&dir.join("spec.bin"), &spec.to_wire())
             .map_err(|e| format!("persisting spec: {e}"))?;
     }
-    shared.jobs.lock().unwrap().insert(id, Arc::clone(&handle));
+    let handle = Arc::new(JobHandle::new(id, spec));
+    lock_clean(&shared.jobs).insert(id, Arc::clone(&handle));
     shared.enqueue(id);
     Ok(id)
+}
+
+fn submit_infer(shared: &Arc<Shared>, spec: InferSpec) -> Result<u64, String> {
+    compiled_infer_plan(&spec).map_err(|e| format!("rejected spec: {e}"))?;
+    if spec.model_job != 0 {
+        // Cross-check against the referenced training job now, not hours
+        // later in the worker: the model must exist, be finished, and have
+        // been trained under a compatible spec (same topology and — the
+        // FHE-critical part — the same seed, or the weight ciphertexts
+        // would not decrypt under this session's keys).
+        if shared.data_dir.is_none() {
+            return Err(format!(
+                "model_job {} requires a server data dir (models are not persisted)",
+                spec.model_job
+            ));
+        }
+        let model = lock_clean(&shared.jobs)
+            .get(&spec.model_job)
+            .cloned()
+            .ok_or_else(|| format!("model job {} is unknown", spec.model_job))?;
+        let tspec = model
+            .train_spec()
+            .ok_or_else(|| format!("model job {} is not a training job", spec.model_job))?
+            .clone();
+        let state = model.status().state;
+        if state != JobState::Completed {
+            return Err(format!(
+                "model job {} has no model yet (state: {})",
+                spec.model_job,
+                state.name()
+            ));
+        }
+        if tspec.dims != spec.dims {
+            return Err(format!(
+                "dims {:?} do not match model job {}'s dims {:?}",
+                spec.dims, spec.model_job, tspec.dims
+            ));
+        }
+        if tspec.backend != spec.backend {
+            return Err(format!("backend does not match model job {}'s", spec.model_job));
+        }
+        if tspec.profile != spec.profile {
+            return Err(format!("profile does not match model job {}'s", spec.model_job));
+        }
+        if tspec.seed != spec.seed {
+            return Err(format!(
+                "seed {} does not match model job {}'s seed {} (the model only decrypts under the training key)",
+                spec.seed, spec.model_job, tspec.seed
+            ));
+        }
+        if tspec.softmax_bits != spec.softmax_bits {
+            return Err(format!("softmax_bits does not match model job {}'s", spec.model_job));
+        }
+    }
+    let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+    if let Some(dir) = shared.job_dir(id) {
+        crate::wire::write_atomic(&dir.join("infer.bin"), &spec.to_wire())
+            .map_err(|e| format!("persisting spec: {e}"))?;
+    }
+    let handle = Arc::new(JobHandle::new_infer(id, spec));
+    lock_clean(&shared.jobs).insert(id, Arc::clone(&handle));
+    shared.enqueue(id);
+    Ok(id)
+}
+
+/// What one dispatched job run produced (training and inference unified so
+/// the worker's persistence/panic handling is one code path).
+enum RanOutcome {
+    Train(RunOutcome),
+    Infer(InferOutcome),
+}
+
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".into())
 }
 
 fn worker_loop(shared: &Arc<Shared>) {
     loop {
         let id = {
-            let mut queue = shared.queue.lock().unwrap();
+            let mut queue = lock_clean(&shared.queue);
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -301,10 +429,13 @@ fn worker_loop(shared: &Arc<Shared>) {
                 if let Some(id) = queue.pop_front() {
                     break id;
                 }
-                queue = shared.queue_cv.wait(queue).unwrap();
+                queue = shared
+                    .queue_cv
+                    .wait(queue)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
-        let handle = match shared.jobs.lock().unwrap().get(&id) {
+        let handle = match lock_clean(&shared.jobs).get(&id) {
             Some(h) => Arc::clone(h),
             None => continue,
         };
@@ -313,24 +444,51 @@ fn worker_loop(shared: &Arc<Shared>) {
             continue;
         }
         let dir = shared.job_dir(id);
-        match run_job(&handle, dir.as_deref(), &RunOptions::default()) {
-            Ok(RunOutcome::Completed(result)) => {
+        // A panic anywhere inside a job run (engine, trainer, injected
+        // fault) must fail *that job* and leave the worker serving the
+        // queue — one tenant's crash is not a denial of service for the
+        // rest.
+        let ran = catch_unwind(AssertUnwindSafe(|| match &handle.payload {
+            JobPayload::Train(_) => {
+                run_job(&handle, dir.as_deref(), &RunOptions::default()).map(RanOutcome::Train)
+            }
+            JobPayload::Infer(_) => run_infer_job(&handle, dir.as_deref()).map(RanOutcome::Infer),
+        }));
+        match ran {
+            Ok(Ok(RanOutcome::Train(RunOutcome::Completed(result)))) => {
                 if let Some(dir) = &dir {
                     let _ = crate::wire::write_atomic(
                         &dir.join("result.bin"),
                         &result.to_wire(),
                     );
-                    // The checkpoint is dead weight once the result exists.
+                    // The checkpoint is dead weight once the result exists
+                    // (the final model persists separately in model.bin).
                     let _ = std::fs::remove_file(checkpoint_path(dir));
                 }
-                shared.results.lock().unwrap().insert(id, result);
+                lock_clean(&shared.results).insert(id, StoredResult::Train(result));
             }
-            Ok(RunOutcome::Cancelled) => {}
-            Ok(RunOutcome::Halted) => {} // test-only option, unused here
-            Err(e) => handle.update(|st| {
+            Ok(Ok(RanOutcome::Infer(InferOutcome::Completed(result)))) => {
+                if let Some(dir) = &dir {
+                    let _ = crate::wire::write_atomic(
+                        &dir.join("result.bin"),
+                        &result.to_wire(),
+                    );
+                }
+                lock_clean(&shared.results).insert(id, StoredResult::Infer(result));
+            }
+            Ok(Ok(RanOutcome::Train(RunOutcome::Cancelled | RunOutcome::Halted)))
+            | Ok(Ok(RanOutcome::Infer(InferOutcome::Cancelled))) => {}
+            Ok(Err(e)) => handle.update(|st| {
                 st.state = JobState::Failed;
                 st.message = e.to_string();
             }),
+            Err(panic) => {
+                let msg = panic_text(panic);
+                handle.update(|st| {
+                    st.state = JobState::Failed;
+                    st.message = format!("worker panicked: {msg}");
+                });
+            }
         }
     }
 }

@@ -1,0 +1,386 @@
+//! [`InferenceSession`] — forward-only encrypted inference over a trained
+//! model (ROADMAP item 5: the volume workload of the paper's deployment
+//! story).
+//!
+//! A session wraps a built [`Network`] whose compiled plan has been
+//! replaced by [`Plan::forward_only`]: zero backward/gradient steps are
+//! compiled at all, every layer is effectively frozen (nothing ever calls
+//! `train_step`), and one batched forward pass costs exactly the
+//! forward-only plan's totals — the same plan/execution consistency
+//! contract training has, now priced for inference.
+//!
+//! Models come from three places:
+//! * [`InferenceSession::from_checkpoint`] — a trained [`Checkpoint`]
+//!   (PR 7 wire format): the network is rebuilt from the config, the
+//!   trained weight ciphertexts restored geometry-checked, the plan
+//!   swapped for its forward prefix. On FHE the engine must be keyed with
+//!   the *training* seed or the weights will not decrypt.
+//! * [`InferenceSession::from_weights`] — explicit 8-bit weight matrices,
+//!   encrypted at build time. Under a packed engine this builds
+//!   `PackedFcLayer`s, i.e. the cross-sample SIMD minibatch path — the
+//!   batched-throughput configuration of the GPU-batching line
+//!   (arXiv 1911.11377).
+//! * [`InferenceSession::import_f64`] — externally-trained float weights
+//!   requantized through [`crate::nn::quantize::import_f64_weights`], with
+//!   the per-layer accumulator-width check against the engine's plaintext
+//!   bit budget (arXiv 2302.10906).
+//!
+//! Outputs come in three modes ([`OutputMode`]): raw per-class logit rows,
+//! per-sample argmax labels, or top-k (label, score) lists.
+
+use crate::coordinator::scheduler::Plan;
+use crate::data::{DataError, Dataset};
+use crate::math::GlyphRng;
+use crate::nn::backend::Codec;
+use crate::nn::engine::GlyphEngine;
+use crate::nn::network::{Network, NetworkBuilder, NetworkError};
+use crate::nn::quantize::import_f64_weights;
+use crate::train::{MlpConfig, Trainer};
+use crate::wire::{Checkpoint, WireError};
+
+/// Why an inference session could not be built or run.
+#[derive(Debug)]
+pub enum InferError {
+    /// Topology/shift-schedule/build failures.
+    Network(NetworkError),
+    /// Checkpoint decode/restore failures.
+    Wire(WireError),
+    /// Dataset encode/decode failures.
+    Data(DataError),
+    /// Model import rejections (geometry, accumulator budget, seed).
+    Import(String),
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::Network(e) => write!(f, "network build failed: {e}"),
+            InferError::Wire(e) => write!(f, "model load failed: {e}"),
+            InferError::Data(e) => write!(f, "dataset error: {e}"),
+            InferError::Import(msg) => write!(f, "model import rejected: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+impl From<NetworkError> for InferError {
+    fn from(e: NetworkError) -> Self {
+        InferError::Network(e)
+    }
+}
+
+impl From<WireError> for InferError {
+    fn from(e: WireError) -> Self {
+        InferError::Wire(e)
+    }
+}
+
+impl From<DataError> for InferError {
+    fn from(e: DataError) -> Self {
+        InferError::Data(e)
+    }
+}
+
+/// What a prediction call returns per sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutputMode {
+    /// Raw per-class logit rows.
+    Logits,
+    /// The argmax class label (ties break to the lowest label).
+    Argmax,
+    /// The k highest-scoring (label, score) pairs, best first.
+    TopK(usize),
+}
+
+/// Decoded predictions for a scored window, in dataset order.
+#[derive(Clone, Debug)]
+pub enum Predictions {
+    Logits(Vec<Vec<i64>>),
+    Argmax(Vec<usize>),
+    /// `rows[sample]` = (label, score) pairs, best first.
+    TopK(Vec<Vec<(usize, i64)>>),
+}
+
+/// Per-sample argmax over logit rows (ties break to the lowest label —
+/// the same convention the serve layer's accuracy scoring uses).
+pub fn argmax_rows(rows: &[Vec<i64>]) -> Vec<usize> {
+    rows.iter()
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by_key(|&(k, &v)| (v, std::cmp::Reverse(k)))
+                .map(|(k, _)| k)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Per-sample top-k (label, score) lists over logit rows, best first.
+pub fn top_k_rows(rows: &[Vec<i64>], k: usize) -> Vec<Vec<(usize, i64)>> {
+    rows.iter()
+        .map(|row| {
+            let mut scored: Vec<(usize, i64)> = row.iter().copied().enumerate().collect();
+            // descending score, ascending label on ties
+            scored.sort_by_key(|&(label, v)| (std::cmp::Reverse(v), label));
+            scored.truncate(k.max(1).min(row.len()));
+            scored
+        })
+        .collect()
+}
+
+/// A frozen, forward-only model ready to score encrypted minibatches.
+pub struct InferenceSession {
+    trainer: Trainer,
+}
+
+/// The MLP builder chain of `config`, with explicit (instead of random)
+/// initial weights for every FC layer.
+fn builder_with_weights(
+    config: &MlpConfig,
+    weights: Vec<Vec<Vec<i64>>>,
+) -> Result<NetworkBuilder, InferError> {
+    config.validate()?;
+    let n_fc = config.dims.len() - 1;
+    if weights.len() != n_fc {
+        return Err(InferError::Import(format!(
+            "{n_fc} FC layers need {n_fc} weight matrices, got {}",
+            weights.len()
+        )));
+    }
+    for (l, w) in weights.iter().enumerate() {
+        let (out, inp) = (config.dims[l + 1], config.dims[l]);
+        if w.len() != out || w.iter().any(|row| row.len() != inp) {
+            return Err(InferError::Import(format!(
+                "layer {l}: weights are {}×{}, config dims say {out}×{inp}",
+                w.len(),
+                w.first().map_or(0, Vec::len)
+            )));
+        }
+    }
+    let mut b = NetworkBuilder::input_vec(config.dims[0]).grad_shift(config.grad_shift);
+    for (l, w) in weights.into_iter().enumerate() {
+        b = b.fc_encrypted(w);
+        if l + 1 < n_fc {
+            b = b.relu(config.act_shifts[l], config.err_shifts[l]);
+        } else {
+            b = b.softmax(config.softmax_bits, config.act_shifts[l]);
+        }
+    }
+    Ok(b)
+}
+
+impl InferenceSession {
+    /// Freeze an already-built network for inference: its compiled plan is
+    /// replaced by the forward-only prefix, so nothing backward is ever
+    /// scheduled (and op predictions price exactly one forward pass).
+    pub fn from_network(mut net: Network, classes: usize) -> InferenceSession {
+        net.plan = net.plan.forward_only();
+        InferenceSession { trainer: Trainer::new(net, classes) }
+    }
+
+    /// Load a trained [`Checkpoint`] into a freshly rebuilt network and
+    /// freeze it. The engine/codec must reproduce the training run's key
+    /// material (same profile; on FHE the same seed) — `expected_seed`
+    /// guards that: a checkpoint whose `job_seed` differs is refused
+    /// before any weight is touched, because its ciphertexts would
+    /// silently decrypt to garbage under the wrong key.
+    pub fn from_checkpoint(
+        config: MlpConfig,
+        ckpt: &Checkpoint,
+        expected_seed: u64,
+        codec: &mut dyn Codec,
+        engine: &GlyphEngine,
+    ) -> Result<InferenceSession, InferError> {
+        if ckpt.job_seed != expected_seed {
+            return Err(InferError::Import(format!(
+                "model was trained under seed {}, this session is keyed for seed {expected_seed}",
+                ckpt.job_seed
+            )));
+        }
+        let classes = *config.dims.last().ok_or_else(|| {
+            InferError::Import("config has no output layer width".into())
+        })?;
+        // the initial random draws are overwritten below, so any rng works
+        let mut rng = GlyphRng::new(expected_seed ^ 0xb11d);
+        let net = config.builder()?.build(codec, &mut rng, engine)?;
+        let mut session = InferenceSession::from_network(net, classes);
+        ckpt.restore_weights(&mut session.trainer.net)?;
+        Ok(session)
+    }
+
+    /// Build a frozen model from explicit 8-bit weight matrices
+    /// (`weights[l][out][in]`), encrypted through the codec. Under a
+    /// packed engine this is the cross-sample SIMD minibatch path.
+    pub fn from_weights(
+        config: MlpConfig,
+        weights: Vec<Vec<Vec<i64>>>,
+        codec: &mut dyn Codec,
+        engine: &GlyphEngine,
+    ) -> Result<InferenceSession, InferError> {
+        let classes = *config.dims.last().ok_or_else(|| {
+            InferError::Import("config has no output layer width".into())
+        })?;
+        let b = builder_with_weights(&config, weights)?;
+        let mut rng = GlyphRng::new(0x1f3a); // explicit init: no draws consumed
+        let net = b.build(codec, &mut rng, engine)?;
+        Ok(InferenceSession::from_network(net, classes))
+    }
+
+    /// Import an externally-trained float model: per-layer SWALP
+    /// requantization into 8-bit with the accumulator-width check against
+    /// the engine's plaintext bit budget, then [`Self::from_weights`].
+    /// Returns the session and the per-layer quantization exponents.
+    pub fn import_f64(
+        float_weights: &[Vec<Vec<f64>>],
+        softmax_bits: usize,
+        codec: &mut dyn Codec,
+        engine: &GlyphEngine,
+    ) -> Result<(InferenceSession, Vec<i32>), InferError> {
+        if float_weights.is_empty() {
+            return Err(InferError::Import("no weight matrices to import".into()));
+        }
+        let in_dim = float_weights[0].first().map_or(0, Vec::len);
+        let budget = engine.params().t.trailing_zeros();
+        let imported =
+            import_f64_weights(float_weights, in_dim, budget).map_err(InferError::Import)?;
+        let mut dims = vec![in_dim];
+        dims.extend(imported.iter().map(|il| il.weights.len()));
+        let frac = engine.frac_bits();
+        let config = MlpConfig::for_dims(dims, frac, softmax_bits);
+        let exponents: Vec<i32> = imported.iter().map(|il| il.exponent).collect();
+        let weights: Vec<Vec<Vec<i64>>> = imported.into_iter().map(|il| il.weights).collect();
+        let session = InferenceSession::from_weights(config, weights, codec, engine)?;
+        Ok((session, exponents))
+    }
+
+    /// The forward-only compiled plan (zero backward steps; totals price
+    /// one batched forward pass exactly).
+    pub fn plan(&self) -> &Plan {
+        &self.trainer.net.plan
+    }
+
+    /// The frozen network (weight inspection, digests).
+    pub fn net(&self) -> &Network {
+        &self.trainer.net
+    }
+
+    /// Output-class count.
+    pub fn classes(&self) -> usize {
+        self.trainer.classes
+    }
+
+    /// Decoded per-class logit rows for (up to) `limit` samples, dataset
+    /// order — byte-identical to what `Trainer::eval_scores` produces on
+    /// the training path for the same weights.
+    pub fn scores(
+        &self,
+        ds: &Dataset,
+        limit: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<Vec<Vec<i64>>, InferError> {
+        Ok(self.trainer.eval_scores(ds, limit, engine, codec)?)
+    }
+
+    /// Logit rows for `batches` minibatches starting at minibatch index
+    /// `first` — the incremental entry point the serve worker uses to
+    /// publish progress and honour cancellation between batches.
+    pub fn scores_range(
+        &self,
+        ds: &Dataset,
+        first: usize,
+        batches: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<Vec<Vec<i64>>, InferError> {
+        Ok(self.trainer.eval_scores_range(ds, first, batches, engine, codec)?)
+    }
+
+    /// Score (up to) `limit` samples and shape the output per `mode`.
+    pub fn predict(
+        &self,
+        ds: &Dataset,
+        limit: usize,
+        mode: OutputMode,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<Predictions, InferError> {
+        let rows = self.scores(ds, limit, engine, codec)?;
+        Ok(match mode {
+            OutputMode::Logits => Predictions::Logits(rows),
+            OutputMode::Argmax => Predictions::Argmax(argmax_rows(&rows)),
+            OutputMode::TopK(k) => Predictions::TopK(top_k_rows(&rows, k)),
+        })
+    }
+
+    /// Argmax accuracy against the dataset's labels over (up to) `limit`
+    /// samples.
+    pub fn accuracy(
+        &self,
+        ds: &Dataset,
+        limit: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<f64, InferError> {
+        Ok(self.trainer.evaluate(ds, limit, engine, codec)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::{EngineProfile, GlyphEngine};
+
+    #[test]
+    fn argmax_and_topk_shapes() {
+        let rows = vec![vec![5i64, -2, 9], vec![3, 3, -1]];
+        assert_eq!(argmax_rows(&rows), vec![2, 0]); // ties break low
+        let tk = top_k_rows(&rows, 2);
+        assert_eq!(tk[0], vec![(2, 9), (0, 5)]);
+        assert_eq!(tk[1], vec![(0, 3), (1, 3)]);
+        // k clamps to the class count, and to at least 1
+        assert_eq!(top_k_rows(&rows, 99)[0].len(), 3);
+        assert_eq!(top_k_rows(&rows, 0)[0].len(), 1);
+    }
+
+    #[test]
+    fn session_compiles_zero_backward_steps() {
+        let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+        let config = MlpConfig::tiny(4, 3, 2);
+        let weights = vec![vec![vec![1i64; 4]; 3], vec![vec![2i64; 3]; 2]];
+        let session =
+            InferenceSession::from_weights(config, weights, &mut codec, &engine).unwrap();
+        assert!(session.plan().validate());
+        assert!(session
+            .plan()
+            .steps
+            .iter()
+            .all(|s| s.phase == crate::coordinator::scheduler::StepPhase::Forward));
+    }
+
+    #[test]
+    fn from_weights_refuses_bad_geometry() {
+        let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+        let config = MlpConfig::tiny(4, 3, 2);
+        let weights = vec![vec![vec![1i64; 4]; 3]]; // one matrix for two FCs
+        let err = InferenceSession::from_weights(config, weights, &mut codec, &engine)
+            .err()
+            .expect("must refuse");
+        assert!(err.to_string().contains("2"), "{err}");
+    }
+
+    #[test]
+    fn import_f64_builds_and_reports_exponents() {
+        let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, 2);
+        let l0: Vec<Vec<f64>> = (0..3).map(|j| (0..4).map(|i| (i + j) as f64 * 0.1).collect()).collect();
+        let l1: Vec<Vec<f64>> = (0..2).map(|j| (0..3).map(|i| (i as f64 - j as f64) * 0.5).collect()).collect();
+        let (session, exps) =
+            InferenceSession::import_f64(&[l0, l1], 3, &mut codec, &engine).unwrap();
+        assert_eq!(exps.len(), 2);
+        assert_eq!(session.classes(), 2);
+        let ds = crate::data::synthetic_digits(8, 3, "import-test");
+        let acc = session.accuracy(&ds, 8, &engine, &mut codec).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

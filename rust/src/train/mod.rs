@@ -9,13 +9,17 @@
 //!   (Tables 2/6 and Figure 2's bit-width sweep).
 //! * [`transfer`] — the Glyph CNN with transfer learning: frozen plaintext
 //!   convolutions (MultCP), trainable encrypted FC head (Tables 4/8).
+//! * [`infer`] — forward-only encrypted inference over trained models
+//!   (`Plan::forward_only` + checkpoint/float-import model loading).
 
 pub mod fhesgd;
 pub mod glyph;
+pub mod infer;
 pub mod trainer;
 pub mod transfer;
 
 pub use fhesgd::{FhesgdMlp, SigmoidTluLayer, TluDomain};
 pub use glyph::{GlyphMlp, MlpConfig};
+pub use infer::{InferenceSession, InferError, OutputMode, Predictions};
 pub use trainer::{EpochStats, Trainer};
 pub use transfer::{CnnConfig, GlyphCnn};

@@ -195,8 +195,24 @@ impl Trainer {
         if steps == 0 {
             return Err(DataError::BatchOutOfRange { start: 0, batch, len: ds.len().min(limit) });
         }
+        self.eval_scores_range(ds, 0, steps, engine, codec)
+    }
+
+    /// [`Self::eval_scores`] over an explicit minibatch window: `steps`
+    /// forward passes starting at minibatch index `first`. The inference
+    /// session iterates this one batch at a time so a long scoring run can
+    /// publish progress and honour cancellation between batches.
+    pub fn eval_scores_range(
+        &self,
+        ds: &Dataset,
+        first: usize,
+        steps: usize,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<Vec<Vec<i64>>, DataError> {
+        let batch = engine.batch;
         let mut rows = Vec::with_capacity(steps * batch);
-        for step in 0..steps {
+        for step in first..first + steps {
             let start = step * batch;
             let x = self.encode_inputs(ds, start, engine, codec)?;
             let pass = self.net.forward(&x, engine);

@@ -228,6 +228,26 @@ impl Checkpoint {
                 self.grad_shift, net.grad_shift
             )));
         }
+        self.restore_weights(net)?;
+        engine.counter.store(&self.ops);
+        if let (Some(state), Backend::Fhe(f)) = (self.auth_rng, &engine.backend) {
+            f.auth.restore_rng_state(state);
+            f.auth.restore_count(self.ops.refresh as usize);
+        }
+        Ok(())
+    }
+
+    /// Restore *only* the trained weight ciphertexts, with geometry checks
+    /// but without the plan-hash / grad-shift binding or the counter and
+    /// RNG repositioning of [`Self::restore`].
+    ///
+    /// This is the model-loading half of restore, for forward-only
+    /// inference: an `InferenceSession` compiles a different (forward-only,
+    /// possibly different-batch) plan than the one the model trained under,
+    /// so the plan hash cannot match by construction — but the weights are
+    /// still the exact trained ciphertexts, and mismatched layer geometry
+    /// is still refused with a descriptive error.
+    pub fn restore_weights(&self, net: &mut Network) -> Result<(), WireError> {
         for lw in &self.weights {
             let fc = net.fc_unit_mut(lw.unit).ok_or_else(|| {
                 WireError::Malformed(format!("checkpoint names unit {} which is not an FC", lw.unit))
@@ -247,11 +267,6 @@ impl Checkpoint {
                     fc.w[j][i] = Weight::Enc(ct.clone());
                 }
             }
-        }
-        engine.counter.store(&self.ops);
-        if let (Some(state), Backend::Fhe(f)) = (self.auth_rng, &engine.backend) {
-            f.auth.restore_rng_state(state);
-            f.auth.restore_count(self.ops.refresh as usize);
         }
         Ok(())
     }

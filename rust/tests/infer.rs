@@ -1,0 +1,186 @@
+//! Forward-only inference conformance (ROADMAP item 5):
+//!
+//! * Differential: an [`InferenceSession`] restored from a trained
+//!   [`Checkpoint`] must produce logits **byte-identical** to the training
+//!   path's `Trainer::eval_scores` on the same weights — loading a model
+//!   through the wire format and freezing it changes nothing about what it
+//!   computes.
+//! * Backend equivalence: the same explicit weight matrices scored on the
+//!   clear mirror and on real FHE decode to identical logit rows.
+//! * The checkpoint/seed guard: a model trained under one seed refuses to
+//!   load into a session keyed for another.
+//! * Output modes: argmax/top-k are consistent views of the logits.
+
+use glyph::coordinator::scheduler::StepPhase;
+use glyph::math::GlyphRng;
+use glyph::nn::engine::{EngineProfile, GlyphEngine};
+use glyph::train::{GlyphMlp, InferenceSession, MlpConfig, OutputMode, Predictions, Trainer};
+use glyph::wire::{Checkpoint, WireCodec};
+
+const BATCH: usize = 2;
+
+/// Train a tiny clear-backend MLP for a few steps and return the trainer
+/// plus its engine/codec (the training path the session is compared to).
+fn trained_clear() -> (Trainer, GlyphEngine, glyph::nn::backend::ClearCodec, glyph::data::Dataset) {
+    let (engine, mut codec) = GlyphEngine::setup_clear(EngineProfile::Test, BATCH);
+    let config = MlpConfig::tiny(6, 5, 3);
+    let mut rng = GlyphRng::new(0x5eed ^ 0xb11d);
+    let mlp = GlyphMlp::new_random(config, &mut codec, &mut rng, &engine).unwrap();
+    let mut trainer = Trainer::new(mlp.net, 3);
+    let train = glyph::data::synthetic_digits(BATCH * 6, 11, "infer-train");
+    trainer.train_steps(&train, 6, &engine, &mut codec).unwrap();
+    let test = glyph::data::synthetic_digits(BATCH * 4, 12, "infer-test");
+    (trainer, engine, codec, test)
+}
+
+#[test]
+fn checkpoint_session_logits_match_training_path_byte_identically() {
+    let (trainer, engine, mut codec, test) = trained_clear();
+    let reference = trainer.eval_scores(&test, test.len(), &engine, &mut codec).unwrap();
+
+    // Round-trip the trained model through the wire format into a frozen
+    // session on a *fresh* engine/codec, as a separate process would.
+    let ckpt =
+        Checkpoint::capture(&trainer.net, &engine, 4242, 1, 6, 0.0, None).unwrap();
+    let bytes = ckpt.to_wire();
+    let (engine2, mut codec2) = GlyphEngine::setup_clear(EngineProfile::Test, BATCH);
+    let ckpt2 = Checkpoint::from_wire(&bytes, &engine2).unwrap();
+    let session = InferenceSession::from_checkpoint(
+        MlpConfig::tiny(6, 5, 3),
+        &ckpt2,
+        4242,
+        &mut codec2,
+        &engine2,
+    )
+    .unwrap();
+
+    assert!(session.plan().steps.iter().all(|s| s.phase == StepPhase::Forward));
+    let rows = session.scores(&test, test.len(), &engine2, &mut codec2).unwrap();
+    assert_eq!(rows, reference, "frozen session logits must be byte-identical to eval_scores");
+
+    // and the forward-only plan prices the scoring exactly
+    let batches = (test.len() / BATCH) as u64;
+    let predicted = session.plan().totals().to_snapshot().scale(batches);
+    let before = engine2.counter.snapshot();
+    session.scores(&test, test.len(), &engine2, &mut codec2).unwrap();
+    let live = engine2.counter.snapshot().since(&before);
+    let diff = live.diff_ignoring(&predicted, &glyph::serve::metrics::UNPREDICTED_OPS);
+    assert!(
+        diff.is_empty(),
+        "forward-only scoring drifted from the plan: {}",
+        glyph::coordinator::OpSnapshot::render_diff(&diff)
+    );
+}
+
+#[test]
+fn checkpoint_refuses_mismatched_seed() {
+    let (trainer, engine, _codec, _test) = trained_clear();
+    let ckpt = Checkpoint::capture(&trainer.net, &engine, 4242, 1, 6, 0.0, None).unwrap();
+    let (engine2, mut codec2) = GlyphEngine::setup_clear(EngineProfile::Test, BATCH);
+    let err = InferenceSession::from_checkpoint(
+        MlpConfig::tiny(6, 5, 3),
+        &ckpt,
+        999,
+        &mut codec2,
+        &engine2,
+    )
+    .err()
+    .expect("wrong-seed model load must be refused");
+    let msg = err.to_string();
+    assert!(msg.contains("4242") && msg.contains("999"), "{msg}");
+}
+
+#[test]
+fn fhe_checkpoint_roundtrips_into_inference_session() {
+    // Train one FHE step, persist, reload under a fresh engine keyed with
+    // the SAME seed (keygen is deterministic), and score: the restored
+    // weight ciphertexts must decrypt correctly under the regenerated key.
+    let seed = 20260803;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, BATCH, seed);
+    let config = MlpConfig::tiny(4, 3, 2);
+    let mut rng = GlyphRng::new(seed ^ 0xb11d);
+    let mlp = GlyphMlp::new_random(config, &mut client, &mut rng, &engine).unwrap();
+    let mut trainer = Trainer::new(mlp.net, 2);
+    let train = glyph::data::synthetic_cancer(BATCH * 2, 21);
+    trainer.train_steps(&train, 1, &engine, &mut client).unwrap();
+    let test = glyph::data::synthetic_cancer(BATCH * 2, 22);
+    let reference = trainer.eval_scores(&test, test.len(), &engine, &mut client).unwrap();
+
+    let ckpt =
+        Checkpoint::capture(&trainer.net, &engine, seed, 1, 1, 0.0, Some(client.rng.state()))
+            .unwrap();
+    let bytes = ckpt.to_wire();
+
+    let (engine2, mut client2) = GlyphEngine::setup(EngineProfile::Test, BATCH, seed);
+    let ckpt2 = Checkpoint::from_wire(&bytes, &engine2).unwrap();
+    let session = InferenceSession::from_checkpoint(
+        MlpConfig::tiny(4, 3, 2),
+        &ckpt2,
+        seed,
+        &mut client2,
+        &engine2,
+    )
+    .unwrap();
+    let rows = session.scores(&test, test.len(), &engine2, &mut client2).unwrap();
+    assert_eq!(rows, reference, "FHE model round-trip changed the logits");
+}
+
+#[test]
+fn clear_and_fhe_sessions_decode_identical_logits() {
+    // Same explicit 8-bit weights, same inputs, both backends: the clear
+    // mirror is byte-exact, so the decoded logit rows must be equal.
+    let config = MlpConfig::tiny(6, 5, 3);
+    let weights: Vec<Vec<Vec<i64>>> = vec![
+        (0..5).map(|j| (0..6).map(|i| ((3 * i + j) % 9) as i64 - 4).collect()).collect(),
+        (0..3).map(|j| (0..5).map(|i| ((i * j + 2) % 7) as i64 - 3).collect()).collect(),
+    ];
+    let test = glyph::data::synthetic_digits(BATCH * 2, 33, "infer-eq");
+
+    let (clear, mut clear_codec) = GlyphEngine::setup_clear(EngineProfile::Test, BATCH);
+    let clear_session =
+        InferenceSession::from_weights(config.clone(), weights.clone(), &mut clear_codec, &clear)
+            .unwrap();
+    let clear_rows = clear_session.scores(&test, test.len(), &clear, &mut clear_codec).unwrap();
+
+    let (fhe, mut fhe_client) = GlyphEngine::setup(EngineProfile::Test, BATCH, 20260804);
+    let fhe_session =
+        InferenceSession::from_weights(config, weights, &mut fhe_client, &fhe).unwrap();
+    let fhe_rows = fhe_session.scores(&test, test.len(), &fhe, &mut fhe_client).unwrap();
+
+    assert_eq!(clear_rows, fhe_rows, "clear and FHE inference disagree");
+}
+
+#[test]
+fn output_modes_are_consistent_views_of_the_logits() {
+    let (trainer, engine, mut codec, test) = trained_clear();
+    let session = InferenceSession::from_network(trainer.net, 3);
+    let Predictions::Logits(rows) = session
+        .predict(&test, test.len(), OutputMode::Logits, &engine, &mut codec)
+        .unwrap()
+    else {
+        panic!("Logits mode must return logit rows")
+    };
+    let Predictions::Argmax(labels) = session
+        .predict(&test, test.len(), OutputMode::Argmax, &engine, &mut codec)
+        .unwrap()
+    else {
+        panic!("Argmax mode must return labels")
+    };
+    let Predictions::TopK(top) = session
+        .predict(&test, test.len(), OutputMode::TopK(2), &engine, &mut codec)
+        .unwrap()
+    else {
+        panic!("TopK mode must return ranked pairs")
+    };
+    assert_eq!(rows.len(), labels.len());
+    assert_eq!(rows.len(), top.len());
+    for (i, row) in rows.iter().enumerate() {
+        // argmax label scores the row maximum…
+        assert_eq!(row[labels[i]], *row.iter().max().unwrap());
+        // …and is exactly top-1
+        assert_eq!(top[i][0].0, labels[i]);
+        assert_eq!(top[i].len(), 2);
+        // top-k is sorted by score
+        assert!(top[i][0].1 >= top[i][1].1);
+    }
+}

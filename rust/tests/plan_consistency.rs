@@ -4,12 +4,13 @@
 //! by *precisely* those totals — switches included. Any drift between what
 //! the scheduler promises and what execution does fails here.
 
+use glyph::coordinator::scheduler::StepPhase;
 use glyph::math::GlyphRng;
 use glyph::nn::batchnorm::BnLayer;
 use glyph::nn::engine::{EngineProfile, GlyphEngine};
 use glyph::nn::network::NetworkBuilder;
 use glyph::nn::tensor::{EncTensor, PackOrder};
-use glyph::train::{CnnConfig, GlyphCnn};
+use glyph::train::{CnnConfig, GlyphCnn, InferenceSession, MlpConfig};
 
 fn assert_counts_match(live: glyph::coordinator::OpSnapshot, predicted: glyph::coordinator::StepOps) {
     // Plans carry no relin/mod-switch prediction (both depend on the MAC
@@ -101,6 +102,104 @@ fn transfer_cnn_train_step_matches_compiled_plan_exactly() {
     );
     let before = engine.counter.snapshot();
     cnn.train_step(&x, &labels, &engine);
+    let live = engine.counter.snapshot().since(&before);
+    assert_counts_match(live, predicted);
+}
+
+#[test]
+fn forward_only_mlp_inference_matches_forward_plan_exactly() {
+    let batch = 2;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260801);
+    let mut rng = GlyphRng::new(31);
+    let mut net = NetworkBuilder::input_vec(3)
+        .fc(4)
+        .relu(8, 7)
+        .fc(2)
+        .softmax(3, 7)
+        .grad_shift(8)
+        .build(&mut client, &mut rng, &engine)
+        .unwrap();
+    net.plan = net.plan.forward_only();
+    assert!(net.plan.validate());
+    assert!(net.plan.steps.iter().all(|s| s.phase == StepPhase::Forward));
+    let predicted = net.plan.totals();
+    // a forward pass is strictly cheaper than a train step but still
+    // crosses the cryptosystem switch both ways (MAC → TFHE act → MAC)
+    assert!(predicted.switch_b2t > 0 && predicted.switch_t2b > 0 && predicted.act_gates > 0);
+
+    let x_cts = (0..3).map(|i| client.encrypt_batch(&[5 * i as i64 - 3, 2 - i as i64], 0)).collect();
+    let x = EncTensor::new(x_cts, vec![3], PackOrder::Forward, 0);
+    let before = engine.counter.snapshot();
+    let _ = net.forward(&x, &engine);
+    let live = engine.counter.snapshot().since(&before);
+    assert_counts_match(live, predicted);
+}
+
+#[test]
+fn forward_only_packed_inference_matches_forward_plan_exactly() {
+    // The packed (cross-sample SIMD) layout compiles different per-block
+    // counts; the forward-only contract must hold there too. Clear backend:
+    // the mirror counts ops identically and runs epoch-fast in CI.
+    let batch = 4;
+    let (engine, mut codec) = GlyphEngine::setup_clear_packed(EngineProfile::Test, batch);
+    let config = MlpConfig::tiny(6, 5, 3);
+    let weights = vec![
+        (0..5).map(|j| (0..6).map(|i| ((i * j) % 7) as i64 - 3).collect()).collect(),
+        (0..3).map(|j| (0..5).map(|i| ((i + j) % 5) as i64 - 2).collect()).collect(),
+    ];
+    let session = InferenceSession::from_weights(config, weights, &mut codec, &engine).unwrap();
+    assert!(session.plan().steps.iter().all(|s| s.phase == StepPhase::Forward));
+    let batches = 3usize;
+    let predicted = session.plan().totals().to_snapshot().scale(batches as u64);
+
+    let ds = glyph::data::synthetic_digits(batch * batches, 77, "fwd-packed");
+    let before = engine.counter.snapshot();
+    let rows = session.scores(&ds, batch * batches, &engine, &mut codec).unwrap();
+    assert_eq!(rows.len(), batch * batches);
+    let live = engine.counter.snapshot().since(&before);
+    let diff = live.diff_ignoring(&predicted, &glyph::serve::metrics::UNPREDICTED_OPS);
+    assert!(
+        diff.is_empty(),
+        "packed forward-only scoring drifted from the plan: {}",
+        glyph::coordinator::OpSnapshot::render_diff(&diff)
+    );
+}
+
+#[test]
+fn forward_only_frozen_conv_cnn_matches_forward_plan_exactly() {
+    let batch = 2;
+    let (engine, mut client) = GlyphEngine::setup(EngineProfile::Test, batch, 20260802);
+    let mut rng = GlyphRng::new(41);
+    let config = CnnConfig::tiny();
+    let rand_kernels = |oc: usize, ic: usize, k: usize, rng: &mut GlyphRng| -> Vec<Vec<Vec<Vec<i64>>>> {
+        (0..oc)
+            .map(|_| {
+                (0..ic)
+                    .map(|_| {
+                        (0..k).map(|_| (0..k).map(|_| (rng.uniform_mod(7) as i64) - 3).collect()).collect()
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    let c1w = rand_kernels(2, 1, 3, &mut rng);
+    let c2w = rand_kernels(3, 2, 3, &mut rng);
+    let bn1 = BnLayer { gain: vec![1, 1], bias: vec![0, 0], gain_shift: 0 };
+    let bn2 = BnLayer { gain: vec![1, 1, 1], bias: vec![0, 0, 0], gain_shift: 0 };
+    let mut cnn =
+        GlyphCnn::new(config, &c1w, bn1, &c2w, bn2, &mut client, &mut rng, &engine).unwrap();
+    cnn.net.plan = cnn.net.plan.forward_only();
+    assert!(cnn.net.plan.steps.iter().all(|s| s.phase == StepPhase::Forward));
+    let predicted = cnn.net.plan.totals();
+    // inference through frozen plaintext features stays MultCP-dominated
+    assert!(predicted.mult_cp > predicted.mult_cc);
+
+    let cts: Vec<_> = (0..14 * 14)
+        .map(|i| client.encrypt_batch(&[(i % 7) as i64 - 3, (i % 4) as i64 - 2], 0))
+        .collect();
+    let x = EncTensor::new(cts, vec![1, 14, 14], PackOrder::Forward, 0);
+    let before = engine.counter.snapshot();
+    let _ = cnn.net.forward(&x, &engine);
     let live = engine.counter.snapshot().since(&before);
     assert_counts_match(live, predicted);
 }

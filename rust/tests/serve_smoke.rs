@@ -5,7 +5,9 @@
 //! weights/logits/op counters byte-identical to an uninterrupted run.
 
 use glyph::serve::client::ClientError;
-use glyph::serve::{run_job, JobHandle, JobResult, JobSpec, JobState, RunOptions, RunOutcome};
+use glyph::serve::{
+    run_job, Fetched, InferSpec, JobHandle, JobResult, JobSpec, JobState, RunOptions, RunOutcome,
+};
 use glyph::serve::ServeClient;
 use std::io::{BufRead, BufReader};
 use std::net::SocketAddr;
@@ -25,6 +27,15 @@ fn temp_dir(name: &str) -> PathBuf {
 /// Spawn `glyph serve`, parse the bound address off its stdout, keep the
 /// pipe drained so the child can never block on a full buffer.
 fn spawn_server(data_dir: &std::path::Path, step_delay_ms: u64) -> (Child, SocketAddr) {
+    spawn_server_env(data_dir, step_delay_ms, &[])
+}
+
+/// [`spawn_server`] with extra environment variables (fault injection).
+fn spawn_server_env(
+    data_dir: &std::path::Path,
+    step_delay_ms: u64,
+    envs: &[(&str, &str)],
+) -> (Child, SocketAddr) {
     let mut cmd = Command::new(BIN);
     cmd.args(["serve", "--addr", "127.0.0.1:0", "--workers", "1"])
         .arg("--data-dir")
@@ -33,6 +44,9 @@ fn spawn_server(data_dir: &std::path::Path, step_delay_ms: u64) -> (Child, Socke
         .stderr(Stdio::null());
     if step_delay_ms > 0 {
         cmd.env("GLYPH_SERVE_STEP_DELAY_MS", step_delay_ms.to_string());
+    }
+    for (k, v) in envs {
+        cmd.env(k, v);
     }
     let mut child = cmd.spawn().expect("glyph binary spawns");
     let stdout = child.stdout.take().expect("stdout piped");
@@ -201,4 +215,163 @@ fn malformed_cli_flags_error_descriptively() {
     assert!(!out.status.success());
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("--dims"), "stderr: {err}");
+}
+
+#[test]
+fn empty_dims_jobspec_is_a_typed_error_not_a_panic() {
+    // The CLI validates dims before submit, but the library path must never
+    // rely on that: a raw spec with no layers has no output width, and the
+    // old code `.expect("validated")`-panicked on it.
+    let mut spec = JobSpec::small_clear("bad", 1);
+    spec.dims = vec![];
+    let err = run_job(&JobHandle::new(7, spec), None, &RunOptions::default())
+        .err()
+        .expect("empty dims must be an error, not a panic");
+    let msg = err.to_string();
+    assert!(msg.contains("dims"), "error must name the bad field: {msg}");
+}
+
+#[test]
+fn terminal_fetch_states_for_unknown_and_cancelled_jobs() {
+    let dir = temp_dir("terminal");
+    // Pace steps so job A reliably occupies the single worker while we
+    // exercise B's queued-cancel path.
+    let (mut child, addr) = spawn_server(&dir, 40);
+    let mut c = client(addr);
+
+    // unknown id: a protocol error naming the job, not a hangup
+    match c.fetch(12345) {
+        Err(ClientError::Server(msg)) => assert!(msg.contains("unknown job"), "{msg}"),
+        other => panic!("unknown-id fetch must be a server error, got {other:?}"),
+    }
+
+    let mut long = JobSpec::small_clear("terminal", 0xabad);
+    long.samples = 40;
+    long.epochs = 2; // 20 paced steps: plenty of runway
+    long.checkpoint_every = 3;
+    let a = c.submit(&long).expect("submit A");
+    let b = c.submit(&JobSpec::small_clear("terminal", 0xcafe)).expect("submit B");
+
+    // B is queued behind A on the only worker; cancel it before it starts.
+    c.cancel(b).expect("cancel queued job");
+    let st = c.status(b).expect("status of cancelled job");
+    assert_eq!(st.state, JobState::Cancelled);
+    assert!(
+        matches!(c.fetch(b), Ok(Fetched::Cancelled)),
+        "cancelled-before-start job must fetch as the terminal Cancelled frame"
+    );
+
+    // Cancel A mid-run: same terminal answer once the worker notices.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = c.status(a).expect("status of running job");
+        if st.state == JobState::Running && st.step > 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "job A never started running");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    c.cancel(a).expect("cancel running job");
+    let st = c.wait(a, Duration::from_secs(60)).expect("job A reaches a terminal state");
+    assert_eq!(st.state, JobState::Cancelled, "message: {}", st.message);
+    assert!(
+        matches!(c.fetch(a), Ok(Fetched::Cancelled)),
+        "cancelled-mid-run job must fetch as the terminal Cancelled frame"
+    );
+
+    c.shutdown().expect("graceful shutdown");
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn worker_panic_fails_one_job_and_leaves_the_server_serving() {
+    let dir = temp_dir("panic");
+    // Fault injection: the first job panics mid-step inside the worker.
+    let (mut child, addr) = spawn_server_env(&dir, 0, &[("GLYPH_SERVE_PANIC_ONCE", "2")]);
+    let mut c = client(addr);
+
+    let mut spec = JobSpec::small_clear("panic", 0xdead);
+    spec.samples = 16;
+    spec.checkpoint_every = 2;
+    let doomed = c.submit(&spec).expect("submit accepted");
+    let st = c.wait(doomed, Duration::from_secs(120)).expect("job reaches a terminal state");
+    assert_eq!(st.state, JobState::Failed, "message: {}", st.message);
+    assert!(st.message.contains("panicked"), "failure must say why: {}", st.message);
+
+    // The panic was contained to that job: the same worker thread keeps
+    // serving, and a second identical job completes correctly.
+    c.ping().expect("server answers ping after a worker panic");
+    let text = c.metrics().expect("metrics after a worker panic");
+    assert!(text.contains("glyph_jobs{state=\"failed\"} 1"), "{text}");
+    let spec2 = JobSpec { tenant: "panic2".into(), ..spec.clone() };
+    let healthy = c.submit(&spec2).expect("submit after a worker panic");
+    let result = wait_completed(&mut c, healthy, 120);
+    assert_identical(&result, &reference_run(&spec2));
+
+    c.shutdown().expect("graceful shutdown");
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn infer_job_end_to_end_over_loopback() {
+    let dir = temp_dir("infer");
+    let (mut child, addr) = spawn_server(&dir, 0);
+    let mut c = client(addr);
+
+    // Train first: the infer job scores that job's persisted final model.
+    let train = JobSpec::small_clear("infer-e2e", 31);
+    let model_id = c.submit(&train).expect("submit train job");
+    wait_completed(&mut c, model_id, 120);
+
+    let mut ispec = InferSpec::small_clear("infer-e2e", 31);
+    ispec.model_job = model_id;
+
+    // Guard rails first: a seed mismatch means the weights would not
+    // decrypt under the inference key, and a dangling model_job has no
+    // weights at all. Both must be submit-time errors.
+    let mut bad = ispec.clone();
+    bad.seed = 32;
+    assert!(matches!(c.submit_infer(&bad), Err(ClientError::Server(_))));
+    bad = ispec.clone();
+    bad.model_job = 9999;
+    assert!(matches!(c.submit_infer(&bad), Err(ClientError::Server(_))));
+
+    let id = c.submit_infer(&ispec).expect("submit infer job");
+    let st = c.wait(id, Duration::from_secs(120)).expect("infer finishes in time");
+    assert_eq!(st.state, JobState::Completed, "infer failed: {}", st.message);
+    assert_eq!(st.images, ispec.samples, "status must report images scored");
+    let Fetched::Infer(result) = c.fetch(id).expect("completed infer job has a result") else {
+        panic!("infer job must fetch as an InferResult");
+    };
+    assert_eq!(result.id, id);
+    assert_eq!(result.images, ispec.samples);
+    assert_eq!(result.batches, ispec.samples / ispec.batch);
+
+    // Scoring is deterministic: resubmitting the same spec reproduces the
+    // exact logits and predictions, digest for digest.
+    let id2 = c.submit_infer(&ispec).expect("resubmit infer job");
+    c.wait(id2, Duration::from_secs(120)).expect("second infer finishes");
+    let Fetched::Infer(again) = c.fetch(id2).expect("second infer has a result") else {
+        panic!("infer job must fetch as an InferResult");
+    };
+    assert_eq!(again.logits_digest, result.logits_digest, "logits digest not reproducible");
+    assert_eq!(again.predictions_digest, result.predictions_digest);
+    assert_eq!(again.ops, result.ops, "op counters not reproducible");
+
+    // Per-job inference metrics are on the scrape surface.
+    let text = c.metrics().expect("metrics");
+    assert!(
+        text.contains(&format!(
+            "glyph_infer_images_total{{job=\"{id}\",tenant=\"infer-e2e\"}} {}",
+            ispec.samples
+        )),
+        "{text}"
+    );
+    assert!(text.contains("glyph_infer_latency_seconds"), "{text}");
+
+    c.shutdown().expect("graceful shutdown");
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&dir);
 }

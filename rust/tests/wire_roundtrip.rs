@@ -12,7 +12,10 @@ use glyph::nn::backend::{ClearCt, Codec, Ct};
 use glyph::nn::engine::{ClientKeys, EngineProfile, FheState, GlyphEngine};
 use glyph::nn::tensor::PackedLayout;
 use glyph::serve::job::{compiled_plan, weights_digest};
-use glyph::serve::{JobBackend, JobResult, JobSpec, JobState, JobStatus, Request, Response};
+use glyph::serve::{
+    InferResult, InferSpec, JobBackend, JobKind, JobResult, JobSpec, JobState, JobStatus, Request,
+    Response,
+};
 use glyph::tfhe::lwe::LweCiphertext;
 use glyph::tfhe::params::TfheParams;
 use glyph::train::{GlyphMlp, MlpConfig};
@@ -54,6 +57,7 @@ fn sample_status() -> JobStatus {
     JobStatus {
         id: 3,
         tenant: "acme".into(),
+        kind: JobKind::Train,
         state: JobState::Running,
         epoch: 1,
         step: 9,
@@ -62,7 +66,28 @@ fn sample_status() -> JobStatus {
         resumes: 1,
         live_ops: OpSnapshot { mult_cc: 40, add_cc: 41, relin: 5, ..Default::default() },
         predicted_ops: OpSnapshot { mult_cc: 40, add_cc: 41, ..Default::default() },
+        images: 0,
+        seconds: 0.0,
         message: String::new(),
+    }
+}
+
+fn sample_infer_spec() -> InferSpec {
+    let mut spec = InferSpec::small_clear("acme", 31);
+    spec.model_job = 12;
+    spec
+}
+
+fn sample_infer_result() -> InferResult {
+    InferResult {
+        id: 13,
+        images: 16,
+        batches: 4,
+        seconds: 0.75,
+        accuracy: 0.8125,
+        ops: OpSnapshot { mult_cp: 320, switch_b2t: 64, ..Default::default() },
+        logits_digest: 0xfeed_face_0042_4242,
+        predictions_digest: 0x1357_9bdf_0246_8ace,
     }
 }
 
@@ -108,6 +133,25 @@ fn self_contained_types_roundtrip_bit_identically() {
     assert_reencode(&sample_status(), &(), "JobStatus");
     assert_eq!(assert_reencode(&sample_result(), &(), "JobResult"), sample_result());
 
+    // the inference workload's frames (PR: forward-only inference)
+    assert_eq!(
+        assert_reencode(&sample_infer_spec(), &(), "InferSpec"),
+        sample_infer_spec()
+    );
+    assert_eq!(
+        assert_reencode(&sample_infer_result(), &(), "InferResult"),
+        sample_infer_result()
+    );
+    let infer_status = JobStatus {
+        kind: JobKind::Infer,
+        images: 16,
+        seconds: 0.75,
+        ..sample_status()
+    };
+    let back = assert_reencode(&infer_status, &(), "JobStatus (infer)");
+    assert_eq!(back.kind, JobKind::Infer);
+    assert_eq!(back.images, 16);
+
     // packed-layout metadata: dense, sparse-occupancy and partial-batch
     let dense = PackedLayout::for_ring(8, 256).unwrap();
     assert_eq!(assert_reencode(&dense, &(), "PackedLayout (dense)"), dense);
@@ -131,6 +175,7 @@ fn self_contained_types_roundtrip_bit_identically() {
         Request::Metrics,
         Request::Ping,
         Request::Shutdown,
+        Request::SubmitInfer(sample_infer_spec()),
     ];
     for req in &requests {
         assert_reencode(req, &(), "Request");
@@ -144,6 +189,7 @@ fn self_contained_types_roundtrip_bit_identically() {
         Response::Pong,
         Response::ShuttingDown,
         Response::Error("unknown job 9".into()),
+        Response::InferResult(sample_infer_result()),
     ];
     for resp in &responses {
         assert_reencode(resp, &(), "Response");
@@ -262,6 +308,13 @@ fn damaged_frames_error_descriptively_never_panic() {
     let mut corrupt = bytes.clone();
     corrupt[HEADER_LEN + 3] ^= 0x10;
     assert!(matches!(JobSpec::from_wire(&corrupt, &()), Err(WireError::ChecksumMismatch { .. })));
+
+    // infer frames ride the same header/checksum machinery
+    let ibytes = sample_infer_spec().to_wire();
+    for cut in 0..ibytes.len() {
+        assert!(InferSpec::from_wire(&ibytes[..cut], &()).is_err(), "cut at {cut} must error");
+    }
+    assert!(matches!(InferResult::from_wire(&ibytes, &()), Err(WireError::WrongTag { .. })));
 
     // structurally valid frame, semantically bad contents
     let ping = Request::Ping.to_wire();
