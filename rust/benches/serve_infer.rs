@@ -1,0 +1,138 @@
+//! Multi-tenant inference scheduling throughput: four lane-compatible
+//! batch-2 jobs scored serially (one engine per job, the pre-coalescing
+//! worker behavior) against the same four jobs coalesced into one shared
+//! batch group at width 8 — plus the solo batch-1 interactive floor and
+//! the solo packed path for context. One tenant's sample count is ragged,
+//! so the group's final passes run partially filled and the reported fill
+//! ratio is the honest occupancy, not 100%. Each path's amortized
+//! seconds-per-image includes engine setup and model build, because that
+//! is what a served request actually costs. Emits
+//! `bench_out/BENCH_serve_infer.json`. `GLYPH_BENCH_FULL=1` switches the
+//! lane to real FHE at the test-profile parameters.
+
+use glyph::bench_util::{full_profile, report_json_with_counters, time_once, BenchRecord};
+use glyph::coordinator::max_threads;
+use glyph::nn::engine::EngineProfile;
+use glyph::serve::{run_infer_group, run_infer_job, InferOutcome, InferSpec, JobBackend, JobHandle};
+
+const TENANTS: usize = 4;
+
+fn spec(tenant: &str, batch: u64, samples: u64, packed: bool) -> InferSpec {
+    let mut s = InferSpec::small_clear(tenant, 20260808);
+    if full_profile() {
+        s.backend = JobBackend::Fhe;
+        s.profile = EngineProfile::Test;
+        s.dims = vec![8, 6, 3];
+    }
+    s.batch = batch;
+    s.samples = samples;
+    s.packed = packed;
+    s.coalesce = true;
+    s
+}
+
+/// Score one spec solo; returns (seconds, images).
+fn solo(spec: &InferSpec) -> (f64, u64) {
+    let handle = JobHandle::new_infer(1, spec.clone());
+    let mut images = 0;
+    let secs = time_once(|| {
+        match run_infer_job(&handle, None).expect("solo bench run") {
+            InferOutcome::Completed(result) => images = result.images,
+            InferOutcome::Cancelled => panic!("bench job reported cancelled"),
+        }
+    });
+    (secs, images)
+}
+
+fn main() {
+    let full = full_profile();
+    // Per-tenant sample counts; the last is ragged so the coalesced group's
+    // tail passes run with vacant slots.
+    let samples: Vec<u64> = if full { vec![4, 4, 4, 3] } else { vec![16, 16, 16, 15] };
+    let batch = 2;
+    eprintln!(
+        "serve_infer bench: {TENANTS} batch-{batch} tenants, {} backend",
+        if full { "FHE (test profile)" } else { "clear" }
+    );
+
+    // Interactive floor and solo packed amortization, for context.
+    let (secs_b1, images_b1) = solo(&spec("floor", 1, samples[0], false));
+    let packed_batch = batch * TENANTS as u64;
+    let (secs_packed, images_packed) =
+        solo(&spec("packed", packed_batch, samples[0].max(packed_batch), true));
+
+    // Serial: one engine + model build per tenant, the old worker behavior.
+    let specs: Vec<InferSpec> = (0..TENANTS)
+        .map(|i| spec(&format!("tenant{i}"), batch, samples[i], false))
+        .collect();
+    let mut serial_images = 0;
+    let mut serial_secs = 0.0;
+    for s in &specs {
+        let (secs, images) = solo(s);
+        serial_secs += secs;
+        serial_images += images;
+    }
+
+    // Coalesced: the same four jobs in one shared batch group at width 8.
+    let handles: Vec<JobHandle> =
+        specs.iter().enumerate().map(|(i, s)| JobHandle::new_infer(i as u64 + 1, s.clone())).collect();
+    let refs: Vec<&JobHandle> = handles.iter().collect();
+    let mut group_images = 0;
+    let mut fill = 0.0;
+    let group_secs = time_once(|| {
+        let (outcomes, stats) = run_infer_group(&refs, None, 1).expect("coalesced bench run");
+        for (id, outcome) in &outcomes {
+            assert!(
+                matches!(outcome, InferOutcome::Completed(_)),
+                "coalesced member {id} did not complete"
+            );
+        }
+        group_images = stats.images;
+        fill = stats.filled_slots as f64 / stats.total_slots.max(1) as f64;
+    });
+    assert_eq!(group_images, serial_images, "coalescing must score the same images");
+    let speedup = (serial_secs / serial_images as f64) / (group_secs / group_images as f64);
+
+    let threads = max_threads();
+    println!(
+        "serve_infer: batch-1 {:.2} images/sec  packed {:.2}  serial-4x {:.2}  \
+         coalesced-4x {:.2}  fill {:.0}%  coalescing speedup {speedup:.2}x",
+        images_b1 as f64 / secs_b1,
+        images_packed as f64 / secs_packed,
+        serial_images as f64 / serial_secs,
+        group_images as f64 / group_secs,
+        fill * 100.0,
+    );
+    if speedup < 2.0 {
+        eprintln!("warning: coalescing speedup {speedup:.2}x below the 2x target");
+    }
+
+    report_json_with_counters(
+        "serve_infer",
+        &[
+            // secs_per_op = amortized seconds per IMAGE, so ops_per_sec = images/sec
+            BenchRecord::new("per_image_solo_batch1", secs_b1 / images_b1 as f64, threads),
+            BenchRecord::new(
+                "per_image_solo_packed",
+                secs_packed / images_packed as f64,
+                threads,
+            ),
+            BenchRecord::new(
+                "per_image_serial_4tenant",
+                serial_secs / serial_images as f64,
+                threads,
+            ),
+            BenchRecord::new(
+                "per_image_coalesced_4tenant",
+                group_secs / group_images as f64,
+                threads,
+            ),
+        ],
+        &[
+            ("tenants", TENANTS as u64),
+            ("images_total", serial_images),
+            ("coalesced_fill_ratio_pct", (fill * 100.0).round() as u64),
+            ("coalesced_speedup_pct", (speedup * 100.0).round() as u64),
+        ],
+    );
+}

@@ -178,6 +178,32 @@ impl OpSnapshot {
             .expect("fields() names are always known")
     }
 
+    /// Counter-wise sum — accumulates per-pass attribution shares into a
+    /// job's running totals.
+    pub fn plus(&self, other: &OpSnapshot) -> OpSnapshot {
+        OpSnapshot::from_fields(
+            self.fields().iter().zip(other.fields().iter()).map(|(&(n, a), &(_, b))| (n, a + b)),
+        )
+        .expect("fields() names are always known")
+    }
+
+    /// The slot range `[start, end)`'s *exact* proportional share of this
+    /// snapshot, out of `total` slots: counter `v` contributes
+    /// `⌊v·end/total⌋ − ⌊v·start/total⌋`. The telescoping floors guarantee
+    /// that contiguous ranges covering `0..total` sum to `self` counter for
+    /// counter — the property the serve layer's coalesced-batch op
+    /// attribution needs (per-job shares of a shared `OpCounter` delta must
+    /// reconstruct the delta exactly, or billing drifts).
+    pub fn split_share(&self, start: u64, end: u64, total: u64) -> OpSnapshot {
+        assert!(start <= end && end <= total && total > 0, "bad slot range {start}..{end}/{total}");
+        let share = |v: u64| {
+            ((v as u128 * end as u128) / total as u128 - (v as u128 * start as u128) / total as u128)
+                as u64
+        };
+        OpSnapshot::from_fields(self.fields().iter().map(|&(n, v)| (n, share(v))))
+            .expect("fields() names are always known")
+    }
+
     /// Field-by-field comparison: every counter whose value differs, as
     /// `(name, self_value, other_value)`. Empty means identical.
     pub fn diff(&self, other: &OpSnapshot) -> Vec<(&'static str, u64, u64)> {
@@ -272,6 +298,30 @@ mod tests {
 
         assert_eq!(s.scale(3).mult_cc, 21);
         assert_eq!(s.scale(0), OpSnapshot::default());
+    }
+
+    #[test]
+    fn split_share_is_exact_and_telescoping() {
+        let s = OpSnapshot { mult_cc: 7, add_cc: 1, act_gates: 1000, relin: 3, ..Default::default() };
+        // three uneven contiguous ranges must reconstruct the snapshot exactly
+        let parts =
+            [s.split_share(0, 3, 8), s.split_share(3, 4, 8), s.split_share(4, 8, 8)];
+        let mut sum = OpSnapshot::default();
+        for p in &parts {
+            sum = OpSnapshot::from_fields(
+                sum.fields().iter().zip(p.fields().iter()).map(|(&(n, a), &(_, b))| (n, a + b)),
+            )
+            .unwrap();
+        }
+        assert_eq!(sum, s, "shares must telescope back to the whole");
+        // a full-range share is the identity; an empty range is zero
+        assert_eq!(s.split_share(0, 8, 8), s);
+        assert_eq!(s.split_share(5, 5, 8), OpSnapshot::default());
+        // indivisible counts round per-range but never drop or double-count
+        let odd = OpSnapshot { mult_cc: 5, ..Default::default() };
+        let a = odd.split_share(0, 1, 2);
+        let b = odd.split_share(1, 2, 2);
+        assert_eq!(a.mult_cc + b.mult_cc, 5);
     }
 
     #[test]

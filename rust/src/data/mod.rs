@@ -115,6 +115,33 @@ impl Dataset {
         let labels = self.labels[start..start + batch].to_vec();
         Ok((cols, labels))
     }
+
+    /// [`Self::minibatch`] that tolerates a ragged final batch: slots past
+    /// the dataset's end are zero-filled and reported vacant in the
+    /// returned occupancy mask (`occupied[b]` ⇔ slot `b` carries a real
+    /// sample). Labels cover only the occupied slots. Errors if the window
+    /// holds no real sample at all — padding an entirely-vacant batch is a
+    /// caller bug, not a dataset condition.
+    pub fn minibatch_padded(
+        &self,
+        start: usize,
+        batch: usize,
+        features: usize,
+    ) -> Result<(Vec<Vec<i64>>, Vec<usize>, Vec<bool>), DataError> {
+        if self.images.is_empty() {
+            return Err(DataError::EmptyDataset { name: self.name.clone() });
+        }
+        if start >= self.len() {
+            return Err(DataError::BatchOutOfRange { start, batch, len: self.len() });
+        }
+        let real = batch.min(self.len() - start);
+        let (mut cols, labels) = self.minibatch(start, real, features)?;
+        for col in &mut cols {
+            col.resize(batch, 0);
+        }
+        let occupied: Vec<bool> = (0..batch).map(|b| b < real).collect();
+        Ok((cols, labels, occupied))
+    }
 }
 
 /// Load MNIST from IDX files if present, else synthesize.
@@ -331,5 +358,30 @@ mod tests {
         assert_eq!(cols[3][0], ds.image_i8(2)[783]);
         let err = ds.minibatch(5, 2, 4).err().expect("must reject");
         assert_eq!(err, DataError::BatchOutOfRange { start: 5, batch: 2, len: 6 });
+    }
+
+    #[test]
+    fn minibatch_padded_masks_the_ragged_tail() {
+        let ds = synthetic_digits(6, 3, "t");
+        // fully occupied window: identical to the strict loader, all-true mask
+        let (cols, labels, occ) = ds.minibatch_padded(2, 2, 4).unwrap();
+        let (strict_cols, strict_labels) = ds.minibatch(2, 2, 4).unwrap();
+        assert_eq!(cols, strict_cols);
+        assert_eq!(labels, strict_labels);
+        assert_eq!(occ, vec![true, true]);
+
+        // ragged tail: 2 real samples in a window of 4, vacant slots zeroed
+        let (cols, labels, occ) = ds.minibatch_padded(4, 4, 4).unwrap();
+        assert_eq!(occ, vec![true, true, false, false]);
+        assert_eq!(labels, vec![4, 5]);
+        for col in &cols {
+            assert_eq!(col.len(), 4);
+            assert_eq!(&col[2..], &[0, 0], "vacant slots must be zero");
+        }
+        assert_eq!(cols[0][0], ds.image_i8(4)[0]);
+
+        // a window holding no real sample is an error, not an all-vacant batch
+        let err = ds.minibatch_padded(6, 4, 4).err().expect("must reject");
+        assert_eq!(err, DataError::BatchOutOfRange { start: 6, batch: 4, len: 6 });
     }
 }

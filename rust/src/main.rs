@@ -133,6 +133,9 @@ fn print_status(st: &glyph::serve::JobStatus) {
         "  epoch {}, step {}/{}, checkpoints {}, resumes {}",
         st.epoch, st.step, st.total_steps, st.checkpoints, st.resumes
     );
+    if st.group != 0 {
+        println!("  coalesced into batch group {}", st.group);
+    }
     println!("  live ops:      {}", st.live_ops);
     println!("  predicted ops: {}", st.predicted_ops);
     println!(
@@ -576,6 +579,8 @@ fn main() -> anyhow::Result<()> {
                 seed: opt_u64("--seed", 1)?,
                 softmax_bits: opt_u64("--softmax-bits", 3)?,
                 model_job: opt_u64("--model-job", 0)?,
+                packed: flag("--packed"),
+                coalesce: flag("--coalesce"),
             };
             spec.validate().map_err(|e| anyhow::anyhow!("bad infer spec: {e}"))?;
             let id = connect()?.submit_infer(&spec)?;
@@ -649,7 +654,8 @@ fn main() -> anyhow::Result<()> {
             eprintln!("serve flags: --addr H:P (default {DEFAULT_ADDR}), --data-dir DIR, --workers N");
             eprintln!("submit flags: train-mlp flags plus --tenant, --seed, --checkpoint-every K,");
             eprintln!("  --steps-per-epoch N, --eval-samples M, --softmax-bits B, --profile default|test");
-            eprintln!("submit-infer flags: submit flags (no epochs/checkpoints) plus --model-job ID");
+            eprintln!("submit-infer flags: submit flags (no epochs/checkpoints) plus --model-job ID,");
+            eprintln!("  --packed (SIMD layout; model-job 0 only), --coalesce (shared scoring lane)");
             std::process::exit(2);
         }
     }

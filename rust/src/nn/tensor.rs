@@ -182,6 +182,23 @@ impl PackedLayout {
             .collect()
     }
 
+    /// One-shot sparse-occupancy packing: [`Self::pack_columns`] under a
+    /// caller-supplied mask, returning the masked layout alongside the
+    /// block coefficient vectors. This is the coalesced-serving entry
+    /// point — a partially filled cross-job batch packs its occupied slots
+    /// without mutating the engine's shared layout, and the returned
+    /// layout travels with the tensor so decode masks the same slots.
+    pub fn pack_columns_masked(
+        &self,
+        cols: &[Vec<i64>],
+        occupied: &[bool],
+        n: usize,
+    ) -> (PackedLayout, Vec<Vec<i64>>) {
+        let layout = self.clone().with_occupancy(occupied.to_vec());
+        let blocks = layout.pack_columns(cols, n);
+        (layout, blocks)
+    }
+
     /// Read `features` per-feature sample columns back out of per-block
     /// coefficient vectors (vacant lanes decode as zero).
     pub fn unpack_columns(&self, blocks: &[Vec<i64>], features: usize) -> Vec<Vec<i64>> {
@@ -328,5 +345,12 @@ mod tests {
         let blocks = sparse.pack_columns(&cols, 16);
         assert_eq!(&blocks[0][..6], &[1, 0, 0, 0, 3, 0]);
         assert_eq!(sparse.unpack_columns(&blocks, 3), vec![vec![1, 0], vec![3, 0], vec![5, 0]]);
+
+        // the one-shot masked entry point matches with_occupancy + pack and
+        // leaves the base layout untouched
+        let (masked, blocks2) = l.pack_columns_masked(&cols, &[true, false], 16);
+        assert_eq!(blocks2, blocks);
+        assert_eq!(masked.occupancy, Some(vec![true, false]));
+        assert_eq!(l.occupancy, None, "masked packing must not mutate the shared layout");
     }
 }

@@ -23,6 +23,7 @@ use crate::nn::backend::{ClearCodec, Codec};
 use crate::nn::engine::{ClientKeys, GlyphEngine};
 use crate::nn::linear::Weight;
 use crate::nn::network::{Network, NetworkError};
+use crate::nn::tensor::PackedLayout;
 use crate::train::infer::argmax_rows;
 use crate::train::{GlyphMlp, InferError, InferenceSession, MlpConfig, Trainer};
 use crate::wire::{fnv1a64, write_atomic, Checkpoint, WireCodec, WireError, WireWriter};
@@ -131,7 +132,9 @@ impl JobHandle {
     }
 
     pub fn new_infer(id: u64, spec: InferSpec) -> JobHandle {
-        let total_steps = spec.samples / spec.batch.max(1);
+        // ceiling, not floor: the ragged final minibatch is scored through
+        // occupancy masks, so it counts as a (partially filled) step
+        let total_steps = spec.samples.div_ceil(spec.batch.max(1));
         JobHandle::with_payload(id, JobPayload::Infer(spec), total_steps)
     }
 
@@ -150,6 +153,7 @@ impl JobHandle {
             predicted_ops: OpSnapshot::default(),
             images: 0,
             seconds: 0.0,
+            group: 0,
             message: String::new(),
         };
         JobHandle { id, payload, cancel: AtomicBool::new(false), status: Mutex::new(status) }
@@ -374,6 +378,17 @@ pub fn run_job(
         ((spec.samples / 4) as usize).max(batch)
     };
     let test = load_dataset(&spec.dataset, false, eval_n, spec.seed ^ 0x7465)?;
+    // Real IDX loaders can return fewer rows than requested; never ask
+    // evaluation to score past the loaded set's end, and refuse (typed, not
+    // a downstream panic) when what loaded cannot fill one minibatch.
+    let eval_n = eval_n.min(test.len());
+    if eval_n < batch {
+        return Err(JobError::Spec(format!(
+            "evaluation set {} holds {} samples, fewer than one minibatch of {batch}",
+            test.name,
+            test.len()
+        )));
+    }
 
     // Network: initial weight draws and their encryptions replay the
     // original build exactly (same seeds), then a checkpoint — if any —
@@ -550,128 +565,320 @@ fn predictions_digest(labels: &[usize]) -> u64 {
     fnv1a64(&w.into_bytes())
 }
 
-/// Run an inference job: load (or deterministically synthesize) the model,
-/// freeze it behind a forward-only plan, and score `samples` held-out
-/// inputs minibatch by minibatch, publishing progress and honouring
-/// cancellation between batches.
-///
-/// `dir` is the *job's* persistence directory; the model referenced by
-/// `spec.model_job` is read from the sibling directory `../<model_job>/
-/// model.bin` (written by [`run_job`] at training completion). With
-/// `model_job == 0` the model is fresh deterministic random init — a
-/// latency/conformance probe where only op counts and timing matter.
+/// Run an inference job solo: a coalesced group of one. `dir` is the
+/// *job's* persistence directory; the model referenced by `spec.model_job`
+/// is read from the sibling directory `../<model_job>/model.bin` (written
+/// by [`run_job`] at training completion). With `model_job == 0` the model
+/// is fresh deterministic random init — a latency/conformance probe where
+/// only op counts and timing matter.
 pub fn run_infer_job(handle: &JobHandle, dir: Option<&Path>) -> Result<InferOutcome, JobError> {
-    let spec = handle
+    handle
         .infer_spec()
         .ok_or_else(|| JobError::Spec("run_infer_job invoked on a non-inference job".into()))?;
-    let config = infer_config(spec)?;
-    let batch = spec.batch as usize;
-    let classes = *spec
+    let jobs_root = dir.and_then(Path::parent);
+    let (mut outcomes, _) = run_infer_group(&[handle], jobs_root, 0)?;
+    Ok(outcomes.remove(0).1)
+}
+
+/// Occupancy accounting for one coalesced batch group, feeding the
+/// per-lane fill-ratio and amortized-latency gauges.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GroupStats {
+    /// Shared forward passes executed.
+    pub passes: u64,
+    /// Slots that carried a real image, summed over passes.
+    pub filled_slots: u64,
+    /// Slots available (`passes × group width`).
+    pub total_slots: u64,
+    /// Wall-clock spent inside shared passes.
+    pub seconds: f64,
+    /// Real images scored across all members.
+    pub images: u64,
+}
+
+/// Per-member scoring state inside a coalesced group.
+struct GroupMember<'a> {
+    handle: &'a JobHandle,
+    ds: Dataset,
+    /// Real images this member will score (loader may return fewer than
+    /// `spec.samples`; padding slots are never counted).
+    total: usize,
+    chunks: u64,
+    cursor: usize,
+    step: u64,
+    rows: Vec<Vec<i64>>,
+    seconds: f64,
+    live_share: OpSnapshot,
+    predicted_share: OpSnapshot,
+    cancelled: bool,
+}
+
+/// Score a *batch group*: `handles` are lane-compatible inference jobs
+/// (identical [`InferSpec::lane_label`]; tenant and sample count may
+/// differ) coalesced into one engine of width `members × batch`. Member
+/// `j` owns the contiguous slot window `[j·batch, (j+1)·batch)`; every
+/// shared forward pass fills each active member's window from its own
+/// dataset cursor (occupancy masks for ragged tails and finished/cancelled
+/// members) and de-interleaves the per-slot logit rows back to their
+/// owners. Because the per-lane forward pipeline never mixes batch lanes,
+/// each occupied slot's row is byte-identical to a solo run of the same
+/// sample.
+///
+/// Op accounting stays exact: each pass is checked against the compiled
+/// plan's forward totals (at group width), then the live delta *and* the
+/// plan prediction are split among that pass's active members with the
+/// same telescoping proportional shares — per-member live−predicted drift
+/// is zero by construction, and member shares reconstruct the group total
+/// counter for counter.
+///
+/// Returns one `(job id, outcome)` per member in input order, plus the
+/// group's occupancy stats. A member cancelled mid-group vacates its slots
+/// while the others continue.
+pub fn run_infer_group(
+    handles: &[&JobHandle],
+    jobs_root: Option<&Path>,
+    group: u64,
+) -> Result<(Vec<(u64, InferOutcome)>, GroupStats), JobError> {
+    let first = handles
+        .first()
+        .ok_or_else(|| JobError::Spec("empty batch group".into()))?
+        .infer_spec()
+        .ok_or_else(|| JobError::Spec("batch group contains a non-inference job".into()))?;
+    for h in handles {
+        let spec = h
+            .infer_spec()
+            .ok_or_else(|| JobError::Spec("batch group contains a non-inference job".into()))?;
+        if spec.lane_label() != first.lane_label() {
+            return Err(JobError::Spec(format!(
+                "job {} (lane {}) cannot share a batch group with lane {}",
+                h.id,
+                spec.lane_label(),
+                first.lane_label()
+            )));
+        }
+    }
+    let config = infer_config(first)?;
+    let batch = first.batch as usize;
+    let width = handles.len() * batch;
+    let classes = *first
         .dims
         .last()
         .ok_or_else(|| JobError::Spec("dims is empty: no output layer width".into()))?
         as usize;
 
-    // Engine + codec. On FHE the spec seed must be the *training* seed —
-    // the model's weight ciphertexts only decrypt under that key material.
-    let (engine, mut codec) = match spec.backend {
+    // Engine + codec at group width. On FHE the spec seed must be the
+    // *training* seed — the model's weight ciphertexts only decrypt under
+    // that key material. Weights are constant polynomials, so one model
+    // build serves every batch width.
+    let (mut engine, mut codec) = match first.backend {
         JobBackend::Clear => {
-            let (e, c) = GlyphEngine::setup_clear(spec.profile, batch);
+            let (e, c) = GlyphEngine::setup_clear(first.profile, width);
             (e, JobCodec::Clear(c))
         }
         JobBackend::Fhe => {
-            let (e, c) = GlyphEngine::setup(spec.profile, batch, spec.seed);
+            let (e, c) = GlyphEngine::setup(first.profile, width, first.seed);
             (e, JobCodec::Fhe(c))
         }
     };
+    if first.packed {
+        // pre-check the layout fit so an oversized group is a typed error,
+        // not an `enable_packing` panic escaping the worker
+        PackedLayout::for_ring(width, engine.params().n).map_err(|e| {
+            JobError::Spec(format!("batch group of {width} slots cannot pack: {e}"))
+        })?;
+        engine.enable_packing();
+    }
 
-    // Held-out split, same derivation as training evaluation.
-    let ds = load_dataset(&spec.dataset, false, spec.samples as usize, spec.seed ^ 0x7465)?;
-
-    let session = if spec.model_job == 0 {
-        let mut rng = GlyphRng::new(spec.seed ^ 0xb11d);
+    let session = if first.model_job == 0 {
+        let mut rng = GlyphRng::new(first.seed ^ 0xb11d);
         let mlp = GlyphMlp::new_random(config, codec.as_dyn(), &mut rng, &engine)?;
         InferenceSession::from_network(mlp.net, classes)
     } else {
-        let jobs_root = dir
-            .and_then(Path::parent)
+        let root = jobs_root
             .ok_or_else(|| JobError::Spec("model_job requires a persistent data dir".into()))?;
-        let path = model_path(&jobs_root.join(spec.model_job.to_string()));
+        let path = model_path(&root.join(first.model_job.to_string()));
         let bytes = std::fs::read(&path).map_err(|e| {
-            JobError::Spec(format!("model of job {} not found ({}): {e}", spec.model_job, path.display()))
+            JobError::Spec(format!(
+                "model of job {} not found ({}): {e}",
+                first.model_job,
+                path.display()
+            ))
         })?;
         let ckpt = Checkpoint::from_wire(&bytes, &engine)?;
-        InferenceSession::from_checkpoint(config, &ckpt, spec.seed, codec.as_dyn(), &engine)?
+        InferenceSession::from_checkpoint(config, &ckpt, first.seed, codec.as_dyn(), &engine)?
     };
+    let features = session.features();
 
     // Scoring is priced by the forward-only plan; model build/restore ops
     // (weight encryption) are not part of that contract, so the counter
     // starts clean here.
     engine.counter.store(&OpSnapshot::default());
+    let per_pass = session.plan().totals().to_snapshot();
 
-    let batches = spec.samples / spec.batch.max(1);
-    if batches == 0 {
-        return Err(JobError::Spec(format!(
-            "samples ({}) yield no full minibatch of {batch}",
-            spec.samples
-        )));
+    // Held-out splits, same derivation as training evaluation. The lane
+    // key pins dataset and seed, so members with different sample counts
+    // read prefixes of the same synthetic stream.
+    let mut members: Vec<GroupMember<'_>> = Vec::with_capacity(handles.len());
+    for &h in handles {
+        let spec = h.infer_spec().expect("validated above");
+        let ds = load_dataset(&spec.dataset, false, spec.samples as usize, spec.seed ^ 0x7465)?;
+        let total = ds.len().min(spec.samples as usize);
+        if total == 0 {
+            return Err(JobError::Spec(format!("dataset {} loaded no samples", ds.name)));
+        }
+        let chunks = (total as u64).div_ceil(spec.batch.max(1));
+        members.push(GroupMember {
+            handle: h,
+            ds,
+            total,
+            chunks,
+            cursor: 0,
+            step: 0,
+            rows: Vec::with_capacity(total),
+            seconds: 0.0,
+            live_share: OpSnapshot::default(),
+            predicted_share: OpSnapshot::default(),
+            cancelled: false,
+        });
     }
-    let per_batch = session.plan().totals().to_snapshot();
-    let publish = |done: u64, secs: f64, live: OpSnapshot| {
-        handle.update(|st| {
+    for m in &members {
+        let (chunks, step, images, secs, live, pred) =
+            (m.chunks, m.step, m.cursor as u64, m.seconds, m.live_share, m.predicted_share);
+        m.handle.update(|st| {
             st.state = JobState::Running;
-            st.step = done;
-            st.total_steps = batches;
-            st.images = done * spec.batch;
+            st.step = step;
+            st.total_steps = chunks;
+            st.images = images;
             st.seconds = secs;
             st.live_ops = live;
-            st.predicted_ops = per_batch.scale(done);
+            st.predicted_ops = pred;
+            st.group = group;
         });
-    };
-    publish(0, 0.0, engine.counter.snapshot());
+    }
 
     let delay = step_delay_ms();
-    let mut rows: Vec<Vec<i64>> = Vec::with_capacity((batches as usize) * batch);
-    let mut seconds = 0.0f64;
-    for b in 0..batches {
-        if handle.cancel.load(Ordering::Relaxed) {
-            handle.update(|st| st.state = JobState::Cancelled);
-            return Ok(InferOutcome::Cancelled);
+    let mut stats = GroupStats::default();
+    loop {
+        for m in &mut members {
+            if !m.cancelled && m.handle.cancel.load(Ordering::Relaxed) {
+                m.cancelled = true;
+                m.handle.update(|st| st.state = JobState::Cancelled);
+            }
         }
+        let active: Vec<usize> = (0..members.len())
+            .filter(|&j| !members[j].cancelled && members[j].cursor < members[j].total)
+            .collect();
+        if active.is_empty() {
+            break;
+        }
+
+        // Assemble the shared batch: each active member's window is filled
+        // from its cursor, ragged tails padded with vacant (zeroed) slots.
+        let mut cols = vec![vec![0i64; width]; features];
+        let mut occupied = vec![false; width];
+        let mut occ_counts: Vec<(usize, u64)> = Vec::with_capacity(active.len());
+        for &j in &active {
+            let m = &members[j];
+            let (mcols, _labels, mocc) = m.ds.minibatch_padded(m.cursor, batch, features)?;
+            for (f, col) in mcols.iter().enumerate() {
+                cols[f][j * batch..(j + 1) * batch].copy_from_slice(col);
+            }
+            occupied[j * batch..(j + 1) * batch].copy_from_slice(&mocc);
+            occ_counts.push((j, mocc.iter().filter(|&&o| o).count() as u64));
+        }
+
+        let before = engine.counter.snapshot();
         let t0 = std::time::Instant::now();
-        rows.extend(session.scores_range(&ds, b as usize, 1, &engine, codec.as_dyn())?);
-        seconds += t0.elapsed().as_secs_f64();
+        let slot_rows = session.scores_slots(&cols, &occupied, &engine, codec.as_dyn())?;
+        let pass_secs = t0.elapsed().as_secs_f64();
+        let delta = engine.counter.snapshot().since(&before);
+
+        // Plan conformance per pass: a shared pass must cost exactly the
+        // compiled forward totals at group width, or attribution would
+        // split a number nobody can price.
+        let drift = delta.diff_ignoring(&per_pass, &super::metrics::UNPREDICTED_OPS);
+        if !drift.is_empty() {
+            return Err(JobError::Spec(format!(
+                "coalesced pass diverged from the compiled plan: {}",
+                OpSnapshot::render_diff(&drift)
+            )));
+        }
+
+        // Attribution: split the live delta AND the plan prediction with
+        // the same telescoping occupied-slot shares, so the member shares
+        // reconstruct the group totals exactly and per-member drift is 0.
+        let pass_slots: u64 = occ_counts.iter().map(|&(_, c)| c).sum();
+        let mut sold = 0u64;
+        for &(j, count) in &occ_counts {
+            let live = delta.split_share(sold, sold + count, pass_slots);
+            let pred = per_pass.split_share(sold, sold + count, pass_slots);
+            sold += count;
+            let m = &mut members[j];
+            for b in 0..count as usize {
+                m.rows.push(slot_rows[j * batch + b].clone());
+            }
+            m.cursor += count as usize;
+            m.step += 1;
+            m.seconds += pass_secs * count as f64 / pass_slots as f64;
+            m.live_share = m.live_share.plus(&live);
+            m.predicted_share = m.predicted_share.plus(&pred);
+            let (step, images, secs, live, pred) =
+                (m.step, m.cursor as u64, m.seconds, m.live_share, m.predicted_share);
+            m.handle.update(|st| {
+                st.step = step;
+                st.images = images;
+                st.seconds = secs;
+                st.live_ops = live;
+                st.predicted_ops = pred;
+            });
+        }
+        stats.passes += 1;
+        stats.filled_slots += pass_slots;
+        stats.total_slots += width as u64;
+        stats.seconds += pass_secs;
+        stats.images += pass_slots;
         if delay > 0 {
             std::thread::sleep(std::time::Duration::from_millis(delay));
         }
-        maybe_panic_once(b + 1);
-        publish(b + 1, seconds, engine.counter.snapshot());
+        maybe_panic_once(stats.passes);
     }
 
-    let ops = engine.counter.snapshot();
-    let predicted = argmax_rows(&rows);
-    let correct = predicted
-        .iter()
-        .zip(&ds.labels)
-        .filter(|&(&p, &label)| p == label % classes)
-        .count();
-    let result = InferResult {
-        id: handle.id,
-        images: batches * spec.batch,
-        batches,
-        seconds,
-        accuracy: correct as f64 / predicted.len().max(1) as f64,
-        ops,
-        logits_digest: logits_digest(&rows),
-        predictions_digest: predictions_digest(&predicted),
-    };
-    handle.update(|st| {
-        st.state = JobState::Completed;
-        st.step = batches;
-        st.images = batches * spec.batch;
-        st.seconds = seconds;
-        st.live_ops = ops;
-        st.predicted_ops = per_batch.scale(batches);
-    });
-    Ok(InferOutcome::Completed(result))
+    let mut outcomes = Vec::with_capacity(members.len());
+    for m in &members {
+        if m.cancelled {
+            outcomes.push((m.handle.id, InferOutcome::Cancelled));
+            continue;
+        }
+        let predicted = argmax_rows(&m.rows);
+        let correct = predicted
+            .iter()
+            .zip(&m.ds.labels)
+            .filter(|&(&p, &label)| p == label % classes)
+            .count();
+        let result = InferResult {
+            id: m.handle.id,
+            // real images only — padding slots in the ragged final batch
+            // are vacant lanes, not scored work
+            images: m.cursor as u64,
+            batches: m.chunks,
+            seconds: m.seconds,
+            accuracy: correct as f64 / predicted.len().max(1) as f64,
+            ops: m.live_share,
+            logits_digest: logits_digest(&m.rows),
+            predictions_digest: predictions_digest(&predicted),
+        };
+        let (step, chunks, images, secs, live, pred) =
+            (m.step, m.chunks, m.cursor as u64, m.seconds, m.live_share, m.predicted_share);
+        m.handle.update(|st| {
+            st.state = JobState::Completed;
+            st.step = step;
+            st.total_steps = chunks;
+            st.images = images;
+            st.seconds = secs;
+            st.live_ops = live;
+            st.predicted_ops = pred;
+        });
+        outcomes.push((m.handle.id, InferOutcome::Completed(result)));
+    }
+    Ok((outcomes, stats))
 }

@@ -23,9 +23,31 @@ pub fn op_drift(live: &OpSnapshot, predicted: &OpSnapshot) -> u64 {
         .sum()
 }
 
-/// Render the full exposition. `statuses` should be sorted by job id for
-/// stable scrapes.
-pub fn render(uptime_seconds: f64, statuses: &[JobStatus]) -> String {
+/// One scoring lane's accumulated coalescing stats, as rendered into the
+/// per-lane gauges. A lane is a batch-compatibility class of coalesce
+/// inference jobs ([`crate::serve::protocol::InferSpec::lane_label`]); its
+/// counters aggregate every batch group the lane has run.
+#[derive(Clone, Debug, Default)]
+pub struct LaneView {
+    /// The lane-compatibility label (metric label `lane`).
+    pub lane: String,
+    /// Batch groups the lane has completed.
+    pub groups: u64,
+    /// Shared forward passes across all groups.
+    pub passes: u64,
+    /// Slots that carried a real image, summed over passes.
+    pub filled_slots: u64,
+    /// Slots available (`Σ passes × group width`).
+    pub total_slots: u64,
+    /// Wall-clock spent inside shared passes.
+    pub seconds: f64,
+    /// Real images scored through the lane.
+    pub images: u64,
+}
+
+/// Render the full exposition. `statuses` should be sorted by job id and
+/// `lanes` by label for stable scrapes.
+pub fn render(uptime_seconds: f64, statuses: &[JobStatus], lanes: &[LaneView]) -> String {
     let mut out = String::new();
     let w = &mut out;
     let _ = writeln!(w, "# HELP glyph_uptime_seconds Seconds since the server started.");
@@ -72,6 +94,44 @@ pub fn render(uptime_seconds: f64, statuses: &[JobStatus]) -> String {
             let _ = writeln!(w, "glyph_infer_seconds{{{labels}}} {:.6}", s.seconds);
             let latency = if s.images > 0 { s.seconds / s.images as f64 } else { 0.0 };
             let _ = writeln!(w, "glyph_infer_latency_seconds{{{labels}}} {latency:.6}");
+        }
+    }
+
+    if !lanes.is_empty() {
+        let _ = writeln!(
+            w,
+            "# HELP glyph_lane_groups_total Coalesced batch groups a scoring lane has run."
+        );
+        let _ = writeln!(w, "# TYPE glyph_lane_groups_total counter");
+        let _ = writeln!(
+            w,
+            "# HELP glyph_lane_images_total Real images scored through a lane's shared batches."
+        );
+        let _ = writeln!(w, "# TYPE glyph_lane_images_total counter");
+        let _ = writeln!(
+            w,
+            "# HELP glyph_lane_fill_ratio Occupied fraction of the lane's shared batch slots \
+             (1 = every coalesced pass ran full)."
+        );
+        let _ = writeln!(w, "# TYPE glyph_lane_fill_ratio gauge");
+        let _ = writeln!(
+            w,
+            "# HELP glyph_lane_coalesced_latency_seconds Amortized per-image latency of the \
+             lane's shared passes."
+        );
+        let _ = writeln!(w, "# TYPE glyph_lane_coalesced_latency_seconds gauge");
+        for l in lanes {
+            let labels = format!("lane=\"{}\"", l.lane);
+            let _ = writeln!(w, "glyph_lane_groups_total{{{labels}}} {}", l.groups);
+            let _ = writeln!(w, "glyph_lane_images_total{{{labels}}} {}", l.images);
+            let fill = if l.total_slots > 0 {
+                l.filled_slots as f64 / l.total_slots as f64
+            } else {
+                0.0
+            };
+            let _ = writeln!(w, "glyph_lane_fill_ratio{{{labels}}} {fill:.6}");
+            let latency = if l.images > 0 { l.seconds / l.images as f64 } else { 0.0 };
+            let _ = writeln!(w, "glyph_lane_coalesced_latency_seconds{{{labels}}} {latency:.6}");
         }
     }
 
@@ -135,10 +195,11 @@ mod tests {
             predicted_ops: predicted,
             images: 0,
             seconds: 0.0,
+            group: 0,
             message: String::new(),
         };
         assert_eq!(op_drift(&live, &predicted), 0);
-        let text = render(1.5, &[status.clone()]);
+        let text = render(1.5, &[status.clone()], &[]);
         assert!(text.contains("glyph_jobs{state=\"running\"} 1"), "{text}");
         assert!(text.contains(
             "glyph_job_ops{job=\"1\",tenant=\"acme\",op=\"mult_cc\",kind=\"live\"} 10"
@@ -167,13 +228,38 @@ mod tests {
             predicted_ops: OpSnapshot::default(),
             images: 32,
             seconds: 1.6,
+            group: 0,
             message: String::new(),
         };
-        let text = render(2.0, &[status]);
+        let text = render(2.0, &[status], &[]);
         assert!(text.contains("glyph_infer_images_total{job=\"7\",tenant=\"acme\"} 32"), "{text}");
         assert!(text.contains("glyph_infer_seconds{job=\"7\",tenant=\"acme\"} 1.600000"), "{text}");
         assert!(
             text.contains("glyph_infer_latency_seconds{job=\"7\",tenant=\"acme\"} 0.050000"),
+            "{text}"
+        );
+        // no coalescing lanes → no lane series at all
+        assert!(!text.contains("glyph_lane_fill_ratio"), "{text}");
+    }
+
+    #[test]
+    fn renders_lane_gauges() {
+        let lane = LaneView {
+            lane: "clear-default-d16x8x4-b2-sm3-digits-seed9-model0".into(),
+            groups: 3,
+            passes: 8,
+            filled_slots: 48,
+            total_slots: 64,
+            seconds: 1.2,
+            images: 48,
+        };
+        let text = render(2.0, &[], &[lane]);
+        let labels = "lane=\"clear-default-d16x8x4-b2-sm3-digits-seed9-model0\"";
+        assert!(text.contains(&format!("glyph_lane_groups_total{{{labels}}} 3")), "{text}");
+        assert!(text.contains(&format!("glyph_lane_images_total{{{labels}}} 48")), "{text}");
+        assert!(text.contains(&format!("glyph_lane_fill_ratio{{{labels}}} 0.750000")), "{text}");
+        assert!(
+            text.contains(&format!("glyph_lane_coalesced_latency_seconds{{{labels}}} 0.025000")),
             "{text}"
         );
     }

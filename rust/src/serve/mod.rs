@@ -30,7 +30,8 @@ pub mod server;
 
 pub use client::{Fetched, ServeClient};
 pub use job::{
-    run_infer_job, run_job, InferOutcome, JobError, JobHandle, JobPayload, RunOptions, RunOutcome,
+    run_infer_group, run_infer_job, run_job, GroupStats, InferOutcome, JobError, JobHandle,
+    JobPayload, RunOptions, RunOutcome,
 };
 pub use protocol::{
     read_frame, write_frame, InferResult, InferSpec, JobBackend, JobKind, JobResult, JobSpec,

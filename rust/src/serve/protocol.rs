@@ -222,6 +222,16 @@ pub struct InferSpec {
     /// Completed training job whose persisted model to serve (0 = fresh
     /// deterministic random weights).
     pub model_job: u64,
+    /// Score through the cross-sample SIMD packed layout (v2). Packed
+    /// engines rebuild weight geometry at encode time, so this requires
+    /// `model_job == 0` — checkpointed models restore the per-scalar
+    /// layer path.
+    pub packed: bool,
+    /// Opt into the shared scoring lane (v2): batch-compatible coalesce
+    /// jobs are drained together and scored in one widened engine batch,
+    /// with occupancy masks for partial fills and exact per-job op
+    /// attribution split from the shared counter delta.
+    pub coalesce: bool,
 }
 
 impl InferSpec {
@@ -238,7 +248,35 @@ impl InferSpec {
             seed,
             softmax_bits: 3,
             model_job: 0,
+            packed: false,
+            coalesce: false,
         }
+    }
+
+    /// The lane-compatibility key: two coalesce jobs may share one scoring
+    /// lane (and therefore one engine, one key stream, one model build)
+    /// iff every field here matches. Rendered into the per-lane metric
+    /// labels, so it doubles as the lane's human-readable identity.
+    pub fn lane_label(&self) -> String {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        format!(
+            "{}-{}-d{}-b{}-sm{}-{}-seed{}-model{}{}",
+            match self.backend {
+                JobBackend::Clear => "clear",
+                JobBackend::Fhe => "fhe",
+            },
+            match self.profile {
+                EngineProfile::Default => "default",
+                EngineProfile::Test => "test",
+            },
+            dims.join("x"),
+            self.batch,
+            self.softmax_bits,
+            self.dataset,
+            self.seed,
+            self.model_job,
+            if self.packed { "-packed" } else { "" },
+        )
     }
 
     /// Structural validation (submit-time; the runner re-validates).
@@ -264,13 +302,20 @@ impl InferSpec {
         if self.softmax_bits == 0 || self.softmax_bits > 16 {
             return Err(format!("softmax_bits {} is outside 1..=16", self.softmax_bits));
         }
+        if self.packed && self.model_job != 0 {
+            return Err(format!(
+                "packed inference requires a fresh model (model_job 0), got model_job {}",
+                self.model_job
+            ));
+        }
         Ok(())
     }
 }
 
 impl WireCodec for InferSpec {
     const TAG: [u8; 4] = *b"ISPC";
-    const VERSION: u16 = 1;
+    // v2: adds packed/coalesce (the batched-scheduling opt-ins)
+    const VERSION: u16 = 2;
     type Ctx = ();
 
     fn encode_body(&self, w: &mut WireWriter) {
@@ -290,6 +335,8 @@ impl WireCodec for InferSpec {
         w.put_u64(self.seed);
         w.put_u64(self.softmax_bits);
         w.put_u64(self.model_job);
+        w.put_u8(self.packed as u8);
+        w.put_u8(self.coalesce as u8);
     }
 
     fn decode_body(r: &mut WireReader<'_>, _: &()) -> Result<Self, WireError> {
@@ -312,6 +359,8 @@ impl WireCodec for InferSpec {
             seed: r.u64()?,
             softmax_bits: r.u64()?,
             model_job: r.u64()?,
+            packed: r.u8()? != 0,
+            coalesce: r.u8()? != 0,
         })
     }
 }
@@ -381,14 +430,16 @@ pub struct JobStatus {
     pub images: u64,
     /// Scoring wall-clock so far (infer jobs; drives the latency gauge).
     pub seconds: f64,
+    /// Batch group this job was coalesced into (v3; 0 = scored solo).
+    pub group: u64,
     /// Failure detail when `state == Failed`.
     pub message: String,
 }
 
 impl WireCodec for JobStatus {
     const TAG: [u8; 4] = *b"JSTA";
-    // v2: adds kind/images/seconds (the infer workload's progress fields)
-    const VERSION: u16 = 2;
+    // v3: adds group (the coalesced batch-group id, 0 = solo)
+    const VERSION: u16 = 3;
     type Ctx = ();
 
     fn encode_body(&self, w: &mut WireWriter) {
@@ -414,6 +465,7 @@ impl WireCodec for JobStatus {
         put_nested(w, &self.predicted_ops);
         w.put_u64(self.images);
         w.put_f64(self.seconds);
+        w.put_u64(self.group);
         w.put_str(&self.message);
     }
 
@@ -443,6 +495,7 @@ impl WireCodec for JobStatus {
             predicted_ops: get_nested(r, &())?,
             images: r.u64()?,
             seconds: r.f64()?,
+            group: r.u64()?,
             message: r.str()?,
         })
     }

@@ -24,8 +24,8 @@
 //! server keeps answering submit/status/metrics.
 
 use super::job::{
-    checkpoint_path, compiled_infer_plan, compiled_plan, run_infer_job, run_job, InferOutcome,
-    JobHandle, JobPayload, RunOptions, RunOutcome,
+    checkpoint_path, compiled_infer_plan, compiled_plan, run_infer_group, run_infer_job, run_job,
+    InferOutcome, JobHandle, JobPayload, RunOptions, RunOutcome,
 };
 use super::lock_clean;
 use super::metrics;
@@ -69,6 +69,10 @@ enum StoredResult {
     Infer(InferResult),
 }
 
+/// Hard cap on a coalesced batch group's total slot width: bounds engine
+/// memory and keeps the packed layout well inside every profile's ring.
+const MAX_GROUP_SLOTS: u64 = 64;
+
 struct Shared {
     jobs: Mutex<HashMap<u64, Arc<JobHandle>>>,
     queue: Mutex<VecDeque<u64>>,
@@ -78,6 +82,15 @@ struct Shared {
     data_dir: Option<PathBuf>,
     results: Mutex<HashMap<u64, StoredResult>>,
     started: Instant,
+    /// Shared scoring lanes: lane label → queued coalesce job ids, FIFO.
+    /// Membership in a lane's deque IS the claim token — a worker drains
+    /// compatible jobs under this lock, and a main-queue token whose id is
+    /// no longer in its lane has already been scored by another group.
+    lanes: Mutex<HashMap<String, VecDeque<u64>>>,
+    /// Accumulated per-lane coalescing stats behind the `/metrics` gauges.
+    lane_stats: Mutex<HashMap<String, metrics::LaneView>>,
+    /// Batch-group id allocator (0 is reserved for "scored solo").
+    next_group: AtomicU64,
 }
 
 impl Shared {
@@ -88,6 +101,10 @@ impl Shared {
     fn enqueue(&self, id: u64) {
         lock_clean(&self.queue).push_back(id);
         self.queue_cv.notify_one();
+    }
+
+    fn enlane(&self, lane: String, id: u64) {
+        lock_clean(&self.lanes).entry(lane).or_default().push_back(id);
     }
 }
 
@@ -116,6 +133,9 @@ impl RunningServer {
             data_dir: cfg.data_dir.clone(),
             results: Mutex::new(HashMap::new()),
             started: Instant::now(),
+            lanes: Mutex::new(HashMap::new()),
+            lane_stats: Mutex::new(HashMap::new()),
+            next_group: AtomicU64::new(1),
         });
 
         if let Some(dir) = &cfg.data_dir {
@@ -215,13 +235,22 @@ fn recover(shared: &Arc<Shared>, dir: &Path) -> io::Result<()> {
             lock_clean(&shared.results).insert(id, stored);
             lock_clean(&shared.jobs).insert(id, handle);
         } else {
+            let lane = handle
+                .infer_spec()
+                .filter(|s| s.coalesce)
+                .map(super::protocol::InferSpec::lane_label);
             lock_clean(&shared.jobs).insert(id, Arc::clone(&handle));
-            pending.push(id);
+            pending.push((id, lane));
         }
     }
     shared.next_id.store(max_id + 1, Ordering::SeqCst);
     pending.sort_unstable();
-    for id in pending {
+    for (id, lane) in pending {
+        // coalesce jobs rejoin their scoring lane before the main queue, so
+        // recovered siblings coalesce again instead of running solo
+        if let Some(lane) = lane {
+            shared.enlane(lane, id);
+        }
         shared.enqueue(id);
     }
     Ok(())
@@ -312,9 +341,12 @@ fn dispatch(shared: &Arc<Shared>, req: Request) -> Response {
             let mut statuses: Vec<_> =
                 lock_clean(&shared.jobs).values().map(|h| h.status()).collect();
             statuses.sort_by_key(|s| s.id);
+            let mut lanes: Vec<_> = lock_clean(&shared.lane_stats).values().cloned().collect();
+            lanes.sort_by(|a, b| a.lane.cmp(&b.lane));
             Response::Metrics(metrics::render(
                 shared.started.elapsed().as_secs_f64(),
                 &statuses,
+                &lanes,
             ))
         }
         Request::Ping => Response::Pong,
@@ -398,8 +430,14 @@ fn submit_infer(shared: &Arc<Shared>, spec: InferSpec) -> Result<u64, String> {
         crate::wire::write_atomic(&dir.join("infer.bin"), &spec.to_wire())
             .map_err(|e| format!("persisting spec: {e}"))?;
     }
+    let lane = spec.coalesce.then(|| spec.lane_label());
     let handle = Arc::new(JobHandle::new_infer(id, spec));
     lock_clean(&shared.jobs).insert(id, Arc::clone(&handle));
+    // lane membership must exist before the queue token is visible, or a
+    // fast worker would run the job solo
+    if let Some(lane) = lane {
+        shared.enlane(lane, id);
+    }
     shared.enqueue(id);
     Ok(id)
 }
@@ -439,6 +477,14 @@ fn worker_loop(shared: &Arc<Shared>) {
             Some(h) => Arc::clone(h),
             None => continue,
         };
+        // Coalesce inference jobs are claimed through their scoring lane,
+        // not the bare queue token: this token may pull a whole batch group
+        // along, or find its job already scored by an earlier group.
+        if let Some(spec) = handle.infer_spec().filter(|s| s.coalesce) {
+            let (lane, batch) = (spec.lane_label(), spec.batch);
+            run_coalesced(shared, id, &lane, batch);
+            continue;
+        }
         if handle.cancel.load(Ordering::SeqCst) {
             handle.update(|st| st.state = JobState::Cancelled);
             continue;
@@ -490,5 +536,88 @@ fn worker_loop(shared: &Arc<Shared>) {
                 });
             }
         }
+    }
+}
+
+/// Claim and run one coalesced batch group from a scoring lane. `id` is
+/// the queue token that woke this worker; if it is no longer in the lane,
+/// an earlier group already scored it and there is nothing to do.
+/// Otherwise the worker drains up to `MAX_GROUP_SLOTS / batch` compatible
+/// jobs (FIFO, always including `id`) under the lanes lock — the drain is
+/// the claim, so two workers can never run the same job — and scores them
+/// in one shared engine batch.
+fn run_coalesced(shared: &Arc<Shared>, id: u64, lane: &str, batch: u64) {
+    let claimed: Vec<u64> = {
+        let mut lanes = lock_clean(&shared.lanes);
+        let Some(deque) = lanes.get_mut(lane) else { return };
+        if !deque.contains(&id) {
+            return;
+        }
+        let cap = (MAX_GROUP_SLOTS / batch.max(1)).max(1) as usize;
+        let take = deque.len().min(cap);
+        deque.drain(..take).collect()
+    };
+
+    let mut members: Vec<Arc<JobHandle>> = Vec::with_capacity(claimed.len());
+    for cid in claimed {
+        let Some(h) = lock_clean(&shared.jobs).get(&cid).cloned() else { continue };
+        if h.cancel.load(Ordering::SeqCst) {
+            h.update(|st| st.state = JobState::Cancelled);
+            continue;
+        }
+        members.push(h);
+    }
+    if members.is_empty() {
+        return;
+    }
+
+    let group = shared.next_group.fetch_add(1, Ordering::SeqCst);
+    let jobs_root = shared.data_dir.as_ref().map(|d| d.join("jobs"));
+    let refs: Vec<&JobHandle> = members.iter().map(Arc::as_ref).collect();
+    let ran =
+        catch_unwind(AssertUnwindSafe(|| run_infer_group(&refs, jobs_root.as_deref(), group)));
+    match ran {
+        Ok(Ok((outcomes, stats))) => {
+            for (cid, outcome) in outcomes {
+                if let InferOutcome::Completed(result) = outcome {
+                    if let Some(dir) = shared.job_dir(cid) {
+                        let _ =
+                            crate::wire::write_atomic(&dir.join("result.bin"), &result.to_wire());
+                    }
+                    lock_clean(&shared.results).insert(cid, StoredResult::Infer(result));
+                }
+            }
+            let mut all = lock_clean(&shared.lane_stats);
+            let entry = all
+                .entry(lane.to_string())
+                .or_insert_with(|| metrics::LaneView { lane: lane.to_string(), ..Default::default() });
+            entry.groups += 1;
+            entry.passes += stats.passes;
+            entry.filled_slots += stats.filled_slots;
+            entry.total_slots += stats.total_slots;
+            entry.seconds += stats.seconds;
+            entry.images += stats.images;
+        }
+        Ok(Err(e)) => {
+            let msg = e.to_string();
+            fail_members(&members, &msg);
+        }
+        Err(panic) => {
+            let msg = format!("worker panicked: {}", panic_text(panic));
+            fail_members(&members, &msg);
+        }
+    }
+}
+
+/// Degrade every non-terminal member of a failed batch group to `Failed`.
+/// Members already `Cancelled` mid-group keep that terminal state.
+fn fail_members(members: &[Arc<JobHandle>], msg: &str) {
+    for h in members {
+        h.update(|st| {
+            if st.state != JobState::Cancelled {
+                st.state = JobState::Failed;
+                st.message = msg.to_string();
+            }
+        });
     }
 }

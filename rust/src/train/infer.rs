@@ -297,6 +297,28 @@ impl InferenceSession {
         Ok(self.trainer.eval_scores_range(ds, first, batches, engine, codec)?)
     }
 
+    /// One forward pass over caller-assembled slot columns (`cols[f][b]` =
+    /// feature `f`, slot `b`, spanning the engine batch) with an explicit
+    /// occupancy mask: one logit row per slot, vacant slots included. The
+    /// coalesced serve scheduler uses this to score one shared batch filled
+    /// with images from different jobs — each occupied slot's row is
+    /// identical to what the same sample produces in a solo run, because
+    /// the per-lane forward pipeline never mixes batch lanes.
+    pub fn scores_slots(
+        &self,
+        cols: &[Vec<i64>],
+        occupied: &[bool],
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<Vec<Vec<i64>>, InferError> {
+        Ok(self.trainer.eval_scores_slots(cols, occupied, engine, codec)?)
+    }
+
+    /// Input feature width the frozen model expects.
+    pub fn features(&self) -> usize {
+        self.trainer.features
+    }
+
     /// Score (up to) `limit` samples and shape the output per `mode`.
     pub fn predict(
         &self,

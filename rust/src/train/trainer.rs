@@ -90,6 +90,70 @@ impl Trainer {
         Ok(EncTensor::new(x_cts, self.net.in_shape.clone(), PackOrder::Forward, 0))
     }
 
+    /// Encode caller-assembled forward-packed input columns
+    /// (`cols[f][b]` = feature `f`, slot `b`; `cols[f].len()` must equal the
+    /// engine batch) with an explicit slot-occupancy mask. This is the
+    /// coalesced-serving entry point: the serve scheduler fills one engine
+    /// batch with images from *different* jobs and leaves unclaimed slots
+    /// vacant. Vacant slots encode as zero on both layouts, so each
+    /// occupied slot's forward output is identical to what the same sample
+    /// produces in any other slot assignment (the per-lane pipeline never
+    /// mixes batch lanes).
+    pub fn encode_slot_columns(
+        &self,
+        cols: &[Vec<i64>],
+        occupied: &[bool],
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<EncTensor, DataError> {
+        let batch = engine.batch;
+        assert_eq!(occupied.len(), batch, "occupancy mask must cover the engine batch");
+        assert!(
+            cols.len() == self.features && cols.iter().all(|c| c.len() == batch),
+            "slot columns must be features × batch"
+        );
+        if let Some(base) = engine.packed_layout() {
+            let (layout, blocks) = base.pack_columns_masked(cols, occupied, engine.params().n);
+            let cts = blocks.iter().map(|coeffs| codec.encrypt_coeffs(coeffs, 0)).collect();
+            return Ok(EncTensor::packed(
+                cts,
+                self.net.in_shape.clone(),
+                PackOrder::Forward,
+                0,
+                layout,
+            ));
+        }
+        let x_cts = cols
+            .iter()
+            .map(|col| {
+                let masked: Vec<i64> = col
+                    .iter()
+                    .zip(occupied)
+                    .map(|(&v, &occ)| if occ { v } else { 0 })
+                    .collect();
+                codec.encrypt_batch(&masked, 0)
+            })
+            .collect();
+        Ok(EncTensor::new(x_cts, self.net.in_shape.clone(), PackOrder::Forward, 0))
+    }
+
+    /// One forward pass over caller-assembled slot columns: one row of
+    /// per-class logits per engine-batch slot, in slot order (vacant slots
+    /// included — the caller owns the occupancy bookkeeping and discards
+    /// them). The coalesced scheduler de-interleaves these rows back to
+    /// the owning jobs.
+    pub fn eval_scores_slots(
+        &self,
+        cols: &[Vec<i64>],
+        occupied: &[bool],
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Result<Vec<Vec<i64>>, DataError> {
+        let x = self.encode_slot_columns(cols, occupied, engine, codec)?;
+        let pass = self.net.forward(&x, engine);
+        Ok(self.decode_output_rows(pass.output(), engine, codec))
+    }
+
     /// Encode one minibatch's reverse-packed one-hot labels (·127).
     pub fn encode_labels(
         &self,
@@ -216,23 +280,35 @@ impl Trainer {
             let start = step * batch;
             let x = self.encode_inputs(ds, start, engine, codec)?;
             let pass = self.net.forward(&x, engine);
-            let out = pass.output();
-            // scores[k] = class k's per-lane outputs. Softmax heads repack
-            // reversed (sample b at coefficient batch−1−b); the FHESGD
-            // sigmoid head keeps forward packing (batch 1 in practice).
-            // Packed-layout FC outputs carry the batch at `lane_base + c`.
-            let pos: Vec<usize> = (0..batch).map(|c| c + out.lane_base).collect();
-            let scores: Vec<Vec<i64>> =
-                out.cts.iter().map(|ct| codec.decrypt_positions(ct, &pos, 0)).collect();
-            for b in 0..batch {
+            rows.extend(self.decode_output_rows(pass.output(), engine, codec));
+        }
+        Ok(rows)
+    }
+
+    /// Decode a forward pass's output tensor into one per-class logit row
+    /// per batch slot, slot order. Softmax heads repack reversed (sample b
+    /// at coefficient batch−1−b); the FHESGD sigmoid head keeps forward
+    /// packing (batch 1 in practice). Packed-layout FC outputs carry the
+    /// batch at `lane_base + c`.
+    fn decode_output_rows(
+        &self,
+        out: &EncTensor,
+        engine: &GlyphEngine,
+        codec: &mut dyn Codec,
+    ) -> Vec<Vec<i64>> {
+        let batch = engine.batch;
+        let pos: Vec<usize> = (0..batch).map(|c| c + out.lane_base).collect();
+        let scores: Vec<Vec<i64>> =
+            out.cts.iter().map(|ct| codec.decrypt_positions(ct, &pos, 0)).collect();
+        (0..batch)
+            .map(|b| {
                 let lane = match out.order {
                     PackOrder::Reversed => batch - 1 - b,
                     PackOrder::Forward => b,
                 };
-                rows.push(scores.iter().map(|row| row[lane]).collect());
-            }
-        }
-        Ok(rows)
+                scores.iter().map(|row| row[lane]).collect()
+            })
+            .collect()
     }
 
     /// Test accuracy over (up to) `limit` samples: forward pass per

@@ -1,0 +1,226 @@
+//! Coalesced batch-group inference conformance (ROADMAP item 5 serving):
+//!
+//! * Differential: lane-compatible jobs scored together in one widened
+//!   engine batch must produce logits/predictions **byte-identical** to
+//!   each job scored solo — coalescing is a throughput lever, never an
+//!   accuracy or determinism lever.
+//! * Ragged tails: a sample count that does not divide the batch is scored
+//!   through occupancy masks; reported image counts are *real* images, and
+//!   the decoded rows match a solo run at any other batch width.
+//! * Attribution: each member's live op share equals its predicted share
+//!   exactly (modulo the documented unpredicted ops), and the shares are
+//!   split from one shared counter delta.
+//! * Isolation: a cancelled member vacates its slots without perturbing
+//!   the surviving members; lane-incompatible jobs are refused up front.
+
+use glyph::coordinator::OpSnapshot;
+use glyph::nn::engine::EngineProfile;
+use glyph::serve::metrics::UNPREDICTED_OPS;
+use glyph::serve::{
+    run_infer_group, run_infer_job, InferOutcome, InferResult, InferSpec, JobBackend, JobHandle,
+    JobState, JobStatus,
+};
+use std::sync::atomic::Ordering;
+
+fn spec(tenant: &str, seed: u64, batch: u64, samples: u64) -> InferSpec {
+    let mut s = InferSpec::small_clear(tenant, seed);
+    s.batch = batch;
+    s.samples = samples;
+    s.coalesce = true;
+    s
+}
+
+/// Score one spec solo (group of one) and return its result + final status.
+fn solo(spec: &InferSpec, id: u64) -> (InferResult, JobStatus) {
+    let handle = JobHandle::new_infer(id, spec.clone());
+    match run_infer_job(&handle, None).expect("solo inference run failed") {
+        InferOutcome::Completed(r) => (r, handle.status()),
+        InferOutcome::Cancelled => panic!("solo run reported cancelled without a cancel request"),
+    }
+}
+
+fn assert_live_matches_predicted(st: &JobStatus) {
+    let diff = st.live_ops.diff_ignoring(&st.predicted_ops, &UNPREDICTED_OPS);
+    assert!(
+        diff.is_empty(),
+        "job {} live op share drifted from its predicted share: {}",
+        st.id,
+        OpSnapshot::render_diff(&diff)
+    );
+}
+
+fn assert_same_scores(case: &str, coalesced: &InferResult, solo: &InferResult) {
+    assert_eq!(coalesced.logits_digest, solo.logits_digest, "{case}: logits diverged");
+    assert_eq!(
+        coalesced.predictions_digest, solo.predictions_digest,
+        "{case}: predictions diverged"
+    );
+    assert_eq!(coalesced.accuracy, solo.accuracy, "{case}: accuracy diverged");
+    assert_eq!(coalesced.images, solo.images, "{case}: image counts diverged");
+    assert_eq!(coalesced.batches, solo.batches, "{case}: batch counts diverged");
+}
+
+#[test]
+fn coalesced_clear_scores_are_byte_identical_to_solo() {
+    // Two tenants in one lane, with different sample counts so the shorter
+    // member finishes first and vacates its window mid-group.
+    let a = spec("alice", 7, 2, 6);
+    let b = spec("bob", 7, 2, 4);
+    let (solo_a, _) = solo(&a, 101);
+    let (solo_b, _) = solo(&b, 102);
+
+    let ha = JobHandle::new_infer(1, a);
+    let hb = JobHandle::new_infer(2, b);
+    let (outcomes, stats) =
+        run_infer_group(&[&ha, &hb], None, 42).expect("coalesced group run failed");
+    assert_eq!(outcomes.len(), 2);
+
+    for (handle, reference) in [(&ha, &solo_a), (&hb, &solo_b)] {
+        let (id, outcome) = outcomes.iter().find(|(id, _)| *id == handle.id).unwrap();
+        let InferOutcome::Completed(result) = outcome else {
+            panic!("member {id} did not complete")
+        };
+        assert_same_scores("coalesced vs solo", result, reference);
+
+        let st = handle.status();
+        assert_eq!(st.state, JobState::Completed);
+        assert_eq!(st.group, 42, "coalesced member must record its batch group");
+        assert_eq!(st.images, result.images, "status images must match the result");
+        assert_eq!(st.live_ops, result.ops, "status live ops must match the result");
+        assert_live_matches_predicted(&st);
+    }
+
+    // 6+4 real images over 3 passes of width 4: the last pass runs alice
+    // alone, so 2 of 12 slots are vacant.
+    assert_eq!(stats.passes, 3);
+    assert_eq!(stats.total_slots, 12);
+    assert_eq!(stats.filled_slots, 10);
+    assert_eq!(stats.images, 10);
+}
+
+#[test]
+fn ragged_final_batch_reports_real_images_and_matches_other_widths() {
+    // 5 samples at batch 2: three chunks, the last half-filled. Reported
+    // counts must be the real 5 images, not batches × batch = 6.
+    let ragged = spec("carol", 11, 2, 5);
+    let (result, st) = solo(&ragged, 201);
+    assert_eq!(result.images, 5, "padding slots must not count as scored images");
+    assert_eq!(result.batches, 3, "the ragged tail is still a scored chunk");
+    assert_eq!(st.images, 5);
+    assert_eq!(st.step, 3);
+    assert_eq!(st.total_steps, 3);
+    assert_live_matches_predicted(&st);
+
+    // Slot independence: the same 5 samples scored in one batch-5 pass
+    // decode to the same rows, so the digests are width-invariant.
+    let wide = spec("carol", 11, 5, 5);
+    let (wide_result, _) = solo(&wide, 202);
+    assert_eq!(
+        result.logits_digest, wide_result.logits_digest,
+        "logits must not depend on the batch width they were scored at"
+    );
+    assert_eq!(result.predictions_digest, wide_result.predictions_digest);
+    assert_eq!(result.accuracy, wide_result.accuracy);
+    assert_eq!(wide_result.images, 5);
+    assert_eq!(wide_result.batches, 1);
+}
+
+#[test]
+fn coalesced_fhe_scores_are_byte_identical_to_solo() {
+    // Real FHE at Test-profile parameters: encryption noise differs
+    // between the solo and coalesced paths, but BGV decryption is exact,
+    // so the decoded logit rows — and therefore the digests — must agree.
+    let mut a = spec("alice", 13, 1, 2);
+    a.backend = JobBackend::Fhe;
+    a.profile = EngineProfile::Test;
+    a.dims = vec![8, 4, 3];
+    let mut b = a.clone();
+    b.tenant = "bob".into();
+
+    let (solo_a, _) = solo(&a, 301);
+    let (solo_b, _) = solo(&b, 302);
+
+    let ha = JobHandle::new_infer(1, a);
+    let hb = JobHandle::new_infer(2, b);
+    let (outcomes, stats) =
+        run_infer_group(&[&ha, &hb], None, 9).expect("coalesced FHE group run failed");
+    for (handle, reference) in [(&ha, &solo_a), (&hb, &solo_b)] {
+        let (_, outcome) = outcomes.iter().find(|(id, _)| *id == handle.id).unwrap();
+        let InferOutcome::Completed(result) = outcome else {
+            panic!("FHE member {} did not complete", handle.id)
+        };
+        assert_same_scores("coalesced vs solo (FHE)", result, reference);
+        assert_live_matches_predicted(&handle.status());
+    }
+    assert_eq!(stats.filled_slots, stats.total_slots, "both members fill every pass");
+}
+
+#[test]
+fn packed_coalesced_scores_match_solo_packed() {
+    // The cross-sample SIMD layout composes with coalescing: the group
+    // packs at width members × batch, with a masked ragged tail.
+    let mut a = spec("alice", 17, 2, 4);
+    a.packed = true;
+    let mut b = spec("bob", 17, 2, 3);
+    b.packed = true;
+
+    let (solo_a, _) = solo(&a, 401);
+    let (solo_b, _) = solo(&b, 402);
+
+    let ha = JobHandle::new_infer(1, a);
+    let hb = JobHandle::new_infer(2, b);
+    let (outcomes, _) =
+        run_infer_group(&[&ha, &hb], None, 5).expect("packed coalesced group run failed");
+    for (handle, reference) in [(&ha, &solo_a), (&hb, &solo_b)] {
+        let (_, outcome) = outcomes.iter().find(|(id, _)| *id == handle.id).unwrap();
+        let InferOutcome::Completed(result) = outcome else {
+            panic!("packed member {} did not complete", handle.id)
+        };
+        assert_same_scores("packed coalesced vs solo", result, reference);
+        assert_live_matches_predicted(&handle.status());
+    }
+}
+
+#[test]
+fn cancelled_member_vacates_without_perturbing_the_survivor() {
+    let a = spec("alice", 23, 2, 4);
+    let b = spec("bob", 23, 2, 4);
+    let (solo_a, _) = solo(&a, 501);
+
+    let ha = JobHandle::new_infer(1, a);
+    let hb = JobHandle::new_infer(2, b);
+    hb.cancel.store(true, Ordering::Relaxed);
+    let (outcomes, stats) =
+        run_infer_group(&[&ha, &hb], None, 6).expect("group with a cancelled member failed");
+
+    let (_, outcome_b) = outcomes.iter().find(|(id, _)| *id == 2).unwrap();
+    assert!(matches!(outcome_b, InferOutcome::Cancelled), "cancelled member must not complete");
+    assert_eq!(hb.status().state, JobState::Cancelled);
+
+    let (_, outcome_a) = outcomes.iter().find(|(id, _)| *id == 1).unwrap();
+    let InferOutcome::Completed(result_a) = outcome_a else {
+        panic!("surviving member did not complete")
+    };
+    assert_same_scores("survivor vs solo", result_a, &solo_a);
+    assert_eq!(ha.status().state, JobState::Completed);
+    assert_live_matches_predicted(&ha.status());
+
+    // bob never occupied a slot: 2 passes × width 4, alice's half filled
+    assert_eq!(stats.total_slots, 8);
+    assert_eq!(stats.filled_slots, 4);
+}
+
+#[test]
+fn lane_incompatible_jobs_are_refused() {
+    let a = spec("alice", 29, 2, 4);
+    let mut b = spec("bob", 29, 2, 4);
+    b.dims = vec![16, 4, 4];
+
+    let ha = JobHandle::new_infer(1, a);
+    let hb = JobHandle::new_infer(2, b);
+    let err = run_infer_group(&[&ha, &hb], None, 3)
+        .err()
+        .expect("jobs with different shapes must not share a batch group");
+    let msg = err.to_string();
+    assert!(msg.contains("lane"), "error must name the lane mismatch: {msg}");
+}

@@ -6,7 +6,8 @@
 
 use glyph::serve::client::ClientError;
 use glyph::serve::{
-    run_job, Fetched, InferSpec, JobHandle, JobResult, JobSpec, JobState, RunOptions, RunOutcome,
+    run_infer_job, run_job, Fetched, InferOutcome, InferResult, InferSpec, JobHandle, JobResult,
+    JobSpec, JobState, RunOptions, RunOutcome,
 };
 use glyph::serve::ServeClient;
 use std::io::{BufRead, BufReader};
@@ -84,6 +85,14 @@ fn reference_run(spec: &JobSpec) -> JobResult {
     match run_job(&JobHandle::new(0, spec.clone()), None, &RunOptions::default()).unwrap() {
         RunOutcome::Completed(result) => result,
         other => panic!("reference run did not complete: {other:?}"),
+    }
+}
+
+/// Uninterrupted in-process solo reference for an inference spec.
+fn reference_infer(spec: &InferSpec) -> InferResult {
+    match run_infer_job(&JobHandle::new_infer(0, spec.clone()), None).unwrap() {
+        InferOutcome::Completed(result) => result,
+        InferOutcome::Cancelled => panic!("reference infer run reported cancelled"),
     }
 }
 
@@ -308,6 +317,153 @@ fn worker_panic_fails_one_job_and_leaves_the_server_serving() {
     let healthy = c.submit(&spec2).expect("submit after a worker panic");
     let result = wait_completed(&mut c, healthy, 120);
     assert_identical(&result, &reference_run(&spec2));
+
+    c.shutdown().expect("graceful shutdown");
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ragged_infer_reports_real_image_counts_over_loopback() {
+    let dir = temp_dir("ragged");
+    let (mut child, addr) = spawn_server(&dir, 0);
+    let mut c = client(addr);
+
+    // 5 samples at batch 2: three chunks, the last half-filled. The old
+    // accounting billed batches × batch = 6 images; the real count is 5.
+    let mut ispec = InferSpec::small_clear("ragged", 41);
+    ispec.batch = 2;
+    ispec.samples = 5;
+    let id = c.submit_infer(&ispec).expect("submit ragged infer job");
+    let st = c.wait(id, Duration::from_secs(120)).expect("infer finishes in time");
+    assert_eq!(st.state, JobState::Completed, "infer failed: {}", st.message);
+    assert_eq!(st.images, 5, "status must report real images, not padded slots");
+    assert_eq!(st.step, 3);
+    assert_eq!(st.total_steps, 3, "the ragged tail is a planned step");
+
+    let Fetched::Infer(result) = c.fetch(id).expect("completed infer job has a result") else {
+        panic!("infer job must fetch as an InferResult");
+    };
+    assert_eq!(result.images, 5, "padding slots must not be billed as scored images");
+    assert_eq!(result.batches, 3);
+    let reference = reference_infer(&ispec);
+    assert_eq!(result.logits_digest, reference.logits_digest, "served logits diverged");
+    assert_eq!(result.predictions_digest, reference.predictions_digest);
+
+    // the scrape surface divides latency by the same real image count
+    let text = c.metrics().expect("metrics");
+    let labels = format!("job=\"{id}\",tenant=\"ragged\"");
+    assert!(text.contains(&format!("glyph_infer_images_total{{{labels}}} 5")), "{text}");
+    assert!(text.contains(&format!("glyph_infer_latency_seconds{{{labels}}}")), "{text}");
+
+    c.shutdown().expect("graceful shutdown");
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn coalesced_tenants_share_one_group_and_match_solo_digests() {
+    let dir = temp_dir("coalesce");
+    // Paced steps keep the single worker busy on a blocker job long enough
+    // for both coalesce submissions to land in the lane before it drains.
+    let (mut child, addr) = spawn_server(&dir, 30);
+    let mut c = client(addr);
+
+    let mut blocker = JobSpec::small_clear("blocker", 1);
+    blocker.samples = 40; // 10 paced steps of runway
+    c.submit(&blocker).expect("submit blocker");
+
+    let mut aspec = InferSpec::small_clear("alice", 43);
+    aspec.batch = 2;
+    aspec.samples = 6;
+    aspec.coalesce = true;
+    let mut bspec = aspec.clone();
+    bspec.tenant = "bob".into();
+    bspec.samples = 4;
+    let a = c.submit_infer(&aspec).expect("submit alice");
+    let b = c.submit_infer(&bspec).expect("submit bob");
+
+    let st_a = c.wait(a, Duration::from_secs(120)).expect("alice finishes");
+    assert_eq!(st_a.state, JobState::Completed, "alice failed: {}", st_a.message);
+    let st_b = c.wait(b, Duration::from_secs(120)).expect("bob finishes");
+    assert_eq!(st_b.state, JobState::Completed, "bob failed: {}", st_b.message);
+    assert_ne!(st_a.group, 0, "coalesced jobs must record a batch group");
+    assert_eq!(st_a.group, st_b.group, "both tenants must share one batch group");
+
+    // Coalescing is invisible in the scores: each tenant's digests are
+    // byte-identical to a solo in-process run of its own spec.
+    for (id, spec) in [(a, &aspec), (b, &bspec)] {
+        let Fetched::Infer(result) = c.fetch(id).expect("coalesced member has a result") else {
+            panic!("infer job must fetch as an InferResult");
+        };
+        let reference = reference_infer(spec);
+        assert_eq!(result.logits_digest, reference.logits_digest, "job {id}: logits diverged");
+        assert_eq!(result.predictions_digest, reference.predictions_digest, "job {id}");
+        assert_eq!(result.images, reference.images, "job {id}: image counts diverged");
+    }
+
+    // Lane gauges: one group, 6+4 images over 3 passes of width 4 → 10 of
+    // 12 slots filled.
+    let text = c.metrics().expect("metrics");
+    let lane = format!("lane=\"{}\"", aspec.lane_label());
+    assert!(text.contains(&format!("glyph_lane_groups_total{{{lane}}} 1")), "{text}");
+    assert!(text.contains(&format!("glyph_lane_images_total{{{lane}}} 10")), "{text}");
+    assert!(text.contains(&format!("glyph_lane_fill_ratio{{{lane}}} 0.833333")), "{text}");
+
+    c.shutdown().expect("graceful shutdown");
+    let _ = child.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cancelling_one_coalesced_member_leaves_the_other_intact() {
+    let dir = temp_dir("coalesce-cancel");
+    let (mut child, addr) = spawn_server(&dir, 40);
+    let mut c = client(addr);
+
+    let mut blocker = JobSpec::small_clear("blocker", 2);
+    blocker.samples = 20; // 5 paced steps: enough to enlane both members
+    c.submit(&blocker).expect("submit blocker");
+
+    let mut aspec = InferSpec::small_clear("alice", 47);
+    aspec.batch = 2;
+    aspec.samples = 40; // 20 paced passes: the cancel lands mid-group
+    aspec.coalesce = true;
+    let mut bspec = aspec.clone();
+    bspec.tenant = "bob".into();
+    let a = c.submit_infer(&aspec).expect("submit alice");
+    let b = c.submit_infer(&bspec).expect("submit bob");
+
+    // Wait for the group to start scoring bob, then cancel him mid-group.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let st = c.status(b).expect("status of coalesced member");
+        if st.state == JobState::Running && st.step >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "coalesced group never started");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    c.cancel(b).expect("cancel coalesced member");
+    let st_b = c.wait(b, Duration::from_secs(120)).expect("bob reaches a terminal state");
+    assert_eq!(st_b.state, JobState::Cancelled, "message: {}", st_b.message);
+    assert!(
+        matches!(c.fetch(b), Ok(Fetched::Cancelled)),
+        "cancelled member must fetch as the terminal Cancelled frame"
+    );
+
+    // The survivor keeps scoring in the same group and stays byte-exact.
+    let st_a = c.wait(a, Duration::from_secs(120)).expect("alice finishes");
+    assert_eq!(st_a.state, JobState::Completed, "alice failed: {}", st_a.message);
+    assert_ne!(st_a.group, 0);
+    assert_eq!(st_a.group, st_b.group, "both members were coalesced into one group");
+    let Fetched::Infer(result) = c.fetch(a).expect("survivor has a result") else {
+        panic!("infer job must fetch as an InferResult");
+    };
+    let reference = reference_infer(&aspec);
+    assert_eq!(result.images, 40);
+    assert_eq!(result.logits_digest, reference.logits_digest, "survivor logits diverged");
+    assert_eq!(result.predictions_digest, reference.predictions_digest);
 
     c.shutdown().expect("graceful shutdown");
     let _ = child.wait();

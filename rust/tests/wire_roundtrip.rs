@@ -68,6 +68,7 @@ fn sample_status() -> JobStatus {
         predicted_ops: OpSnapshot { mult_cc: 40, add_cc: 41, ..Default::default() },
         images: 0,
         seconds: 0.0,
+        group: 0,
         message: String::new(),
     }
 }
@@ -75,6 +76,7 @@ fn sample_status() -> JobStatus {
 fn sample_infer_spec() -> InferSpec {
     let mut spec = InferSpec::small_clear("acme", 31);
     spec.model_job = 12;
+    spec.coalesce = true;
     spec
 }
 
@@ -146,11 +148,15 @@ fn self_contained_types_roundtrip_bit_identically() {
         kind: JobKind::Infer,
         images: 16,
         seconds: 0.75,
+        group: 5,
         ..sample_status()
     };
     let back = assert_reencode(&infer_status, &(), "JobStatus (infer)");
     assert_eq!(back.kind, JobKind::Infer);
     assert_eq!(back.images, 16);
+    assert_eq!(back.group, 5);
+    let back = assert_reencode(&sample_infer_spec(), &(), "InferSpec (coalesce)");
+    assert!(back.coalesce && !back.packed);
 
     // packed-layout metadata: dense, sparse-occupancy and partial-batch
     let dense = PackedLayout::for_ring(8, 256).unwrap();
